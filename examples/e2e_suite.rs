@@ -1,0 +1,121 @@
+//! End-to-end driver (DESIGN.md §7): runs the full JavaGrande Section-2
+//! suite through the public API on BOTH backends, validates numerics
+//! against the sequential substrate, and prints the paper-style speedup
+//! rows.  This is the run recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_suite [-- --scale 0.1]`
+
+use anyhow::Result;
+
+use somd::bench_suite::{crypt, gpu, harness, lufact, modeled, series, sor, sparse};
+use somd::bench_suite::{Class, Sizes};
+use somd::device::{DeviceProfile, DeviceSession};
+use somd::runtime::Registry;
+use somd::somd::grid::SharedGrid;
+use somd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.opt_f64("scale", 0.1);
+    let s = Sizes::scaled(Class::A, scale);
+    println!("=== SOMD end-to-end suite (class A, scale {scale}) ===\n");
+
+    // ---- 1. correctness across the SMP SOMD path --------------------------
+    println!("-- SMP correctness (SOMD vs sequential) --");
+    {
+        let p = crypt::Problem::generate(s.crypt_bytes, 1);
+        let mismatches = crypt::roundtrip_mismatches(&p, 8);
+        println!("crypt      roundtrip mismatches: {mismatches}");
+        assert_eq!(mismatches, 0);
+
+        let orig = lufact::generate(s.lufact_n, 2);
+        let a = SharedGrid::from_vec(s.lufact_n, s.lufact_n, orig.clone());
+        let piv = lufact::somd(&a, 8);
+        let err = lufact::reconstruction_error(&orig, &a, &piv);
+        println!("lufact     |PA-LU|max:           {err:.2e}");
+        assert!(err < 1e-8);
+
+        let want = series::sequential(s.series_n, 1000);
+        let got = series::somd(series::Input { count: s.series_n, m: 1000 }, 8);
+        let maxd = got
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| (g.0 - w.0).abs().max((g.1 - w.1).abs()))
+            .fold(0.0, f64::max);
+        println!("series     max |Δcoeff|:         {maxd:.2e}");
+        assert!(maxd < 1e-12);
+
+        let g0 = sor::generate(s.sor_n, 3);
+        let (_, want) = sor::sequential(&g0, s.sor_n, 100);
+        let got = sor::somd_method().invoke(&sor::Input { g0: &g0, n: s.sor_n, iters: 100 }, 8);
+        println!("sor        |ΔGtotal|:            {:.2e}", (got - want).abs());
+        assert!((got - want).abs() < 1e-6);
+
+        let p = sparse::Problem::generate(s.sparse_n, s.sparse_nnz(), 200, 4);
+        let want = sparse::sequential(&p);
+        let (got, _) = sparse::somd_run(&p, 8);
+        let maxd = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        println!("sparse     max |Δy|:             {maxd:.2e}");
+        assert!(maxd < 1e-9);
+    }
+
+    // ---- 2. device-path correctness (real PJRT execution) -----------------
+    println!("\n-- Device correctness (AOT kernels vs rust sequential) --");
+    let reg = Registry::load_default()?;
+    {
+        let mut sess = DeviceSession::new(&reg, DeviceProfile::passthrough());
+        let blocks = reg.info("crypt_A")?.meta_usize("blocks").unwrap();
+        let p = crypt::Problem::generate(blocks * 8, 5);
+        let (_, dec) = gpu::crypt_run(&mut sess, &p)?;
+        println!("crypt      device roundtrip:     {}", if dec == p.data { "OK" } else { "FAIL" });
+        assert_eq!(dec, p.data);
+
+        let got = gpu::series_run(&mut sess, 2048)?;
+        let want = series::sequential(2048, 1000);
+        let maxd = got
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| (g.0 as f64 - w.0).abs())
+            .fold(0.0, f64::max);
+        println!("series     device max |Δa| (f32): {maxd:.2e}");
+        assert!(maxd < 5e-3);
+
+        let n = reg.info("sor_step_A")?.meta_usize("n").unwrap();
+        let g064 = sor::generate(n, 6);
+        let g0: Vec<f32> = g064.iter().map(|&v| v as f32).collect();
+        let (_, want) = sor::sequential(&g064, n, 100);
+        let (_, got) = gpu::sor_run(&mut sess, &g0, n, 100)?;
+        let rel = (got - want).abs() / want.abs().max(1.0);
+        println!("sor        device Gtotal rel err: {rel:.2e}");
+        assert!(rel < 1e-2);
+
+        let sn = reg.info("spmv_acc_A")?.meta_usize("n").unwrap();
+        let p = sparse::Problem::generate(sn, sn * 5, 200, 7);
+        let want = sparse::sequential(&p);
+        let got = gpu::spmv_run(&mut sess, &p)?;
+        let maxrel = got
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| (*g as f64 - w).abs() / w.abs().max(1.0))
+            .fold(0.0, f64::max);
+        println!("sparse     device max rel err:    {maxrel:.2e}");
+        assert!(maxrel < 2e-2);
+    }
+
+    // ---- 3. the paper's tables and figures ---------------------------------
+    println!();
+    harness::print_table2();
+    println!();
+    harness::print_table1(scale, 3);
+    println!();
+    let o = modeled::calibrate();
+    println!("calibrated overheads: {o:?}\n");
+    for class in [Class::A, Class::B, Class::C] {
+        harness::print_fig10(class, scale, 3, &o);
+        println!();
+    }
+    harness::print_fig11(Class::A, scale, 3, &o, &reg)?;
+
+    println!("\n=== e2e suite complete: all validations passed ===");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! The stencil of paper Listing 13: `dist(view = <1,1>,<1,1>)`, a `sync`
+//! block per iteration, and `reduce(+)` for Gtotal — the complete SOMD
+//! shared-array story on both backends.
+//!
+//! Run: `cargo run --release --example stencil_sync`
+
+use somd::bench_suite::sor;
+use somd::somd::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let n = 128;
+    let iters = 100;
+    let g0 = sor::generate(n, 7);
+
+    // sequential baseline
+    let (_, want) = sor::sequential(&g0, n, iters);
+
+    // SOMD: (block, block) distribution, 1-halo views, sync per iteration
+    let engine = Engine::new(4);
+    let method = sor::somd_method();
+    let got = engine.invoke(&method, &sor::Input { g0: &g0, n, iters });
+    println!("SMP SOMD stencil {n}x{n}, {iters} sync iterations: Gtotal = {got:.6}");
+    assert!((got - want).abs() < 1e-9, "somd {got} vs seq {want}");
+
+    // JG-style row bands (the 1D-vs-2D ablation point)
+    let jg = sor::jg_method().invoke(&sor::Input { g0: &g0, n, iters }, 4);
+    assert!((jg - want).abs() < 1e-9);
+    println!("JG-style row-band stencil: Gtotal = {jg:.6} (same result)");
+
+    // Device backend: one kernel launch per sync iteration (Listing 17) —
+    // uses the AOT class-A artifact size.
+    match somd::runtime::Registry::load_default() {
+        Ok(reg) => {
+            use somd::device::{DeviceProfile, DeviceSession};
+            let an = reg.info("sor_step_A")?.meta_usize("n").unwrap();
+            let g0d: Vec<f32> = sor::generate(an, 7).iter().map(|&v| v as f32).collect();
+            let (_, want_d) = sor::sequential(
+                &g0d.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                an,
+                iters,
+            );
+            let mut sess = DeviceSession::new(&reg, DeviceProfile::fermi());
+            let (_, total) = somd::bench_suite::gpu::sor_run(&mut sess, &g0d, an, iters)?;
+            let st = sess.stats();
+            let rel = (total - want_d).abs() / want_d.abs().max(1.0);
+            println!(
+                "device stencil {an}x{an} [{}]: Gtotal = {total:.4} (rel err {rel:.2e} vs f64 seq)",
+                sess.profile().name
+            );
+            println!(
+                "  launches={} (one per sync iteration + reduction), matrix put once: h2d={}B",
+                st.launches, st.bytes_h2d
+            );
+            assert_eq!(st.launches, iters + 1);
+            assert!(rel < 1e-2);
+        }
+        Err(_) => println!("(artifacts not built — run `make artifacts` for the device half)"),
+    }
+    Ok(())
+}

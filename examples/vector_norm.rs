@@ -1,0 +1,67 @@
+//! Vector normalization (paper Listings 10 and 14): intermediate
+//! reductions and `sync reduce(+)` over a shared scalar.
+//!
+//! Version 1 (Listing 10): an auxiliary `reduce(+)` method — every MI's
+//! `sumProd(a)` is folded across MIs (an all-reduce) before each MI
+//! normalizes its own partition.
+//!
+//! Version 2 (Listing 14): a `shared double norm` accumulated inside a
+//! `sync reduce(+)(norm) { … }` block.
+//!
+//! Run: `cargo run --release --example vector_norm`
+
+use std::sync::Arc;
+
+use somd::somd::partition::Block1D;
+use somd::somd::reduction::{self, Assemble};
+use somd::somd::shared::Shared;
+use somd::somd::{Engine, SomdMethod};
+
+fn main() {
+    let n = 200_000;
+    let data: Vec<f64> = (0..n).map(|i| ((i % 97) as f64) - 48.0).collect();
+    let expected_norm = data.iter().map(|x| x * x).sum::<f64>().sqrt();
+
+    // --- Version 1: intermediate reduction (Listing 10) ---
+    let norm_v1 = SomdMethod::new(
+        "Norm.normalize",
+        |v: &Vec<f64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, part, _, ctx| {
+            // sumProd(a): local partial, then the intermediate reduce(+)
+            let local: f64 = part.own.iter().map(|i| v[i] * v[i]).sum();
+            let norm = ctx.allreduce(local, &reduction::sum::<f64>()).sqrt();
+            // each MI normalizes its partition (line 3 of Listing 10)
+            part.own.iter().map(|i| v[i] / norm).collect::<Vec<f64>>()
+        },
+        Assemble,
+    );
+
+    // --- Version 2: shared scalar + sync reduce (Listing 14) ---
+    let norm_v2 = SomdMethod::new(
+        "Norm.normalize2",
+        |v: &Vec<f64>, n| Block1D::new().ranges(v.len(), n),
+        |_, nparts| Arc::new(Shared::<f64>::new(nparts, 0.0)),
+        |v, part, shared: &Arc<Shared<f64>>, ctx| {
+            ctx.sync_reduce(shared, &reduction::sum::<f64>(), || {
+                let local: f64 = part.own.iter().map(|i| v[i] * v[i]).sum();
+                shared.update(ctx.rank(), |s| *s += local);
+            });
+            // all copies of norm are now identical in every MI
+            let norm = shared.get(ctx.rank()).sqrt();
+            part.own.iter().map(|i| v[i] / norm).collect::<Vec<f64>>()
+        },
+        Assemble,
+    );
+
+    let engine = Engine::new(8);
+    let check = |name: &str, out: Vec<f64>| {
+        let out_norm: f64 = out.iter().map(|x| x * x).sum::<f64>();
+        assert!((out_norm - 1.0).abs() < 1e-9, "{name}: |x|={out_norm}");
+        // spot-check one element
+        assert!((out[17] - data[17] / expected_norm).abs() < 1e-12);
+        println!("{name}: normalized {n} elements across 8 MIs, |out| = {out_norm:.12}");
+    };
+    check("v1 (intermediate reduction)", engine.invoke(&norm_v1, &data));
+    check("v2 (shared + sync reduce)", engine.invoke(&norm_v2, &data));
+}

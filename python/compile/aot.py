@@ -1,0 +1,220 @@
+"""AOT export: lower every L2 program to HLO *text* + a manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--scale S]
+
+``--scale`` (default 1.0) linearly scales the workload sizes of the large
+artifacts; the manifest records the effective sizes so the rust side never
+hard-codes them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Workload classes (paper Table 1)
+# ---------------------------------------------------------------------------
+
+CRYPT_BYTES = {"A": 3_000_000, "B": 20_000_000, "C": 50_000_000}
+LUFACT_N = {"A": 500, "B": 1000, "C": 2000}
+SERIES_N = {"A": 10_000, "B": 100_000, "C": 1_000_000}
+SOR_N = {"A": 1000, "B": 1500, "C": 2000}
+SPARSE_N = {"A": 50_000, "B": 100_000, "C": 500_000}
+SPARSE_NNZ_PER_ROW = 5
+SOR_ITERATIONS = 100
+SPMV_ITERATIONS = 200
+SERIES_CHUNK = 4096
+SERIES_INTERVALS = 1000
+
+
+def _dtype_tag(dt) -> str:
+    import numpy as np
+
+    return {
+        np.dtype("float32"): "f32",
+        np.dtype("float64"): "f64",
+        np.dtype("int32"): "s32",
+        np.dtype("int64"): "s64",
+        np.dtype("uint32"): "u32",
+    }[np.dtype(dt)]
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: single-output programs lower to a plain array
+    # root, which lets the rust side chain device-resident PjRtBuffers
+    # between kernel launches (the Aparapi explicit put/get analogue).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def plan(scale: float):
+    """The artifact plan: (name, program_fn, arg_specs, meta) tuples."""
+    out = []
+
+    def add(name, builder, *args, **meta):
+        fn, specs = builder(*args)
+        out.append((name, fn, specs, meta))
+
+    def s(v, lo=64):
+        return max(lo, int(v * scale))
+
+    # quickstart
+    add("vecadd", model.vecadd_program, 1 << 20, bench="vecadd")
+
+    # Crypt: one cipher program per class (encrypt and decrypt share it; the
+    # key schedule input decides the direction).
+    for cls, nbytes in CRYPT_BYTES.items():
+        nb = s(nbytes // 8)
+        add(f"crypt_{cls}", model.crypt_program, nb, bench="crypt", cls=cls, blocks=nb)
+    add("crypt_roundtrip_small", model.crypt_roundtrip_program, 4096, bench="crypt")
+
+    # Series: a single chunk program serves every class; the device backend
+    # sweeps chunks (the paper's thread-grid sweep).
+    add(
+        "series_chunk",
+        model.series_program,
+        SERIES_CHUNK,
+        SERIES_INTERVALS,
+        bench="series",
+        chunk=SERIES_CHUNK,
+        m=SERIES_INTERVALS,
+    )
+
+    # SOR: step + device-side sum per class, plus the fused ablation (A).
+    for cls, n in SOR_N.items():
+        n = s(n)
+        add(f"sor_step_{cls}", model.sor_step_program, n, bench="sor", cls=cls, n=n)
+        add(f"sor_sum_{cls}", model.sor_sum_program, n, bench="sor", cls=cls, n=n)
+    add(
+        "sor_fused_A",
+        model.sor_fused_program,
+        s(SOR_N["A"]),
+        SOR_ITERATIONS,
+        bench="sor",
+        cls="A",
+        n=s(SOR_N["A"]),
+        iterations=SOR_ITERATIONS,
+    )
+
+    # SparseMatMult: a per-launch accumulation step per class (the device
+    # loop re-launches it, as the paper's Aparapi master would), plus the
+    # fused-200 ablation artifact for class A.
+    for cls, n in SPARSE_N.items():
+        n = s(n)
+        nnz = n * SPARSE_NNZ_PER_ROW
+        add(
+            f"spmv_acc_{cls}",
+            model.spmv_acc_program,
+            nnz,
+            n,
+            bench="sparsematmult",
+            cls=cls,
+            n=n,
+            nnz=nnz,
+        )
+    n = s(SPARSE_N["A"])
+    add(
+        "spmv200_A",
+        model.spmv_iter_program,
+        n * SPARSE_NNZ_PER_ROW,
+        n,
+        SPMV_ITERATIONS,
+        bench="sparsematmult_fused",
+        cls="A",
+        n=n,
+        nnz=n * SPARSE_NNZ_PER_ROW,
+        iterations=SPMV_ITERATIONS,
+    )
+    n = s(SPARSE_N["A"])
+    add(
+        "spmv_step_A",
+        model.spmv_program,
+        n * SPARSE_NNZ_PER_ROW,
+        n,
+        bench="sparsematmult",
+        cls="A",
+        n=n,
+        nnz=n * SPARSE_NNZ_PER_ROW,
+    )
+
+    # LUFact: fused factorization (class A size) + the rank-1 update kernel.
+    n = s(LUFACT_N["A"])
+    add("lufact_fused_A", model.lufact_program, n, bench="lufact", cls="A", n=n)
+    add(
+        "lufact_update_A",
+        model.lufact_update_program,
+        n,
+        n,
+        bench="lufact",
+        cls="A",
+        n=n,
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scale", type=float, default=float(os.environ.get("SOMD_AOT_SCALE", "1.0")))
+    ap.add_argument("--only", default=None, help="comma-separated artifact-name filter")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"scale": args.scale, "artifacts": []}
+
+    for name, fn, specs, meta in plan(args.scale):
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_info = jax.eval_shape(fn, *specs)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"dtype": _dtype_tag(s.dtype), "shape": list(s.shape)} for s in specs
+                ],
+                "outputs": [
+                    {"dtype": _dtype_tag(o.dtype), "shape": list(o.shape)}
+                    for o in out_info
+                ],
+                "meta": meta,
+            }
+        )
+        print(
+            f"lowered {name}: {len(text) / 1e6:.2f} MB HLO text "
+            f"in {time.time() - t0:.1f}s",
+            file=sys.stderr,
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode tracing inlines the kernel
+body as plain XLA ops, so the AOT artifacts run at native speed on the rust
+side.  Block shapes are still chosen as if targeting a real TPU VMEM
+(~16 MiB/core): the BlockSpec grid is the HBM<->VMEM schedule that replaces
+the paper's OpenCL thread-group decomposition (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default element budget for one VMEM-resident block (f32): 256 KiB blocks
+# leave comfortable headroom for double-buffering in a ~16 MiB VMEM.
+DEFAULT_BLOCK_ELEMS = 64 * 1024
+
+
+def pick_block(n: int, target: int = DEFAULT_BLOCK_ELEMS) -> int:
+    """Largest divisor of ``n`` that is <= target (>=1).
+
+    Static shapes are known at AOT time, so we simply pick an exact divisor
+    and avoid masked tail blocks altogether.
+    """
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    if n <= target:
+        return n
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            if d <= target:
+                best = max(best, d)
+            q = n // d
+            if q <= target:
+                best = max(best, q)
+        d += 1
+    return best
+
+
+def pad_rows_to(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    """Zero-pad the leading dimension of ``x`` up to a multiple."""
+    r = x.shape[0]
+    rp = ((r + multiple - 1) // multiple) * multiple
+    if rp == r:
+        return x
+    pad = [(0, rp - r)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def pallas_call_1d(kernel, n: int, dtype, block: int | None = None, n_in: int = 1):
+    """A pl.pallas_call over a 1-D grid of equal blocks for elementwise kernels."""
+    bs = block or pick_block(n)
+    assert n % bs == 0, (n, bs)
+    grid = (n // bs,)
+    spec = pl.BlockSpec((bs,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        grid=grid,
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        interpret=True,
+    )

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: IDEA block cipher (JavaGrande Crypt).
+
+The paper's GPU code ran one OpenCL thread per 8-byte block.  On the TPU
+model we instead tile the block stream through VMEM: each grid step ciphers
+a [BS, 4] tile of 16-bit words (held as u32 lanes) with the full 52-subkey
+schedule resident.  All arithmetic is uint32; the mul-mod-65537 uses the
+lo/hi trick (see ref.idea_mul — identical formulation, asserted by pytest).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from . import ref
+
+# [BS, 4] u32 in + out -> 2 * 16 * BS bytes of VMEM; 64 Ki blocks ≈ 2 MiB.
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _kernel(words_ref, keys_ref, o_ref):
+    words = words_ref[...]
+    keys = keys_ref[...]
+    o_ref[...] = ref.idea_blocks(words, keys)
+
+
+def idea_blocks(words, keys, block: int | None = None):
+    """IDEA over uint32[B, 4] word-blocks with uint32[52] subkeys."""
+    b = words.shape[0]
+    bs = common.pick_block(b, block or DEFAULT_BLOCK)
+    grid = (b // bs,)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 4), jnp.uint32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, 4), lambda i: (i, 0)),
+            pl.BlockSpec((ref.IDEA_SUBKEYS,), lambda i: (0,)),  # keys: replicated
+        ],
+        out_specs=pl.BlockSpec((bs, 4), lambda i: (i, 0)),
+        interpret=True,
+    )(words, keys)

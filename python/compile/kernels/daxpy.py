@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: rank-1 trailing-matrix update (JavaGrande LUFact daxpy).
+
+The paper parallelizes LUFact's inner daxpy loop as the SOMD method.  The
+whole loop nest `for j>k: A[j][k+1:] -= A[j][k] * A[k][k+1:]` is one rank-1
+update; we tile it by row bands with the pivot row replicated per grid step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+DEFAULT_ROW_BLOCK = 128
+
+
+def _kernel(a_ref, mult_ref, pivot_ref, o_ref):
+    o_ref[...] = a_ref[...] - mult_ref[...][:, None] * pivot_ref[...][None, :]
+
+
+def trailing_update(a, mult, pivot_row, row_block: int | None = None):
+    """a[M, N] - outer(mult[M], pivot_row[N]), tiled by row bands."""
+    m, n = a.shape
+    bs = common.pick_block(m, row_block or DEFAULT_ROW_BLOCK)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, n), lambda i: (i, 0)),
+        interpret=True,
+    )(a, mult, pivot_row)

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: Fourier-coefficient chunk (JavaGrande Series).
+
+One grid step integrates a [BS] tile of coefficient indices against the
+(m+1)-point sample grid: the [BS, m+1] broadcast lives in VMEM
+(256 x 1001 f32 ≈ 1 MiB per operand — double-bufferable).  The chunk base
+``n0`` arrives as a scalar operand so that one AOT artifact serves every
+chunk of a class (the device backend loops chunks, mirroring the paper's
+thread-grid sweep).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from . import ref
+
+DEFAULT_BLOCK = 256
+
+
+def _make_kernel(m_intervals: int, bs: int):
+    dx = (ref.SERIES_HI - ref.SERIES_LO) / m_intervals
+
+    def kernel(n0_ref, o_ref):
+        i = pl.program_id(0)
+        n0 = n0_ref[0]
+        n = n0 + i * bs + jax.lax.iota(jnp.float32, bs)
+        x = jnp.linspace(
+            ref.SERIES_LO, ref.SERIES_HI, m_intervals + 1, dtype=jnp.float32
+        )
+        w = jnp.full((m_intervals + 1,), dx, dtype=jnp.float32)
+        w = w.at[0].set(dx / 2).at[-1].set(dx / 2)
+        fw = ref.series_fn(x) * w
+        ang = jnp.pi * n[:, None] * x[None, :]
+        o_ref[0, :] = jnp.sum(fw * jnp.cos(ang), axis=1)
+        o_ref[1, :] = jnp.sum(fw * jnp.sin(ang), axis=1)
+
+    return kernel
+
+
+def series_chunk(n0, chunk: int, m_intervals: int, block: int | None = None):
+    """(a, b) coefficients for indices n0 .. n0+chunk-1, stacked as [2, chunk].
+
+    ``n0`` is a f32[1] array (a runtime input — NOT baked into the artifact).
+    """
+    bs = common.pick_block(chunk, block or DEFAULT_BLOCK)
+    grid = (chunk // bs,)
+    return pl.pallas_call(
+        _make_kernel(m_intervals, bs),
+        out_shape=jax.ShapeDtypeStruct((2, chunk), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((2, bs), lambda i: (0, i)),
+        interpret=True,
+    )(n0)

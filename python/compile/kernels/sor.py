@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: SOR stencil sweep (paper Listing 13 / JavaGrande SOR).
+
+The paper's GPU translation flattens the matrix and runs one thread per
+element, re-launching the kernel per `sync` iteration.  The TPU rethink
+tiles the interior by row-bands: the L2 wrapper materializes the up/mid/down
+shifted views (the `view=<1,1>,<1,1>` halo of the paper's `dist`), pads the
+interior row count to a block multiple, and the kernel consumes one
+[BS, N] band of each view per grid step — the BlockSpec index maps ARE the
+halo schedule.  Boundary columns are handled inside the kernel so the
+output band is directly storable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from . import ref
+
+DEFAULT_ROW_BLOCK = 128
+
+
+def _kernel(up_ref, mid_ref, down_ref, o_ref):
+    up = up_ref[...]
+    mid = mid_ref[...]
+    down = down_ref[...]
+    interior = (
+        ref.SOR_OMEGA_OVER_FOUR
+        * (up[:, 1:-1] + down[:, 1:-1] + mid[:, :-2] + mid[:, 2:])
+        + ref.SOR_ONE_MINUS_OMEGA * mid[:, 1:-1]
+    )
+    o_ref[...] = jnp.concatenate(
+        [mid[:, :1], interior, mid[:, -1:]], axis=1
+    )
+
+
+def sor_step_banded(g, row_block: int | None = None):
+    """One Jacobi-style sweep over f32[N, M]; boundaries unchanged.
+
+    Row-band tiled variant: the BlockSpec grid stages [BS, M] bands of the
+    three shifted views through VMEM — the HBM<->VMEM schedule a real TPU
+    needs (16 MB planes exceed VMEM).  Under interpret=True the shifted
+    views/pads materialize as copies, so the CPU artifacts use
+    [`sor_step_fused`] instead (see EXPERIMENTS.md §Perf L1); this variant
+    is kept tested as the TPU-target schedule.
+    """
+    n, m = g.shape
+    r = n - 2  # interior rows
+    bs = min(row_block or DEFAULT_ROW_BLOCK, r)
+    up = common.pad_rows_to(g[:-2, :], bs)
+    mid = common.pad_rows_to(g[1:-1, :], bs)
+    down = common.pad_rows_to(g[2:, :], bs)
+    rp = mid.shape[0]
+    spec = pl.BlockSpec((bs, m), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((rp, m), jnp.float32),
+        grid=(rp // bs,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(up, mid, down)
+    return jnp.concatenate([g[:1, :], out[:r, :], g[-1:, :]], axis=0)
+
+
+def _fused_kernel(g_ref, o_ref):
+    g = g_ref[...]
+    interior = (
+        ref.SOR_OMEGA_OVER_FOUR
+        * (g[:-2, 1:-1] + g[2:, 1:-1] + g[1:-1, :-2] + g[1:-1, 2:])
+        + ref.SOR_ONE_MINUS_OMEGA * g[1:-1, 1:-1]
+    )
+    o_ref[...] = jnp.concatenate(
+        [
+            g[:1, :],
+            jnp.concatenate([g[1:-1, :1], interior, g[1:-1, -1:]], axis=1),
+            g[-1:, :],
+        ],
+        axis=0,
+    )
+
+
+def sor_step_fused(g):
+    """Whole-plane single-invocation sweep (the shipped CPU artifact).
+
+    One grid step, slicing inside the kernel: XLA fuses the shifted reads
+    into a single elementwise pass — ~10x faster than the banded variant
+    under interpret lowering (EXPERIMENTS.md §Perf L1).
+    """
+    n, m = g.shape
+    return pl.pallas_call(
+        _fused_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(g)
+
+
+def sor_step(g, row_block: int | None = None, variant: str = "fused"):
+    """Dispatch between the fused (CPU artifact) and banded (TPU) variants."""
+    if variant == "banded" or row_block is not None:
+        return sor_step_banded(g, row_block)
+    return sor_step_fused(g)

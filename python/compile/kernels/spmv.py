@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: sparse mat-vec products (JavaGrande SparseMatMult).
+
+The irregular gather x[col] is the hot spot the paper calls out as a poor
+fit for GPUs (uncoalesced access).  On the TPU model the same cost appears
+as scattered VMEM loads from a resident x: the kernel tiles the nonzero
+triplet stream ([BS] bands of val/col) while x stays whole (it must be
+randomly addressable).  The segment-sum scatter stays in the L2 graph
+(XLA's scatter), mirroring the paper's device-then-host reduction split.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _kernel(val_ref, col_ref, x_ref, o_ref):
+    col = col_ref[...]
+    o_ref[...] = val_ref[...] * x_ref[col]
+
+
+def spmv_products(val, col, x, block: int | None = None):
+    """p[i] = val[i] * x[col[i]] over f32[nnz] / i32[nnz] / f32[n]."""
+    nnz = val.shape[0]
+    n = x.shape[0]
+    bs = common.pick_block(nnz, block or DEFAULT_BLOCK)
+    band = pl.BlockSpec((bs,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        grid=(nnz // bs,),
+        in_specs=[band, band, pl.BlockSpec((n,), lambda i: (0,))],
+        out_specs=band,
+        interpret=True,
+    )(val, col, x)

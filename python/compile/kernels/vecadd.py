@@ -1,0 +1,22 @@
+"""L1 Pallas kernel: vector addition (paper Listing 8, the quickstart).
+
+The SOMD `dist` block-partitioning of the paper maps onto the BlockSpec
+grid: each grid step is one MI's partition staged through VMEM.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def vecadd(a, b, block: int | None = None):
+    """Elementwise a + b via a 1-D Pallas grid (f32)."""
+    n = a.shape[0]
+    call = common.pallas_call_1d(_kernel, n, jnp.float32, block=block, n_in=2)
+    return call(a, b)

@@ -1,0 +1,218 @@
+"""L2: per-benchmark JAX programs that call the L1 Pallas kernels.
+
+Each ``*_program`` returns a traceable function with *static* shapes baked
+in; aot.py lowers them once to HLO text for the rust runtime.  Python never
+runs on the request path — these functions exist only at compile time.
+
+The set mirrors the paper's generated GPU code (Algorithm 2): one
+executable per kernel launch site, plus fused `fori_loop` variants used by
+the ablation study (what a device-global sync — the paper's `single`
+future work — would buy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import crypt, daxpy, ref, series, sor, spmv, vecadd
+
+# ---------------------------------------------------------------------------
+# vecadd (quickstart)
+# ---------------------------------------------------------------------------
+
+
+def vecadd_program(n: int):
+    def fn(a, b):
+        return (vecadd.vecadd(a, b),)
+
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return fn, (spec, spec)
+
+
+# ---------------------------------------------------------------------------
+# Crypt
+# ---------------------------------------------------------------------------
+
+
+def crypt_program(nblocks: int):
+    """One cipher pass (encrypt or decrypt — the key schedule decides)."""
+
+    def fn(words, keys):
+        return (crypt.idea_blocks(words, keys),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((nblocks, 4), jnp.uint32),
+        jax.ShapeDtypeStruct((ref.IDEA_SUBKEYS,), jnp.uint32),
+    )
+
+
+def crypt_roundtrip_program(nblocks: int):
+    """encrypt -> decrypt fused; used by tests and the e2e checksum."""
+
+    def fn(words, ekeys, dkeys):
+        enc = crypt.idea_blocks(words, ekeys)
+        dec = crypt.idea_blocks(enc, dkeys)
+        return (enc, dec)
+
+    kspec = jax.ShapeDtypeStruct((ref.IDEA_SUBKEYS,), jnp.uint32)
+    return fn, (jax.ShapeDtypeStruct((nblocks, 4), jnp.uint32), kspec, kspec)
+
+
+# ---------------------------------------------------------------------------
+# Series
+# ---------------------------------------------------------------------------
+
+
+def series_program(chunk: int, m_intervals: int):
+    """[2, chunk] coefficients for indices n0..n0+chunk-1 (n0 is an input)."""
+
+    def fn(n0):
+        return (series.series_chunk(n0, chunk, m_intervals),)
+
+    return fn, (jax.ShapeDtypeStruct((1,), jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# SOR
+# ---------------------------------------------------------------------------
+
+
+def sor_step_program(n: int, m: int | None = None):
+    m = m or n
+
+    def fn(g):
+        return (sor.sor_step(g),)
+
+    return fn, (jax.ShapeDtypeStruct((n, m), jnp.float32),)
+
+
+def sor_sum_program(n: int, m: int | None = None):
+    """Interior-sum reduction (the Gtotal tail, reduced on-device)."""
+    m = m or n
+
+    def fn(g):
+        return (jnp.sum(g[1:-1, 1:-1]),)
+
+    return fn, (jax.ShapeDtypeStruct((n, m), jnp.float32),)
+
+
+def sor_fused_program(n: int, iterations: int, m: int | None = None):
+    """Ablation artifact: all `sync` iterations fused in one executable."""
+    m = m or n
+
+    def fn(g):
+        g = jax.lax.fori_loop(0, iterations, lambda _, acc: sor.sor_step(acc), g)
+        return (g, jnp.sum(g[1:-1, 1:-1]))
+
+    return fn, (jax.ShapeDtypeStruct((n, m), jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# SparseMatMult
+# ---------------------------------------------------------------------------
+
+
+def spmv_program(nnz: int, n: int):
+    def fn(val, row, col, x):
+        p = spmv.spmv_products(val, col, x)
+        return (jax.ops.segment_sum(p, row, num_segments=n),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+def spmv_acc_program(nnz: int, n: int):
+    """One accumulation round: y' = y + A@x (the per-launch device step).
+
+    The paper's Aparapi back-end re-launches the kernel per iteration; the
+    fused ``spmv_iter_program`` exists as an ablation — and demonstrates
+    that XLA hoists the loop-invariant product out of the fori_loop (LICM),
+    which silently collapses the JavaGrande workload (EXPERIMENTS.md §Perf).
+    """
+
+    def fn(val, row, col, x, y):
+        p = spmv.spmv_products(val, col, x)
+        return (y + jax.ops.segment_sum(p, row, num_segments=n),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+def spmv_iter_program(nnz: int, n: int, iterations: int):
+    """JavaGrande semantics: y accumulates A@x for ``iterations`` rounds."""
+
+    def fn(val, row, col, x):
+        def body(_, y):
+            p = spmv.spmv_products(val, col, x)
+            return y + jax.ops.segment_sum(p, row, num_segments=n)
+
+        y = jax.lax.fori_loop(0, iterations, body, jnp.zeros((n,), jnp.float32))
+        return (y,)
+
+    return fn, (
+        jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# LUFact
+# ---------------------------------------------------------------------------
+
+
+def _lufact_step_kernelized(a, k):
+    """ref.lufact_step with the trailing update routed through the L1 kernel."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+    colk = jnp.where(idx >= k, jnp.abs(a[:, k]), -jnp.inf)
+    piv = jnp.argmax(colk)
+    rk = a[k, :]
+    rp = a[piv, :]
+    a = a.at[k, :].set(rp).at[piv, :].set(rk)
+    mult = jnp.where(idx > k, a[:, k] / a[k, k], 0.0)
+    pivot_row = jnp.where(idx > k, a[k, :], 0.0)
+    a = daxpy.trailing_update(a, mult, pivot_row)
+    a = a.at[:, k].set(jnp.where(idx > k, mult, a[:, k]))
+    return a, piv
+
+
+def lufact_update_program(m: int, n: int):
+    def fn(a, mult, pivot_row):
+        return (daxpy.trailing_update(a, mult, pivot_row),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+def lufact_program(n: int):
+    """Full fused LU factorization with partial pivoting."""
+
+    def fn(a):
+        def body(k, carry):
+            a, pivs = carry
+            a, piv = _lufact_step_kernelized(a, k)
+            return a, pivs.at[k].set(piv.astype(jnp.int32))
+
+        pivs = jnp.arange(n, dtype=jnp.int32)
+        a, pivs = jax.lax.fori_loop(0, n, body, (a, pivs))
+        return (a, pivs)
+
+    return fn, (jax.ShapeDtypeStruct((n, n), jnp.float32),)
+
+
+# The artifact PLAN (which programs at which sizes) lives in aot.py.

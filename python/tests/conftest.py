@@ -1,0 +1,17 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+settings.register_profile("somd", max_examples=25, deadline=None)
+settings.load_profile("somd")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

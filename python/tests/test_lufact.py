@@ -1,0 +1,78 @@
+"""LUFact: rank-1 kernel vs oracle; full LU reconstructs P A = L U."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import daxpy, ref
+from compile import model
+
+
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    rb=st.sampled_from([1, 8, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_trailing_update_matches_ref(m, n, rb, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    mult = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    p = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = daxpy.trailing_update(a, mult, p, row_block=rb)
+    want = ref.lufact_trailing_update(a, mult, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def _reconstruct(lu, pivs, n):
+    lu = np.asarray(lu, np.float64)
+    l = np.tril(lu, -1) + np.eye(n)
+    u = np.triu(lu)
+    a = l @ u
+    # undo the row swaps in reverse order
+    for k in reversed(range(n)):
+        p = int(pivs[k])
+        if p != k:
+            a[[k, p], :] = a[[p, k], :]
+    return a
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 16, 40])
+def test_lufact_reconstructs(n):
+    rng = np.random.default_rng(n)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    lu, pivs = ref.lufact(a)
+    back = _reconstruct(lu, np.asarray(pivs), n)
+    np.testing.assert_allclose(back, np.asarray(a, np.float64), atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [4, 12, 32])
+def test_kernelized_program_matches_ref(n):
+    rng = np.random.default_rng(n + 1)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    fn, _ = model.lufact_program(n)
+    lu_k, piv_k = fn(a)
+    lu_r, piv_r = ref.lufact(a)
+    np.testing.assert_allclose(np.asarray(lu_k), np.asarray(lu_r), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(piv_k), np.asarray(piv_r))
+
+
+@given(n=st.integers(2, 24), k=st.integers(0, 5), seed=st.integers(0, 2**31))
+def test_step_touches_only_trailing(n, k, seed):
+    if k >= n:
+        k = n - 1
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    out, piv = ref.lufact_step(a, k)
+    out = np.asarray(out)
+    ain = np.asarray(a)
+    piv = int(piv)
+    # rows above k unchanged; columns left of k unchanged except for the
+    # k<->piv full-row swap (partial pivoting swaps the factored L part too)
+    np.testing.assert_array_equal(out[:k, :], ain[:k, :])
+    untouched = [r for r in range(n) if r not in (k, piv)]
+    np.testing.assert_array_equal(out[np.ix_(untouched, range(k))], ain[np.ix_(untouched, range(k))])
+    np.testing.assert_array_equal(out[k, :k], ain[piv, :k])
+    np.testing.assert_array_equal(out[piv, :k], ain[k, :k])
+    assert k <= piv < n

@@ -1,0 +1,57 @@
+"""Series kernel: chunked coefficients vs oracle; integration sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, series
+
+
+@given(
+    n0=st.integers(0, 10_000),
+    chunk=st.sampled_from([8, 32, 96]),
+    m=st.sampled_from([50, 200]),
+)
+def test_chunk_matches_ref(n0, chunk, m):
+    out = series.series_chunk(jnp.asarray([float(n0)], jnp.float32), chunk, m, block=8)
+    a, b = out[0], out[1]
+    ar, br = ref.series_coefficients(np.arange(n0, n0 + chunk), m)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ar), atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(br), atol=2e-4, rtol=2e-3)
+
+
+def test_a0_against_closed_form():
+    # int_0^2 (x+1)^x dx ≈ 5.7632 (cross-checked with the rust substrate's
+    # trapezoid implementation); the JG kernel halves a_0: a0 ≈ 2.8816.
+    a0 = float(ref.series_a0(10_000))
+    assert 2.86 < a0 < 2.90
+
+
+def test_b0_is_zero():
+    _, b = ref.series_coefficients(np.array([0.0]), 1000)
+    assert abs(float(b[0])) < 1e-5
+
+
+def test_coefficients_decay():
+    a, b = ref.series_coefficients(np.arange(0, 512), 1000)
+    lead = np.abs(np.asarray(a[:8])).mean()
+    tail = np.abs(np.asarray(a[-8:])).mean()
+    assert tail < lead
+
+
+@pytest.mark.parametrize("split", [1, 2, 4])
+def test_chunking_is_offset_consistent(split):
+    m = 100
+    total = 64
+    step = total // split
+    parts = []
+    for s in range(split):
+        out = series.series_chunk(
+            jnp.asarray([float(s * step)], jnp.float32), step, m, block=8
+        )
+        parts.append(np.asarray(out))
+    got = np.concatenate(parts, axis=1)
+    ar, br = ref.series_coefficients(np.arange(total), m)
+    np.testing.assert_allclose(got[0], np.asarray(ar), atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(got[1], np.asarray(br), atol=2e-4, rtol=2e-3)

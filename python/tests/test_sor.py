@@ -1,0 +1,86 @@
+"""SOR stencil kernel vs oracle; boundary and iteration invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, sor
+from compile import model
+
+
+def _g(rng, n, m):
+    return jnp.asarray(rng.standard_normal((n, m)), jnp.float32)
+
+
+@given(
+    n=st.integers(3, 64),
+    m=st.integers(3, 64),
+    rb=st.sampled_from([1, 4, 16, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_banded_kernel_matches_ref(n, m, rb, seed):
+    g = _g(np.random.default_rng(seed), n, m)
+    got = sor.sor_step_banded(g, row_block=rb)
+    want = ref.sor_step(g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@given(n=st.integers(3, 64), m=st.integers(3, 64), seed=st.integers(0, 2**31))
+def test_fused_kernel_matches_ref(n, m, seed):
+    g = _g(np.random.default_rng(seed), n, m)
+    got = sor.sor_step_fused(g)
+    want = ref.sor_step(g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_variants_agree():
+    g = _g(np.random.default_rng(0), 40, 28)
+    np.testing.assert_allclose(
+        np.asarray(sor.sor_step_fused(g)),
+        np.asarray(sor.sor_step_banded(g, 8)),
+        atol=1e-6,
+    )
+
+
+@given(n=st.integers(3, 40), seed=st.integers(0, 2**31))
+def test_boundary_unchanged(n, seed):
+    g = _g(np.random.default_rng(seed), n, n)
+    out = np.asarray(sor.sor_step(g))
+    gin = np.asarray(g)
+    np.testing.assert_array_equal(out[0, :], gin[0, :])
+    np.testing.assert_array_equal(out[-1, :], gin[-1, :])
+    np.testing.assert_array_equal(out[:, 0], gin[:, 0])
+    np.testing.assert_array_equal(out[:, -1], gin[:, -1])
+
+
+def test_constant_field_is_fixed_point():
+    # For a constant interior+boundary field the sweep is identity:
+    # w/4*(4c) + (1-w)c = c.
+    g = jnp.full((16, 16), 3.5, jnp.float32)
+    out = sor.sor_step(g)
+    np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-5)
+
+
+@pytest.mark.parametrize("iters", [1, 3, 10])
+def test_fused_program_matches_iterated_ref(iters):
+    rng = np.random.default_rng(42)
+    g = _g(rng, 18, 18)
+    fn, _ = model.sor_fused_program(18, iters)
+    got_g, got_total = fn(g)
+    want_g, want_total = ref.sor_run(g, iters)
+    np.testing.assert_allclose(np.asarray(got_g), np.asarray(want_g), atol=1e-4)
+    np.testing.assert_allclose(float(got_total), float(want_total), rtol=1e-4)
+
+
+def test_step_program_composes_with_sum_program():
+    rng = np.random.default_rng(3)
+    g = _g(rng, 20, 20)
+    step, _ = model.sor_step_program(20)
+    ssum, _ = model.sor_sum_program(20)
+    cur = g
+    for _ in range(5):
+        (cur,) = step(cur)
+    (total,) = ssum(cur)
+    want_g, want_total = ref.sor_run(g, 5)
+    np.testing.assert_allclose(float(total), float(want_total), rtol=1e-4)

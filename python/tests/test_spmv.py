@@ -1,0 +1,53 @@
+"""SpMV kernel vs oracle and vs a dense matmul cross-check."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, spmv
+from compile import model
+
+
+def _problem(rng, n, nnz):
+    val = jnp.asarray(rng.standard_normal(nnz), jnp.float32)
+    row = jnp.asarray(np.sort(rng.integers(0, n, nnz)), jnp.int32)
+    col = jnp.asarray(rng.integers(0, n, nnz), jnp.int32)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    return val, row, col, x
+
+
+@given(
+    n=st.integers(2, 128),
+    per_row=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+    block=st.sampled_from([1, 16, 4096]),
+)
+def test_products_match_ref(n, per_row, seed, block):
+    rng = np.random.default_rng(seed)
+    val, row, col, x = _problem(rng, n, n * per_row)
+    got = spmv.spmv_products(val, col, x, block=block)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.spmv_products(val, col, x)), rtol=1e-6
+    )
+
+
+@given(n=st.integers(2, 64), seed=st.integers(0, 2**31))
+def test_spmv_matches_dense(n, seed):
+    rng = np.random.default_rng(seed)
+    val, row, col, x = _problem(rng, n, n * 3)
+    y = ref.spmv(val, row, col, x, n)
+    dense = np.zeros((n, n), np.float64)
+    for v, r, c in zip(np.asarray(val), np.asarray(row), np.asarray(col)):
+        dense[r, c] += v
+    want = dense @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-3)
+
+
+def test_iter_program_accumulates():
+    rng = np.random.default_rng(11)
+    n, nnz, iters = 32, 96, 7
+    val, row, col, x = _problem(rng, n, nnz)
+    fn, _ = model.spmv_iter_program(nnz, n, iters)
+    (y,) = fn(val, row, col, x)
+    y1 = np.asarray(ref.spmv(val, row, col, x, n))
+    np.testing.assert_allclose(np.asarray(y), iters * y1, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,33 @@
+"""vecadd kernel vs oracle across shapes and block sizes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import common, ref, vecadd
+
+
+@given(
+    n=st.integers(1, 4096),
+    seed=st.integers(0, 2**32 - 1),
+    target=st.sampled_from([1, 7, 64, 1024]),
+)
+def test_matches_ref(n, seed, target):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = vecadd.vecadd(a, b, block=common.pick_block(n, target))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.vecadd(a, b)), rtol=0)
+
+
+@given(n=st.integers(1, 100_000), target=st.integers(1, 70_000))
+def test_pick_block_divides(n, target):
+    bs = common.pick_block(n, target)
+    assert n % bs == 0
+    assert 1 <= bs <= max(1, min(n, target))
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        common.pick_block(0)

@@ -1,0 +1,244 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **sync-per-launch vs fused loop** (SOR): the paper's `sync`
+//!    translation launches one kernel per iteration (Listing 17); the
+//!    fused `fori_loop` artifact is what the paper's `single`-construct
+//!    future work (§7.5) would enable.  Measures the launch-overhead tax.
+//! 2. **1-D rows vs 2-D blocks** (SOR SMP): the paper credits the built-in
+//!    (block, block) distribution for its SOR advantage (§7.2).
+//! 3. **eager whole-array transfer vs resident chaining** (device): the
+//!    Aparapi explicit-put model (matrix uploaded once) vs naive
+//!    put-per-launch.
+//! 4. **split-join vs persistent workers** (LUFact): the §7.5 limitation,
+//!    quantified.
+//!
+//! `cargo bench --bench ablations [-- --scale S]`
+
+use std::time::Duration;
+
+use somd::bench_suite::{modeled, sor, Class, Sizes};
+use somd::device::{Arg, DeviceProfile, DeviceSession};
+use somd::runtime::{HostTensor, Registry};
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.opt_f64("scale", 0.1);
+    ablation_sync_vs_fused();
+    ablation_1d_vs_2d(scale);
+    ablation_transfer_strategy();
+    ablation_lufact_splitjoin(scale);
+    ablation_cluster_model(scale);
+}
+
+/// 5. Cluster model (paper §4.2): compute-bound Series scales across
+///    nodes; transfer-bound Crypt hits the communication wall — and
+///    undistributed parameters make it worse (§7.5).
+fn ablation_cluster_model(scale: f64) {
+    use somd::bench_suite::harness;
+    use somd::somd::cluster::{model_cluster_invocation, CommShape, NetworkProfile};
+    println!("== Ablation 5: cluster model (1GbE, measured intra-node work, class A scale {scale}) ==");
+    let s = Sizes::scaled(Class::A, scale);
+    let net = NetworkProfile::gigabit_ethernet();
+    let cases = [
+        (
+            "Series",
+            harness::sequential_time("Series", &s, 3),
+            CommShape {
+                distributed_in_bytes: 16 * s.series_n,
+                replicated_in_bytes: 0,
+                partial_result_bytes: 16 * s.series_n / 4,
+            },
+        ),
+        (
+            "Crypt",
+            harness::sequential_time("Crypt", &s, 3),
+            CommShape {
+                distributed_in_bytes: 2 * s.crypt_bytes,
+                replicated_in_bytes: 0,
+                partial_result_bytes: 2 * s.crypt_bytes / 4,
+            },
+        ),
+    ];
+    for (name, t_seq, comm) in cases {
+        let mut row = Vec::new();
+        for nodes in [1usize, 2, 4, 8, 16] {
+            // intra-node makespan: ideal split of the measured work
+            let w = t_seq.div_f64(nodes as f64);
+            let m = model_cluster_invocation(&net, nodes, comm, w);
+            row.push(format!("{:.2}", m.speedup_over(t_seq)));
+        }
+        println!("  {name:<8} speedup at 1/2/4/8/16 nodes: {}", row.join(" / "));
+    }
+    println!("  -> Series scales; Crypt saturates on scatter+reduce bytes (paper §4.2/§7.5)\n");
+}
+
+/// 1. one launch per `sync` iteration vs the fused artifact.
+fn ablation_sync_vs_fused() {
+    println!("== Ablation 1: SOR sync-per-launch vs fused loop (device, Fermi profile) ==");
+    let reg = Registry::load_default().expect("artifacts");
+    let n = reg.info("sor_step_A").unwrap().meta_usize("n").unwrap();
+    let iters = 100;
+    let g0: Vec<f32> = sor::generate(n, 1).iter().map(|&v| v as f32).collect();
+
+    let mut per_launch = DeviceSession::new(&reg, DeviceProfile::fermi());
+    let (_, total_a) = somd::bench_suite::gpu::sor_run(&mut per_launch, &g0, n, iters).unwrap();
+    let sa = per_launch.stats();
+
+    let mut fused = DeviceSession::new(&reg, DeviceProfile::fermi());
+    let t = HostTensor::mat_f32(g0.clone(), n, n);
+    let out = fused.launch_to_host("sor_fused_A", &[Arg::Host(&t)], n * n).unwrap();
+    let total_b = out[1].as_f32().unwrap()[0];
+    let sb = fused.stats();
+
+    println!(
+        "  per-launch: {} launches, device_time {:.4}s (Gtotal {total_a:.2})",
+        sa.launches,
+        sa.device_time.as_secs_f64()
+    );
+    println!(
+        "  fused:      {} launches, device_time {:.4}s (Gtotal {total_b:.2})",
+        sb.launches,
+        sb.device_time.as_secs_f64()
+    );
+    let overhead = sa.device_time.as_secs_f64() - sb.device_time.as_secs_f64();
+    println!(
+        "  -> launch/global-sync tax: {:.4}s over {iters} iterations ({:.1}us/iteration)\n",
+        overhead,
+        overhead * 1e6 / iters as f64
+    );
+    let total_b = total_b as f64;
+    assert!((total_a - total_b).abs() / total_b.abs().max(1.0) < 1e-3);
+}
+
+/// 2. Rows1D vs Block2D partitioning for the SMP SOR.
+fn ablation_1d_vs_2d(scale: f64) {
+    println!("== Ablation 2: SOR 1-D row bands vs 2-D blocks (SMP, modeled p=4/8) ==");
+    let s = Sizes::scaled(Class::C, scale);
+    let o = modeled::calibrate();
+    let g0 = sor::generate(s.sor_n, 1);
+    let inp = sor::Input { g0: &g0, n: s.sor_n, iters: 20 };
+    let t_seq = {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(sor::sequential(&g0, s.sor_n, 20));
+        t0.elapsed()
+    };
+    for p in [4usize, 8] {
+        let m2d = modeled::model_invocation(&sor::somd_method(), &inp, t_seq, p, 20, true, &o);
+        let m1d = modeled::model_invocation(&sor::jg_method(), &inp, t_seq, p, 20, true, &o);
+        println!(
+            "  p={p}: 2D max_work={:.4}s speedup={:.2} | 1D max_work={:.4}s speedup={:.2}",
+            m2d.max_work.as_secs_f64(),
+            m2d.speedup(),
+            m1d.max_work.as_secs_f64(),
+            m1d.speedup()
+        );
+    }
+    println!();
+}
+
+/// 3. matrix put once (Aparapi explicit mode) vs re-put per launch.
+fn ablation_transfer_strategy() {
+    println!("== Ablation 3: device transfer strategy (SOR, Fermi profile, 20 iterations) ==");
+    let reg = Registry::load_default().expect("artifacts");
+    let n = reg.info("sor_step_A").unwrap().meta_usize("n").unwrap();
+    let iters = 20;
+    let g0: Vec<f32> = sor::generate(n, 2).iter().map(|&v| v as f32).collect();
+
+    // resident chaining (what gpu::sor_run does)
+    let mut resident = DeviceSession::new(&reg, DeviceProfile::fermi());
+    somd::bench_suite::gpu::sor_run(&mut resident, &g0, n, iters).unwrap();
+    let sr = resident.stats();
+
+    // naive: get + re-put the matrix around every launch
+    let mut naive = DeviceSession::new(&reg, DeviceProfile::fermi());
+    let mut host = HostTensor::mat_f32(g0, n, n);
+    for _ in 0..iters {
+        let out = naive.launch_to_host("sor_step_A", &[Arg::Host(&host)], n * n).unwrap();
+        host = out.into_iter().next().unwrap();
+    }
+    let sn = naive.stats();
+
+    println!(
+        "  resident: h2d={:>12}B d2h={:>12}B device_time={:.4}s",
+        sr.bytes_h2d,
+        sr.bytes_d2h,
+        sr.device_time.as_secs_f64()
+    );
+    println!(
+        "  naive:    h2d={:>12}B d2h={:>12}B device_time={:.4}s",
+        sn.bytes_h2d,
+        sn.bytes_d2h,
+        sn.device_time.as_secs_f64()
+    );
+    println!(
+        "  -> residency saves {:.1}x transferred bytes\n",
+        (sn.bytes_h2d + sn.bytes_d2h) as f64 / (sr.bytes_h2d + sr.bytes_d2h).max(1) as f64
+    );
+}
+
+/// 4. LUFact: split-join SOMD vs persistent-worker JG (modeled), plus a
+///    *measured* head-to-head of the three coordination patterns — all
+///    compute identical results on this host, so wall-time deltas are
+///    pure coordination overhead.  `somd_single` is the paper's §7.5
+///    `single`-construct future work, implemented here.
+fn ablation_lufact_splitjoin(scale: f64) {
+    use somd::bench_suite::lufact;
+    use somd::somd::grid::SharedGrid;
+    println!("== Ablation 4: LUFact split-join vs persistent workers (modeled) ==");
+    let o = modeled::calibrate();
+    for class in [Class::A, Class::C] {
+        let s = Sizes::scaled(class, scale);
+        let lm = modeled::measure_lufact(s.lufact_n, 1);
+        let somd8 = lm.somd(s.lufact_n, 8, &o);
+        let jg8 = lm.jg(s.lufact_n, 8, &o);
+        println!(
+            "  class {} (n={}): parallel section {:.1}% | SOMD p=8 speedup {:.2} (overhead {:.2}ms) | JG p=8 speedup {:.2} (overhead {:.2}ms)",
+            class.name(),
+            s.lufact_n,
+            100.0 * lm.t_update.as_secs_f64() / lm.t_seq.as_secs_f64(),
+            somd8.speedup(),
+            ms(somd8.overhead),
+            jg8.speedup(),
+            ms(jg8.overhead)
+        );
+    }
+    println!("  (paper §7.2: JG ahead; SOMD 'evens things up on Class C')");
+
+    println!("  measured coordination overhead (p=4, identical numerics, this host):");
+    let s = Sizes::scaled(Class::A, scale);
+    let n = s.lufact_n;
+    let orig = lufact::generate(n, 1);
+    let time_it = |f: &dyn Fn(&SharedGrid)| {
+        let a = SharedGrid::from_vec(n, n, orig.clone());
+        f(&a); // warm-up
+        let a = SharedGrid::from_vec(n, n, orig.clone());
+        let t0 = std::time::Instant::now();
+        f(&a);
+        t0.elapsed()
+    };
+    let t_seq = time_it(&|a| {
+        lufact::sequential(a);
+    });
+    let t_somd = time_it(&|a| {
+        lufact::somd(a, 4);
+    });
+    let t_single = time_it(&|a| {
+        lufact::somd_single(a, 4);
+    });
+    let t_jg = time_it(&|a| {
+        lufact::jg_threads(a, 4);
+    });
+    println!(
+        "    sequential {:.2}ms | SOMD split-join {:.2}ms | SOMD+single {:.2}ms | JG threads {:.2}ms",
+        ms(t_seq),
+        ms(t_somd),
+        ms(t_single),
+        ms(t_jg)
+    );
+    println!("    -> the `single` construct removes the split-join tax while staying declarative");
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}

@@ -1,0 +1,36 @@
+//! Regenerates paper Figures 10a–10c: shared-memory speedups of the SOMD
+//! versions vs the JavaGrande-style hand-threaded versions, 1–8
+//! partitions, classes A–C.  On this 1-core testbed the parallel makespan
+//! is modeled from measured per-partition work + calibrated runtime
+//! overheads (DESIGN.md §3); expected shapes from the paper:
+//!
+//! * Crypt — SOMD ≥ JG (JG pays per-thread copies);
+//! * Series — parity (work dominates);
+//! * SOR — SOMD (2-D blocks) wins as size grows; may lose at p=2;
+//! * SparseMatMult — JG slightly ahead (runtime submission overhead);
+//! * LUFact — JG ahead (split-join per outer iteration vs barriers).
+//!
+//! `cargo bench --bench fig10_shared_memory [-- --scale S --reps N --class A|B|C|all]`
+
+use somd::bench_suite::{harness, modeled, Class};
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.opt_f64("scale", env_scale());
+    let reps = args.opt_usize("reps", 3);
+    let o = modeled::calibrate();
+    println!("calibrated overheads: {o:?}\n");
+    let classes: Vec<Class> = match args.opt("class") {
+        None | Some("all") => Class::all().to_vec(),
+        Some(c) => vec![Class::parse(c).expect("--class A|B|C|all")],
+    };
+    for class in classes {
+        harness::print_fig10(class, scale, reps, &o);
+        println!();
+    }
+}
+
+fn env_scale() -> f64 {
+    std::env::var("SOMD_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.1)
+}

@@ -1,0 +1,37 @@
+//! Regenerates paper Figures 11a–11c: best CPU version vs the GPU-SOMD
+//! version on the two device profiles (Tesla C2050 "Fermi" and GeForce
+//! 320M).  The device path executes the real AOT Pallas/XLA artifacts via
+//! PJRT; transfer/launch costs come from the device profiles (DESIGN.md
+//! §3).  Expected shapes: Series wins big on GPU; Crypt and SparseMatMult
+//! lose to the CPU; 320M beats Fermi on Crypt (shared host memory);
+//! LUFact omitted.
+//!
+//! Artifacts are compiled at a fixed scale — run against the matching
+//! `--scale` (default: the manifest's).
+//!
+//! `cargo bench --bench fig11_gpu [-- --scale S --reps N --class A]`
+
+use somd::bench_suite::{harness, modeled, Class};
+use somd::runtime::Registry;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let reg = Registry::load_default().expect("run `make artifacts` first");
+    let scale = args.opt_f64("scale", reg.scale);
+    let reps = args.opt_usize("reps", 3);
+    let o = modeled::calibrate();
+    let classes: Vec<Class> = match args.opt("class") {
+        None => vec![Class::A],
+        Some("all") => Class::all().to_vec(),
+        Some(c) => vec![Class::parse(c).expect("--class A|B|C|all")],
+    };
+    for class in classes {
+        harness::print_fig11(class, scale, reps, &o, &reg).expect("fig11");
+        println!();
+    }
+    println!(
+        "paper reference shapes (§7.3): Series 39–421x on Fermi, 35–98x on 320M;\n\
+         Crypt/SparseMatMult below the CPU versions; 320M > Fermi on Crypt."
+    );
+}

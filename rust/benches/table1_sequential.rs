@@ -1,0 +1,29 @@
+//! Regenerates paper Table 1: sequential baselines per configuration
+//! class.  Custom harness (criterion is not in the offline vendor set);
+//! methodology follows the paper: mean of the middle tier of the samples.
+//!
+//! `cargo bench --bench table1_sequential [-- --scale S --reps N]`
+
+use somd::bench_suite::harness;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.opt_f64("scale", env_scale());
+    let reps = args.opt_usize("reps", 5);
+    harness::print_table1(scale, reps);
+    println!("\npaper reference (scale 1.0, 2x Opteron 2376 / JDK):");
+    for (b, a, bb, c) in [
+        ("Crypt", 0.225, 1.341, 3.340),
+        ("LUFact", 0.091, 0.778, 9.181),
+        ("Series", 10.054, 102.973, 1669.133),
+        ("SOR", 0.885, 2.021, 3.432),
+        ("SparseMatMult", 0.665, 1.744, 19.448),
+    ] {
+        println!("  {b:<15} A={a:>9.3}s B={bb:>9.3}s C={c:>9.3}s");
+    }
+}
+
+fn env_scale() -> f64 {
+    std::env::var("SOMD_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.1)
+}

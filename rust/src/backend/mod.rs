@@ -1,0 +1,158 @@
+//! Multi-architecture method dispatch (paper Figure 9 + §6): one SOMD
+//! source, several compiled versions; the runtime picks per the user's
+//! `method:target` rules and falls back to shared memory when a
+//! preference is inapplicable on the available hardware.
+
+use anyhow::Result;
+
+use crate::device::{DeviceProfile, DeviceSession, DeviceStats};
+use crate::runtime::Registry;
+use crate::somd::engine::Engine;
+use crate::somd::master::SomdMethod;
+use crate::somd::Target;
+
+/// A device-side implementation of a SOMD method (the master code of
+/// Algorithm 2, driving kernels through a [`DeviceSession`]).
+pub type DeviceFn<I, R> = Box<dyn Fn(&mut DeviceSession<'_>, &I) -> Result<R>>;
+
+/// The compiled versions of one SOMD method.
+pub struct HeteroMethod<I: ?Sized, P, E, R> {
+    pub smp: SomdMethod<I, P, E, R>,
+    device: Option<DeviceFn<I, R>>,
+}
+
+/// Where an invocation actually ran (after fallback resolution).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Executed {
+    Smp { partitions: usize },
+    Device { profile: &'static str, stats: DeviceStats },
+}
+
+impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R> {
+    pub fn smp_only(smp: SomdMethod<I, P, E, R>) -> Self {
+        Self { smp, device: None }
+    }
+
+    pub fn with_device(smp: SomdMethod<I, P, E, R>, device: DeviceFn<I, R>) -> Self {
+        Self { smp, device: Some(device) }
+    }
+
+    pub fn name(&self) -> &str {
+        self.smp.name()
+    }
+
+    pub fn has_device_version(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// Resolve the target for this method (§6): user rules first, then
+    /// applicability (device version compiled? profile known? registry
+    /// loaded?) — inapplicable preferences revert to the default.
+    pub fn resolve(&self, engine: &Engine, registry: Option<&Registry>) -> Target {
+        match engine.target_for(self.smp.name()) {
+            Target::Device(name) => {
+                let applicable = self.device.is_some()
+                    && registry.is_some()
+                    && DeviceProfile::by_name(&name).is_some();
+                if applicable {
+                    Target::Device(name)
+                } else {
+                    Target::Smp
+                }
+            }
+            t => t,
+        }
+    }
+
+    /// Invoke through the engine, honoring the rules; returns the result
+    /// and where it ran.
+    pub fn invoke(
+        &self,
+        engine: &Engine,
+        registry: Option<&Registry>,
+        input: &I,
+    ) -> Result<(R, Executed)> {
+        match self.resolve(engine, registry) {
+            Target::Smp => {
+                let r = engine.invoke(&self.smp, input);
+                Ok((r, Executed::Smp { partitions: engine.workers() }))
+            }
+            Target::Device(name) => {
+                let profile = DeviceProfile::by_name(&name).expect("resolved profile");
+                let reg = registry.expect("resolved registry");
+                let mut session = DeviceSession::new(reg, profile);
+                let dev = self.device.as_ref().expect("resolved device fn");
+                let r = dev(&mut session, input)?;
+                let stats = session.stats();
+                Ok((
+                    r,
+                    Executed::Device { profile: session.profile().name, stats },
+                ))
+            }
+        }
+    }
+
+    /// Force execution on a given device profile regardless of rules
+    /// (bench harness entry).
+    pub fn invoke_on_device(
+        &self,
+        registry: &Registry,
+        profile: DeviceProfile,
+        input: &I,
+    ) -> Result<(R, DeviceStats)> {
+        let dev = self
+            .device
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("method '{}' has no device version", self.name()))?;
+        let mut session = DeviceSession::new(registry, profile);
+        let r = dev(&mut session, input)?;
+        let stats = session.stats();
+        Ok((r, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::partition::Block1D;
+    use crate::somd::{reduction, Rules};
+
+    fn method() -> HeteroMethod<Vec<i64>, crate::somd::partition::BlockPart, (), i64> {
+        HeteroMethod::smp_only(SomdMethod::new(
+            "Sum.sum",
+            |v: &Vec<i64>, n| Block1D::new().ranges(v.len(), n),
+            |_, _| (),
+            |v, p, _, _| p.own.iter().map(|i| v[i]).sum(),
+            reduction::sum::<i64>(),
+        ))
+    }
+
+    #[test]
+    fn defaults_to_smp() {
+        let e = Engine::new(2);
+        let m = method();
+        let (r, how) = m.invoke(&e, None, &vec![1, 2, 3]).unwrap();
+        assert_eq!(r, 6);
+        assert_eq!(how, Executed::Smp { partitions: 2 });
+    }
+
+    #[test]
+    fn inapplicable_device_rule_falls_back() {
+        let mut rules = Rules::empty();
+        rules.set("Sum.sum", Target::Device("fermi".into()));
+        let e = Engine::with_rules(2, rules);
+        let m = method(); // no device version, no registry
+        assert_eq!(m.resolve(&e, None), Target::Smp);
+        let (r, _) = m.invoke(&e, None, &vec![5, 5]).unwrap();
+        assert_eq!(r, 10);
+    }
+
+    #[test]
+    fn unknown_profile_falls_back() {
+        let mut rules = Rules::empty();
+        rules.set("Sum.sum", Target::Device("h100".into()));
+        let e = Engine::with_rules(2, rules);
+        let m = method();
+        assert_eq!(m.resolve(&e, None), Target::Smp);
+    }
+}

@@ -1,0 +1,282 @@
+//! JavaGrande LUFact: LU factorization with partial pivoting (the paper's
+//! hard case, §7.2 / §7.5).
+//!
+//! * Sequential: in-place right-looking LU + triangular solve.
+//! * SOMD version: the outer k-loop stays in the top-level method; each
+//!   trailing update is an *inner SOMD method* invocation (split-join per
+//!   iteration — the overhead the paper measures).
+//! * JG-style version: persistent workers with a rank-0 thread doing the
+//!   pivot phase between barriers (the explicit-synchronization pattern
+//!   of the JavaGrande threads).
+
+use crate::somd::distribution::{index_ranges, Range1};
+use crate::somd::grid::SharedGrid;
+use crate::somd::master::{run_mis, SomdMethod};
+use crate::somd::reduction;
+use crate::util::prng::Xorshift64;
+
+pub fn generate(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xorshift64::new(seed);
+    (0..n * n).map(|_| rng.f64_range(-1.0, 1.0)).collect()
+}
+
+/// Pivot search + row swap + multiplier scaling for column k (the
+/// sequential phase).  Returns the pivot row index.
+fn pivot_phase(a: &SharedGrid, k: usize) -> usize {
+    let n = a.rows();
+    let mut piv = k;
+    let mut best = a.get(k, k).abs();
+    for i in k + 1..n {
+        let v = a.get(i, k).abs();
+        if v > best {
+            best = v;
+            piv = i;
+        }
+    }
+    if piv != k {
+        for j in 0..n {
+            let t = a.get(k, j);
+            a.set(k, j, a.get(piv, j));
+            a.set(piv, j, t);
+        }
+    }
+    let pv = a.get(k, k);
+    for i in k + 1..n {
+        a.set(i, k, a.get(i, k) / pv);
+    }
+    piv
+}
+
+/// Trailing update of rows [lo, hi) (each clamped below by k+1): the daxpy
+/// loop the paper parallelizes.
+fn update_rows(a: &SharedGrid, k: usize, lo: usize, hi: usize) {
+    let n = a.rows();
+    let lo = lo.max(k + 1);
+    let hi = hi.min(n);
+    for i in lo..hi {
+        let m = a.get(i, k);
+        if m == 0.0 {
+            continue;
+        }
+        // SAFETY: this MI owns rows [lo, hi) during the update phase, and
+        // row k is read-only in this phase.
+        let (pivot_row, row) = unsafe { (a.row_mut(k), a.row_mut(i)) };
+        for j in k + 1..n {
+            row[j] -= m * pivot_row[j];
+        }
+    }
+}
+
+/// Public wrappers for the modeled executor's phase instrumentation.
+pub fn pivot_phase_pub(a: &SharedGrid, k: usize) -> usize {
+    pivot_phase(a, k)
+}
+
+pub fn update_rows_pub(a: &SharedGrid, k: usize, lo: usize, hi: usize) {
+    update_rows(a, k, lo, hi)
+}
+
+/// Sequential LU with partial pivoting; returns pivots.
+pub fn sequential(a: &SharedGrid) -> Vec<usize> {
+    let n = a.rows();
+    let mut pivots = Vec::with_capacity(n);
+    for k in 0..n {
+        pivots.push(pivot_phase(a, k));
+        update_rows(a, k, k + 1, n);
+    }
+    pivots
+}
+
+/// The inner SOMD method: one trailing update, rows partitioned.
+pub struct UpdateInput<'a> {
+    pub a: &'a SharedGrid,
+    pub k: usize,
+}
+
+pub fn update_method<'a>() -> SomdMethod<UpdateInput<'a>, Range1, (), ()> {
+    SomdMethod::new(
+        "LUFact.daxpy",
+        |inp: &UpdateInput<'_>, n| {
+            let rows = inp.a.rows() - (inp.k + 1);
+            index_ranges(rows, n)
+                .into_iter()
+                .map(|r| Range1::new(r.lo + inp.k + 1, r.hi + inp.k + 1))
+                .collect()
+        },
+        |_, _| (),
+        |inp, part, _, _| update_rows(inp.a, inp.k, part.lo, part.hi),
+        reduction::FnReduce::new(|_parts: Vec<()>| ()),
+    )
+}
+
+/// SOMD LUFact: per-k inner SOMD invocations (split-join).
+pub fn somd(a: &SharedGrid, nparts: usize) -> Vec<usize> {
+    let n = a.rows();
+    let m = update_method();
+    let mut pivots = Vec::with_capacity(n);
+    for k in 0..n {
+        pivots.push(pivot_phase(a, k));
+        if k + 1 < n {
+            m.invoke(&UpdateInput { a, k }, nparts.min(n - k - 1));
+        }
+    }
+    pivots
+}
+
+/// SOMD LUFact with the `single` construct (paper §7.5 future work): ONE
+/// SOMD invocation whose MIs stay alive across the outer k-loop; the
+/// pivot phase runs inside `ctx.single`, the update on each MI's rows.
+/// This removes the per-iteration split-join the paper identifies as
+/// SOMD's LUFact weakness — while keeping the declarative model.
+pub fn somd_single(a: &SharedGrid, nparts: usize) -> Vec<usize> {
+    let n = a.rows();
+    let parts: Vec<usize> = (0..nparts).collect();
+    let pivots_per_rank = run_mis(a, &parts, &(), &|a, &rank, _, ctx| {
+        let p = ctx.parts();
+        let mut pivots = Vec::with_capacity(n);
+        for k in 0..n {
+            // executed by exactly one MI, result broadcast (fences on
+            // both sides order it against the updates)
+            let piv = ctx.single(|| pivot_phase(a, k));
+            pivots.push(piv);
+            if k + 1 < n {
+                let rows = n - (k + 1);
+                let ranges = index_ranges(rows, p);
+                let r = &ranges[rank];
+                update_rows(a, k, r.lo + k + 1, r.hi + k + 1);
+            }
+        }
+        pivots
+    });
+    pivots_per_rank.into_iter().next().unwrap()
+}
+
+/// JG-style LUFact: one thread group for the whole factorization; rank 0
+/// performs each pivot phase between two fences (the barrier pattern of
+/// the JavaGrande version).
+pub fn jg_threads(a: &SharedGrid, nparts: usize) -> Vec<usize> {
+    let n = a.rows();
+    let pivots = SharedGrid::new(1, n, 0.0);
+    let parts: Vec<usize> = (0..nparts).collect();
+    run_mis(a, &parts, &pivots, &|a, &rank, pivots, ctx| {
+        let p = ctx.parts();
+        for k in 0..n {
+            if rank == 0 {
+                pivots.set(0, k, pivot_phase(a, k) as f64);
+            }
+            ctx.fence(); // pivot visible to all
+            if k + 1 < n {
+                let rows = n - (k + 1);
+                let ranges = index_ranges(rows, p);
+                let r = &ranges[rank];
+                update_rows(a, k, r.lo + k + 1, r.hi + k + 1);
+            }
+            ctx.fence(); // update complete before next pivot
+        }
+    });
+    (0..n).map(|k| pivots.get(0, k) as usize).collect()
+}
+
+/// Reconstruct PA from LU and pivots, for validation: returns max |PA-LU*|
+/// against the original matrix.
+pub fn reconstruction_error(original: &[f64], lu: &SharedGrid, pivots: &[usize]) -> f64 {
+    let n = lu.rows();
+    // A' = L @ U
+    let mut rebuilt = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = if i <= j { lu.get(i, j) } else { 0.0 }; // U part (l_ii = 1)
+            let kmax = i.min(j + 1);
+            for k in 0..kmax {
+                s += lu.get(i, k) * lu.get(k, j);
+            }
+            rebuilt[i * n + j] = s;
+        }
+    }
+    // undo row swaps in reverse
+    for k in (0..n).rev() {
+        let p = pivots[k];
+        if p != k {
+            for j in 0..n {
+                rebuilt.swap(k * n + j, p * n + j);
+            }
+        }
+    }
+    original
+        .iter()
+        .zip(&rebuilt)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_reconstructs() {
+        let n = 24;
+        let orig = generate(n, 4);
+        let a = SharedGrid::from_vec(n, n, orig.clone());
+        let pivots = sequential(&a);
+        assert!(reconstruction_error(&orig, &a, &pivots) < 1e-9);
+    }
+
+    #[test]
+    fn somd_matches_sequential() {
+        let n = 32;
+        let orig = generate(n, 5);
+        let seq = SharedGrid::from_vec(n, n, orig.clone());
+        let seq_piv = sequential(&seq);
+        for parts in [1, 2, 4] {
+            let a = SharedGrid::from_vec(n, n, orig.clone());
+            let piv = somd(&a, parts);
+            assert_eq!(piv, seq_piv);
+            for i in 0..n {
+                for j in 0..n {
+                    assert!((a.get(i, j) - seq.get(i, j)).abs() < 1e-12, "parts={parts}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn somd_single_matches_sequential() {
+        let n = 28;
+        let orig = generate(n, 6);
+        let seq = SharedGrid::from_vec(n, n, orig.clone());
+        let seq_piv = sequential(&seq);
+        for parts in [1, 2, 5] {
+            let a = SharedGrid::from_vec(n, n, orig.clone());
+            let piv = somd_single(&a, parts);
+            assert_eq!(piv, seq_piv, "parts={parts}");
+            assert!(reconstruction_error(&orig, &a, &piv) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn jg_threads_matches_sequential() {
+        let n = 20;
+        let orig = generate(n, 8);
+        let seq = SharedGrid::from_vec(n, n, orig.clone());
+        let seq_piv = sequential(&seq);
+        for parts in [1, 3, 6] {
+            let a = SharedGrid::from_vec(n, n, orig.clone());
+            let piv = jg_threads(&a, parts);
+            assert_eq!(piv, seq_piv, "parts={parts}");
+            assert!(reconstruction_error(&orig, &a, &piv) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn singularish_matrix_still_factors() {
+        // a matrix with a zero leading pivot exercises the row swap
+        let n = 4;
+        let mut orig = generate(n, 9);
+        orig[0] = 0.0;
+        let a = SharedGrid::from_vec(n, n, orig.clone());
+        let pivots = sequential(&a);
+        assert_ne!(pivots[0], 0);
+        assert!(reconstruction_error(&orig, &a, &pivots) < 1e-9);
+    }
+}

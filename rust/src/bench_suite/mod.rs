@@ -1,0 +1,26 @@
+//! JavaGrande Section-2 benchmark substrate (paper §7).
+//!
+//! Every benchmark exists in up to four versions:
+//!
+//! 1. **sequential** — the baseline of Table 1;
+//! 2. **SOMD** — the paper's annotated-method version, expressed through
+//!    the [`crate::somd`] API;
+//! 3. **JG-style** — the hand-tuned multithreaded decomposition of the
+//!    JavaGrande suite (the comparison series in Figure 10);
+//! 4. **GPU** — the device-offloaded version (Algorithm 2 master driving
+//!    the AOT Pallas/XLA kernels; Figure 11).
+//!
+//! [`harness`] regenerates the paper's tables/figures; [`modeled`] holds
+//! the calibrated parallel-makespan model used on this 1-core testbed.
+
+pub mod crypt;
+pub mod gpu;
+pub mod harness;
+pub mod lufact;
+pub mod modeled;
+pub mod params;
+pub mod series;
+pub mod sor;
+pub mod sparse;
+
+pub use params::{Class, Sizes};

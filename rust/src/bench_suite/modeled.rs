@@ -1,0 +1,244 @@
+//! Calibrated parallel-makespan model (DESIGN.md §3 substitution).
+//!
+//! This testbed has a single CPU core, so the paper's 1–8-thread speedup
+//! figures cannot be *measured* directly.  They are instead *modeled* from
+//! quantities this host can measure honestly:
+//!
+//! * per-partition map work — measured by running each MI body
+//!   sequentially ([`SomdMethod::map_sequential_timed`]);
+//! * the runtime's own overheads — spawn-per-task, barrier crossing, pool
+//!   submission and reduction, measured by [`calibrate`] microbenchmarks;
+//!
+//! and composed as `T_par(p) = T_partition + p·spawn + max_i(work_i) +
+//! barriers·t_barrier + T_reduce` — a makespan bound that captures exactly
+//! the effects the paper discusses (split-join overhead, barrier counts,
+//! load imbalance, partition-strategy cost), while assuming no memory-
+//! bandwidth contention (noted in EXPERIMENTS.md).  Numerical correctness
+//! of the parallel paths is validated separately by the real
+//! multi-threaded tests; the model is used for *timing* only.
+
+use std::time::{Duration, Instant};
+
+use crate::somd::master::SomdMethod;
+use crate::somd::phaser::Phaser;
+
+/// Measured runtime overheads.
+#[derive(Debug, Clone, Copy)]
+pub struct Overheads {
+    /// Cost of spawning + joining one scoped MI thread.
+    pub spawn_per_task: Duration,
+    /// Cost of one fence crossing per MI (at the calibration width).
+    pub barrier: Duration,
+    /// Engine submission overhead per invocation (rules lookup + queue).
+    pub submit: Duration,
+}
+
+/// Microbenchmark the runtime's own costs.
+pub fn calibrate() -> Overheads {
+    // spawn: run_mis with a trivial body, several widths, take per-task cost
+    let reps = 20;
+    let p = 4;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let parts: Vec<usize> = (0..p).collect();
+        crate::somd::run_mis(&(), &parts, &(), &|_, _, _, _| ());
+    }
+    let spawn_per_task = t0.elapsed() / (reps * p) as u32;
+
+    // barrier: two threads crossing many fences
+    let rounds = 2000u32;
+    let ph = Phaser::new(2);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                for _ in 0..rounds {
+                    ph.arrive_and_wait();
+                }
+            });
+        }
+    });
+    let barrier = t0.elapsed() / rounds;
+
+    // submit: pool round-trip for a no-op job
+    let pool = crate::somd::pool::WorkerPool::new(1);
+    let t0 = Instant::now();
+    for _ in 0..200 {
+        pool.submit(|| ()).join();
+    }
+    let submit = t0.elapsed() / 200;
+
+    Overheads { spawn_per_task, barrier, submit }
+}
+
+/// Modeled timings for one invocation at `p` partitions.
+#[derive(Debug, Clone, Copy)]
+pub struct Modeled {
+    pub p: usize,
+    pub t_seq: Duration,
+    pub t_par: Duration,
+    pub max_work: Duration,
+    pub overhead: Duration,
+}
+
+impl Modeled {
+    pub fn speedup(&self) -> f64 {
+        self.t_seq.as_secs_f64() / self.t_par.as_secs_f64()
+    }
+}
+
+/// Model a single SOMD invocation: measure partition cost, per-partition
+/// work, and reduction cost; compose the makespan.
+///
+/// `barriers` is the number of fence crossings each MI performs (e.g. the
+/// `sync` iteration count for SOR); `with_submit` adds the engine
+/// submission overhead (SOMD-through-Elina vs hand-spawned JG threads).
+pub fn model_invocation<I, P, E, R>(
+    method: &SomdMethod<I, P, E, R>,
+    input: &I,
+    t_seq: Duration,
+    p: usize,
+    barriers: u64,
+    with_submit: bool,
+    o: &Overheads,
+) -> Modeled
+where
+    I: ?Sized + Sync,
+    P: Send + Sync,
+    E: Sync,
+    R: Send,
+{
+    let t0 = Instant::now();
+    let parts = method.partitions(input, p);
+    let t_partition = t0.elapsed();
+    drop(parts);
+
+    let (partials, times, t_env) = method.map_sequential_timed_env(input, p);
+    let t_partition = t_partition + t_env;
+    let max_work = times.iter().copied().max().unwrap_or_default();
+
+    let t0 = Instant::now();
+    std::hint::black_box(method.reduce(partials));
+    let t_reduce = t0.elapsed();
+
+    let mut overhead = t_partition
+        + o.spawn_per_task * p as u32
+        + o.barrier.mul_f64(barriers as f64)
+        + t_reduce;
+    if with_submit {
+        overhead += o.submit;
+    }
+    Modeled { p, t_seq, t_par: max_work + overhead, max_work, overhead }
+}
+
+/// LUFact needs its own composition: the SOMD version pays a split-join
+/// per outer iteration, the JG version one spawn plus two barriers per
+/// iteration (§7.2's explanation, reproduced quantitatively).
+pub struct LuModel {
+    pub t_seq: Duration,
+    pub t_pivot: Duration,
+    pub t_update: Duration,
+}
+
+/// Instrument the sequential LU to split pivot vs update time.
+pub fn measure_lufact(n: usize, seed: u64) -> LuModel {
+    use super::lufact;
+    use crate::somd::grid::SharedGrid;
+    let a = SharedGrid::from_vec(n, n, lufact::generate(n, seed));
+    let mut t_pivot = Duration::ZERO;
+    let mut t_update = Duration::ZERO;
+    for k in 0..n {
+        let t0 = Instant::now();
+        std::hint::black_box(lufact::pivot_phase_pub(&a, k));
+        t_pivot += t0.elapsed();
+        let t0 = Instant::now();
+        lufact::update_rows_pub(&a, k, k + 1, n);
+        t_update += t0.elapsed();
+    }
+    LuModel { t_seq: t_pivot + t_update, t_pivot, t_update }
+}
+
+impl LuModel {
+    /// SOMD: per-k inner invocation (partition + spawn + join each time).
+    pub fn somd(&self, n: usize, p: usize, o: &Overheads) -> Modeled {
+        let per_invocation = o.spawn_per_task * p as u32 + o.submit;
+        let overhead = per_invocation * n as u32;
+        let t_par = self.t_pivot + self.t_update.div_f64(p as f64) + overhead;
+        Modeled { p, t_seq: self.t_seq, t_par, max_work: self.t_update.div_f64(p as f64), overhead }
+    }
+
+    /// JG: one spawn, rank-0 pivots, 2 barriers per iteration.
+    pub fn jg(&self, n: usize, p: usize, o: &Overheads) -> Modeled {
+        let overhead = o.spawn_per_task * p as u32 + o.barrier * (2 * n) as u32;
+        let t_par = self.t_pivot + self.t_update.div_f64(p as f64) + overhead;
+        Modeled { p, t_seq: self.t_seq, t_par, max_work: self.t_update.div_f64(p as f64), overhead }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::partition::Block1D;
+    use crate::somd::reduction;
+
+    #[test]
+    fn calibration_is_sane() {
+        let o = calibrate();
+        assert!(o.spawn_per_task > Duration::ZERO);
+        assert!(o.spawn_per_task < Duration::from_millis(50));
+        assert!(o.barrier < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn model_speedup_grows_with_p_for_heavy_work() {
+        let o = Overheads {
+            spawn_per_task: Duration::from_micros(50),
+            barrier: Duration::from_micros(5),
+            submit: Duration::from_micros(10),
+        };
+        let m = SomdMethod::new(
+            "busy",
+            |len: &usize, n| Block1D::new().ranges(*len, n),
+            |_, _| (),
+            |_, part, _, _| {
+                // ~0.5ms of work per 1000 indexes
+                let mut acc = 0.0f64;
+                for i in part.own.iter() {
+                    for j in 0..400 {
+                        acc += ((i * j) as f64).sqrt();
+                    }
+                }
+                acc
+            },
+            reduction::sum::<f64>(),
+        );
+        let input = 20_000usize;
+        let t_seq = {
+            let (parts, times) = m.map_sequential_timed(&input, 1);
+            drop(parts);
+            times[0]
+        };
+        let m1 = model_invocation(&m, &input, t_seq, 1, 0, true, &o);
+        let m8 = model_invocation(&m, &input, t_seq, 8, 0, true, &o);
+        assert!(m8.speedup() > m1.speedup() * 2.0, "{} vs {}", m8.speedup(), m1.speedup());
+    }
+
+    #[test]
+    fn lufact_model_prefers_jg_when_barriers_cheap() {
+        let lm = LuModel {
+            t_seq: Duration::from_millis(100),
+            t_pivot: Duration::from_millis(10),
+            t_update: Duration::from_millis(90),
+        };
+        let o = Overheads {
+            spawn_per_task: Duration::from_micros(80),
+            barrier: Duration::from_micros(4),
+            submit: Duration::from_micros(15),
+        };
+        let n = 500;
+        let somd = lm.somd(n, 8, &o);
+        let jg = lm.jg(n, 8, &o);
+        // the paper's finding: split-join per iteration loses to barriers
+        assert!(jg.speedup() > somd.speedup());
+    }
+}

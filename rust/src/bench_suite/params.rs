@@ -1,0 +1,135 @@
+//! Workload configuration classes (paper Table 1).
+
+/// JavaGrande configuration class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    A,
+    B,
+    C,
+}
+
+impl Class {
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "A" | "a" => Some(Class::A),
+            "B" | "b" => Some(Class::B),
+            "C" | "c" => Some(Class::C),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::A => "A",
+            Class::B => "B",
+            Class::C => "C",
+        }
+    }
+
+    pub fn all() -> [Class; 3] {
+        [Class::A, Class::B, Class::C]
+    }
+}
+
+/// Table 1 sizes (exact paper values at scale 1.0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sizes {
+    /// Crypt: vector size in bytes.
+    pub crypt_bytes: usize,
+    /// LUFact: matrix size N (N x N).
+    pub lufact_n: usize,
+    /// Series: number of Fourier coefficients.
+    pub series_n: usize,
+    /// SOR: matrix size N (N x N), 100 iterations.
+    pub sor_n: usize,
+    /// SparseMatMult: matrix size N (nnz = 5N), 200 iterations.
+    pub sparse_n: usize,
+}
+
+pub const SOR_ITERATIONS: usize = 100;
+pub const SPMV_ITERATIONS: usize = 200;
+pub const SPARSE_NNZ_PER_ROW: usize = 5;
+pub const SERIES_INTERVALS: usize = 1000;
+
+impl Sizes {
+    pub fn full(class: Class) -> Sizes {
+        match class {
+            Class::A => Sizes {
+                crypt_bytes: 3_000_000,
+                lufact_n: 500,
+                series_n: 10_000,
+                sor_n: 1000,
+                sparse_n: 50_000,
+            },
+            Class::B => Sizes {
+                crypt_bytes: 20_000_000,
+                lufact_n: 1000,
+                series_n: 100_000,
+                sor_n: 1500,
+                sparse_n: 100_000,
+            },
+            Class::C => Sizes {
+                crypt_bytes: 50_000_000,
+                lufact_n: 2000,
+                series_n: 1_000_000,
+                sor_n: 2000,
+                sparse_n: 500_000,
+            },
+        }
+    }
+
+    /// *Work*-scaled sizes (used to keep bench wall time sane on this
+    /// testbed): each dimension shrinks by the root of its work exponent —
+    /// LUFact is O(n^3) so n scales by scale^(1/3), SOR is O(n^2 · iters)
+    /// so n scales by sqrt(scale), the rest are linear.  This preserves
+    /// the *relative* work/overhead ratios that drive the figure shapes;
+    /// the scale is recorded alongside every result in EXPERIMENTS.md.
+    pub fn scaled(class: Class, scale: f64) -> Sizes {
+        let s = Self::full(class);
+        let lin = |v: usize, lo: usize| ((v as f64 * scale) as usize).max(lo);
+        let pow = |v: usize, e: f64, lo: usize| ((v as f64 * scale.powf(e)) as usize).max(lo);
+        Sizes {
+            crypt_bytes: lin(s.crypt_bytes, 800) / 8 * 8,
+            lufact_n: pow(s.lufact_n, 1.0 / 3.0, 16),
+            series_n: lin(s.series_n, 32),
+            sor_n: pow(s.sor_n, 0.5, 16),
+            sparse_n: lin(s.sparse_n, 64),
+        }
+    }
+
+    pub fn sparse_nnz(&self) -> usize {
+        self.sparse_n * SPARSE_NNZ_PER_ROW
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let a = Sizes::full(Class::A);
+        assert_eq!(a.crypt_bytes, 3_000_000);
+        assert_eq!(a.lufact_n, 500);
+        let c = Sizes::full(Class::C);
+        assert_eq!(c.series_n, 1_000_000);
+        assert_eq!(c.sparse_n, 500_000);
+    }
+
+    #[test]
+    fn scaled_keeps_block_alignment() {
+        for class in Class::all() {
+            for scale in [0.01, 0.1, 0.5] {
+                let s = Sizes::scaled(class, scale);
+                assert_eq!(s.crypt_bytes % 8, 0);
+                assert!(s.lufact_n >= 16);
+            }
+        }
+    }
+
+    #[test]
+    fn class_parse() {
+        assert_eq!(Class::parse("B"), Some(Class::B));
+        assert_eq!(Class::parse("x"), None);
+    }
+}

@@ -1,0 +1,152 @@
+//! JavaGrande Series: first N Fourier coefficients of f(x) = (x+1)^x
+//! over [0, 2] by trapezoid integration.
+//!
+//! SOMD take (paper §7.1): a top-level method computes a_0, then invokes a
+//! SOMD method over the coefficient range, partitioned on the column
+//! dimension (`dist(dim=2)`); the default array reduction assembles the
+//! [2, N] result.  The JG multithreaded version splits the same range by
+//! rank — parity expected (§7.2: "results on a par in all classes").
+
+use crate::somd::master::SomdMethod;
+use crate::somd::partition::Block1D;
+use crate::somd::reduction::Assemble;
+
+pub const LO: f64 = 0.0;
+pub const HI: f64 = 2.0;
+
+#[inline]
+fn f(x: f64) -> f64 {
+    (x + 1.0).powf(x)
+}
+
+/// (a_n, b_n) by the trapezoid rule with `m` intervals.
+pub fn coefficient_pair(n: usize, m: usize) -> (f64, f64) {
+    let dx = (HI - LO) / m as f64;
+    let omega = std::f64::consts::PI * n as f64;
+    let mut a = 0.0;
+    let mut b = 0.0;
+    for j in 0..=m {
+        let x = LO + j as f64 * dx;
+        let w = if j == 0 || j == m { dx / 2.0 } else { dx };
+        let fx = f(x) * w;
+        a += fx * (omega * x).cos();
+        b += fx * (omega * x).sin();
+    }
+    (a, b)
+}
+
+/// Sequential Series: rows [a_n; b_n] for n in [0, count); a_0 halved as
+/// in the JavaGrande kernel; b_0 = 0 by construction.
+pub fn sequential(count: usize, m: usize) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(count);
+    for n in 0..count {
+        let (mut a, b) = coefficient_pair(n, m);
+        if n == 0 {
+            a /= 2.0;
+        }
+        out.push((a, b));
+    }
+    out
+}
+
+/// Input to the SOMD stage (coefficients 1..count; a_0 handled top-level).
+#[derive(Debug, Clone, Copy)]
+pub struct Input {
+    pub count: usize,
+    pub m: usize,
+}
+
+/// The inner SOMD method: coefficients for the MI's index range.
+pub fn somd_method() -> SomdMethod<Input, crate::somd::BlockPart, (), Vec<(f64, f64)>> {
+    SomdMethod::new(
+        "Series.coefficients",
+        |inp: &Input, n| Block1D::new().ranges(inp.count - 1, n),
+        |_, _| (),
+        |inp, part, _, _| {
+            part.own
+                .iter()
+                .map(|i| coefficient_pair(i + 1, inp.m)) // offset: n starts at 1
+                .collect()
+        },
+        Assemble,
+    )
+}
+
+/// Top-level SOMD Series (computes a_0, then the SOMD stage).
+pub fn somd(inp: Input, nparts: usize) -> Vec<(f64, f64)> {
+    let (a0, _) = coefficient_pair(0, inp.m);
+    let rest = somd_method().invoke(&inp, nparts);
+    let mut out = Vec::with_capacity(inp.count);
+    out.push((a0 / 2.0, 0.0));
+    out.extend(rest);
+    out
+}
+
+/// JG-style method: identical decomposition (rank-sliced range); the JG
+/// version's only difference is the rank-0 special-casing of a_0 inside
+/// the worker, which we mirror by folding a_0 into partition 0's work.
+pub fn jg_method() -> SomdMethod<Input, crate::somd::BlockPart, (), Vec<(f64, f64)>> {
+    SomdMethod::new(
+        "Series.coefficients.jg",
+        |inp: &Input, n| Block1D::new().ranges(inp.count, n),
+        |_, _| (),
+        |inp, part, _, ctx| {
+            part.own
+                .iter()
+                .map(|n| {
+                    let (mut a, b) = coefficient_pair(n, inp.m);
+                    if n == 0 && ctx.rank() == 0 {
+                        a /= 2.0;
+                    }
+                    (a, b)
+                })
+                .collect()
+        },
+        Assemble,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a0_matches_known_integral() {
+        // int_0^2 (x+1)^x dx ≈ 5.76319 => a0 ≈ 2.8816 (cross-checked with
+        // the python oracle test_series.py::test_a0_against_closed_form)
+        let (a0, b0) = coefficient_pair(0, 10_000);
+        assert!((a0 / 2.0 - 2.8816).abs() < 1e-3, "{a0}");
+        assert!(b0.abs() < 1e-9);
+    }
+
+    #[test]
+    fn somd_matches_sequential() {
+        let inp = Input { count: 64, m: 100 };
+        let want = sequential(64, 100);
+        for n in [1, 2, 5, 8] {
+            let got = somd(inp, n);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.0 - w.0).abs() < 1e-12 && (g.1 - w.1).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn jg_matches_sequential() {
+        let inp = Input { count: 40, m: 80 };
+        let want = sequential(40, 80);
+        let got = jg_method().invoke(&inp, 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.0 - w.0).abs() < 1e-12 && (g.1 - w.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn coefficients_decay() {
+        let c = sequential(128, 200);
+        let lead: f64 = c[1..9].iter().map(|p| p.0.abs()).sum();
+        let tail: f64 = c[120..].iter().map(|p| p.0.abs()).sum();
+        assert!(tail < lead);
+    }
+}

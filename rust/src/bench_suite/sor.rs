@@ -1,0 +1,188 @@
+//! JavaGrande SOR (paper Listing 13): iterative 5-point stencil with a
+//! `sync` block per iteration and a final `reduce(+)` of Gtotal.
+//!
+//! Semantics here are the out-of-place (Jacobi-style) sweep — identical to
+//! the L1 Pallas kernel and the python oracle (`ref.sor_step`), so the
+//! CPU/SOMD/device paths are numerically comparable.  The SOMD version
+//! uses the built-in (block, block) 2-D distribution the paper credits
+//! for its cache advantage; the JG-style version partitions the outer
+//! loop only (full-width row bands), as the JavaGrande threads do (§7.2).
+
+use crate::somd::distribution::View;
+use crate::somd::grid::{DoubleGrid, SharedGrid};
+use crate::somd::master::SomdMethod;
+use crate::somd::partition::{Block2D, Block2Part, Rows1D};
+use crate::somd::reduction;
+use crate::util::prng::Xorshift64;
+
+pub const OMEGA: f64 = 0.9; // contractive for the Jacobi-style sweep (see ref.py)
+pub const OMEGA_OVER_FOUR: f64 = OMEGA * 0.25;
+pub const ONE_MINUS_OMEGA: f64 = 1.0 - OMEGA;
+
+/// Random initial grid (JavaGrande RandomMatrix analogue).
+pub fn generate(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xorshift64::new(seed);
+    (0..n * n).map(|_| rng.f64()).collect()
+}
+
+/// One sweep: read `src`, write interior of `dst` (rows [r0,r1) clamped to
+/// the interior, all interior columns).
+fn sweep_rows(src: &SharedGrid, dst: &SharedGrid, r0: usize, r1: usize, c0: usize, c1: usize) {
+    let n = src.rows();
+    let m = src.cols();
+    let (r0, r1) = (r0.max(1), r1.min(n - 1));
+    let (c0, c1) = (c0.max(1), c1.min(m - 1));
+    for i in r0..r1 {
+        let up = src.row(i - 1);
+        let mid = src.row(i);
+        let down = src.row(i + 1);
+        // SAFETY: this MI owns rows [r0, r1) of dst for this phase.
+        let out = unsafe { dst.row_mut(i) };
+        for j in c0..c1 {
+            out[j] = OMEGA_OVER_FOUR * (up[j] + down[j] + mid[j - 1] + mid[j + 1])
+                + ONE_MINUS_OMEGA * mid[j];
+        }
+    }
+}
+
+fn interior_sum(g: &SharedGrid) -> f64 {
+    let (n, m) = (g.rows(), g.cols());
+    let mut total = 0.0;
+    for i in 1..n - 1 {
+        let row = g.row(i);
+        total += row[1..m - 1].iter().sum::<f64>();
+    }
+    total
+}
+
+/// Sequential SOR: `iters` sweeps + Gtotal.  Returns (final grid, Gtotal).
+pub fn sequential(g0: &[f64], n: usize, iters: usize) -> (Vec<f64>, f64) {
+    let grids = DoubleGrid::from_vec(n, n, g0.to_vec());
+    for p in 0..iters {
+        let src = grids.src(p);
+        let dst = grids.dst(p);
+        sweep_rows(src, dst, 1, n - 1, 1, n - 1);
+        // boundary rows/cols are never written; both planes share them.
+    }
+    let fin = grids.final_plane(iters);
+    (fin.to_vec(), interior_sum(fin))
+}
+
+/// Input to the SOMD stencil method.
+pub struct Input<'a> {
+    pub g0: &'a [f64],
+    pub n: usize,
+    pub iters: usize,
+}
+
+/// Environment: the shared double-buffered grid (paper: `dist` G with
+/// `view = <1,1>,<1,1>` — the halo is what each MI reads across its
+/// partition boundary between fences).
+pub struct Env {
+    pub grids: DoubleGrid,
+}
+
+fn stencil_body(inp: &Input<'_>, part: &Block2Part, env: &Env, ctx: &crate::somd::MiCtx<'_>) -> f64 {
+    for p in 0..inp.iters {
+        let src = env.grids.src(p);
+        let dst = env.grids.dst(p);
+        ctx.sync(|| {
+            sweep_rows(src, dst, part.own.rows.lo, part.own.rows.hi, part.own.cols.lo, part.own.cols.hi);
+        });
+    }
+    // partial Gtotal over the owned block of the final plane
+    let fin = env.grids.final_plane(inp.iters);
+    let (n, m) = (fin.rows(), fin.cols());
+    let mut total = 0.0;
+    for i in part.own.rows.lo.max(1)..part.own.rows.hi.min(n - 1) {
+        let row = fin.row(i);
+        for j in part.own.cols.lo.max(1)..part.own.cols.hi.min(m - 1) {
+            total += row[j];
+        }
+    }
+    total
+}
+
+/// SOMD version: (block, block) distribution with a 1-halo view.
+pub fn somd_method<'a>() -> SomdMethod<Input<'a>, Block2Part, Env, f64> {
+    SomdMethod::new(
+        "SOR.stencil",
+        |inp: &Input<'_>, n| Block2D::with_view(View::sym(1)).parts(inp.n, inp.n, n),
+        |inp, _| Env { grids: DoubleGrid::from_vec(inp.n, inp.n, inp.g0.to_vec()) },
+        stencil_body,
+        reduction::sum::<f64>(),
+    )
+}
+
+/// JG-style version: row bands only (outer-loop parallelization).
+pub fn jg_method<'a>() -> SomdMethod<Input<'a>, Block2Part, Env, f64> {
+    SomdMethod::new(
+        "SOR.stencil.jg",
+        |inp: &Input<'_>, n| Rows1D { view: View::sym(1) }.parts(inp.n, inp.n, n),
+        |inp, _| Env { grids: DoubleGrid::from_vec(inp.n, inp.n, inp.g0.to_vec()) },
+        stencil_body,
+        reduction::sum::<f64>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_field_is_fixed_point() {
+        let g0 = vec![2.0; 12 * 12];
+        let (g, total) = sequential(&g0, 12, 5);
+        for v in &g {
+            assert!((v - 2.0).abs() < 1e-12);
+        }
+        assert!((total - 2.0 * 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn somd_matches_sequential() {
+        let n = 33;
+        let g0 = generate(n, 11);
+        let (_, want) = sequential(&g0, n, 10);
+        let m = somd_method();
+        for parts in [1, 2, 4, 8] {
+            let got = m.invoke(&Input { g0: &g0, n, iters: 10 }, parts);
+            assert!((got - want).abs() < 1e-9, "parts={parts}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn jg_rows_matches_sequential() {
+        let n = 21;
+        let g0 = generate(n, 3);
+        let (_, want) = sequential(&g0, n, 7);
+        let got = jg_method().invoke(&Input { g0: &g0, n, iters: 7 }, 5);
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn somd_iteration_property() {
+        use crate::util::testkit::Prop;
+        Prop::new("sor somd == seq", 0x50F).runs(10).check(|g| {
+            let n = g.usize(4, 24);
+            let iters = g.usize(0, 6);
+            let parts = g.usize(1, 6);
+            let g0 = generate(n, g.u64());
+            let (_, want) = sequential(&g0, n, iters);
+            let got = somd_method().invoke(&Input { g0: &g0, n, iters }, parts);
+            assert!((got - want).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn zero_iterations_is_plain_sum() {
+        let n = 10;
+        let g0 = generate(n, 1);
+        let (_, total) = sequential(&g0, n, 0);
+        let g0ref = &g0;
+        let direct: f64 = (1..n - 1)
+            .flat_map(|i| (1..n - 1).map(move |j| g0ref[i * n + j]))
+            .sum();
+        assert!((total - direct).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,59 @@
+//! Thread-grid configuration (paper §5.2 "Configuration of the Thread
+//! Grid"): round the problem size up to a whole number of maximal
+//! work-groups; threads beyond the loop bounds diverge idle.
+
+/// The computed grid for one kernel launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridConfig {
+    pub groups: usize,
+    pub group_size: usize,
+}
+
+impl GridConfig {
+    /// Paper example: `numberOfThreads(1000000) = 1000448 = 1954 x 512`.
+    pub fn for_problem(problem_size: usize, max_group_size: usize) -> GridConfig {
+        assert!(max_group_size > 0);
+        let groups = problem_size.div_ceil(max_group_size).max(1);
+        GridConfig { groups, group_size: max_group_size }
+    }
+
+    pub fn total_threads(&self) -> usize {
+        self.groups * self.group_size
+    }
+
+    /// Fraction of launched threads that fall outside the loop bounds
+    /// (§5.2 boundary-group divergence).
+    pub fn idle_fraction(&self, problem_size: usize) -> f64 {
+        let total = self.total_threads();
+        if total == 0 {
+            return 0.0;
+        }
+        (total.saturating_sub(problem_size)) as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_example() {
+        let g = GridConfig::for_problem(1_000_000, 512);
+        assert_eq!(g.groups, 1954);
+        assert_eq!(g.total_threads(), 1_000_448);
+    }
+
+    #[test]
+    fn exact_fit_has_no_idle_threads() {
+        let g = GridConfig::for_problem(1024, 512);
+        assert_eq!(g.groups, 2);
+        assert_eq!(g.idle_fraction(1024), 0.0);
+    }
+
+    #[test]
+    fn tiny_problem_one_group() {
+        let g = GridConfig::for_problem(3, 512);
+        assert_eq!(g.groups, 1);
+        assert!(g.idle_fraction(3) > 0.99);
+    }
+}

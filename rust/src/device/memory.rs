@@ -1,0 +1,111 @@
+//! Device memory manager: explicit residency for host↔device data
+//! (the Aparapi `kernel.setExplicit(true)` / `put` / `get` model the
+//! paper's SOR master relies on, Listing 17).
+//!
+//! Buffers are real PJRT buffers (so launches chain without host copies);
+//! the manager adds the byte/time accounting the simulator needs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Artifact, HostTensor};
+
+/// Opaque handle to a device-resident buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BufId(pub(crate) u64);
+
+pub(crate) struct Entry {
+    pub buf: xla::PjRtBuffer,
+    pub bytes: usize,
+}
+
+/// Tracks device-resident buffers and total residency.
+#[derive(Default)]
+pub struct DeviceMemory {
+    entries: BTreeMap<u64, Entry>,
+    next: u64,
+    resident_bytes: usize,
+    peak_bytes: usize,
+}
+
+impl DeviceMemory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Upload a host tensor; returns its handle (counts bytes).
+    pub fn put(&mut self, t: &HostTensor) -> Result<BufId> {
+        let buf = Artifact::put(t)?;
+        Ok(self.adopt(buf, t.bytes()))
+    }
+
+    /// Adopt an existing PJRT buffer (e.g. a launch output) into the pool.
+    pub fn adopt(&mut self, buf: xla::PjRtBuffer, bytes: usize) -> BufId {
+        let id = self.next;
+        self.next += 1;
+        self.entries.insert(id, Entry { buf, bytes });
+        self.resident_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.resident_bytes);
+        BufId(id)
+    }
+
+    /// Download to host (does not free).
+    pub fn get(&self, id: BufId) -> Result<HostTensor> {
+        let e = self.entry(id)?;
+        Artifact::get(&e.buf)
+    }
+
+    pub(crate) fn entry(&self, id: BufId) -> Result<&Entry> {
+        self.entries.get(&id.0).ok_or_else(|| anyhow!("dangling device buffer {id:?}"))
+    }
+
+    pub fn bytes_of(&self, id: BufId) -> Result<usize> {
+        Ok(self.entry(id)?.bytes)
+    }
+
+    pub fn free(&mut self, id: BufId) -> Result<()> {
+        let e = self.entries.remove(&id.0).ok_or_else(|| anyhow!("double free of {id:?}"))?;
+        self.resident_bytes -= e.bytes;
+        Ok(())
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    pub fn live_buffers(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip_and_accounting() {
+        let mut m = DeviceMemory::new();
+        let t = HostTensor::vec_f32(vec![1.5; 1000]);
+        let id = m.put(&t).unwrap();
+        assert_eq!(m.resident_bytes(), 4000);
+        let back = m.get(id).unwrap();
+        assert_eq!(back, t);
+        m.free(id).unwrap();
+        assert_eq!(m.resident_bytes(), 0);
+        assert_eq!(m.peak_bytes(), 4000);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut m = DeviceMemory::new();
+        let id = m.put(&HostTensor::vec_f32(vec![0.0; 4])).unwrap();
+        m.free(id).unwrap();
+        assert!(m.free(id).is_err());
+        assert!(m.get(id).is_err());
+    }
+}

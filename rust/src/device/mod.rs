@@ -1,0 +1,29 @@
+//! GPU cost-structure simulator (DESIGN.md §3 substitution).
+//!
+//! The paper evaluates on a Tesla C2050 ("Fermi") and a GeForce 320M
+//! through Aparapi/OpenCL.  Neither device (nor any GPU) exists here, so
+//! the device backend executes the real AOT-compiled XLA artifacts on the
+//! PJRT CPU client — the "device is fast at data-parallel math" part is
+//! *measured* — while the cost structure that drives every GPU-side
+//! finding in §7.3 is *modeled* from a [`profile::DeviceProfile`]:
+//!
+//! * host↔device transfer time per byte (PCIe for Fermi; near-free for the
+//!   320M, which shares memory with the host — the reason it wins Crypt),
+//! * a fixed launch overhead per kernel (the reason SOR's 100 `sync`
+//!   relaunches hurt),
+//! * a compute scale factor (relative device throughput),
+//! * the thread-grid configuration rules of §5.2 (group-size rounding).
+//!
+//! [`session::DeviceSession`] tracks both the *measured wall* time and the
+//! *modeled device* time; benches report the modeled time for the figure
+//! shapes and record both in EXPERIMENTS.md.
+
+pub mod grid;
+pub mod memory;
+pub mod profile;
+pub mod session;
+
+pub use grid::GridConfig;
+pub use memory::{BufId, DeviceMemory};
+pub use profile::DeviceProfile;
+pub use session::{Arg, DeviceSession, DeviceStats};

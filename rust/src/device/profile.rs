@@ -1,0 +1,148 @@
+//! Device profiles: the two GPU-accelerated systems of the paper's §7.3
+//! evaluation plus a zero-overhead passthrough used for calibration.
+//!
+//! Parameters are order-of-magnitude figures for the 2010-era parts
+//! (PCIe 2.0 x16 effective ~4 GB/s; JNI/Aparapi launch path tens of µs;
+//! the 320M is an integrated laptop part sharing host memory, far slower
+//! at compute but paying near-zero transfer cost).  Figure shapes depend
+//! on the *ratios*, not the absolute values — see DESIGN.md §3.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Host→device bandwidth (bytes/s).
+    pub h2d_bytes_per_sec: f64,
+    /// Device→host bandwidth (bytes/s).
+    pub d2h_bytes_per_sec: f64,
+    /// Fixed cost per transfer operation (DMA setup / JNI crossing).
+    pub transfer_setup: Duration,
+    /// Fixed cost per kernel launch.
+    pub launch_overhead: Duration,
+    /// Multiplier applied to the measured XLA wall time to model the
+    /// device's relative compute throughput (1.0 = as measured).
+    pub compute_scale: f64,
+    /// Integrated device: transfers are host-memory copies.
+    pub shares_host_memory: bool,
+    /// Maximum work-group size (§5.2 grid configuration).
+    pub max_group_size: usize,
+}
+
+impl DeviceProfile {
+    /// NVIDIA Tesla C2050, 3 GB, PCIe-attached ("Fermi" system, §7.3).
+    ///
+    /// `compute_scale` maps measured host-XLA wall time to device time:
+    /// one host core ≈ 25 GFLOPs SP vs the C2050's ≈ 1030 GFLOPs peak
+    /// ⇒ ≈ 0.024.  Transfer bandwidth is the *effective* Aparapi path
+    /// (JNI-copied, unpinned staging both ways — far below raw PCIe 2.0;
+    /// this is what makes GPU-Crypt lose, §7.3).
+    pub fn fermi() -> Self {
+        DeviceProfile {
+            name: "fermi",
+            h2d_bytes_per_sec: 0.60e9,
+            d2h_bytes_per_sec: 0.55e9,
+            transfer_setup: Duration::from_micros(150),
+            launch_overhead: Duration::from_micros(60),
+            compute_scale: 0.024,
+            shares_host_memory: false,
+            max_group_size: 512,
+        }
+    }
+
+    /// NVIDIA GeForce 320M, 256 MB carved from host memory (MacBook Pro
+    /// system, §7.3): ~10x less compute than the C2050 (48 cores ≈ 91
+    /// GFLOPs SP ⇒ scale ≈ 0.2 of a host core), but transfers are plain
+    /// host-memory copies — the reason it beats the Fermi on Crypt.
+    pub fn geforce_320m() -> Self {
+        DeviceProfile {
+            name: "geforce320m",
+            h2d_bytes_per_sec: 2.0e9,
+            d2h_bytes_per_sec: 2.0e9,
+            transfer_setup: Duration::from_micros(20),
+            launch_overhead: Duration::from_micros(40),
+            compute_scale: 0.15,
+            shares_host_memory: true,
+            max_group_size: 512,
+        }
+    }
+
+    /// Zero-overhead passthrough: raw PJRT execution (calibration /
+    /// correctness tests).
+    pub fn passthrough() -> Self {
+        DeviceProfile {
+            name: "passthrough",
+            h2d_bytes_per_sec: f64::INFINITY,
+            d2h_bytes_per_sec: f64::INFINITY,
+            transfer_setup: Duration::ZERO,
+            launch_overhead: Duration::ZERO,
+            compute_scale: 1.0,
+            shares_host_memory: true,
+            max_group_size: 512,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "fermi" => Some(Self::fermi()),
+            "geforce320m" | "320m" => Some(Self::geforce_320m()),
+            "passthrough" => Some(Self::passthrough()),
+            _ => None,
+        }
+    }
+
+    /// Modeled duration of moving `bytes` host→device.
+    pub fn h2d_time(&self, bytes: usize) -> Duration {
+        self.xfer_time(bytes, self.h2d_bytes_per_sec)
+    }
+
+    /// Modeled duration of moving `bytes` device→host.
+    pub fn d2h_time(&self, bytes: usize) -> Duration {
+        self.xfer_time(bytes, self.d2h_bytes_per_sec)
+    }
+
+    fn xfer_time(&self, bytes: usize, bw: f64) -> Duration {
+        if bytes == 0 {
+            return Duration::ZERO;
+        }
+        let secs = bytes as f64 / bw;
+        self.transfer_setup + Duration::from_secs_f64(secs.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(DeviceProfile::by_name("fermi").unwrap().name, "fermi");
+        assert_eq!(DeviceProfile::by_name("320m").unwrap().name, "geforce320m");
+        assert!(DeviceProfile::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn transfer_times_scale_with_bytes() {
+        let f = DeviceProfile::fermi();
+        let t1 = f.h2d_time(4_000_000);
+        let t2 = f.h2d_time(8_000_000);
+        assert!(t2 > t1);
+        // 4 MB over 0.6 GB/s ≈ 6.7 ms + setup
+        assert!((t1.as_secs_f64() - 0.00682).abs() < 1e-3, "{t1:?}");
+    }
+
+    #[test]
+    fn integrated_part_transfers_cheaper() {
+        let fermi = DeviceProfile::fermi();
+        let m320 = DeviceProfile::geforce_320m();
+        let bytes = 50_000_000;
+        assert!(m320.h2d_time(bytes) < fermi.h2d_time(bytes) / 2);
+    }
+
+    #[test]
+    fn passthrough_is_free() {
+        let p = DeviceProfile::passthrough();
+        assert_eq!(p.h2d_time(1 << 30), Duration::ZERO);
+        assert_eq!(p.launch_overhead, Duration::ZERO);
+    }
+}

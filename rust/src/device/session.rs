@@ -1,0 +1,239 @@
+//! A device session: the master-side view of one offloaded SOMD method
+//! (paper Algorithm 2).  Owns the memory manager, runs kernel launches
+//! against the artifact registry, and keeps two clocks:
+//!
+//! * **wall** — real time spent in PJRT execution on this host;
+//! * **device** — the modeled time on the profiled GPU: measured compute
+//!   x `compute_scale`, plus modeled transfer and launch costs.
+
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::grid::GridConfig;
+use super::memory::{BufId, DeviceMemory};
+use super::profile::DeviceProfile;
+use crate::runtime::{Artifact, HostTensor, Registry};
+
+/// A kernel argument: already-resident buffer or host data to upload
+/// on demand (§4.3 on-demand copying).
+pub enum Arg<'a> {
+    Buf(BufId),
+    Host(&'a HostTensor),
+}
+
+/// Accumulated accounting for one session.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceStats {
+    pub launches: usize,
+    pub h2d_transfers: usize,
+    pub d2h_transfers: usize,
+    pub bytes_h2d: usize,
+    pub bytes_d2h: usize,
+    pub wall_compute: Duration,
+    pub device_time: Duration,
+    pub peak_resident_bytes: usize,
+    pub total_threads_launched: usize,
+    pub idle_thread_fraction_sum: f64,
+}
+
+impl DeviceStats {
+    /// Mean boundary-divergence across launches (§5.2).
+    pub fn mean_idle_fraction(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.idle_thread_fraction_sum / self.launches as f64
+        }
+    }
+}
+
+pub struct DeviceSession<'r> {
+    registry: &'r Registry,
+    profile: DeviceProfile,
+    mem: DeviceMemory,
+    stats: DeviceStats,
+}
+
+impl<'r> DeviceSession<'r> {
+    pub fn new(registry: &'r Registry, profile: DeviceProfile) -> Self {
+        Self { registry, profile, mem: DeviceMemory::new(), stats: DeviceStats::default() }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    pub fn registry(&self) -> &'r Registry {
+        self.registry
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        let mut s = self.stats.clone();
+        s.peak_resident_bytes = self.mem.peak_bytes();
+        s
+    }
+
+    pub fn memory(&self) -> &DeviceMemory {
+        &self.mem
+    }
+
+    /// Explicit `put`: upload and account the transfer.
+    pub fn put(&mut self, t: &HostTensor) -> Result<BufId> {
+        let id = self.mem.put(t)?;
+        self.stats.h2d_transfers += 1;
+        self.stats.bytes_h2d += t.bytes();
+        self.stats.device_time += self.profile.h2d_time(t.bytes());
+        Ok(id)
+    }
+
+    /// Explicit `get`: download and account the transfer.
+    pub fn get(&mut self, id: BufId) -> Result<HostTensor> {
+        let t = self.mem.get(id)?;
+        self.stats.d2h_transfers += 1;
+        self.stats.bytes_d2h += t.bytes();
+        self.stats.device_time += self.profile.d2h_time(t.bytes());
+        Ok(t)
+    }
+
+    pub fn free(&mut self, id: BufId) -> Result<()> {
+        self.mem.free(id)
+    }
+
+    /// Launch `artifact` over `args`; host args are uploaded on demand.
+    /// Outputs stay device-resident.  `problem_size` drives the §5.2
+    /// thread-grid model for divergence accounting.
+    pub fn launch(&mut self, artifact: &str, args: &[Arg<'_>], problem_size: usize) -> Result<Vec<BufId>> {
+        let art: Rc<Artifact> = self.registry.artifact(artifact)?;
+
+        // on-demand uploads
+        let mut temp_ids: Vec<BufId> = Vec::new();
+        let mut ids: Vec<BufId> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::Buf(id) => ids.push(*id),
+                Arg::Host(t) => {
+                    let id = self.put(t)?;
+                    temp_ids.push(id);
+                    ids.push(id);
+                }
+            }
+        }
+        let bufs: Vec<&xla::PjRtBuffer> =
+            ids.iter().map(|id| self.mem.entry(*id).map(|e| &e.buf)).collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let outs = art.execute_buffers(&bufs)?;
+        let wall = t0.elapsed();
+
+        // clocks
+        self.stats.launches += 1;
+        self.stats.wall_compute += wall;
+        self.stats.device_time +=
+            Duration::from_secs_f64(wall.as_secs_f64() * self.profile.compute_scale)
+                + self.profile.launch_overhead;
+        let grid = GridConfig::for_problem(problem_size, self.profile.max_group_size);
+        self.stats.total_threads_launched += grid.total_threads();
+        self.stats.idle_thread_fraction_sum += grid.idle_fraction(problem_size);
+
+        // adopt outputs with byte sizes from the manifest
+        let out_specs = &art.info().outputs;
+        let mut out_ids = Vec::with_capacity(outs.len());
+        for (i, buf) in outs.into_iter().enumerate() {
+            let bytes = out_specs.get(i).map(|s| s.bytes()).unwrap_or(0);
+            out_ids.push(self.mem.adopt(buf, bytes));
+        }
+        for id in temp_ids {
+            self.mem.free(id)?;
+        }
+        Ok(out_ids)
+    }
+
+    /// Launch and immediately download every output (counts D2H).
+    /// Multi-output programs whose root is a tuple buffer are flattened.
+    pub fn launch_to_host(
+        &mut self,
+        artifact: &str,
+        args: &[Arg<'_>],
+        problem_size: usize,
+    ) -> Result<Vec<HostTensor>> {
+        let ids = self.launch(artifact, args, problem_size)?;
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let leaves = {
+                let e = self.mem.entry(id)?;
+                Artifact::get_all(&e.buf)?
+            };
+            for t in leaves {
+                self.stats.d2h_transfers += 1;
+                self.stats.bytes_d2h += t.bytes();
+                self.stats.device_time += self.profile.d2h_time(t.bytes());
+                out.push(t);
+            }
+            self.free(id)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Registry {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Registry::load(dir).unwrap()
+    }
+
+    #[test]
+    fn launch_with_host_args_counts_transfers() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        let n = r.info("vecadd").unwrap().inputs[0].elems();
+        let a = HostTensor::vec_f32(vec![1.0; n]);
+        let b = HostTensor::vec_f32(vec![2.0; n]);
+        let out = s.launch_to_host("vecadd", &[Arg::Host(&a), Arg::Host(&b)], n).unwrap();
+        assert!(out[0].as_f32().unwrap().iter().all(|&v| v == 3.0));
+        let st = s.stats();
+        assert_eq!(st.launches, 1);
+        assert_eq!(st.h2d_transfers, 2);
+        assert_eq!(st.d2h_transfers, 1);
+        assert_eq!(st.bytes_h2d, 2 * 4 * n);
+        assert!(st.device_time > Duration::ZERO);
+        // temps freed after launch; no residual residency
+        assert_eq!(s.memory().live_buffers(), 0);
+    }
+
+    #[test]
+    fn resident_chaining_avoids_transfers() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        let n = r.info("vecadd").unwrap().inputs[0].elems();
+        let a = s.put(&HostTensor::vec_f32(vec![1.0; n])).unwrap();
+        let b = s.put(&HostTensor::vec_f32(vec![1.0; n])).unwrap();
+        let h2d_after_puts = s.stats().bytes_h2d;
+        // chain: c = a+b; d = c+c — no host roundtrip between launches
+        let c = s.launch("vecadd", &[Arg::Buf(a), Arg::Buf(b)], n).unwrap()[0];
+        let d = s.launch("vecadd", &[Arg::Buf(c), Arg::Buf(c)], n).unwrap()[0];
+        assert_eq!(s.stats().bytes_h2d, h2d_after_puts);
+        let out = s.get(d).unwrap();
+        assert!(out.as_f32().unwrap().iter().all(|&v| v == 4.0));
+        assert_eq!(s.stats().d2h_transfers, 1);
+    }
+
+    #[test]
+    fn passthrough_device_time_tracks_wall() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::passthrough());
+        let n = r.info("vecadd").unwrap().inputs[0].elems();
+        let a = HostTensor::vec_f32(vec![0.0; n]);
+        let b = HostTensor::vec_f32(vec![0.0; n]);
+        s.launch_to_host("vecadd", &[Arg::Host(&a), Arg::Host(&b)], n).unwrap();
+        let st = s.stats();
+        // modeled time == measured compute (no overheads) for passthrough
+        let diff =
+            (st.device_time.as_secs_f64() - st.wall_compute.as_secs_f64()).abs();
+        assert!(diff < 1e-6, "{st:?}");
+    }
+}

@@ -1,0 +1,32 @@
+//! # SOMD — Single Operation Multiple Data
+//!
+//! A reproduction of *"Heterogeneous Programming with Single Operation
+//! Multiple Data"* (Paulino & Marques, JCSS 2013) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the SOMD coordination runtime: `dist`/`reduce`
+//!   strategies, method instances, `sync` fences, intermediate reductions,
+//!   shared scalars/arrays, the Elina-like engine, and the version
+//!   selector ([`somd`]).
+//! * **Device backend** — the paper's GPU target, realized as AOT-compiled
+//!   XLA executables run through PJRT ([`runtime`]) under a GPU
+//!   cost-structure simulator ([`device`]): explicit put/get transfers,
+//!   thread-grid configuration, one kernel launch per `sync` iteration.
+//! * **Benchmarks** — the JavaGrande Section-2 substrate used by the
+//!   paper's evaluation ([`bench_suite`]): sequential, SOMD, and
+//!   hand-threaded versions of Crypt, LUFact, Series, SOR and
+//!   SparseMatMult, plus the harness regenerating every table and figure.
+//!
+//! See DESIGN.md for the paper→repo map and EXPERIMENTS.md for results.
+
+pub mod backend;
+pub mod bench_suite;
+pub mod device;
+pub mod runtime;
+pub mod somd;
+pub mod util;
+
+/// Crate version (also reported by `somd --version`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,279 @@
+//! `somd` — the SOMD runtime CLI (leader entrypoint).
+//!
+//! ```text
+//! somd info
+//! somd bench <table1|table2|fig10|fig11> [--class A|B|C|all] [--scale S] [--reps N]
+//! somd run <crypt|lufact|series|sor|sparsematmult>
+//!          [--class A|B|C] [--scale S] [--partitions N]
+//!          [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]
+//! somd e2e [--scale S]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use somd::bench_suite::{crypt, gpu, harness, lufact, modeled, series, sor, sparse};
+use somd::bench_suite::{Class, Sizes};
+use somd::device::{DeviceProfile, DeviceSession};
+use somd::runtime::Registry;
+use somd::somd::grid::SharedGrid;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("info") => info(),
+        Some("bench") => bench(args),
+        Some("run") => run(args),
+        Some("e2e") => e2e(args),
+        Some("version") => {
+            println!("somd {}", somd::version());
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: somd <info|bench|run|e2e|version> [...]\n\
+                 bench: somd bench <table1|table2|fig10|fig11> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
+                 [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
+                 e2e:   somd e2e [--scale S]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    println!("somd {} — Single Operation Multiple Data runtime", somd::version());
+    println!("PJRT platform: {}", somd::runtime::client::platform()?);
+    match Registry::load_default() {
+        Ok(reg) => {
+            println!("artifacts (scale {}):", reg.scale);
+            for name in reg.names().map(String::from).collect::<Vec<_>>() {
+                let i = reg.info(&name)?;
+                let ins: Vec<String> =
+                    i.inputs.iter().map(|s| format!("{:?}{:?}", s.dtype, s.shape)).collect();
+                println!("  {:<24} {}", name, ins.join(", "));
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    Ok(())
+}
+
+fn classes(args: &Args) -> Vec<Class> {
+    match args.opt("class") {
+        None | Some("all") => Class::all().to_vec(),
+        Some(c) => vec![Class::parse(c).expect("--class A|B|C|all")],
+    }
+}
+
+fn default_scale() -> f64 {
+    std::env::var("SOMD_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.1)
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(String::as_str).unwrap_or("table1");
+    let scale = args.opt_f64("scale", default_scale());
+    let reps = args.opt_usize("reps", 5);
+    match what {
+        "table1" => harness::print_table1(scale, reps),
+        "table2" => harness::print_table2(),
+        "fig10" => {
+            let o = modeled::calibrate();
+            println!("calibrated overheads: {o:?}");
+            for class in classes(args) {
+                harness::print_fig10(class, scale, reps, &o);
+            }
+        }
+        "fig11" => {
+            let o = modeled::calibrate();
+            let reg = Registry::load_default()?;
+            for class in classes(args) {
+                harness::print_fig11(class, scale, reps, &o, &reg)?;
+            }
+        }
+        other => bail!("unknown bench target '{other}'"),
+    }
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let bench = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("run needs a benchmark name"))?
+        .to_string();
+    let class =
+        Class::parse(args.opt("class").unwrap_or("A")).ok_or_else(|| anyhow!("bad class"))?;
+    let scale = args.opt_f64("scale", default_scale());
+    let s = Sizes::scaled(class, scale);
+    let nparts = args.opt_usize("partitions", 4);
+
+    // version selection (§6): --backend overrides; otherwise the rules
+    // file decides; default smp
+    let rules = match args.opt("rules") {
+        Some(path) => {
+            somd::somd::Rules::load(std::path::Path::new(path)).map_err(|e| anyhow!(e))?
+        }
+        None => somd::somd::Rules::empty(),
+    };
+    let backend = match args.opt("backend") {
+        Some(b) => b.to_string(),
+        None => match rules.target_for(&format!(
+            "{}.{}",
+            capitalized(&bench),
+            "run"
+        )) {
+            somd::somd::Target::Smp => "smp".into(),
+            somd::somd::Target::Device(d) => d,
+        },
+    };
+    println!("somd run {bench} class={} scale={scale} backend={backend}", class.name());
+
+    if backend == "smp" {
+        run_smp(&bench, &s, nparts)
+    } else {
+        let profile = DeviceProfile::by_name(&backend)
+            .ok_or_else(|| anyhow!("unknown device profile '{backend}'"))?;
+        let reg = Registry::load_default()?;
+        if (reg.scale - scale).abs() > 1e-9 {
+            eprintln!(
+                "note: artifacts were lowered at scale {}; using artifact sizes for the device run",
+                reg.scale
+            );
+        }
+        run_device(&bench, &reg, profile)
+    }
+}
+
+fn capitalized(s: &str) -> String {
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => String::new(),
+    }
+}
+
+fn run_smp(bench: &str, s: &Sizes, nparts: usize) -> Result<()> {
+    use somd::util::timer::time_once;
+    match bench {
+        "crypt" => {
+            let p = crypt::Problem::generate(s.crypt_bytes, 1);
+            let (mismatches, t) = time_once(|| crypt::roundtrip_mismatches(&p, nparts));
+            println!(
+                "crypt: {} bytes, roundtrip mismatches={mismatches}, {:.4}s",
+                s.crypt_bytes,
+                t.as_secs_f64()
+            );
+            if mismatches != 0 {
+                bail!("roundtrip failed");
+            }
+        }
+        "lufact" => {
+            let a = SharedGrid::from_vec(s.lufact_n, s.lufact_n, lufact::generate(s.lufact_n, 1));
+            let orig = a.to_vec();
+            let (piv, t) = time_once(|| lufact::somd(&a, nparts));
+            let err = lufact::reconstruction_error(&orig, &a, &piv);
+            println!("lufact: n={}, |PA - LU|max = {err:.2e}, {:.4}s", s.lufact_n, t.as_secs_f64());
+        }
+        "series" => {
+            let inp = series::Input { count: s.series_n, m: 1000 };
+            let (out, t) = time_once(|| series::somd(inp, nparts));
+            println!("series: N={}, a0={:.4}, {:.4}s", s.series_n, out[0].0, t.as_secs_f64());
+        }
+        "sor" => {
+            let g0 = sor::generate(s.sor_n, 1);
+            let inp = sor::Input { g0: &g0, n: s.sor_n, iters: 100 };
+            let m = sor::somd_method();
+            let (total, t) = time_once(|| m.invoke(&inp, nparts));
+            println!("sor: n={}, Gtotal={total:.4}, {:.4}s", s.sor_n, t.as_secs_f64());
+        }
+        "sparsematmult" => {
+            let p = sparse::Problem::generate(s.sparse_n, s.sparse_nnz(), 200, 1);
+            let ((_, checksum), t) = time_once(|| sparse::somd_run(&p, nparts));
+            println!(
+                "sparsematmult: n={}, checksum={checksum:.4}, {:.4}s",
+                s.sparse_n,
+                t.as_secs_f64()
+            );
+        }
+        other => bail!("unknown benchmark '{other}'"),
+    }
+    Ok(())
+}
+
+fn run_device(bench: &str, reg: &Registry, profile: DeviceProfile) -> Result<()> {
+    let mut sess = DeviceSession::new(reg, profile);
+    match bench {
+        "crypt" => {
+            let blocks = reg
+                .info("crypt_A")?
+                .meta_usize("blocks")
+                .ok_or_else(|| anyhow!("crypt_A lacks blocks meta"))?;
+            let p = crypt::Problem::generate(blocks * 8, 1);
+            let (enc, dec) = gpu::crypt_run(&mut sess, &p)?;
+            let ok = dec == p.data && enc != p.data;
+            println!("crypt[device]: blocks={blocks} roundtrip_ok={ok}");
+            if !ok {
+                bail!("device roundtrip failed");
+            }
+        }
+        "series" => {
+            let out = gpu::series_run(&mut sess, 10_000)?;
+            println!("series[device]: N={} a0={:.4}", out.len(), out[0].0);
+        }
+        "sor" => {
+            let n = reg
+                .info("sor_step_A")?
+                .meta_usize("n")
+                .ok_or_else(|| anyhow!("sor_step_A lacks n meta"))?;
+            let g0: Vec<f32> = sor::generate(n, 1).iter().map(|&v| v as f32).collect();
+            let (_, total) = gpu::sor_run(&mut sess, &g0, n, 100)?;
+            println!("sor[device]: n={n} Gtotal={total:.4}");
+        }
+        "sparsematmult" => {
+            let n = reg
+                .info("spmv_acc_A")?
+                .meta_usize("n")
+                .ok_or_else(|| anyhow!("spmv_acc_A lacks n meta"))?;
+            let p = sparse::Problem::generate(n, n * 5, 200, 1);
+            let y = gpu::spmv_run(&mut sess, &p)?;
+            println!(
+                "sparsematmult[device]: n={n} checksum={:.4}",
+                y.iter().map(|&v| v as f64).sum::<f64>()
+            );
+        }
+        "lufact" => bail!("lufact has no device figure path (paper §7.3); see the ablation bench"),
+        other => bail!("unknown benchmark '{other}'"),
+    }
+    let st = sess.stats();
+    println!(
+        "device stats [{}]: launches={} h2d={}B d2h={}B wall_compute={:.4}s device_time={:.4}s idle_threads={:.1}%",
+        sess.profile().name,
+        st.launches,
+        st.bytes_h2d,
+        st.bytes_d2h,
+        st.wall_compute.as_secs_f64(),
+        st.device_time.as_secs_f64(),
+        st.mean_idle_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn e2e(args: &Args) -> Result<()> {
+    let scale = args.opt_f64("scale", default_scale());
+    let o = modeled::calibrate();
+    harness::print_table2();
+    harness::print_table1(scale, 3);
+    harness::print_fig10(Class::A, scale, 3, &o);
+    let reg = Registry::load_default()?;
+    harness::print_fig11(Class::A, scale, 3, &o, &reg)?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Thread-local PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and must not cross
+//! threads; each thread that touches PJRT gets its own client lazily.
+//! Compiled executables are likewise thread-confined (see
+//! [`super::registry::Registry`]).
+
+use std::cell::RefCell;
+use std::mem::ManuallyDrop;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+thread_local! {
+    // ManuallyDrop: TfrtCpuClient teardown at thread exit races other
+    // threads' PJRT state (observed SIGSEGV under `cargo test`); clients
+    // live for the process lifetime instead.
+    static CLIENT: RefCell<Option<ManuallyDrop<xla::PjRtClient>>> = const { RefCell::new(None) };
+}
+
+// Client *creation* is also serialized: concurrent TfrtCpuClient
+// construction is not thread-safe in xla_extension 0.5.1.
+static CREATE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with this thread's PJRT CPU client (created on first use).
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> Result<R>) -> Result<R> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let _guard = CREATE_LOCK.lock().unwrap();
+            *slot = Some(ManuallyDrop::new(
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            ));
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// Platform info string (used by `somd info`).
+pub fn platform() -> Result<String> {
+    with_client(|c| Ok(format!("{} ({} devices)", c.platform_name(), c.device_count())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_cpu() {
+        let p = platform().unwrap();
+        assert!(p.to_lowercase().contains("cpu"), "{p}");
+    }
+
+    #[test]
+    fn client_reused_within_thread() {
+        // second call must not fail (and should reuse the cached client)
+        with_client(|_| Ok(())).unwrap();
+        with_client(|_| Ok(())).unwrap();
+    }
+}

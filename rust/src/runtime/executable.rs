@@ -1,0 +1,165 @@
+//! A compiled AOT artifact: HLO text → PJRT executable → execution with
+//! host tensors (literals) or device-resident buffers.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::with_client;
+use super::registry::ArtifactInfo;
+use super::tensor::HostTensor;
+
+/// One compiled executable plus its manifest metadata.  Thread-confined
+/// (PJRT objects are not `Send`).
+pub struct Artifact {
+    info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Parse HLO text and compile it on this thread's PJRT CPU client.
+    ///
+    /// HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see aot.py / DESIGN.md).
+    pub fn compile(path: &Path, info: ArtifactInfo) -> Result<Artifact> {
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 artifact path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| Ok(c.compile(&comp)?))
+            .with_context(|| format!("compiling artifact '{}'", info.name))?;
+        Ok(Artifact { info, exe })
+    }
+
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.info.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                got
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns host tensors (tuple outputs are
+    /// flattened).  This path pays H2D+D2H conversion every call — the
+    /// device backend uses [`Artifact::execute_buffers`] to keep data
+    /// resident instead.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_arity(inputs.len())?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
+        let rows = self.exe.execute::<xla::Literal>(&literals)?;
+        let mut out = Vec::new();
+        for buf in &rows[0] {
+            let mut lit = buf.to_literal_sync()?;
+            if lit.shape()?.is_tuple() {
+                for el in lit.decompose_tuple()? {
+                    out.push(HostTensor::from_literal(&el)?);
+                }
+            } else {
+                out.push(HostTensor::from_literal(&lit)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute with device-resident buffers, producing device-resident
+    /// outputs (no host roundtrip) — the Aparapi `setExplicit(true)` path
+    /// the paper's SOR master uses to avoid per-iteration transfers.
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        self.check_arity(inputs.len())?;
+        let mut rows = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let row = rows.remove(0);
+        Ok(row)
+    }
+
+    /// Upload a host tensor to the device (explicit `put`).
+    ///
+    /// Uses the typed-slice path: `buffer_from_host_literal` aborts inside
+    /// xla_extension 0.5.1 on literals produced by `reshape` (their shape
+    /// carries no layout).
+    pub fn put(t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let dims = t.shape().to_vec();
+        with_client(|c| {
+            Ok(match t {
+                HostTensor::F32(v, _) => c.buffer_from_host_buffer(v, &dims, None)?,
+                HostTensor::F64(v, _) => c.buffer_from_host_buffer(v, &dims, None)?,
+                HostTensor::S32(v, _) => c.buffer_from_host_buffer(v, &dims, None)?,
+                HostTensor::U32(v, _) => c.buffer_from_host_buffer(v, &dims, None)?,
+            })
+        })
+    }
+
+    /// Download a device buffer to the host (explicit `get`).
+    pub fn get(buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync()?;
+        HostTensor::from_literal(&lit)
+    }
+
+    /// Download a device buffer that may hold a tuple (multi-output
+    /// programs lower their root as a tuple even with return_tuple=False);
+    /// returns the flattened leaves.
+    pub fn get_all(buf: &xla::PjRtBuffer) -> Result<Vec<HostTensor>> {
+        let mut lit = buf.to_literal_sync()?;
+        if lit.shape()?.is_tuple() {
+            lit.decompose_tuple()?.iter().map(HostTensor::from_literal).collect()
+        } else {
+            Ok(vec![HostTensor::from_literal(&lit)?])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::registry::Registry;
+
+    fn reg() -> Registry {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Registry::load(dir).unwrap()
+    }
+
+    #[test]
+    fn vecadd_executes_with_literals() {
+        let r = reg();
+        let a = r.artifact("vecadd").unwrap();
+        let n = a.info().inputs[0].elems();
+        let x = HostTensor::vec_f32((0..n).map(|i| i as f32).collect());
+        let y = HostTensor::vec_f32(vec![1.0; n]);
+        let out = a.execute(&[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].as_f32().unwrap();
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[n - 1], n as f32);
+    }
+
+    #[test]
+    fn vecadd_executes_with_buffers() {
+        let r = reg();
+        let a = r.artifact("vecadd").unwrap();
+        let n = a.info().inputs[0].elems();
+        let x = Artifact::put(&HostTensor::vec_f32(vec![2.0; n])).unwrap();
+        let y = Artifact::put(&HostTensor::vec_f32(vec![3.0; n])).unwrap();
+        let out = a.execute_buffers(&[&x, &y]).unwrap();
+        assert_eq!(out.len(), 1);
+        let host = Artifact::get(&out[0]).unwrap();
+        assert!(host.as_f32().unwrap().iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let r = reg();
+        let a = r.artifact("vecadd").unwrap();
+        assert!(a.execute(&[HostTensor::vec_f32(vec![1.0])]).is_err());
+    }
+}

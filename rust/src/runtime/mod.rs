@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust hot path.
+//!
+//! Python never runs here — `make artifacts` is the only compile-path step;
+//! afterwards the binary is self-contained.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so every PJRT object is confined to the thread that created it; the
+//! [`client`] module hands out a thread-local client, and the device
+//! backend runs entirely on the master thread — which is exactly the
+//! paper's host-side orchestration model (Algorithm 2).
+
+pub mod client;
+pub mod executable;
+pub mod registry;
+pub mod tensor;
+
+pub use executable::Artifact;
+pub use registry::{ArtifactInfo, Registry, TensorSpec};
+pub use tensor::{DType, HostTensor};

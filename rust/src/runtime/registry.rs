@@ -1,0 +1,193 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python -m compile.aot`) and lazily compiles executables on first use.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::executable::Artifact;
+use super::tensor::DType;
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dtype = DType::parse(
+            j.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// Manifest entry for one AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactInfo {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+}
+
+/// The loaded manifest plus a per-thread compile cache.
+pub struct Registry {
+    dir: PathBuf,
+    infos: BTreeMap<String, ArtifactInfo>,
+    pub scale: f64,
+    cache: RefCell<BTreeMap<String, Rc<Artifact>>>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let scale = json.get("scale").and_then(Json::as_f64).unwrap_or(1.0);
+        let mut infos = BTreeMap::new();
+        for a in json.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact without name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact without file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = match a.get("meta") {
+                Some(Json::Obj(m)) => m.clone(),
+                _ => BTreeMap::new(),
+            };
+            infos.insert(name.clone(), ArtifactInfo { name, file, inputs, outputs, meta });
+        }
+        Ok(Registry { dir, infos, scale, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Default location: `$SOMD_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Registry> {
+        let dir = std::env::var("SOMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.infos.keys().map(String::as_str)
+    }
+
+    pub fn info(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.infos.get(name).ok_or_else(|| {
+            anyhow!("artifact '{name}' not in manifest (have: {:?})", self.infos.keys())
+        })
+    }
+
+    /// Find an artifact by benchmark tag and a meta key/value (e.g. the
+    /// crypt executable for a given block count).
+    pub fn find_by_meta(&self, bench: &str, key: &str, val: usize) -> Option<&ArtifactInfo> {
+        self.infos.values().find(|i| {
+            i.meta.get("bench").and_then(Json::as_str) == Some(bench)
+                && i.meta_usize(key) == Some(val)
+        })
+    }
+
+    /// All artifacts tagged with a benchmark.
+    pub fn by_bench(&self, bench: &str) -> Vec<&ArtifactInfo> {
+        self.infos
+            .values()
+            .filter(|i| i.meta.get("bench").and_then(Json::as_str) == Some(bench))
+            .collect()
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let info = self.info(name)?.clone();
+        let path = self.dir.join(&info.file);
+        if !path.exists() {
+            bail!("artifact file {} missing — run `make artifacts`", path.display());
+        }
+        let art = Rc::new(Artifact::compile(&path, info)?);
+        self.cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let reg = Registry::load(artifacts_dir()).unwrap();
+        let info = reg.info("vecadd").unwrap();
+        assert_eq!(info.inputs.len(), 2);
+        assert_eq!(info.inputs[0].dtype, DType::F32);
+        assert_eq!(info.inputs[0].shape, vec![1 << 20]);
+        assert_eq!(info.outputs.len(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let reg = Registry::load(artifacts_dir()).unwrap();
+        assert!(reg.info("nope").is_err());
+    }
+
+    #[test]
+    fn spec_bytes() {
+        let s = TensorSpec { dtype: DType::F32, shape: vec![2, 3] };
+        assert_eq!(s.elems(), 6);
+        assert_eq!(s.bytes(), 24);
+    }
+}

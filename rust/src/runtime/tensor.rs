@@ -1,0 +1,205 @@
+//! Host-side tensors and dtype plumbing between the coordinator and PJRT
+//! literals.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element types used by the artifact set (f32 device arithmetic mirrors
+/// the paper's forced single precision on GPU; u32 carries IDEA words).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+}
+
+impl DType {
+    pub fn parse(tag: &str) -> Result<DType> {
+        Ok(match tag {
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            "s32" => DType::S32,
+            "s64" => DType::S64,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype tag '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::S32 | DType::U32 => 4,
+            DType::F64 | DType::S64 => 8,
+        }
+    }
+}
+
+/// An owned host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    F64(Vec<f64>, Vec<usize>),
+    S32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn vec_f32(v: Vec<f32>) -> Self {
+        let n = v.len();
+        HostTensor::F32(v, vec![n])
+    }
+
+    pub fn vec_u32(v: Vec<u32>) -> Self {
+        let n = v.len();
+        HostTensor::U32(v, vec![n])
+    }
+
+    pub fn vec_s32(v: Vec<i32>) -> Self {
+        let n = v.len();
+        HostTensor::S32(v, vec![n])
+    }
+
+    pub fn mat_f32(v: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(v.len(), rows * cols);
+        HostTensor::F32(v, vec![rows, cols])
+    }
+
+    pub fn mat_u32(v: Vec<u32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(v.len(), rows * cols);
+        HostTensor::U32(v, vec![rows, cols])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::F64(..) => DType::F64,
+            HostTensor::S32(..) => DType::S32,
+            HostTensor::U32(..) => DType::U32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::F64(_, s) | HostTensor::S32(_, s)
+            | HostTensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::F64(v, _) => v.len(),
+            HostTensor::S32(v, _) => v.len(),
+            HostTensor::U32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload size — the unit of the device transfer accounting.
+    pub fn bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            HostTensor::U32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not u32")),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::S32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not s32")),
+        }
+    }
+
+    /// Sum of all elements as f64 (checksum helper for the e2e driver).
+    pub fn checksum(&self) -> f64 {
+        match self {
+            HostTensor::F32(v, _) => v.iter().map(|&x| x as f64).sum(),
+            HostTensor::F64(v, _) => v.iter().sum(),
+            HostTensor::S32(v, _) => v.iter().map(|&x| x as f64).sum(),
+            HostTensor::U32(v, _) => v.iter().map(|&x| x as f64).sum(),
+        }
+    }
+
+    /// Convert into a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v, _) => xla::Literal::vec1(v),
+            HostTensor::F64(v, _) => xla::Literal::vec1(v),
+            HostTensor::S32(v, _) => xla::Literal::vec1(v),
+            HostTensor::U32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a PJRT literal back to the host.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(match lit.ty()? {
+            xla::ElementType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, dims),
+            xla::ElementType::F64 => HostTensor::F64(lit.to_vec::<f64>()?, dims),
+            xla::ElementType::S32 => HostTensor::S32(lit.to_vec::<i32>()?, dims),
+            xla::ElementType::U32 => HostTensor::U32(lit.to_vec::<u32>()?, dims),
+            other => bail!("unsupported literal element type {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrip() {
+        for tag in ["f32", "f64", "s32", "s64", "u32"] {
+            assert!(DType::parse(tag).is_ok());
+        }
+        assert!(DType::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let t = HostTensor::mat_f32(vec![0.0; 12], 3, 4);
+        assert_eq!(t.bytes(), 48);
+        assert_eq!(t.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::mat_f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_u32() {
+        let t = HostTensor::vec_u32(vec![7, 8, 9]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn checksum_sums() {
+        assert_eq!(HostTensor::vec_s32(vec![1, 2, 3]).checksum(), 6.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Cluster realization of SOMD (paper §4.2), as a *model*.
+//!
+//! The paper defers distributed-memory evaluation to future work but
+//! specifies the execution model precisely: distributed arrays are
+//! scattered hierarchically (node split, then the §4.1 copy-free split
+//! inside each node), reductions fold hierarchically to cut the data
+//! returned to the master, and — the PGAS-by-design property (Figure 6) —
+//! every MI works on node-local data unless sharing is explicit, so
+//! undistributed parameters are *replicated* to every node.
+//!
+//! This module implements that cost structure over a simulated
+//! interconnect, composing with the calibrated intra-node makespan model
+//! ([`crate::bench_suite::modeled`]): no cluster exists here, so network
+//! time is virtual, but the work times it combines are measured.
+
+use std::time::Duration;
+
+/// Point-to-point interconnect model: `t(bytes) = latency + bytes/bw`.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkProfile {
+    pub name: &'static str,
+    pub latency: Duration,
+    pub bandwidth_bytes_per_sec: f64,
+}
+
+impl NetworkProfile {
+    /// ~2009-era gigabit ethernet (the clusters of the paper's §4.2 era).
+    pub fn gigabit_ethernet() -> Self {
+        NetworkProfile {
+            name: "1GbE",
+            latency: Duration::from_micros(80),
+            bandwidth_bytes_per_sec: 0.11e9,
+        }
+    }
+
+    /// DDR InfiniBand.
+    pub fn infiniband_ddr() -> Self {
+        NetworkProfile {
+            name: "IB-DDR",
+            latency: Duration::from_micros(4),
+            bandwidth_bytes_per_sec: 1.8e9,
+        }
+    }
+
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        if bytes == 0 {
+            return Duration::ZERO;
+        }
+        self.latency + Duration::from_secs_f64(bytes as f64 / self.bandwidth_bytes_per_sec)
+    }
+}
+
+/// Byte-level description of one SOMD invocation's communication.
+#[derive(Debug, Clone, Copy)]
+pub struct CommShape {
+    /// Bytes of `dist`-qualified inputs (scattered: each node gets 1/N).
+    pub distributed_in_bytes: usize,
+    /// Bytes of undistributed inputs (replicated to every node — the
+    /// §7.5 limitation: "undistributed parameters increase the amount of
+    /// data to be transferred to each node").
+    pub replicated_in_bytes: usize,
+    /// Bytes of each node's partial result (hierarchically reduced).
+    pub partial_result_bytes: usize,
+}
+
+/// Modeled timings for a cluster-wide invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterModeled {
+    pub nodes: usize,
+    pub scatter: Duration,
+    pub compute: Duration,
+    pub reduce_comm: Duration,
+    pub t_par: Duration,
+}
+
+impl ClusterModeled {
+    pub fn speedup_over(&self, t_seq: Duration) -> f64 {
+        t_seq.as_secs_f64() / self.t_par.as_secs_f64()
+    }
+}
+
+/// The §4.2 composition: sequential scatter of node shares + replicated
+/// args, intra-node makespan (supplied by the caller — measured), and a
+/// binary-tree hierarchical reduction.
+pub fn model_cluster_invocation(
+    net: &NetworkProfile,
+    nodes: usize,
+    comm: CommShape,
+    intra_node_makespan: Duration,
+) -> ClusterModeled {
+    assert!(nodes > 0);
+    // The master sends each remote node its share of the distributed data
+    // plus a full copy of every undistributed argument (Figure 6: remote
+    // MIs otherwise touch only local data).  Node 0 is the master itself.
+    let share = comm.distributed_in_bytes / nodes;
+    let mut scatter = Duration::ZERO;
+    for _ in 1..nodes {
+        scatter += net.transfer_time(share + comm.replicated_in_bytes);
+    }
+    // Hierarchical reduction: ceil(log2(nodes)) rounds of partial-result
+    // exchange (valid because the programmer guarantees associativity,
+    // §4.2 — statically checkable at deployment time).
+    let rounds = usize::BITS - (nodes - 1).leading_zeros().min(usize::BITS - 1);
+    let rounds = if nodes == 1 { 0 } else { rounds as usize };
+    let reduce_comm =
+        net.transfer_time(comm.partial_result_bytes).mul_f64(rounds.max(0) as f64);
+    ClusterModeled {
+        nodes,
+        scatter,
+        compute: intra_node_makespan,
+        reduce_comm,
+        t_par: scatter + intra_node_makespan + reduce_comm,
+    }
+}
+
+/// Hierarchical distribution property (paper §4.2: "distribution
+/// strategies are intrinsically associative"): splitting into `nodes`
+/// then `per_node` partitions must refine the flat split.
+pub fn hierarchical_ranges(
+    len: usize,
+    nodes: usize,
+    per_node: usize,
+) -> Vec<Vec<super::distribution::Range1>> {
+    super::distribution::index_ranges(len, nodes)
+        .into_iter()
+        .map(|node_range| {
+            super::distribution::index_ranges(node_range.len(), per_node)
+                .into_iter()
+                .map(|r| super::distribution::Range1::new(r.lo + node_range.lo, r.hi + node_range.lo))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::distribution::Range1;
+
+    #[test]
+    fn hierarchical_split_refines_flat_split() {
+        let nested = hierarchical_ranges(1003, 4, 3);
+        assert_eq!(nested.len(), 4);
+        let flat: Vec<Range1> = nested.into_iter().flatten().collect();
+        assert_eq!(flat.len(), 12);
+        assert_eq!(flat[0].lo, 0);
+        assert_eq!(flat.last().unwrap().hi, 1003);
+        for w in flat.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+    }
+
+    #[test]
+    fn undistributed_args_scale_scatter_with_nodes() {
+        // the §7.5 limitation, quantified: replicated bytes are paid per
+        // remote node, distributed bytes are not
+        let net = NetworkProfile::gigabit_ethernet();
+        let comm_dist =
+            CommShape { distributed_in_bytes: 8 << 20, replicated_in_bytes: 0, partial_result_bytes: 8 };
+        let comm_repl =
+            CommShape { distributed_in_bytes: 0, replicated_in_bytes: 8 << 20, partial_result_bytes: 8 };
+        let w = Duration::from_millis(10);
+        let d2 = model_cluster_invocation(&net, 2, comm_dist, w).scatter;
+        let d8 = model_cluster_invocation(&net, 8, comm_dist, w).scatter;
+        let r2 = model_cluster_invocation(&net, 2, comm_repl, w).scatter;
+        let r8 = model_cluster_invocation(&net, 8, comm_repl, w).scatter;
+        // distributed: total scatter bytes constant-ish (7/8 of data at 8 nodes)
+        assert!(d8 < d2.mul_f64(2.0));
+        // replicated: scatter grows ~linearly with node count
+        assert!(r8 > r2.mul_f64(3.0));
+    }
+
+    #[test]
+    fn single_node_has_no_network_cost() {
+        let net = NetworkProfile::infiniband_ddr();
+        let comm =
+            CommShape { distributed_in_bytes: 1 << 20, replicated_in_bytes: 1 << 20, partial_result_bytes: 64 };
+        let m = model_cluster_invocation(&net, 1, comm, Duration::from_millis(5));
+        assert_eq!(m.scatter, Duration::ZERO);
+        assert_eq!(m.reduce_comm, Duration::ZERO);
+        assert_eq!(m.t_par, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn hierarchical_reduce_is_logarithmic() {
+        let net = NetworkProfile::gigabit_ethernet();
+        let comm = CommShape {
+            distributed_in_bytes: 0,
+            replicated_in_bytes: 0,
+            partial_result_bytes: 1 << 20,
+        };
+        let w = Duration::ZERO;
+        let m2 = model_cluster_invocation(&net, 2, comm, w).reduce_comm;
+        let m16 = model_cluster_invocation(&net, 16, comm, w).reduce_comm;
+        assert!((m16.as_secs_f64() / m2.as_secs_f64() - 4.0).abs() < 0.01); // log2(16)/log2(2)
+    }
+
+    #[test]
+    fn compute_bound_work_scales_transfer_bound_crosses_over() {
+        // Series-like (tiny data, heavy compute) keeps winning with more
+        // nodes; Crypt-like (data ~ work) hits a communication wall.
+        let net = NetworkProfile::gigabit_ethernet();
+        let t_seq = Duration::from_secs(10);
+        let series = CommShape {
+            distributed_in_bytes: 80_000,
+            replicated_in_bytes: 0,
+            partial_result_bytes: 80_000,
+        };
+        let crypt = CommShape {
+            distributed_in_bytes: 50_000_000,
+            replicated_in_bytes: 0,
+            partial_result_bytes: 50_000_000 / 8,
+        };
+        let mut prev_series = 0.0;
+        let mut crypt_speedups = Vec::new();
+        for nodes in [1usize, 2, 4, 8, 16] {
+            let w = Duration::from_secs_f64(10.0 / nodes as f64);
+            let s = model_cluster_invocation(&net, nodes, series, w).speedup_over(t_seq);
+            assert!(s > prev_series, "series should keep scaling");
+            prev_series = s;
+            // crypt-like workload: 0.45 s of compute total
+            let wc = Duration::from_secs_f64(0.45 / nodes as f64);
+            crypt_speedups.push(
+                model_cluster_invocation(&net, nodes, crypt, wc)
+                    .speedup_over(Duration::from_secs_f64(0.45)),
+            );
+        }
+        // crypt crosses over: more nodes eventually stop helping
+        let max = crypt_speedups.iter().cloned().fold(0.0, f64::max);
+        assert!(*crypt_speedups.last().unwrap() < max, "{crypt_speedups:?}");
+    }
+}

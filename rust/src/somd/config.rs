@@ -1,0 +1,85 @@
+//! Runtime version-selection rules (paper §6): the user may force a target
+//! per method with `Class.method:target_architecture` rules; inapplicable
+//! preferences revert to the default (shared memory).
+
+use std::collections::BTreeMap;
+
+/// Where a SOMD method executes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Target {
+    /// Shared-memory thread pool (the default for stand-alone machines).
+    Smp,
+    /// Offload to a device profile (e.g. "fermi", "geforce320m").
+    Device(String),
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Rules {
+    map: BTreeMap<String, Target>,
+}
+
+impl Rules {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Parse `method:target` lines; `#` starts a comment; blank lines ok.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (method, target) = line
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: expected 'method:target'", lineno + 1))?;
+            let target = match target.trim() {
+                "smp" | "cpu" | "shared" => Target::Smp,
+                dev if !dev.is_empty() => Target::Device(dev.to_string()),
+                _ => return Err(format!("line {}: empty target", lineno + 1)),
+            };
+            map.insert(method.trim().to_string(), target);
+        }
+        Ok(Self { map })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, method: impl Into<String>, target: Target) {
+        self.map.insert(method.into(), target);
+    }
+
+    /// The target for `method`; defaults to shared memory (§6).
+    pub fn target_for(&self, method: &str) -> Target {
+        self.map.get(method).cloned().unwrap_or(Target::Smp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_rules_with_comments() {
+        let r = Rules::parse(
+            "# force GPU for series\nSeries.coefficients:fermi\nCrypt.encrypt : smp\n",
+        )
+        .unwrap();
+        assert_eq!(r.target_for("Series.coefficients"), Target::Device("fermi".into()));
+        assert_eq!(r.target_for("Crypt.encrypt"), Target::Smp);
+    }
+
+    #[test]
+    fn default_is_smp() {
+        assert_eq!(Rules::empty().target_for("anything"), Target::Smp);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Rules::parse("no-colon-here").is_err());
+    }
+}

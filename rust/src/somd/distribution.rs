@@ -1,0 +1,160 @@
+//! Distribution strategies (the paper's `dist` qualifier, §3.1).
+//!
+//! A [`Distribution`] maps a value of type `T` to a list of partitions of
+//! the *same* logical type (`T -> List<T>` in the paper).  On shared
+//! memory the built-in array strategies are **copy-free**: they produce
+//! index ranges over the original data (§4.1), optionally widened by a
+//! halo [`View`] (`dist(view = <1,1>,<1,1>)`, §3.1 "Shared Array
+//! Positions").
+
+/// Half-open index range `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Range1 {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Range1 {
+    pub fn new(lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi, "invalid range [{lo}, {hi})");
+        Self { lo, hi }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    pub fn iter(&self) -> std::ops::Range<usize> {
+        self.lo..self.hi
+    }
+
+    /// Widen by a halo view, clamped to `[0, bound)` — the MI's *readable*
+    /// window (Figure 4a).
+    pub fn with_view(&self, view: View, bound: usize) -> Range1 {
+        Range1 { lo: self.lo.saturating_sub(view.before), hi: (self.hi + view.after).min(bound) }
+    }
+
+    /// Intersect with explicit loop bounds `[e1, e2)` — the max/min loop
+    /// boundary translation of §5.1.
+    pub fn clamp(&self, e1: usize, e2: usize) -> Range1 {
+        let lo = self.lo.max(e1);
+        let hi = self.hi.min(e2);
+        Range1 { lo, hi: hi.max(lo) }
+    }
+}
+
+/// Per-dimension halo: how many indexes beyond the partition boundary are
+/// visible to the MI (paper `view = <before, after>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct View {
+    pub before: usize,
+    pub after: usize,
+}
+
+impl View {
+    pub fn sym(k: usize) -> View {
+        View { before: k, after: k }
+    }
+}
+
+/// 2-D partition: a row range and a column range (the default
+/// (block, block) matrix distribution of §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Range2 {
+    pub rows: Range1,
+    pub cols: Range1,
+}
+
+/// A partitioning strategy over values of type `T`.
+///
+/// `Part` is the partition *descriptor* handed to each MI; for the built-in
+/// array strategies it is an index range (copy-free), for user strategies
+/// (e.g. `TreeDist`) it may own data.
+pub trait Distribution<T: ?Sized>: Send + Sync {
+    type Part: Send;
+
+    /// Split `value` into exactly `n` partitions (some possibly empty).
+    fn distribute(&self, value: &T, n: usize) -> Vec<Self::Part>;
+}
+
+/// The paper's default `IndexPartitioner`: split `len` indexes into `n`
+/// contiguous ranges, spreading the remainder over the leading ranges.
+pub fn index_ranges(len: usize, n: usize) -> Vec<Range1> {
+    assert!(n > 0);
+    let base = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < rem);
+        out.push(Range1::new(lo, lo + sz));
+        lo += sz;
+    }
+    debug_assert_eq!(lo, len);
+    out
+}
+
+/// Near-square process grid for the (block, block) 2-D distribution: the
+/// factorization `n = pr * pc` minimizing `|pr - pc|`.
+pub fn near_square_grid(n: usize) -> (usize, usize) {
+    assert!(n > 0);
+    let mut pr = (n as f64).sqrt() as usize;
+    while pr > 1 && n % pr != 0 {
+        pr -= 1;
+    }
+    (pr.max(1), n / pr.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_ranges_cover_exactly() {
+        for len in [0, 1, 7, 100, 101] {
+            for n in [1, 2, 3, 8] {
+                let rs = index_ranges(len, n);
+                assert_eq!(rs.len(), n);
+                assert_eq!(rs[0].lo, 0);
+                assert_eq!(rs.last().unwrap().hi, len);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].hi, w[1].lo);
+                }
+                let sizes: Vec<usize> = rs.iter().map(Range1::len).collect();
+                let max = sizes.iter().max().unwrap();
+                let min = sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "balanced: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn view_widens_and_clamps() {
+        let r = Range1::new(10, 20);
+        assert_eq!(r.with_view(View::sym(2), 100), Range1::new(8, 22));
+        let edge = Range1::new(0, 5);
+        assert_eq!(edge.with_view(View::sym(3), 6), Range1::new(0, 6));
+    }
+
+    #[test]
+    fn clamp_is_max_min_translation() {
+        let r = Range1::new(10, 20);
+        assert_eq!(r.clamp(12, 30), Range1::new(12, 20));
+        assert_eq!(r.clamp(0, 15), Range1::new(10, 15));
+        // disjoint clamp yields an empty range, not a panic
+        assert!(r.clamp(25, 30).is_empty());
+    }
+
+    #[test]
+    fn near_square_grids() {
+        assert_eq!(near_square_grid(1), (1, 1));
+        assert_eq!(near_square_grid(4), (2, 2));
+        assert_eq!(near_square_grid(6), (2, 3));
+        assert_eq!(near_square_grid(8), (2, 4));
+        assert_eq!(near_square_grid(7), (1, 7));
+    }
+}

@@ -1,0 +1,150 @@
+//! The Elina-like runtime engine (paper §6): owns the worker pool, the
+//! version-selection rules and the invocation entry points.
+
+use std::sync::Arc;
+
+use super::config::{Rules, Target};
+use super::master::SomdMethod;
+use super::pool::{JobHandle, WorkerPool};
+
+pub struct Engine {
+    workers: usize,
+    rules: Rules,
+    pool: WorkerPool,
+}
+
+impl Engine {
+    /// `workers` is the default MI count per invocation (paper: one per
+    /// available processor unless overridden at deployment time).
+    pub fn new(workers: usize) -> Self {
+        Self::with_rules(workers, Rules::empty())
+    }
+
+    pub fn with_rules(workers: usize, rules: Rules) -> Self {
+        let workers = workers.max(1);
+        Self { workers, rules, pool: WorkerPool::new(workers) }
+    }
+
+    /// Default engine: one MI per available core.
+    pub fn default_for_host() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(cores)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn rules(&self) -> &Rules {
+        &self.rules
+    }
+
+    /// The architecture the rules select for `method` (§6); device targets
+    /// are resolved by the caller against the available device profiles
+    /// and revert to SMP when inapplicable.
+    pub fn target_for(&self, method: &str) -> Target {
+        self.rules.target_for(method)
+    }
+
+    /// Synchronous SOMD invocation with the engine's default MI count.
+    pub fn invoke<I, P, E, R>(&self, method: &SomdMethod<I, P, E, R>, input: &I) -> R
+    where
+        I: ?Sized + Sync,
+        P: Send + Sync,
+        E: Sync,
+        R: Send,
+    {
+        method.invoke(input, self.workers)
+    }
+
+    /// Synchronous invocation with an explicit MI count.
+    pub fn invoke_with(&self, nparts: usize) -> InvokeWith<'_> {
+        InvokeWith { _engine: self, nparts }
+    }
+
+    /// Asynchronous submission: the invocation competes for the pool with
+    /// other concurrently submitted SOMD requests (§6).
+    pub fn submit<I, P, E, R>(
+        &self,
+        method: Arc<SomdMethod<I, P, E, R>>,
+        input: Arc<I>,
+    ) -> JobHandle<R>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        let n = self.workers;
+        self.pool.submit(move || method.invoke(&input, n))
+    }
+}
+
+pub struct InvokeWith<'a> {
+    _engine: &'a Engine,
+    nparts: usize,
+}
+
+impl InvokeWith<'_> {
+    pub fn call<I, P, E, R>(&self, method: &SomdMethod<I, P, E, R>, input: &I) -> R
+    where
+        I: ?Sized + Sync,
+        P: Send + Sync,
+        E: Sync,
+        R: Send,
+    {
+        method.invoke(input, self.nparts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::partition::Block1D;
+    use crate::somd::reduction;
+
+    fn sum_method() -> SomdMethod<Vec<i64>, crate::somd::partition::BlockPart, (), i64> {
+        SomdMethod::new(
+            "sum",
+            |v: &Vec<i64>, n| Block1D::new().ranges(v.len(), n),
+            |_, _| (),
+            |v, p, _, _| p.own.iter().map(|i| v[i]).sum(),
+            reduction::sum::<i64>(),
+        )
+    }
+
+    #[test]
+    fn engine_invokes_with_default_workers() {
+        let e = Engine::new(4);
+        let data: Vec<i64> = (0..100).collect();
+        assert_eq!(e.invoke(&sum_method(), &data), 4950);
+    }
+
+    #[test]
+    fn explicit_partition_count() {
+        let e = Engine::new(2);
+        let data: Vec<i64> = (1..=10).collect();
+        assert_eq!(e.invoke_with(7).call(&sum_method(), &data), 55);
+    }
+
+    #[test]
+    fn concurrent_submissions() {
+        let e = Engine::new(3);
+        let m = Arc::new(sum_method());
+        let data = Arc::new((0..1000).collect::<Vec<i64>>());
+        let handles: Vec<_> =
+            (0..6).map(|_| e.submit(m.clone(), data.clone())).collect();
+        for h in handles {
+            assert_eq!(h.join(), 499_500);
+        }
+    }
+
+    #[test]
+    fn rules_select_target() {
+        let mut rules = Rules::empty();
+        rules.set("Series.coefficients", Target::Device("fermi".into()));
+        let e = Engine::with_rules(2, rules);
+        assert_eq!(e.target_for("Series.coefficients"), Target::Device("fermi".into()));
+        assert_eq!(e.target_for("Crypt.encrypt"), Target::Smp);
+    }
+}

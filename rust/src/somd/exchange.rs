@@ -1,0 +1,121 @@
+//! Intermediate reductions (paper §3.1, Figure 3): a reduction invoked
+//! *inside* a SOMD method body is applied across all MIs — an all-reduce.
+//!
+//! The paper has one MI compute the operation and disseminate the result.
+//! On shared memory we let every MI fold the same rank-ordered value list
+//! (deterministic, so all copies are identical) — equivalent observable
+//! behaviour without a second dissemination phase; the distributed
+//! realization (out of scope, §4.2) is where the leader variant matters.
+//!
+//! Epoch-indexed slots make the exchange reusable: each MI deposits at its
+//! own call-count epoch, so back-to-back all-reduces never race a slower
+//! rank still reading the previous epoch's slots.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::phaser::Phaser;
+use super::reduction::Reduction;
+
+pub struct Exchange {
+    slots: Vec<Mutex<HashMap<u64, Box<dyn Any + Send>>>>,
+    phaser: Phaser,
+}
+
+impl Exchange {
+    pub fn new(parties: usize) -> Self {
+        Self {
+            slots: (0..parties).map(|_| Mutex::new(HashMap::new())).collect(),
+            phaser: Phaser::new(parties),
+        }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// All-reduce `v` across every MI.  `epoch` must be the caller's own
+    /// monotone call counter (managed by [`crate::somd::mi::MiCtx`]).
+    pub fn allreduce<T, Rd>(&self, rank: usize, epoch: u64, v: T, red: &Rd) -> T
+    where
+        T: Clone + Send + 'static,
+        Rd: Reduction<T> + ?Sized,
+    {
+        self.slots[rank].lock().unwrap().insert(epoch, Box::new(v));
+        self.phaser.arrive_and_wait();
+        let vals: Vec<T> = (0..self.parties())
+            .map(|r| {
+                let slot = self.slots[r].lock().unwrap();
+                slot.get(&epoch)
+                    .expect("missing all-reduce deposit — divergent MI control flow?")
+                    .downcast_ref::<T>()
+                    .expect("all-reduce type mismatch across MIs")
+                    .clone()
+            })
+            .collect();
+        let result = red.reduce(vals);
+        self.phaser.arrive_and_wait();
+        self.slots[rank].lock().unwrap().remove(&epoch);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::reduction;
+    use std::sync::Arc;
+
+    fn run_allreduce(n: usize, rounds: usize) -> Vec<Vec<f64>> {
+        let ex = Arc::new(Exchange::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let ex = ex.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for round in 0..rounds {
+                    let v = (rank + 1) as f64 * (round + 1) as f64;
+                    out.push(ex.allreduce(rank, round as u64, v, &reduction::sum::<f64>()));
+                }
+                out
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_ranks_get_same_sum() {
+        let results = run_allreduce(4, 1);
+        for r in &results {
+            assert_eq!(r[0], 1.0 + 2.0 + 3.0 + 4.0);
+        }
+    }
+
+    #[test]
+    fn repeated_allreduces_do_not_cross_epochs() {
+        let results = run_allreduce(3, 20);
+        for round in 0..20 {
+            let want = (1.0 + 2.0 + 3.0) * (round + 1) as f64;
+            for r in &results {
+                assert_eq!(r[round], want);
+            }
+        }
+    }
+
+    #[test]
+    fn vector_payloads() {
+        let ex = Arc::new(Exchange::new(2));
+        let mut handles = Vec::new();
+        for rank in 0..2 {
+            let ex = ex.clone();
+            handles.push(std::thread::spawn(move || {
+                let v = vec![rank as i64; 3];
+                ex.allreduce(rank, 0, v, &reduction::sum::<i64>().into_vec_elementwise())
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![1, 1, 1]);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Shared 2-D arrays for MI-visible matrix data (paper §3.1 "Shared Array
+//! Positions").
+//!
+//! [`SharedGrid`] is a PGAS-style shared plane: every MI may read anywhere
+//! inside its halo-widened view, but must only write inside its owned
+//! partition; cross-MI visibility is only guaranteed after a `sync` fence.
+//! That contract is the paper's relaxed-consistency shared array; it is
+//! what makes the interior-disjoint writes below sound (see the `unsafe`
+//! note).  [`DoubleGrid`] packages the front/back planes used by the
+//! Jacobi-style SOR sweep.
+
+use std::cell::UnsafeCell;
+
+/// Row-major `rows x cols` matrix writable by multiple MIs at disjoint
+/// positions.
+pub struct SharedGrid {
+    rows: usize,
+    cols: usize,
+    // one UnsafeCell per element: same layout as f64 (repr(transparent)),
+    // so row views can be cast to &[f64] under the fencing contract.
+    data: Vec<UnsafeCell<f64>>,
+}
+
+// SAFETY: MIs write only inside their owned (disjoint) partitions and read
+// across partitions only between `sync` fences, which impose a
+// happens-before edge (Mutex+Condvar in Phaser). This is the same contract
+// the paper's generated Java code relies on.
+unsafe impl Sync for SharedGrid {}
+unsafe impl Send for SharedGrid {}
+
+impl SharedGrid {
+    pub fn new(rows: usize, cols: usize, init: f64) -> Self {
+        Self { rows, cols, data: (0..rows * cols).map(|_| UnsafeCell::new(init)).collect() }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data: data.into_iter().map(UnsafeCell::new).collect() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        unsafe { *self.data.get_unchecked(r * self.cols + c).get() }
+    }
+
+    #[inline]
+    pub fn set(&self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        unsafe { *self.data.get_unchecked(r * self.cols + c).get() = v }
+    }
+
+    /// Immutable row slice (valid under the same fencing contract).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        debug_assert!(r < self.rows);
+        // SAFETY: UnsafeCell<f64> is repr(transparent) over f64; reads are
+        // fenced by the SOMD sync contract.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr().add(r * self.cols).cast::<f64>(),
+                self.cols,
+            )
+        }
+    }
+
+    /// Raw mutable row access for an MI that owns row `r`.
+    ///
+    /// # Safety
+    /// The caller must own row `r` exclusively for the current phase.
+    #[inline]
+    pub unsafe fn row_mut(&self, r: usize) -> &mut [f64] {
+        debug_assert!(r < self.rows);
+        std::slice::from_raw_parts_mut(
+            self.data.as_ptr().add(r * self.cols).cast::<f64>().cast_mut(),
+            self.cols,
+        )
+    }
+
+    /// Snapshot to an owned Vec (master-side, after join).
+    pub fn to_vec(&self) -> Vec<f64> {
+        (0..self.rows * self.cols).map(|i| unsafe { *self.data[i].get() }).collect()
+    }
+}
+
+/// Front/back planes for out-of-place iterative stencils: MIs read from
+/// `src(iter)` and write to `dst(iter)`, flipping parity every iteration
+/// (the flip is implicit — no shared mutable state to coordinate).
+pub struct DoubleGrid {
+    planes: [SharedGrid; 2],
+}
+
+impl DoubleGrid {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        let a = SharedGrid::from_vec(rows, cols, data.clone());
+        let b = SharedGrid::from_vec(rows, cols, data);
+        Self { planes: [a, b] }
+    }
+
+    pub fn src(&self, iter: usize) -> &SharedGrid {
+        &self.planes[iter % 2]
+    }
+
+    pub fn dst(&self, iter: usize) -> &SharedGrid {
+        &self.planes[(iter + 1) % 2]
+    }
+
+    /// The plane holding the result after `iters` completed iterations.
+    pub fn final_plane(&self, iters: usize) -> &SharedGrid {
+        &self.planes[iters % 2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let g = SharedGrid::new(3, 4, 0.0);
+        g.set(2, 3, 7.5);
+        assert_eq!(g.get(2, 3), 7.5);
+        assert_eq!(g.row(2)[3], 7.5);
+    }
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let g = SharedGrid::new(8, 100, 0.0);
+        std::thread::scope(|s| {
+            for r in 0..8 {
+                let g = &g;
+                s.spawn(move || {
+                    for c in 0..100 {
+                        g.set(r, c, (r * 100 + c) as f64);
+                    }
+                });
+            }
+        });
+        for r in 0..8 {
+            for c in 0..100 {
+                assert_eq!(g.get(r, c), (r * 100 + c) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn double_grid_parity() {
+        let d = DoubleGrid::from_vec(2, 2, vec![1.0; 4]);
+        assert!(std::ptr::eq(d.src(0), d.dst(1)));
+        assert!(std::ptr::eq(d.src(1), d.dst(0)));
+        assert!(std::ptr::eq(d.final_plane(2), d.src(0)));
+    }
+}

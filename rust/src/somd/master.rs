@@ -1,0 +1,221 @@
+//! The DMR engine (paper Algorithm 1): distribute → map (MIs) → reduce.
+//!
+//! [`run_mis`] realizes the map stage: one scoped thread per MI, a shared
+//! `fence` phaser for `sync` blocks, an [`Exchange`] for intermediate
+//! reductions, and a rank-indexed results vector fed to the reduction —
+//! exactly the compiled master/slave split of §5.1.  MIs of one invocation
+//! are co-scheduled (scoped threads), so barrier-coupled groups cannot
+//! deadlock on pool capacity.
+
+use std::sync::Mutex;
+
+use super::exchange::Exchange;
+use super::mi::MiCtx;
+use super::phaser::Phaser;
+use super::reduction::Reduction;
+
+/// Execute one MI per partition and return their results in rank order.
+pub fn run_mis<I, P, E, R, F>(input: &I, parts: &[P], env: &E, body: &F) -> Vec<R>
+where
+    I: ?Sized + Sync,
+    P: Send + Sync,
+    E: Sync,
+    R: Send,
+    F: Fn(&I, &P, &E, &MiCtx) -> R + Sync,
+{
+    let n = parts.len();
+    assert!(n > 0, "SOMD invocation with zero partitions");
+    let fence = Phaser::new(n);
+    let exchange = Exchange::new(n);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    if n == 1 {
+        // Degenerate single-MI invocation: run inline (the master executing
+        // its own MI, §4 "these roles may be mixed up").
+        let ctx = MiCtx::new(0, 1, &fence, &exchange);
+        let r = body(input, &parts[0], env, &ctx);
+        return vec![r];
+    }
+
+    std::thread::scope(|s| {
+        for (rank, part) in parts.iter().enumerate() {
+            let fence = &fence;
+            let exchange = &exchange;
+            let results = &results;
+            s.spawn(move || {
+                let ctx = MiCtx::new(rank, n, fence, exchange);
+                let r = body(input, part, env, &ctx);
+                *results[rank].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("MI produced no result"))
+        .collect()
+}
+
+/// A SOMD method: the paper's annotated subroutine, carried as data so the
+/// engine can select among compiled versions (§6).
+///
+/// * `I` — the input dataset type (the method's parameters)
+/// * `P` — the partition descriptor produced by the `dist` strategy
+/// * `E` — the invocation environment (shared variables, shared arrays)
+/// * `R` — the method's return type
+pub struct SomdMethod<I: ?Sized, P, E, R> {
+    name: String,
+    partition: Box<dyn Fn(&I, usize) -> Vec<P> + Send + Sync>,
+    env: Box<dyn Fn(&I, usize) -> E + Send + Sync>,
+    body: Box<dyn Fn(&I, &P, &E, &MiCtx) -> R + Send + Sync>,
+    reduce: Box<dyn Reduction<R>>,
+}
+
+impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> SomdMethod<I, P, E, R> {
+    pub fn new(
+        name: impl Into<String>,
+        partition: impl Fn(&I, usize) -> Vec<P> + Send + Sync + 'static,
+        env: impl Fn(&I, usize) -> E + Send + Sync + 'static,
+        body: impl Fn(&I, &P, &E, &MiCtx) -> R + Send + Sync + 'static,
+        reduce: impl Reduction<R> + 'static,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            partition: Box::new(partition),
+            env: Box::new(env),
+            body: Box::new(body),
+            reduce: Box::new(reduce),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Synchronous SOMD invocation (Figure 1): distribute, map, reduce.
+    pub fn invoke(&self, input: &I, nparts: usize) -> R {
+        let parts = (self.partition)(input, nparts);
+        let env = (self.env)(input, parts.len());
+        let partials = run_mis(input, &parts, &env, &self.body);
+        self.reduce.reduce(partials)
+    }
+
+    /// Distribute only (exposed for tests and the modeled executor).
+    pub fn partitions(&self, input: &I, nparts: usize) -> Vec<P> {
+        (self.partition)(input, nparts)
+    }
+
+    /// Run the map stage sequentially, one partition at a time, returning
+    /// the partials and per-partition wall times.  This is the measurement
+    /// core of the calibrated parallel model (DESIGN.md §3: 1-core host).
+    pub fn map_sequential_timed(&self, input: &I, nparts: usize) -> (Vec<R>, Vec<std::time::Duration>) {
+        let (partials, times, _) = self.map_sequential_timed_env(input, nparts);
+        (partials, times)
+    }
+
+    /// [`Self::map_sequential_timed`] plus the environment-creation time
+    /// (shared grids are allocated+copied by the master — a real part of
+    /// the invocation cost the model must include).
+    pub fn map_sequential_timed_env(
+        &self,
+        input: &I,
+        nparts: usize,
+    ) -> (Vec<R>, Vec<std::time::Duration>, std::time::Duration) {
+        let parts = (self.partition)(input, nparts);
+        let t0 = std::time::Instant::now();
+        let env = (self.env)(input, parts.len());
+        let t_env = t0.elapsed();
+        let mut partials = Vec::with_capacity(parts.len());
+        let mut times = Vec::with_capacity(parts.len());
+        for (rank, part) in parts.iter().enumerate() {
+            let fence = Phaser::new(1);
+            let exchange = Exchange::new(1);
+            let ctx = MiCtx::new(rank, 1, &fence, &exchange);
+            let t0 = std::time::Instant::now();
+            partials.push((self.body)(input, part, &env, &ctx));
+            times.push(t0.elapsed());
+        }
+        (partials, times, t_env)
+    }
+
+    /// Apply the reduction to collected partials (rank order).
+    pub fn reduce(&self, partials: Vec<R>) -> R {
+        self.reduce.reduce(partials)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::distribution::Range1;
+    use crate::somd::partition::Block1D;
+    use crate::somd::reduction;
+
+    fn sum_method() -> SomdMethod<Vec<f64>, crate::somd::partition::BlockPart, (), f64> {
+        SomdMethod::new(
+            "sum",
+            |v: &Vec<f64>, n| Block1D::new().ranges(v.len(), n),
+            |_, _| (),
+            |v, part, _, _| part.own.iter().map(|i| v[i]).sum::<f64>(),
+            reduction::sum::<f64>(),
+        )
+    }
+
+    #[test]
+    fn sum_matches_sequential_for_all_partition_counts() {
+        let data: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let want: f64 = data.iter().sum();
+        let m = sum_method();
+        for n in [1, 2, 3, 7, 8] {
+            assert_eq!(m.invoke(&data, n), want);
+        }
+    }
+
+    #[test]
+    fn results_are_rank_ordered() {
+        let m = SomdMethod::new(
+            "ranks",
+            |len: &usize, n| Block1D::new().ranges(*len, n),
+            |_, _| (),
+            |_, _, _, ctx| ctx.rank(),
+            reduction::FnReduce::new(|parts: Vec<usize>| {
+                assert_eq!(parts, (0..parts.len()).collect::<Vec<_>>());
+                parts.len()
+            }),
+        );
+        assert_eq!(m.invoke(&100, 6), 6);
+    }
+
+    #[test]
+    fn sync_blocks_align_mis() {
+        // every MI increments a shared counter inside a sync block; after
+        // the fence all MIs must observe all increments.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let m = SomdMethod::new(
+            "syncy",
+            |_: &(), n| (0..n).map(|i| Range1::new(i, i + 1)).collect::<Vec<_>>(),
+            |_, n| Arc::new(AtomicUsize::new(n)),
+            |_, _, env: &Arc<AtomicUsize>, ctx| {
+                let n = ctx.parts();
+                ctx.sync(|| {
+                    env.fetch_add(1, Ordering::SeqCst);
+                });
+                let seen = env.load(Ordering::SeqCst);
+                assert_eq!(seen, 2 * n);
+                1usize
+            },
+            reduction::sum::<usize>(),
+        );
+        assert_eq!(m.invoke(&(), 8), 8);
+    }
+
+    #[test]
+    fn map_sequential_matches_parallel() {
+        let data: Vec<f64> = (0..500).map(|i| (i % 13) as f64).collect();
+        let m = sum_method();
+        let (partials, times) = m.map_sequential_timed(&data, 5);
+        assert_eq!(times.len(), 5);
+        assert_eq!(m.reduce(partials), m.invoke(&data, 5));
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-MI execution context (the compiler-generated parameters of
+//! Algorithm 1: rank, fence phaser, results slot, shared environment).
+
+use std::cell::Cell;
+
+use super::exchange::Exchange;
+use super::phaser::Phaser;
+use super::reduction::Reduction;
+use super::shared::Shared;
+
+/// Handed to every method instance; owns nothing, borrows the invocation
+/// environment created by the master.
+pub struct MiCtx<'a> {
+    rank: usize,
+    parts: usize,
+    fence: &'a Phaser,
+    exchange: &'a Exchange,
+    epoch: Cell<u64>,
+    barriers: Cell<u64>,
+}
+
+impl<'a> MiCtx<'a> {
+    pub(crate) fn new(rank: usize, parts: usize, fence: &'a Phaser, exchange: &'a Exchange) -> Self {
+        Self { rank, parts, fence, exchange, epoch: Cell::new(0), barriers: Cell::new(0) }
+    }
+
+    /// This MI's rank in `[0, parts)`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Total number of MIs in this invocation.
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// `sync { … }` (§3.1): run the block, then fence — on shared memory a
+    /// barrier under the strict memory model (§4.1/§5.1).
+    pub fn sync<R>(&self, block: impl FnOnce() -> R) -> R {
+        let r = block();
+        self.fence.arrive_and_wait();
+        self.barriers.set(self.barriers.get() + 1);
+        r
+    }
+
+    /// A bare fence (used by generated code that needs phase alignment
+    /// without a block, e.g. double-buffer swaps).
+    pub fn fence(&self) {
+        self.fence.arrive_and_wait();
+        self.barriers.set(self.barriers.get() + 1);
+    }
+
+    /// Intermediate reduction (§3.1, Figure 3): all-reduce `v` across MIs.
+    pub fn allreduce<T, Rd>(&self, v: T, red: &Rd) -> T
+    where
+        T: Clone + Send + 'static,
+        Rd: Reduction<T> + ?Sized,
+    {
+        let e = self.epoch.get();
+        self.epoch.set(e + 1);
+        self.exchange.allreduce(self.rank, e, v, red)
+    }
+
+    /// `sync reduce(op)(x) { … }` (Listing 14): run the block (which may
+    /// update the MI's local copy of `x`), then fold all local copies and
+    /// write the folded value back into every local copy.
+    pub fn sync_reduce<T, Rd>(&self, shared: &Shared<T>, red: &Rd, block: impl FnOnce())
+    where
+        T: Clone + Send + 'static,
+        Rd: Reduction<T> + ?Sized,
+    {
+        block();
+        let v = shared.get(self.rank);
+        let folded = self.allreduce(v, red);
+        shared.set(self.rank, folded);
+    }
+
+    /// Barriers this MI has crossed (observability/testing).
+    pub fn barrier_count(&self) -> u64 {
+        self.barriers.get()
+    }
+
+    /// The `single` construct (paper §7.5, proposed future work): the
+    /// enclosed block executes on exactly one MI (rank 0); its result is
+    /// broadcast to every MI, with fences on both sides so the block sees
+    /// a consistent pre-state and all MIs see its effects.
+    ///
+    /// This is what lets an iterative algorithm (LUFact) keep its MIs
+    /// alive across outer iterations instead of paying a split-join per
+    /// iteration — quantified in `benches/ablations.rs`.
+    pub fn single<T, F>(&self, block: F) -> T
+    where
+        T: Clone + Send + 'static,
+        F: FnOnce() -> T,
+    {
+        self.fence.arrive_and_wait();
+        self.barriers.set(self.barriers.get() + 1);
+        let v = if self.rank == 0 { Some(block()) } else { None };
+        // broadcast: reuse the exchange; rank 0's value wins
+        let e = self.epoch.get();
+        self.epoch.set(e + 1);
+        self.exchange
+            .allreduce(
+                self.rank,
+                e,
+                v,
+                &crate::somd::reduction::FnReduce::new(|parts: Vec<Option<T>>| {
+                    // rank order: element 0 is rank 0's Some(value)
+                    parts.into_iter().next().expect("at least one MI")
+                }),
+            )
+            .expect("rank 0 must produce the single block's value")
+    }
+}

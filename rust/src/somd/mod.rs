@@ -1,0 +1,38 @@
+//! The SOMD model (the paper's contribution): Single Operation Multiple
+//! Data — data parallelism at method level via Distribute-Map-Reduce.
+//!
+//! | paper construct | here |
+//! |---|---|
+//! | `dist` strategies | [`distribution`], [`partition`] |
+//! | `reduce` strategies | [`reduction`] |
+//! | method instances + `sync` | [`mi`], [`phaser`] |
+//! | intermediate reductions | [`exchange`] |
+//! | `shared` scalars | [`shared`] |
+//! | shared array positions / views | [`grid`], [`distribution::View`] |
+//! | the DMR engine (Algorithm 1) | [`master`] |
+//! | Elina runtime + version rules (§6) | [`engine`], [`config`] |
+
+pub mod cluster;
+pub mod config;
+pub mod distribution;
+pub mod engine;
+pub mod exchange;
+pub mod grid;
+pub mod master;
+pub mod mi;
+pub mod partition;
+pub mod phaser;
+pub mod pool;
+pub mod reduction;
+pub mod shared;
+pub mod tree;
+
+pub use config::{Rules, Target};
+pub use distribution::{Distribution, Range1, Range2, View};
+pub use engine::Engine;
+pub use master::{run_mis, SomdMethod};
+pub use mi::MiCtx;
+pub use partition::{Block1D, Block2D, BlockPart, Block2Part, RowDisjoint, Rows1D, SparsePart, TreeDist};
+pub use phaser::Phaser;
+pub use reduction::{Assemble, FnReduce, Reduction};
+pub use shared::Shared;

@@ -1,0 +1,277 @@
+//! Built-in and paper-featured partitioners.
+//!
+//! * [`Block1D`] — the default block strategy for vectors (copy-free index
+//!   ranges, §4.1), with optional halo views and `dim=` selection.
+//! * [`Block2D`] — the default (block, block) matrix strategy the paper
+//!   credits for SOR's cache-friendliness (§7.2).
+//! * [`RowDisjoint`] — SparseMatMult's user-defined strategy: split the
+//!   nonzero triplet stream so every partition covers a disjoint row range
+//!   (the ~50-line strategy borrowed from JavaGrande, §7.1).
+//! * [`TreeDist`] — Listing 12: evenly partition a linked tree across MIs.
+
+use super::distribution::{index_ranges, near_square_grid, Distribution, Range1, Range2, View};
+use crate::somd::tree::Tree;
+
+/// Block partitioning of `len` indexes (copy-free).
+#[derive(Debug, Clone, Default)]
+pub struct Block1D {
+    pub view: View,
+}
+
+impl Block1D {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `dist(view = <b,a>)`
+    pub fn with_view(view: View) -> Self {
+        Self { view }
+    }
+
+    pub fn ranges(&self, len: usize, n: usize) -> Vec<BlockPart> {
+        index_ranges(len, n)
+            .into_iter()
+            .map(|own| BlockPart { own, readable: own.with_view(self.view, len) })
+            .collect()
+    }
+}
+
+/// A 1-D partition: the indexes the MI owns (writes) and the halo-widened
+/// window it may read (paper Figure 4a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockPart {
+    pub own: Range1,
+    pub readable: Range1,
+}
+
+impl Distribution<usize> for Block1D {
+    type Part = BlockPart;
+
+    fn distribute(&self, len: &usize, n: usize) -> Vec<BlockPart> {
+        self.ranges(*len, n)
+    }
+}
+
+/// (block, block) partitioning of an `rows x cols` matrix.
+#[derive(Debug, Clone, Default)]
+pub struct Block2D {
+    pub view: View,
+}
+
+/// A 2-D partition with owned block and halo-widened readable block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block2Part {
+    pub own: Range2,
+    pub readable: Range2,
+}
+
+impl Block2D {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_view(view: View) -> Self {
+        Self { view }
+    }
+
+    pub fn parts(&self, rows: usize, cols: usize, n: usize) -> Vec<Block2Part> {
+        let (pr, pc) = near_square_grid(n);
+        let rranges = index_ranges(rows, pr);
+        let cranges = index_ranges(cols, pc);
+        let mut out = Vec::with_capacity(n);
+        for r in &rranges {
+            for c in &cranges {
+                out.push(Block2Part {
+                    own: Range2 { rows: *r, cols: *c },
+                    readable: Range2 {
+                        rows: r.with_view(self.view, rows),
+                        cols: c.with_view(self.view, cols),
+                    },
+                });
+            }
+        }
+        out
+    }
+}
+
+impl Distribution<(usize, usize)> for Block2D {
+    type Part = Block2Part;
+
+    fn distribute(&self, dims: &(usize, usize), n: usize) -> Vec<Block2Part> {
+        self.parts(dims.0, dims.1, n)
+    }
+}
+
+/// Row-major partitioning of `len` rows only on dimension 1 — what the
+/// hand-threaded JavaGrande SOR does (outer loop only); kept as the
+/// comparison point for the 1D-vs-2D ablation.
+#[derive(Debug, Clone, Default)]
+pub struct Rows1D {
+    pub view: View,
+}
+
+impl Rows1D {
+    pub fn parts(&self, rows: usize, cols: usize, n: usize) -> Vec<Block2Part> {
+        index_ranges(rows, n)
+            .into_iter()
+            .map(|r| Block2Part {
+                own: Range2 { rows: r, cols: Range1::new(0, cols) },
+                readable: Range2 {
+                    rows: r.with_view(self.view, rows),
+                    cols: Range1::new(0, cols),
+                },
+            })
+            .collect()
+    }
+}
+
+/// SparseMatMult's strategy: partition the nnz triplet stream (sorted by
+/// row) into `n` chunks whose boundaries never split a row, so MIs write
+/// disjoint ranges of the result vector.
+#[derive(Debug, Clone, Default)]
+pub struct RowDisjoint;
+
+/// Partition descriptor: nnz range plus the (disjoint) row range it feeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparsePart {
+    pub nnz: Range1,
+    pub rows: Range1,
+}
+
+impl RowDisjoint {
+    /// `row` must be sorted ascending (CSR-by-triplet).
+    pub fn parts(&self, row: &[u32], n_rows: usize, n: usize) -> Vec<SparsePart> {
+        let nnz = row.len();
+        let targets = index_ranges(nnz, n);
+        let mut out = Vec::with_capacity(n);
+        let mut lo = 0usize;
+        for (i, t) in targets.iter().enumerate() {
+            let mut hi = t.hi.max(lo);
+            if i + 1 == n {
+                hi = nnz;
+            } else {
+                // advance hi to the next row boundary
+                while hi > lo && hi < nnz && row[hi] == row[hi - 1] {
+                    hi += 1;
+                }
+            }
+            let row_lo = if lo < nnz { row[lo] as usize } else { n_rows };
+            let row_hi = if hi > lo { row[hi - 1] as usize + 1 } else { row_lo };
+            out.push(SparsePart {
+                nnz: Range1::new(lo, hi),
+                rows: Range1::new(row_lo.min(row_hi), row_hi),
+            });
+            lo = hi;
+        }
+        out
+    }
+}
+
+/// Listing 12's `TreeDist`: split a binary tree into `n`-level subtrees
+/// plus the `n`-level top copy, so MIs process disjoint regions.
+#[derive(Debug, Clone, Default)]
+pub struct TreeDist {
+    /// Number of split levels (2^levels leaf subtrees).  Listing 12 uses
+    /// the partition count directly; we default to ceil(log2(n)).
+    pub levels: Option<usize>,
+}
+
+impl TreeDist {
+    pub fn parts<A: Clone + Send + Sync>(&self, tree: &Tree<A>, n: usize) -> Vec<Tree<A>> {
+        let levels = self.levels.unwrap_or_else(|| {
+            let mut l = 0;
+            while (1usize << l) < n {
+                l += 1;
+            }
+            l
+        });
+        // frontier of subtrees at depth `levels` (Listing 12's double-buffer
+        // loop), plus the top `levels` of the original tree.
+        let mut frontier: Vec<Tree<A>> = vec![tree.clone()];
+        for _ in 0..levels {
+            let prev = std::mem::take(&mut frontier);
+            for t in prev {
+                frontier.push(t.left_or_nil());
+                frontier.push(t.right_or_nil());
+            }
+        }
+        let mut out = Vec::with_capacity(frontier.len() + 1);
+        out.push(tree.copy_top(levels));
+        out.extend(frontier);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::tree::Tree;
+
+    #[test]
+    fn block1d_halo() {
+        let parts = Block1D::with_view(View::sym(1)).ranges(10, 3);
+        assert_eq!(parts[0].own, Range1::new(0, 4));
+        assert_eq!(parts[0].readable, Range1::new(0, 5));
+        assert_eq!(parts[1].readable, Range1::new(3, 8));
+        assert_eq!(parts[2].readable, Range1::new(6, 10));
+    }
+
+    #[test]
+    fn block2d_covers_matrix() {
+        let parts = Block2D::new().parts(10, 12, 4);
+        assert_eq!(parts.len(), 4);
+        let area: usize = parts.iter().map(|p| p.own.rows.len() * p.own.cols.len()).sum();
+        assert_eq!(area, 120);
+    }
+
+    #[test]
+    fn rows1d_full_width() {
+        let parts = Rows1D::default().parts(9, 5, 2);
+        assert_eq!(parts.len(), 2);
+        assert!(parts.iter().all(|p| p.own.cols.len() == 5));
+    }
+
+    #[test]
+    fn row_disjoint_never_splits_rows() {
+        // rows: 0,0,0,1,1,2,3,3,3,3
+        let row = [0u32, 0, 0, 1, 1, 2, 3, 3, 3, 3];
+        let parts = RowDisjoint.parts(&row, 4, 3);
+        assert_eq!(parts.len(), 3);
+        // coverage + disjointness of nnz ranges
+        assert_eq!(parts[0].nnz.lo, 0);
+        assert_eq!(parts.last().unwrap().nnz.hi, row.len());
+        for w in parts.windows(2) {
+            assert_eq!(w[0].nnz.hi, w[1].nnz.lo);
+            // row disjointness
+            assert!(w[0].rows.hi <= w[1].rows.lo || w[1].nnz.is_empty());
+        }
+        // no boundary splits a row
+        for p in &parts {
+            if p.nnz.is_empty() {
+                continue;
+            }
+            if p.nnz.hi < row.len() {
+                assert_ne!(row[p.nnz.hi], row[p.nnz.hi - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn row_disjoint_more_parts_than_rows() {
+        let row = [0u32, 1];
+        let parts = RowDisjoint.parts(&row, 2, 4);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(|p| p.nnz.len()).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn tree_dist_partitions_node_count() {
+        let tree: Tree<i64> = Tree::full(5, 1); // 2^6 - 1 = 63 nodes
+        let parts = TreeDist::default().parts(&tree, 4);
+        // top copy + 4 subtrees at 2 levels
+        assert_eq!(parts.len(), 5);
+        let total: usize = parts.iter().map(Tree::count).sum();
+        assert_eq!(total, 63);
+    }
+}

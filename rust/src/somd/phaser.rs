@@ -1,0 +1,156 @@
+//! A `java.util.concurrent.Phaser`-like synchronization primitive.
+//!
+//! The paper's compilation scheme (§5.1, Algorithm 1) uses two phasers:
+//! `fence` encodes the `sync` construct (all MIs advance together, strict
+//! memory model) and `completed` synchronizes task completion with the
+//! master.  This implementation supports exactly those uses: a fixed party
+//! count, `arrive` (non-blocking notification) and `arrive_and_wait`
+//! (barrier), plus a `wait_for` used by the master on `completed`.
+
+use std::sync::{Condvar, Mutex};
+
+#[derive(Debug)]
+struct State {
+    parties: usize,
+    arrived: usize,
+    generation: u64,
+}
+
+/// A reusable multi-generation barrier.
+#[derive(Debug)]
+pub struct Phaser {
+    state: Mutex<State>,
+    cond: Condvar,
+}
+
+impl Phaser {
+    /// A phaser with `parties` registered participants.
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0, "phaser needs at least one party");
+        Self {
+            state: Mutex::new(State { parties, arrived: 0, generation: 0 }),
+            cond: Condvar::new(),
+        }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.state.lock().unwrap().parties
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.state.lock().unwrap().generation
+    }
+
+    /// Arrive without waiting (the MI -> master completion signal).
+    pub fn arrive(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.arrived += 1;
+        if s.arrived >= s.parties {
+            s.arrived = 0;
+            s.generation += 1;
+            self.cond.notify_all();
+        }
+    }
+
+    /// Arrive and block until every registered party has arrived
+    /// (the `sync` fence of §5.1).
+    pub fn arrive_and_wait(&self) {
+        let mut s = self.state.lock().unwrap();
+        let gen = s.generation;
+        s.arrived += 1;
+        if s.arrived >= s.parties {
+            s.arrived = 0;
+            s.generation += 1;
+            self.cond.notify_all();
+            return;
+        }
+        while s.generation == gen {
+            s = self.cond.wait(s).unwrap();
+        }
+    }
+
+    /// Block until generation `gen` has completed (master-side join on the
+    /// `completed` phaser: master is NOT a registered party).
+    pub fn wait_for_generation(&self, gen: u64) {
+        let mut s = self.state.lock().unwrap();
+        while s.generation <= gen {
+            s = self.cond.wait(s).unwrap();
+        }
+    }
+
+    /// Convenience: wait until the first generation completes.
+    pub fn await_advance(&self) {
+        self.wait_for_generation(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn single_party_never_blocks() {
+        let p = Phaser::new(1);
+        for _ in 0..10 {
+            p.arrive_and_wait();
+        }
+        assert_eq!(p.generation(), 10);
+    }
+
+    #[test]
+    fn barrier_orders_phases() {
+        // Every thread must observe all phase-0 increments before phase 1.
+        let p = Arc::new(Phaser::new(4));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = p.clone();
+            let c = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                p.arrive_and_wait();
+                assert_eq!(c.load(Ordering::SeqCst), 4);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn master_waits_for_completion() {
+        let p = Arc::new(Phaser::new(3));
+        for _ in 0..3 {
+            let p = p.clone();
+            std::thread::spawn(move || p.arrive());
+        }
+        p.await_advance();
+        assert_eq!(p.generation(), 1);
+    }
+
+    #[test]
+    fn reusable_across_generations() {
+        let p = Arc::new(Phaser::new(2));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    p.arrive_and_wait();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.generation(), 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_parties_rejected() {
+        let _ = Phaser::new(0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Elina-like worker pool (paper §6): SOMD execution requests may be
+//! submitted concurrently and compete for a pool of threads managed by the
+//! runtime system.
+//!
+//! The pool schedules *invocations* (whole SOMD calls); within one
+//! invocation the master spawns its MIs with scoped threads so that
+//! barrier-coupled MI groups can never deadlock on pool capacity (the MIs
+//! of one method must be co-scheduled — same reason the paper sizes its
+//! thread pool to the MI count).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<(VecDeque<Job>, bool)>, // (queue, shutting_down)
+    cv: Condvar,
+}
+
+/// Fixed-size thread pool with FIFO scheduling.
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Handle to a submitted job's result.
+pub struct JobHandle<R> {
+    rx: mpsc::Receiver<std::thread::Result<R>>,
+}
+
+impl<R> JobHandle<R> {
+    /// Block for the result; re-panics if the job panicked.
+    pub fn join(self) -> R {
+        match self.rx.recv().expect("worker pool dropped job") {
+            Ok(r) => r,
+            Err(e) => std::panic::resume_unwind(e),
+        }
+    }
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        let queue = Arc::new(Queue { jobs: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() });
+        let handles = (0..workers)
+            .map(|i| {
+                let q = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("somd-worker-{i}"))
+                    .spawn(move || worker_loop(&q))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { queue, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job; returns a handle to its result.
+    pub fn submit<R: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> JobHandle<R> {
+        let (tx, rx) = mpsc::channel();
+        let wrapped: Job = Box::new(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            let _ = tx.send(r);
+        });
+        {
+            let mut g = self.queue.jobs.lock().unwrap();
+            assert!(!g.1, "submit after shutdown");
+            g.0.push_back(wrapped);
+        }
+        self.queue.cv.notify_one();
+        JobHandle { rx }
+    }
+}
+
+fn worker_loop(q: &Queue) {
+    loop {
+        let job = {
+            let mut g = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = g.0.pop_front() {
+                    break j;
+                }
+                if g.1 {
+                    return;
+                }
+                g = q.cv.wait(g).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.queue.jobs.lock().unwrap().1 = true;
+        self.queue.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_jobs_and_returns_results() {
+        let pool = WorkerPool::new(2);
+        let hs: Vec<_> = (0..10).map(|i| pool.submit(move || i * i)).collect();
+        let got: Vec<i32> = hs.into_iter().map(JobHandle::join).collect();
+        assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let count = Arc::new(AtomicUsize::new(0));
+        let mut outer = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let count = count.clone();
+            outer.push(std::thread::spawn(move || {
+                let hs: Vec<_> = (0..8)
+                    .map(|_| {
+                        let c = count.clone();
+                        pool.submit(move || {
+                            c.fetch_add(1, Ordering::SeqCst);
+                        })
+                    })
+                    .collect();
+                hs.into_iter().for_each(|h| h.join());
+            }));
+        }
+        for h in outer {
+            h.join().unwrap();
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn job_panic_propagates_on_join() {
+        let pool = WorkerPool::new(1);
+        let h = pool.submit(|| panic!("job failed"));
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.join())).is_err());
+        // pool survives the panic
+        assert_eq!(pool.submit(|| 7).join(), 7);
+    }
+
+    #[test]
+    fn drop_drains_gracefully() {
+        let pool = WorkerPool::new(2);
+        let h = pool.submit(|| 1);
+        drop(pool);
+        assert_eq!(h.join(), 1);
+    }
+}

@@ -1,0 +1,173 @@
+//! Reduction strategies (the paper's `reduce` qualifier, §3.1).
+//!
+//! Built-ins mirror the paper: primitive operations (`+`, `-`, `*`, plus
+//! min/max), the default array-assembly reduction for methods returning
+//! arrays, and user-defined strategies via [`Reduction`] implementations or
+//! [`FnReduce`] closures.  Reductions are applied *sequentially and
+//! deterministically* to the rank-ordered list of MI results (§3.1 — the
+//! prototype does not validate associativity/commutativity; that contract
+//! is the programmer's, exactly as in the paper).
+
+/// A reduction `List<R> -> R` applied to the rank-ordered partial results.
+pub trait Reduction<R>: Send + Sync {
+    fn reduce(&self, parts: Vec<R>) -> R;
+}
+
+/// Fold with a binary op, left-to-right in rank order.
+pub struct Fold<F> {
+    op: F,
+}
+
+impl<F> Fold<F> {
+    pub fn new(op: F) -> Self {
+        Self { op }
+    }
+}
+
+impl<R, F> Reduction<R> for Fold<F>
+where
+    F: Fn(R, R) -> R + Send + Sync,
+{
+    fn reduce(&self, parts: Vec<R>) -> R {
+        let mut it = parts.into_iter();
+        let first = it.next().expect("reduction over zero partial results");
+        it.fold(first, |a, b| (self.op)(a, b))
+    }
+}
+
+/// `reduce(+)`
+pub fn sum<R: std::ops::Add<Output = R> + Send>() -> Fold<impl Fn(R, R) -> R + Send + Sync> {
+    Fold::new(|a: R, b: R| a + b)
+}
+
+/// `reduce(-)`
+pub fn sub<R: std::ops::Sub<Output = R> + Send>() -> Fold<impl Fn(R, R) -> R + Send + Sync> {
+    Fold::new(|a: R, b: R| a - b)
+}
+
+/// `reduce(*)`
+pub fn prod<R: std::ops::Mul<Output = R> + Send>() -> Fold<impl Fn(R, R) -> R + Send + Sync> {
+    Fold::new(|a: R, b: R| a * b)
+}
+
+pub fn min_f64() -> Fold<impl Fn(f64, f64) -> f64 + Send + Sync> {
+    Fold::new(f64::min)
+}
+
+pub fn max_f64() -> Fold<impl Fn(f64, f64) -> f64 + Send + Sync> {
+    Fold::new(f64::max)
+}
+
+/// The default reduction when the method returns an array (§3.1): assemble
+/// the partially computed arrays by rank-order concatenation.
+pub struct Assemble;
+
+impl<T: Send> Reduction<Vec<T>> for Assemble {
+    fn reduce(&self, parts: Vec<Vec<T>>) -> Vec<T> {
+        let total = parts.iter().map(Vec::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for p in parts {
+            out.extend(p);
+        }
+        out
+    }
+}
+
+/// Elementwise lift of a binary fold onto vectors (`reduce(+)` applied to
+/// an array-valued method: combine rank results element by element).
+pub struct ElementwiseVec<F> {
+    op: F,
+}
+
+impl<T, F> Reduction<Vec<T>> for ElementwiseVec<F>
+where
+    T: Send,
+    F: Fn(T, T) -> T + Send + Sync,
+{
+    fn reduce(&self, parts: Vec<Vec<T>>) -> Vec<T> {
+        let mut it = parts.into_iter();
+        let mut acc = it.next().expect("reduction over zero partial results");
+        for p in it {
+            assert_eq!(acc.len(), p.len(), "elementwise reduction length mismatch");
+            acc = acc.into_iter().zip(p).map(|(a, b)| (self.op)(a, b)).collect();
+        }
+        acc
+    }
+}
+
+impl<F> Fold<F> {
+    /// Lift this fold to vectors, combining element by element.
+    pub fn into_vec_elementwise(self) -> ElementwiseVec<F> {
+        ElementwiseVec { op: self.op }
+    }
+}
+
+/// User-defined reduction from a whole-list closure.
+pub struct FnReduce<F> {
+    f: F,
+}
+
+impl<F> FnReduce<F> {
+    pub fn new(f: F) -> Self {
+        Self { f }
+    }
+}
+
+impl<R, F> Reduction<R> for FnReduce<F>
+where
+    F: Fn(Vec<R>) -> R + Send + Sync,
+{
+    fn reduce(&self, parts: Vec<R>) -> R {
+        (self.f)(parts)
+    }
+}
+
+/// `reduce(self)` (§3.1 self-reductions): re-apply the method body itself
+/// to the list of partial results.  The caller supplies the body as a
+/// closure over the collected parts.
+pub fn self_reduction<R, F>(body: F) -> FnReduce<F>
+where
+    F: Fn(Vec<R>) -> R + Send + Sync,
+{
+    FnReduce::new(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_folds_in_rank_order() {
+        assert_eq!(sum::<i64>().reduce(vec![1, 2, 3, 4]), 10);
+    }
+
+    #[test]
+    fn sub_is_left_fold() {
+        // determinism matters for non-commutative ops
+        assert_eq!(sub::<i64>().reduce(vec![10, 1, 2]), 7);
+    }
+
+    #[test]
+    fn prod_works() {
+        assert_eq!(prod::<i64>().reduce(vec![2, 3, 4]), 24);
+    }
+
+    #[test]
+    fn assemble_concatenates_by_rank() {
+        let out = Assemble.reduce(vec![vec![1, 2], vec![3], vec![], vec![4, 5]]);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn self_reduction_reapplies_body() {
+        // sum method: body over a list of partial sums is itself a sum
+        let r = self_reduction(|parts: Vec<i64>| parts.iter().sum());
+        assert_eq!(r.reduce(vec![3, 4, 5]), 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_reduction_panics() {
+        let _ = sum::<i64>().reduce(vec![]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Shared scalars (paper §3.1 "Shared scalars", Listing 14).
+//!
+//! A [`Shared<T>`] gives every MI its own local copy; consistency is only
+//! re-established inside `sync reduce(op)(x) { … }` blocks
+//! ([`crate::somd::mi::MiCtx::sync_reduce`]), which fold the local copies
+//! into a single global value and write it back to every copy — the
+//! paper's "syntactic sugar for an intermediate reduction".
+
+use std::sync::Mutex;
+
+pub struct Shared<T> {
+    locals: Vec<Mutex<T>>,
+}
+
+impl<T: Clone> Shared<T> {
+    /// One local copy per MI, all starting from the declared initial value.
+    pub fn new(parties: usize, init: T) -> Self {
+        Self { locals: (0..parties).map(|_| Mutex::new(init.clone())).collect() }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Read this MI's local copy.
+    pub fn get(&self, rank: usize) -> T {
+        self.locals[rank].lock().unwrap().clone()
+    }
+
+    /// Overwrite this MI's local copy.
+    pub fn set(&self, rank: usize, v: T) {
+        *self.locals[rank].lock().unwrap() = v;
+    }
+
+    /// Mutate this MI's local copy in place.
+    pub fn update(&self, rank: usize, f: impl FnOnce(&mut T)) {
+        f(&mut self.locals[rank].lock().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locals_are_independent() {
+        let s = Shared::new(3, 0i64);
+        s.set(0, 10);
+        s.update(1, |v| *v += 5);
+        assert_eq!(s.get(0), 10);
+        assert_eq!(s.get(1), 5);
+        assert_eq!(s.get(2), 0);
+    }
+
+    #[test]
+    fn initial_value_cloned_to_all() {
+        let s = Shared::new(4, vec![1, 2]);
+        for r in 0..4 {
+            assert_eq!(s.get(r), vec![1, 2]);
+        }
+    }
+}

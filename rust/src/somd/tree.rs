@@ -1,0 +1,149 @@
+//! Binary-tree substrate for the `TreeDist` user-defined distribution
+//! (paper Listings 11/12: counting the nodes of a tree in parallel).
+
+use std::sync::Arc;
+
+/// Immutable shareable binary tree (Arc-linked so partitions are cheap).
+#[derive(Debug, Clone)]
+pub enum Tree<A> {
+    Nil,
+    Node { value: A, left: Arc<Tree<A>>, right: Arc<Tree<A>> },
+}
+
+impl<A: Clone> Tree<A> {
+    pub fn leaf(value: A) -> Self {
+        Tree::Node { value, left: Arc::new(Tree::Nil), right: Arc::new(Tree::Nil) }
+    }
+
+    pub fn node(value: A, left: Tree<A>, right: Tree<A>) -> Self {
+        Tree::Node { value, left: Arc::new(left), right: Arc::new(right) }
+    }
+
+    /// A full binary tree of the given depth (depth 0 = single node).
+    pub fn full(depth: usize, value: A) -> Self {
+        if depth == 0 {
+            Tree::leaf(value)
+        } else {
+            let sub = Tree::full(depth - 1, value.clone());
+            Tree::node(value, sub.clone(), sub)
+        }
+    }
+
+    pub fn is_nil(&self) -> bool {
+        matches!(self, Tree::Nil)
+    }
+
+    pub fn left_or_nil(&self) -> Tree<A> {
+        match self {
+            Tree::Nil => Tree::Nil,
+            Tree::Node { left, .. } => (**left).clone(),
+        }
+    }
+
+    pub fn right_or_nil(&self) -> Tree<A> {
+        match self {
+            Tree::Nil => Tree::Nil,
+            Tree::Node { right, .. } => (**right).clone(),
+        }
+    }
+
+    /// Copy only the top `levels` levels (Listing 12's `tree.Copy(n)`):
+    /// nodes below the cut become Nil, so the top partition's node count is
+    /// disjoint from the subtree partitions.
+    pub fn copy_top(&self, levels: usize) -> Tree<A> {
+        match self {
+            Tree::Nil => Tree::Nil,
+            Tree::Node { value, left, right } => {
+                if levels == 0 {
+                    Tree::Nil
+                } else {
+                    Tree::Node {
+                        value: value.clone(),
+                        left: Arc::new(left.copy_top(levels - 1)),
+                        right: Arc::new(right.copy_top(levels - 1)),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sequential node count (Listing 11's `countSize`).
+    pub fn count(&self) -> usize {
+        // iterative to survive deep, unbalanced trees
+        let mut stack: Vec<&Tree<A>> = vec![self];
+        let mut n = 0;
+        while let Some(t) = stack.pop() {
+            if let Tree::Node { left, right, .. } = t {
+                n += 1;
+                stack.push(left);
+                stack.push(right);
+            }
+        }
+        n
+    }
+
+    /// Build a random-ish unbalanced tree with exactly `n` nodes.
+    pub fn with_nodes(n: usize, value: A, rng: &mut crate::util::prng::Xorshift64) -> Tree<A> {
+        if n == 0 {
+            return Tree::Nil;
+        }
+        let left_n = if n == 1 { 0 } else { rng.below(n - 1) };
+        let right_n = n - 1 - left_n;
+        Tree::node(
+            value.clone(),
+            Tree::with_nodes(left_n, value.clone(), rng),
+            Tree::with_nodes(right_n, value, rng),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xorshift64;
+
+    #[test]
+    fn full_tree_count() {
+        assert_eq!(Tree::full(0, 0).count(), 1);
+        assert_eq!(Tree::full(3, 0).count(), 15);
+    }
+
+    #[test]
+    fn copy_top_plus_subtrees_partition_count() {
+        let t = Tree::full(4, 0); // 31 nodes
+        let top = t.copy_top(2); // 3 nodes
+        assert_eq!(top.count(), 3);
+        let subs = [
+            t.left_or_nil().left_or_nil(),
+            t.left_or_nil().right_or_nil(),
+            t.right_or_nil().left_or_nil(),
+            t.right_or_nil().right_or_nil(),
+        ];
+        let total: usize = subs.iter().map(Tree::count).sum();
+        assert_eq!(top.count() + total, 31);
+    }
+
+    #[test]
+    fn with_nodes_exact() {
+        let mut rng = Xorshift64::new(5);
+        for n in [0, 1, 2, 17, 100] {
+            assert_eq!(Tree::with_nodes(n, 0u8, &mut rng).count(), n);
+        }
+    }
+
+    #[test]
+    fn deep_tree_count_does_not_overflow_stack() {
+        // degenerate left spine
+        let mut t = Tree::leaf(0u8);
+        for _ in 0..100_000 {
+            t = Tree::Node {
+                value: 0,
+                left: Arc::new(t),
+                right: Arc::new(Tree::Nil),
+            };
+        }
+        assert_eq!(t.count(), 100_001);
+        // drop iteratively to avoid recursive Drop blowing the stack
+        std::mem::forget(t);
+    }
+}

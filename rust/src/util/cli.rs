@@ -1,0 +1,91 @@
+//! Tiny argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `somd <command> [positional…] [--flag] [--key value|--key=value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).map(|v| v.parse().expect("numeric option")).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).map(|v| v.parse().expect("numeric option")).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        let a = p("bench fig10 --class A --partitions 8 --modeled");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig10"]);
+        assert_eq!(a.opt("class"), Some("A"));
+        assert_eq!(a.opt_usize("partitions", 1), 8);
+        assert!(a.flag("modeled"));
+    }
+
+    #[test]
+    fn parses_eq_form_and_trailing_flag() {
+        let a = p("run crypt --backend=fermi --verbose");
+        assert_eq!(a.opt("backend"), Some("fermi"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p("run");
+        assert_eq!(a.opt_usize("partitions", 4), 4);
+        assert_eq!(a.opt_f64("scale", 1.5), 1.5);
+        assert!(!a.flag("x"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities.
+//!
+//! The build is fully offline against the vendored crate set (xla + anyhow
+//! only), so the usual ecosystem crates are replaced by minimal in-tree
+//! implementations: [`json`] (serde), [`cli`] (clap), [`prng`] (rand),
+//! [`stats`]/[`timer`] (criterion's measurement core) and [`testkit`]
+//! (proptest).  Each is documented and unit-tested in place.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod testkit;
+pub mod timer;

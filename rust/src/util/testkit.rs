@@ -1,0 +1,118 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set — this in-tree substitute is documented in DESIGN.md §3).
+//!
+//! Usage:
+//! ```no_run
+//! use somd::util::testkit::Prop;
+//! Prop::new("add commutes", 0xC0FFEE).runs(200).check(|g| {
+//!     let a = g.usize(0, 100);
+//!     let b = g.usize(0, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//! Failures report the run index and generator seed so the case can be
+//! replayed deterministically (no shrinking — seeds are enough at this
+//! scale).
+
+use super::prng::Xorshift64;
+
+pub struct Prop {
+    name: &'static str,
+    seed: u64,
+    runs: usize,
+}
+
+pub struct Gen {
+    rng: Xorshift64,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi_incl: usize) -> usize {
+        lo + self.rng.below(hi_incl - lo + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    pub fn u16(&mut self) -> u16 {
+        self.rng.u16()
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_u8(&mut self, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+impl Prop {
+    pub fn new(name: &'static str, seed: u64) -> Self {
+        Self { name, seed, runs: 100 }
+    }
+
+    pub fn runs(mut self, n: usize) -> Self {
+        self.runs = n;
+        self
+    }
+
+    /// Run the property; panics (with replay info) on the first failure.
+    pub fn check(self, mut prop: impl FnMut(&mut Gen)) {
+        for i in 0..self.runs {
+            let case_seed = self.seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut g = Gen { rng: Xorshift64::new(case_seed) };
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            if let Err(e) = r {
+                eprintln!(
+                    "property '{}' failed on run {} (case seed {:#x})",
+                    self.name, i, case_seed
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new("usize bounds", 1).runs(50).check(|g| {
+            let v = g.usize(3, 9);
+            assert!((3..=9).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failures() {
+        Prop::new("always fails", 2).runs(5).check(|_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut collected = Vec::new();
+        Prop::new("collect", 7).runs(3).check(|g| collected.push(g.u64()));
+        let mut again = Vec::new();
+        Prop::new("collect", 7).runs(3).check(|g| again.push(g.u64()));
+        assert_eq!(collected, again);
+    }
+}

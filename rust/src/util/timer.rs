@@ -1,0 +1,70 @@
+//! Wall-clock measurement helpers (criterion is not in the offline vendor
+//! set; rust/benches/* are `harness = false` binaries built on these).
+
+use std::time::{Duration, Instant};
+
+/// Time a closure once, returning (result, elapsed).
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Run `f` `reps` times and return every sample (paper methodology: the
+/// reported value is the mean of the middle tier of the samples).
+pub fn sample<R>(reps: usize, mut f: impl FnMut() -> R) -> Vec<Duration> {
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed());
+    }
+    out
+}
+
+/// Paper §7.2: "average of the middle tier of 30 measurements" — sort the
+/// samples and average the middle third (at least one sample).
+pub fn middle_tier_mean(samples: &[Duration]) -> Duration {
+    assert!(!samples.is_empty());
+    let mut s: Vec<Duration> = samples.to_vec();
+    s.sort();
+    let n = s.len();
+    let tier = (n / 3).max(1);
+    let start = (n - tier) / 2;
+    let total: Duration = s[start..start + tier].iter().sum();
+    total / tier as u32
+}
+
+pub fn secs(d: Duration) -> f64 {
+    d.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn middle_tier_of_uniform_is_value() {
+        let s = vec![Duration::from_millis(5); 9];
+        assert_eq!(middle_tier_mean(&s), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn middle_tier_ignores_outliers() {
+        let mut s = vec![Duration::from_millis(10); 28];
+        s.push(Duration::from_secs(100));
+        s.push(Duration::from_nanos(1));
+        assert_eq!(middle_tier_mean(&s), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn single_sample_ok() {
+        assert_eq!(middle_tier_mean(&[Duration::from_millis(3)]), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn sample_counts() {
+        let s = sample(4, || 1 + 1);
+        assert_eq!(s.len(), 4);
+    }
+}

@@ -1,0 +1,165 @@
+//! Device-backend integration: every offloaded benchmark validated
+//! against the rust sequential substrate at the AOT artifact sizes, plus
+//! the accounting invariants the simulator's figures depend on.
+//!
+//! PJRT objects are thread-confined; each test creates its own session on
+//! its own thread-local client.
+
+use somd::bench_suite::{crypt, gpu, series, sor, sparse};
+use somd::device::{Arg, DeviceProfile, DeviceSession};
+use somd::runtime::{HostTensor, Registry};
+
+fn reg() -> Registry {
+    Registry::load_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn crypt_device_roundtrip_full_class_a() {
+    let r = reg();
+    let mut s = DeviceSession::new(&r, DeviceProfile::passthrough());
+    let blocks = r.info("crypt_A").unwrap().meta_usize("blocks").unwrap();
+    let p = crypt::Problem::generate(blocks * 8, 11);
+    let (enc, dec) = gpu::crypt_run(&mut s, &p).unwrap();
+    assert_ne!(enc, p.data);
+    assert_eq!(dec, p.data);
+    // two passes: 2 launches, words+keys h2d per pass, one get per pass
+    let st = s.stats();
+    assert_eq!(st.launches, 2);
+    assert_eq!(st.h2d_transfers, 4);
+    assert_eq!(st.d2h_transfers, 2);
+}
+
+#[test]
+fn crypt_device_matches_rust_sequential_kernel() {
+    let r = reg();
+    let mut s = DeviceSession::new(&r, DeviceProfile::passthrough());
+    let blocks = r.info("crypt_A").unwrap().meta_usize("blocks").unwrap();
+    let p = crypt::Problem::generate(blocks * 8, 3);
+    let enc_dev = gpu::crypt_pass(&mut s, &p.data, &p.ekeys).unwrap();
+    let enc_host = crypt::sequential(&p.data, &p.ekeys);
+    assert_eq!(enc_dev, enc_host, "device and rust IDEA must agree bit-exactly");
+}
+
+#[test]
+fn sor_device_full_run_matches_sequential() {
+    let r = reg();
+    let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+    let n = r.info("sor_step_A").unwrap().meta_usize("n").unwrap();
+    let g064 = sor::generate(n, 21);
+    let g0: Vec<f32> = g064.iter().map(|&v| v as f32).collect();
+    let (_, want) = sor::sequential(&g064, n, 30);
+    let (grid, total) = gpu::sor_run(&mut s, &g0, n, 30).unwrap();
+    assert_eq!(grid.len(), n * n);
+    let rel = (total - want).abs() / want.abs().max(1.0);
+    assert!(rel < 1e-2, "rel={rel}");
+    let st = s.stats();
+    assert_eq!(st.launches, 31); // 30 sweeps + on-device reduction
+    assert_eq!(st.h2d_transfers, 1, "matrix must be put exactly once (Listing 17)");
+}
+
+#[test]
+fn series_device_covers_multiple_chunks() {
+    let r = reg();
+    let chunk = r.info("series_chunk").unwrap().meta_usize("chunk").unwrap();
+    let mut s = DeviceSession::new(&r, DeviceProfile::passthrough());
+    let count = chunk + chunk / 2; // forces 2 launches + prefix slicing
+    let got = gpu::series_run(&mut s, count).unwrap();
+    assert_eq!(got.len(), count);
+    assert_eq!(s.stats().launches, 2);
+    let want = series::sequential(count, 1000);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        // f32 angle resolution degrades with n (pi*n*x up to ~4e4 rad) —
+        // the single-precision accuracy loss the paper itself notes in
+        // §7.3; tolerance grows accordingly.
+        let tol = 5e-3 + 6e-6 * i as f64;
+        assert!(
+            (g.0 as f64 - w.0).abs() < tol && (g.1 as f64 - w.1).abs() < tol,
+            "coef {i}: {g:?} vs {w:?} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn spmv_device_accumulates_200_rounds() {
+    let r = reg();
+    let mut s = DeviceSession::new(&r, DeviceProfile::geforce_320m());
+    let n = r.info("spmv_acc_A").unwrap().meta_usize("n").unwrap();
+    let p = sparse::Problem::generate(n, n * 5, 200, 31);
+    let got = gpu::spmv_run(&mut s, &p).unwrap();
+    let want = sparse::sequential(&p);
+    let maxrel = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (*g as f64 - w).abs() / w.abs().max(1.0))
+        .fold(0.0, f64::max);
+    assert!(maxrel < 2e-2, "maxrel={maxrel}");
+    let st = s.stats();
+    assert_eq!(st.launches, 200);
+    // triplets put once; only y comes back
+    assert_eq!(st.h2d_transfers, 5);
+    assert_eq!(st.d2h_transfers, 1);
+}
+
+#[test]
+fn lufact_fused_ablation_artifact_factors() {
+    let r = reg();
+    let mut s = DeviceSession::new(&r, DeviceProfile::passthrough());
+    let n = {
+        let infos = r.by_bench("lufact");
+        infos.iter().find(|i| i.name.starts_with("lufact_fused")).unwrap().meta_usize("n").unwrap()
+    };
+    use somd::somd::grid::SharedGrid;
+    let orig64 = somd::bench_suite::lufact::generate(n, 41);
+    let a32: Vec<f32> = orig64.iter().map(|&v| v as f32).collect();
+    let (lu, piv) = gpu::lufact_fused(&mut s, &a32, n).unwrap();
+    // compare against the rust sequential LU (f64) loosely
+    let seq = SharedGrid::from_vec(n, n, orig64.clone());
+    let piv_seq = somd::bench_suite::lufact::sequential(&seq);
+    let piv_dev: Vec<usize> = piv.iter().map(|&v| v as usize).collect();
+    assert_eq!(piv_dev, piv_seq, "pivot sequences must agree");
+    let mut maxrel = 0.0f64;
+    for i in 0..n * n {
+        let w = seq.to_vec()[i];
+        maxrel = maxrel.max((lu[i] as f64 - w).abs() / w.abs().max(1.0));
+    }
+    assert!(maxrel < 5e-2, "f32 LU drift too large: {maxrel}");
+}
+
+#[test]
+fn device_clock_composition_per_profile() {
+    // passthrough: device clock == measured compute; fermi: device clock
+    // must include the modeled transfers and launch overhead on top of
+    // scaled compute.
+    let r = reg();
+    let n = r.info("vecadd").unwrap().inputs[0].elems();
+    let run = |profile: DeviceProfile| {
+        let mut s = DeviceSession::new(&r, profile);
+        let a = HostTensor::vec_f32(vec![1.0; n]);
+        let b = HostTensor::vec_f32(vec![2.0; n]);
+        s.launch_to_host("vecadd", &[Arg::Host(&a), Arg::Host(&b)], n).unwrap();
+        s.stats()
+    };
+    let pass = run(DeviceProfile::passthrough());
+    assert!(
+        (pass.device_time.as_secs_f64() - pass.wall_compute.as_secs_f64()).abs() < 1e-6,
+        "{pass:?}"
+    );
+    let fermi_profile = DeviceProfile::fermi();
+    let fermi = run(fermi_profile.clone());
+    let floor = fermi_profile.h2d_time(fermi.bytes_h2d)
+        + fermi_profile.d2h_time(fermi.bytes_d2h)
+        + fermi_profile.launch_overhead;
+    assert!(fermi.device_time > floor, "{fermi:?} vs floor {floor:?}");
+}
+
+#[test]
+fn memory_residency_never_leaks_across_runs() {
+    let r = reg();
+    let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+    let n = r.info("sor_step_A").unwrap().meta_usize("n").unwrap();
+    let g0: Vec<f32> = vec![1.0; n * n];
+    for _ in 0..3 {
+        gpu::sor_run(&mut s, &g0, n, 2).unwrap();
+        assert_eq!(s.memory().live_buffers(), 0, "buffers must be freed after each run");
+    }
+}

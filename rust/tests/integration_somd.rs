@@ -1,0 +1,156 @@
+//! Cross-module integration tests: the SOMD public API end to end
+//! (engine + rules + methods + shared state + reductions), mirroring how
+//! the paper's generated code composes the runtime.
+
+use std::sync::Arc;
+
+use somd::backend::{Executed, HeteroMethod};
+use somd::somd::grid::SharedGrid;
+use somd::somd::partition::{Block1D, Block2D, TreeDist};
+use somd::somd::reduction::{self, Assemble};
+use somd::somd::tree::Tree;
+use somd::somd::{Engine, Rules, SomdMethod, Target};
+use somd::util::prng::Xorshift64;
+
+fn dot_method() -> SomdMethod<(Vec<f64>, Vec<f64>), somd::somd::BlockPart, (), f64> {
+    SomdMethod::new(
+        "Dot.dot",
+        |inp: &(Vec<f64>, Vec<f64>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |inp, part, _, _| part.own.iter().map(|i| inp.0[i] * inp.1[i]).sum(),
+        reduction::sum::<f64>(),
+    )
+}
+
+#[test]
+fn engine_runs_dot_product_at_every_width() {
+    let n = 10_000;
+    let a: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+    let b: Vec<f64> = (0..n).map(|i| (i % 11) as f64).collect();
+    let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    for workers in 1..=8 {
+        let engine = Engine::new(workers);
+        let got = engine.invoke(&dot_method(), &(a.clone(), b.clone()));
+        assert_eq!(got, want, "workers={workers}");
+    }
+}
+
+#[test]
+fn concurrent_somd_submissions_share_the_pool() {
+    // paper §6: SOMD execution requests may be submitted concurrently
+    let engine = Engine::new(4);
+    let m = Arc::new(dot_method());
+    let input = Arc::new(((0..5000).map(|i| i as f64).collect(), vec![2.0; 5000]));
+    let want: f64 = (0..5000).map(|i| 2.0 * i as f64).sum();
+    let handles: Vec<_> = (0..10).map(|_| engine.submit(m.clone(), input.clone())).collect();
+    for h in handles {
+        assert_eq!(h.join(), want);
+    }
+}
+
+#[test]
+fn rules_route_and_fall_back() {
+    let text = "Dot.dot:fermi\nOther.m:smp\n";
+    let rules = Rules::parse(text).unwrap();
+    let engine = Engine::with_rules(2, rules);
+    // no device version compiled -> falls back to SMP (§6)
+    let hetero = HeteroMethod::smp_only(dot_method());
+    assert_eq!(hetero.resolve(&engine, None), Target::Smp);
+    let (r, how) = hetero.invoke(&engine, None, &(vec![3.0; 4], vec![2.0; 4])).unwrap();
+    assert_eq!(r, 24.0);
+    assert!(matches!(how, Executed::Smp { partitions: 2 }));
+}
+
+#[test]
+fn nested_somd_via_intermediate_reduction_normalizes() {
+    // Listing 10: nested reduce(+) inside the method body
+    let data: Vec<f64> = (1..=512).map(|i| i as f64).collect();
+    let m = SomdMethod::new(
+        "Norm.normalize",
+        |v: &Vec<f64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, part, _, ctx| {
+            let local: f64 = part.own.iter().map(|i| v[i] * v[i]).sum();
+            let norm = ctx.allreduce(local, &reduction::sum::<f64>()).sqrt();
+            part.own.iter().map(|i| v[i] / norm).collect::<Vec<f64>>()
+        },
+        Assemble,
+    );
+    let out = m.invoke(&data, 7);
+    let norm2: f64 = out.iter().map(|x| x * x).sum();
+    assert!((norm2 - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn tree_count_with_user_distribution() {
+    let mut rng = Xorshift64::new(99);
+    let tree: Tree<i32> = Tree::with_nodes(25_000, 1, &mut rng);
+    let m = SomdMethod::new(
+        "Tree.count",
+        |t: &Tree<i32>, n| TreeDist::default().parts(t, n),
+        |_, _| (),
+        |_, part: &Tree<i32>, _, _| part.count(),
+        reduction::sum::<usize>(),
+    );
+    for parts in [1, 3, 8] {
+        assert_eq!(m.invoke(&tree, parts), 25_000);
+    }
+}
+
+#[test]
+fn shared_grid_stencil_with_sync_is_deterministic() {
+    use somd::bench_suite::sor;
+    let n = 40;
+    let g0 = sor::generate(n, 17);
+    let (_, want) = sor::sequential(&g0, n, 25);
+    // run the parallel version many times — any missing fence would show
+    // up as nondeterminism
+    let m = sor::somd_method();
+    for _ in 0..10 {
+        let got = m.invoke(&sor::Input { g0: &g0, n, iters: 25 }, 6);
+        assert!((got - want).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn block2d_partitions_compose_with_shared_grid_writes() {
+    // every MI fills its own 2-D block; the full grid must be covered
+    const ROWS: usize = 33;
+    const COLS: usize = 17;
+    let (rows, cols) = (ROWS, COLS);
+    let m = SomdMethod::new(
+        "Fill.fill",
+        |_: &(), n| Block2D::new().parts(ROWS, COLS, n),
+        |_, _| Arc::new(SharedGrid::new(ROWS, COLS, -1.0)),
+        |_, part, grid: &Arc<SharedGrid>, ctx| {
+            for i in part.own.rows.iter() {
+                for j in part.own.cols.iter() {
+                    grid.set(i, j, ctx.rank() as f64);
+                }
+            }
+            Arc::clone(grid)
+        },
+        reduction::FnReduce::new(|parts: Vec<Arc<SharedGrid>>| parts.into_iter().next().unwrap()),
+    );
+    let grid = m.invoke(&(), 6);
+    for i in 0..rows {
+        for j in 0..cols {
+            assert!(grid.get(i, j) >= 0.0, "uncovered cell ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn self_reduction_sums_like_the_method() {
+    // Listing 9: reduce(self) on a sum method
+    let data: Vec<i64> = (0..1000).collect();
+    let m = SomdMethod::new(
+        "Sum.sum",
+        |v: &Vec<i64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, part, _, _| part.own.iter().map(|i| v[i]).sum::<i64>(),
+        // the reduction IS the method body applied to the partials
+        reduction::self_reduction(|parts: Vec<i64>| parts.iter().sum()),
+    );
+    assert_eq!(m.invoke(&data, 8), 499_500);
+}

@@ -1,0 +1,191 @@
+//! Property-based tests on the coordinator invariants (routing/batching/
+//! state in SOMD terms: partition coverage, reduction determinism, fence
+//! alignment, exchange consistency) — via the in-tree testkit (proptest is
+//! not in the offline vendor set; see DESIGN.md §3).
+
+use somd::bench_suite::{crypt, sor, sparse};
+use somd::somd::distribution::{index_ranges, near_square_grid, Range1, View};
+use somd::somd::partition::{Block1D, Block2D, RowDisjoint};
+use somd::somd::reduction::{self, Assemble, Reduction};
+use somd::somd::{run_mis, SomdMethod};
+use somd::util::prng::Xorshift64;
+use somd::util::testkit::Prop;
+
+#[test]
+fn prop_index_ranges_partition_exactly() {
+    Prop::new("index_ranges partition", 1).runs(300).check(|g| {
+        let len = g.usize(0, 10_000);
+        let n = g.usize(1, 64);
+        let rs = index_ranges(len, n);
+        assert_eq!(rs.len(), n);
+        assert_eq!(rs.iter().map(Range1::len).sum::<usize>(), len);
+        for w in rs.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo); // contiguous, ordered, disjoint
+        }
+        let sizes: Vec<usize> = rs.iter().map(Range1::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    });
+}
+
+#[test]
+fn prop_views_stay_in_bounds() {
+    Prop::new("views clamped", 2).runs(300).check(|g| {
+        let len = g.usize(1, 1000);
+        let n = g.usize(1, 16);
+        let view = View { before: g.usize(0, 5), after: g.usize(0, 5) };
+        for part in Block1D::with_view(view).ranges(len, n) {
+            assert!(part.readable.lo <= part.own.lo);
+            assert!(part.readable.hi >= part.own.hi);
+            assert!(part.readable.hi <= len);
+        }
+    });
+}
+
+#[test]
+fn prop_block2d_tiles_cover_disjointly() {
+    Prop::new("block2d coverage", 3).runs(150).check(|g| {
+        let rows = g.usize(1, 60);
+        let cols = g.usize(1, 60);
+        let n = g.usize(1, 12);
+        let parts = Block2D::new().parts(rows, cols, n);
+        let mut covered = vec![0u8; rows * cols];
+        for p in &parts {
+            for i in p.own.rows.iter() {
+                for j in p.own.cols.iter() {
+                    covered[i * cols + j] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "each cell covered exactly once");
+    });
+}
+
+#[test]
+fn prop_near_square_grid_factors() {
+    Prop::new("grid factors", 4).runs(200).check(|g| {
+        let n = g.usize(1, 256);
+        let (pr, pc) = near_square_grid(n);
+        assert_eq!(pr * pc, n);
+        assert!(pr <= pc);
+    });
+}
+
+#[test]
+fn prop_row_disjoint_invariants() {
+    Prop::new("row disjoint", 5).runs(200).check(|g| {
+        let n_rows = g.usize(1, 50);
+        let nnz = g.usize(0, 400);
+        let mut rng = Xorshift64::new(g.u64());
+        let mut row: Vec<u32> = (0..nnz).map(|_| rng.below(n_rows) as u32).collect();
+        row.sort_unstable();
+        let parts = RowDisjoint.parts(&row, n_rows, g.usize(1, 10));
+        // coverage
+        assert_eq!(parts.iter().map(|p| p.nnz.len()).sum::<usize>(), nnz);
+        // no boundary splits a row; row ranges are disjoint for non-empty parts
+        let mut last_hi = 0usize;
+        for p in &parts {
+            assert_eq!(p.nnz.lo, last_hi);
+            last_hi = p.nnz.hi;
+            if !p.nnz.is_empty() && p.nnz.hi < nnz {
+                assert_ne!(row[p.nnz.hi], row[p.nnz.hi - 1], "row split at boundary");
+            }
+        }
+        let nonempty: Vec<_> = parts.iter().filter(|p| !p.nnz.is_empty()).collect();
+        for w in nonempty.windows(2) {
+            assert!(w[0].rows.hi <= w[1].rows.lo, "row ranges overlap");
+        }
+    });
+}
+
+#[test]
+fn prop_assemble_is_rank_ordered_concat() {
+    Prop::new("assemble order", 6).runs(100).check(|g| {
+        let parts: Vec<Vec<u64>> = (0..g.usize(1, 10))
+            .map(|_| (0..g.usize(0, 20)).map(|_| g.u64()).collect())
+            .collect();
+        let flat: Vec<u64> = parts.iter().flatten().copied().collect();
+        assert_eq!(Assemble.reduce(parts), flat);
+    });
+}
+
+#[test]
+fn prop_somd_sum_equals_sequential_for_random_inputs() {
+    Prop::new("somd sum == seq", 7).runs(60).check(|g| {
+        let len = g.usize(1, 3000);
+        let data = g.vec_f64(len, -100.0, 100.0);
+        let want: f64 = data.iter().sum();
+        let m = SomdMethod::new(
+            "sum",
+            |v: &Vec<f64>, n| Block1D::new().ranges(v.len(), n),
+            |_, _| (),
+            |v, p, _, _| p.own.iter().map(|i| v[i]).sum::<f64>(),
+            reduction::sum::<f64>(),
+        );
+        let got = m.invoke(&data, g.usize(1, 12));
+        assert!((got - want).abs() < 1e-6 * want.abs().max(1.0));
+    });
+}
+
+#[test]
+fn prop_allreduce_agrees_across_ranks_and_rounds() {
+    Prop::new("allreduce consistency", 8).runs(30).check(|g| {
+        let parts = g.usize(2, 8);
+        let rounds = g.usize(1, 6);
+        let seeds: Vec<u64> = (0..parts).map(|_| g.u64()).collect();
+        let ranks: Vec<usize> = (0..parts).collect();
+        let results = run_mis(&seeds, &ranks, &(), &|seeds, &rank, _, ctx| {
+            let mut rng = Xorshift64::new(seeds[rank]);
+            let mut out = Vec::new();
+            for _ in 0..rounds {
+                let v = rng.f64();
+                out.push(ctx.allreduce(v, &reduction::sum::<f64>()));
+            }
+            out
+        });
+        for round in 0..rounds {
+            let first = results[0][round];
+            assert!(
+                results.iter().all(|r| (r[round] - first).abs() < 1e-12),
+                "ranks disagree in round {round}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_crypt_roundtrip_any_key_any_width() {
+    Prop::new("idea roundtrip", 9).runs(30).check(|g| {
+        let p = crypt::Problem::generate(8 * g.usize(1, 300), g.u64());
+        assert_eq!(crypt::roundtrip_mismatches(&p, g.usize(1, 8)), 0);
+    });
+}
+
+#[test]
+fn prop_sor_partition_count_does_not_change_result() {
+    Prop::new("sor invariance", 10).runs(15).check(|g| {
+        let n = g.usize(5, 30);
+        let iters = g.usize(1, 8);
+        let g0 = sor::generate(n, g.u64());
+        let (_, want) = sor::sequential(&g0, n, iters);
+        let p1 = g.usize(1, 8);
+        let p2 = g.usize(1, 8);
+        let m = sor::somd_method();
+        let r1 = m.invoke(&sor::Input { g0: &g0, n, iters }, p1);
+        let r2 = m.invoke(&sor::Input { g0: &g0, n, iters }, p2);
+        assert!((r1 - want).abs() < 1e-9 && (r2 - want).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_sparse_checksum_stable_across_widths() {
+    Prop::new("sparse widths", 11).runs(20).check(|g| {
+        let n = g.usize(2, 60);
+        let p = sparse::Problem::generate(n, g.usize(1, 4 * n), g.usize(1, 3), g.u64());
+        let (y1, c1) = sparse::somd_run(&p, g.usize(1, 6));
+        let (y2, c2) = sparse::somd_run(&p, g.usize(1, 6));
+        assert!((c1 - c2).abs() < 1e-9);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    });
+}
