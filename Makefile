@@ -1,0 +1,20 @@
+# Convenience entry points (referenced by runtime error messages/docs).
+
+ARTIFACT_SCALE ?= 0.02
+
+.PHONY: artifacts check-interp test bench-auto
+
+# AOT-lower every L2 program to HLO text + manifest (the rust side's input)
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts --scale $(ARTIFACT_SCALE)
+
+# differential check: the HLO interpreter's semantics vs jax
+check-interp:
+	cd python && python -m compile.interp_check
+
+test:
+	cd rust && cargo test -q
+	cd python && python -m pytest tests -q
+
+bench-auto:
+	cd rust && cargo bench --bench auto_schedule

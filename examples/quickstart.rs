@@ -8,62 +8,106 @@
 //! body stays the sequential loop over the MI's index range, and the
 //! default array reduction assembles the result.  The same method also
 //! runs on the device backend (the AOT `vecadd` Pallas kernel) when
-//! artifacts are available.
+//! artifacts are available — and with a `VectorAdd.add:auto` rule the
+//! engine picks the architecture itself from recorded execution history.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use std::sync::Arc;
+
+use somd::backend::{DeviceFn, Executed, HeteroMethod};
 use somd::somd::partition::Block1D;
 use somd::somd::reduction::Assemble;
-use somd::somd::{Engine, SomdMethod};
+use somd::somd::{Engine, Rules, SomdMethod, Target};
 
-fn main() -> anyhow::Result<()> {
-    // vectorAdd as a SOMD method
-    let vector_add = SomdMethod::new(
+fn vector_add_smp() -> SomdMethod<(Vec<f32>, Vec<f32>), somd::somd::BlockPart, (), Vec<f32>> {
+    SomdMethod::new(
         "VectorAdd.add",
         // dist a, dist b: built-in block partitioning (copy-free ranges)
-        |inp: &(Vec<i64>, Vec<i64>), n| Block1D::new().ranges(inp.0.len(), n),
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
         |_, _| (),
         // the UNCHANGED sequential body, over the MI's range
         |inp, part, _, _| {
             let (a, b) = inp;
-            part.own.iter().map(|i| a[i] + b[i]).collect::<Vec<i64>>()
+            part.own.iter().map(|i| a[i] + b[i]).collect::<Vec<f32>>()
         },
         Assemble,
-    );
+    )
+}
 
+fn main() -> anyhow::Result<()> {
+    // --- 1. Synchronous SMP invocation (Figure 1) ------------------------
     let n = 1 << 20;
-    let a: Vec<i64> = (0..n).collect();
-    let b: Vec<i64> = (0..n).map(|i| 2 * i).collect();
+    let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
 
-    // Synchronous invocation (Figure 1): the caller sees a plain call.
     let engine = Engine::new(4);
-    let c = engine.invoke(&vector_add, &(a.clone(), b.clone()));
-    assert!(c.iter().enumerate().all(|(i, &v)| v == 3 * i as i64));
+    let c = engine.invoke(&vector_add_smp(), &(a.clone(), b.clone()));
+    assert!(c.iter().enumerate().all(|(i, &v)| v == 3.0 * i as f32));
     println!("SMP SOMD vectorAdd over {n} elements: OK (4 MIs)");
 
-    // The same operation offloaded to the device backend (paper Listing 3
-    // territory, but with zero extra user code — the compiler's Algorithm 2
-    // equivalent lives in the runtime).
-    match somd::runtime::Registry::load_default() {
-        Ok(reg) => {
-            use somd::device::{Arg, DeviceProfile, DeviceSession};
-            use somd::runtime::HostTensor;
-            let elems = reg.info("vecadd")?.inputs[0].elems();
-            let mut sess = DeviceSession::new(&reg, DeviceProfile::fermi());
-            let x = HostTensor::vec_f32(vec![1.5; elems]);
-            let y = HostTensor::vec_f32(vec![2.5; elems]);
-            let out = sess.launch_to_host("vecadd", &[Arg::Host(&x), Arg::Host(&y)], elems)?;
-            assert!(out[0].as_f32()?.iter().all(|&v| v == 4.0));
-            let st = sess.stats();
-            println!(
-                "device vectorAdd ({}): OK — launches={} h2d={}B modeled_device_time={:.3}ms",
-                sess.profile().name,
-                st.launches,
-                st.bytes_h2d,
-                st.device_time.as_secs_f64() * 1e3
-            );
+    // --- 2. The same method under `auto` rules ---------------------------
+    // The runtime learns where the method runs fastest: SMP wall times vs
+    // modeled device times (compute + transfers + launches) feed the
+    // scheduler history; `VectorAdd.add:auto` resolves per invocation.
+    let artifacts =
+        std::env::var("SOMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let mut rules = Rules::empty();
+    rules.set("VectorAdd.add", Target::Auto);
+    let engine = match Engine::with_rules(4, rules).with_device_master(&artifacts, "fermi") {
+        Ok(e) => e,
+        Err(e) => {
+            println!("(artifacts not built — run `make artifacts` for the auto half: {e:#})");
+            return Ok(());
         }
-        Err(_) => println!("(artifacts not built — run `make artifacts` for the device half)"),
+    };
+
+    // the hetero method: SMP version + device master code (Algorithm 2)
+    let device: DeviceFn<(Vec<f32>, Vec<f32>), Vec<f32>> = Box::new(|sess, inp| {
+        use somd::device::Arg;
+        use somd::runtime::HostTensor;
+        let x = HostTensor::vec_f32(inp.0.clone());
+        let y = HostTensor::vec_f32(inp.1.clone());
+        let out = sess.launch_to_host("vecadd", &[Arg::Host(&x), Arg::Host(&y)], inp.0.len())?;
+        Ok(out[0].as_f32()?.to_vec())
+    });
+    let hetero = Arc::new(HeteroMethod::with_device(vector_add_smp(), device));
+    let input = Arc::new((a, b));
+
+    // concurrent submissions: device-targeted jobs queue on the master
+    // thread and share ONE warm session; SMP jobs compete for the pool.
+    for round in 0..4 {
+        let handles: Vec<_> =
+            (0..3).map(|_| engine.submit_hetero(hetero.clone(), input.clone())).collect();
+        for h in handles {
+            let (out, how) = h.join()?;
+            assert!((out[3] - 9.0).abs() < 1e-3);
+            let how = match how {
+                Executed::Smp { partitions } => format!("smp({partitions} MIs)"),
+                Executed::Device { profile, stats } => format!(
+                    "device({profile}, modeled {:.2} ms)",
+                    stats.device_time.as_secs_f64() * 1e3
+                ),
+            };
+            println!("round {round}: ran on {how}");
+        }
+    }
+
+    if let Some(c) = engine.device_counters() {
+        println!(
+            "device lane: {} jobs over {} warm session(s) ({} warm hits)",
+            c.jobs_run, c.sessions_created, c.warm_hits
+        );
+    }
+    if let Some(h) = engine.scheduler().history("VectorAdd.add") {
+        println!(
+            "history: {} smp runs (mean {:.2} ms), {} device runs (mean {:.2} ms)",
+            h.smp_runs,
+            h.smp_estimate().unwrap_or(0.0) * 1e3,
+            h.device_runs,
+            h.device_estimate().unwrap_or(0.0) * 1e3,
+        );
+        println!("scheduler state: {}", engine.scheduler().to_json().dump());
     }
     Ok(())
 }

@@ -62,7 +62,15 @@ def to_hlo_text(lowered) -> str:
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=False
     )
-    return comp.as_hlo_text()
+    # print_large_constants: the default printer elides big array
+    # constants as `constant({...})`, which does not round-trip through
+    # any HLO text parser — the artifact would be unexecutable.  Metadata
+    # (source locations) is noise for the interchange format; dropping it
+    # keeps artifacts lean and diff-stable.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
 
 
 def plan(scale: float):

@@ -1,0 +1,556 @@
+"""Differential check of the rust HLO interpreter's semantics.
+
+The rust side executes the AOT artifacts through the vendored `xla`
+shim's HLO-text interpreter (rust/vendor/xla).  This tool mirrors that
+interpreter's exact semantics in numpy (same attribute interpretation,
+same gather/scatter/reduce algorithms, same clamping rules) and checks
+every artifact program against JAX executing the original function on
+random inputs.  A pass here validates the *semantics* the rust code
+implements; it is run at artifact-regeneration time:
+
+    cd python && python -m compile.interp_check [--scale 0.0001]
+
+Heavy programs are checked at a tiny scale (the op mix is identical).
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+import numpy as np
+
+DTYPES = {
+    "pred": np.bool_,
+    "s32": np.int32,
+    "s64": np.int64,
+    "u32": np.uint32,
+    "u64": np.uint64,
+    "f32": np.float32,
+    "f64": np.float64,
+}
+
+
+# ---------------------------------------------------------------------------
+# parsing (mirrors rust/vendor/xla/src/hlo.rs)
+# ---------------------------------------------------------------------------
+
+def _strip_comments(s):
+    return re.sub(r"/\*.*?\*/", "", s)
+
+
+def _parse_shape_prefix(s):
+    i = 0
+
+    def ws():
+        nonlocal i
+        while i < len(s) and s[i].isspace():
+            i += 1
+
+    def shape():
+        nonlocal i
+        ws()
+        if s[i] == "(":
+            i += 1
+            ws()
+            parts = []
+            if s[i] == ")":
+                i += 1
+                return ("tuple", parts)
+            while True:
+                parts.append(shape())
+                ws()
+                if s[i] == ",":
+                    i += 1
+                elif s[i] == ")":
+                    i += 1
+                    return ("tuple", parts)
+                else:
+                    raise ValueError(f"tuple parse at {i}")
+        m = re.match(r"[a-z0-9_]+", s[i:])
+        ty = m.group(0)
+        i += m.end()
+        assert s[i] == "["
+        j = s.index("]", i)
+        dims = [int(d) for d in s[i + 1 : j].split(",") if d.strip()]
+        i = j + 1
+        if i < len(s) and s[i] == "{":
+            i = s.index("}", i) + 1
+        return ("array", ty, dims)
+
+    sh = shape()
+    return sh, i
+
+
+def _split_top(s):
+    out, depth, cur = [], 0, ""
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+            cur += ch
+        elif ch in ")]}":
+            depth -= 1
+            cur += ch
+        elif ch == "," and depth == 0:
+            out.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur.strip())
+    return out
+
+
+def parse_module(text):
+    comps, entry, cur = {}, None, None
+    for raw in text.splitlines():
+        line = _strip_comments(raw).strip()
+        if not line or line.startswith("HloModule"):
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if line.endswith("{") and "=" not in line:
+            head = line[:-1].strip()
+            is_entry = head.startswith("ENTRY ")
+            head = head[6:].strip() if is_entry else head
+            name = re.split(r"[ (]", head, 1)[0].lstrip("%")
+            cur = {"name": name, "instrs": [], "index": {}, "root": None}
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        is_root = line.startswith("ROOT ")
+        body = line[5:] if is_root else line
+        name, rest = body.split(" = ", 1)
+        name = name.strip().lstrip("%")
+        shape, used = _parse_shape_prefix(rest)
+        rest = rest[used:].lstrip()
+        p = rest.find("(")
+        op = rest[:p].strip()
+        depth, hi = 0, None
+        for j, ch in enumerate(rest[p:], p):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    hi = j
+                    break
+        inside, tail = rest[p + 1 : hi], rest[hi + 1 :].lstrip()
+        if tail.startswith(","):
+            tail = tail[1:]
+        attrs = {}
+        for part in _split_top(tail):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                attrs[k.strip()] = v.strip()
+        instr = {
+            "name": name,
+            "shape": shape,
+            "op": op,
+            "operands": []
+            if op == "constant"
+            else [e.rsplit(None, 1)[-1].lstrip("%") for e in _split_top(inside) if e],
+            "attrs": attrs,
+            "const": inside if op == "constant" else None,
+        }
+        cur["index"][name] = len(cur["instrs"])
+        cur["instrs"].append(instr)
+        if is_root:
+            cur["root"] = len(cur["instrs"]) - 1
+    for c in comps.values():
+        if c["root"] is None:
+            c["root"] = len(c["instrs"]) - 1
+    return {"comps": comps, "entry": entry}
+
+
+# ---------------------------------------------------------------------------
+# evaluation (mirrors rust/vendor/xla/src/eval.rs)
+# ---------------------------------------------------------------------------
+
+def _dims_attr(ins, key):
+    v = ins["attrs"].get(key)
+    if v is None:
+        return []
+    inner = v.strip().lstrip("{").rstrip("}").strip()
+    return [int(t) for t in inner.split(",") if t.strip()]
+
+
+def _out_array(ins):
+    kind = ins["shape"]
+    assert kind[0] == "array", ins
+    return DTYPES[kind[1]], tuple(kind[2])
+
+
+def _const(ins):
+    dt, dims = _out_array(ins)
+    text = ins["const"].replace("{", " ").replace("}", " ")
+    toks = [t.strip() for t in text.split(",") if t.strip()]
+    if dt == np.bool_:
+        vals = [t in ("true", "1") for t in toks]
+    elif np.issubdtype(dt, np.floating):
+        vals = [float(t) for t in toks]
+    else:
+        vals = [int(t) for t in toks]
+    return np.array(vals, dtype=dt).reshape(dims)
+
+
+def _fast_combiner(comp):
+    root = comp["instrs"][comp["root"]]
+
+    def param_no(name):
+        ins = comp["instrs"][comp["index"][name]]
+        return int(ins["operands"][0]) if ins["op"] == "parameter" else None
+
+    if root["op"] == "parameter":
+        return {0: "first", 1: "second"}.get(int(root["operands"][0]))
+    if len(root["operands"]) == 2:
+        a, b = (param_no(o) for o in root["operands"])
+        if (a, b) == (0, 1) and root["op"] in ("add", "multiply", "maximum", "minimum", "or", "and"):
+            return root["op"]
+    return None
+
+
+class Interp:
+    def __init__(self, module):
+        self.m = module
+
+    def run(self, args):
+        return self._eval(self.m["comps"][self.m["entry"]], list(args))
+
+    def _eval(self, comp, args):
+        values = {}
+
+        def get(name):
+            if name not in values:
+                values[name] = self._instr(comp, comp["instrs"][comp["index"][name]], args, get)
+            return values[name]
+
+        root = comp["instrs"][comp["root"]]
+        return get(root["name"])
+
+    def _instr(self, comp, ins, args, get):
+        op = ins["op"]
+        A = ins["attrs"]
+        if op == "parameter":
+            return args[int(ins["operands"][0])]
+        if op == "constant":
+            return _const(ins)
+        ops = [get(o) for o in ins["operands"]]
+        if op == "tuple":
+            return tuple(ops)
+        if op == "get-tuple-element":
+            return ops[0][int(A["index"])]
+        if op == "call":
+            return self._eval(self.m["comps"][A["to_apply"].lstrip("%")], ops)
+        if op == "while":
+            cond = self.m["comps"][A["condition"].lstrip("%")]
+            body = self.m["comps"][A["body"].lstrip("%")]
+            state = ops[0]
+            while bool(np.asarray(self._eval(cond, [state]))):
+                state = self._eval(body, [state])
+            return state
+        if op == "broadcast":
+            dt, dims = _out_array(ins)
+            mapping = _dims_attr(ins, "dimensions")
+            shape = [1] * len(dims)
+            for k, od in enumerate(mapping):
+                shape[od] = ops[0].shape[k]
+            return np.broadcast_to(ops[0].reshape(shape), dims).copy()
+        if op == "reshape":
+            _, dims = _out_array(ins)
+            return ops[0].reshape(dims)
+        if op == "transpose":
+            return np.transpose(ops[0], _dims_attr(ins, "dimensions"))
+        if op == "convert":
+            dt, _ = _out_array(ins)
+            return ops[0].astype(dt)
+        if op == "iota":
+            dt, dims = _out_array(ins)
+            d = int(A["iota_dimension"])
+            shape = [1] * len(dims)
+            shape[d] = dims[d]
+            return np.broadcast_to(
+                np.arange(dims[d], dtype=dt).reshape(shape), dims
+            ).copy()
+        if op == "slice":
+            spec = []
+            for part in re.findall(r"\[([^\]]*)\]", A["slice"]):
+                nums = [int(x) for x in part.split(":")]
+                lo, hi = nums[0], nums[1]
+                st = nums[2] if len(nums) > 2 else 1
+                spec.append(slice(lo, hi, st))
+            return ops[0][tuple(spec)]
+        if op == "dynamic-slice":
+            t = ops[0]
+            sizes = _dims_attr(ins, "dynamic_slice_sizes") or list(_out_array(ins)[1])
+            starts = [
+                int(np.clip(int(np.asarray(s)), 0, t.shape[d] - sizes[d]))
+                for d, s in enumerate(ops[1:])
+            ]
+            return t[tuple(slice(st, st + sz) for st, sz in zip(starts, sizes))].copy()
+        if op == "dynamic-update-slice":
+            t, u = ops[0].copy(), ops[1]
+            starts = [
+                int(np.clip(int(np.asarray(s)), 0, t.shape[d] - u.shape[d]))
+                for d, s in enumerate(ops[2:])
+            ]
+            t[tuple(slice(st, st + sz) for st, sz in zip(starts, u.shape))] = u
+            return t
+        if op == "concatenate":
+            return np.concatenate(ops, axis=_dims_attr(ins, "dimensions")[0])
+        if op == "compare":
+            d = A["direction"]
+            x, y = ops
+            return {
+                "EQ": x == y,
+                "NE": x != y,
+                "LT": x < y,
+                "LE": x <= y,
+                "GT": x > y,
+                "GE": x >= y,
+            }[d]
+        if op == "select":
+            return np.where(ops[0], ops[1], ops[2]).astype(ops[1].dtype)
+        if op == "reduce":
+            return self._reduce(ins, ops)
+        if op == "gather":
+            return self._gather(ins, ops[0], ops[1])
+        if op == "scatter":
+            return self._scatter(ins, ops)
+        if op in ("add", "subtract", "multiply", "divide", "maximum", "minimum",
+                  "remainder", "power", "and", "or", "xor", "shift-left",
+                  "shift-right-logical", "shift-right-arithmetic"):
+            x, y = ops
+            if op == "add":
+                return x + y
+            if op == "subtract":
+                return x - y
+            if op == "multiply":
+                return x * y
+            if op == "divide":
+                return x / y if np.issubdtype(x.dtype, np.floating) else x // y
+            if op == "maximum":
+                return np.maximum(x, y)
+            if op == "minimum":
+                return np.minimum(x, y)
+            if op == "remainder":
+                return np.remainder(x, y)
+            if op == "power":
+                return np.power(x, y)
+            if op == "and":
+                return x & y
+            if op == "or":
+                return x | y
+            if op == "xor":
+                return x ^ y
+            bits = x.dtype.itemsize * 8
+            s = y.astype(np.uint64)
+            big = s >= bits
+            s = np.where(big, 0, s).astype(x.dtype)
+            if op == "shift-left":
+                return np.where(big, 0, x << s).astype(x.dtype)
+            if op == "shift-right-logical":
+                ux = x.astype(np.uint64) & ((1 << bits) - 1)
+                return np.where(big, 0, ux >> s.astype(np.uint64)).astype(x.dtype)
+            return x >> s  # arithmetic
+        if op in ("abs", "negate", "sine", "cosine", "tanh", "exponential", "log",
+                  "sqrt", "rsqrt", "floor", "ceil", "sign", "not", "logistic", "copy"):
+            x = ops[0]
+            return {
+                "abs": lambda: np.abs(x),
+                "negate": lambda: -x,
+                "sine": lambda: np.sin(x),
+                "cosine": lambda: np.cos(x),
+                "tanh": lambda: np.tanh(x),
+                "exponential": lambda: np.exp(x),
+                "log": lambda: np.log(x),
+                "sqrt": lambda: np.sqrt(x),
+                "rsqrt": lambda: 1.0 / np.sqrt(x),
+                "floor": lambda: np.floor(x),
+                "ceil": lambda: np.ceil(x),
+                "sign": lambda: np.sign(x),
+                "not": lambda: ~x,
+                "logistic": lambda: 1.0 / (1.0 + np.exp(-x)),
+                "copy": lambda: x.copy(),
+            }[op]()
+        raise NotImplementedError(op)
+
+    def _reduce(self, ins, ops):
+        k = len(ops) // 2
+        inputs, inits = ops[:k], ops[k:]
+        red_dims = _dims_attr(ins, "dimensions")
+        region = self.m["comps"][ins["attrs"]["to_apply"].lstrip("%")]
+        fast = _fast_combiner(region) if k == 1 else None
+        axes = tuple(red_dims)
+        if fast in ("add", "multiply", "maximum", "minimum"):
+            x = inputs[0]
+            if fast == "add" and x.dtype == np.float32:
+                # mirror the rust interpreter: f32 sums accumulate in f64
+                out = np.add.reduce(x.astype(np.float64), axis=axes) if x.size else 0.0
+                return (out + np.float64(inits[0][()])).astype(np.float32)
+            ufunc = {"add": np.add, "multiply": np.multiply,
+                     "maximum": np.maximum, "minimum": np.minimum}[fast]
+            out = ufunc.reduce(x, axis=axes) if x.size else None
+            if out is None:
+                out = np.full([d for i, d in enumerate(x.shape) if i not in axes],
+                              inits[0][()], x.dtype)
+            init = inits[0][()]
+            return ufunc(out, init).astype(x.dtype)
+        # generic element-at-a-time fold (rust's path), row-major order
+        in_shape = inputs[0].shape
+        kept = [d for d in range(len(in_shape)) if d not in red_dims]
+        out_shape = tuple(in_shape[d] for d in kept)
+        accs = [np.full(out_shape, init[()], dtype=init.dtype) for init in inits]
+        for idx in np.ndindex(*in_shape):
+            out_idx = tuple(idx[d] for d in kept)
+            cargs = [np.array(a[out_idx]) for a in accs] + [
+                np.array(t[idx]) for t in inputs
+            ]
+            res = self._eval(region, cargs)
+            parts = res if isinstance(res, tuple) else (res,)
+            for a, p in zip(accs, parts):
+                a[out_idx] = p
+        return accs[0] if k == 1 else tuple(accs)
+
+    def _gather(self, ins, operand, indices):
+        _, out_dims = _out_array(ins)
+        offset_dims = _dims_attr(ins, "offset_dims")
+        collapsed = _dims_attr(ins, "collapsed_slice_dims")
+        start_map = _dims_attr(ins, "start_index_map")
+        ivd = int(ins["attrs"]["index_vector_dim"])
+        slice_sizes = _dims_attr(ins, "slice_sizes")
+        batch_dims = [d for d in range(len(out_dims)) if d not in offset_dims]
+        kept_op_dims = [d for d in range(operand.ndim) if d not in collapsed]
+        out = np.zeros(out_dims, dtype=operand.dtype)
+        for idx in np.ndindex(*out_dims):
+            batch = [idx[d] for d in batch_dims]
+            starts = []
+            for comp in range(len(start_map)):
+                s_idx, b = [], 0
+                for d in range(indices.ndim):
+                    if d == ivd:
+                        s_idx.append(comp)
+                    else:
+                        s_idx.append(batch[b])
+                        b += 1
+                starts.append(int(indices[tuple(s_idx)]))
+            full = [0] * operand.ndim
+            for kk, d in enumerate(start_map):
+                full[d] = int(np.clip(starts[kk], 0, max(0, operand.shape[d] - slice_sizes[d])))
+            src = [0] * operand.ndim
+            for pos, d in enumerate(kept_op_dims):
+                src[d] = full[d] + idx[offset_dims[pos]]
+            for d in collapsed:
+                src[d] = full[d]
+            out[idx] = operand[tuple(src)]
+        return out
+
+    def _scatter(self, ins, ops):
+        operand, indices, updates = ops
+        uwd = _dims_attr(ins, "update_window_dims")
+        inserted = _dims_attr(ins, "inserted_window_dims")
+        to_op = _dims_attr(ins, "scatter_dims_to_operand_dims")
+        ivd = int(ins["attrs"]["index_vector_dim"])
+        region = self.m["comps"][ins["attrs"]["to_apply"].lstrip("%")]
+        fast = _fast_combiner(region)
+        window_op_dims = [d for d in range(operand.ndim) if d not in inserted]
+        scatter_dims = [d for d in range(updates.ndim) if d not in uwd]
+        out = operand.copy()
+        for idx in np.ndindex(*updates.shape):
+            batch = [idx[d] for d in scatter_dims]
+            starts = []
+            for comp in range(len(to_op)):
+                s_idx, b = [], 0
+                for d in range(indices.ndim):
+                    if d == ivd:
+                        s_idx.append(comp)
+                    else:
+                        s_idx.append(batch[b])
+                        b += 1
+                starts.append(int(indices[tuple(s_idx)]))
+            full = [0] * operand.ndim
+            for kk, d in enumerate(to_op):
+                full[d] = starts[kk]
+            tgt, oob = [0] * operand.ndim, False
+            for d in range(operand.ndim):
+                if d in window_op_dims:
+                    pos = window_op_dims.index(d)
+                    coord = full[d] + idx[uwd[pos]]
+                else:
+                    coord = full[d]
+                if coord < 0 or coord >= operand.shape[d]:
+                    oob = True
+                    break
+                tgt[d] = coord
+            if oob:
+                continue
+            tgt = tuple(tgt)
+            if fast == "add":
+                out[tgt] += updates[idx]
+            elif fast == "second":
+                out[tgt] = updates[idx]
+            elif fast == "first":
+                pass
+            else:
+                out[tgt] = self._eval(region, [np.array(out[tgt]), np.array(updates[idx])])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# driver: every plan entry, HLO-interp vs jax
+# ---------------------------------------------------------------------------
+
+def main():
+    import jax
+
+    from . import aot, model  # noqa: F401  (model used through aot.plan)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.0001)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(20130731)
+    failures = 0
+    checked = 0
+    for name, fn, specs, _meta in aot.plan(args.scale):
+        if args.only and name not in args.only.split(","):
+            continue
+        checked += 1
+        lowered = jax.jit(fn).lower(*specs)
+        module = parse_module(aot.to_hlo_text(lowered))
+        inputs = []
+        for s in specs:
+            if np.issubdtype(s.dtype, np.floating):
+                inputs.append(rng.standard_normal(s.shape).astype(s.dtype))
+            elif s.dtype == np.uint32:
+                inputs.append(rng.integers(0, 0x10000, s.shape).astype(s.dtype))
+            else:
+                inputs.append(rng.integers(0, 4, s.shape).astype(s.dtype))
+        want = [np.asarray(o) for o in jax.jit(fn)(*inputs)]
+        got = Interp(module).run([np.asarray(i) for i in inputs])
+        got = list(got) if isinstance(got, tuple) else [got]
+        ok = len(got) == len(want)
+        if ok:
+            for g, w in zip(got, want):
+                if np.issubdtype(w.dtype, np.floating):
+                    # tolerances match the repo's device tests: the
+                    # interpreter's f64-accumulated sums legitimately
+                    # differ from XLA's f32 sum order on cancelling series
+                    ok = ok and np.allclose(g, w, rtol=2e-3, atol=5e-3)
+                else:
+                    ok = ok and bool(np.array_equal(g, w))
+        print(f"{'PASS' if ok else 'FAIL'} {name}", file=sys.stderr)
+        failures += 0 if ok else 1
+    if failures:
+        sys.exit(f"{failures} artifact programs diverged")
+    if not checked:
+        sys.exit(f"--only '{args.only}' matched no artifact program")
+    print(f"all {checked} checked artifact programs match jax", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Offline fallback for the `hypothesis` API subset these tests use.
+
+The container has no package index, so when the real hypothesis is not
+installed, ``conftest.py`` puts this directory on ``sys.path`` and the
+test suite runs against this deterministic mini-implementation:
+
+* ``strategies.integers(min_value, max_value)`` / positional form
+* ``strategies.sampled_from(seq)``
+* ``@given(**kwargs)`` — runs the test ``max_examples`` times over a
+  seeded PRNG sweep (always including the strategy's boundary values on
+  the first examples), reporting the failing example like hypothesis does
+* ``settings.register_profile`` / ``settings.load_profile`` — honors
+  ``max_examples``
+
+If the real hypothesis is installed it is always preferred (this package
+never shadows it; see conftest).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__version__ = "0.0-somd-offline-fallback"
+
+_PROFILES: dict[str, dict] = {}
+_ACTIVE: dict = {"max_examples": 25, "deadline": None}
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' lowercase class name
+    def __init__(self, **kwargs):
+        self.kwargs = kwargs
+
+    def __call__(self, fn):
+        # used as a decorator: stash the overrides on the function
+        overrides = dict(getattr(fn, "_somd_settings", {}))
+        overrides.update(self.kwargs)
+        fn._somd_settings = overrides
+        return fn
+
+    @staticmethod
+    def register_profile(name, **kwargs):
+        _PROFILES[name] = kwargs
+
+    @staticmethod
+    def load_profile(name):
+        _ACTIVE.update(_PROFILES.get(name, {}))
+
+
+class SearchStrategy:
+    """A strategy = boundary examples + a random generator."""
+
+    def __init__(self, boundary, draw):
+        self.boundary = list(boundary)
+        self.draw = draw
+
+
+class strategies:  # noqa: N801 — accessed as `strategies as st`
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = 0 if min_value is None else int(min_value)
+        hi = (1 << 32) if max_value is None else int(max_value)
+        if hi < lo:
+            lo, hi = hi, lo
+        boundary = [lo, hi] if hi != lo else [lo]
+        return SearchStrategy(boundary, lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        if not seq:
+            raise ValueError("sampled_from of empty sequence")
+        return SearchStrategy(seq[:1], lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy([False, True], lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored):
+        lo, hi = float(min_value), float(max_value)
+        return SearchStrategy([lo, hi], lambda rng: rng.uniform(lo, hi))
+
+
+def given(*args, **strategy_kwargs):
+    if args:
+        raise TypeError(
+            "the offline hypothesis fallback supports keyword strategies only"
+        )
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*wargs, **wkwargs):
+            overrides = getattr(fn, "_somd_settings", {})
+            max_examples = int(
+                overrides.get("max_examples", _ACTIVE.get("max_examples", 25))
+            )
+            # deterministic per-test seed: crc32 is stable across runs,
+            # machines and PYTHONHASHSEED (builtin hash() is salted)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            names = sorted(strategy_kwargs)
+            for example_no in range(max_examples):
+                if example_no == 0:
+                    # every param at its first boundary (all-min)
+                    drawn = {n: strategy_kwargs[n].boundary[0] for n in names}
+                elif example_no == 1 and max_examples > 1:
+                    # every param at its last boundary (all-max)
+                    drawn = {n: strategy_kwargs[n].boundary[-1] for n in names}
+                else:
+                    drawn = {n: strategy_kwargs[n].draw(rng) for n in names}
+                try:
+                    fn(*wargs, **drawn, **wkwargs)
+                except Exception:
+                    print(
+                        f"Falsifying example (offline hypothesis fallback): "
+                        f"{fn.__qualname__}({drawn!r})"
+                    )
+                    raise
+            return None
+
+        # mirror the real attribute shape: plugins (e.g. anyio) reach for
+        # `fn.hypothesis.inner_test`
+        class _Meta:
+            inner_test = fn
+
+        wrapper.hypothesis = _Meta()
+        # pytest must not mistake the drawn arguments for fixtures: hide
+        # the wrapped signature (real hypothesis does the same), keeping
+        # only parameters the strategies do not provide (e.g. fixtures)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        fixture_params = [
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategy_kwargs
+        ]
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        return wrapper
+
+    return deco
+
+
+def assume(condition):
+    """Best-effort `assume`: silently accepts (no example rejection)."""
+    return bool(condition)

@@ -6,7 +6,11 @@ import pytest
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from hypothesis import settings
+try:  # prefer the real hypothesis when the environment has it
+    from hypothesis import settings
+except ModuleNotFoundError:  # offline container: use the vendored fallback
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "_vendor"))
+    from hypothesis import settings
 
 settings.register_profile("somd", max_examples=25, deadline=None)
 settings.load_profile("somd")

@@ -1,0 +1,32 @@
+//! Auto-scheduler report: for each offloadable benchmark workload, feed
+//! the engine's execution-history cost model one real observation per
+//! side (measured SMP wall time; modeled device time from a session run
+//! of the AOT artifacts) and print which target `Target::Auto` resolves
+//! to.  This automates the paper's §7.3 CPU-vs-GPU comparison into a
+//! runtime policy: transfer-heavy Crypt steers to SMP, compute-dense
+//! Series to the device profile.
+//!
+//! `cargo bench --bench auto_schedule [-- --scale S --reps N --class A --profile fermi]`
+
+use somd::bench_suite::{harness, Class};
+use somd::device::DeviceProfile;
+use somd::runtime::Registry;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let reg = Registry::load_default().expect("run `make artifacts` first");
+    let scale = args.opt_f64("scale", reg.scale);
+    let reps = args.opt_usize("reps", 3);
+    let profile = DeviceProfile::by_name(args.opt("profile").unwrap_or("fermi"))
+        .expect("--profile fermi|geforce320m|passthrough");
+    let classes: Vec<Class> = match args.opt("class") {
+        None => vec![Class::A],
+        Some("all") => Class::all().to_vec(),
+        Some(c) => vec![Class::parse(c).expect("--class A|B|C|all")],
+    };
+    for class in classes {
+        harness::print_auto(class, scale, reps, &reg, profile.clone()).expect("auto report");
+        println!();
+    }
+}

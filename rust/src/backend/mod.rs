@@ -2,6 +2,14 @@
 //! source, several compiled versions; the runtime picks per the user's
 //! `method:target` rules and falls back to shared memory when a
 //! preference is inapplicable on the available hardware.
+//!
+//! Beyond the paper's static rules, `method:auto` defers the choice to
+//! the engine's [`Scheduler`](crate::somd::scheduler::Scheduler): every
+//! invocation through this module feeds its observed SMP wall time or
+//! device stats back into the per-method execution history, so `auto`
+//! converges on whichever architecture actually runs the method fastest.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -13,7 +21,11 @@ use crate::somd::Target;
 
 /// A device-side implementation of a SOMD method (the master code of
 /// Algorithm 2, driving kernels through a [`DeviceSession`]).
-pub type DeviceFn<I, R> = Box<dyn Fn(&mut DeviceSession<'_>, &I) -> Result<R>>;
+///
+/// `Send + Sync` so a [`HeteroMethod`] can be shared with the engine's
+/// device master thread; the *session* handed in at call time is still
+/// thread-confined.
+pub type DeviceFn<I, R> = Box<dyn Fn(&mut DeviceSession<'_>, &I) -> Result<R> + Send + Sync>;
 
 /// The compiled versions of one SOMD method.
 pub struct HeteroMethod<I: ?Sized, P, E, R> {
@@ -48,24 +60,19 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
     /// Resolve the target for this method (§6): user rules first, then
     /// applicability (device version compiled? profile known? registry
     /// loaded?) — inapplicable preferences revert to the default.
+    /// `auto` consults the engine's execution-history cost model.
+    /// Delegates to [`Engine::resolve_target`] so the sync and async
+    /// entry points can never drift apart.
     pub fn resolve(&self, engine: &Engine, registry: Option<&Registry>) -> Target {
-        match engine.target_for(self.smp.name()) {
-            Target::Device(name) => {
-                let applicable = self.device.is_some()
-                    && registry.is_some()
-                    && DeviceProfile::by_name(&name).is_some();
-                if applicable {
-                    Target::Device(name)
-                } else {
-                    Target::Smp
-                }
-            }
-            t => t,
-        }
+        engine.resolve_target(self.smp.name(), &|profile: &str| {
+            self.device.is_some()
+                && registry.is_some()
+                && DeviceProfile::by_name(profile).is_some()
+        })
     }
 
     /// Invoke through the engine, honoring the rules; returns the result
-    /// and where it ran.
+    /// and where it ran.  Observed timings feed the scheduler history.
     pub fn invoke(
         &self,
         engine: &Engine,
@@ -73,23 +80,47 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
         input: &I,
     ) -> Result<(R, Executed)> {
         match self.resolve(engine, registry) {
-            Target::Smp => {
-                let r = engine.invoke(&self.smp, input);
+            Target::Smp | Target::Auto => {
+                let t0 = Instant::now();
+                let r = self.smp.invoke(input, engine.workers());
+                engine.scheduler().record_smp(self.smp.name(), t0.elapsed());
                 Ok((r, Executed::Smp { partitions: engine.workers() }))
             }
             Target::Device(name) => {
                 let profile = DeviceProfile::by_name(&name).expect("resolved profile");
                 let reg = registry.expect("resolved registry");
                 let mut session = DeviceSession::new(reg, profile);
-                let dev = self.device.as_ref().expect("resolved device fn");
-                let r = dev(&mut session, input)?;
+                let r = match self.invoke_on_session(&mut session, input) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // feed the failure to the cost model so `auto`
+                        // steers back to SMP instead of retrying forever
+                        engine.scheduler().record_device_failure(self.smp.name());
+                        return Err(e);
+                    }
+                };
                 let stats = session.stats();
+                engine.scheduler().record_device(self.smp.name(), &stats);
                 Ok((
                     r,
                     Executed::Device { profile: session.profile().name, stats },
                 ))
             }
         }
+    }
+
+    /// Run the compiled device version on an existing (possibly warm)
+    /// session — the engine's device master lane enters here.
+    pub fn invoke_on_session(
+        &self,
+        session: &mut DeviceSession<'_>,
+        input: &I,
+    ) -> Result<R> {
+        let dev = self
+            .device
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("method '{}' has no device version", self.name()))?;
+        dev(session, input)
     }
 
     /// Force execution on a given device profile regardless of rules
@@ -100,12 +131,8 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
         profile: DeviceProfile,
         input: &I,
     ) -> Result<(R, DeviceStats)> {
-        let dev = self
-            .device
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("method '{}' has no device version", self.name()))?;
         let mut session = DeviceSession::new(registry, profile);
-        let r = dev(&mut session, input)?;
+        let r = self.invoke_on_session(&mut session, input)?;
         let stats = session.stats();
         Ok((r, stats))
     }
@@ -115,7 +142,9 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
 mod tests {
     use super::*;
     use crate::somd::partition::Block1D;
+    use crate::somd::scheduler::Choice;
     use crate::somd::{reduction, Rules};
+    use std::time::Duration;
 
     fn method() -> HeteroMethod<Vec<i64>, crate::somd::partition::BlockPart, (), i64> {
         HeteroMethod::smp_only(SomdMethod::new(
@@ -154,5 +183,39 @@ mod tests {
         let e = Engine::with_rules(2, rules);
         let m = method();
         assert_eq!(m.resolve(&e, None), Target::Smp);
+    }
+
+    #[test]
+    fn auto_without_device_version_falls_back_to_smp() {
+        let mut rules = Rules::empty();
+        rules.set("Sum.sum", Target::Auto);
+        let e = Engine::with_rules(2, rules);
+        let m = method(); // no device version compiled
+        assert_eq!(m.resolve(&e, None), Target::Smp);
+        let (r, how) = m.invoke(&e, None, &vec![2, 3]).unwrap();
+        assert_eq!(r, 5);
+        assert!(matches!(how, Executed::Smp { .. }));
+    }
+
+    #[test]
+    fn invocations_record_history() {
+        let e = Engine::new(2);
+        let m = method();
+        m.invoke(&e, None, &vec![1, 2, 3]).unwrap();
+        m.invoke(&e, None, &vec![4, 5, 6]).unwrap();
+        let h = e.scheduler().history("Sum.sum").expect("history");
+        assert_eq!(h.smp_runs, 2);
+        assert!(h.smp_secs.iter().all(|&s| s >= 0.0));
+        assert_eq!(h.device_runs, 0);
+        // seeded device history steers a later auto decision
+        e.scheduler().record_device(
+            "Sum.sum",
+            &DeviceStats { device_time: Duration::from_secs(5), ..Default::default() },
+        );
+        e.scheduler().record_device(
+            "Sum.sum",
+            &DeviceStats { device_time: Duration::from_secs(5), ..Default::default() },
+        );
+        assert_eq!(e.scheduler().decide("Sum.sum"), Choice::Smp);
     }
 }

@@ -190,18 +190,16 @@ pub struct Fig11Row {
     pub geforce: f64,
 }
 
-pub fn fig11_rows(
+/// Workload sizes matching the AOT artifact set: the device artifacts are
+/// compiled at fixed (manifest) sizes, and the CPU side must be measured
+/// at the SAME sizes for a fair comparison, so device-facing reports
+/// derive their workload from the registry metadata, not from the CLI
+/// scale (which only picks the Series coefficient count).
+pub fn sizes_from_registry(
     class: Class,
     scale: f64,
-    reps: usize,
-    o: &Overheads,
     registry: &crate::runtime::Registry,
-) -> anyhow::Result<Vec<Fig11Row>> {
-    use crate::device::{DeviceProfile, DeviceSession};
-    // The device artifacts are compiled at fixed (manifest) sizes; the CPU
-    // side must be measured at the SAME sizes for a fair comparison, so
-    // fig11 derives its workload from the registry metadata, not from the
-    // CLI scale (which only picks the Series coefficient count).
+) -> Sizes {
     let mut s = Sizes::scaled(class, scale);
     let cls = class.name();
     if let Some(b) = registry.info(&format!("crypt_{cls}")).ok().and_then(|i| i.meta_usize("blocks"))
@@ -216,6 +214,18 @@ pub fn fig11_rows(
     {
         s.sparse_n = n;
     }
+    s
+}
+
+pub fn fig11_rows(
+    class: Class,
+    scale: f64,
+    reps: usize,
+    o: &Overheads,
+    registry: &crate::runtime::Registry,
+) -> anyhow::Result<Vec<Fig11Row>> {
+    use crate::device::{DeviceProfile, DeviceSession};
+    let s = sizes_from_registry(class, scale, registry);
     let mut rows = Vec::new();
     for bench in ["Crypt", "Series", "SOR", "SparseMatMult"] {
         let t_seq = sequential_time(bench, &s, reps);
@@ -282,6 +292,111 @@ pub fn print_fig11(
         );
     }
     println!("(LUFact omitted on GPU, as in the paper §7.3)");
+    Ok(())
+}
+
+/// One row of the Auto-schedule report: what the history cost model
+/// recorded and which target `Target::Auto` therefore picks.
+#[derive(Debug, Clone)]
+pub struct AutoRow {
+    pub bench: &'static str,
+    /// Observed SMP wall seconds (trailing mean).
+    pub smp_secs: f64,
+    /// Modeled device seconds (trailing mean).
+    pub device_secs: f64,
+    /// Bus traffic per device run, bytes.
+    pub transfer_bytes: f64,
+    /// The resolved choice for the next invocation.
+    pub chosen: crate::somd::Choice,
+}
+
+/// Drive the scheduler with one real observation per side per benchmark
+/// (measured SMP wall time; modeled device time from a session run) and
+/// report the decision `Target::Auto` would take.  This is the §7.3
+/// CPU-vs-GPU comparison, automated into a runtime policy.
+pub fn auto_rows(
+    class: Class,
+    scale: f64,
+    reps: usize,
+    registry: &crate::runtime::Registry,
+    profile: crate::device::DeviceProfile,
+) -> anyhow::Result<Vec<AutoRow>> {
+    use crate::device::DeviceSession;
+    use crate::somd::{Scheduler, SchedulerConfig};
+    let s = sizes_from_registry(class, scale, registry);
+    let sched = Scheduler::new(SchedulerConfig { min_samples: 1, ..Default::default() });
+    let mut rows = Vec::new();
+    for bench in ["Crypt", "Series", "SOR", "SparseMatMult"] {
+        let t_smp = sequential_time(bench, &s, reps);
+        sched.record_smp(bench, t_smp);
+        let mut sess = DeviceSession::new(registry, profile.clone());
+        match bench {
+            "Crypt" => {
+                let p = crypt::Problem::generate(s.crypt_bytes, SEED);
+                super::gpu::crypt_run(&mut sess, &p)?;
+            }
+            "Series" => {
+                super::gpu::series_run(&mut sess, s.series_n)?;
+            }
+            "SOR" => {
+                let g0: Vec<f32> =
+                    sor::generate(s.sor_n, SEED).iter().map(|&v| v as f32).collect();
+                super::gpu::sor_run(&mut sess, &g0, s.sor_n, SOR_ITERATIONS)?;
+            }
+            "SparseMatMult" => {
+                let p = sparse::Problem::generate(
+                    s.sparse_n,
+                    s.sparse_nnz(),
+                    SPMV_ITERATIONS,
+                    SEED,
+                );
+                super::gpu::spmv_run(&mut sess, &p)?;
+            }
+            _ => unreachable!(),
+        }
+        sched.record_device(bench, &sess.stats());
+        let h = sched.history(bench).expect("history just recorded");
+        rows.push(AutoRow {
+            bench,
+            smp_secs: h.smp_estimate().unwrap_or(0.0),
+            device_secs: h.device_estimate().unwrap_or(0.0),
+            transfer_bytes: h.transfer_bytes_per_run(),
+            chosen: sched.decide(bench),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_auto(
+    class: Class,
+    scale: f64,
+    reps: usize,
+    registry: &crate::runtime::Registry,
+    profile: crate::device::DeviceProfile,
+) -> anyhow::Result<()> {
+    println!(
+        "== Auto schedule: history-driven target per workload (class {}, profile {}, scale {scale}) ==",
+        class.name(),
+        profile.name
+    );
+    println!(
+        "{:<15} {:>12} {:>14} {:>14} {:>10}",
+        "Benchmark", "SMP (s)", "Device (s)", "Transfer (MB)", "Auto"
+    );
+    for row in auto_rows(class, scale, reps, registry, profile)? {
+        println!(
+            "{:<15} {:>12.4} {:>14.4} {:>14.2} {:>10}",
+            row.bench,
+            row.smp_secs,
+            row.device_secs,
+            row.transfer_bytes / 1e6,
+            match row.chosen {
+                crate::somd::Choice::Smp => "smp",
+                crate::somd::Choice::Device => "device",
+            }
+        );
+    }
+    println!("(device seconds are modeled: scaled compute + transfers + launch overheads)");
     Ok(())
 }
 

@@ -47,6 +47,34 @@ impl DeviceStats {
             self.idle_thread_fraction_sum / self.launches as f64
         }
     }
+
+    /// Total bytes moved across the (modeled) bus, both directions.
+    pub fn total_transfer_bytes(&self) -> usize {
+        self.bytes_h2d + self.bytes_d2h
+    }
+
+    /// The accounting accumulated since `earlier` — the per-job slice a
+    /// warm (reused) session hands to the scheduler history.
+    pub fn delta_since(&self, earlier: &DeviceStats) -> DeviceStats {
+        DeviceStats {
+            launches: self.launches.saturating_sub(earlier.launches),
+            h2d_transfers: self.h2d_transfers.saturating_sub(earlier.h2d_transfers),
+            d2h_transfers: self.d2h_transfers.saturating_sub(earlier.d2h_transfers),
+            bytes_h2d: self.bytes_h2d.saturating_sub(earlier.bytes_h2d),
+            bytes_d2h: self.bytes_d2h.saturating_sub(earlier.bytes_d2h),
+            wall_compute: self.wall_compute.saturating_sub(earlier.wall_compute),
+            device_time: self.device_time.saturating_sub(earlier.device_time),
+            // residency peaks are session-lifetime quantities; the delta
+            // keeps the later snapshot's view
+            peak_resident_bytes: self.peak_resident_bytes,
+            total_threads_launched: self
+                .total_threads_launched
+                .saturating_sub(earlier.total_threads_launched),
+            idle_thread_fraction_sum: (self.idle_thread_fraction_sum
+                - earlier.idle_thread_fraction_sum)
+                .max(0.0),
+        }
+    }
 }
 
 pub struct DeviceSession<'r> {
@@ -220,6 +248,24 @@ mod tests {
         let out = s.get(d).unwrap();
         assert!(out.as_f32().unwrap().iter().all(|&v| v == 4.0));
         assert_eq!(s.stats().d2h_transfers, 1);
+    }
+
+    #[test]
+    fn stats_delta_isolates_one_job() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        let n = r.info("vecadd").unwrap().inputs[0].elems();
+        let a = HostTensor::vec_f32(vec![1.0; n]);
+        let b = HostTensor::vec_f32(vec![2.0; n]);
+        s.launch_to_host("vecadd", &[Arg::Host(&a), Arg::Host(&b)], n).unwrap();
+        let before = s.stats();
+        s.launch_to_host("vecadd", &[Arg::Host(&a), Arg::Host(&b)], n).unwrap();
+        let delta = s.stats().delta_since(&before);
+        assert_eq!(delta.launches, 1);
+        assert_eq!(delta.h2d_transfers, 2);
+        assert_eq!(delta.bytes_h2d, 2 * 4 * n);
+        assert!(delta.device_time > Duration::ZERO);
+        assert_eq!(delta.total_transfer_bytes(), delta.bytes_h2d + delta.bytes_d2h);
     }
 
     #[test]

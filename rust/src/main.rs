@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! somd info
-//! somd bench <table1|table2|fig10|fig11> [--class A|B|C|all] [--scale S] [--reps N]
+//! somd bench <table1|table2|fig10|fig11|auto> [--class A|B|C|all] [--scale S] [--reps N]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
 //!          [--class A|B|C] [--scale S] [--partitions N]
 //!          [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]
@@ -39,7 +39,7 @@ fn dispatch(args: &Args) -> Result<()> {
         _ => {
             eprintln!(
                 "usage: somd <info|bench|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto> [--class A|B|C|all] [--scale S] [--reps N]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
                  e2e:   somd e2e [--scale S]"
@@ -99,6 +99,14 @@ fn bench(args: &Args) -> Result<()> {
                 harness::print_fig11(class, scale, reps, &o, &reg)?;
             }
         }
+        "auto" => {
+            let reg = Registry::load_default()?;
+            let profile = DeviceProfile::by_name(args.opt("profile").unwrap_or("fermi"))
+                .ok_or_else(|| anyhow!("unknown device profile"))?;
+            for class in classes(args) {
+                harness::print_auto(class, scale, reps, &reg, profile.clone())?;
+            }
+        }
         other => bail!("unknown bench target '{other}'"),
     }
     Ok(())
@@ -133,6 +141,9 @@ fn run(args: &Args) -> Result<()> {
         )) {
             somd::somd::Target::Smp => "smp".into(),
             somd::somd::Target::Device(d) => d,
+            // no history exists in a one-shot CLI run; `auto` defaults to
+            // the scheduler's exploration start (SMP)
+            somd::somd::Target::Auto => "smp".into(),
         },
     };
     println!("somd run {bench} class={} scale={scale} backend={backend}", class.name());

@@ -26,7 +26,9 @@ impl Artifact {
         let path_str = path
             .to_str()
             .with_context(|| format!("non-utf8 artifact path {}", path.display()))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
+        // cached per thread: warm engine lanes re-open registries without
+        // re-parsing artifact text
+        let proto = xla::HloModuleProto::from_text_file_cached(path_str)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = with_client(|c| Ok(c.compile(&comp)?))

@@ -144,6 +144,13 @@ impl Registry {
             .collect()
     }
 
+    /// Number of executables compiled and cached so far (warm-session
+    /// observability: a reused registry keeps this monotone instead of
+    /// recompiling per call).
+    pub fn cached_artifacts(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
     /// Get (compiling on first use) the executable for `name`.
     pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
         if let Some(a) = self.cache.borrow().get(name) {

@@ -11,6 +11,10 @@ pub enum Target {
     Smp,
     /// Offload to a device profile (e.g. "fermi", "geforce320m").
     Device(String),
+    /// Let the runtime decide from recorded execution history (the
+    /// version-selection loop the paper leaves to the runtime — resolved
+    /// per invocation by [`crate::somd::scheduler::Scheduler`]).
+    Auto,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -36,6 +40,7 @@ impl Rules {
                 .ok_or_else(|| format!("line {}: expected 'method:target'", lineno + 1))?;
             let target = match target.trim() {
                 "smp" | "cpu" | "shared" => Target::Smp,
+                "auto" => Target::Auto,
                 dev if !dev.is_empty() => Target::Device(dev.to_string()),
                 _ => return Err(format!("line {}: empty target", lineno + 1)),
             };
@@ -81,5 +86,11 @@ mod tests {
     #[test]
     fn rejects_malformed() {
         assert!(Rules::parse("no-colon-here").is_err());
+    }
+
+    #[test]
+    fn parses_auto_target() {
+        let r = Rules::parse("Series.coefficients:auto\n").unwrap();
+        assert_eq!(r.target_for("Series.coefficients"), Target::Auto);
     }
 }

@@ -1,16 +1,181 @@
 //! The Elina-like runtime engine (paper §6): owns the worker pool, the
-//! version-selection rules and the invocation entry points.
+//! version-selection rules, the adaptive scheduler and the invocation
+//! entry points.
+//!
+//! Two execution lanes serve asynchronous submissions:
+//!
+//! * **SMP lane** — invocations compete for the [`WorkerPool`] exactly as
+//!   in the paper's runtime;
+//! * **device lane** — PJRT objects are `Rc`-confined, so all device work
+//!   funnels through one *device master* thread that owns the
+//!   [`Registry`] and a warm [`DeviceSession`] per profile.  Concurrent
+//!   submissions to the same profile reuse the warm session instead of
+//!   re-creating registry/session state per call (observable through
+//!   [`DeviceCounters`]).
+//!
+//! Rules resolve per method as `smp | device(<profile>) | auto`; `auto`
+//! defers to the [`Scheduler`]'s execution-history cost model.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use super::config::{Rules, Target};
 use super::master::SomdMethod;
 use super::pool::{JobHandle, WorkerPool};
+use super::scheduler::{Choice, Scheduler, SchedulerConfig};
+use crate::backend::{Executed, HeteroMethod};
+use crate::device::{DeviceProfile, DeviceSession};
+use crate::runtime::Registry;
+
+// ---------------------------------------------------------------------------
+// Device master thread
+// ---------------------------------------------------------------------------
+
+/// Warm-session accounting: evidence that concurrent device submissions
+/// batch their setup instead of paying it per call.
+#[derive(Debug, Default)]
+pub struct DeviceCounters {
+    sessions_created: AtomicUsize,
+    warm_hits: AtomicUsize,
+    jobs_run: AtomicUsize,
+}
+
+/// Point-in-time copy of [`DeviceCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceCountersSnapshot {
+    /// Sessions constructed on the master thread (cold setups).
+    pub sessions_created: usize,
+    /// Jobs that found their profile's session already warm.
+    pub warm_hits: usize,
+    /// Total device jobs executed.
+    pub jobs_run: usize,
+}
+
+impl DeviceCounters {
+    fn snapshot(&self) -> DeviceCountersSnapshot {
+        DeviceCountersSnapshot {
+            sessions_created: self.sessions_created.load(Ordering::SeqCst),
+            warm_hits: self.warm_hits.load(Ordering::SeqCst),
+            jobs_run: self.jobs_run.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// The master thread's execution context: the registry plus one warm
+/// session per device profile (both thread-confined).
+pub struct DeviceCtx<'r> {
+    registry: &'r Registry,
+    sessions: BTreeMap<String, DeviceSession<'r>>,
+    counters: Arc<DeviceCounters>,
+}
+
+impl<'r> DeviceCtx<'r> {
+    pub fn registry(&self) -> &'r Registry {
+        self.registry
+    }
+
+    /// The warm session for `profile`, created on first use.
+    pub fn session(&mut self, profile: &str) -> anyhow::Result<&mut DeviceSession<'r>> {
+        if self.sessions.contains_key(profile) {
+            self.counters.warm_hits.fetch_add(1, Ordering::SeqCst);
+        } else {
+            let p = DeviceProfile::by_name(profile)
+                .ok_or_else(|| anyhow::anyhow!("unknown device profile '{profile}'"))?;
+            self.sessions.insert(profile.to_string(), DeviceSession::new(self.registry, p));
+            self.counters.sessions_created.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(self.sessions.get_mut(profile).expect("session just ensured"))
+    }
+}
+
+type DeviceJob = Box<dyn for<'r> FnOnce(&mut DeviceCtx<'r>) + Send>;
+
+struct DeviceMaster {
+    tx: Option<mpsc::Sender<DeviceJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    counters: Arc<DeviceCounters>,
+}
+
+impl DeviceMaster {
+    fn spawn(dir: PathBuf) -> anyhow::Result<DeviceMaster> {
+        let counters = Arc::new(DeviceCounters::default());
+        let (tx, rx) = mpsc::channel::<DeviceJob>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let thread_counters = counters.clone();
+        let handle = std::thread::Builder::new()
+            .name("somd-device-master".into())
+            .spawn(move || master_loop(dir, rx, ready_tx, thread_counters))
+            .expect("spawn device master thread");
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(DeviceMaster { tx: Some(tx), handle: Some(handle), counters }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                Err(anyhow::anyhow!("device master failed to start: {e}"))
+            }
+            Err(_) => {
+                let _ = handle.join();
+                Err(anyhow::anyhow!("device master died during startup"))
+            }
+        }
+    }
+
+    fn submit(&self, job: DeviceJob) {
+        self.tx
+            .as_ref()
+            .expect("device master channel open")
+            .send(job)
+            .expect("device master thread alive");
+    }
+}
+
+impl Drop for DeviceMaster {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closing the channel ends the loop
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn master_loop(
+    dir: PathBuf,
+    rx: mpsc::Receiver<DeviceJob>,
+    ready: mpsc::Sender<Result<(), String>>,
+    counters: Arc<DeviceCounters>,
+) {
+    // the registry must be created on this thread (PJRT is Rc-confined)
+    let registry = match Registry::load(&dir) {
+        Ok(r) => {
+            let _ = ready.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let mut ctx = DeviceCtx { registry: &registry, sessions: BTreeMap::new(), counters };
+    while let Ok(job) = rx.recv() {
+        ctx.counters.jobs_run.fetch_add(1, Ordering::SeqCst);
+        // a panicking job must not take down the lane for queued peers
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&mut ctx)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
 
 pub struct Engine {
     workers: usize,
     rules: Rules,
     pool: WorkerPool,
+    scheduler: Arc<Scheduler>,
+    device: Option<DeviceMaster>,
+    auto_profile: String,
 }
 
 impl Engine {
@@ -22,13 +187,42 @@ impl Engine {
 
     pub fn with_rules(workers: usize, rules: Rules) -> Self {
         let workers = workers.max(1);
-        Self { workers, rules, pool: WorkerPool::new(workers) }
+        Self {
+            workers,
+            rules,
+            pool: WorkerPool::new(workers),
+            scheduler: Arc::new(Scheduler::new(SchedulerConfig::default())),
+            device: None,
+            auto_profile: "fermi".to_string(),
+        }
     }
 
     /// Default engine: one MI per available core.
     pub fn default_for_host() -> Self {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         Self::new(cores)
+    }
+
+    /// Attach the device lane: spawns the master thread, which loads the
+    /// artifact registry from `artifacts_dir` and keeps warm sessions.
+    /// `auto_profile` is the device profile `Target::Auto` resolves to.
+    pub fn with_device_master(
+        mut self,
+        artifacts_dir: impl Into<PathBuf>,
+        auto_profile: &str,
+    ) -> anyhow::Result<Self> {
+        if DeviceProfile::by_name(auto_profile).is_none() {
+            anyhow::bail!("unknown device profile '{auto_profile}'");
+        }
+        self.device = Some(DeviceMaster::spawn(artifacts_dir.into())?);
+        self.auto_profile = auto_profile.to_string();
+        Ok(self)
+    }
+
+    /// Replace the scheduler (e.g. restored from persisted JSON history).
+    pub fn with_scheduler(mut self, scheduler: Scheduler) -> Self {
+        self.scheduler = Arc::new(scheduler);
+        self
     }
 
     pub fn workers(&self) -> usize {
@@ -39,11 +233,68 @@ impl Engine {
         &self.rules
     }
 
+    /// The execution-history store driving `Target::Auto`.
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
+    /// Whether the device lane is up (master thread + registry loaded).
+    pub fn device_ready(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// The profile `Target::Auto` resolves to when the device side wins.
+    pub fn auto_profile(&self) -> &str {
+        &self.auto_profile
+    }
+
+    /// Warm-session counters of the device lane, if attached.
+    pub fn device_counters(&self) -> Option<DeviceCountersSnapshot> {
+        self.device.as_ref().map(|d| d.counters.snapshot())
+    }
+
     /// The architecture the rules select for `method` (§6); device targets
     /// are resolved by the caller against the available device profiles
     /// and revert to SMP when inapplicable.
     pub fn target_for(&self, method: &str) -> Target {
         self.rules.target_for(method)
+    }
+
+    /// The shared §6 + Auto resolution: rules first, then applicability,
+    /// then — for `auto` — the history cost model.  `applicable(profile)`
+    /// reports whether a device version could actually run on the named
+    /// profile in the *caller's* context (submission lane vs caller-held
+    /// registry) — the only part that differs between entry points.
+    pub fn resolve_target(&self, method: &str, applicable: &dyn Fn(&str) -> bool) -> Target {
+        match self.rules.target_for(method) {
+            Target::Device(name) => {
+                if applicable(&name) {
+                    Target::Device(name)
+                } else {
+                    Target::Smp
+                }
+            }
+            Target::Auto => {
+                if applicable(&self.auto_profile) {
+                    match self.scheduler.decide(method) {
+                        Choice::Device => Target::Device(self.auto_profile.clone()),
+                        Choice::Smp => Target::Smp,
+                    }
+                } else {
+                    Target::Smp
+                }
+            }
+            t => t,
+        }
+    }
+
+    /// Submission-time resolution against the engine's own device lane.
+    pub fn resolve_submit(&self, method: &str, has_device_version: bool) -> Target {
+        self.resolve_target(method, &|profile: &str| {
+            has_device_version
+                && self.device.is_some()
+                && DeviceProfile::by_name(profile).is_some()
+        })
     }
 
     /// Synchronous SOMD invocation with the engine's default MI count.
@@ -54,7 +305,10 @@ impl Engine {
         E: Sync,
         R: Send,
     {
-        method.invoke(input, self.workers)
+        let t0 = Instant::now();
+        let r = method.invoke(input, self.workers);
+        self.scheduler.record_smp(method.name(), t0.elapsed());
+        r
     }
 
     /// Synchronous invocation with an explicit MI count.
@@ -76,8 +330,87 @@ impl Engine {
         R: Send + 'static,
     {
         let n = self.workers;
-        self.pool.submit(move || method.invoke(&input, n))
+        let sched = self.scheduler.clone();
+        self.pool.submit(move || {
+            let t0 = Instant::now();
+            let r = method.invoke(&input, n);
+            sched.record_smp(method.name(), t0.elapsed());
+            r
+        })
     }
+
+    /// Asynchronous *multi-version* submission: resolves the target at
+    /// submission time (rules → applicability → history for `auto`),
+    /// queues device work on the master thread and SMP work on the pool,
+    /// and feeds observed timings back into the scheduler history.
+    pub fn submit_hetero<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        input: Arc<I>,
+    ) -> JobHandle<anyhow::Result<(R, Executed)>>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        match self.resolve_submit(method.name(), method.has_device_version()) {
+            Target::Device(profile) => {
+                let sched = self.scheduler.clone();
+                let (tx, handle) = JobHandle::pair();
+                let job: DeviceJob = Box::new(move |ctx: &mut DeviceCtx<'_>| {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_device_job(method.as_ref(), &profile, ctx, input.as_ref(), &sched)
+                    }));
+                    let _ = tx.send(result);
+                });
+                self.device.as_ref().expect("resolved device lane").submit(job);
+                handle
+            }
+            // Auto resolves to Smp before reaching here when inapplicable
+            _ => {
+                let n = self.workers;
+                let sched = self.scheduler.clone();
+                self.pool.submit(move || {
+                    let t0 = Instant::now();
+                    let r = method.smp.invoke(&input, n);
+                    sched.record_smp(method.name(), t0.elapsed());
+                    Ok((r, Executed::Smp { partitions: n }))
+                })
+            }
+        }
+    }
+}
+
+/// One device job on the master thread: warm session in, stats delta out.
+fn run_device_job<I, P, E, R>(
+    method: &HeteroMethod<I, P, E, R>,
+    profile: &str,
+    ctx: &mut DeviceCtx<'_>,
+    input: &I,
+    sched: &Scheduler,
+) -> anyhow::Result<(R, Executed)>
+where
+    I: ?Sized + Sync,
+    P: Send + Sync,
+    E: Sync,
+    R: Send,
+{
+    let session = ctx.session(profile)?;
+    let before = session.stats();
+    let r = match method.invoke_on_session(session, input) {
+        Ok(r) => r,
+        Err(e) => {
+            // a failing lane must still feed the cost model, or `auto`
+            // would keep exploring the broken device forever
+            sched.record_device_failure(method.name());
+            return Err(e);
+        }
+    };
+    let stats = session.stats().delta_since(&before);
+    sched.record_device(method.name(), &stats);
+    let profile_name = session.profile().name;
+    Ok((r, Executed::Device { profile: profile_name, stats }))
 }
 
 pub struct InvokeWith<'a> {
@@ -146,5 +479,30 @@ mod tests {
         let e = Engine::with_rules(2, rules);
         assert_eq!(e.target_for("Series.coefficients"), Target::Device("fermi".into()));
         assert_eq!(e.target_for("Crypt.encrypt"), Target::Smp);
+    }
+
+    #[test]
+    fn invocations_feed_the_history_store() {
+        let e = Engine::new(2);
+        let data: Vec<i64> = (0..100).collect();
+        e.invoke(&sum_method(), &data);
+        let h = e.scheduler().history("sum").expect("history recorded");
+        assert_eq!(h.smp_runs, 1);
+        assert_eq!(h.smp_secs.len(), 1);
+    }
+
+    #[test]
+    fn auto_without_device_lane_resolves_to_smp() {
+        let mut rules = Rules::empty();
+        rules.set("sum", Target::Auto);
+        let e = Engine::with_rules(2, rules);
+        assert_eq!(e.resolve_submit("sum", true), Target::Smp);
+        assert_eq!(e.resolve_submit("sum", false), Target::Smp);
+    }
+
+    #[test]
+    fn device_master_requires_known_profile() {
+        let e = Engine::new(1);
+        assert!(e.with_device_master("artifacts", "h100").is_err());
     }
 }

@@ -11,6 +11,21 @@
 //! | shared array positions / views | [`grid`], [`distribution::View`] |
 //! | the DMR engine (Algorithm 1) | [`master`] |
 //! | Elina runtime + version rules (§6) | [`engine`], [`config`] |
+//! | automatic version selection (§6's open loop) | [`scheduler`] |
+//!
+//! # Rules grammar (§6 + the `auto` extension)
+//!
+//! A rules file holds one `Class.method:target` line per method
+//! (`#` comments allowed).  Targets:
+//!
+//! * `smp` (also `cpu`, `shared`) — the shared-memory pool (default);
+//! * a device profile name (`fermi`, `geforce320m`, `passthrough`) —
+//!   offload, reverting to SMP when inapplicable;
+//! * `auto` — let the runtime decide per invocation from recorded
+//!   execution history ([`scheduler::Scheduler`]): SMP wall times vs
+//!   modeled device times (compute + transfers + launches).  Transfer-
+//!   heavy methods (Crypt-shaped) converge to SMP, compute-dense ones
+//!   (Series-shaped) to the device — the §7.3 findings, automated.
 
 pub mod cluster;
 pub mod config;
@@ -24,12 +39,14 @@ pub mod partition;
 pub mod phaser;
 pub mod pool;
 pub mod reduction;
+pub mod scheduler;
 pub mod shared;
 pub mod tree;
 
 pub use config::{Rules, Target};
 pub use distribution::{Distribution, Range1, Range2, View};
-pub use engine::Engine;
+pub use engine::{DeviceCountersSnapshot, Engine};
+pub use scheduler::{Choice, Scheduler, SchedulerConfig};
 pub use master::{run_mis, SomdMethod};
 pub use mi::MiCtx;
 pub use partition::{Block1D, Block2D, BlockPart, Block2Part, RowDisjoint, Rows1D, SparsePart, TreeDist};

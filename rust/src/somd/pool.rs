@@ -38,6 +38,18 @@ impl<R> JobHandle<R> {
             Err(e) => std::panic::resume_unwind(e),
         }
     }
+
+    /// Non-blocking poll: `Some(result)` once the job finished.
+    pub fn try_join(&self) -> Option<std::thread::Result<R>> {
+        self.rx.try_recv().ok()
+    }
+
+    /// A handle fed by an external executor (the engine's device master
+    /// thread submits results through the returned sender).
+    pub(crate) fn pair() -> (mpsc::Sender<std::thread::Result<R>>, JobHandle<R>) {
+        let (tx, rx) = mpsc::channel();
+        (tx, JobHandle { rx })
+    }
 }
 
 impl WorkerPool {

@@ -1,0 +1,460 @@
+//! Adaptive target selection (the loop paper §6 leaves to the runtime).
+//!
+//! The paper's Elina runtime obeys static `method:target` rules and
+//! reverts to shared memory when a preference is inapplicable; automatic
+//! version selection is explicitly delegated to the compiler/runtime
+//! ("empowering the compiler to generate code for multiple architectures
+//! from the same source").  This module closes that loop: a per-method
+//! execution-history store feeds a cost model that resolves the
+//! [`Target::Auto`](crate::somd::Target::Auto) rules variant at
+//! invocation time.
+//!
+//! Recorded signals per method:
+//!
+//! * **SMP** — observed wall time of shared-memory invocations;
+//! * **device** — the *modeled* device time from
+//!   [`DeviceStats`](crate::device::DeviceStats) (scaled compute +
+//!   transfer + launch overhead), plus transfer-byte and launch totals.
+//!
+//! The decision rule is deliberately simple and deterministic:
+//! explore each applicable side until it has `min_samples` observations
+//! (SMP first — it is always applicable), then pick the side with the
+//! lower trailing-window mean, with a hysteresis factor so the choice
+//! only flips when the other side is *clearly* faster.  Histories
+//! serialize to JSON so deployments can persist what they learned.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::device::DeviceStats;
+use crate::util::json::Json;
+
+/// Which side the cost model picked for one invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Choice {
+    Smp,
+    Device,
+}
+
+/// Tunables for the cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Trailing samples kept per side.
+    pub window: usize,
+    /// Observations required per side before the means are compared.
+    pub min_samples: usize,
+    /// The challenger must be at least this factor faster to flip the
+    /// previous choice (1.0 = no hysteresis).
+    pub hysteresis: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { window: 8, min_samples: 2, hysteresis: 1.15 }
+    }
+}
+
+/// Execution history of one method.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MethodHistory {
+    /// Trailing SMP wall times (seconds).
+    pub smp_secs: Vec<f64>,
+    /// Trailing modeled device times (seconds).
+    pub device_secs: Vec<f64>,
+    /// Lifetime totals (not windowed).
+    pub smp_runs: u64,
+    pub device_runs: u64,
+    pub device_failures: u64,
+    pub bytes_h2d: u64,
+    pub bytes_d2h: u64,
+    pub launches: u64,
+    /// The last decision, for hysteresis.
+    pub last_choice: Option<Choice>,
+}
+
+impl MethodHistory {
+    fn push(buf: &mut Vec<f64>, v: f64, window: usize) {
+        buf.push(v);
+        if buf.len() > window {
+            buf.remove(0);
+        }
+    }
+
+    fn mean(buf: &[f64]) -> Option<f64> {
+        if buf.is_empty() {
+            None
+        } else {
+            Some(buf.iter().sum::<f64>() / buf.len() as f64)
+        }
+    }
+
+    /// Trailing-window mean SMP seconds.
+    pub fn smp_estimate(&self) -> Option<f64> {
+        Self::mean(&self.smp_secs)
+    }
+
+    /// Trailing-window mean modeled device seconds.
+    pub fn device_estimate(&self) -> Option<f64> {
+        Self::mean(&self.device_secs)
+    }
+
+    /// Mean transfer bytes per device run (the §7.3 "Crypt loses on the
+    /// bus" signal, surfaced for reports).
+    pub fn transfer_bytes_per_run(&self) -> f64 {
+        if self.device_runs == 0 {
+            0.0
+        } else {
+            (self.bytes_h2d + self.bytes_d2h) as f64 / self.device_runs as f64
+        }
+    }
+}
+
+/// One row of the decision table (bench/report surface).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRow {
+    pub method: String,
+    pub smp_secs: Option<f64>,
+    pub device_secs: Option<f64>,
+    pub transfer_bytes_per_run: f64,
+    pub choice: Choice,
+}
+
+/// The history store + cost model.  Thread-safe; one per [`Engine`]
+/// (shared with its device master thread).
+///
+/// [`Engine`]: crate::somd::Engine
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    histories: Mutex<BTreeMap<String, MethodHistory>>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Scheduler { cfg, histories: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn config(&self) -> SchedulerConfig {
+        self.cfg
+    }
+
+    /// Record an SMP invocation's wall time.
+    pub fn record_smp(&self, method: &str, wall: Duration) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(&mut e.smp_secs, wall.as_secs_f64(), self.cfg.window);
+        e.smp_runs += 1;
+    }
+
+    /// Record a device invocation from its session stats delta.
+    pub fn record_device(&self, method: &str, stats: &DeviceStats) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(
+            &mut e.device_secs,
+            stats.device_time.as_secs_f64(),
+            self.cfg.window,
+        );
+        e.device_runs += 1;
+        e.bytes_h2d += stats.bytes_h2d as u64;
+        e.bytes_d2h += stats.bytes_d2h as u64;
+        e.launches += stats.launches as u64;
+    }
+
+    /// Record a *failed* device invocation as a large penalty sample.
+    /// Without this, a method whose device version always errors would
+    /// never accumulate device samples, so the exploration phase would
+    /// keep resolving `auto` to the broken lane forever; the penalty
+    /// completes exploration and steers the method back to SMP.  Later
+    /// successes slide the penalty out of the trailing window.
+    pub fn record_device_failure(&self, method: &str) {
+        const PENALTY_SECS: f64 = 1e6;
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(&mut e.device_secs, PENALTY_SECS, self.cfg.window);
+        e.device_runs += 1;
+        e.device_failures += 1;
+    }
+
+    /// Resolve `Target::Auto` for a method whose device version IS
+    /// applicable (the caller has already checked applicability; an
+    /// inapplicable device reverts to SMP before ever reaching here).
+    pub fn decide(&self, method: &str) -> Choice {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        let choice = Self::decide_history(&self.cfg, e);
+        e.last_choice = Some(choice);
+        choice
+    }
+
+    fn decide_history(cfg: &SchedulerConfig, e: &MethodHistory) -> Choice {
+        // explore first: SMP is always applicable, measure it first, then
+        // give the device its minimum samples
+        if e.smp_secs.len() < cfg.min_samples {
+            return Choice::Smp;
+        }
+        if e.device_secs.len() < cfg.min_samples {
+            return Choice::Device;
+        }
+        let smp = e.smp_estimate().expect("smp samples present");
+        let dev = e.device_estimate().expect("device samples present");
+        match e.last_choice {
+            // hysteresis: the incumbent keeps the method unless the
+            // challenger beats it by the configured factor
+            Some(Choice::Smp) => {
+                if smp > dev * cfg.hysteresis {
+                    Choice::Device
+                } else {
+                    Choice::Smp
+                }
+            }
+            Some(Choice::Device) => {
+                if dev > smp * cfg.hysteresis {
+                    Choice::Smp
+                } else {
+                    Choice::Device
+                }
+            }
+            None => {
+                if dev < smp {
+                    Choice::Device
+                } else {
+                    Choice::Smp
+                }
+            }
+        }
+    }
+
+    /// Peek at the decision without recording it (reports).
+    pub fn predict(&self, method: &str) -> Choice {
+        let h = self.histories.lock().unwrap();
+        match h.get(method) {
+            Some(e) => Self::decide_history(&self.cfg, e),
+            None => Choice::Smp,
+        }
+    }
+
+    /// Snapshot one method's history.
+    pub fn history(&self, method: &str) -> Option<MethodHistory> {
+        self.histories.lock().unwrap().get(method).cloned()
+    }
+
+    /// The full decision table, one row per known method.
+    pub fn decision_table(&self) -> Vec<DecisionRow> {
+        let h = self.histories.lock().unwrap();
+        h.iter()
+            .map(|(name, e)| DecisionRow {
+                method: name.clone(),
+                smp_secs: e.smp_estimate(),
+                device_secs: e.device_estimate(),
+                transfer_bytes_per_run: e.transfer_bytes_per_run(),
+                choice: Self::decide_history(&self.cfg, e),
+            })
+            .collect()
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// Serialize every history to JSON (decision state round-trips).
+    pub fn to_json(&self) -> Json {
+        let h = self.histories.lock().unwrap();
+        let mut top = BTreeMap::new();
+        for (name, e) in h.iter() {
+            let mut m = BTreeMap::new();
+            m.insert(
+                "smp_secs".to_string(),
+                Json::Arr(e.smp_secs.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            m.insert(
+                "device_secs".to_string(),
+                Json::Arr(e.device_secs.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            m.insert("smp_runs".to_string(), Json::Num(e.smp_runs as f64));
+            m.insert("device_runs".to_string(), Json::Num(e.device_runs as f64));
+            m.insert("device_failures".to_string(), Json::Num(e.device_failures as f64));
+            m.insert("bytes_h2d".to_string(), Json::Num(e.bytes_h2d as f64));
+            m.insert("bytes_d2h".to_string(), Json::Num(e.bytes_d2h as f64));
+            m.insert("launches".to_string(), Json::Num(e.launches as f64));
+            m.insert(
+                "last_choice".to_string(),
+                match e.last_choice {
+                    Some(Choice::Smp) => Json::Str("smp".to_string()),
+                    Some(Choice::Device) => Json::Str("device".to_string()),
+                    None => Json::Null,
+                },
+            );
+            top.insert(name.clone(), Json::Obj(m));
+        }
+        Json::Obj(top)
+    }
+
+    /// Rebuild a scheduler from [`Scheduler::to_json`] output.
+    pub fn from_json(cfg: SchedulerConfig, json: &Json) -> Result<Scheduler, String> {
+        let obj = match json {
+            Json::Obj(m) => m,
+            _ => return Err("scheduler state must be a JSON object".to_string()),
+        };
+        let mut histories = BTreeMap::new();
+        for (name, v) in obj {
+            let secs = |key: &str| -> Result<Vec<f64>, String> {
+                v.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("method '{name}': missing '{key}'"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| format!("bad number in '{key}'")))
+                    .collect()
+            };
+            let num = |key: &str| -> u64 {
+                v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+            };
+            let last_choice = match v.get("last_choice").and_then(Json::as_str) {
+                Some("smp") => Some(Choice::Smp),
+                Some("device") => Some(Choice::Device),
+                _ => None,
+            };
+            histories.insert(
+                name.clone(),
+                MethodHistory {
+                    smp_secs: secs("smp_secs")?,
+                    device_secs: secs("device_secs")?,
+                    smp_runs: num("smp_runs"),
+                    device_runs: num("device_runs"),
+                    device_failures: num("device_failures"),
+                    bytes_h2d: num("bytes_h2d"),
+                    bytes_d2h: num("bytes_d2h"),
+                    launches: num("launches"),
+                    last_choice,
+                },
+            );
+        }
+        Ok(Scheduler { cfg, histories: Mutex::new(histories) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev_stats(secs: f64, bytes: usize) -> DeviceStats {
+        DeviceStats {
+            launches: 1,
+            bytes_h2d: bytes,
+            device_time: Duration::from_secs_f64(secs),
+            ..DeviceStats::default()
+        }
+    }
+
+    #[test]
+    fn explores_smp_then_device() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        assert_eq!(s.decide("M.m"), Choice::Smp);
+        s.record_smp("M.m", Duration::from_millis(10));
+        s.record_smp("M.m", Duration::from_millis(10));
+        assert_eq!(s.decide("M.m"), Choice::Device);
+    }
+
+    #[test]
+    fn picks_faster_side_after_exploration() {
+        let s = Scheduler::new(SchedulerConfig { hysteresis: 1.0, ..Default::default() });
+        for _ in 0..3 {
+            s.record_smp("M.m", Duration::from_millis(50));
+            s.record_device("M.m", &dev_stats(0.005, 1000));
+        }
+        assert_eq!(s.decide("M.m"), Choice::Device);
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping_on_noise() {
+        let s = Scheduler::new(SchedulerConfig {
+            window: 4,
+            min_samples: 2,
+            hysteresis: 1.5,
+        });
+        for _ in 0..4 {
+            s.record_smp("M.m", Duration::from_millis(10));
+            s.record_device("M.m", &dev_stats(0.011, 0));
+        }
+        // smp incumbent; device is 10% faster? no: device is slower here.
+        assert_eq!(s.decide("M.m"), Choice::Smp);
+        // device becomes slightly faster, but within the hysteresis band
+        for _ in 0..4 {
+            s.record_device("M.m", &dev_stats(0.009, 0));
+        }
+        assert_eq!(s.decide("M.m"), Choice::Smp);
+        // device becomes clearly faster — now it flips
+        for _ in 0..4 {
+            s.record_device("M.m", &dev_stats(0.004, 0));
+        }
+        assert_eq!(s.decide("M.m"), Choice::Device);
+        // and stays flipped on repeated decisions (stable boundary)
+        for _ in 0..10 {
+            assert_eq!(s.decide("M.m"), Choice::Device);
+        }
+    }
+
+    #[test]
+    fn failing_device_lane_steers_back_to_smp() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        s.record_smp("M.m", Duration::from_millis(10));
+        s.record_smp("M.m", Duration::from_millis(10));
+        // exploration would now pick the device; it fails every time
+        assert_eq!(s.decide("M.m"), Choice::Device);
+        s.record_device_failure("M.m");
+        assert_eq!(s.decide("M.m"), Choice::Device); // still exploring (1 < 2)
+        s.record_device_failure("M.m");
+        // penalties complete exploration and the broken lane loses
+        assert_eq!(s.decide("M.m"), Choice::Smp);
+        let h = s.history("M.m").unwrap();
+        assert_eq!(h.device_failures, 2);
+        // a recovered device (fast successes) can win the method back
+        for _ in 0..8 {
+            s.record_device(
+                "M.m",
+                &DeviceStats {
+                    device_time: Duration::from_micros(100),
+                    ..DeviceStats::default()
+                },
+            );
+        }
+        assert_eq!(s.decide("M.m"), Choice::Device);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_decisions() {
+        let cfg = SchedulerConfig::default();
+        let s = Scheduler::new(cfg);
+        for i in 0..5 {
+            s.record_smp("A.a", Duration::from_millis(3 + i));
+            s.record_device("A.a", &dev_stats(0.050, 1 << 20));
+            s.record_smp("B.b", Duration::from_millis(80));
+            s.record_device("B.b", &dev_stats(0.002, 64));
+        }
+        let a = s.decide("A.a");
+        let b = s.decide("B.b");
+        let restored = Scheduler::from_json(cfg, &s.to_json()).unwrap();
+        assert_eq!(restored.decide("A.a"), a);
+        assert_eq!(restored.decide("B.b"), b);
+        assert_eq!(restored.history("A.a"), s.history("A.a"));
+    }
+
+    #[test]
+    fn transfer_heavy_method_steers_to_smp() {
+        // Crypt-shaped: device time dominated by transfers exceeds SMP
+        let s = Scheduler::new(SchedulerConfig::default());
+        for _ in 0..3 {
+            s.record_smp("Crypt.pass", Duration::from_millis(8));
+            s.record_device("Crypt.pass", &dev_stats(0.120, 50_000_000));
+        }
+        assert_eq!(s.decide("Crypt.pass"), Choice::Smp);
+        // Series-shaped: compute dense, tiny transfers
+        for _ in 0..3 {
+            s.record_smp("Series.coefficients", Duration::from_millis(200));
+            s.record_device("Series.coefficients", &dev_stats(0.004, 8_000));
+        }
+        assert_eq!(s.decide("Series.coefficients"), Choice::Device);
+        let table = s.decision_table();
+        assert_eq!(table.len(), 2);
+        assert!(table[0].transfer_bytes_per_run > table[1].transfer_bytes_per_run);
+    }
+}

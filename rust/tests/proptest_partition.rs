@@ -1,0 +1,168 @@
+//! Property suite for every built-in partitioner (satellite of the
+//! adaptive-scheduler PR): for randomized sizes and MI counts — including
+//! `n > len` and `len = 0` — partitions must be pairwise disjoint, cover
+//! the full index space, and be non-empty whenever `n <= len`.
+//!
+//! Uses the in-tree testkit (proptest is not in the offline vendor set).
+
+use somd::somd::partition::{Block1D, Block2D, RowDisjoint, Rows1D, TreeDist};
+use somd::somd::tree::Tree;
+use somd::somd::View;
+use somd::util::prng::Xorshift64;
+use somd::util::testkit::Prop;
+
+#[test]
+fn prop_block1d_disjoint_cover_nonempty() {
+    Prop::new("block1d invariants", 0xB10C).runs(300).check(|g| {
+        let len = if g.bool() { g.usize(0, 5) } else { g.usize(0, 20_000) };
+        let n = g.usize(1, 64);
+        let parts = Block1D::new().ranges(len, n);
+        assert_eq!(parts.len(), n);
+        // coverage + disjointness: consecutive, starting at 0, ending at len
+        assert_eq!(parts[0].own.lo, 0);
+        assert_eq!(parts.last().unwrap().own.hi, len);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].own.hi, w[1].own.lo);
+        }
+        assert_eq!(parts.iter().map(|p| p.own.len()).sum::<usize>(), len);
+        // non-empty whenever there is enough data to go around
+        if n <= len {
+            assert!(parts.iter().all(|p| !p.own.is_empty()), "n={n} len={len}");
+        }
+        // own stays inside readable, readable stays inside bounds
+        for p in &parts {
+            assert!(p.readable.lo <= p.own.lo && p.own.hi <= p.readable.hi);
+            assert!(p.readable.hi <= len);
+        }
+    });
+}
+
+#[test]
+fn prop_block1d_with_view_keeps_ownership_disjoint() {
+    Prop::new("block1d halo ownership", 0xB10D).runs(200).check(|g| {
+        let len = g.usize(1, 2000);
+        let n = g.usize(1, 16);
+        let view = View { before: g.usize(0, 4), after: g.usize(0, 4) };
+        let parts = Block1D::with_view(view).ranges(len, n);
+        let mut covered = vec![0u32; len];
+        for p in &parts {
+            for i in p.own.iter() {
+                covered[i] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "each index owned exactly once");
+    });
+}
+
+#[test]
+fn prop_block2d_disjoint_cover_nonempty() {
+    Prop::new("block2d invariants", 0xB20C).runs(200).check(|g| {
+        let rows = g.usize(0, 80);
+        let cols = g.usize(0, 80);
+        let n = g.usize(1, 16);
+        let parts = Block2D::new().parts(rows, cols, n);
+        assert_eq!(parts.len(), n);
+        let mut covered = vec![0u8; rows * cols];
+        for p in &parts {
+            for i in p.own.rows.iter() {
+                for j in p.own.cols.iter() {
+                    covered[i * cols + j] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "rows={rows} cols={cols} n={n}");
+        // a near-square grid (pr, pc) keeps blocks non-empty when both
+        // dims can feed their axis of the grid
+        let (pr, pc) = somd::somd::distribution::near_square_grid(n);
+        if pr <= rows && pc <= cols {
+            assert!(parts
+                .iter()
+                .all(|p| !p.own.rows.is_empty() && !p.own.cols.is_empty()));
+        }
+    });
+}
+
+#[test]
+fn prop_rows1d_disjoint_cover_nonempty() {
+    Prop::new("rows1d invariants", 0xB30C).runs(200).check(|g| {
+        let rows = g.usize(0, 200);
+        let cols = g.usize(1, 64);
+        let n = g.usize(1, 32);
+        let parts = Rows1D::default().parts(rows, cols, n);
+        assert_eq!(parts.len(), n);
+        let mut covered = vec![0u8; rows];
+        for p in &parts {
+            assert_eq!(p.own.cols.len(), cols, "rows1d keeps full width");
+            for i in p.own.rows.iter() {
+                covered[i] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+        if n <= rows {
+            assert!(parts.iter().all(|p| !p.own.rows.is_empty()));
+        }
+    });
+}
+
+#[test]
+fn prop_row_disjoint_disjoint_cover() {
+    Prop::new("row-disjoint invariants", 0xB40C).runs(250).check(|g| {
+        let n_rows = g.usize(1, 60);
+        let nnz = if g.bool() { 0 } else { g.usize(0, 500) };
+        let n = g.usize(1, 12);
+        let mut rng = Xorshift64::new(g.u64());
+        let mut row: Vec<u32> = (0..nnz).map(|_| rng.below(n_rows) as u32).collect();
+        row.sort_unstable();
+        let parts = RowDisjoint.parts(&row, n_rows, n);
+        assert_eq!(parts.len(), n);
+        // nnz ranges: contiguous cover of [0, nnz)
+        assert_eq!(parts[0].nnz.lo, 0);
+        assert_eq!(parts.last().unwrap().nnz.hi, nnz);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].nnz.hi, w[1].nnz.lo);
+        }
+        // no partition boundary splits a row; row ranges of non-empty
+        // parts are pairwise disjoint and ordered
+        for p in &parts {
+            if !p.nnz.is_empty() && p.nnz.hi < nnz {
+                assert_ne!(row[p.nnz.hi], row[p.nnz.hi - 1], "row split at boundary");
+            }
+        }
+        let nonempty: Vec<_> = parts.iter().filter(|p| !p.nnz.is_empty()).collect();
+        for w in nonempty.windows(2) {
+            assert!(w[0].rows.hi <= w[1].rows.lo, "row ranges overlap: {w:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_tree_dist_partitions_all_nodes_once() {
+    Prop::new("treedist invariants", 0xB50C).runs(60).check(|g| {
+        let nodes = g.usize(0, 3000);
+        let n = g.usize(1, 16);
+        let mut rng = Xorshift64::new(g.u64());
+        let tree: Tree<u8> = Tree::with_nodes(nodes, 1, &mut rng);
+        let parts = TreeDist::default().parts(&tree, n);
+        // top copy + 2^levels subtrees, levels = ceil(log2(n))
+        let mut levels = 0usize;
+        while (1usize << levels) < n {
+            levels += 1;
+        }
+        assert_eq!(parts.len(), (1 << levels) + 1);
+        // disjoint cover: node counts sum exactly to the tree's count
+        let total: usize = parts.iter().map(Tree::count).sum();
+        assert_eq!(total, nodes, "n={n} nodes={nodes}");
+    });
+}
+
+#[test]
+fn prop_treedist_full_trees_balanced() {
+    Prop::new("treedist full trees", 0xB60C).runs(30).check(|g| {
+        let depth = g.usize(0, 10);
+        let n = g.usize(1, 8);
+        let tree: Tree<u8> = Tree::full(depth, 0);
+        let want = (1usize << (depth + 1)) - 1;
+        let parts = TreeDist::default().parts(&tree, n);
+        assert_eq!(parts.iter().map(Tree::count).sum::<usize>(), want);
+    });
+}

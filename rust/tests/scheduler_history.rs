@@ -1,0 +1,138 @@
+//! Scheduler-history unit suite (satellite of the adaptive-scheduler PR):
+//! seeded fake timings drive the cost model to flip a method from
+//! SMP→Device and back, asserting the decision boundary is stable under
+//! repeated queries and survives JSON serialization.
+
+use std::time::Duration;
+
+use somd::device::DeviceStats;
+use somd::somd::{Choice, Scheduler, SchedulerConfig};
+use somd::util::json::Json;
+
+fn dev(secs: f64, bytes: usize) -> DeviceStats {
+    DeviceStats {
+        launches: 1,
+        bytes_h2d: bytes / 2,
+        bytes_d2h: bytes - bytes / 2,
+        device_time: Duration::from_secs_f64(secs),
+        ..DeviceStats::default()
+    }
+}
+
+fn cfg() -> SchedulerConfig {
+    SchedulerConfig { window: 4, min_samples: 2, hysteresis: 1.2 }
+}
+
+#[test]
+fn flips_smp_to_device_and_back_on_seeded_timings() {
+    let s = Scheduler::new(cfg());
+    let m = "Series.coefficients";
+
+    // phase 1: SMP clearly faster -> SMP
+    for _ in 0..4 {
+        s.record_smp(m, Duration::from_millis(5));
+        s.record_device(m, &dev(0.050, 1 << 20));
+    }
+    assert_eq!(s.decide(m), Choice::Smp);
+
+    // phase 2: the device becomes 10x faster (window slides over the old
+    // samples) -> flips to Device
+    for _ in 0..4 {
+        s.record_device(m, &dev(0.0005, 1 << 20));
+    }
+    assert_eq!(s.decide(m), Choice::Device);
+
+    // phase 3: the device degrades again -> flips back to SMP
+    for _ in 0..4 {
+        s.record_device(m, &dev(0.200, 1 << 20));
+    }
+    assert_eq!(s.decide(m), Choice::Smp);
+}
+
+#[test]
+fn decision_boundary_is_stable_under_repeated_queries() {
+    let s = Scheduler::new(cfg());
+    let m = "SOR.sweep";
+    for _ in 0..4 {
+        s.record_smp(m, Duration::from_millis(10));
+        s.record_device(m, &dev(0.009, 4096));
+    }
+    // 9ms vs 10ms is inside the 1.2 hysteresis band: whatever is chosen
+    // first must keep being chosen with no new evidence
+    let first = s.decide(m);
+    for _ in 0..20 {
+        assert_eq!(s.decide(m), first);
+    }
+}
+
+#[test]
+fn near_boundary_noise_does_not_flap() {
+    let s = Scheduler::new(cfg());
+    let m = "Crypt.pass";
+    for _ in 0..4 {
+        s.record_smp(m, Duration::from_millis(10));
+        s.record_device(m, &dev(0.0101, 1 << 24));
+    }
+    let first = s.decide(m);
+    assert_eq!(first, Choice::Smp);
+    // alternate slightly-better/slightly-worse device samples around the
+    // boundary; the hysteresis band must absorb them
+    for i in 0..12 {
+        let jitter = if i % 2 == 0 { 0.0095 } else { 0.0105 };
+        s.record_device(m, &dev(jitter, 1 << 24));
+        assert_eq!(s.decide(m), Choice::Smp, "flapped on sample {i}");
+    }
+}
+
+#[test]
+fn history_serializes_and_restores_decisions() {
+    let s = Scheduler::new(cfg());
+    for _ in 0..4 {
+        // transfer-heavy workload: device loses
+        s.record_smp("Crypt.pass", Duration::from_millis(8));
+        s.record_device("Crypt.pass", &dev(0.120, 50_000_000));
+        // compute-dense workload: device wins
+        s.record_smp("Series.coefficients", Duration::from_millis(200));
+        s.record_device("Series.coefficients", &dev(0.004, 8_000));
+    }
+    assert_eq!(s.decide("Crypt.pass"), Choice::Smp);
+    assert_eq!(s.decide("Series.coefficients"), Choice::Device);
+
+    // round-trip through TEXT, not just the Json tree
+    let text = s.to_json().dump();
+    let parsed = Json::parse(&text).expect("serialized scheduler state parses");
+    let restored = Scheduler::from_json(cfg(), &parsed).expect("state restores");
+    assert_eq!(restored.decide("Crypt.pass"), Choice::Smp);
+    assert_eq!(restored.decide("Series.coefficients"), Choice::Device);
+    assert_eq!(restored.history("Crypt.pass"), s.history("Crypt.pass"));
+    assert_eq!(
+        restored.history("Series.coefficients"),
+        s.history("Series.coefficients")
+    );
+}
+
+#[test]
+fn transfer_and_launch_totals_accumulate() {
+    let s = Scheduler::new(cfg());
+    for i in 1..=3 {
+        s.record_device("M.m", &dev(0.001 * i as f64, 1000));
+    }
+    let h = s.history("M.m").unwrap();
+    assert_eq!(h.device_runs, 3);
+    assert_eq!(h.launches, 3);
+    assert_eq!(h.bytes_h2d + h.bytes_d2h, 3000);
+    assert!((h.transfer_bytes_per_run() - 1000.0).abs() < 1e-9);
+}
+
+#[test]
+fn windows_bound_memory_and_adapt() {
+    let s = Scheduler::new(SchedulerConfig { window: 3, min_samples: 1, hysteresis: 1.0 });
+    for i in 0..100 {
+        s.record_smp("W.w", Duration::from_millis(100 + i));
+    }
+    let h = s.history("W.w").unwrap();
+    assert_eq!(h.smp_secs.len(), 3, "window bounds the retained samples");
+    assert_eq!(h.smp_runs, 100, "lifetime totals keep counting");
+    // the estimate tracks the trailing window, not the lifetime mean
+    assert!((h.smp_estimate().unwrap() - 0.198).abs() < 1e-9);
+}

@@ -1,0 +1,218 @@
+//! Concurrency stress for the worker pool + engine submission lanes
+//! (satellite of the adaptive-scheduler PR): many concurrent submissions
+//! of mixed result types must all complete (no deadlock) with
+//! deterministic reduction results; `Target::Auto` must fall back to SMP
+//! when no registry/device version exists; and concurrent device-targeted
+//! submissions must share a warm session.
+
+use std::sync::Arc;
+
+use somd::backend::{DeviceFn, Executed, HeteroMethod};
+use somd::somd::partition::Block1D;
+use somd::somd::reduction::{self, Assemble};
+use somd::somd::{Engine, Rules, SomdMethod, Target};
+
+fn sum_method() -> SomdMethod<Vec<i64>, somd::somd::BlockPart, (), i64> {
+    SomdMethod::new(
+        "Stress.sum",
+        |v: &Vec<i64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, p, _, _| p.own.iter().map(|i| v[i]).sum(),
+        reduction::sum::<i64>(),
+    )
+}
+
+fn scale_method() -> SomdMethod<Vec<f64>, somd::somd::BlockPart, (), Vec<f64>> {
+    SomdMethod::new(
+        "Stress.scale",
+        |v: &Vec<f64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, p, _, _| p.own.iter().map(|i| v[i] * 2.0).collect::<Vec<f64>>(),
+        Assemble,
+    )
+}
+
+fn norm_method() -> SomdMethod<Vec<f64>, somd::somd::BlockPart, (), f64> {
+    SomdMethod::new(
+        "Stress.norm",
+        |v: &Vec<f64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, p, _, ctx| {
+            let local: f64 = p.own.iter().map(|i| v[i] * v[i]).sum();
+            ctx.allreduce(local, &reduction::sum::<f64>())
+        },
+        reduction::FnReduce::new(|parts: Vec<f64>| parts.into_iter().next().unwrap()),
+    )
+}
+
+#[test]
+fn mixed_result_types_under_concurrent_submission() {
+    let engine = Arc::new(Engine::new(4));
+    let ints = Arc::new((0..4000).collect::<Vec<i64>>());
+    let floats = Arc::new((0..1000).map(|i| i as f64).collect::<Vec<f64>>());
+    let m_sum = Arc::new(sum_method());
+    let m_scale = Arc::new(scale_method());
+    let m_norm = Arc::new(norm_method());
+
+    let want_sum: i64 = ints.iter().sum();
+    let want_scale: Vec<f64> = floats.iter().map(|&v| v * 2.0).collect();
+    let want_norm: f64 = floats.iter().map(|&v| v * v).sum();
+
+    let mut outer = Vec::new();
+    for _ in 0..6 {
+        let (engine, ints, floats) = (engine.clone(), ints.clone(), floats.clone());
+        let (m_sum, m_scale, m_norm) = (m_sum.clone(), m_scale.clone(), m_norm.clone());
+        let want_scale = want_scale.clone();
+        outer.push(std::thread::spawn(move || {
+            for _ in 0..5 {
+                let h1 = engine.submit(m_sum.clone(), ints.clone());
+                let h2 = engine.submit(m_scale.clone(), floats.clone());
+                let h3 = engine.submit(m_norm.clone(), floats.clone());
+                assert_eq!(h1.join(), want_sum);
+                assert_eq!(h2.join(), want_scale);
+                assert!((h3.join() - want_norm).abs() < 1e-9);
+            }
+        }));
+    }
+    for h in outer {
+        h.join().unwrap();
+    }
+    // history recorded every submission (3 methods x 6 threads x 5 rounds)
+    let h = engine.scheduler().history("Stress.sum").expect("history");
+    assert_eq!(h.smp_runs, 30);
+}
+
+#[test]
+fn auto_falls_back_to_smp_without_device_side() {
+    // regression: Target::Auto with no device version and no device lane
+    // must run on SMP, not panic or hang
+    let mut rules = Rules::empty();
+    rules.set("Stress.sum", Target::Auto);
+    let engine = Engine::with_rules(3, rules);
+    let m = Arc::new(HeteroMethod::smp_only(sum_method()));
+    let input = Arc::new((0..100).collect::<Vec<i64>>());
+    for _ in 0..4 {
+        let (r, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+        assert_eq!(r, 4950);
+        assert_eq!(how, Executed::Smp { partitions: 3 });
+    }
+    // a device-capable method without a device lane also falls back
+    let dev: DeviceFn<Vec<i64>, i64> =
+        Box::new(|_, _| anyhow::bail!("device lane not attached"));
+    let m2 = Arc::new(HeteroMethod::with_device(sum_method(), dev));
+    assert_eq!(engine.resolve_submit(m2.name(), m2.has_device_version()), Target::Smp);
+    let (r, how) = engine.submit_hetero(m2, input).join().unwrap();
+    assert_eq!(r, 4950);
+    assert!(matches!(how, Executed::Smp { .. }));
+}
+
+// ---------------------------------------------------------------------------
+// device lane: warm-session reuse (needs the AOT artifacts)
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn vecadd_hetero(
+    elems: usize,
+) -> HeteroMethod<(Vec<f32>, Vec<f32>), somd::somd::BlockPart, (), Vec<f32>> {
+    let smp = SomdMethod::new(
+        "VecAdd.add",
+        move |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |inp, p, _, _| p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>(),
+        Assemble,
+    );
+    let dev: DeviceFn<(Vec<f32>, Vec<f32>), Vec<f32>> = Box::new(move |sess, inp| {
+        use somd::device::Arg;
+        use somd::runtime::HostTensor;
+        let x = HostTensor::vec_f32(inp.0.clone());
+        let y = HostTensor::vec_f32(inp.1.clone());
+        let out = sess.launch_to_host("vecadd", &[Arg::Host(&x), Arg::Host(&y)], elems)?;
+        Ok(out[0].as_f32()?.to_vec())
+    });
+    HeteroMethod::with_device(smp, dev)
+}
+
+#[test]
+fn concurrent_device_submissions_reuse_one_warm_session() {
+    use somd::runtime::Registry;
+    let reg = Registry::load(artifacts_dir()).expect("artifacts present");
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    drop(reg);
+
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.add", Target::Device("fermi".into()));
+    let engine = Engine::with_rules(2, rules)
+        .with_device_master(artifacts_dir(), "fermi")
+        .expect("device master starts");
+
+    let m = Arc::new(vecadd_hetero(elems));
+    let input = Arc::new((vec![1.0f32; elems], vec![2.0f32; elems]));
+
+    const JOBS: usize = 4;
+    let handles: Vec<_> =
+        (0..JOBS).map(|_| engine.submit_hetero(m.clone(), input.clone())).collect();
+    let mut launches = 0usize;
+    for h in handles {
+        let (out, how) = h.join().expect("device job succeeds");
+        assert!(out.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+        match how {
+            Executed::Device { profile, stats } => {
+                assert_eq!(profile, "fermi");
+                // per-job stats delta: exactly this job's launches
+                assert_eq!(stats.launches, 1);
+                launches += stats.launches;
+            }
+            other => panic!("expected device execution, got {other:?}"),
+        }
+    }
+    assert_eq!(launches, JOBS);
+
+    // THE warm-session assertion: one cold setup, the rest warm hits
+    let c = engine.device_counters().expect("device lane attached");
+    assert_eq!(c.jobs_run, JOBS);
+    assert_eq!(c.sessions_created, 1, "sessions must be reused, not rebuilt");
+    assert_eq!(c.warm_hits, JOBS - 1);
+
+    // and the scheduler history saw every device run
+    let h = engine.scheduler().history("VecAdd.add").expect("history");
+    assert_eq!(h.device_runs, JOBS as u64);
+    assert!(h.device_estimate().unwrap() > 0.0);
+}
+
+#[test]
+fn auto_explores_then_settles_with_device_lane() {
+    use somd::somd::Choice;
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.add", Target::Auto);
+    let engine = Engine::with_rules(2, rules)
+        .with_device_master(artifacts_dir(), "fermi")
+        .expect("device master starts");
+    let elems = {
+        use somd::runtime::Registry;
+        Registry::load(artifacts_dir()).unwrap().info("vecadd").unwrap().inputs[0].elems()
+    };
+    let m = Arc::new(vecadd_hetero(elems));
+    let input = Arc::new((vec![1.0f32; elems], vec![2.0f32; elems]));
+
+    // drive enough submissions for both exploration phases to complete
+    let mut saw_smp = false;
+    let mut saw_device = false;
+    for _ in 0..6 {
+        let (_, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+        match how {
+            Executed::Smp { .. } => saw_smp = true,
+            Executed::Device { .. } => saw_device = true,
+        }
+    }
+    assert!(saw_smp, "auto must explore the SMP side");
+    assert!(saw_device, "auto must explore the device side");
+    // after exploration the decision is stable across repeated queries
+    let first = engine.scheduler().decide("VecAdd.add");
+    for _ in 0..5 {
+        assert_eq!(engine.scheduler().decide("VecAdd.add"), first);
+    }
+    assert!(matches!(first, Choice::Smp | Choice::Device));
+}

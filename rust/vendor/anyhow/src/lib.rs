@@ -1,0 +1,250 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline (no crates.io access), so this vendored
+//! shim provides exactly the surface the `somd` crate uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros and the
+//! [`Context`] extension trait.  Semantics follow the real crate where it
+//! matters here:
+//!
+//! * `Error` is a cheap wrapper over a message plus a context chain;
+//! * `{:#}` (alternate `Display`) prints `outermost: ...: innermost`,
+//!   `{}` prints only the outermost message;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! * `Error` itself does **not** implement `std::error::Error` (same as
+//!   the real crate) so the blanket conversion stays coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error: an outermost message plus the chain of causes beneath it.
+/// `chain[0]` is the outermost (most recently attached) message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from anything displayable (the `anyhow!` entry point).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context message (innermost stays last).
+    pub fn context(mut self, msg: impl fmt::Display) -> Self {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the chain from outermost to innermost.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: no `impl std::error::Error for Error` — exactly like the real
+// anyhow, which is what keeps the blanket `From` below coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option` (subset of the
+/// real trait: enough for `.context(..)` / `.with_context(|| ..)`).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+/// Sealed helper so both `Result<T, E: std::error::Error>` and
+/// `Result<T, Error>` get `Context` without overlapping impls.
+mod private {
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> super::Error;
+    }
+
+    impl<E> IntoAnyhow for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_anyhow(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoAnyhow for super::Error {
+        fn into_anyhow(self) -> super::Error {
+            self
+        }
+    }
+}
+
+impl<T, E: private::IntoAnyhow> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let e = std::fs::read_to_string("/definitely/not/a/real/path/xyz");
+        Ok(e.context("reading config")?)
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let e = io_fail().unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("reading config: "), "{s}");
+        let outer = format!("{e}");
+        assert_eq!(outer, "reading config");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("artifact '{name}' missing");
+        assert_eq!(format!("{e}"), "artifact 'x' missing");
+        let e = anyhow!("expects {} inputs, got {}", 2, 3);
+        assert_eq!(format!("{e}"), "expects 2 inputs, got 3");
+        fn f() -> Result<()> {
+            bail!("nope: {}", 7)
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope: 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing dtype").unwrap_err();
+        assert_eq!(format!("{e}"), "missing dtype");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<i32> {
+            let n: i32 = "zz".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("inner boom")
+        }
+        let e = inner().with_context(|| "outer frame").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer frame: inner boom");
+    }
+
+    #[test]
+    fn anyhow_from_displayable_value() {
+        let e = anyhow!(std::io::Error::new(std::io::ErrorKind::Other, "disk"));
+        assert_eq!(format!("{e}"), "disk");
+    }
+}

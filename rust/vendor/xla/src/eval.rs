@@ -1,0 +1,1376 @@
+//! HLO interpreter: evaluates a parsed [`HloModule`] on host tensors.
+//!
+//! Covers the op set the AOT artifact suite uses (elementwise arithmetic
+//! and logic, shape ops, dynamic slicing, while/call control flow,
+//! variadic reduce, gather/scatter) with logical row-major semantics.
+//! Reductions and scatters evaluate their `to_apply` computation per
+//! element, with a fast path for the common single-binary-op regions.
+
+use crate::hlo::{Computation, HloModule, Instr};
+use crate::value::{linear_index, next_index, strides_of, Data, Tensor, Value};
+use crate::{ElementType, Error, Result};
+
+/// Evaluate the module's entry computation over `args`.
+pub fn execute_module(module: &HloModule, args: &[Value]) -> Result<Value> {
+    evaluate(module, module.entry_computation()?, args)
+}
+
+/// Evaluate one computation with the given parameter values.
+fn evaluate(module: &HloModule, comp: &Computation, args: &[Value]) -> Result<Value> {
+    let n = comp.instrs.len();
+    let mut values: Vec<Option<Value>> = (0..n).map(|_| None).collect();
+    let mut stack: Vec<usize> = vec![comp.root];
+    while let Some(&i) = stack.last() {
+        if values[i].is_some() {
+            stack.pop();
+            continue;
+        }
+        let ins = &comp.instrs[i];
+        let mut pending = false;
+        if ins.op != "parameter" {
+            for opnd in &ins.operands {
+                let j = *comp.index.get(opnd).ok_or_else(|| {
+                    Error(format!("'{}' references unknown operand '{opnd}'", ins.name))
+                })?;
+                if values[j].is_none() {
+                    stack.push(j);
+                    pending = true;
+                }
+            }
+        }
+        if pending {
+            continue;
+        }
+        let operands: Vec<&Value> = if ins.op == "parameter" {
+            Vec::new()
+        } else {
+            ins.operands
+                .iter()
+                .map(|o| values[comp.index[o]].as_ref().expect("operand evaluated"))
+                .collect()
+        };
+        let v = eval_instr(module, ins, &operands, args)?;
+        values[i] = Some(v);
+        stack.pop();
+    }
+    Ok(values[comp.root].take().expect("root evaluated"))
+}
+
+fn out_array(ins: &Instr) -> Result<(ElementType, Vec<usize>)> {
+    let (ty, dims) = ins.shape.expect_array()?;
+    Ok((ty, dims.to_vec()))
+}
+
+fn eval_instr(
+    module: &HloModule,
+    ins: &Instr,
+    operands: &[&Value],
+    args: &[Value],
+) -> Result<Value> {
+    match ins.op.as_str() {
+        "parameter" => {
+            let k: usize = ins
+                .operands
+                .first()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| Error(format!("bad parameter index on '{}'", ins.name)))?;
+            args.get(k)
+                .cloned()
+                .ok_or_else(|| Error(format!("parameter({k}) out of range ({} args)", args.len())))
+        }
+        "constant" => eval_constant(ins),
+        "tuple" => Ok(Value::Tuple(operands.iter().map(|v| (*v).clone()).collect())),
+        "get-tuple-element" => {
+            let idx = ins.attr_i64("index")? as usize;
+            match operands[0] {
+                Value::Tuple(parts) => parts
+                    .get(idx)
+                    .cloned()
+                    .ok_or_else(|| Error(format!("tuple index {idx} out of range"))),
+                Value::T(_) => Err(Error("get-tuple-element on non-tuple".into())),
+            }
+        }
+        "call" => {
+            let target = ins.attr_computation("to_apply")?;
+            let callee = module.computation(&target)?;
+            let call_args: Vec<Value> = operands.iter().map(|v| (*v).clone()).collect();
+            evaluate(module, callee, &call_args)
+        }
+        "while" => {
+            let cond = module.computation(&ins.attr_computation("condition")?)?;
+            let body = module.computation(&ins.attr_computation("body")?)?;
+            let mut state = operands[0].clone();
+            loop {
+                let keep = evaluate(module, cond, std::slice::from_ref(&state))?
+                    .into_tensor()?
+                    .scalar_bool()?;
+                if !keep {
+                    return Ok(state);
+                }
+                state = evaluate(module, body, std::slice::from_ref(&state))?;
+            }
+        }
+        "broadcast" => eval_broadcast(ins, operands[0].tensor()?),
+        "reshape" => {
+            let (_, dims) = out_array(ins)?;
+            let t = operands[0].tensor()?;
+            Ok(Value::T(Tensor::new(dims, t.data.clone())?))
+        }
+        "transpose" => eval_transpose(ins, operands[0].tensor()?),
+        "convert" => eval_convert(ins, operands[0].tensor()?),
+        "iota" => eval_iota(ins),
+        "slice" => eval_slice(ins, operands[0].tensor()?),
+        "dynamic-slice" => eval_dynamic_slice(ins, operands),
+        "dynamic-update-slice" => eval_dynamic_update_slice(ins, operands),
+        "concatenate" => eval_concatenate(ins, operands),
+        "compare" => eval_compare(ins, operands[0].tensor()?, operands[1].tensor()?),
+        "select" => eval_select(ins, operands),
+        "reduce" => eval_reduce(module, ins, operands),
+        "gather" => eval_gather(ins, operands[0].tensor()?, operands[1].tensor()?),
+        "scatter" => eval_scatter(module, ins, operands),
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "remainder"
+        | "power" | "and" | "or" | "xor" | "shift-left" | "shift-right-logical"
+        | "shift-right-arithmetic" => {
+            eval_binary(ins, operands[0].tensor()?, operands[1].tensor()?)
+        }
+        "abs" | "negate" | "sine" | "cosine" | "tanh" | "exponential" | "log" | "sqrt"
+        | "rsqrt" | "floor" | "ceil" | "sign" | "not" | "logistic" | "exponential-minus-one"
+        | "log-plus-one" | "round-nearest-afz" | "copy" => eval_unary(ins, operands[0].tensor()?),
+        other => Err(Error(format!("unsupported HLO op '{other}' ('{}')", ins.name))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// constants / iota
+// ---------------------------------------------------------------------------
+
+fn eval_constant(ins: &Instr) -> Result<Value> {
+    let (ty, dims) = out_array(ins)?;
+    let text = ins
+        .const_text
+        .as_deref()
+        .ok_or_else(|| Error(format!("constant '{}' without payload", ins.name)))?;
+    let want: usize = dims.iter().product();
+    // strip braces; the remaining comma-separated scalars are row-major
+    let cleaned: String = text.chars().map(|c| if c == '{' || c == '}' { ' ' } else { c }).collect();
+    let toks: Vec<&str> =
+        cleaned.split(',').map(str::trim).filter(|t| !t.is_empty()).collect();
+    if toks.len() != want {
+        return Err(Error(format!(
+            "constant '{}': {} values for shape {:?}",
+            ins.name,
+            toks.len(),
+            dims
+        )));
+    }
+    let data = match ty {
+        ElementType::Pred => Data::Pred(
+            toks.iter()
+                .map(|t| match *t {
+                    "true" | "1" => Ok(true),
+                    "false" | "0" => Ok(false),
+                    other => Err(Error(format!("bad pred literal '{other}'"))),
+                })
+                .collect::<Result<_>>()?,
+        ),
+        ElementType::S32 => Data::S32(parse_nums::<i32>(&toks)?),
+        ElementType::S64 => Data::S64(parse_nums::<i64>(&toks)?),
+        ElementType::U32 => Data::U32(parse_nums::<u32>(&toks)?),
+        ElementType::U64 => Data::U64(parse_nums::<u64>(&toks)?),
+        ElementType::F32 => Data::F32(parse_nums::<f32>(&toks)?),
+        ElementType::F64 => Data::F64(parse_nums::<f64>(&toks)?),
+        other => return Err(Error(format!("unsupported constant dtype {other:?}"))),
+    };
+    Ok(Value::T(Tensor::new(dims, data)?))
+}
+
+fn parse_nums<T: std::str::FromStr>(toks: &[&str]) -> Result<Vec<T>> {
+    toks.iter()
+        .map(|t| t.parse::<T>().map_err(|_| Error(format!("bad numeric literal '{t}'"))))
+        .collect()
+}
+
+fn eval_iota(ins: &Instr) -> Result<Value> {
+    let (ty, dims) = out_array(ins)?;
+    let d = ins.attr_i64("iota_dimension")? as usize;
+    if d >= dims.len() {
+        return Err(Error(format!("iota dimension {d} out of range for {dims:?}")));
+    }
+    let total: usize = dims.iter().product();
+    let mut out = Data::zeros(ty, total)?;
+    let strides = strides_of(&dims);
+    let mut idx = vec![0usize; dims.len()];
+    let mut first = total > 0;
+    while first {
+        let lin = linear_index(&idx, &strides);
+        let v = idx[d] as i64;
+        write_i64(&mut out, lin, v);
+        first = next_index(&mut idx, &dims);
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+fn write_i64(d: &mut Data, i: usize, v: i64) {
+    match d {
+        Data::Pred(x) => x[i] = v != 0,
+        Data::S32(x) => x[i] = v as i32,
+        Data::S64(x) => x[i] = v,
+        Data::U32(x) => x[i] = v as u32,
+        Data::U64(x) => x[i] = v as u64,
+        Data::F32(x) => x[i] = v as f32,
+        Data::F64(x) => x[i] = v as f64,
+    }
+}
+
+fn write_f64(d: &mut Data, i: usize, v: f64) {
+    match d {
+        Data::Pred(x) => x[i] = v != 0.0,
+        Data::S32(x) => x[i] = v as i32,
+        Data::S64(x) => x[i] = v as i64,
+        Data::U32(x) => x[i] = v as u32,
+        Data::U64(x) => x[i] = v as u64,
+        Data::F32(x) => x[i] = v as f32,
+        Data::F64(x) => x[i] = v,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shape ops
+// ---------------------------------------------------------------------------
+
+fn eval_broadcast(ins: &Instr, t: &Tensor) -> Result<Value> {
+    let (_, dims) = out_array(ins)?;
+    let map = ins.attr_dims("dimensions")?; // operand dim k -> out dim map[k]
+    if map.len() != t.rank() {
+        return Err(Error(format!(
+            "broadcast '{}': {} mapped dims for rank-{} operand",
+            ins.name,
+            map.len(),
+            t.rank()
+        )));
+    }
+    let total: usize = dims.iter().product();
+    let mut out = Data::zeros(t.dtype(), total)?;
+    let out_strides = strides_of(&dims);
+    let src_strides = t.strides();
+    let mut idx = vec![0usize; dims.len()];
+    let mut more = total > 0;
+    while more {
+        let mut src_lin = 0usize;
+        for (k, &od) in map.iter().enumerate() {
+            src_lin += idx[od as usize] * src_strides[k];
+        }
+        let lin = linear_index(&idx, &out_strides);
+        out.copy_elem(lin, &t.data, src_lin)?;
+        more = next_index(&mut idx, &dims);
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+fn eval_transpose(ins: &Instr, t: &Tensor) -> Result<Value> {
+    let (_, dims) = out_array(ins)?;
+    let perm = ins.attr_dims("dimensions")?; // out dim i <- operand dim perm[i]
+    let total: usize = dims.iter().product();
+    let mut out = Data::zeros(t.dtype(), total)?;
+    let out_strides = strides_of(&dims);
+    let src_strides = t.strides();
+    let mut idx = vec![0usize; dims.len()];
+    let mut more = total > 0;
+    while more {
+        let mut src_lin = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            src_lin += idx[i] * src_strides[p as usize];
+        }
+        out.copy_elem(linear_index(&idx, &out_strides), &t.data, src_lin)?;
+        more = next_index(&mut idx, &dims);
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+fn eval_convert(ins: &Instr, t: &Tensor) -> Result<Value> {
+    let (ty, dims) = out_array(ins)?;
+    let n = t.elems();
+    let mut out = Data::zeros(ty, n)?;
+    let src_is_float = matches!(t.dtype(), ElementType::F32 | ElementType::F64);
+    for i in 0..n {
+        if src_is_float {
+            write_f64(&mut out, i, t.data.get_f64(i));
+        } else {
+            write_i64(&mut out, i, t.data.get_i64(i));
+        }
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+fn parse_slice_spec(s: &str) -> Result<Vec<(usize, usize, usize)>> {
+    // {[lo:hi], [lo:hi:stride], ...}
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim().trim_start_matches('[').trim_end_matches(']');
+        if part.is_empty() {
+            continue;
+        }
+        let nums: Vec<usize> = part
+            .split(':')
+            .map(|x| x.trim().parse::<usize>().map_err(|_| Error(format!("bad slice '{s}'"))))
+            .collect::<Result<_>>()?;
+        match nums.as_slice() {
+            [lo, hi] => out.push((*lo, *hi, 1)),
+            [lo, hi, st] => out.push((*lo, *hi, *st)),
+            _ => return Err(Error(format!("bad slice bounds '{part}'"))),
+        }
+    }
+    Ok(out)
+}
+
+fn eval_slice(ins: &Instr, t: &Tensor) -> Result<Value> {
+    let (_, dims) = out_array(ins)?;
+    let spec = parse_slice_spec(ins.attr("slice")?)?;
+    if spec.len() != t.rank() {
+        return Err(Error(format!("slice spec rank mismatch on '{}'", ins.name)));
+    }
+    let total: usize = dims.iter().product();
+    let mut out = Data::zeros(t.dtype(), total)?;
+    let out_strides = strides_of(&dims);
+    let src_strides = t.strides();
+    let mut idx = vec![0usize; dims.len()];
+    let mut more = total > 0;
+    while more {
+        let mut src_lin = 0usize;
+        for d in 0..dims.len() {
+            src_lin += (spec[d].0 + idx[d] * spec[d].2) * src_strides[d];
+        }
+        out.copy_elem(linear_index(&idx, &out_strides), &t.data, src_lin)?;
+        more = next_index(&mut idx, &dims);
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+/// Clamped start indices for dynamic-slice/dynamic-update-slice.
+fn dynamic_starts(
+    operands: &[&Value],
+    first_idx: usize,
+    in_dims: &[usize],
+    window: &[usize],
+) -> Result<Vec<usize>> {
+    let mut starts = Vec::with_capacity(in_dims.len());
+    for d in 0..in_dims.len() {
+        let s = operands
+            .get(first_idx + d)
+            .ok_or_else(|| Error("missing dynamic start index".into()))?
+            .tensor()?
+            .scalar_i64()?;
+        let max = in_dims[d].saturating_sub(window[d]) as i64;
+        starts.push(s.clamp(0, max) as usize);
+    }
+    Ok(starts)
+}
+
+fn eval_dynamic_slice(ins: &Instr, operands: &[&Value]) -> Result<Value> {
+    let t = operands[0].tensor()?;
+    let (_, dims) = out_array(ins)?;
+    let sizes: Vec<usize> = match ins.attrs.get("dynamic_slice_sizes") {
+        Some(v) => crate::hlo::parse_brace_list(v)?.into_iter().map(|x| x as usize).collect(),
+        None => dims.clone(),
+    };
+    let starts = dynamic_starts(operands, 1, &t.dims, &sizes)?;
+    let total: usize = dims.iter().product();
+    let mut out = Data::zeros(t.dtype(), total)?;
+    let out_strides = strides_of(&dims);
+    let src_strides = t.strides();
+    let mut idx = vec![0usize; dims.len()];
+    let mut more = total > 0;
+    while more {
+        let mut src_lin = 0usize;
+        for d in 0..dims.len() {
+            src_lin += (starts[d] + idx[d]) * src_strides[d];
+        }
+        out.copy_elem(linear_index(&idx, &out_strides), &t.data, src_lin)?;
+        more = next_index(&mut idx, &dims);
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+fn eval_dynamic_update_slice(ins: &Instr, operands: &[&Value]) -> Result<Value> {
+    let t = operands[0].tensor()?;
+    let u = operands[1].tensor()?;
+    let (_, dims) = out_array(ins)?;
+    let starts = dynamic_starts(operands, 2, &t.dims, &u.dims)?;
+    let mut out = t.data.clone();
+    let dst_strides = t.strides();
+    let src_strides = u.strides();
+    let mut idx = vec![0usize; u.rank()];
+    let mut more = u.elems() > 0;
+    while more {
+        let mut dst_lin = 0usize;
+        for d in 0..u.rank() {
+            dst_lin += (starts[d] + idx[d]) * dst_strides[d];
+        }
+        out.copy_elem(dst_lin, &u.data, linear_index(&idx, &src_strides))?;
+        more = next_index(&mut idx, &u.dims);
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+fn eval_concatenate(ins: &Instr, operands: &[&Value]) -> Result<Value> {
+    let (ty, dims) = out_array(ins)?;
+    let axis = ins
+        .attr_dims("dimensions")?
+        .first()
+        .copied()
+        .ok_or_else(|| Error("concatenate without dimension".into()))? as usize;
+    let total: usize = dims.iter().product();
+    let mut out = Data::zeros(ty, total)?;
+    let out_strides = strides_of(&dims);
+    let mut offset = 0usize;
+    for v in operands {
+        let t = v.tensor()?;
+        let src_strides = t.strides();
+        let mut idx = vec![0usize; t.rank()];
+        let mut more = t.elems() > 0;
+        while more {
+            let mut dst_lin = 0usize;
+            for d in 0..t.rank() {
+                let pos = if d == axis { idx[d] + offset } else { idx[d] };
+                dst_lin += pos * out_strides[d];
+            }
+            out.copy_elem(dst_lin, &t.data, linear_index(&idx, &src_strides))?;
+            more = next_index(&mut idx, &t.dims);
+        }
+        offset += t.dims[axis];
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+// ---------------------------------------------------------------------------
+// elementwise
+// ---------------------------------------------------------------------------
+
+/// Resolve (elementwise) operand pairs where one side may be a scalar.
+fn pair_index(i: usize, len: usize) -> usize {
+    if len == 1 {
+        0
+    } else {
+        i
+    }
+}
+
+fn eval_compare(ins: &Instr, a: &Tensor, b: &Tensor) -> Result<Value> {
+    let (_, dims) = out_array(ins)?;
+    let dir = ins.attr("direction")?.to_string();
+    let n: usize = dims.iter().product();
+    let float = matches!(a.dtype(), ElementType::F32 | ElementType::F64);
+    let mut out = vec![false; n];
+    for (i, o) in out.iter_mut().enumerate() {
+        let (ia, ib) = (pair_index(i, a.elems()), pair_index(i, b.elems()));
+        *o = if float {
+            let (x, y) = (a.data.get_f64(ia), b.data.get_f64(ib));
+            match dir.as_str() {
+                "EQ" => x == y,
+                "NE" => x != y,
+                "LT" => x < y,
+                "LE" => x <= y,
+                "GT" => x > y,
+                "GE" => x >= y,
+                other => return Err(Error(format!("bad compare direction '{other}'"))),
+            }
+        } else {
+            let (x, y) = (a.data.get_i64(ia), b.data.get_i64(ib));
+            match dir.as_str() {
+                "EQ" => x == y,
+                "NE" => x != y,
+                "LT" => x < y,
+                "LE" => x <= y,
+                "GT" => x > y,
+                "GE" => x >= y,
+                other => return Err(Error(format!("bad compare direction '{other}'"))),
+            }
+        };
+    }
+    Ok(Value::T(Tensor::new(dims, Data::Pred(out))?))
+}
+
+fn eval_select(ins: &Instr, operands: &[&Value]) -> Result<Value> {
+    let p = operands[0].tensor()?;
+    let t = operands[1].tensor()?;
+    let f = operands[2].tensor()?;
+    let (_, dims) = out_array(ins)?;
+    let n: usize = dims.iter().product();
+    let preds = match &p.data {
+        Data::Pred(v) => v,
+        _ => return Err(Error("select predicate must be pred".into())),
+    };
+    let mut out = Data::zeros(t.dtype(), n)?;
+    for i in 0..n {
+        let cond = preds[pair_index(i, preds.len())];
+        let src = if cond { t } else { f };
+        out.copy_elem(i, &src.data, pair_index(i, src.elems()))?;
+    }
+    Ok(Value::T(Tensor::new(dims, out)?))
+}
+
+fn eval_binary(ins: &Instr, a: &Tensor, b: &Tensor) -> Result<Value> {
+    let (_, dims) = out_array(ins)?;
+    let n: usize = dims.iter().product();
+    let op = ins.op.as_str();
+    macro_rules! float_case {
+        ($variant:ident, $ty:ty, $av:expr, $bv:expr) => {{
+            let mut out: Vec<$ty> = Vec::with_capacity(n);
+            for i in 0..n {
+                let x = $av[pair_index(i, $av.len())];
+                let y = $bv[pair_index(i, $bv.len())];
+                out.push(match op {
+                    "add" => x + y,
+                    "subtract" => x - y,
+                    "multiply" => x * y,
+                    "divide" => x / y,
+                    "maximum" => x.max(y),
+                    "minimum" => x.min(y),
+                    "remainder" => x % y,
+                    "power" => x.powf(y),
+                    other => {
+                        return Err(Error(format!("op '{other}' unsupported on floats")))
+                    }
+                });
+            }
+            Data::$variant(out)
+        }};
+    }
+    macro_rules! int_case {
+        ($variant:ident, $ty:ty, $av:expr, $bv:expr) => {{
+            let mut out: Vec<$ty> = Vec::with_capacity(n);
+            for i in 0..n {
+                let x = $av[pair_index(i, $av.len())];
+                let y = $bv[pair_index(i, $bv.len())];
+                let bits = <$ty>::BITS as u64;
+                out.push(match op {
+                    "add" => x.wrapping_add(y),
+                    "subtract" => x.wrapping_sub(y),
+                    "multiply" => x.wrapping_mul(y),
+                    "divide" => {
+                        if y == 0 {
+                            0
+                        } else {
+                            x.wrapping_div(y)
+                        }
+                    }
+                    "remainder" => {
+                        if y == 0 {
+                            0
+                        } else {
+                            x.wrapping_rem(y)
+                        }
+                    }
+                    "maximum" => x.max(y),
+                    "minimum" => x.min(y),
+                    "and" => x & y,
+                    "or" => x | y,
+                    "xor" => x ^ y,
+                    "shift-left" => {
+                        let s = y as u64;
+                        if s >= bits {
+                            0
+                        } else {
+                            x << s
+                        }
+                    }
+                    "shift-right-logical" => {
+                        let s = y as u64;
+                        if s >= bits {
+                            0
+                        } else {
+                            (((x as u64) & ((!0u64) >> (64 - bits))) >> s) as $ty
+                        }
+                    }
+                    "shift-right-arithmetic" => {
+                        let s = (y as u64).min(bits - 1);
+                        x >> s
+                    }
+                    other => {
+                        return Err(Error(format!("op '{other}' unsupported on integers")))
+                    }
+                });
+            }
+            Data::$variant(out)
+        }};
+    }
+    let data = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => float_case!(F32, f32, x, y),
+        (Data::F64(x), Data::F64(y)) => float_case!(F64, f64, x, y),
+        (Data::S32(x), Data::S32(y)) => int_case!(S32, i32, x, y),
+        (Data::S64(x), Data::S64(y)) => int_case!(S64, i64, x, y),
+        (Data::U32(x), Data::U32(y)) => int_case!(U32, u32, x, y),
+        (Data::U64(x), Data::U64(y)) => int_case!(U64, u64, x, y),
+        (Data::Pred(x), Data::Pred(y)) => {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let xa = x[pair_index(i, x.len())];
+                let yb = y[pair_index(i, y.len())];
+                out.push(match op {
+                    "and" => xa && yb,
+                    "or" => xa || yb,
+                    "xor" => xa != yb,
+                    other => return Err(Error(format!("op '{other}' unsupported on pred"))),
+                });
+            }
+            Data::Pred(out)
+        }
+        (x, y) => {
+            return Err(Error(format!(
+                "binary '{}' dtype mismatch: {:?} vs {:?}",
+                op,
+                x.dtype(),
+                y.dtype()
+            )))
+        }
+    };
+    Ok(Value::T(Tensor::new(dims, data)?))
+}
+
+fn eval_unary(ins: &Instr, t: &Tensor) -> Result<Value> {
+    let (_, dims) = out_array(ins)?;
+    let op = ins.op.as_str();
+    macro_rules! float_case {
+        ($variant:ident, $ty:ty, $v:expr) => {{
+            let out: Vec<$ty> = $v
+                .iter()
+                .map(|&x| match op {
+                    "abs" => x.abs(),
+                    "negate" => -x,
+                    "sine" => x.sin(),
+                    "cosine" => x.cos(),
+                    "tanh" => x.tanh(),
+                    "exponential" => x.exp(),
+                    "exponential-minus-one" => x.exp_m1(),
+                    "log" => x.ln(),
+                    "log-plus-one" => x.ln_1p(),
+                    "sqrt" => x.sqrt(),
+                    "rsqrt" => x.sqrt().recip(),
+                    "floor" => x.floor(),
+                    "ceil" => x.ceil(),
+                    "round-nearest-afz" => x.round(),
+                    "sign" => {
+                        if x > 0.0 {
+                            1.0
+                        } else if x < 0.0 {
+                            -1.0
+                        } else {
+                            x
+                        }
+                    }
+                    "logistic" => 1.0 / (1.0 + (-x).exp()),
+                    "copy" => x,
+                    _ => <$ty>::NAN, // checked below
+                })
+                .collect();
+            if !matches!(
+                op,
+                "abs" | "negate"
+                    | "sine"
+                    | "cosine"
+                    | "tanh"
+                    | "exponential"
+                    | "exponential-minus-one"
+                    | "log"
+                    | "log-plus-one"
+                    | "sqrt"
+                    | "rsqrt"
+                    | "floor"
+                    | "ceil"
+                    | "round-nearest-afz"
+                    | "sign"
+                    | "logistic"
+                    | "copy"
+            ) {
+                return Err(Error(format!("op '{op}' unsupported on floats")));
+            }
+            Data::$variant(out)
+        }};
+    }
+    let data = match &t.data {
+        Data::F32(v) => float_case!(F32, f32, v),
+        Data::F64(v) => float_case!(F64, f64, v),
+        Data::S32(v) => int_unary_s32_like(op, v)?,
+        Data::S64(v) => match op {
+            "abs" => Data::S64(v.iter().map(|&x| x.wrapping_abs()).collect()),
+            "negate" => Data::S64(v.iter().map(|&x| x.wrapping_neg()).collect()),
+            "not" => Data::S64(v.iter().map(|&x| !x).collect()),
+            "sign" => Data::S64(v.iter().map(|&x| x.signum()).collect()),
+            "copy" => Data::S64(v.clone()),
+            other => return Err(Error(format!("op '{other}' unsupported on s64"))),
+        },
+        Data::U32(v) => match op {
+            "abs" | "copy" => Data::U32(v.clone()),
+            "negate" => Data::U32(v.iter().map(|&x| x.wrapping_neg()).collect()),
+            "not" => Data::U32(v.iter().map(|&x| !x).collect()),
+            "sign" => Data::U32(v.iter().map(|&x| u32::from(x != 0)).collect()),
+            other => return Err(Error(format!("op '{other}' unsupported on u32"))),
+        },
+        Data::U64(v) => match op {
+            "abs" | "copy" => Data::U64(v.clone()),
+            "negate" => Data::U64(v.iter().map(|&x| x.wrapping_neg()).collect()),
+            "not" => Data::U64(v.iter().map(|&x| !x).collect()),
+            "sign" => Data::U64(v.iter().map(|&x| u64::from(x != 0)).collect()),
+            other => return Err(Error(format!("op '{other}' unsupported on u64"))),
+        },
+        Data::Pred(v) => match op {
+            "not" => Data::Pred(v.iter().map(|&x| !x).collect()),
+            "copy" => Data::Pred(v.clone()),
+            other => return Err(Error(format!("op '{other}' unsupported on pred"))),
+        },
+    };
+    Ok(Value::T(Tensor::new(dims, data)?))
+}
+
+fn int_unary_s32_like(op: &str, v: &[i32]) -> Result<Data> {
+    Ok(match op {
+        "abs" => Data::S32(v.iter().map(|&x| x.wrapping_abs()).collect()),
+        "negate" => Data::S32(v.iter().map(|&x| x.wrapping_neg()).collect()),
+        "not" => Data::S32(v.iter().map(|&x| !x).collect()),
+        "sign" => Data::S32(v.iter().map(|&x| x.signum()).collect()),
+        "copy" => Data::S32(v.to_vec()),
+        other => return Err(Error(format!("op '{other}' unsupported on s32"))),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// reduce / gather / scatter (use `to_apply` computations)
+// ---------------------------------------------------------------------------
+
+/// Recognized single-instruction combiner regions (fast path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum FastCombine {
+    Add,
+    Mul,
+    Max,
+    Min,
+    Or,
+    And,
+    /// `ROOT = parameter(0)` — keep the accumulator.
+    First,
+    /// `ROOT = parameter(1)` — overwrite with the element.
+    Second,
+}
+
+fn fast_combiner(comp: &Computation) -> Option<FastCombine> {
+    let root = &comp.instrs[comp.root];
+    let param_no = |name: &str| -> Option<usize> {
+        let idx = *comp.index.get(name)?;
+        let ins = &comp.instrs[idx];
+        if ins.op == "parameter" {
+            ins.operands.first()?.parse().ok()
+        } else {
+            None
+        }
+    };
+    if root.op == "parameter" {
+        return match root.operands.first()?.parse::<usize>().ok()? {
+            0 => Some(FastCombine::First),
+            1 => Some(FastCombine::Second),
+            _ => None,
+        };
+    }
+    if root.operands.len() != 2 {
+        return None;
+    }
+    let (a, b) = (param_no(&root.operands[0])?, param_no(&root.operands[1])?);
+    if (a, b) != (0, 1) {
+        return None;
+    }
+    match root.op.as_str() {
+        "add" => Some(FastCombine::Add),
+        "multiply" => Some(FastCombine::Mul),
+        "maximum" => Some(FastCombine::Max),
+        "minimum" => Some(FastCombine::Min),
+        "or" => Some(FastCombine::Or),
+        "and" => Some(FastCombine::And),
+        _ => None,
+    }
+}
+
+/// Combine two elements (same dtype) by `fc`, reading from `acc[ai]` and
+/// `elem[ei]`, writing back into `acc[ai]`.
+fn fast_combine_elem(
+    fc: FastCombine,
+    acc: &mut Data,
+    ai: usize,
+    elem: &Data,
+    ei: usize,
+) -> Result<()> {
+    match fc {
+        FastCombine::First => Ok(()),
+        FastCombine::Second => acc.copy_elem(ai, elem, ei),
+        _ => {
+            match (acc, elem) {
+                (Data::F32(a), Data::F32(e)) => {
+                    a[ai] = match fc {
+                        FastCombine::Add => a[ai] + e[ei],
+                        FastCombine::Mul => a[ai] * e[ei],
+                        FastCombine::Max => a[ai].max(e[ei]),
+                        FastCombine::Min => a[ai].min(e[ei]),
+                        _ => return Err(Error("bad combiner for f32".into())),
+                    }
+                }
+                (Data::F64(a), Data::F64(e)) => {
+                    a[ai] = match fc {
+                        FastCombine::Add => a[ai] + e[ei],
+                        FastCombine::Mul => a[ai] * e[ei],
+                        FastCombine::Max => a[ai].max(e[ei]),
+                        FastCombine::Min => a[ai].min(e[ei]),
+                        _ => return Err(Error("bad combiner for f64".into())),
+                    }
+                }
+                (Data::S32(a), Data::S32(e)) => {
+                    a[ai] = match fc {
+                        FastCombine::Add => a[ai].wrapping_add(e[ei]),
+                        FastCombine::Mul => a[ai].wrapping_mul(e[ei]),
+                        FastCombine::Max => a[ai].max(e[ei]),
+                        FastCombine::Min => a[ai].min(e[ei]),
+                        FastCombine::Or => a[ai] | e[ei],
+                        FastCombine::And => a[ai] & e[ei],
+                        _ => unreachable!(),
+                    }
+                }
+                (Data::S64(a), Data::S64(e)) => {
+                    a[ai] = match fc {
+                        FastCombine::Add => a[ai].wrapping_add(e[ei]),
+                        FastCombine::Mul => a[ai].wrapping_mul(e[ei]),
+                        FastCombine::Max => a[ai].max(e[ei]),
+                        FastCombine::Min => a[ai].min(e[ei]),
+                        FastCombine::Or => a[ai] | e[ei],
+                        FastCombine::And => a[ai] & e[ei],
+                        _ => unreachable!(),
+                    }
+                }
+                (Data::U32(a), Data::U32(e)) => {
+                    a[ai] = match fc {
+                        FastCombine::Add => a[ai].wrapping_add(e[ei]),
+                        FastCombine::Mul => a[ai].wrapping_mul(e[ei]),
+                        FastCombine::Max => a[ai].max(e[ei]),
+                        FastCombine::Min => a[ai].min(e[ei]),
+                        FastCombine::Or => a[ai] | e[ei],
+                        FastCombine::And => a[ai] & e[ei],
+                        _ => unreachable!(),
+                    }
+                }
+                (Data::U64(a), Data::U64(e)) => {
+                    a[ai] = match fc {
+                        FastCombine::Add => a[ai].wrapping_add(e[ei]),
+                        FastCombine::Mul => a[ai].wrapping_mul(e[ei]),
+                        FastCombine::Max => a[ai].max(e[ei]),
+                        FastCombine::Min => a[ai].min(e[ei]),
+                        FastCombine::Or => a[ai] | e[ei],
+                        FastCombine::And => a[ai] & e[ei],
+                        _ => unreachable!(),
+                    }
+                }
+                (Data::Pred(a), Data::Pred(e)) => {
+                    a[ai] = match fc {
+                        FastCombine::Or => a[ai] || e[ei],
+                        FastCombine::And => a[ai] && e[ei],
+                        FastCombine::Add => a[ai] != e[ei],
+                        FastCombine::Max => a[ai] || e[ei],
+                        FastCombine::Min => a[ai] && e[ei],
+                        _ => return Err(Error("bad combiner for pred".into())),
+                    }
+                }
+                (a, e) => {
+                    return Err(Error(format!(
+                        "combiner dtype mismatch: {:?} vs {:?}",
+                        a.dtype(),
+                        e.dtype()
+                    )))
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+fn scalar_tensor_from(data: &Data, i: usize) -> Result<Tensor> {
+    let mut d = Data::zeros(data.dtype(), 1)?;
+    d.copy_elem(0, data, i)?;
+    Tensor::new(vec![], d)
+}
+
+fn eval_reduce(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<Value> {
+    let k = operands.len() / 2;
+    if operands.len() != 2 * k || k == 0 {
+        return Err(Error(format!("reduce '{}' needs k inputs + k inits", ins.name)));
+    }
+    let region = module.computation(&ins.attr_computation("to_apply")?)?;
+    let red_dims: Vec<usize> =
+        ins.attr_dims("dimensions")?.into_iter().map(|d| d as usize).collect();
+    let inputs: Vec<&Tensor> =
+        operands[..k].iter().map(|v| v.tensor()).collect::<Result<_>>()?;
+    let inits: Vec<&Tensor> =
+        operands[k..].iter().map(|v| v.tensor()).collect::<Result<_>>()?;
+    let in_dims = inputs[0].dims.clone();
+    for t in &inputs {
+        if t.dims != in_dims {
+            return Err(Error("reduce inputs must share dims".into()));
+        }
+    }
+    // output dims: input dims with reduced dims removed (in order)
+    let kept: Vec<usize> =
+        (0..in_dims.len()).filter(|d| !red_dims.contains(d)).collect();
+    let out_dims: Vec<usize> = kept.iter().map(|&d| in_dims[d]).collect();
+    let out_elems: usize = out_dims.iter().product();
+    let out_strides = strides_of(&out_dims);
+    let in_strides = strides_of(&in_dims);
+
+    // accumulators, seeded from the inits
+    let mut accs: Vec<Data> = Vec::with_capacity(k);
+    for init in &inits {
+        let mut d = Data::zeros(init.dtype(), out_elems)?;
+        for i in 0..out_elems {
+            d.copy_elem(i, &init.data, 0)?;
+        }
+        accs.push(d);
+    }
+
+    let fast = if k == 1 { fast_combiner(region) } else { None };
+
+    // f32 sum reduction: accumulate in f64 (the 1001-term trapezoid sums
+    // of the Series kernel cancel catastrophically in f32; the bench
+    // suite validates against the f64 sequential oracle)
+    if fast == Some(FastCombine::Add) {
+        if let (Data::F32(input), Data::F32(acc)) = (&inputs[0].data, &mut accs[0]) {
+            let mut wide: Vec<f64> = acc.iter().map(|&v| v as f64).collect();
+            let total: usize = in_dims.iter().product();
+            let mut idx = vec![0usize; in_dims.len()];
+            let mut more = total > 0;
+            while more {
+                let mut out_lin = 0usize;
+                for (pos, &d) in kept.iter().enumerate() {
+                    out_lin += idx[d] * out_strides[pos];
+                }
+                wide[out_lin] += input[linear_index(&idx, &in_strides)] as f64;
+                more = next_index(&mut idx, &in_dims);
+            }
+            for (a, w) in acc.iter_mut().zip(&wide) {
+                *a = *w as f32;
+            }
+            return Ok(Value::T(Tensor::new(out_dims, accs.pop().unwrap())?));
+        }
+    }
+
+    let total: usize = in_dims.iter().product();
+    let mut idx = vec![0usize; in_dims.len()];
+    let mut more = total > 0;
+    while more {
+        let mut out_lin = 0usize;
+        for (pos, &d) in kept.iter().enumerate() {
+            out_lin += idx[d] * out_strides[pos];
+        }
+        let in_lin = linear_index(&idx, &in_strides);
+        if let Some(fc) = fast {
+            fast_combine_elem(fc, &mut accs[0], out_lin, &inputs[0].data, in_lin)?;
+        } else {
+            // generic: region(acc..., elem...)
+            let mut call_args: Vec<Value> = Vec::with_capacity(2 * k);
+            for a in &accs {
+                call_args.push(Value::T(scalar_tensor_from(a, out_lin)?));
+            }
+            for t in &inputs {
+                call_args.push(Value::T(scalar_tensor_from(&t.data, in_lin)?));
+            }
+            let res = evaluate(module, region, &call_args)?;
+            let parts: Vec<Value> = match res {
+                Value::Tuple(p) => p,
+                v @ Value::T(_) => vec![v],
+            };
+            if parts.len() != k {
+                return Err(Error("reduce region arity mismatch".into()));
+            }
+            for (a, p) in accs.iter_mut().zip(&parts) {
+                a.copy_elem(out_lin, &p.tensor()?.data, 0)?;
+            }
+        }
+        more = next_index(&mut idx, &in_dims);
+    }
+
+    let mut outs: Vec<Value> = Vec::with_capacity(k);
+    for d in accs {
+        outs.push(Value::T(Tensor::new(out_dims.clone(), d)?));
+    }
+    if k == 1 {
+        Ok(outs.pop().unwrap())
+    } else {
+        Ok(Value::Tuple(outs))
+    }
+}
+
+/// Read the start-index vector for gather/scatter index position
+/// `batch_idx` (the scatter/batch coordinates, in order).
+fn start_vector(
+    s: &Tensor,
+    batch_idx: &[usize],
+    index_vector_dim: usize,
+    vec_len: usize,
+) -> Result<Vec<i64>> {
+    let strides = s.strides();
+    let mut out = Vec::with_capacity(vec_len);
+    for comp in 0..vec_len {
+        // rebuild the full index into S: batch coords with `comp` inserted
+        // at index_vector_dim (or nothing inserted if ivd == rank)
+        let mut lin = 0usize;
+        let mut b = 0usize;
+        for d in 0..s.rank() {
+            let coord = if d == index_vector_dim {
+                comp
+            } else {
+                let c = batch_idx[b];
+                b += 1;
+                c
+            };
+            lin += coord * strides[d];
+        }
+        out.push(s.data.get_i64(lin));
+    }
+    Ok(out)
+}
+
+fn eval_gather(ins: &Instr, operand: &Tensor, indices: &Tensor) -> Result<Value> {
+    let (_, out_dims) = out_array(ins)?;
+    let offset_dims: Vec<usize> =
+        ins.attr_dims("offset_dims")?.into_iter().map(|d| d as usize).collect();
+    let collapsed: Vec<usize> =
+        ins.attr_dims("collapsed_slice_dims")?.into_iter().map(|d| d as usize).collect();
+    let start_index_map: Vec<usize> =
+        ins.attr_dims("start_index_map")?.into_iter().map(|d| d as usize).collect();
+    let ivd = ins.attr_i64("index_vector_dim")? as usize;
+    let slice_sizes: Vec<usize> =
+        ins.attr_dims("slice_sizes")?.into_iter().map(|d| d as usize).collect();
+
+    let out_rank = out_dims.len();
+    let batch_dims_in_out: Vec<usize> =
+        (0..out_rank).filter(|d| !offset_dims.contains(d)).collect();
+    // operand dims that survive collapsing, in order — matched with
+    // offset_dims in order
+    let kept_operand_dims: Vec<usize> =
+        (0..operand.rank()).filter(|d| !collapsed.contains(d)).collect();
+    if kept_operand_dims.len() != offset_dims.len() {
+        return Err(Error(format!("gather '{}' offset/collapsed mismatch", ins.name)));
+    }
+
+    let total: usize = out_dims.iter().product();
+    let mut out = Data::zeros(operand.dtype(), total)?;
+    let out_strides = strides_of(&out_dims);
+    let op_strides = operand.strides();
+    let mut idx = vec![0usize; out_rank];
+    let mut more = total > 0;
+    while more {
+        let batch_idx: Vec<usize> = batch_dims_in_out.iter().map(|&d| idx[d]).collect();
+        let starts = start_vector(indices, &batch_idx, ivd, start_index_map.len())?;
+        let mut full_start = vec![0i64; operand.rank()];
+        for (k, &d) in start_index_map.iter().enumerate() {
+            let max = operand.dims[d] as i64 - slice_sizes[d] as i64;
+            full_start[d] = starts[k].clamp(0, max.max(0));
+        }
+        let mut lin = 0usize;
+        for (pos, &d) in kept_operand_dims.iter().enumerate() {
+            let off = idx[offset_dims[pos]];
+            lin += (full_start[d] as usize + off) * op_strides[d];
+        }
+        for &d in &collapsed {
+            lin += full_start[d] as usize * op_strides[d];
+        }
+        out.copy_elem(linear_index(&idx, &out_strides), &operand.data, lin)?;
+        more = next_index(&mut idx, &out_dims);
+    }
+    Ok(Value::T(Tensor::new(out_dims, out)?))
+}
+
+fn eval_scatter(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<Value> {
+    // single-operand scatter: (operand, scatter_indices, updates)
+    if operands.len() != 3 {
+        return Err(Error(format!("scatter '{}' expects 3 operands", ins.name)));
+    }
+    let operand = operands[0].tensor()?;
+    let indices = operands[1].tensor()?;
+    let updates = operands[2].tensor()?;
+    let (_, out_dims) = out_array(ins)?;
+    let update_window_dims: Vec<usize> =
+        ins.attr_dims("update_window_dims")?.into_iter().map(|d| d as usize).collect();
+    let inserted: Vec<usize> =
+        ins.attr_dims("inserted_window_dims")?.into_iter().map(|d| d as usize).collect();
+    let to_operand: Vec<usize> = ins
+        .attr_dims("scatter_dims_to_operand_dims")?
+        .into_iter()
+        .map(|d| d as usize)
+        .collect();
+    let ivd = ins.attr_i64("index_vector_dim")? as usize;
+    let region = module.computation(&ins.attr_computation("to_apply")?)?;
+    let fast = fast_combiner(region);
+
+    // operand window dims (not inserted), matched in order with
+    // update_window_dims
+    let window_operand_dims: Vec<usize> =
+        (0..operand.rank()).filter(|d| !inserted.contains(d)).collect();
+    if window_operand_dims.len() != update_window_dims.len() {
+        return Err(Error(format!("scatter '{}' window dims mismatch", ins.name)));
+    }
+    let scatter_dims_in_updates: Vec<usize> =
+        (0..updates.rank()).filter(|d| !update_window_dims.contains(d)).collect();
+
+    let mut out = operand.data.clone();
+    let op_strides = operand.strides();
+    let up_strides = updates.strides();
+    let total = updates.elems();
+    let mut idx = vec![0usize; updates.rank()];
+    let mut more = total > 0;
+    while more {
+        let batch_idx: Vec<usize> =
+            scatter_dims_in_updates.iter().map(|&d| idx[d]).collect();
+        let starts = start_vector(indices, &batch_idx, ivd, to_operand.len())?;
+        let mut full_start = vec![0i64; operand.rank()];
+        for (k, &d) in to_operand.iter().enumerate() {
+            full_start[d] = starts[k];
+        }
+        // resolve the target element; out-of-bounds updates are dropped
+        let mut lin = 0usize;
+        let mut oob = false;
+        for d in 0..operand.rank() {
+            let coord = if let Some(pos) = window_operand_dims.iter().position(|&w| w == d) {
+                full_start[d] + idx[update_window_dims[pos]] as i64
+            } else {
+                full_start[d]
+            };
+            if coord < 0 || coord >= operand.dims[d] as i64 {
+                oob = true;
+                break;
+            }
+            lin += coord as usize * op_strides[d];
+        }
+        if !oob {
+            let up_lin = linear_index(&idx, &up_strides);
+            if let Some(fc) = fast {
+                fast_combine_elem(fc, &mut out, lin, &updates.data, up_lin)?;
+            } else {
+                let call_args = vec![
+                    Value::T(scalar_tensor_from(&out, lin)?),
+                    Value::T(scalar_tensor_from(&updates.data, up_lin)?),
+                ];
+                let res = evaluate(module, region, &call_args)?;
+                out.copy_elem(lin, &res.tensor()?.data, 0)?;
+            }
+        }
+        more = next_index(&mut idx, &updates.dims);
+    }
+    Ok(Value::T(Tensor::new(out_dims, out)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parse_module;
+
+    fn run(text: &str, args: &[Value]) -> Value {
+        let m = parse_module(text).unwrap();
+        execute_module(&m, args).unwrap()
+    }
+
+    fn f32v(v: Vec<f32>) -> Value {
+        let n = v.len();
+        Value::T(Tensor::new(vec![n], Data::F32(v)).unwrap())
+    }
+
+    #[test]
+    fn add_two_vectors() {
+        let text = "HloModule m\n\nENTRY e.3 {\n  a.1 = f32[3]{0} parameter(0)\n  b.2 = f32[3]{0} parameter(1)\n  ROOT add.3 = f32[3]{0} add(a.1, b.2)\n}\n";
+        let out = run(text, &[f32v(vec![1.0, 2.0, 3.0]), f32v(vec![10.0, 20.0, 30.0])]);
+        assert_eq!(out, f32v(vec![11.0, 22.0, 33.0]));
+    }
+
+    #[test]
+    fn while_loop_counts_and_accumulates() {
+        let text = r#"
+HloModule m
+
+%body.1 (s.2: (s32[], f32[])) -> (s32[], f32[]) {
+  %s.2 = (s32[], f32[]) parameter(0)
+  %i.3 = s32[] get-tuple-element((s32[], f32[]) %s.2), index=0
+  %x.4 = f32[] get-tuple-element((s32[], f32[]) %s.2), index=1
+  %one.5 = s32[] constant(1)
+  %ip.6 = s32[] add(s32[] %i.3, s32[] %one.5)
+  %half.7 = f32[] constant(2.5)
+  %xp.8 = f32[] add(f32[] %x.4, f32[] %half.7)
+  ROOT %t.9 = (s32[], f32[]) tuple(s32[] %ip.6, f32[] %xp.8)
+}
+
+%cond.10 (s.11: (s32[], f32[])) -> pred[] {
+  %s.11 = (s32[], f32[]) parameter(0)
+  %i.12 = s32[] get-tuple-element((s32[], f32[]) %s.11), index=0
+  %lim.13 = s32[] constant(4)
+  ROOT %c.14 = pred[] compare(s32[] %i.12, s32[] %lim.13), direction=LT
+}
+
+ENTRY %main.20 {
+  %z.15 = s32[] constant(0)
+  %f.16 = f32[] constant(0)
+  %t.17 = (s32[], f32[]) tuple(s32[] %z.15, f32[] %f.16)
+  %w.18 = (s32[], f32[]) while((s32[], f32[]) %t.17), condition=%cond.10, body=%body.1
+  ROOT %r.19 = f32[] get-tuple-element((s32[], f32[]) %w.18), index=1
+}
+"#;
+        let out = run(text, &[]);
+        assert_eq!(out, Value::T(Tensor::new(vec![], Data::F32(vec![10.0])).unwrap()));
+    }
+
+    #[test]
+    fn dynamic_slice_and_update_roundtrip() {
+        let text = "HloModule m\n\nENTRY e.9 {\n  a.1 = f32[6]{0} parameter(0)\n  i.2 = s32[] parameter(1)\n  ds.3 = f32[2]{0} dynamic-slice(a.1, i.2), dynamic_slice_sizes={2}\n  two.4 = f32[] constant(10)\n  b.5 = f32[2]{0} broadcast(two.4), dimensions={}\n  sum.6 = f32[2]{0} add(ds.3, b.5)\n  ROOT dus.7 = f32[6]{0} dynamic-update-slice(a.1, sum.6, i.2)\n}\n";
+        let a = f32v(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let i = Value::T(Tensor::new(vec![], Data::S32(vec![2])).unwrap());
+        let out = run(text, &[a, i]);
+        assert_eq!(out, f32v(vec![0.0, 1.0, 12.0, 13.0, 4.0, 5.0]));
+    }
+
+    #[test]
+    fn reduce_sum_over_matrix() {
+        let text = r#"
+HloModule m
+
+%sum.1 (a.2: f32[], b.3: f32[]) -> f32[] {
+  %a.2 = f32[] parameter(0)
+  %b.3 = f32[] parameter(1)
+  ROOT %r.4 = f32[] add(f32[] %a.2, f32[] %b.3)
+}
+
+ENTRY %e.4 {
+  %p.1 = f32[2,3]{1,0} parameter(0)
+  %z.2 = f32[] constant(0)
+  ROOT %red.3 = f32[2]{0} reduce(f32[2,3]{1,0} %p.1, f32[] %z.2), dimensions={1}, to_apply=%sum.1
+}
+"#;
+        let m = Value::T(
+            Tensor::new(vec![2, 3], Data::F32(vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0])).unwrap(),
+        );
+        let out = run(text, &[m]);
+        assert_eq!(out, Value::T(Tensor::new(vec![2], Data::F32(vec![6.0, 60.0])).unwrap()));
+    }
+
+    #[test]
+    fn variadic_reduce_argmax() {
+        // argmax over (values, iota) — the LUFact pivot pattern
+        let text = r#"
+HloModule m
+
+%amax.1 (a.2: f32[], ai.3: s32[], b.4: f32[], bi.5: s32[]) -> (f32[], s32[]) {
+  %a.2 = f32[] parameter(0)
+  %ai.3 = s32[] parameter(1)
+  %b.4 = f32[] parameter(2)
+  %bi.5 = s32[] parameter(3)
+  %ge.6 = pred[] compare(f32[] %a.2, f32[] %b.4), direction=GE
+  %v.7 = f32[] select(pred[] %ge.6, f32[] %a.2, f32[] %b.4)
+  %i.8 = s32[] select(pred[] %ge.6, s32[] %ai.3, s32[] %bi.5)
+  ROOT %t.9 = (f32[], s32[]) tuple(f32[] %v.7, s32[] %i.8)
+}
+
+ENTRY %e.9 {
+  %p.1 = f32[4]{0} parameter(0)
+  %io.2 = s32[4]{0} iota(), iota_dimension=0
+  %ninf.3 = f32[] constant(-inf)
+  %zero.4 = s32[] constant(0)
+  %r.5 = (f32[], s32[]) reduce(f32[4]{0} %p.1, s32[4]{0} %io.2, f32[] %ninf.3, s32[] %zero.4), dimensions={0}, to_apply=%amax.1
+  ROOT %i.6 = s32[] get-tuple-element((f32[], s32[]) %r.5), index=1
+}
+"#;
+        let out = run(text, &[f32v(vec![3.0, 9.0, 1.0, 9.0])]);
+        assert_eq!(out, Value::T(Tensor::new(vec![], Data::S32(vec![1])).unwrap()));
+    }
+
+    #[test]
+    fn gather_elementwise_from_matrix() {
+        // x[col[i]] pattern: operand f32[1,4], indices s32[3,2]
+        let text = "HloModule m\n\nENTRY e.3 {\n  o.1 = f32[1,4]{1,0} parameter(0)\n  i.2 = s32[3,2]{1,0} parameter(1)\n  ROOT g.3 = f32[3]{0} gather(o.1, i.2), offset_dims={}, collapsed_slice_dims={0,1}, start_index_map={0,1}, index_vector_dim=1, slice_sizes={1,1}\n}\n";
+        let o = Value::T(Tensor::new(vec![1, 4], Data::F32(vec![5.0, 6.0, 7.0, 8.0])).unwrap());
+        let i =
+            Value::T(Tensor::new(vec![3, 2], Data::S32(vec![0, 3, 0, 0, 0, 2])).unwrap());
+        let out = run(text, &[o, i]);
+        assert_eq!(out, f32v(vec![8.0, 5.0, 7.0]));
+    }
+
+    #[test]
+    fn scatter_add_segment_sum() {
+        let text = r#"
+HloModule m
+
+%add.1 (a.2: f32[], b.3: f32[]) -> f32[] {
+  %a.2 = f32[] parameter(0)
+  %b.3 = f32[] parameter(1)
+  ROOT %r.4 = f32[] add(f32[] %a.2, f32[] %b.3)
+}
+
+ENTRY %e.9 {
+  %o.1 = f32[3]{0} parameter(0)
+  %i.2 = s32[4,1]{1,0} parameter(1)
+  %u.3 = f32[4]{0} parameter(2)
+  ROOT %s.4 = f32[3]{0} scatter(f32[3]{0} %o.1, s32[4,1]{1,0} %i.2, f32[4]{0} %u.3), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%add.1
+}
+"#;
+        let o = f32v(vec![0.0, 0.0, 0.0]);
+        let i = Value::T(Tensor::new(vec![4, 1], Data::S32(vec![0, 2, 0, 1])).unwrap());
+        let u = f32v(vec![1.0, 2.0, 3.0, 4.0]);
+        let out = run(text, &[o, i, u]);
+        assert_eq!(out, f32v(vec![4.0, 4.0, 2.0]));
+    }
+
+    #[test]
+    fn scatter_row_write_with_window() {
+        // write a whole row of a [2,3] matrix (the LUFact row-swap shape)
+        let text = r#"
+HloModule m
+
+%second.1 (a.2: f32[], b.3: f32[]) -> f32[] {
+  %a.2 = f32[] parameter(0)
+  ROOT %b.3 = f32[] parameter(1)
+}
+
+ENTRY %e.9 {
+  %o.1 = f32[2,3]{1,0} parameter(0)
+  %i.2 = s32[1]{0} parameter(1)
+  %u.3 = f32[3]{0} parameter(2)
+  ROOT %s.4 = f32[2,3]{1,0} scatter(f32[2,3]{1,0} %o.1, s32[1]{0} %i.2, f32[3]{0} %u.3), update_window_dims={0}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=0, indices_are_sorted=true, unique_indices=true, to_apply=%second.1
+}
+"#;
+        let o = Value::T(
+            Tensor::new(vec![2, 3], Data::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])).unwrap(),
+        );
+        let i = Value::T(Tensor::new(vec![1], Data::S32(vec![1])).unwrap());
+        let u = f32v(vec![7.0, 8.0, 9.0]);
+        let out = run(text, &[o, i, u]);
+        assert_eq!(
+            out,
+            Value::T(
+                Tensor::new(vec![2, 3], Data::F32(vec![1.0, 2.0, 3.0, 7.0, 8.0, 9.0])).unwrap()
+            )
+        );
+    }
+
+    #[test]
+    fn slice_concatenate_broadcast_iota_convert() {
+        let text = "HloModule m\n\nENTRY e.9 {\n  a.1 = f32[4]{0} parameter(0)\n  s.2 = f32[2]{0} slice(a.1), slice={[1:3]}\n  i.3 = s32[2]{0} iota(), iota_dimension=0\n  f.4 = f32[2]{0} convert(i.3)\n  c.5 = f32[4]{0} concatenate(s.2, f.4), dimensions={0}\n  ROOT n.6 = f32[4]{0} negate(c.5)\n}\n";
+        let out = run(text, &[f32v(vec![9.0, 1.0, 2.0, 9.0])]);
+        assert_eq!(out, f32v(vec![-1.0, -2.0, -0.0, -1.0]));
+    }
+
+    #[test]
+    fn crypt_style_u32_bit_ops() {
+        let text = "HloModule m\n\nENTRY e.9 {\n  a.1 = u32[4]{0} parameter(0)\n  m.2 = u32[] constant(65535)\n  mb.3 = u32[4]{0} broadcast(m.2), dimensions={}\n  and.4 = u32[4]{0} and(a.1, mb.3)\n  s.5 = u32[] constant(8)\n  sb.6 = u32[4]{0} broadcast(s.5), dimensions={}\n  sh.7 = u32[4]{0} shift-right-logical(and.4, sb.6)\n  ROOT x.8 = u32[4]{0} xor(sh.7, and.4)\n}\n";
+        let a = Value::T(
+            Tensor::new(vec![4], Data::U32(vec![0x12345678, 0xFFFF0000, 0xABCD, 7])).unwrap(),
+        );
+        let out = run(text, &[a]);
+        let want = [0x12345678u32, 0xFFFF0000, 0xABCD, 7u32].map(|v| {
+            let x = v & 0xFFFF;
+            (x >> 8) ^ x
+        });
+        assert_eq!(
+            out,
+            Value::T(Tensor::new(vec![4], Data::U32(want.to_vec())).unwrap())
+        );
+    }
+}

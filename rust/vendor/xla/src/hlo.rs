@@ -1,0 +1,567 @@
+//! Parser for XLA HLO *text* modules (the `.hlo.txt` artifact format
+//! written by `python -m compile.aot`).
+//!
+//! Accepts both printer styles XLA emits: the compact default
+//! (`add.3 = f32[8]{0} add(Arg_0.1, Arg_1.2)`) and the verbose one with
+//! `%`-prefixed names and typed operands
+//! (`%add.3 = f32[8]{0} add(f32[8]{0} %Arg_0.1, ...)`).  Layout suffixes
+//! (`{1,0}`) are parsed and ignored — interpretation is logical/row-major.
+
+use std::collections::HashMap;
+
+use crate::{ElementType, Error, Result};
+
+/// An array or tuple shape as written in HLO text.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShapeTy {
+    Array { ty: ElementType, dims: Vec<usize> },
+    Tuple(Vec<ShapeTy>),
+}
+
+impl ShapeTy {
+    pub fn expect_array(&self) -> Result<(ElementType, &[usize])> {
+        match self {
+            ShapeTy::Array { ty, dims } => Ok((*ty, dims)),
+            ShapeTy::Tuple(_) => Err(Error("expected array shape, got tuple".into())),
+        }
+    }
+}
+
+/// One parsed instruction.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub name: String,
+    pub shape: ShapeTy,
+    pub op: String,
+    pub operands: Vec<String>,
+    pub attrs: HashMap<String, String>,
+    /// Raw text between the parens for `constant(...)`.
+    pub const_text: Option<String>,
+    pub is_root: bool,
+}
+
+impl Instr {
+    pub fn attr(&self, key: &str) -> Result<&str> {
+        self.attrs
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| Error(format!("instruction '{}' missing attr '{key}'", self.name)))
+    }
+
+    /// Parse a `{1,2,3}`-style attr into numbers; missing attr -> empty.
+    pub fn attr_dims(&self, key: &str) -> Result<Vec<i64>> {
+        match self.attrs.get(key) {
+            None => Ok(Vec::new()),
+            Some(v) => parse_brace_list(v),
+        }
+    }
+
+    pub fn attr_i64(&self, key: &str) -> Result<i64> {
+        self.attr(key)?
+            .trim()
+            .parse::<i64>()
+            .map_err(|_| Error(format!("bad integer attr '{key}' on '{}'", self.name)))
+    }
+
+    /// The computation name in a `to_apply=`/`condition=`/`body=` attr.
+    pub fn attr_computation(&self, key: &str) -> Result<String> {
+        Ok(self.attr(key)?.trim().trim_start_matches('%').to_string())
+    }
+}
+
+/// A named computation: instruction list in printed order.
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub index: HashMap<String, usize>,
+    pub root: usize,
+}
+
+/// A parsed HLO module.
+#[derive(Clone, Debug)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: HashMap<String, Computation>,
+    pub entry: String,
+}
+
+impl HloModule {
+    pub fn entry_computation(&self) -> Result<&Computation> {
+        self.computations
+            .get(&self.entry)
+            .ok_or_else(|| Error(format!("entry computation '{}' missing", self.entry)))
+    }
+
+    pub fn computation(&self, name: &str) -> Result<&Computation> {
+        self.computations
+            .get(name)
+            .ok_or_else(|| Error(format!("computation '{name}' missing")))
+    }
+}
+
+/// Remove `/* ... */` spans: XLA annotates wide tuple shapes with
+/// `/*index=N*/` comments, which would otherwise confuse both the shape
+/// parser and the computation-header detection (they contain `=`).
+fn strip_block_comments(line: &str) -> String {
+    let mut out = String::with_capacity(line.len());
+    let mut rest = line;
+    while let Some(open) = rest.find("/*") {
+        out.push_str(&rest[..open]);
+        match rest[open..].find("*/") {
+            Some(close) => rest = &rest[open + close + 2..],
+            None => return out, // unterminated: drop the remainder
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// Parse `{a,b,c}` (or bare `a,b,c`) into i64s; empty braces -> empty.
+pub fn parse_brace_list(s: &str) -> Result<Vec<i64>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}').trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<i64>()
+                .map_err(|_| Error(format!("bad number '{}' in list '{s}'", t.trim())))
+        })
+        .collect()
+}
+
+fn parse_element_type(tok: &str) -> Result<ElementType> {
+    Ok(match tok {
+        "pred" => ElementType::Pred,
+        "s8" => ElementType::S8,
+        "s16" => ElementType::S16,
+        "s32" => ElementType::S32,
+        "s64" => ElementType::S64,
+        "u8" => ElementType::U8,
+        "u16" => ElementType::U16,
+        "u32" => ElementType::U32,
+        "u64" => ElementType::U64,
+        "f16" => ElementType::F16,
+        "bf16" => ElementType::Bf16,
+        "f32" => ElementType::F32,
+        "f64" => ElementType::F64,
+        other => return Err(Error(format!("unknown element type '{other}'"))),
+    })
+}
+
+/// Cursor-based shape parser: `f32[64,64]{1,0}`, `pred[]`, `(s32[], f32[8]{0})`.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(s: &'a str) -> Self {
+        Cur { b: s.as_bytes(), i: 0 }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(Error(format!(
+                "shape parse: expected '{}' at byte {} of '{}'",
+                c as char,
+                self.i,
+                String::from_utf8_lossy(self.b)
+            )))
+        }
+    }
+
+    fn ident(&mut self) -> String {
+        let start = self.i;
+        while self.i < self.b.len()
+            && (self.b[self.i].is_ascii_alphanumeric() || self.b[self.i] == b'_')
+        {
+            self.i += 1;
+        }
+        String::from_utf8_lossy(&self.b[start..self.i]).to_string()
+    }
+
+    fn number(&mut self) -> Result<usize> {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        String::from_utf8_lossy(&self.b[start..self.i])
+            .parse()
+            .map_err(|_| Error("shape parse: expected number".into()))
+    }
+
+    fn shape(&mut self) -> Result<ShapeTy> {
+        self.ws();
+        if self.peek() == Some(b'(') {
+            self.i += 1;
+            let mut parts = Vec::new();
+            self.ws();
+            if self.peek() == Some(b')') {
+                self.i += 1;
+                return Ok(ShapeTy::Tuple(parts));
+            }
+            loop {
+                parts.push(self.shape()?);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                    }
+                    Some(b')') => {
+                        self.i += 1;
+                        return Ok(ShapeTy::Tuple(parts));
+                    }
+                    _ => return Err(Error("shape parse: expected ',' or ')' in tuple".into())),
+                }
+            }
+        }
+        let ty = parse_element_type(&self.ident())?;
+        self.eat(b'[')?;
+        let mut dims = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+        } else {
+            loop {
+                self.ws();
+                dims.push(self.number()?);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                    }
+                    Some(b']') => {
+                        self.i += 1;
+                        break;
+                    }
+                    _ => return Err(Error("shape parse: expected ',' or ']' in dims".into())),
+                }
+            }
+        }
+        // optional layout suffix {1,0} — parsed and discarded
+        if self.peek() == Some(b'{') {
+            while self.peek().is_some() && self.peek() != Some(b'}') {
+                self.i += 1;
+            }
+            self.eat(b'}')?;
+        }
+        Ok(ShapeTy::Array { ty, dims })
+    }
+}
+
+/// Parse a shape from the front of `s`; returns the shape and the number
+/// of bytes consumed.
+fn parse_shape_prefix(s: &str) -> Result<(ShapeTy, usize)> {
+    let mut c = Cur::new(s);
+    let sh = c.shape()?;
+    Ok((sh, c.i))
+}
+
+/// Split `s` on top-level `,` (ignoring commas inside (), [], {}).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '(' | '[' | '{' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ')' | ']' | '}' => {
+                depth -= 1;
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Find the span of the operand list: the parens directly after the
+/// opcode, balancing nested parens (tuple-typed operands contain parens).
+fn operand_span(rest: &str) -> Result<(usize, usize)> {
+    let open = rest
+        .find('(')
+        .ok_or_else(|| Error(format!("no '(' in instruction tail '{rest}'")))?;
+    let mut depth = 0i32;
+    for (i, ch) in rest.char_indices().skip(open) {
+        match ch {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((open, i));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(Error(format!("unbalanced parens in '{rest}'")))
+}
+
+/// The operand name from one entry like `f32[8]{0} %add.3` or `add.3`.
+fn operand_name(entry: &str) -> String {
+    let tok = entry.rsplit(|c: char| c.is_ascii_whitespace()).next().unwrap_or(entry);
+    tok.trim_start_matches('%').to_string()
+}
+
+fn parse_instruction(line: &str) -> Result<Instr> {
+    let line = line.trim();
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line
+        .find(" = ")
+        .ok_or_else(|| Error(format!("instruction without '=': '{line}'")))?;
+    let name = line[..eq].trim().trim_start_matches('%').to_string();
+    let rest = &line[eq + 3..];
+    let (shape, used) = parse_shape_prefix(rest)?;
+    let rest = rest[used..].trim_start();
+    // opcode runs up to the '('
+    let paren = rest
+        .find('(')
+        .ok_or_else(|| Error(format!("instruction '{name}' without operand list")))?;
+    let op = rest[..paren].trim().to_string();
+    let (o_lo, o_hi) = operand_span(rest)?;
+    let inside = &rest[o_lo + 1..o_hi];
+    let tail = rest[o_hi + 1..].trim_start();
+
+    let mut const_text = None;
+    let mut operands = Vec::new();
+    if op == "constant" {
+        const_text = Some(inside.trim().to_string());
+    } else {
+        for entry in split_top_level(inside) {
+            if entry.is_empty() {
+                continue;
+            }
+            operands.push(operand_name(&entry));
+        }
+    }
+
+    // attributes: `, key=value` pairs after the operand list
+    let mut attrs = HashMap::new();
+    let tail = tail.strip_prefix(',').unwrap_or(tail);
+    for part in split_top_level(tail) {
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('=') {
+            Some((k, v)) => {
+                attrs.insert(k.trim().to_string(), v.trim().to_string());
+            }
+            None => {
+                // bare flags (none expected today) — keep as key=true
+                attrs.insert(part.trim().to_string(), "true".to_string());
+            }
+        }
+    }
+
+    Ok(Instr { name, shape, op, operands, attrs, const_text, is_root })
+}
+
+/// Computation header: `%name (params) -> type {` / `ENTRY %main.1 {` etc.
+/// Returns (name, is_entry).
+fn parse_computation_header(line: &str) -> Result<(String, bool)> {
+    let line = line.trim().trim_end_matches('{').trim();
+    let (is_entry, rest) = match line.strip_prefix("ENTRY ") {
+        Some(r) => (true, r.trim()),
+        None => (false, line),
+    };
+    let name_end = rest.find(|c: char| c == ' ' || c == '(').unwrap_or(rest.len());
+    let name = rest[..name_end].trim_start_matches('%').to_string();
+    if name.is_empty() {
+        return Err(Error(format!("bad computation header '{line}'")));
+    }
+    Ok((name, is_entry))
+}
+
+/// Parse a full HLO text module.
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let mut module_name = String::from("module");
+    let mut computations = HashMap::new();
+    let mut entry: Option<String> = None;
+    let mut cur: Option<(String, bool, Vec<Instr>)> = None;
+
+    for raw in text.lines() {
+        let cleaned = if raw.contains("/*") { strip_block_comments(raw) } else { raw.to_string() };
+        let line = cleaned.trim();
+        if line.is_empty() || line.starts_with("//") || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule ") {
+            module_name = rest.split([',', ' ']).next().unwrap_or("module").to_string();
+            continue;
+        }
+        if line == "}" {
+            let (name, is_entry, instrs) =
+                cur.take().ok_or_else(|| Error("stray '}' outside computation".into()))?;
+            let mut index = HashMap::new();
+            let mut root = instrs.len().saturating_sub(1);
+            for (i, ins) in instrs.iter().enumerate() {
+                index.insert(ins.name.clone(), i);
+                if ins.is_root {
+                    root = i;
+                }
+            }
+            if instrs.is_empty() {
+                return Err(Error(format!("computation '{name}' has no instructions")));
+            }
+            if is_entry {
+                entry = Some(name.clone());
+            }
+            computations.insert(name.clone(), Computation { name, instrs, index, root });
+            continue;
+        }
+        if line.ends_with('{') && !line.contains('=') {
+            if cur.is_some() {
+                return Err(Error(format!("nested computation at '{line}'")));
+            }
+            let (name, is_entry) = parse_computation_header(line)?;
+            cur = Some((name, is_entry, Vec::new()));
+            continue;
+        }
+        match cur.as_mut() {
+            Some((_, _, instrs)) => instrs.push(parse_instruction(line)?),
+            None => return Err(Error(format!("instruction outside computation: '{line}'"))),
+        }
+    }
+
+    let entry = entry
+        .or_else(|| {
+            // single-computation module without ENTRY marker
+            if computations.len() == 1 {
+                computations.keys().next().cloned()
+            } else {
+                None
+            }
+        })
+        .ok_or_else(|| Error("module has no ENTRY computation".into()))?;
+    Ok(HloModule { name: module_name, computations, entry })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn, entry_computation_layout={(f32[4]{0}, f32[4]{0})->f32[4]{0}}
+
+%helper.1 (a.2: f32[], b.3: f32[]) -> f32[] {
+  %a.2 = f32[] parameter(0)
+  %b.3 = f32[] parameter(1)
+  ROOT %add.4 = f32[] add(f32[] %a.2, f32[] %b.3)
+}
+
+ENTRY %main.9 (Arg_0.1: f32[4], Arg_1.2: f32[4]) -> f32[4] {
+  %Arg_0.1 = f32[4]{0} parameter(0)
+  %Arg_1.2 = f32[4]{0} parameter(1)
+  %constant.3 = f32[] constant(1.5)
+  %constant.4 = f32[4]{0} constant({1, 2, 3, 4.25})
+  %broadcast.5 = f32[4]{0} broadcast(f32[] %constant.3), dimensions={}
+  %add.6 = f32[4]{0} add(f32[4]{0} %Arg_0.1, f32[4]{0} %broadcast.5)
+  %reduce.7 = f32[] reduce(f32[4]{0} %add.6, f32[] %constant.3), dimensions={0}, to_apply=%helper.1
+  %gte.8 = f32[4]{0} add(f32[4]{0} %add.6, f32[4]{0} %constant.4)
+  ROOT %mul.9 = f32[4]{0} multiply(f32[4]{0} %gte.8, f32[4]{0} %Arg_1.2)
+}
+"#;
+
+    #[test]
+    fn parses_module_structure() {
+        let m = parse_module(SAMPLE).unwrap();
+        assert_eq!(m.entry, "main.9");
+        assert_eq!(m.computations.len(), 2);
+        let main = m.entry_computation().unwrap();
+        assert_eq!(main.instrs.len(), 9);
+        assert_eq!(main.root, 8);
+        assert_eq!(main.instrs[main.root].op, "multiply");
+    }
+
+    #[test]
+    fn parses_operands_with_types() {
+        let m = parse_module(SAMPLE).unwrap();
+        let main = m.entry_computation().unwrap();
+        let add = &main.instrs[5];
+        assert_eq!(add.op, "add");
+        assert_eq!(add.operands, vec!["Arg_0.1", "broadcast.5"]);
+    }
+
+    #[test]
+    fn parses_attrs_and_constants() {
+        let m = parse_module(SAMPLE).unwrap();
+        let main = m.entry_computation().unwrap();
+        let red = &main.instrs[6];
+        assert_eq!(red.attr_dims("dimensions").unwrap(), vec![0]);
+        assert_eq!(red.attr_computation("to_apply").unwrap(), "helper.1");
+        let c = &main.instrs[3];
+        assert_eq!(c.const_text.as_deref(), Some("{1, 2, 3, 4.25}"));
+    }
+
+    #[test]
+    fn parses_compact_style_without_percent() {
+        let text = "HloModule m\n\nENTRY main.3 {\n  x.1 = f32[2]{0} parameter(0)\n  ROOT neg.2 = f32[2]{0} negate(x.1)\n}\n";
+        let m = parse_module(text).unwrap();
+        let main = m.entry_computation().unwrap();
+        assert_eq!(main.instrs[1].operands, vec!["x.1"]);
+    }
+
+    #[test]
+    fn parses_tuple_shapes_and_tuple_typed_operands() {
+        let text = "HloModule m\n\nENTRY e.9 {\n  p.1 = s32[] parameter(0)\n  t.2 = (s32[], s32[]) tuple(s32[] p.1, s32[] p.1)\n  ROOT g.3 = s32[] get-tuple-element((s32[], s32[]) t.2), index=1\n}\n";
+        let m = parse_module(text).unwrap();
+        let main = m.entry_computation().unwrap();
+        assert_eq!(main.instrs[2].operands, vec!["t.2"]);
+        assert_eq!(main.instrs[2].attr_i64("index").unwrap(), 1);
+        match &main.instrs[1].shape {
+            ShapeTy::Tuple(parts) => assert_eq!(parts.len(), 2),
+            other => panic!("expected tuple shape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn strips_index_comments_in_wide_tuples() {
+        let text = "HloModule m\n\nENTRY e.3 {\n  p.1 = (s32[], s32[], s32[], s32[], s32[], /*index=5*/f32[2]{0}) parameter(0)\n  ROOT g.2 = f32[2]{0} get-tuple-element((s32[], s32[], s32[], s32[], s32[], /*index=5*/f32[2]{0}) p.1), index=5\n}\n";
+        let m = parse_module(text).unwrap();
+        let main = m.entry_computation().unwrap();
+        assert_eq!(main.instrs[1].operands, vec!["p.1"]);
+        assert_eq!(main.instrs[1].attr_i64("index").unwrap(), 5);
+        match &main.instrs[0].shape {
+            ShapeTy::Tuple(parts) => assert_eq!(parts.len(), 6),
+            other => panic!("expected tuple, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_slice_attr() {
+        let text = "HloModule m\n\nENTRY e.2 {\n  p.1 = f32[4,6]{1,0} parameter(0)\n  ROOT s.2 = f32[2,3]{1,0} slice(f32[4,6]{1,0} p.1), slice={[1:3], [0:6:2]}\n}\n";
+        let m = parse_module(text).unwrap();
+        let s = &m.entry_computation().unwrap().instrs[1];
+        assert_eq!(s.attr("slice").unwrap(), "{[1:3], [0:6:2]}");
+    }
+}

@@ -1,0 +1,414 @@
+//! Offline in-tree stand-in for the `xla` crate (xla-rs 0.5.x API subset).
+//!
+//! The real crate binds `xla_extension` (PJRT + the XLA compiler).  This
+//! shim keeps the exact API surface the `somd` crate uses but backs it
+//! with a pure-Rust **HLO-text interpreter** ([`hlo`] + [`eval`]): the
+//! AOT artifacts written by `python -m compile.aot` are parsed and
+//! executed on the host CPU.  Numerical semantics are logical row-major;
+//! the device *cost* model lives upstream in `somd::device` and is
+//! unaffected by this substitution.
+//!
+//! Thread-confinement is preserved: like real PJRT handles, the client,
+//! executable, buffer and literal types are `!Send` (they embed a
+//! `PhantomData<Rc<()>>`), so the coordinator's master-thread discipline
+//! is enforced at compile time exactly as with the real binding.
+
+mod eval;
+mod hlo;
+mod value;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use value::{Data, Tensor, Value};
+
+/// Error type (mirrors `xla::Error` closely enough for `?` conversion).
+#[derive(Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla error: {}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla error: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+type NotSend = PhantomData<Rc<()>>;
+
+/// Element types of the artifact set (plus the common extras).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host element types the shim can move in and out of literals.
+pub trait NativeType: Clone + 'static {
+    const TY: ElementType;
+    fn vec_to_data(v: Vec<Self>) -> Data;
+    fn data_to_vec(d: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:ident) => {
+        impl NativeType for $t {
+            const TY: ElementType = ElementType::$ty;
+            fn vec_to_data(v: Vec<Self>) -> Data {
+                Data::$ty(v)
+            }
+            fn data_to_vec(d: &Data) -> Option<Vec<Self>> {
+                match d {
+                    Data::$ty(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, S32);
+native!(i64, S64);
+native!(u32, U32);
+native!(u64, U64);
+
+// ---------------------------------------------------------------------------
+// Shapes
+// ---------------------------------------------------------------------------
+
+/// Array-or-tuple shape of a literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shape {
+    tuple: bool,
+}
+
+impl Shape {
+    pub fn is_tuple(&self) -> bool {
+        self.tuple
+    }
+}
+
+/// The dims of an array literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literals and buffers
+// ---------------------------------------------------------------------------
+
+/// A host-side value: an array or a tuple (multi-output roots).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    value: Value,
+    _confined: NotSend,
+}
+
+impl Literal {
+    fn from_value(value: Value) -> Literal {
+        Literal { value, _confined: PhantomData }
+    }
+
+    /// A rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let n = data.len();
+        let t = Tensor::new(vec![n], T::vec_to_data(data.to_vec())).expect("vec1 shape");
+        Literal::from_value(Value::T(t))
+    }
+
+    /// Reinterpret with new dims (row-major data unchanged).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let t = self.value.tensor()?;
+        let new_dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let want: usize = new_dims.iter().product();
+        if want != t.elems() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {:?}",
+                t.elems(),
+                dims
+            )));
+        }
+        Ok(Literal::from_value(Value::T(Tensor::new(new_dims, t.data.clone())?)))
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape { tuple: matches!(self.value, Value::Tuple(_)) })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let t = self.value.tensor()?;
+        Ok(ArrayShape { dims: t.dims.iter().map(|&d| d as i64).collect() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.value.tensor()?.dtype())
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        let t = self.value.tensor()?;
+        T::data_to_vec(&t.data).ok_or_else(|| {
+            Error(format!("literal is {:?}, not {:?}", t.dtype(), T::TY))
+        })
+    }
+
+    /// Split a tuple literal into its leaves (leaves the tuple empty).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.value, Value::Tuple(Vec::new())) {
+            Value::Tuple(parts) => Ok(parts.into_iter().map(Literal::from_value).collect()),
+            v @ Value::T(_) => {
+                self.value = v;
+                Err(Error("decompose_tuple on a non-tuple literal".into()))
+            }
+        }
+    }
+}
+
+/// A "device"-resident buffer (host memory here; the residency/transfer
+/// cost model lives in `somd::device`).
+pub struct PjRtBuffer {
+    value: Value,
+    _confined: NotSend,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal::from_value(self.value.clone()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO module handles
+// ---------------------------------------------------------------------------
+
+/// A parsed HLO module (the artifact interchange object).
+pub struct HloModuleProto {
+    module: Arc<hlo::HloModule>,
+}
+
+impl HloModuleProto {
+    /// Parse HLO *text* from a file (the `.hlo.txt` artifacts).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { module: Arc::new(hlo::parse_module(&text)?) })
+    }
+
+    /// Parse HLO text directly (tests / tools).
+    pub fn parse_text(text: &str) -> Result<HloModuleProto> {
+        Ok(HloModuleProto { module: Arc::new(hlo::parse_module(text)?) })
+    }
+}
+
+/// A computation ready to compile.
+pub struct XlaComputation {
+    module: Arc<hlo::HloModule>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.module.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client and executable
+// ---------------------------------------------------------------------------
+
+/// The CPU "PJRT" client.
+pub struct PjRtClient {
+    _confined: NotSend,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _confined: PhantomData })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "interpreter-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// "Compile": validate the entry computation exists and wrap the
+    /// module for execution.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        comp.module.entry_computation()?;
+        Ok(PjRtLoadedExecutable { module: comp.module.clone(), _confined: PhantomData })
+    }
+
+    /// Upload a host slice as a device buffer.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let want: usize = dims.iter().product();
+        if want != data.len() {
+            return Err(Error(format!(
+                "buffer_from_host_buffer: {} elements for dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        let t = Tensor::new(dims.to_vec(), T::vec_to_data(data.to_vec()))?;
+        Ok(PjRtBuffer { value: Value::T(t), _confined: PhantomData })
+    }
+}
+
+/// A loaded executable: the parsed module plus the interpreter entry.
+pub struct PjRtLoadedExecutable {
+    module: Arc<hlo::HloModule>,
+    _confined: NotSend,
+}
+
+impl PjRtLoadedExecutable {
+    fn run(&self, args: Vec<Value>) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let out = eval::execute_module(&self.module, &args)?;
+        // one buffer per root value; tuple roots stay one tuple buffer
+        // (callers flatten via decompose_tuple, matching real PJRT with
+        // untupled outputs)
+        Ok(vec![vec![PjRtBuffer { value: out, _confined: PhantomData }]])
+    }
+
+    /// Execute over host literals.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.run(args.iter().map(|l| l.borrow().value.clone()).collect())
+    }
+
+    /// Execute over device-resident buffers.
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.run(args.iter().map(|b| b.borrow().value.clone()).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact cache (interned parsed modules, keyed by path)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static MODULE_CACHE: RefCell<HashMap<String, Arc<hlo::HloModule>>> =
+        RefCell::new(HashMap::new());
+}
+
+impl HloModuleProto {
+    /// Like [`HloModuleProto::from_text_file`], but re-reads of the same
+    /// path on the same thread share one parsed module.
+    pub fn from_text_file_cached(path: &str) -> Result<HloModuleProto> {
+        if let Some(m) = MODULE_CACHE.with(|c| c.borrow().get(path).cloned()) {
+            return Ok(HloModuleProto { module: m });
+        }
+        let proto = Self::from_text_file(path)?;
+        MODULE_CACHE.with(|c| {
+            c.borrow_mut().insert(path.to_string(), proto.module.clone());
+        });
+        Ok(proto)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ADD: &str = "HloModule m\n\nENTRY e.3 {\n  a.1 = f32[4]{0} parameter(0)\n  b.2 = f32[4]{0} parameter(1)\n  ROOT add.3 = f32[4]{0} add(a.1, b.2)\n}\n";
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(m.ty().unwrap(), ElementType::F32);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(!m.shape().unwrap().is_tuple());
+        assert!(m.to_vec::<u32>().is_err());
+    }
+
+    #[test]
+    fn compile_and_execute_literals() {
+        let proto = HloModuleProto::parse_text(ADD).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let a = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let b = Literal::vec1(&[10.0f32, 20.0, 30.0, 40.0]);
+        let rows = exe.execute::<Literal>(&[a, b]).unwrap();
+        let lit = rows[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn execute_with_buffers() {
+        let proto = HloModuleProto::parse_text(ADD).unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let x = client.buffer_from_host_buffer(&[2.0f32; 4], &[4], None).unwrap();
+        let y = client.buffer_from_host_buffer(&[3.0f32; 4], &[4], None).unwrap();
+        let rows = exe.execute_b::<&PjRtBuffer>(&[&x, &y]).unwrap();
+        let lit = rows[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![5.0; 4]);
+    }
+
+    #[test]
+    fn tuple_roots_decompose() {
+        let text = "HloModule m\n\nENTRY e.3 {\n  a.1 = f32[2]{0} parameter(0)\n  n.2 = f32[2]{0} negate(a.1)\n  ROOT t.3 = (f32[2]{0}, f32[2]{0}) tuple(a.1, n.2)\n}\n";
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client
+            .compile(&XlaComputation::from_proto(&HloModuleProto::parse_text(text).unwrap()))
+            .unwrap();
+        let rows = exe.execute::<Literal>(&[Literal::vec1(&[1.0f32, -2.0])]).unwrap();
+        let mut lit = rows[0][0].to_literal_sync().unwrap();
+        assert!(lit.shape().unwrap().is_tuple());
+        let leaves = lit.decompose_tuple().unwrap();
+        assert_eq!(leaves.len(), 2);
+        assert_eq!(leaves[1].to_vec::<f32>().unwrap(), vec![-1.0, 2.0]);
+    }
+
+    #[test]
+    fn platform_reports_cpu() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().to_lowercase().contains("cpu"));
+        assert_eq!(c.device_count(), 1);
+    }
+}

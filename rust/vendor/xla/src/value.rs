@@ -1,0 +1,251 @@
+//! Runtime values for the HLO interpreter: dense row-major tensors of the
+//! element types the artifact set uses, plus tuples.
+
+use crate::{ElementType, Error, Result};
+
+/// Flat storage, logically row-major over [`Tensor::dims`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    Pred(Vec<bool>),
+    S32(Vec<i32>),
+    S64(Vec<i64>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::Pred(v) => v.len(),
+            Data::S32(v) => v.len(),
+            Data::S64(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::U64(v) => v.len(),
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> ElementType {
+        match self {
+            Data::Pred(_) => ElementType::Pred,
+            Data::S32(_) => ElementType::S32,
+            Data::S64(_) => ElementType::S64,
+            Data::U32(_) => ElementType::U32,
+            Data::U64(_) => ElementType::U64,
+            Data::F32(_) => ElementType::F32,
+            Data::F64(_) => ElementType::F64,
+        }
+    }
+
+    /// Allocate a zero-filled buffer of `n` elements.
+    pub fn zeros(ty: ElementType, n: usize) -> Result<Data> {
+        Ok(match ty {
+            ElementType::Pred => Data::Pred(vec![false; n]),
+            ElementType::S32 => Data::S32(vec![0; n]),
+            ElementType::S64 => Data::S64(vec![0; n]),
+            ElementType::U32 => Data::U32(vec![0; n]),
+            ElementType::U64 => Data::U64(vec![0; n]),
+            ElementType::F32 => Data::F32(vec![0.0; n]),
+            ElementType::F64 => Data::F64(vec![0.0; n]),
+            other => return Err(Error(format!("unsupported element type {other:?}"))),
+        })
+    }
+
+    /// Read element `i` as f64 (predicates as 0/1).
+    pub fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            Data::Pred(v) => v[i] as u8 as f64,
+            Data::S32(v) => v[i] as f64,
+            Data::S64(v) => v[i] as f64,
+            Data::U32(v) => v[i] as f64,
+            Data::U64(v) => v[i] as f64,
+            Data::F32(v) => v[i] as f64,
+            Data::F64(v) => v[i],
+        }
+    }
+
+    /// Read element `i` as i64 (floats truncate toward zero).
+    pub fn get_i64(&self, i: usize) -> i64 {
+        match self {
+            Data::Pred(v) => v[i] as i64,
+            Data::S32(v) => v[i] as i64,
+            Data::S64(v) => v[i],
+            Data::U32(v) => v[i] as i64,
+            Data::U64(v) => v[i] as i64,
+            Data::F32(v) => v[i] as i64,
+            Data::F64(v) => v[i] as i64,
+        }
+    }
+
+    /// Copy element `src_i` of `src` over element `dst_i` of `self`
+    /// (dtypes must match).
+    pub fn copy_elem(&mut self, dst_i: usize, src: &Data, src_i: usize) -> Result<()> {
+        match (self, src) {
+            (Data::Pred(d), Data::Pred(s)) => d[dst_i] = s[src_i],
+            (Data::S32(d), Data::S32(s)) => d[dst_i] = s[src_i],
+            (Data::S64(d), Data::S64(s)) => d[dst_i] = s[src_i],
+            (Data::U32(d), Data::U32(s)) => d[dst_i] = s[src_i],
+            (Data::U64(d), Data::U64(s)) => d[dst_i] = s[src_i],
+            (Data::F32(d), Data::F32(s)) => d[dst_i] = s[src_i],
+            (Data::F64(d), Data::F64(s)) => d[dst_i] = s[src_i],
+            (d, s) => {
+                return Err(Error(format!(
+                    "dtype mismatch in element copy: {:?} vs {:?}",
+                    d.dtype(),
+                    s.dtype()
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A dense tensor: dims + row-major flat data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Data) -> Result<Tensor> {
+        let want: usize = dims.iter().product();
+        if data.len() != want {
+            return Err(Error(format!(
+                "tensor data length {} does not match dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dtype(&self) -> ElementType {
+        self.data.dtype()
+    }
+
+    /// Row-major strides for the current dims.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.dims)
+    }
+
+    /// The scalar value as i64 (for loop counters / dynamic indices).
+    pub fn scalar_i64(&self) -> Result<i64> {
+        if self.elems() != 1 {
+            return Err(Error(format!("expected scalar, got dims {:?}", self.dims)));
+        }
+        Ok(self.data.get_i64(0))
+    }
+
+    /// The scalar value as bool (for while conditions / select predicates).
+    pub fn scalar_bool(&self) -> Result<bool> {
+        if self.elems() != 1 {
+            return Err(Error(format!("expected scalar pred, got dims {:?}", self.dims)));
+        }
+        Ok(match &self.data {
+            Data::Pred(v) => v[0],
+            other => other.get_i64(0) != 0,
+        })
+    }
+}
+
+/// Row-major strides of a dim list.
+pub fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Linear offset of a multi-index under row-major strides.
+pub fn linear_index(idx: &[usize], strides: &[usize]) -> usize {
+    idx.iter().zip(strides).map(|(i, s)| i * s).sum()
+}
+
+/// Advance a row-major multi-index; returns false on wrap-around (done).
+pub fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
+    for d in (0..dims.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < dims[d] {
+            return true;
+        }
+        idx[d] = 0;
+    }
+    false
+}
+
+/// An interpreter value: a tensor or a tuple of values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    T(Tensor),
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn tensor(&self) -> Result<&Tensor> {
+        match self {
+            Value::T(t) => Ok(t),
+            Value::Tuple(_) => Err(Error("expected tensor, got tuple".into())),
+        }
+    }
+
+    pub fn into_tensor(self) -> Result<Tensor> {
+        match self {
+            Value::T(t) => Ok(t),
+            Value::Tuple(_) => Err(Error("expected tensor, got tuple".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_linear_index() {
+        let dims = vec![2, 3, 4];
+        let s = strides_of(&dims);
+        assert_eq!(s, vec![12, 4, 1]);
+        assert_eq!(linear_index(&[1, 2, 3], &s), 23);
+    }
+
+    #[test]
+    fn next_index_iterates_row_major() {
+        let dims = vec![2, 2];
+        let mut idx = vec![0, 0];
+        let mut seen = vec![idx.clone()];
+        while next_index(&mut idx, &dims) {
+            seen.push(idx.clone());
+        }
+        assert_eq!(seen, vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]);
+    }
+
+    #[test]
+    fn scalar_accessors() {
+        let t = Tensor::new(vec![], Data::S32(vec![7])).unwrap();
+        assert_eq!(t.scalar_i64().unwrap(), 7);
+        let p = Tensor::new(vec![], Data::Pred(vec![true])).unwrap();
+        assert!(p.scalar_bool().unwrap());
+    }
+
+    #[test]
+    fn tensor_shape_checked() {
+        assert!(Tensor::new(vec![2, 2], Data::F32(vec![0.0; 3])).is_err());
+    }
+}
