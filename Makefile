@@ -2,7 +2,7 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check-interp test bench-auto
+.PHONY: artifacts check-interp check-sched test bench-auto bench-interp
 
 # AOT-lower every L2 program to HLO text + manifest (the rust side's input)
 artifacts:
@@ -12,9 +12,20 @@ artifacts:
 check-interp:
 	cd python && python -m compile.interp_check
 
+# differential check: the compiled lane's schedule/liveness/move
+# discipline vs the tree walker, over the committed artifacts (offline)
+check-sched:
+	cd python && python -m compile.sched_check
+
 test:
 	cd rust && cargo test -q
 	cd python && python -m pytest tests -q
 
 bench-auto:
 	cd rust && cargo bench --bench auto_schedule
+
+# compiled-vs-naive interpreter lanes: bitwise equivalence over all
+# artifacts, then the throughput baseline (writes rust/BENCH_interp.json)
+bench-interp:
+	cd rust && cargo test --release --test interp_equivalence
+	cd rust && cargo run --release -- bench interp --check

@@ -1,0 +1,191 @@
+"""Differential check of the compiled lane's *schedule* semantics.
+
+`rust/vendor/xla/src/compile.rs` lowers each computation into a
+topologically ordered instruction schedule executed over a register file
+with last-use liveness (registers dropped before the instruction that
+last reads them runs), parameter *moves* out of the argument vector, and
+`while` state *moved* through iterations.  This tool mirrors exactly
+that execution discipline on top of the numpy reference interpreter
+(`interp_check.Interp`) and runs it against the plain tree-walking
+reference over every committed artifact in `rust/artifacts/`, comparing
+outputs **bitwise**.
+
+A divergence (or a freed-too-early register assertion) means the
+scheduling/liveness algorithm itself is wrong — independent of the Rust
+type system.  The per-op *kernels* are the reference ones on both sides
+here; their Rust counterparts are pinned by `tests/interp_equivalence.rs`.
+
+Runs fully offline (no jax):
+
+    cd python && python -m compile.sched_check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from .interp_check import Interp, parse_module
+
+_MOVED = object()  # sentinel: argument slot already moved out
+
+
+class ScheduledInterp(Interp):
+    """Register-machine execution with the compile.rs discipline."""
+
+    def _eval(self, comp, args):
+        instrs = comp["instrs"]
+        index = comp["index"]
+
+        # --- topological schedule (postorder DFS from the root), the
+        # same dependency walk lower_computation() performs
+        reg_of: dict[int, int] = {}
+        order: list[int] = []
+        stack = [comp["root"]]
+        while stack:
+            i = stack[-1]
+            if i in reg_of:
+                stack.pop()
+                continue
+            ins = instrs[i]
+            pending = False
+            if ins["op"] != "parameter":
+                for o in ins["operands"]:
+                    j = index[o]
+                    if j not in reg_of:
+                        stack.append(j)
+                        pending = True
+            if pending:
+                continue
+            reg_of[i] = len(order)
+            order.append(i)
+            stack.pop()
+
+        # --- operand registers + last-use liveness
+        m = len(order)
+        cops: list[list[int]] = []
+        last_use: list[int | None] = [None] * m
+        for p, i in enumerate(order):
+            ins = instrs[i]
+            regs = (
+                []
+                if ins["op"] == "parameter"
+                else [reg_of[index[o]] for o in ins["operands"]]
+            )
+            cops.append(regs)
+            for r in regs:
+                last_use[r] = p
+        root = m - 1
+        free_after: list[list[int]] = [[] for _ in range(m)]
+        for r in range(m):
+            p = last_use[r]
+            if p is not None and r != root:
+                free_after[p].append(r)
+
+        # --- flat execution over the register file
+        args = list(args)
+        regs: list[object] = [None] * m
+        for p, i in enumerate(order):
+            ins = instrs[i]
+            if ins["op"] == "parameter":
+                k = int(ins["operands"][0])
+                v = args[k]
+                assert v is not _MOVED, f"parameter({k}) taken twice"
+                args[k] = _MOVED  # move, like compile.rs
+            else:
+                fetched = {}
+                for o, r in zip(ins["operands"], cops[p]):
+                    val = regs[r]
+                    assert val is not None, (
+                        f"register {r} ('{o}') freed before its use at "
+                        f"schedule position {p} ('{ins['name']}')"
+                    )
+                    fetched[o] = val
+                # drop dying registers BEFORE the op runs (the in-place
+                # window of the Rust executor)
+                for r in free_after[p]:
+                    regs[r] = None
+                v = self._instr(comp, ins, None, lambda name: fetched[name])
+            regs[p] = v
+        out = regs[root]
+        assert out is not None, "root register empty"
+        return out
+
+
+def _leaves(v):
+    if isinstance(v, tuple):
+        out = []
+        for p in v:
+            out.extend(_leaves(p))
+        return out
+    return [np.asarray(v)]
+
+
+def _bitwise_same(a, b):
+    return a.dtype == b.dtype and a.shape == b.shape and a.tobytes() == b.tobytes()
+
+
+_DTYPES = {
+    "f32": np.float32,
+    "f64": np.float64,
+    "s32": np.int32,
+    "s64": np.int64,
+    "u32": np.uint32,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--artifacts",
+        default=str(pathlib.Path(__file__).resolve().parents[2] / "rust" / "artifacts"),
+    )
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    sys.setrecursionlimit(100_000)  # the reference walker recurses per chain
+    adir = pathlib.Path(args.artifacts)
+    manifest = json.loads((adir / "manifest.json").read_text())
+    rng = np.random.default_rng(20260731)
+    failures = 0
+    checked = 0
+    for art in manifest["artifacts"]:
+        name = art["name"]
+        if args.only and name not in args.only.split(","):
+            continue
+        checked += 1
+        module = parse_module((adir / art["file"]).read_text())
+        inputs = []
+        for spec in art["inputs"]:
+            dt = _DTYPES[spec["dtype"]]
+            shape = tuple(spec["shape"])
+            if np.issubdtype(dt, np.floating):
+                inputs.append(rng.standard_normal(shape).astype(dt))
+            elif dt == np.uint32:
+                inputs.append(rng.integers(0, 1 << 32, shape, dtype=np.uint64).astype(dt))
+            else:
+                inputs.append(rng.integers(0, 8, shape).astype(dt))
+        want = _leaves(Interp(module).run([np.asarray(i) for i in inputs]))
+        got = _leaves(ScheduledInterp(module).run([np.asarray(i) for i in inputs]))
+        ok = len(got) == len(want) and all(
+            _bitwise_same(g, w) for g, w in zip(got, want)
+        )
+        print(f"{'PASS' if ok else 'FAIL'} {name}", file=sys.stderr)
+        failures += 0 if ok else 1
+    if failures:
+        sys.exit(f"{failures} artifact programs diverged under scheduled execution")
+    if not checked:
+        sys.exit(f"--only '{args.only}' matched no artifact")
+    print(
+        f"all {checked} artifacts: scheduled register-machine execution is "
+        "bitwise-identical to the tree walker",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+//! Interpreter-lane throughput baseline: naive tree-walker vs compiled
+//! bytecode over every committed artifact, emitting `BENCH_interp.json`
+//! (wall time, HLO ops/s, speedup per artifact).
+//!
+//! `cargo bench --bench interp_throughput [-- --reps N --out FILE --smoke --check]`
+//!
+//! Also available as `somd bench interp`; `--check` exits nonzero when
+//! the compiled lane is slower than the naive evaluator on the largest
+//! artifact (the CI gate).
+
+use somd::bench_suite::interp;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let reps = if args.flag("smoke") { args.opt_usize("reps", 2) } else { args.opt_usize("reps", 5) };
+    let out = args.opt("out").unwrap_or("BENCH_interp.json");
+    if let Err(e) = interp::report(reps, out, args.flag("check")) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -90,6 +90,7 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                 let profile = DeviceProfile::by_name(&name).expect("resolved profile");
                 let reg = registry.expect("resolved registry");
                 let mut session = DeviceSession::new(reg, profile);
+                let t0 = Instant::now();
                 let r = match self.invoke_on_session(&mut session, input) {
                     Ok(r) => r,
                     Err(e) => {
@@ -99,8 +100,9 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                         return Err(e);
                     }
                 };
+                let measured = t0.elapsed();
                 let stats = session.stats();
-                engine.scheduler().record_device(self.smp.name(), &stats);
+                engine.scheduler().record_device(self.smp.name(), measured, &stats);
                 Ok((
                     r,
                     Executed::Device { profile: session.profile().name, stats },
@@ -207,15 +209,9 @@ mod tests {
         assert_eq!(h.smp_runs, 2);
         assert!(h.smp_secs.iter().all(|&s| s >= 0.0));
         assert_eq!(h.device_runs, 0);
-        // seeded device history steers a later auto decision
-        e.scheduler().record_device(
-            "Sum.sum",
-            &DeviceStats { device_time: Duration::from_secs(5), ..Default::default() },
-        );
-        e.scheduler().record_device(
-            "Sum.sum",
-            &DeviceStats { device_time: Duration::from_secs(5), ..Default::default() },
-        );
+        // seeded device history (measured wall) steers a later auto decision
+        e.scheduler().record_device("Sum.sum", Duration::from_secs(5), &DeviceStats::default());
+        e.scheduler().record_device("Sum.sum", Duration::from_secs(5), &DeviceStats::default());
         assert_eq!(e.scheduler().decide("Sum.sum"), Choice::Smp);
     }
 }

@@ -1,0 +1,302 @@
+//! Interpreter-lane throughput report (`somd bench interp`).
+//!
+//! Runs every artifact in the manifest through BOTH interpreter lanes of
+//! the vendored `xla` shim — the naive tree-walker and the compiled
+//! bytecode executor — and emits a `BENCH_interp.json` baseline (wall
+//! time, HLO ops/s and speedup per artifact) so the device lane's perf
+//! trajectory is tracked from PR 2 onward.  `--check` turns the report
+//! into a gate: the compiled lane must not be slower than the naive
+//! evaluator on the largest artifact (CI smoke mode).
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{DType, HostTensor, Registry};
+use crate::util::json::Json;
+use crate::util::prng::Xorshift64;
+use crate::util::timer::{middle_tier_mean, sample};
+
+/// Deterministic pseudo-random inputs for an artifact's input specs.
+/// Floats stay in [0.25, 1.75] (positive: no NaNs out of log/sqrt) and
+/// s32 in [0, 7] (safe for the index-shaped inputs); u32 takes the full
+/// range, which the bit-twiddling Crypt kernels care about.  Shared with
+/// `tests/interp_equivalence.rs` so the bench and the equivalence gate
+/// exercise identical data.
+pub fn synth_inputs(reg: &Registry, name: &str, seed: u64) -> Result<Vec<HostTensor>> {
+    let info = reg.info(name)?;
+    let mut rng = Xorshift64::new(seed ^ 0x5012_2013);
+    let mut out = Vec::with_capacity(info.inputs.len());
+    for spec in &info.inputs {
+        let n = spec.elems();
+        let t = match spec.dtype {
+            DType::F32 => HostTensor::F32(
+                (0..n).map(|_| rng.f64_range(0.25, 1.75) as f32).collect(),
+                spec.shape.clone(),
+            ),
+            DType::F64 => HostTensor::F64(
+                (0..n).map(|_| rng.f64_range(0.25, 1.75)).collect(),
+                spec.shape.clone(),
+            ),
+            DType::S32 => HostTensor::S32(
+                (0..n).map(|_| rng.below(8) as i32).collect(),
+                spec.shape.clone(),
+            ),
+            DType::U32 => HostTensor::U32(
+                (0..n).map(|_| rng.next_u64() as u32).collect(),
+                spec.shape.clone(),
+            ),
+            DType::S64 => bail!("artifact '{name}' has an s64 input (no host tensor)"),
+        };
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Bitwise tensor equality: floats compare by bit pattern, so NaN == NaN
+/// and -0.0 != 0.0 — the contract of the equivalence suite.
+pub fn bitwise_eq(a: &HostTensor, b: &HostTensor) -> bool {
+    match (a, b) {
+        (HostTensor::F32(x, xs), HostTensor::F32(y, ys)) => {
+            xs == ys
+                && x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (HostTensor::F64(x, xs), HostTensor::F64(y, ys)) => {
+            xs == ys
+                && x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (HostTensor::S32(x, xs), HostTensor::S32(y, ys)) => xs == ys && x == y,
+        (HostTensor::U32(x, xs), HostTensor::U32(y, ys)) => xs == ys && x == y,
+        _ => false,
+    }
+}
+
+/// One artifact's lane-vs-lane measurement.
+#[derive(Debug, Clone)]
+pub struct InterpRow {
+    pub name: String,
+    pub input_bytes: usize,
+    /// Statically lowered instructions (None if lowering failed).
+    pub lowered_instructions: Option<usize>,
+    /// HLO instructions executed per run (while bodies count per
+    /// iteration; identical for both lanes by construction).
+    pub executed_instructions: u64,
+    pub naive_secs: f64,
+    pub compiled_secs: f64,
+    pub speedup: f64,
+    pub naive_ops_per_sec: f64,
+    pub compiled_ops_per_sec: f64,
+}
+
+/// Measure every artifact on both lanes.
+pub fn run(reps: usize) -> Result<Vec<InterpRow>> {
+    let reg = Registry::load_default()?;
+    let names: Vec<String> = reg.names().map(String::from).collect();
+    let mut rows = Vec::with_capacity(names.len());
+    for name in names {
+        rows.push(run_one(&reg, &name, reps)?);
+    }
+    Ok(rows)
+}
+
+fn run_one(reg: &Registry, name: &str, reps: usize) -> Result<InterpRow> {
+    let art = reg.artifact(name)?;
+    let inputs = synth_inputs(reg, name, 1)?;
+    let input_bytes: usize = art.info().inputs.iter().map(|s| s.bytes()).sum();
+
+    // warm both lanes (first-touch allocation, page faults)
+    art.execute_lane(&inputs, xla::EvalLane::Naive)?;
+    if art.has_compiled_form() {
+        art.execute_lane(&inputs, xla::EvalLane::Compiled)?;
+    }
+
+    // executed-instruction count per run (thread-local counter delta)
+    let before = xla::executed_instruction_count();
+    art.execute_lane(&inputs, xla::EvalLane::Naive)?;
+    let executed_instructions = xla::executed_instruction_count() - before;
+
+    let naive = middle_tier_mean(&sample(reps, || {
+        art.execute_lane(&inputs, xla::EvalLane::Naive).expect("naive lane runs")
+    }));
+    let compiled = if art.has_compiled_form() {
+        middle_tier_mean(&sample(reps, || {
+            art.execute_lane(&inputs, xla::EvalLane::Compiled).expect("compiled lane runs")
+        }))
+    } else {
+        // lowering failed: the compiled column degenerates to naive
+        naive
+    };
+
+    let ops = |d: Duration| {
+        if d.is_zero() {
+            0.0
+        } else {
+            executed_instructions as f64 / d.as_secs_f64()
+        }
+    };
+    Ok(InterpRow {
+        name: name.to_string(),
+        input_bytes,
+        lowered_instructions: art.compiled_instruction_count(),
+        executed_instructions,
+        naive_secs: naive.as_secs_f64(),
+        compiled_secs: compiled.as_secs_f64(),
+        speedup: if compiled.is_zero() {
+            1.0
+        } else {
+            naive.as_secs_f64() / compiled.as_secs_f64()
+        },
+        naive_ops_per_sec: ops(naive),
+        compiled_ops_per_sec: ops(compiled),
+    })
+}
+
+/// The artifact the CI gate watches: the one with the most input bytes
+/// (`crypt_roundtrip_small` in the committed set).
+pub fn largest(rows: &[InterpRow]) -> Option<&InterpRow> {
+    rows.iter().max_by_key(|r| r.input_bytes)
+}
+
+fn geomean(vals: impl Iterator<Item = f64>) -> f64 {
+    let (mut log_sum, mut n) = (0.0f64, 0usize);
+    for v in vals {
+        if v > 0.0 {
+            log_sum += v.ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        1.0
+    } else {
+        (log_sum / n as f64).exp()
+    }
+}
+
+/// Render the report as the `BENCH_interp.json` schema.
+pub fn to_json(rows: &[InterpRow], reps: usize) -> Json {
+    use std::collections::BTreeMap;
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("interp_throughput/v1".to_string()));
+    top.insert("reps".to_string(), Json::Num(reps as f64));
+    let arts: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(r.name.clone()));
+            m.insert("input_bytes".to_string(), Json::Num(r.input_bytes as f64));
+            m.insert(
+                "lowered_instructions".to_string(),
+                match r.lowered_instructions {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            );
+            m.insert(
+                "executed_instructions".to_string(),
+                Json::Num(r.executed_instructions as f64),
+            );
+            m.insert("naive_secs".to_string(), Json::Num(r.naive_secs));
+            m.insert("compiled_secs".to_string(), Json::Num(r.compiled_secs));
+            m.insert("speedup".to_string(), Json::Num(r.speedup));
+            m.insert("naive_ops_per_sec".to_string(), Json::Num(r.naive_ops_per_sec));
+            m.insert(
+                "compiled_ops_per_sec".to_string(),
+                Json::Num(r.compiled_ops_per_sec),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("artifacts".to_string(), Json::Arr(arts));
+    let mut summary = BTreeMap::new();
+    summary.insert(
+        "geomean_speedup".to_string(),
+        Json::Num(geomean(rows.iter().map(|r| r.speedup))),
+    );
+    if let Some(big) = largest(rows) {
+        summary.insert("largest_artifact".to_string(), Json::Str(big.name.clone()));
+        summary.insert("largest_speedup".to_string(), Json::Num(big.speedup));
+    }
+    top.insert("summary".to_string(), Json::Obj(summary));
+    Json::Obj(top)
+}
+
+/// Print the report and write `out_path`; with `check`, fail (Err) when
+/// the compiled lane is slower than the naive evaluator on the largest
+/// artifact.
+pub fn report(reps: usize, out_path: &str, check: bool) -> Result<()> {
+    let rows = run(reps)?;
+    println!("== Interp throughput: naive tree-walker vs compiled bytecode (reps {reps}) ==");
+    println!(
+        "{:<24} {:>12} {:>12} {:>12} {:>9} {:>14}",
+        "Artifact", "bytes-in", "naive (s)", "compiled (s)", "speedup", "compiled ops/s"
+    );
+    for r in &rows {
+        println!(
+            "{:<24} {:>12} {:>12.5} {:>12.5} {:>8.2}x {:>14.0}",
+            r.name, r.input_bytes, r.naive_secs, r.compiled_secs, r.speedup, r.compiled_ops_per_sec
+        );
+    }
+    let gm = geomean(rows.iter().map(|r| r.speedup));
+    println!("geomean speedup: {gm:.2}x");
+    std::fs::write(out_path, to_json(&rows, reps).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if check {
+        let big = largest(&rows).ok_or_else(|| anyhow!("no artifacts measured"))?;
+        if big.lowered_instructions.is_none() {
+            bail!("largest artifact '{}' did not lower to the compiled lane", big.name);
+        }
+        if big.speedup < 1.0 {
+            bail!(
+                "compiled lane is slower than naive on '{}' ({:.2}x)",
+                big.name,
+                big.speedup
+            );
+        }
+        println!("check ok: compiled ≥ naive on '{}' ({:.2}x)", big.name, big.speedup);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Registry {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Registry::load(dir).unwrap()
+    }
+
+    #[test]
+    fn synth_inputs_match_specs_and_are_deterministic() {
+        let reg = reg();
+        let a = synth_inputs(&reg, "vecadd", 7).unwrap();
+        let b = synth_inputs(&reg, "vecadd", 7).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].shape(), reg.info("vecadd").unwrap().inputs[0].shape.as_slice());
+        assert!(bitwise_eq(&a[0], &b[0]) && bitwise_eq(&a[1], &b[1]));
+        let c = synth_inputs(&reg, "vecadd", 8).unwrap();
+        assert!(!bitwise_eq(&a[0], &c[0]), "seed must matter");
+    }
+
+    #[test]
+    fn bitwise_eq_distinguishes_nan_payload_and_shape() {
+        let x = HostTensor::F32(vec![f32::NAN, 1.0], vec![2]);
+        let y = HostTensor::F32(vec![f32::NAN, 1.0], vec![2]);
+        assert!(bitwise_eq(&x, &y), "same-bit NaNs are equal");
+        let z = HostTensor::F32(vec![f32::NAN, 1.0], vec![2, 1]);
+        assert!(!bitwise_eq(&x, &z), "shape participates");
+    }
+
+    #[test]
+    fn vecadd_row_measures_both_lanes() {
+        let reg = reg();
+        let row = run_one(&reg, "vecadd", 1).unwrap();
+        assert!(row.naive_secs > 0.0);
+        assert!(row.compiled_secs > 0.0);
+        assert!(row.executed_instructions >= 3);
+        assert!(row.lowered_instructions.is_some(), "vecadd must lower");
+    }
+}

@@ -16,6 +16,7 @@
 pub mod crypt;
 pub mod gpu;
 pub mod harness;
+pub mod interp;
 pub mod lufact;
 pub mod modeled;
 pub mod params;

@@ -2,9 +2,17 @@
 //! (paper Algorithm 2).  Owns the memory manager, runs kernel launches
 //! against the artifact registry, and keeps two clocks:
 //!
-//! * **wall** — real time spent in PJRT execution on this host;
+//! * **wall** — real time spent in PJRT execution on this host (the
+//!   compiled bytecode lane of the vendored `xla` shim since PR 2; see
+//!   `rust/vendor/xla/README.md` for the parse → lower → schedule →
+//!   execute pipeline);
 //! * **device** — the modeled time on the profiled GPU: measured compute
 //!   x `compute_scale`, plus modeled transfer and launch costs.
+//!
+//! The scheduler history that resolves `method:auto` is fed *measured*
+//! execute wall time (the engine clocks each job on the device master
+//! after dequeue); the modeled clock only drives the paper-figure
+//! reports.
 
 use std::rc::Rc;
 use std::time::{Duration, Instant};

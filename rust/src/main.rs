@@ -3,6 +3,7 @@
 //! ```text
 //! somd info
 //! somd bench <table1|table2|fig10|fig11|auto> [--class A|B|C|all] [--scale S] [--reps N]
+//! somd bench interp [--reps N] [--out FILE] [--smoke] [--check]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
 //!          [--class A|B|C] [--scale S] [--partitions N]
 //!          [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]
@@ -11,7 +12,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use somd::bench_suite::{crypt, gpu, harness, lufact, modeled, series, sor, sparse};
+use somd::bench_suite::{crypt, gpu, harness, interp, lufact, modeled, series, sor, sparse};
 use somd::bench_suite::{Class, Sizes};
 use somd::device::{DeviceProfile, DeviceSession};
 use somd::runtime::Registry;
@@ -39,7 +40,8 @@ fn dispatch(args: &Args) -> Result<()> {
         _ => {
             eprintln!(
                 "usage: somd <info|bench|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11|auto> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto|interp> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 \x20      somd bench interp [--reps N] [--out FILE] [--smoke] [--check]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
                  e2e:   somd e2e [--scale S]"
@@ -98,6 +100,14 @@ fn bench(args: &Args) -> Result<()> {
             for class in classes(args) {
                 harness::print_fig11(class, scale, reps, &o, &reg)?;
             }
+        }
+        "interp" => {
+            // interpreter-lane throughput: naive vs compiled over every
+            // artifact; --smoke is the cheap CI variant, --check gates on
+            // the compiled lane not losing on the largest artifact
+            let reps = if args.flag("smoke") { args.opt_usize("reps", 2) } else { reps };
+            let out = args.opt("out").unwrap_or("BENCH_interp.json");
+            interp::report(reps, out, args.flag("check"))?;
         }
         "auto" => {
             let reg = Registry::load_default()?;

@@ -57,10 +57,28 @@ impl Artifact {
     /// device backend uses [`Artifact::execute_buffers`] to keep data
     /// resident instead.
     pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.execute_rows(inputs, None)
+    }
+
+    /// Execute on an explicit interpreter lane (naive tree-walker vs
+    /// compiled bytecode) — the equivalence suite and the interp bench
+    /// drive both lanes over the same inputs through this entry.
+    pub fn execute_lane(&self, inputs: &[HostTensor], lane: xla::EvalLane) -> Result<Vec<HostTensor>> {
+        self.execute_rows(inputs, Some(lane))
+    }
+
+    fn execute_rows(
+        &self,
+        inputs: &[HostTensor],
+        lane: Option<xla::EvalLane>,
+    ) -> Result<Vec<HostTensor>> {
         self.check_arity(inputs.len())?;
         let literals: Vec<xla::Literal> =
             inputs.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
-        let rows = self.exe.execute::<xla::Literal>(&literals)?;
+        let rows = match lane {
+            None => self.exe.execute::<xla::Literal>(&literals)?,
+            Some(lane) => self.exe.execute_lane::<xla::Literal>(&literals, lane)?,
+        };
         let mut out = Vec::new();
         for buf in &rows[0] {
             let mut lit = buf.to_literal_sync()?;
@@ -73,6 +91,16 @@ impl Artifact {
             }
         }
         Ok(out)
+    }
+
+    /// Whether the artifact lowered to the compiled lane at load time.
+    pub fn has_compiled_form(&self) -> bool {
+        self.exe.has_compiled_form()
+    }
+
+    /// Lowered instruction count (None when only the naive lane exists).
+    pub fn compiled_instruction_count(&self) -> Option<usize> {
+        self.exe.compiled_instruction_count()
     }
 
     /// Execute with device-resident buffers, producing device-resident

@@ -157,6 +157,14 @@ fn master_loop(
             return;
         }
     };
+    // Pre-compile every artifact before serving jobs: lowering is a
+    // one-time load cost, and charging it to the first job's *measured*
+    // execute time would hand the scheduler an inflated first device
+    // sample (which, with hysteresis, could lock a method out of the
+    // device lane for good).  Missing/broken artifacts stay lazy errors.
+    for name in registry.names().map(String::from).collect::<Vec<_>>() {
+        let _ = registry.artifact(&name);
+    }
     let mut ctx = DeviceCtx { registry: &registry, sessions: BTreeMap::new(), counters };
     while let Ok(job) = rx.recv() {
         ctx.counters.jobs_run.fetch_add(1, Ordering::SeqCst);
@@ -172,7 +180,9 @@ fn master_loop(
 pub struct Engine {
     workers: usize,
     rules: Rules,
-    pool: WorkerPool,
+    // Arc so the xla parallel-kernel runner can hold the pool alive past
+    // the engine's lifetime (the runner is a process-wide install)
+    pool: Arc<WorkerPool>,
     scheduler: Arc<Scheduler>,
     device: Option<DeviceMaster>,
     auto_profile: String,
@@ -190,7 +200,7 @@ impl Engine {
         Self {
             workers,
             rules,
-            pool: WorkerPool::new(workers),
+            pool: Arc::new(WorkerPool::new(workers)),
             scheduler: Arc::new(Scheduler::new(SchedulerConfig::default())),
             device: None,
             auto_profile: "fermi".to_string(),
@@ -214,6 +224,21 @@ impl Engine {
         if DeviceProfile::by_name(auto_profile).is_none() {
             anyhow::bail!("unknown device profile '{auto_profile}'");
         }
+        // Route the compiled interpreter's chunked kernels through this
+        // engine's worker pool: device-lane kernels then compete for the
+        // same SMP workers as shared-memory invocations (§6).  Process-
+        // wide and first-engine-wins; the Arc keeps the pool's threads
+        // alive for later engines that lose the install race.  Safe from
+        // nested-submission deadlock because kernels only ever run on the
+        // device-master thread, never on pool workers, and chunk jobs
+        // themselves never re-submit.
+        let pool = self.pool.clone();
+        xla::install_parallel_runner(Box::new(move |jobs: Vec<xla::ParallelJob>| {
+            let handles: Vec<_> = jobs.into_iter().map(|j| pool.submit(j)).collect();
+            for h in handles {
+                h.join();
+            }
+        }));
         self.device = Some(DeviceMaster::spawn(artifacts_dir.into())?);
         self.auto_profile = auto_profile.to_string();
         Ok(self)
@@ -398,6 +423,9 @@ where
 {
     let session = ctx.session(profile)?;
     let before = session.stats();
+    // measured execute time: the clock starts after the job was dequeued
+    // on the master thread, so queue wait never pollutes the history
+    let t0 = Instant::now();
     let r = match method.invoke_on_session(session, input) {
         Ok(r) => r,
         Err(e) => {
@@ -407,8 +435,9 @@ where
             return Err(e);
         }
     };
+    let measured = t0.elapsed();
     let stats = session.stats().delta_since(&before);
-    sched.record_device(method.name(), &stats);
+    sched.record_device(method.name(), measured, &stats);
     let profile_name = session.profile().name;
     Ok((r, Executed::Device { profile: profile_name, stats }))
 }

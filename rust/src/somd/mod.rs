@@ -23,7 +23,7 @@
 //!   offload, reverting to SMP when inapplicable;
 //! * `auto` — let the runtime decide per invocation from recorded
 //!   execution history ([`scheduler::Scheduler`]): SMP wall times vs
-//!   modeled device times (compute + transfers + launches).  Transfer-
+//!   *measured* device execute times (queue wait excluded).  Transfer-
 //!   heavy methods (Crypt-shaped) converge to SMP, compute-dense ones
 //!   (Series-shaped) to the device — the §7.3 findings, automated.
 

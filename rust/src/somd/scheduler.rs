@@ -12,9 +12,14 @@
 //! Recorded signals per method:
 //!
 //! * **SMP** — observed wall time of shared-memory invocations;
-//! * **device** — the *modeled* device time from
-//!   [`DeviceStats`](crate::device::DeviceStats) (scaled compute +
-//!   transfer + launch overhead), plus transfer-byte and launch totals.
+//! * **device** — the *measured* per-invocation execute time on the
+//!   device lane (wall time from job start to completion on the device
+//!   master, excluding queue wait), plus transfer-byte and launch totals
+//!   from [`DeviceStats`](crate::device::DeviceStats).  Earlier revisions
+//!   recorded the *modeled* device time here, which poisoned `auto`
+//!   decisions with cost-model assumptions instead of observed cost; the
+//!   modeled clock still lives in `DeviceStats` for the paper-figure
+//!   reports.
 //!
 //! The decision rule is deliberately simple and deterministic:
 //! explore each applicable side until it has `min_samples` observations
@@ -60,7 +65,8 @@ impl Default for SchedulerConfig {
 pub struct MethodHistory {
     /// Trailing SMP wall times (seconds).
     pub smp_secs: Vec<f64>,
-    /// Trailing modeled device times (seconds).
+    /// Trailing *measured* device execute times (seconds, queue wait
+    /// excluded).
     pub device_secs: Vec<f64>,
     /// Lifetime totals (not windowed).
     pub smp_runs: u64,
@@ -94,7 +100,7 @@ impl MethodHistory {
         Self::mean(&self.smp_secs)
     }
 
-    /// Trailing-window mean modeled device seconds.
+    /// Trailing-window mean measured device seconds.
     pub fn device_estimate(&self) -> Option<f64> {
         Self::mean(&self.device_secs)
     }
@@ -147,15 +153,17 @@ impl Scheduler {
         e.smp_runs += 1;
     }
 
-    /// Record a device invocation from its session stats delta.
-    pub fn record_device(&self, method: &str, stats: &DeviceStats) {
+    /// Record a device invocation: `measured` is the observed execute
+    /// wall time of the job itself (clock started after dequeue, so queue
+    /// wait is excluded); `stats` contributes the transfer/launch totals.
+    /// The trailing window holds *measured* seconds — the modeled
+    /// `stats.device_time` is deliberately NOT recorded here, so `auto`
+    /// compares like with like (observed SMP wall vs observed device
+    /// wall).
+    pub fn record_device(&self, method: &str, measured: Duration, stats: &DeviceStats) {
         let mut h = self.histories.lock().unwrap();
         let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(
-            &mut e.device_secs,
-            stats.device_time.as_secs_f64(),
-            self.cfg.window,
-        );
+        MethodHistory::push(&mut e.device_secs, measured.as_secs_f64(), self.cfg.window);
         e.device_runs += 1;
         e.bytes_h2d += stats.bytes_h2d as u64;
         e.bytes_d2h += stats.bytes_d2h as u64;
@@ -345,6 +353,11 @@ mod tests {
         }
     }
 
+    /// Record a device run whose measured wall equals `secs`.
+    fn rec_dev(s: &Scheduler, m: &str, secs: f64, bytes: usize) {
+        s.record_device(m, Duration::from_secs_f64(secs), &dev_stats(secs, bytes));
+    }
+
     #[test]
     fn explores_smp_then_device() {
         let s = Scheduler::new(SchedulerConfig::default());
@@ -359,7 +372,7 @@ mod tests {
         let s = Scheduler::new(SchedulerConfig { hysteresis: 1.0, ..Default::default() });
         for _ in 0..3 {
             s.record_smp("M.m", Duration::from_millis(50));
-            s.record_device("M.m", &dev_stats(0.005, 1000));
+            rec_dev(&s, "M.m", 0.005, 1000);
         }
         assert_eq!(s.decide("M.m"), Choice::Device);
     }
@@ -373,18 +386,18 @@ mod tests {
         });
         for _ in 0..4 {
             s.record_smp("M.m", Duration::from_millis(10));
-            s.record_device("M.m", &dev_stats(0.011, 0));
+            rec_dev(&s, "M.m", 0.011, 0);
         }
         // smp incumbent; device is 10% faster? no: device is slower here.
         assert_eq!(s.decide("M.m"), Choice::Smp);
         // device becomes slightly faster, but within the hysteresis band
         for _ in 0..4 {
-            s.record_device("M.m", &dev_stats(0.009, 0));
+            rec_dev(&s, "M.m", 0.009, 0);
         }
         assert_eq!(s.decide("M.m"), Choice::Smp);
         // device becomes clearly faster — now it flips
         for _ in 0..4 {
-            s.record_device("M.m", &dev_stats(0.004, 0));
+            rec_dev(&s, "M.m", 0.004, 0);
         }
         assert_eq!(s.decide("M.m"), Choice::Device);
         // and stays flipped on repeated decisions (stable boundary)
@@ -409,13 +422,7 @@ mod tests {
         assert_eq!(h.device_failures, 2);
         // a recovered device (fast successes) can win the method back
         for _ in 0..8 {
-            s.record_device(
-                "M.m",
-                &DeviceStats {
-                    device_time: Duration::from_micros(100),
-                    ..DeviceStats::default()
-                },
-            );
+            s.record_device("M.m", Duration::from_micros(100), &DeviceStats::default());
         }
         assert_eq!(s.decide("M.m"), Choice::Device);
     }
@@ -426,9 +433,9 @@ mod tests {
         let s = Scheduler::new(cfg);
         for i in 0..5 {
             s.record_smp("A.a", Duration::from_millis(3 + i));
-            s.record_device("A.a", &dev_stats(0.050, 1 << 20));
+            rec_dev(&s, "A.a", 0.050, 1 << 20);
             s.record_smp("B.b", Duration::from_millis(80));
-            s.record_device("B.b", &dev_stats(0.002, 64));
+            rec_dev(&s, "B.b", 0.002, 64);
         }
         let a = s.decide("A.a");
         let b = s.decide("B.b");
@@ -444,13 +451,13 @@ mod tests {
         let s = Scheduler::new(SchedulerConfig::default());
         for _ in 0..3 {
             s.record_smp("Crypt.pass", Duration::from_millis(8));
-            s.record_device("Crypt.pass", &dev_stats(0.120, 50_000_000));
+            rec_dev(&s, "Crypt.pass", 0.120, 50_000_000);
         }
         assert_eq!(s.decide("Crypt.pass"), Choice::Smp);
         // Series-shaped: compute dense, tiny transfers
         for _ in 0..3 {
             s.record_smp("Series.coefficients", Duration::from_millis(200));
-            s.record_device("Series.coefficients", &dev_stats(0.004, 8_000));
+            rec_dev(&s, "Series.coefficients", 0.004, 8_000);
         }
         assert_eq!(s.decide("Series.coefficients"), Choice::Device);
         let table = s.decision_table();

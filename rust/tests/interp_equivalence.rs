@@ -1,0 +1,100 @@
+//! Differential-equivalence gate for the compiled interpreter lane
+//! (satellite of the compiled-device-lane PR): every artifact in
+//! `rust/artifacts/manifest.json` must produce BITWISE-identical outputs
+//! on the naive tree-walker and the compiled bytecode executor, so the
+//! lowering, buffer-reuse and SMP-parallel kernels cannot drift from the
+//! reference semantics (which `python -m compile.interp_check` validates
+//! against JAX).
+//!
+//! Also regression-tests the load-time constant hoisting: a steady-state
+//! `execute` on the compiled lane performs ZERO constant-literal parses.
+
+use somd::bench_suite::interp::{bitwise_eq, synth_inputs};
+use somd::runtime::Registry;
+
+fn reg() -> Registry {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Registry::load(dir).expect("artifacts present — run `make artifacts`")
+}
+
+/// Compiled and naive lanes agree bit-for-bit on every committed
+/// artifact, across two distinct input seeds.
+#[test]
+fn compiled_lane_matches_naive_on_every_artifact() {
+    let reg = reg();
+    let names: Vec<String> = reg.names().map(String::from).collect();
+    assert!(names.len() >= 20, "expected the full artifact set, got {}", names.len());
+    for name in &names {
+        let art = reg.artifact(name).expect("artifact compiles");
+        assert!(
+            art.has_compiled_form(),
+            "artifact '{name}' failed to lower to the compiled lane"
+        );
+        for seed in [1u64, 2] {
+            let inputs = synth_inputs(&reg, name, seed).expect("inputs synthesized");
+            let naive = art
+                .execute_lane(&inputs, xla::EvalLane::Naive)
+                .unwrap_or_else(|e| panic!("naive lane failed on '{name}': {e:#}"));
+            let compiled = art
+                .execute_lane(&inputs, xla::EvalLane::Compiled)
+                .unwrap_or_else(|e| panic!("compiled lane failed on '{name}': {e:#}"));
+            assert_eq!(
+                naive.len(),
+                compiled.len(),
+                "output arity diverged on '{name}' (seed {seed})"
+            );
+            for (i, (n, c)) in naive.iter().zip(&compiled).enumerate() {
+                assert!(
+                    bitwise_eq(n, c),
+                    "output {i} of '{name}' diverged between lanes (seed {seed})"
+                );
+            }
+        }
+    }
+}
+
+/// The second (and every later) execute on the compiled lane performs no
+/// constant parsing: payload text is parsed exactly once, at lowering.
+#[test]
+fn compiled_lane_parses_constants_only_at_load_time() {
+    let reg = reg();
+    // crypt_A is constant-heavy (IDEA round structure)
+    let art = reg.artifact("crypt_A").expect("artifact compiles");
+    assert!(art.has_compiled_form());
+    let inputs = synth_inputs(&reg, "crypt_A", 3).unwrap();
+    // first execute warms nothing constant-related — lowering already ran
+    art.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
+    let before = xla::constant_parse_count();
+    art.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
+    art.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
+    assert_eq!(
+        xla::constant_parse_count(),
+        before,
+        "steady-state compiled executes must not re-parse constant literals"
+    );
+    // the naive lane, by contrast, re-parses every run
+    art.execute_lane(&inputs, xla::EvalLane::Naive).unwrap();
+    assert!(
+        xla::constant_parse_count() > before,
+        "naive lane is expected to parse constants per evaluation"
+    );
+}
+
+/// Both lanes execute the same number of HLO instructions per run (the
+/// compiled schedule covers exactly the reachable instruction set).
+#[test]
+fn lanes_execute_identical_instruction_counts() {
+    let reg = reg();
+    let art = reg.artifact("vecadd").expect("artifact compiles");
+    let inputs = synth_inputs(&reg, "vecadd", 4).unwrap();
+    // warm both lanes first
+    art.execute_lane(&inputs, xla::EvalLane::Naive).unwrap();
+    art.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
+    let c0 = xla::executed_instruction_count();
+    art.execute_lane(&inputs, xla::EvalLane::Naive).unwrap();
+    let naive = xla::executed_instruction_count() - c0;
+    let c1 = xla::executed_instruction_count();
+    art.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
+    let compiled = xla::executed_instruction_count() - c1;
+    assert_eq!(naive, compiled, "lanes must cover the same instruction set");
+}

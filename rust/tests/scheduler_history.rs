@@ -1,8 +1,12 @@
-//! Scheduler-history unit suite (satellite of the adaptive-scheduler PR):
-//! seeded fake timings drive the cost model to flip a method from
-//! SMP→Device and back, asserting the decision boundary is stable under
-//! repeated queries and survives JSON serialization.
+//! Scheduler-history unit suite (satellite of the adaptive-scheduler PR,
+//! extended by the compiled-device-lane PR): seeded fake timings drive
+//! the cost model to flip a method from SMP→Device and back, asserting
+//! the decision boundary is stable under repeated queries and survives
+//! JSON serialization — and that the device side of the history now
+//! holds *measured* execute time (queue wait excluded), not the modeled
+//! device clock.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use somd::device::DeviceStats;
@@ -19,6 +23,13 @@ fn dev(secs: f64, bytes: usize) -> DeviceStats {
     }
 }
 
+/// Record a device run whose measured wall equals `secs` (the stats
+/// delta carries the same value on its modeled clock; the scheduler must
+/// take the measured argument).
+fn rec_dev(s: &Scheduler, m: &str, secs: f64, bytes: usize) {
+    s.record_device(m, Duration::from_secs_f64(secs), &dev(secs, bytes));
+}
+
 fn cfg() -> SchedulerConfig {
     SchedulerConfig { window: 4, min_samples: 2, hysteresis: 1.2 }
 }
@@ -31,20 +42,20 @@ fn flips_smp_to_device_and_back_on_seeded_timings() {
     // phase 1: SMP clearly faster -> SMP
     for _ in 0..4 {
         s.record_smp(m, Duration::from_millis(5));
-        s.record_device(m, &dev(0.050, 1 << 20));
+        rec_dev(&s, m, 0.050, 1 << 20);
     }
     assert_eq!(s.decide(m), Choice::Smp);
 
     // phase 2: the device becomes 10x faster (window slides over the old
     // samples) -> flips to Device
     for _ in 0..4 {
-        s.record_device(m, &dev(0.0005, 1 << 20));
+        rec_dev(&s, m, 0.0005, 1 << 20);
     }
     assert_eq!(s.decide(m), Choice::Device);
 
     // phase 3: the device degrades again -> flips back to SMP
     for _ in 0..4 {
-        s.record_device(m, &dev(0.200, 1 << 20));
+        rec_dev(&s, m, 0.200, 1 << 20);
     }
     assert_eq!(s.decide(m), Choice::Smp);
 }
@@ -55,7 +66,7 @@ fn decision_boundary_is_stable_under_repeated_queries() {
     let m = "SOR.sweep";
     for _ in 0..4 {
         s.record_smp(m, Duration::from_millis(10));
-        s.record_device(m, &dev(0.009, 4096));
+        rec_dev(&s, m, 0.009, 4096);
     }
     // 9ms vs 10ms is inside the 1.2 hysteresis band: whatever is chosen
     // first must keep being chosen with no new evidence
@@ -71,7 +82,7 @@ fn near_boundary_noise_does_not_flap() {
     let m = "Crypt.pass";
     for _ in 0..4 {
         s.record_smp(m, Duration::from_millis(10));
-        s.record_device(m, &dev(0.0101, 1 << 24));
+        rec_dev(&s, m, 0.0101, 1 << 24);
     }
     let first = s.decide(m);
     assert_eq!(first, Choice::Smp);
@@ -79,7 +90,7 @@ fn near_boundary_noise_does_not_flap() {
     // boundary; the hysteresis band must absorb them
     for i in 0..12 {
         let jitter = if i % 2 == 0 { 0.0095 } else { 0.0105 };
-        s.record_device(m, &dev(jitter, 1 << 24));
+        rec_dev(&s, m, jitter, 1 << 24);
         assert_eq!(s.decide(m), Choice::Smp, "flapped on sample {i}");
     }
 }
@@ -90,10 +101,10 @@ fn history_serializes_and_restores_decisions() {
     for _ in 0..4 {
         // transfer-heavy workload: device loses
         s.record_smp("Crypt.pass", Duration::from_millis(8));
-        s.record_device("Crypt.pass", &dev(0.120, 50_000_000));
+        rec_dev(&s, "Crypt.pass", 0.120, 50_000_000);
         // compute-dense workload: device wins
         s.record_smp("Series.coefficients", Duration::from_millis(200));
-        s.record_device("Series.coefficients", &dev(0.004, 8_000));
+        rec_dev(&s, "Series.coefficients", 0.004, 8_000);
     }
     assert_eq!(s.decide("Crypt.pass"), Choice::Smp);
     assert_eq!(s.decide("Series.coefficients"), Choice::Device);
@@ -115,13 +126,79 @@ fn history_serializes_and_restores_decisions() {
 fn transfer_and_launch_totals_accumulate() {
     let s = Scheduler::new(cfg());
     for i in 1..=3 {
-        s.record_device("M.m", &dev(0.001 * i as f64, 1000));
+        rec_dev(&s, "M.m", 0.001 * i as f64, 1000);
     }
     let h = s.history("M.m").unwrap();
     assert_eq!(h.device_runs, 3);
     assert_eq!(h.launches, 3);
     assert_eq!(h.bytes_h2d + h.bytes_d2h, 3000);
     assert!((h.transfer_bytes_per_run() - 1000.0).abs() < 1e-9);
+}
+
+#[test]
+fn history_holds_measured_time_not_modeled_device_clock() {
+    // the stats delta models a 5 s device; the measured execute took 2 ms
+    // — `auto` must see the 2 ms (observed cost), not the model
+    let s = Scheduler::new(cfg());
+    for _ in 0..2 {
+        s.record_smp("M.m", Duration::from_millis(50));
+        s.record_device("M.m", Duration::from_millis(2), &dev(5.0, 1024));
+    }
+    let h = s.history("M.m").unwrap();
+    assert!(
+        (h.device_estimate().unwrap() - 0.002).abs() < 1e-9,
+        "device history must hold the measured seconds, got {:?}",
+        h.device_secs
+    );
+    // measured 2 ms beats SMP 50 ms — modeled 5 s would have said SMP
+    assert_eq!(s.decide("M.m"), Choice::Device);
+}
+
+#[test]
+fn engine_device_lane_records_measured_execute_time() {
+    use somd::backend::{DeviceFn, Executed, HeteroMethod};
+    use somd::somd::partition::Block1D;
+    use somd::somd::{reduction, Engine, Rules, SomdMethod, Target};
+
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut rules = Rules::empty();
+    rules.set("Sleepy.run", Target::Device("fermi".into()));
+    let engine = Engine::with_rules(1, rules)
+        .with_device_master(artifacts, "fermi")
+        .expect("device master starts");
+
+    let smp = SomdMethod::new(
+        "Sleepy.run",
+        |_: &Vec<i64>, n| Block1D::new().ranges(1, n),
+        |_, _| (),
+        |_, _, _, _| 0i64,
+        reduction::sum::<i64>(),
+    );
+    // a device version that performs no launches: the modeled device
+    // clock stays at zero while real execute time is ~25 ms
+    let dev_fn: DeviceFn<Vec<i64>, i64> = Box::new(|_sess, _input| {
+        std::thread::sleep(Duration::from_millis(25));
+        Ok(7)
+    });
+    let m = Arc::new(HeteroMethod::with_device(smp, dev_fn));
+
+    let (r, how) = engine.submit_hetero(m, Arc::new(Vec::new())).join().expect("device job");
+    assert_eq!(r, 7);
+    let stats = match how {
+        Executed::Device { stats, .. } => stats,
+        other => panic!("expected device execution, got {other:?}"),
+    };
+    assert_eq!(stats.launches, 0);
+    assert_eq!(stats.device_time, Duration::ZERO, "no launches => no modeled time");
+
+    let h = engine.scheduler().history("Sleepy.run").expect("history recorded");
+    assert_eq!(h.device_runs, 1);
+    assert!(
+        h.device_secs[0] >= 0.020,
+        "history must hold the measured execute wall (~25 ms), got {} s — \
+         a modeled-time source would have recorded 0",
+        h.device_secs[0]
+    );
 }
 
 #[test]

@@ -6,9 +6,40 @@
 //! Reductions and scatters evaluate their `to_apply` computation per
 //! element, with a fast path for the common single-binary-op regions.
 
+use std::cell::Cell;
+
 use crate::hlo::{Computation, HloModule, Instr};
 use crate::value::{linear_index, next_index, strides_of, Data, Tensor, Value};
 use crate::{ElementType, Error, Result};
+
+thread_local! {
+    /// Constant-literal text parses on this thread (both lanes).  The
+    /// compiled lane parses at lowering time only; steady-state executes
+    /// must leave this counter untouched (regression-tested).
+    static CONST_PARSES: Cell<u64> = const { Cell::new(0) };
+    /// HLO instructions executed on this thread (both lanes; while-loop
+    /// bodies count once per iteration).  Basis of the interp bench's
+    /// ops/s metric.
+    static EXEC_INSTRS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Constant-literal parses performed on this thread so far.
+pub fn constant_parse_count() -> u64 {
+    CONST_PARSES.with(|c| c.get())
+}
+
+/// HLO instructions executed on this thread so far.
+pub fn executed_instruction_count() -> u64 {
+    EXEC_INSTRS.with(|c| c.get())
+}
+
+pub(crate) fn note_const_parse() {
+    CONST_PARSES.with(|c| c.set(c.get() + 1));
+}
+
+pub(crate) fn note_exec(n: u64) {
+    EXEC_INSTRS.with(|c| c.set(c.get() + n));
+}
 
 /// Evaluate the module's entry computation over `args`.
 pub fn execute_module(module: &HloModule, args: &[Value]) -> Result<Value> {
@@ -50,6 +81,7 @@ fn evaluate(module: &HloModule, comp: &Computation, args: &[Value]) -> Result<Va
                 .collect()
         };
         let v = eval_instr(module, ins, &operands, args)?;
+        note_exec(1);
         values[i] = Some(v);
         stack.pop();
     }
@@ -145,6 +177,14 @@ fn eval_instr(
 // ---------------------------------------------------------------------------
 
 fn eval_constant(ins: &Instr) -> Result<Value> {
+    Ok(Value::T(parse_constant_tensor(ins)?))
+}
+
+/// Parse a `constant(...)` payload into a tensor.  The naive lane calls
+/// this on every evaluation; the compiled lane calls it exactly once per
+/// constant at lowering time (see `compile.rs`).
+pub(crate) fn parse_constant_tensor(ins: &Instr) -> Result<Tensor> {
+    note_const_parse();
     let (ty, dims) = out_array(ins)?;
     let text = ins
         .const_text
@@ -181,7 +221,7 @@ fn eval_constant(ins: &Instr) -> Result<Value> {
         ElementType::F64 => Data::F64(parse_nums::<f64>(&toks)?),
         other => return Err(Error(format!("unsupported constant dtype {other:?}"))),
     };
-    Ok(Value::T(Tensor::new(dims, data)?))
+    Tensor::new(dims, data)
 }
 
 fn parse_nums<T: std::str::FromStr>(toks: &[&str]) -> Result<Vec<T>> {
@@ -191,6 +231,12 @@ fn parse_nums<T: std::str::FromStr>(toks: &[&str]) -> Result<Vec<T>> {
 }
 
 fn eval_iota(ins: &Instr) -> Result<Value> {
+    Ok(Value::T(materialize_iota(ins)?))
+}
+
+/// Materialize an `iota()` tensor (shared with the compiled lane, which
+/// evaluates it once at lowering time).
+pub(crate) fn materialize_iota(ins: &Instr) -> Result<Tensor> {
     let (ty, dims) = out_array(ins)?;
     let d = ins.attr_i64("iota_dimension")? as usize;
     if d >= dims.len() {
@@ -207,10 +253,10 @@ fn eval_iota(ins: &Instr) -> Result<Value> {
         write_i64(&mut out, lin, v);
         first = next_index(&mut idx, &dims);
     }
-    Ok(Value::T(Tensor::new(dims, out)?))
+    Tensor::new(dims, out)
 }
 
-fn write_i64(d: &mut Data, i: usize, v: i64) {
+pub(crate) fn write_i64(d: &mut Data, i: usize, v: i64) {
     match d {
         Data::Pred(x) => x[i] = v != 0,
         Data::S32(x) => x[i] = v as i32,
@@ -222,7 +268,7 @@ fn write_i64(d: &mut Data, i: usize, v: i64) {
     }
 }
 
-fn write_f64(d: &mut Data, i: usize, v: f64) {
+pub(crate) fn write_f64(d: &mut Data, i: usize, v: f64) {
     match d {
         Data::Pred(x) => x[i] = v != 0.0,
         Data::S32(x) => x[i] = v as i32,
@@ -302,7 +348,7 @@ fn eval_convert(ins: &Instr, t: &Tensor) -> Result<Value> {
     Ok(Value::T(Tensor::new(dims, out)?))
 }
 
-fn parse_slice_spec(s: &str) -> Result<Vec<(usize, usize, usize)>> {
+pub(crate) fn parse_slice_spec(s: &str) -> Result<Vec<(usize, usize, usize)>> {
     // {[lo:hi], [lo:hi:stride], ...}
     let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
     let mut out = Vec::new();
@@ -448,7 +494,7 @@ fn eval_concatenate(ins: &Instr, operands: &[&Value]) -> Result<Value> {
 // ---------------------------------------------------------------------------
 
 /// Resolve (elementwise) operand pairs where one side may be a scalar.
-fn pair_index(i: usize, len: usize) -> usize {
+pub(crate) fn pair_index(i: usize, len: usize) -> usize {
     if len == 1 {
         0
     } else {
@@ -740,7 +786,7 @@ fn int_unary_s32_like(op: &str, v: &[i32]) -> Result<Data> {
 
 /// Recognized single-instruction combiner regions (fast path).
 #[derive(Clone, Copy, Debug, PartialEq)]
-enum FastCombine {
+pub(crate) enum FastCombine {
     Add,
     Mul,
     Max,
@@ -753,7 +799,7 @@ enum FastCombine {
     Second,
 }
 
-fn fast_combiner(comp: &Computation) -> Option<FastCombine> {
+pub(crate) fn fast_combiner(comp: &Computation) -> Option<FastCombine> {
     let root = &comp.instrs[comp.root];
     let param_no = |name: &str| -> Option<usize> {
         let idx = *comp.index.get(name)?;
@@ -791,7 +837,7 @@ fn fast_combiner(comp: &Computation) -> Option<FastCombine> {
 
 /// Combine two elements (same dtype) by `fc`, reading from `acc[ai]` and
 /// `elem[ei]`, writing back into `acc[ai]`.
-fn fast_combine_elem(
+pub(crate) fn fast_combine_elem(
     fc: FastCombine,
     acc: &mut Data,
     ai: usize,
@@ -894,7 +940,7 @@ fn scalar_tensor_from(data: &Data, i: usize) -> Result<Tensor> {
     Tensor::new(vec![], d)
 }
 
-fn eval_reduce(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<Value> {
+pub(crate) fn eval_reduce(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<Value> {
     let k = operands.len() / 2;
     if operands.len() != 2 * k || k == 0 {
         return Err(Error(format!("reduce '{}' needs k inputs + k inits", ins.name)));
@@ -1005,19 +1051,20 @@ fn eval_reduce(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<V
 /// Read the start-index vector for gather/scatter index position
 /// `batch_idx` (the scatter/batch coordinates, in order).
 fn start_vector(
-    s: &Tensor,
+    s_dims: &[usize],
+    s_data: &Data,
     batch_idx: &[usize],
     index_vector_dim: usize,
     vec_len: usize,
 ) -> Result<Vec<i64>> {
-    let strides = s.strides();
+    let strides = strides_of(s_dims);
     let mut out = Vec::with_capacity(vec_len);
     for comp in 0..vec_len {
         // rebuild the full index into S: batch coords with `comp` inserted
         // at index_vector_dim (or nothing inserted if ivd == rank)
         let mut lin = 0usize;
         let mut b = 0usize;
-        for d in 0..s.rank() {
+        for d in 0..s_dims.len() {
             let coord = if d == index_vector_dim {
                 comp
             } else {
@@ -1027,13 +1074,27 @@ fn start_vector(
             };
             lin += coord * strides[d];
         }
-        out.push(s.data.get_i64(lin));
+        out.push(s_data.get_i64(lin));
     }
     Ok(out)
 }
 
-fn eval_gather(ins: &Instr, operand: &Tensor, indices: &Tensor) -> Result<Value> {
+pub(crate) fn eval_gather(ins: &Instr, operand: &Tensor, indices: &Tensor) -> Result<Value> {
+    let (out_dims, out) =
+        gather_core(ins, &operand.dims, &operand.data, &indices.dims, &indices.data)?;
+    Ok(Value::T(Tensor::new(out_dims, out)?))
+}
+
+/// Container-agnostic gather core, shared by both interpreter lanes.
+pub(crate) fn gather_core(
+    ins: &Instr,
+    op_dims: &[usize],
+    op_data: &Data,
+    idx_dims: &[usize],
+    idx_data: &Data,
+) -> Result<(Vec<usize>, Data)> {
     let (_, out_dims) = out_array(ins)?;
+    let op_rank = op_dims.len();
     let offset_dims: Vec<usize> =
         ins.attr_dims("offset_dims")?.into_iter().map(|d| d as usize).collect();
     let collapsed: Vec<usize> =
@@ -1050,23 +1111,24 @@ fn eval_gather(ins: &Instr, operand: &Tensor, indices: &Tensor) -> Result<Value>
     // operand dims that survive collapsing, in order — matched with
     // offset_dims in order
     let kept_operand_dims: Vec<usize> =
-        (0..operand.rank()).filter(|d| !collapsed.contains(d)).collect();
+        (0..op_rank).filter(|d| !collapsed.contains(d)).collect();
     if kept_operand_dims.len() != offset_dims.len() {
         return Err(Error(format!("gather '{}' offset/collapsed mismatch", ins.name)));
     }
 
     let total: usize = out_dims.iter().product();
-    let mut out = Data::zeros(operand.dtype(), total)?;
+    let mut out = Data::zeros(op_data.dtype(), total)?;
     let out_strides = strides_of(&out_dims);
-    let op_strides = operand.strides();
+    let op_strides = strides_of(op_dims);
     let mut idx = vec![0usize; out_rank];
     let mut more = total > 0;
     while more {
         let batch_idx: Vec<usize> = batch_dims_in_out.iter().map(|&d| idx[d]).collect();
-        let starts = start_vector(indices, &batch_idx, ivd, start_index_map.len())?;
-        let mut full_start = vec![0i64; operand.rank()];
+        let starts =
+            start_vector(idx_dims, idx_data, &batch_idx, ivd, start_index_map.len())?;
+        let mut full_start = vec![0i64; op_rank];
         for (k, &d) in start_index_map.iter().enumerate() {
-            let max = operand.dims[d] as i64 - slice_sizes[d] as i64;
+            let max = op_dims[d] as i64 - slice_sizes[d] as i64;
             full_start[d] = starts[k].clamp(0, max.max(0));
         }
         let mut lin = 0usize;
@@ -1077,13 +1139,13 @@ fn eval_gather(ins: &Instr, operand: &Tensor, indices: &Tensor) -> Result<Value>
         for &d in &collapsed {
             lin += full_start[d] as usize * op_strides[d];
         }
-        out.copy_elem(linear_index(&idx, &out_strides), &operand.data, lin)?;
+        out.copy_elem(linear_index(&idx, &out_strides), op_data, lin)?;
         more = next_index(&mut idx, &out_dims);
     }
-    Ok(Value::T(Tensor::new(out_dims, out)?))
+    Ok((out_dims, out))
 }
 
-fn eval_scatter(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<Value> {
+pub(crate) fn eval_scatter(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<Value> {
     // single-operand scatter: (operand, scatter_indices, updates)
     if operands.len() != 3 {
         return Err(Error(format!("scatter '{}' expects 3 operands", ins.name)));
@@ -1091,6 +1153,35 @@ fn eval_scatter(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<
     let operand = operands[0].tensor()?;
     let indices = operands[1].tensor()?;
     let updates = operands[2].tensor()?;
+    let (out_dims, out) = scatter_core(
+        module,
+        ins,
+        &operand.dims,
+        operand.data.clone(),
+        &indices.dims,
+        &indices.data,
+        &updates.dims,
+        &updates.data,
+    )?;
+    Ok(Value::T(Tensor::new(out_dims, out)?))
+}
+
+/// Container-agnostic scatter core, shared by both interpreter lanes.
+/// Takes the operand data *owned* so the compiled lane can hand over a
+/// uniquely held buffer and scatter in place.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scatter_core(
+    module: &HloModule,
+    ins: &Instr,
+    op_dims: &[usize],
+    mut out: Data,
+    idx_dims: &[usize],
+    idx_data: &Data,
+    upd_dims: &[usize],
+    upd_data: &Data,
+) -> Result<(Vec<usize>, Data)> {
+    let op_rank = op_dims.len();
+    let upd_rank = upd_dims.len();
     let (_, out_dims) = out_array(ins)?;
     let update_window_dims: Vec<usize> =
         ins.attr_dims("update_window_dims")?.into_iter().map(|d| d as usize).collect();
@@ -1108,37 +1199,36 @@ fn eval_scatter(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<
     // operand window dims (not inserted), matched in order with
     // update_window_dims
     let window_operand_dims: Vec<usize> =
-        (0..operand.rank()).filter(|d| !inserted.contains(d)).collect();
+        (0..op_rank).filter(|d| !inserted.contains(d)).collect();
     if window_operand_dims.len() != update_window_dims.len() {
         return Err(Error(format!("scatter '{}' window dims mismatch", ins.name)));
     }
     let scatter_dims_in_updates: Vec<usize> =
-        (0..updates.rank()).filter(|d| !update_window_dims.contains(d)).collect();
+        (0..upd_rank).filter(|d| !update_window_dims.contains(d)).collect();
 
-    let mut out = operand.data.clone();
-    let op_strides = operand.strides();
-    let up_strides = updates.strides();
-    let total = updates.elems();
-    let mut idx = vec![0usize; updates.rank()];
+    let op_strides = strides_of(op_dims);
+    let up_strides = strides_of(upd_dims);
+    let total: usize = upd_dims.iter().product();
+    let mut idx = vec![0usize; upd_rank];
     let mut more = total > 0;
     while more {
         let batch_idx: Vec<usize> =
             scatter_dims_in_updates.iter().map(|&d| idx[d]).collect();
-        let starts = start_vector(indices, &batch_idx, ivd, to_operand.len())?;
-        let mut full_start = vec![0i64; operand.rank()];
+        let starts = start_vector(idx_dims, idx_data, &batch_idx, ivd, to_operand.len())?;
+        let mut full_start = vec![0i64; op_rank];
         for (k, &d) in to_operand.iter().enumerate() {
             full_start[d] = starts[k];
         }
         // resolve the target element; out-of-bounds updates are dropped
         let mut lin = 0usize;
         let mut oob = false;
-        for d in 0..operand.rank() {
+        for d in 0..op_rank {
             let coord = if let Some(pos) = window_operand_dims.iter().position(|&w| w == d) {
                 full_start[d] + idx[update_window_dims[pos]] as i64
             } else {
                 full_start[d]
             };
-            if coord < 0 || coord >= operand.dims[d] as i64 {
+            if coord < 0 || coord >= op_dims[d] as i64 {
                 oob = true;
                 break;
             }
@@ -1147,19 +1237,19 @@ fn eval_scatter(module: &HloModule, ins: &Instr, operands: &[&Value]) -> Result<
         if !oob {
             let up_lin = linear_index(&idx, &up_strides);
             if let Some(fc) = fast {
-                fast_combine_elem(fc, &mut out, lin, &updates.data, up_lin)?;
+                fast_combine_elem(fc, &mut out, lin, upd_data, up_lin)?;
             } else {
                 let call_args = vec![
                     Value::T(scalar_tensor_from(&out, lin)?),
-                    Value::T(scalar_tensor_from(&updates.data, up_lin)?),
+                    Value::T(scalar_tensor_from(upd_data, up_lin)?),
                 ];
                 let res = evaluate(module, region, &call_args)?;
                 out.copy_elem(lin, &res.tensor()?.data, 0)?;
             }
         }
-        more = next_index(&mut idx, &updates.dims);
+        more = next_index(&mut idx, upd_dims);
     }
-    Ok(Value::T(Tensor::new(out_dims, out)?))
+    Ok((out_dims, out))
 }
 
 #[cfg(test)]

@@ -1,0 +1,214 @@
+//! Chunked data-parallel execution for the compiled lane's big kernels.
+//!
+//! Kernels never spawn threads directly: they describe their work as a
+//! list of independent owned jobs (each job computes one output chunk and
+//! reports it over a channel) and hand the list to [`run_jobs`].  The
+//! host application may install a runner backed by its own thread pool —
+//! the SOMD engine installs one that submits the jobs to its existing
+//! `WorkerPool`, so device-lane kernels compete for the same SMP workers
+//! as shared-memory invocations (paper §6).  Without an installed runner
+//! the default executes the jobs on short-lived scoped threads.
+//!
+//! Jobs are fully owned (`'static`): chunk workers capture `Arc`-shared
+//! tensor data and send their finished chunk back, so no borrow crosses a
+//! thread boundary and any `'static` pool can run them.
+//!
+//! Environment knobs:
+//!
+//! * `XLA_PAR=0` — disable kernel parallelism entirely (serial lane);
+//! * `XLA_PAR_THRESHOLD=N` — minimum output elements before a kernel
+//!   goes parallel (default 65536);
+//! * `XLA_PAR_THREADS=N` — worker cap for the default scoped runner and
+//!   the chunk count (default: available parallelism).
+
+use std::ops::Range;
+use std::sync::mpsc;
+use std::sync::OnceLock;
+
+/// One owned unit of kernel work (computes a chunk, reports via channel).
+pub type ParallelJob = Box<dyn FnOnce() + Send>;
+
+/// Runs a batch of independent jobs to completion (possibly in parallel);
+/// must not return before every job has finished.
+pub type ParallelRunner = Box<dyn Fn(Vec<ParallelJob>) + Send + Sync>;
+
+static RUNNER: OnceLock<ParallelRunner> = OnceLock::new();
+
+/// Install a process-wide runner for kernel chunks (first caller wins;
+/// returns `false` if a runner was already installed).  The SOMD engine
+/// installs a `WorkerPool`-backed runner when its device lane starts.
+pub fn install_parallel_runner(runner: ParallelRunner) -> bool {
+    RUNNER.set(runner).is_ok()
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+/// Minimum output elements before a kernel is chunked.
+pub(crate) fn threshold() -> usize {
+    static T: OnceLock<usize> = OnceLock::new();
+    *T.get_or_init(|| env_usize("XLA_PAR_THRESHOLD").unwrap_or(64 * 1024))
+}
+
+/// Worker/chunk cap.
+pub(crate) fn max_workers() -> usize {
+    static W: OnceLock<usize> = OnceLock::new();
+    *W.get_or_init(|| {
+        env_usize("XLA_PAR_THREADS").unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+    })
+}
+
+fn enabled() -> bool {
+    static E: OnceLock<bool> = OnceLock::new();
+    *E.get_or_init(|| std::env::var("XLA_PAR").map(|v| v != "0").unwrap_or(true))
+}
+
+/// Should a kernel with `n` output elements run chunked?
+pub(crate) fn should_parallelize(n: usize) -> bool {
+    enabled() && max_workers() > 1 && n >= threshold()
+}
+
+/// Execute the jobs through the installed runner, or on scoped threads.
+pub(crate) fn run_jobs(jobs: Vec<ParallelJob>) {
+    if jobs.is_empty() {
+        return;
+    }
+    if let Some(r) = RUNNER.get() {
+        r(jobs);
+        return;
+    }
+    let w = max_workers().min(jobs.len()).max(1);
+    if w <= 1 {
+        for j in jobs {
+            j();
+        }
+        return;
+    }
+    // static round-robin distribution over scoped threads (chunks are
+    // near-equal cost by construction)
+    let mut buckets: Vec<Vec<ParallelJob>> = (0..w).map(|_| Vec::new()).collect();
+    for (i, j) in jobs.into_iter().enumerate() {
+        buckets[i % w].push(j);
+    }
+    std::thread::scope(|s| {
+        for b in buckets {
+            s.spawn(move || {
+                for j in b {
+                    j();
+                }
+            });
+        }
+    });
+}
+
+/// Split `0..n` into near-equal chunk ranges (at most [`max_workers`]
+/// chunks, each at least `min_chunk` elements).
+pub(crate) fn chunk_ranges(n: usize, min_chunk: usize) -> Vec<Range<usize>> {
+    let w = max_workers().max(1);
+    let nchunks = w.min(n / min_chunk.max(1)).max(1);
+    split_ranges(n, nchunks)
+}
+
+/// Split `0..n` into exactly `nchunks` near-equal ranges.
+pub(crate) fn split_ranges(n: usize, nchunks: usize) -> Vec<Range<usize>> {
+    let nchunks = nchunks.max(1).min(n.max(1));
+    let base = n / nchunks;
+    let extra = n % nchunks;
+    let mut out = Vec::with_capacity(nchunks);
+    let mut lo = 0usize;
+    for c in 0..nchunks {
+        let len = base + usize::from(c < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+/// Build a length-`n` vector by computing chunks (possibly in parallel)
+/// and concatenating them in order.  `make` must return exactly
+/// `range.len()` elements for each range it is given.
+pub(crate) fn build_chunked<T, F>(n: usize, make: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(Range<usize>) -> Vec<T> + Send + Sync + Clone + 'static,
+{
+    build_with_ranges(n, chunk_ranges(n, threshold().max(1) / 2 + 1), make)
+}
+
+/// [`build_chunked`] with explicit ranges (testable without env knobs).
+/// The ranges need not be in output-element units — `make(range)` returns
+/// that chunk's output elements, which are concatenated in range order
+/// (the f32 reduce chunks *rows* and returns whole output rows per
+/// chunk); `capacity` is only a size hint for the assembled vector.
+pub(crate) fn build_with_ranges<T, F>(capacity: usize, ranges: Vec<Range<usize>>, make: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(Range<usize>) -> Vec<T> + Send + Sync + Clone + 'static,
+{
+    if ranges.is_empty() {
+        return Vec::new();
+    }
+    if ranges.len() == 1 {
+        return make(ranges[0].clone());
+    }
+    let (tx, rx) = mpsc::channel::<(usize, Vec<T>)>();
+    let jobs: Vec<ParallelJob> = ranges
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(ci, range)| {
+            let make = make.clone();
+            let tx = tx.clone();
+            Box::new(move || {
+                let v = make(range);
+                let _ = tx.send((ci, v));
+            }) as ParallelJob
+        })
+        .collect();
+    drop(tx);
+    run_jobs(jobs);
+    let mut parts: Vec<Option<Vec<T>>> = (0..ranges.len()).map(|_| None).collect();
+    while let Ok((ci, v)) = rx.recv() {
+        parts[ci] = Some(v);
+    }
+    let mut out = Vec::with_capacity(capacity);
+    for p in parts {
+        out.extend(p.expect("parallel chunk completed"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for (n, c) in [(10, 3), (7, 7), (5, 1), (0, 4), (100, 8)] {
+            let rs = split_ranges(n, c);
+            let mut next = 0usize;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn build_with_ranges_matches_serial() {
+        let make = |r: Range<usize>| r.map(|i| i * i).collect::<Vec<usize>>();
+        let serial = make(0..1000);
+        let par = build_with_ranges(1000, split_ranges(1000, 7), make);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn single_chunk_runs_inline() {
+        let got = build_with_ranges(4, vec![0..4], |r| r.collect::<Vec<usize>>());
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+}

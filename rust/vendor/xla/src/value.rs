@@ -58,6 +58,56 @@ impl Data {
         })
     }
 
+    /// Typed slice views (None on dtype mismatch).
+    pub fn preds(&self) -> Option<&[bool]> {
+        match self {
+            Data::Pred(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn s32s(&self) -> Option<&[i32]> {
+        match self {
+            Data::S32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn s64s(&self) -> Option<&[i64]> {
+        match self {
+            Data::S64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn u32s(&self) -> Option<&[u32]> {
+        match self {
+            Data::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn u64s(&self) -> Option<&[u64]> {
+        match self {
+            Data::U64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn f32s(&self) -> Option<&[f32]> {
+        match self {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn f64s(&self) -> Option<&[f64]> {
+        match self {
+            Data::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+
     /// Read element `i` as f64 (predicates as 0/1).
     pub fn get_f64(&self, i: usize) -> f64 {
         match self {
@@ -81,6 +131,69 @@ impl Data {
             Data::U64(v) => v[i] as i64,
             Data::F32(v) => v[i] as i64,
             Data::F64(v) => v[i] as i64,
+        }
+    }
+
+    /// Copy the contiguous block `src[src_i .. src_i + len]` over
+    /// `self[dst_i .. dst_i + len]` (dtypes must match).  The compiled
+    /// lane's memcpy fast path for contiguous windows.
+    pub fn copy_block(&mut self, dst_i: usize, src: &Data, src_i: usize, len: usize) -> Result<()> {
+        match (self, src) {
+            (Data::Pred(d), Data::Pred(s)) => d[dst_i..dst_i + len].copy_from_slice(&s[src_i..src_i + len]),
+            (Data::S32(d), Data::S32(s)) => d[dst_i..dst_i + len].copy_from_slice(&s[src_i..src_i + len]),
+            (Data::S64(d), Data::S64(s)) => d[dst_i..dst_i + len].copy_from_slice(&s[src_i..src_i + len]),
+            (Data::U32(d), Data::U32(s)) => d[dst_i..dst_i + len].copy_from_slice(&s[src_i..src_i + len]),
+            (Data::U64(d), Data::U64(s)) => d[dst_i..dst_i + len].copy_from_slice(&s[src_i..src_i + len]),
+            (Data::F32(d), Data::F32(s)) => d[dst_i..dst_i + len].copy_from_slice(&s[src_i..src_i + len]),
+            (Data::F64(d), Data::F64(s)) => d[dst_i..dst_i + len].copy_from_slice(&s[src_i..src_i + len]),
+            (d, s) => {
+                return Err(Error(format!(
+                    "dtype mismatch in block copy: {:?} vs {:?}",
+                    d.dtype(),
+                    s.dtype()
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Gather elements of `self` at `idxs`, in order (typed fast path for
+    /// the compiled lane's strided shape ops).
+    pub fn take_by(&self, idxs: &[usize]) -> Data {
+        match self {
+            Data::Pred(v) => Data::Pred(idxs.iter().map(|&i| v[i]).collect()),
+            Data::S32(v) => Data::S32(idxs.iter().map(|&i| v[i]).collect()),
+            Data::S64(v) => Data::S64(idxs.iter().map(|&i| v[i]).collect()),
+            Data::U32(v) => Data::U32(idxs.iter().map(|&i| v[i]).collect()),
+            Data::U64(v) => Data::U64(idxs.iter().map(|&i| v[i]).collect()),
+            Data::F32(v) => Data::F32(idxs.iter().map(|&i| v[i]).collect()),
+            Data::F64(v) => Data::F64(idxs.iter().map(|&i| v[i]).collect()),
+        }
+    }
+
+    /// Copy out the contiguous range `[start, start + len)`.
+    pub fn copy_range(&self, start: usize, len: usize) -> Data {
+        match self {
+            Data::Pred(v) => Data::Pred(v[start..start + len].to_vec()),
+            Data::S32(v) => Data::S32(v[start..start + len].to_vec()),
+            Data::S64(v) => Data::S64(v[start..start + len].to_vec()),
+            Data::U32(v) => Data::U32(v[start..start + len].to_vec()),
+            Data::U64(v) => Data::U64(v[start..start + len].to_vec()),
+            Data::F32(v) => Data::F32(v[start..start + len].to_vec()),
+            Data::F64(v) => Data::F64(v[start..start + len].to_vec()),
+        }
+    }
+
+    /// A length-`n` buffer filled with element `i` of `self`.
+    pub fn splat(&self, i: usize, n: usize) -> Data {
+        match self {
+            Data::Pred(v) => Data::Pred(vec![v[i]; n]),
+            Data::S32(v) => Data::S32(vec![v[i]; n]),
+            Data::S64(v) => Data::S64(vec![v[i]; n]),
+            Data::U32(v) => Data::U32(vec![v[i]; n]),
+            Data::U64(v) => Data::U64(vec![v[i]; n]),
+            Data::F32(v) => Data::F32(vec![v[i]; n]),
+            Data::F64(v) => Data::F64(vec![v[i]; n]),
         }
     }
 
