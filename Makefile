@@ -2,7 +2,21 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check-interp check-sched test bench-auto bench-interp
+.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid
+
+# The one-stop gate: build everything (library, binaries, benches AND
+# examples), run both test suites, then the docs checks.
+check:
+	cd rust && cargo build --release --examples
+	cd rust && cargo test -q
+	cd python && python -m pytest tests -q
+	$(MAKE) docs
+
+# rustdoc must build warning-free (missing_docs is warn-at-crate-level)
+# and every relative markdown link must resolve.
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	python3 scripts/check_links.py
 
 # AOT-lower every L2 program to HLO text + manifest (the rust side's input)
 artifacts:
@@ -29,3 +43,9 @@ bench-auto:
 bench-interp:
 	cd rust && cargo test --release --test interp_equivalence
 	cd rust && cargo run --release -- bench interp --check
+
+# hybrid co-execution: correctness suite, then the smp/device/hybrid
+# report with the hybrid-not-slower gate (writes rust/BENCH_hybrid.json)
+bench-hybrid:
+	cd rust && cargo test --release --test hybrid_exec
+	cd rust && cargo run --release -- bench hybrid --check

@@ -1,17 +1,21 @@
 //! End-to-end driver (DESIGN.md §7): runs the full JavaGrande Section-2
-//! suite through the public API on BOTH backends, validates numerics
-//! against the sequential substrate, and prints the paper-style speedup
-//! rows.  This is the run recorded in EXPERIMENTS.md.
+//! suite through the public API on ALL backends — SMP, device, and the
+//! hybrid co-execution lane — validates numerics against the sequential
+//! substrate, and prints the paper-style speedup rows.  This is the run
+//! recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example e2e_suite [-- --scale 0.1]`
 
 use anyhow::Result;
 
-use somd::bench_suite::{crypt, gpu, harness, lufact, modeled, series, sor, sparse};
+use somd::backend::Executed;
+use somd::bench_suite::params::SERIES_INTERVALS;
+use somd::bench_suite::{crypt, gpu, harness, hybrid, lufact, modeled, series, sor, sparse};
 use somd::bench_suite::{Class, Sizes};
 use somd::device::{DeviceProfile, DeviceSession};
 use somd::runtime::Registry;
 use somd::somd::grid::SharedGrid;
+use somd::somd::Engine;
 use somd::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -102,7 +106,60 @@ fn main() -> Result<()> {
         assert!(maxrel < 2e-2);
     }
 
-    // ---- 3. the paper's tables and figures ---------------------------------
+    // ---- 3. hybrid co-execution correctness (one invocation, two lanes) ----
+    println!("\n-- Hybrid correctness (SMP share + device share vs reference) --");
+    {
+        let engine = Engine::new(4);
+
+        // crypt: integer IDEA on both lanes — the merged ciphertext must
+        // equal the sequential cipher BITWISE at any split
+        let blocks = reg.info("crypt_A")?.meta_usize("blocks").unwrap();
+        let p = crypt::Problem::generate(blocks * crypt::BLOCK_BYTES, 11);
+        let m = hybrid::crypt_hybrid_generic();
+        let want = crypt::sequential(&p.data, &p.ekeys);
+        let inp = crypt::PassInput { src: &p.data, keys: p.ekeys };
+        let (got, how) = m.invoke_hybrid(&engine, &reg, &inp, Some(0.5))?;
+        let bitwise = got == want;
+        println!(
+            "crypt      hybrid bitwise:       {}",
+            if bitwise { "OK" } else { "FAIL" }
+        );
+        assert!(bitwise);
+        assert!(matches!(how, Executed::Hybrid { .. }));
+
+        // series: f64 SMP share + f32 device share — float tolerance
+        let count = 1024;
+        let m = hybrid::series_hybrid();
+        let inp = series::Input { count, m: SERIES_INTERVALS };
+        let want = series::sequential(count, SERIES_INTERVALS);
+        let (got, how) = m.invoke_hybrid(&engine, &reg, &inp, Some(0.5))?;
+        let maxd = got
+            .iter()
+            .enumerate()
+            .map(|(i, g)| (g.0 - want[i + 1].0).abs().max((g.1 - want[i + 1].1).abs()))
+            .fold(0.0, f64::max);
+        println!("series     hybrid max |Δcoeff|:  {maxd:.2e}");
+        assert!(maxd < 5e-3);
+        if let Executed::Hybrid { device_fraction, smp_items, device_items, .. } = how {
+            println!(
+                "series     split: {smp_items} SMP + {device_items} device items (f={device_fraction:.2})"
+            );
+        }
+
+        // the ratio learner saw both runs and serialized state round-trips
+        let state = engine.scheduler().to_json().dump();
+        let restored = somd::somd::Scheduler::from_json(
+            engine.scheduler().config(),
+            &somd::util::json::Json::parse(&state).expect("state parses"),
+        )
+        .expect("state restores");
+        assert_eq!(
+            restored.history("Series.coefficients"),
+            engine.scheduler().history("Series.coefficients")
+        );
+    }
+
+    // ---- 4. the paper's tables and figures ---------------------------------
     println!();
     harness::print_table2();
     println!();

@@ -8,17 +8,23 @@
 //! body stays the sequential loop over the MI's index range, and the
 //! default array reduction assembles the result.  The same method also
 //! runs on the device backend (the AOT `vecadd` Pallas kernel) when
-//! artifacts are available — and with a `VectorAdd.add:auto` rule the
-//! engine picks the architecture itself from recorded execution history.
+//! artifacts are available — with a `VectorAdd.add:auto` rule the engine
+//! picks the architecture itself from recorded execution history, and
+//! with `VectorAdd.add:hybrid` (or when `auto` learns it pays off) ONE
+//! invocation is split across the SMP pool and the device at the
+//! scheduler's learned throughput ratio.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 
-use somd::backend::{DeviceFn, Executed, HeteroMethod};
+use somd::backend::{DeviceFn, Executed, HeteroMethod, HybridSpec};
+use somd::device::Arg;
+use somd::runtime::HostTensor;
+use somd::somd::master::run_mis;
 use somd::somd::partition::Block1D;
 use somd::somd::reduction::Assemble;
-use somd::somd::{Engine, Rules, SomdMethod, Target};
+use somd::somd::{Engine, Rules, Scheduler, SchedulerConfig, SomdMethod, Target};
 
 fn vector_add_smp() -> SomdMethod<(Vec<f32>, Vec<f32>), somd::somd::BlockPart, (), Vec<f32>> {
     SomdMethod::new(
@@ -35,6 +41,56 @@ fn vector_add_smp() -> SomdMethod<(Vec<f32>, Vec<f32>), somd::somd::BlockPart, (
     )
 }
 
+/// The multi-version method: SMP + whole-invocation device offload +
+/// hybrid spec (sub-range evaluators for both lanes).
+fn vector_add_hetero() -> HeteroMethod<(Vec<f32>, Vec<f32>), somd::somd::BlockPart, (), Vec<f32>> {
+    // device master code (Algorithm 2): whole-invocation offload
+    let device: DeviceFn<(Vec<f32>, Vec<f32>), Vec<f32>> = Box::new(|sess, inp| {
+        let x = HostTensor::vec_f32(inp.0.clone());
+        let y = HostTensor::vec_f32(inp.1.clone());
+        let out = sess.launch_to_host("vecadd", &[Arg::Host(&x), Arg::Host(&y)], inp.0.len())?;
+        Ok(out[0].as_f32()?.to_vec())
+    });
+    // hybrid spec: index-space size + per-lane sub-range evaluators; the
+    // SMP share fans out across MIs exactly like a whole invocation, the
+    // device share launches the artifact but downloads only its rows
+    let hybrid = HybridSpec::new(
+        |inp: &(Vec<f32>, Vec<f32>)| inp.0.len(),
+        |inp, span, n| {
+            let parts = Block1D::new().ranges_in(span, inp.0.len(), n);
+            run_mis(inp, &parts, &(), &|inp, p, _, _| {
+                let (a, b) = inp;
+                p.own.iter().map(|i| a[i] + b[i]).collect::<Vec<f32>>()
+            })
+        },
+        |sess, inp, span| {
+            let x = HostTensor::vec_f32(inp.0.clone());
+            let y = HostTensor::vec_f32(inp.1.clone());
+            let ids = sess.launch("vecadd", &[Arg::Host(&x), Arg::Host(&y)], span.len())?;
+            let out = sess.get_rows(ids[0], span.lo, span.hi);
+            sess.free(ids[0])?;
+            Ok(out?.as_f32()?.to_vec())
+        },
+    );
+    HeteroMethod::with_device(vector_add_smp(), device).with_hybrid(hybrid)
+}
+
+fn describe(how: &Executed) -> String {
+    match how {
+        Executed::Smp { partitions } => format!("smp({partitions} MIs)"),
+        Executed::Device { profile, stats } => format!(
+            "device({profile}, modeled {:.2} ms)",
+            stats.device_time.as_secs_f64() * 1e3
+        ),
+        Executed::Hybrid { profile, smp_partitions, smp_items, device_items, device_fraction, .. } => {
+            format!(
+                "hybrid({smp_partitions} MIs x {smp_items} items + {profile} x {device_items} \
+                 items, f={device_fraction:.2})"
+            )
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     // --- 1. Synchronous SMP invocation (Figure 1) ------------------------
     let n = 1 << 20;
@@ -47,9 +103,10 @@ fn main() -> anyhow::Result<()> {
     println!("SMP SOMD vectorAdd over {n} elements: OK (4 MIs)");
 
     // --- 2. The same method under `auto` rules ---------------------------
-    // The runtime learns where the method runs fastest: SMP wall times vs
-    // modeled device times (compute + transfers + launches) feed the
-    // scheduler history; `VectorAdd.add:auto` resolves per invocation.
+    // The runtime learns where the method runs fastest: observed SMP wall
+    // vs measured device execute time (vs hybrid wall, once explored)
+    // feed the scheduler history; `VectorAdd.add:auto` resolves per
+    // invocation.
     let artifacts =
         std::env::var("SOMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     let mut rules = Rules::empty();
@@ -62,34 +119,19 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    // the hetero method: SMP version + device master code (Algorithm 2)
-    let device: DeviceFn<(Vec<f32>, Vec<f32>), Vec<f32>> = Box::new(|sess, inp| {
-        use somd::device::Arg;
-        use somd::runtime::HostTensor;
-        let x = HostTensor::vec_f32(inp.0.clone());
-        let y = HostTensor::vec_f32(inp.1.clone());
-        let out = sess.launch_to_host("vecadd", &[Arg::Host(&x), Arg::Host(&y)], inp.0.len())?;
-        Ok(out[0].as_f32()?.to_vec())
-    });
-    let hetero = Arc::new(HeteroMethod::with_device(vector_add_smp(), device));
+    let hetero = Arc::new(vector_add_hetero());
     let input = Arc::new((a, b));
 
     // concurrent submissions: device-targeted jobs queue on the master
-    // thread and share ONE warm session; SMP jobs compete for the pool.
+    // thread and share ONE warm session; SMP jobs compete for the pool;
+    // hybrid-resolved jobs fork across both.
     for round in 0..4 {
         let handles: Vec<_> =
             (0..3).map(|_| engine.submit_hetero(hetero.clone(), input.clone())).collect();
         for h in handles {
             let (out, how) = h.join()?;
             assert!((out[3] - 9.0).abs() < 1e-3);
-            let how = match how {
-                Executed::Smp { partitions } => format!("smp({partitions} MIs)"),
-                Executed::Device { profile, stats } => format!(
-                    "device({profile}, modeled {:.2} ms)",
-                    stats.device_time.as_secs_f64() * 1e3
-                ),
-            };
-            println!("round {round}: ran on {how}");
+            println!("round {round}: ran on {}", describe(&how));
         }
     }
 
@@ -107,7 +149,30 @@ fn main() -> anyhow::Result<()> {
             h.device_runs,
             h.device_estimate().unwrap_or(0.0) * 1e3,
         );
-        println!("scheduler state: {}", engine.scheduler().to_json().dump());
     }
+
+    // --- 3. Forced hybrid co-execution -----------------------------------
+    // `VectorAdd.add:hybrid` splits EVERY invocation across both lanes at
+    // the learned ratio (starting at an even split); each run feeds the
+    // per-side throughputs back, converging the ratio toward the
+    // throughput-proportional equilibrium.
+    let mut rules = Rules::empty();
+    rules.set("VectorAdd.add", Target::Hybrid);
+    let engine = Engine::with_rules(4, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig::default()))
+        .with_device_master(&artifacts, "fermi")?;
+    for round in 0..3 {
+        let (out, how) = engine.submit_hetero(hetero.clone(), input.clone()).join()?;
+        assert!((out[3] - 9.0).abs() < 1e-3);
+        println!("hybrid round {round}: ran on {}", describe(&how));
+    }
+    if let Some(h) = engine.scheduler().history("VectorAdd.add") {
+        println!(
+            "hybrid history: {} runs, learned device fraction {:.2}",
+            h.hybrid_runs,
+            h.device_fraction.unwrap_or(f64::NAN),
+        );
+    }
+    println!("scheduler state: {}", engine.scheduler().to_json().dump());
     Ok(())
 }

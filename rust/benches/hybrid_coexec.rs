@@ -1,0 +1,27 @@
+//! Hybrid co-execution baseline: one SOMD invocation split across the
+//! SMP pool and the device lane at the scheduler's learned
+//! throughput-proportional ratio, emitting `BENCH_hybrid.json`
+//! (smp/device/hybrid wall + learned fraction per workload).
+//!
+//! `cargo bench --bench hybrid_coexec [-- --reps N --workers W --learn N --out FILE --tol T --smoke --check]`
+//!
+//! Also available as `somd bench hybrid`; `--check` exits nonzero when
+//! the hybrid wall exceeds the best single lane (within `--tol`) on the
+//! compute-dense Series workload (the CI gate).
+
+use somd::bench_suite::hybrid;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let reps = if args.flag("smoke") { args.opt_usize("reps", 2) } else { args.opt_usize("reps", 5) };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = args.opt_usize("workers", cores);
+    let learn = args.opt_usize("learn", 4);
+    let out = args.opt("out").unwrap_or("BENCH_hybrid.json");
+    let tol = args.opt_f64("tol", 1.10);
+    if let Err(e) = hybrid::report(reps, workers, learn, out, args.flag("check"), tol) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

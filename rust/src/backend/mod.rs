@@ -8,6 +8,13 @@
 //! invocation through this module feeds its observed SMP wall time or
 //! device stats back into the per-method execution history, so `auto`
 //! converges on whichever architecture actually runs the method fastest.
+//!
+//! Since the hybrid co-execution PR a method may additionally carry a
+//! [`HybridSpec`]: the invocation's index space is then *split* between
+//! the SMP pool and the device at the scheduler's learned ratio
+//! (`method:hybrid` forces it; `method:auto` considers it as a third
+//! lane), with the partial results merged through the method's ordinary
+//! reduction.  See `docs/ARCHITECTURE.md` for the full walkthrough.
 
 use std::time::Instant;
 
@@ -15,8 +22,11 @@ use anyhow::Result;
 
 use crate::device::{DeviceProfile, DeviceSession, DeviceStats};
 use crate::runtime::Registry;
+use crate::somd::distribution::Range1;
 use crate::somd::engine::Engine;
 use crate::somd::master::SomdMethod;
+use crate::somd::partition::split_fraction;
+use crate::somd::scheduler::{HybridSample, Scheduler};
 use crate::somd::Target;
 
 /// A device-side implementation of a SOMD method (the master code of
@@ -27,34 +37,144 @@ use crate::somd::Target;
 /// thread-confined.
 pub type DeviceFn<I, R> = Box<dyn Fn(&mut DeviceSession<'_>, &I) -> Result<R> + Send + Sync>;
 
+/// The three pieces hybrid co-execution needs from a method: the size of
+/// its index space, an SMP evaluator over a sub-span, and a device
+/// evaluator over a sub-span.
+///
+/// * `items` — how many index-space items one invocation covers (blocks
+///   for Crypt, coefficients for Series, elements for vecadd, …).
+/// * `smp` — compute the *partial results* for a sub-span on the CPU,
+///   fanned out over `nparts` MIs (implementations typically call
+///   [`Block1D::ranges_in`](crate::somd::partition::Block1D::ranges_in)
+///   and [`run_mis`](crate::somd::master::run_mis) so the share executes
+///   exactly like a whole-space invocation would).
+/// * `device` — compute one partial result for a sub-span on a
+///   [`DeviceSession`] (an AOT artifact launched over the sub-range;
+///   see [`DeviceSession::get_rows`] for the partial-download entry).
+///
+/// The SMP share always covers the *leading* span and the device share
+/// the *trailing* span, so `smp partials ++ [device partial]` is in rank
+/// order and the method's ordinary reduction merges them.
+pub struct HybridSpec<I: ?Sized, R> {
+    items: Box<dyn Fn(&I) -> usize + Send + Sync>,
+    smp: Box<dyn Fn(&I, Range1, usize) -> Vec<R> + Send + Sync>,
+    device: Box<dyn Fn(&mut DeviceSession<'_>, &I, Range1) -> Result<R> + Send + Sync>,
+}
+
+impl<I: ?Sized, R> HybridSpec<I, R> {
+    /// Build a hybrid spec from the three evaluators (see the type-level
+    /// docs for their contracts).
+    pub fn new(
+        items: impl Fn(&I) -> usize + Send + Sync + 'static,
+        smp: impl Fn(&I, Range1, usize) -> Vec<R> + Send + Sync + 'static,
+        device: impl Fn(&mut DeviceSession<'_>, &I, Range1) -> Result<R> + Send + Sync + 'static,
+    ) -> Self {
+        Self { items: Box::new(items), smp: Box::new(smp), device: Box::new(device) }
+    }
+}
+
+/// The device half's successful outcome, as handed to the shared hybrid
+/// merge ([`HeteroMethod::finish_hybrid`]) by both the sync and the
+/// async lane.
+pub(crate) struct DeviceShare<R> {
+    /// The device share's partial result.
+    pub(crate) partial: R,
+    /// The device share's own execute seconds (queue wait excluded).
+    pub(crate) secs: f64,
+    /// Per-share device accounting (stats delta on warm sessions).
+    pub(crate) stats: DeviceStats,
+    /// Profile the share ran under.
+    pub(crate) profile: &'static str,
+}
+
+/// One forked invocation's bookkeeping, shared by the sync and async
+/// hybrid lanes so their merge/fallback invariants cannot drift.
+pub(crate) struct HybridMerge<'a, I: ?Sized> {
+    /// The scheduler history to feed.
+    pub(crate) sched: &'a Scheduler,
+    /// The invocation's input (needed to cover a failed device share).
+    pub(crate) input: &'a I,
+    /// The SMP share's span.
+    pub(crate) smp_span: Range1,
+    /// The device share's span.
+    pub(crate) dev_span: Range1,
+    /// The split ratio this invocation used.
+    pub(crate) fraction: f64,
+    /// MI count of the SMP share (and of the fallback cover).
+    pub(crate) nparts: usize,
+}
+
 /// The compiled versions of one SOMD method.
 pub struct HeteroMethod<I: ?Sized, P, E, R> {
+    /// The shared-memory version (always present — SMP is the universal
+    /// fallback, §6).
     pub smp: SomdMethod<I, P, E, R>,
     device: Option<DeviceFn<I, R>>,
+    hybrid: Option<HybridSpec<I, R>>,
 }
 
 /// Where an invocation actually ran (after fallback resolution).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Executed {
-    Smp { partitions: usize },
-    Device { profile: &'static str, stats: DeviceStats },
+    /// Whole invocation on the shared-memory pool.
+    Smp {
+        /// MI count of the invocation.
+        partitions: usize,
+    },
+    /// Whole invocation offloaded to the device lane.
+    Device {
+        /// Device profile the session ran under.
+        profile: &'static str,
+        /// Per-invocation device accounting (transfers, launches, clocks).
+        stats: DeviceStats,
+    },
+    /// Invocation split across both lanes (hybrid co-execution).
+    Hybrid {
+        /// Device profile the device share ran under.
+        profile: &'static str,
+        /// MI count of the SMP share.
+        smp_partitions: usize,
+        /// Index-space items the SMP share covered.
+        smp_items: usize,
+        /// Index-space items the device share covered.
+        device_items: usize,
+        /// The split ratio this invocation used.
+        device_fraction: f64,
+        /// Device accounting for the device share.
+        stats: DeviceStats,
+    },
 }
 
 impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R> {
+    /// A method with only the (always-applicable) SMP version.
     pub fn smp_only(smp: SomdMethod<I, P, E, R>) -> Self {
-        Self { smp, device: None }
+        Self { smp, device: None, hybrid: None }
     }
 
+    /// A method with an SMP version and a whole-invocation device version.
     pub fn with_device(smp: SomdMethod<I, P, E, R>, device: DeviceFn<I, R>) -> Self {
-        Self { smp, device: Some(device) }
+        Self { smp, device: Some(device), hybrid: None }
     }
 
+    /// Attach a hybrid co-execution spec (builder style).
+    pub fn with_hybrid(mut self, hybrid: HybridSpec<I, R>) -> Self {
+        self.hybrid = Some(hybrid);
+        self
+    }
+
+    /// The method's rules-file name.
     pub fn name(&self) -> &str {
         self.smp.name()
     }
 
+    /// Whether a whole-invocation device version is compiled in.
     pub fn has_device_version(&self) -> bool {
         self.device.is_some()
+    }
+
+    /// Whether this method can co-execute (a [`HybridSpec`] is attached).
+    pub fn has_hybrid_version(&self) -> bool {
+        self.hybrid.is_some()
     }
 
     /// Resolve the target for this method (§6): user rules first, then
@@ -64,11 +184,18 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
     /// Delegates to [`Engine::resolve_target`] so the sync and async
     /// entry points can never drift apart.
     pub fn resolve(&self, engine: &Engine, registry: Option<&Registry>) -> Target {
-        engine.resolve_target(self.smp.name(), &|profile: &str| {
-            self.device.is_some()
-                && registry.is_some()
-                && DeviceProfile::by_name(profile).is_some()
-        })
+        let hybrid_ok = self.hybrid.is_some()
+            && registry.is_some()
+            && DeviceProfile::by_name(engine.auto_profile()).is_some();
+        engine.resolve_target(
+            self.smp.name(),
+            &|profile: &str| {
+                self.device.is_some()
+                    && registry.is_some()
+                    && DeviceProfile::by_name(profile).is_some()
+            },
+            hybrid_ok,
+        )
     }
 
     /// Invoke through the engine, honoring the rules; returns the result
@@ -85,6 +212,10 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                 let r = self.smp.invoke(input, engine.workers());
                 engine.scheduler().record_smp(self.smp.name(), t0.elapsed());
                 Ok((r, Executed::Smp { partitions: engine.workers() }))
+            }
+            Target::Hybrid => {
+                let reg = registry.expect("resolved registry");
+                self.invoke_hybrid(engine, reg, input, None)
             }
             Target::Device(name) => {
                 let profile = DeviceProfile::by_name(&name).expect("resolved profile");
@@ -109,6 +240,159 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                 ))
             }
         }
+    }
+
+    /// Split one invocation across the SMP pool and the device (hybrid
+    /// co-execution), synchronously: the SMP share runs on a scoped
+    /// thread (fanning out its MIs as usual) while the calling thread
+    /// drives the device share through a fresh session; the partial
+    /// results merge through the method's reduction.
+    ///
+    /// `fraction_override` pins the split ratio (experiments, the
+    /// correctness suite's degenerate 0.0/1.0 splits); `None` uses the
+    /// scheduler's learned [`hybrid_fraction`] and also enforces the
+    /// `min_device_items` floor — a device share below it degrades to a
+    /// plain SMP invocation.
+    ///
+    /// If the device half fails the SMP side covers its span too (the §6
+    /// revert-to-shared-memory discipline, applied mid-invocation): the
+    /// caller still gets a full result, tagged [`Executed::Smp`], and the
+    /// failure is penalized in the scheduler history.
+    ///
+    /// [`hybrid_fraction`]: crate::somd::scheduler::Scheduler::hybrid_fraction
+    pub fn invoke_hybrid(
+        &self,
+        engine: &Engine,
+        registry: &Registry,
+        input: &I,
+        fraction_override: Option<f64>,
+    ) -> Result<(R, Executed)> {
+        let spec = self
+            .hybrid
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("method '{}' has no hybrid spec", self.name()))?;
+        let profile = DeviceProfile::by_name(engine.auto_profile())
+            .ok_or_else(|| anyhow::anyhow!("unknown device profile '{}'", engine.auto_profile()))?;
+        let total = (spec.items)(input);
+        let fraction =
+            fraction_override.unwrap_or_else(|| engine.scheduler().hybrid_fraction(self.name()));
+        let (smp_span, dev_span) = split_fraction(total, fraction);
+        let min_items = engine.scheduler().config().min_device_items;
+        if dev_span.is_empty() || (fraction_override.is_none() && dev_span.len() < min_items) {
+            // device share underflows the minimum chunk: a launch over it
+            // would be pure overhead — run the whole invocation on SMP.
+            // The wall is also recorded as a (degraded) hybrid sample so
+            // the exploration rung completes and `auto` can settle.
+            let t0 = Instant::now();
+            let r = self.smp.invoke(input, engine.workers());
+            let wall = t0.elapsed();
+            engine.scheduler().record_smp(self.name(), wall);
+            engine.scheduler().record_hybrid_degraded(self.name(), wall);
+            return Ok((r, Executed::Smp { partitions: engine.workers() }));
+        }
+
+        let n = engine.workers();
+        let mut session = DeviceSession::new(registry, profile);
+        let (smp_half, dev_half) = std::thread::scope(|s| {
+            let handle = s.spawn(|| {
+                let t0 = Instant::now();
+                let partials = (spec.smp)(input, smp_span, n);
+                (partials, t0.elapsed().as_secs_f64())
+            });
+            let t0 = Instant::now();
+            let dev = (spec.device)(&mut session, input, dev_span)
+                .map(|r| (r, t0.elapsed().as_secs_f64()));
+            let smp = handle.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+            (smp, dev)
+        });
+        let dev = dev_half.map(|(partial, secs)| DeviceShare {
+            partial,
+            secs,
+            stats: session.stats(),
+            profile: session.profile().name,
+        });
+        let merge = HybridMerge {
+            sched: engine.scheduler(),
+            input,
+            smp_span,
+            dev_span,
+            fraction,
+            nparts: n,
+        };
+        Ok(self.finish_hybrid(merge, smp_half, dev))
+    }
+
+    /// The shared tail of both hybrid lanes (sync above, the engine's
+    /// completion latch for async): record history, push the device
+    /// partial after the rank-ordered SMP partials and reduce — or, when
+    /// the device share failed, penalize the history and cover its span
+    /// on the SMP side so the caller still gets a complete result.
+    /// Keeping one copy prevents the two lanes' ordering and failure
+    /// invariants from drifting.
+    pub(crate) fn finish_hybrid(
+        &self,
+        m: HybridMerge<'_, I>,
+        smp: (Vec<R>, f64),
+        dev: Result<DeviceShare<R>>,
+    ) -> (R, Executed) {
+        let (mut partials, smp_secs) = smp;
+        match dev {
+            Ok(share) => {
+                m.sched.record_hybrid(
+                    self.name(),
+                    HybridSample { items: m.smp_span.len(), secs: smp_secs },
+                    HybridSample { items: m.dev_span.len(), secs: share.secs },
+                    &share.stats,
+                );
+                partials.push(share.partial);
+                let r = self.smp.reduce(partials);
+                (
+                    r,
+                    Executed::Hybrid {
+                        profile: share.profile,
+                        smp_partitions: m.nparts,
+                        smp_items: m.smp_span.len(),
+                        device_items: m.dev_span.len(),
+                        device_fraction: m.fraction,
+                        stats: share.stats,
+                    },
+                )
+            }
+            Err(_) => {
+                // the device share failed: cover its span on the SMP side
+                m.sched.record_hybrid_failure(self.name());
+                partials.extend(self.hybrid_smp_partials(m.input, m.dev_span, m.nparts));
+                let r = self.smp.reduce(partials);
+                (r, Executed::Smp { partitions: m.nparts })
+            }
+        }
+    }
+
+    /// Total index-space items of one invocation (hybrid methods only).
+    ///
+    /// # Panics
+    /// Panics when the method has no [`HybridSpec`]; the engine only
+    /// routes here after [`HeteroMethod::has_hybrid_version`] checks.
+    pub fn hybrid_items(&self, input: &I) -> usize {
+        (self.hybrid.as_ref().expect("hybrid spec present").items)(input)
+    }
+
+    /// Compute the SMP partial results for `span` (hybrid methods only;
+    /// see [`HeteroMethod::hybrid_items`] for the panic contract).
+    pub fn hybrid_smp_partials(&self, input: &I, span: Range1, nparts: usize) -> Vec<R> {
+        (self.hybrid.as_ref().expect("hybrid spec present").smp)(input, span, nparts)
+    }
+
+    /// Compute the device partial result for `span` on an existing
+    /// session (hybrid methods only; see [`HeteroMethod::hybrid_items`]
+    /// for the panic contract).
+    pub fn hybrid_device_partial(
+        &self,
+        session: &mut DeviceSession<'_>,
+        input: &I,
+        span: Range1,
+    ) -> Result<R> {
+        (self.hybrid.as_ref().expect("hybrid spec present").device)(session, input, span)
     }
 
     /// Run the compiled device version on an existing (possibly warm)
@@ -196,6 +480,18 @@ mod tests {
         assert_eq!(m.resolve(&e, None), Target::Smp);
         let (r, how) = m.invoke(&e, None, &vec![2, 3]).unwrap();
         assert_eq!(r, 5);
+        assert!(matches!(how, Executed::Smp { .. }));
+    }
+
+    #[test]
+    fn hybrid_rule_without_spec_falls_back_to_smp() {
+        let mut rules = Rules::empty();
+        rules.set("Sum.sum", Target::Hybrid);
+        let e = Engine::with_rules(2, rules);
+        let m = method(); // no hybrid spec, no registry
+        assert_eq!(m.resolve(&e, None), Target::Smp);
+        let (r, how) = m.invoke(&e, None, &vec![4, 5]).unwrap();
+        assert_eq!(r, 9);
         assert!(matches!(how, Executed::Smp { .. }));
     }
 

@@ -13,8 +13,11 @@ use crate::somd::partition::Block1D;
 use crate::somd::reduction::{Assemble, FnReduce};
 use crate::util::prng::Xorshift64;
 
+/// IDEA cipher rounds.
 pub const ROUNDS: usize = 8;
+/// Subkeys per schedule (6 per round + 4 output-transform keys).
 pub const SUBKEYS: usize = 52;
+/// Bytes per cipher block (four 16-bit words).
 pub const BLOCK_BYTES: usize = 8;
 
 // ---------------------------------------------------------------------------
@@ -36,6 +39,7 @@ pub fn mul(a: u32, b: u32) -> u32 {
     }
 }
 
+/// 16-bit modular addition.
 #[inline]
 pub fn add(a: u32, b: u32) -> u32 {
     (a + b) & 0xFFFF
@@ -57,6 +61,7 @@ pub fn mul_inv(x: u32) -> u32 {
     (acc & 0xFFFF) as u32
 }
 
+/// Additive inverse modulo 2^16.
 pub fn add_inv(x: u32) -> u32 {
     (0x10000 - x) & 0xFFFF
 }
@@ -167,6 +172,21 @@ pub fn cipher_range(src: &[u8], dst: &mut [u8], keys: &[u32; SUBKEYS], lo: usize
     }
 }
 
+/// Cipher blocks `[lo, hi)` of `src` into a freshly allocated partial
+/// buffer (the bytes of exactly those blocks, in order).  This is the
+/// per-MI body of the SOMD version and the SMP share of the hybrid lane:
+/// partials from consecutive ranges concatenate back into the full
+/// ciphertext through the array-assembly reduction.
+pub fn cipher_partial(src: &[u8], keys: &[u32; SUBKEYS], lo: usize, hi: usize) -> Vec<u8> {
+    let mut out = vec![0u8; (hi - lo) * BLOCK_BYTES];
+    for (oi, b) in (lo..hi).enumerate() {
+        let o = b * BLOCK_BYTES;
+        let w = cipher_block(load_block(&src[o..o + 8]), keys);
+        store_block(w, &mut out[oi * BLOCK_BYTES..oi * BLOCK_BYTES + 8]);
+    }
+    out
+}
+
 /// Sequential Crypt (the JavaGrande baseline): whole-vector cipher.
 pub fn sequential(src: &[u8], keys: &[u32; SUBKEYS]) -> Vec<u8> {
     assert_eq!(src.len() % BLOCK_BYTES, 0);
@@ -181,12 +201,16 @@ pub fn sequential(src: &[u8], keys: &[u32; SUBKEYS]) -> Vec<u8> {
 
 /// A Crypt problem instance: data + both key schedules.
 pub struct Problem {
+    /// The plaintext vector (8-byte-aligned).
     pub data: Vec<u8>,
+    /// Encryption subkeys.
     pub ekeys: [u32; SUBKEYS],
+    /// Decryption subkeys.
     pub dkeys: [u32; SUBKEYS],
 }
 
 impl Problem {
+    /// Deterministically generate a problem of `bytes` bytes.
     pub fn generate(bytes: usize, seed: u64) -> Problem {
         assert_eq!(bytes % BLOCK_BYTES, 0, "crypt size must be 8-byte aligned");
         let mut rng = Xorshift64::new(seed);
@@ -201,6 +225,7 @@ impl Problem {
         Problem { data, ekeys, dkeys }
     }
 
+    /// Cipher-block count of the data vector.
     pub fn blocks(&self) -> usize {
         self.data.len() / BLOCK_BYTES
     }
@@ -208,7 +233,9 @@ impl Problem {
 
 /// Input to one cipher pass.
 pub struct PassInput<'a> {
+    /// Source bytes (plaintext or ciphertext).
     pub src: &'a [u8],
+    /// The subkey schedule for this pass.
     pub keys: [u32; SUBKEYS],
 }
 
@@ -220,22 +247,15 @@ pub fn somd_method() -> SomdMethod<PassInput<'static>, crate::somd::BlockPart, (
     somd_method_generic()
 }
 
+/// Lifetime-generic form of [`somd_method`] (the input borrows the pass
+/// source, so each pass binds its own lifetime).
 pub fn somd_method_generic<'a>(
 ) -> SomdMethod<PassInput<'a>, crate::somd::BlockPart, (), Vec<u8>> {
     SomdMethod::new(
         "Crypt.cipher",
         |inp: &PassInput<'_>, n| Block1D::new().ranges(inp.src.len() / BLOCK_BYTES, n),
         |_, _| (),
-        |inp, part, _, _| {
-            let mut out = vec![0u8; part.own.len() * BLOCK_BYTES];
-            let keys = inp.keys;
-            for (oi, b) in part.own.iter().enumerate() {
-                let o = b * BLOCK_BYTES;
-                let w = cipher_block(load_block(&inp.src[o..o + 8]), &keys);
-                store_block(w, &mut out[oi * BLOCK_BYTES..oi * BLOCK_BYTES + 8]);
-            }
-            out
-        },
+        |inp, part, _, _| cipher_partial(inp.src, &inp.keys, part.own.lo, part.own.hi),
         Assemble,
     )
 }

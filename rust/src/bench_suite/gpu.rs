@@ -26,6 +26,7 @@ pub fn pack_words(bytes: &[u8]) -> Vec<u32> {
     bytes.chunks_exact(2).map(|c| u32::from(c[0]) << 8 | u32::from(c[1])).collect()
 }
 
+/// Inverse of [`pack_words`]: 16-bit words in u32 lanes → bytes.
 pub fn unpack_words(words: &[u32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(words.len() * 2);
     for &w in words {
@@ -71,30 +72,42 @@ pub fn crypt_run(session: &mut DeviceSession<'_>, p: &CryptProblem) -> Result<(V
 /// halved on the host (the paper's top-level/SOMD split).  Single
 /// precision, as the paper's Aparapi back-end forces (§7.3).
 pub fn series_run(session: &mut DeviceSession<'_>, count: usize) -> Result<Vec<(f32, f32)>> {
+    let mut out = series_run_range(session, 0, count)?;
+    out[0].0 /= 2.0;
+    out[0].1 = 0.0;
+    Ok(out)
+}
+
+/// Coefficients (a_n, b_n) for `n` in `[lo, hi)` only — the hybrid lane's
+/// device share: the `series_chunk` artifact takes its starting index as
+/// an input, so a sub-range costs proportionally fewer chunk launches
+/// than the whole space (the last chunk may overhang; its surplus lanes
+/// are computed-and-dropped, the §5.2 boundary-divergence cost).  No a_0
+/// special-casing — the caller owns the top-level split.
+pub fn series_run_range(
+    session: &mut DeviceSession<'_>,
+    lo: usize,
+    hi: usize,
+) -> Result<Vec<(f32, f32)>> {
     let info = session
         .registry()
         .info("series_chunk")
         .map_err(|e| anyhow!("{e}"))?;
     let chunk = info.meta_usize("chunk").ok_or_else(|| anyhow!("series chunk meta"))?;
-    let mut out = Vec::with_capacity(count);
-    let mut n0 = 0usize;
-    while n0 < count {
-        let t = HostTensor::scalar_f32(n0 as f32);
+    let name = info.name.clone();
+    let mut out = Vec::with_capacity(hi.saturating_sub(lo));
+    let mut n0 = lo;
+    while n0 < hi {
         // scalar shape () vs manifest [1]: encode as [1]
-        let t = match t {
-            HostTensor::F32(v, _) => HostTensor::F32(v, vec![1]),
-            _ => unreachable!(),
-        };
-        let res = session.launch_to_host(&info.name.clone(), &[Arg::Host(&t)], chunk)?;
+        let t = HostTensor::F32(vec![n0 as f32], vec![1]);
+        let res = session.launch_to_host(&name, &[Arg::Host(&t)], chunk)?;
         let ab = res[0].as_f32()?;
-        let take = chunk.min(count - n0);
+        let take = chunk.min(hi - n0);
         for i in 0..take {
             out.push((ab[i], ab[chunk + i]));
         }
         n0 += chunk;
     }
-    out[0].0 /= 2.0;
-    out[0].1 = 0.0;
     Ok(out)
 }
 
@@ -242,6 +255,26 @@ mod tests {
             );
         }
         assert!(s.stats().launches >= 1);
+    }
+
+    #[test]
+    fn series_range_matches_sequential_slice() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::passthrough());
+        let (lo, hi) = (5usize, 700usize);
+        let got = series_run_range(&mut s, lo, hi).unwrap();
+        let want = super::super::series::sequential(hi, 1000);
+        assert_eq!(got.len(), hi - lo);
+        for (i, g) in got.iter().enumerate() {
+            let w = want[lo + i];
+            assert!(
+                (g.0 as f64 - w.0).abs() < 5e-3 && (g.1 as f64 - w.1).abs() < 5e-3,
+                "n={} {g:?} vs {w:?}",
+                lo + i
+            );
+        }
+        // a sub-range pays one chunk launch, not the whole space
+        assert_eq!(s.stats().launches, 1);
     }
 
     #[test]

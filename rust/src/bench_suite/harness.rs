@@ -1,7 +1,11 @@
 //! The evaluation harness: regenerates every table and figure of the
 //! paper's §7 (Table 1, Figures 10a–c, Figures 11a–c, Table 2) as textual
 //! rows, following the paper's methodology (mean of the middle tier of
-//! the samples; speedups relative to the sequential baseline).
+//! the samples; speedups relative to the sequential baseline), plus the
+//! post-paper runtime reports: the `auto` decision table ([`print_auto`],
+//! now rendering three-way smp/device/hybrid choices) and the hybrid
+//! co-execution rows ([`print_hybrid`], delegating to
+//! [`super::hybrid::report`]).
 
 use std::time::Duration;
 
@@ -11,6 +15,7 @@ use super::{crypt, lufact, series, sor, sparse};
 use crate::somd::grid::SharedGrid;
 use crate::util::timer::{middle_tier_mean, sample};
 
+/// The JavaGrande Section-2 benchmarks of the paper's evaluation.
 pub const BENCHES: [&str; 5] = ["Crypt", "LUFact", "Series", "SOR", "SparseMatMult"];
 const SEED: u64 = 0x5012_2013;
 
@@ -74,9 +79,13 @@ pub fn print_table1(scale: f64, reps: usize) {
 /// One Figure-10 row: modeled speedups for SOMD and JG at each partition
 /// count.
 pub struct SpeedupRow {
+    /// Benchmark name.
     pub bench: &'static str,
+    /// The partition counts measured.
     pub partitions: Vec<usize>,
+    /// SOMD speedups, one per partition count.
     pub somd: Vec<f64>,
+    /// JavaGrande-style speedups, one per partition count.
     pub jg: Vec<f64>,
 }
 
@@ -158,6 +167,7 @@ fn half_pass_speedup(t_seq: Duration, m: &Modeled) -> f64 {
     t_seq.as_secs_f64() / (2.0 * m.t_par.as_secs_f64())
 }
 
+/// Print the Figure-10 table for one class.
 pub fn print_fig10(class: Class, scale: f64, reps: usize, o: &Overheads) {
     let s = Sizes::scaled(class, scale);
     let partitions = [1usize, 2, 4, 8];
@@ -184,9 +194,13 @@ pub fn print_fig10(class: Class, scale: f64, reps: usize, o: &Overheads) {
 /// profiles.  Speedups relative to the sequential baseline.  LUFact
 /// omitted, as in the paper (§7.3).
 pub struct Fig11Row {
+    /// Benchmark name.
     pub bench: &'static str,
+    /// Best modeled CPU speedup over p=1..8 (SOMD or JG).
     pub cpu_best: f64,
+    /// Modeled speedup on the Fermi profile.
     pub fermi: f64,
+    /// Modeled speedup on the GeForce 320M profile.
     pub geforce: f64,
 }
 
@@ -217,6 +231,7 @@ pub fn sizes_from_registry(
     s
 }
 
+/// Compute the Figure-11 rows (best CPU vs the two GPU profiles).
 pub fn fig11_rows(
     class: Class,
     scale: f64,
@@ -270,6 +285,7 @@ pub fn fig11_rows(
     Ok(rows)
 }
 
+/// Print the Figure-11 table for one class.
 pub fn print_fig11(
     class: Class,
     scale: f64,
@@ -299,6 +315,7 @@ pub fn print_fig11(
 /// recorded and which target `Target::Auto` therefore picks.
 #[derive(Debug, Clone)]
 pub struct AutoRow {
+    /// Benchmark name.
     pub bench: &'static str,
     /// Observed SMP wall seconds (trailing mean).
     pub smp_secs: f64,
@@ -390,6 +407,7 @@ pub fn auto_rows(
     Ok(rows)
 }
 
+/// Print the `auto` decision table for one class.
 pub fn print_auto(
     class: Class,
     scale: f64,
@@ -407,16 +425,20 @@ pub fn print_auto(
         "Benchmark", "SMP (s)", "Device (s)", "Transfer (MB)", "Auto"
     );
     for row in auto_rows(class, scale, reps, registry, profile)? {
+        let chosen = match row.chosen {
+            crate::somd::Choice::Smp => "smp".to_string(),
+            crate::somd::Choice::Device => "device".to_string(),
+            crate::somd::Choice::Hybrid { device_fraction } => {
+                format!("hybrid({device_fraction:.2})")
+            }
+        };
         println!(
             "{:<15} {:>12.4} {:>14.4} {:>14.2} {:>10}",
             row.bench,
             row.smp_secs,
             row.device_secs,
             row.transfer_bytes / 1e6,
-            match row.chosen {
-                crate::somd::Choice::Smp => "smp",
-                crate::somd::Choice::Device => "device",
-            }
+            chosen
         );
     }
     println!(
@@ -441,6 +463,20 @@ pub fn table2() -> Vec<(&'static str, usize, usize)> {
     ]
 }
 
+/// Print the hybrid co-execution report (see [`super::hybrid::report`]
+/// for the measurement protocol and the `--check` gate).
+pub fn print_hybrid(
+    reps: usize,
+    workers: usize,
+    learn_rounds: usize,
+    out_path: &str,
+    check: bool,
+    tol: f64,
+) -> anyhow::Result<()> {
+    super::hybrid::report(reps, workers, learn_rounds, out_path, check, tol)
+}
+
+/// Print the Table-2 adequacy counts.
 pub fn print_table2() {
     println!("== Table 2: SOMD adequacy (annotations / extra LoC) ==");
     println!("{:<15} {:>13} {:>10}", "Benchmark", "Annotations", "Extra LoC");

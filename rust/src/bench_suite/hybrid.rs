@@ -1,0 +1,483 @@
+//! Hybrid co-execution methods + the `somd bench hybrid` report.
+//!
+//! Three benchmark methods carry a [`HybridSpec`] so one invocation can
+//! split across the SMP pool and the device lane at the scheduler's
+//! learned ratio:
+//!
+//! * [`series_hybrid`] — the compute-dense case (tiny transfers, heavy
+//!   per-item math): the device share costs proportionally fewer
+//!   `series_chunk` launches, so co-execution adds real throughput and
+//!   hybrid beats either lane alone;
+//! * [`crypt_hybrid_generic`] — the transfer-accounted case: the whole
+//!   input crosses the (modeled) bus regardless of the split, so the
+//!   fixed-shape artifact caps what co-execution can save; the learned
+//!   ratio lands wherever the two sides' *measured* throughput puts it
+//!   (the §7.3 bus-pressure story shows up in the modeled clocks and the
+//!   transfer columns, not as an assertion);
+//! * [`vecadd_hybrid`] — the Listing-8 quickstart shape, used by the
+//!   bitwise correctness suite (f32 adds are exact, so hybrid output must
+//!   equal pure-SMP output bit for bit at every split).
+//!
+//! [`report`] measures smp/device/hybrid walls per workload, lets the
+//! ratio learner converge, emits `BENCH_hybrid.json`, and with `check`
+//! gates on hybrid ≥ best single lane for the compute-dense workload.
+//! Schema documented in `docs/BENCHMARKS.md`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{DeviceFn, Executed, HeteroMethod, HybridSpec};
+use crate::device::{Arg, DeviceProfile, DeviceSession};
+use crate::runtime::{HostTensor, Registry};
+use crate::somd::master::run_mis;
+use crate::somd::partition::Block1D;
+use crate::somd::reduction::Assemble;
+use crate::somd::{BlockPart, Engine, SomdMethod};
+use crate::util::json::Json;
+use crate::util::timer::{middle_tier_mean, sample};
+
+use super::crypt::{self, BLOCK_BYTES};
+use super::params::SERIES_INTERVALS;
+use super::{gpu, series};
+
+const SEED: u64 = 0x5012_2013;
+
+// ---------------------------------------------------------------------------
+// Hybrid method builders
+// ---------------------------------------------------------------------------
+
+/// Listing-8 vector addition with SMP, device and hybrid versions over
+/// the committed `vecadd` artifact.  The artifact's shape is fixed, so
+/// the device share launches the whole kernel but downloads only its
+/// sub-range ([`DeviceSession::get_rows`]); the SMP share computes the
+/// identical f32 adds, so hybrid results are bitwise equal to pure SMP.
+pub fn vecadd_hybrid() -> HeteroMethod<(Vec<f32>, Vec<f32>), BlockPart, (), Vec<f32>> {
+    let smp = SomdMethod::new(
+        "VecAdd.add",
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |inp, p, _, _| {
+            let (a, b) = inp;
+            p.own.iter().map(|i| a[i] + b[i]).collect::<Vec<f32>>()
+        },
+        Assemble,
+    );
+    let dev: DeviceFn<(Vec<f32>, Vec<f32>), Vec<f32>> = Box::new(|sess, inp| {
+        let x = HostTensor::vec_f32(inp.0.clone());
+        let y = HostTensor::vec_f32(inp.1.clone());
+        let out = sess.launch_to_host("vecadd", &[Arg::Host(&x), Arg::Host(&y)], inp.0.len())?;
+        Ok(out[0].as_f32()?.to_vec())
+    });
+    let spec = HybridSpec::new(
+        |inp: &(Vec<f32>, Vec<f32>)| inp.0.len(),
+        |inp, span, n| {
+            let len = inp.0.len();
+            let parts = Block1D::new().ranges_in(span, len, n);
+            run_mis(inp, &parts, &(), &|inp, p, _, _| {
+                let (a, b) = inp;
+                p.own.iter().map(|i| a[i] + b[i]).collect::<Vec<f32>>()
+            })
+        },
+        |sess, inp, span| {
+            let x = HostTensor::vec_f32(inp.0.clone());
+            let y = HostTensor::vec_f32(inp.1.clone());
+            let ids = sess.launch("vecadd", &[Arg::Host(&x), Arg::Host(&y)], span.len())?;
+            let out = sess.get_rows(ids[0], span.lo, span.hi);
+            sess.free(ids[0])?;
+            Ok(out?.as_f32()?.to_vec())
+        },
+    );
+    HeteroMethod::with_device(smp, dev).with_hybrid(spec)
+}
+
+/// One IDEA cipher pass with SMP, device and hybrid versions.  The
+/// index space is cipher blocks; both lanes run the same integer IDEA,
+/// so hybrid ciphertext is bitwise equal to the sequential cipher at
+/// every split.  Lifetime-generic like
+/// [`crypt::somd_method_generic`] (the input borrows the pass source).
+pub fn crypt_hybrid_generic<'a>(
+) -> HeteroMethod<crypt::PassInput<'a>, BlockPart, (), Vec<u8>> {
+    let smp = crypt::somd_method_generic();
+    let dev: DeviceFn<crypt::PassInput<'a>, Vec<u8>> =
+        Box::new(|sess, inp| gpu::crypt_pass(sess, inp.src, &inp.keys));
+    let spec = HybridSpec::new(
+        |inp: &crypt::PassInput<'_>| inp.src.len() / BLOCK_BYTES,
+        |inp, span, n| {
+            let blocks = inp.src.len() / BLOCK_BYTES;
+            let parts = Block1D::new().ranges_in(span, blocks, n);
+            run_mis(inp, &parts, &(), &|inp, p, _, _| {
+                crypt::cipher_partial(inp.src, &inp.keys, p.own.lo, p.own.hi)
+            })
+        },
+        |sess, inp, span| {
+            let nblocks = inp.src.len() / BLOCK_BYTES;
+            let name = sess
+                .registry()
+                .find_by_meta("crypt", "blocks", nblocks)
+                .ok_or_else(|| anyhow!("no crypt artifact for {nblocks} blocks"))?
+                .name
+                .clone();
+            let words = HostTensor::mat_u32(gpu::pack_words(inp.src), nblocks, 4);
+            let keys_t = HostTensor::vec_u32(inp.keys.to_vec());
+            // the artifact's shape is fixed: full upload + launch, but the
+            // grid divergence and the D2H transfer account the sub-range
+            let ids = sess.launch(&name, &[Arg::Host(&words), Arg::Host(&keys_t)], span.len())?;
+            let out = sess.get_rows(ids[0], span.lo, span.hi);
+            sess.free(ids[0])?;
+            Ok(gpu::unpack_words(out?.as_u32()?))
+        },
+    );
+    HeteroMethod::with_device(smp, dev).with_hybrid(spec)
+}
+
+/// Fourier-coefficient Series with SMP, device and hybrid versions over
+/// the chunked `series_chunk` artifact (index space: coefficients
+/// `1..count`; `a_0` stays a top-level concern as in the paper's split).
+/// The chunk kernel takes its starting index as an input, so the device
+/// share genuinely costs fewer launches — the workload where hybrid
+/// co-execution beats both single lanes.  The SMP side computes in f64
+/// (the JavaGrande substrate), the device in f32 (§7.3's forced single
+/// precision): results agree to float tolerance, not bitwise.
+///
+/// The invocation's `m` (integration intervals) must equal the
+/// artifact's lowering constant ([`SERIES_INTERVALS`]) for the two sides
+/// to compute the same series.
+pub fn series_hybrid() -> HeteroMethod<series::Input, BlockPart, (), Vec<(f64, f64)>> {
+    let smp = series::somd_method();
+    let dev: DeviceFn<series::Input, Vec<(f64, f64)>> = Box::new(|sess, inp| {
+        let got = gpu::series_run_range(sess, 1, inp.count)?;
+        Ok(got.into_iter().map(|(a, b)| (a as f64, b as f64)).collect())
+    });
+    let spec = HybridSpec::new(
+        |inp: &series::Input| inp.count.saturating_sub(1),
+        |inp, span, n| {
+            let total = inp.count - 1;
+            let parts = Block1D::new().ranges_in(span, total, n);
+            run_mis(inp, &parts, &(), &|inp, p, _, _| {
+                p.own
+                    .iter()
+                    .map(|i| series::coefficient_pair(i + 1, inp.m))
+                    .collect::<Vec<(f64, f64)>>()
+            })
+        },
+        |sess, _inp, span| {
+            // index i in the SOMD space is coefficient i+1
+            let got = gpu::series_run_range(sess, span.lo + 1, span.hi + 1)?;
+            Ok(got.into_iter().map(|(a, b)| (a as f64, b as f64)).collect())
+        },
+    );
+    HeteroMethod::with_device(smp, dev).with_hybrid(spec)
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// One workload's lane-vs-lane measurement.
+#[derive(Debug, Clone)]
+pub struct HybridRow {
+    /// Workload name.
+    pub bench: String,
+    /// Index-space items per invocation.
+    pub items: usize,
+    /// MI count of the SMP lane (and of the hybrid SMP share).
+    pub workers: usize,
+    /// Pure-SMP wall seconds (middle-tier mean).
+    pub smp_secs: f64,
+    /// Pure-device wall seconds (middle-tier mean, warm session).
+    pub device_secs: f64,
+    /// Hybrid wall seconds at the learned split (middle-tier mean).
+    pub hybrid_secs: f64,
+    /// The learned device share after the calibration rounds.
+    pub device_fraction: f64,
+    /// `min(smp_secs, device_secs)` — the bar hybrid must clear.
+    pub best_single_secs: f64,
+    /// `best_single_secs / hybrid_secs` (>1 = hybrid wins).
+    pub speedup_vs_best: f64,
+    /// Timed "hybrid" invocations that actually degraded to pure SMP
+    /// (device share under the `min_device_items` floor).  Nonzero means
+    /// the hybrid column is really an SMP wall — the `--check` gate
+    /// refuses to pass on such vacuous rows.
+    pub degraded_runs: usize,
+}
+
+fn row(
+    bench: &str,
+    items: usize,
+    workers: usize,
+    smp_secs: f64,
+    device_secs: f64,
+    hybrid_secs: f64,
+    device_fraction: f64,
+) -> HybridRow {
+    let best = smp_secs.min(device_secs);
+    HybridRow {
+        bench: bench.to_string(),
+        items,
+        workers,
+        smp_secs,
+        device_secs,
+        hybrid_secs,
+        device_fraction,
+        best_single_secs: best,
+        speedup_vs_best: if hybrid_secs > 0.0 { best / hybrid_secs } else { 0.0 },
+        degraded_runs: 0,
+    }
+}
+
+/// Measure smp/device/hybrid walls for the hybrid workloads.
+///
+/// Per workload: warm both lanes (artifact lowering is a load-time cost,
+/// not an execute cost), measure each pure lane, run `learn_rounds`
+/// hybrid invocations so the ratio learner converges, then measure the
+/// hybrid at the learned split.  Correctness is asserted along the way
+/// (crypt bitwise vs the sequential cipher; series to f32 tolerance).
+pub fn measure(reps: usize, workers: usize, learn_rounds: usize) -> Result<Vec<HybridRow>> {
+    let reg = Registry::load_default()?;
+    let engine = Engine::new(workers);
+    let profile = DeviceProfile::by_name(engine.auto_profile())
+        .ok_or_else(|| anyhow!("unknown auto profile"))?;
+    let mut rows = Vec::new();
+
+    // ---- Series: compute-dense, the hybrid headline --------------------
+    {
+        let chunk = reg
+            .info("series_chunk")?
+            .meta_usize("chunk")
+            .ok_or_else(|| anyhow!("series_chunk lacks chunk meta"))?;
+        let count = chunk * 2 + 1; // two full device chunks past a_0
+        let inp = series::Input { count, m: SERIES_INTERVALS };
+        let m = series_hybrid();
+
+        // warm the device lane (parse + bytecode lowering, untimed)
+        let mut sess = DeviceSession::new(&reg, profile.clone());
+        gpu::series_run_range(&mut sess, 1, 2)?;
+
+        let smp_secs =
+            middle_tier_mean(&sample(reps, || m.smp.invoke(&inp, workers))).as_secs_f64();
+        let device_secs = middle_tier_mean(&sample(reps, || {
+            gpu::series_run_range(&mut sess, 1, count).expect("device series runs")
+        }))
+        .as_secs_f64();
+
+        // correctness preflight + ratio learning
+        let want = series::sequential(count, SERIES_INTERVALS);
+        for round in 0..learn_rounds.max(1) {
+            let (got, _) = m.invoke_hybrid(&engine, &reg, &inp, None)?;
+            if round == 0 {
+                for (i, g) in got.iter().enumerate() {
+                    let w = want[i + 1];
+                    if (g.0 - w.0).abs() > 5e-3 || (g.1 - w.1).abs() > 5e-3 {
+                        bail!("hybrid series diverges at n={}: {g:?} vs {w:?}", i + 1);
+                    }
+                }
+            }
+        }
+        let mut degraded = 0usize;
+        let hybrid_secs = middle_tier_mean(&sample(reps, || {
+            let (_, how) =
+                m.invoke_hybrid(&engine, &reg, &inp, None).expect("hybrid series runs");
+            if !matches!(how, Executed::Hybrid { .. }) {
+                degraded += 1;
+            }
+        }))
+        .as_secs_f64();
+        let fraction = engine.scheduler().hybrid_fraction(m.name());
+        let mut r =
+            row("Series", count - 1, workers, smp_secs, device_secs, hybrid_secs, fraction);
+        r.degraded_runs = degraded;
+        rows.push(r);
+    }
+
+    // ---- Crypt: transfer-bound, the ratio learner's other pole ---------
+    {
+        let blocks = reg
+            .info("crypt_A")?
+            .meta_usize("blocks")
+            .ok_or_else(|| anyhow!("crypt_A lacks blocks meta"))?;
+        let p = crypt::Problem::generate(blocks * BLOCK_BYTES, SEED);
+        let m = crypt_hybrid_generic();
+        let inp = crypt::PassInput { src: &p.data, keys: p.ekeys };
+
+        let mut sess = DeviceSession::new(&reg, profile.clone());
+        gpu::crypt_pass(&mut sess, &p.data, &p.ekeys)?; // warm, untimed
+
+        let smp_secs =
+            middle_tier_mean(&sample(reps, || m.smp.invoke(&inp, workers))).as_secs_f64();
+        let device_secs = middle_tier_mean(&sample(reps, || {
+            gpu::crypt_pass(&mut sess, &p.data, &p.ekeys).expect("device crypt runs")
+        }))
+        .as_secs_f64();
+
+        let want = crypt::sequential(&p.data, &p.ekeys);
+        for round in 0..learn_rounds.max(1) {
+            let (got, _) = m.invoke_hybrid(&engine, &reg, &inp, None)?;
+            if round == 0 && got != want {
+                bail!("hybrid crypt ciphertext differs from the sequential cipher");
+            }
+        }
+        let mut degraded = 0usize;
+        let hybrid_secs = middle_tier_mean(&sample(reps, || {
+            let (_, how) =
+                m.invoke_hybrid(&engine, &reg, &inp, None).expect("hybrid crypt runs");
+            if !matches!(how, Executed::Hybrid { .. }) {
+                degraded += 1;
+            }
+        }))
+        .as_secs_f64();
+        let fraction = engine.scheduler().hybrid_fraction(m.name());
+        let mut r = row("Crypt", blocks, workers, smp_secs, device_secs, hybrid_secs, fraction);
+        r.degraded_runs = degraded;
+        rows.push(r);
+    }
+
+    Ok(rows)
+}
+
+/// Render the report as the `BENCH_hybrid.json` schema (see
+/// `docs/BENCHMARKS.md`).
+pub fn to_json(rows: &[HybridRow], reps: usize, learn_rounds: usize) -> Json {
+    use std::collections::BTreeMap;
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("hybrid_coexec/v1".to_string()));
+    top.insert("reps".to_string(), Json::Num(reps as f64));
+    top.insert("learn_rounds".to_string(), Json::Num(learn_rounds as f64));
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::Str(r.bench.clone()));
+            m.insert("items".to_string(), Json::Num(r.items as f64));
+            m.insert("workers".to_string(), Json::Num(r.workers as f64));
+            m.insert("smp_secs".to_string(), Json::Num(r.smp_secs));
+            m.insert("device_secs".to_string(), Json::Num(r.device_secs));
+            m.insert("hybrid_secs".to_string(), Json::Num(r.hybrid_secs));
+            m.insert("device_fraction".to_string(), Json::Num(r.device_fraction));
+            m.insert("best_single_secs".to_string(), Json::Num(r.best_single_secs));
+            m.insert("speedup_vs_best".to_string(), Json::Num(r.speedup_vs_best));
+            m.insert("degraded_runs".to_string(), Json::Num(r.degraded_runs as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("workloads".to_string(), Json::Arr(arr));
+    Json::Obj(top)
+}
+
+/// Print the hybrid report, write `out_path`, and with `check` gate on
+/// the compute-dense workload: hybrid wall must be within `tol` of the
+/// best single lane or better (`tol` absorbs scheduler noise on busy
+/// hosts; 1.0 = strict).
+pub fn report(
+    reps: usize,
+    workers: usize,
+    learn_rounds: usize,
+    out_path: &str,
+    check: bool,
+    tol: f64,
+) -> Result<()> {
+    let rows = measure(reps, workers, learn_rounds)?;
+    println!(
+        "== Hybrid co-execution: one invocation split across SMP + device \
+         (workers {workers}, reps {reps}, learn {learn_rounds}) =="
+    );
+    println!(
+        "{:<10} {:>9} {:>11} {:>12} {:>12} {:>10} {:>12}",
+        "Workload", "items", "SMP (s)", "Device (s)", "Hybrid (s)", "dev frac", "vs best"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>9} {:>11.4} {:>12.4} {:>12.4} {:>10.2} {:>11.2}x{}",
+            r.bench,
+            r.items,
+            r.smp_secs,
+            r.device_secs,
+            r.hybrid_secs,
+            r.device_fraction,
+            r.speedup_vs_best,
+            if r.degraded_runs > 0 {
+                format!("  ({} of {} runs degraded to SMP)", r.degraded_runs, reps)
+            } else {
+                String::new()
+            }
+        );
+    }
+    std::fs::write(out_path, to_json(&rows, reps, learn_rounds).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if check {
+        let series = rows
+            .iter()
+            .find(|r| r.bench == "Series")
+            .ok_or_else(|| anyhow!("no Series row measured"))?;
+        if series.degraded_runs > 0 {
+            // a degraded row's hybrid column is really an SMP wall — the
+            // comparison below would pass vacuously, so refuse instead
+            bail!(
+                "{} of the timed Series runs degraded to pure SMP (device share under \
+                 min_device_items) — the hybrid gate would be vacuous",
+                series.degraded_runs
+            );
+        }
+        if series.hybrid_secs > series.best_single_secs * tol {
+            bail!(
+                "hybrid is slower than the best single lane on Series: {:.4}s vs {:.4}s \
+                 (tol {tol})",
+                series.hybrid_secs,
+                series.best_single_secs
+            );
+        }
+        println!(
+            "check ok: hybrid within tol of best single lane on Series \
+             ({:.4}s vs {:.4}s, learned fraction {:.2})",
+            series.hybrid_secs, series.best_single_secs, series.device_fraction
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Registry {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Registry::load(dir).unwrap()
+    }
+
+    #[test]
+    fn series_hybrid_halves_agree_with_sequential() {
+        let reg = reg();
+        let engine = Engine::new(2);
+        let m = series_hybrid();
+        let count = 900; // < one chunk: a single device launch
+        let inp = series::Input { count, m: SERIES_INTERVALS };
+        let (got, how) = m.invoke_hybrid(&engine, &reg, &inp, Some(0.5)).unwrap();
+        assert!(matches!(how, Executed::Hybrid { .. }));
+        assert_eq!(got.len(), count - 1);
+        let want = series::sequential(count, SERIES_INTERVALS);
+        for (i, g) in got.iter().enumerate() {
+            let w = want[i + 1];
+            assert!(
+                (g.0 - w.0).abs() < 5e-3 && (g.1 - w.1).abs() < 5e-3,
+                "n={} {g:?} vs {w:?}",
+                i + 1
+            );
+        }
+        // the ratio learner saw the run
+        let h = engine.scheduler().history("Series.coefficients").unwrap();
+        assert_eq!(h.hybrid_runs, 1);
+    }
+
+    #[test]
+    fn crypt_hybrid_is_bitwise_exact() {
+        let reg = reg();
+        let engine = Engine::new(2);
+        let blocks = reg.info("crypt_A").unwrap().meta_usize("blocks").unwrap();
+        let p = crypt::Problem::generate(blocks * BLOCK_BYTES, 7);
+        let m = crypt_hybrid_generic();
+        let inp = crypt::PassInput { src: &p.data, keys: p.ekeys };
+        let want = crypt::sequential(&p.data, &p.ekeys);
+        let (got, how) = m.invoke_hybrid(&engine, &reg, &inp, Some(0.5)).unwrap();
+        assert!(matches!(how, Executed::Hybrid { .. }));
+        assert_eq!(got, want, "hybrid ciphertext must match the sequential cipher bitwise");
+    }
+}

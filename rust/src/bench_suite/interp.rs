@@ -76,17 +76,24 @@ pub fn bitwise_eq(a: &HostTensor, b: &HostTensor) -> bool {
 /// One artifact's lane-vs-lane measurement.
 #[derive(Debug, Clone)]
 pub struct InterpRow {
+    /// Artifact name.
     pub name: String,
+    /// Total input payload bytes.
     pub input_bytes: usize,
     /// Statically lowered instructions (None if lowering failed).
     pub lowered_instructions: Option<usize>,
     /// HLO instructions executed per run (while bodies count per
     /// iteration; identical for both lanes by construction).
     pub executed_instructions: u64,
+    /// Naive tree-walker wall seconds (middle-tier mean).
     pub naive_secs: f64,
+    /// Compiled bytecode wall seconds (middle-tier mean).
     pub compiled_secs: f64,
+    /// naive/compiled ratio (>1 = compiled wins).
     pub speedup: f64,
+    /// Executed HLO instructions per second, naive lane.
     pub naive_ops_per_sec: f64,
+    /// Executed HLO instructions per second, compiled lane.
     pub compiled_ops_per_sec: f64,
 }
 

@@ -15,6 +15,7 @@ use crate::somd::master::{run_mis, SomdMethod};
 use crate::somd::reduction;
 use crate::util::prng::Xorshift64;
 
+/// Random `n x n` matrix in [-1, 1) (JavaGrande analogue).
 pub fn generate(n: usize, seed: u64) -> Vec<f64> {
     let mut rng = Xorshift64::new(seed);
     (0..n * n).map(|_| rng.f64_range(-1.0, 1.0)).collect()
@@ -72,6 +73,7 @@ pub fn pivot_phase_pub(a: &SharedGrid, k: usize) -> usize {
     pivot_phase(a, k)
 }
 
+/// Public wrapper over the trailing-update phase (see [`pivot_phase_pub`]).
 pub fn update_rows_pub(a: &SharedGrid, k: usize, lo: usize, hi: usize) {
     update_rows(a, k, lo, hi)
 }
@@ -89,10 +91,13 @@ pub fn sequential(a: &SharedGrid) -> Vec<usize> {
 
 /// The inner SOMD method: one trailing update, rows partitioned.
 pub struct UpdateInput<'a> {
+    /// The in-place factorized matrix.
     pub a: &'a SharedGrid,
+    /// The outer-iteration column.
     pub k: usize,
 }
 
+/// The per-iteration trailing-update SOMD method.
 pub fn update_method<'a>() -> SomdMethod<UpdateInput<'a>, Range1, (), ()> {
     SomdMethod::new(
         "LUFact.daxpy",

@@ -8,7 +8,10 @@
 //! 3. **JG-style** — the hand-tuned multithreaded decomposition of the
 //!    JavaGrande suite (the comparison series in Figure 10);
 //! 4. **GPU** — the device-offloaded version (Algorithm 2 master driving
-//!    the AOT Pallas/XLA kernels; Figure 11).
+//!    the AOT Pallas/XLA kernels; Figure 11);
+//! 5. **hybrid** — for the co-execution workloads ([`hybrid`]), one
+//!    invocation split across the SMP pool and the device at the
+//!    scheduler's learned ratio.
 //!
 //! [`harness`] regenerates the paper's tables/figures; [`modeled`] holds
 //! the calibrated parallel-makespan model used on this 1-core testbed.
@@ -16,6 +19,7 @@
 pub mod crypt;
 pub mod gpu;
 pub mod harness;
+pub mod hybrid;
 pub mod interp;
 pub mod lufact;
 pub mod modeled;

@@ -74,14 +74,20 @@ pub fn calibrate() -> Overheads {
 /// Modeled timings for one invocation at `p` partitions.
 #[derive(Debug, Clone, Copy)]
 pub struct Modeled {
+    /// Partition (MI) count.
     pub p: usize,
+    /// Sequential baseline.
     pub t_seq: Duration,
+    /// Modeled parallel makespan.
     pub t_par: Duration,
+    /// Slowest partition's measured map work.
     pub max_work: Duration,
+    /// Runtime overhead share of the makespan.
     pub overhead: Duration,
 }
 
 impl Modeled {
+    /// Modeled speedup over the sequential baseline.
     pub fn speedup(&self) -> f64 {
         self.t_seq.as_secs_f64() / self.t_par.as_secs_f64()
     }
@@ -135,8 +141,11 @@ where
 /// per outer iteration, the JG version one spawn plus two barriers per
 /// iteration (§7.2's explanation, reproduced quantitatively).
 pub struct LuModel {
+    /// Sequential LU baseline.
     pub t_seq: Duration,
+    /// Total pivot-phase time (the sequential fraction).
     pub t_pivot: Duration,
+    /// Total trailing-update time (the parallelizable fraction).
     pub t_update: Duration,
 }
 

@@ -3,12 +3,16 @@
 /// JavaGrande configuration class.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Class {
+    /// Small workload sizes.
     A,
+    /// Medium workload sizes.
     B,
+    /// Large workload sizes.
     C,
 }
 
 impl Class {
+    /// Parse a class letter (case-insensitive).
     pub fn parse(s: &str) -> Option<Class> {
         match s {
             "A" | "a" => Some(Class::A),
@@ -18,6 +22,7 @@ impl Class {
         }
     }
 
+    /// The class letter as a string.
     pub fn name(self) -> &'static str {
         match self {
             Class::A => "A",
@@ -26,6 +31,7 @@ impl Class {
         }
     }
 
+    /// All three classes, in size order.
     pub fn all() -> [Class; 3] {
         [Class::A, Class::B, Class::C]
     }
@@ -46,12 +52,17 @@ pub struct Sizes {
     pub sparse_n: usize,
 }
 
+/// SOR sweep count (fixed by the JavaGrande benchmark).
 pub const SOR_ITERATIONS: usize = 100;
+/// SparseMatMult accumulation rounds (fixed by the benchmark).
 pub const SPMV_ITERATIONS: usize = 200;
+/// SparseMatMult nonzeros per matrix row.
 pub const SPARSE_NNZ_PER_ROW: usize = 5;
+/// Series trapezoid-integration intervals per coefficient.
 pub const SERIES_INTERVALS: usize = 1000;
 
 impl Sizes {
+    /// The exact Table-1 sizes for a class (scale 1.0).
     pub fn full(class: Class) -> Sizes {
         match class {
             Class::A => Sizes {
@@ -97,6 +108,7 @@ impl Sizes {
         }
     }
 
+    /// SparseMatMult nonzero count for this size.
     pub fn sparse_nnz(&self) -> usize {
         self.sparse_n * SPARSE_NNZ_PER_ROW
     }

@@ -11,7 +11,9 @@ use crate::somd::master::SomdMethod;
 use crate::somd::partition::Block1D;
 use crate::somd::reduction::Assemble;
 
+/// Integration interval lower bound.
 pub const LO: f64 = 0.0;
+/// Integration interval upper bound.
 pub const HI: f64 = 2.0;
 
 #[inline]
@@ -52,7 +54,9 @@ pub fn sequential(count: usize, m: usize) -> Vec<(f64, f64)> {
 /// Input to the SOMD stage (coefficients 1..count; a_0 handled top-level).
 #[derive(Debug, Clone, Copy)]
 pub struct Input {
+    /// Number of coefficients (including the top-level a_0).
     pub count: usize,
+    /// Trapezoid-integration intervals per coefficient.
     pub m: usize,
 }
 

@@ -15,8 +15,11 @@ use crate::somd::partition::{Block2D, Block2Part, Rows1D};
 use crate::somd::reduction;
 use crate::util::prng::Xorshift64;
 
-pub const OMEGA: f64 = 0.9; // contractive for the Jacobi-style sweep (see ref.py)
+/// Relaxation factor (contractive for the Jacobi-style sweep; see ref.py).
+pub const OMEGA: f64 = 0.9;
+/// Stencil weight of the four neighbors.
 pub const OMEGA_OVER_FOUR: f64 = OMEGA * 0.25;
+/// Stencil weight of the center element.
 pub const ONE_MINUS_OMEGA: f64 = 1.0 - OMEGA;
 
 /// Random initial grid (JavaGrande RandomMatrix analogue).
@@ -70,8 +73,11 @@ pub fn sequential(g0: &[f64], n: usize, iters: usize) -> (Vec<f64>, f64) {
 
 /// Input to the SOMD stencil method.
 pub struct Input<'a> {
+    /// Initial grid (row-major n x n).
     pub g0: &'a [f64],
+    /// Grid side length.
     pub n: usize,
+    /// Sweep count.
     pub iters: usize,
 }
 
@@ -79,6 +85,7 @@ pub struct Input<'a> {
 /// `view = <1,1>,<1,1>` — the halo is what each MI reads across its
 /// partition boundary between fences).
 pub struct Env {
+    /// The front/back stencil planes.
     pub grids: DoubleGrid,
 }
 

@@ -15,15 +15,22 @@ use crate::util::prng::Xorshift64;
 
 /// CSR-by-triplet problem (row sorted ascending).
 pub struct Problem {
+    /// Matrix side length.
     pub n: usize,
+    /// Nonzero values.
     pub val: Vec<f64>,
+    /// Row index per nonzero (sorted ascending).
     pub row: Vec<u32>,
+    /// Column index per nonzero.
     pub col: Vec<u32>,
+    /// The multiplied vector.
     pub x: Vec<f64>,
+    /// Accumulation rounds.
     pub iterations: usize,
 }
 
 impl Problem {
+    /// Deterministically generate a problem instance.
     pub fn generate(n: usize, nnz: usize, iterations: usize, seed: u64) -> Problem {
         let mut rng = Xorshift64::new(seed);
         let mut row: Vec<u32> = (0..nnz).map(|_| rng.below(n) as u32).collect();
@@ -54,6 +61,7 @@ pub fn sequential(p: &Problem) -> Vec<f64> {
 
 /// Environment: the shared result vector.
 pub struct Env {
+    /// The accumulated result vector (1 x n grid).
     pub y: SharedGrid,
 }
 

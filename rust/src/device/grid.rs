@@ -5,7 +5,9 @@
 /// The computed grid for one kernel launch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GridConfig {
+    /// Work-group count.
     pub groups: usize,
+    /// Threads per work-group.
     pub group_size: usize,
 }
 
@@ -17,6 +19,7 @@ impl GridConfig {
         GridConfig { groups, group_size: max_group_size }
     }
 
+    /// Total launched threads (groups × group size).
     pub fn total_threads(&self) -> usize {
         self.groups * self.group_size
     }

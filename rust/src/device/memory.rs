@@ -30,6 +30,7 @@ pub struct DeviceMemory {
 }
 
 impl DeviceMemory {
+    /// An empty memory pool.
     pub fn new() -> Self {
         Self::default()
     }
@@ -60,24 +61,29 @@ impl DeviceMemory {
         self.entries.get(&id.0).ok_or_else(|| anyhow!("dangling device buffer {id:?}"))
     }
 
+    /// Accounted size of a resident buffer.
     pub fn bytes_of(&self, id: BufId) -> Result<usize> {
         Ok(self.entry(id)?.bytes)
     }
 
+    /// Release a resident buffer (double frees error).
     pub fn free(&mut self, id: BufId) -> Result<()> {
         let e = self.entries.remove(&id.0).ok_or_else(|| anyhow!("double free of {id:?}"))?;
         self.resident_bytes -= e.bytes;
         Ok(())
     }
 
+    /// Currently resident bytes.
     pub fn resident_bytes(&self) -> usize {
         self.resident_bytes
     }
 
+    /// High-water mark of resident bytes.
     pub fn peak_bytes(&self) -> usize {
         self.peak_bytes
     }
 
+    /// Count of live (unfreed) buffers.
     pub fn live_buffers(&self) -> usize {
         self.entries.len()
     }

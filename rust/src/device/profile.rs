@@ -9,8 +9,10 @@
 
 use std::time::Duration;
 
+/// Cost-structure parameters of one modeled device (see the module docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceProfile {
+    /// Profile name (the rules-file device target token).
     pub name: &'static str,
     /// Host→device bandwidth (bytes/s).
     pub h2d_bytes_per_sec: f64,
@@ -82,6 +84,7 @@ impl DeviceProfile {
         }
     }
 
+    /// Look a profile up by its rules-file token.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "fermi" => Some(Self::fermi()),

@@ -27,22 +27,36 @@ use crate::runtime::{Artifact, HostTensor, Registry};
 /// A kernel argument: already-resident buffer or host data to upload
 /// on demand (§4.3 on-demand copying).
 pub enum Arg<'a> {
+    /// An already-resident device buffer.
     Buf(BufId),
+    /// Host data uploaded on demand for this launch (freed afterwards).
     Host(&'a HostTensor),
 }
 
 /// Accumulated accounting for one session.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct DeviceStats {
+    /// Kernel launches issued.
     pub launches: usize,
+    /// Host→device transfer operations.
     pub h2d_transfers: usize,
+    /// Device→host transfer operations.
     pub d2h_transfers: usize,
+    /// Bytes moved host→device.
     pub bytes_h2d: usize,
+    /// Bytes moved device→host.
     pub bytes_d2h: usize,
+    /// Measured wall time spent executing kernels on this host.
     pub wall_compute: Duration,
+    /// Modeled time on the profiled GPU (compute scale + transfers +
+    /// launch overheads).
     pub device_time: Duration,
+    /// High-water mark of resident device bytes.
     pub peak_resident_bytes: usize,
+    /// Total §5.2 grid threads launched (including idle boundary threads).
     pub total_threads_launched: usize,
+    /// Sum over launches of the idle-thread fraction (see
+    /// [`DeviceStats::mean_idle_fraction`]).
     pub idle_thread_fraction_sum: f64,
 }
 
@@ -85,6 +99,8 @@ impl DeviceStats {
     }
 }
 
+/// The master-side view of one offloaded method: memory manager +
+/// accounting over a borrowed artifact [`Registry`].
 pub struct DeviceSession<'r> {
     registry: &'r Registry,
     profile: DeviceProfile,
@@ -93,24 +109,29 @@ pub struct DeviceSession<'r> {
 }
 
 impl<'r> DeviceSession<'r> {
+    /// A fresh session over `registry` under the given cost profile.
     pub fn new(registry: &'r Registry, profile: DeviceProfile) -> Self {
         Self { registry, profile, mem: DeviceMemory::new(), stats: DeviceStats::default() }
     }
 
+    /// The cost profile this session models.
     pub fn profile(&self) -> &DeviceProfile {
         &self.profile
     }
 
+    /// The artifact registry this session launches from.
     pub fn registry(&self) -> &'r Registry {
         self.registry
     }
 
+    /// Snapshot of the accumulated accounting.
     pub fn stats(&self) -> DeviceStats {
         let mut s = self.stats.clone();
         s.peak_resident_bytes = self.mem.peak_bytes();
         s
     }
 
+    /// The session's device-memory manager (residency observability).
     pub fn memory(&self) -> &DeviceMemory {
         &self.mem
     }
@@ -133,6 +154,26 @@ impl<'r> DeviceSession<'r> {
         Ok(t)
     }
 
+    /// Partial `get` for hybrid co-execution: download only rows
+    /// `[lo, hi)` (leading dimension) of a resident buffer.  The transfer
+    /// accounting — byte counts and the modeled D2H clock — charges the
+    /// *slice* only: the SMP lane owns the rest of the index space, so
+    /// a real device would never move it across the bus.  (The PJRT CPU
+    /// stand-in materializes the full literal host-side first; that copy
+    /// is measured wall time, not modeled bus traffic — see
+    /// [`Artifact::get_rows`].)
+    pub fn get_rows(&mut self, id: BufId, lo: usize, hi: usize) -> Result<HostTensor> {
+        let slice = {
+            let e = self.mem.entry(id)?;
+            Artifact::get_rows(&e.buf, lo, hi)?
+        };
+        self.stats.d2h_transfers += 1;
+        self.stats.bytes_d2h += slice.bytes();
+        self.stats.device_time += self.profile.d2h_time(slice.bytes());
+        Ok(slice)
+    }
+
+    /// Release a resident buffer.
     pub fn free(&mut self, id: BufId) -> Result<()> {
         self.mem.free(id)
     }
@@ -274,6 +315,25 @@ mod tests {
         assert_eq!(delta.bytes_h2d, 2 * 4 * n);
         assert!(delta.device_time > Duration::ZERO);
         assert_eq!(delta.total_transfer_bytes(), delta.bytes_h2d + delta.bytes_d2h);
+    }
+
+    #[test]
+    fn get_rows_accounts_only_the_slice() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        let n = r.info("vecadd").unwrap().inputs[0].elems();
+        let a = HostTensor::vec_f32(vec![1.0; n]);
+        let b = HostTensor::vec_f32(vec![2.0; n]);
+        let out = s.launch("vecadd", &[Arg::Host(&a), Arg::Host(&b)], n).unwrap()[0];
+        let d2h_before = s.stats().bytes_d2h;
+        let (lo, hi) = (n / 2, n / 2 + 1000);
+        let slice = s.get_rows(out, lo, hi).unwrap();
+        assert_eq!(slice.len(), 1000);
+        assert!(slice.as_f32().unwrap().iter().all(|&v| v == 3.0));
+        // the accounted transfer is the slice, not the full vector
+        assert_eq!(s.stats().bytes_d2h - d2h_before, 1000 * 4);
+        assert_eq!(s.stats().d2h_transfers, 1);
+        s.free(out).unwrap();
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //!   hand-threaded versions of Crypt, LUFact, Series, SOR and
 //!   SparseMatMult, plus the harness regenerating every table and figure.
 //!
-//! See DESIGN.md for the paper→repo map and EXPERIMENTS.md for results.
+//! See DESIGN.md for the paper→repo map, `docs/ARCHITECTURE.md` for the
+//! navigable three-layer guide (including the hybrid co-execution
+//! walkthrough), `docs/BENCHMARKS.md` for the bench surface, and
+//! EXPERIMENTS.md for results.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod bench_suite;

@@ -4,11 +4,16 @@
 //! somd info
 //! somd bench <table1|table2|fig10|fig11|auto> [--class A|B|C|all] [--scale S] [--reps N]
 //! somd bench interp [--reps N] [--out FILE] [--smoke] [--check]
+//! somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE]
+//!                   [--tol T] [--smoke] [--check]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
 //!          [--class A|B|C] [--scale S] [--partitions N]
 //!          [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]
 //! somd e2e [--scale S]
 //! ```
+//!
+//! See `docs/BENCHMARKS.md` for every subcommand, report schema and
+//! environment knob.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -40,11 +45,13 @@ fn dispatch(args: &Args) -> Result<()> {
         _ => {
             eprintln!(
                 "usage: somd <info|bench|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11|auto|interp> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid> [--class A|B|C|all] [--scale S] [--reps N]\n\
                  \x20      somd bench interp [--reps N] [--out FILE] [--smoke] [--check]\n\
+                 \x20      somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
-                 e2e:   somd e2e [--scale S]"
+                 e2e:   somd e2e [--scale S]\n\
+                 (docs/BENCHMARKS.md documents every subcommand and knob)"
             );
             Ok(())
         }
@@ -109,6 +116,18 @@ fn bench(args: &Args) -> Result<()> {
             let out = args.opt("out").unwrap_or("BENCH_interp.json");
             interp::report(reps, out, args.flag("check"))?;
         }
+        "hybrid" => {
+            // hybrid co-execution rows: smp vs device vs the learned
+            // split; --check gates hybrid ≥ best single lane on Series
+            let reps = if args.flag("smoke") { args.opt_usize("reps", 2) } else { reps };
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let workers = args.opt_usize("workers", cores);
+            let learn = args.opt_usize("learn", 4);
+            let out = args.opt("out").unwrap_or("BENCH_hybrid.json");
+            let tol = args.opt_f64("tol", 1.10);
+            harness::print_hybrid(reps, workers, learn, out, args.flag("check"), tol)?;
+        }
         "auto" => {
             let reg = Registry::load_default()?;
             let profile = DeviceProfile::by_name(args.opt("profile").unwrap_or("fermi"))
@@ -152,8 +171,10 @@ fn run(args: &Args) -> Result<()> {
             somd::somd::Target::Smp => "smp".into(),
             somd::somd::Target::Device(d) => d,
             // no history exists in a one-shot CLI run; `auto` defaults to
-            // the scheduler's exploration start (SMP)
-            somd::somd::Target::Auto => "smp".into(),
+            // the scheduler's exploration start (SMP), and a forced
+            // hybrid has no learned ratio yet either — use `somd bench
+            // hybrid` or the engine API for co-execution
+            somd::somd::Target::Auto | somd::somd::Target::Hybrid => "smp".into(),
         },
     };
     println!("somd run {bench} class={} scale={scale} backend={backend}", class.name());

@@ -36,6 +36,7 @@ impl Artifact {
         Ok(Artifact { info, exe })
     }
 
+    /// Manifest metadata of this artifact.
     pub fn info(&self) -> &ArtifactInfo {
         &self.info
     }
@@ -146,6 +147,17 @@ impl Artifact {
         } else {
             Ok(vec![HostTensor::from_literal(&lit)?])
         }
+    }
+
+    /// Download only rows `[lo, hi)` (leading dimension) of a non-tuple
+    /// device buffer — the hybrid lane's partial `get`: the SMP side owns
+    /// the rest of the index space, so fetching it would be wasted bus
+    /// traffic.  The PJRT CPU client has no strided-copy entry, so this
+    /// materializes the literal and slices host-side; the *accounted*
+    /// transfer (what the device cost model charges) is the slice only —
+    /// see [`DeviceSession::get_rows`](crate::device::DeviceSession::get_rows).
+    pub fn get_rows(buf: &xla::PjRtBuffer, lo: usize, hi: usize) -> Result<HostTensor> {
+        Self::get(buf)?.slice_rows(lo, hi)
     }
 }
 

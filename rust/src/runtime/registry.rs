@@ -15,15 +15,19 @@ use crate::util::json::Json;
 /// Shape+dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Element type.
     pub dtype: DType,
+    /// Row-major dims (empty for a scalar).
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Payload size in bytes.
     pub fn bytes(&self) -> usize {
         self.elems() * self.dtype.size_bytes()
     }
@@ -46,14 +50,20 @@ impl TensorSpec {
 /// Manifest entry for one AOT-compiled executable.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
+    /// Registry key (unique per manifest).
     pub name: String,
+    /// HLO-text file name, relative to the registry dir.
     pub file: String,
+    /// Input specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output specs, in result order.
     pub outputs: Vec<TensorSpec>,
+    /// Free-form manifest metadata (bench tag, problem sizes, …).
     pub meta: BTreeMap<String, Json>,
 }
 
 impl ArtifactInfo {
+    /// A numeric metadata value (e.g. `blocks`, `n`, `chunk`).
     pub fn meta_usize(&self, key: &str) -> Option<usize> {
         self.meta.get(key).and_then(Json::as_usize)
     }
@@ -63,6 +73,7 @@ impl ArtifactInfo {
 pub struct Registry {
     dir: PathBuf,
     infos: BTreeMap<String, ArtifactInfo>,
+    /// The workload scale the artifacts were lowered at (`aot.py --scale`).
     pub scale: f64,
     cache: RefCell<BTreeMap<String, Rc<Artifact>>>,
 }
@@ -117,10 +128,12 @@ impl Registry {
         Self::load(dir)
     }
 
+    /// Iterate the manifest's artifact names (sorted).
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.infos.keys().map(String::as_str)
     }
 
+    /// Manifest metadata for `name`.
     pub fn info(&self, name: &str) -> Result<&ArtifactInfo> {
         self.infos.get(name).ok_or_else(|| {
             anyhow!("artifact '{name}' not in manifest (have: {:?})", self.infos.keys())

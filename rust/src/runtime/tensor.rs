@@ -7,14 +7,20 @@ use anyhow::{anyhow, bail, Result};
 /// the paper's forced single precision on GPU; u32 carries IDEA words).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float (the GPU arithmetic type).
     F32,
+    /// 64-bit IEEE float (host-side substrate arithmetic).
     F64,
+    /// 32-bit signed integer (index arrays).
     S32,
+    /// 64-bit signed integer (manifest-only; no host tensor).
     S64,
+    /// 32-bit unsigned integer (IDEA words).
     U32,
 }
 
 impl DType {
+    /// Parse a manifest dtype tag (`"f32"`, `"u32"`, …).
     pub fn parse(tag: &str) -> Result<DType> {
         Ok(match tag {
             "f32" => DType::F32,
@@ -26,6 +32,7 @@ impl DType {
         })
     }
 
+    /// Bytes per element of this dtype.
     pub fn size_bytes(self) -> usize {
         match self {
             DType::F32 | DType::S32 | DType::U32 => 4,
@@ -34,45 +41,56 @@ impl DType {
     }
 }
 
-/// An owned host tensor (row-major).
+/// An owned host tensor (row-major): element payload + shape.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
+    /// f32 payload + shape.
     F32(Vec<f32>, Vec<usize>),
+    /// f64 payload + shape.
     F64(Vec<f64>, Vec<usize>),
+    /// i32 payload + shape.
     S32(Vec<i32>, Vec<usize>),
+    /// u32 payload + shape.
     U32(Vec<u32>, Vec<usize>),
 }
 
 impl HostTensor {
+    /// A rank-0 f32 scalar.
     pub fn scalar_f32(v: f32) -> Self {
         HostTensor::F32(vec![v], vec![])
     }
 
+    /// A rank-1 f32 vector.
     pub fn vec_f32(v: Vec<f32>) -> Self {
         let n = v.len();
         HostTensor::F32(v, vec![n])
     }
 
+    /// A rank-1 u32 vector.
     pub fn vec_u32(v: Vec<u32>) -> Self {
         let n = v.len();
         HostTensor::U32(v, vec![n])
     }
 
+    /// A rank-1 i32 vector.
     pub fn vec_s32(v: Vec<i32>) -> Self {
         let n = v.len();
         HostTensor::S32(v, vec![n])
     }
 
+    /// A rank-2 row-major f32 matrix.
     pub fn mat_f32(v: Vec<f32>, rows: usize, cols: usize) -> Self {
         assert_eq!(v.len(), rows * cols);
         HostTensor::F32(v, vec![rows, cols])
     }
 
+    /// A rank-2 row-major u32 matrix.
     pub fn mat_u32(v: Vec<u32>, rows: usize, cols: usize) -> Self {
         assert_eq!(v.len(), rows * cols);
         HostTensor::U32(v, vec![rows, cols])
     }
 
+    /// This tensor's element type.
     pub fn dtype(&self) -> DType {
         match self {
             HostTensor::F32(..) => DType::F32,
@@ -82,6 +100,7 @@ impl HostTensor {
         }
     }
 
+    /// This tensor's shape (row-major dims; empty for a scalar).
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32(_, s) | HostTensor::F64(_, s) | HostTensor::S32(_, s)
@@ -89,6 +108,7 @@ impl HostTensor {
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::F32(v, _) => v.len(),
@@ -98,8 +118,37 @@ impl HostTensor {
         }
     }
 
+    /// Whether the tensor holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Slice rows `[lo, hi)` along the leading dimension into an owned
+    /// tensor (the shape keeps its trailing dims; a rank-1 tensor slices
+    /// elements).  This is the host-side half of the device backend's
+    /// partial D2H download
+    /// ([`DeviceSession::get_rows`](crate::device::DeviceSession::get_rows)),
+    /// used by hybrid co-execution to fetch only the device's sub-range
+    /// of an output.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<HostTensor> {
+        let shape = self.shape();
+        if shape.is_empty() {
+            bail!("cannot row-slice a scalar tensor");
+        }
+        let rows = shape[0];
+        if lo > hi || hi > rows {
+            bail!("row slice [{lo}, {hi}) out of bounds for {rows} rows");
+        }
+        let per: usize = shape[1..].iter().product::<usize>().max(1);
+        let mut new_shape = shape.to_vec();
+        new_shape[0] = hi - lo;
+        let (a, b) = (lo * per, hi * per);
+        Ok(match self {
+            HostTensor::F32(v, _) => HostTensor::F32(v[a..b].to_vec(), new_shape),
+            HostTensor::F64(v, _) => HostTensor::F64(v[a..b].to_vec(), new_shape),
+            HostTensor::S32(v, _) => HostTensor::S32(v[a..b].to_vec(), new_shape),
+            HostTensor::U32(v, _) => HostTensor::U32(v[a..b].to_vec(), new_shape),
+        })
     }
 
     /// Payload size — the unit of the device transfer accounting.
@@ -107,6 +156,7 @@ impl HostTensor {
         self.len() * self.dtype().size_bytes()
     }
 
+    /// Borrow the payload as f32, erroring on other dtypes.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32(v, _) => Ok(v),
@@ -114,6 +164,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the payload as u32, erroring on other dtypes.
     pub fn as_u32(&self) -> Result<&[u32]> {
         match self {
             HostTensor::U32(v, _) => Ok(v),
@@ -121,6 +172,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the payload as i32, erroring on other dtypes.
     pub fn as_s32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::S32(v, _) => Ok(v),
@@ -201,5 +253,21 @@ mod tests {
     #[test]
     fn checksum_sums() {
         assert_eq!(HostTensor::vec_s32(vec![1, 2, 3]).checksum(), 6.0);
+    }
+
+    #[test]
+    fn slice_rows_matrix_and_vector() {
+        let m = HostTensor::mat_u32((0..12).collect(), 3, 4);
+        let s = m.slice_rows(1, 3).unwrap();
+        assert_eq!(s.shape(), &[2, 4]);
+        assert_eq!(s.as_u32().unwrap(), &[4, 5, 6, 7, 8, 9, 10, 11]);
+        let v = HostTensor::vec_f32(vec![0.0, 1.0, 2.0, 3.0]);
+        let s = v.slice_rows(2, 4).unwrap();
+        assert_eq!(s.shape(), &[2]);
+        assert_eq!(s.as_f32().unwrap(), &[2.0, 3.0]);
+        // degenerate and invalid slices
+        assert_eq!(v.slice_rows(1, 1).unwrap().len(), 0);
+        assert!(v.slice_rows(3, 5).is_err());
+        assert!(HostTensor::scalar_f32(1.0).slice_rows(0, 1).is_err());
     }
 }

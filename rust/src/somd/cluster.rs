@@ -18,8 +18,11 @@ use std::time::Duration;
 /// Point-to-point interconnect model: `t(bytes) = latency + bytes/bw`.
 #[derive(Debug, Clone, Copy)]
 pub struct NetworkProfile {
+    /// Interconnect name (report label).
     pub name: &'static str,
+    /// Per-message latency.
     pub latency: Duration,
+    /// Point-to-point bandwidth (bytes/s).
     pub bandwidth_bytes_per_sec: f64,
 }
 
@@ -42,6 +45,7 @@ impl NetworkProfile {
         }
     }
 
+    /// Modeled time to move `bytes` across one link.
     pub fn transfer_time(&self, bytes: usize) -> Duration {
         if bytes == 0 {
             return Duration::ZERO;
@@ -66,14 +70,20 @@ pub struct CommShape {
 /// Modeled timings for a cluster-wide invocation.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterModeled {
+    /// Node count.
     pub nodes: usize,
+    /// Scatter (distribution) time.
     pub scatter: Duration,
+    /// Intra-node compute makespan (measured, supplied by the caller).
     pub compute: Duration,
+    /// Hierarchical-reduction communication time.
     pub reduce_comm: Duration,
+    /// Total modeled invocation time.
     pub t_par: Duration,
 }
 
 impl ClusterModeled {
+    /// Modeled speedup over a sequential baseline.
     pub fn speedup_over(&self, t_seq: Duration) -> f64 {
         t_seq.as_secs_f64() / self.t_par.as_secs_f64()
     }

@@ -13,16 +13,24 @@ pub enum Target {
     Device(String),
     /// Let the runtime decide from recorded execution history (the
     /// version-selection loop the paper leaves to the runtime — resolved
-    /// per invocation by [`crate::somd::scheduler::Scheduler`]).
+    /// per invocation by [`crate::somd::scheduler::Scheduler`]).  For
+    /// methods with a hybrid spec this may resolve to [`Target::Hybrid`].
     Auto,
+    /// Co-execute on both lanes at once: the invocation's index space is
+    /// split between the SMP pool and the device at the scheduler's
+    /// learned ratio.  Reverts to SMP when the method has no hybrid spec
+    /// or no device lane is attached (§6 fallback discipline).
+    Hybrid,
 }
 
+/// Per-method `method:target` rules (paper §6), parsed from a rules file.
 #[derive(Debug, Clone, Default)]
 pub struct Rules {
     map: BTreeMap<String, Target>,
 }
 
 impl Rules {
+    /// A rule set with no entries: every method defaults to SMP.
     pub fn empty() -> Self {
         Self::default()
     }
@@ -41,6 +49,7 @@ impl Rules {
             let target = match target.trim() {
                 "smp" | "cpu" | "shared" => Target::Smp,
                 "auto" => Target::Auto,
+                "hybrid" => Target::Hybrid,
                 dev if !dev.is_empty() => Target::Device(dev.to_string()),
                 _ => return Err(format!("line {}: empty target", lineno + 1)),
             };
@@ -49,11 +58,13 @@ impl Rules {
         Ok(Self { map })
     }
 
+    /// Read and parse a rules file from disk.
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         Self::parse(&text)
     }
 
+    /// Set (or replace) the target for one method programmatically.
     pub fn set(&mut self, method: impl Into<String>, target: Target) {
         self.map.insert(method.into(), target);
     }
@@ -92,5 +103,11 @@ mod tests {
     fn parses_auto_target() {
         let r = Rules::parse("Series.coefficients:auto\n").unwrap();
         assert_eq!(r.target_for("Series.coefficients"), Target::Auto);
+    }
+
+    #[test]
+    fn parses_hybrid_target() {
+        let r = Rules::parse("Series.coefficients:hybrid  # co-execute\n").unwrap();
+        assert_eq!(r.target_for("Series.coefficients"), Target::Hybrid);
     }
 }

@@ -10,24 +10,30 @@
 /// Half-open index range `[lo, hi)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Range1 {
+    /// Inclusive lower bound.
     pub lo: usize,
+    /// Exclusive upper bound.
     pub hi: usize,
 }
 
 impl Range1 {
+    /// `[lo, hi)`; panics when `lo > hi`.
     pub fn new(lo: usize, hi: usize) -> Self {
         assert!(lo <= hi, "invalid range [{lo}, {hi})");
         Self { lo, hi }
     }
 
+    /// Number of indexes covered.
     pub fn len(&self) -> usize {
         self.hi - self.lo
     }
 
+    /// Whether the range covers no indexes.
     pub fn is_empty(&self) -> bool {
         self.lo == self.hi
     }
 
+    /// Iterate the covered indexes.
     pub fn iter(&self) -> std::ops::Range<usize> {
         self.lo..self.hi
     }
@@ -51,11 +57,14 @@ impl Range1 {
 /// visible to the MI (paper `view = <before, after>`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct View {
+    /// Visible indexes before the partition's lower bound.
     pub before: usize,
+    /// Visible indexes after the partition's upper bound.
     pub after: usize,
 }
 
 impl View {
+    /// A symmetric halo of `k` indexes on both sides.
     pub fn sym(k: usize) -> View {
         View { before: k, after: k }
     }
@@ -65,7 +74,9 @@ impl View {
 /// (block, block) matrix distribution of §3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Range2 {
+    /// The covered rows.
     pub rows: Range1,
+    /// The covered columns.
     pub cols: Range1,
 }
 
@@ -75,6 +86,7 @@ pub struct Range2 {
 /// array strategies it is an index range (copy-free), for user strategies
 /// (e.g. `TreeDist`) it may own data.
 pub trait Distribution<T: ?Sized>: Send + Sync {
+    /// The partition descriptor handed to each MI.
     type Part: Send;
 
     /// Split `value` into exactly `n` partitions (some possibly empty).

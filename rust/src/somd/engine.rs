@@ -2,7 +2,7 @@
 //! version-selection rules, the adaptive scheduler and the invocation
 //! entry points.
 //!
-//! Two execution lanes serve asynchronous submissions:
+//! Three execution lanes serve asynchronous submissions:
 //!
 //! * **SMP lane** — invocations compete for the [`WorkerPool`] exactly as
 //!   in the paper's runtime;
@@ -12,21 +12,30 @@
 //!   submissions to the same profile reuse the warm session instead of
 //!   re-creating registry/session state per call (observable through
 //!   [`DeviceCounters`]).
+//! * **hybrid lane** — one invocation *forked* across both of the above:
+//!   the index space splits at the scheduler's learned ratio, the SMP
+//!   share runs as a pool job while the device share queues on the
+//!   master thread, and a completion latch merges the partial results
+//!   through the method's reduction when the second side finishes
+//!   (neither side ever blocks a worker waiting for the other — that
+//!   would deadlock against the device lane's pool-backed kernels).
 //!
-//! Rules resolve per method as `smp | device(<profile>) | auto`; `auto`
-//! defers to the [`Scheduler`]'s execution-history cost model.
+//! Rules resolve per method as `smp | device(<profile>) | hybrid | auto`;
+//! `auto` defers to the [`Scheduler`]'s execution-history cost model.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use super::config::{Rules, Target};
+use super::distribution::Range1;
 use super::master::SomdMethod;
+use super::partition::split_fraction;
 use super::pool::{JobHandle, WorkerPool};
 use super::scheduler::{Choice, Scheduler, SchedulerConfig};
-use crate::backend::{Executed, HeteroMethod};
+use crate::backend::{DeviceShare, Executed, HeteroMethod, HybridMerge};
 use crate::device::{DeviceProfile, DeviceSession};
 use crate::runtime::Registry;
 
@@ -73,6 +82,7 @@ pub struct DeviceCtx<'r> {
 }
 
 impl<'r> DeviceCtx<'r> {
+    /// The artifact registry owned by this master thread.
     pub fn registry(&self) -> &'r Registry {
         self.registry
     }
@@ -174,9 +184,139 @@ fn master_loop(
 }
 
 // ---------------------------------------------------------------------------
+// Hybrid fork/join (completion latch)
+// ---------------------------------------------------------------------------
+
+/// The SMP half's outcome: partials + execute seconds (or a panic).
+type SmpHalf<R> = std::thread::Result<(Vec<R>, f64)>;
+/// The device half's outcome: success, error, or panic.
+type DevHalf<R> = std::thread::Result<anyhow::Result<DeviceShare<R>>>;
+/// What the latch finally sends to the caller's handle.
+type HybridOutcome<R> = std::thread::Result<anyhow::Result<(R, Executed)>>;
+
+/// The two result slots of one forked invocation.  Whichever side fills
+/// its slot *second* performs the merge — a count-down latch, not a
+/// blocking join, so no pool worker or master-thread slot ever parks
+/// waiting for the other lane.
+struct HybridSlots<R> {
+    smp: Option<SmpHalf<R>>,
+    dev: Option<DevHalf<R>>,
+}
+
+/// Shared state of one in-flight hybrid invocation (held by both halves'
+/// jobs until the latch completes).
+struct HybridInFlight<I: ?Sized, P, E, R> {
+    method: Arc<HeteroMethod<I, P, E, R>>,
+    input: Arc<I>,
+    sched: Arc<Scheduler>,
+    profile: String,
+    smp_span: Range1,
+    dev_span: Range1,
+    fraction: f64,
+    smp_parts: usize,
+    tx: mpsc::Sender<HybridOutcome<R>>,
+    slots: Mutex<HybridSlots<R>>,
+}
+
+impl<I, P, E, R> HybridInFlight<I, P, E, R>
+where
+    I: ?Sized + Sync,
+    P: Send + Sync,
+    E: Sync,
+    R: Send,
+{
+    /// The SMP half: compute the leading share's partials on this pool
+    /// worker (fanning out scoped MIs as a plain invocation would).
+    fn run_smp_half(&self) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let t0 = Instant::now();
+            let partials =
+                self.method.hybrid_smp_partials(&self.input, self.smp_span, self.smp_parts);
+            (partials, t0.elapsed().as_secs_f64())
+        }));
+        let both = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.smp = Some(result);
+            slots.dev.is_some()
+        };
+        if both {
+            self.finish();
+        }
+    }
+
+    /// The device half: run the trailing share on the master thread's
+    /// warm session, clocked after dequeue (queue wait excluded).
+    fn run_device_half(&self, ctx: &mut DeviceCtx<'_>) {
+        let result: DevHalf<R> = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let session = ctx.session(&self.profile)?;
+            let before = session.stats();
+            let t0 = Instant::now();
+            let partial = self.method.hybrid_device_partial(session, &self.input, self.dev_span)?;
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = session.stats().delta_since(&before);
+            let profile = session.profile().name;
+            Ok(DeviceShare { partial, secs, stats, profile })
+        }));
+        let both = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.dev = Some(result);
+            slots.smp.is_some()
+        };
+        if both {
+            self.finish();
+        }
+    }
+
+    /// Latch release: merge (or fall back), record history, send.
+    fn finish(&self) {
+        let (smp, dev) = {
+            let mut slots = self.slots.lock().unwrap();
+            (
+                slots.smp.take().expect("smp half completed"),
+                slots.dev.take().expect("device half completed"),
+            )
+        };
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.merge(smp, dev)));
+        let _ = match outcome {
+            Ok(msg) => self.tx.send(msg),
+            Err(panic) => self.tx.send(Err(panic)),
+        };
+    }
+
+    fn merge(&self, smp: SmpHalf<R>, dev: DevHalf<R>) -> HybridOutcome<R> {
+        let smp = match smp {
+            Ok(v) => v,
+            // the SMP half panicked: propagate the payload to join()
+            Err(p) => return Err(p),
+        };
+        // a panicked device half folds into the failure path of the
+        // shared merge (the SMP side covers its span; the penalty steers
+        // `auto` away).  When the device half finished last, that cover
+        // runs on the master thread — it stalls the device lane for one
+        // share's worth of CPU work, an accepted cost of the failure path.
+        let dev = match dev {
+            Ok(r) => r,
+            Err(_panic) => Err(anyhow::anyhow!("hybrid device half panicked")),
+        };
+        let m = HybridMerge {
+            sched: &self.sched,
+            input: &self.input,
+            smp_span: self.smp_span,
+            dev_span: self.dev_span,
+            fraction: self.fraction,
+            nparts: self.smp_parts,
+        };
+        Ok(Ok(self.method.finish_hybrid(m, smp, dev)))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Engine
 // ---------------------------------------------------------------------------
 
+/// The runtime engine: worker pool + rules + scheduler + optional device
+/// master (see the module docs for the three lanes).
 pub struct Engine {
     workers: usize,
     rules: Rules,
@@ -195,6 +335,7 @@ impl Engine {
         Self::with_rules(workers, Rules::empty())
     }
 
+    /// An engine with explicit version-selection rules (§6).
     pub fn with_rules(workers: usize, rules: Rules) -> Self {
         let workers = workers.max(1);
         Self {
@@ -215,7 +356,8 @@ impl Engine {
 
     /// Attach the device lane: spawns the master thread, which loads the
     /// artifact registry from `artifacts_dir` and keeps warm sessions.
-    /// `auto_profile` is the device profile `Target::Auto` resolves to.
+    /// `auto_profile` is the device profile `Target::Auto` (and the
+    /// hybrid lane) resolves to.
     pub fn with_device_master(
         mut self,
         artifacts_dir: impl Into<PathBuf>,
@@ -244,16 +386,19 @@ impl Engine {
         Ok(self)
     }
 
-    /// Replace the scheduler (e.g. restored from persisted JSON history).
+    /// Replace the scheduler (e.g. restored from persisted JSON history,
+    /// or configured with non-default hybrid tunables).
     pub fn with_scheduler(mut self, scheduler: Scheduler) -> Self {
         self.scheduler = Arc::new(scheduler);
         self
     }
 
+    /// The default MI count per invocation.
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    /// The engine's version-selection rules.
     pub fn rules(&self) -> &Rules {
         &self.rules
     }
@@ -268,7 +413,8 @@ impl Engine {
         self.device.is_some()
     }
 
-    /// The profile `Target::Auto` resolves to when the device side wins.
+    /// The profile `Target::Auto` and the hybrid lane resolve to when the
+    /// device side participates.
     pub fn auto_profile(&self) -> &str {
         &self.auto_profile
     }
@@ -289,8 +435,18 @@ impl Engine {
     /// then — for `auto` — the history cost model.  `applicable(profile)`
     /// reports whether a device version could actually run on the named
     /// profile in the *caller's* context (submission lane vs caller-held
-    /// registry) — the only part that differs between entry points.
-    pub fn resolve_target(&self, method: &str, applicable: &dyn Fn(&str) -> bool) -> Target {
+    /// registry) and `hybrid_applicable` whether the method could
+    /// co-execute there (hybrid spec present + registry/lane reachable) —
+    /// the only parts that differ between entry points.  `auto` considers
+    /// the hybrid lane only when both flags hold; a forced
+    /// `Target::Hybrid` reverts to SMP when inapplicable, the same
+    /// discipline §6 applies to inapplicable device preferences.
+    pub fn resolve_target(
+        &self,
+        method: &str,
+        applicable: &dyn Fn(&str) -> bool,
+        hybrid_applicable: bool,
+    ) -> Target {
         match self.rules.target_for(method) {
             Target::Device(name) => {
                 if applicable(&name) {
@@ -299,11 +455,26 @@ impl Engine {
                     Target::Smp
                 }
             }
+            Target::Hybrid => {
+                if hybrid_applicable {
+                    Target::Hybrid
+                } else {
+                    Target::Smp
+                }
+            }
             Target::Auto => {
                 if applicable(&self.auto_profile) {
-                    match self.scheduler.decide(method) {
-                        Choice::Device => Target::Device(self.auto_profile.clone()),
-                        Choice::Smp => Target::Smp,
+                    if hybrid_applicable {
+                        match self.scheduler.decide_hybrid(method) {
+                            Choice::Device => Target::Device(self.auto_profile.clone()),
+                            Choice::Smp => Target::Smp,
+                            Choice::Hybrid { .. } => Target::Hybrid,
+                        }
+                    } else {
+                        match self.scheduler.decide(method) {
+                            Choice::Device => Target::Device(self.auto_profile.clone()),
+                            _ => Target::Smp,
+                        }
                     }
                 } else {
                     Target::Smp
@@ -313,13 +484,42 @@ impl Engine {
         }
     }
 
-    /// Submission-time resolution against the engine's own device lane.
+    /// Submission-time resolution against the engine's own device lane,
+    /// for methods without a hybrid spec (kept for the plain two-lane
+    /// callers and tests; [`Engine::submit_hetero`] resolves with the
+    /// method's full capability set).
     pub fn resolve_submit(&self, method: &str, has_device_version: bool) -> Target {
-        self.resolve_target(method, &|profile: &str| {
-            has_device_version
-                && self.device.is_some()
-                && DeviceProfile::by_name(profile).is_some()
-        })
+        self.resolve_target(
+            method,
+            &|profile: &str| {
+                has_device_version
+                    && self.device.is_some()
+                    && DeviceProfile::by_name(profile).is_some()
+            },
+            false,
+        )
+    }
+
+    /// Full submission-time resolution for a [`HeteroMethod`].
+    fn resolve_for_submit<I, P, E, R>(&self, method: &HeteroMethod<I, P, E, R>) -> Target
+    where
+        I: ?Sized + Sync,
+        P: Send + Sync,
+        E: Sync,
+        R: Send,
+    {
+        let hybrid_ok = method.has_hybrid_version()
+            && self.device.is_some()
+            && DeviceProfile::by_name(&self.auto_profile).is_some();
+        self.resolve_target(
+            method.name(),
+            &|profile: &str| {
+                method.has_device_version()
+                    && self.device.is_some()
+                    && DeviceProfile::by_name(profile).is_some()
+            },
+            hybrid_ok,
+        )
     }
 
     /// Synchronous SOMD invocation with the engine's default MI count.
@@ -366,8 +566,38 @@ impl Engine {
 
     /// Asynchronous *multi-version* submission: resolves the target at
     /// submission time (rules → applicability → history for `auto`),
-    /// queues device work on the master thread and SMP work on the pool,
-    /// and feeds observed timings back into the scheduler history.
+    /// queues device work on the master thread, SMP work on the pool, and
+    /// hybrid work on *both* (forked at the learned split ratio, joined
+    /// by a completion latch), and feeds observed timings back into the
+    /// scheduler history.
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use std::sync::Arc;
+    /// use somd::backend::{Executed, HeteroMethod};
+    /// use somd::somd::partition::Block1D;
+    /// use somd::somd::reduction::Assemble;
+    /// use somd::somd::{Engine, Rules, SomdMethod, Target};
+    ///
+    /// let mut rules = Rules::empty();
+    /// rules.set("VecAdd.add", Target::Auto);
+    /// let engine = Engine::with_rules(4, rules)
+    ///     .with_device_master("artifacts", "fermi")?;
+    ///
+    /// let method = Arc::new(HeteroMethod::smp_only(SomdMethod::new(
+    ///     "VecAdd.add",
+    ///     |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+    ///     |_, _| (),
+    ///     |inp, p, _, _| p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>(),
+    ///     Assemble,
+    /// )));
+    /// let input = Arc::new((vec![1.0f32; 1024], vec![2.0f32; 1024]));
+    /// let (out, how) = engine.submit_hetero(method, input).join()?;
+    /// assert_eq!(out[0], 3.0);
+    /// assert!(matches!(how, Executed::Smp { .. } | Executed::Device { .. }));
+    /// # anyhow::Ok(())
+    /// ```
     pub fn submit_hetero<I, P, E, R>(
         &self,
         method: Arc<HeteroMethod<I, P, E, R>>,
@@ -379,7 +609,7 @@ impl Engine {
         E: Sync + 'static,
         R: Send + 'static,
     {
-        match self.resolve_submit(method.name(), method.has_device_version()) {
+        match self.resolve_for_submit(method.as_ref()) {
             Target::Device(profile) => {
                 let sched = self.scheduler.clone();
                 let (tx, handle) = JobHandle::pair();
@@ -392,18 +622,86 @@ impl Engine {
                 self.device.as_ref().expect("resolved device lane").submit(job);
                 handle
             }
+            Target::Hybrid => self.submit_hybrid(method, input),
             // Auto resolves to Smp before reaching here when inapplicable
-            _ => {
-                let n = self.workers;
-                let sched = self.scheduler.clone();
-                self.pool.submit(move || {
-                    let t0 = Instant::now();
-                    let r = method.smp.invoke(&input, n);
-                    sched.record_smp(method.name(), t0.elapsed());
-                    Ok((r, Executed::Smp { partitions: n }))
-                })
-            }
+            _ => self.submit_smp_full(method, input, false),
         }
+    }
+
+    /// The pure-SMP submission path.  `hybrid_degraded` marks a hybrid
+    /// resolution whose device share underflowed the minimum chunk: the
+    /// wall is then also recorded as a (degraded) hybrid sample so the
+    /// scheduler's hybrid exploration completes instead of re-resolving
+    /// hybrid forever on inputs too small to split.
+    fn submit_smp_full<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        input: Arc<I>,
+        hybrid_degraded: bool,
+    ) -> JobHandle<anyhow::Result<(R, Executed)>>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        let n = self.workers;
+        let sched = self.scheduler.clone();
+        self.pool.submit(move || {
+            let t0 = Instant::now();
+            let r = method.smp.invoke(&input, n);
+            let wall = t0.elapsed();
+            sched.record_smp(method.name(), wall);
+            if hybrid_degraded {
+                sched.record_hybrid_degraded(method.name(), wall);
+            }
+            Ok((r, Executed::Smp { partitions: n }))
+        })
+    }
+
+    /// Fork one invocation across both lanes (see the module docs): the
+    /// SMP share becomes a pool job, the device share a master-thread
+    /// job, and whichever finishes second releases the completion latch
+    /// that merges the partials and resolves the caller's handle.
+    fn submit_hybrid<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        input: Arc<I>,
+    ) -> JobHandle<anyhow::Result<(R, Executed)>>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        let total = method.hybrid_items(&input);
+        let fraction = self.scheduler.hybrid_fraction(method.name());
+        let (smp_span, dev_span) = split_fraction(total, fraction);
+        if dev_span.is_empty() || dev_span.len() < self.scheduler.config().min_device_items {
+            // the device share underflows the minimum chunk: co-execution
+            // would be pure overhead, run the whole invocation on SMP
+            return self.submit_smp_full(method, input, true);
+        }
+        let (tx, handle) = JobHandle::pair();
+        let shared = Arc::new(HybridInFlight {
+            method,
+            input,
+            sched: self.scheduler.clone(),
+            profile: self.auto_profile.clone(),
+            smp_span,
+            dev_span,
+            fraction,
+            smp_parts: self.workers,
+            tx,
+            slots: Mutex::new(HybridSlots { smp: None, dev: None }),
+        });
+        let dev_shared = shared.clone();
+        let job: DeviceJob = Box::new(move |ctx: &mut DeviceCtx<'_>| {
+            dev_shared.run_device_half(ctx);
+        });
+        self.device.as_ref().expect("resolved hybrid lane").submit(job);
+        self.pool.submit(move || shared.run_smp_half());
+        handle
     }
 }
 
@@ -442,12 +740,14 @@ where
     Ok((r, Executed::Device { profile: profile_name, stats }))
 }
 
+/// Builder for a synchronous invocation with an explicit MI count.
 pub struct InvokeWith<'a> {
     _engine: &'a Engine,
     nparts: usize,
 }
 
 impl InvokeWith<'_> {
+    /// Invoke `method` with the configured MI count.
     pub fn call<I, P, E, R>(&self, method: &SomdMethod<I, P, E, R>, input: &I) -> R
     where
         I: ?Sized + Sync,
@@ -527,6 +827,15 @@ mod tests {
         let e = Engine::with_rules(2, rules);
         assert_eq!(e.resolve_submit("sum", true), Target::Smp);
         assert_eq!(e.resolve_submit("sum", false), Target::Smp);
+    }
+
+    #[test]
+    fn hybrid_rule_without_device_lane_resolves_to_smp() {
+        let mut rules = Rules::empty();
+        rules.set("sum", Target::Hybrid);
+        let e = Engine::with_rules(2, rules);
+        // no device master: even a hybrid-capable method reverts to SMP
+        assert_eq!(e.resolve_target("sum", &|_| false, false), Target::Smp);
     }
 
     #[test]

@@ -18,12 +18,14 @@ use std::sync::Mutex;
 use super::phaser::Phaser;
 use super::reduction::Reduction;
 
+/// The per-invocation all-reduce rendezvous (one slot row per MI).
 pub struct Exchange {
     slots: Vec<Mutex<HashMap<u64, Box<dyn Any + Send>>>>,
     phaser: Phaser,
 }
 
 impl Exchange {
+    /// An exchange for `parties` MIs.
     pub fn new(parties: usize) -> Self {
         Self {
             slots: (0..parties).map(|_| Mutex::new(HashMap::new())).collect(),
@@ -31,6 +33,7 @@ impl Exchange {
         }
     }
 
+    /// Registered MI count.
     pub fn parties(&self) -> usize {
         self.slots.len()
     }

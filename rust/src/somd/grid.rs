@@ -29,29 +29,35 @@ unsafe impl Sync for SharedGrid {}
 unsafe impl Send for SharedGrid {}
 
 impl SharedGrid {
+    /// A `rows x cols` grid filled with `init`.
     pub fn new(rows: usize, cols: usize, init: f64) -> Self {
         Self { rows, cols, data: (0..rows * cols).map(|_| UnsafeCell::new(init)).collect() }
     }
 
+    /// A grid adopting `data` (row-major, length must match).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Self { rows, cols, data: data.into_iter().map(UnsafeCell::new).collect() }
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Read one element (fenced by the SOMD sync contract).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f64 {
         debug_assert!(r < self.rows && c < self.cols);
         unsafe { *self.data.get_unchecked(r * self.cols + c).get() }
     }
 
+    /// Write one element the caller's MI owns for this phase.
     #[inline]
     pub fn set(&self, r: usize, c: usize, v: f64) {
         debug_assert!(r < self.rows && c < self.cols);
@@ -99,16 +105,19 @@ pub struct DoubleGrid {
 }
 
 impl DoubleGrid {
+    /// Both planes initialized from `data` (row-major).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         let a = SharedGrid::from_vec(rows, cols, data.clone());
         let b = SharedGrid::from_vec(rows, cols, data);
         Self { planes: [a, b] }
     }
 
+    /// The plane read during iteration `iter`.
     pub fn src(&self, iter: usize) -> &SharedGrid {
         &self.planes[iter % 2]
     }
 
+    /// The plane written during iteration `iter`.
     pub fn dst(&self, iter: usize) -> &SharedGrid {
         &self.planes[(iter + 1) % 2]
     }

@@ -72,6 +72,8 @@ pub struct SomdMethod<I: ?Sized, P, E, R> {
 }
 
 impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> SomdMethod<I, P, E, R> {
+    /// Assemble a method from its name, `dist` strategy, environment
+    /// constructor, MI body and `reduce` strategy.
     pub fn new(
         name: impl Into<String>,
         partition: impl Fn(&I, usize) -> Vec<P> + Send + Sync + 'static,
@@ -88,6 +90,7 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> SomdMethod<I, P, E, R> 
         }
     }
 
+    /// The method's rules-file name.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -13,7 +13,7 @@
 //! | Elina runtime + version rules (§6) | [`engine`], [`config`] |
 //! | automatic version selection (§6's open loop) | [`scheduler`] |
 //!
-//! # Rules grammar (§6 + the `auto` extension)
+//! # Rules grammar (§6 + the `auto`/`hybrid` extensions)
 //!
 //! A rules file holds one `Class.method:target` line per method
 //! (`#` comments allowed).  Targets:
@@ -21,11 +21,18 @@
 //! * `smp` (also `cpu`, `shared`) — the shared-memory pool (default);
 //! * a device profile name (`fermi`, `geforce320m`, `passthrough`) —
 //!   offload, reverting to SMP when inapplicable;
+//! * `hybrid` — co-execute: split one invocation's index space between
+//!   the SMP pool and the device at the scheduler's learned
+//!   throughput-proportional ratio (reverting to SMP when the method has
+//!   no hybrid spec, no device lane is attached, or the device share
+//!   would underflow the minimum chunk);
 //! * `auto` — let the runtime decide per invocation from recorded
 //!   execution history ([`scheduler::Scheduler`]): SMP wall times vs
-//!   *measured* device execute times (queue wait excluded).  Transfer-
-//!   heavy methods (Crypt-shaped) converge to SMP, compute-dense ones
-//!   (Series-shaped) to the device — the §7.3 findings, automated.
+//!   *measured* device execute times (queue wait excluded) vs hybrid
+//!   wall times for co-execution-capable methods.  Transfer-heavy
+//!   methods (Crypt-shaped) converge to SMP, compute-dense ones
+//!   (Series-shaped) to the device or — when neither lane alone wins —
+//!   to a hybrid split; the §7.3 findings, automated.
 
 pub mod cluster;
 pub mod config;
@@ -46,10 +53,13 @@ pub mod tree;
 pub use config::{Rules, Target};
 pub use distribution::{Distribution, Range1, Range2, View};
 pub use engine::{DeviceCountersSnapshot, Engine};
-pub use scheduler::{Choice, Scheduler, SchedulerConfig};
+pub use scheduler::{Choice, HybridSample, Scheduler, SchedulerConfig};
 pub use master::{run_mis, SomdMethod};
 pub use mi::MiCtx;
-pub use partition::{Block1D, Block2D, BlockPart, Block2Part, RowDisjoint, Rows1D, SparsePart, TreeDist};
+pub use partition::{
+    split_fraction, Block1D, Block2D, BlockPart, Block2Part, RowDisjoint, Rows1D, SparsePart,
+    TreeDist,
+};
 pub use phaser::Phaser;
 pub use reduction::{Assemble, FnReduce, Reduction};
 pub use shared::Shared;

@@ -8,17 +8,60 @@
 //!   nonzero triplet stream so every partition covers a disjoint row range
 //!   (the ~50-line strategy borrowed from JavaGrande, §7.1).
 //! * [`TreeDist`] — Listing 12: evenly partition a linked tree across MIs.
+//!
+//! Since the hybrid co-execution PR every array partitioner also has a
+//! **ratio-weighted** form: [`split_fraction`] cuts one index space into
+//! an SMP head and a device tail at the scheduler's learned ratio, and
+//! [`Block1D::ranges_in`] / [`Block2D::parts_in`] /
+//! [`RowDisjoint::split_fraction`] partition *within* such a sub-span so
+//! the SMP share still fans out across MIs exactly as a whole invocation
+//! would.
 
 use super::distribution::{index_ranges, near_square_grid, Distribution, Range1, Range2, View};
 use crate::somd::tree::Tree;
 
+/// Cut `[0, len)` into an SMP head and a device tail, handing the tail
+/// `device_fraction` of the items (rounded; clamped to `[0, 1]`).  The
+/// head/tail orientation is fixed so hybrid partial results concatenate
+/// in rank order through the ordinary array-assembly reduction.
+///
+/// # Examples
+///
+/// ```
+/// use somd::somd::partition::split_fraction;
+/// let (smp, dev) = split_fraction(1000, 0.25);
+/// assert_eq!((smp.lo, smp.hi), (0, 750));
+/// assert_eq!((dev.lo, dev.hi), (750, 1000));
+/// // degenerate splits are valid: 0.0 = pure SMP, 1.0 = pure device
+/// assert!(split_fraction(1000, 0.0).1.is_empty());
+/// assert!(split_fraction(1000, 1.0).0.is_empty());
+/// ```
+pub fn split_fraction(len: usize, device_fraction: f64) -> (Range1, Range1) {
+    let f = if device_fraction.is_finite() { device_fraction.clamp(0.0, 1.0) } else { 0.0 };
+    let dev = (((len as f64) * f).round() as usize).min(len);
+    let cut = len - dev;
+    (Range1::new(0, cut), Range1::new(cut, len))
+}
+
 /// Block partitioning of `len` indexes (copy-free).
+///
+/// # Examples
+///
+/// ```
+/// use somd::somd::partition::Block1D;
+/// let parts = Block1D::new().ranges(10, 3);
+/// assert_eq!(parts.len(), 3);
+/// assert_eq!((parts[0].own.lo, parts[0].own.hi), (0, 4));
+/// assert_eq!(parts.last().unwrap().own.hi, 10);
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct Block1D {
+    /// Halo view widening each partition's readable window.
     pub view: View,
 }
 
 impl Block1D {
+    /// The plain block strategy (no halo).
     pub fn new() -> Self {
         Self::default()
     }
@@ -28,10 +71,25 @@ impl Block1D {
         Self { view }
     }
 
+    /// Split `[0, len)` into `n` contiguous owned ranges plus their
+    /// halo-widened readable windows.
     pub fn ranges(&self, len: usize, n: usize) -> Vec<BlockPart> {
-        index_ranges(len, n)
+        self.ranges_in(Range1::new(0, len), len, n)
+    }
+
+    /// Ratio-weighted variant: partition only the sub-span `span` of a
+    /// logical `[0, len)` index space into `n` ranges.  Owned ranges
+    /// stay inside `span`; readable windows may reach outside it (but
+    /// never outside `[0, len)`) — an MI at a hybrid cut boundary still
+    /// sees its halo exactly as in a whole-space invocation.
+    pub fn ranges_in(&self, span: Range1, len: usize, n: usize) -> Vec<BlockPart> {
+        assert!(span.hi <= len, "span {span:?} exceeds index space [0, {len})");
+        index_ranges(span.len(), n)
             .into_iter()
-            .map(|own| BlockPart { own, readable: own.with_view(self.view, len) })
+            .map(|r| {
+                let own = Range1::new(span.lo + r.lo, span.lo + r.hi);
+                BlockPart { own, readable: own.with_view(self.view, len) }
+            })
             .collect()
     }
 }
@@ -40,7 +98,9 @@ impl Block1D {
 /// window it may read (paper Figure 4a).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockPart {
+    /// Indexes this MI owns (writes).
     pub own: Range1,
+    /// Halo-widened window this MI may read.
     pub readable: Range1,
 }
 
@@ -53,30 +113,57 @@ impl Distribution<usize> for Block1D {
 }
 
 /// (block, block) partitioning of an `rows x cols` matrix.
+///
+/// # Examples
+///
+/// ```
+/// use somd::somd::partition::Block2D;
+/// let parts = Block2D::new().parts(10, 12, 4); // 2x2 near-square grid
+/// let area: usize = parts.iter().map(|p| p.own.rows.len() * p.own.cols.len()).sum();
+/// assert_eq!(area, 120);
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct Block2D {
+    /// Halo view widening each partition's readable block.
     pub view: View,
 }
 
 /// A 2-D partition with owned block and halo-widened readable block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Block2Part {
+    /// The (rows x cols) block this MI owns.
     pub own: Range2,
+    /// The halo-widened block this MI may read.
     pub readable: Range2,
 }
 
 impl Block2D {
+    /// The plain (block, block) strategy (no halo).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// `dist(view = <b,a>,<b,a>)`
     pub fn with_view(view: View) -> Self {
         Self { view }
     }
 
+    /// Split an `rows x cols` matrix into `n` near-square blocks.
     pub fn parts(&self, rows: usize, cols: usize, n: usize) -> Vec<Block2Part> {
+        self.parts_in(Range1::new(0, rows), rows, cols, n)
+    }
+
+    /// Ratio-weighted variant: partition only the row sub-span
+    /// `row_span` (hybrid co-execution splits matrices by rows, so the
+    /// two lanes' shares stay contiguous in memory); columns still split
+    /// near-square within the span.
+    pub fn parts_in(&self, row_span: Range1, rows: usize, cols: usize, n: usize) -> Vec<Block2Part> {
+        assert!(row_span.hi <= rows, "row span {row_span:?} exceeds {rows} rows");
         let (pr, pc) = near_square_grid(n);
-        let rranges = index_ranges(rows, pr);
+        let rranges: Vec<Range1> = index_ranges(row_span.len(), pr)
+            .into_iter()
+            .map(|r| Range1::new(row_span.lo + r.lo, row_span.lo + r.hi))
+            .collect();
         let cranges = index_ranges(cols, pc);
         let mut out = Vec::with_capacity(n);
         for r in &rranges {
@@ -107,10 +194,12 @@ impl Distribution<(usize, usize)> for Block2D {
 /// comparison point for the 1D-vs-2D ablation.
 #[derive(Debug, Clone, Default)]
 pub struct Rows1D {
+    /// Halo view widening each partition's readable rows.
     pub view: View,
 }
 
 impl Rows1D {
+    /// Split `rows` full-width row bands across `n` MIs.
     pub fn parts(&self, rows: usize, cols: usize, n: usize) -> Vec<Block2Part> {
         index_ranges(rows, n)
             .into_iter()
@@ -128,13 +217,27 @@ impl Rows1D {
 /// SparseMatMult's strategy: partition the nnz triplet stream (sorted by
 /// row) into `n` chunks whose boundaries never split a row, so MIs write
 /// disjoint ranges of the result vector.
+///
+/// # Examples
+///
+/// ```
+/// use somd::somd::partition::RowDisjoint;
+/// // rows: 0,0,0,1,1,2,3,3,3,3 — boundaries land on row edges
+/// let row = [0u32, 0, 0, 1, 1, 2, 3, 3, 3, 3];
+/// let parts = RowDisjoint.parts(&row, 4, 3);
+/// assert_eq!(parts.len(), 3);
+/// assert_eq!(parts[0].nnz.lo, 0);
+/// assert_eq!(parts.last().unwrap().nnz.hi, row.len());
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct RowDisjoint;
 
 /// Partition descriptor: nnz range plus the (disjoint) row range it feeds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SparsePart {
+    /// Range of the nonzero triplet stream this MI processes.
     pub nnz: Range1,
+    /// The disjoint row range those nonzeros feed.
     pub rows: Range1,
 }
 
@@ -155,15 +258,41 @@ impl RowDisjoint {
                     hi += 1;
                 }
             }
-            let row_lo = if lo < nnz { row[lo] as usize } else { n_rows };
-            let row_hi = if hi > lo { row[hi - 1] as usize + 1 } else { row_lo };
-            out.push(SparsePart {
-                nnz: Range1::new(lo, hi),
-                rows: Range1::new(row_lo.min(row_hi), row_hi),
-            });
+            out.push(Self::part_for(row, n_rows, lo, hi));
             lo = hi;
         }
         out
+    }
+
+    /// Ratio-weighted two-way split for hybrid co-execution: cut the nnz
+    /// stream at the row boundary nearest to `device_fraction` of the
+    /// nonzeros, returning the SMP head and device tail.  Both sides keep
+    /// the row-disjointness invariant, so their partial `y` contributions
+    /// touch disjoint result rows and merge by concatenation.
+    pub fn split_fraction(
+        &self,
+        row: &[u32],
+        n_rows: usize,
+        device_fraction: f64,
+    ) -> (SparsePart, SparsePart) {
+        let nnz = row.len();
+        let (head, _tail) = split_fraction(nnz, device_fraction);
+        let mut cut = head.hi;
+        // never split a row across the lanes
+        while cut > 0 && cut < nnz && row[cut] == row[cut - 1] {
+            cut += 1;
+        }
+        (Self::part_for(row, n_rows, 0, cut), Self::part_for(row, n_rows, cut, nnz))
+    }
+
+    fn part_for(row: &[u32], n_rows: usize, lo: usize, hi: usize) -> SparsePart {
+        let nnz = row.len();
+        let row_lo = if lo < nnz { row[lo] as usize } else { n_rows };
+        let row_hi = if hi > lo { row[hi - 1] as usize + 1 } else { row_lo };
+        SparsePart {
+            nnz: Range1::new(lo, hi),
+            rows: Range1::new(row_lo.min(row_hi), row_hi),
+        }
     }
 }
 
@@ -177,6 +306,7 @@ pub struct TreeDist {
 }
 
 impl TreeDist {
+    /// Split `tree` into the top copy plus the depth-`levels` subtrees.
     pub fn parts<A: Clone + Send + Sync>(&self, tree: &Tree<A>, n: usize) -> Vec<Tree<A>> {
         let levels = self.levels.unwrap_or_else(|| {
             let mut l = 0;
@@ -273,5 +403,74 @@ mod tests {
         assert_eq!(parts.len(), 5);
         let total: usize = parts.iter().map(Tree::count).sum();
         assert_eq!(total, 63);
+    }
+
+    // -- ratio-weighted forms (hybrid co-execution) -------------------------
+
+    #[test]
+    fn split_fraction_covers_and_clamps() {
+        for len in [0usize, 1, 10, 1001] {
+            for f in [-0.5, 0.0, 0.25, 0.5, 0.9, 1.0, 2.0, f64::NAN] {
+                let (smp, dev) = split_fraction(len, f);
+                assert_eq!(smp.lo, 0);
+                assert_eq!(smp.hi, dev.lo);
+                assert_eq!(dev.hi, len);
+            }
+        }
+        let (smp, dev) = split_fraction(100, 0.3);
+        assert_eq!(dev.len(), 30);
+        assert_eq!(smp.len(), 70);
+    }
+
+    #[test]
+    fn ranges_in_refines_the_subspan() {
+        let span = Range1::new(300, 701);
+        let parts = Block1D::new().ranges_in(span, 1000, 4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].own.lo, 300);
+        assert_eq!(parts.last().unwrap().own.hi, 701);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].own.hi, w[1].own.lo);
+        }
+        let sizes: Vec<usize> = parts.iter().map(|p| p.own.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn ranges_in_halo_reaches_outside_the_span() {
+        // an MI at the hybrid cut must see the same halo a whole-space
+        // partition would: readable crosses the span edge, not the array
+        let span = Range1::new(10, 20);
+        let parts = Block1D::with_view(View::sym(2)).ranges_in(span, 100, 2);
+        assert_eq!(parts[0].readable, Range1::new(8, 17));
+        assert_eq!(parts[1].readable, Range1::new(13, 22));
+    }
+
+    #[test]
+    fn block2d_parts_in_covers_row_span() {
+        let span = Range1::new(2, 9);
+        let parts = Block2D::new().parts_in(span, 10, 6, 4);
+        let area: usize = parts.iter().map(|p| p.own.rows.len() * p.own.cols.len()).sum();
+        assert_eq!(area, span.len() * 6);
+        assert!(parts.iter().all(|p| p.own.rows.lo >= 2 && p.own.rows.hi <= 9));
+    }
+
+    #[test]
+    fn row_disjoint_split_fraction_respects_row_boundaries() {
+        let row = [0u32, 0, 0, 1, 1, 2, 3, 3, 3, 3];
+        for f in [0.0, 0.3, 0.5, 0.8, 1.0] {
+            let (head, tail) = RowDisjoint.split_fraction(&row, 4, f);
+            assert_eq!(head.nnz.lo, 0);
+            assert_eq!(head.nnz.hi, tail.nnz.lo);
+            assert_eq!(tail.nnz.hi, row.len());
+            let cut = head.nnz.hi;
+            if cut > 0 && cut < row.len() {
+                assert_ne!(row[cut], row[cut - 1], "cut splits row at f={f}");
+            }
+            // the two sides feed disjoint result rows
+            if !head.nnz.is_empty() && !tail.nnz.is_empty() {
+                assert!(head.rows.hi <= tail.rows.lo);
+            }
+        }
     }
 }

@@ -33,10 +33,12 @@ impl Phaser {
         }
     }
 
+    /// Registered party count.
     pub fn parties(&self) -> usize {
         self.state.lock().unwrap().parties
     }
 
+    /// Completed barrier generations so far.
     pub fn generation(&self) -> u64 {
         self.state.lock().unwrap().generation
     }

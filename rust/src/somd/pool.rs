@@ -53,6 +53,7 @@ impl<R> JobHandle<R> {
 }
 
 impl WorkerPool {
+    /// A pool with `workers` threads (panics on 0).
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
         let queue = Arc::new(Queue { jobs: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() });
@@ -68,6 +69,7 @@ impl WorkerPool {
         Self { queue, handles }
     }
 
+    /// The pool's thread count.
     pub fn workers(&self) -> usize {
         self.handles.len()
     }

@@ -10,6 +10,7 @@
 
 /// A reduction `List<R> -> R` applied to the rank-ordered partial results.
 pub trait Reduction<R>: Send + Sync {
+    /// Fold the rank-ordered partials into the method's result.
     fn reduce(&self, parts: Vec<R>) -> R;
 }
 
@@ -19,6 +20,7 @@ pub struct Fold<F> {
 }
 
 impl<F> Fold<F> {
+    /// A fold over the given binary op.
     pub fn new(op: F) -> Self {
         Self { op }
     }
@@ -50,10 +52,12 @@ pub fn prod<R: std::ops::Mul<Output = R> + Send>() -> Fold<impl Fn(R, R) -> R + 
     Fold::new(|a: R, b: R| a * b)
 }
 
+/// `reduce(min)` over f64.
 pub fn min_f64() -> Fold<impl Fn(f64, f64) -> f64 + Send + Sync> {
     Fold::new(f64::min)
 }
 
+/// `reduce(max)` over f64.
 pub fn max_f64() -> Fold<impl Fn(f64, f64) -> f64 + Send + Sync> {
     Fold::new(f64::max)
 }
@@ -108,6 +112,7 @@ pub struct FnReduce<F> {
 }
 
 impl<F> FnReduce<F> {
+    /// A reduction from a whole-list closure.
     pub fn new(f: F) -> Self {
         Self { f }
     }

@@ -20,6 +20,12 @@
 //!   decisions with cost-model assumptions instead of observed cost; the
 //!   modeled clock still lives in `DeviceStats` for the paper-figure
 //!   reports.
+//! * **hybrid** — since the hybrid co-execution PR, one invocation may be
+//!   *split* across both lanes ([`Choice::Hybrid`]).  Each hybrid run
+//!   records the wall time of the slower side plus a per-side
+//!   **throughput** observation (index-space items per second), from
+//!   which the learned split ratio converges toward the
+//!   throughput-proportional equilibrium (see [`Scheduler::record_hybrid`]).
 //!
 //! The decision rule is deliberately simple and deterministic:
 //! explore each applicable side until it has `min_samples` observations
@@ -35,11 +41,51 @@ use std::time::Duration;
 use crate::device::DeviceStats;
 use crate::util::json::Json;
 
-/// Which side the cost model picked for one invocation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// The split ratio used before any hybrid throughput has been observed
+/// for a method (an even split: no evidence favors either side yet).
+pub const DEFAULT_DEVICE_FRACTION: f64 = 0.5;
+
+/// Penalty recorded for a failed lane so exploration completes and the
+/// broken lane loses the mean comparison.  Later successes slide the
+/// penalty out of the trailing window.
+const PENALTY_SECS: f64 = 1e6;
+
+/// Hybrid fractions are clamped away from the degenerate endpoints so a
+/// learned split always keeps both lanes alive (a lane at exactly 0 would
+/// never produce new throughput samples to recover from).
+const FRACTION_MIN: f64 = 0.05;
+/// Upper clamp counterpart of [`FRACTION_MIN`].
+const FRACTION_MAX: f64 = 0.95;
+
+/// Which lane(s) the cost model picked for one invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Choice {
+    /// Run the whole invocation on the shared-memory worker pool.
     Smp,
+    /// Offload the whole invocation to the device lane.
     Device,
+    /// Split the invocation's index space across both lanes at once
+    /// (hybrid co-execution): the SMP side takes the leading share, the
+    /// device side the trailing `device_fraction` share, and the partial
+    /// results merge through the method's ordinary reduction.
+    Hybrid {
+        /// Learned share of the index space handed to the device side,
+        /// in `(0, 1)`.
+        device_fraction: f64,
+    },
+}
+
+impl Choice {
+    /// Whether two choices pick the same lane *kind*, ignoring the hybrid
+    /// split ratio (used for hysteresis: a ratio refinement is not a flip).
+    pub fn same_lane(&self, other: &Choice) -> bool {
+        matches!(
+            (self, other),
+            (Choice::Smp, Choice::Smp)
+                | (Choice::Device, Choice::Device)
+                | (Choice::Hybrid { .. }, Choice::Hybrid { .. })
+        )
+    }
 }
 
 /// Tunables for the cost model.
@@ -52,12 +98,39 @@ pub struct SchedulerConfig {
     /// The challenger must be at least this factor faster to flip the
     /// previous choice (1.0 = no hysteresis).
     pub hysteresis: f64,
+    /// Deadband for the learned hybrid split: the stored `device_fraction`
+    /// only moves when the freshly computed equilibrium differs from it by
+    /// more than this amount (the ratio counterpart of `hysteresis` —
+    /// prevents the split from chasing per-run noise).
+    pub ratio_deadband: f64,
+    /// Minimum index-space items the device share of a hybrid split must
+    /// receive; below it the invocation runs pure-SMP instead (a device
+    /// launch over a handful of items is pure overhead).
+    pub min_device_items: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { window: 8, min_samples: 2, hysteresis: 1.15 }
+        SchedulerConfig {
+            window: 8,
+            min_samples: 2,
+            hysteresis: 1.15,
+            ratio_deadband: 0.05,
+            min_device_items: 1024,
+        }
     }
+}
+
+/// One side's contribution to a hybrid invocation, as fed back to the
+/// ratio learner: how many index-space items the side processed and how
+/// long its own execute phase took (each side clocked independently, so
+/// queue wait on the other side never pollutes the throughput estimate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HybridSample {
+    /// Index-space items this side processed (0 for a degenerate share).
+    pub items: usize,
+    /// Wall seconds this side spent executing its share.
+    pub secs: f64,
 }
 
 /// Execution history of one method.
@@ -68,12 +141,41 @@ pub struct MethodHistory {
     /// Trailing *measured* device execute times (seconds, queue wait
     /// excluded).
     pub device_secs: Vec<f64>,
-    /// Lifetime totals (not windowed).
+    /// Trailing hybrid invocation wall times (seconds; the slower side's
+    /// own execute time — the two sides run concurrently, so the slower
+    /// one bounds the invocation).
+    pub hybrid_secs: Vec<f64>,
+    /// Trailing SMP-side throughput observations from hybrid runs
+    /// (index-space items per second).
+    pub smp_items_per_sec: Vec<f64>,
+    /// Trailing device-side throughput observations from hybrid runs
+    /// (index-space items per second).
+    pub device_items_per_sec: Vec<f64>,
+    /// Lifetime SMP invocations (not windowed).
     pub smp_runs: u64,
+    /// Lifetime device invocations (not windowed).
     pub device_runs: u64,
+    /// Lifetime failed device invocations.
     pub device_failures: u64,
+    /// Lifetime hybrid invocations (including ones whose device half
+    /// failed and fell back to SMP).
+    pub hybrid_runs: u64,
+    /// Hybrid invocations whose device half failed.
+    pub hybrid_failures: u64,
+    /// Runs that actually recorded transfer/launch accounting (successful
+    /// device + hybrid runs) — the denominator of
+    /// [`MethodHistory::transfer_bytes_per_run`].  Failed and degraded
+    /// runs increment the lifetime counters but move no bytes, so they
+    /// must not dilute the bus-pressure signal.
+    pub transfer_runs: u64,
+    /// The learned device share of a hybrid split; `None` until the first
+    /// hybrid run produced throughput observations for both sides.
+    pub device_fraction: Option<f64>,
+    /// Lifetime host→device bytes (device + hybrid runs).
     pub bytes_h2d: u64,
+    /// Lifetime device→host bytes (device + hybrid runs).
     pub bytes_d2h: u64,
+    /// Lifetime kernel launches (device + hybrid runs).
     pub launches: u64,
     /// The last decision, for hysteresis.
     pub last_choice: Option<Choice>,
@@ -105,13 +207,46 @@ impl MethodHistory {
         Self::mean(&self.device_secs)
     }
 
-    /// Mean transfer bytes per device run (the §7.3 "Crypt loses on the
-    /// bus" signal, surfaced for reports).
+    /// Trailing-window mean hybrid wall seconds.
+    pub fn hybrid_estimate(&self) -> Option<f64> {
+        Self::mean(&self.hybrid_secs)
+    }
+
+    /// Trailing-window mean SMP-side throughput (items/s) from hybrid runs.
+    pub fn smp_throughput(&self) -> Option<f64> {
+        Self::mean(&self.smp_items_per_sec)
+    }
+
+    /// Trailing-window mean device-side throughput (items/s) from hybrid
+    /// runs.
+    pub fn device_throughput(&self) -> Option<f64> {
+        Self::mean(&self.device_items_per_sec)
+    }
+
+    /// The throughput-proportional equilibrium split: with per-side
+    /// throughputs `T_smp` and `T_dev`, handing the device the fraction
+    /// `T_dev / (T_smp + T_dev)` makes both sides finish at the same time
+    /// (the HSTREAM-style balance point).  `None` until both sides have
+    /// at least one throughput observation.
+    pub fn equilibrium_fraction(&self) -> Option<f64> {
+        let s = self.smp_throughput()?;
+        let d = self.device_throughput()?;
+        if s + d > 0.0 {
+            Some(d / (s + d))
+        } else {
+            None
+        }
+    }
+
+    /// Mean transfer bytes per device-touching run (the §7.3 "Crypt loses
+    /// on the bus" signal, surfaced for reports).  Only runs that
+    /// recorded transfer accounting count — failed/degraded runs moved
+    /// nothing across the bus and must not dilute the mean.
     pub fn transfer_bytes_per_run(&self) -> f64 {
-        if self.device_runs == 0 {
+        if self.transfer_runs == 0 {
             0.0
         } else {
-            (self.bytes_h2d + self.bytes_d2h) as f64 / self.device_runs as f64
+            (self.bytes_h2d + self.bytes_d2h) as f64 / self.transfer_runs as f64
         }
     }
 }
@@ -119,10 +254,19 @@ impl MethodHistory {
 /// One row of the decision table (bench/report surface).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DecisionRow {
+    /// Method name (the rules-file key).
     pub method: String,
+    /// Trailing-window mean SMP seconds, if observed.
     pub smp_secs: Option<f64>,
+    /// Trailing-window mean measured device seconds, if observed.
     pub device_secs: Option<f64>,
+    /// Trailing-window mean hybrid wall seconds, if observed.
+    pub hybrid_secs: Option<f64>,
+    /// The learned hybrid split, if any hybrid run happened.
+    pub device_fraction: Option<f64>,
+    /// Mean bus bytes per device-touching run.
     pub transfer_bytes_per_run: f64,
+    /// What the cost model would pick next for this method.
     pub choice: Choice,
 }
 
@@ -137,10 +281,12 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// A scheduler with the given tunables and an empty history store.
     pub fn new(cfg: SchedulerConfig) -> Self {
         Scheduler { cfg, histories: Mutex::new(BTreeMap::new()) }
     }
 
+    /// The tunables this scheduler was built with.
     pub fn config(&self) -> SchedulerConfig {
         self.cfg
     }
@@ -165,6 +311,7 @@ impl Scheduler {
         let e = h.entry(method.to_string()).or_default();
         MethodHistory::push(&mut e.device_secs, measured.as_secs_f64(), self.cfg.window);
         e.device_runs += 1;
+        e.transfer_runs += 1;
         e.bytes_h2d += stats.bytes_h2d as u64;
         e.bytes_d2h += stats.bytes_d2h as u64;
         e.launches += stats.launches as u64;
@@ -177,7 +324,6 @@ impl Scheduler {
     /// completes exploration and steers the method back to SMP.  Later
     /// successes slide the penalty out of the trailing window.
     pub fn record_device_failure(&self, method: &str) {
-        const PENALTY_SECS: f64 = 1e6;
         let mut h = self.histories.lock().unwrap();
         let e = h.entry(method.to_string()).or_default();
         MethodHistory::push(&mut e.device_secs, PENALTY_SECS, self.cfg.window);
@@ -185,13 +331,136 @@ impl Scheduler {
         e.device_failures += 1;
     }
 
+    /// Record one completed hybrid invocation.
+    ///
+    /// Besides the hybrid wall sample (the slower side bounds the
+    /// invocation), each side contributes a throughput observation, and
+    /// the learned `device_fraction` moves to the fresh
+    /// [equilibrium](MethodHistory::equilibrium_fraction) whenever it
+    /// falls outside the configured `ratio_deadband` around the current
+    /// value — the same keep-unless-clearly-better discipline the lane
+    /// decision applies through `hysteresis`.
+    ///
+    /// Degenerate shares (`items == 0` or a non-positive clock) do not
+    /// produce throughput samples, so 0.0/1.0 experiment splits cannot
+    /// poison the learned ratio.
+    pub fn record_hybrid(
+        &self,
+        method: &str,
+        smp: HybridSample,
+        device: HybridSample,
+        stats: &DeviceStats,
+    ) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(&mut e.hybrid_secs, smp.secs.max(device.secs), self.cfg.window);
+        if smp.items > 0 && smp.secs > 0.0 {
+            MethodHistory::push(
+                &mut e.smp_items_per_sec,
+                smp.items as f64 / smp.secs,
+                self.cfg.window,
+            );
+        }
+        if device.items > 0 && device.secs > 0.0 {
+            MethodHistory::push(
+                &mut e.device_items_per_sec,
+                device.items as f64 / device.secs,
+                self.cfg.window,
+            );
+        }
+        e.hybrid_runs += 1;
+        e.transfer_runs += 1;
+        e.bytes_h2d += stats.bytes_h2d as u64;
+        e.bytes_d2h += stats.bytes_d2h as u64;
+        e.launches += stats.launches as u64;
+        if let Some(f_star) = e.equilibrium_fraction() {
+            let f_star = f_star.clamp(FRACTION_MIN, FRACTION_MAX);
+            match e.device_fraction {
+                Some(cur) if (f_star - cur).abs() <= self.cfg.ratio_deadband => {}
+                _ => e.device_fraction = Some(f_star),
+            }
+        }
+    }
+
+    /// Record a hybrid invocation whose device half failed (the SMP side
+    /// covered the device share, so the caller still got a result).  The
+    /// penalty sample steers the lane decision away from hybrid until the
+    /// device side proves itself again.
+    pub fn record_hybrid_failure(&self, method: &str) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(&mut e.hybrid_secs, PENALTY_SECS, self.cfg.window);
+        e.hybrid_runs += 1;
+        e.hybrid_failures += 1;
+    }
+
+    /// Record a hybrid invocation that *degraded* to pure SMP because the
+    /// device share underflowed `min_device_items`.  The SMP wall IS the
+    /// hybrid lane's honest cost at this input size, so recording it here
+    /// (alongside the ordinary SMP sample) completes the hybrid
+    /// exploration rung — without this, an `auto` method whose inputs are
+    /// too small to split would return [`Choice::Hybrid`] forever, each
+    /// submission degrading without ever accruing a hybrid sample, and
+    /// the decision could never settle on a faster pure lane.
+    pub fn record_hybrid_degraded(&self, method: &str, wall: Duration) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(&mut e.hybrid_secs, wall.as_secs_f64(), self.cfg.window);
+        e.hybrid_runs += 1;
+    }
+
+    /// The split ratio a hybrid invocation of `method` should use right
+    /// now: the learned equilibrium if one exists, otherwise
+    /// [`DEFAULT_DEVICE_FRACTION`].
+    pub fn hybrid_fraction(&self, method: &str) -> f64 {
+        self.histories
+            .lock()
+            .unwrap()
+            .get(method)
+            .and_then(|e| e.device_fraction)
+            .unwrap_or(DEFAULT_DEVICE_FRACTION)
+    }
+
     /// Resolve `Target::Auto` for a method whose device version IS
     /// applicable (the caller has already checked applicability; an
     /// inapplicable device reverts to SMP before ever reaching here).
+    ///
+    /// This is the *binary* decision — methods without a hybrid spec can
+    /// only run whole-invocation on one lane.  Callers whose method
+    /// supports co-execution use [`Scheduler::decide_hybrid`] instead.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::time::Duration;
+    /// use somd::somd::{Choice, Scheduler, SchedulerConfig};
+    ///
+    /// let s = Scheduler::new(SchedulerConfig::default());
+    /// // exploration: SMP is measured first (it is always applicable)
+    /// assert_eq!(s.decide("Series.coefficients"), Choice::Smp);
+    /// s.record_smp("Series.coefficients", Duration::from_millis(200));
+    /// s.record_smp("Series.coefficients", Duration::from_millis(200));
+    /// // then the device side gets its minimum samples
+    /// assert_eq!(s.decide("Series.coefficients"), Choice::Device);
+    /// ```
     pub fn decide(&self, method: &str) -> Choice {
         let mut h = self.histories.lock().unwrap();
         let e = h.entry(method.to_string()).or_default();
         let choice = Self::decide_history(&self.cfg, e);
+        e.last_choice = Some(choice);
+        choice
+    }
+
+    /// Resolve `Target::Auto` for a method that supports hybrid
+    /// co-execution: explore SMP, then the device, then the hybrid split,
+    /// and settle on the lane with the lowest trailing-window mean —
+    /// the incumbent keeps the method unless a challenger beats it by the
+    /// hysteresis factor.  A returned [`Choice::Hybrid`] carries the
+    /// current learned split ratio.
+    pub fn decide_hybrid(&self, method: &str) -> Choice {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        let choice = Self::decide_history_hybrid(&self.cfg, e);
         e.last_choice = Some(choice);
         choice
     }
@@ -224,7 +493,9 @@ impl Scheduler {
                     Choice::Device
                 }
             }
-            None => {
+            // a hybrid incumbent can only appear when the caller switched
+            // entry points; fall back to the no-incumbent comparison
+            Some(Choice::Hybrid { .. }) | None => {
                 if dev < smp {
                     Choice::Device
                 } else {
@@ -234,7 +505,51 @@ impl Scheduler {
         }
     }
 
-    /// Peek at the decision without recording it (reports).
+    fn decide_history_hybrid(cfg: &SchedulerConfig, e: &MethodHistory) -> Choice {
+        // exploration ladder: SMP → device → hybrid, each to min_samples
+        if e.smp_secs.len() < cfg.min_samples {
+            return Choice::Smp;
+        }
+        if e.device_secs.len() < cfg.min_samples {
+            return Choice::Device;
+        }
+        let fraction = e.device_fraction.unwrap_or(DEFAULT_DEVICE_FRACTION);
+        if e.hybrid_secs.len() < cfg.min_samples {
+            return Choice::Hybrid { device_fraction: fraction };
+        }
+        let smp = e.smp_estimate().expect("smp samples present");
+        let dev = e.device_estimate().expect("device samples present");
+        let hyb = e.hybrid_estimate().expect("hybrid samples present");
+        let cost = |c: Choice| match c {
+            Choice::Smp => smp,
+            Choice::Device => dev,
+            Choice::Hybrid { .. } => hyb,
+        };
+        let mut best = Choice::Smp;
+        for c in [Choice::Device, Choice::Hybrid { device_fraction: fraction }] {
+            if cost(c) < cost(best) {
+                best = c;
+            }
+        }
+        match e.last_choice {
+            Some(inc) => {
+                // an incumbent hybrid keeps running at the *current*
+                // learned ratio — a ratio refinement is not a lane flip
+                let inc = match inc {
+                    Choice::Hybrid { .. } => Choice::Hybrid { device_fraction: fraction },
+                    other => other,
+                };
+                if cost(inc) > cost(best) * cfg.hysteresis {
+                    best
+                } else {
+                    inc
+                }
+            }
+            None => best,
+        }
+    }
+
+    /// Peek at the binary decision without recording it (reports).
     pub fn predict(&self, method: &str) -> Choice {
         let h = self.histories.lock().unwrap();
         match h.get(method) {
@@ -248,7 +563,10 @@ impl Scheduler {
         self.histories.lock().unwrap().get(method).cloned()
     }
 
-    /// The full decision table, one row per known method.
+    /// The full decision table, one row per known method.  Methods with
+    /// hybrid history report the three-way decision; pure two-lane
+    /// methods keep the binary one (so a method that never co-executed is
+    /// never *reported* as hybrid-bound).
     pub fn decision_table(&self) -> Vec<DecisionRow> {
         let h = self.histories.lock().unwrap();
         h.iter()
@@ -256,8 +574,14 @@ impl Scheduler {
                 method: name.clone(),
                 smp_secs: e.smp_estimate(),
                 device_secs: e.device_estimate(),
+                hybrid_secs: e.hybrid_estimate(),
+                device_fraction: e.device_fraction,
                 transfer_bytes_per_run: e.transfer_bytes_per_run(),
-                choice: Self::decide_history(&self.cfg, e),
+                choice: if e.hybrid_runs > 0 {
+                    Self::decide_history_hybrid(&self.cfg, e)
+                } else {
+                    Self::decide_history(&self.cfg, e)
+                },
             })
             .collect()
     }
@@ -269,18 +593,26 @@ impl Scheduler {
         let h = self.histories.lock().unwrap();
         let mut top = BTreeMap::new();
         for (name, e) in h.iter() {
+            let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
             let mut m = BTreeMap::new();
-            m.insert(
-                "smp_secs".to_string(),
-                Json::Arr(e.smp_secs.iter().map(|&v| Json::Num(v)).collect()),
-            );
-            m.insert(
-                "device_secs".to_string(),
-                Json::Arr(e.device_secs.iter().map(|&v| Json::Num(v)).collect()),
-            );
+            m.insert("smp_secs".to_string(), arr(&e.smp_secs));
+            m.insert("device_secs".to_string(), arr(&e.device_secs));
+            m.insert("hybrid_secs".to_string(), arr(&e.hybrid_secs));
+            m.insert("smp_items_per_sec".to_string(), arr(&e.smp_items_per_sec));
+            m.insert("device_items_per_sec".to_string(), arr(&e.device_items_per_sec));
             m.insert("smp_runs".to_string(), Json::Num(e.smp_runs as f64));
             m.insert("device_runs".to_string(), Json::Num(e.device_runs as f64));
             m.insert("device_failures".to_string(), Json::Num(e.device_failures as f64));
+            m.insert("hybrid_runs".to_string(), Json::Num(e.hybrid_runs as f64));
+            m.insert("hybrid_failures".to_string(), Json::Num(e.hybrid_failures as f64));
+            m.insert("transfer_runs".to_string(), Json::Num(e.transfer_runs as f64));
+            m.insert(
+                "device_fraction".to_string(),
+                match e.device_fraction {
+                    Some(f) => Json::Num(f),
+                    None => Json::Null,
+                },
+            );
             m.insert("bytes_h2d".to_string(), Json::Num(e.bytes_h2d as f64));
             m.insert("bytes_d2h".to_string(), Json::Num(e.bytes_d2h as f64));
             m.insert("launches".to_string(), Json::Num(e.launches as f64));
@@ -289,6 +621,7 @@ impl Scheduler {
                 match e.last_choice {
                     Some(Choice::Smp) => Json::Str("smp".to_string()),
                     Some(Choice::Device) => Json::Str("device".to_string()),
+                    Some(Choice::Hybrid { .. }) => Json::Str("hybrid".to_string()),
                     None => Json::Null,
                 },
             );
@@ -297,7 +630,9 @@ impl Scheduler {
         Json::Obj(top)
     }
 
-    /// Rebuild a scheduler from [`Scheduler::to_json`] output.
+    /// Rebuild a scheduler from [`Scheduler::to_json`] output.  Histories
+    /// persisted before the hybrid lane existed load cleanly (the hybrid
+    /// fields default to empty).
     pub fn from_json(cfg: SchedulerConfig, json: &Json) -> Result<Scheduler, String> {
         let obj = match json {
             Json::Obj(m) => m,
@@ -313,12 +648,32 @@ impl Scheduler {
                     .map(|x| x.as_f64().ok_or_else(|| format!("bad number in '{key}'")))
                     .collect()
             };
+            // fields added by the hybrid lane: absent in old snapshots
+            let secs_opt = |key: &str| -> Result<Vec<f64>, String> {
+                match v.get(key).and_then(Json::as_arr) {
+                    None => Ok(Vec::new()),
+                    Some(a) => a
+                        .iter()
+                        .map(|x| x.as_f64().ok_or_else(|| format!("bad number in '{key}'")))
+                        .collect(),
+                }
+            };
             let num = |key: &str| -> u64 {
                 v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+            };
+            let device_fraction = v.get("device_fraction").and_then(Json::as_f64);
+            // pre-hybrid snapshots lack the field; their only
+            // transfer-accounted runs were device runs (old denominator)
+            let transfer_runs = match v.get("transfer_runs").and_then(Json::as_f64) {
+                Some(n) => n as u64,
+                None => num("device_runs"),
             };
             let last_choice = match v.get("last_choice").and_then(Json::as_str) {
                 Some("smp") => Some(Choice::Smp),
                 Some("device") => Some(Choice::Device),
+                Some("hybrid") => Some(Choice::Hybrid {
+                    device_fraction: device_fraction.unwrap_or(DEFAULT_DEVICE_FRACTION),
+                }),
                 _ => None,
             };
             histories.insert(
@@ -326,9 +681,16 @@ impl Scheduler {
                 MethodHistory {
                     smp_secs: secs("smp_secs")?,
                     device_secs: secs("device_secs")?,
+                    hybrid_secs: secs_opt("hybrid_secs")?,
+                    smp_items_per_sec: secs_opt("smp_items_per_sec")?,
+                    device_items_per_sec: secs_opt("device_items_per_sec")?,
                     smp_runs: num("smp_runs"),
                     device_runs: num("device_runs"),
                     device_failures: num("device_failures"),
+                    hybrid_runs: num("hybrid_runs"),
+                    hybrid_failures: num("hybrid_failures"),
+                    transfer_runs,
+                    device_fraction,
                     bytes_h2d: num("bytes_h2d"),
                     bytes_d2h: num("bytes_d2h"),
                     launches: num("launches"),
@@ -358,6 +720,17 @@ mod tests {
         s.record_device(m, Duration::from_secs_f64(secs), &dev_stats(secs, bytes));
     }
 
+    /// Record a hybrid run: both sides clocked at `secs`, with the given
+    /// per-side item shares.
+    fn rec_hyb(s: &Scheduler, m: &str, smp_items: usize, dev_items: usize, secs: f64) {
+        s.record_hybrid(
+            m,
+            HybridSample { items: smp_items, secs },
+            HybridSample { items: dev_items, secs },
+            &DeviceStats::default(),
+        );
+    }
+
     #[test]
     fn explores_smp_then_device() {
         let s = Scheduler::new(SchedulerConfig::default());
@@ -383,6 +756,7 @@ mod tests {
             window: 4,
             min_samples: 2,
             hysteresis: 1.5,
+            ..Default::default()
         });
         for _ in 0..4 {
             s.record_smp("M.m", Duration::from_millis(10));
@@ -463,5 +837,179 @@ mod tests {
         let table = s.decision_table();
         assert_eq!(table.len(), 2);
         assert!(table[0].transfer_bytes_per_run > table[1].transfer_bytes_per_run);
+    }
+
+    // -- hybrid co-execution ------------------------------------------------
+
+    #[test]
+    fn hybrid_exploration_ladder() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let m = "Series.coefficients";
+        // phase 1: SMP
+        assert_eq!(s.decide_hybrid(m), Choice::Smp);
+        s.record_smp(m, Duration::from_millis(10));
+        s.record_smp(m, Duration::from_millis(10));
+        // phase 2: device
+        assert_eq!(s.decide_hybrid(m), Choice::Device);
+        rec_dev(&s, m, 0.010, 0);
+        rec_dev(&s, m, 0.010, 0);
+        // phase 3: hybrid at the default split
+        match s.decide_hybrid(m) {
+            Choice::Hybrid { device_fraction } => {
+                assert!((device_fraction - DEFAULT_DEVICE_FRACTION).abs() < 1e-12)
+            }
+            other => panic!("expected hybrid exploration, got {other:?}"),
+        }
+        // a faster hybrid wins the method and stays
+        rec_hyb(&s, m, 500, 500, 0.005);
+        rec_hyb(&s, m, 500, 500, 0.005);
+        assert!(matches!(s.decide_hybrid(m), Choice::Hybrid { .. }));
+        for _ in 0..5 {
+            assert!(matches!(s.decide_hybrid(m), Choice::Hybrid { .. }));
+        }
+        // hybrid degrades badly: the method flips back to a single lane
+        for _ in 0..8 {
+            rec_hyb(&s, m, 500, 500, 0.500);
+        }
+        assert!(!matches!(s.decide_hybrid(m), Choice::Hybrid { .. }));
+    }
+
+    #[test]
+    fn ratio_converges_to_throughput_proportional_equilibrium() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        // device side processes 3x the items in the same time => 3x the
+        // throughput => equilibrium fraction 0.75
+        for _ in 0..6 {
+            rec_hyb(&s, "M.m", 250, 750, 1.0);
+        }
+        let f = s.hybrid_fraction("M.m");
+        assert!((f - 0.75).abs() < 1e-9, "fraction {f}");
+        let h = s.history("M.m").unwrap();
+        assert!((h.equilibrium_fraction().unwrap() - 0.75).abs() < 1e-9);
+        assert_eq!(h.hybrid_runs, 6);
+    }
+
+    #[test]
+    fn ratio_deadband_absorbs_noise() {
+        let s = Scheduler::new(SchedulerConfig {
+            window: 2,
+            ratio_deadband: 0.10,
+            ..Default::default()
+        });
+        rec_hyb(&s, "M.m", 500, 500, 1.0); // equilibrium 0.5
+        let f0 = s.hybrid_fraction("M.m");
+        assert!((f0 - 0.5).abs() < 1e-9);
+        // small imbalance within the deadband: the stored ratio holds
+        rec_hyb(&s, "M.m", 480, 520, 1.0);
+        rec_hyb(&s, "M.m", 480, 520, 1.0);
+        assert!((s.hybrid_fraction("M.m") - f0).abs() < 1e-9);
+        // a clear shift moves it
+        rec_hyb(&s, "M.m", 200, 800, 1.0);
+        rec_hyb(&s, "M.m", 200, 800, 1.0);
+        assert!((s.hybrid_fraction("M.m") - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_shares_do_not_poison_the_ratio() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        // an all-device experiment split: no SMP throughput sample
+        s.record_hybrid(
+            "M.m",
+            HybridSample { items: 0, secs: 0.0 },
+            HybridSample { items: 1000, secs: 1.0 },
+            &DeviceStats::default(),
+        );
+        let h = s.history("M.m").unwrap();
+        assert!(h.smp_items_per_sec.is_empty());
+        assert_eq!(h.device_items_per_sec.len(), 1);
+        assert_eq!(h.device_fraction, None, "one-sided evidence must not set a ratio");
+        assert_eq!(s.hybrid_fraction("M.m"), DEFAULT_DEVICE_FRACTION);
+    }
+
+    #[test]
+    fn hybrid_failures_penalize_the_hybrid_lane() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let m = "M.m";
+        for _ in 0..2 {
+            s.record_smp(m, Duration::from_millis(10));
+            rec_dev(&s, m, 0.008, 0);
+        }
+        s.record_hybrid_failure(m);
+        s.record_hybrid_failure(m);
+        // both failures recorded; the hybrid lane cannot win the decision
+        let h = s.history(m).unwrap();
+        assert_eq!(h.hybrid_failures, 2);
+        assert!(!matches!(s.decide_hybrid(m), Choice::Hybrid { .. }));
+    }
+
+    #[test]
+    fn hybrid_state_survives_json_text_roundtrip() {
+        let cfg = SchedulerConfig::default();
+        let s = Scheduler::new(cfg);
+        for _ in 0..3 {
+            s.record_smp("M.m", Duration::from_millis(20));
+            rec_dev(&s, "M.m", 0.020, 4096);
+            rec_hyb(&s, "M.m", 300, 700, 0.008);
+        }
+        let first = s.decide_hybrid("M.m");
+        let text = s.to_json().dump();
+        let parsed = Json::parse(&text).expect("scheduler state parses");
+        let restored = Scheduler::from_json(cfg, &parsed).expect("state restores");
+        assert_eq!(restored.history("M.m"), s.history("M.m"));
+        assert_eq!(restored.hybrid_fraction("M.m"), s.hybrid_fraction("M.m"));
+        assert!(restored.decide_hybrid("M.m").same_lane(&first));
+    }
+
+    #[test]
+    fn failed_and_degraded_runs_do_not_dilute_transfer_bytes_per_run() {
+        // regression (review finding): byte-less runs must not shrink the
+        // §7.3 bus-pressure signal
+        let s = Scheduler::new(SchedulerConfig::default());
+        rec_dev(&s, "M.m", 0.010, 1_000_000); // 1 MB across the bus
+        s.record_device_failure("M.m");
+        s.record_hybrid_failure("M.m");
+        for _ in 0..5 {
+            s.record_hybrid_degraded("M.m", Duration::from_millis(10));
+        }
+        let h = s.history("M.m").unwrap();
+        assert_eq!(h.transfer_runs, 1);
+        assert!((h.transfer_bytes_per_run() - 1_000_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degraded_runs_complete_exploration_so_auto_can_settle() {
+        // regression (review finding): an auto method whose inputs are too
+        // small to split must not sit in the hybrid exploration rung
+        // forever — the degraded SMP wall counts as the hybrid sample
+        let s = Scheduler::new(SchedulerConfig::default());
+        let m = "Tiny.m";
+        for _ in 0..2 {
+            s.record_smp(m, Duration::from_millis(10));
+            rec_dev(&s, m, 0.001, 64); // device clearly faster
+        }
+        // exploration now wants hybrid…
+        assert!(matches!(s.decide_hybrid(m), Choice::Hybrid { .. }));
+        // …but every attempt degrades (device share under the floor)
+        s.record_hybrid_degraded(m, Duration::from_millis(10));
+        s.record_hybrid_degraded(m, Duration::from_millis(10));
+        // exploration is complete and the faster pure lane wins
+        assert_eq!(s.decide_hybrid(m), Choice::Device);
+        let h = s.history(m).unwrap();
+        assert_eq!(h.hybrid_runs, 2);
+        assert_eq!(h.hybrid_failures, 0);
+    }
+
+    #[test]
+    fn legacy_snapshots_without_hybrid_fields_load() {
+        // a PR-1-era snapshot: only the two-lane fields
+        let text = r#"{"Old.m":{"smp_secs":[0.01,0.01],"device_secs":[0.002,0.002],
+            "smp_runs":2,"device_runs":2,"device_failures":0,
+            "bytes_h2d":128,"bytes_d2h":64,"launches":2,"last_choice":"device"}}"#;
+        let parsed = Json::parse(text).unwrap();
+        let s = Scheduler::from_json(SchedulerConfig::default(), &parsed).unwrap();
+        let h = s.history("Old.m").unwrap();
+        assert!(h.hybrid_secs.is_empty());
+        assert_eq!(h.device_fraction, None);
+        assert_eq!(s.decide("Old.m"), Choice::Device);
     }
 }

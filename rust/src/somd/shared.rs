@@ -8,6 +8,7 @@
 
 use std::sync::Mutex;
 
+/// A `shared` scalar: one local copy per MI (see the module docs).
 pub struct Shared<T> {
     locals: Vec<Mutex<T>>,
 }
@@ -18,6 +19,7 @@ impl<T: Clone> Shared<T> {
         Self { locals: (0..parties).map(|_| Mutex::new(init.clone())).collect() }
     }
 
+    /// Number of per-MI copies.
     pub fn parties(&self) -> usize {
         self.locals.len()
     }

@@ -6,15 +6,26 @@ use std::sync::Arc;
 /// Immutable shareable binary tree (Arc-linked so partitions are cheap).
 #[derive(Debug, Clone)]
 pub enum Tree<A> {
+    /// The empty tree.
     Nil,
-    Node { value: A, left: Arc<Tree<A>>, right: Arc<Tree<A>> },
+    /// An interior node.
+    Node {
+        /// The node's payload.
+        value: A,
+        /// Left subtree.
+        left: Arc<Tree<A>>,
+        /// Right subtree.
+        right: Arc<Tree<A>>,
+    },
 }
 
 impl<A: Clone> Tree<A> {
+    /// A single node with Nil children.
     pub fn leaf(value: A) -> Self {
         Tree::Node { value, left: Arc::new(Tree::Nil), right: Arc::new(Tree::Nil) }
     }
 
+    /// A node over two subtrees.
     pub fn node(value: A, left: Tree<A>, right: Tree<A>) -> Self {
         Tree::Node { value, left: Arc::new(left), right: Arc::new(right) }
     }
@@ -29,10 +40,12 @@ impl<A: Clone> Tree<A> {
         }
     }
 
+    /// Whether this is the empty tree.
     pub fn is_nil(&self) -> bool {
         matches!(self, Tree::Nil)
     }
 
+    /// The left subtree (Nil for Nil).
     pub fn left_or_nil(&self) -> Tree<A> {
         match self {
             Tree::Nil => Tree::Nil,
@@ -40,6 +53,7 @@ impl<A: Clone> Tree<A> {
         }
     }
 
+    /// The right subtree (Nil for Nil).
     pub fn right_or_nil(&self) -> Tree<A> {
         match self {
             Tree::Nil => Tree::Nil,

@@ -4,15 +4,21 @@
 
 use std::collections::BTreeMap;
 
+/// A parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The leading subcommand, if any.
     pub command: Option<String>,
+    /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse an argument iterator (without the program name).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -35,22 +41,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// An option's value, if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// A usize option with a default (panics on a non-numeric value).
     pub fn opt_usize(&self, key: &str, default: usize) -> usize {
         self.opt(key).map(|v| v.parse().expect("numeric option")).unwrap_or(default)
     }
 
+    /// An f64 option with a default (panics on a non-numeric value).
     pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
         self.opt(key).map(|v| v.parse().expect("numeric option")).unwrap_or(default)
     }
 
+    /// Whether a bare `--flag` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

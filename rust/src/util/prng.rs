@@ -2,16 +2,19 @@
 //! the offline vendor set).  Reproducible across runs: every benchmark seeds
 //! explicitly so paper-figure regeneration is bit-stable.
 
+/// xorshift64* state.
 #[derive(Debug, Clone)]
 pub struct Xorshift64 {
     state: u64,
 }
 
 impl Xorshift64 {
+    /// Seed a generator (0 is remapped to a valid state).
     pub fn new(seed: u64) -> Self {
         Self { state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15) | 1 }
     }
 
+    /// Next 64 uniform bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
@@ -46,6 +49,7 @@ impl Xorshift64 {
         (self.next_u64() >> 48) as u16
     }
 
+    /// Fill `buf` with uniform bytes.
     pub fn fill_bytes(&mut self, buf: &mut [u8]) {
         for chunk in buf.chunks_mut(8) {
             let v = self.next_u64().to_le_bytes();

@@ -1,15 +1,23 @@
 //! Summary statistics for bench reporting.
 
+/// Basic sample statistics.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (n-1 denominator).
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (midpoint-interpolated for even n).
     pub median: f64,
 }
 
+/// Summarize a non-empty sample.
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty());
     let n = xs.len();

@@ -16,57 +16,69 @@
 
 use super::prng::Xorshift64;
 
+/// A named property with a seed and run count.
 pub struct Prop {
     name: &'static str,
     seed: u64,
     runs: usize,
 }
 
+/// Per-case value generator (deterministic per case seed).
 pub struct Gen {
     rng: Xorshift64,
 }
 
 impl Gen {
+    /// Uniform usize in `[lo, hi_incl]`.
     pub fn usize(&mut self, lo: usize, hi_incl: usize) -> usize {
         lo + self.rng.below(hi_incl - lo + 1)
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.f64_range(lo, hi)
     }
 
+    /// Uniform u16.
     pub fn u16(&mut self) -> u16 {
         self.rng.u16()
     }
 
+    /// Uniform u64.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform bool.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
 
+    /// A vector of uniform f64s in `[lo, hi)`.
     pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
         (0..len).map(|_| self.f64(lo, hi)).collect()
     }
 
+    /// A vector of uniform bytes.
     pub fn vec_u8(&mut self, len: usize) -> Vec<u8> {
         let mut v = vec![0u8; len];
         self.rng.fill_bytes(&mut v);
         v
     }
 
+    /// A uniformly picked element of a non-empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.below(xs.len())]
     }
 }
 
 impl Prop {
+    /// A property with the default 100 runs.
     pub fn new(name: &'static str, seed: u64) -> Self {
         Self { name, seed, runs: 100 }
     }
 
+    /// Override the run count (builder style).
     pub fn runs(mut self, n: usize) -> Self {
         self.runs = n;
         self

@@ -35,6 +35,7 @@ pub fn middle_tier_mean(samples: &[Duration]) -> Duration {
     total / tier as u32
 }
 
+/// Duration → seconds (report convenience).
 pub fn secs(d: Duration) -> f64 {
     d.as_secs_f64()
 }

@@ -1,0 +1,287 @@
+//! Hybrid co-execution correctness suite (tentpole of the hybrid PR):
+//!
+//! * hybrid results are **bitwise identical** to pure-SMP results on the
+//!   committed artifacts whose arithmetic is exact across lanes (vecadd:
+//!   identical IEEE f32 adds; crypt: integer IDEA), at several split
+//!   ratios including the degenerate 0.0/1.0 ends;
+//! * the async engine lane forks/joins through the completion latch and
+//!   feeds the ratio learner;
+//! * a failing device half falls back to pure-SMP results (never a lost
+//!   or partial answer) and is penalized in the history;
+//! * the learned ratio converges toward throughput proportionality and
+//!   round-trips through `Scheduler::to_json`/`from_json`.
+
+use std::sync::Arc;
+
+use somd::backend::{Executed, HeteroMethod, HybridSpec};
+use somd::bench_suite::{crypt, hybrid, series};
+use somd::bench_suite::params::SERIES_INTERVALS;
+use somd::device::DeviceStats;
+use somd::runtime::Registry;
+use somd::somd::partition::Block1D;
+use somd::somd::reduction;
+use somd::somd::{Engine, HybridSample, Rules, Scheduler, SchedulerConfig, SomdMethod, Target};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn reg() -> Registry {
+    Registry::load(artifacts_dir()).expect("artifacts present")
+}
+
+/// An engine whose scheduler never degrades small splits to pure SMP
+/// (the suite wants real co-execution even on small inputs).
+fn engine_no_min(workers: usize) -> Engine {
+    Engine::new(workers)
+        .with_scheduler(Scheduler::new(SchedulerConfig { min_device_items: 1, ..Default::default() }))
+}
+
+const FRACTIONS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+
+#[test]
+fn vecadd_hybrid_bitwise_equals_pure_smp_at_every_fraction() {
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    // varied payload (not a constant, so misplaced ranges cannot hide)
+    let a: Vec<f32> = (0..elems).map(|i| (i % 977) as f32 * 0.25 + 0.125).collect();
+    let b: Vec<f32> = (0..elems).map(|i| (i % 1013) as f32 * 0.5 - 3.0).collect();
+    let input = (a, b);
+    let m = hybrid::vecadd_hybrid();
+    let engine = engine_no_min(2);
+    let want = m.smp.invoke(&input, 2);
+    for f in FRACTIONS {
+        let (got, how) = m.invoke_hybrid(&engine, &reg, &input, Some(f)).unwrap();
+        assert_eq!(got.len(), want.len(), "f={f}");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "f={f}, element {i}: {g} vs {w}");
+        }
+        match how {
+            Executed::Smp { .. } => assert_eq!(f, 0.0, "only f=0 may degrade to pure SMP"),
+            Executed::Hybrid { smp_items, device_items, .. } => {
+                assert_eq!(smp_items + device_items, elems);
+                assert!(f > 0.0);
+            }
+            other => panic!("unexpected lane: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn crypt_hybrid_bitwise_equals_pure_smp_at_every_fraction() {
+    let reg = reg();
+    let blocks = reg.info("crypt_A").unwrap().meta_usize("blocks").unwrap();
+    let p = crypt::Problem::generate(blocks * crypt::BLOCK_BYTES, 42);
+    let m = hybrid::crypt_hybrid_generic();
+    let engine = engine_no_min(2);
+    let want = crypt::sequential(&p.data, &p.ekeys);
+    for f in FRACTIONS {
+        let input = crypt::PassInput { src: &p.data, keys: p.ekeys };
+        let (got, _) = m.invoke_hybrid(&engine, &reg, &input, Some(f)).unwrap();
+        assert_eq!(got, want, "hybrid ciphertext at f={f} must match the cipher bitwise");
+    }
+    // and the roundtrip closes across lanes: decrypt the hybrid
+    // ciphertext with a hybrid pass at a different split
+    let enc = want;
+    let dec_input = crypt::PassInput { src: &enc, keys: p.dkeys };
+    let (dec, _) = m.invoke_hybrid(&engine, &reg, &dec_input, Some(0.33)).unwrap();
+    assert_eq!(dec, p.data);
+}
+
+#[test]
+fn series_hybrid_matches_sequential_within_f32_tolerance() {
+    // series mixes f64 (SMP) and f32 (device) arithmetic — tolerance, not
+    // bitwise; the bitwise contract is covered by vecadd/crypt above
+    let reg = reg();
+    let m = hybrid::series_hybrid();
+    let engine = engine_no_min(2);
+    let count = 700;
+    let inp = series::Input { count, m: SERIES_INTERVALS };
+    let want = series::sequential(count, SERIES_INTERVALS);
+    for f in [0.0, 0.5, 1.0] {
+        let (got, _) = m.invoke_hybrid(&engine, &reg, &inp, Some(f)).unwrap();
+        assert_eq!(got.len(), count - 1);
+        for (i, g) in got.iter().enumerate() {
+            let w = want[i + 1];
+            assert!(
+                (g.0 - w.0).abs() < 5e-3 && (g.1 - w.1).abs() < 5e-3,
+                "f={f} n={} {g:?} vs {w:?}",
+                i + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_forks_hybrid_submissions_and_learns_the_ratio() {
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.add", Target::Hybrid);
+    let engine = Engine::with_rules(2, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1,
+            ..Default::default()
+        }))
+        .with_device_master(artifacts_dir(), "fermi")
+        .expect("device master starts");
+
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let input = Arc::new((vec![1.5f32; elems], vec![2.25f32; elems]));
+    const ROUNDS: usize = 3;
+    for round in 0..ROUNDS {
+        let (out, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+        assert_eq!(out.len(), elems, "round {round}");
+        assert!(out.iter().all(|&v| v == 3.75), "round {round}");
+        match how {
+            Executed::Hybrid { smp_items, device_items, device_fraction, .. } => {
+                assert_eq!(smp_items + device_items, elems);
+                assert!((0.0..=1.0).contains(&device_fraction));
+            }
+            other => panic!("forced hybrid must co-execute, got {other:?}"),
+        }
+    }
+    let h = engine.scheduler().history("VecAdd.add").expect("history");
+    assert_eq!(h.hybrid_runs, ROUNDS as u64);
+    assert_eq!(h.hybrid_failures, 0);
+    assert!(h.device_fraction.is_some(), "both sides produced throughput samples");
+    assert!(h.launches >= ROUNDS as u64, "device share launched kernels");
+
+    // the learned state survives a JSON text round-trip
+    let text = engine.scheduler().to_json().dump();
+    let parsed = somd::util::json::Json::parse(&text).unwrap();
+    let restored = Scheduler::from_json(engine.scheduler().config(), &parsed).unwrap();
+    assert_eq!(restored.history("VecAdd.add").unwrap(), h);
+    assert_eq!(
+        restored.hybrid_fraction("VecAdd.add"),
+        engine.scheduler().hybrid_fraction("VecAdd.add")
+    );
+}
+
+#[test]
+fn small_device_share_degrades_to_pure_smp() {
+    // default min_device_items (1024) against a 100-element space: the
+    // engine must not pay a device launch for a handful of items
+    let reg = reg();
+    let m = sum_hybrid_method(false);
+    let engine = Engine::new(2); // default scheduler config
+    let input: Vec<i64> = (0..100).collect();
+    let (r, how) = m.invoke_hybrid(&engine, &reg, &input, None).unwrap();
+    assert_eq!(r, 4950);
+    assert!(matches!(how, Executed::Smp { .. }));
+    let h = engine.scheduler().history("Sum.hybrid").expect("history");
+    // the wall is recorded on BOTH windows: as the SMP sample it is, and
+    // as the hybrid lane's (degraded) cost at this input size — so the
+    // hybrid exploration rung completes instead of re-resolving forever
+    assert_eq!(h.smp_runs, 1);
+    assert_eq!(h.hybrid_runs, 1, "degraded run must complete hybrid exploration");
+    assert_eq!(h.hybrid_failures, 0);
+    assert_eq!(h.hybrid_secs.len(), 1);
+    assert!(h.smp_items_per_sec.is_empty(), "no throughput sample from a degraded run");
+}
+
+/// A tiny summing method with a hybrid spec; `failing_device` makes the
+/// device half error (fallback-path tests).
+fn sum_hybrid_method(
+    failing_device: bool,
+) -> HeteroMethod<Vec<i64>, somd::somd::BlockPart, (), i64> {
+    let smp = SomdMethod::new(
+        "Sum.hybrid",
+        |v: &Vec<i64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, p, _, _| p.own.iter().map(|i| v[i]).sum(),
+        reduction::sum::<i64>(),
+    );
+    let spec = HybridSpec::new(
+        |v: &Vec<i64>| v.len(),
+        |v, span, _n| vec![span.iter().map(|i| v[i]).sum::<i64>()],
+        move |_sess, v, span| {
+            if failing_device {
+                anyhow::bail!("injected device failure");
+            }
+            Ok(span.iter().map(|i| v[i]).sum::<i64>())
+        },
+    );
+    HeteroMethod::smp_only(smp).with_hybrid(spec)
+}
+
+#[test]
+fn failing_device_half_falls_back_to_full_smp_result() {
+    let reg = reg();
+    let m = sum_hybrid_method(true);
+    let engine = engine_no_min(2);
+    let input: Vec<i64> = (0..10_000).collect();
+    let want: i64 = input.iter().sum();
+    let (r, how) = m.invoke_hybrid(&engine, &reg, &input, Some(0.5)).unwrap();
+    assert_eq!(r, want, "the SMP side must cover the failed device share");
+    assert!(matches!(how, Executed::Smp { .. }));
+    let h = engine.scheduler().history("Sum.hybrid").expect("history");
+    assert_eq!(h.hybrid_failures, 1);
+    assert_eq!(h.hybrid_runs, 1);
+}
+
+#[test]
+fn failing_device_half_falls_back_through_the_async_latch_too() {
+    let mut rules = Rules::empty();
+    rules.set("Sum.hybrid", Target::Hybrid);
+    let engine = Engine::with_rules(2, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1,
+            ..Default::default()
+        }))
+        .with_device_master(artifacts_dir(), "fermi")
+        .expect("device master starts");
+    let m = Arc::new(sum_hybrid_method(true));
+    let input = Arc::new((0..10_000).collect::<Vec<i64>>());
+    let want: i64 = input.iter().sum();
+    for _ in 0..2 {
+        let (r, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+        assert_eq!(r, want);
+        assert!(matches!(how, Executed::Smp { .. }));
+    }
+    let h = engine.scheduler().history("Sum.hybrid").expect("history");
+    assert_eq!(h.hybrid_failures, 2);
+}
+
+#[test]
+fn working_hybrid_sum_co_executes_end_to_end() {
+    let reg = reg();
+    let m = sum_hybrid_method(false);
+    let engine = engine_no_min(3);
+    let input: Vec<i64> = (0..50_000).map(|i| i * 3 - 7).collect();
+    let want: i64 = input.iter().sum();
+    for f in FRACTIONS {
+        let (r, _) = m.invoke_hybrid(&engine, &reg, &input, Some(f)).unwrap();
+        assert_eq!(r, want, "f={f}");
+    }
+    // learned state reflects every run: 4 co-executed + the f=0.0 run,
+    // which records as SMP and as a degraded hybrid sample
+    let h = engine.scheduler().history("Sum.hybrid").expect("history");
+    assert_eq!(h.smp_runs, 1);
+    assert_eq!(h.hybrid_runs, FRACTIONS.len() as u64);
+}
+
+#[test]
+fn synthetic_two_sided_history_converges_to_throughput_proportionality() {
+    // the satellite's convergence contract: a device side observed at 4x
+    // the SMP side's throughput must converge the split toward 0.8
+    let s = Scheduler::new(SchedulerConfig::default());
+    let m = "Synth.m";
+    // seed: both sides process their share in ~equal time, but the device
+    // covers 4x the items per second
+    for _ in 0..8 {
+        s.record_hybrid(
+            m,
+            HybridSample { items: 2_000, secs: 1.0 },
+            HybridSample { items: 8_000, secs: 1.0 },
+            &DeviceStats::default(),
+        );
+    }
+    let f = s.hybrid_fraction(m);
+    assert!((f - 0.8).abs() < 1e-9, "learned fraction {f}, want 0.8");
+    // and the equilibrium is what a balanced split predicts: handing the
+    // device 0.8 of the items makes both sides finish together
+    let h = s.history(m).unwrap();
+    let (ts, td) = (h.smp_throughput().unwrap(), h.device_throughput().unwrap());
+    assert!((td / (ts + td) - f).abs() < 1e-9);
+}

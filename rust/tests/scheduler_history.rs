@@ -31,7 +31,7 @@ fn rec_dev(s: &Scheduler, m: &str, secs: f64, bytes: usize) {
 }
 
 fn cfg() -> SchedulerConfig {
-    SchedulerConfig { window: 4, min_samples: 2, hysteresis: 1.2 }
+    SchedulerConfig { window: 4, min_samples: 2, hysteresis: 1.2, ..Default::default() }
 }
 
 #[test]
@@ -203,7 +203,12 @@ fn engine_device_lane_records_measured_execute_time() {
 
 #[test]
 fn windows_bound_memory_and_adapt() {
-    let s = Scheduler::new(SchedulerConfig { window: 3, min_samples: 1, hysteresis: 1.0 });
+    let s = Scheduler::new(SchedulerConfig {
+        window: 3,
+        min_samples: 1,
+        hysteresis: 1.0,
+        ..Default::default()
+    });
     for i in 0..100 {
         s.record_smp("W.w", Duration::from_millis(100 + i));
     }

@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the docs surface (CI `docs` job).
+
+Verifies that every relative link in the checked markdown files resolves
+to an existing file or directory, and that intra-document / cross-document
+`#fragment` anchors match a heading.  External (http/https/mailto) links
+are not fetched — the build is offline by design.
+
+Usage: python3 scripts/check_links.py [files...]
+Defaults to README.md, docs/*.md and rust/vendor/*/README.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (enough for our ASCII headings)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\s-]", "", s)
+    return re.sub(r"\s+", "-", s).strip("-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    text = path.read_text(encoding="utf-8")
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = path if not base else (path.parent / base).resolve()
+        if base and not dest.exists():
+            errors.append(f"{path}: broken link -> {target}")
+            continue
+        if frag:
+            if dest.is_dir() or dest.suffix.lower() not in (".md", ""):
+                continue  # anchors only checked in markdown
+            if slugify(frag) not in anchors_of(dest):
+                errors.append(f"{path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = [ROOT / "README.md"]
+        files += [Path(p) for p in glob.glob(str(ROOT / "docs" / "*.md"))]
+        files += [Path(p) for p in glob.glob(str(ROOT / "rust" / "vendor" / "**" / "README.md"), recursive=True)]
+    errors = []
+    for f in sorted(set(files)):
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): {'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
