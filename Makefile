@@ -2,7 +2,7 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid
+.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-serve
 
 # The one-stop gate: build everything (library, binaries, benches AND
 # examples), run both test suites, then the docs checks.
@@ -49,3 +49,9 @@ bench-interp:
 bench-hybrid:
 	cd rust && cargo test --release --test hybrid_exec
 	cd rust && cargo run --release -- bench hybrid --check
+
+# serving layer: batching correctness suite, then the open-loop load
+# sweep with the batched-throughput gate (writes rust/BENCH_serve.json)
+bench-serve:
+	cd rust && cargo test --release --test serve_batching
+	cd rust && cargo run --release -- bench serve --check

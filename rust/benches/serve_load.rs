@@ -1,0 +1,32 @@
+//! Serving-layer load baseline: open-loop arrival sweep through the
+//! micro-batching service, batched vs unbatched rows, emitting
+//! `BENCH_serve.json` (p50/p95/p99 latency + throughput + batch
+//! occupancy per row).
+//!
+//! `cargo bench --bench serve_load [-- --requests N --clients C --elems E --workers W --out FILE --tol T --smoke --check]`
+//!
+//! Also available as `somd bench serve`; `--check` exits nonzero when
+//! batched throughput loses to unbatched (within `--tol`) at the
+//! highest arrival rate, or when the batched row is vacuous (mean batch
+//! < 2 requests) — the CI gate.
+
+use somd::bench_suite::serve;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.flag("smoke");
+    let requests = args.opt_usize("requests", if smoke { 240 } else { 600 });
+    let clients = args.opt_usize("clients", 4);
+    let elems = args.opt_usize("elems", 1024);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = args.opt_usize("workers", cores.min(4));
+    let out = args.opt("out").unwrap_or("BENCH_serve.json");
+    let tol = args.opt_f64("tol", 1.10);
+    let rates: Vec<f64> = if smoke { vec![2000.0, 0.0] } else { vec![1000.0, 4000.0, 0.0] };
+    let sweep = serve::SweepSpec { rates, requests, clients, elems, workers };
+    if let Err(e) = serve::report(&sweep, out, args.flag("check"), tol) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -16,6 +16,7 @@
 //! lane), with the partial results merged through the method's ordinary
 //! reduction.  See `docs/ARCHITECTURE.md` for the full walkthrough.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -73,6 +74,60 @@ impl<I: ?Sized, R> HybridSpec<I, R> {
     }
 }
 
+/// The batch-compose/split contract of one method: what the serving
+/// layer's micro-batcher needs to coalesce N compatible invocations into
+/// one fused invocation and de-multiplex the result (see
+/// [`crate::serve`] and `docs/SERVING.md`).
+///
+/// * `items` — how many index-space items one request covers (the same
+///   notion of "items" a [`HybridSpec`] uses, so batch caps and hybrid
+///   splits speak one unit).
+/// * `compat` — a compatibility key; only requests with equal keys may
+///   fuse (e.g. Crypt requests hash their subkey schedule: two passes
+///   under different keys must never share a launch).  Defaults to a
+///   constant, i.e. "all requests to this method are compatible".
+/// * `compose` — build the fused input from a batch of request inputs,
+///   concatenating index spaces *in request order*.
+/// * `split` — cut the fused result back into per-request results;
+///   `counts[i]` is request `i`'s item count, in the same order
+///   `compose` saw.  Must return exactly one result per request.
+///
+/// The contract the round-trip tests enforce: for any batch,
+/// `split(invoke(compose(inputs)))[i]` is **bitwise identical** to
+/// `invoke(inputs[i])` — coalescing is an execution-schedule choice,
+/// never a semantic one.
+pub struct BatchSpec<I: ?Sized, R> {
+    items: Box<dyn Fn(&I) -> usize + Send + Sync>,
+    compat: Box<dyn Fn(&I) -> u64 + Send + Sync>,
+    compose: Box<dyn Fn(&[Arc<I>]) -> Arc<I> + Send + Sync>,
+    split: Box<dyn Fn(R, &[usize]) -> Vec<R> + Send + Sync>,
+}
+
+impl<I: ?Sized, R> BatchSpec<I, R> {
+    /// Build a batch spec from the three core evaluators (see the
+    /// type-level docs for their contracts); every request is considered
+    /// compatible until [`BatchSpec::with_compat`] installs a key.
+    pub fn new(
+        items: impl Fn(&I) -> usize + Send + Sync + 'static,
+        compose: impl Fn(&[Arc<I>]) -> Arc<I> + Send + Sync + 'static,
+        split: impl Fn(R, &[usize]) -> Vec<R> + Send + Sync + 'static,
+    ) -> Self {
+        Self {
+            items: Box::new(items),
+            compat: Box::new(|_| 0),
+            compose: Box::new(compose),
+            split: Box::new(split),
+        }
+    }
+
+    /// Install a compatibility key: the batcher only fuses requests whose
+    /// keys are equal (builder style).
+    pub fn with_compat(mut self, compat: impl Fn(&I) -> u64 + Send + Sync + 'static) -> Self {
+        self.compat = Box::new(compat);
+        self
+    }
+}
+
 /// The device half's successful outcome, as handed to the shared hybrid
 /// merge ([`HeteroMethod::finish_hybrid`]) by both the sync and the
 /// async lane.
@@ -111,6 +166,7 @@ pub struct HeteroMethod<I: ?Sized, P, E, R> {
     pub smp: SomdMethod<I, P, E, R>,
     device: Option<DeviceFn<I, R>>,
     hybrid: Option<HybridSpec<I, R>>,
+    batch: Option<BatchSpec<I, R>>,
 }
 
 /// Where an invocation actually ran (after fallback resolution).
@@ -148,17 +204,24 @@ pub enum Executed {
 impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R> {
     /// A method with only the (always-applicable) SMP version.
     pub fn smp_only(smp: SomdMethod<I, P, E, R>) -> Self {
-        Self { smp, device: None, hybrid: None }
+        Self { smp, device: None, hybrid: None, batch: None }
     }
 
     /// A method with an SMP version and a whole-invocation device version.
     pub fn with_device(smp: SomdMethod<I, P, E, R>, device: DeviceFn<I, R>) -> Self {
-        Self { smp, device: Some(device), hybrid: None }
+        Self { smp, device: Some(device), hybrid: None, batch: None }
     }
 
     /// Attach a hybrid co-execution spec (builder style).
     pub fn with_hybrid(mut self, hybrid: HybridSpec<I, R>) -> Self {
         self.hybrid = Some(hybrid);
+        self
+    }
+
+    /// Attach a batch-compose/split spec so the serving layer can coalesce
+    /// concurrent invocations of this method (builder style).
+    pub fn with_batch(mut self, batch: BatchSpec<I, R>) -> Self {
+        self.batch = Some(batch);
         self
     }
 
@@ -175,6 +238,42 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
     /// Whether this method can co-execute (a [`HybridSpec`] is attached).
     pub fn has_hybrid_version(&self) -> bool {
         self.hybrid.is_some()
+    }
+
+    /// Whether the serving layer may coalesce invocations of this method
+    /// (a [`BatchSpec`] is attached).
+    pub fn has_batch_version(&self) -> bool {
+        self.batch.is_some()
+    }
+
+    /// Index-space items of one request (batchable methods only).
+    ///
+    /// # Panics
+    /// Panics when the method has no [`BatchSpec`]; the serving layer
+    /// only routes here after [`HeteroMethod::has_batch_version`] checks.
+    pub fn batch_items(&self, input: &I) -> usize {
+        (self.batch.as_ref().expect("batch spec present").items)(input)
+    }
+
+    /// The request's compatibility key (batchable methods only; see
+    /// [`HeteroMethod::batch_items`] for the panic contract).
+    pub fn batch_compat(&self, input: &I) -> u64 {
+        (self.batch.as_ref().expect("batch spec present").compat)(input)
+    }
+
+    /// Fuse a batch of request inputs into one invocation input, in
+    /// request order (batchable methods only; see
+    /// [`HeteroMethod::batch_items`] for the panic contract).
+    pub fn batch_compose(&self, inputs: &[Arc<I>]) -> Arc<I> {
+        (self.batch.as_ref().expect("batch spec present").compose)(inputs)
+    }
+
+    /// De-multiplex a fused result back into per-request results;
+    /// `counts[i]` is request `i`'s item count in compose order
+    /// (batchable methods only; see [`HeteroMethod::batch_items`] for
+    /// the panic contract).
+    pub fn batch_split(&self, fused: R, counts: &[usize]) -> Vec<R> {
+        (self.batch.as_ref().expect("batch spec present").split)(fused, counts)
     }
 
     /// Resolve the target for this method (§6): user rules first, then
@@ -493,6 +592,33 @@ mod tests {
         let (r, how) = m.invoke(&e, None, &vec![4, 5]).unwrap();
         assert_eq!(r, 9);
         assert!(matches!(how, Executed::Smp { .. }));
+    }
+
+    #[test]
+    fn batch_spec_composes_and_splits_in_request_order() {
+        use crate::somd::partition::stitched_spans;
+        let m = method().with_batch(
+            BatchSpec::new(
+                |v: &Vec<i64>| v.len(),
+                |inputs| {
+                    Arc::new(inputs.iter().flat_map(|v| v.iter().copied()).collect::<Vec<i64>>())
+                },
+                |fused: i64, _counts| vec![fused], // sums don't demux; see below
+            )
+            .with_compat(|v| v.len() as u64 % 2),
+        );
+        assert!(m.has_batch_version());
+        let a = Arc::new(vec![1i64, 2, 3]);
+        let b = Arc::new(vec![10i64, 20]);
+        assert_eq!(m.batch_items(&a), 3);
+        assert_ne!(m.batch_compat(&a), m.batch_compat(&b), "odd/even lengths differ");
+        let fused = m.batch_compose(&[a.clone(), b.clone()]);
+        assert_eq!(*fused, vec![1, 2, 3, 10, 20]);
+        // the span bookkeeping the batcher uses to cut results back up
+        let spans = stitched_spans(&[3, 2]);
+        assert_eq!((spans[0].lo, spans[0].hi), (0, 3));
+        assert_eq!((spans[1].lo, spans[1].hi), (3, 5));
+        assert!(!method().has_batch_version(), "specs are opt-in");
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //!    scheduler's learned ratio.
 //!
 //! [`harness`] regenerates the paper's tables/figures; [`modeled`] holds
-//! the calibrated parallel-makespan model used on this 1-core testbed.
+//! the calibrated parallel-makespan model used on this 1-core testbed;
+//! [`serve`] is the serving-layer load harness (open-loop arrival sweep,
+//! batched vs unbatched) plus the batchable method builders it and the
+//! serving correctness suite share.
 
 pub mod crypt;
 pub mod gpu;
@@ -24,6 +27,7 @@ pub mod interp;
 pub mod lufact;
 pub mod modeled;
 pub mod params;
+pub mod serve;
 pub mod series;
 pub mod sor;
 pub mod sparse;

@@ -1,0 +1,499 @@
+//! The serving-layer load harness + the batchable benchmark methods.
+//!
+//! Two parts:
+//!
+//! * **Batchable methods** — [`vecadd_batched`] (the Listing-8 shape:
+//!   f32 adds are exact, so a coalesced batch must be bitwise identical
+//!   to N sequential invocations) and [`crypt_batched`] (one IDEA cipher
+//!   pass over an *owned* input, with a key-fingerprint compatibility
+//!   key: passes under different subkey schedules must never share a
+//!   launch).  `rust/tests/serve_batching.rs` drives both through the
+//!   compose/split round-trip suite.
+//! * **The open-loop load harness** — [`run_load`] fires `requests`
+//!   requests at a fixed arrival rate (`arrival_hz`; 0 = unthrottled
+//!   saturation) from `clients` client threads into a
+//!   [`Service`], measuring per-request latency from the request's
+//!   *scheduled* arrival to batch completion (so coordinated omission
+//!   cannot flatter the percentiles), and [`report`] sweeps arrival
+//!   rates in batched vs unbatched mode, emitting `BENCH_serve.json`.
+//!
+//! With `check`, the report gates on the serving layer's reason to
+//! exist: at the highest arrival rate, batched throughput must be at
+//! least the unbatched throughput (within `tol`), and the batched row
+//! must be non-vacuous — a mean of ≥ 2 requests per executed batch.
+//! Schema documented in `docs/BENCHMARKS.md`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{BatchSpec, HeteroMethod};
+use crate::serve::{AdmissionPolicy, Service, ServiceConfig};
+use crate::somd::partition::Block1D;
+use crate::somd::reduction::Assemble;
+use crate::somd::{BlockPart, Engine, SomdMethod};
+use crate::util::json::Json;
+use crate::util::prng::Xorshift64;
+use crate::util::stats::percentiles;
+
+use super::crypt::{self, BLOCK_BYTES, SUBKEYS};
+
+const SEED: u64 = 0x5e7e_2026;
+
+// ---------------------------------------------------------------------------
+// Batchable method builders
+// ---------------------------------------------------------------------------
+
+/// Listing-8 vector addition with a batch-compose/split spec: requests
+/// concatenate element-wise into one fused add and split back by element
+/// count.  f32 addition is exact per lane, so the coalesced result is
+/// bitwise identical to per-request invocations — the serving
+/// correctness suite's workhorse.
+pub fn vecadd_batched() -> HeteroMethod<(Vec<f32>, Vec<f32>), BlockPart, (), Vec<f32>> {
+    let smp = SomdMethod::new(
+        "VecAdd.add",
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |inp, p, _, _| {
+            let (a, b) = inp;
+            p.own.iter().map(|i| a[i] + b[i]).collect::<Vec<f32>>()
+        },
+        Assemble,
+    );
+    HeteroMethod::smp_only(smp).with_batch(vecadd_batch_spec())
+}
+
+/// The [`BatchSpec`] of [`vecadd_batched`], exposed so tests can attach
+/// it to device-capable variants of the same method.
+pub fn vecadd_batch_spec() -> BatchSpec<(Vec<f32>, Vec<f32>), Vec<f32>> {
+    BatchSpec::new(
+        |inp: &(Vec<f32>, Vec<f32>)| inp.0.len(),
+        |inputs| {
+            let total: usize = inputs.iter().map(|i| i.0.len()).sum();
+            let mut a = Vec::with_capacity(total);
+            let mut b = Vec::with_capacity(total);
+            for i in inputs {
+                a.extend_from_slice(&i.0);
+                b.extend_from_slice(&i.1);
+            }
+            Arc::new((a, b))
+        },
+        |fused: Vec<f32>, counts| {
+            let mut out = Vec::with_capacity(counts.len());
+            let mut it = fused.into_iter();
+            for &c in counts {
+                out.push(it.by_ref().take(c).collect::<Vec<f32>>());
+            }
+            out
+        },
+    )
+}
+
+/// An owned Crypt pass request (the serving layer needs `'static`
+/// inputs, so unlike [`crypt::PassInput`] the source is owned).
+pub struct CryptServeInput {
+    /// Source bytes (8-byte aligned: whole cipher blocks).
+    pub src: Vec<u8>,
+    /// The subkey schedule of this pass.
+    pub keys: [u32; SUBKEYS],
+}
+
+/// FNV-1a over a subkey schedule: the compatibility key of
+/// [`crypt_batched`].
+fn key_fingerprint(keys: &[u32; SUBKEYS]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &k in keys {
+        h ^= u64::from(k);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One IDEA cipher pass with a batch spec: the index space is cipher
+/// blocks, requests concatenate block-wise, and only requests under the
+/// *same* subkey schedule may fuse (two keys in one launch would cipher
+/// the wrong spans).  Integer IDEA is exact, so coalesced ciphertext is
+/// bitwise identical to the sequential cipher per request.
+pub fn crypt_batched() -> HeteroMethod<CryptServeInput, BlockPart, (), Vec<u8>> {
+    let smp = SomdMethod::new(
+        "Crypt.cipher",
+        |inp: &CryptServeInput, n| Block1D::new().ranges(inp.src.len() / BLOCK_BYTES, n),
+        |_, _| (),
+        |inp, p, _, _| crypt::cipher_partial(&inp.src, &inp.keys, p.own.lo, p.own.hi),
+        Assemble,
+    );
+    HeteroMethod::smp_only(smp).with_batch(
+        BatchSpec::new(
+            |inp: &CryptServeInput| inp.src.len() / BLOCK_BYTES,
+            |inputs| {
+                let total: usize = inputs.iter().map(|i| i.src.len()).sum();
+                let mut src = Vec::with_capacity(total);
+                for i in inputs {
+                    src.extend_from_slice(&i.src);
+                }
+                Arc::new(CryptServeInput { src, keys: inputs[0].keys })
+            },
+            |fused: Vec<u8>, counts| {
+                let mut out = Vec::with_capacity(counts.len());
+                let mut off = 0usize;
+                for &c in counts {
+                    let bytes = c * BLOCK_BYTES;
+                    out.push(fused[off..off + bytes].to_vec());
+                    off += bytes;
+                }
+                out
+            },
+        )
+        .with_compat(|inp| key_fingerprint(&inp.keys)),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop load harness
+// ---------------------------------------------------------------------------
+
+/// One load run's shape.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSpec {
+    /// Open-loop arrival rate in requests/second across all clients;
+    /// `0.0` means unthrottled (every request scheduled at t=0 — the
+    /// saturation row the `--check` gate reads).
+    pub arrival_hz: f64,
+    /// Total requests fired.
+    pub requests: usize,
+    /// Client threads the arrival stream is interleaved across.
+    pub clients: usize,
+    /// Elements per vecadd request.
+    pub elems: usize,
+    /// Engine worker (MI) count.
+    pub workers: usize,
+}
+
+/// One measured row of the sweep.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// `"batched"` or `"unbatched"`.
+    pub mode: String,
+    /// Human-readable arrival rate (`"4000/s"` or `"max"`).
+    pub arrival: String,
+    /// Numeric arrival rate (0.0 = unthrottled).
+    pub arrival_hz: f64,
+    /// Requests fired.
+    pub requests: usize,
+    /// Client threads.
+    pub clients: usize,
+    /// Elements per request.
+    pub elems: usize,
+    /// Engine workers.
+    pub workers: usize,
+    /// Latency percentiles, milliseconds (scheduled arrival → batch
+    /// completion).
+    pub p50_ms: f64,
+    /// 95th-percentile latency, milliseconds.
+    pub p95_ms: f64,
+    /// 99th-percentile latency, milliseconds.
+    pub p99_ms: f64,
+    /// Worst-case latency, milliseconds.
+    pub max_ms: f64,
+    /// Completed requests per second (first scheduled arrival → last
+    /// completion).
+    pub throughput_rps: f64,
+    /// Mean requests per executed batch.
+    pub mean_batch: f64,
+    /// Largest executed batch, in requests.
+    pub max_batch: u64,
+    /// Fused batches executed.
+    pub batches: u64,
+    /// Requests turned away by admission control.
+    pub rejected: u64,
+}
+
+/// Run one open-loop load: `spec.requests` vecadd requests at
+/// `spec.arrival_hz` through a fresh [`Service`], batched
+/// (`max_batch_items` = 32 requests' worth, 1 ms linger) or unbatched
+/// (`max_batch_items` = 1 — every request its own launch through the
+/// identical code path, the honest control).
+pub fn run_load(batched: bool, spec: &LoadSpec) -> Result<ServeRow> {
+    let cfg = if batched {
+        ServiceConfig {
+            max_batch_items: spec.elems.saturating_mul(32).max(1),
+            max_batch_delay: Duration::from_micros(1_000),
+            queue_depth: spec.requests.max(1),
+            admission: AdmissionPolicy::Block,
+            sched_snapshot: None,
+        }
+    } else {
+        ServiceConfig {
+            max_batch_items: 1,
+            max_batch_delay: Duration::ZERO,
+            queue_depth: spec.requests.max(1),
+            admission: AdmissionPolicy::Block,
+            sched_snapshot: None,
+        }
+    };
+    let service = Service::with_config(Engine::new(spec.workers), cfg);
+    let client = service.register(Arc::new(vecadd_batched())).map_err(|e| anyhow!("{e}"))?;
+
+    // deterministic inputs, generated before the clock starts
+    let inputs: Vec<Arc<(Vec<f32>, Vec<f32>)>> = (0..spec.requests)
+        .map(|i| {
+            let mut rng = Xorshift64::new(SEED ^ (i as u64).wrapping_mul(0x9e37_79b9));
+            let a: Vec<f32> = (0..spec.elems).map(|_| f32::from(rng.u16()) / 256.0).collect();
+            let b: Vec<f32> = (0..spec.elems).map(|_| f32::from(rng.u16()) / 256.0).collect();
+            Arc::new((a, b))
+        })
+        .collect();
+
+    let clients = spec.clients.max(1);
+    let base = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(spec.requests);
+    let mut last_completed = base;
+    let mut failed = 0usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let client = client.clone();
+            let inputs = &inputs;
+            handles.push(s.spawn(move || {
+                let mut tickets = Vec::new();
+                let mut failed = 0usize;
+                let mut i = c;
+                while i < inputs.len() {
+                    let scheduled = if spec.arrival_hz > 0.0 {
+                        base + Duration::from_secs_f64(i as f64 / spec.arrival_hz)
+                    } else {
+                        base
+                    };
+                    let now = Instant::now();
+                    if scheduled > now {
+                        std::thread::sleep(scheduled - now);
+                    }
+                    match client.submit(inputs[i].clone()) {
+                        Ok(t) => tickets.push((scheduled, t)),
+                        Err(_) => failed += 1,
+                    }
+                    i += clients;
+                }
+                let mut done = Vec::with_capacity(tickets.len());
+                for (scheduled, t) in tickets {
+                    match t.wait() {
+                        Ok(o) => {
+                            let lat =
+                                o.completed_at.saturating_duration_since(scheduled).as_secs_f64();
+                            done.push((lat, o.completed_at));
+                        }
+                        Err(_) => failed += 1,
+                    }
+                }
+                (done, failed)
+            }));
+        }
+        for h in handles {
+            let (done, f) = h.join().expect("load client thread");
+            failed += f;
+            for (lat, at) in done {
+                latencies.push(lat);
+                if at > last_completed {
+                    last_completed = at;
+                }
+            }
+        }
+    });
+    service.drain();
+    let m = service.metrics();
+    if failed > 0 || m.failed > 0 {
+        bail!("{failed} request(s) failed during the load run (metrics: {} failed)", m.failed);
+    }
+    if latencies.is_empty() {
+        bail!("load run completed no requests");
+    }
+
+    let span = last_completed.saturating_duration_since(base).as_secs_f64();
+    let p = percentiles(&latencies);
+    Ok(ServeRow {
+        mode: if batched { "batched" } else { "unbatched" }.to_string(),
+        arrival: if spec.arrival_hz > 0.0 {
+            format!("{:.0}/s", spec.arrival_hz)
+        } else {
+            "max".to_string()
+        },
+        arrival_hz: spec.arrival_hz.max(0.0),
+        requests: spec.requests,
+        clients,
+        elems: spec.elems,
+        workers: spec.workers,
+        p50_ms: p.p50 * 1e3,
+        p95_ms: p.p95 * 1e3,
+        p99_ms: p.p99 * 1e3,
+        max_ms: p.max * 1e3,
+        throughput_rps: if span > 0.0 { latencies.len() as f64 / span } else { 0.0 },
+        mean_batch: m.mean_batch_requests(),
+        max_batch: m.max_batch_requests,
+        batches: m.batches,
+        rejected: m.rejected,
+    })
+}
+
+/// Render the sweep as the `BENCH_serve.json` schema (see
+/// `docs/BENCHMARKS.md`).
+pub fn to_json(rows: &[ServeRow]) -> Json {
+    use std::collections::BTreeMap;
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("serve_load/v1".to_string()));
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("mode".to_string(), Json::Str(r.mode.clone()));
+            m.insert("arrival".to_string(), Json::Str(r.arrival.clone()));
+            m.insert("arrival_hz".to_string(), Json::Num(r.arrival_hz));
+            m.insert("requests".to_string(), Json::Num(r.requests as f64));
+            m.insert("clients".to_string(), Json::Num(r.clients as f64));
+            m.insert("elems".to_string(), Json::Num(r.elems as f64));
+            m.insert("workers".to_string(), Json::Num(r.workers as f64));
+            m.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
+            m.insert("p95_ms".to_string(), Json::Num(r.p95_ms));
+            m.insert("p99_ms".to_string(), Json::Num(r.p99_ms));
+            m.insert("max_ms".to_string(), Json::Num(r.max_ms));
+            m.insert("throughput_rps".to_string(), Json::Num(r.throughput_rps));
+            m.insert("mean_batch".to_string(), Json::Num(r.mean_batch));
+            m.insert("max_batch".to_string(), Json::Num(r.max_batch as f64));
+            m.insert("batches".to_string(), Json::Num(r.batches as f64));
+            m.insert("rejected".to_string(), Json::Num(r.rejected as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("rows".to_string(), Json::Arr(arr));
+    Json::Obj(top)
+}
+
+/// The full sweep's shape: per-rate [`LoadSpec`]s are derived from this.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Arrival rates, one unbatched + one batched row each; the *last*
+    /// is the gate's "highest" (use `0.0` = unthrottled saturation).
+    pub rates: Vec<f64>,
+    /// Requests per row.
+    pub requests: usize,
+    /// Client threads per row.
+    pub clients: usize,
+    /// Elements per request.
+    pub elems: usize,
+    /// Engine workers.
+    pub workers: usize,
+}
+
+/// Run the arrival sweep (unbatched + batched row per rate), print the
+/// table, write `out_path`, and with `check` gate on batched throughput
+/// ≥ unbatched within `tol` at the highest rate — refusing vacuous rows
+/// (mean batch < 2 requests).
+pub fn report(sweep: &SweepSpec, out_path: &str, check: bool, tol: f64) -> Result<()> {
+    let SweepSpec { rates, requests, clients, elems, workers } = sweep;
+    let (requests, clients, elems, workers) = (*requests, *clients, *elems, *workers);
+    if rates.is_empty() {
+        bail!("serve bench needs at least one arrival rate");
+    }
+    println!(
+        "== Serving layer: open-loop load, {requests} reqs x {elems} elems, \
+         {clients} clients, {workers} workers =="
+    );
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>10} {:>9}",
+        "Mode", "arrival", "p50 (ms)", "p95 (ms)", "p99 (ms)", "thruput r/s", "mean bat", "rejected"
+    );
+    let mut rows = Vec::new();
+    for &hz in rates {
+        let spec = LoadSpec { arrival_hz: hz, requests, clients, elems, workers };
+        for batched in [false, true] {
+            let r = run_load(batched, &spec)?;
+            println!(
+                "{:<10} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>12.0} {:>10.1} {:>9}",
+                r.mode, r.arrival, r.p50_ms, r.p95_ms, r.p99_ms, r.throughput_rps, r.mean_batch,
+                r.rejected
+            );
+            rows.push(r);
+        }
+    }
+    std::fs::write(out_path, to_json(&rows).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if check {
+        // the gate reads the final rate's pair: [..., unbatched, batched]
+        let batched = rows.last().expect("rows nonempty");
+        let unbatched = &rows[rows.len() - 2];
+        assert_eq!(batched.mode, "batched");
+        assert_eq!(unbatched.mode, "unbatched");
+        if batched.mean_batch < 2.0 {
+            bail!(
+                "vacuous batched row at the highest arrival rate: mean batch {:.2} requests \
+                 (< 2) — coalescing never happened, the throughput comparison proves nothing",
+                batched.mean_batch
+            );
+        }
+        if batched.throughput_rps * tol < unbatched.throughput_rps {
+            bail!(
+                "batched throughput lost to unbatched at the highest arrival rate: \
+                 {:.0} vs {:.0} req/s (tol {tol})",
+                batched.throughput_rps,
+                unbatched.throughput_rps
+            );
+        }
+        println!(
+            "check ok: batched {:.0} req/s >= unbatched {:.0} req/s at arrival '{}' \
+             (mean batch {:.1} requests)",
+            batched.throughput_rps, unbatched.throughput_rps, batched.arrival, batched.mean_batch
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_fingerprint_separates_key_schedules() {
+        let mut a = [7u32; SUBKEYS];
+        let b = [7u32; SUBKEYS];
+        assert_eq!(key_fingerprint(&a), key_fingerprint(&b));
+        a[51] ^= 1;
+        assert_ne!(key_fingerprint(&a), key_fingerprint(&b));
+    }
+
+    #[test]
+    fn vecadd_spec_round_trips_ragged_sizes() {
+        let m = vecadd_batched();
+        let inputs: Vec<Arc<(Vec<f32>, Vec<f32>)>> = [3usize, 1, 5]
+            .iter()
+            .map(|&n| {
+                Arc::new((
+                    (0..n).map(|i| i as f32).collect::<Vec<f32>>(),
+                    (0..n).map(|i| (i * 2) as f32).collect::<Vec<f32>>(),
+                ))
+            })
+            .collect();
+        let counts: Vec<usize> = inputs.iter().map(|i| m.batch_items(i)).collect();
+        let fused = m.batch_compose(&inputs);
+        assert_eq!(fused.0.len(), 9);
+        let result = m.smp.invoke(&fused, 2);
+        let parts = m.batch_split(result, &counts);
+        assert_eq!(parts.len(), 3);
+        for (inp, part) in inputs.iter().zip(&parts) {
+            let want: Vec<f32> = inp.0.iter().zip(&inp.1).map(|(a, b)| a + b).collect();
+            assert_eq!(part, &want);
+        }
+    }
+
+    #[test]
+    fn smp_share_of_fused_space_matches_direct_invoke() {
+        use crate::somd::master::run_mis;
+        let inp = ((0..64).map(|i| i as f32).collect::<Vec<f32>>(), vec![1.0f32; 64]);
+        let parts = Block1D::new().ranges(inp.0.len(), 3);
+        let partials = run_mis(&inp, &parts, &(), &|inp: &(Vec<f32>, Vec<f32>), p, _: &(), _| {
+            p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>()
+        });
+        let flat: Vec<f32> = partials.into_iter().flatten().collect();
+        assert_eq!(flat, vecadd_batched().smp.invoke(&inp, 5));
+    }
+}

@@ -16,10 +16,15 @@
 //!   paper's evaluation ([`bench_suite`]): sequential, SOMD, and
 //!   hand-threaded versions of Crypt, LUFact, Series, SOR and
 //!   SparseMatMult, plus the harness regenerating every table and figure.
+//! * **Serving layer** — a multi-client invocation service in front of
+//!   the engine ([`serve`]): per-method micro-batch queues coalesce
+//!   compatible concurrent requests into few fused launches, with
+//!   admission control and graceful drain.
 //!
 //! See DESIGN.md for the paper→repo map, `docs/ARCHITECTURE.md` for the
 //! navigable three-layer guide (including the hybrid co-execution
-//! walkthrough), `docs/BENCHMARKS.md` for the bench surface, and
+//! walkthrough and the serving sequence diagram), `docs/SERVING.md` for
+//! the serving layer, `docs/BENCHMARKS.md` for the bench surface, and
 //! EXPERIMENTS.md for results.
 
 #![warn(missing_docs)]
@@ -28,6 +33,7 @@ pub mod backend;
 pub mod bench_suite;
 pub mod device;
 pub mod runtime;
+pub mod serve;
 pub mod somd;
 pub mod util;
 

@@ -6,6 +6,8 @@
 //! somd bench interp [--reps N] [--out FILE] [--smoke] [--check]
 //! somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE]
 //!                   [--tol T] [--smoke] [--check]
+//! somd bench serve  [--requests N] [--clients C] [--elems E] [--workers W]
+//!                   [--out FILE] [--tol T] [--smoke] [--check]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
 //!          [--class A|B|C] [--scale S] [--partitions N]
 //!          [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]
@@ -17,7 +19,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use somd::bench_suite::{crypt, gpu, harness, interp, lufact, modeled, series, sor, sparse};
+use somd::bench_suite::{crypt, gpu, harness, interp, lufact, modeled, serve, series, sor, sparse};
 use somd::bench_suite::{Class, Sizes};
 use somd::device::{DeviceProfile, DeviceSession};
 use somd::runtime::Registry;
@@ -45,9 +47,10 @@ fn dispatch(args: &Args) -> Result<()> {
         _ => {
             eprintln!(
                 "usage: somd <info|bench|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|serve> [--class A|B|C|all] [--scale S] [--reps N]\n\
                  \x20      somd bench interp [--reps N] [--out FILE] [--smoke] [--check]\n\
                  \x20      somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE] [--tol T] [--smoke] [--check]\n\
+                 \x20      somd bench serve [--requests N] [--clients C] [--elems E] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
                  e2e:   somd e2e [--scale S]\n\
@@ -127,6 +130,25 @@ fn bench(args: &Args) -> Result<()> {
             let out = args.opt("out").unwrap_or("BENCH_hybrid.json");
             let tol = args.opt_f64("tol", 1.10);
             harness::print_hybrid(reps, workers, learn, out, args.flag("check"), tol)?;
+        }
+        "serve" => {
+            // serving-layer load harness: open-loop arrival sweep through
+            // the micro-batching service, batched vs unbatched rows; the
+            // final (unthrottled) rate is the saturation row --check
+            // gates on.  --smoke is the cheap CI variant.
+            let smoke = args.flag("smoke");
+            let requests = args.opt_usize("requests", if smoke { 240 } else { 600 });
+            let clients = args.opt_usize("clients", 4);
+            let elems = args.opt_usize("elems", 1024);
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let workers = args.opt_usize("workers", cores.min(4));
+            let out = args.opt("out").unwrap_or("BENCH_serve.json");
+            let tol = args.opt_f64("tol", 1.10);
+            let rates: Vec<f64> =
+                if smoke { vec![2000.0, 0.0] } else { vec![1000.0, 4000.0, 0.0] };
+            let sweep = serve::SweepSpec { rates, requests, clients, elems, workers };
+            serve::report(&sweep, out, args.flag("check"), tol)?;
         }
         "auto" => {
             let reg = Registry::load_default()?;

@@ -1,0 +1,334 @@
+//! Per-method micro-batch queues: coalesce compatible concurrent
+//! invocations into few fused launches.
+//!
+//! Each registered method owns one [`MethodQueue`] and one dispatcher
+//! thread.  Clients enqueue requests (after passing the queue's
+//! admission [`Gate`](super::admission::Gate)); the dispatcher takes the
+//! longest *FIFO head run* of compatible requests — same
+//! [`batch_compat`](crate::backend::HeteroMethod::batch_compat) key,
+//! fused item total within `max_batch_items` — lingering up to
+//! `max_batch_delay` past the head request's arrival for peers to show
+//! up, then:
+//!
+//! 1. **compose** the request inputs into one fused input,
+//! 2. execute it as a *single* engine submission (SMP / device / hybrid,
+//!    whatever the rules + scheduler resolve — one launch, one set of
+//!    H2D/D2H transfers, amortized across the whole batch),
+//! 3. **split** the fused result and resolve each request's
+//!    [`Ticket`](super::Ticket).
+//!
+//! FIFO order is never reordered around: a request with an incompatible
+//! key *ends* the current batch rather than being skipped, so no request
+//! can be starved by a stream of better-batching peers behind it.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::backend::HeteroMethod;
+use crate::somd::engine::Engine;
+
+use super::admission::{AdmitError, Gate};
+use super::metrics::ServeMetrics;
+use super::service::{BatchKnobs, ServeError, ServeOutcome, Ticket};
+
+/// One queued request: its input, demux bookkeeping, and the sender that
+/// resolves the client's [`Ticket`].
+pub(crate) struct Pending<I: ?Sized, R> {
+    pub(crate) input: Arc<I>,
+    pub(crate) items: usize,
+    pub(crate) compat: u64,
+    pub(crate) enqueued: Instant,
+    pub(crate) tx: mpsc::Sender<Result<ServeOutcome<R>, ServeError>>,
+}
+
+struct QueueState<I: ?Sized, R> {
+    q: VecDeque<Pending<I, R>>,
+    closed: bool,
+}
+
+/// The longest FIFO prefix of `q` that may fuse into one batch: every
+/// request shares the head's compat key and the item total stays within
+/// `max_items` (the head request always counts, even when it alone
+/// exceeds the cap — an oversized request runs as its own batch).
+/// Returns `(requests, items)`.
+fn head_run<I: ?Sized, R>(q: &VecDeque<Pending<I, R>>, max_items: usize) -> (usize, usize) {
+    let first_compat = match q.front() {
+        Some(p) => p.compat,
+        None => return (0, 0),
+    };
+    let mut n = 0usize;
+    let mut items = 0usize;
+    for p in q {
+        if p.compat != first_compat {
+            break;
+        }
+        if n > 0 && items.saturating_add(p.items) > max_items {
+            break;
+        }
+        n += 1;
+        items = items.saturating_add(p.items);
+        if items >= max_items {
+            break;
+        }
+    }
+    (n, items)
+}
+
+/// One method's micro-batch queue (see the module docs).  Single
+/// consumer: exactly one dispatcher thread runs
+/// [`MethodQueue::run_dispatcher`].
+pub(crate) struct MethodQueue<I: ?Sized, P, E, R> {
+    method: Arc<HeteroMethod<I, P, E, R>>,
+    engine: Arc<Engine>,
+    knobs: BatchKnobs,
+    gate: Gate,
+    metrics: Arc<ServeMetrics>,
+    state: Mutex<QueueState<I, R>>,
+    cv: Condvar,
+}
+
+impl<I, P, E, R> MethodQueue<I, P, E, R>
+where
+    I: Send + Sync + 'static,
+    P: Send + Sync + 'static,
+    E: Sync + 'static,
+    R: Send + 'static,
+{
+    pub(crate) fn new(
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        engine: Arc<Engine>,
+        knobs: BatchKnobs,
+        gate: Gate,
+        metrics: Arc<ServeMetrics>,
+    ) -> Self {
+        MethodQueue {
+            method,
+            engine,
+            knobs,
+            gate,
+            metrics,
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit and enqueue one request; returns the ticket its result will
+    /// arrive on.
+    pub(crate) fn submit(&self, input: Arc<I>) -> Result<Ticket<R>, ServeError> {
+        match self.gate.enter() {
+            Ok(()) => {}
+            Err(AdmitError::Rejected) => {
+                self.metrics.note_rejected();
+                return Err(ServeError::Rejected);
+            }
+            Err(AdmitError::Closed) => return Err(ServeError::ShuttingDown),
+        }
+        let items = self.method.batch_items(&input);
+        let compat = self.method.batch_compat(&input);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.closed {
+                // lost the race against drain after passing the gate
+                drop(st);
+                self.gate.exit_n(1);
+                return Err(ServeError::ShuttingDown);
+            }
+            st.q.push_back(Pending { input, items, compat, enqueued: Instant::now(), tx });
+        }
+        self.cv.notify_all();
+        self.metrics.note_submitted();
+        Ok(Ticket::new(rx))
+    }
+
+    /// The dispatcher loop: batch, execute, demux — until the queue is
+    /// closed *and* empty (drain executes everything already admitted).
+    pub(crate) fn run_dispatcher(&self) {
+        while let Some(batch) = self.next_batch() {
+            self.execute(batch);
+        }
+    }
+
+    /// Block for the next batch (see the module docs for the lingering
+    /// and head-run rules); `None` once closed and empty.
+    fn next_batch(&self) -> Option<Vec<Pending<I, R>>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        // linger for peers: the window is anchored at the head request's
+        // arrival, so time the dispatcher spent executing the previous
+        // batch already counts against it (under load the wait is zero)
+        let deadline = st.q.front().expect("queue non-empty").enqueued + self.knobs.max_batch_delay;
+        loop {
+            if st.closed {
+                break; // draining: flush immediately
+            }
+            let (n, items) = head_run(&st.q, self.knobs.max_batch_items);
+            if items >= self.knobs.max_batch_items {
+                break; // the batch is full
+            }
+            if n < st.q.len() {
+                // the run is SEALED: the next queued request has an
+                // incompatible key or would overflow the cap, and FIFO
+                // means no later arrival can ever join the prefix —
+                // lingering further is pure added latency
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        let (n, _) = head_run(&st.q, self.knobs.max_batch_items);
+        let batch: Vec<Pending<I, R>> = st.q.drain(..n).collect();
+        drop(st);
+        // the requests left the queue: free their admission slots
+        self.gate.exit_n(batch.len());
+        Some(batch)
+    }
+
+    /// Compose → one engine submission → split → resolve tickets.  Any
+    /// failure (compose/split panic, lane error, launch panic) fails the
+    /// whole batch — every ticket gets the error, none is left hanging.
+    fn execute(&self, batch: Vec<Pending<I, R>>) {
+        let n = batch.len();
+        let t0 = Instant::now();
+        let inputs: Vec<Arc<I>> = batch.iter().map(|p| p.input.clone()).collect();
+        let counts: Vec<usize> = batch.iter().map(|p| p.items).collect();
+        let items: usize = counts.iter().sum();
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let fused = self.method.batch_compose(&inputs);
+            self.engine
+                .submit_hetero_batched(self.method.clone(), fused, n)
+                .join()
+                .map(|(r, how)| (self.method.batch_split(r, &counts), how))
+        }));
+        match run {
+            Ok(Ok((values, how))) => {
+                if values.len() != n {
+                    let msg = format!(
+                        "batch split returned {} results for {} requests",
+                        values.len(),
+                        n
+                    );
+                    self.fail_batch(batch, &msg);
+                    return;
+                }
+                let completed_at = Instant::now();
+                self.metrics.note_batch(n, items, t0.elapsed());
+                for (p, value) in batch.into_iter().zip(values) {
+                    let _ = p.tx.send(Ok(ServeOutcome {
+                        value,
+                        executed: how.clone(),
+                        batch_requests: n,
+                        completed_at,
+                    }));
+                }
+            }
+            Ok(Err(e)) => self.fail_batch(batch, &format!("{e:#}")),
+            Err(_panic) => self.fail_batch(batch, "batch execution panicked"),
+        }
+    }
+
+    fn fail_batch(&self, batch: Vec<Pending<I, R>>, msg: &str) {
+        self.metrics.note_failed(batch.len());
+        for p in batch {
+            let _ = p.tx.send(Err(ServeError::Failed(msg.to_string())));
+        }
+    }
+
+    pub(crate) fn method_name(&self) -> &str {
+        self.method.name()
+    }
+
+    pub(crate) fn pending(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub(crate) fn close(&self) {
+        self.gate.close();
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Object-safe view of a [`MethodQueue`] so the service can close
+/// queues of any request/result type on drain (the only operation drain
+/// needs; everything else goes through the typed [`ServiceClient`]).
+///
+/// [`ServiceClient`]: super::service::ServiceClient
+pub(crate) trait Lane: Send + Sync {
+    /// Close the queue: reject new requests, let the dispatcher drain.
+    fn close(&self);
+}
+
+impl<I, P, E, R> Lane for MethodQueue<I, P, E, R>
+where
+    I: Send + Sync + 'static,
+    P: Send + Sync + 'static,
+    E: Sync + 'static,
+    R: Send + 'static,
+{
+    fn close(&self) {
+        MethodQueue::close(self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(items: usize, compat: u64) -> Pending<Vec<i64>, ()> {
+        let (tx, _rx) = mpsc::channel();
+        // the receiver is dropped: these Pendings only feed head_run
+        Pending { input: Arc::new(Vec::new()), items, compat, enqueued: Instant::now(), tx }
+    }
+
+    #[test]
+    fn head_run_respects_the_item_cap() {
+        let q: VecDeque<_> = [pending(60, 0), pending(30, 0), pending(30, 0)].into();
+        // 60 + 30 fits in 100; the next 30 would overflow
+        assert_eq!(head_run(&q, 100), (2, 90));
+        // exact fill stops the run
+        assert_eq!(head_run(&q, 90), (2, 90));
+        assert_eq!(head_run(&q, 60), (1, 60));
+    }
+
+    #[test]
+    fn head_run_breaks_at_an_incompatible_key() {
+        let q: VecDeque<_> = [pending(10, 7), pending(10, 7), pending(10, 8), pending(10, 7)].into();
+        // FIFO: the key-8 request ends the batch; the trailing key-7
+        // request must NOT be reordered around it
+        assert_eq!(head_run(&q, 1000), (2, 20));
+    }
+
+    #[test]
+    fn oversized_head_request_runs_alone() {
+        let q: VecDeque<_> = [pending(500, 0), pending(10, 0)].into();
+        assert_eq!(head_run(&q, 100), (1, 500));
+    }
+
+    #[test]
+    fn empty_queue_has_no_run() {
+        let q: VecDeque<Pending<Vec<i64>, ()>> = VecDeque::new();
+        assert_eq!(head_run(&q, 100), (0, 0));
+    }
+
+    #[test]
+    fn zero_item_requests_still_batch() {
+        let q: VecDeque<_> = [pending(0, 0), pending(0, 0), pending(0, 0)].into();
+        assert_eq!(head_run(&q, 100), (3, 0));
+    }
+}

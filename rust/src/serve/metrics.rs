@@ -1,0 +1,152 @@
+//! Serving-layer counters: admission, batching and completion totals.
+//!
+//! One [`ServeMetrics`] instance is shared by a [`Service`] and all of
+//! its method queues; the load harness and the `somd bench serve`
+//! `--check` gate read it back through [`ServeMetrics::snapshot`] —
+//! notably [`ServeMetricsSnapshot::mean_batch_requests`], the
+//! non-vacuousness proof that coalescing actually happened.
+//!
+//! [`Service`]: crate::serve::Service
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Lifetime counters of one service (shared across its method queues).
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    items: AtomicU64,
+    max_batch_requests: AtomicU64,
+    exec_nanos: AtomicU64,
+}
+
+impl ServeMetrics {
+    /// One request passed admission and entered a queue.
+    pub(crate) fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// One request was turned away by admission control.
+    pub(crate) fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// One fused batch of `requests` requests / `items` index-space items
+    /// completed successfully after `exec` of dispatcher wall time
+    /// (compose + launch + split).
+    pub(crate) fn note_batch(&self, requests: usize, items: usize, exec: Duration) {
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        self.batched_requests.fetch_add(requests as u64, Ordering::SeqCst);
+        self.completed.fetch_add(requests as u64, Ordering::SeqCst);
+        self.items.fetch_add(items as u64, Ordering::SeqCst);
+        self.max_batch_requests.fetch_max(requests as u64, Ordering::SeqCst);
+        self.exec_nanos.fetch_add(exec.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// One fused batch of `requests` requests failed (every request in it
+    /// received the error).
+    pub(crate) fn note_failed(&self, requests: usize) {
+        self.failed.fetch_add(requests as u64, Ordering::SeqCst);
+    }
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> ServeMetricsSnapshot {
+        ServeMetricsSnapshot {
+            submitted: self.submitted.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::SeqCst),
+            completed: self.completed.load(Ordering::SeqCst),
+            failed: self.failed.load(Ordering::SeqCst),
+            batches: self.batches.load(Ordering::SeqCst),
+            batched_requests: self.batched_requests.load(Ordering::SeqCst),
+            items: self.items.load(Ordering::SeqCst),
+            max_batch_requests: self.max_batch_requests.load(Ordering::SeqCst),
+            exec_nanos: self.exec_nanos.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ServeMetrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeMetricsSnapshot {
+    /// Requests admitted into a queue.
+    pub submitted: u64,
+    /// Requests turned away by admission control.
+    pub rejected: u64,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests that received a batch-level failure.
+    pub failed: u64,
+    /// Fused batches executed successfully.
+    pub batches: u64,
+    /// Requests carried by those batches (`completed` from the batch side).
+    pub batched_requests: u64,
+    /// Index-space items carried by those batches.
+    pub items: u64,
+    /// Largest observed batch, in requests.
+    pub max_batch_requests: u64,
+    /// Total dispatcher wall nanoseconds spent executing batches.
+    pub exec_nanos: u64,
+}
+
+impl ServeMetricsSnapshot {
+    /// Mean requests per executed batch (0.0 before the first batch).
+    /// The `--check` gate requires this ≥ 2 on the batched row — a row
+    /// whose "batches" were all singletons proves nothing.
+    pub fn mean_batch_requests(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean dispatcher wall seconds per executed batch (0.0 before the
+    /// first batch).
+    pub fn mean_batch_exec_secs(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.exec_nanos as f64 / 1e9 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_notes_accumulate() {
+        let m = ServeMetrics::default();
+        m.note_submitted();
+        m.note_submitted();
+        m.note_submitted();
+        m.note_rejected();
+        m.note_batch(2, 2000, Duration::from_millis(4));
+        m.note_batch(1, 500, Duration::from_millis(2));
+        m.note_failed(3);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.failed, 3);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batched_requests, 3);
+        assert_eq!(s.items, 2500);
+        assert_eq!(s.max_batch_requests, 2);
+        assert!((s.mean_batch_requests() - 1.5).abs() < 1e-12);
+        assert!((s.mean_batch_exec_secs() - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_has_zero_means() {
+        let s = ServeMetrics::default().snapshot();
+        assert_eq!(s.mean_batch_requests(), 0.0);
+        assert_eq!(s.mean_batch_exec_secs(), 0.0);
+    }
+}

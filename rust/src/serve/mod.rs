@@ -1,0 +1,53 @@
+//! The serving layer: a multi-client invocation service with
+//! micro-batching and admission control in front of the
+//! [`Engine`](crate::somd::Engine).
+//!
+//! The SOMD model makes each invocation *declarative* — the runtime, not
+//! the caller, owns when and how work executes.  The engine already
+//! exploits that per invocation (lane choice: SMP / device / hybrid);
+//! this module exploits it *across* invocations: many small concurrent
+//! requests to the same method are coalesced into few large fused
+//! launches, amortizing exactly the costs that dominate small kernels —
+//! device launch and H2D/D2H transfer on the compiled lane, MI fan-out
+//! on the SMP lane.
+//!
+//! ```text
+//!  clients            per-method queues              engine
+//!  ───────            ────────────────               ──────
+//!  submit ──admission─▶ [r1 r2 r3 …] ──head run──▶ compose → one
+//!  submit ──admission─▶ [r4 r5]        (compat,     fused launch
+//!     ⋮        (block/    ⋮             ≤ max_batch  (smp|device|hybrid)
+//!              reject)                  items,            │
+//!                                       ≤ max_batch       ▼
+//!  ticket ◀── demux ◀──────────────────── delay)      split result
+//! ```
+//!
+//! The pieces:
+//!
+//! * [`Service`] / [`ServiceClient`] / [`Ticket`] — the client surface
+//!   ([`service`]);
+//! * the micro-batcher — per-method queues, FIFO head-run coalescing,
+//!   the `max_batch_items` / `max_batch_delay` knob pair ([`batcher`]);
+//! * admission control — bounded queues with block-or-reject
+//!   backpressure ([`admission`]);
+//! * counters — what actually got coalesced ([`metrics`]).
+//!
+//! Methods opt in by attaching a
+//! [`BatchSpec`](crate::backend::BatchSpec) (compose/split contract);
+//! the batcher guarantees the coalesced result is bitwise identical to N
+//! sequential invocations (`rust/tests/serve_batching.rs` enforces it).
+//! `somd bench serve` is the open-loop latency/throughput harness over
+//! this module.  `docs/SERVING.md` documents the request lifecycle,
+//! batching rules, backpressure semantics and every knob.
+
+pub mod admission;
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+
+pub use admission::{AdmissionPolicy, AdmitError, Gate};
+pub use metrics::{ServeMetrics, ServeMetricsSnapshot};
+pub use service::{
+    ServeError, ServeOutcome, Service, ServiceClient, ServiceConfig, Ticket,
+    DEFAULT_MAX_BATCH_DELAY, DEFAULT_MAX_BATCH_ITEMS, DEFAULT_QUEUE_DEPTH,
+};

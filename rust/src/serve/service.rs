@@ -1,0 +1,411 @@
+//! The multi-client invocation service: the front door many client
+//! threads submit [`HeteroMethod`] invocations to concurrently.
+//!
+//! See the [module docs](crate::serve) for the architecture and
+//! `docs/SERVING.md` for the full request lifecycle, batching rules and
+//! knob table.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::{Executed, HeteroMethod};
+use crate::somd::engine::Engine;
+use crate::somd::scheduler::Scheduler;
+
+use super::admission::{AdmissionPolicy, Gate};
+use super::batcher::{Lane, MethodQueue};
+use super::metrics::{ServeMetrics, ServeMetricsSnapshot};
+
+/// Default cap on fused index-space items per launch.
+pub const DEFAULT_MAX_BATCH_ITEMS: usize = 32_768;
+/// Default linger window past the head request's arrival.
+pub const DEFAULT_MAX_BATCH_DELAY: Duration = Duration::from_micros(500);
+/// Default bound on pending (admitted, unbatched) requests per method.
+pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+
+/// Service tunables.  [`ServiceConfig::from_env`] reads the
+/// `SOMD_SERVE_*` / `SOMD_SCHED_SNAPSHOT` environment knobs documented
+/// in `docs/SERVING.md`; [`ServiceConfig::default`] ignores the
+/// environment (hermetic — what the tests and the load harness use).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Cap on fused index-space items per launch (`max_batch_items`):
+    /// the throughput half of the latency/throughput knob pair.  A
+    /// single request above the cap still runs, alone.
+    pub max_batch_items: usize,
+    /// How long the dispatcher lingers past the *head* request's arrival
+    /// for batch peers (`max_batch_delay`): the latency half of the knob
+    /// pair.  Zero means "dispatch immediately with whatever is queued".
+    pub max_batch_delay: Duration,
+    /// Bound on pending requests per method queue (admission depth).
+    pub queue_depth: usize,
+    /// What a full queue does with the next request.
+    pub admission: AdmissionPolicy,
+    /// Scheduler-history snapshot path: loaded at service construction
+    /// (warm start) and written on drain, so lane/ratio learning
+    /// survives process restarts.
+    pub sched_snapshot: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch_items: DEFAULT_MAX_BATCH_ITEMS,
+            max_batch_delay: DEFAULT_MAX_BATCH_DELAY,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            admission: AdmissionPolicy::Block,
+            sched_snapshot: None,
+        }
+    }
+}
+
+fn env_parse<T: std::str::FromStr>(key: &str) -> Option<T> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+impl ServiceConfig {
+    /// Defaults overridden by the environment knobs (see
+    /// `docs/SERVING.md` for the table):
+    /// `SOMD_SERVE_MAX_BATCH_ITEMS`, `SOMD_SERVE_MAX_BATCH_DELAY_US`,
+    /// `SOMD_SERVE_QUEUE_DEPTH`, `SOMD_SERVE_ADMISSION` (`block` |
+    /// `reject`), `SOMD_SCHED_SNAPSHOT` (a file path).
+    pub fn from_env() -> ServiceConfig {
+        let mut cfg = ServiceConfig::default();
+        if let Some(v) = env_parse::<usize>("SOMD_SERVE_MAX_BATCH_ITEMS") {
+            cfg.max_batch_items = v.max(1);
+        }
+        if let Some(v) = env_parse::<u64>("SOMD_SERVE_MAX_BATCH_DELAY_US") {
+            cfg.max_batch_delay = Duration::from_micros(v);
+        }
+        if let Some(v) = env_parse::<usize>("SOMD_SERVE_QUEUE_DEPTH") {
+            cfg.queue_depth = v.max(1);
+        }
+        if let Ok(p) = std::env::var("SOMD_SERVE_ADMISSION") {
+            if let Some(policy) = AdmissionPolicy::parse(&p) {
+                cfg.admission = policy;
+            }
+        }
+        if let Ok(p) = std::env::var("SOMD_SCHED_SNAPSHOT") {
+            if !p.is_empty() {
+                cfg.sched_snapshot = Some(PathBuf::from(p));
+            }
+        }
+        cfg
+    }
+}
+
+/// The per-queue slice of a [`ServiceConfig`] the batcher needs.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct BatchKnobs {
+    pub(crate) max_batch_items: usize,
+    pub(crate) max_batch_delay: Duration,
+}
+
+/// Why a serve request did not produce a result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control turned the request away (full queue under the
+    /// [`AdmissionPolicy::Reject`] policy).  Retriable.
+    Rejected,
+    /// The service is draining; no new requests are admitted.
+    ShuttingDown,
+    /// The request's batch failed (lane error, compose/split panic, or a
+    /// dropped dispatcher); the message carries the cause.
+    Failed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected => write!(f, "request rejected by admission control"),
+            ServeError::ShuttingDown => write!(f, "service is shutting down"),
+            ServeError::Failed(msg) => write!(f, "request failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A completed request's payload: the de-multiplexed result plus how and
+/// with whom it ran.
+#[derive(Debug)]
+pub struct ServeOutcome<R> {
+    /// This request's share of the fused result.
+    pub value: R,
+    /// Where the *fused* invocation ran (shared by every request in the
+    /// batch).
+    pub executed: Executed,
+    /// How many client requests the batch coalesced (1 = this request
+    /// ran alone).
+    pub batch_requests: usize,
+    /// When the batch's results were demultiplexed (the load harness
+    /// computes latency from this stamp, so ticket-polling jitter on the
+    /// client side never inflates the percentiles).
+    pub completed_at: Instant,
+}
+
+/// A per-request future: resolves when the request's batch completes.
+pub struct Ticket<R> {
+    rx: mpsc::Receiver<Result<ServeOutcome<R>, ServeError>>,
+}
+
+impl<R> Ticket<R> {
+    pub(crate) fn new(rx: mpsc::Receiver<Result<ServeOutcome<R>, ServeError>>) -> Self {
+        Ticket { rx }
+    }
+
+    /// Block for the outcome.
+    pub fn wait(self) -> Result<ServeOutcome<R>, ServeError> {
+        match self.rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(ServeError::Failed("service dropped the request".to_string())),
+        }
+    }
+
+    /// Non-blocking poll: `Some(outcome)` once the batch completed (a
+    /// dropped request surfaces as the same failure `wait` reports, so
+    /// a polling client cannot spin forever on it).
+    pub fn try_wait(&self) -> Option<Result<ServeOutcome<R>, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(outcome) => Some(outcome),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(ServeError::Failed("service dropped the request".to_string())))
+            }
+        }
+    }
+}
+
+/// The multi-client invocation service (see the [module
+/// docs](crate::serve)).
+///
+/// # Examples
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use somd::backend::{BatchSpec, HeteroMethod};
+/// use somd::serve::{Service, ServiceConfig};
+/// use somd::somd::partition::Block1D;
+/// use somd::somd::reduction::Assemble;
+/// use somd::somd::{Engine, SomdMethod};
+///
+/// let m = Arc::new(
+///     HeteroMethod::smp_only(SomdMethod::new(
+///         "Scale.run",
+///         |v: &Vec<f32>, n| Block1D::new().ranges(v.len(), n),
+///         |_, _| (),
+///         |v, p, _, _| p.own.iter().map(|i| v[i] * 2.0).collect::<Vec<f32>>(),
+///         Assemble,
+///     ))
+///     .with_batch(BatchSpec::new(
+///         |v: &Vec<f32>| v.len(),
+///         |inputs| Arc::new(inputs.iter().flat_map(|v| v.iter().copied()).collect::<Vec<f32>>()),
+///         |fused: Vec<f32>, counts| {
+///             let mut out = Vec::new();
+///             let mut it = fused.into_iter();
+///             for &c in counts {
+///                 out.push(it.by_ref().take(c).collect::<Vec<f32>>());
+///             }
+///             out
+///         },
+///     )),
+/// );
+///
+/// let service = Service::with_config(Engine::new(4), ServiceConfig::default());
+/// let client = service.register(m)?;
+/// // any number of threads may clone `client` and submit concurrently;
+/// // compatible concurrent requests coalesce into one fused launch
+/// let ticket = client.submit(Arc::new(vec![1.0f32, 2.0]))?;
+/// let out = ticket.wait()?;
+/// assert_eq!(out.value, vec![2.0, 4.0]);
+/// service.drain(); // graceful: in-flight batches complete first
+/// # Ok::<(), somd::serve::ServeError>(())
+/// ```
+pub struct Service {
+    engine: Arc<Engine>,
+    cfg: ServiceConfig,
+    metrics: Arc<ServeMetrics>,
+    lanes: Mutex<Vec<Arc<dyn Lane>>>,
+    dispatchers: Mutex<Vec<JoinHandle<()>>>,
+    drained: AtomicBool,
+}
+
+impl Service {
+    /// A service over `engine`, configured from the environment
+    /// ([`ServiceConfig::from_env`]).
+    pub fn new(engine: Engine) -> Service {
+        Service::with_config(engine, ServiceConfig::from_env())
+    }
+
+    /// A service over `engine` with explicit tunables.  When
+    /// `cfg.sched_snapshot` names an existing file, the engine's
+    /// scheduler is replaced with the persisted history (warm start); a
+    /// malformed snapshot is reported and ignored — serving cold beats
+    /// not serving.
+    pub fn with_config(mut engine: Engine, cfg: ServiceConfig) -> Service {
+        if let Some(path) = &cfg.sched_snapshot {
+            if path.exists() {
+                match Scheduler::load(path, engine.scheduler().config()) {
+                    Ok(s) => engine = engine.with_scheduler(s),
+                    Err(e) => eprintln!("somd serve: ignoring scheduler snapshot: {e}"),
+                }
+            }
+        }
+        Service {
+            engine: Arc::new(engine),
+            cfg,
+            metrics: Arc::new(ServeMetrics::default()),
+            lanes: Mutex::new(Vec::new()),
+            dispatchers: Mutex::new(Vec::new()),
+            drained: AtomicBool::new(false),
+        }
+    }
+
+    /// The engine requests execute on.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The service's tunables.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Point-in-time copy of the service counters.
+    pub fn metrics(&self) -> ServeMetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Register a batchable method: creates its micro-batch queue, spawns
+    /// its dispatcher thread, and returns the (cloneable) client handle
+    /// requests are submitted through.  Fails when the method carries no
+    /// [`BatchSpec`](crate::backend::BatchSpec) or the service is
+    /// draining.
+    pub fn register<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+    ) -> Result<ServiceClient<I, P, E, R>, ServeError>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        if !method.has_batch_version() {
+            return Err(ServeError::Failed(format!(
+                "method '{}' has no batch spec — attach one with HeteroMethod::with_batch",
+                method.name()
+            )));
+        }
+        let knobs = BatchKnobs {
+            max_batch_items: self.cfg.max_batch_items.max(1),
+            max_batch_delay: self.cfg.max_batch_delay,
+        };
+        let gate = Gate::new(self.cfg.queue_depth, self.cfg.admission);
+        let queue = Arc::new(MethodQueue::new(
+            method,
+            self.engine.clone(),
+            knobs,
+            gate,
+            self.metrics.clone(),
+        ));
+        {
+            // the drained check and the lane/dispatcher registration must
+            // be one atomic step against drain(), or a concurrently
+            // registered lane would never be closed or joined — leaking
+            // its dispatcher and admitting requests after drain returned
+            let mut lanes = self.lanes.lock().unwrap();
+            if self.drained.load(Ordering::SeqCst) {
+                return Err(ServeError::ShuttingDown);
+            }
+            lanes.push(queue.clone() as Arc<dyn Lane>);
+            let dispatcher_queue = queue.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("somd-serve-{}", queue.method_name()))
+                .spawn(move || dispatcher_queue.run_dispatcher())
+                .expect("spawn serve dispatcher thread");
+            self.dispatchers.lock().unwrap().push(handle);
+        }
+        Ok(ServiceClient { queue })
+    }
+
+    /// Graceful shutdown (idempotent): stop admitting, let every
+    /// dispatcher execute what was already admitted, join the
+    /// dispatchers, flush the engine's device queue
+    /// ([`Engine::drain`]), and — when configured — persist the
+    /// scheduler snapshot.  In-flight batches complete
+    /// deterministically: every admitted request's ticket resolves.
+    pub fn drain(&self) {
+        // flip the flag under the lanes lock so no register() can slip a
+        // new lane in between the flag flip and the snapshot below
+        let lanes: Vec<Arc<dyn Lane>> = {
+            let lanes = self.lanes.lock().unwrap();
+            if self.drained.swap(true, Ordering::SeqCst) {
+                return;
+            }
+            lanes.clone()
+        };
+        for lane in &lanes {
+            lane.close();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.dispatchers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        self.engine.drain();
+        if let Some(path) = &self.cfg.sched_snapshot {
+            if let Err(e) = self.engine.scheduler().save(path) {
+                eprintln!("somd serve: {e}");
+            }
+        }
+    }
+}
+
+impl Drop for Service {
+    /// Dropping the service is a graceful [`Service::drain`].
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// A client handle for one registered method.  Cheap to clone; every
+/// clone submits into the same micro-batch queue, which is exactly how
+/// concurrent clients end up coalesced.
+pub struct ServiceClient<I: ?Sized, P, E, R> {
+    queue: Arc<MethodQueue<I, P, E, R>>,
+}
+
+impl<I: ?Sized, P, E, R> Clone for ServiceClient<I, P, E, R> {
+    fn clone(&self) -> Self {
+        ServiceClient { queue: self.queue.clone() }
+    }
+}
+
+impl<I, P, E, R> ServiceClient<I, P, E, R>
+where
+    I: Send + Sync + 'static,
+    P: Send + Sync + 'static,
+    E: Sync + 'static,
+    R: Send + 'static,
+{
+    /// Submit one invocation; returns the per-request future.  Blocks,
+    /// rejects or fails fast per the service's admission policy and
+    /// drain state.
+    pub fn submit(&self, input: Arc<I>) -> Result<Ticket<R>, ServeError> {
+        self.queue.submit(input)
+    }
+
+    /// The method this client submits to.
+    pub fn method_name(&self) -> String {
+        self.queue.method_name().to_string()
+    }
+
+    /// Requests currently pending (admitted, not yet batched) on this
+    /// method's queue.
+    pub fn pending(&self) -> usize {
+        self.queue.pending()
+    }
+}

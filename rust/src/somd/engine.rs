@@ -424,6 +424,34 @@ impl Engine {
         self.device.as_ref().map(|d| d.counters.snapshot())
     }
 
+    /// Block until every device job submitted so far has *executed*: a
+    /// barrier job round-trips the master thread's FIFO queue, so when
+    /// this returns, no previously queued device work is still pending.
+    ///
+    /// [`Engine::drop`](Drop) runs the same barrier first, which is the
+    /// shutdown-hardening contract: queued device jobs (including hybrid
+    /// device halves whose completion latch still needs the worker pool)
+    /// complete while every engine resource is provably alive, instead
+    /// of racing the master thread's channel-drain against field
+    /// teardown.  The serving layer also calls this on drain, after its
+    /// dispatchers have joined, to make shutdown deterministic end to
+    /// end.  No-op without a device lane.
+    pub fn drain(&self) {
+        if let Some(d) = &self.device {
+            let (tx, rx) = mpsc::channel::<()>();
+            let barrier: DeviceJob = Box::new(move |_ctx: &mut DeviceCtx<'_>| {
+                let _ = tx.send(());
+            });
+            // tolerate a master thread that already died (it never does
+            // under normal operation — jobs are panic-caught — but a
+            // drain must not turn an exotic failure into a double panic)
+            let sent = d.tx.as_ref().map(|t| t.send(barrier).is_ok()).unwrap_or(false);
+            if sent {
+                let _ = rx.recv();
+            }
+        }
+    }
+
     /// The architecture the rules select for `method` (§6); device targets
     /// are resolved by the caller against the available device profiles
     /// and revert to SMP when inapplicable.
@@ -628,6 +656,33 @@ impl Engine {
         }
     }
 
+    /// [`Engine::submit_hetero`] for a *fused* invocation the serving
+    /// layer coalesced out of `batch_requests` client requests: records
+    /// the batch occupancy (requests + fused item count) into the
+    /// scheduler history before submitting, so reports can tell
+    /// coalesced traffic from singleton calls, then runs through the
+    /// ordinary lane resolution — the launch's wall/stats samples feed
+    /// lane and ratio learning exactly like any other invocation, now
+    /// denominated in fused index spaces.
+    pub fn submit_hetero_batched<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        input: Arc<I>,
+        batch_requests: usize,
+    ) -> JobHandle<anyhow::Result<(R, Executed)>>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        if method.has_batch_version() {
+            let items = method.batch_items(&input);
+            self.scheduler.record_batch(method.name(), batch_requests, items);
+        }
+        self.submit_hetero(method, input)
+    }
+
     /// The pure-SMP submission path.  `hybrid_degraded` marks a hybrid
     /// resolution whose device share underflowed the minimum chunk: the
     /// wall is then also recorded as a (degraded) hybrid sample so the
@@ -702,6 +757,17 @@ impl Engine {
         self.device.as_ref().expect("resolved hybrid lane").submit(job);
         self.pool.submit(move || shared.run_smp_half());
         handle
+    }
+}
+
+impl Drop for Engine {
+    /// Deterministic shutdown: flush the device-master queue (see
+    /// [`Engine::drain`]) while the pool, scheduler and master are all
+    /// still alive, so no in-flight device job — and no hybrid latch
+    /// depending on one — is left racing the field-by-field teardown
+    /// that follows.
+    fn drop(&mut self) {
+        self.drain();
     }
 }
 

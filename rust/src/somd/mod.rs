@@ -57,8 +57,8 @@ pub use scheduler::{Choice, HybridSample, Scheduler, SchedulerConfig};
 pub use master::{run_mis, SomdMethod};
 pub use mi::MiCtx;
 pub use partition::{
-    split_fraction, Block1D, Block2D, BlockPart, Block2Part, RowDisjoint, Rows1D, SparsePart,
-    TreeDist,
+    split_fraction, stitched_spans, Block1D, Block2D, BlockPart, Block2Part, RowDisjoint, Rows1D,
+    SparsePart, TreeDist,
 };
 pub use phaser::Phaser;
 pub use reduction::{Assemble, FnReduce, Reduction};

@@ -43,6 +43,32 @@ pub fn split_fraction(len: usize, device_fraction: f64) -> (Range1, Range1) {
     (Range1::new(0, cut), Range1::new(cut, len))
 }
 
+/// Stitch per-request index-space lengths into consecutive sub-spans of
+/// the fused space: request `i` of a coalesced batch owns the returned
+/// `spans[i]` inside `[0, lens.iter().sum())`.  The serving layer's
+/// batcher (and its round-trip tests) use this to cut a fused result
+/// back into per-request results — the inverse of the concatenation a
+/// [`BatchSpec::compose`](crate::backend::BatchSpec) performs.
+///
+/// # Examples
+///
+/// ```
+/// use somd::somd::partition::stitched_spans;
+/// let spans = stitched_spans(&[3, 0, 4]);
+/// assert_eq!((spans[0].lo, spans[0].hi), (0, 3));
+/// assert!(spans[1].is_empty());
+/// assert_eq!((spans[2].lo, spans[2].hi), (3, 7));
+/// ```
+pub fn stitched_spans(lens: &[usize]) -> Vec<Range1> {
+    let mut out = Vec::with_capacity(lens.len());
+    let mut lo = 0usize;
+    for &n in lens {
+        out.push(Range1::new(lo, lo + n));
+        lo += n;
+    }
+    out
+}
+
 /// Block partitioning of `len` indexes (copy-free).
 ///
 /// # Examples
@@ -420,6 +446,22 @@ mod tests {
         let (smp, dev) = split_fraction(100, 0.3);
         assert_eq!(dev.len(), 30);
         assert_eq!(smp.len(), 70);
+    }
+
+    #[test]
+    fn stitched_spans_cover_and_abut() {
+        let lens = [5usize, 1, 0, 7, 3];
+        let spans = stitched_spans(&lens);
+        assert_eq!(spans.len(), lens.len());
+        assert_eq!(spans[0].lo, 0);
+        assert_eq!(spans.last().unwrap().hi, lens.iter().sum::<usize>());
+        for (s, &n) in spans.iter().zip(&lens) {
+            assert_eq!(s.len(), n);
+        }
+        for w in spans.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+        assert!(stitched_spans(&[]).is_empty());
     }
 
     #[test]

@@ -177,6 +177,15 @@ pub struct MethodHistory {
     pub bytes_d2h: u64,
     /// Lifetime kernel launches (device + hybrid runs).
     pub launches: u64,
+    /// Trailing client-requests-per-fused-invocation observations from
+    /// the serving layer's micro-batcher (1.0 = an unbatched launch).
+    pub batch_requests_per_invocation: Vec<f64>,
+    /// Lifetime fused invocations submitted through the batched path.
+    pub batched_invocations: u64,
+    /// Lifetime client requests coalesced into those invocations.
+    pub batched_requests: u64,
+    /// Lifetime index-space items carried by the batched path.
+    pub batched_items: u64,
     /// The last decision, for hysteresis.
     pub last_choice: Option<Choice>,
 }
@@ -238,6 +247,15 @@ impl MethodHistory {
         }
     }
 
+    /// Trailing-window mean client requests per fused invocation, `None`
+    /// until the serving layer submitted a batch for this method.  Lane
+    /// estimates stay wall-time-based — this surfaces *occupancy*, so a
+    /// report can tell whether a method's history was learned from
+    /// coalesced traffic (big fused index spaces) or singleton calls.
+    pub fn mean_batch_requests(&self) -> Option<f64> {
+        Self::mean(&self.batch_requests_per_invocation)
+    }
+
     /// Mean transfer bytes per device-touching run (the §7.3 "Crypt loses
     /// on the bus" signal, surfaced for reports).  Only runs that
     /// recorded transfer accounting count — failed/degraded runs moved
@@ -266,6 +284,9 @@ pub struct DecisionRow {
     pub device_fraction: Option<f64>,
     /// Mean bus bytes per device-touching run.
     pub transfer_bytes_per_run: f64,
+    /// Trailing mean client requests per fused invocation, if the serving
+    /// layer batched this method.
+    pub mean_batch_requests: Option<f64>,
     /// What the cost model would pick next for this method.
     pub choice: Choice,
 }
@@ -392,6 +413,29 @@ impl Scheduler {
         MethodHistory::push(&mut e.hybrid_secs, PENALTY_SECS, self.cfg.window);
         e.hybrid_runs += 1;
         e.hybrid_failures += 1;
+    }
+
+    /// Record one fused invocation submitted by the serving layer's
+    /// micro-batcher: `requests` client calls were coalesced into a
+    /// single launch covering `items` index-space items.  The wall/stats
+    /// samples of the launch itself still arrive through the ordinary
+    /// lane records (the fused invocation runs through the same
+    /// SMP/device/hybrid paths), so lane and ratio learning keep
+    /// converging on coalesced traffic; this record adds the *occupancy*
+    /// signal — how many requests and items each launch amortized —
+    /// which reports and capacity planning read back through
+    /// [`MethodHistory::mean_batch_requests`].
+    pub fn record_batch(&self, method: &str, requests: usize, items: usize) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(
+            &mut e.batch_requests_per_invocation,
+            requests as f64,
+            self.cfg.window,
+        );
+        e.batched_invocations += 1;
+        e.batched_requests += requests as u64;
+        e.batched_items += items as u64;
     }
 
     /// Record a hybrid invocation that *degraded* to pure SMP because the
@@ -577,6 +621,7 @@ impl Scheduler {
                 hybrid_secs: e.hybrid_estimate(),
                 device_fraction: e.device_fraction,
                 transfer_bytes_per_run: e.transfer_bytes_per_run(),
+                mean_batch_requests: e.mean_batch_requests(),
                 choice: if e.hybrid_runs > 0 {
                     Self::decide_history_hybrid(&self.cfg, e)
                 } else {
@@ -616,6 +661,16 @@ impl Scheduler {
             m.insert("bytes_h2d".to_string(), Json::Num(e.bytes_h2d as f64));
             m.insert("bytes_d2h".to_string(), Json::Num(e.bytes_d2h as f64));
             m.insert("launches".to_string(), Json::Num(e.launches as f64));
+            m.insert(
+                "batch_requests_per_invocation".to_string(),
+                arr(&e.batch_requests_per_invocation),
+            );
+            m.insert(
+                "batched_invocations".to_string(),
+                Json::Num(e.batched_invocations as f64),
+            );
+            m.insert("batched_requests".to_string(), Json::Num(e.batched_requests as f64));
+            m.insert("batched_items".to_string(), Json::Num(e.batched_items as f64));
             m.insert(
                 "last_choice".to_string(),
                 match e.last_choice {
@@ -694,11 +749,37 @@ impl Scheduler {
                     bytes_h2d: num("bytes_h2d"),
                     bytes_d2h: num("bytes_d2h"),
                     launches: num("launches"),
+                    // fields added by the serving layer: absent in
+                    // pre-serve snapshots
+                    batch_requests_per_invocation: secs_opt("batch_requests_per_invocation")?,
+                    batched_invocations: num("batched_invocations"),
+                    batched_requests: num("batched_requests"),
+                    batched_items: num("batched_items"),
                     last_choice,
                 },
             );
         }
         Ok(Scheduler { cfg, histories: Mutex::new(histories) })
+    }
+
+    /// Persist the full history store to `path` (the
+    /// [`Scheduler::to_json`] text).  The serving layer calls this on
+    /// drain when `SOMD_SCHED_SNAPSHOT` is set, so a restarted process
+    /// warm-starts its lane/ratio learning instead of re-exploring.
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().dump())
+            .map_err(|e| format!("writing scheduler snapshot {}: {e}", path.display()))
+    }
+
+    /// Rebuild a scheduler from a file written by [`Scheduler::save`]
+    /// (snapshots from any earlier history layout load cleanly — see
+    /// [`Scheduler::from_json`]).
+    pub fn load(path: &std::path::Path, cfg: SchedulerConfig) -> Result<Scheduler, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading scheduler snapshot {}: {e}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| format!("parsing scheduler snapshot {}: {e}", path.display()))?;
+        Self::from_json(cfg, &json)
     }
 }
 
@@ -1000,6 +1081,30 @@ mod tests {
     }
 
     #[test]
+    fn batch_records_accumulate_and_round_trip() {
+        let cfg = SchedulerConfig::default();
+        let s = Scheduler::new(cfg);
+        s.record_smp("Serve.m", Duration::from_millis(5));
+        s.record_batch("Serve.m", 8, 8000);
+        s.record_batch("Serve.m", 4, 4000);
+        s.record_batch("Serve.m", 1, 500);
+        let h = s.history("Serve.m").unwrap();
+        assert_eq!(h.batched_invocations, 3);
+        assert_eq!(h.batched_requests, 13);
+        assert_eq!(h.batched_items, 12_500);
+        assert!((h.mean_batch_requests().unwrap() - 13.0 / 3.0).abs() < 1e-12);
+        // occupancy must not perturb the lane decision inputs
+        assert_eq!(h.smp_secs.len(), 1);
+        assert_eq!(h.device_secs.len(), 0);
+        // and it round-trips through serialized text
+        let text = s.to_json().dump();
+        let restored = Scheduler::from_json(cfg, &Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(restored.history("Serve.m"), s.history("Serve.m"));
+        let row = &restored.decision_table()[0];
+        assert!((row.mean_batch_requests.unwrap() - 13.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn legacy_snapshots_without_hybrid_fields_load() {
         // a PR-1-era snapshot: only the two-lane fields
         let text = r#"{"Old.m":{"smp_secs":[0.01,0.01],"device_secs":[0.002,0.002],
@@ -1010,6 +1115,8 @@ mod tests {
         let h = s.history("Old.m").unwrap();
         assert!(h.hybrid_secs.is_empty());
         assert_eq!(h.device_fraction, None);
+        assert_eq!(h.batched_invocations, 0, "pre-serve snapshots carry no batch records");
+        assert_eq!(h.mean_batch_requests(), None);
         assert_eq!(s.decide("Old.m"), Choice::Device);
     }
 }

@@ -39,6 +39,72 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Exact percentile of a non-empty sample: linear interpolation between
+/// the two closest order statistics at rank `p/100 * (n-1)` — the
+/// *inclusive* definition (Hyndman–Fan type 7, numpy's default
+/// `linear`); `p` in `[0, 100]`.  Sorts a copy — callers with many
+/// reads over one buffer should sort once and use
+/// [`percentile_sorted`].
+///
+/// # Examples
+///
+/// ```
+/// use somd::util::stats::percentile;
+/// let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+/// assert_eq!(percentile(&xs, 0.0), 1.0);
+/// assert_eq!(percentile(&xs, 100.0), 100.0);
+/// assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-12);
+/// ```
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+/// [`percentile`] over an already ascending-sorted buffer.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    assert!((0.0..=100.0).contains(&p), "percentile rank {p} outside [0, 100]");
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// The latency percentiles the serving harness reports per row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    /// Sample count.
+    pub n: usize,
+    /// 50th percentile (median).
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Largest sample (the p100 tail).
+    pub max: f64,
+}
+
+/// Compute [`Percentiles`] over a non-empty sample buffer (one sort,
+/// three exact reads).
+pub fn percentiles(xs: &[f64]) -> Percentiles {
+    assert!(!xs.is_empty(), "percentiles of an empty sample");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Percentiles {
+        n: s.len(),
+        p50: percentile_sorted(&s, 50.0),
+        p95: percentile_sorted(&s, 95.0),
+        p99: percentile_sorted(&s, 99.0),
+        max: s[s.len() - 1],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +129,55 @@ mod tests {
         let s = summarize(&[7.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.median, 7.0);
+    }
+
+    #[test]
+    fn percentile_is_exact_on_known_ranks() {
+        // 0..=100 has 101 samples, so rank p lands exactly on sample p
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_between_ranks() {
+        let xs = vec![10.0, 20.0];
+        assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+        assert!((percentile(&xs, 75.0) - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_sorts_its_input_view() {
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentiles_bundle_matches_single_reads() {
+        let xs: Vec<f64> = (1..=1000).rev().map(|i| i as f64).collect();
+        let p = percentiles(&xs);
+        assert_eq!(p.n, 1000);
+        assert_eq!(p.max, 1000.0);
+        assert!((p.p50 - percentile(&xs, 50.0)).abs() < 1e-12);
+        assert!((p.p95 - percentile(&xs, 95.0)).abs() < 1e-12);
+        assert!((p.p99 - percentile(&xs, 99.0)).abs() < 1e-12);
+        // the p99 of 1..=1000 lands between 990 and 991
+        assert!(p.p99 > 990.0 && p.p99 < 991.0, "p99 {}", p.p99);
+    }
+
+    #[test]
+    fn percentiles_of_single_sample() {
+        let p = percentiles(&[42.0]);
+        assert_eq!((p.p50, p.p95, p.p99, p.max), (42.0, 42.0, 42.0, 42.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_rank() {
+        percentile(&[1.0], 101.0);
     }
 }

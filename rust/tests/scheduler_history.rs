@@ -202,6 +202,72 @@ fn engine_device_lane_records_measured_execute_time() {
 }
 
 #[test]
+fn snapshot_file_round_trips_lane_and_batch_state() {
+    let path = std::env::temp_dir()
+        .join(format!("somd_sched_roundtrip_{}.json", std::process::id()));
+    let s = Scheduler::new(cfg());
+    for _ in 0..4 {
+        s.record_smp("Crypt.pass", Duration::from_millis(8));
+        rec_dev(&s, "Crypt.pass", 0.120, 50_000_000);
+        s.record_smp("Series.coefficients", Duration::from_millis(200));
+        rec_dev(&s, "Series.coefficients", 0.004, 8_000);
+    }
+    // serving-layer occupancy records must survive the file too
+    s.record_batch("Series.coefficients", 6, 6000);
+    s.record_batch("Series.coefficients", 2, 2000);
+    assert_eq!(s.decide("Crypt.pass"), Choice::Smp);
+    assert_eq!(s.decide("Series.coefficients"), Choice::Device);
+
+    s.save(&path).expect("snapshot writes");
+    let restored = Scheduler::load(&path, cfg()).expect("snapshot loads");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(restored.decide("Crypt.pass"), Choice::Smp);
+    assert_eq!(restored.decide("Series.coefficients"), Choice::Device);
+    assert_eq!(restored.history("Crypt.pass"), s.history("Crypt.pass"));
+    let h = restored.history("Series.coefficients").unwrap();
+    assert_eq!(h.batched_invocations, 2);
+    assert_eq!(h.batched_requests, 8);
+    assert_eq!(h.batched_items, 8000);
+    assert!((h.mean_batch_requests().unwrap() - 4.0).abs() < 1e-12);
+
+    // a missing file is an error the caller can report, not a panic
+    assert!(Scheduler::load(&path, cfg()).is_err());
+}
+
+#[test]
+fn service_warm_starts_lane_history_across_restarts() {
+    use somd::serve::{Service, ServiceConfig};
+    use somd::somd::Engine;
+    let path = std::env::temp_dir()
+        .join(format!("somd_sched_service_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let cfg_with_snapshot = ServiceConfig {
+        sched_snapshot: Some(path.clone()),
+        ..ServiceConfig::default()
+    };
+
+    // first process lifetime: learn something, drain (saves the snapshot)
+    let service = Service::with_config(Engine::new(2), cfg_with_snapshot.clone());
+    for _ in 0..3 {
+        service.engine().scheduler().record_smp("Warm.m", Duration::from_millis(30));
+        service.engine().scheduler().record_device("Warm.m", Duration::from_millis(2), &dev(0.002, 512));
+    }
+    let learned = service.engine().scheduler().decide("Warm.m");
+    assert_eq!(learned, Choice::Device, "device is clearly faster");
+    service.drain();
+    assert!(path.exists(), "drain must persist the scheduler snapshot");
+
+    // "restarted process": a fresh service over a fresh engine warm-starts
+    let service2 = Service::with_config(Engine::new(2), cfg_with_snapshot);
+    let h = service2.engine().scheduler().history("Warm.m").expect("history warm-started");
+    assert_eq!(h.smp_runs, 3);
+    assert_eq!(h.device_runs, 3);
+    assert_eq!(service2.engine().scheduler().decide("Warm.m"), learned);
+    service2.drain();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn windows_bound_memory_and_adapt() {
     let s = Scheduler::new(SchedulerConfig {
         window: 3,

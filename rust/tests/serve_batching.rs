@@ -1,0 +1,385 @@
+//! Serving-layer correctness suite (satellite of the serving-layer PR):
+//! batch compose/split round-trips must be **bitwise** — N independent
+//! invocations and one coalesced batch produce identical results across
+//! vecadd and crypt, including ragged tails and a single-request
+//! "batch" — plus admission control, graceful drain, batch-failure
+//! demux, and fused execution through the device lane.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use somd::backend::{DeviceFn, Executed, HeteroMethod};
+use somd::bench_suite::crypt;
+use somd::bench_suite::serve::{
+    crypt_batched, vecadd_batch_spec, vecadd_batched, CryptServeInput,
+};
+use somd::serve::{AdmissionPolicy, ServeError, Service, ServiceConfig};
+use somd::somd::partition::Block1D;
+use somd::somd::reduction::Assemble;
+use somd::somd::{Engine, Rules, SomdMethod, Target};
+use somd::util::prng::Xorshift64;
+
+/// A service config that coalesces aggressively: a wide item cap and a
+/// linger window far longer than the enqueue burst, so every compatible
+/// request submitted together lands in one batch, deterministically.
+fn coalescing_cfg(delay_ms: u64) -> ServiceConfig {
+    ServiceConfig {
+        max_batch_items: 1 << 20,
+        max_batch_delay: Duration::from_millis(delay_ms),
+        queue_depth: 1024,
+        admission: AdmissionPolicy::Block,
+        sched_snapshot: None,
+    }
+}
+
+fn gen_pair(elems: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xorshift64::new(seed);
+    let a: Vec<f32> = (0..elems).map(|_| f32::from(rng.u16()) / 128.0).collect();
+    let b: Vec<f32> = (0..elems).map(|_| f32::from(rng.u16()) / 128.0).collect();
+    (a, b)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn coalesced_vecadd_is_bitwise_identical_to_sequential_invocations() {
+    // ragged sizes, including tiny tails between big requests
+    let sizes = [1000usize, 1, 4097, 333, 8192, 77, 2048, 5];
+    let inputs: Vec<Arc<(Vec<f32>, Vec<f32>)>> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| Arc::new(gen_pair(n, 0xA11CE + i as u64)))
+        .collect();
+    let method = Arc::new(vecadd_batched());
+
+    // the reference: each request invoked independently, no service
+    let want: Vec<Vec<f32>> = inputs.iter().map(|inp| method.smp.invoke(inp, 3)).collect();
+
+    let service = Service::with_config(Engine::new(3), coalescing_cfg(250));
+    let client = service.register(method).expect("register vecadd");
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|inp| client.submit(inp.clone()).expect("admitted"))
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("request served");
+        assert_eq!(
+            bits(&out.value),
+            bits(&want[i]),
+            "request {i} (len {}) diverged from its independent invocation",
+            sizes[i]
+        );
+        assert_eq!(out.batch_requests, sizes.len(), "all requests must share one batch");
+        assert!(matches!(out.executed, Executed::Smp { .. }));
+    }
+
+    // one fused launch, not eight
+    let m = service.metrics();
+    assert_eq!(m.batches, 1);
+    assert_eq!(m.completed, sizes.len() as u64);
+    assert_eq!(m.max_batch_requests, sizes.len() as u64);
+    assert_eq!(m.items, sizes.iter().sum::<usize>() as u64);
+
+    // the scheduler saw the batched item counts (batch-aware records)
+    let h = service.engine().scheduler().history("VecAdd.add").expect("history");
+    assert_eq!(h.batched_invocations, 1);
+    assert_eq!(h.batched_requests, sizes.len() as u64);
+    assert_eq!(h.batched_items, sizes.iter().sum::<usize>() as u64);
+    assert!((h.mean_batch_requests().unwrap() - sizes.len() as f64).abs() < 1e-12);
+    // and the fused launch recorded an ordinary SMP wall sample
+    assert_eq!(h.smp_runs, 1);
+}
+
+#[test]
+fn single_request_batch_round_trips() {
+    let inp = Arc::new(gen_pair(513, 7));
+    let method = Arc::new(vecadd_batched());
+    let want = method.smp.invoke(&inp, 2);
+
+    let service = Service::with_config(Engine::new(2), coalescing_cfg(1));
+    let client = service.register(method).unwrap();
+    let out = client.submit(inp).unwrap().wait().expect("served");
+    assert_eq!(bits(&out.value), bits(&want));
+    assert_eq!(out.batch_requests, 1, "a lone request is a batch of one");
+
+    // methods without a batch spec cannot register
+    let plain = Arc::new(HeteroMethod::smp_only(SomdMethod::new(
+        "Plain.add",
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |inp, p, _, _| p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>(),
+        Assemble,
+    )));
+    assert!(matches!(service.register(plain), Err(ServeError::Failed(_))));
+}
+
+#[test]
+fn coalesced_crypt_is_bitwise_identical_to_the_sequential_cipher() {
+    let p = crypt::Problem::generate(64, 0xC0DE);
+    let keys = p.ekeys;
+    // ragged block counts, single-block tail included
+    let sizes_blocks = [128usize, 1, 37, 256];
+    let inputs: Vec<Arc<CryptServeInput>> = sizes_blocks
+        .iter()
+        .enumerate()
+        .map(|(i, &blocks)| {
+            let mut src = vec![0u8; blocks * crypt::BLOCK_BYTES];
+            Xorshift64::new(0xBEEF + i as u64).fill_bytes(&mut src);
+            Arc::new(CryptServeInput { src, keys })
+        })
+        .collect();
+    let want: Vec<Vec<u8>> =
+        inputs.iter().map(|inp| crypt::sequential(&inp.src, &inp.keys)).collect();
+
+    let service = Service::with_config(Engine::new(2), coalescing_cfg(250));
+    let client = service.register(Arc::new(crypt_batched())).unwrap();
+    let tickets: Vec<_> =
+        inputs.iter().map(|inp| client.submit(inp.clone()).unwrap()).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("request served");
+        assert_eq!(
+            out.value, want[i],
+            "request {i} ({} blocks) ciphertext diverged from the sequential cipher",
+            sizes_blocks[i]
+        );
+        assert_eq!(out.batch_requests, sizes_blocks.len());
+    }
+    assert_eq!(service.metrics().batches, 1);
+}
+
+#[test]
+fn crypt_requests_under_different_keys_never_fuse() {
+    let ka = crypt::encrypt_keys(&[1, 2, 3, 4, 5, 6, 7, 8]);
+    let kb = crypt::encrypt_keys(&[8, 7, 6, 5, 4, 3, 2, 1]);
+    let mk = |keys: [u32; crypt::SUBKEYS], seed: u64| {
+        let mut src = vec![0u8; 64 * crypt::BLOCK_BYTES];
+        Xorshift64::new(seed).fill_bytes(&mut src);
+        Arc::new(CryptServeInput { src, keys })
+    };
+    let a = mk(ka, 1);
+    let b = mk(kb, 2);
+
+    let service = Service::with_config(Engine::new(2), coalescing_cfg(120));
+    let client = service.register(Arc::new(crypt_batched())).unwrap();
+    let ta = client.submit(a.clone()).unwrap();
+    let tb = client.submit(b.clone()).unwrap();
+    let oa = ta.wait().expect("key-A request served");
+    let ob = tb.wait().expect("key-B request served");
+    // correctness under each schedule, and no cross-key fusion
+    assert_eq!(oa.value, crypt::sequential(&a.src, &a.keys));
+    assert_eq!(ob.value, crypt::sequential(&b.src, &b.keys));
+    assert_eq!(oa.batch_requests, 1, "incompatible keys must not share a launch");
+    assert_eq!(ob.batch_requests, 1);
+    assert_eq!(service.metrics().batches, 2);
+}
+
+/// A batchable vecadd whose MI body sleeps: lets the tests hold the
+/// dispatcher busy long enough to fill the admission queue.
+fn slow_vecadd(sleep_ms: u64) -> HeteroMethod<(Vec<f32>, Vec<f32>), somd::somd::BlockPart, (), Vec<f32>> {
+    let smp = SomdMethod::new(
+        "Slow.add",
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        move |inp, p, _, _| {
+            std::thread::sleep(Duration::from_millis(sleep_ms));
+            p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>()
+        },
+        Assemble,
+    );
+    HeteroMethod::smp_only(smp).with_batch(vecadd_batch_spec())
+}
+
+#[test]
+fn reject_admission_sheds_load_when_the_queue_is_full() {
+    let cfg = ServiceConfig {
+        max_batch_items: 1, // every request its own batch: serial drain
+        max_batch_delay: Duration::ZERO,
+        queue_depth: 2,
+        admission: AdmissionPolicy::Reject,
+        sched_snapshot: None,
+    };
+    let service = Service::with_config(Engine::new(1), cfg);
+    let client = service.register(Arc::new(slow_vecadd(200))).unwrap();
+    let inp = Arc::new(gen_pair(16, 3));
+
+    let t1 = client.submit(inp.clone()).expect("first request admitted");
+    // let the dispatcher pop r1 and start executing (its slot frees)
+    std::thread::sleep(Duration::from_millis(80));
+    let t2 = client.submit(inp.clone()).expect("queued (1/2)");
+    let t3 = client.submit(inp.clone()).expect("queued (2/2)");
+    // the queue is at depth: reject-policy sheds the next request
+    match client.submit(inp.clone()) {
+        Err(ServeError::Rejected) => {}
+        Err(other) => panic!("expected rejection at full depth, got error {other:?}"),
+        Ok(_) => panic!("expected rejection at full depth, got admission"),
+    }
+    // everything admitted still completes, correctly
+    let want = bits(&vecadd_batched().smp.invoke(&inp, 1));
+    for t in [t1, t2, t3] {
+        assert_eq!(bits(&t.wait().expect("admitted request served").value), want);
+    }
+    let m = service.metrics();
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.completed, 3);
+}
+
+#[test]
+fn block_admission_parks_the_submitter_until_space_frees() {
+    let cfg = ServiceConfig {
+        max_batch_items: 1,
+        max_batch_delay: Duration::ZERO,
+        queue_depth: 1,
+        admission: AdmissionPolicy::Block,
+        sched_snapshot: None,
+    };
+    let service = Service::with_config(Engine::new(1), cfg);
+    let client = service.register(Arc::new(slow_vecadd(120))).unwrap();
+    let inp = Arc::new(gen_pair(8, 9));
+
+    let t1 = client.submit(inp.clone()).expect("popped immediately");
+    std::thread::sleep(Duration::from_millis(40));
+    let t2 = client.submit(inp.clone()).expect("fills the queue");
+    // the third submit must PARK (not fail) until r2 is popped
+    let c2 = client.clone();
+    let inp2 = inp.clone();
+    let parked = std::thread::spawn(move || c2.submit(inp2).map(|t| t.wait()));
+    let t3 = parked.join().unwrap().expect("blocked submit eventually admitted");
+    let want = bits(&vecadd_batched().smp.invoke(&inp, 1));
+    assert_eq!(bits(&t3.expect("parked request served").value), want);
+    for t in [t1, t2] {
+        assert_eq!(bits(&t.wait().expect("served").value), want);
+    }
+    assert_eq!(service.metrics().rejected, 0, "block policy never sheds");
+}
+
+#[test]
+fn drain_completes_admitted_requests_then_refuses_new_ones() {
+    let inputs: Vec<Arc<(Vec<f32>, Vec<f32>)>> =
+        (0..5).map(|i| Arc::new(gen_pair(64 + i, 0x0D1E + i as u64))).collect();
+    let method = Arc::new(vecadd_batched());
+    let want: Vec<Vec<u32>> =
+        inputs.iter().map(|inp| bits(&method.smp.invoke(inp, 2))).collect();
+
+    // a long linger window: drain must flush it early, not wait it out
+    let service = Service::with_config(Engine::new(2), coalescing_cfg(10_000));
+    let client = service.register(method).unwrap();
+    let tickets: Vec<_> =
+        inputs.iter().map(|inp| client.submit(inp.clone()).unwrap()).collect();
+    service.drain();
+    // every admitted request resolved, correctly, in one flushed batch
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("in-flight request completed across drain");
+        assert_eq!(bits(&out.value), want[i]);
+        assert_eq!(out.batch_requests, inputs.len());
+    }
+    assert_eq!(service.metrics().completed, inputs.len() as u64);
+    // the drained service admits nothing new
+    match client.submit(inputs[0].clone()) {
+        Err(ServeError::ShuttingDown) => {}
+        Err(other) => panic!("expected ShuttingDown after drain, got error {other:?}"),
+        Ok(_) => panic!("expected ShuttingDown after drain, got admission"),
+    }
+    // drain is idempotent
+    service.drain();
+}
+
+#[test]
+fn failing_batch_fails_every_ticket_and_the_service_survives() {
+    let smp = SomdMethod::new(
+        "Broken.add",
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |_inp, _p, _: &(), _| -> Vec<f32> { panic!("kernel bug") },
+        Assemble,
+    );
+    let method = Arc::new(HeteroMethod::smp_only(smp).with_batch(vecadd_batch_spec()));
+    let service = Service::with_config(Engine::new(2), coalescing_cfg(100));
+    let client = service.register(method).unwrap();
+    let tickets: Vec<_> = (0..3)
+        .map(|i| client.submit(Arc::new(gen_pair(32, i))).unwrap())
+        .collect();
+    for t in tickets {
+        match t.wait() {
+            Err(ServeError::Failed(_)) => {}
+            other => panic!("expected batch failure on every ticket, got {other:?}"),
+        }
+    }
+    let m = service.metrics();
+    assert_eq!(m.failed, 3);
+    assert_eq!(m.completed, 0);
+    // the dispatcher survived the panic: the lane still serves
+    let good = Arc::new(gen_pair(16, 99));
+    let out = client.submit(good.clone()).unwrap().wait().expect("lane still alive");
+    assert_eq!(bits(&out.value), bits(&vecadd_batched().smp.invoke(&good, 2)));
+}
+
+// ---------------------------------------------------------------------------
+// device lane: a fused batch is one device job (needs the AOT artifacts)
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn fused_batches_route_through_the_device_lane_as_one_job() {
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.serve", Target::Device("fermi".into()));
+    let engine = Engine::with_rules(2, rules)
+        .with_device_master(artifacts_dir(), "fermi")
+        .expect("device master starts");
+
+    // a device version with no fixed artifact shape: computes the fused
+    // add directly, so ragged batches exercise the master-thread path
+    let smp = SomdMethod::new(
+        "VecAdd.serve",
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |inp, p, _, _| p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>(),
+        Assemble,
+    );
+    let dev: DeviceFn<(Vec<f32>, Vec<f32>), Vec<f32>> = Box::new(|_sess, inp| {
+        Ok(inp.0.iter().zip(&inp.1).map(|(a, b)| a + b).collect())
+    });
+    let method = Arc::new(HeteroMethod::with_device(smp, dev).with_batch(vecadd_batch_spec()));
+
+    let sizes = [700usize, 3, 1290, 51];
+    let inputs: Vec<Arc<(Vec<f32>, Vec<f32>)>> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| Arc::new(gen_pair(n, 0xDE7 + i as u64)))
+        .collect();
+    let want: Vec<Vec<u32>> = inputs
+        .iter()
+        .map(|inp| bits(&inp.0.iter().zip(&inp.1).map(|(a, b)| a + b).collect::<Vec<f32>>()))
+        .collect();
+
+    let service = Service::with_config(engine, coalescing_cfg(200));
+    let client = service.register(method).unwrap();
+    let tickets: Vec<_> =
+        inputs.iter().map(|inp| client.submit(inp.clone()).unwrap()).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("device-lane request served");
+        assert_eq!(bits(&out.value), want[i]);
+        assert_eq!(out.batch_requests, sizes.len());
+        match &out.executed {
+            Executed::Device { profile, .. } => assert_eq!(*profile, "fermi"),
+            other => panic!("expected device execution, got {other:?}"),
+        }
+    }
+    // the whole batch was ONE device job — launch amortization in person
+    let c = service.engine().device_counters().expect("device lane attached");
+    assert_eq!(c.jobs_run, 1, "a fused batch must cost one device job, not {}", sizes.len());
+    assert_eq!(service.metrics().batches, 1);
+    // and the scheduler recorded one device run carrying the whole batch
+    let h = service.engine().scheduler().history("VecAdd.serve").unwrap();
+    assert_eq!(h.device_runs, 1);
+    assert_eq!(h.batched_requests, sizes.len() as u64);
+}
+
+// (the SOMD_SERVE_* env-knob parsing test lives in its own binary,
+// rust/tests/serve_config_env.rs — mutating the process environment
+// while this binary's tests run engine code on parallel threads would
+// race glibc's getenv)

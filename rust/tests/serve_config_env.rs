@@ -1,0 +1,36 @@
+//! `SOMD_SERVE_*` / `SOMD_SCHED_SNAPSHOT` knob parsing
+//! (`ServiceConfig::from_env`).
+//!
+//! Deliberately a single test in its own binary: mutating the process
+//! environment with `set_var` while other tests run engine code on
+//! parallel threads would race glibc's `getenv` (the serve suite's
+//! device tests read `XLA_*` knobs), so the env mutation gets a process
+//! to itself.
+
+use std::time::Duration;
+
+use somd::serve::{AdmissionPolicy, ServiceConfig};
+
+#[test]
+fn service_config_reads_env_knobs() {
+    std::env::set_var("SOMD_SERVE_MAX_BATCH_ITEMS", "4096");
+    std::env::set_var("SOMD_SERVE_MAX_BATCH_DELAY_US", "250");
+    std::env::set_var("SOMD_SERVE_QUEUE_DEPTH", "9");
+    std::env::set_var("SOMD_SERVE_ADMISSION", "reject");
+    std::env::set_var("SOMD_SCHED_SNAPSHOT", "/tmp/somd_sched.json");
+    let cfg = ServiceConfig::from_env();
+    std::env::remove_var("SOMD_SERVE_MAX_BATCH_ITEMS");
+    std::env::remove_var("SOMD_SERVE_MAX_BATCH_DELAY_US");
+    std::env::remove_var("SOMD_SERVE_QUEUE_DEPTH");
+    std::env::remove_var("SOMD_SERVE_ADMISSION");
+    std::env::remove_var("SOMD_SCHED_SNAPSHOT");
+    assert_eq!(cfg.max_batch_items, 4096);
+    assert_eq!(cfg.max_batch_delay, Duration::from_micros(250));
+    assert_eq!(cfg.queue_depth, 9);
+    assert_eq!(cfg.admission, AdmissionPolicy::Reject);
+    assert_eq!(cfg.sched_snapshot.as_deref(), Some(std::path::Path::new("/tmp/somd_sched.json")));
+    // and the hermetic default ignores the (now cleared) environment
+    let d = ServiceConfig::default();
+    assert_eq!(d.admission, AdmissionPolicy::Block);
+    assert_eq!(d.sched_snapshot, None);
+}

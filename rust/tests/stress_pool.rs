@@ -182,6 +182,80 @@ fn concurrent_device_submissions_reuse_one_warm_session() {
     assert!(h.device_estimate().unwrap() > 0.0);
 }
 
+// ---------------------------------------------------------------------------
+// shutdown hardening: queued device jobs survive drain and drop
+// ---------------------------------------------------------------------------
+
+/// A device version that ignores the session and just takes time: lets
+/// the tests pile jobs up on the master thread's queue.
+fn sleepy_hetero(name: &str, ms: u64) -> HeteroMethod<Vec<i64>, somd::somd::BlockPart, (), i64> {
+    let smp = SomdMethod::new(
+        name,
+        |_: &Vec<i64>, n| Block1D::new().ranges(1, n),
+        |_, _| (),
+        |_, _, _, _| -1i64,
+        reduction::sum::<i64>(),
+    );
+    let dev: DeviceFn<Vec<i64>, i64> = Box::new(move |_sess, input| {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+        Ok(input.first().copied().unwrap_or(0))
+    });
+    HeteroMethod::with_device(smp, dev)
+}
+
+#[test]
+fn engine_drain_flushes_every_queued_device_job() {
+    let mut rules = Rules::empty();
+    rules.set("Sleepy.drain", Target::Device("fermi".into()));
+    let engine = Engine::with_rules(1, rules)
+        .with_device_master(artifacts_dir(), "fermi")
+        .expect("device master starts");
+    let m = Arc::new(sleepy_hetero("Sleepy.drain", 15));
+
+    const JOBS: i64 = 4;
+    let handles: Vec<_> = (0..JOBS)
+        .map(|i| engine.submit_hetero(m.clone(), Arc::new(vec![i])))
+        .collect();
+    // the barrier returns only after every previously queued job executed
+    engine.drain();
+    let c = engine.device_counters().expect("device lane attached");
+    assert!(
+        c.jobs_run >= JOBS as usize,
+        "drain returned with only {} of {JOBS} queued jobs executed",
+        c.jobs_run
+    );
+    // ...so every handle resolves immediately and correctly
+    for (i, h) in handles.into_iter().enumerate() {
+        let (r, how) = h.join().expect("drained job succeeded");
+        assert_eq!(r, i as i64);
+        assert!(matches!(how, Executed::Device { .. }));
+    }
+}
+
+#[test]
+fn dropping_the_engine_completes_inflight_device_jobs() {
+    // regression (shutdown hardening): an engine dropped with device
+    // jobs still queued must complete them — deterministically, before
+    // any engine resource is torn down — not leave callers with dead
+    // handles
+    let mut rules = Rules::empty();
+    rules.set("Sleepy.drop", Target::Device("fermi".into()));
+    let engine = Engine::with_rules(1, rules)
+        .with_device_master(artifacts_dir(), "fermi")
+        .expect("device master starts");
+    let m = Arc::new(sleepy_hetero("Sleepy.drop", 20));
+
+    let handles: Vec<_> = (0..5)
+        .map(|i| engine.submit_hetero(m.clone(), Arc::new(vec![100 + i])))
+        .collect();
+    drop(engine); // jobs are still queued or mid-flight on the master
+    for (i, h) in handles.into_iter().enumerate() {
+        let (r, how) = h.join().expect("job survived engine drop");
+        assert_eq!(r, 100 + i as i64);
+        assert!(matches!(how, Executed::Device { .. }));
+    }
+}
+
 #[test]
 fn auto_explores_then_settles_with_device_lane() {
     use somd::somd::Choice;
