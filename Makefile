@@ -2,7 +2,7 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-serve
+.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-serve
 
 # The one-stop gate: build everything (library, binaries, benches AND
 # examples), run both test suites, then the docs checks.
@@ -49,6 +49,13 @@ bench-interp:
 bench-hybrid:
 	cd rust && cargo test --release --test hybrid_exec
 	cd rust && cargo run --release -- bench hybrid --check
+
+# device fleet: N-way sharding correctness suite, then the fleet report
+# with the fleet-not-slower-than-best-single-lane gate (writes
+# rust/BENCH_fleet.json)
+bench-fleet:
+	cd rust && cargo test --release --test fleet_exec
+	cd rust && cargo run --release -- bench fleet --check
 
 # serving layer: batching correctness suite, then the open-loop load
 # sweep with the batched-throughput gate (writes rust/BENCH_serve.json)

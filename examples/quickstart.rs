@@ -88,6 +88,17 @@ fn describe(how: &Executed) -> String {
                  items, f={device_fraction:.2})"
             )
         }
+        Executed::Sharded { smp_partitions, smp_items, weights, lanes } => {
+            let shares: Vec<String> = lanes
+                .iter()
+                .map(|l| format!("{} x {} items", l.profile, l.items))
+                .collect();
+            format!(
+                "sharded({smp_partitions} MIs x {smp_items} items + {}, weights {:?})",
+                shares.join(" + "),
+                weights.iter().map(|w| (w * 100.0).round() / 100.0).collect::<Vec<f64>>()
+            )
+        }
     }
 }
 

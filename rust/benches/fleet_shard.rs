@@ -1,0 +1,44 @@
+//! Device-fleet sharding baseline: one SOMD invocation split N-way
+//! across the SMP pool and every configured device lane at the
+//! scheduler's learned per-lane weights, emitting `BENCH_fleet.json`
+//! (per-lane occupancy + learned weights + fleet vs best-single-lane
+//! wall per workload).
+//!
+//! `cargo bench --bench fleet_shard [-- --profiles p1,p2 --reps N
+//! --workers W --learn N --min-items N --out FILE --tol T --smoke --check]`
+//!
+//! Also available as `somd bench fleet`; `--check` exits nonzero when a
+//! 2+-lane fleet's sharded wall exceeds the best single lane (within
+//! `--tol`) on the largest Series workload (the CI gate).
+
+use somd::bench_suite::fleet;
+use somd::somd::Engine;
+use somd::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let reps =
+        if args.flag("smoke") { args.opt_usize("reps", 2) } else { args.opt_usize("reps", 5) };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = args.opt_usize("workers", cores);
+    let learn = args.opt_usize("learn", if args.flag("smoke") { 3 } else { 4 });
+    let out = args.opt("out").unwrap_or("BENCH_fleet.json");
+    let tol = args.opt_f64("tol", 1.10);
+    let profiles: Vec<String> = match args.opt("profiles") {
+        Some(p) => p.split(',').map(|s| s.trim().to_string()).collect(),
+        None => Engine::fleet_profiles_from_env(),
+    };
+    let min_items =
+        args.opt_usize("min-items", Engine::fleet_min_device_items_from_env().unwrap_or(1024));
+    let spec = fleet::FleetSpec {
+        profiles,
+        reps,
+        workers,
+        learn_rounds: learn,
+        min_device_items: min_items,
+    };
+    if let Err(e) = fleet::report(&spec, out, args.flag("check"), tol) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -14,7 +14,13 @@
 //! the SMP pool and the device at the scheduler's learned ratio
 //! (`method:hybrid` forces it; `method:auto` considers it as a third
 //! lane), with the partial results merged through the method's ordinary
-//! reduction.  See `docs/ARCHITECTURE.md` for the full walkthrough.
+//! reduction.  Since the device-fleet PR the same spec also powers
+//! **N-way sharding** (`method:sharded`): the engine splits one
+//! invocation across the SMP pool *and every device lane of the fleet*
+//! at the scheduler's learned per-lane weights, each lane evaluating one
+//! contiguous sub-span through the spec's device evaluator.  See
+//! `docs/ARCHITECTURE.md` for the full walkthrough and
+//! `docs/PAPER_MAP.md` for the paper construct each piece implements.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -142,6 +148,27 @@ pub(crate) struct DeviceShare<R> {
     pub(crate) profile: &'static str,
 }
 
+/// One sharded invocation's bookkeeping, handed to
+/// [`HeteroMethod::finish_sharded`] by the engine's N-way completion
+/// latch (the fleet counterpart of [`HybridMerge`]).
+pub(crate) struct ShardedMerge<'a, I: ?Sized> {
+    /// The scheduler history to feed.
+    pub(crate) sched: &'a Scheduler,
+    /// The invocation's input (needed to cover failed device spans).
+    pub(crate) input: &'a I,
+    /// The SMP share's (leading) span.
+    pub(crate) smp_span: Range1,
+    /// One contiguous span per device lane, in lane order after the SMP
+    /// span; starved lanes hold empty spans.
+    pub(crate) dev_spans: &'a [Range1],
+    /// The per-lane device profile names, for the execution report.
+    pub(crate) profiles: &'a [&'static str],
+    /// The weight vector this invocation split at (SMP first).
+    pub(crate) weights: &'a [f64],
+    /// MI count of the SMP share (and of any failure covers).
+    pub(crate) nparts: usize,
+}
+
 /// One forked invocation's bookkeeping, shared by the sync and async
 /// hybrid lanes so their merge/fallback invariants cannot drift.
 pub(crate) struct HybridMerge<'a, I: ?Sized> {
@@ -199,6 +226,40 @@ pub enum Executed {
         /// Device accounting for the device share.
         stats: DeviceStats,
     },
+    /// Invocation sharded N-way across the SMP pool and the whole device
+    /// fleet.
+    Sharded {
+        /// MI count of the SMP share.
+        smp_partitions: usize,
+        /// Index-space items the SMP share covered.
+        smp_items: usize,
+        /// The per-lane weight vector this invocation split at (SMP
+        /// first, `lanes.len() + 1` entries).
+        weights: Vec<f64>,
+        /// Per-device-lane execution reports, in fleet order.
+        lanes: Vec<ShardLane>,
+    },
+}
+
+/// One device lane's slice of a sharded invocation, as reported in
+/// [`Executed::Sharded`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardLane {
+    /// The lane's position in the fleet (the scheduler's `device_id`).
+    pub device_id: usize,
+    /// Device profile the lane runs under.
+    pub profile: &'static str,
+    /// Index-space items the lane's span covered (0 = starved under the
+    /// `min_device_items` floor; the SMP share absorbed them).
+    pub items: usize,
+    /// Whether the lane's share succeeded (a failed share was covered by
+    /// the SMP side and penalized in the history).
+    pub ok: bool,
+    /// The lane's own execute seconds (queue wait excluded; 0 for
+    /// starved lanes).
+    pub secs: f64,
+    /// Device accounting for the lane's share.
+    pub stats: DeviceStats,
 }
 
 impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R> {
@@ -294,6 +355,11 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                     && DeviceProfile::by_name(profile).is_some()
             },
             hybrid_ok,
+            // the synchronous path is caller-driven against the caller's
+            // own registry — it cannot reach the engine's fleet lanes, so
+            // `sharded` preferences revert to two-way hybrid here (the
+            // §6 nearest-applicable discipline)
+            0,
         )
     }
 
@@ -312,7 +378,10 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                 engine.scheduler().record_smp(self.smp.name(), t0.elapsed());
                 Ok((r, Executed::Smp { partitions: engine.workers() }))
             }
-            Target::Hybrid => {
+            // a sharded resolution can only surface on the engine's async
+            // fleet path; the sync lane runs its nearest applicable form,
+            // the two-way hybrid split (same spec, one device)
+            Target::Hybrid | Target::Sharded => {
                 let reg = registry.expect("resolved registry");
                 self.invoke_hybrid(engine, reg, input, None)
             }
@@ -464,6 +533,102 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                 let r = self.smp.reduce(partials);
                 (r, Executed::Smp { partitions: m.nparts })
             }
+        }
+    }
+
+    /// The merge tail of one sharded (N-way fleet) invocation, run by
+    /// whichever lane releases the engine's completion latch last:
+    /// record history, stitch the partials in span order (SMP leading,
+    /// then each device lane's span in fleet order) and reduce.  A
+    /// failed device share is covered by SMP partials over its span —
+    /// the caller always receives a complete result — and the whole run
+    /// is penalized in the history; starved lanes (`None`, empty span)
+    /// contribute nothing.  The single-copy discipline of
+    /// [`HeteroMethod::finish_hybrid`], generalized to N lanes.
+    pub(crate) fn finish_sharded(
+        &self,
+        m: ShardedMerge<'_, I>,
+        smp: (Vec<R>, f64),
+        devs: Vec<Option<Result<DeviceShare<R>>>>,
+    ) -> (R, Executed) {
+        let (mut partials, smp_secs) = smp;
+        let mut lanes = Vec::with_capacity(devs.len());
+        let mut samples = Vec::with_capacity(devs.len());
+        let mut total_stats = DeviceStats::default();
+        let mut any_ok = false;
+        let mut any_failed = false;
+        for (i, dev) in devs.into_iter().enumerate() {
+            let span = m.dev_spans[i];
+            match dev {
+                Some(Ok(share)) => {
+                    any_ok = true;
+                    total_stats.absorb(&share.stats);
+                    samples.push(HybridSample { items: span.len(), secs: share.secs });
+                    lanes.push(ShardLane {
+                        device_id: i,
+                        profile: share.profile,
+                        items: span.len(),
+                        ok: true,
+                        secs: share.secs,
+                        stats: share.stats,
+                    });
+                    partials.push(share.partial);
+                }
+                Some(Err(_)) => {
+                    // the lane's share failed: cover its span on the SMP
+                    // side, in place, so rank order is preserved
+                    any_failed = true;
+                    samples.push(HybridSample { items: 0, secs: 0.0 });
+                    lanes.push(ShardLane {
+                        device_id: i,
+                        profile: m.profiles[i],
+                        items: span.len(),
+                        ok: false,
+                        secs: 0.0,
+                        stats: DeviceStats::default(),
+                    });
+                    partials.extend(self.hybrid_smp_partials(m.input, span, m.nparts));
+                }
+                None => {
+                    // starved under the floor: the SMP span absorbed it
+                    samples.push(HybridSample { items: 0, secs: 0.0 });
+                    lanes.push(ShardLane {
+                        device_id: i,
+                        profile: m.profiles[i],
+                        items: 0,
+                        ok: true,
+                        secs: 0.0,
+                        stats: DeviceStats::default(),
+                    });
+                }
+            }
+        }
+        if any_failed {
+            // a broken shard must not feed the weight learner — the
+            // penalty steers `auto` away until the fleet proves itself
+            m.sched.record_sharded_failure(self.name());
+        } else {
+            m.sched.record_sharded(
+                self.name(),
+                HybridSample { items: m.smp_span.len(), secs: smp_secs },
+                &samples,
+                &total_stats,
+            );
+        }
+        let r = self.smp.reduce(partials);
+        if any_ok {
+            (
+                r,
+                Executed::Sharded {
+                    smp_partitions: m.nparts,
+                    smp_items: m.smp_span.len(),
+                    weights: m.weights.to_vec(),
+                    lanes,
+                },
+            )
+        } else {
+            // every device lane failed: this was effectively an SMP run
+            (r, Executed::Smp { partitions: m.nparts })
         }
     }
 

@@ -1,0 +1,358 @@
+//! Device-fleet sharding report: `somd bench fleet`.
+//!
+//! One SOMD invocation sharded N-way across the SMP pool and a
+//! configurable fleet of device lanes ([`Engine::with_device_fleet`]) at
+//! the scheduler's learned per-lane weights.  The workload is the
+//! compute-dense Series benchmark (the chunked `series_chunk` artifact,
+//! whose device cost genuinely scales with a lane's sub-span) at two
+//! sizes — one and two device chunks of coefficients — so the report
+//! shows how the fleet's advantage grows with the index space.
+//!
+//! Per workload the report measures:
+//!
+//! * the pure-SMP wall (`--workers` MIs),
+//! * each fleet lane's pure-device wall (warm caller-driven session —
+//!   what that lane would cost if it ran the *whole* invocation alone),
+//! * the sharded wall at the learned weights, after `--learn`
+//!   calibration submissions through the engine's N-way latch,
+//!
+//! plus the learned weight vector, the per-lane occupancy (items and
+//! execute seconds of each lane's share in the final timed run) and how
+//! many timed runs degraded to pure SMP under the `min_device_items`
+//! floor.  Output: `BENCH_fleet.json` (`schema: fleet_shard/v1`,
+//! documented in `docs/BENCHMARKS.md`).  With `check`, the largest
+//! workload gates the fleet's reason to exist: a 2+-lane fleet must beat
+//! the best single lane (within `tol`), with zero degraded timed runs —
+//! a degraded row's fleet column is really an SMP wall, so the gate
+//! refuses it instead of passing vacuously.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::Executed;
+use crate::device::{DeviceProfile, DeviceSession};
+use crate::runtime::Registry;
+use crate::somd::{Engine, Rules, Scheduler, SchedulerConfig, Target};
+use crate::util::json::Json;
+use crate::util::timer::{middle_tier_mean, sample};
+
+use super::params::SERIES_INTERVALS;
+use super::{gpu, hybrid, series};
+
+/// The shape of one fleet bench run.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Fleet lane profiles, in `device_id` order (heterogeneous mixes
+    /// allowed; repeats model identical cards).
+    pub profiles: Vec<String>,
+    /// Timed samples per lane per workload.
+    pub reps: usize,
+    /// MI count of the SMP lane and of the sharded SMP share.
+    pub workers: usize,
+    /// Calibration submissions before the timed shard measurement.
+    pub learn_rounds: usize,
+    /// The scheduler's `min_device_items` floor for this run.
+    pub min_device_items: usize,
+}
+
+/// One workload's fleet-vs-single-lane measurement.
+#[derive(Debug, Clone)]
+pub struct FleetRow {
+    /// Workload name (`"Series-1x"` / `"Series-2x"`).
+    pub bench: String,
+    /// Index-space items per invocation (Fourier coefficients).
+    pub items: usize,
+    /// MI count of the SMP lane and the sharded SMP share.
+    pub workers: usize,
+    /// Pure-SMP wall seconds (middle-tier mean).
+    pub smp_secs: f64,
+    /// Per-lane pure-device wall seconds (middle-tier mean, warm
+    /// session), in fleet order — what each lane costs running the whole
+    /// invocation alone.
+    pub lane_secs: Vec<f64>,
+    /// `min(smp_secs, lane_secs…)` — the bar the fleet must clear.
+    pub best_single_secs: f64,
+    /// Sharded wall seconds at the learned weights (middle-tier mean).
+    pub fleet_secs: f64,
+    /// `best_single_secs / fleet_secs` (>1 = the fleet wins).
+    pub speedup_vs_best: f64,
+    /// The learned per-lane weight vector after calibration (SMP first).
+    pub weights: Vec<f64>,
+    /// Index-space items each device lane's share covered in the final
+    /// timed run (0 = starved under the floor).
+    pub lane_items: Vec<usize>,
+    /// Each device lane's own execute seconds in the final timed run.
+    pub lane_share_secs: Vec<f64>,
+    /// Timed "sharded" invocations that actually degraded to pure SMP
+    /// (every device share under the `min_device_items` floor).
+    pub degraded_runs: usize,
+}
+
+/// Measure the fleet against every single lane on the Series workloads
+/// (see the module docs for the protocol).
+pub fn measure(spec: &FleetSpec) -> Result<Vec<FleetRow>> {
+    if spec.profiles.is_empty() {
+        bail!("fleet bench needs at least one device profile");
+    }
+    let reg = Registry::load_default()?;
+    let artifacts_dir = reg.dir().to_path_buf();
+    let chunk = reg
+        .info("series_chunk")?
+        .meta_usize("chunk")
+        .ok_or_else(|| anyhow!("series_chunk lacks chunk meta"))?;
+
+    let mut rules = Rules::empty();
+    rules.set("Series.coefficients", Target::Sharded);
+    let profile_refs: Vec<&str> = spec.profiles.iter().map(String::as_str).collect();
+    let engine = Engine::with_rules(spec.workers, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: spec.min_device_items,
+            ..Default::default()
+        }))
+        .with_device_fleet(&artifacts_dir, &profile_refs)?;
+    let method = Arc::new(hybrid::series_hybrid());
+
+    let mut rows = Vec::new();
+    for (label, count) in [("Series-1x", chunk + 1), ("Series-2x", chunk * 2 + 1)] {
+        let inp = Arc::new(series::Input { count, m: SERIES_INTERVALS });
+
+        // pure SMP lane
+        let smp_secs =
+            middle_tier_mean(&sample(spec.reps, || method.smp.invoke(&inp, spec.workers)))
+                .as_secs_f64();
+
+        // each lane alone, on a warm caller-driven session (artifact
+        // lowering is a load cost, not an execute cost)
+        let mut lane_secs = Vec::with_capacity(spec.profiles.len());
+        for p in &spec.profiles {
+            let profile =
+                DeviceProfile::by_name(p).ok_or_else(|| anyhow!("unknown profile '{p}'"))?;
+            let mut sess = DeviceSession::new(&reg, profile);
+            gpu::series_run_range(&mut sess, 1, 2)?; // warm, untimed
+            let secs = middle_tier_mean(&sample(spec.reps, || {
+                gpu::series_run_range(&mut sess, 1, count).expect("device series runs")
+            }))
+            .as_secs_f64();
+            lane_secs.push(secs);
+        }
+
+        // correctness preflight + weight learning through the engine
+        let want = series::sequential(count, SERIES_INTERVALS);
+        for round in 0..spec.learn_rounds.max(1) {
+            let (got, _) = engine.submit_hetero(method.clone(), inp.clone()).join()?;
+            if round == 0 {
+                for (i, g) in got.iter().enumerate() {
+                    let w = want[i + 1];
+                    if (g.0 - w.0).abs() > 5e-3 || (g.1 - w.1).abs() > 5e-3 {
+                        bail!("sharded series diverges at n={}: {g:?} vs {w:?}", i + 1);
+                    }
+                }
+            }
+        }
+
+        // timed shard at the learned weights
+        let mut degraded = 0usize;
+        let mut lane_items = vec![0usize; spec.profiles.len()];
+        let mut lane_share_secs = vec![0.0f64; spec.profiles.len()];
+        let fleet_secs = middle_tier_mean(&sample(spec.reps, || {
+            let (_, how) = engine
+                .submit_hetero(method.clone(), inp.clone())
+                .join()
+                .expect("sharded series runs");
+            match how {
+                Executed::Sharded { lanes, .. } => {
+                    for l in &lanes {
+                        lane_items[l.device_id] = l.items;
+                        lane_share_secs[l.device_id] = l.secs;
+                    }
+                }
+                _ => degraded += 1,
+            }
+        }))
+        .as_secs_f64();
+
+        let weights =
+            engine.scheduler().sharded_weights(method.name(), spec.profiles.len());
+        let best = lane_secs.iter().copied().fold(smp_secs, f64::min);
+        rows.push(FleetRow {
+            bench: label.to_string(),
+            items: count - 1,
+            workers: spec.workers,
+            smp_secs,
+            lane_secs,
+            best_single_secs: best,
+            fleet_secs,
+            speedup_vs_best: if fleet_secs > 0.0 { best / fleet_secs } else { 0.0 },
+            weights,
+            lane_items,
+            lane_share_secs,
+            degraded_runs: degraded,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the report as the `BENCH_fleet.json` schema (see
+/// `docs/BENCHMARKS.md`).
+pub fn to_json(spec: &FleetSpec, rows: &[FleetRow]) -> Json {
+    use std::collections::BTreeMap;
+    let farr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("fleet_shard/v1".to_string()));
+    top.insert("reps".to_string(), Json::Num(spec.reps as f64));
+    top.insert("learn_rounds".to_string(), Json::Num(spec.learn_rounds as f64));
+    top.insert("min_device_items".to_string(), Json::Num(spec.min_device_items as f64));
+    top.insert(
+        "profiles".to_string(),
+        Json::Arr(spec.profiles.iter().map(|p| Json::Str(p.clone())).collect()),
+    );
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::Str(r.bench.clone()));
+            m.insert("items".to_string(), Json::Num(r.items as f64));
+            m.insert("workers".to_string(), Json::Num(r.workers as f64));
+            m.insert("smp_secs".to_string(), Json::Num(r.smp_secs));
+            m.insert("lane_secs".to_string(), farr(&r.lane_secs));
+            m.insert("best_single_secs".to_string(), Json::Num(r.best_single_secs));
+            m.insert("fleet_secs".to_string(), Json::Num(r.fleet_secs));
+            m.insert("speedup_vs_best".to_string(), Json::Num(r.speedup_vs_best));
+            m.insert("weights".to_string(), farr(&r.weights));
+            m.insert(
+                "lane_items".to_string(),
+                Json::Arr(r.lane_items.iter().map(|&x| Json::Num(x as f64)).collect()),
+            );
+            m.insert("lane_share_secs".to_string(), farr(&r.lane_share_secs));
+            m.insert("degraded_runs".to_string(), Json::Num(r.degraded_runs as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("workloads".to_string(), Json::Arr(arr));
+    Json::Obj(top)
+}
+
+/// Print the fleet report, write `out_path`, and with `check` gate the
+/// largest workload: a 2+-lane fleet's sharded wall must be within `tol`
+/// of the best single lane or better, with zero degraded timed runs.
+pub fn report(spec: &FleetSpec, out_path: &str, check: bool, tol: f64) -> Result<()> {
+    let rows = measure(spec)?;
+    println!(
+        "== Device fleet: one invocation sharded across SMP + {} lane(s) [{}] \
+         (workers {}, reps {}, learn {}) ==",
+        spec.profiles.len(),
+        spec.profiles.join(", "),
+        spec.workers,
+        spec.reps,
+        spec.learn_rounds
+    );
+    println!(
+        "{:<10} {:>8} {:>10} {:>22} {:>11} {:>10} {:>18}",
+        "Workload", "items", "SMP (s)", "Lanes alone (s)", "Fleet (s)", "vs best", "weights"
+    );
+    for r in &rows {
+        let lanes: Vec<String> = r.lane_secs.iter().map(|s| format!("{s:.4}")).collect();
+        let weights: Vec<String> = r.weights.iter().map(|w| format!("{w:.2}")).collect();
+        println!(
+            "{:<10} {:>8} {:>10.4} {:>22} {:>11.4} {:>9.2}x {:>18}{}",
+            r.bench,
+            r.items,
+            r.smp_secs,
+            lanes.join("/"),
+            r.fleet_secs,
+            r.speedup_vs_best,
+            weights.join("/"),
+            if r.degraded_runs > 0 {
+                format!("  ({} of {} runs degraded to SMP)", r.degraded_runs, spec.reps)
+            } else {
+                String::new()
+            }
+        );
+    }
+    std::fs::write(out_path, to_json(spec, &rows).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if check {
+        if spec.profiles.len() < 2 {
+            bail!(
+                "the fleet gate needs at least 2 device lanes (got {}) — a 1-lane \"fleet\" \
+                 is just the hybrid bench",
+                spec.profiles.len()
+            );
+        }
+        let largest = rows.last().ok_or_else(|| anyhow!("no workloads measured"))?;
+        if largest.degraded_runs > 0 {
+            bail!(
+                "{} of the timed {} runs degraded to pure SMP (every device share under \
+                 min_device_items) — the fleet gate would be vacuous",
+                largest.degraded_runs,
+                largest.bench
+            );
+        }
+        if largest.fleet_secs > largest.best_single_secs * tol {
+            bail!(
+                "the fleet is slower than the best single lane on {}: {:.4}s vs {:.4}s \
+                 (tol {tol})",
+                largest.bench,
+                largest.fleet_secs,
+                largest.best_single_secs
+            );
+        }
+        println!(
+            "check ok: fleet within tol of the best single lane on {} ({:.4}s vs {:.4}s, \
+             weights {:?})",
+            largest.bench, largest.fleet_secs, largest.best_single_secs, largest.weights
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_spec_json_shape() {
+        let spec = FleetSpec {
+            profiles: vec!["fermi".into(), "geforce320m".into()],
+            reps: 2,
+            workers: 2,
+            learn_rounds: 1,
+            min_device_items: 64,
+        };
+        let rows = vec![FleetRow {
+            bench: "Series-1x".into(),
+            items: 4096,
+            workers: 2,
+            smp_secs: 0.5,
+            lane_secs: vec![0.4, 0.45],
+            best_single_secs: 0.4,
+            fleet_secs: 0.2,
+            speedup_vs_best: 2.0,
+            weights: vec![0.4, 0.3, 0.3],
+            lane_items: vec![1200, 1300],
+            lane_share_secs: vec![0.19, 0.2],
+            degraded_runs: 0,
+        }];
+        let j = to_json(&spec, &rows);
+        let text = j.dump();
+        let parsed = Json::parse(&text).expect("fleet report parses");
+        assert_eq!(
+            parsed.get("schema").and_then(Json::as_str),
+            Some("fleet_shard/v1")
+        );
+        let workloads = parsed.get("workloads").and_then(Json::as_arr).unwrap();
+        assert_eq!(workloads.len(), 1);
+        let row = &workloads[0];
+        assert_eq!(row.get("bench").and_then(Json::as_str), Some("Series-1x"));
+        assert_eq!(
+            row.get("lane_secs").and_then(Json::as_arr).map(|a| a.len()),
+            Some(2)
+        );
+        assert_eq!(
+            row.get("weights").and_then(Json::as_arr).map(|a| a.len()),
+            Some(3)
+        );
+    }
+}

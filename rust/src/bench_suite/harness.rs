@@ -3,9 +3,10 @@
 //! rows, following the paper's methodology (mean of the middle tier of
 //! the samples; speedups relative to the sequential baseline), plus the
 //! post-paper runtime reports: the `auto` decision table ([`print_auto`],
-//! now rendering three-way smp/device/hybrid choices) and the hybrid
+//! rendering smp/device/hybrid/sharded choices), the hybrid
 //! co-execution rows ([`print_hybrid`], delegating to
-//! [`super::hybrid::report`]).
+//! [`super::hybrid::report`]) and the device-fleet sharding rows
+//! ([`print_fleet`], delegating to [`super::fleet::report`]).
 
 use std::time::Duration;
 
@@ -431,6 +432,7 @@ pub fn print_auto(
             crate::somd::Choice::Hybrid { device_fraction } => {
                 format!("hybrid({device_fraction:.2})")
             }
+            crate::somd::Choice::Sharded { lanes } => format!("sharded({lanes} lanes)"),
         };
         println!(
             "{:<15} {:>12.4} {:>14.4} {:>14.2} {:>10}",
@@ -474,6 +476,17 @@ pub fn print_hybrid(
     tol: f64,
 ) -> anyhow::Result<()> {
     super::hybrid::report(reps, workers, learn_rounds, out_path, check, tol)
+}
+
+/// Print the device-fleet sharding report (see [`super::fleet::report`]
+/// for the measurement protocol and the `--check` gate).
+pub fn print_fleet(
+    spec: &super::fleet::FleetSpec,
+    out_path: &str,
+    check: bool,
+    tol: f64,
+) -> anyhow::Result<()> {
+    super::fleet::report(spec, out_path, check, tol)
 }
 
 /// Print the Table-2 adequacy counts.

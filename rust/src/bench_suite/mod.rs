@@ -17,9 +17,12 @@
 //! the calibrated parallel-makespan model used on this 1-core testbed;
 //! [`serve`] is the serving-layer load harness (open-loop arrival sweep,
 //! batched vs unbatched) plus the batchable method builders it and the
-//! serving correctness suite share.
+//! serving correctness suite share; [`fleet`] is the device-fleet
+//! sharding report (one invocation split N-way across SMP and every
+//! fleet lane, fleet vs best-single-lane wall).
 
 pub mod crypt;
+pub mod fleet;
 pub mod gpu;
 pub mod harness;
 pub mod hybrid;

@@ -75,6 +75,25 @@ impl DeviceStats {
         self.bytes_h2d + self.bytes_d2h
     }
 
+    /// Fold another session's accounting into this one — how the device
+    /// fleet totals the per-lane shares of one sharded invocation into a
+    /// single transfer/launch record for the scheduler history.
+    /// Additive counters sum; the residency peak keeps the maximum (the
+    /// lanes' sessions are disjoint address spaces, but a single
+    /// conservative high-water mark is the honest summary).
+    pub fn absorb(&mut self, other: &DeviceStats) {
+        self.launches += other.launches;
+        self.h2d_transfers += other.h2d_transfers;
+        self.d2h_transfers += other.d2h_transfers;
+        self.bytes_h2d += other.bytes_h2d;
+        self.bytes_d2h += other.bytes_d2h;
+        self.wall_compute += other.wall_compute;
+        self.device_time += other.device_time;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
+        self.total_threads_launched += other.total_threads_launched;
+        self.idle_thread_fraction_sum += other.idle_thread_fraction_sum;
+    }
+
     /// The accounting accumulated since `earlier` — the per-job slice a
     /// warm (reused) session hands to the scheduler history.
     pub fn delta_since(&self, earlier: &DeviceStats) -> DeviceStats {
@@ -334,6 +353,32 @@ mod tests {
         assert_eq!(s.stats().bytes_d2h - d2h_before, 1000 * 4);
         assert_eq!(s.stats().d2h_transfers, 1);
         s.free(out).unwrap();
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_keeps_peak() {
+        let mut a = DeviceStats {
+            launches: 2,
+            bytes_h2d: 100,
+            bytes_d2h: 10,
+            peak_resident_bytes: 500,
+            idle_thread_fraction_sum: 0.25,
+            ..DeviceStats::default()
+        };
+        let b = DeviceStats {
+            launches: 3,
+            bytes_h2d: 50,
+            bytes_d2h: 40,
+            peak_resident_bytes: 900,
+            idle_thread_fraction_sum: 0.5,
+            ..DeviceStats::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.launches, 5);
+        assert_eq!(a.bytes_h2d, 150);
+        assert_eq!(a.bytes_d2h, 50);
+        assert_eq!(a.peak_resident_bytes, 900);
+        assert!((a.idle_thread_fraction_sum - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! somd bench interp [--reps N] [--out FILE] [--smoke] [--check]
 //! somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE]
 //!                   [--tol T] [--smoke] [--check]
+//! somd bench fleet  [--profiles p1,p2,...] [--reps N] [--workers W] [--learn N]
+//!                   [--min-items N] [--out FILE] [--tol T] [--smoke] [--check]
 //! somd bench serve  [--requests N] [--clients C] [--elems E] [--workers W]
 //!                   [--out FILE] [--tol T] [--smoke] [--check]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
@@ -19,7 +21,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use somd::bench_suite::{crypt, gpu, harness, interp, lufact, modeled, serve, series, sor, sparse};
+use somd::bench_suite::{
+    crypt, fleet, gpu, harness, interp, lufact, modeled, serve, series, sor, sparse,
+};
 use somd::bench_suite::{Class, Sizes};
 use somd::device::{DeviceProfile, DeviceSession};
 use somd::runtime::Registry;
@@ -47,9 +51,10 @@ fn dispatch(args: &Args) -> Result<()> {
         _ => {
             eprintln!(
                 "usage: somd <info|bench|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|serve> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|fleet|serve> [--class A|B|C|all] [--scale S] [--reps N]\n\
                  \x20      somd bench interp [--reps N] [--out FILE] [--smoke] [--check]\n\
                  \x20      somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE] [--tol T] [--smoke] [--check]\n\
+                 \x20      somd bench fleet [--profiles p1,p2,...] [--reps N] [--workers W] [--learn N] [--min-items N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench serve [--requests N] [--clients C] [--elems E] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
@@ -131,6 +136,34 @@ fn bench(args: &Args) -> Result<()> {
             let tol = args.opt_f64("tol", 1.10);
             harness::print_hybrid(reps, workers, learn, out, args.flag("check"), tol)?;
         }
+        "fleet" => {
+            // device-fleet sharding: one invocation split N-way across
+            // SMP and every configured lane; --check gates the fleet not
+            // losing to the best single lane on the largest workload
+            let reps = if args.flag("smoke") { args.opt_usize("reps", 2) } else { reps };
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let workers = args.opt_usize("workers", cores);
+            let learn = args.opt_usize("learn", if args.flag("smoke") { 3 } else { 4 });
+            let out = args.opt("out").unwrap_or("BENCH_fleet.json");
+            let tol = args.opt_f64("tol", 1.10);
+            let profiles: Vec<String> = match args.opt("profiles") {
+                Some(p) => p.split(',').map(|s| s.trim().to_string()).collect(),
+                None => somd::somd::Engine::fleet_profiles_from_env(),
+            };
+            let min_items = args.opt_usize(
+                "min-items",
+                somd::somd::Engine::fleet_min_device_items_from_env().unwrap_or(1024),
+            );
+            let spec = fleet::FleetSpec {
+                profiles,
+                reps,
+                workers,
+                learn_rounds: learn,
+                min_device_items: min_items,
+            };
+            harness::print_fleet(&spec, out, args.flag("check"), tol)?;
+        }
         "serve" => {
             // serving-layer load harness: open-loop arrival sweep through
             // the micro-batching service, batched vs unbatched rows; the
@@ -194,9 +227,12 @@ fn run(args: &Args) -> Result<()> {
             somd::somd::Target::Device(d) => d,
             // no history exists in a one-shot CLI run; `auto` defaults to
             // the scheduler's exploration start (SMP), and a forced
-            // hybrid has no learned ratio yet either — use `somd bench
-            // hybrid` or the engine API for co-execution
-            somd::somd::Target::Auto | somd::somd::Target::Hybrid => "smp".into(),
+            // hybrid/sharded split has no learned ratio or weights yet
+            // either — use `somd bench hybrid` / `somd bench fleet` or
+            // the engine API for co-execution
+            somd::somd::Target::Auto
+            | somd::somd::Target::Hybrid
+            | somd::somd::Target::Sharded => "smp".into(),
         },
     };
     println!("somd run {bench} class={} scale={scale} backend={backend}", class.name());

@@ -128,6 +128,13 @@ impl Registry {
         Self::load(dir)
     }
 
+    /// The directory this registry was loaded from (what an
+    /// [`Engine::with_device_fleet`](crate::somd::Engine::with_device_fleet)
+    /// caller passes so every fleet lane loads the same artifacts).
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
     /// Iterate the manifest's artifact names (sorted).
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.infos.keys().map(String::as_str)

@@ -11,9 +11,12 @@
 //! up, then:
 //!
 //! 1. **compose** the request inputs into one fused input,
-//! 2. execute it as a *single* engine submission (SMP / device / hybrid,
-//!    whatever the rules + scheduler resolve — one launch, one set of
-//!    H2D/D2H transfers, amortized across the whole batch),
+//! 2. execute it as a *single* engine submission (SMP / device / hybrid
+//!    / sharded, whatever the rules + scheduler resolve — one launch,
+//!    one set of H2D/D2H transfers, amortized across the whole batch;
+//!    device-resolved launches land on the fleet's least-loaded lane, so
+//!    independent batches from concurrent dispatchers spread across
+//!    every device),
 //! 3. **split** the fused result and resolve each request's
 //!    [`Ticket`](super::Ticket).
 //!

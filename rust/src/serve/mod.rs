@@ -16,11 +16,22 @@
 //!  ───────            ────────────────               ──────
 //!  submit ──admission─▶ [r1 r2 r3 …] ──head run──▶ compose → one
 //!  submit ──admission─▶ [r4 r5]        (compat,     fused launch
-//!     ⋮        (block/    ⋮             ≤ max_batch  (smp|device|hybrid)
-//!              reject)                  items,            │
-//!                                       ≤ max_batch       ▼
-//!  ticket ◀── demux ◀──────────────────── delay)      split result
+//!     ⋮        (block/    ⋮             ≤ max_batch  (smp|device|hybrid|
+//!              reject)                  items,        sharded)
+//!                                       ≤ max_batch       │
+//!  ticket ◀── demux ◀──────────────────── delay)          ▼
+//!                                                     split result
 //! ```
+//!
+//! Since the device-fleet PR the engine under this layer may hold
+//! *several* device lanes ([`Engine::with_device_fleet`]): each
+//! dispatcher's fused device launches go to the **least-loaded** lane
+//! matching the resolved profile, so concurrent clients hitting
+//! different methods (or different compat keys of one method) actually
+//! use every device at once, and a `sharded`-resolved fused launch
+//! splits across SMP plus the whole fleet.
+//!
+//! [`Engine::with_device_fleet`]: crate::somd::Engine::with_device_fleet
 //!
 //! The pieces:
 //!

@@ -182,6 +182,13 @@ impl<R> Ticket<R> {
 /// The multi-client invocation service (see the [module
 /// docs](crate::serve)).
 ///
+/// Build the engine with
+/// [`Engine::with_device_fleet`](crate::somd::Engine::with_device_fleet)
+/// to serve over several device lanes: each registered method's fused
+/// launches then dispatch to the least-loaded lane, and
+/// `method:sharded` rules split a fused launch across SMP plus the
+/// whole fleet.
+///
 /// # Examples
 ///
 /// ```no_run

@@ -21,6 +21,13 @@ pub enum Target {
     /// learned ratio.  Reverts to SMP when the method has no hybrid spec
     /// or no device lane is attached (§6 fallback discipline).
     Hybrid,
+    /// Shard across the whole device fleet: the invocation's index space
+    /// is split N-way — the SMP pool plus *every* attached device lane —
+    /// at the scheduler's learned per-lane weights
+    /// ([`crate::somd::scheduler::Scheduler::sharded_weights`]).  Reverts
+    /// to hybrid on the synchronous (caller-driven) path, and to SMP when
+    /// the method has no hybrid spec or no fleet is attached.
+    Sharded,
 }
 
 /// Per-method `method:target` rules (paper §6), parsed from a rules file.
@@ -50,6 +57,7 @@ impl Rules {
                 "smp" | "cpu" | "shared" => Target::Smp,
                 "auto" => Target::Auto,
                 "hybrid" => Target::Hybrid,
+                "sharded" | "fleet" => Target::Sharded,
                 dev if !dev.is_empty() => Target::Device(dev.to_string()),
                 _ => return Err(format!("line {}: empty target", lineno + 1)),
             };
@@ -109,5 +117,12 @@ mod tests {
     fn parses_hybrid_target() {
         let r = Rules::parse("Series.coefficients:hybrid  # co-execute\n").unwrap();
         assert_eq!(r.target_for("Series.coefficients"), Target::Hybrid);
+    }
+
+    #[test]
+    fn parses_sharded_target() {
+        let r = Rules::parse("Series.coefficients:sharded\nCrypt.cipher:fleet\n").unwrap();
+        assert_eq!(r.target_for("Series.coefficients"), Target::Sharded);
+        assert_eq!(r.target_for("Crypt.cipher"), Target::Sharded);
     }
 }

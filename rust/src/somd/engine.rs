@@ -2,26 +2,37 @@
 //! version-selection rules, the adaptive scheduler and the invocation
 //! entry points.
 //!
-//! Three execution lanes serve asynchronous submissions:
+//! Four execution lanes serve asynchronous submissions:
 //!
 //! * **SMP lane** — invocations compete for the [`WorkerPool`] exactly as
 //!   in the paper's runtime;
-//! * **device lane** — PJRT objects are `Rc`-confined, so all device work
-//!   funnels through one *device master* thread that owns the
-//!   [`Registry`] and a warm [`DeviceSession`] per profile.  Concurrent
-//!   submissions to the same profile reuse the warm session instead of
-//!   re-creating registry/session state per call (observable through
-//!   [`DeviceCounters`]).
-//! * **hybrid lane** — one invocation *forked* across both of the above:
-//!   the index space splits at the scheduler's learned ratio, the SMP
-//!   share runs as a pool job while the device share queues on the
+//! * **device lanes (the fleet)** — PJRT objects are `Rc`-confined, so
+//!   device work funnels through *device master* threads, one per
+//!   configured fleet lane ([`Engine::with_device_fleet`]); each master
+//!   owns its own [`Registry`] and a warm [`DeviceSession`] per profile.
+//!   Heterogeneous mixes (`fermi` + `geforce320m`, …) are first-class.
+//!   Whole-invocation device jobs dispatch to the **least-loaded** lane
+//!   matching the resolved profile (falling back to the least-loaded
+//!   lane overall), so concurrent submitters — the serving layer's
+//!   dispatchers above all — actually use every device.  Warm-session
+//!   reuse per lane is observable through [`DeviceCounters`].
+//! * **hybrid lane** — one invocation *forked* across SMP and one device
+//!   lane: the index space splits at the scheduler's learned ratio, the
+//!   SMP share runs as a pool job while the device share queues on a
 //!   master thread, and a completion latch merges the partial results
 //!   through the method's reduction when the second side finishes
 //!   (neither side ever blocks a worker waiting for the other — that
 //!   would deadlock against the device lane's pool-backed kernels).
+//! * **sharded lane** — the fleet generalization of hybrid: one
+//!   invocation split N-way across SMP *and every device lane at once*,
+//!   at the scheduler's learned per-lane weights
+//!   ([`split_weighted_floor`]), joined by the same
+//!   completion-latch discipline counted down over `k + 1` shares.
 //!
-//! Rules resolve per method as `smp | device(<profile>) | hybrid | auto`;
-//! `auto` defers to the [`Scheduler`]'s execution-history cost model.
+//! Rules resolve per method as `smp | device(<profile>) | hybrid |
+//! sharded | auto`; `auto` defers to the [`Scheduler`]'s
+//! execution-history cost model (per-device-lane throughput windows on
+//! fleets of two or more).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -32,10 +43,10 @@ use std::time::Instant;
 use super::config::{Rules, Target};
 use super::distribution::Range1;
 use super::master::SomdMethod;
-use super::partition::split_fraction;
+use super::partition::{split_fraction, split_weighted_floor};
 use super::pool::{JobHandle, WorkerPool};
 use super::scheduler::{Choice, Scheduler, SchedulerConfig};
-use crate::backend::{DeviceShare, Executed, HeteroMethod, HybridMerge};
+use crate::backend::{DeviceShare, Executed, HeteroMethod, HybridMerge, ShardedMerge};
 use crate::device::{DeviceProfile, DeviceSession};
 use crate::runtime::Registry;
 
@@ -107,20 +118,28 @@ struct DeviceMaster {
     tx: Option<mpsc::Sender<DeviceJob>>,
     handle: Option<std::thread::JoinHandle<()>>,
     counters: Arc<DeviceCounters>,
+    /// Jobs submitted but not yet finished on this master — the
+    /// least-loaded dispatch signal.  Incremented at submit, decremented
+    /// by the master loop after each job runs.
+    pending: Arc<AtomicUsize>,
 }
 
 impl DeviceMaster {
-    fn spawn(dir: PathBuf) -> anyhow::Result<DeviceMaster> {
+    fn spawn(dir: PathBuf, device_id: usize) -> anyhow::Result<DeviceMaster> {
         let counters = Arc::new(DeviceCounters::default());
+        let pending = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = mpsc::channel::<DeviceJob>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let thread_counters = counters.clone();
+        let thread_pending = pending.clone();
         let handle = std::thread::Builder::new()
-            .name("somd-device-master".into())
-            .spawn(move || master_loop(dir, rx, ready_tx, thread_counters))
+            .name(format!("somd-device-master-{device_id}"))
+            .spawn(move || master_loop(dir, rx, ready_tx, thread_counters, thread_pending))
             .expect("spawn device master thread");
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(DeviceMaster { tx: Some(tx), handle: Some(handle), counters }),
+            Ok(Ok(())) => {
+                Ok(DeviceMaster { tx: Some(tx), handle: Some(handle), counters, pending })
+            }
             Ok(Err(e)) => {
                 let _ = handle.join();
                 Err(anyhow::anyhow!("device master failed to start: {e}"))
@@ -133,11 +152,16 @@ impl DeviceMaster {
     }
 
     fn submit(&self, job: DeviceJob) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
         self.tx
             .as_ref()
             .expect("device master channel open")
             .send(job)
             .expect("device master thread alive");
+    }
+
+    fn pending(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
     }
 }
 
@@ -150,11 +174,23 @@ impl Drop for DeviceMaster {
     }
 }
 
+/// One lane of the device fleet: a master thread pinned to a configured
+/// profile (its warm-session home; the ctx can still serve other
+/// profiles on demand, preserving the single-master behavior for rules
+/// that name a profile no lane was configured with).
+struct DeviceLane {
+    master: DeviceMaster,
+    profile: String,
+    /// The profile's canonical `'static` name, for execution reports.
+    static_name: &'static str,
+}
+
 fn master_loop(
     dir: PathBuf,
     rx: mpsc::Receiver<DeviceJob>,
     ready: mpsc::Sender<Result<(), String>>,
     counters: Arc<DeviceCounters>,
+    pending: Arc<AtomicUsize>,
 ) {
     // the registry must be created on this thread (PJRT is Rc-confined)
     let registry = match Registry::load(&dir) {
@@ -180,6 +216,7 @@ fn master_loop(
         ctx.counters.jobs_run.fetch_add(1, Ordering::SeqCst);
         // a panicking job must not take down the lane for queued peers
         let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&mut ctx)));
+        pending.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -312,11 +349,138 @@ where
 }
 
 // ---------------------------------------------------------------------------
+// Sharded fork/join (N-way completion latch)
+// ---------------------------------------------------------------------------
+
+/// The `k + 1` result slots of one sharded invocation plus the count of
+/// shares still outstanding.  Whichever share finishes *last* performs
+/// the merge — the [`HybridSlots`] latch counted down over the whole
+/// fleet, with the same no-blocking-join guarantee.
+struct ShardSlots<R> {
+    smp: Option<SmpHalf<R>>,
+    devs: Vec<Option<DevHalf<R>>>,
+    remaining: usize,
+}
+
+/// Shared state of one in-flight sharded invocation (held by the SMP
+/// share's pool job and every participating device lane's master job
+/// until the latch counts down).
+struct ShardedInFlight<I: ?Sized, P, E, R> {
+    method: Arc<HeteroMethod<I, P, E, R>>,
+    input: Arc<I>,
+    sched: Arc<Scheduler>,
+    smp_span: Range1,
+    dev_spans: Vec<Range1>,
+    profiles: Vec<&'static str>,
+    weights: Vec<f64>,
+    smp_parts: usize,
+    tx: mpsc::Sender<HybridOutcome<R>>,
+    slots: Mutex<ShardSlots<R>>,
+}
+
+impl<I, P, E, R> ShardedInFlight<I, P, E, R>
+where
+    I: ?Sized + Sync,
+    P: Send + Sync,
+    E: Sync,
+    R: Send,
+{
+    /// The SMP share: compute the leading span's partials on this pool
+    /// worker.
+    fn run_smp_shard(&self) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let t0 = Instant::now();
+            let partials =
+                self.method.hybrid_smp_partials(&self.input, self.smp_span, self.smp_parts);
+            (partials, t0.elapsed().as_secs_f64())
+        }));
+        let last = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.smp = Some(result);
+            slots.remaining -= 1;
+            slots.remaining == 0
+        };
+        if last {
+            self.finish();
+        }
+    }
+
+    /// Device lane `i`'s share: run its span on that lane's master
+    /// thread and warm session, clocked after dequeue.
+    fn run_device_shard(&self, i: usize, ctx: &mut DeviceCtx<'_>) {
+        let result: DevHalf<R> = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let session = ctx.session(self.profiles[i])?;
+            let before = session.stats();
+            let t0 = Instant::now();
+            let partial =
+                self.method.hybrid_device_partial(session, &self.input, self.dev_spans[i])?;
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = session.stats().delta_since(&before);
+            let profile = session.profile().name;
+            Ok(DeviceShare { partial, secs, stats, profile })
+        }));
+        let last = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.devs[i] = Some(result);
+            slots.remaining -= 1;
+            slots.remaining == 0
+        };
+        if last {
+            self.finish();
+        }
+    }
+
+    /// Latch release: merge every share (covering failures), record
+    /// history, send.
+    fn finish(&self) {
+        let (smp, devs) = {
+            let mut slots = self.slots.lock().unwrap();
+            (slots.smp.take().expect("smp share completed"), std::mem::take(&mut slots.devs))
+        };
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.merge(smp, devs)));
+        let _ = match outcome {
+            Ok(msg) => self.tx.send(msg),
+            Err(panic) => self.tx.send(Err(panic)),
+        };
+    }
+
+    fn merge(&self, smp: SmpHalf<R>, devs: Vec<Option<DevHalf<R>>>) -> HybridOutcome<R> {
+        let smp = match smp {
+            Ok(v) => v,
+            // the SMP share panicked: propagate the payload to join()
+            Err(p) => return Err(p),
+        };
+        // panicked device shares fold into the failure path of the shared
+        // merge exactly like the hybrid latch's device half
+        let devs: Vec<Option<anyhow::Result<DeviceShare<R>>>> = devs
+            .into_iter()
+            .map(|slot| {
+                slot.map(|outcome| match outcome {
+                    Ok(r) => r,
+                    Err(_panic) => Err(anyhow::anyhow!("sharded device share panicked")),
+                })
+            })
+            .collect();
+        let m = ShardedMerge {
+            sched: &self.sched,
+            input: &self.input,
+            smp_span: self.smp_span,
+            dev_spans: &self.dev_spans,
+            profiles: &self.profiles,
+            weights: &self.weights,
+            nparts: self.smp_parts,
+        };
+        Ok(Ok(self.method.finish_sharded(m, smp, devs)))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Engine
 // ---------------------------------------------------------------------------
 
 /// The runtime engine: worker pool + rules + scheduler + optional device
-/// master (see the module docs for the three lanes).
+/// fleet (see the module docs for the four lanes).
 pub struct Engine {
     workers: usize,
     rules: Rules,
@@ -324,7 +488,9 @@ pub struct Engine {
     // the engine's lifetime (the runner is a process-wide install)
     pool: Arc<WorkerPool>,
     scheduler: Arc<Scheduler>,
-    device: Option<DeviceMaster>,
+    /// The device fleet: one master thread + warm sessions per lane
+    /// (empty = no device lanes attached).
+    device: Vec<DeviceLane>,
     auto_profile: String,
 }
 
@@ -343,7 +509,7 @@ impl Engine {
             rules,
             pool: Arc::new(WorkerPool::new(workers)),
             scheduler: Arc::new(Scheduler::new(SchedulerConfig::default())),
-            device: None,
+            device: Vec::new(),
             auto_profile: "fermi".to_string(),
         }
     }
@@ -354,25 +520,51 @@ impl Engine {
         Self::new(cores)
     }
 
-    /// Attach the device lane: spawns the master thread, which loads the
-    /// artifact registry from `artifacts_dir` and keeps warm sessions.
-    /// `auto_profile` is the device profile `Target::Auto` (and the
-    /// hybrid lane) resolves to.
+    /// Attach a single-lane device fleet: spawns one master thread, which
+    /// loads the artifact registry from `artifacts_dir` and keeps warm
+    /// sessions.  `auto_profile` is the device profile `Target::Auto`
+    /// (and the hybrid lane) resolves to.  Kept as the two-lane entry
+    /// point — it is exactly [`Engine::with_device_fleet`] over one
+    /// profile, and every pre-fleet caller keeps its behavior.
     pub fn with_device_master(
-        mut self,
+        self,
         artifacts_dir: impl Into<PathBuf>,
         auto_profile: &str,
     ) -> anyhow::Result<Self> {
-        if DeviceProfile::by_name(auto_profile).is_none() {
-            anyhow::bail!("unknown device profile '{auto_profile}'");
+        self.with_device_fleet(artifacts_dir, &[auto_profile])
+    }
+
+    /// Attach a **device fleet**: one master thread + warm
+    /// [`DeviceSession`] per configured profile, heterogeneous mixes
+    /// (`fermi` + `geforce320m`, …) allowed — the same profile may even
+    /// appear twice to model two identical cards.  The first profile is
+    /// the fleet's *auto profile* (what `Target::Auto` and the two-way
+    /// hybrid lane resolve to).  Whole-invocation device jobs dispatch to
+    /// the least-loaded matching lane; `Target::Sharded` splits one
+    /// invocation across SMP and *every* lane at the scheduler's learned
+    /// per-lane weights.
+    pub fn with_device_fleet(
+        mut self,
+        artifacts_dir: impl Into<PathBuf>,
+        profiles: &[&str],
+    ) -> anyhow::Result<Self> {
+        if profiles.is_empty() {
+            anyhow::bail!("a device fleet needs at least one profile");
+        }
+        let mut static_names = Vec::with_capacity(profiles.len());
+        for p in profiles {
+            match DeviceProfile::by_name(p) {
+                Some(prof) => static_names.push(prof.name),
+                None => anyhow::bail!("unknown device profile '{p}'"),
+            }
         }
         // Route the compiled interpreter's chunked kernels through this
         // engine's worker pool: device-lane kernels then compete for the
         // same SMP workers as shared-memory invocations (§6).  Process-
         // wide and first-engine-wins; the Arc keeps the pool's threads
         // alive for later engines that lose the install race.  Safe from
-        // nested-submission deadlock because kernels only ever run on the
-        // device-master thread, never on pool workers, and chunk jobs
+        // nested-submission deadlock because kernels only ever run on
+        // device-master threads, never on pool workers, and chunk jobs
         // themselves never re-submit.
         let pool = self.pool.clone();
         xla::install_parallel_runner(Box::new(move |jobs: Vec<xla::ParallelJob>| {
@@ -381,9 +573,40 @@ impl Engine {
                 h.join();
             }
         }));
-        self.device = Some(DeviceMaster::spawn(artifacts_dir.into())?);
-        self.auto_profile = auto_profile.to_string();
+        let dir: PathBuf = artifacts_dir.into();
+        let mut lanes = Vec::with_capacity(profiles.len());
+        for (i, p) in profiles.iter().enumerate() {
+            lanes.push(DeviceLane {
+                master: DeviceMaster::spawn(dir.clone(), i)?,
+                profile: p.to_string(),
+                static_name: static_names[i],
+            });
+        }
+        self.device = lanes;
+        self.auto_profile = profiles[0].to_string();
         Ok(self)
+    }
+
+    /// The fleet profiles named by `SOMD_FLEET_PROFILES` (comma-separated
+    /// profile tokens; default `fermi,geforce320m` — the paper's two §7.3
+    /// systems side by side).  Companion knob:
+    /// [`Engine::fleet_min_device_items_from_env`].  Both are documented
+    /// in `docs/BENCHMARKS.md`'s knob table.
+    pub fn fleet_profiles_from_env() -> Vec<String> {
+        match std::env::var("SOMD_FLEET_PROFILES") {
+            Ok(v) if !v.trim().is_empty() => {
+                v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+            }
+            _ => vec!["fermi".to_string(), "geforce320m".to_string()],
+        }
+    }
+
+    /// The `SOMD_FLEET_MIN_DEVICE_ITEMS` override for the scheduler's
+    /// `min_device_items` floor (the smallest index-space share a fleet
+    /// lane may receive before it is starved back into the SMP share);
+    /// `None` when unset or unparsable.
+    pub fn fleet_min_device_items_from_env() -> Option<usize> {
+        std::env::var("SOMD_FLEET_MIN_DEVICE_ITEMS").ok().and_then(|v| v.parse().ok())
     }
 
     /// Replace the scheduler (e.g. restored from persisted JSON history,
@@ -408,9 +631,25 @@ impl Engine {
         &self.scheduler
     }
 
-    /// Whether the device lane is up (master thread + registry loaded).
+    /// Whether any device lane is up (master thread + registry loaded).
     pub fn device_ready(&self) -> bool {
-        self.device.is_some()
+        !self.device.is_empty()
+    }
+
+    /// Device-lane count of the attached fleet (0 = no fleet).
+    pub fn fleet_size(&self) -> usize {
+        self.device.len()
+    }
+
+    /// The configured profile of each fleet lane, in `device_id` order.
+    pub fn device_lane_profiles(&self) -> Vec<&str> {
+        self.device.iter().map(|l| l.profile.as_str()).collect()
+    }
+
+    /// Jobs submitted-but-unfinished per fleet lane, in `device_id`
+    /// order — the signal least-loaded dispatch reads.
+    pub fn device_lane_pending(&self) -> Vec<usize> {
+        self.device.iter().map(|l| l.master.pending()).collect()
     }
 
     /// The profile `Target::Auto` and the hybrid lane resolve to when the
@@ -419,9 +658,53 @@ impl Engine {
         &self.auto_profile
     }
 
-    /// Warm-session counters of the device lane, if attached.
+    /// Warm-session counters summed over the whole fleet, if any lane is
+    /// attached (the pre-fleet aggregate view; per-lane counters via
+    /// [`Engine::device_lane_counters`]).
     pub fn device_counters(&self) -> Option<DeviceCountersSnapshot> {
-        self.device.as_ref().map(|d| d.counters.snapshot())
+        if self.device.is_empty() {
+            return None;
+        }
+        let mut total = DeviceCountersSnapshot { sessions_created: 0, warm_hits: 0, jobs_run: 0 };
+        for l in &self.device {
+            let s = l.master.counters.snapshot();
+            total.sessions_created += s.sessions_created;
+            total.warm_hits += s.warm_hits;
+            total.jobs_run += s.jobs_run;
+        }
+        Some(total)
+    }
+
+    /// Warm-session counters per fleet lane, in `device_id` order.
+    pub fn device_lane_counters(&self) -> Vec<DeviceCountersSnapshot> {
+        self.device.iter().map(|l| l.master.counters.snapshot()).collect()
+    }
+
+    /// The least-loaded lane able to serve `profile`: among lanes
+    /// *configured* with that profile when any exist, otherwise among the
+    /// whole fleet (any master can warm a session for any known profile —
+    /// the pre-fleet single-master behavior, preserved for rules that
+    /// name an unconfigured profile).  Ties break toward the lower
+    /// `device_id`, deterministically (a strict-improvement scan —
+    /// `Iterator::min_by_key` keeps the *last* of equal minima, which
+    /// would make tie-breaking depend on fleet order reversal).
+    fn pick_lane(&self, profile: &str) -> Option<&DeviceLane> {
+        fn least_loaded<'a>(
+            mut lanes: impl Iterator<Item = &'a DeviceLane>,
+        ) -> Option<&'a DeviceLane> {
+            let mut best = lanes.next()?;
+            let mut best_pending = best.master.pending();
+            for l in lanes {
+                let p = l.master.pending();
+                if p < best_pending {
+                    best = l;
+                    best_pending = p;
+                }
+            }
+            Some(best)
+        }
+        least_loaded(self.device.iter().filter(|l| l.profile == profile))
+            .or_else(|| least_loaded(self.device.iter()))
     }
 
     /// Block until every device job submitted so far has *executed*: a
@@ -437,18 +720,30 @@ impl Engine {
     /// dispatchers have joined, to make shutdown deterministic end to
     /// end.  No-op without a device lane.
     pub fn drain(&self) {
-        if let Some(d) = &self.device {
+        // barrier every lane first, then wait — the fleet flushes in
+        // parallel instead of serializing lane by lane
+        let mut waits = Vec::with_capacity(self.device.len());
+        for lane in &self.device {
             let (tx, rx) = mpsc::channel::<()>();
             let barrier: DeviceJob = Box::new(move |_ctx: &mut DeviceCtx<'_>| {
                 let _ = tx.send(());
             });
+            // the pending count must rise before the barrier can run and
+            // fall, or the counter would underflow on a fast master
+            lane.master.pending.fetch_add(1, Ordering::SeqCst);
             // tolerate a master thread that already died (it never does
             // under normal operation — jobs are panic-caught — but a
             // drain must not turn an exotic failure into a double panic)
-            let sent = d.tx.as_ref().map(|t| t.send(barrier).is_ok()).unwrap_or(false);
+            let sent =
+                lane.master.tx.as_ref().map(|t| t.send(barrier).is_ok()).unwrap_or(false);
             if sent {
-                let _ = rx.recv();
+                waits.push(rx);
+            } else {
+                lane.master.pending.fetch_sub(1, Ordering::SeqCst);
             }
+        }
+        for rx in waits {
+            let _ = rx.recv();
         }
     }
 
@@ -463,17 +758,22 @@ impl Engine {
     /// then — for `auto` — the history cost model.  `applicable(profile)`
     /// reports whether a device version could actually run on the named
     /// profile in the *caller's* context (submission lane vs caller-held
-    /// registry) and `hybrid_applicable` whether the method could
-    /// co-execute there (hybrid spec present + registry/lane reachable) —
+    /// registry), `hybrid_applicable` whether the method could co-execute
+    /// there (hybrid spec present + registry/lane reachable), and
+    /// `sharded_lanes` how many fleet lanes an N-way shard could span (0
+    /// = sharding unreachable, e.g. the synchronous caller-driven path) —
     /// the only parts that differ between entry points.  `auto` considers
-    /// the hybrid lane only when both flags hold; a forced
-    /// `Target::Hybrid` reverts to SMP when inapplicable, the same
-    /// discipline §6 applies to inapplicable device preferences.
+    /// the hybrid lane only when both flags hold, and replaces the hybrid
+    /// rung with the sharded one on fleets of two or more lanes; a forced
+    /// `Target::Hybrid` reverts to SMP when inapplicable, and a forced
+    /// `Target::Sharded` steps down to hybrid, then SMP — the §6
+    /// nearest-applicable discipline.
     pub fn resolve_target(
         &self,
         method: &str,
         applicable: &dyn Fn(&str) -> bool,
         hybrid_applicable: bool,
+        sharded_lanes: usize,
     ) -> Target {
         match self.rules.target_for(method) {
             Target::Device(name) => {
@@ -490,13 +790,33 @@ impl Engine {
                     Target::Smp
                 }
             }
+            Target::Sharded => {
+                if sharded_lanes >= 1 {
+                    Target::Sharded
+                } else if hybrid_applicable {
+                    Target::Hybrid
+                } else {
+                    Target::Smp
+                }
+            }
             Target::Auto => {
                 if applicable(&self.auto_profile) {
-                    if hybrid_applicable {
+                    if sharded_lanes >= 2 {
+                        match self.scheduler.decide_sharded(method, sharded_lanes) {
+                            Choice::Device => Target::Device(self.auto_profile.clone()),
+                            Choice::Smp => Target::Smp,
+                            Choice::Hybrid { .. } => Target::Hybrid,
+                            Choice::Sharded { .. } => Target::Sharded,
+                        }
+                    } else if hybrid_applicable {
                         match self.scheduler.decide_hybrid(method) {
                             Choice::Device => Target::Device(self.auto_profile.clone()),
                             Choice::Smp => Target::Smp,
                             Choice::Hybrid { .. } => Target::Hybrid,
+                            // decide_hybrid never proposes a shard; a
+                            // sharded incumbent restored from a fleet
+                            // snapshot runs as the two-way split here
+                            Choice::Sharded { .. } => Target::Hybrid,
                         }
                     } else {
                         match self.scheduler.decide(method) {
@@ -512,7 +832,7 @@ impl Engine {
         }
     }
 
-    /// Submission-time resolution against the engine's own device lane,
+    /// Submission-time resolution against the engine's own device fleet,
     /// for methods without a hybrid spec (kept for the plain two-lane
     /// callers and tests; [`Engine::submit_hetero`] resolves with the
     /// method's full capability set).
@@ -521,10 +841,11 @@ impl Engine {
             method,
             &|profile: &str| {
                 has_device_version
-                    && self.device.is_some()
+                    && !self.device.is_empty()
                     && DeviceProfile::by_name(profile).is_some()
             },
             false,
+            0,
         )
     }
 
@@ -537,16 +858,19 @@ impl Engine {
         R: Send,
     {
         let hybrid_ok = method.has_hybrid_version()
-            && self.device.is_some()
+            && !self.device.is_empty()
             && DeviceProfile::by_name(&self.auto_profile).is_some();
+        // sharding spans the whole fleet through the same hybrid spec
+        let sharded_lanes = if hybrid_ok { self.device.len() } else { 0 };
         self.resolve_target(
             method.name(),
             &|profile: &str| {
                 method.has_device_version()
-                    && self.device.is_some()
+                    && !self.device.is_empty()
                     && DeviceProfile::by_name(profile).is_some()
             },
             hybrid_ok,
+            sharded_lanes,
         )
     }
 
@@ -639,6 +963,10 @@ impl Engine {
     {
         match self.resolve_for_submit(method.as_ref()) {
             Target::Device(profile) => {
+                // least-loaded dispatch: concurrent whole-invocation jobs
+                // (the serving layer's independent batches above all)
+                // spread across the fleet instead of queuing on one lane
+                let lane = self.pick_lane(&profile).expect("resolved device lane");
                 let sched = self.scheduler.clone();
                 let (tx, handle) = JobHandle::pair();
                 let job: DeviceJob = Box::new(move |ctx: &mut DeviceCtx<'_>| {
@@ -647,12 +975,13 @@ impl Engine {
                     }));
                     let _ = tx.send(result);
                 });
-                self.device.as_ref().expect("resolved device lane").submit(job);
+                lane.master.submit(job);
                 handle
             }
             Target::Hybrid => self.submit_hybrid(method, input),
+            Target::Sharded => self.submit_sharded(method, input),
             // Auto resolves to Smp before reaching here when inapplicable
-            _ => self.submit_smp_full(method, input, false),
+            _ => self.submit_smp_full(method, input, Degraded::No),
         }
     }
 
@@ -683,16 +1012,17 @@ impl Engine {
         self.submit_hetero(method, input)
     }
 
-    /// The pure-SMP submission path.  `hybrid_degraded` marks a hybrid
-    /// resolution whose device share underflowed the minimum chunk: the
-    /// wall is then also recorded as a (degraded) hybrid sample so the
-    /// scheduler's hybrid exploration completes instead of re-resolving
-    /// hybrid forever on inputs too small to split.
+    /// The pure-SMP submission path.  A `Degraded` marker notes a
+    /// co-execution resolution whose device share(s) underflowed the
+    /// minimum chunk: the wall is then also recorded as a (degraded)
+    /// hybrid or sharded sample so the scheduler's exploration rung
+    /// completes instead of re-resolving co-execution forever on inputs
+    /// too small to split.
     fn submit_smp_full<I, P, E, R>(
         &self,
         method: Arc<HeteroMethod<I, P, E, R>>,
         input: Arc<I>,
-        hybrid_degraded: bool,
+        degraded: Degraded,
     ) -> JobHandle<anyhow::Result<(R, Executed)>>
     where
         I: Send + Sync + 'static,
@@ -707,8 +1037,10 @@ impl Engine {
             let r = method.smp.invoke(&input, n);
             let wall = t0.elapsed();
             sched.record_smp(method.name(), wall);
-            if hybrid_degraded {
-                sched.record_hybrid_degraded(method.name(), wall);
+            match degraded {
+                Degraded::No => {}
+                Degraded::Hybrid => sched.record_hybrid_degraded(method.name(), wall),
+                Degraded::Sharded => sched.record_sharded_degraded(method.name(), wall),
             }
             Ok((r, Executed::Smp { partitions: n }))
         })
@@ -735,7 +1067,7 @@ impl Engine {
         if dev_span.is_empty() || dev_span.len() < self.scheduler.config().min_device_items {
             // the device share underflows the minimum chunk: co-execution
             // would be pure overhead, run the whole invocation on SMP
-            return self.submit_smp_full(method, input, true);
+            return self.submit_smp_full(method, input, Degraded::Hybrid);
         }
         let (tx, handle) = JobHandle::pair();
         let shared = Arc::new(HybridInFlight {
@@ -754,10 +1086,87 @@ impl Engine {
         let job: DeviceJob = Box::new(move |ctx: &mut DeviceCtx<'_>| {
             dev_shared.run_device_half(ctx);
         });
-        self.device.as_ref().expect("resolved hybrid lane").submit(job);
+        // the hybrid device half belongs on the auto profile's
+        // least-loaded lane
+        self.pick_lane(&self.auto_profile).expect("resolved hybrid lane").master.submit(job);
         self.pool.submit(move || shared.run_smp_half());
         handle
     }
+
+    /// Shard one invocation across the SMP pool and *every* fleet lane
+    /// (see the module docs): the index space splits at the scheduler's
+    /// learned per-lane weights under the `min_device_items` floor —
+    /// starved lanes fold back into the SMP share — the SMP share becomes
+    /// a pool job, each live device span a job on its own master thread,
+    /// and the last share to finish releases the N-way completion latch
+    /// that merges the partials and resolves the caller's handle.
+    fn submit_sharded<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        input: Arc<I>,
+    ) -> JobHandle<anyhow::Result<(R, Executed)>>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        let lanes = self.device.len();
+        debug_assert!(lanes >= 1, "sharded resolution without a fleet");
+        let total = method.hybrid_items(&input);
+        let weights = self.scheduler.sharded_weights(method.name(), lanes);
+        let spans =
+            split_weighted_floor(total, &weights, self.scheduler.config().min_device_items);
+        let smp_span = spans[0];
+        let dev_spans: Vec<Range1> = spans[1..].to_vec();
+        if dev_spans.iter().all(|s| s.is_empty()) {
+            // every device share starved under the floor: co-execution
+            // would be pure overhead, run the whole invocation on SMP
+            return self.submit_smp_full(method, input, Degraded::Sharded);
+        }
+        let live = dev_spans.iter().filter(|s| !s.is_empty()).count();
+        let (tx, handle) = JobHandle::pair();
+        let shared = Arc::new(ShardedInFlight {
+            method,
+            input,
+            sched: self.scheduler.clone(),
+            smp_span,
+            dev_spans: dev_spans.clone(),
+            profiles: self.device.iter().map(|l| l.static_name).collect(),
+            weights,
+            smp_parts: self.workers,
+            tx,
+            slots: Mutex::new(ShardSlots {
+                smp: None,
+                devs: (0..lanes).map(|_| None).collect(),
+                remaining: live + 1,
+            }),
+        });
+        for (i, lane) in self.device.iter().enumerate() {
+            if dev_spans[i].is_empty() {
+                continue; // starved: its items live in the SMP span now
+            }
+            let dev_shared = shared.clone();
+            let job: DeviceJob = Box::new(move |ctx: &mut DeviceCtx<'_>| {
+                dev_shared.run_device_shard(i, ctx);
+            });
+            lane.master.submit(job);
+        }
+        self.pool.submit(move || shared.run_smp_shard());
+        handle
+    }
+}
+
+/// Which co-execution lane a pure-SMP run stands in for (see
+/// [`Engine::submit_smp_full`]).
+#[derive(Clone, Copy)]
+enum Degraded {
+    /// A plain SMP resolution — nothing degraded.
+    No,
+    /// A hybrid resolution whose device share underflowed the floor.
+    Hybrid,
+    /// A sharded resolution all of whose device shares underflowed.
+    Sharded,
 }
 
 impl Drop for Engine {
@@ -901,12 +1310,70 @@ mod tests {
         rules.set("sum", Target::Hybrid);
         let e = Engine::with_rules(2, rules);
         // no device master: even a hybrid-capable method reverts to SMP
-        assert_eq!(e.resolve_target("sum", &|_| false, false), Target::Smp);
+        assert_eq!(e.resolve_target("sum", &|_| false, false, 0), Target::Smp);
+    }
+
+    #[test]
+    fn sharded_rule_steps_down_the_applicability_ladder() {
+        let mut rules = Rules::empty();
+        rules.set("sum", Target::Sharded);
+        let e = Engine::with_rules(2, rules);
+        // no fleet, no hybrid: all the way down to SMP
+        assert_eq!(e.resolve_target("sum", &|_| false, false, 0), Target::Smp);
+        // hybrid reachable but no fleet lanes (the sync path): two-way
+        assert_eq!(e.resolve_target("sum", &|_| true, true, 0), Target::Hybrid);
+        // a fleet of any size runs the shard
+        assert_eq!(e.resolve_target("sum", &|_| true, true, 1), Target::Sharded);
+        assert_eq!(e.resolve_target("sum", &|_| true, true, 3), Target::Sharded);
+    }
+
+    #[test]
+    fn auto_on_a_fleet_walks_the_sharded_ladder() {
+        let mut rules = Rules::empty();
+        rules.set("sum", Target::Auto);
+        let e = Engine::with_rules(2, rules);
+        // fresh history, 2-lane fleet: exploration starts at SMP
+        assert_eq!(e.resolve_target("sum", &|_| true, true, 2), Target::Smp);
+        e.scheduler().record_smp("sum", std::time::Duration::from_millis(5));
+        e.scheduler().record_smp("sum", std::time::Duration::from_millis(5));
+        assert_eq!(
+            e.resolve_target("sum", &|_| true, true, 2),
+            Target::Device("fermi".to_string())
+        );
+        e.scheduler().record_device(
+            "sum",
+            std::time::Duration::from_millis(5),
+            &crate::device::DeviceStats::default(),
+        );
+        e.scheduler().record_device(
+            "sum",
+            std::time::Duration::from_millis(5),
+            &crate::device::DeviceStats::default(),
+        );
+        // third rung on a multi-lane fleet is the N-way shard, not hybrid
+        assert_eq!(e.resolve_target("sum", &|_| true, true, 2), Target::Sharded);
     }
 
     #[test]
     fn device_master_requires_known_profile() {
         let e = Engine::new(1);
         assert!(e.with_device_master("artifacts", "h100").is_err());
+    }
+
+    #[test]
+    fn fleet_requires_known_profiles_and_at_least_one_lane() {
+        assert!(Engine::new(1).with_device_fleet("artifacts", &[]).is_err());
+        assert!(Engine::new(1).with_device_fleet("artifacts", &["fermi", "h100"]).is_err());
+    }
+
+    #[test]
+    fn fleet_accessors_without_a_fleet() {
+        let e = Engine::new(1);
+        assert!(!e.device_ready());
+        assert_eq!(e.fleet_size(), 0);
+        assert!(e.device_lane_profiles().is_empty());
+        assert!(e.device_lane_pending().is_empty());
+        assert!(e.device_counters().is_none());
+        assert!(e.device_lane_counters().is_empty());
     }
 }

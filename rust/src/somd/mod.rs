@@ -26,6 +26,10 @@
 //!   throughput-proportional ratio (reverting to SMP when the method has
 //!   no hybrid spec, no device lane is attached, or the device share
 //!   would underflow the minimum chunk);
+//! * `sharded` (alias `fleet`) — shard across the whole device fleet:
+//!   split one invocation's index space N-way over the SMP pool *and
+//!   every attached device lane* at the scheduler's learned per-lane
+//!   weights (stepping down to `hybrid`, then SMP, when inapplicable);
 //! * `auto` — let the runtime decide per invocation from recorded
 //!   execution history ([`scheduler::Scheduler`]): SMP wall times vs
 //!   *measured* device execute times (queue wait excluded) vs hybrid
@@ -57,8 +61,8 @@ pub use scheduler::{Choice, HybridSample, Scheduler, SchedulerConfig};
 pub use master::{run_mis, SomdMethod};
 pub use mi::MiCtx;
 pub use partition::{
-    split_fraction, stitched_spans, Block1D, Block2D, BlockPart, Block2Part, RowDisjoint, Rows1D,
-    SparsePart, TreeDist,
+    split_fraction, split_weighted, split_weighted_floor, stitched_spans, Block1D, Block2D,
+    BlockPart, Block2Part, RowDisjoint, Rows1D, SparsePart, TreeDist,
 };
 pub use phaser::Phaser;
 pub use reduction::{Assemble, FnReduce, Reduction};

@@ -16,6 +16,14 @@
 //! [`RowDisjoint::split_fraction`] partition *within* such a sub-span so
 //! the SMP share still fans out across MIs exactly as a whole invocation
 //! would.
+//!
+//! The device-fleet PR generalizes the two-way cut to **N-way**:
+//! [`split_weighted`] cuts one index space into `k + 1` contiguous lane
+//! spans (SMP first, then one per device lane) at the scheduler's
+//! learned per-lane weights, and [`split_weighted_floor`] additionally
+//! applies the `min_device_items` floor — device lanes whose share would
+//! be pure launch overhead are starved and their items fold back into
+//! the surviving lanes.
 
 use super::distribution::{index_ranges, near_square_grid, Distribution, Range1, Range2, View};
 use crate::somd::tree::Tree;
@@ -41,6 +49,105 @@ pub fn split_fraction(len: usize, device_fraction: f64) -> (Range1, Range1) {
     let dev = (((len as f64) * f).round() as usize).min(len);
     let cut = len - dev;
     (Range1::new(0, cut), Range1::new(cut, len))
+}
+
+/// Cut `[0, len)` into `weights.len()` contiguous abutting spans in lane
+/// order, lane `i` receiving a share proportional to `weights[i]`
+/// (non-finite or negative weights count as zero).  The spans cover the
+/// index space exactly and never reorder it, so per-lane partial results
+/// concatenate in rank order through the ordinary array-assembly
+/// reduction — the N-way generalization of [`split_fraction`]'s
+/// head/tail orientation.  When every weight is zero, lane 0 takes the
+/// whole space (the SMP lane is the universal fallback, §6).
+///
+/// # Examples
+///
+/// ```
+/// use somd::somd::partition::split_weighted;
+/// let spans = split_weighted(1000, &[0.5, 0.25, 0.25]);
+/// assert_eq!((spans[0].lo, spans[0].hi), (0, 500));
+/// assert_eq!((spans[1].lo, spans[1].hi), (500, 750));
+/// assert_eq!((spans[2].lo, spans[2].hi), (750, 1000));
+/// // zero-weight lanes get empty spans at their cut position
+/// let spans = split_weighted(10, &[1.0, 0.0, 1.0]);
+/// assert!(spans[1].is_empty());
+/// assert_eq!((spans[0].len(), spans[2].len()), (5, 5));
+/// ```
+pub fn split_weighted(len: usize, weights: &[f64]) -> Vec<Range1> {
+    if weights.is_empty() {
+        return Vec::new();
+    }
+    let w: Vec<f64> =
+        weights.iter().map(|&x| if x.is_finite() && x > 0.0 { x } else { 0.0 }).collect();
+    let total: f64 = w.iter().sum();
+    if total <= 0.0 {
+        // no live weight anywhere: the SMP lane covers everything
+        let mut out = Vec::with_capacity(w.len());
+        out.push(Range1::new(0, len));
+        out.extend((1..w.len()).map(|_| Range1::new(len, len)));
+        return out;
+    }
+    // cumulative rounding: cut points are monotone because the prefix
+    // sums are, so spans always abut and cover [0, len) exactly
+    let mut out = Vec::with_capacity(w.len());
+    let mut acc = 0.0f64;
+    let mut lo = 0usize;
+    for (i, &wi) in w.iter().enumerate() {
+        acc += wi;
+        let hi = if i + 1 == w.len() {
+            len
+        } else {
+            ((((len as f64) * (acc / total)).round() as usize).max(lo)).min(len)
+        };
+        out.push(Range1::new(lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// [`split_weighted`] under the fleet's `min_device_items` floor: lane 0
+/// is the SMP share, lanes `1..` are device lanes.  A device lane whose
+/// share would land below `min_items` is *starved* — its weight is
+/// zeroed and the space re-split, folding the starved items back into
+/// the surviving lanes (ultimately the SMP share) — repeating until
+/// every remaining device lane clears the floor.  A device launch over a
+/// handful of items is pure overhead, so degrading a lane beats paying
+/// for it; when every device lane starves, the SMP lane covers the whole
+/// space and the caller should run (and record) a degraded invocation.
+///
+/// # Examples
+///
+/// ```
+/// use somd::somd::partition::split_weighted_floor;
+/// // both device lanes clear a floor of 100
+/// let spans = split_weighted_floor(1000, &[0.5, 0.25, 0.25], 100);
+/// assert_eq!(spans.iter().map(|s| s.len()).sum::<usize>(), 1000);
+/// assert!(spans[1].len() >= 100 && spans[2].len() >= 100);
+/// // a 2% lane under the floor is starved; its items fold back
+/// let spans = split_weighted_floor(1000, &[0.49, 0.49, 0.02], 100);
+/// assert!(spans[2].is_empty());
+/// assert_eq!(spans[0].len() + spans[1].len(), 1000);
+/// // everything starves on a tiny space: SMP covers it all
+/// let spans = split_weighted_floor(10, &[0.4, 0.3, 0.3], 100);
+/// assert_eq!(spans[0].len(), 10);
+/// assert!(spans[1].is_empty() && spans[2].is_empty());
+/// ```
+pub fn split_weighted_floor(len: usize, weights: &[f64], min_items: usize) -> Vec<Range1> {
+    let mut w: Vec<f64> =
+        weights.iter().map(|&x| if x.is_finite() && x > 0.0 { x } else { 0.0 }).collect();
+    loop {
+        let spans = split_weighted(len, &w);
+        let mut starved = false;
+        for i in 1..spans.len() {
+            if w[i] > 0.0 && spans[i].len() < min_items {
+                w[i] = 0.0;
+                starved = true;
+            }
+        }
+        if !starved {
+            return spans;
+        }
+    }
 }
 
 /// Stitch per-request index-space lengths into consecutive sub-spans of
@@ -495,6 +602,110 @@ mod tests {
         let area: usize = parts.iter().map(|p| p.own.rows.len() * p.own.cols.len()).sum();
         assert_eq!(area, span.len() * 6);
         assert!(parts.iter().all(|p| p.own.rows.lo >= 2 && p.own.rows.hi <= 9));
+    }
+
+    #[test]
+    fn split_weighted_covers_abuts_and_orders() {
+        for len in [0usize, 1, 10, 1000, 4097] {
+            for w in [
+                vec![1.0],
+                vec![0.5, 0.5],
+                vec![0.2, 0.3, 0.5],
+                vec![1.0, 0.0, 2.0, 0.0],
+                vec![0.25; 7],
+            ] {
+                let spans = split_weighted(len, &w);
+                assert_eq!(spans.len(), w.len());
+                assert_eq!(spans[0].lo, 0);
+                assert_eq!(spans.last().unwrap().hi, len);
+                for win in spans.windows(2) {
+                    assert_eq!(win[0].hi, win[1].lo, "len={len} w={w:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_weighted_is_proportional() {
+        let spans = split_weighted(10_000, &[0.1, 0.2, 0.3, 0.4]);
+        let lens: Vec<usize> = spans.iter().map(|s| s.len()).collect();
+        assert_eq!(lens, vec![1000, 2000, 3000, 4000]);
+    }
+
+    #[test]
+    fn split_weighted_sanitizes_bad_weights() {
+        // NaN / negative / infinite weights count as zero
+        let spans = split_weighted(100, &[1.0, f64::NAN, -3.0, f64::INFINITY, 1.0]);
+        assert_eq!(spans[0].len(), 50);
+        assert!(spans[1].is_empty() && spans[2].is_empty() && spans[3].is_empty());
+        assert_eq!(spans[4].len(), 50);
+        // all-dead weights: lane 0 takes everything
+        let spans = split_weighted(42, &[0.0, f64::NAN, -1.0]);
+        assert_eq!(spans[0].len(), 42);
+        assert!(spans[1].is_empty() && spans[2].is_empty());
+        assert!(split_weighted(10, &[]).is_empty());
+    }
+
+    #[test]
+    fn split_weighted_one_lane_degenerates_to_whole_space() {
+        let spans = split_weighted(123, &[7.0]);
+        assert_eq!(spans.len(), 1);
+        assert_eq!((spans[0].lo, spans[0].hi), (0, 123));
+    }
+
+    #[test]
+    fn split_weighted_two_way_matches_split_fraction() {
+        // The N-way form at N=2 must agree with the hybrid cut wherever
+        // the cut is unambiguous.  (At an exact half-item the two round
+        // from opposite ends — split_fraction rounds the tail,
+        // split_weighted the cumulative prefix — so the comparison uses
+        // lengths where every tested fraction lands on a whole item.)
+        for len in [0usize, 8, 1000, 4096] {
+            for f in [0.0, 0.25, 0.5, 0.75, 1.0] {
+                let (smp, dev) = split_fraction(len, f);
+                let spans = split_weighted(len, &[1.0 - f, f]);
+                assert_eq!(spans[0], smp, "len={len} f={f}");
+                assert_eq!(spans[1], dev, "len={len} f={f}");
+            }
+        }
+        // and off the exact-multiple grid both forms still cover and abut
+        let spans = split_weighted(10, &[0.75, 0.25]);
+        assert_eq!(spans[0].hi, spans[1].lo);
+        assert_eq!(spans[1].hi, 10);
+    }
+
+    #[test]
+    fn split_weighted_floor_starves_small_device_lanes() {
+        // a lane under the floor degrades; its items fold back into the
+        // surviving lanes, never vanishing
+        let spans = split_weighted_floor(1000, &[0.49, 0.49, 0.02], 100);
+        assert!(spans[2].is_empty());
+        assert_eq!(spans.iter().map(|s| s.len()).sum::<usize>(), 1000);
+        assert!(spans[1].len() >= 100);
+        // cascading starvation: once the big lane absorbs everything,
+        // re-splitting must not resurrect the starved one
+        let spans = split_weighted_floor(150, &[0.1, 0.45, 0.45], 100);
+        let covered: usize = spans.iter().map(|s| s.len()).sum();
+        assert_eq!(covered, 150);
+        for (i, s) in spans.iter().enumerate().skip(1) {
+            assert!(s.is_empty() || s.len() >= 100, "lane {i}: {s:?}");
+        }
+    }
+
+    #[test]
+    fn split_weighted_floor_smp_lane_is_exempt() {
+        // the floor applies to device lanes only — a small SMP share is
+        // fine (SMP pays no launch cost)
+        let spans = split_weighted_floor(1000, &[0.01, 0.99], 100);
+        assert_eq!(spans[0].len(), 10);
+        assert_eq!(spans[1].len(), 990);
+    }
+
+    #[test]
+    fn split_weighted_floor_total_starvation_degrades_to_smp() {
+        let spans = split_weighted_floor(50, &[0.34, 0.33, 0.33], 1024);
+        assert_eq!(spans[0].len(), 50);
+        assert!(spans[1..].iter().all(|s| s.is_empty()));
     }
 
     #[test]

@@ -26,6 +26,15 @@
 //!   **throughput** observation (index-space items per second), from
 //!   which the learned split ratio converges toward the
 //!   throughput-proportional equilibrium (see [`Scheduler::record_hybrid`]).
+//! * **sharded** — since the device-fleet PR, one invocation may be split
+//!   N-way across the SMP pool *and every attached device lane* at once
+//!   ([`Choice::Sharded`]).  Each sharded run records the wall of the
+//!   slowest lane plus a throughput observation per participating lane
+//!   (windows keyed by `(method, device_id)`), and the learned per-lane
+//!   weight vector converges toward the N-way throughput-proportional
+//!   equilibrium `w_i = T_i / Σ T` — the direct generalization of the
+//!   two-way `device_fraction` logic, under the same deadband discipline
+//!   (see [`Scheduler::record_sharded`]).
 //!
 //! The decision rule is deliberately simple and deterministic:
 //! explore each applicable side until it has `min_samples` observations
@@ -57,6 +66,12 @@ const FRACTION_MIN: f64 = 0.05;
 /// Upper clamp counterpart of [`FRACTION_MIN`].
 const FRACTION_MAX: f64 = 0.95;
 
+/// N-way counterpart of [`FRACTION_MIN`]: every learned lane weight is
+/// floored here (then renormalized, so the effective floor is
+/// approximate) — a lane weighted to exactly 0 would never produce new
+/// throughput samples to recover from.
+const WEIGHT_MIN: f64 = 0.05;
+
 /// Which lane(s) the cost model picked for one invocation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Choice {
@@ -73,6 +88,19 @@ pub enum Choice {
         /// in `(0, 1)`.
         device_fraction: f64,
     },
+    /// Shard the invocation's index space N-way across the SMP pool and
+    /// *every* device lane of the fleet at once: the SMP side takes the
+    /// leading span, each device lane one contiguous span in lane order,
+    /// and the partial results merge through the method's ordinary
+    /// reduction.  The learned weight vector itself is fetched separately
+    /// via [`Scheduler::sharded_weights`] (exactly as the engine fetches
+    /// [`Scheduler::hybrid_fraction`] at fork time), keeping this enum
+    /// `Copy`.
+    Sharded {
+        /// Device-lane count of the fleet this decision targets (the
+        /// weight vector has `lanes + 1` entries: SMP first).
+        lanes: usize,
+    },
 }
 
 impl Choice {
@@ -84,6 +112,7 @@ impl Choice {
             (Choice::Smp, Choice::Smp)
                 | (Choice::Device, Choice::Device)
                 | (Choice::Hybrid { .. }, Choice::Hybrid { .. })
+                | (Choice::Sharded { .. }, Choice::Sharded { .. })
         )
     }
 }
@@ -151,6 +180,15 @@ pub struct MethodHistory {
     /// Trailing device-side throughput observations from hybrid runs
     /// (index-space items per second).
     pub device_items_per_sec: Vec<f64>,
+    /// Trailing sharded (N-way fleet) invocation wall times (seconds;
+    /// the slowest lane bounds the invocation).
+    pub sharded_secs: Vec<f64>,
+    /// Per-device-lane throughput windows from sharded runs, indexed by
+    /// `device_id` (the lane's position in the fleet) — the
+    /// `(method, device_id)` keying of the fleet scheduler.  The SMP
+    /// side's sharded throughput shares [`MethodHistory::smp_items_per_sec`]
+    /// with the hybrid lane (it is the same physical signal).
+    pub device_lane_items_per_sec: Vec<Vec<f64>>,
     /// Lifetime SMP invocations (not windowed).
     pub smp_runs: u64,
     /// Lifetime device invocations (not windowed).
@@ -162,6 +200,11 @@ pub struct MethodHistory {
     pub hybrid_runs: u64,
     /// Hybrid invocations whose device half failed.
     pub hybrid_failures: u64,
+    /// Lifetime sharded invocations (including degraded ones whose every
+    /// device share starved under the floor).
+    pub sharded_runs: u64,
+    /// Sharded invocations in which at least one device lane failed.
+    pub sharded_failures: u64,
     /// Runs that actually recorded transfer/launch accounting (successful
     /// device + hybrid runs) — the denominator of
     /// [`MethodHistory::transfer_bytes_per_run`].  Failed and degraded
@@ -171,6 +214,10 @@ pub struct MethodHistory {
     /// The learned device share of a hybrid split; `None` until the first
     /// hybrid run produced throughput observations for both sides.
     pub device_fraction: Option<f64>,
+    /// The learned per-lane weight vector of a sharded split (`lanes + 1`
+    /// entries, SMP first, summing to 1); `None` until every lane has
+    /// produced at least one throughput observation.
+    pub lane_weights: Option<Vec<f64>>,
     /// Lifetime host→device bytes (device + hybrid runs).
     pub bytes_h2d: u64,
     /// Lifetime device→host bytes (device + hybrid runs).
@@ -232,6 +279,18 @@ impl MethodHistory {
         Self::mean(&self.device_items_per_sec)
     }
 
+    /// Trailing-window mean sharded wall seconds.
+    pub fn sharded_estimate(&self) -> Option<f64> {
+        Self::mean(&self.sharded_secs)
+    }
+
+    /// Trailing-window mean throughput (items/s) of device lane
+    /// `device_id` from sharded runs; `None` until the lane has produced
+    /// a sample.
+    pub fn device_lane_throughput(&self, device_id: usize) -> Option<f64> {
+        self.device_lane_items_per_sec.get(device_id).and_then(|w| Self::mean(w))
+    }
+
     /// The throughput-proportional equilibrium split: with per-side
     /// throughputs `T_smp` and `T_dev`, handing the device the fraction
     /// `T_dev / (T_smp + T_dev)` makes both sides finish at the same time
@@ -242,6 +301,27 @@ impl MethodHistory {
         let d = self.device_throughput()?;
         if s + d > 0.0 {
             Some(d / (s + d))
+        } else {
+            None
+        }
+    }
+
+    /// The N-way throughput-proportional equilibrium over a `lanes`-device
+    /// fleet: with per-lane mean throughputs `T_smp, T_0, …, T_{k-1}`,
+    /// handing lane `i` the weight `T_i / Σ T` makes every lane finish at
+    /// the same time — the direct generalization of
+    /// [`MethodHistory::equilibrium_fraction`].  `None` until the SMP
+    /// side *and every device lane* have at least one throughput
+    /// observation (a lane without evidence cannot be weighted honestly).
+    pub fn equilibrium_weights(&self, lanes: usize) -> Option<Vec<f64>> {
+        let mut t = Vec::with_capacity(lanes + 1);
+        t.push(self.smp_throughput()?);
+        for i in 0..lanes {
+            t.push(self.device_lane_throughput(i)?);
+        }
+        let total: f64 = t.iter().sum();
+        if total > 0.0 {
+            Some(t.into_iter().map(|x| x / total).collect())
         } else {
             None
         }
@@ -280,8 +360,14 @@ pub struct DecisionRow {
     pub device_secs: Option<f64>,
     /// Trailing-window mean hybrid wall seconds, if observed.
     pub hybrid_secs: Option<f64>,
+    /// Trailing-window mean sharded (N-way fleet) wall seconds, if
+    /// observed.
+    pub sharded_secs: Option<f64>,
     /// The learned hybrid split, if any hybrid run happened.
     pub device_fraction: Option<f64>,
+    /// The learned per-lane fleet weights, if any sharded run converged
+    /// them (SMP first).
+    pub lane_weights: Option<Vec<f64>>,
     /// Mean bus bytes per device-touching run.
     pub transfer_bytes_per_run: f64,
     /// Trailing mean client requests per fused invocation, if the serving
@@ -438,6 +524,143 @@ impl Scheduler {
         e.batched_items += items as u64;
     }
 
+    /// Record one completed sharded (N-way fleet) invocation.
+    ///
+    /// `devices[i]` is device lane `i`'s sample; a lane that was starved
+    /// under the floor (or otherwise produced no work) passes
+    /// `items == 0` and contributes no throughput observation — exactly
+    /// the degenerate-share discipline of [`Scheduler::record_hybrid`],
+    /// per lane.  Besides the wall sample (the slowest lane bounds the
+    /// invocation), the learned `lane_weights` move to the fresh
+    /// [N-way equilibrium](MethodHistory::equilibrium_weights) whenever
+    /// any component drifts outside the configured `ratio_deadband`
+    /// (L∞, the vector counterpart of the two-way deadband), with every
+    /// weight floored near 0.05 (then renormalized) so no lane is starved
+    /// out of producing recovery evidence.
+    pub fn record_sharded(
+        &self,
+        method: &str,
+        smp: HybridSample,
+        devices: &[HybridSample],
+        stats: &DeviceStats,
+    ) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        let slowest = devices.iter().map(|d| d.secs).fold(smp.secs, f64::max);
+        MethodHistory::push(&mut e.sharded_secs, slowest, self.cfg.window);
+        if smp.items > 0 && smp.secs > 0.0 {
+            MethodHistory::push(
+                &mut e.smp_items_per_sec,
+                smp.items as f64 / smp.secs,
+                self.cfg.window,
+            );
+        }
+        if e.device_lane_items_per_sec.len() < devices.len() {
+            e.device_lane_items_per_sec.resize(devices.len(), Vec::new());
+        }
+        for (i, d) in devices.iter().enumerate() {
+            if d.items > 0 && d.secs > 0.0 {
+                MethodHistory::push(
+                    &mut e.device_lane_items_per_sec[i],
+                    d.items as f64 / d.secs,
+                    self.cfg.window,
+                );
+            }
+        }
+        e.sharded_runs += 1;
+        e.transfer_runs += 1;
+        e.bytes_h2d += stats.bytes_h2d as u64;
+        e.bytes_d2h += stats.bytes_d2h as u64;
+        e.launches += stats.launches as u64;
+        if let Some(w_star) = e.equilibrium_weights(devices.len()) {
+            let floored: Vec<f64> = w_star.iter().map(|w| w.max(WEIGHT_MIN)).collect();
+            let total: f64 = floored.iter().sum();
+            let w_star: Vec<f64> = floored.into_iter().map(|w| w / total).collect();
+            let keep = match &e.lane_weights {
+                Some(cur) if cur.len() == w_star.len() => cur
+                    .iter()
+                    .zip(&w_star)
+                    .all(|(a, b)| (a - b).abs() <= self.cfg.ratio_deadband),
+                _ => false,
+            };
+            if !keep {
+                e.lane_weights = Some(w_star);
+            }
+        }
+    }
+
+    /// Record a sharded invocation in which at least one device lane
+    /// failed (the SMP side covered the failed spans, so the caller still
+    /// got a complete result).  The penalty sample steers the lane
+    /// decision away from sharding until the fleet proves itself again.
+    pub fn record_sharded_failure(&self, method: &str) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(&mut e.sharded_secs, PENALTY_SECS, self.cfg.window);
+        e.sharded_runs += 1;
+        e.sharded_failures += 1;
+    }
+
+    /// Record a sharded invocation that degraded to pure SMP because
+    /// *every* device lane's share underflowed `min_device_items` — the
+    /// N-way counterpart of [`Scheduler::record_hybrid_degraded`], and
+    /// for the same reason: the SMP wall IS the sharded lane's honest
+    /// cost at this input size, so recording it completes the sharded
+    /// exploration rung instead of re-resolving forever.
+    pub fn record_sharded_degraded(&self, method: &str, wall: Duration) {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        MethodHistory::push(&mut e.sharded_secs, wall.as_secs_f64(), self.cfg.window);
+        e.sharded_runs += 1;
+    }
+
+    /// The per-lane weight vector a sharded invocation of `method` over a
+    /// `lanes`-device fleet should use right now (`lanes + 1` entries,
+    /// SMP first):
+    ///
+    /// 1. the learned [`MethodHistory::lane_weights`] when their lane
+    ///    count matches the fleet's;
+    /// 2. for a 1-device fleet with only two-way history, the learned
+    ///    hybrid split `[1 - f, f]` — this is also how **legacy
+    ///    snapshots** (persisted before the fleet existed) load: their
+    ///    `device_fraction` is reinterpreted as a 1-device fleet's weight
+    ///    vector;
+    /// 3. otherwise the even split `1 / (lanes + 1)` per lane (no
+    ///    evidence favors anyone yet — the N-way counterpart of
+    ///    [`DEFAULT_DEVICE_FRACTION`]).
+    pub fn sharded_weights(&self, method: &str, lanes: usize) -> Vec<f64> {
+        let h = self.histories.lock().unwrap();
+        if let Some(e) = h.get(method) {
+            if let Some(w) = &e.lane_weights {
+                if w.len() == lanes + 1 {
+                    return w.clone();
+                }
+            }
+            if lanes == 1 {
+                if let Some(f) = e.device_fraction {
+                    return vec![1.0 - f, f];
+                }
+            }
+        }
+        vec![1.0 / (lanes + 1) as f64; lanes + 1]
+    }
+
+    /// Pin the learned weight vector for `method` (experiments, the
+    /// correctness suite's skewed splits, deployments that want a fixed
+    /// shard plan).  Weights are sanitized (non-finite / negative → 0)
+    /// and normalized; an all-zero vector is ignored.
+    pub fn set_sharded_weights(&self, method: &str, weights: &[f64]) {
+        let w: Vec<f64> =
+            weights.iter().map(|&x| if x.is_finite() && x > 0.0 { x } else { 0.0 }).collect();
+        let total: f64 = w.iter().sum();
+        if total <= 0.0 {
+            return;
+        }
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        e.lane_weights = Some(w.into_iter().map(|x| x / total).collect());
+    }
+
     /// Record a hybrid invocation that *degraded* to pure SMP because the
     /// device share underflowed `min_device_items`.  The SMP wall IS the
     /// hybrid lane's honest cost at this input size, so recording it here
@@ -509,6 +732,23 @@ impl Scheduler {
         choice
     }
 
+    /// Resolve `Target::Auto` for a co-execution-capable method over a
+    /// `lanes`-device fleet: explore SMP, then the device lane, then the
+    /// N-way shard, and settle on the lane kind with the lowest
+    /// trailing-window mean under the usual hysteresis — the fleet
+    /// generalization of [`Scheduler::decide_hybrid`] (which the engine
+    /// still uses for 1-device fleets, keeping the two-way behavior
+    /// bit-for-bit).  An incumbent [`Choice::Hybrid`] counts as the
+    /// co-execution incumbent here, so a snapshot learned on a 1-device
+    /// fleet does not forfeit its hysteresis when the fleet grows.
+    pub fn decide_sharded(&self, method: &str, lanes: usize) -> Choice {
+        let mut h = self.histories.lock().unwrap();
+        let e = h.entry(method.to_string()).or_default();
+        let choice = Self::decide_history_sharded(&self.cfg, e, lanes);
+        e.last_choice = Some(choice);
+        choice
+    }
+
     fn decide_history(cfg: &SchedulerConfig, e: &MethodHistory) -> Choice {
         // explore first: SMP is always applicable, measure it first, then
         // give the device its minimum samples
@@ -537,9 +777,10 @@ impl Scheduler {
                     Choice::Device
                 }
             }
-            // a hybrid incumbent can only appear when the caller switched
-            // entry points; fall back to the no-incumbent comparison
-            Some(Choice::Hybrid { .. }) | None => {
+            // a hybrid/sharded incumbent can only appear when the caller
+            // switched entry points; fall back to the no-incumbent
+            // comparison
+            Some(Choice::Hybrid { .. }) | Some(Choice::Sharded { .. }) | None => {
                 if dev < smp {
                     Choice::Device
                 } else {
@@ -567,7 +808,9 @@ impl Scheduler {
         let cost = |c: Choice| match c {
             Choice::Smp => smp,
             Choice::Device => dev,
-            Choice::Hybrid { .. } => hyb,
+            // a sharded incumbent (snapshot from a fleet engine) costs as
+            // the co-execution lane — both split one invocation
+            Choice::Hybrid { .. } | Choice::Sharded { .. } => hyb,
         };
         let mut best = Choice::Smp;
         for c in [Choice::Device, Choice::Hybrid { device_fraction: fraction }] {
@@ -580,7 +823,60 @@ impl Scheduler {
                 // an incumbent hybrid keeps running at the *current*
                 // learned ratio — a ratio refinement is not a lane flip
                 let inc = match inc {
-                    Choice::Hybrid { .. } => Choice::Hybrid { device_fraction: fraction },
+                    Choice::Hybrid { .. } | Choice::Sharded { .. } => {
+                        Choice::Hybrid { device_fraction: fraction }
+                    }
+                    other => other,
+                };
+                if cost(inc) > cost(best) * cfg.hysteresis {
+                    best
+                } else {
+                    inc
+                }
+            }
+            None => best,
+        }
+    }
+
+    /// The N-way exploration/decision ladder: SMP → device → sharded,
+    /// each to `min_samples`, then the lowest trailing mean wins under
+    /// hysteresis.  The hybrid rung is *replaced* by the sharded rung on
+    /// multi-device fleets — sharding subsumes the two-way split — but
+    /// hybrid history (from 1-device snapshots) still costs the
+    /// co-execution incumbent honestly.
+    fn decide_history_sharded(cfg: &SchedulerConfig, e: &MethodHistory, lanes: usize) -> Choice {
+        if e.smp_secs.len() < cfg.min_samples {
+            return Choice::Smp;
+        }
+        if e.device_secs.len() < cfg.min_samples {
+            return Choice::Device;
+        }
+        if e.sharded_secs.len() < cfg.min_samples {
+            return Choice::Sharded { lanes };
+        }
+        let smp = e.smp_estimate().expect("smp samples present");
+        let dev = e.device_estimate().expect("device samples present");
+        let shd = e.sharded_estimate().expect("sharded samples present");
+        let cost = |c: Choice| match c {
+            Choice::Smp => smp,
+            Choice::Device => dev,
+            // a hybrid incumbent (two-way snapshot) costs as its own
+            // window when present, else as the sharded lane
+            Choice::Hybrid { .. } => e.hybrid_estimate().unwrap_or(shd),
+            Choice::Sharded { .. } => shd,
+        };
+        let mut best = Choice::Smp;
+        for c in [Choice::Device, Choice::Sharded { lanes }] {
+            if cost(c) < cost(best) {
+                best = c;
+            }
+        }
+        match e.last_choice {
+            Some(inc) => {
+                // a weight refinement is not a lane flip; a two-way
+                // hybrid incumbent carries its hysteresis into the fleet
+                let inc = match inc {
+                    Choice::Sharded { .. } | Choice::Hybrid { .. } => Choice::Sharded { lanes },
                     other => other,
                 };
                 if cost(inc) > cost(best) * cfg.hysteresis {
@@ -608,9 +904,10 @@ impl Scheduler {
     }
 
     /// The full decision table, one row per known method.  Methods with
-    /// hybrid history report the three-way decision; pure two-lane
-    /// methods keep the binary one (so a method that never co-executed is
-    /// never *reported* as hybrid-bound).
+    /// sharded history report the fleet decision, methods with hybrid
+    /// history the three-way one; pure two-lane methods keep the binary
+    /// one (so a method that never co-executed is never *reported* as
+    /// hybrid- or fleet-bound).
     pub fn decision_table(&self) -> Vec<DecisionRow> {
         let h = self.histories.lock().unwrap();
         h.iter()
@@ -619,10 +916,15 @@ impl Scheduler {
                 smp_secs: e.smp_estimate(),
                 device_secs: e.device_estimate(),
                 hybrid_secs: e.hybrid_estimate(),
+                sharded_secs: e.sharded_estimate(),
                 device_fraction: e.device_fraction,
+                lane_weights: e.lane_weights.clone(),
                 transfer_bytes_per_run: e.transfer_bytes_per_run(),
                 mean_batch_requests: e.mean_batch_requests(),
-                choice: if e.hybrid_runs > 0 {
+                choice: if e.sharded_runs > 0 {
+                    let lanes = e.device_lane_items_per_sec.len().max(1);
+                    Self::decide_history_sharded(&self.cfg, e, lanes)
+                } else if e.hybrid_runs > 0 {
                     Self::decide_history_hybrid(&self.cfg, e)
                 } else {
                     Self::decide_history(&self.cfg, e)
@@ -645,16 +947,30 @@ impl Scheduler {
             m.insert("hybrid_secs".to_string(), arr(&e.hybrid_secs));
             m.insert("smp_items_per_sec".to_string(), arr(&e.smp_items_per_sec));
             m.insert("device_items_per_sec".to_string(), arr(&e.device_items_per_sec));
+            m.insert("sharded_secs".to_string(), arr(&e.sharded_secs));
+            m.insert(
+                "device_lane_items_per_sec".to_string(),
+                Json::Arr(e.device_lane_items_per_sec.iter().map(|w| arr(w)).collect()),
+            );
             m.insert("smp_runs".to_string(), Json::Num(e.smp_runs as f64));
             m.insert("device_runs".to_string(), Json::Num(e.device_runs as f64));
             m.insert("device_failures".to_string(), Json::Num(e.device_failures as f64));
             m.insert("hybrid_runs".to_string(), Json::Num(e.hybrid_runs as f64));
             m.insert("hybrid_failures".to_string(), Json::Num(e.hybrid_failures as f64));
+            m.insert("sharded_runs".to_string(), Json::Num(e.sharded_runs as f64));
+            m.insert("sharded_failures".to_string(), Json::Num(e.sharded_failures as f64));
             m.insert("transfer_runs".to_string(), Json::Num(e.transfer_runs as f64));
             m.insert(
                 "device_fraction".to_string(),
                 match e.device_fraction {
                     Some(f) => Json::Num(f),
+                    None => Json::Null,
+                },
+            );
+            m.insert(
+                "lane_weights".to_string(),
+                match &e.lane_weights {
+                    Some(w) => arr(w),
                     None => Json::Null,
                 },
             );
@@ -677,6 +993,7 @@ impl Scheduler {
                     Some(Choice::Smp) => Json::Str("smp".to_string()),
                     Some(Choice::Device) => Json::Str("device".to_string()),
                     Some(Choice::Hybrid { .. }) => Json::Str("hybrid".to_string()),
+                    Some(Choice::Sharded { .. }) => Json::Str("sharded".to_string()),
                     None => Json::Null,
                 },
             );
@@ -717,6 +1034,40 @@ impl Scheduler {
                 v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
             };
             let device_fraction = v.get("device_fraction").and_then(Json::as_f64);
+            // fields added by the device-fleet PR: absent in older
+            // snapshots, which then load as a 1-device fleet (their
+            // two-way `device_fraction` keeps steering `sharded_weights`)
+            let lane_weights: Option<Vec<f64>> = v
+                .get("lane_weights")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|x| {
+                            x.as_f64().ok_or_else(|| "bad number in 'lane_weights'".to_string())
+                        })
+                        .collect::<Result<Vec<f64>, String>>()
+                })
+                .transpose()?;
+            let device_lane_items_per_sec: Vec<Vec<f64>> =
+                match v.get("device_lane_items_per_sec").and_then(Json::as_arr) {
+                    None => Vec::new(),
+                    Some(lanes) => lanes
+                        .iter()
+                        .map(|lane| {
+                            lane.as_arr()
+                                .ok_or_else(|| {
+                                    "bad lane window in 'device_lane_items_per_sec'".to_string()
+                                })?
+                                .iter()
+                                .map(|x| {
+                                    x.as_f64().ok_or_else(|| {
+                                        "bad number in 'device_lane_items_per_sec'".to_string()
+                                    })
+                                })
+                                .collect::<Result<Vec<f64>, String>>()
+                        })
+                        .collect::<Result<Vec<Vec<f64>>, String>>()?,
+                };
             // pre-hybrid snapshots lack the field; their only
             // transfer-accounted runs were device runs (old denominator)
             let transfer_runs = match v.get("transfer_runs").and_then(Json::as_f64) {
@@ -729,6 +1080,13 @@ impl Scheduler {
                 Some("hybrid") => Some(Choice::Hybrid {
                     device_fraction: device_fraction.unwrap_or(DEFAULT_DEVICE_FRACTION),
                 }),
+                Some("sharded") => Some(Choice::Sharded {
+                    lanes: lane_weights
+                        .as_ref()
+                        .map(|w| w.len().saturating_sub(1))
+                        .filter(|&l| l > 0)
+                        .unwrap_or_else(|| device_lane_items_per_sec.len().max(1)),
+                }),
                 _ => None,
             };
             histories.insert(
@@ -739,13 +1097,18 @@ impl Scheduler {
                     hybrid_secs: secs_opt("hybrid_secs")?,
                     smp_items_per_sec: secs_opt("smp_items_per_sec")?,
                     device_items_per_sec: secs_opt("device_items_per_sec")?,
+                    sharded_secs: secs_opt("sharded_secs")?,
+                    device_lane_items_per_sec,
                     smp_runs: num("smp_runs"),
                     device_runs: num("device_runs"),
                     device_failures: num("device_failures"),
                     hybrid_runs: num("hybrid_runs"),
                     hybrid_failures: num("hybrid_failures"),
+                    sharded_runs: num("sharded_runs"),
+                    sharded_failures: num("sharded_failures"),
                     transfer_runs,
                     device_fraction,
+                    lane_weights,
                     bytes_h2d: num("bytes_h2d"),
                     bytes_d2h: num("bytes_d2h"),
                     launches: num("launches"),
@@ -1102,6 +1465,210 @@ mod tests {
         assert_eq!(restored.history("Serve.m"), s.history("Serve.m"));
         let row = &restored.decision_table()[0];
         assert!((row.mean_batch_requests.unwrap() - 13.0 / 3.0).abs() < 1e-12);
+    }
+
+    // -- sharded fleet co-execution -----------------------------------------
+
+    /// Record a sharded run: every lane clocked at `secs`, with the given
+    /// per-lane item shares (smp first).
+    fn rec_shd(s: &Scheduler, m: &str, smp_items: usize, dev_items: &[usize], secs: f64) {
+        let devices: Vec<HybridSample> =
+            dev_items.iter().map(|&items| HybridSample { items, secs }).collect();
+        s.record_sharded(
+            m,
+            HybridSample { items: smp_items, secs },
+            &devices,
+            &DeviceStats::default(),
+        );
+    }
+
+    #[test]
+    fn sharded_exploration_ladder() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let m = "Series.coefficients";
+        assert_eq!(s.decide_sharded(m, 2), Choice::Smp);
+        s.record_smp(m, Duration::from_millis(10));
+        s.record_smp(m, Duration::from_millis(10));
+        assert_eq!(s.decide_sharded(m, 2), Choice::Device);
+        rec_dev(&s, m, 0.010, 0);
+        rec_dev(&s, m, 0.010, 0);
+        assert_eq!(s.decide_sharded(m, 2), Choice::Sharded { lanes: 2 });
+        // a faster shard wins the method and stays
+        rec_shd(&s, m, 300, &[350, 350], 0.004);
+        rec_shd(&s, m, 300, &[350, 350], 0.004);
+        for _ in 0..5 {
+            assert!(matches!(s.decide_sharded(m, 2), Choice::Sharded { lanes: 2 }));
+        }
+        // the shard degrades badly: the method flips back to a pure lane
+        for _ in 0..8 {
+            rec_shd(&s, m, 300, &[350, 350], 0.500);
+        }
+        assert!(!matches!(s.decide_sharded(m, 2), Choice::Sharded { .. }));
+    }
+
+    #[test]
+    fn weights_converge_to_throughput_proportional_equilibrium() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        // same clock, items 1:2:5 => throughputs 1:2:5 => weights .125/.25/.625
+        for _ in 0..6 {
+            rec_shd(&s, "M.m", 125, &[250, 625], 1.0);
+        }
+        let w = s.sharded_weights("M.m", 2);
+        assert_eq!(w.len(), 3);
+        assert!((w[0] - 0.125).abs() < 1e-9, "weights {w:?}");
+        assert!((w[1] - 0.250).abs() < 1e-9, "weights {w:?}");
+        assert!((w[2] - 0.625).abs() < 1e-9, "weights {w:?}");
+        let h = s.history("M.m").unwrap();
+        assert_eq!(h.sharded_runs, 6);
+        assert_eq!(h.device_lane_items_per_sec.len(), 2);
+        let eq = h.equilibrium_weights(2).unwrap();
+        assert!((eq.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_deadband_absorbs_noise() {
+        let s = Scheduler::new(SchedulerConfig {
+            window: 2,
+            ratio_deadband: 0.10,
+            ..Default::default()
+        });
+        rec_shd(&s, "M.m", 500, &[250, 250], 1.0);
+        let w0 = s.sharded_weights("M.m", 2);
+        assert!((w0[0] - 0.5).abs() < 1e-9);
+        // a small imbalance inside the deadband: the stored weights hold
+        rec_shd(&s, "M.m", 480, &[270, 250], 1.0);
+        rec_shd(&s, "M.m", 480, &[270, 250], 1.0);
+        assert_eq!(s.sharded_weights("M.m", 2), w0);
+        // a clear shift moves every component
+        rec_shd(&s, "M.m", 200, &[600, 200], 1.0);
+        rec_shd(&s, "M.m", 200, &[600, 200], 1.0);
+        let w = s.sharded_weights("M.m", 2);
+        assert!((w[1] - 0.6).abs() < 1e-6, "weights {w:?}");
+    }
+
+    #[test]
+    fn lane_without_evidence_blocks_the_weight_update() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        // lane 1 starved (0 items): no throughput sample, no equilibrium
+        rec_shd(&s, "M.m", 500, &[500, 0], 1.0);
+        let h = s.history("M.m").unwrap();
+        assert_eq!(h.device_lane_items_per_sec.len(), 2);
+        assert!(h.device_lane_items_per_sec[1].is_empty());
+        assert_eq!(h.lane_weights, None, "one-sided evidence must not set weights");
+        // the default is the even split
+        let w = s.sharded_weights("M.m", 2);
+        assert!(w.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-12));
+        // once the lane produces evidence, the equilibrium engages
+        rec_shd(&s, "M.m", 500, &[500, 500], 1.0);
+        assert!(s.history("M.m").unwrap().lane_weights.is_some());
+    }
+
+    #[test]
+    fn learned_weights_keep_every_lane_alive() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        // a nearly dead device lane must still get a floored weight, so
+        // it keeps producing recovery evidence
+        for _ in 0..4 {
+            rec_shd(&s, "M.m", 10_000, &[10_000, 1], 1.0);
+        }
+        let w = s.sharded_weights("M.m", 2);
+        assert!(w[2] > 0.0, "weights {w:?}");
+        assert!(w[2] >= 0.04, "floored weight {w:?}");
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_failures_penalize_the_fleet_lane() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let m = "M.m";
+        for _ in 0..2 {
+            s.record_smp(m, Duration::from_millis(10));
+            rec_dev(&s, m, 0.008, 0);
+        }
+        s.record_sharded_failure(m);
+        s.record_sharded_failure(m);
+        let h = s.history(m).unwrap();
+        assert_eq!(h.sharded_failures, 2);
+        assert!(!matches!(s.decide_sharded(m, 2), Choice::Sharded { .. }));
+    }
+
+    #[test]
+    fn degraded_sharded_runs_complete_exploration() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let m = "Tiny.m";
+        for _ in 0..2 {
+            s.record_smp(m, Duration::from_millis(10));
+            rec_dev(&s, m, 0.001, 64);
+        }
+        assert!(matches!(s.decide_sharded(m, 3), Choice::Sharded { lanes: 3 }));
+        s.record_sharded_degraded(m, Duration::from_millis(10));
+        s.record_sharded_degraded(m, Duration::from_millis(10));
+        assert_eq!(s.decide_sharded(m, 3), Choice::Device);
+        let h = s.history(m).unwrap();
+        assert_eq!(h.sharded_runs, 2);
+        assert_eq!(h.sharded_failures, 0);
+    }
+
+    #[test]
+    fn set_sharded_weights_pins_and_normalizes() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        s.set_sharded_weights("M.m", &[1.0, 2.0, 1.0]);
+        let w = s.sharded_weights("M.m", 2);
+        assert!((w[0] - 0.25).abs() < 1e-12 && (w[1] - 0.5).abs() < 1e-12);
+        // bad components are sanitized; an all-dead pin is ignored
+        s.set_sharded_weights("M.m", &[f64::NAN, -1.0, 0.0]);
+        assert_eq!(s.sharded_weights("M.m", 2), w);
+    }
+
+    #[test]
+    fn sharded_state_survives_json_text_roundtrip() {
+        let cfg = SchedulerConfig::default();
+        let s = Scheduler::new(cfg);
+        for _ in 0..3 {
+            s.record_smp("M.m", Duration::from_millis(20));
+            rec_dev(&s, "M.m", 0.020, 4096);
+            rec_shd(&s, "M.m", 300, &[400, 300], 0.008);
+        }
+        let first = s.decide_sharded("M.m", 2);
+        assert!(matches!(first, Choice::Sharded { lanes: 2 }));
+        let text = s.to_json().dump();
+        let parsed = Json::parse(&text).expect("scheduler state parses");
+        let restored = Scheduler::from_json(cfg, &parsed).expect("state restores");
+        assert_eq!(restored.history("M.m"), s.history("M.m"));
+        assert_eq!(restored.sharded_weights("M.m", 2), s.sharded_weights("M.m", 2));
+        assert!(restored.decide_sharded("M.m", 2).same_lane(&first));
+    }
+
+    #[test]
+    fn legacy_snapshot_loads_as_a_one_device_fleet() {
+        // a hybrid-era snapshot: two-way fields only — its learned
+        // device_fraction must steer a 1-device fleet's weights
+        let text = r#"{"Old.m":{"smp_secs":[0.01,0.01],"device_secs":[0.002,0.002],
+            "hybrid_secs":[0.004],"smp_items_per_sec":[100.0],
+            "device_items_per_sec":[300.0],"smp_runs":2,"device_runs":2,
+            "device_failures":0,"hybrid_runs":1,"hybrid_failures":0,
+            "transfer_runs":3,"device_fraction":0.75,
+            "bytes_h2d":128,"bytes_d2h":64,"launches":2,"last_choice":"hybrid"}}"#;
+        let parsed = Json::parse(text).unwrap();
+        let s = Scheduler::from_json(SchedulerConfig::default(), &parsed).unwrap();
+        let h = s.history("Old.m").unwrap();
+        assert!(h.sharded_secs.is_empty());
+        assert_eq!(h.sharded_runs, 0);
+        assert_eq!(h.lane_weights, None);
+        assert!(h.device_lane_items_per_sec.is_empty());
+        let w = s.sharded_weights("Old.m", 1);
+        assert!((w[0] - 0.25).abs() < 1e-12 && (w[1] - 0.75).abs() < 1e-12);
+        // a larger fleet gets the even default (the two-way ratio says
+        // nothing about how lanes 2.. compare)
+        let w3 = s.sharded_weights("Old.m", 3);
+        assert!(w3.iter().all(|&x| (x - 0.25).abs() < 1e-12));
+        // and the round-trip preserves the fleet fields once present
+        s.set_sharded_weights("Old.m", &[0.2, 0.8]);
+        let text = s.to_json().dump();
+        let restored =
+            Scheduler::from_json(SchedulerConfig::default(), &Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(restored.sharded_weights("Old.m", 1), vec![0.2, 0.8]);
     }
 
     #[test]

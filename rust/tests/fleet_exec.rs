@@ -1,0 +1,435 @@
+//! Device-fleet sharding correctness suite (tentpole of the fleet PR):
+//!
+//! * sharded N-way results are **bitwise identical** to pure-SMP results
+//!   for the exact-arithmetic workloads (vecadd: identical IEEE f32
+//!   adds; crypt: integer IDEA) across 1-, 2- and 3-device fleets, at
+//!   the learned default and at skewed pinned weight vectors;
+//! * a lane starved under the `min_device_items` floor degrades back
+//!   into the SMP share (and a fully starved fleet degrades the whole
+//!   invocation to pure SMP, recorded so exploration completes);
+//! * a failing lane's span is covered by the SMP side *in rank order* —
+//!   the caller always gets a complete, correct result — and the failure
+//!   is penalized in the history;
+//! * the learned weight vector converges to the N-way
+//!   throughput-proportional equilibrium;
+//! * legacy (pre-fleet) scheduler snapshots load as a 1-device fleet:
+//!   their two-way `device_fraction` steers the fleet's weights.
+
+use std::sync::Arc;
+
+use somd::backend::{Executed, HeteroMethod, HybridSpec};
+use somd::bench_suite::crypt::{self, BLOCK_BYTES, SUBKEYS};
+use somd::bench_suite::gpu;
+use somd::bench_suite::hybrid;
+use somd::device::DeviceStats;
+use somd::runtime::{HostTensor, Registry};
+use somd::somd::partition::Block1D;
+use somd::somd::reduction::{self, Assemble};
+use somd::somd::{
+    Engine, HybridSample, Rules, Scheduler, SchedulerConfig, SomdMethod, Target,
+};
+use somd::util::json::Json;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn reg() -> Registry {
+    Registry::load(artifacts_dir()).expect("artifacts present")
+}
+
+/// The three fleet shapes the bitwise tests sweep (heterogeneous mixes
+/// included).
+const FLEETS: [&[&str]; 3] = [
+    &["fermi"],
+    &["fermi", "geforce320m"],
+    &["fermi", "geforce320m", "passthrough"],
+];
+
+/// A fleet engine whose scheduler never starves small shares (the suite
+/// wants real N-way co-execution even on modest inputs), with `method`
+/// forced onto the sharded lane.
+fn fleet_engine(workers: usize, profiles: &[&str], method: &str) -> Engine {
+    let mut rules = Rules::empty();
+    rules.set(method, Target::Sharded);
+    Engine::with_rules(workers, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1,
+            ..Default::default()
+        }))
+        .with_device_fleet(artifacts_dir(), profiles)
+        .expect("device fleet starts")
+}
+
+/// A skewed (but everywhere-live) weight vector for `lanes` device
+/// lanes: the SMP share shrinks and the last lane dominates.
+fn skewed_weights(lanes: usize) -> Vec<f64> {
+    match lanes {
+        1 => vec![0.2, 0.8],
+        2 => vec![0.1, 0.3, 0.6],
+        _ => {
+            let mut w = vec![0.1; lanes];
+            w[lanes - 1] = 0.5;
+            w.insert(0, 0.15);
+            w
+        }
+    }
+}
+
+#[test]
+fn vecadd_sharded_bitwise_equals_pure_smp_across_fleets_and_weights() {
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    // varied payload (not a constant, so misplaced spans cannot hide)
+    let a: Vec<f32> = (0..elems).map(|i| (i % 977) as f32 * 0.25 + 0.125).collect();
+    let b: Vec<f32> = (0..elems).map(|i| (i % 1013) as f32 * 0.5 - 3.0).collect();
+    let input = Arc::new((a, b));
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let want = m.smp.invoke(&input, 2);
+
+    for profiles in FLEETS {
+        let engine = fleet_engine(2, profiles, "VecAdd.add");
+        let k = profiles.len();
+        for pinned in [None, Some(skewed_weights(k))] {
+            if let Some(w) = &pinned {
+                engine.scheduler().set_sharded_weights("VecAdd.add", w);
+            }
+            let (got, how) =
+                engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+            assert_eq!(got.len(), want.len(), "fleet {profiles:?} pinned {pinned:?}");
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "fleet {profiles:?} pinned {pinned:?} element {i}: {g} vs {w}"
+                );
+            }
+            match how {
+                Executed::Sharded { smp_items, weights, lanes, .. } => {
+                    assert_eq!(weights.len(), k + 1);
+                    assert_eq!(lanes.len(), k);
+                    let lane_items: usize = lanes.iter().map(|l| l.items).sum();
+                    assert_eq!(smp_items + lane_items, elems);
+                    assert!(lanes.iter().all(|l| l.ok));
+                    // every lane got real work under these live weights
+                    assert!(lanes.iter().all(|l| l.items > 0), "lanes {lanes:?}");
+                }
+                other => panic!("forced shard must co-execute, got {other:?}"),
+            }
+        }
+        // the run fed the fleet history: per-lane windows exist
+        let h = engine.scheduler().history("VecAdd.add").expect("history");
+        assert_eq!(h.sharded_runs, 2);
+        assert_eq!(h.sharded_failures, 0);
+        assert_eq!(h.device_lane_items_per_sec.len(), k);
+    }
+}
+
+/// An owned-input IDEA cipher pass with SMP + per-span device versions —
+/// what the async fleet path needs (`'static` inputs), mirroring the
+/// borrowed [`hybrid::crypt_hybrid_generic`] evaluators.
+struct CryptOwned {
+    src: Vec<u8>,
+    keys: [u32; SUBKEYS],
+}
+
+fn crypt_sharded_method() -> HeteroMethod<CryptOwned, somd::somd::BlockPart, (), Vec<u8>> {
+    let smp = SomdMethod::new(
+        "Crypt.cipher",
+        |inp: &CryptOwned, n| Block1D::new().ranges(inp.src.len() / BLOCK_BYTES, n),
+        |_, _| (),
+        |inp, p, _, _| crypt::cipher_partial(&inp.src, &inp.keys, p.own.lo, p.own.hi),
+        Assemble,
+    );
+    let spec = HybridSpec::new(
+        |inp: &CryptOwned| inp.src.len() / BLOCK_BYTES,
+        |inp, span, n| {
+            let blocks = inp.src.len() / BLOCK_BYTES;
+            let parts = Block1D::new().ranges_in(span, blocks, n);
+            somd::somd::run_mis(inp, &parts, &(), &|inp: &CryptOwned, p, _: &(), _| {
+                crypt::cipher_partial(&inp.src, &inp.keys, p.own.lo, p.own.hi)
+            })
+        },
+        |sess, inp, span| {
+            let nblocks = inp.src.len() / BLOCK_BYTES;
+            let name = sess
+                .registry()
+                .find_by_meta("crypt", "blocks", nblocks)
+                .ok_or_else(|| anyhow::anyhow!("no crypt artifact for {nblocks} blocks"))?
+                .name
+                .clone();
+            let words = HostTensor::mat_u32(gpu::pack_words(&inp.src), nblocks, 4);
+            let keys_t = HostTensor::vec_u32(inp.keys.to_vec());
+            let ids = sess.launch(
+                &name,
+                &[somd::device::Arg::Host(&words), somd::device::Arg::Host(&keys_t)],
+                span.len(),
+            )?;
+            let out = sess.get_rows(ids[0], span.lo, span.hi);
+            sess.free(ids[0])?;
+            Ok(gpu::unpack_words(out?.as_u32()?))
+        },
+    );
+    HeteroMethod::smp_only(smp).with_hybrid(spec)
+}
+
+#[test]
+fn crypt_sharded_bitwise_equals_the_sequential_cipher_across_fleets() {
+    let reg = reg();
+    let blocks = reg.info("crypt_A").unwrap().meta_usize("blocks").unwrap();
+    let p = crypt::Problem::generate(blocks * BLOCK_BYTES, 42);
+    let want = crypt::sequential(&p.data, &p.ekeys);
+    let m = Arc::new(crypt_sharded_method());
+
+    for profiles in [&["fermi", "geforce320m"][..], &["fermi", "geforce320m", "passthrough"][..]]
+    {
+        let engine = fleet_engine(2, profiles, "Crypt.cipher");
+        engine.scheduler().set_sharded_weights("Crypt.cipher", &skewed_weights(profiles.len()));
+        let enc_input = Arc::new(CryptOwned { src: p.data.clone(), keys: p.ekeys });
+        let (enc, how) = engine.submit_hetero(m.clone(), enc_input).join().unwrap();
+        assert_eq!(enc, want, "sharded ciphertext must match the cipher bitwise");
+        assert!(matches!(how, Executed::Sharded { .. }));
+        // and the roundtrip closes across the fleet: decrypt the sharded
+        // ciphertext with a sharded pass at different weights
+        let even = vec![1.0; profiles.len() + 1]; // even split this time
+        engine.scheduler().set_sharded_weights("Crypt.cipher", &even);
+        let dec_input = Arc::new(CryptOwned { src: enc, keys: p.dkeys });
+        let (dec, _) = engine.submit_hetero(m.clone(), dec_input).join().unwrap();
+        assert_eq!(dec, p.data);
+    }
+}
+
+/// A tiny summing method with a hybrid spec; `fail_profile` makes the
+/// device share error on that profile only (cover-path tests).
+fn sum_sharded_method(
+    fail_profile: Option<&'static str>,
+) -> HeteroMethod<Vec<i64>, somd::somd::BlockPart, (), i64> {
+    let smp = SomdMethod::new(
+        "Sum.sharded",
+        |v: &Vec<i64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, p, _, _| p.own.iter().map(|i| v[i]).sum(),
+        reduction::sum::<i64>(),
+    );
+    let spec = HybridSpec::new(
+        |v: &Vec<i64>| v.len(),
+        |v, span, _n| vec![span.iter().map(|i| v[i]).sum::<i64>()],
+        move |sess, v, span| {
+            if fail_profile == Some(sess.profile().name) {
+                anyhow::bail!("injected device failure on {}", sess.profile().name);
+            }
+            Ok(span.iter().map(|i| v[i]).sum::<i64>())
+        },
+    );
+    HeteroMethod::smp_only(smp).with_hybrid(spec)
+}
+
+#[test]
+fn starved_lane_degrades_back_into_the_smp_share() {
+    let mut rules = Rules::empty();
+    rules.set("Sum.sharded", Target::Sharded);
+    let engine = Engine::with_rules(2, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1000,
+            ..Default::default()
+        }))
+        .with_device_fleet(artifacts_dir(), &["fermi", "geforce320m"])
+        .expect("fleet starts");
+    // lane 1 is pinned to 5% of 10_000 = 500 items < the 1000 floor: it
+    // must starve, and its items must fold back into the SMP share
+    engine.scheduler().set_sharded_weights("Sum.sharded", &[0.20, 0.75, 0.05]);
+    let m = Arc::new(sum_sharded_method(None));
+    let input = Arc::new((0..10_000i64).collect::<Vec<i64>>());
+    let want: i64 = input.iter().sum();
+    let (r, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+    assert_eq!(r, want);
+    match how {
+        Executed::Sharded { smp_items, lanes, .. } => {
+            assert_eq!(lanes[1].items, 0, "the 5% lane must starve under the floor");
+            assert!(lanes[1].ok, "starvation is a degradation, not a failure");
+            assert!(lanes[0].items >= 1000, "the surviving lane keeps its share");
+            assert_eq!(smp_items + lanes[0].items, 10_000);
+        }
+        other => panic!("expected a (partially degraded) shard, got {other:?}"),
+    }
+    // the starved lane produced no throughput sample
+    let h = engine.scheduler().history("Sum.sharded").expect("history");
+    assert_eq!(h.sharded_runs, 1);
+    assert!(h.device_lane_items_per_sec[1].is_empty());
+}
+
+#[test]
+fn fully_starved_fleet_degrades_to_pure_smp_and_completes_exploration() {
+    let mut rules = Rules::empty();
+    rules.set("Sum.sharded", Target::Sharded);
+    let engine = Engine::with_rules(2, rules) // default floor: 1024 items
+        .with_device_fleet(artifacts_dir(), &["fermi", "geforce320m"])
+        .expect("fleet starts");
+    let m = Arc::new(sum_sharded_method(None));
+    let input = Arc::new((0..100i64).collect::<Vec<i64>>());
+    let (r, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+    assert_eq!(r, 4950);
+    assert!(matches!(how, Executed::Smp { .. }));
+    let h = engine.scheduler().history("Sum.sharded").expect("history");
+    // the wall records on BOTH windows: as the SMP sample it is, and as
+    // the sharded lane's (degraded) honest cost at this input size
+    assert_eq!(h.smp_runs, 1);
+    assert_eq!(h.sharded_runs, 1, "degraded run must complete sharded exploration");
+    assert_eq!(h.sharded_failures, 0);
+}
+
+#[test]
+fn failing_lane_is_covered_in_rank_order_and_penalized() {
+    // the geforce lane fails; fermi and passthrough succeed — the SMP
+    // side must cover the failed MIDDLE span so rank order is preserved
+    let mut rules = Rules::empty();
+    rules.set("Sum.sharded", Target::Sharded);
+    let engine = Engine::with_rules(2, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1,
+            ..Default::default()
+        }))
+        .with_device_fleet(artifacts_dir(), &["fermi", "geforce320m", "passthrough"])
+        .expect("fleet starts");
+    let m = Arc::new(sum_sharded_method(Some("geforce320m")));
+    let input = Arc::new((0..50_000i64).map(|i| i * 3 - 7).collect::<Vec<i64>>());
+    let want: i64 = input.iter().sum();
+    let (r, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+    assert_eq!(r, want, "the SMP side must cover the failed lane's span");
+    match how {
+        Executed::Sharded { lanes, .. } => {
+            assert!(lanes[0].ok && lanes[2].ok);
+            assert!(!lanes[1].ok, "the injected failure must be reported");
+        }
+        other => panic!("a partial failure still reports the shard, got {other:?}"),
+    }
+    let h = engine.scheduler().history("Sum.sharded").expect("history");
+    assert_eq!(h.sharded_failures, 1);
+    assert_eq!(h.sharded_runs, 1);
+
+    // every lane failing collapses the run to an (SMP-tagged) cover
+    let engine2 = Engine::with_rules(2, Rules::parse("Sum.sharded:sharded").unwrap())
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1,
+            ..Default::default()
+        }))
+        .with_device_fleet(artifacts_dir(), &["fermi", "fermi"])
+        .expect("fleet starts");
+    let m2 = Arc::new(sum_sharded_method(Some("fermi")));
+    let (r2, how2) = engine2.submit_hetero(m2, input.clone()).join().unwrap();
+    assert_eq!(r2, want);
+    assert!(matches!(how2, Executed::Smp { .. }));
+    assert_eq!(engine2.scheduler().history("Sum.sharded").unwrap().sharded_failures, 1);
+}
+
+#[test]
+fn synthetic_fleet_history_converges_to_throughput_proportional_weights() {
+    // the satellite's convergence contract: lanes observed at 3x and 6x
+    // the SMP side's throughput must converge the weights toward
+    // [0.1, 0.3, 0.6]
+    let s = Scheduler::new(SchedulerConfig::default());
+    let m = "Synth.fleet";
+    for _ in 0..8 {
+        s.record_sharded(
+            m,
+            HybridSample { items: 1_000, secs: 1.0 },
+            &[
+                HybridSample { items: 3_000, secs: 1.0 },
+                HybridSample { items: 6_000, secs: 1.0 },
+            ],
+            &DeviceStats::default(),
+        );
+    }
+    let w = s.sharded_weights(m, 2);
+    assert!((w[0] - 0.1).abs() < 1e-9, "weights {w:?}");
+    assert!((w[1] - 0.3).abs() < 1e-9, "weights {w:?}");
+    assert!((w[2] - 0.6).abs() < 1e-9, "weights {w:?}");
+    // and the equilibrium is what a balanced split predicts
+    let h = s.history(m).unwrap();
+    let eq = h.equilibrium_weights(2).unwrap();
+    for (a, b) in eq.iter().zip(&w) {
+        assert!((a - b).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn legacy_snapshot_steers_a_one_device_fleet() {
+    // a pre-fleet snapshot whose learned hybrid split is 0.75 device
+    let text = r#"{"VecAdd.add":{"smp_secs":[0.01],"device_secs":[0.002],
+        "hybrid_secs":[0.004],"smp_items_per_sec":[100.0],
+        "device_items_per_sec":[300.0],"smp_runs":1,"device_runs":1,
+        "device_failures":0,"hybrid_runs":1,"hybrid_failures":0,
+        "transfer_runs":2,"device_fraction":0.75,
+        "bytes_h2d":0,"bytes_d2h":0,"launches":1,"last_choice":"hybrid"}}"#;
+    let cfg = SchedulerConfig { min_device_items: 1, ..Default::default() };
+    let restored =
+        Scheduler::from_json(cfg, &Json::parse(text).expect("snapshot parses")).unwrap();
+    // the regression: the two-way fraction IS the 1-device fleet's plan
+    assert_eq!(restored.sharded_weights("VecAdd.add", 1), vec![0.25, 0.75]);
+
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.add", Target::Sharded);
+    let engine = Engine::with_rules(2, rules)
+        .with_scheduler(restored)
+        .with_device_fleet(artifacts_dir(), &["fermi"])
+        .expect("fleet starts");
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let input = Arc::new((vec![1.5f32; elems], vec![2.25f32; elems]));
+    let (out, how) = engine.submit_hetero(m, input).join().unwrap();
+    assert!(out.iter().all(|&v| v == 3.75));
+    match how {
+        Executed::Sharded { smp_items, weights, lanes, .. } => {
+            // the split executed at the snapshot's ratio: the device lane
+            // owns 75% of the index space
+            assert_eq!(weights, vec![0.25, 0.75]);
+            assert_eq!(lanes[0].items, elems - (elems as f64 * 0.25).round() as usize);
+            assert_eq!(smp_items + lanes[0].items, elems);
+        }
+        other => panic!("expected the sharded lane, got {other:?}"),
+    }
+}
+
+#[test]
+fn sharded_rule_without_a_fleet_reverts_to_smp() {
+    let mut rules = Rules::empty();
+    rules.set("Sum.sharded", Target::Sharded);
+    let engine = Engine::with_rules(2, rules); // no fleet attached
+    let m = Arc::new(sum_sharded_method(None));
+    let input = Arc::new((0..1_000i64).collect::<Vec<i64>>());
+    let (r, how) = engine.submit_hetero(m, input).join().unwrap();
+    assert_eq!(r, 499_500);
+    assert!(matches!(how, Executed::Smp { .. }));
+}
+
+#[test]
+fn whole_device_jobs_spread_across_the_fleet() {
+    // least-loaded dispatch: concurrent whole-invocation device jobs must
+    // land on more than one lane (each lane counts its own jobs)
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.add", Target::Device("fermi".into()));
+    let engine = Engine::with_rules(2, rules)
+        .with_device_fleet(artifacts_dir(), &["fermi", "fermi"])
+        .expect("fleet starts");
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let input = Arc::new((vec![1.0f32; elems], vec![2.0f32; elems]));
+    let handles: Vec<_> =
+        (0..6).map(|_| engine.submit_hetero(m.clone(), input.clone())).collect();
+    for h in handles {
+        let (out, how) = h.join().unwrap();
+        assert!(out.iter().all(|&v| v == 3.0));
+        assert!(matches!(how, Executed::Device { .. }));
+    }
+    let per_lane = engine.device_lane_counters();
+    assert_eq!(per_lane.len(), 2);
+    assert_eq!(per_lane[0].jobs_run + per_lane[1].jobs_run, 6);
+    assert!(
+        per_lane[0].jobs_run > 0 && per_lane[1].jobs_run > 0,
+        "both lanes must see work: {per_lane:?}"
+    );
+    let total = engine.device_counters().expect("fleet attached");
+    assert_eq!(total.jobs_run, 6);
+}

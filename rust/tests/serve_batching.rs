@@ -379,6 +379,82 @@ fn fused_batches_route_through_the_device_lane_as_one_job() {
     assert_eq!(h.batched_requests, sizes.len() as u64);
 }
 
+#[test]
+fn concurrent_method_batches_spread_across_the_device_fleet() {
+    use std::sync::{Condvar, Mutex};
+
+    // Two registered methods = two dispatchers submitting device batches
+    // concurrently.  Method A's device fn parks on a gate; while its job
+    // occupies lane 0, method B's batch must dispatch to the less-loaded
+    // lane 1 — the serving layer's least-loaded fleet dispatch,
+    // handshake-deterministic (no sleeps).
+    let gate = Arc::new((Mutex::new((false, false)), Condvar::new())); // (started, released)
+
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.slow", Target::Device("fermi".into()));
+    rules.set("VecAdd.fast", Target::Device("fermi".into()));
+    let engine = Engine::with_rules(2, rules)
+        .with_device_fleet(artifacts_dir(), &["fermi", "fermi"])
+        .expect("device fleet starts");
+
+    let make = |name: &'static str, parked: Option<Arc<(Mutex<(bool, bool)>, Condvar)>>| {
+        let smp = SomdMethod::new(
+            name,
+            |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+            |_, _| (),
+            |inp, p, _, _| p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>(),
+            Assemble,
+        );
+        let dev: DeviceFn<(Vec<f32>, Vec<f32>), Vec<f32>> = Box::new(move |_sess, inp| {
+            if let Some(g) = &parked {
+                let (lock, cv) = g.as_ref();
+                let mut st = lock.lock().unwrap();
+                st.0 = true; // started: lane 0 is now provably busy
+                cv.notify_all();
+                while !st.1 {
+                    st = cv.wait(st).unwrap();
+                }
+            }
+            Ok(inp.0.iter().zip(&inp.1).map(|(a, b)| a + b).collect())
+        });
+        Arc::new(HeteroMethod::with_device(smp, dev).with_batch(vecadd_batch_spec()))
+    };
+
+    let service = Service::with_config(engine, coalescing_cfg(0));
+    let slow = service.register(make("VecAdd.slow", Some(gate.clone()))).unwrap();
+    let fast = service.register(make("VecAdd.fast", None)).unwrap();
+
+    let slow_input = Arc::new(gen_pair(64, 1));
+    let slow_ticket = slow.submit(slow_input.clone()).unwrap();
+    {
+        // wait until the slow batch is running on a lane
+        let (lock, cv) = gate.as_ref();
+        let mut st = lock.lock().unwrap();
+        while !st.0 {
+            st = cv.wait(st).unwrap();
+        }
+    }
+    // lane 0 holds the parked job: the fast batch must go to lane 1 and
+    // complete while the slow one is still parked
+    let fast_input = Arc::new(gen_pair(64, 2));
+    let fast_out = fast.submit(fast_input.clone()).unwrap().wait().expect("fast served");
+    assert_eq!(bits(&fast_out.value), bits(&vecadd_batched().smp.invoke(&fast_input, 2)));
+
+    {
+        let (lock, cv) = gate.as_ref();
+        lock.lock().unwrap().1 = true;
+        cv.notify_all();
+    }
+    let slow_out = slow_ticket.wait().expect("slow served");
+    assert_eq!(bits(&slow_out.value), bits(&vecadd_batched().smp.invoke(&slow_input, 2)));
+
+    let per_lane = service.engine().device_lane_counters();
+    assert_eq!(per_lane.len(), 2);
+    assert_eq!(per_lane[0].jobs_run, 1, "the parked batch owned lane 0");
+    assert_eq!(per_lane[1].jobs_run, 1, "the concurrent batch must use lane 1");
+    service.drain();
+}
+
 // (the SOMD_SERVE_* env-knob parsing test lives in its own binary,
 // rust/tests/serve_config_env.rs — mutating the process environment
 // while this binary's tests run engine code on parallel threads would

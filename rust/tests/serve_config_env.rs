@@ -1,18 +1,45 @@
-//! `SOMD_SERVE_*` / `SOMD_SCHED_SNAPSHOT` knob parsing
-//! (`ServiceConfig::from_env`).
+//! `SOMD_SERVE_*` / `SOMD_SCHED_SNAPSHOT` / `SOMD_FLEET_*` knob parsing
+//! (`ServiceConfig::from_env`, `Engine::fleet_*_from_env`).
 //!
-//! Deliberately a single test in its own binary: mutating the process
-//! environment with `set_var` while other tests run engine code on
-//! parallel threads would race glibc's `getenv` (the serve suite's
-//! device tests read `XLA_*` knobs), so the env mutation gets a process
-//! to itself.
+//! Deliberately a single binary: mutating the process environment with
+//! `set_var` while other tests run engine code on parallel threads
+//! would race glibc's `getenv` (the serve suite's device tests read
+//! `XLA_*` knobs), so the env mutation gets a process to itself — and
+//! the two tests here serialize on a shared lock.
 
+use std::sync::Mutex;
 use std::time::Duration;
 
 use somd::serve::{AdmissionPolicy, ServiceConfig};
+use somd::somd::Engine;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn fleet_env_knobs_parse() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    // unset: the documented defaults
+    std::env::remove_var("SOMD_FLEET_PROFILES");
+    std::env::remove_var("SOMD_FLEET_MIN_DEVICE_ITEMS");
+    assert_eq!(Engine::fleet_profiles_from_env(), vec!["fermi", "geforce320m"]);
+    assert_eq!(Engine::fleet_min_device_items_from_env(), None);
+    // set: comma list (whitespace tolerated) + numeric floor
+    std::env::set_var("SOMD_FLEET_PROFILES", " fermi , fermi,passthrough ");
+    std::env::set_var("SOMD_FLEET_MIN_DEVICE_ITEMS", "2048");
+    assert_eq!(Engine::fleet_profiles_from_env(), vec!["fermi", "fermi", "passthrough"]);
+    assert_eq!(Engine::fleet_min_device_items_from_env(), Some(2048));
+    // junk floor parses to None; empty profile list falls back
+    std::env::set_var("SOMD_FLEET_MIN_DEVICE_ITEMS", "lots");
+    std::env::set_var("SOMD_FLEET_PROFILES", "  ");
+    assert_eq!(Engine::fleet_min_device_items_from_env(), None);
+    assert_eq!(Engine::fleet_profiles_from_env(), vec!["fermi", "geforce320m"]);
+    std::env::remove_var("SOMD_FLEET_PROFILES");
+    std::env::remove_var("SOMD_FLEET_MIN_DEVICE_ITEMS");
+}
 
 #[test]
 fn service_config_reads_env_knobs() {
+    let _guard = ENV_LOCK.lock().unwrap();
     std::env::set_var("SOMD_SERVE_MAX_BATCH_ITEMS", "4096");
     std::env::set_var("SOMD_SERVE_MAX_BATCH_DELAY_US", "250");
     std::env::set_var("SOMD_SERVE_QUEUE_DEPTH", "9");

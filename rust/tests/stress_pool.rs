@@ -280,7 +280,9 @@ fn auto_explores_then_settles_with_device_lane() {
             Executed::Smp { .. } => saw_smp = true,
             Executed::Device { .. } => saw_device = true,
             // this method has no hybrid spec, so auto can never fork it
-            Executed::Hybrid { .. } => unreachable!("no hybrid version compiled"),
+            Executed::Hybrid { .. } | Executed::Sharded { .. } => {
+                unreachable!("no hybrid version compiled")
+            }
         }
     }
     assert!(saw_smp, "auto must explore the SMP side");
