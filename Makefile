@@ -2,7 +2,7 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-serve
+.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-cluster bench-serve
 
 # The one-stop gate: build everything (library, binaries, benches AND
 # examples), run both test suites, then the docs checks.
@@ -56,6 +56,13 @@ bench-hybrid:
 bench-fleet:
 	cd rust && cargo test --release --test fleet_exec
 	cd rust && cargo run --release -- bench fleet --check
+
+# cluster lane: multi-process sharding correctness suite (spawned
+# peers, bitwise vs pure SMP, kill/deadline cover), then the cluster
+# report with the participation gate (writes rust/BENCH_cluster.json)
+bench-cluster:
+	cd rust && cargo test --release --test cluster_exec
+	cd rust && cargo run --release -- bench cluster --check
 
 # serving layer: batching correctness suite, then the open-loop load
 # sweep with the batched-throughput gate (writes rust/BENCH_serve.json)

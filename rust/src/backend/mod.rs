@@ -134,6 +134,40 @@ impl<I: ?Sized, R> BatchSpec<I, R> {
     }
 }
 
+/// The wire codecs the cluster lane needs from a method: how to encode a
+/// sub-span of the input for shipment to a remote peer, and how to
+/// decode the peer's partial-result bytes back into a partial the
+/// ordinary reduction can merge.
+///
+/// * `encode` — serialize everything a peer needs to compute `span`
+///   (typically just the span's slice of the distributed inputs plus any
+///   replicated scalars — the paper's §4.2 scatter, on a socket).  The
+///   byte layout is method-private: only this method's handler on the
+///   peer (`somd cluster serve` registers one per method) ever reads it.
+/// * `decode` — parse the peer's partial-result bytes into an `R`.  The
+///   partial occupies the same rank-order slot a local device share
+///   would, so `smp partials ++ lane partials` still merges through the
+///   method's ordinary reduction.
+///
+/// A method with a `ClusterSpec` (and the [`HybridSpec`] that defines
+/// its item space and SMP span evaluator) can shard across remote peers;
+/// without one, remote lanes are simply not counted for that method.
+pub struct ClusterSpec<I: ?Sized, R> {
+    encode: Box<dyn Fn(&I, Range1) -> Vec<u8> + Send + Sync>,
+    decode: Box<dyn Fn(&[u8]) -> Result<R> + Send + Sync>,
+}
+
+impl<I: ?Sized, R> ClusterSpec<I, R> {
+    /// Build a cluster spec from the two codecs (see the type-level docs
+    /// for their contracts).
+    pub fn new(
+        encode: impl Fn(&I, Range1) -> Vec<u8> + Send + Sync + 'static,
+        decode: impl Fn(&[u8]) -> Result<R> + Send + Sync + 'static,
+    ) -> Self {
+        Self { encode: Box::new(encode), decode: Box::new(decode) }
+    }
+}
+
 /// The device half's successful outcome, as handed to the shared hybrid
 /// merge ([`HeteroMethod::finish_hybrid`]) by both the sync and the
 /// async lane.
@@ -194,6 +228,7 @@ pub struct HeteroMethod<I: ?Sized, P, E, R> {
     device: Option<DeviceFn<I, R>>,
     hybrid: Option<HybridSpec<I, R>>,
     batch: Option<BatchSpec<I, R>>,
+    cluster: Option<ClusterSpec<I, R>>,
 }
 
 /// Where an invocation actually ran (after fallback resolution).
@@ -265,12 +300,12 @@ pub struct ShardLane {
 impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R> {
     /// A method with only the (always-applicable) SMP version.
     pub fn smp_only(smp: SomdMethod<I, P, E, R>) -> Self {
-        Self { smp, device: None, hybrid: None, batch: None }
+        Self { smp, device: None, hybrid: None, batch: None, cluster: None }
     }
 
     /// A method with an SMP version and a whole-invocation device version.
     pub fn with_device(smp: SomdMethod<I, P, E, R>, device: DeviceFn<I, R>) -> Self {
-        Self { smp, device: Some(device), hybrid: None, batch: None }
+        Self { smp, device: Some(device), hybrid: None, batch: None, cluster: None }
     }
 
     /// Attach a hybrid co-execution spec (builder style).
@@ -283,6 +318,14 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
     /// concurrent invocations of this method (builder style).
     pub fn with_batch(mut self, batch: BatchSpec<I, R>) -> Self {
         self.batch = Some(batch);
+        self
+    }
+
+    /// Attach the wire codecs so remote peers can carry shards of this
+    /// method (builder style); requires a [`HybridSpec`] to define the
+    /// item space the spans are cut from.
+    pub fn with_cluster(mut self, cluster: ClusterSpec<I, R>) -> Self {
+        self.cluster = Some(cluster);
         self
     }
 
@@ -305,6 +348,28 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
     /// (a [`BatchSpec`] is attached).
     pub fn has_batch_version(&self) -> bool {
         self.batch.is_some()
+    }
+
+    /// Whether remote peers can carry shards of this method (a
+    /// [`ClusterSpec`] is attached).
+    pub fn has_cluster_version(&self) -> bool {
+        self.cluster.is_some()
+    }
+
+    /// Encode `span`'s input for shipment to a remote peer.
+    ///
+    /// # Panics
+    /// Panics when the method has no [`ClusterSpec`]; the engine only
+    /// routes here after [`HeteroMethod::has_cluster_version`] checks.
+    pub fn cluster_encode_span(&self, input: &I, span: Range1) -> Vec<u8> {
+        (self.cluster.as_ref().expect("cluster spec present").encode)(input, span)
+    }
+
+    /// Decode a peer's partial-result bytes (cluster-capable methods
+    /// only; see [`HeteroMethod::cluster_encode_span`] for the panic
+    /// contract).
+    pub fn cluster_decode_partial(&self, payload: &[u8]) -> Result<R> {
+        (self.cluster.as_ref().expect("cluster spec present").decode)(payload)
     }
 
     /// Index-space items of one request (batchable methods only).

@@ -1,0 +1,765 @@
+//! Cluster-lane sharding report: `somd bench cluster`.
+//!
+//! One SOMD invocation sharded across the local SMP pool and N **remote
+//! peer processes** over localhost TCP ([`Engine::with_cluster_peers`]).
+//! Both workloads are exact-arithmetic, so the sharded result must be
+//! **bitwise identical** to the pure-SMP result — the in-run correctness
+//! gate this report enforces on every measured invocation:
+//!
+//! * **VecAdd** — the Listing-8 quickstart shape (identical IEEE f32
+//!   adds on both sides of the wire);
+//! * **Crypt** — one IDEA cipher pass (integer arithmetic; the span's
+//!   blocks plus the 52-subkey schedule cross the wire).
+//!
+//! Per workload the report measures the pure-SMP wall, the sharded wall
+//! at the scheduler's learned per-lane weights (after `--learn`
+//! calibration submissions), the learned weight vector, per-remote-lane
+//! occupancy (items and peer-side compute seconds of the final timed
+//! run), and how many timed runs degraded to pure SMP.  Per peer it also
+//! reports ping RTT percentiles (p50/p95/p99) so injected WAN latency
+//! (`--delay-ms`, or `SOMD_CLUSTER_INJECT_DELAY_MS` on the peer) is
+//! visible in the numbers.  Output: `BENCH_cluster.json`
+//! (`schema: cluster_shard/v1`, documented in `docs/BENCHMARKS.md`).
+//!
+//! With `check` the report gates the lane's reason to exist: every
+//! workload must have used at least one remote lane (nonzero remote
+//! items in the final timed run) with **zero** degraded timed runs.
+//! There is deliberately no sharded-vs-SMP wall gate: on one localhost
+//! box the serialization cost dwarfs the (shared-CPU) peer's help, so a
+//! perf gate would measure the test machine, not the lane.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::backend::{ClusterSpec, Executed, HeteroMethod, HybridSpec};
+use crate::somd::cluster::ClusterConfig;
+use crate::somd::partition::Block1D;
+use crate::somd::reduction::Assemble;
+use crate::somd::{
+    run_mis, BlockPart, Engine, Range1, Rules, Scheduler, SchedulerConfig, SomdMethod, Target,
+};
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::timer::{middle_tier_mean, sample};
+
+use super::crypt::{self, BLOCK_BYTES, SUBKEYS};
+use super::hybrid;
+
+const SEED: u64 = 0x0C10_57E2;
+
+// ---------------------------------------------------------------------------
+// Wire codecs (the method-specific payloads inside `Submit`/`Partial`)
+// ---------------------------------------------------------------------------
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a span's f32 partial result (or any f32 vector) as LE bytes.
+pub fn encode_f32s(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    put_f32s(&mut out, xs);
+    out
+}
+
+/// Decode an LE f32 vector (the inverse of [`encode_f32s`]).
+pub fn decode_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    ensure!(bytes.len() % 4 == 0, "f32 payload not 4-byte aligned: {} bytes", bytes.len());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Encode a VecAdd span for shipment: `a[span]` then `b[span]`, f32 LE.
+pub fn encode_vecadd_span(inp: &(Vec<f32>, Vec<f32>), span: Range1) -> Vec<u8> {
+    let mut out = Vec::with_capacity(span.len() * 8);
+    put_f32s(&mut out, &inp.0[span.lo..span.hi]);
+    put_f32s(&mut out, &inp.1[span.lo..span.hi]);
+    out
+}
+
+/// Decode a VecAdd span payload back into its two operand slices.
+pub fn decode_vecadd_payload(payload: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
+    ensure!(
+        payload.len() % 8 == 0,
+        "vecadd payload is not two equal f32 halves: {} bytes",
+        payload.len()
+    );
+    let half = payload.len() / 2;
+    Ok((decode_f32s(&payload[..half])?, decode_f32s(&payload[half..])?))
+}
+
+/// Encode a Crypt span for shipment: the 52-subkey schedule (u32 LE)
+/// followed by the span's cipher-block bytes.
+pub fn encode_crypt_span(src: &[u8], keys: &[u32; SUBKEYS], span: Range1) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * SUBKEYS + span.len() * BLOCK_BYTES);
+    for &k in keys {
+        out.extend_from_slice(&k.to_le_bytes());
+    }
+    out.extend_from_slice(&src[span.lo * BLOCK_BYTES..span.hi * BLOCK_BYTES]);
+    out
+}
+
+/// Decode a Crypt span payload back into (block bytes, key schedule).
+pub fn decode_crypt_payload(payload: &[u8]) -> Result<(Vec<u8>, [u32; SUBKEYS])> {
+    ensure!(
+        payload.len() >= 4 * SUBKEYS,
+        "crypt payload too short for the key schedule: {} bytes",
+        payload.len()
+    );
+    let (key_bytes, src) = payload.split_at(4 * SUBKEYS);
+    ensure!(
+        src.len() % BLOCK_BYTES == 0,
+        "crypt payload blocks not 8-byte aligned: {} bytes",
+        src.len()
+    );
+    let mut keys = [0u32; SUBKEYS];
+    for (i, c) in key_bytes.chunks_exact(4).enumerate() {
+        keys[i] = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok((src.to_vec(), keys))
+}
+
+// ---------------------------------------------------------------------------
+// Cluster-capable method builders
+// ---------------------------------------------------------------------------
+
+/// [`hybrid::vecadd_hybrid`] extended with the wire codecs, so one
+/// invocation can shard across remote peers.  Both sides compute the
+/// identical IEEE f32 adds: sharded output is bitwise equal to pure SMP.
+pub fn vecadd_cluster() -> HeteroMethod<(Vec<f32>, Vec<f32>), BlockPart, (), Vec<f32>> {
+    hybrid::vecadd_hybrid().with_cluster(ClusterSpec::new(
+        |inp: &(Vec<f32>, Vec<f32>), span| encode_vecadd_span(inp, span),
+        |payload| decode_f32s(payload),
+    ))
+}
+
+/// An owned-input IDEA cipher pass (the async sharded path needs
+/// `'static` inputs, unlike the borrowed [`crypt::PassInput`]).
+pub struct CryptInput {
+    /// Source bytes (plaintext or ciphertext), 8-byte aligned.
+    pub src: Vec<u8>,
+    /// The subkey schedule for this pass.
+    pub keys: [u32; SUBKEYS],
+}
+
+impl CryptInput {
+    /// Cipher-block count of the source vector.
+    pub fn blocks(&self) -> usize {
+        self.src.len() / BLOCK_BYTES
+    }
+}
+
+/// An owned-input Crypt method with SMP, hybrid and cluster versions
+/// (no device version: the cluster bench runs on engines without a
+/// device fleet).  Integer IDEA on both sides of the wire: sharded
+/// ciphertext is bitwise equal to the sequential cipher.
+pub fn crypt_cluster() -> HeteroMethod<CryptInput, BlockPart, (), Vec<u8>> {
+    let smp = SomdMethod::new(
+        "Crypt.cipher",
+        |inp: &CryptInput, n| Block1D::new().ranges(inp.blocks(), n),
+        |_, _| (),
+        |inp, p, _, _| crypt::cipher_partial(&inp.src, &inp.keys, p.own.lo, p.own.hi),
+        Assemble,
+    );
+    let spec = HybridSpec::new(
+        |inp: &CryptInput| inp.blocks(),
+        |inp, span, n| {
+            let parts = Block1D::new().ranges_in(span, inp.blocks(), n);
+            run_mis(inp, &parts, &(), &|inp: &CryptInput, p, _: &(), _| {
+                crypt::cipher_partial(&inp.src, &inp.keys, p.own.lo, p.own.hi)
+            })
+        },
+        |_sess, _inp, _span| bail!("Crypt.cipher carries no device version in the cluster bench"),
+    );
+    HeteroMethod::smp_only(smp).with_hybrid(spec).with_cluster(ClusterSpec::new(
+        |inp: &CryptInput, span| encode_crypt_span(&inp.src, &inp.keys, span),
+        |payload| Ok(payload.to_vec()),
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// The standard peer host + peer-process plumbing
+// ---------------------------------------------------------------------------
+
+/// The method set a `somd cluster serve` peer hosts, computed through a
+/// full local [`Engine`] — the peer itself resolves each span through
+/// its own rules, so a remote lane can be SMP, device, or hybrid on its
+/// box.  Handlers decode the span payload, run the method, and encode
+/// the partial back; the codecs mirror [`vecadd_cluster`] /
+/// [`crypt_cluster`] exactly.
+pub fn standard_host(engine: Arc<Engine>) -> crate::somd::cluster::MethodHost {
+    let vec_m = Arc::new(vecadd_cluster());
+    let crypt_m = Arc::new(crypt_cluster());
+    let veng = engine.clone();
+    let ceng = engine.clone();
+    crate::somd::cluster::MethodHost::new("somd-peer")
+        .with_workers(engine.workers() as u32)
+        .register("VecAdd.add", move |payload, span| {
+            let (a, b) = decode_vecadd_payload(payload)?;
+            ensure!(
+                a.len() == span.len(),
+                "vecadd span/payload mismatch: {} items vs span {}..{}",
+                a.len(),
+                span.lo,
+                span.hi
+            );
+            let (out, _) = veng.submit_hetero(vec_m.clone(), Arc::new((a, b))).join()?;
+            Ok(encode_f32s(&out))
+        })
+        .register("Crypt.cipher", move |payload, span| {
+            let (src, keys) = decode_crypt_payload(payload)?;
+            ensure!(
+                src.len() == span.len() * BLOCK_BYTES,
+                "crypt span/payload mismatch: {} bytes vs span {}..{}",
+                src.len(),
+                span.lo,
+                span.hi
+            );
+            let (out, _) =
+                ceng.submit_hetero(crypt_m.clone(), Arc::new(CryptInput { src, keys })).join()?;
+            Ok(out)
+        })
+}
+
+/// A spawned `somd cluster serve` child process, killed on drop.
+pub struct PeerProc {
+    child: Child,
+    addr: String,
+}
+
+impl PeerProc {
+    /// The peer's bound `host:port` (ephemeral port resolved).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Kill the peer (idempotent; also runs on drop).  The engine-side
+    /// client sees EOF and covers any in-flight span with SMP partials.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for PeerProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `exe cluster serve` on an ephemeral localhost port and wait for
+/// its `SOMD_CLUSTER_LISTENING <addr>` line.  `delay_ms > 0` injects an
+/// artificial reply delay on the peer (WAN simulation / kill-window).
+pub fn spawn_peer(exe: &std::path::Path, workers: usize, delay_ms: u64) -> Result<PeerProc> {
+    let mut cmd = Command::new(exe);
+    cmd.arg("cluster")
+        .arg("serve")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--workers")
+        .arg(workers.to_string())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    if delay_ms > 0 {
+        cmd.arg("--delay-ms").arg(delay_ms.to_string());
+    }
+    let mut child = cmd.spawn().with_context(|| format!("spawn peer {}", exe.display()))?;
+    let stdout = child.stdout.take().ok_or_else(|| anyhow!("peer stdout not piped"))?;
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let addr = loop {
+        match lines.next() {
+            Some(Ok(line)) => {
+                if let Some(rest) = line.strip_prefix("SOMD_CLUSTER_LISTENING ") {
+                    break rest.trim().to_string();
+                }
+            }
+            Some(Err(e)) => {
+                let _ = child.kill();
+                return Err(anyhow!("reading peer stdout: {e}"));
+            }
+            None => {
+                let _ = child.kill();
+                bail!("peer exited before announcing its address");
+            }
+        }
+    };
+    // keep draining so a chatty peer can never block on a full pipe
+    std::thread::spawn(move || for _ in lines {});
+    Ok(PeerProc { child, addr })
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// The shape of one cluster bench run.
+#[derive(Debug, Clone)]
+pub struct ClusterBenchSpec {
+    /// Peer processes to spawn on localhost.
+    pub peers: usize,
+    /// MI count inside each peer's engine.
+    pub peer_workers: usize,
+    /// MI count of the local SMP lane and the sharded SMP share.
+    pub workers: usize,
+    /// Timed samples per workload.
+    pub reps: usize,
+    /// Calibration submissions before the timed shard measurement.
+    pub learn_rounds: usize,
+    /// The scheduler's `min_device_items` floor for this run.
+    pub min_device_items: usize,
+    /// Artificial reply delay injected on every peer (ms; 0 = none).
+    pub delay_ms: u64,
+    /// Ping probes per peer for the RTT percentiles.
+    pub rtt_probes: usize,
+    /// VecAdd vector length.
+    pub elems: usize,
+    /// Crypt cipher-block count.
+    pub blocks: usize,
+}
+
+/// One peer's ping RTT percentiles (milliseconds).
+#[derive(Debug, Clone)]
+pub struct PeerRtt {
+    /// The peer's lane label (`tcp://host:port`).
+    pub lane: String,
+    /// Probe count.
+    pub n: usize,
+    /// Median RTT (ms).
+    pub p50_ms: f64,
+    /// 95th-percentile RTT (ms).
+    pub p95_ms: f64,
+    /// 99th-percentile RTT (ms).
+    pub p99_ms: f64,
+}
+
+/// One workload's cluster-vs-SMP measurement.
+#[derive(Debug, Clone)]
+pub struct ClusterRow {
+    /// Workload name (`"VecAdd"` / `"Crypt"`).
+    pub bench: String,
+    /// Index-space items per invocation.
+    pub items: usize,
+    /// Pure-SMP wall seconds (middle-tier mean).
+    pub smp_secs: f64,
+    /// Sharded wall seconds at the learned weights (middle-tier mean).
+    pub cluster_secs: f64,
+    /// The learned per-lane weight vector after calibration (SMP first).
+    pub weights: Vec<f64>,
+    /// Index-space items each remote lane's share covered in the final
+    /// timed run (0 = starved under the floor).
+    pub lane_items: Vec<usize>,
+    /// Each remote lane's peer-side compute seconds in the final timed
+    /// run (network time excluded).
+    pub lane_secs: Vec<f64>,
+    /// Timed "sharded" invocations that actually degraded to pure SMP.
+    pub degraded_runs: usize,
+}
+
+fn shard_rules() -> Rules {
+    let mut rules = Rules::empty();
+    rules.set("VecAdd.add", Target::Sharded);
+    rules.set("Crypt.cipher", Target::Sharded);
+    rules
+}
+
+fn rtt_percentiles(engine: &Engine, probes: usize) -> Result<Vec<PeerRtt>> {
+    let mut out = Vec::new();
+    for (client, lane) in engine.remote_clients().iter().zip(engine.remote_lane_names()) {
+        client.ping()?; // warm the path, untimed
+        let mut ms = Vec::with_capacity(probes);
+        for _ in 0..probes.max(1) {
+            ms.push(client.ping()?.as_secs_f64() * 1e3);
+        }
+        let p = stats::percentiles(&ms);
+        out.push(PeerRtt {
+            lane: lane.to_string(),
+            n: p.n,
+            p50_ms: p.p50,
+            p95_ms: p.p95,
+            p99_ms: p.p99,
+        });
+    }
+    Ok(out)
+}
+
+/// Run one workload through the sharded engine: correctness preflight +
+/// weight learning, then the timed measurement.  `check_bitwise` gates
+/// every timed run's output against the pure-SMP oracle.
+fn run_workload<I, P, E>(
+    engine: &Engine,
+    m: Arc<HeteroMethod<I, P, E, Vec<u8>>>,
+    input: Arc<I>,
+    want: &[u8],
+    bench: &str,
+    items: usize,
+    smp_secs: f64,
+    spec: &ClusterBenchSpec,
+) -> Result<ClusterRow>
+where
+    I: Send + Sync + 'static,
+    P: Send + Sync + 'static,
+    E: Sync + 'static,
+{
+    for _ in 0..spec.learn_rounds.max(1) {
+        let (got, _) = engine.submit_hetero(m.clone(), input.clone()).join()?;
+        if got != want {
+            bail!("{bench}: sharded output diverges from pure SMP during calibration");
+        }
+    }
+    let lanes_n = engine.remote_lane_count();
+    let mut degraded = 0usize;
+    let mut lane_items = vec![0usize; lanes_n];
+    let mut lane_secs = vec![0.0f64; lanes_n];
+    let mut mismatch = false;
+    let cluster_secs = middle_tier_mean(&sample(spec.reps, || {
+        let (got, how) =
+            engine.submit_hetero(m.clone(), input.clone()).join().expect("sharded run completes");
+        if got != want {
+            mismatch = true;
+        }
+        match how {
+            Executed::Sharded { lanes, .. } => {
+                for l in &lanes {
+                    lane_items[l.device_id] = l.items;
+                    lane_secs[l.device_id] = l.secs;
+                }
+            }
+            _ => degraded += 1,
+        }
+    }))
+    .as_secs_f64();
+    if mismatch {
+        bail!("{bench}: a timed sharded run diverged from pure SMP");
+    }
+    let weights = engine.scheduler().sharded_weights(m.name(), lanes_n);
+    Ok(ClusterRow {
+        bench: bench.to_string(),
+        items,
+        smp_secs,
+        cluster_secs,
+        weights,
+        lane_items,
+        lane_secs,
+        degraded_runs: degraded,
+    })
+}
+
+/// Spawn the peers, shard both workloads across them, and measure (see
+/// the module docs for the protocol).  Returns the rows plus the
+/// per-peer RTT percentiles.
+pub fn measure(spec: &ClusterBenchSpec) -> Result<(Vec<ClusterRow>, Vec<PeerRtt>)> {
+    if spec.peers == 0 {
+        bail!("the cluster bench needs at least one peer");
+    }
+    let exe = std::env::current_exe().context("locate the somd binary")?;
+    let mut peers = Vec::with_capacity(spec.peers);
+    for _ in 0..spec.peers {
+        peers.push(spawn_peer(&exe, spec.peer_workers, spec.delay_ms)?);
+    }
+    let addrs: Vec<String> = peers.iter().map(|p| p.addr().to_string()).collect();
+    let engine = Engine::with_rules(spec.workers, shard_rules())
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: spec.min_device_items,
+            ..Default::default()
+        }))
+        .with_cluster_peers_cfg(&addrs, ClusterConfig::from_env())?;
+
+    let rtt = rtt_percentiles(&engine, spec.rtt_probes)?;
+    let mut rows = Vec::new();
+
+    // ---- VecAdd: the Listing-8 quickstart shape over the wire ----------
+    {
+        let a: Vec<f32> = (0..spec.elems).map(|i| (i % 977) as f32 * 0.25 + 0.125).collect();
+        let b: Vec<f32> = (0..spec.elems).map(|i| (i % 1013) as f32 * 0.5 - 3.0).collect();
+        let m = Arc::new(vecadd_cluster());
+        let input = Arc::new((a, b));
+        let smp_secs =
+            middle_tier_mean(&sample(spec.reps, || m.smp.invoke(&input, spec.workers)))
+                .as_secs_f64();
+        // compare through the exact bit patterns (the workload's contract)
+        let want_bits = encode_f32s(&m.smp.invoke(&input, spec.workers));
+        let wrapped = Arc::new(vecadd_as_bytes(m.clone()));
+        rows.push(run_workload(
+            &engine,
+            wrapped,
+            input,
+            &want_bits,
+            "VecAdd",
+            spec.elems,
+            smp_secs,
+            spec,
+        )?);
+    }
+
+    // ---- Crypt: one IDEA pass, keys + blocks over the wire -------------
+    {
+        let p = crypt::Problem::generate(spec.blocks * BLOCK_BYTES, SEED);
+        let want = crypt::sequential(&p.data, &p.ekeys);
+        let m = Arc::new(crypt_cluster());
+        let input = Arc::new(CryptInput { src: p.data.clone(), keys: p.ekeys });
+        let smp_secs =
+            middle_tier_mean(&sample(spec.reps, || m.smp.invoke(&input, spec.workers)))
+                .as_secs_f64();
+        rows.push(run_workload(
+            &engine,
+            m,
+            input,
+            &want,
+            "Crypt",
+            spec.blocks,
+            smp_secs,
+            spec,
+        )?);
+    }
+
+    drop(peers); // kill the children before returning
+    Ok((rows, rtt))
+}
+
+/// Adapt the f32-valued VecAdd method to byte-valued output so the
+/// generic bitwise gate in [`measure`] can compare exact bit patterns.
+fn vecadd_as_bytes(
+    m: Arc<HeteroMethod<(Vec<f32>, Vec<f32>), BlockPart, (), Vec<f32>>>,
+) -> HeteroMethod<(Vec<f32>, Vec<f32>), BlockPart, (), Vec<u8>> {
+    let enc = {
+        let m = m.clone();
+        move |inp: &(Vec<f32>, Vec<f32>), span: Range1| m.cluster_encode_span(inp, span)
+    };
+    let smp = SomdMethod::new(
+        "VecAdd.add",
+        |inp: &(Vec<f32>, Vec<f32>), n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        |inp, p, _, _| {
+            let (a, b) = inp;
+            encode_f32s(&p.own.iter().map(|i| a[i] + b[i]).collect::<Vec<f32>>())
+        },
+        Assemble,
+    );
+    let spec = HybridSpec::new(
+        |inp: &(Vec<f32>, Vec<f32>)| inp.0.len(),
+        |inp, span, n| {
+            let parts = Block1D::new().ranges_in(span, inp.0.len(), n);
+            run_mis(inp, &parts, &(), &|inp: &(Vec<f32>, Vec<f32>), p, _: &(), _| {
+                let (a, b) = inp;
+                encode_f32s(&p.own.iter().map(|i| a[i] + b[i]).collect::<Vec<f32>>())
+            })
+        },
+        |_sess, _inp, _span| bail!("VecAdd.add byte adapter has no device version"),
+    );
+    HeteroMethod::smp_only(smp)
+        .with_hybrid(spec)
+        .with_cluster(ClusterSpec::new(enc, |payload| Ok(payload.to_vec())))
+}
+
+/// Render the report as the `BENCH_cluster.json` schema (see
+/// `docs/BENCHMARKS.md`).
+pub fn to_json(spec: &ClusterBenchSpec, rows: &[ClusterRow], rtt: &[PeerRtt]) -> Json {
+    use std::collections::BTreeMap;
+    let farr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("cluster_shard/v1".to_string()));
+    top.insert("peers".to_string(), Json::Num(spec.peers as f64));
+    top.insert("peer_workers".to_string(), Json::Num(spec.peer_workers as f64));
+    top.insert("workers".to_string(), Json::Num(spec.workers as f64));
+    top.insert("reps".to_string(), Json::Num(spec.reps as f64));
+    top.insert("learn_rounds".to_string(), Json::Num(spec.learn_rounds as f64));
+    top.insert("min_device_items".to_string(), Json::Num(spec.min_device_items as f64));
+    top.insert("delay_ms".to_string(), Json::Num(spec.delay_ms as f64));
+    let rtt_arr: Vec<Json> = rtt
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("lane".to_string(), Json::Str(r.lane.clone()));
+            m.insert("n".to_string(), Json::Num(r.n as f64));
+            m.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
+            m.insert("p95_ms".to_string(), Json::Num(r.p95_ms));
+            m.insert("p99_ms".to_string(), Json::Num(r.p99_ms));
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("rtt".to_string(), Json::Arr(rtt_arr));
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::Str(r.bench.clone()));
+            m.insert("items".to_string(), Json::Num(r.items as f64));
+            m.insert("smp_secs".to_string(), Json::Num(r.smp_secs));
+            m.insert("cluster_secs".to_string(), Json::Num(r.cluster_secs));
+            m.insert("weights".to_string(), farr(&r.weights));
+            m.insert(
+                "lane_items".to_string(),
+                Json::Arr(r.lane_items.iter().map(|&x| Json::Num(x as f64)).collect()),
+            );
+            m.insert("lane_secs".to_string(), farr(&r.lane_secs));
+            m.insert("degraded_runs".to_string(), Json::Num(r.degraded_runs as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("workloads".to_string(), Json::Arr(arr));
+    Json::Obj(top)
+}
+
+/// Print the cluster report, write `out_path`, and with `check` gate
+/// every workload on real remote participation: nonzero remote items in
+/// the final timed run and zero degraded timed runs.  (Bitwise equality
+/// with pure SMP is asserted inside [`measure`] on every run.)
+pub fn report(spec: &ClusterBenchSpec, out_path: &str, check: bool) -> Result<()> {
+    let (rows, rtt) = measure(spec)?;
+    println!(
+        "== Cluster lane: one invocation sharded across SMP + {} peer process(es) \
+         (workers {}, peer workers {}, reps {}, learn {}) ==",
+        spec.peers, spec.workers, spec.peer_workers, spec.reps, spec.learn_rounds
+    );
+    for r in &rtt {
+        println!(
+            "peer {:<24} rtt p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  ({} probes)",
+            r.lane, r.p50_ms, r.p95_ms, r.p99_ms, r.n
+        );
+    }
+    println!(
+        "{:<10} {:>9} {:>11} {:>13} {:>18} {:>16}",
+        "Workload", "items", "SMP (s)", "Cluster (s)", "weights", "remote items"
+    );
+    for r in &rows {
+        let weights: Vec<String> = r.weights.iter().map(|w| format!("{w:.2}")).collect();
+        let items: Vec<String> = r.lane_items.iter().map(|i| i.to_string()).collect();
+        println!(
+            "{:<10} {:>9} {:>11.4} {:>13.4} {:>18} {:>16}{}",
+            r.bench,
+            r.items,
+            r.smp_secs,
+            r.cluster_secs,
+            weights.join("/"),
+            items.join("/"),
+            if r.degraded_runs > 0 {
+                format!("  ({} of {} runs degraded to SMP)", r.degraded_runs, spec.reps)
+            } else {
+                String::new()
+            }
+        );
+    }
+    std::fs::write(out_path, to_json(spec, &rows, &rtt).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if check {
+        for r in &rows {
+            if r.degraded_runs > 0 {
+                bail!(
+                    "{}: {} of the timed runs degraded to pure SMP — the cluster gate \
+                     would be vacuous",
+                    r.bench,
+                    r.degraded_runs
+                );
+            }
+            if r.lane_items.iter().all(|&i| i == 0) {
+                bail!(
+                    "{}: no remote lane covered any items in the final timed run — the \
+                     cluster lane did not participate",
+                    r.bench
+                );
+            }
+        }
+        println!("check ok: every workload sharded over live remote lanes, zero degraded runs");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecadd_codecs_round_trip() {
+        let a: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..64).map(|i| 64.0 - i as f32).collect();
+        let inp = (a, b);
+        let span = Range1::new(10, 42);
+        let payload = encode_vecadd_span(&inp, span);
+        let (ra, rb) = decode_vecadd_payload(&payload).unwrap();
+        assert_eq!(&ra[..], &inp.0[10..42]);
+        assert_eq!(&rb[..], &inp.1[10..42]);
+        let partial = encode_f32s(&ra);
+        assert_eq!(decode_f32s(&partial).unwrap(), ra);
+        assert!(decode_f32s(&[1, 2, 3]).is_err(), "misaligned f32 payloads are rejected");
+    }
+
+    #[test]
+    fn crypt_codecs_round_trip() {
+        let p = crypt::Problem::generate(8 * 32, 99);
+        let span = Range1::new(4, 20);
+        let payload = encode_crypt_span(&p.data, &p.ekeys, span);
+        let (src, keys) = decode_crypt_payload(&payload).unwrap();
+        assert_eq!(&src[..], &p.data[4 * BLOCK_BYTES..20 * BLOCK_BYTES]);
+        assert_eq!(keys, p.ekeys);
+        assert!(decode_crypt_payload(&[0u8; 10]).is_err(), "short payloads are rejected");
+    }
+
+    #[test]
+    fn cluster_methods_carry_all_three_versions() {
+        let v = vecadd_cluster();
+        assert!(v.has_hybrid_version() && v.has_cluster_version());
+        let c = crypt_cluster();
+        assert!(c.has_hybrid_version() && c.has_cluster_version());
+        // the codecs agree with the SMP body on a span
+        let p = crypt::Problem::generate(8 * 16, 3);
+        let inp = CryptInput { src: p.data.clone(), keys: p.ekeys };
+        let span = Range1::new(2, 9);
+        let payload = c.cluster_encode_span(&inp, span);
+        let (src, keys) = decode_crypt_payload(&payload).unwrap();
+        let remote = crypt::cipher_partial(&src, &keys, 0, src.len() / BLOCK_BYTES);
+        let local = crypt::cipher_partial(&p.data, &p.ekeys, span.lo, span.hi);
+        assert_eq!(remote, local, "a peer computing its slice matches the local span");
+    }
+
+    #[test]
+    fn cluster_report_json_shape() {
+        let spec = ClusterBenchSpec {
+            peers: 2,
+            peer_workers: 1,
+            workers: 2,
+            reps: 2,
+            learn_rounds: 1,
+            min_device_items: 1,
+            delay_ms: 0,
+            rtt_probes: 8,
+            elems: 1024,
+            blocks: 256,
+        };
+        let rows = vec![ClusterRow {
+            bench: "VecAdd".into(),
+            items: 1024,
+            smp_secs: 0.01,
+            cluster_secs: 0.02,
+            weights: vec![0.5, 0.25, 0.25],
+            lane_items: vec![256, 256],
+            lane_secs: vec![0.001, 0.001],
+            degraded_runs: 0,
+        }];
+        let rtt = vec![PeerRtt {
+            lane: "tcp://127.0.0.1:9999".into(),
+            n: 8,
+            p50_ms: 0.1,
+            p95_ms: 0.2,
+            p99_ms: 0.3,
+        }];
+        let j = to_json(&spec, &rows, &rtt);
+        let parsed = Json::parse(&j.dump()).expect("cluster report parses");
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("cluster_shard/v1"));
+        let workloads = parsed.get("workloads").and_then(Json::as_arr).unwrap();
+        assert_eq!(workloads.len(), 1);
+        assert_eq!(
+            workloads[0].get("lane_items").and_then(Json::as_arr).map(|a| a.len()),
+            Some(2)
+        );
+        let rtt_j = parsed.get("rtt").and_then(Json::as_arr).unwrap();
+        assert_eq!(rtt_j[0].get("lane").and_then(Json::as_str), Some("tcp://127.0.0.1:9999"));
+    }
+}

@@ -19,8 +19,11 @@
 //! batched vs unbatched) plus the batchable method builders it and the
 //! serving correctness suite share; [`fleet`] is the device-fleet
 //! sharding report (one invocation split N-way across SMP and every
-//! fleet lane, fleet vs best-single-lane wall).
+//! fleet lane, fleet vs best-single-lane wall); [`cluster`] is the
+//! remote-lane sharding report (one invocation split across SMP and
+//! peer processes over TCP, with per-peer RTT percentiles).
 
+pub mod cluster;
 pub mod crypt;
 pub mod fleet;
 pub mod gpu;

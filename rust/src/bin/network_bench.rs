@@ -1,0 +1,170 @@
+//! `network_bench` — cluster-wire latency probe.
+//!
+//! Measures per-peer round-trip time through the cluster lane's real
+//! `Ping`/`Pong` frames (the same codepath the engine's heartbeats use),
+//! reporting p50/p95/p99 percentiles per peer.  Injected latency
+//! (`--delay-ms` on a peer, or `SOMD_CLUSTER_INJECT_DELAY_MS`) shows up
+//! directly in the percentiles, so the tool doubles as a WAN-simulation
+//! sanity check for `docs/CLUSTER.md`'s deadline guidance.
+//!
+//! ```text
+//! network_bench serve [--addr HOST:PORT] [--delay-ms MS]
+//! network_bench ping  --peers host:port[,host:port...] [--probes N]
+//! network_bench local [--peers N] [--probes N] [--delay-ms MS]
+//! ```
+//!
+//! * `serve` — host a minimal echo peer until killed (prints
+//!   `SOMD_CLUSTER_LISTENING <addr>` once bound);
+//! * `ping` — probe already-running peers;
+//! * `local` — self-spawn `--peers` echo peers on ephemeral localhost
+//!   ports, probe them, print the report, and kill them.
+//!
+//! Output: one JSON object (`schema: network_rtt/v1`) on stdout.
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use somd::somd::cluster::{ClusterClient, ClusterConfig, MethodHost, PeerServer, ServeOptions};
+use somd::util::cli::Args;
+use somd::util::json::Json;
+use somd::util::stats;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("serve") => serve(args),
+        Some("ping") => {
+            let peers: Vec<String> = args
+                .opt("peers")
+                .ok_or_else(|| anyhow!("ping needs --peers host:port[,host:port...]"))?
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let probes = args.opt_usize("probes", 100);
+            let report = probe_peers(&peers, probes)?;
+            println!("{}", report.dump());
+            Ok(())
+        }
+        Some("local") => local(args),
+        _ => {
+            eprintln!(
+                "usage: network_bench <serve|ping|local>\n\
+                 \x20 serve [--addr HOST:PORT] [--delay-ms MS]\n\
+                 \x20 ping  --peers host:port[,host:port...] [--probes N]\n\
+                 \x20 local [--peers N] [--probes N] [--delay-ms MS]"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Host a minimal echo peer forever (the probe target of `ping`/`local`).
+fn serve(args: &Args) -> Result<()> {
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:0");
+    let mut opts = ServeOptions::from_env();
+    if let Some(ms) = args.opt("delay-ms") {
+        opts.injected_delay = Duration::from_millis(ms.parse()?);
+    }
+    let host = Arc::new(
+        MethodHost::new("network-bench-echo")
+            .register("Echo.bytes", |payload, _span| Ok(payload.to_vec())),
+    );
+    let server = PeerServer::bind(addr, host, opts)?;
+    println!("SOMD_CLUSTER_LISTENING {}", server.addr());
+    loop {
+        std::thread::park();
+    }
+}
+
+/// Connect to each peer and measure ping RTT percentiles.
+fn probe_peers(peers: &[String], probes: usize) -> Result<Json> {
+    if peers.is_empty() {
+        bail!("no peers to probe");
+    }
+    let cfg = ClusterConfig::from_env();
+    let mut rows = Vec::new();
+    for addr in peers {
+        let client = ClusterClient::connect(addr, cfg)?;
+        client.ping()?; // warm the path, untimed
+        let mut ms = Vec::with_capacity(probes);
+        for _ in 0..probes.max(1) {
+            ms.push(client.ping()?.as_secs_f64() * 1e3);
+        }
+        let p = stats::percentiles(&ms);
+        let mut m = BTreeMap::new();
+        m.insert("peer".to_string(), Json::Str(format!("tcp://{addr}")));
+        m.insert("name".to_string(), Json::Str(client.peer_name().to_string()));
+        m.insert("n".to_string(), Json::Num(p.n as f64));
+        m.insert("p50_ms".to_string(), Json::Num(p.p50));
+        m.insert("p95_ms".to_string(), Json::Num(p.p95));
+        m.insert("p99_ms".to_string(), Json::Num(p.p99));
+        m.insert("max_ms".to_string(), Json::Num(p.max));
+        rows.push(Json::Obj(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("network_rtt/v1".to_string()));
+    top.insert("probes".to_string(), Json::Num(probes as f64));
+    top.insert("peers".to_string(), Json::Arr(rows));
+    Ok(Json::Obj(top))
+}
+
+/// Self-spawn echo peers, probe them, report, and tear them down.
+fn local(args: &Args) -> Result<()> {
+    let n = args.opt_usize("peers", 2).max(1);
+    let probes = args.opt_usize("probes", 100);
+    let delay = args.opt("delay-ms").unwrap_or("0").to_string();
+    let exe = std::env::current_exe().context("locate network_bench")?;
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("serve").arg("--addr").arg("127.0.0.1:0");
+        if delay != "0" {
+            cmd.arg("--delay-ms").arg(&delay);
+        }
+        cmd.stdout(Stdio::piped()).stderr(Stdio::null());
+        let mut child = cmd.spawn().context("spawn echo peer")?;
+        let stdout = child.stdout.take().ok_or_else(|| anyhow!("peer stdout not piped"))?;
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let addr = loop {
+            match lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(rest) = line.strip_prefix("SOMD_CLUSTER_LISTENING ") {
+                        break rest.trim().to_string();
+                    }
+                }
+                Some(Err(e)) => {
+                    let _ = child.kill();
+                    return Err(anyhow!("reading peer stdout: {e}"));
+                }
+                None => {
+                    let _ = child.kill();
+                    bail!("echo peer exited before announcing its address");
+                }
+            }
+        };
+        std::thread::spawn(move || for _ in lines {});
+        children.push(child);
+        addrs.push(addr);
+    }
+    let report = probe_peers(&addrs, probes);
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    println!("{}", report?.dump());
+    Ok(())
+}

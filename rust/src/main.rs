@@ -10,6 +10,9 @@
 //!                   [--min-items N] [--out FILE] [--tol T] [--smoke] [--check]
 //! somd bench serve  [--requests N] [--clients C] [--elems E] [--workers W]
 //!                   [--out FILE] [--tol T] [--smoke] [--check]
+//! somd bench cluster [--peers N] [--reps N] [--workers W] [--learn N]
+//!                    [--delay-ms MS] [--out FILE] [--smoke] [--check]
+//! somd cluster serve [--addr HOST:PORT] [--workers N] [--delay-ms MS] [--rules FILE]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
 //!          [--class A|B|C] [--scale S] [--partitions N]
 //!          [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]
@@ -17,17 +20,23 @@
 //! ```
 //!
 //! See `docs/BENCHMARKS.md` for every subcommand, report schema and
-//! environment knob.
+//! environment knob; `docs/CLUSTER.md` covers the cluster peer binary.
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use somd::bench_suite::cluster as bench_cluster;
 use somd::bench_suite::{
     crypt, fleet, gpu, harness, interp, lufact, modeled, serve, series, sor, sparse,
 };
 use somd::bench_suite::{Class, Sizes};
 use somd::device::{DeviceProfile, DeviceSession};
 use somd::runtime::Registry;
+use somd::somd::cluster::{PeerServer, ServeOptions};
 use somd::somd::grid::SharedGrid;
+use somd::somd::Engine;
 use somd::util::cli::Args;
 
 fn main() {
@@ -42,6 +51,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("info") => info(),
         Some("bench") => bench(args),
+        Some("cluster") => cluster_cmd(args),
         Some("run") => run(args),
         Some("e2e") => e2e(args),
         Some("version") => {
@@ -50,12 +60,14 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: somd <info|bench|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|fleet|serve> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                "usage: somd <info|bench|cluster|run|e2e|version> [...]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|fleet|serve|cluster> [--class A|B|C|all] [--scale S] [--reps N]\n\
                  \x20      somd bench interp [--reps N] [--out FILE] [--smoke] [--check]\n\
                  \x20      somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench fleet [--profiles p1,p2,...] [--reps N] [--workers W] [--learn N] [--min-items N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench serve [--requests N] [--clients C] [--elems E] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
+                 \x20      somd bench cluster [--peers N] [--reps N] [--workers W] [--learn N] [--delay-ms MS] [--out FILE] [--smoke] [--check]\n\
+                 cluster: somd cluster serve [--addr HOST:PORT] [--workers N] [--delay-ms MS] [--rules FILE]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
                  e2e:   somd e2e [--scale S]\n\
@@ -183,6 +195,32 @@ fn bench(args: &Args) -> Result<()> {
             let sweep = serve::SweepSpec { rates, requests, clients, elems, workers };
             serve::report(&sweep, out, args.flag("check"), tol)?;
         }
+        "cluster" => {
+            // cluster-lane sharding: one invocation split across the
+            // local SMP pool and spawned peer processes over localhost
+            // TCP; --check gates on real remote participation with zero
+            // degraded timed runs (bitwise equality against pure SMP is
+            // asserted inside the measurement on every run)
+            let smoke = args.flag("smoke");
+            let reps = if smoke { args.opt_usize("reps", 2) } else { reps };
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let workers = args.opt_usize("workers", cores.min(4));
+            let spec = bench_cluster::ClusterBenchSpec {
+                peers: args.opt_usize("peers", 2),
+                peer_workers: args.opt_usize("peer-workers", 1),
+                workers,
+                reps,
+                learn_rounds: args.opt_usize("learn", if smoke { 2 } else { 4 }),
+                min_device_items: args.opt_usize("min-items", 1),
+                delay_ms: args.opt_usize("delay-ms", 0) as u64,
+                rtt_probes: args.opt_usize("rtt-probes", if smoke { 20 } else { 50 }),
+                elems: args.opt_usize("elems", if smoke { 4_096 } else { 65_536 }),
+                blocks: args.opt_usize("blocks", if smoke { 2_048 } else { 16_384 }),
+            };
+            let out = args.opt("out").unwrap_or("BENCH_cluster.json");
+            bench_cluster::report(&spec, out, args.flag("check"))?;
+        }
         "auto" => {
             let reg = Registry::load_default()?;
             let profile = DeviceProfile::by_name(args.opt("profile").unwrap_or("fermi"))
@@ -194,6 +232,45 @@ fn bench(args: &Args) -> Result<()> {
         other => bail!("unknown bench target '{other}'"),
     }
     Ok(())
+}
+
+/// `somd cluster serve`: host the standard method set as a cluster peer
+/// until killed.  Binds `--addr` (default `127.0.0.1:0`), prints
+/// `SOMD_CLUSTER_LISTENING <addr>` once ready (the spawn contract the
+/// bench and the integration tests parse), and serves every connection
+/// through a full local [`Engine`] — so this peer itself resolves each
+/// span through its own `--rules` (SMP by default).
+fn cluster_cmd(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("serve") => {
+            let addr = args.opt("addr").unwrap_or("127.0.0.1:0");
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let workers = args.opt_usize("workers", cores);
+            let rules = match args.opt("rules") {
+                Some(path) => somd::somd::Rules::load(std::path::Path::new(path))
+                    .map_err(|e| anyhow!(e))?,
+                None => somd::somd::Rules::empty(),
+            };
+            let mut opts = ServeOptions::from_env();
+            if let Some(ms) = args.opt("delay-ms") {
+                opts.injected_delay = Duration::from_millis(ms.parse()?);
+            }
+            let engine = Arc::new(Engine::with_rules(workers, rules));
+            let host = Arc::new(bench_cluster::standard_host(engine));
+            let server = PeerServer::bind(addr, host, opts)?;
+            println!("SOMD_CLUSTER_LISTENING {}", server.addr());
+            loop {
+                // the accept loop and per-connection threads do the work;
+                // the main thread just keeps the process alive
+                std::thread::park();
+            }
+        }
+        _ => bail!(
+            "usage: somd cluster serve [--addr HOST:PORT] [--workers N] [--delay-ms MS] \
+             [--rules FILE]"
+        ),
+    }
 }
 
 fn run(args: &Args) -> Result<()> {

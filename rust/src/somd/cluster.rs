@@ -1,4 +1,5 @@
-//! Cluster realization of SOMD (paper §4.2), as a *model*.
+//! Cluster realization of SOMD (paper §4.2): a modeled cost structure
+//! *and* a real TCP shared-nothing lane.
 //!
 //! The paper defers distributed-memory evaluation to future work but
 //! specifies the execution model precisely: distributed arrays are
@@ -8,12 +9,28 @@
 //! every MI works on node-local data unless sharing is explicit, so
 //! undistributed parameters are *replicated* to every node.
 //!
-//! This module implements that cost structure over a simulated
-//! interconnect, composing with the calibrated intra-node makespan model
-//! ([`crate::bench_suite::modeled`]): no cluster exists here, so network
-//! time is virtual, but the work times it combines are measured.
+//! The first half of this module implements that cost structure over a
+//! simulated interconnect, composing with the calibrated intra-node
+//! makespan model ([`crate::bench_suite::modeled`]).  The second half
+//! makes the lane real: a length-prefixed binary protocol ([`wire`]), a
+//! [`ClusterClient`] the engine registers as a remote fleet lane, and a
+//! [`PeerServer`] that hosts method handlers (the `somd cluster serve`
+//! peer binary backs them with a full local [`Engine`](super::Engine),
+//! so a remote peer can itself be SMP, device, or hybrid inside).  Wire
+//! frames carry *span + input bytes* out and *partial-result bytes*
+//! back — the same `distribute → compute partials → rank-order reduce`
+//! contract as every other lane, stretched across a socket.
 
-use std::time::Duration;
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::distribution::Range1;
 
 /// Point-to-point interconnect model: `t(bytes) = latency + bytes/bw`.
 #[derive(Debug, Clone, Copy)]
@@ -142,6 +159,824 @@ pub fn hierarchical_ranges(
         .collect()
 }
 
+// ======================================================================
+// The real lane: wire protocol, client, peer server.
+// ======================================================================
+
+/// Length-prefixed binary wire protocol of the cluster lane.
+///
+/// Every message is one frame: `[u8 kind][u32 payload_len LE][payload]`.
+/// Integers are little-endian; strings and byte blobs are `u32` length
+/// followed by raw bytes (strings are UTF-8).  The frame kinds:
+///
+/// | kind | message    | payload |
+/// |------|------------|---------|
+/// | 1    | `Hello`    | `u32 version`, `str name` |
+/// | 2    | `HelloAck` | `u32 version`, `str name`, `u32 workers` |
+/// | 3    | `Submit`   | `u64 id`, `str method`, `u64 span_lo`, `u64 span_hi`, `u32 deadline_ms`, `bytes input` |
+/// | 4    | `Partial`  | `u64 id`, `f64 compute_secs`, `bytes payload` |
+/// | 5    | `Error`    | `u64 id`, `str message` |
+/// | 6    | `Ping`     | `u64 nonce` |
+/// | 7    | `Pong`     | `u64 nonce` |
+///
+/// The codec is hand-rolled (the vendor set has no serde); frames above
+/// [`MAX_FRAME_BYTES`] are rejected on both ends so a corrupt length
+/// prefix cannot OOM a peer.  Full layout and lifecycle docs:
+/// `docs/CLUSTER.md`.
+pub mod wire {
+    use std::io::Read;
+
+    use anyhow::{bail, ensure, Result};
+
+    /// Protocol version carried in `Hello`/`HelloAck` (mismatch = refuse).
+    pub const PROTO_VERSION: u32 = 1;
+    /// Frame header size: 1 kind byte + 4 length bytes.
+    pub const HEADER_BYTES: usize = 5;
+    /// Upper bound on one frame's payload (guards the length prefix).
+    pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+    /// One decoded protocol message.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Frame {
+        /// Client → peer greeting.
+        Hello {
+            /// Protocol version the client speaks.
+            version: u32,
+            /// Client's self-chosen name (diagnostics only).
+            name: String,
+        },
+        /// Peer → client capability advertisement.
+        HelloAck {
+            /// Protocol version the peer speaks.
+            version: u32,
+            /// Peer's name (shows up as the lane label).
+            name: String,
+            /// Worker threads behind the peer's local engine.
+            workers: u32,
+        },
+        /// Client → peer: compute one span of one method.
+        Submit {
+            /// Request id (echoed back in `Partial`/`Error`).
+            id: u64,
+            /// Method name, e.g. `"VecAdd.add"`.
+            method: String,
+            /// Span start (inclusive), in index-space items.
+            lo: u64,
+            /// Span end (exclusive).
+            hi: u64,
+            /// Client-side deadline, advisory for the peer.
+            deadline_ms: u32,
+            /// Method-specific encoding of the span's input.
+            input: Vec<u8>,
+        },
+        /// Peer → client: a span's partial result.
+        Partial {
+            /// Request id this answers.
+            id: u64,
+            /// Peer-side compute seconds (excludes network time).
+            secs: f64,
+            /// Method-specific encoding of the partial result.
+            payload: Vec<u8>,
+        },
+        /// Peer → client: a span failed remotely.
+        Error {
+            /// Request id this answers.
+            id: u64,
+            /// Human-readable failure description.
+            message: String,
+        },
+        /// Heartbeat / RTT probe.
+        Ping {
+            /// Correlator echoed back in `Pong` (0 = keepalive, no waiter).
+            nonce: u64,
+        },
+        /// Heartbeat / RTT probe reply.
+        Pong {
+            /// The `Ping`'s correlator.
+            nonce: u64,
+        },
+    }
+
+    impl Frame {
+        fn kind(&self) -> u8 {
+            match self {
+                Frame::Hello { .. } => 1,
+                Frame::HelloAck { .. } => 2,
+                Frame::Submit { .. } => 3,
+                Frame::Partial { .. } => 4,
+                Frame::Error { .. } => 5,
+                Frame::Ping { .. } => 6,
+                Frame::Pong { .. } => 7,
+            }
+        }
+
+        /// Serialize to one on-wire frame (header + payload).
+        pub fn encode(&self) -> Vec<u8> {
+            let mut p = Vec::new();
+            match self {
+                Frame::Hello { version, name } => {
+                    put_u32(&mut p, *version);
+                    put_str(&mut p, name);
+                }
+                Frame::HelloAck { version, name, workers } => {
+                    put_u32(&mut p, *version);
+                    put_str(&mut p, name);
+                    put_u32(&mut p, *workers);
+                }
+                Frame::Submit { id, method, lo, hi, deadline_ms, input } => {
+                    put_u64(&mut p, *id);
+                    put_str(&mut p, method);
+                    put_u64(&mut p, *lo);
+                    put_u64(&mut p, *hi);
+                    put_u32(&mut p, *deadline_ms);
+                    put_bytes(&mut p, input);
+                }
+                Frame::Partial { id, secs, payload } => {
+                    put_u64(&mut p, *id);
+                    put_f64(&mut p, *secs);
+                    put_bytes(&mut p, payload);
+                }
+                Frame::Error { id, message } => {
+                    put_u64(&mut p, *id);
+                    put_str(&mut p, message);
+                }
+                Frame::Ping { nonce } | Frame::Pong { nonce } => put_u64(&mut p, *nonce),
+            }
+            let mut out = Vec::with_capacity(HEADER_BYTES + p.len());
+            out.push(self.kind());
+            out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            out.extend_from_slice(&p);
+            out
+        }
+
+        /// Decode one frame from its kind byte and payload.
+        pub fn decode(kind: u8, payload: &[u8]) -> Result<Frame> {
+            let mut c = Cursor { buf: payload, pos: 0 };
+            let f = match kind {
+                1 => Frame::Hello { version: c.u32()?, name: c.str_()? },
+                2 => Frame::HelloAck { version: c.u32()?, name: c.str_()?, workers: c.u32()? },
+                3 => Frame::Submit {
+                    id: c.u64()?,
+                    method: c.str_()?,
+                    lo: c.u64()?,
+                    hi: c.u64()?,
+                    deadline_ms: c.u32()?,
+                    input: c.bytes()?,
+                },
+                4 => Frame::Partial { id: c.u64()?, secs: c.f64()?, payload: c.bytes()? },
+                5 => Frame::Error { id: c.u64()?, message: c.str_()? },
+                6 => Frame::Ping { nonce: c.u64()? },
+                7 => Frame::Pong { nonce: c.u64()? },
+                k => bail!("unknown frame kind {k}"),
+            };
+            ensure!(c.pos == payload.len(), "trailing bytes in frame kind {kind}");
+            Ok(f)
+        }
+    }
+
+    fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_f64(out: &mut Vec<u8>, v: f64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+        put_u32(out, b.len() as u32);
+        out.extend_from_slice(b);
+    }
+
+    fn put_str(out: &mut Vec<u8>, s: &str) {
+        put_bytes(out, s.as_bytes());
+    }
+
+    struct Cursor<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl Cursor<'_> {
+        fn take(&mut self, n: usize) -> Result<&[u8]> {
+            ensure!(self.pos + n <= self.buf.len(), "truncated frame");
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        fn u32(&mut self) -> Result<u32> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+
+        fn u64(&mut self) -> Result<u64> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        fn f64(&mut self) -> Result<f64> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        fn bytes(&mut self) -> Result<Vec<u8>> {
+            let n = self.u32()? as usize;
+            Ok(self.take(n)?.to_vec())
+        }
+
+        fn str_(&mut self) -> Result<String> {
+            Ok(String::from_utf8(self.bytes()?)?)
+        }
+    }
+
+    /// Incremental frame reader over any byte stream.
+    ///
+    /// Accumulates partial reads in an internal buffer, so it is safe to
+    /// drive from a socket with a read timeout: a frame split across
+    /// timeout ticks is reassembled, never dropped.  [`FrameReader::next`]
+    /// returns `Ok(None)` on a timeout tick (the caller's chance to sweep
+    /// deadlines or send a heartbeat) and `Err` on EOF or a socket error.
+    pub struct FrameReader<R: Read> {
+        stream: R,
+        buf: Vec<u8>,
+    }
+
+    impl<R: Read> FrameReader<R> {
+        /// Wrap a byte stream.
+        pub fn new(stream: R) -> Self {
+            FrameReader { stream, buf: Vec::new() }
+        }
+
+        /// Next decoded frame; `Ok(None)` on a read-timeout tick.
+        pub fn next(&mut self) -> Result<Option<Frame>> {
+            loop {
+                if let Some((kind, payload)) = self.take_frame()? {
+                    return Ok(Some(Frame::decode(kind, &payload)?));
+                }
+                let mut chunk = [0u8; 64 * 1024];
+                match self.stream.read(&mut chunk) {
+                    Ok(0) => bail!("peer closed the connection"),
+                    Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        return Ok(None)
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+
+        fn take_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>> {
+            if self.buf.len() < HEADER_BYTES {
+                return Ok(None);
+            }
+            let kind = self.buf[0];
+            let len = u32::from_le_bytes(self.buf[1..5].try_into().unwrap()) as usize;
+            ensure!(len <= MAX_FRAME_BYTES, "oversized frame: {len} bytes");
+            if self.buf.len() < HEADER_BYTES + len {
+                return Ok(None);
+            }
+            let payload = self.buf[HEADER_BYTES..HEADER_BYTES + len].to_vec();
+            self.buf.drain(..HEADER_BYTES + len);
+            Ok(Some((kind, payload)))
+        }
+    }
+}
+
+/// Timing knobs of the cluster lane (all settable via `SOMD_CLUSTER_*`
+/// environment variables, see [`ClusterConfig::from_env`] and
+/// `docs/CLUSTER.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    /// TCP connect + handshake timeout.
+    pub connect_timeout: Duration,
+    /// Per-submit deadline: a span unanswered past this is treated as a
+    /// failed lane and covered by SMP partials.
+    pub deadline: Duration,
+    /// Keepalive ping interval (zero disables heartbeats).
+    pub heartbeat: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            connect_timeout: Duration::from_millis(2_000),
+            deadline: Duration::from_millis(10_000),
+            heartbeat: Duration::from_millis(1_000),
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Defaults overridden by `SOMD_CLUSTER_CONNECT_TIMEOUT_MS`,
+    /// `SOMD_CLUSTER_DEADLINE_MS` and `SOMD_CLUSTER_HEARTBEAT_MS`.
+    pub fn from_env() -> Self {
+        let mut cfg = ClusterConfig::default();
+        if let Some(ms) = env_ms("SOMD_CLUSTER_CONNECT_TIMEOUT_MS") {
+            cfg.connect_timeout = ms;
+        }
+        if let Some(ms) = env_ms("SOMD_CLUSTER_DEADLINE_MS") {
+            cfg.deadline = ms;
+        }
+        if let Some(ms) = env_ms("SOMD_CLUSTER_HEARTBEAT_MS") {
+            cfg.heartbeat = ms;
+        }
+        cfg
+    }
+}
+
+fn env_ms(var: &str) -> Option<Duration> {
+    std::env::var(var).ok()?.trim().parse::<u64>().ok().map(Duration::from_millis)
+}
+
+/// A completed remote share: the method-specific partial-result bytes
+/// plus the peer's self-reported compute seconds.
+#[derive(Debug, Clone)]
+pub struct RemotePartial {
+    /// Encoded partial result (decoded by the method's `ClusterSpec`).
+    pub payload: Vec<u8>,
+    /// Peer-side compute seconds (excludes network time).
+    pub secs: f64,
+}
+
+/// Completion callback of one [`ClusterClient::submit`].
+pub type RemoteCallback = Box<dyn FnOnce(Result<RemotePartial>) + Send>;
+
+struct PendingSubmit {
+    done: RemoteCallback,
+    deadline: Instant,
+}
+
+struct ClientShared {
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, PendingSubmit>>,
+    pings: Mutex<HashMap<u64, mpsc::Sender<()>>>,
+    alive: AtomicBool,
+}
+
+impl ClientShared {
+    fn send(&self, frame: &wire::Frame) -> Result<()> {
+        let bytes = frame.encode();
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&bytes).context("cluster peer write")
+    }
+
+    /// Mark the connection dead and fail every in-flight submit.
+    fn poison(&self, why: &str) {
+        self.alive.store(false, Ordering::SeqCst);
+        let drained: Vec<PendingSubmit> =
+            { self.pending.lock().unwrap().drain().map(|(_, p)| p).collect() };
+        for p in drained {
+            (p.done)(Err(anyhow!("cluster peer lost: {why}")));
+        }
+        self.pings.lock().unwrap().clear();
+    }
+}
+
+/// Client half of the cluster lane: one TCP connection to one peer,
+/// registered with the engine as a remote fleet lane.
+///
+/// Submits are asynchronous — the callback runs on the client's reader
+/// thread when the `Partial`/`Error` frame arrives, when the per-submit
+/// deadline expires, or (with an error) immediately if the connection is
+/// already dead, so the engine's completion latch always counts down.
+pub struct ClusterClient {
+    shared: Arc<ClientShared>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+    next_id: AtomicU64,
+    cfg: ClusterConfig,
+    addr: String,
+    peer_name: String,
+    peer_workers: u32,
+}
+
+impl ClusterClient {
+    /// Connect to a peer and complete the `Hello`/`HelloAck` handshake.
+    pub fn connect(addr: &str, cfg: ClusterConfig) -> Result<ClusterClient> {
+        let sock_addr: SocketAddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve cluster peer {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("cluster peer {addr} resolved to nothing"))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, cfg.connect_timeout)
+            .with_context(|| format!("connect cluster peer {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().context("clone cluster stream")?;
+        writer.set_write_timeout(Some(cfg.connect_timeout.max(cfg.deadline))).ok();
+
+        // handshake under the connect timeout, then switch to the short
+        // tick the reader loop sweeps deadlines on
+        stream.set_read_timeout(Some(cfg.connect_timeout)).ok();
+        let mut frames = wire::FrameReader::new(stream);
+        let shared = Arc::new(ClientShared {
+            writer: Mutex::new(writer),
+            pending: Mutex::new(HashMap::new()),
+            pings: Mutex::new(HashMap::new()),
+            alive: AtomicBool::new(true),
+        });
+        shared.send(&wire::Frame::Hello {
+            version: wire::PROTO_VERSION,
+            name: format!("somd-client-{}", std::process::id()),
+        })?;
+        let (peer_name, peer_workers) = match frames.next()? {
+            Some(wire::Frame::HelloAck { version, name, workers }) => {
+                ensure!(
+                    version == wire::PROTO_VERSION,
+                    "cluster peer {addr} speaks protocol v{version}, want v{}",
+                    wire::PROTO_VERSION
+                );
+                (name, workers)
+            }
+            Some(f) => bail!("cluster peer {addr} answered hello with {f:?}"),
+            None => bail!("cluster peer {addr} handshake timed out"),
+        };
+        // the reader and writer clones share one socket, so the short
+        // tick set here governs the reader loop's deadline sweeps
+        shared.writer.lock().unwrap().set_read_timeout(Some(READ_TICK)).ok();
+
+        let reader_shared = shared.clone();
+        let heartbeat = cfg.heartbeat;
+        let reader = std::thread::Builder::new()
+            .name(format!("somd-cluster-{addr}"))
+            .spawn(move || client_reader_loop(frames, &reader_shared, heartbeat))
+            .context("spawn cluster reader")?;
+
+        Ok(ClusterClient {
+            shared,
+            reader: Mutex::new(Some(reader)),
+            next_id: AtomicU64::new(1),
+            cfg,
+            addr: addr.to_string(),
+            peer_name,
+            peer_workers,
+        })
+    }
+
+    /// The address this client connected to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The peer's self-reported name.
+    pub fn peer_name(&self) -> &str {
+        &self.peer_name
+    }
+
+    /// Worker threads behind the peer's local engine (capability advert).
+    pub fn peer_workers(&self) -> u32 {
+        self.peer_workers
+    }
+
+    /// Whether the connection is still usable (a dead client fails
+    /// submits fast so the engine covers the span synchronously).
+    pub fn is_alive(&self) -> bool {
+        self.shared.alive.load(Ordering::SeqCst)
+    }
+
+    /// Submit one span; `on_done` fires exactly once with the partial or
+    /// an error (remote failure, dropped connection, or expired
+    /// deadline).  Returns `Err` *without consuming the callback's turn*
+    /// only when the submit could not be sent at all — the caller covers
+    /// the span itself in that case.
+    pub fn submit(
+        &self,
+        method: &str,
+        span: Range1,
+        input: Vec<u8>,
+        on_done: RemoteCallback,
+    ) -> Result<()> {
+        if !self.is_alive() {
+            bail!("cluster peer {} is down", self.addr);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        // register before sending: a fast peer must find the callback
+        self.shared.pending.lock().unwrap().insert(
+            id,
+            PendingSubmit { done: on_done, deadline: Instant::now() + self.cfg.deadline },
+        );
+        let frame = wire::Frame::Submit {
+            id,
+            method: method.to_string(),
+            lo: span.lo as u64,
+            hi: span.hi as u64,
+            deadline_ms: self.cfg.deadline.as_millis().min(u32::MAX as u128) as u32,
+            input,
+        };
+        if let Err(e) = self.shared.send(&frame) {
+            // If a concurrent `poison` (reader died first) already drained
+            // this entry, the callback has fired — returning `Err` too
+            // would make the caller fail the same shard twice.
+            let had = self.shared.pending.lock().unwrap().remove(&id).is_some();
+            self.shared.poison("send failed");
+            if had {
+                return Err(e);
+            }
+            return Ok(());
+        }
+        Ok(())
+    }
+
+    /// Round-trip time of one `Ping`/`Pong` exchange.
+    pub fn ping(&self) -> Result<Duration> {
+        ensure!(self.is_alive(), "cluster peer {} is down", self.addr);
+        let nonce = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        self.shared.pings.lock().unwrap().insert(nonce, tx);
+        let t0 = Instant::now();
+        let sent = self.shared.send(&wire::Frame::Ping { nonce });
+        if let Err(e) = sent {
+            self.shared.pings.lock().unwrap().remove(&nonce);
+            return Err(e);
+        }
+        match rx.recv_timeout(self.cfg.deadline) {
+            Ok(()) => Ok(t0.elapsed()),
+            Err(_) => {
+                self.shared.pings.lock().unwrap().remove(&nonce);
+                bail!("ping to {} timed out", self.addr)
+            }
+        }
+    }
+}
+
+impl Drop for ClusterClient {
+    fn drop(&mut self) {
+        self.shared.poison("client dropped");
+        // unblock the reader's socket wait, then join it
+        if let Ok(w) = self.shared.writer.lock() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn client_reader_loop(
+    mut frames: wire::FrameReader<TcpStream>,
+    shared: &ClientShared,
+    heartbeat: Duration,
+) {
+    let mut last_beat = Instant::now();
+    loop {
+        if !shared.alive.load(Ordering::SeqCst) {
+            return;
+        }
+        match frames.next() {
+            Ok(Some(wire::Frame::Partial { id, secs, payload })) => {
+                // an answer past its deadline finds no pending entry and
+                // is dropped — the span was already covered
+                if let Some(p) = shared.pending.lock().unwrap().remove(&id) {
+                    (p.done)(Ok(RemotePartial { payload, secs }));
+                }
+            }
+            Ok(Some(wire::Frame::Error { id, message })) => {
+                if let Some(p) = shared.pending.lock().unwrap().remove(&id) {
+                    (p.done)(Err(anyhow!("remote error: {message}")));
+                }
+            }
+            Ok(Some(wire::Frame::Pong { nonce })) => {
+                if let Some(tx) = shared.pings.lock().unwrap().remove(&nonce) {
+                    let _ = tx.send(());
+                }
+            }
+            Ok(Some(_)) => {} // unexpected but harmless (e.g. stray Ping)
+            Ok(None) => {
+                // timeout tick: sweep expired deadlines…
+                let now = Instant::now();
+                let expired: Vec<PendingSubmit> = {
+                    let mut p = shared.pending.lock().unwrap();
+                    let ids: Vec<u64> =
+                        p.iter().filter(|(_, v)| v.deadline <= now).map(|(k, _)| *k).collect();
+                    ids.into_iter().filter_map(|id| p.remove(&id)).collect()
+                };
+                for p in expired {
+                    (p.done)(Err(anyhow!("cluster deadline expired")));
+                }
+                // …and keep the connection warm
+                if !heartbeat.is_zero() && last_beat.elapsed() >= heartbeat {
+                    last_beat = now;
+                    if shared.send(&wire::Frame::Ping { nonce: 0 }).is_err() {
+                        shared.poison("heartbeat write failed");
+                        return;
+                    }
+                }
+            }
+            Err(e) => {
+                shared.poison(&e.to_string());
+                return;
+            }
+        }
+    }
+}
+
+/// The short read-timeout the client reader ticks on between frames.
+const READ_TICK: Duration = Duration::from_millis(25);
+
+/// A method handler a peer hosts: raw input bytes + the span to compute
+/// → raw partial-result bytes.  The encoding is method-specific and must
+/// match the client side's `ClusterSpec` codecs.
+pub type HostFn = Box<dyn Fn(&[u8], Range1) -> Result<Vec<u8>> + Send + Sync>;
+
+/// The set of methods one peer serves, plus its capability advert.
+///
+/// The `somd cluster serve` binary builds one of these over a full local
+/// [`Engine`](super::Engine) (each handler decodes the span input, runs
+/// the method through the engine — which may itself resolve to SMP,
+/// device, or hybrid — and encodes the partial back); tests build
+/// smaller ones over plain closures.
+pub struct MethodHost {
+    name: String,
+    workers: u32,
+    methods: std::collections::BTreeMap<String, HostFn>,
+}
+
+impl MethodHost {
+    /// An empty host advertising `name`.
+    pub fn new(name: impl Into<String>) -> Self {
+        MethodHost { name: name.into(), workers: 1, methods: Default::default() }
+    }
+
+    /// Set the advertised worker count.
+    pub fn with_workers(mut self, workers: u32) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Register a handler for `method`.
+    pub fn register(
+        mut self,
+        method: impl Into<String>,
+        f: impl Fn(&[u8], Range1) -> Result<Vec<u8>> + Send + Sync + 'static,
+    ) -> Self {
+        self.methods.insert(method.into(), Box::new(f));
+        self
+    }
+
+    /// The registered method names.
+    pub fn method_names(&self) -> Vec<&str> {
+        self.methods.keys().map(String::as_str).collect()
+    }
+
+    fn call(&self, method: &str, input: &[u8], span: Range1) -> Result<Vec<u8>> {
+        let f = self
+            .methods
+            .get(method)
+            .ok_or_else(|| anyhow!("peer does not host method {method:?}"))?;
+        f(input, span)
+    }
+}
+
+/// Serving knobs of a peer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeOptions {
+    /// Artificial delay before every reply (WAN simulation; also how the
+    /// kill-mid-run test holds a span in flight).  `SOMD_CLUSTER_INJECT_DELAY_MS`.
+    pub injected_delay: Duration,
+}
+
+impl ServeOptions {
+    /// Defaults overridden by `SOMD_CLUSTER_INJECT_DELAY_MS`.
+    pub fn from_env() -> Self {
+        ServeOptions {
+            injected_delay: env_ms("SOMD_CLUSTER_INJECT_DELAY_MS").unwrap_or(Duration::ZERO),
+        }
+    }
+}
+
+/// Server half of the cluster lane: accepts connections and answers
+/// `Submit`s with the hosted methods.  Each connection gets its own
+/// handler thread; each submit computes on its own thread so a slow span
+/// never blocks the connection's frame loop.
+pub struct PeerServer {
+    addr: SocketAddr,
+}
+
+impl PeerServer {
+    /// Bind `addr` (may be `host:0` for an ephemeral port) and serve in
+    /// background threads for the rest of the process lifetime.
+    pub fn bind(addr: &str, host: Arc<MethodHost>, opts: ServeOptions) -> Result<PeerServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        std::thread::Builder::new()
+            .name("somd-cluster-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    match conn {
+                        Ok(stream) => {
+                            let host = host.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("somd-cluster-conn".into())
+                                .spawn(move || handle_conn(stream, &host, opts));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawn accept loop")?;
+        Ok(PeerServer { addr: local })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+fn handle_conn(stream: TcpStream, host: &Arc<MethodHost>, opts: ServeOptions) {
+    stream.set_nodelay(true).ok();
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let send = |w: &Arc<Mutex<TcpStream>>, frame: &wire::Frame| -> bool {
+        let bytes = frame.encode();
+        w.lock().unwrap().write_all(&bytes).is_ok()
+    };
+    let mut frames = wire::FrameReader::new(stream);
+    loop {
+        let frame = match frames.next() {
+            Ok(Some(f)) => f,
+            Ok(None) => continue, // no read timeout set on the server side
+            Err(_) => return,     // client went away
+        };
+        match frame {
+            wire::Frame::Hello { version, .. } => {
+                let ack = if version == wire::PROTO_VERSION {
+                    wire::Frame::HelloAck {
+                        version: wire::PROTO_VERSION,
+                        name: host.name.clone(),
+                        workers: host.workers,
+                    }
+                } else {
+                    wire::Frame::Error {
+                        id: 0,
+                        message: format!(
+                            "protocol v{version} not supported (peer speaks v{})",
+                            wire::PROTO_VERSION
+                        ),
+                    }
+                };
+                if !send(&writer, &ack) {
+                    return;
+                }
+            }
+            wire::Frame::Ping { nonce } => {
+                let w = writer.clone();
+                let delay = opts.injected_delay;
+                let reply = move || {
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
+                    let _ = w.lock().unwrap().write_all(&wire::Frame::Pong { nonce }.encode());
+                };
+                if delay.is_zero() {
+                    reply();
+                } else {
+                    let _ = std::thread::Builder::new().spawn(reply);
+                }
+            }
+            wire::Frame::Submit { id, method, lo, hi, input, .. } => {
+                let host = host.clone();
+                let w = writer.clone();
+                let delay = opts.injected_delay;
+                let _ = std::thread::Builder::new().name("somd-cluster-span".into()).spawn(
+                    move || {
+                        let t0 = Instant::now();
+                        let span = Range1::new(lo as usize, hi as usize);
+                        let reply = match std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| host.call(&method, &input, span)),
+                        ) {
+                            Ok(Ok(payload)) => {
+                                wire::Frame::Partial { id, secs: t0.elapsed().as_secs_f64(), payload }
+                            }
+                            Ok(Err(e)) => wire::Frame::Error { id, message: format!("{e:#}") },
+                            Err(_) => wire::Frame::Error {
+                                id,
+                                message: format!("panic computing {method:?}"),
+                            },
+                        };
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        let _ = w.lock().unwrap().write_all(&reply.encode());
+                    },
+                );
+            }
+            // clients never receive these; a confused peer is ignored
+            wire::Frame::HelloAck { .. }
+            | wire::Frame::Partial { .. }
+            | wire::Frame::Error { .. }
+            | wire::Frame::Pong { .. } => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,5 +1073,170 @@ mod tests {
         // crypt crosses over: more nodes eventually stop helping
         let max = crypt_speedups.iter().cloned().fold(0.0, f64::max);
         assert!(*crypt_speedups.last().unwrap() < max, "{crypt_speedups:?}");
+    }
+
+    // --- wire protocol + live-socket suite -------------------------------
+
+    #[test]
+    fn wire_frames_round_trip_through_a_byte_stream() {
+        let frames = vec![
+            wire::Frame::Hello { version: 1, name: "c".into() },
+            wire::Frame::HelloAck { version: 1, name: "peer-a".into(), workers: 8 },
+            wire::Frame::Submit {
+                id: 7,
+                method: "VecAdd.add".into(),
+                lo: 10,
+                hi: 250,
+                deadline_ms: 5_000,
+                input: vec![1, 2, 3, 255],
+            },
+            wire::Frame::Partial { id: 7, secs: 0.125, payload: vec![9; 300] },
+            wire::Frame::Error { id: 8, message: "no such method".into() },
+            wire::Frame::Ping { nonce: 42 },
+            wire::Frame::Pong { nonce: 42 },
+        ];
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&f.encode());
+        }
+        let mut reader = wire::FrameReader::new(std::io::Cursor::new(bytes));
+        for want in &frames {
+            let got = reader.next().expect("frame reads").expect("frame present");
+            assert_eq!(&got, want);
+        }
+    }
+
+    #[test]
+    fn wire_reader_rejects_oversized_and_truncated_frames() {
+        // corrupt length prefix: must error out, not try to allocate 2 GiB
+        let mut bytes = vec![4u8];
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut reader = wire::FrameReader::new(std::io::Cursor::new(bytes));
+        assert!(reader.next().is_err());
+
+        // truncated payload: decoding must fail cleanly
+        let good = wire::Frame::Error { id: 1, message: "x".into() }.encode();
+        assert!(wire::Frame::decode(5, &good[wire::HEADER_BYTES..good.len() - 1]).is_err());
+    }
+
+    fn doubling_host() -> Arc<MethodHost> {
+        Arc::new(MethodHost::new("test-peer").with_workers(4).register(
+            "Test.double",
+            |input: &[u8], span: Range1| {
+                anyhow::ensure!(span.len() == input.len(), "span/input mismatch");
+                Ok(input.iter().map(|b| b.wrapping_mul(2)).collect())
+            },
+        ))
+    }
+
+    #[test]
+    fn loopback_submit_round_trips_and_pings() {
+        let server =
+            PeerServer::bind("127.0.0.1:0", doubling_host(), ServeOptions::default()).unwrap();
+        let client =
+            ClusterClient::connect(&server.addr().to_string(), ClusterConfig::default()).unwrap();
+        assert_eq!(client.peer_name(), "test-peer");
+        assert_eq!(client.peer_workers(), 4);
+        assert!(client.is_alive());
+
+        let (tx, rx) = mpsc::channel();
+        client
+            .submit(
+                "Test.double",
+                Range1::new(0, 4),
+                vec![1, 2, 3, 100],
+                Box::new(move |r| tx.send(r).unwrap()),
+            )
+            .unwrap();
+        let partial = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(partial.payload, vec![2, 4, 6, 200]);
+        assert!(partial.secs >= 0.0);
+
+        let rtt = client.ping().expect("pong comes back");
+        assert!(rtt < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn unknown_method_comes_back_as_a_remote_error() {
+        let server =
+            PeerServer::bind("127.0.0.1:0", doubling_host(), ServeOptions::default()).unwrap();
+        let client =
+            ClusterClient::connect(&server.addr().to_string(), ClusterConfig::default()).unwrap();
+        let (tx, rx) = mpsc::channel();
+        client
+            .submit("No.such", Range1::new(0, 1), vec![0], Box::new(move |r| tx.send(r).unwrap()))
+            .unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.to_string().contains("No.such"), "{err:#}");
+    }
+
+    #[test]
+    fn deadline_expiry_fails_the_span_without_killing_the_client() {
+        // the peer holds every reply for 10 s; a 150 ms deadline must fire
+        let opts = ServeOptions { injected_delay: Duration::from_secs(10) };
+        let server = PeerServer::bind("127.0.0.1:0", doubling_host(), opts).unwrap();
+        let cfg = ClusterConfig {
+            deadline: Duration::from_millis(150),
+            heartbeat: Duration::ZERO,
+            ..ClusterConfig::default()
+        };
+        let client = ClusterClient::connect(&server.addr().to_string(), cfg).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        client
+            .submit(
+                "Test.double",
+                Range1::new(0, 2),
+                vec![1, 2],
+                Box::new(move |r| tx.send(r).unwrap()),
+            )
+            .unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err:#}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline must beat the slow reply");
+        // the connection itself stays usable for later submits
+        assert!(client.is_alive());
+    }
+
+    #[test]
+    fn dropped_connection_fails_pending_submits() {
+        // a plain listener that accepts and immediately drops the socket
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            // answer the handshake, then hang up with a submit in flight
+            let (stream, _) = listener.accept().unwrap();
+            let mut frames = wire::FrameReader::new(stream.try_clone().unwrap());
+            let mut stream = stream;
+            loop {
+                match frames.next() {
+                    Ok(Some(wire::Frame::Hello { .. })) => {
+                        let ack = wire::Frame::HelloAck {
+                            version: wire::PROTO_VERSION,
+                            name: "flaky".into(),
+                            workers: 1,
+                        };
+                        stream.write_all(&ack.encode()).unwrap();
+                    }
+                    Ok(Some(wire::Frame::Submit { .. })) => return, // drop the connection
+                    Ok(Some(_)) => {}
+                    Ok(None) => {}
+                    Err(_) => return,
+                }
+            }
+        });
+        let cfg = ClusterConfig { heartbeat: Duration::ZERO, ..ClusterConfig::default() };
+        let client = ClusterClient::connect(&addr.to_string(), cfg).unwrap();
+        let (tx, rx) = mpsc::channel();
+        client
+            .submit("Any.m", Range1::new(0, 1), vec![0], Box::new(move |r| tx.send(r).unwrap()))
+            .unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.to_string().contains("peer lost"), "{err:#}");
+        assert!(!client.is_alive());
+        // further submits fail fast so the engine covers synchronously
+        assert!(client
+            .submit("Any.m", Range1::new(0, 1), vec![0], Box::new(|_| {}))
+            .is_err());
     }
 }

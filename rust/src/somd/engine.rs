@@ -28,6 +28,17 @@
 //!   at the scheduler's learned per-lane weights
 //!   ([`split_weighted_floor`]), joined by the same
 //!   completion-latch discipline counted down over `k + 1` shares.
+//! * **cluster (remote) lanes** — TCP peers attached with
+//!   [`Engine::with_cluster_peers`] join the sharded split as additional
+//!   lanes *after* the device fleet: a remote span's input is encoded by
+//!   the method's [`ClusterSpec`](crate::backend::ClusterSpec), shipped
+//!   to the peer (itself a full engine behind `somd cluster serve`), and
+//!   the partial-result bytes fill the lane's latch slot when the reply
+//!   lands — or an error does, on a dropped connection or expired
+//!   deadline, in which case the SMP side covers the span in place with
+//!   a [`record_sharded_failure`](Scheduler::record_sharded_failure)
+//!   penalty, exactly like a failed device lane.  This is the first
+//!   point where the learned per-lane weights span hosts, not threads.
 //!
 //! Rules resolve per method as `smp | device(<profile>) | hybrid |
 //! sharded | auto`; `auto` defers to the [`Scheduler`]'s
@@ -40,6 +51,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
+use super::cluster::{ClusterClient, ClusterConfig, RemoteCallback, RemotePartial};
 use super::config::{Rules, Target};
 use super::distribution::Range1;
 use super::master::SomdMethod;
@@ -47,7 +59,7 @@ use super::partition::{split_fraction, split_weighted_floor};
 use super::pool::{JobHandle, WorkerPool};
 use super::scheduler::{Choice, Scheduler, SchedulerConfig};
 use crate::backend::{DeviceShare, Executed, HeteroMethod, HybridMerge, ShardedMerge};
-use crate::device::{DeviceProfile, DeviceSession};
+use crate::device::{DeviceProfile, DeviceSession, DeviceStats};
 use crate::runtime::Registry;
 
 // ---------------------------------------------------------------------------
@@ -182,6 +194,15 @@ struct DeviceLane {
     master: DeviceMaster,
     profile: String,
     /// The profile's canonical `'static` name, for execution reports.
+    static_name: &'static str,
+}
+
+/// One remote (cluster) lane: a TCP connection to a peer engine,
+/// participating in sharded splits after the local device fleet.
+struct RemoteLane {
+    client: Arc<ClusterClient>,
+    /// `tcp://<addr>` as the lane's report label (leaked once per
+    /// connect so it can stand where device profile names do).
     static_name: &'static str,
 }
 
@@ -419,6 +440,38 @@ where
             let profile = session.profile().name;
             Ok(DeviceShare { partial, secs, stats, profile })
         }));
+        self.fill_lane_slot(i, result);
+    }
+
+    /// Remote lane `i`'s completion: decode the peer's partial-result
+    /// bytes (or fold the network/deadline failure into the lane's slot
+    /// so the SMP side covers the span).  Runs on the cluster client's
+    /// reader thread; `t0` is the submit instant, so `secs` is the full
+    /// client-observed round trip — the honest throughput a slow link
+    /// earns its weight with.
+    fn finish_remote_shard(
+        &self,
+        i: usize,
+        profile: &'static str,
+        t0: Instant,
+        res: anyhow::Result<RemotePartial>,
+    ) {
+        let result: DevHalf<R> = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let remote = res?;
+            let partial = self.method.cluster_decode_partial(&remote.payload)?;
+            Ok(DeviceShare {
+                partial,
+                secs: t0.elapsed().as_secs_f64(),
+                stats: DeviceStats::default(),
+                profile,
+            })
+        }));
+        self.fill_lane_slot(i, result);
+    }
+
+    /// The shared latch tail: store lane `i`'s outcome, count down, and
+    /// let the last share merge.
+    fn fill_lane_slot(&self, i: usize, result: DevHalf<R>) {
         let last = {
             let mut slots = self.slots.lock().unwrap();
             slots.devs[i] = Some(result);
@@ -491,6 +544,9 @@ pub struct Engine {
     /// The device fleet: one master thread + warm sessions per lane
     /// (empty = no device lanes attached).
     device: Vec<DeviceLane>,
+    /// Remote cluster peers, as sharded lanes after the device fleet
+    /// (empty = single-host engine).
+    remote: Vec<RemoteLane>,
     auto_profile: String,
 }
 
@@ -510,6 +566,7 @@ impl Engine {
             pool: Arc::new(WorkerPool::new(workers)),
             scheduler: Arc::new(Scheduler::new(SchedulerConfig::default())),
             device: Vec::new(),
+            remote: Vec::new(),
             auto_profile: "fermi".to_string(),
         }
     }
@@ -607,6 +664,66 @@ impl Engine {
     /// `None` when unset or unparsable.
     pub fn fleet_min_device_items_from_env() -> Option<usize> {
         std::env::var("SOMD_FLEET_MIN_DEVICE_ITEMS").ok().and_then(|v| v.parse().ok())
+    }
+
+    /// Attach **remote cluster peers** with the `SOMD_CLUSTER_*` timing
+    /// knobs from the environment: connects (and handshakes) to each
+    /// `host:port` address, registering every peer as a sharded lane
+    /// after the device fleet.  A method shards across the remote lanes
+    /// when it carries a [`ClusterSpec`](crate::backend::ClusterSpec)
+    /// (the wire codecs) in addition to its hybrid spec; spans sent to a
+    /// peer that dies or misses its deadline are covered by SMP partials
+    /// in place, with the sharded-failure penalty — exactly like a
+    /// failed device lane.  See `docs/CLUSTER.md`.
+    pub fn with_cluster_peers(self, addrs: &[String]) -> anyhow::Result<Self> {
+        self.with_cluster_peers_cfg(addrs, ClusterConfig::from_env())
+    }
+
+    /// [`Engine::with_cluster_peers`] with explicit timing knobs.
+    pub fn with_cluster_peers_cfg(
+        mut self,
+        addrs: &[String],
+        cfg: ClusterConfig,
+    ) -> anyhow::Result<Self> {
+        if addrs.is_empty() {
+            anyhow::bail!("a cluster fleet needs at least one peer address");
+        }
+        for addr in addrs {
+            let client = ClusterClient::connect(addr, cfg)?;
+            let static_name: &'static str =
+                Box::leak(format!("tcp://{addr}").into_boxed_str());
+            self.remote.push(RemoteLane { client: Arc::new(client), static_name });
+        }
+        Ok(self)
+    }
+
+    /// The peer addresses named by `SOMD_CLUSTER_PEERS` (comma-separated
+    /// `host:port` tokens; empty when unset) — the deployment-time way to
+    /// grow an engine past one box.
+    pub fn cluster_peers_from_env() -> Vec<String> {
+        match std::env::var("SOMD_CLUSTER_PEERS") {
+            Ok(v) => {
+                v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Remote-lane count of the attached cluster fleet (0 = single host).
+    pub fn remote_lane_count(&self) -> usize {
+        self.remote.len()
+    }
+
+    /// The report label of each remote lane (`tcp://<addr>`), in lane
+    /// order after the device fleet.
+    pub fn remote_lane_names(&self) -> Vec<&'static str> {
+        self.remote.iter().map(|l| l.static_name).collect()
+    }
+
+    /// The cluster clients behind the remote lanes, in lane order (the
+    /// network bench pings RTT percentiles through these).
+    pub fn remote_clients(&self) -> Vec<Arc<ClusterClient>> {
+        self.remote.iter().map(|l| l.client.clone()).collect()
     }
 
     /// Replace the scheduler (e.g. restored from persisted JSON history,
@@ -860,8 +977,17 @@ impl Engine {
         let hybrid_ok = method.has_hybrid_version()
             && !self.device.is_empty()
             && DeviceProfile::by_name(&self.auto_profile).is_some();
-        // sharding spans the whole fleet through the same hybrid spec
-        let sharded_lanes = if hybrid_ok { self.device.len() } else { 0 };
+        // sharding spans the whole device fleet through the same hybrid
+        // spec, plus every live remote peer when the method carries the
+        // wire codecs (a dead peer stops counting toward resolution; a
+        // span sent to one that dies later is covered by SMP partials)
+        let cluster_ok = method.has_hybrid_version()
+            && method.has_cluster_version()
+            && self.remote.iter().any(|l| l.client.is_alive());
+        let mut sharded_lanes = if hybrid_ok { self.device.len() } else { 0 };
+        if cluster_ok {
+            sharded_lanes += self.remote.len();
+        }
         self.resolve_target(
             method.name(),
             &|profile: &str| {
@@ -1111,28 +1237,35 @@ impl Engine {
         E: Sync + 'static,
         R: Send + 'static,
     {
-        let lanes = self.device.len();
-        debug_assert!(lanes >= 1, "sharded resolution without a fleet");
+        // lane order: device fleet first, then remote peers — remote
+        // lanes only count when the method carries the wire codecs
+        let dlanes = self.device.len();
+        let rlanes = if method.has_cluster_version() { self.remote.len() } else { 0 };
+        let lanes = dlanes + rlanes;
+        debug_assert!(lanes >= 1, "sharded resolution without any lane");
         let total = method.hybrid_items(&input);
         let weights = self.scheduler.sharded_weights(method.name(), lanes);
         let spans =
             split_weighted_floor(total, &weights, self.scheduler.config().min_device_items);
         let smp_span = spans[0];
-        let dev_spans: Vec<Range1> = spans[1..].to_vec();
-        if dev_spans.iter().all(|s| s.is_empty()) {
-            // every device share starved under the floor: co-execution
+        let lane_spans: Vec<Range1> = spans[1..].to_vec();
+        if lane_spans.iter().all(|s| s.is_empty()) {
+            // every lane's share starved under the floor: co-execution
             // would be pure overhead, run the whole invocation on SMP
             return self.submit_smp_full(method, input, Degraded::Sharded);
         }
-        let live = dev_spans.iter().filter(|s| !s.is_empty()).count();
+        let live = lane_spans.iter().filter(|s| !s.is_empty()).count();
+        let mut profiles: Vec<&'static str> =
+            self.device.iter().map(|l| l.static_name).collect();
+        profiles.extend(self.remote.iter().take(rlanes).map(|l| l.static_name));
         let (tx, handle) = JobHandle::pair();
         let shared = Arc::new(ShardedInFlight {
             method,
             input,
             sched: self.scheduler.clone(),
             smp_span,
-            dev_spans: dev_spans.clone(),
-            profiles: self.device.iter().map(|l| l.static_name).collect(),
+            dev_spans: lane_spans.clone(),
+            profiles,
             weights,
             smp_parts: self.workers,
             tx,
@@ -1143,7 +1276,7 @@ impl Engine {
             }),
         });
         for (i, lane) in self.device.iter().enumerate() {
-            if dev_spans[i].is_empty() {
+            if lane_spans[i].is_empty() {
                 continue; // starved: its items live in the SMP span now
             }
             let dev_shared = shared.clone();
@@ -1151,6 +1284,28 @@ impl Engine {
                 dev_shared.run_device_shard(i, ctx);
             });
             lane.master.submit(job);
+        }
+        for (k, lane) in self.remote.iter().take(rlanes).enumerate() {
+            let i = dlanes + k;
+            let span = lane_spans[i];
+            if span.is_empty() {
+                continue; // starved: its items live in the SMP span now
+            }
+            // encode on the submitting thread (the scatter of §4.2);
+            // the callback lands on the client's reader thread with the
+            // peer's partial — or the failure the SMP side then covers
+            let payload = shared.method.cluster_encode_span(&shared.input, span);
+            let remote_shared = shared.clone();
+            let profile = lane.static_name;
+            let t0 = Instant::now();
+            let cb: RemoteCallback = Box::new(move |res| {
+                remote_shared.finish_remote_shard(i, profile, t0, res);
+            });
+            if let Err(e) = lane.client.submit(shared.method.name(), span, payload, cb) {
+                // nothing was sent and the callback never fires: fail the
+                // lane's slot here so the merge covers its span
+                shared.fill_lane_slot(i, Ok(Err(e)));
+            }
         }
         self.pool.submit(move || shared.run_smp_shard());
         handle

@@ -115,6 +115,20 @@ pub fn split_weighted(len: usize, weights: &[f64]) -> Vec<Range1> {
 /// for it; when every device lane starves, the SMP lane covers the whole
 /// space and the caller should run (and record) a degraded invocation.
 ///
+/// **The floor is deliberately asymmetric: lane 0 is never re-checked.**
+/// The SMP share runs on the worker pool the caller already owns — there
+/// is no launch or transfer overhead for a micro-span to amortize, so a
+/// tiny SMP share is cheap where a tiny device share is not.  Lane 0 is
+/// also the designated fallback: every item starved off a device lane
+/// (and the cover for every *failed* lane) must land somewhere, and that
+/// somewhere is the SMP span.  Zeroing lane 0's weight under the floor
+/// would leave nowhere to fold starved items into and turn "shard
+/// mostly to devices" into "refuse to shard".  The invariant callers may
+/// rely on (pinned by `prop_split_weighted_floor_respects_the_floor` in
+/// `tests/proptest_partition.rs`): every **non-empty span at index ≥ 1**
+/// has at least `min_items` items; lane 0 may hold any length from 0 to
+/// `len`, including a micro-span below the floor.
+///
 /// # Examples
 ///
 /// ```

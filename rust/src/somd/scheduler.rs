@@ -555,8 +555,19 @@ impl Scheduler {
                 self.cfg.window,
             );
         }
-        if e.device_lane_items_per_sec.len() < devices.len() {
+        // Resize in BOTH directions: a fleet that *shrank* between runs
+        // (or since a persisted snapshot was taken) must not keep stale
+        // extra-lane windows alive — they would keep steering
+        // `sharded_weights` and the decision table toward lanes that no
+        // longer exist.  `Vec::resize` truncates when shrinking.
+        if e.device_lane_items_per_sec.len() != devices.len() {
             e.device_lane_items_per_sec.resize(devices.len(), Vec::new());
+        }
+        // Learned weights from a different fleet size are meaningless for
+        // this one; drop them so `sharded_weights` falls back to its
+        // hybrid/even-split ladder until a fresh equilibrium is learned.
+        if e.lane_weights.as_ref().is_some_and(|w| w.len() != devices.len() + 1) {
+            e.lane_weights = None;
         }
         for (i, d) in devices.iter().enumerate() {
             if d.items > 0 && d.secs > 0.0 {

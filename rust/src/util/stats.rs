@@ -1,9 +1,16 @@
 //! Summary statistics for bench reporting.
+//!
+//! All entry points tolerate NaN samples: a single failed-request
+//! sentinel or 0/0 throughput sample must not kill a whole bench run.
+//! NaN samples are filtered out *before* sorting (the sorts themselves
+//! use [`f64::total_cmp`], so even a slipped-through NaN can no longer
+//! panic the comparator), and the aggregate structs count what was
+//! dropped in their `dropped_nan` field so reports can surface it.
 
 /// Basic sample statistics.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
-    /// Sample count.
+    /// Sample count (after NaN filtering).
     pub n: usize,
     /// Arithmetic mean.
     pub mean: f64,
@@ -15,22 +22,28 @@ pub struct Summary {
     pub max: f64,
     /// Median (midpoint-interpolated for even n).
     pub median: f64,
+    /// NaN samples dropped before aggregation.
+    pub dropped_nan: usize,
 }
 
-/// Summarize a non-empty sample.
+/// Summarize a sample with at least one finite-or-infinite (non-NaN)
+/// value.  NaN samples are dropped and counted in
+/// [`Summary::dropped_nan`]; panics only when *nothing* survives the
+/// filter.
 pub fn summarize(xs: &[f64]) -> Summary {
-    assert!(!xs.is_empty());
-    let n = xs.len();
-    let mean = xs.iter().sum::<f64>() / n as f64;
+    let (s, dropped_nan) = drop_nan(xs);
+    assert!(!s.is_empty(), "summarize: no non-NaN samples (dropped {dropped_nan})");
+    let n = s.len();
+    let mean = s.iter().sum::<f64>() / n as f64;
     let var = if n > 1 {
-        xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        s.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
     } else {
         0.0
     };
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut s = s;
+    s.sort_by(f64::total_cmp);
     let median = if n % 2 == 1 { s[n / 2] } else { 0.5 * (s[n / 2 - 1] + s[n / 2]) };
-    Summary { n, mean, std: var.sqrt(), min: s[0], max: s[n - 1], median }
+    Summary { n, mean, std: var.sqrt(), min: s[0], max: s[n - 1], median, dropped_nan }
 }
 
 /// Geometric mean (used for cross-benchmark speedup aggregation).
@@ -39,12 +52,21 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Exact percentile of a non-empty sample: linear interpolation between
-/// the two closest order statistics at rank `p/100 * (n-1)` — the
-/// *inclusive* definition (Hyndman–Fan type 7, numpy's default
-/// `linear`); `p` in `[0, 100]`.  Sorts a copy — callers with many
-/// reads over one buffer should sort once and use
-/// [`percentile_sorted`].
+/// Filter NaN out of a sample, returning the survivors and the dropped
+/// count.
+fn drop_nan(xs: &[f64]) -> (Vec<f64>, usize) {
+    let s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    let dropped = xs.len() - s.len();
+    (s, dropped)
+}
+
+/// Exact percentile of a sample: linear interpolation between the two
+/// closest order statistics at rank `p/100 * (n-1)` — the *inclusive*
+/// definition (Hyndman–Fan type 7, numpy's default `linear`); `p` in
+/// `[0, 100]`.  NaN samples are silently dropped before ranking (use
+/// [`percentiles`] when the dropped count matters); panics when no
+/// non-NaN sample remains.  Sorts a copy — callers with many reads over
+/// one buffer should sort once and use [`percentile_sorted`].
 ///
 /// # Examples
 ///
@@ -56,12 +78,16 @@ pub fn geomean(xs: &[f64]) -> f64 {
 /// assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-12);
 /// ```
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (mut s, dropped_nan) = drop_nan(xs);
+    assert!(!s.is_empty(), "percentile: no non-NaN samples (dropped {dropped_nan})");
+    s.sort_by(f64::total_cmp);
     percentile_sorted(&s, p)
 }
 
-/// [`percentile`] over an already ascending-sorted buffer.
+/// [`percentile`] over an already ascending-sorted, NaN-free buffer
+/// (the interpolation arithmetic assumes its rank neighbours are
+/// ordered numbers; feed it through [`percentile`]/[`percentiles`] if
+/// the input may carry NaN).
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty(), "percentile of an empty sample");
     assert!((0.0..=100.0).contains(&p), "percentile rank {p} outside [0, 100]");
@@ -78,7 +104,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 /// The latency percentiles the serving harness reports per row.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Percentiles {
-    /// Sample count.
+    /// Sample count (after NaN filtering).
     pub n: usize,
     /// 50th percentile (median).
     pub p50: f64,
@@ -88,20 +114,24 @@ pub struct Percentiles {
     pub p99: f64,
     /// Largest sample (the p100 tail).
     pub max: f64,
+    /// NaN samples dropped before ranking.
+    pub dropped_nan: usize,
 }
 
-/// Compute [`Percentiles`] over a non-empty sample buffer (one sort,
-/// three exact reads).
+/// Compute [`Percentiles`] over a sample buffer (one sort, three exact
+/// reads).  NaN samples are dropped and counted in
+/// [`Percentiles::dropped_nan`]; panics only when nothing survives.
 pub fn percentiles(xs: &[f64]) -> Percentiles {
-    assert!(!xs.is_empty(), "percentiles of an empty sample");
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (mut s, dropped_nan) = drop_nan(xs);
+    assert!(!s.is_empty(), "percentiles: no non-NaN samples (dropped {dropped_nan})");
+    s.sort_by(f64::total_cmp);
     Percentiles {
         n: s.len(),
         p50: percentile_sorted(&s, 50.0),
         p95: percentile_sorted(&s, 95.0),
         p99: percentile_sorted(&s, 99.0),
         max: s[s.len() - 1],
+        dropped_nan,
     }
 }
 
@@ -116,6 +146,7 @@ mod tests {
         assert_eq!(s.median, 2.5);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
+        assert_eq!(s.dropped_nan, 0);
         assert!((s.std - 1.2909944).abs() < 1e-6);
     }
 
@@ -179,5 +210,52 @@ mod tests {
     #[should_panic]
     fn percentile_rejects_out_of_range_rank() {
         percentile(&[1.0], 101.0);
+    }
+
+    // --- NaN regression suite: a poisoned sample must be dropped and
+    // counted, never panic the sort comparator -----------------------
+
+    #[test]
+    fn summarize_drops_and_counts_nan() {
+        let s = summarize(&[1.0, f64::NAN, 3.0, f64::NAN]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.dropped_nan, 2);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!((s.min, s.max), (1.0, 3.0));
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        let xs = vec![f64::NAN, 10.0, f64::NAN, 20.0];
+        assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 100.0), 20.0);
+    }
+
+    #[test]
+    fn percentiles_drop_and_count_nan() {
+        let mut xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        xs.push(f64::NAN);
+        let p = percentiles(&xs);
+        assert_eq!(p.n, 100);
+        assert_eq!(p.dropped_nan, 1);
+        assert_eq!(p.max, 100.0);
+        assert!((p.p50 - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinities_survive_the_nan_filter() {
+        // total_cmp orders -inf < finite < +inf; only NaN is dropped
+        let p = percentiles(&[f64::INFINITY, 1.0, f64::NEG_INFINITY]);
+        assert_eq!(p.n, 3);
+        assert_eq!(p.dropped_nan, 0);
+        assert_eq!(p.p50, 1.0);
+        assert_eq!(p.max, f64::INFINITY);
+    }
+
+    #[test]
+    #[should_panic]
+    fn all_nan_sample_is_rejected() {
+        summarize(&[f64::NAN, f64::NAN]);
     }
 }

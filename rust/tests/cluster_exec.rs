@@ -1,0 +1,195 @@
+//! Cluster-lane correctness suite (tentpole of the cluster PR): one SOMD
+//! invocation sharded across **multiple OS processes** over localhost
+//! TCP.
+//!
+//! * sharded results spanning the local SMP pool plus two spawned
+//!   `somd cluster serve` peers are **bitwise identical** to pure SMP
+//!   for the exact-arithmetic workloads (vecadd: identical IEEE f32
+//!   adds; crypt: integer IDEA);
+//! * killing a peer mid-flight drops the connection: the engine covers
+//!   the dead lane's span with SMP partials in place, the caller still
+//!   gets a bitwise-correct result, and the failure is penalized in the
+//!   scheduler history;
+//! * a peer that misses the submit deadline is treated exactly the same
+//!   way — covered, penalized — without poisoning the connection.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use somd::backend::Executed;
+use somd::bench_suite::cluster::{
+    crypt_cluster, spawn_peer, vecadd_cluster, CryptInput, PeerProc,
+};
+use somd::bench_suite::crypt::{self, BLOCK_BYTES};
+use somd::somd::cluster::ClusterConfig;
+use somd::somd::{Engine, Rules, Scheduler, SchedulerConfig, Target};
+
+fn somd_exe() -> &'static std::path::Path {
+    std::path::Path::new(env!("CARGO_BIN_EXE_somd"))
+}
+
+fn peer(delay_ms: u64) -> PeerProc {
+    spawn_peer(somd_exe(), 1, delay_ms).expect("peer spawns and announces its address")
+}
+
+/// An engine sharding `methods` across the given peers, with a floor of
+/// 1 so small test inputs still reach every lane.
+fn cluster_engine(peers: &[&PeerProc], methods: &[&str], cfg: ClusterConfig) -> Engine {
+    let mut rules = Rules::empty();
+    for m in methods {
+        rules.set(*m, Target::Sharded);
+    }
+    let addrs: Vec<String> = peers.iter().map(|p| p.addr().to_string()).collect();
+    Engine::with_rules(2, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1,
+            ..Default::default()
+        }))
+        .with_cluster_peers_cfg(&addrs, cfg)
+        .expect("cluster peers connect")
+}
+
+#[test]
+fn vecadd_sharded_across_two_processes_is_bitwise_equal_to_pure_smp() {
+    let p1 = peer(0);
+    let p2 = peer(0);
+    let engine = cluster_engine(&[&p1, &p2], &["VecAdd.add"], ClusterConfig::default());
+    assert_eq!(engine.remote_lane_count(), 2);
+
+    let elems = 40_000usize;
+    // varied payload (not a constant, so misplaced spans cannot hide)
+    let a: Vec<f32> = (0..elems).map(|i| (i % 977) as f32 * 0.25 + 0.125).collect();
+    let b: Vec<f32> = (0..elems).map(|i| (i % 1013) as f32 * 0.5 - 3.0).collect();
+    let input = Arc::new((a, b));
+    let m = Arc::new(vecadd_cluster());
+    let want = m.smp.invoke(&input, 2);
+
+    for round in 0..3 {
+        let (got, how) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "round {round} element {i}: {g} vs {w}");
+        }
+        match how {
+            Executed::Sharded { smp_items, weights, lanes, .. } => {
+                assert_eq!(weights.len(), 3);
+                assert_eq!(lanes.len(), 2);
+                let lane_items: usize = lanes.iter().map(|l| l.items).sum();
+                assert_eq!(smp_items + lane_items, elems);
+                assert!(lanes.iter().all(|l| l.ok), "round {round}: {lanes:?}");
+                assert!(
+                    lanes.iter().all(|l| l.profile.starts_with("tcp://")),
+                    "remote lanes report their peer address: {lanes:?}"
+                );
+            }
+            other => panic!("forced shard must co-execute, got {other:?}"),
+        }
+    }
+    // the runs fed the history: one throughput window per remote lane
+    let h = engine.scheduler().history("VecAdd.add").expect("history");
+    assert_eq!(h.sharded_runs, 3);
+    assert_eq!(h.sharded_failures, 0);
+    assert_eq!(h.device_lane_items_per_sec.len(), 2);
+}
+
+#[test]
+fn crypt_roundtrip_sharded_across_two_processes_is_bitwise_exact() {
+    let p1 = peer(0);
+    let p2 = peer(0);
+    let engine = cluster_engine(&[&p1, &p2], &["Crypt.cipher"], ClusterConfig::default());
+
+    let problem = crypt::Problem::generate(4_096 * BLOCK_BYTES, 42);
+    let want = crypt::sequential(&problem.data, &problem.ekeys);
+    let m = Arc::new(crypt_cluster());
+
+    let enc_input = Arc::new(CryptInput { src: problem.data.clone(), keys: problem.ekeys });
+    let (enc, how) = engine.submit_hetero(m.clone(), enc_input).join().unwrap();
+    assert_eq!(enc, want, "sharded ciphertext must match the sequential cipher bitwise");
+    assert!(matches!(how, Executed::Sharded { .. }));
+
+    // and the roundtrip closes across processes: decrypt the sharded
+    // ciphertext with a second sharded pass
+    let dec_input = Arc::new(CryptInput { src: enc, keys: problem.dkeys });
+    let (dec, _) = engine.submit_hetero(m, dec_input).join().unwrap();
+    assert_eq!(dec, problem.data);
+}
+
+#[test]
+fn killed_peer_mid_run_is_covered_by_smp_partials_bitwise_exactly() {
+    let p1 = peer(0);
+    // the victim answers only after 5 s — plenty of window to kill it
+    // while its span is in flight
+    let mut victim = peer(5_000);
+    let engine = cluster_engine(&[&p1, &victim], &["VecAdd.add"], ClusterConfig::default());
+
+    let elems = 30_000usize;
+    let a: Vec<f32> = (0..elems).map(|i| (i % 641) as f32 * 0.5 - 7.0).collect();
+    let b: Vec<f32> = (0..elems).map(|i| (i % 613) as f32 * 0.125).collect();
+    let input = Arc::new((a, b));
+    let m = Arc::new(vecadd_cluster());
+    let want = m.smp.invoke(&input, 2);
+
+    let handle = engine.submit_hetero(m.clone(), input.clone());
+    std::thread::sleep(Duration::from_millis(300)); // spans are in flight
+    victim.kill(); // connection drops; the engine must cover lane 1
+
+    let (got, how) = handle.join().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "covered element {i}: {g} vs {w}");
+    }
+    match how {
+        Executed::Sharded { lanes, .. } => {
+            assert!(lanes[0].ok, "the surviving peer's share succeeds: {lanes:?}");
+            assert!(!lanes[1].ok, "the killed peer's share is reported failed: {lanes:?}");
+        }
+        other => panic!("a partial failure still reports the shard, got {other:?}"),
+    }
+    let h = engine.scheduler().history("VecAdd.add").expect("history");
+    assert_eq!(h.sharded_failures, 1, "the dropped connection is penalized");
+
+    // the dead lane stops counting toward resolution, but the live peer
+    // keeps the method sharded — and correct
+    let (again, _) = engine.submit_hetero(m, input).join().unwrap();
+    for (g, w) in again.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+}
+
+#[test]
+fn deadline_expired_peer_is_covered_without_poisoning_the_connection() {
+    let p1 = peer(0);
+    // this peer always answers 2 s late; the 250 ms deadline expires first
+    let slow = peer(2_000);
+    let cfg = ClusterConfig {
+        deadline: Duration::from_millis(250),
+        ..ClusterConfig::default()
+    };
+    let engine = cluster_engine(&[&p1, &slow], &["Crypt.cipher"], cfg);
+
+    let problem = crypt::Problem::generate(1_024 * BLOCK_BYTES, 7);
+    let want = crypt::sequential(&problem.data, &problem.ekeys);
+    let m = Arc::new(crypt_cluster());
+    let input = Arc::new(CryptInput { src: problem.data.clone(), keys: problem.ekeys });
+
+    let (got, how) = engine.submit_hetero(m, input).join().unwrap();
+    assert_eq!(got, want, "the expired lane's span must be covered bitwise-exactly");
+    match how {
+        Executed::Sharded { lanes, .. } => {
+            assert!(lanes[0].ok, "{lanes:?}");
+            assert!(!lanes[1].ok, "the deadline expiry is reported as a failed lane");
+        }
+        other => panic!("expected a covered shard, got {other:?}"),
+    }
+    assert_eq!(engine.scheduler().history("Crypt.cipher").unwrap().sharded_failures, 1);
+    // the connection survives a deadline miss; the fast peer still
+    // answers pings
+    let clients = engine.remote_clients();
+    assert!(clients[0].ping().is_ok());
+    assert!(clients[1].is_alive());
+    // wait out the slow peer's late answer: the expired span's Partial
+    // lands ~2 s after submit and must be dropped silently, not poison
+    // the reader
+    std::thread::sleep(Duration::from_millis(2_500));
+    assert!(clients[1].is_alive());
+}

@@ -5,7 +5,7 @@
 //!
 //! Uses the in-tree testkit (proptest is not in the offline vendor set).
 
-use somd::somd::partition::{Block1D, Block2D, RowDisjoint, Rows1D, TreeDist};
+use somd::somd::partition::{split_weighted_floor, Block1D, Block2D, RowDisjoint, Rows1D, TreeDist};
 use somd::somd::tree::Tree;
 use somd::somd::View;
 use somd::util::prng::Xorshift64;
@@ -131,6 +131,47 @@ fn prop_row_disjoint_disjoint_cover() {
         let nonempty: Vec<_> = parts.iter().filter(|p| !p.nnz.is_empty()).collect();
         for w in nonempty.windows(2) {
             assert!(w[0].rows.hi <= w[1].rows.lo, "row ranges overlap: {w:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_split_weighted_floor_respects_the_floor() {
+    // The documented floor contract: every non-empty span at index >= 1
+    // (a device lane) holds at least `min_items`; lane 0 — the SMP
+    // fallback the starved items fold back into — is exempt and may be
+    // arbitrarily small.  Spans must also abut and cover [0, len).
+    Prop::new("split_weighted_floor invariants", 0xB70C).runs(400).check(|g| {
+        let len = if g.bool() { g.usize(0, 20) } else { g.usize(0, 50_000) };
+        let lanes = g.usize(1, 8);
+        let min_items = g.usize(0, 2_000);
+        let mut weights = Vec::with_capacity(lanes + 1);
+        for _ in 0..=lanes {
+            weights.push(match g.usize(0, 9) {
+                0 => 0.0,
+                1 => f64::NAN,
+                2 => -1.0,
+                _ => g.f64(1e-6, 10.0),
+            });
+        }
+        let spans = split_weighted_floor(len, &weights, min_items);
+        assert_eq!(spans.len(), weights.len());
+        // coverage + disjointness: consecutive, starting at 0, ending at len
+        assert_eq!(spans[0].lo, 0);
+        assert_eq!(spans.last().unwrap().hi, len);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+        assert_eq!(spans.iter().map(|s| s.len()).sum::<usize>(), len);
+        // the floor: no non-empty device span below min_items, ever —
+        // only lane 0 (the designated fallback) is exempt
+        for (i, s) in spans.iter().enumerate().skip(1) {
+            assert!(
+                s.is_empty() || s.len() >= min_items,
+                "lane {i} span {}..{} under floor {min_items} (len={len} weights={weights:?})",
+                s.lo,
+                s.hi
+            );
         }
     });
 }

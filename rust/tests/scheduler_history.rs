@@ -10,7 +10,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use somd::device::DeviceStats;
-use somd::somd::{Choice, Scheduler, SchedulerConfig};
+use somd::somd::{Choice, HybridSample, Scheduler, SchedulerConfig};
 use somd::util::json::Json;
 
 fn dev(secs: f64, bytes: usize) -> DeviceStats {
@@ -265,6 +265,52 @@ fn service_warm_starts_lane_history_across_restarts() {
     assert_eq!(service2.engine().scheduler().decide("Warm.m"), learned);
     service2.drain();
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn shrunken_fleet_truncates_stale_lane_windows() {
+    // Learn a 3-lane sharded history, persist it, reload it, then run the
+    // same method on a fleet that shrank to 2 lanes: the stale third-lane
+    // window must be truncated away (not keep steering the weights), and
+    // the learned weight vector must match the live fleet size.
+    let m = "Fleet.shrink";
+    let share = |items: usize, secs: f64| HybridSample { items, secs };
+    let s = Scheduler::new(cfg());
+    for _ in 0..4 {
+        s.record_sharded(
+            m,
+            share(3000, 0.010),
+            &[share(1000, 0.010), share(1000, 0.010), share(1000, 0.010)],
+            &dev(0.010, 4096),
+        );
+    }
+    let h = s.history(m).unwrap();
+    assert_eq!(h.device_lane_items_per_sec.len(), 3);
+    assert_eq!(h.lane_weights.as_ref().map(Vec::len), Some(4));
+
+    // round-trip through text, as a restarted deployment would
+    let text = s.to_json().dump();
+    let parsed = Json::parse(&text).expect("snapshot parses");
+    let restored = Scheduler::from_json(cfg(), &parsed).expect("snapshot restores");
+    assert_eq!(restored.history(m).unwrap().device_lane_items_per_sec.len(), 3);
+
+    // the fleet shrank: one sharded run over 2 device lanes
+    restored.record_sharded(
+        m,
+        share(3000, 0.010),
+        &[share(1500, 0.010), share(1500, 0.010)],
+        &dev(0.010, 4096),
+    );
+    let h = restored.history(m).unwrap();
+    assert_eq!(
+        h.device_lane_items_per_sec.len(),
+        2,
+        "stale lane windows must be truncated to the live fleet size"
+    );
+    let w = restored.sharded_weights(m, 2);
+    assert_eq!(w.len(), 3, "weights must span SMP + the 2 live lanes");
+    assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    assert_eq!(h.lane_weights.as_ref().map(Vec::len), Some(3));
 }
 
 #[test]
