@@ -38,10 +38,13 @@ test:
 bench-auto:
 	cd rust && cargo bench --bench auto_schedule
 
-# compiled-vs-naive interpreter lanes: bitwise equivalence over all
-# artifacts, then the throughput baseline (writes rust/BENCH_interp.json)
+# interpreter lanes: bitwise equivalence over all artifacts under BOTH
+# fusion schedules (XLA_FUSE governs the default compile path), then the
+# throughput baseline with the compiled-not-slower-than-naive and
+# fused-not-slower-than-unfused gates (writes rust/BENCH_interp.json)
 bench-interp:
-	cd rust && cargo test --release --test interp_equivalence
+	cd rust && XLA_FUSE=off cargo test --release --test interp_equivalence
+	cd rust && XLA_FUSE=on cargo test --release --test interp_equivalence
 	cd rust && cargo run --release -- bench interp --check
 
 # hybrid co-execution: correctness suite, then the smp/device/hybrid

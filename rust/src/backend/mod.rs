@@ -436,11 +436,19 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
         registry: Option<&Registry>,
         input: &I,
     ) -> Result<(R, Executed)> {
+        // the invocation's index-space size, when the method can report
+        // one (hybrid spec attached) — it keys the scheduler's per-size
+        // windows so lane learning conditions on input size
+        let items = self.hybrid.as_ref().map(|h| (h.items)(input) as u64);
         match self.resolve(engine, registry) {
             Target::Smp | Target::Auto => {
                 let t0 = Instant::now();
                 let r = self.smp.invoke(input, engine.workers());
-                engine.scheduler().record_smp(self.smp.name(), t0.elapsed());
+                let wall = t0.elapsed();
+                match items {
+                    Some(it) => engine.scheduler().record_smp_sized(self.smp.name(), wall, it),
+                    None => engine.scheduler().record_smp(self.smp.name(), wall),
+                }
                 Ok((r, Executed::Smp { partitions: engine.workers() }))
             }
             // a sharded resolution can only surface on the engine's async
@@ -460,13 +468,23 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
                     Err(e) => {
                         // feed the failure to the cost model so `auto`
                         // steers back to SMP instead of retrying forever
-                        engine.scheduler().record_device_failure(self.smp.name());
+                        match items {
+                            Some(it) => engine
+                                .scheduler()
+                                .record_device_failure_sized(self.smp.name(), it),
+                            None => engine.scheduler().record_device_failure(self.smp.name()),
+                        }
                         return Err(e);
                     }
                 };
                 let measured = t0.elapsed();
                 let stats = session.stats();
-                engine.scheduler().record_device(self.smp.name(), measured, &stats);
+                match items {
+                    Some(it) => engine
+                        .scheduler()
+                        .record_device_sized(self.smp.name(), measured, &stats, it),
+                    None => engine.scheduler().record_device(self.smp.name(), measured, &stats),
+                }
                 Ok((
                     r,
                     Executed::Device { profile: session.profile().name, stats },
@@ -507,8 +525,8 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
         let profile = DeviceProfile::by_name(engine.auto_profile())
             .ok_or_else(|| anyhow::anyhow!("unknown device profile '{}'", engine.auto_profile()))?;
         let total = (spec.items)(input);
-        let fraction =
-            fraction_override.unwrap_or_else(|| engine.scheduler().hybrid_fraction(self.name()));
+        let fraction = fraction_override
+            .unwrap_or_else(|| engine.scheduler().hybrid_fraction_sized(self.name(), total as u64));
         let (smp_span, dev_span) = split_fraction(total, fraction);
         let min_items = engine.scheduler().config().min_device_items;
         if dev_span.is_empty() || (fraction_override.is_none() && dev_span.len() < min_items) {
@@ -519,8 +537,8 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
             let t0 = Instant::now();
             let r = self.smp.invoke(input, engine.workers());
             let wall = t0.elapsed();
-            engine.scheduler().record_smp(self.name(), wall);
-            engine.scheduler().record_hybrid_degraded(self.name(), wall);
+            engine.scheduler().record_smp_sized(self.name(), wall, total as u64);
+            engine.scheduler().record_hybrid_degraded_sized(self.name(), wall, total as u64);
             return Ok((r, Executed::Smp { partitions: engine.workers() }));
         }
 
@@ -593,7 +611,8 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
             }
             Err(_) => {
                 // the device share failed: cover its span on the SMP side
-                m.sched.record_hybrid_failure(self.name());
+                let total = (m.smp_span.len() + m.dev_span.len()) as u64;
+                m.sched.record_hybrid_failure_sized(self.name(), total);
                 partials.extend(self.hybrid_smp_partials(m.input, m.dev_span, m.nparts));
                 let r = self.smp.reduce(partials);
                 (r, Executed::Smp { partitions: m.nparts })
@@ -671,7 +690,8 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
         if any_failed {
             // a broken shard must not feed the weight learner — the
             // penalty steers `auto` away until the fleet proves itself
-            m.sched.record_sharded_failure(self.name());
+            let total = m.smp_span.len() + m.dev_spans.iter().map(|s| s.len()).sum::<usize>();
+            m.sched.record_sharded_failure_sized(self.name(), total as u64);
         } else {
             m.sched.record_sharded(
                 self.name(),

@@ -1,12 +1,17 @@
 //! Interpreter-lane throughput report (`somd bench interp`).
 //!
-//! Runs every artifact in the manifest through BOTH interpreter lanes of
-//! the vendored `xla` shim — the naive tree-walker and the compiled
-//! bytecode executor — and emits a `BENCH_interp.json` baseline (wall
-//! time, HLO ops/s and speedup per artifact) so the device lane's perf
-//! trajectory is tracked from PR 2 onward.  `--check` turns the report
-//! into a gate: the compiled lane must not be slower than the naive
-//! evaluator on the largest artifact (CI smoke mode).
+//! Runs every artifact in the manifest through THREE schedules of the
+//! vendored `xla` shim — the naive tree-walker, the unfused compiled
+//! bytecode executor, and the fused compiled executor (elementwise
+//! chains collapsed into single-dispatch kernels) — and emits a
+//! `BENCH_interp.json` baseline (wall time, HLO ops/s and speedups per
+//! artifact) so the device lane's perf trajectory is tracked from PR 2
+//! onward.  Both compiled schedules are forced programmatically, so the
+//! report compares fusion itself regardless of `XLA_FUSE`.  `--check`
+//! turns the report into a gate: on the largest artifact, the compiled
+//! lane must not be slower than the naive evaluator AND the fused
+//! schedule must not be slower than the unfused one beyond a noise
+//! tolerance ([`FUSED_TOLERANCE`], for jittery CI runners).
 
 use std::time::Duration;
 
@@ -73,6 +78,11 @@ pub fn bitwise_eq(a: &HostTensor, b: &HostTensor) -> bool {
     }
 }
 
+/// Noise tolerance for the fused-vs-unfused gate: the fused schedule may
+/// be at most this factor slower than the unfused one on the largest
+/// artifact before `--check` fails (shared CI runners jitter).
+pub const FUSED_TOLERANCE: f64 = 1.10;
+
 /// One artifact's lane-vs-lane measurement.
 #[derive(Debug, Clone)]
 pub struct InterpRow {
@@ -80,20 +90,32 @@ pub struct InterpRow {
     pub name: String,
     /// Total input payload bytes.
     pub input_bytes: usize,
-    /// Statically lowered instructions (None if lowering failed).
+    /// Statically lowered instructions, pre-fusion (None if lowering
+    /// failed) — the constituent count, stable across schedules.
     pub lowered_instructions: Option<usize>,
     /// HLO instructions executed per run (while bodies count per
-    /// iteration; identical for both lanes by construction).
+    /// iteration; identical for all lanes by construction — fused
+    /// kernels count by their constituents).
     pub executed_instructions: u64,
+    /// Kernel dispatches per run on the fused schedule (a fused chain is
+    /// one dispatch; equals `executed_instructions` when nothing fuses).
+    pub fused_dispatches: u64,
+    /// `Op::Fused` sites in the fused schedule (None if lowering failed).
+    pub fused_kernels: Option<usize>,
     /// Naive tree-walker wall seconds (middle-tier mean).
     pub naive_secs: f64,
-    /// Compiled bytecode wall seconds (middle-tier mean).
+    /// Unfused compiled bytecode wall seconds (middle-tier mean).
+    pub unfused_secs: f64,
+    /// Fused compiled bytecode wall seconds (middle-tier mean) — the
+    /// production schedule.
     pub compiled_secs: f64,
     /// naive/compiled ratio (>1 = compiled wins).
     pub speedup: f64,
+    /// unfused/fused compiled ratio (>1 = fusion wins).
+    pub fused_speedup: f64,
     /// Executed HLO instructions per second, naive lane.
     pub naive_ops_per_sec: f64,
-    /// Executed HLO instructions per second, compiled lane.
+    /// Executed HLO instructions per second, fused compiled lane.
     pub compiled_ops_per_sec: f64,
 }
 
@@ -109,31 +131,50 @@ pub fn run(reps: usize) -> Result<Vec<InterpRow>> {
 }
 
 fn run_one(reg: &Registry, name: &str, reps: usize) -> Result<InterpRow> {
-    let art = reg.artifact(name)?;
+    // both schedules of one artifact, forced programmatically: the
+    // report compares fusion itself, independent of `XLA_FUSE`
+    let unfused = reg.artifact_with_fusion(name, false)?;
+    let fused = reg.artifact_with_fusion(name, true)?;
     let inputs = synth_inputs(reg, name, 1)?;
-    let input_bytes: usize = art.info().inputs.iter().map(|s| s.bytes()).sum();
+    let input_bytes: usize = fused.info().inputs.iter().map(|s| s.bytes()).sum();
 
-    // warm both lanes (first-touch allocation, page faults)
-    art.execute_lane(&inputs, xla::EvalLane::Naive)?;
-    if art.has_compiled_form() {
-        art.execute_lane(&inputs, xla::EvalLane::Compiled)?;
+    // warm every lane (first-touch allocation, page faults) and arm the
+    // fused kernels' shape specialization so the timed runs take the
+    // specialized path, as a steady-state server would
+    fused.execute_lane(&inputs, xla::EvalLane::Naive)?;
+    if fused.has_compiled_form() {
+        unfused.execute_lane(&inputs, xla::EvalLane::Compiled)?;
+        fused.execute_lane(&inputs, xla::EvalLane::Compiled)?;
+        fused.execute_lane(&inputs, xla::EvalLane::Compiled)?;
     }
 
-    // executed-instruction count per run (thread-local counter delta)
+    // per-run counter deltas: constituents (naive walker) and dispatches
+    // (fused schedule; a fused chain counts once)
     let before = xla::executed_instruction_count();
-    art.execute_lane(&inputs, xla::EvalLane::Naive)?;
+    fused.execute_lane(&inputs, xla::EvalLane::Naive)?;
     let executed_instructions = xla::executed_instruction_count() - before;
+    let fused_dispatches = if fused.has_compiled_form() {
+        let before = xla::executed_instruction_count();
+        fused.execute_lane(&inputs, xla::EvalLane::Compiled)?;
+        xla::executed_instruction_count() - before
+    } else {
+        executed_instructions
+    };
 
     let naive = middle_tier_mean(&sample(reps, || {
-        art.execute_lane(&inputs, xla::EvalLane::Naive).expect("naive lane runs")
+        fused.execute_lane(&inputs, xla::EvalLane::Naive).expect("naive lane runs")
     }));
-    let compiled = if art.has_compiled_form() {
-        middle_tier_mean(&sample(reps, || {
-            art.execute_lane(&inputs, xla::EvalLane::Compiled).expect("compiled lane runs")
-        }))
+    let (unfused_t, fused_t) = if fused.has_compiled_form() {
+        let u = middle_tier_mean(&sample(reps, || {
+            unfused.execute_lane(&inputs, xla::EvalLane::Compiled).expect("unfused lane runs")
+        }));
+        let f = middle_tier_mean(&sample(reps, || {
+            fused.execute_lane(&inputs, xla::EvalLane::Compiled).expect("fused lane runs")
+        }));
+        (u, f)
     } else {
-        // lowering failed: the compiled column degenerates to naive
-        naive
+        // lowering failed: the compiled columns degenerate to naive
+        (naive, naive)
     };
 
     let ops = |d: Duration| {
@@ -143,20 +184,27 @@ fn run_one(reg: &Registry, name: &str, reps: usize) -> Result<InterpRow> {
             executed_instructions as f64 / d.as_secs_f64()
         }
     };
+    let ratio = |num: Duration, den: Duration| {
+        if den.is_zero() {
+            1.0
+        } else {
+            num.as_secs_f64() / den.as_secs_f64()
+        }
+    };
     Ok(InterpRow {
         name: name.to_string(),
         input_bytes,
-        lowered_instructions: art.compiled_instruction_count(),
+        lowered_instructions: unfused.compiled_instruction_count(),
         executed_instructions,
+        fused_dispatches,
+        fused_kernels: fused.fused_kernel_count(),
         naive_secs: naive.as_secs_f64(),
-        compiled_secs: compiled.as_secs_f64(),
-        speedup: if compiled.is_zero() {
-            1.0
-        } else {
-            naive.as_secs_f64() / compiled.as_secs_f64()
-        },
+        unfused_secs: unfused_t.as_secs_f64(),
+        compiled_secs: fused_t.as_secs_f64(),
+        speedup: ratio(naive, fused_t),
+        fused_speedup: ratio(unfused_t, fused_t),
         naive_ops_per_sec: ops(naive),
-        compiled_ops_per_sec: ops(compiled),
+        compiled_ops_per_sec: ops(fused_t),
     })
 }
 
@@ -185,7 +233,7 @@ fn geomean(vals: impl Iterator<Item = f64>) -> f64 {
 pub fn to_json(rows: &[InterpRow], reps: usize) -> Json {
     use std::collections::BTreeMap;
     let mut top = BTreeMap::new();
-    top.insert("schema".to_string(), Json::Str("interp_throughput/v1".to_string()));
+    top.insert("schema".to_string(), Json::Str("interp_throughput/v2".to_string()));
     top.insert("reps".to_string(), Json::Num(reps as f64));
     let arts: Vec<Json> = rows
         .iter()
@@ -204,9 +252,19 @@ pub fn to_json(rows: &[InterpRow], reps: usize) -> Json {
                 "executed_instructions".to_string(),
                 Json::Num(r.executed_instructions as f64),
             );
+            m.insert("fused_dispatches".to_string(), Json::Num(r.fused_dispatches as f64));
+            m.insert(
+                "fused_kernels".to_string(),
+                match r.fused_kernels {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            );
             m.insert("naive_secs".to_string(), Json::Num(r.naive_secs));
+            m.insert("unfused_secs".to_string(), Json::Num(r.unfused_secs));
             m.insert("compiled_secs".to_string(), Json::Num(r.compiled_secs));
             m.insert("speedup".to_string(), Json::Num(r.speedup));
+            m.insert("fused_speedup".to_string(), Json::Num(r.fused_speedup));
             m.insert("naive_ops_per_sec".to_string(), Json::Num(r.naive_ops_per_sec));
             m.insert(
                 "compiled_ops_per_sec".to_string(),
@@ -221,32 +279,47 @@ pub fn to_json(rows: &[InterpRow], reps: usize) -> Json {
         "geomean_speedup".to_string(),
         Json::Num(geomean(rows.iter().map(|r| r.speedup))),
     );
+    summary.insert(
+        "geomean_fused_speedup".to_string(),
+        Json::Num(geomean(rows.iter().map(|r| r.fused_speedup))),
+    );
     if let Some(big) = largest(rows) {
         summary.insert("largest_artifact".to_string(), Json::Str(big.name.clone()));
         summary.insert("largest_speedup".to_string(), Json::Num(big.speedup));
+        summary.insert("largest_fused_speedup".to_string(), Json::Num(big.fused_speedup));
     }
     top.insert("summary".to_string(), Json::Obj(summary));
     Json::Obj(top)
 }
 
-/// Print the report and write `out_path`; with `check`, fail (Err) when
-/// the compiled lane is slower than the naive evaluator on the largest
-/// artifact.
+/// Print the report and write `out_path`; with `check`, fail (Err) when,
+/// on the largest artifact, the fused compiled lane is slower than the
+/// naive evaluator, or slower than the unfused schedule beyond
+/// [`FUSED_TOLERANCE`].
 pub fn report(reps: usize, out_path: &str, check: bool) -> Result<()> {
     let rows = run(reps)?;
-    println!("== Interp throughput: naive tree-walker vs compiled bytecode (reps {reps}) ==");
+    println!("== Interp throughput: naive vs unfused vs fused bytecode (reps {reps}) ==");
     println!(
-        "{:<24} {:>12} {:>12} {:>12} {:>9} {:>14}",
-        "Artifact", "bytes-in", "naive (s)", "compiled (s)", "speedup", "compiled ops/s"
+        "{:<24} {:>12} {:>11} {:>11} {:>11} {:>8} {:>8} {:>7}",
+        "Artifact", "bytes-in", "naive (s)", "unfused (s)", "fused (s)", "speedup", "fusion",
+        "kernels"
     );
     for r in &rows {
         println!(
-            "{:<24} {:>12} {:>12.5} {:>12.5} {:>8.2}x {:>14.0}",
-            r.name, r.input_bytes, r.naive_secs, r.compiled_secs, r.speedup, r.compiled_ops_per_sec
+            "{:<24} {:>12} {:>11.5} {:>11.5} {:>11.5} {:>7.2}x {:>7.2}x {:>7}",
+            r.name,
+            r.input_bytes,
+            r.naive_secs,
+            r.unfused_secs,
+            r.compiled_secs,
+            r.speedup,
+            r.fused_speedup,
+            r.fused_kernels.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
         );
     }
     let gm = geomean(rows.iter().map(|r| r.speedup));
-    println!("geomean speedup: {gm:.2}x");
+    let gmf = geomean(rows.iter().map(|r| r.fused_speedup));
+    println!("geomean speedup: {gm:.2}x (naive→fused), {gmf:.2}x (unfused→fused)");
     std::fs::write(out_path, to_json(&rows, reps).dump())
         .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
     println!("wrote {out_path}");
@@ -262,7 +335,20 @@ pub fn report(reps: usize, out_path: &str, check: bool) -> Result<()> {
                 big.speedup
             );
         }
-        println!("check ok: compiled ≥ naive on '{}' ({:.2}x)", big.name, big.speedup);
+        if big.compiled_secs > big.unfused_secs * FUSED_TOLERANCE {
+            bail!(
+                "fused schedule is slower than unfused on '{}' beyond tolerance \
+                 ({:.5}s vs {:.5}s, limit {FUSED_TOLERANCE}x)",
+                big.name,
+                big.compiled_secs,
+                big.unfused_secs,
+            );
+        }
+        println!(
+            "check ok on '{}': compiled ≥ naive ({:.2}x), fused within {FUSED_TOLERANCE}x \
+             of unfused ({:.2}x)",
+            big.name, big.speedup, big.fused_speedup
+        );
     }
     Ok(())
 }
@@ -298,12 +384,38 @@ mod tests {
     }
 
     #[test]
-    fn vecadd_row_measures_both_lanes() {
+    fn vecadd_row_measures_all_three_lanes() {
         let reg = reg();
         let row = run_one(&reg, "vecadd", 1).unwrap();
         assert!(row.naive_secs > 0.0);
+        assert!(row.unfused_secs > 0.0);
         assert!(row.compiled_secs > 0.0);
         assert!(row.executed_instructions >= 3);
         assert!(row.lowered_instructions.is_some(), "vecadd must lower");
+        // a single elementwise op: nothing fuses, dispatches == constituents
+        assert_eq!(row.fused_kernels, Some(0));
+        assert_eq!(row.fused_dispatches, row.executed_instructions);
+        assert!(row.fused_speedup > 0.0);
+    }
+
+    #[test]
+    fn rows_report_fusion_coverage_where_it_fires() {
+        let reg = reg();
+        // find a fusing artifact (pinned to exist by tests/interp_equivalence.rs)
+        let name = reg
+            .names()
+            .map(String::from)
+            .find(|n| {
+                reg.artifact_with_fusion(n, true)
+                    .map(|a| a.fused_kernel_count().unwrap_or(0) > 0)
+                    .unwrap_or(false)
+            })
+            .expect("at least one artifact fuses");
+        let row = run_one(&reg, &name, 1).unwrap();
+        assert!(row.fused_kernels.unwrap() > 0);
+        assert!(
+            row.fused_dispatches < row.executed_instructions,
+            "'{name}' fused, so its dispatch count must drop below its instruction count"
+        );
     }
 }

@@ -23,6 +23,17 @@ impl Artifact {
     /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
     /// parser reassigns ids (see aot.py / DESIGN.md).
     pub fn compile(path: &Path, info: ArtifactInfo) -> Result<Artifact> {
+        Self::compile_inner(path, info, None)
+    }
+
+    /// Like [`Artifact::compile`] but with elementwise fusion forced on
+    /// or off regardless of `XLA_FUSE` — the bench and equivalence suite
+    /// compare fused vs unfused schedules in one process through this.
+    pub fn compile_with_fusion(path: &Path, info: ArtifactInfo, fuse: bool) -> Result<Artifact> {
+        Self::compile_inner(path, info, Some(fuse))
+    }
+
+    fn compile_inner(path: &Path, info: ArtifactInfo, fuse: Option<bool>) -> Result<Artifact> {
         let path_str = path
             .to_str()
             .with_context(|| format!("non-utf8 artifact path {}", path.display()))?;
@@ -31,8 +42,13 @@ impl Artifact {
         let proto = xla::HloModuleProto::from_text_file_cached(path_str)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = with_client(|c| Ok(c.compile(&comp)?))
-            .with_context(|| format!("compiling artifact '{}'", info.name))?;
+        let exe = with_client(|c| {
+            Ok(match fuse {
+                None => c.compile(&comp)?,
+                Some(fuse) => c.compile_with_fusion(&comp, fuse)?,
+            })
+        })
+        .with_context(|| format!("compiling artifact '{}'", info.name))?;
         Ok(Artifact { info, exe })
     }
 
@@ -100,8 +116,25 @@ impl Artifact {
     }
 
     /// Lowered instruction count (None when only the naive lane exists).
+    /// Under fusion this counts *dispatches* — a fused chain is one.
     pub fn compiled_instruction_count(&self) -> Option<usize> {
         self.exe.compiled_instruction_count()
+    }
+
+    /// Constituent instruction count (fused chains counted by their
+    /// members); equals the unfused schedule's instruction count.
+    pub fn compiled_constituent_count(&self) -> Option<usize> {
+        self.exe.compiled_constituent_count()
+    }
+
+    /// Number of fused dispatch sites in the compiled schedule.
+    pub fn fused_kernel_count(&self) -> Option<usize> {
+        self.exe.fused_kernel_count()
+    }
+
+    /// Largest fused chain's constituent count (0 when nothing fused).
+    pub fn max_fused_constituents(&self) -> Option<u64> {
+        self.exe.max_fused_constituents()
     }
 
     /// Execute with device-resident buffers, producing device-resident

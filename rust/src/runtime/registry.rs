@@ -185,6 +185,19 @@ impl Registry {
         self.cache.borrow_mut().insert(name.to_string(), art.clone());
         Ok(art)
     }
+
+    /// Compile `name` with elementwise fusion forced on or off, ignoring
+    /// `XLA_FUSE`.  Deliberately *uncached*: the fused-vs-unfused bench
+    /// and equivalence suite need both schedules of one artifact alive
+    /// at once, and must not poison the default cache with either.
+    pub fn artifact_with_fusion(&self, name: &str, fuse: bool) -> Result<Rc<Artifact>> {
+        let info = self.info(name)?.clone();
+        let path = self.dir.join(&info.file);
+        if !path.exists() {
+            bail!("artifact file {} missing — run `make artifacts`", path.display());
+        }
+        Ok(Rc::new(Artifact::compile_with_fusion(&path, info, fuse)?))
+    }
 }
 
 #[cfg(test)]

@@ -892,6 +892,23 @@ impl Engine {
         hybrid_applicable: bool,
         sharded_lanes: usize,
     ) -> Target {
+        self.resolve_target_items(method, applicable, hybrid_applicable, sharded_lanes, None)
+    }
+
+    /// [`Engine::resolve_target`] with the invocation's index-space item
+    /// count when the caller knows it: `auto` then consults the
+    /// scheduler's *per-size* ladder (see
+    /// [`Scheduler::decide_sized`](crate::somd::Scheduler::decide_sized)),
+    /// so one method can settle on different lanes for different input
+    /// sizes.  Unsized callers keep the all-sizes behavior.
+    fn resolve_target_items(
+        &self,
+        method: &str,
+        applicable: &dyn Fn(&str) -> bool,
+        hybrid_applicable: bool,
+        sharded_lanes: usize,
+        items: Option<u64>,
+    ) -> Target {
         match self.rules.target_for(method) {
             Target::Device(name) => {
                 if applicable(&name) {
@@ -919,14 +936,26 @@ impl Engine {
             Target::Auto => {
                 if applicable(&self.auto_profile) {
                     if sharded_lanes >= 2 {
-                        match self.scheduler.decide_sharded(method, sharded_lanes) {
+                        let choice = match items {
+                            Some(it) => self.scheduler.decide_sharded_sized(
+                                method,
+                                sharded_lanes,
+                                it,
+                            ),
+                            None => self.scheduler.decide_sharded(method, sharded_lanes),
+                        };
+                        match choice {
                             Choice::Device => Target::Device(self.auto_profile.clone()),
                             Choice::Smp => Target::Smp,
                             Choice::Hybrid { .. } => Target::Hybrid,
                             Choice::Sharded { .. } => Target::Sharded,
                         }
                     } else if hybrid_applicable {
-                        match self.scheduler.decide_hybrid(method) {
+                        let choice = match items {
+                            Some(it) => self.scheduler.decide_hybrid_sized(method, it),
+                            None => self.scheduler.decide_hybrid(method),
+                        };
+                        match choice {
                             Choice::Device => Target::Device(self.auto_profile.clone()),
                             Choice::Smp => Target::Smp,
                             Choice::Hybrid { .. } => Target::Hybrid,
@@ -936,7 +965,11 @@ impl Engine {
                             Choice::Sharded { .. } => Target::Hybrid,
                         }
                     } else {
-                        match self.scheduler.decide(method) {
+                        let choice = match items {
+                            Some(it) => self.scheduler.decide_sized(method, it),
+                            None => self.scheduler.decide(method),
+                        };
+                        match choice {
                             Choice::Device => Target::Device(self.auto_profile.clone()),
                             _ => Target::Smp,
                         }
@@ -966,8 +999,14 @@ impl Engine {
         )
     }
 
-    /// Full submission-time resolution for a [`HeteroMethod`].
-    fn resolve_for_submit<I, P, E, R>(&self, method: &HeteroMethod<I, P, E, R>) -> Target
+    /// Full submission-time resolution for a [`HeteroMethod`];
+    /// `items` is the invocation's index-space size when the method can
+    /// report one, keying `auto`'s per-size ladder.
+    fn resolve_for_submit<I, P, E, R>(
+        &self,
+        method: &HeteroMethod<I, P, E, R>,
+        items: Option<u64>,
+    ) -> Target
     where
         I: ?Sized + Sync,
         P: Send + Sync,
@@ -988,7 +1027,7 @@ impl Engine {
         if cluster_ok {
             sharded_lanes += self.remote.len();
         }
-        self.resolve_target(
+        self.resolve_target_items(
             method.name(),
             &|profile: &str| {
                 method.has_device_version()
@@ -997,6 +1036,7 @@ impl Engine {
             },
             hybrid_ok,
             sharded_lanes,
+            items,
         )
     }
 
@@ -1087,7 +1127,11 @@ impl Engine {
         E: Sync + 'static,
         R: Send + 'static,
     {
-        match self.resolve_for_submit(method.as_ref()) {
+        // size the invocation when the method can report it — `auto` then
+        // resolves per size bucket, and the lane records below land in
+        // the matching bucket
+        let items = method.has_hybrid_version().then(|| method.hybrid_items(&input) as u64);
+        match self.resolve_for_submit(method.as_ref(), items) {
             Target::Device(profile) => {
                 // least-loaded dispatch: concurrent whole-invocation jobs
                 // (the serving layer's independent batches above all)
@@ -1159,14 +1203,24 @@ impl Engine {
         let n = self.workers;
         let sched = self.scheduler.clone();
         self.pool.submit(move || {
+            let items = method.has_hybrid_version().then(|| method.hybrid_items(&input) as u64);
             let t0 = Instant::now();
             let r = method.smp.invoke(&input, n);
             let wall = t0.elapsed();
-            sched.record_smp(method.name(), wall);
-            match degraded {
-                Degraded::No => {}
-                Degraded::Hybrid => sched.record_hybrid_degraded(method.name(), wall),
-                Degraded::Sharded => sched.record_sharded_degraded(method.name(), wall),
+            match items {
+                Some(it) => sched.record_smp_sized(method.name(), wall, it),
+                None => sched.record_smp(method.name(), wall),
+            }
+            match (degraded, items) {
+                (Degraded::No, _) => {}
+                (Degraded::Hybrid, Some(it)) => {
+                    sched.record_hybrid_degraded_sized(method.name(), wall, it)
+                }
+                (Degraded::Hybrid, None) => sched.record_hybrid_degraded(method.name(), wall),
+                (Degraded::Sharded, Some(it)) => {
+                    sched.record_sharded_degraded_sized(method.name(), wall, it)
+                }
+                (Degraded::Sharded, None) => sched.record_sharded_degraded(method.name(), wall),
             }
             Ok((r, Executed::Smp { partitions: n }))
         })
@@ -1188,7 +1242,7 @@ impl Engine {
         R: Send + 'static,
     {
         let total = method.hybrid_items(&input);
-        let fraction = self.scheduler.hybrid_fraction(method.name());
+        let fraction = self.scheduler.hybrid_fraction_sized(method.name(), total as u64);
         let (smp_span, dev_span) = split_fraction(total, fraction);
         if dev_span.is_empty() || dev_span.len() < self.scheduler.config().min_device_items {
             // the device share underflows the minimum chunk: co-execution
@@ -1244,7 +1298,7 @@ impl Engine {
         let lanes = dlanes + rlanes;
         debug_assert!(lanes >= 1, "sharded resolution without any lane");
         let total = method.hybrid_items(&input);
-        let weights = self.scheduler.sharded_weights(method.name(), lanes);
+        let weights = self.scheduler.sharded_weights_sized(method.name(), lanes, total as u64);
         let spans =
             split_weighted_floor(total, &weights, self.scheduler.config().min_device_items);
         let smp_span = spans[0];
@@ -1349,6 +1403,9 @@ where
     E: Sync,
     R: Send,
 {
+    // size the records when the method can report its item count, so
+    // they land in the invocation's size bucket
+    let items = method.has_hybrid_version().then(|| method.hybrid_items(input) as u64);
     let session = ctx.session(profile)?;
     let before = session.stats();
     // measured execute time: the clock starts after the job was dequeued
@@ -1359,13 +1416,19 @@ where
         Err(e) => {
             // a failing lane must still feed the cost model, or `auto`
             // would keep exploring the broken device forever
-            sched.record_device_failure(method.name());
+            match items {
+                Some(it) => sched.record_device_failure_sized(method.name(), it),
+                None => sched.record_device_failure(method.name()),
+            }
             return Err(e);
         }
     };
     let measured = t0.elapsed();
     let stats = session.stats().delta_since(&before);
-    sched.record_device(method.name(), measured, &stats);
+    match items {
+        Some(it) => sched.record_device_sized(method.name(), measured, &stats, it),
+        None => sched.record_device(method.name(), measured, &stats),
+    }
     let profile_name = session.profile().name;
     Ok((r, Executed::Device { profile: profile_name, stats }))
 }

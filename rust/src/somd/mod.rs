@@ -57,7 +57,7 @@ pub mod tree;
 pub use config::{Rules, Target};
 pub use distribution::{Distribution, Range1, Range2, View};
 pub use engine::{DeviceCountersSnapshot, Engine};
-pub use scheduler::{Choice, HybridSample, Scheduler, SchedulerConfig};
+pub use scheduler::{bucket_of, Choice, HybridSample, Scheduler, SchedulerConfig};
 pub use master::{run_mis, SomdMethod};
 pub use mi::MiCtx;
 pub use partition::{

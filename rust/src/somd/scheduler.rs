@@ -136,6 +136,30 @@ pub struct SchedulerConfig {
     /// receive; below it the invocation runs pure-SMP instead (a device
     /// launch over a handful of items is pure overhead).
     pub min_device_items: usize,
+    /// Condition decisions on input size: every `(method, lane)` window
+    /// is additionally bucketed by `log2(items)` (see [`bucket_of`]), and
+    /// the `*_sized` entry points explore/decide per bucket — a lane that
+    /// wins at 1M items can lose at 10K without the windows fighting.
+    /// Defaults from the `SOMD_SCHED_SIZE_BUCKETS` env knob (off unless
+    /// set to `1`/`on`/`true`/`yes`).
+    pub size_buckets: bool,
+}
+
+/// Whether `SOMD_SCHED_SIZE_BUCKETS` enables per-size histories.
+fn size_buckets_env() -> bool {
+    match std::env::var("SOMD_SCHED_SIZE_BUCKETS") {
+        Ok(v) => matches!(v.to_ascii_lowercase().as_str(), "1" | "on" | "true" | "yes"),
+        Err(_) => false,
+    }
+}
+
+/// The size bucket an invocation over `items` index-space items falls
+/// into: `floor(log2(items))`, with 0 items clamped to bucket 0.  Every
+/// bucket spans one power of two — coarse enough that repeated runs of
+/// one workload share a window, fine enough that 10K- and 1M-item
+/// invocations never mix.
+pub fn bucket_of(items: u64) -> u32 {
+    items.max(1).ilog2()
 }
 
 impl Default for SchedulerConfig {
@@ -146,6 +170,7 @@ impl Default for SchedulerConfig {
             hysteresis: 1.15,
             ratio_deadband: 0.05,
             min_device_items: 1024,
+            size_buckets: size_buckets_env(),
         }
     }
 }
@@ -235,6 +260,20 @@ pub struct MethodHistory {
     pub batched_items: u64,
     /// The last decision, for hysteresis.
     pub last_choice: Option<Choice>,
+    /// Per-size sub-histories keyed by `log2(items)` (see [`bucket_of`]),
+    /// populated by the `*_sized` record paths when
+    /// [`SchedulerConfig::size_buckets`] is on.  Each bucket is a full
+    /// [`MethodHistory`] restricted to invocations of that size (its own
+    /// `size_buckets` stays empty — one level only).  This top-level
+    /// history remains the all-sizes aggregate, which is also how legacy
+    /// snapshots load: everything in one all-sizes "bucket".
+    pub size_buckets: BTreeMap<u32, MethodHistory>,
+    /// Smallest index-space item count observed by a sized record (the
+    /// leak check: a bucket's whole `[items_min, items_max]` range must
+    /// hash to that bucket).
+    pub items_min: Option<u64>,
+    /// Largest index-space item count observed by a sized record.
+    pub items_max: Option<u64>,
 }
 
 impl MethodHistory {
@@ -373,6 +412,9 @@ pub struct DecisionRow {
     /// Trailing mean client requests per fused invocation, if the serving
     /// layer batched this method.
     pub mean_batch_requests: Option<f64>,
+    /// `None` for the all-sizes aggregate row; `Some(b)` for a per-size
+    /// row covering inputs with `⌊log2(items)⌋ == b` (size bucketing on).
+    pub bucket_log2_items: Option<u32>,
     /// What the cost model would pick next for this method.
     pub choice: Choice,
 }
@@ -398,12 +440,51 @@ impl Scheduler {
         self.cfg
     }
 
-    /// Record an SMP invocation's wall time.
-    pub fn record_smp(&self, method: &str, wall: Duration) {
+    /// Widen the observed item range of a history.
+    fn note_items(e: &mut MethodHistory, items: u64) {
+        e.items_min = Some(e.items_min.map_or(items, |m| m.min(items)));
+        e.items_max = Some(e.items_max.map_or(items, |m| m.max(items)));
+    }
+
+    /// Run `f` against the all-sizes history and — when size bucketing is
+    /// on and the caller knew the item count — against that size's bucket
+    /// too, so every sized record feeds both granularities.
+    fn for_each_granularity(
+        &self,
+        method: &str,
+        items: Option<u64>,
+        mut f: impl FnMut(&SchedulerConfig, &mut MethodHistory),
+    ) {
         let mut h = self.histories.lock().unwrap();
         let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.smp_secs, wall.as_secs_f64(), self.cfg.window);
-        e.smp_runs += 1;
+        f(&self.cfg, e);
+        if let Some(items) = items {
+            Self::note_items(e, items);
+            if self.cfg.size_buckets {
+                let b = e.size_buckets.entry(bucket_of(items)).or_default();
+                f(&self.cfg, b);
+                Self::note_items(b, items);
+            }
+        }
+    }
+
+    /// Record an SMP invocation's wall time.
+    pub fn record_smp(&self, method: &str, wall: Duration) {
+        self.record_smp_impl(method, wall, None);
+    }
+
+    /// Record an SMP invocation's wall time together with its index-space
+    /// item count, feeding the size bucket as well as the all-sizes
+    /// window (see [`SchedulerConfig::size_buckets`]).
+    pub fn record_smp_sized(&self, method: &str, wall: Duration, items: u64) {
+        self.record_smp_impl(method, wall, Some(items));
+    }
+
+    fn record_smp_impl(&self, method: &str, wall: Duration, items: Option<u64>) {
+        self.for_each_granularity(method, items, |cfg, e| {
+            MethodHistory::push(&mut e.smp_secs, wall.as_secs_f64(), cfg.window);
+            e.smp_runs += 1;
+        });
     }
 
     /// Record a device invocation: `measured` is the observed execute
@@ -414,14 +495,37 @@ impl Scheduler {
     /// compares like with like (observed SMP wall vs observed device
     /// wall).
     pub fn record_device(&self, method: &str, measured: Duration, stats: &DeviceStats) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.device_secs, measured.as_secs_f64(), self.cfg.window);
-        e.device_runs += 1;
-        e.transfer_runs += 1;
-        e.bytes_h2d += stats.bytes_h2d as u64;
-        e.bytes_d2h += stats.bytes_d2h as u64;
-        e.launches += stats.launches as u64;
+        self.record_device_impl(method, measured, stats, None);
+    }
+
+    /// Sized counterpart of [`Scheduler::record_device`]: also feeds the
+    /// invocation's size bucket (including its transfer accounting, so
+    /// per-size rows can surface bus pressure at that size).
+    pub fn record_device_sized(
+        &self,
+        method: &str,
+        measured: Duration,
+        stats: &DeviceStats,
+        items: u64,
+    ) {
+        self.record_device_impl(method, measured, stats, Some(items));
+    }
+
+    fn record_device_impl(
+        &self,
+        method: &str,
+        measured: Duration,
+        stats: &DeviceStats,
+        items: Option<u64>,
+    ) {
+        self.for_each_granularity(method, items, |cfg, e| {
+            MethodHistory::push(&mut e.device_secs, measured.as_secs_f64(), cfg.window);
+            e.device_runs += 1;
+            e.transfer_runs += 1;
+            e.bytes_h2d += stats.bytes_h2d as u64;
+            e.bytes_d2h += stats.bytes_d2h as u64;
+            e.launches += stats.launches as u64;
+        });
     }
 
     /// Record a *failed* device invocation as a large penalty sample.
@@ -431,11 +535,22 @@ impl Scheduler {
     /// completes exploration and steers the method back to SMP.  Later
     /// successes slide the penalty out of the trailing window.
     pub fn record_device_failure(&self, method: &str) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.device_secs, PENALTY_SECS, self.cfg.window);
-        e.device_runs += 1;
-        e.device_failures += 1;
+        self.record_device_failure_impl(method, None);
+    }
+
+    /// Sized counterpart of [`Scheduler::record_device_failure`]: the
+    /// penalty lands in the size bucket too, so a per-size ladder that
+    /// chose the device also learns the lane is broken at that size.
+    pub fn record_device_failure_sized(&self, method: &str, items: u64) {
+        self.record_device_failure_impl(method, Some(items));
+    }
+
+    fn record_device_failure_impl(&self, method: &str, items: Option<u64>) {
+        self.for_each_granularity(method, items, |cfg, e| {
+            MethodHistory::push(&mut e.device_secs, PENALTY_SECS, cfg.window);
+            e.device_runs += 1;
+            e.device_failures += 1;
+        });
     }
 
     /// Record one completed hybrid invocation.
@@ -451,6 +566,11 @@ impl Scheduler {
     /// Degenerate shares (`items == 0` or a non-positive clock) do not
     /// produce throughput samples, so 0.0/1.0 experiment splits cannot
     /// poison the learned ratio.
+    ///
+    /// One invocation's item count is always known to a co-execution
+    /// record (the samples carry per-side shares), so the size bucket is
+    /// fed automatically whenever bucketing is on — per-size windows AND
+    /// per-size learned fractions/weights, with the same deadbands.
     pub fn record_hybrid(
         &self,
         method: &str,
@@ -458,35 +578,36 @@ impl Scheduler {
         device: HybridSample,
         stats: &DeviceStats,
     ) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.hybrid_secs, smp.secs.max(device.secs), self.cfg.window);
-        if smp.items > 0 && smp.secs > 0.0 {
-            MethodHistory::push(
-                &mut e.smp_items_per_sec,
-                smp.items as f64 / smp.secs,
-                self.cfg.window,
-            );
-        }
-        if device.items > 0 && device.secs > 0.0 {
-            MethodHistory::push(
-                &mut e.device_items_per_sec,
-                device.items as f64 / device.secs,
-                self.cfg.window,
-            );
-        }
-        e.hybrid_runs += 1;
-        e.transfer_runs += 1;
-        e.bytes_h2d += stats.bytes_h2d as u64;
-        e.bytes_d2h += stats.bytes_d2h as u64;
-        e.launches += stats.launches as u64;
-        if let Some(f_star) = e.equilibrium_fraction() {
-            let f_star = f_star.clamp(FRACTION_MIN, FRACTION_MAX);
-            match e.device_fraction {
-                Some(cur) if (f_star - cur).abs() <= self.cfg.ratio_deadband => {}
-                _ => e.device_fraction = Some(f_star),
+        let items = (smp.items + device.items) as u64;
+        self.for_each_granularity(method, Some(items), |cfg, e| {
+            MethodHistory::push(&mut e.hybrid_secs, smp.secs.max(device.secs), cfg.window);
+            if smp.items > 0 && smp.secs > 0.0 {
+                MethodHistory::push(
+                    &mut e.smp_items_per_sec,
+                    smp.items as f64 / smp.secs,
+                    cfg.window,
+                );
             }
-        }
+            if device.items > 0 && device.secs > 0.0 {
+                MethodHistory::push(
+                    &mut e.device_items_per_sec,
+                    device.items as f64 / device.secs,
+                    cfg.window,
+                );
+            }
+            e.hybrid_runs += 1;
+            e.transfer_runs += 1;
+            e.bytes_h2d += stats.bytes_h2d as u64;
+            e.bytes_d2h += stats.bytes_d2h as u64;
+            e.launches += stats.launches as u64;
+            if let Some(f_star) = e.equilibrium_fraction() {
+                let f_star = f_star.clamp(FRACTION_MIN, FRACTION_MAX);
+                match e.device_fraction {
+                    Some(cur) if (f_star - cur).abs() <= cfg.ratio_deadband => {}
+                    _ => e.device_fraction = Some(f_star),
+                }
+            }
+        });
     }
 
     /// Record a hybrid invocation whose device half failed (the SMP side
@@ -494,11 +615,23 @@ impl Scheduler {
     /// penalty sample steers the lane decision away from hybrid until the
     /// device side proves itself again.
     pub fn record_hybrid_failure(&self, method: &str) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.hybrid_secs, PENALTY_SECS, self.cfg.window);
-        e.hybrid_runs += 1;
-        e.hybrid_failures += 1;
+        self.record_hybrid_failure_impl(method, None);
+    }
+
+    /// [`Scheduler::record_hybrid_failure`] with the invocation's item
+    /// count, so the penalty also lands in the size bucket — without it a
+    /// per-bucket ladder whose hybrid rung always fails would re-explore
+    /// hybrid forever at that size.
+    pub fn record_hybrid_failure_sized(&self, method: &str, items: u64) {
+        self.record_hybrid_failure_impl(method, Some(items));
+    }
+
+    fn record_hybrid_failure_impl(&self, method: &str, items: Option<u64>) {
+        self.for_each_granularity(method, items, |cfg, e| {
+            MethodHistory::push(&mut e.hybrid_secs, PENALTY_SECS, cfg.window);
+            e.hybrid_runs += 1;
+            e.hybrid_failures += 1;
+        });
     }
 
     /// Record one fused invocation submitted by the serving layer's
@@ -544,60 +677,61 @@ impl Scheduler {
         devices: &[HybridSample],
         stats: &DeviceStats,
     ) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        let slowest = devices.iter().map(|d| d.secs).fold(smp.secs, f64::max);
-        MethodHistory::push(&mut e.sharded_secs, slowest, self.cfg.window);
-        if smp.items > 0 && smp.secs > 0.0 {
-            MethodHistory::push(
-                &mut e.smp_items_per_sec,
-                smp.items as f64 / smp.secs,
-                self.cfg.window,
-            );
-        }
-        // Resize in BOTH directions: a fleet that *shrank* between runs
-        // (or since a persisted snapshot was taken) must not keep stale
-        // extra-lane windows alive — they would keep steering
-        // `sharded_weights` and the decision table toward lanes that no
-        // longer exist.  `Vec::resize` truncates when shrinking.
-        if e.device_lane_items_per_sec.len() != devices.len() {
-            e.device_lane_items_per_sec.resize(devices.len(), Vec::new());
-        }
-        // Learned weights from a different fleet size are meaningless for
-        // this one; drop them so `sharded_weights` falls back to its
-        // hybrid/even-split ladder until a fresh equilibrium is learned.
-        if e.lane_weights.as_ref().is_some_and(|w| w.len() != devices.len() + 1) {
-            e.lane_weights = None;
-        }
-        for (i, d) in devices.iter().enumerate() {
-            if d.items > 0 && d.secs > 0.0 {
+        let items = (smp.items + devices.iter().map(|d| d.items).sum::<usize>()) as u64;
+        self.for_each_granularity(method, Some(items), |cfg, e| {
+            let slowest = devices.iter().map(|d| d.secs).fold(smp.secs, f64::max);
+            MethodHistory::push(&mut e.sharded_secs, slowest, cfg.window);
+            if smp.items > 0 && smp.secs > 0.0 {
                 MethodHistory::push(
-                    &mut e.device_lane_items_per_sec[i],
-                    d.items as f64 / d.secs,
-                    self.cfg.window,
+                    &mut e.smp_items_per_sec,
+                    smp.items as f64 / smp.secs,
+                    cfg.window,
                 );
             }
-        }
-        e.sharded_runs += 1;
-        e.transfer_runs += 1;
-        e.bytes_h2d += stats.bytes_h2d as u64;
-        e.bytes_d2h += stats.bytes_d2h as u64;
-        e.launches += stats.launches as u64;
-        if let Some(w_star) = e.equilibrium_weights(devices.len()) {
-            let floored: Vec<f64> = w_star.iter().map(|w| w.max(WEIGHT_MIN)).collect();
-            let total: f64 = floored.iter().sum();
-            let w_star: Vec<f64> = floored.into_iter().map(|w| w / total).collect();
-            let keep = match &e.lane_weights {
-                Some(cur) if cur.len() == w_star.len() => cur
-                    .iter()
-                    .zip(&w_star)
-                    .all(|(a, b)| (a - b).abs() <= self.cfg.ratio_deadband),
-                _ => false,
-            };
-            if !keep {
-                e.lane_weights = Some(w_star);
+            // Resize in BOTH directions: a fleet that *shrank* between runs
+            // (or since a persisted snapshot was taken) must not keep stale
+            // extra-lane windows alive — they would keep steering
+            // `sharded_weights` and the decision table toward lanes that no
+            // longer exist.  `Vec::resize` truncates when shrinking.
+            if e.device_lane_items_per_sec.len() != devices.len() {
+                e.device_lane_items_per_sec.resize(devices.len(), Vec::new());
             }
-        }
+            // Learned weights from a different fleet size are meaningless for
+            // this one; drop them so `sharded_weights` falls back to its
+            // hybrid/even-split ladder until a fresh equilibrium is learned.
+            if e.lane_weights.as_ref().is_some_and(|w| w.len() != devices.len() + 1) {
+                e.lane_weights = None;
+            }
+            for (i, d) in devices.iter().enumerate() {
+                if d.items > 0 && d.secs > 0.0 {
+                    MethodHistory::push(
+                        &mut e.device_lane_items_per_sec[i],
+                        d.items as f64 / d.secs,
+                        cfg.window,
+                    );
+                }
+            }
+            e.sharded_runs += 1;
+            e.transfer_runs += 1;
+            e.bytes_h2d += stats.bytes_h2d as u64;
+            e.bytes_d2h += stats.bytes_d2h as u64;
+            e.launches += stats.launches as u64;
+            if let Some(w_star) = e.equilibrium_weights(devices.len()) {
+                let floored: Vec<f64> = w_star.iter().map(|w| w.max(WEIGHT_MIN)).collect();
+                let total: f64 = floored.iter().sum();
+                let w_star: Vec<f64> = floored.into_iter().map(|w| w / total).collect();
+                let keep = match &e.lane_weights {
+                    Some(cur) if cur.len() == w_star.len() => cur
+                        .iter()
+                        .zip(&w_star)
+                        .all(|(a, b)| (a - b).abs() <= cfg.ratio_deadband),
+                    _ => false,
+                };
+                if !keep {
+                    e.lane_weights = Some(w_star);
+                }
+            }
+        });
     }
 
     /// Record a sharded invocation in which at least one device lane
@@ -605,11 +739,21 @@ impl Scheduler {
     /// got a complete result).  The penalty sample steers the lane
     /// decision away from sharding until the fleet proves itself again.
     pub fn record_sharded_failure(&self, method: &str) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.sharded_secs, PENALTY_SECS, self.cfg.window);
-        e.sharded_runs += 1;
-        e.sharded_failures += 1;
+        self.record_sharded_failure_impl(method, None);
+    }
+
+    /// [`Scheduler::record_sharded_failure`] with the invocation's item
+    /// count, so the penalty also lands in the size bucket.
+    pub fn record_sharded_failure_sized(&self, method: &str, items: u64) {
+        self.record_sharded_failure_impl(method, Some(items));
+    }
+
+    fn record_sharded_failure_impl(&self, method: &str, items: Option<u64>) {
+        self.for_each_granularity(method, items, |cfg, e| {
+            MethodHistory::push(&mut e.sharded_secs, PENALTY_SECS, cfg.window);
+            e.sharded_runs += 1;
+            e.sharded_failures += 1;
+        });
     }
 
     /// Record a sharded invocation that degraded to pure SMP because
@@ -619,10 +763,23 @@ impl Scheduler {
     /// cost at this input size, so recording it completes the sharded
     /// exploration rung instead of re-resolving forever.
     pub fn record_sharded_degraded(&self, method: &str, wall: Duration) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.sharded_secs, wall.as_secs_f64(), self.cfg.window);
-        e.sharded_runs += 1;
+        self.record_sharded_degraded_impl(method, wall, None);
+    }
+
+    /// [`Scheduler::record_sharded_degraded`] with the invocation's item
+    /// count.  Degraded runs MUST reach the size bucket: a per-bucket
+    /// ladder at a size too small to shard would otherwise return
+    /// [`Choice::Sharded`] forever — the exact pathology the unsized
+    /// degraded record fixed, recurring per bucket.
+    pub fn record_sharded_degraded_sized(&self, method: &str, wall: Duration, items: u64) {
+        self.record_sharded_degraded_impl(method, wall, Some(items));
+    }
+
+    fn record_sharded_degraded_impl(&self, method: &str, wall: Duration, items: Option<u64>) {
+        self.for_each_granularity(method, items, |cfg, e| {
+            MethodHistory::push(&mut e.sharded_secs, wall.as_secs_f64(), cfg.window);
+            e.sharded_runs += 1;
+        });
     }
 
     /// The per-lane weight vector a sharded invocation of `method` over a
@@ -642,18 +799,51 @@ impl Scheduler {
     pub fn sharded_weights(&self, method: &str, lanes: usize) -> Vec<f64> {
         let h = self.histories.lock().unwrap();
         if let Some(e) = h.get(method) {
-            if let Some(w) = &e.lane_weights {
-                if w.len() == lanes + 1 {
-                    return w.clone();
-                }
-            }
-            if lanes == 1 {
-                if let Some(f) = e.device_fraction {
-                    return vec![1.0 - f, f];
-                }
+            if let Some(w) = Self::weights_from(e, lanes) {
+                return w;
             }
         }
         vec![1.0 / (lanes + 1) as f64; lanes + 1]
+    }
+
+    /// [`Scheduler::sharded_weights`] conditioned on input size: the size
+    /// bucket's learned vector wins (when bucketing is on), then the
+    /// all-sizes vector, then the even split — per-size fleet weights
+    /// without a separate learning path, since every sharded record
+    /// already feeds the bucket.
+    pub fn sharded_weights_sized(&self, method: &str, lanes: usize, items: u64) -> Vec<f64> {
+        let h = self.histories.lock().unwrap();
+        if let Some(e) = h.get(method) {
+            if self.cfg.size_buckets {
+                if let Some(w) =
+                    e.size_buckets.get(&bucket_of(items)).and_then(|b| Self::weights_from(b, lanes))
+                {
+                    return w;
+                }
+            }
+            if let Some(w) = Self::weights_from(e, lanes) {
+                return w;
+            }
+        }
+        vec![1.0 / (lanes + 1) as f64; lanes + 1]
+    }
+
+    /// The weight ladder's evidence-bearing rungs for one history
+    /// granularity (learned N-way vector, then a 1-device fleet's
+    /// reinterpreted hybrid split); `None` means "no evidence here" so
+    /// callers can fall through to a coarser granularity.
+    fn weights_from(e: &MethodHistory, lanes: usize) -> Option<Vec<f64>> {
+        if let Some(w) = &e.lane_weights {
+            if w.len() == lanes + 1 {
+                return Some(w.clone());
+            }
+        }
+        if lanes == 1 {
+            if let Some(f) = e.device_fraction {
+                return Some(vec![1.0 - f, f]);
+            }
+        }
+        None
     }
 
     /// Pin the learned weight vector for `method` (experiments, the
@@ -681,10 +871,21 @@ impl Scheduler {
     /// submission degrading without ever accruing a hybrid sample, and
     /// the decision could never settle on a faster pure lane.
     pub fn record_hybrid_degraded(&self, method: &str, wall: Duration) {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        MethodHistory::push(&mut e.hybrid_secs, wall.as_secs_f64(), self.cfg.window);
-        e.hybrid_runs += 1;
+        self.record_hybrid_degraded_impl(method, wall, None);
+    }
+
+    /// [`Scheduler::record_hybrid_degraded`] with the invocation's item
+    /// count, completing the *bucket's* hybrid exploration rung too (see
+    /// [`Scheduler::record_sharded_degraded_sized`] for why that matters).
+    pub fn record_hybrid_degraded_sized(&self, method: &str, wall: Duration, items: u64) {
+        self.record_hybrid_degraded_impl(method, wall, Some(items));
+    }
+
+    fn record_hybrid_degraded_impl(&self, method: &str, wall: Duration, items: Option<u64>) {
+        self.for_each_granularity(method, items, |cfg, e| {
+            MethodHistory::push(&mut e.hybrid_secs, wall.as_secs_f64(), cfg.window);
+            e.hybrid_runs += 1;
+        });
     }
 
     /// The split ratio a hybrid invocation of `method` should use right
@@ -697,6 +898,24 @@ impl Scheduler {
             .get(method)
             .and_then(|e| e.device_fraction)
             .unwrap_or(DEFAULT_DEVICE_FRACTION)
+    }
+
+    /// [`Scheduler::hybrid_fraction`] conditioned on input size: the
+    /// bucket's learned equilibrium when size bucketing is on and the
+    /// bucket has one, else the all-sizes fraction, else the default —
+    /// a small input's split no longer dragged toward the ratio a huge
+    /// input converged to.
+    pub fn hybrid_fraction_sized(&self, method: &str, items: u64) -> f64 {
+        let h = self.histories.lock().unwrap();
+        let Some(e) = h.get(method) else { return DEFAULT_DEVICE_FRACTION };
+        if self.cfg.size_buckets {
+            if let Some(f) =
+                e.size_buckets.get(&bucket_of(items)).and_then(|b| b.device_fraction)
+            {
+                return f;
+            }
+        }
+        e.device_fraction.unwrap_or(DEFAULT_DEVICE_FRACTION)
     }
 
     /// Resolve `Target::Auto` for a method whose device version IS
@@ -722,9 +941,44 @@ impl Scheduler {
     /// assert_eq!(s.decide("Series.coefficients"), Choice::Device);
     /// ```
     pub fn decide(&self, method: &str) -> Choice {
+        self.decide_impl(method, None, Self::decide_history)
+    }
+
+    /// [`Scheduler::decide`] conditioned on input size: when size
+    /// bucketing is on, the exploration ladder and incumbent hysteresis
+    /// run *per bucket*, so a method can settle on the device for large
+    /// inputs and SMP for small ones simultaneously.  Each bucket
+    /// explores from scratch — seeding it from the all-sizes decision
+    /// would starve the unchosen lane of samples (records follow the
+    /// chosen lane) and the bucket could never diverge from the
+    /// aggregate.  With bucketing off this is exactly `decide`.
+    pub fn decide_sized(&self, method: &str, items: u64) -> Choice {
+        self.decide_impl(method, Some(items), Self::decide_history)
+    }
+
+    /// Shared decide plumbing: run `ladder` on the size bucket when one
+    /// applies (bucketing on AND the caller knows the item count), else
+    /// on the all-sizes history.  The bucket's incumbent is its own
+    /// `last_choice`; the top-level `last_choice` still tracks the most
+    /// recent decision of *any* size so unsized callers and the decision
+    /// table keep their meaning.
+    fn decide_impl(
+        &self,
+        method: &str,
+        items: Option<u64>,
+        ladder: impl Fn(&SchedulerConfig, &MethodHistory) -> Choice,
+    ) -> Choice {
         let mut h = self.histories.lock().unwrap();
         let e = h.entry(method.to_string()).or_default();
-        let choice = Self::decide_history(&self.cfg, e);
+        let choice = match items {
+            Some(items) if self.cfg.size_buckets => {
+                let b = e.size_buckets.entry(bucket_of(items)).or_default();
+                let c = ladder(&self.cfg, b);
+                b.last_choice = Some(c);
+                c
+            }
+            _ => ladder(&self.cfg, e),
+        };
         e.last_choice = Some(choice);
         choice
     }
@@ -736,11 +990,15 @@ impl Scheduler {
     /// hysteresis factor.  A returned [`Choice::Hybrid`] carries the
     /// current learned split ratio.
     pub fn decide_hybrid(&self, method: &str) -> Choice {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        let choice = Self::decide_history_hybrid(&self.cfg, e);
-        e.last_choice = Some(choice);
-        choice
+        self.decide_impl(method, None, Self::decide_history_hybrid)
+    }
+
+    /// [`Scheduler::decide_hybrid`] conditioned on input size — the
+    /// per-bucket ladder of [`Scheduler::decide_sized`], with the hybrid
+    /// rung; a returned [`Choice::Hybrid`] carries the *bucket's* learned
+    /// split ratio.
+    pub fn decide_hybrid_sized(&self, method: &str, items: u64) -> Choice {
+        self.decide_impl(method, Some(items), Self::decide_history_hybrid)
     }
 
     /// Resolve `Target::Auto` for a co-execution-capable method over a
@@ -753,11 +1011,14 @@ impl Scheduler {
     /// co-execution incumbent here, so a snapshot learned on a 1-device
     /// fleet does not forfeit its hysteresis when the fleet grows.
     pub fn decide_sharded(&self, method: &str, lanes: usize) -> Choice {
-        let mut h = self.histories.lock().unwrap();
-        let e = h.entry(method.to_string()).or_default();
-        let choice = Self::decide_history_sharded(&self.cfg, e, lanes);
-        e.last_choice = Some(choice);
-        choice
+        self.decide_impl(method, None, |cfg, e| Self::decide_history_sharded(cfg, e, lanes))
+    }
+
+    /// [`Scheduler::decide_sharded`] conditioned on input size — the
+    /// per-bucket ladder of [`Scheduler::decide_sized`], with the sharded
+    /// rung.
+    pub fn decide_sharded_sized(&self, method: &str, lanes: usize, items: u64) -> Choice {
+        self.decide_impl(method, Some(items), |cfg, e| Self::decide_history_sharded(cfg, e, lanes))
     }
 
     fn decide_history(cfg: &SchedulerConfig, e: &MethodHistory) -> Choice {
@@ -914,108 +1175,177 @@ impl Scheduler {
         self.histories.lock().unwrap().get(method).cloned()
     }
 
-    /// The full decision table, one row per known method.  Methods with
-    /// sharded history report the fleet decision, methods with hybrid
-    /// history the three-way one; pure two-lane methods keep the binary
-    /// one (so a method that never co-executed is never *reported* as
-    /// hybrid- or fleet-bound).
-    pub fn decision_table(&self) -> Vec<DecisionRow> {
+    /// Snapshot one method's history for a single size bucket (None when
+    /// the method or bucket has never been fed a sized sample).
+    pub fn bucket_history(&self, method: &str, bucket: u32) -> Option<MethodHistory> {
+        self.histories
+            .lock()
+            .unwrap()
+            .get(method)
+            .and_then(|e| e.size_buckets.get(&bucket))
+            .cloned()
+    }
+
+    /// Structural invariant check over every size bucket: a bucket keyed
+    /// `b` may only hold samples whose item counts map to `b` (verified
+    /// through the `items_min`/`items_max` extremes every sized record
+    /// maintains), and buckets never nest.  The scheduler-history suite
+    /// runs this after mixed-size workloads to prove windows don't leak
+    /// across buckets.
+    pub fn check_buckets(&self) -> Result<(), String> {
         let h = self.histories.lock().unwrap();
-        h.iter()
-            .map(|(name, e)| DecisionRow {
-                method: name.clone(),
-                smp_secs: e.smp_estimate(),
-                device_secs: e.device_estimate(),
-                hybrid_secs: e.hybrid_estimate(),
-                sharded_secs: e.sharded_estimate(),
-                device_fraction: e.device_fraction,
-                lane_weights: e.lane_weights.clone(),
-                transfer_bytes_per_run: e.transfer_bytes_per_run(),
-                mean_batch_requests: e.mean_batch_requests(),
-                choice: if e.sharded_runs > 0 {
-                    let lanes = e.device_lane_items_per_sec.len().max(1);
-                    Self::decide_history_sharded(&self.cfg, e, lanes)
-                } else if e.hybrid_runs > 0 {
-                    Self::decide_history_hybrid(&self.cfg, e)
-                } else {
-                    Self::decide_history(&self.cfg, e)
-                },
-            })
-            .collect()
+        for (name, e) in h.iter() {
+            for (&b, bucket) in &e.size_buckets {
+                for items in [bucket.items_min, bucket.items_max].into_iter().flatten() {
+                    if bucket_of(items) != b {
+                        return Err(format!(
+                            "method '{name}': bucket {b} holds a sample of {items} items \
+                             (belongs to bucket {})",
+                            bucket_of(items)
+                        ));
+                    }
+                }
+                if !bucket.size_buckets.is_empty() {
+                    return Err(format!("method '{name}': bucket {b} has nested buckets"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The full decision table: one all-sizes row per known method, plus
+    /// (when size bucketing has populated them) one row per size bucket.
+    /// Methods with sharded history report the fleet decision, methods
+    /// with hybrid history the three-way one; pure two-lane methods keep
+    /// the binary one (so a method that never co-executed is never
+    /// *reported* as hybrid- or fleet-bound).
+    pub fn decision_table(&self) -> Vec<DecisionRow> {
+        let row_from = |name: &str, e: &MethodHistory, bucket: Option<u32>| DecisionRow {
+            method: name.to_string(),
+            smp_secs: e.smp_estimate(),
+            device_secs: e.device_estimate(),
+            hybrid_secs: e.hybrid_estimate(),
+            sharded_secs: e.sharded_estimate(),
+            device_fraction: e.device_fraction,
+            lane_weights: e.lane_weights.clone(),
+            transfer_bytes_per_run: e.transfer_bytes_per_run(),
+            mean_batch_requests: e.mean_batch_requests(),
+            bucket_log2_items: bucket,
+            choice: if e.sharded_runs > 0 {
+                let lanes = e.device_lane_items_per_sec.len().max(1);
+                Self::decide_history_sharded(&self.cfg, e, lanes)
+            } else if e.hybrid_runs > 0 {
+                Self::decide_history_hybrid(&self.cfg, e)
+            } else {
+                Self::decide_history(&self.cfg, e)
+            },
+        };
+        let h = self.histories.lock().unwrap();
+        let mut rows = Vec::new();
+        for (name, e) in h.iter() {
+            rows.push(row_from(name, e, None));
+            for (&b, bucket) in &e.size_buckets {
+                rows.push(row_from(name, bucket, Some(b)));
+            }
+        }
+        rows
     }
 
     // -- serialization ------------------------------------------------------
 
-    /// Serialize every history to JSON (decision state round-trips).
+    /// Serialize every history to JSON (decision state round-trips,
+    /// size buckets included).
     pub fn to_json(&self) -> Json {
         let h = self.histories.lock().unwrap();
         let mut top = BTreeMap::new();
         for (name, e) in h.iter() {
-            let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
-            let mut m = BTreeMap::new();
-            m.insert("smp_secs".to_string(), arr(&e.smp_secs));
-            m.insert("device_secs".to_string(), arr(&e.device_secs));
-            m.insert("hybrid_secs".to_string(), arr(&e.hybrid_secs));
-            m.insert("smp_items_per_sec".to_string(), arr(&e.smp_items_per_sec));
-            m.insert("device_items_per_sec".to_string(), arr(&e.device_items_per_sec));
-            m.insert("sharded_secs".to_string(), arr(&e.sharded_secs));
-            m.insert(
-                "device_lane_items_per_sec".to_string(),
-                Json::Arr(e.device_lane_items_per_sec.iter().map(|w| arr(w)).collect()),
-            );
-            m.insert("smp_runs".to_string(), Json::Num(e.smp_runs as f64));
-            m.insert("device_runs".to_string(), Json::Num(e.device_runs as f64));
-            m.insert("device_failures".to_string(), Json::Num(e.device_failures as f64));
-            m.insert("hybrid_runs".to_string(), Json::Num(e.hybrid_runs as f64));
-            m.insert("hybrid_failures".to_string(), Json::Num(e.hybrid_failures as f64));
-            m.insert("sharded_runs".to_string(), Json::Num(e.sharded_runs as f64));
-            m.insert("sharded_failures".to_string(), Json::Num(e.sharded_failures as f64));
-            m.insert("transfer_runs".to_string(), Json::Num(e.transfer_runs as f64));
-            m.insert(
-                "device_fraction".to_string(),
-                match e.device_fraction {
-                    Some(f) => Json::Num(f),
-                    None => Json::Null,
-                },
-            );
-            m.insert(
-                "lane_weights".to_string(),
-                match &e.lane_weights {
-                    Some(w) => arr(w),
-                    None => Json::Null,
-                },
-            );
-            m.insert("bytes_h2d".to_string(), Json::Num(e.bytes_h2d as f64));
-            m.insert("bytes_d2h".to_string(), Json::Num(e.bytes_d2h as f64));
-            m.insert("launches".to_string(), Json::Num(e.launches as f64));
-            m.insert(
-                "batch_requests_per_invocation".to_string(),
-                arr(&e.batch_requests_per_invocation),
-            );
-            m.insert(
-                "batched_invocations".to_string(),
-                Json::Num(e.batched_invocations as f64),
-            );
-            m.insert("batched_requests".to_string(), Json::Num(e.batched_requests as f64));
-            m.insert("batched_items".to_string(), Json::Num(e.batched_items as f64));
-            m.insert(
-                "last_choice".to_string(),
-                match e.last_choice {
-                    Some(Choice::Smp) => Json::Str("smp".to_string()),
-                    Some(Choice::Device) => Json::Str("device".to_string()),
-                    Some(Choice::Hybrid { .. }) => Json::Str("hybrid".to_string()),
-                    Some(Choice::Sharded { .. }) => Json::Str("sharded".to_string()),
-                    None => Json::Null,
-                },
-            );
-            top.insert(name.clone(), Json::Obj(m));
+            top.insert(name.clone(), Self::history_json(e));
         }
         Json::Obj(top)
     }
 
+    /// One history granularity as a JSON object — called once per method
+    /// and recursively per size bucket (buckets serialize with the same
+    /// schema as the all-sizes history, minus further nesting).
+    fn history_json(e: &MethodHistory) -> Json {
+        let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        let mut m = BTreeMap::new();
+        m.insert("smp_secs".to_string(), arr(&e.smp_secs));
+        m.insert("device_secs".to_string(), arr(&e.device_secs));
+        m.insert("hybrid_secs".to_string(), arr(&e.hybrid_secs));
+        m.insert("smp_items_per_sec".to_string(), arr(&e.smp_items_per_sec));
+        m.insert("device_items_per_sec".to_string(), arr(&e.device_items_per_sec));
+        m.insert("sharded_secs".to_string(), arr(&e.sharded_secs));
+        m.insert(
+            "device_lane_items_per_sec".to_string(),
+            Json::Arr(e.device_lane_items_per_sec.iter().map(|w| arr(w)).collect()),
+        );
+        m.insert("smp_runs".to_string(), Json::Num(e.smp_runs as f64));
+        m.insert("device_runs".to_string(), Json::Num(e.device_runs as f64));
+        m.insert("device_failures".to_string(), Json::Num(e.device_failures as f64));
+        m.insert("hybrid_runs".to_string(), Json::Num(e.hybrid_runs as f64));
+        m.insert("hybrid_failures".to_string(), Json::Num(e.hybrid_failures as f64));
+        m.insert("sharded_runs".to_string(), Json::Num(e.sharded_runs as f64));
+        m.insert("sharded_failures".to_string(), Json::Num(e.sharded_failures as f64));
+        m.insert("transfer_runs".to_string(), Json::Num(e.transfer_runs as f64));
+        m.insert(
+            "device_fraction".to_string(),
+            match e.device_fraction {
+                Some(f) => Json::Num(f),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "lane_weights".to_string(),
+            match &e.lane_weights {
+                Some(w) => arr(w),
+                None => Json::Null,
+            },
+        );
+        m.insert("bytes_h2d".to_string(), Json::Num(e.bytes_h2d as f64));
+        m.insert("bytes_d2h".to_string(), Json::Num(e.bytes_d2h as f64));
+        m.insert("launches".to_string(), Json::Num(e.launches as f64));
+        m.insert(
+            "batch_requests_per_invocation".to_string(),
+            arr(&e.batch_requests_per_invocation),
+        );
+        m.insert("batched_invocations".to_string(), Json::Num(e.batched_invocations as f64));
+        m.insert("batched_requests".to_string(), Json::Num(e.batched_requests as f64));
+        m.insert("batched_items".to_string(), Json::Num(e.batched_items as f64));
+        m.insert(
+            "last_choice".to_string(),
+            match e.last_choice {
+                Some(Choice::Smp) => Json::Str("smp".to_string()),
+                Some(Choice::Device) => Json::Str("device".to_string()),
+                Some(Choice::Hybrid { .. }) => Json::Str("hybrid".to_string()),
+                Some(Choice::Sharded { .. }) => Json::Str("sharded".to_string()),
+                None => Json::Null,
+            },
+        );
+        let opt_num = |v: Option<u64>| match v {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        };
+        m.insert("items_min".to_string(), opt_num(e.items_min));
+        m.insert("items_max".to_string(), opt_num(e.items_max));
+        // emitted only when populated, so unbucketed snapshots keep the
+        // exact pre-bucket schema (and legacy loaders stay unconfused)
+        if !e.size_buckets.is_empty() {
+            let mut buckets = BTreeMap::new();
+            for (&b, bucket) in &e.size_buckets {
+                buckets.insert(b.to_string(), Self::history_json(bucket));
+            }
+            m.insert("size_buckets".to_string(), Json::Obj(buckets));
+        }
+        Json::Obj(m)
+    }
+
     /// Rebuild a scheduler from [`Scheduler::to_json`] output.  Histories
     /// persisted before the hybrid lane existed load cleanly (the hybrid
-    /// fields default to empty).
+    /// fields default to empty), and snapshots persisted before size
+    /// bucketing load as a single all-sizes history with no buckets —
+    /// exactly the "everything in one bucket" semantics they were
+    /// recorded under.
     pub fn from_json(cfg: SchedulerConfig, json: &Json) -> Result<Scheduler, String> {
         let obj = match json {
             Json::Obj(m) => m,
@@ -1023,117 +1353,134 @@ impl Scheduler {
         };
         let mut histories = BTreeMap::new();
         for (name, v) in obj {
-            let secs = |key: &str| -> Result<Vec<f64>, String> {
-                v.get(key)
-                    .and_then(Json::as_arr)
-                    .ok_or_else(|| format!("method '{name}': missing '{key}'"))?
-                    .iter()
-                    .map(|x| x.as_f64().ok_or_else(|| format!("bad number in '{key}'")))
-                    .collect()
-            };
-            // fields added by the hybrid lane: absent in old snapshots
-            let secs_opt = |key: &str| -> Result<Vec<f64>, String> {
-                match v.get(key).and_then(Json::as_arr) {
-                    None => Ok(Vec::new()),
-                    Some(a) => a
-                        .iter()
-                        .map(|x| x.as_f64().ok_or_else(|| format!("bad number in '{key}'")))
-                        .collect(),
-                }
-            };
-            let num = |key: &str| -> u64 {
-                v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
-            };
-            let device_fraction = v.get("device_fraction").and_then(Json::as_f64);
-            // fields added by the device-fleet PR: absent in older
-            // snapshots, which then load as a 1-device fleet (their
-            // two-way `device_fraction` keeps steering `sharded_weights`)
-            let lane_weights: Option<Vec<f64>> = v
-                .get("lane_weights")
-                .and_then(Json::as_arr)
-                .map(|a| {
-                    a.iter()
-                        .map(|x| {
-                            x.as_f64().ok_or_else(|| "bad number in 'lane_weights'".to_string())
-                        })
-                        .collect::<Result<Vec<f64>, String>>()
-                })
-                .transpose()?;
-            let device_lane_items_per_sec: Vec<Vec<f64>> =
-                match v.get("device_lane_items_per_sec").and_then(Json::as_arr) {
-                    None => Vec::new(),
-                    Some(lanes) => lanes
-                        .iter()
-                        .map(|lane| {
-                            lane.as_arr()
-                                .ok_or_else(|| {
-                                    "bad lane window in 'device_lane_items_per_sec'".to_string()
-                                })?
-                                .iter()
-                                .map(|x| {
-                                    x.as_f64().ok_or_else(|| {
-                                        "bad number in 'device_lane_items_per_sec'".to_string()
-                                    })
-                                })
-                                .collect::<Result<Vec<f64>, String>>()
-                        })
-                        .collect::<Result<Vec<Vec<f64>>, String>>()?,
-                };
-            // pre-hybrid snapshots lack the field; their only
-            // transfer-accounted runs were device runs (old denominator)
-            let transfer_runs = match v.get("transfer_runs").and_then(Json::as_f64) {
-                Some(n) => n as u64,
-                None => num("device_runs"),
-            };
-            let last_choice = match v.get("last_choice").and_then(Json::as_str) {
-                Some("smp") => Some(Choice::Smp),
-                Some("device") => Some(Choice::Device),
-                Some("hybrid") => Some(Choice::Hybrid {
-                    device_fraction: device_fraction.unwrap_or(DEFAULT_DEVICE_FRACTION),
-                }),
-                Some("sharded") => Some(Choice::Sharded {
-                    lanes: lane_weights
-                        .as_ref()
-                        .map(|w| w.len().saturating_sub(1))
-                        .filter(|&l| l > 0)
-                        .unwrap_or_else(|| device_lane_items_per_sec.len().max(1)),
-                }),
-                _ => None,
-            };
-            histories.insert(
-                name.clone(),
-                MethodHistory {
-                    smp_secs: secs("smp_secs")?,
-                    device_secs: secs("device_secs")?,
-                    hybrid_secs: secs_opt("hybrid_secs")?,
-                    smp_items_per_sec: secs_opt("smp_items_per_sec")?,
-                    device_items_per_sec: secs_opt("device_items_per_sec")?,
-                    sharded_secs: secs_opt("sharded_secs")?,
-                    device_lane_items_per_sec,
-                    smp_runs: num("smp_runs"),
-                    device_runs: num("device_runs"),
-                    device_failures: num("device_failures"),
-                    hybrid_runs: num("hybrid_runs"),
-                    hybrid_failures: num("hybrid_failures"),
-                    sharded_runs: num("sharded_runs"),
-                    sharded_failures: num("sharded_failures"),
-                    transfer_runs,
-                    device_fraction,
-                    lane_weights,
-                    bytes_h2d: num("bytes_h2d"),
-                    bytes_d2h: num("bytes_d2h"),
-                    launches: num("launches"),
-                    // fields added by the serving layer: absent in
-                    // pre-serve snapshots
-                    batch_requests_per_invocation: secs_opt("batch_requests_per_invocation")?,
-                    batched_invocations: num("batched_invocations"),
-                    batched_requests: num("batched_requests"),
-                    batched_items: num("batched_items"),
-                    last_choice,
-                },
-            );
+            histories.insert(name.clone(), Self::history_from(name, v)?);
         }
         Ok(Scheduler { cfg, histories: Mutex::new(histories) })
+    }
+
+    /// Parse one history granularity — called per method and recursively
+    /// per size bucket (nesting below one level is discarded; buckets
+    /// never hold buckets).
+    fn history_from(name: &str, v: &Json) -> Result<MethodHistory, String> {
+        let secs = |key: &str| -> Result<Vec<f64>, String> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("method '{name}': missing '{key}'"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| format!("bad number in '{key}'")))
+                .collect()
+        };
+        // fields added by the hybrid lane: absent in old snapshots
+        let secs_opt = |key: &str| -> Result<Vec<f64>, String> {
+            match v.get(key).and_then(Json::as_arr) {
+                None => Ok(Vec::new()),
+                Some(a) => a
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| format!("bad number in '{key}'")))
+                    .collect(),
+            }
+        };
+        let num = |key: &str| -> u64 { v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64 };
+        let device_fraction = v.get("device_fraction").and_then(Json::as_f64);
+        // fields added by the device-fleet PR: absent in older
+        // snapshots, which then load as a 1-device fleet (their
+        // two-way `device_fraction` keeps steering `sharded_weights`)
+        let lane_weights: Option<Vec<f64>> = v
+            .get("lane_weights")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .map(|x| x.as_f64().ok_or_else(|| "bad number in 'lane_weights'".to_string()))
+                    .collect::<Result<Vec<f64>, String>>()
+            })
+            .transpose()?;
+        let device_lane_items_per_sec: Vec<Vec<f64>> =
+            match v.get("device_lane_items_per_sec").and_then(Json::as_arr) {
+                None => Vec::new(),
+                Some(lanes) => lanes
+                    .iter()
+                    .map(|lane| {
+                        lane.as_arr()
+                            .ok_or_else(|| {
+                                "bad lane window in 'device_lane_items_per_sec'".to_string()
+                            })?
+                            .iter()
+                            .map(|x| {
+                                x.as_f64().ok_or_else(|| {
+                                    "bad number in 'device_lane_items_per_sec'".to_string()
+                                })
+                            })
+                            .collect::<Result<Vec<f64>, String>>()
+                    })
+                    .collect::<Result<Vec<Vec<f64>>, String>>()?,
+            };
+        // pre-hybrid snapshots lack the field; their only
+        // transfer-accounted runs were device runs (old denominator)
+        let transfer_runs = match v.get("transfer_runs").and_then(Json::as_f64) {
+            Some(n) => n as u64,
+            None => num("device_runs"),
+        };
+        let last_choice = match v.get("last_choice").and_then(Json::as_str) {
+            Some("smp") => Some(Choice::Smp),
+            Some("device") => Some(Choice::Device),
+            Some("hybrid") => Some(Choice::Hybrid {
+                device_fraction: device_fraction.unwrap_or(DEFAULT_DEVICE_FRACTION),
+            }),
+            Some("sharded") => Some(Choice::Sharded {
+                lanes: lane_weights
+                    .as_ref()
+                    .map(|w| w.len().saturating_sub(1))
+                    .filter(|&l| l > 0)
+                    .unwrap_or_else(|| device_lane_items_per_sec.len().max(1)),
+            }),
+            _ => None,
+        };
+        // pre-bucket snapshots lack the key → no buckets (all-sizes only)
+        let mut size_buckets = BTreeMap::new();
+        if let Some(Json::Obj(bm)) = v.get("size_buckets") {
+            for (key, bv) in bm {
+                let b: u32 = key
+                    .parse()
+                    .map_err(|_| format!("method '{name}': bad size bucket key '{key}'"))?;
+                let mut bucket = Self::history_from(name, bv)?;
+                bucket.size_buckets = BTreeMap::new();
+                size_buckets.insert(b, bucket);
+            }
+        }
+        let item_bound =
+            |key: &str| -> Option<u64> { v.get(key).and_then(Json::as_f64).map(|x| x as u64) };
+        Ok(MethodHistory {
+            smp_secs: secs("smp_secs")?,
+            device_secs: secs("device_secs")?,
+            hybrid_secs: secs_opt("hybrid_secs")?,
+            smp_items_per_sec: secs_opt("smp_items_per_sec")?,
+            device_items_per_sec: secs_opt("device_items_per_sec")?,
+            sharded_secs: secs_opt("sharded_secs")?,
+            device_lane_items_per_sec,
+            smp_runs: num("smp_runs"),
+            device_runs: num("device_runs"),
+            device_failures: num("device_failures"),
+            hybrid_runs: num("hybrid_runs"),
+            hybrid_failures: num("hybrid_failures"),
+            sharded_runs: num("sharded_runs"),
+            sharded_failures: num("sharded_failures"),
+            transfer_runs,
+            device_fraction,
+            lane_weights,
+            bytes_h2d: num("bytes_h2d"),
+            bytes_d2h: num("bytes_d2h"),
+            launches: num("launches"),
+            // fields added by the serving layer: absent in
+            // pre-serve snapshots
+            batch_requests_per_invocation: secs_opt("batch_requests_per_invocation")?,
+            batched_invocations: num("batched_invocations"),
+            batched_requests: num("batched_requests"),
+            batched_items: num("batched_items"),
+            size_buckets,
+            items_min: item_bound("items_min"),
+            items_max: item_bound("items_max"),
+            last_choice,
+        })
     }
 
     /// Persist the full history store to `path` (the
@@ -1696,5 +2043,215 @@ mod tests {
         assert_eq!(h.batched_invocations, 0, "pre-serve snapshots carry no batch records");
         assert_eq!(h.mean_batch_requests(), None);
         assert_eq!(s.decide("Old.m"), Choice::Device);
+    }
+
+    fn sized_cfg() -> SchedulerConfig {
+        SchedulerConfig { size_buckets: true, ..Default::default() }
+    }
+
+    #[test]
+    fn bucket_of_is_floor_log2() {
+        assert_eq!(bucket_of(0), 0); // clamped: 0 items can't index a bucket
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(1 << 20), 20);
+        assert_eq!(bucket_of((1 << 21) - 1), 20);
+    }
+
+    #[test]
+    fn sized_records_stay_aggregate_only_when_bucketing_is_off() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        s.record_smp_sized("M.m", Duration::from_millis(10), 1000);
+        rec_dev(&s, "M.m", 0.005, 64);
+        let h = s.history("M.m").unwrap();
+        assert!(h.size_buckets.is_empty(), "flag off: no buckets materialize");
+        // the item extremes are still tracked (cheap, and they make a
+        // later flag flip-on auditable)
+        assert_eq!(h.items_min, Some(1000));
+        assert_eq!(h.items_max, Some(1000));
+        assert_eq!(s.decide_sized("M.m", 1000), s.decide("M.m"));
+    }
+
+    #[test]
+    fn decision_flips_by_size_bucket() {
+        // small inputs: SMP wins (launch overhead dominates); large
+        // inputs: the device wins — one method, two settled lanes
+        let s = Scheduler::new(sized_cfg());
+        let (small, large) = (1_000u64, 1 << 20);
+        for _ in 0..3 {
+            s.record_smp_sized("M.m", Duration::from_millis(1), small);
+            s.record_device_sized("M.m", Duration::from_millis(20), &dev_stats(0.02, 64), small);
+            s.record_smp_sized("M.m", Duration::from_millis(20), large);
+            s.record_device_sized("M.m", Duration::from_millis(1), &dev_stats(0.001, 64), large);
+        }
+        assert_eq!(s.decide_sized("M.m", small), Choice::Smp);
+        assert_eq!(s.decide_sized("M.m", large), Choice::Device);
+        // nearby sizes hash to the same buckets and inherit the verdicts
+        assert_eq!(s.decide_sized("M.m", small + 20), Choice::Smp);
+        assert_eq!(s.decide_sized("M.m", large + 999), Choice::Device);
+        s.check_buckets().expect("windows must not leak across buckets");
+        // the decision table carries one all-sizes row plus the buckets
+        let rows = s.decision_table();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].bucket_log2_items, None);
+        let by_bucket: Vec<(Option<u32>, Choice)> =
+            rows[1..].iter().map(|r| (r.bucket_log2_items, r.choice)).collect();
+        assert!(by_bucket.contains(&(Some(bucket_of(small)), Choice::Smp)));
+        assert!(by_bucket.contains(&(Some(bucket_of(large)), Choice::Device)));
+    }
+
+    #[test]
+    fn fresh_buckets_explore_from_scratch() {
+        // a method settled on SMP in aggregate must still explore the
+        // device when a never-seen size shows up: the bucket ladder
+        // starts empty instead of inheriting the aggregate verdict
+        let s = Scheduler::new(sized_cfg());
+        for _ in 0..3 {
+            s.record_smp_sized("M.m", Duration::from_millis(1), 100);
+            s.record_device_sized("M.m", Duration::from_millis(50), &dev_stats(0.05, 64), 100);
+        }
+        assert_eq!(s.decide_sized("M.m", 100), Choice::Smp);
+        assert_eq!(s.decide_sized("M.m", 1 << 22), Choice::Smp, "new bucket explores SMP first");
+        s.record_smp_sized("M.m", Duration::from_millis(40), 1 << 22);
+        s.record_smp_sized("M.m", Duration::from_millis(40), 1 << 22);
+        assert_eq!(s.decide_sized("M.m", 1 << 22), Choice::Device, "then the device's turn");
+    }
+
+    #[test]
+    fn hybrid_fraction_conditions_on_size() {
+        let s = Scheduler::new(sized_cfg());
+        // small inputs: device barely helps (25% share); large inputs:
+        // device side is 3x the SMP side (75% share)
+        for _ in 0..3 {
+            s.record_hybrid(
+                "M.m",
+                HybridSample { items: 750, secs: 0.010 },
+                HybridSample { items: 250, secs: 0.010 },
+                &DeviceStats::default(),
+            );
+            s.record_hybrid(
+                "M.m",
+                HybridSample { items: 250_000, secs: 0.010 },
+                HybridSample { items: 750_000, secs: 0.010 },
+                &DeviceStats::default(),
+            );
+        }
+        let small = s.hybrid_fraction_sized("M.m", 1_000);
+        let large = s.hybrid_fraction_sized("M.m", 1_000_000);
+        assert!((small - 0.25).abs() < 1e-9, "small-bucket equilibrium, got {small}");
+        assert!((large - 0.75).abs() < 1e-9, "large-bucket equilibrium, got {large}");
+        // an unseen size falls back to the all-sizes fraction
+        let unseen = s.hybrid_fraction_sized("M.m", 32);
+        assert_eq!(unseen, s.hybrid_fraction("M.m"));
+        s.check_buckets().unwrap();
+    }
+
+    #[test]
+    fn sharded_weights_condition_on_size() {
+        let s = Scheduler::new(sized_cfg());
+        // large inputs: lane 1 twice as fast as lane 0 and SMP
+        rec_shd(&s, "M.m", 250_000, &[250_000, 500_000], 0.010);
+        let w = s.sharded_weights_sized("M.m", 2, 1_000_000);
+        assert!((w[0] - 0.25).abs() < 1e-9 && (w[2] - 0.5).abs() < 1e-9, "got {w:?}");
+        // a size never sharded falls back to the all-sizes vector
+        assert_eq!(s.sharded_weights_sized("M.m", 2, 64), s.sharded_weights("M.m", 2));
+        // a method never sharded at all gets the even split
+        let even = s.sharded_weights_sized("Other.m", 2, 64);
+        assert!(even.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn degraded_and_failed_sized_records_complete_bucket_ladders() {
+        // inputs too small to split: every sized hybrid submission
+        // degrades — the bucket ladder must still converge off hybrid
+        let s = Scheduler::new(sized_cfg());
+        let m = "M.m";
+        for _ in 0..2 {
+            s.record_smp_sized(m, Duration::from_millis(10), 100);
+            s.record_device_sized(m, Duration::from_millis(1), &dev_stats(0.001, 64), 100);
+        }
+        assert!(matches!(s.decide_hybrid_sized(m, 100), Choice::Hybrid { .. }));
+        s.record_hybrid_degraded_sized(m, Duration::from_millis(10), 100);
+        s.record_hybrid_degraded_sized(m, Duration::from_millis(10), 100);
+        assert_eq!(s.decide_hybrid_sized(m, 100), Choice::Device);
+        // same discipline for the fleet ladder at another size
+        for _ in 0..2 {
+            s.record_smp_sized(m, Duration::from_millis(2), 5_000);
+            s.record_device_sized(m, Duration::from_millis(1), &dev_stats(0.001, 64), 5_000);
+        }
+        assert!(matches!(s.decide_sharded_sized(m, 2, 5_000), Choice::Sharded { lanes: 2 }));
+        s.record_sharded_failure_sized(m, 5_000);
+        s.record_sharded_failure_sized(m, 5_000);
+        assert_eq!(s.decide_sharded_sized(m, 2, 5_000), Choice::Device);
+        let b = s.bucket_history(m, bucket_of(5_000)).unwrap();
+        assert_eq!(b.sharded_failures, 2);
+        s.check_buckets().unwrap();
+    }
+
+    #[test]
+    fn bucketed_state_survives_json_text_roundtrip() {
+        let cfg = sized_cfg();
+        let s = Scheduler::new(cfg);
+        let (small, large) = (600u64, 1 << 18);
+        for _ in 0..3 {
+            s.record_smp_sized("M.m", Duration::from_millis(1), small);
+            s.record_device_sized("M.m", Duration::from_millis(30), &dev_stats(0.03, 256), small);
+            s.record_smp_sized("M.m", Duration::from_millis(30), large);
+            s.record_device_sized("M.m", Duration::from_millis(1), &dev_stats(0.001, 256), large);
+        }
+        assert_eq!(s.decide_sized("M.m", small), Choice::Smp);
+        assert_eq!(s.decide_sized("M.m", large), Choice::Device);
+        let text = s.to_json().dump();
+        let restored =
+            Scheduler::from_json(cfg, &Json::parse(&text).expect("state parses")).unwrap();
+        assert_eq!(restored.history("M.m"), s.history("M.m"), "buckets round-trip bit-for-bit");
+        assert_eq!(restored.decide_sized("M.m", small), Choice::Smp);
+        assert_eq!(restored.decide_sized("M.m", large), Choice::Device);
+        restored.check_buckets().unwrap();
+    }
+
+    #[test]
+    fn legacy_snapshot_loads_as_single_all_sizes_bucket() {
+        // pre-bucket snapshots carry no size_buckets key: they load with
+        // an empty bucket map (= everything in one all-sizes history)
+        // and sized reads fall back to the aggregate learning
+        let text = r#"{"Old.m":{"smp_secs":[0.01,0.01],"device_secs":[0.002,0.002],
+            "smp_runs":2,"device_runs":2,"device_failures":0,
+            "bytes_h2d":128,"bytes_d2h":64,"launches":2,
+            "device_fraction":0.6,"last_choice":"device"}}"#;
+        let s = Scheduler::from_json(sized_cfg(), &Json::parse(text).unwrap()).unwrap();
+        let h = s.history("Old.m").unwrap();
+        assert!(h.size_buckets.is_empty());
+        assert_eq!(h.items_min, None);
+        assert_eq!(h.items_max, None);
+        s.check_buckets().expect("an unbucketed legacy snapshot is trivially leak-free");
+        assert_eq!(s.hybrid_fraction_sized("Old.m", 1 << 16), 0.6);
+        // the first sized decision starts that bucket's own exploration
+        assert_eq!(s.decide_sized("Old.m", 1 << 16), Choice::Smp);
+    }
+
+    #[test]
+    fn check_buckets_rejects_leaked_samples_and_nesting() {
+        let s = Scheduler::new(sized_cfg());
+        s.record_smp_sized("M.m", Duration::from_millis(1), 1000);
+        s.check_buckets().unwrap();
+        {
+            // forge a leak: claim bucket 9 saw a 4096-item invocation
+            let mut h = s.histories.lock().unwrap();
+            let e = h.get_mut("M.m").unwrap();
+            e.size_buckets.get_mut(&9).unwrap().items_max = Some(4096);
+        }
+        let err = s.check_buckets().expect_err("cross-bucket sample must be caught");
+        assert!(err.contains("bucket 9"), "got: {err}");
+        {
+            let mut h = s.histories.lock().unwrap();
+            let e = h.get_mut("M.m").unwrap();
+            let b = e.size_buckets.get_mut(&9).unwrap();
+            b.items_max = Some(1000);
+            b.size_buckets.insert(3, MethodHistory::default());
+        }
+        let err = s.check_buckets().expect_err("nested buckets must be caught");
+        assert!(err.contains("nested"), "got: {err}");
     }
 }

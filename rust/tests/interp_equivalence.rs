@@ -6,8 +6,16 @@
 //! reference semantics (which `python -m compile.interp_check` validates
 //! against JAX).
 //!
-//! Also regression-tests the load-time constant hoisting: a steady-state
-//! `execute` on the compiled lane performs ZERO constant-literal parses.
+//! Also regression-tests the load-time constant hoisting (a steady-state
+//! `execute` on the compiled lane performs ZERO constant-literal parses)
+//! and the elementwise fusion pass: fused and unfused schedules of every
+//! artifact agree bit-for-bit, at least one committed artifact forms a
+//! multi-op fused kernel, and fused runs dispatch strictly fewer kernels
+//! while covering exactly the same HLO instruction set.  CI runs this
+//! whole suite twice — `XLA_FUSE=off` and `XLA_FUSE=on` — so the default
+//! `reg.artifact()` path is exercised under both schedules; the
+//! fusion-specific tests below force the flag programmatically and hold
+//! regardless of the environment.
 
 use somd::bench_suite::interp::{bitwise_eq, synth_inputs};
 use somd::runtime::Registry;
@@ -82,10 +90,12 @@ fn compiled_lane_parses_constants_only_at_load_time() {
 
 /// Both lanes execute the same number of HLO instructions per run (the
 /// compiled schedule covers exactly the reachable instruction set).
+/// `vecadd` is a single elementwise op, so nothing fuses and the
+/// dispatch counter agrees as well.
 #[test]
 fn lanes_execute_identical_instruction_counts() {
     let reg = reg();
-    let art = reg.artifact("vecadd").expect("artifact compiles");
+    let art = reg.artifact_with_fusion("vecadd", true).expect("artifact compiles");
     let inputs = synth_inputs(&reg, "vecadd", 4).unwrap();
     // warm both lanes first
     art.execute_lane(&inputs, xla::EvalLane::Naive).unwrap();
@@ -97,4 +107,126 @@ fn lanes_execute_identical_instruction_counts() {
     art.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
     let compiled = xla::executed_instruction_count() - c1;
     assert_eq!(naive, compiled, "lanes must cover the same instruction set");
+}
+
+/// Fused and unfused schedules of every artifact produce bitwise-equal
+/// outputs, independent of the `XLA_FUSE` environment (both schedules are
+/// forced programmatically).
+#[test]
+fn fused_and_unfused_schedules_agree_on_every_artifact() {
+    let reg = reg();
+    let names: Vec<String> = reg.names().map(String::from).collect();
+    assert!(names.len() >= 20, "expected the full artifact set, got {}", names.len());
+    for name in &names {
+        let fused = reg.artifact_with_fusion(name, true).expect("fused compile");
+        let unfused = reg.artifact_with_fusion(name, false).expect("unfused compile");
+        // repeat seeds so shape specialization (armed after the first
+        // run) is exercised on the later executes, not just the generic
+        // tape
+        for seed in [5u64, 6, 5] {
+            let inputs = synth_inputs(&reg, name, seed).expect("inputs synthesized");
+            let f = fused
+                .execute_lane(&inputs, xla::EvalLane::Compiled)
+                .unwrap_or_else(|e| panic!("fused schedule failed on '{name}': {e:#}"));
+            let u = unfused
+                .execute_lane(&inputs, xla::EvalLane::Compiled)
+                .unwrap_or_else(|e| panic!("unfused schedule failed on '{name}': {e:#}"));
+            assert_eq!(f.len(), u.len(), "output arity diverged on '{name}' (seed {seed})");
+            for (i, (a, b)) in f.iter().zip(&u).enumerate() {
+                assert!(
+                    bitwise_eq(a, b),
+                    "output {i} of '{name}' diverged fused-vs-unfused (seed {seed})"
+                );
+            }
+        }
+    }
+}
+
+/// Regression pin: fusion provably fires on the committed artifact set —
+/// at least one artifact forms a multi-op fused kernel — and wherever it
+/// fires, the dispatch schedule is strictly shorter than its constituent
+/// set while the constituent set itself is untouched.
+#[test]
+fn fusion_fires_and_shortens_the_dispatch_schedule() {
+    let reg = reg();
+    let mut artifacts_with_fusion = 0usize;
+    for name in reg.names().map(String::from).collect::<Vec<_>>() {
+        let fused = reg.artifact_with_fusion(&name, true).expect("fused compile");
+        let unfused = reg.artifact_with_fusion(&name, false).expect("unfused compile");
+        assert_eq!(
+            unfused.fused_kernel_count(),
+            Some(0),
+            "unfused schedule of '{name}' must hold no fused kernels"
+        );
+        assert_eq!(
+            unfused.compiled_instruction_count(),
+            unfused.compiled_constituent_count(),
+            "unfused dispatches == constituents on '{name}'"
+        );
+        assert_eq!(
+            fused.compiled_constituent_count(),
+            unfused.compiled_constituent_count(),
+            "fusion must not change the logical instruction set of '{name}'"
+        );
+        if fused.fused_kernel_count().unwrap_or(0) > 0 {
+            artifacts_with_fusion += 1;
+            assert!(
+                fused.compiled_instruction_count().unwrap()
+                    < fused.compiled_constituent_count().unwrap(),
+                "'{name}' fused but its dispatch schedule did not shrink"
+            );
+            assert!(
+                fused.max_fused_constituents().unwrap() >= 2,
+                "'{name}' holds a single-op fused kernel (fusing gains nothing)"
+            );
+        }
+    }
+    assert!(
+        artifacts_with_fusion >= 1,
+        "no committed artifact forms a fused kernel — the pass is dead"
+    );
+}
+
+/// Counter contract on a fusing artifact: `executed_instruction_count`
+/// (dispatches) drops under fusion while `fused_instruction_count`
+/// (constituents) stays identical across the naive walker, the unfused
+/// schedule and the fused schedule.
+#[test]
+fn fused_runs_dispatch_less_but_cover_the_same_instruction_set() {
+    let reg = reg();
+    let name = reg
+        .names()
+        .map(String::from)
+        .find(|n| {
+            reg.artifact_with_fusion(n, true)
+                .map(|a| a.fused_kernel_count().unwrap_or(0) > 0)
+                .unwrap_or(false)
+        })
+        .expect("at least one artifact fuses (pinned above)");
+    let fused = reg.artifact_with_fusion(&name, true).unwrap();
+    let unfused = reg.artifact_with_fusion(&name, false).unwrap();
+    let inputs = synth_inputs(&reg, &name, 9).unwrap();
+    // warm every lane first (spec-state arming, allocation)
+    fused.execute_lane(&inputs, xla::EvalLane::Naive).unwrap();
+    fused.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
+    unfused.execute_lane(&inputs, xla::EvalLane::Compiled).unwrap();
+
+    let measure = |art: &somd::runtime::Artifact, lane: xla::EvalLane| {
+        let d0 = xla::executed_instruction_count();
+        let i0 = xla::fused_instruction_count();
+        art.execute_lane(&inputs, lane).unwrap();
+        (xla::executed_instruction_count() - d0, xla::fused_instruction_count() - i0)
+    };
+    let (naive_disp, naive_instrs) = measure(&fused, xla::EvalLane::Naive);
+    let (unfused_disp, unfused_instrs) = measure(&unfused, xla::EvalLane::Compiled);
+    let (fused_disp, fused_instrs) = measure(&fused, xla::EvalLane::Compiled);
+
+    assert_eq!(naive_disp, naive_instrs, "nothing fuses on the naive walker");
+    assert_eq!(unfused_disp, unfused_instrs, "nothing fuses on the unfused schedule");
+    assert_eq!(naive_instrs, unfused_instrs, "same instruction set, '{name}'");
+    assert_eq!(fused_instrs, naive_instrs, "fused run must cover the same instruction set");
+    assert!(
+        fused_disp < unfused_disp,
+        "fusion must reduce dispatches on '{name}' ({fused_disp} vs {unfused_disp})"
+    );
 }

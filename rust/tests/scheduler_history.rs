@@ -313,6 +313,83 @@ fn shrunken_fleet_truncates_stale_lane_windows() {
     assert_eq!(h.lane_weights.as_ref().map(Vec::len), Some(3));
 }
 
+fn sized_cfg() -> SchedulerConfig {
+    SchedulerConfig { size_buckets: true, ..cfg() }
+}
+
+#[test]
+fn decision_flips_by_input_size_bucket() {
+    // the per-size tentpole invariant: one method, opposite settled lanes
+    // for small vs large inputs — a single all-sizes window could only
+    // ever pick one
+    let s = Scheduler::new(sized_cfg());
+    let m = "Crypt.pass";
+    let (small, large) = (2_000u64, 1 << 22);
+    for _ in 0..4 {
+        // small inputs: launch overhead dominates, SMP wins 1ms vs 30ms
+        s.record_smp_sized(m, Duration::from_millis(1), small);
+        s.record_device_sized(m, Duration::from_millis(30), &dev(0.030, 4096), small);
+        // large inputs: the device wins 2ms vs 80ms
+        s.record_smp_sized(m, Duration::from_millis(80), large);
+        s.record_device_sized(m, Duration::from_millis(2), &dev(0.002, 1 << 22), large);
+    }
+    assert_eq!(s.decide_sized(m, small), Choice::Smp);
+    assert_eq!(s.decide_sized(m, large), Choice::Device);
+    // the verdicts are stable under repeated queries (per-bucket
+    // hysteresis) and cover the whole bucket, not just the seen sizes
+    for _ in 0..10 {
+        assert_eq!(s.decide_sized(m, small + 47), Choice::Smp);
+        assert_eq!(s.decide_sized(m, large + 1000), Choice::Device);
+    }
+    // windows never leak across buckets
+    s.check_buckets().expect("bucketed windows stay disjoint");
+    let hs = s.bucket_history(m, somd::somd::scheduler::bucket_of(small)).unwrap();
+    let hl = s.bucket_history(m, somd::somd::scheduler::bucket_of(large)).unwrap();
+    assert_eq!(
+        (hs.items_min, hs.items_max),
+        (Some(small), Some(small)),
+        "small bucket saw only small invocations"
+    );
+    assert_eq!((hl.items_min, hl.items_max), (Some(large), Some(large)));
+    assert!(hs.device_estimate().unwrap() > hs.smp_estimate().unwrap());
+    assert!(hl.device_estimate().unwrap() < hl.smp_estimate().unwrap());
+}
+
+#[test]
+fn bucketed_snapshot_round_trips_and_legacy_snapshots_load() {
+    let s = Scheduler::new(sized_cfg());
+    let m = "SOR.sweep";
+    for _ in 0..4 {
+        s.record_smp_sized(m, Duration::from_millis(1), 500);
+        s.record_device_sized(m, Duration::from_millis(40), &dev(0.040, 2048), 500);
+        s.record_smp_sized(m, Duration::from_millis(40), 1 << 20);
+        s.record_device_sized(m, Duration::from_millis(1), &dev(0.001, 1 << 20), 1 << 20);
+    }
+    assert_eq!(s.decide_sized(m, 500), Choice::Smp);
+    assert_eq!(s.decide_sized(m, 1 << 20), Choice::Device);
+
+    // buckets survive a text round-trip bit-for-bit
+    let text = s.to_json().dump();
+    let parsed = Json::parse(&text).expect("bucketed snapshot parses");
+    let restored = Scheduler::from_json(sized_cfg(), &parsed).expect("snapshot restores");
+    assert_eq!(restored.history(m), s.history(m));
+    assert_eq!(restored.decide_sized(m, 500), Choice::Smp);
+    assert_eq!(restored.decide_sized(m, 1 << 20), Choice::Device);
+    restored.check_buckets().expect("restored buckets stay disjoint");
+
+    // a pre-bucket snapshot (no size_buckets key anywhere) loads as a
+    // single all-sizes history under a bucketing-enabled config
+    let legacy = r#"{"Old.m":{"smp_secs":[0.05,0.05],"device_secs":[0.001,0.001],
+        "smp_runs":2,"device_runs":2,"device_failures":0,
+        "bytes_h2d":64,"bytes_d2h":64,"launches":2,"last_choice":"device"}}"#;
+    let s2 = Scheduler::from_json(sized_cfg(), &Json::parse(legacy).unwrap())
+        .expect("legacy snapshot loads under a bucketing config");
+    let h = s2.history("Old.m").expect("history present");
+    assert!(h.size_buckets.is_empty(), "legacy state = one all-sizes bucket");
+    assert_eq!(s2.decide("Old.m"), Choice::Device, "aggregate learning still steers");
+    s2.check_buckets().expect("no buckets, no leaks");
+}
+
 #[test]
 fn windows_bound_memory_and_adapt() {
     let s = Scheduler::new(SchedulerConfig {

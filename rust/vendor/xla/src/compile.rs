@@ -33,7 +33,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::ops::Range;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::eval::{
     eval_reduce, fast_combine_elem, fast_combiner, gather_core, materialize_iota, pair_index,
@@ -242,6 +242,10 @@ enum Op {
     Scatter(Box<Instr>),
     Binary(BinOp),
     Unary(UnOp),
+    /// A fused elementwise chain: a post-order expression tape over
+    /// external inputs, evaluated tile-by-tile in a single dispatch
+    /// (see [`exec_fused`]).  Built by [`fuse_kernel`] after scheduling.
+    Fused(Arc<FusedKernel>),
 }
 
 /// Output shape of an instruction (tuple-shaped outputs never consult it).
@@ -302,17 +306,36 @@ struct Lowerer<'m> {
     comps: Vec<Option<CCKernel>>,
     index_of: HashMap<String, usize>,
     consts: Vec<RValue>,
+    fuse: bool,
+}
+
+/// Whether the `XLA_FUSE` knob enables the fusion pass (default on;
+/// `0`/`off`/`false`/`no` disable it).  Read per compile, not cached, so
+/// a single process can compile both forms for differential testing.
+pub(crate) fn fuse_enabled_env() -> bool {
+    match std::env::var("XLA_FUSE") {
+        Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "0" | "off" | "false" | "no"),
+        Err(_) => true,
+    }
 }
 
 /// Lower every computation reachable from the entry.  Errors mean "this
 /// module has no compiled form" — the caller falls back to the naive
 /// tree-walker, which reports the same unsupported construct at runtime.
+/// The elementwise fusion pass honors the `XLA_FUSE` env knob; use
+/// [`lower_module_with`] to pick a form explicitly.
 pub(crate) fn lower_module(module: &Arc<HloModule>) -> Result<CompiledModule> {
+    lower_module_with(module, fuse_enabled_env())
+}
+
+/// [`lower_module`] with the fusion pass explicitly on or off.
+pub(crate) fn lower_module_with(module: &Arc<HloModule>, fuse: bool) -> Result<CompiledModule> {
     let mut lw = Lowerer {
         module: module.as_ref(),
         comps: Vec::new(),
         index_of: HashMap::new(),
         consts: Vec::new(),
+        fuse,
     };
     let entry = lw.comp_index(&module.entry)?;
     let comps = lw
@@ -393,6 +416,13 @@ impl<'m> Lowerer<'m> {
                 ShapeTy::Tuple(_) => OutShape::Other,
             };
             instrs.push(CInstr { op, operands, out, free_after: Vec::new() });
+        }
+
+        // elementwise fusion: merge single-consumer chains into one
+        // dispatch *before* liveness, so the rebuilt schedule gets its
+        // own last-use analysis (and fused inputs still donate buffers)
+        if self.fuse {
+            instrs = fuse_kernel(instrs);
         }
 
         // last-use liveness: register r dies after the highest schedule
@@ -524,6 +554,741 @@ impl<'m> Lowerer<'m> {
 }
 
 // ---------------------------------------------------------------------------
+// Elementwise fusion
+// ---------------------------------------------------------------------------
+//
+// After topological scheduling, adjacent elementwise / compare / select /
+// scalar-broadcast instructions are greedily merged into one `Op::Fused`
+// whose body is a small post-order expression tape, evaluated tile by
+// tile in a single dispatch — one memory traversal where the unfused
+// schedule pays a full register-file round-trip per step.  Eligibility
+// mirrors the runtime checks of the standalone kernels exactly (supported
+// (op, dtype) pairs, operand lengths in {1, n}), so a chain the runtime
+// would reject never fuses and unsupported modules keep their exact error
+// behavior.  Interior members must have a single consumer and the same
+// element count as the fused root; scalar operands become pre-splatted
+// external inputs, which resolves `pair_index` at fusion time.
+
+/// A tape operand: an external input slot or an earlier tape step.
+#[derive(Clone, Copy, Debug)]
+enum TapeRef {
+    Input(usize),
+    Step(usize),
+}
+
+/// One fused constituent, in post-order (operands precede consumers).
+/// Compare widens by operand dtype exactly like the standalone kernel
+/// (floats through f64, everything else through i64).
+#[derive(Clone, Copy, Debug)]
+enum TapeStep {
+    Bin { op: BinOp, a: TapeRef, b: TapeRef },
+    Un { op: UnOp, a: TapeRef },
+    Cmp { dir: CmpDir, a: TapeRef, b: TapeRef },
+    Sel { p: TapeRef, t: TapeRef, f: TapeRef },
+}
+
+/// The compiled form of one fused chain.
+#[derive(Debug)]
+pub(crate) struct FusedKernel {
+    /// Post-order tape; the last step is the fused root.
+    steps: Vec<TapeStep>,
+    /// Output dtype of each step.
+    step_ty: Vec<ElementType>,
+    /// Dtype of each external input slot (the fused instr's operand order).
+    input_ty: Vec<ElementType>,
+    /// True when the external input is a scalar (length 1, pre-splatted).
+    input_scalar: Vec<bool>,
+    /// Output element count (== every non-scalar input's length).
+    n: usize,
+    /// Constituent instruction count (root + interiors + absorbed
+    /// broadcasts) — the kernel's weight in `fused_instruction_count`.
+    constituents: u64,
+    /// Scalar-value specialization state (guarded constant folding).
+    spec: Mutex<SpecState>,
+}
+
+/// Specialization state: the first execution records the bit patterns of
+/// the scalar inputs; later executions that observe the same values run
+/// a constant-folded tape.  A mismatch trips the guard — that run falls
+/// back to the generic tape, the offending slot is marked volatile and
+/// never folded again, and the fold is rebuilt without it.
+#[derive(Debug, Default)]
+struct SpecState {
+    runs: u64,
+    /// Observed bit pattern per scalar slot (first run).
+    observed: Vec<u64>,
+    /// Slots whose value changed at least once — excluded from folding.
+    volatile: Vec<bool>,
+    /// Steps pre-evaluated to length-1 constants under `observed`.
+    folded: Option<Arc<Vec<Option<Data>>>>,
+}
+
+/// The scalar's raw bit pattern (value identity, including NaN payloads
+/// and signed zeros — the guard must be at least as strict as `==`).
+fn scalar_bits(d: &Data) -> u64 {
+    match d {
+        Data::Pred(v) => v[0] as u64,
+        Data::S32(v) => v[0] as u32 as u64,
+        Data::S64(v) => v[0] as u64,
+        Data::U32(v) => v[0] as u64,
+        Data::U64(v) => v[0],
+        Data::F32(v) => v[0].to_bits() as u64,
+        Data::F64(v) => v[0].to_bits(),
+    }
+}
+
+/// Output dtype and element count of an array-shaped instruction.
+fn out_elems(ci: &CInstr) -> Option<(ElementType, usize)> {
+    match &ci.out {
+        OutShape::Array(ty, dims) => Some((*ty, dims.iter().product())),
+        OutShape::Other => None,
+    }
+}
+
+/// Whether instruction `p` can be a fused constituent of an `n`-element
+/// group (see the module-level eligibility notes above).
+fn fusible_at(instrs: &[CInstr], p: usize, n: usize) -> bool {
+    let ci = &instrs[p];
+    let Some((ty, pn)) = out_elems(ci) else { return false };
+    if pn != n {
+        return false;
+    }
+    let opnd = |k: usize| out_elems(&instrs[ci.operands[k]]);
+    let len_ok = |m: usize| m == 1 || m == n;
+    match &ci.op {
+        Op::Binary(op) => {
+            if ci.operands.len() != 2 || !bin_supported(*op, ty) {
+                return false;
+            }
+            match (opnd(0), opnd(1)) {
+                (Some((ta, la)), Some((tb, lb))) => {
+                    ta == ty && tb == ty && len_ok(la) && len_ok(lb)
+                }
+                _ => false,
+            }
+        }
+        Op::Unary(op) => {
+            if ci.operands.len() != 1 || *op == UnOp::Copy || !un_supported(*op, ty) {
+                return false;
+            }
+            // the standalone unary kernel requires a full-length operand
+            match opnd(0) {
+                Some((ta, la)) => ta == ty && la == n,
+                _ => false,
+            }
+        }
+        Op::Compare(_) => {
+            if ci.operands.len() != 2 || ty != ElementType::Pred {
+                return false;
+            }
+            match (opnd(0), opnd(1)) {
+                (Some((ta, la)), Some((tb, lb))) => ta == tb && len_ok(la) && len_ok(lb),
+                _ => false,
+            }
+        }
+        Op::Select => {
+            if ci.operands.len() != 3 {
+                return false;
+            }
+            match (opnd(0), opnd(1), opnd(2)) {
+                (Some((tp, lp)), Some((tt, lt)), Some((tf, lf))) => {
+                    tp == ElementType::Pred
+                        && tt == ty
+                        && tf == ty
+                        && len_ok(lp)
+                        && len_ok(lt)
+                        && len_ok(lf)
+                }
+                _ => false,
+            }
+        }
+        _ => false,
+    }
+}
+
+/// `q` broadcasts a scalar to the group's element count: absorbable.  Its
+/// scalar operand becomes a pre-splatted external input and the broadcast
+/// itself disappears into the fused dispatch.
+fn scalar_broadcast(instrs: &[CInstr], q: usize, n: usize) -> Option<usize> {
+    let ci = &instrs[q];
+    if !matches!(ci.op, Op::Broadcast { .. }) || ci.operands.len() != 1 {
+        return None;
+    }
+    let (ty, qn) = out_elems(ci)?;
+    let (sty, sn) = out_elems(&instrs[ci.operands[0]])?;
+    (qn == n && sn == 1 && sty == ty).then_some(ci.operands[0])
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Role {
+    Free,
+    Root,
+    Interior,
+    Absorbed,
+}
+
+/// The fusion pass: greedily claim maximal single-consumer elementwise
+/// chains, deepest roots first, then rebuild the schedule with each chain
+/// collapsed into one `Op::Fused` at its root's position.  `instrs` must
+/// be in topological order with the root last and `free_after` not yet
+/// computed; the returned schedule preserves both properties (liveness
+/// runs after fusion, so fused inputs still donate dying buffers).
+fn fuse_kernel(instrs: Vec<CInstr>) -> Vec<CInstr> {
+    let m = instrs.len();
+    let root_reg = m - 1;
+    let mut consumers = vec![0usize; m];
+    for ci in &instrs {
+        for &r in &ci.operands {
+            consumers[r] += 1;
+        }
+    }
+    let mut role = vec![Role::Free; m];
+    let mut groups: Vec<usize> = Vec::new();
+    for p in (0..m).rev() {
+        if role[p] != Role::Free {
+            continue;
+        }
+        let Some((_, n)) = out_elems(&instrs[p]) else { continue };
+        if !fusible_at(&instrs, p, n) {
+            continue;
+        }
+        // grow the group downward from the root's operands
+        let mut claimed: Vec<usize> = Vec::new();
+        let mut stack: Vec<usize> = instrs[p].operands.clone();
+        while let Some(q) = stack.pop() {
+            if role[q] != Role::Free || claimed.contains(&q) {
+                continue; // another group's value: external input edge
+            }
+            if consumers[q] != 1 || q == root_reg {
+                continue; // multi-consumer values stay materialized
+            }
+            let Some((_, qn)) = out_elems(&instrs[q]) else { continue };
+            if qn != n {
+                continue; // scalar (or mismatched) operand: external
+            }
+            if fusible_at(&instrs, q, n) {
+                claimed.push(q);
+                stack.extend(instrs[q].operands.iter().copied());
+            } else if scalar_broadcast(&instrs, q, n).is_some() {
+                claimed.push(q); // absorbed: splat resolved per run
+            }
+        }
+        if claimed.is_empty() {
+            continue; // a single instruction gains nothing from fusing
+        }
+        role[p] = Role::Root;
+        for &q in &claimed {
+            role[q] = if matches!(instrs[q].op, Op::Broadcast { .. }) {
+                Role::Absorbed
+            } else {
+                Role::Interior
+            };
+        }
+        groups.push(p);
+    }
+    if groups.is_empty() {
+        return instrs;
+    }
+
+    // build each group's tape, then rebuild the schedule without the
+    // claimed interiors (register = position, so operands are remapped)
+    let mut fused: HashMap<usize, (Arc<FusedKernel>, Vec<usize>)> = HashMap::new();
+    for &p in &groups {
+        let (_, n) = out_elems(&instrs[p]).expect("fused root is array-shaped");
+        let mut tb = TapeBuilder {
+            instrs: &instrs,
+            role: &role,
+            steps: Vec::new(),
+            step_ty: Vec::new(),
+            externals: Vec::new(),
+            input_ty: Vec::new(),
+            input_scalar: Vec::new(),
+            input_of: HashMap::new(),
+            step_of: HashMap::new(),
+            constituents: 0,
+        };
+        tb.member(p);
+        let kernel = FusedKernel {
+            steps: tb.steps,
+            step_ty: tb.step_ty,
+            input_ty: tb.input_ty,
+            input_scalar: tb.input_scalar,
+            n,
+            constituents: tb.constituents,
+            spec: Mutex::new(SpecState::default()),
+        };
+        fused.insert(p, (Arc::new(kernel), tb.externals));
+    }
+    let mut remap: Vec<Option<usize>> = vec![None; m];
+    let mut out: Vec<CInstr> = Vec::with_capacity(m);
+    for (p, ci) in instrs.into_iter().enumerate() {
+        match role[p] {
+            Role::Interior | Role::Absorbed => continue,
+            Role::Root => {
+                let (fk, externals) = fused.remove(&p).expect("group built");
+                let operands = externals
+                    .iter()
+                    .map(|&r| remap[r].expect("external precedes fused root"))
+                    .collect();
+                out.push(CInstr {
+                    op: Op::Fused(fk),
+                    operands,
+                    out: ci.out,
+                    free_after: Vec::new(),
+                });
+            }
+            Role::Free => {
+                let operands = ci
+                    .operands
+                    .iter()
+                    .map(|&r| remap[r].expect("operand precedes consumer"))
+                    .collect();
+                out.push(CInstr { op: ci.op, operands, out: ci.out, free_after: Vec::new() });
+            }
+        }
+        remap[p] = Some(out.len() - 1);
+    }
+    out
+}
+
+/// Builds one group's post-order tape (operands before consumers), with
+/// external inputs deduplicated by register.
+struct TapeBuilder<'a> {
+    instrs: &'a [CInstr],
+    role: &'a [Role],
+    steps: Vec<TapeStep>,
+    step_ty: Vec<ElementType>,
+    externals: Vec<usize>,
+    input_ty: Vec<ElementType>,
+    input_scalar: Vec<bool>,
+    input_of: HashMap<usize, usize>,
+    step_of: HashMap<usize, usize>,
+    constituents: u64,
+}
+
+impl TapeBuilder<'_> {
+    fn external(&mut self, r: usize) -> TapeRef {
+        if let Some(&k) = self.input_of.get(&r) {
+            return TapeRef::Input(k);
+        }
+        let (ty, len) = out_elems(&self.instrs[r]).expect("external input is array-shaped");
+        let k = self.externals.len();
+        self.externals.push(r);
+        self.input_ty.push(ty);
+        self.input_scalar.push(len == 1);
+        self.input_of.insert(r, k);
+        TapeRef::Input(k)
+    }
+
+    fn operand(&mut self, r: usize) -> TapeRef {
+        match self.role[r] {
+            Role::Interior => self.member(r),
+            Role::Absorbed => {
+                // the broadcast disappears; count it, splat its scalar
+                self.constituents += 1;
+                let scalar = self.instrs[r].operands[0];
+                self.external(scalar)
+            }
+            _ => self.external(r),
+        }
+    }
+
+    fn member(&mut self, q: usize) -> TapeRef {
+        if let Some(&s) = self.step_of.get(&q) {
+            return TapeRef::Step(s);
+        }
+        let instrs = self.instrs;
+        let ops = instrs[q].operands.clone();
+        let (ty, _) = out_elems(&instrs[q]).expect("member is array-shaped");
+        let step = match &instrs[q].op {
+            Op::Binary(op) => {
+                let (op, a) = (*op, self.operand(ops[0]));
+                let b = self.operand(ops[1]);
+                TapeStep::Bin { op, a, b }
+            }
+            Op::Unary(op) => {
+                let (op, a) = (*op, self.operand(ops[0]));
+                TapeStep::Un { op, a }
+            }
+            Op::Compare(dir) => {
+                let (dir, a) = (*dir, self.operand(ops[0]));
+                let b = self.operand(ops[1]);
+                TapeStep::Cmp { dir, a, b }
+            }
+            Op::Select => {
+                let p = self.operand(ops[0]);
+                let t = self.operand(ops[1]);
+                let f = self.operand(ops[2]);
+                TapeStep::Sel { p, t, f }
+            }
+            other => unreachable!("non-fusible op {other:?} claimed as member"),
+        };
+        self.steps.push(step);
+        self.step_ty.push(ty);
+        self.constituents += 1;
+        let s = self.steps.len() - 1;
+        self.step_of.insert(q, s);
+        TapeRef::Step(s)
+    }
+}
+
+// -- fused execution --------------------------------------------------------
+
+/// Tile size for the fused evaluator: small enough that every live
+/// buffer (one per input plus one per step) stays cache-resident, large
+/// enough to amortize the per-step dispatch.
+const FUSE_BLOCK: usize = 1024;
+
+fn tape_bin(op: BinOp, a: &Data, b: &Data, dst: &mut Data, len: usize) {
+    macro_rules! arm {
+        ($d:expr, $x:expr, $y:expr, $apply:ident) => {
+            for ((d, x), y) in $d[..len].iter_mut().zip(&$x[..len]).zip(&$y[..len]) {
+                *d = $apply(op, *x, *y);
+            }
+        };
+    }
+    match (dst, a, b) {
+        (Data::Pred(d), Data::Pred(x), Data::Pred(y)) => arm!(d, x, y, apply_pred),
+        (Data::S32(d), Data::S32(x), Data::S32(y)) => arm!(d, x, y, apply_s32),
+        (Data::S64(d), Data::S64(x), Data::S64(y)) => arm!(d, x, y, apply_s64),
+        (Data::U32(d), Data::U32(x), Data::U32(y)) => arm!(d, x, y, apply_u32),
+        (Data::U64(d), Data::U64(x), Data::U64(y)) => arm!(d, x, y, apply_u64),
+        (Data::F32(d), Data::F32(x), Data::F32(y)) => arm!(d, x, y, apply_f32),
+        (Data::F64(d), Data::F64(x), Data::F64(y)) => arm!(d, x, y, apply_f64),
+        _ => unreachable!("fused dtypes fixed at lowering"),
+    }
+}
+
+fn tape_un(op: UnOp, a: &Data, dst: &mut Data, len: usize) {
+    macro_rules! arm {
+        ($d:expr, $x:expr, $apply:ident) => {
+            for (d, x) in $d[..len].iter_mut().zip(&$x[..len]) {
+                *d = $apply(op, *x);
+            }
+        };
+    }
+    match (dst, a) {
+        (Data::Pred(d), Data::Pred(x)) => arm!(d, x, un_apply_pred),
+        (Data::S32(d), Data::S32(x)) => arm!(d, x, un_apply_s32),
+        (Data::S64(d), Data::S64(x)) => arm!(d, x, un_apply_s64),
+        (Data::U32(d), Data::U32(x)) => arm!(d, x, un_apply_u32),
+        (Data::U64(d), Data::U64(x)) => arm!(d, x, un_apply_u64),
+        (Data::F32(d), Data::F32(x)) => arm!(d, x, un_apply_f32),
+        (Data::F64(d), Data::F64(x)) => arm!(d, x, un_apply_f64),
+        _ => unreachable!("fused dtypes fixed at lowering"),
+    }
+}
+
+fn tape_cmp(dir: CmpDir, a: &Data, b: &Data, dst: &mut Data, len: usize) {
+    let d = match dst {
+        Data::Pred(d) => d,
+        _ => unreachable!("compare output is pred"),
+    };
+    // same widening as `cmp_range`: floats through f64, the rest through
+    // i64 (including the u64 wrap quirk of `Data::get_i64`)
+    macro_rules! arm {
+        ($x:expr, $y:expr, $cmp:ident, $conv:expr) => {
+            for ((d, x), y) in d[..len].iter_mut().zip(&$x[..len]).zip(&$y[..len]) {
+                *d = $cmp(dir, $conv(*x), $conv(*y));
+            }
+        };
+    }
+    match (a, b) {
+        (Data::F32(x), Data::F32(y)) => arm!(x, y, cmp_f64, |v: f32| v as f64),
+        (Data::F64(x), Data::F64(y)) => arm!(x, y, cmp_f64, |v: f64| v),
+        (Data::Pred(x), Data::Pred(y)) => arm!(x, y, cmp_i64, |v: bool| v as i64),
+        (Data::S32(x), Data::S32(y)) => arm!(x, y, cmp_i64, |v: i32| v as i64),
+        (Data::S64(x), Data::S64(y)) => arm!(x, y, cmp_i64, |v: i64| v),
+        (Data::U32(x), Data::U32(y)) => arm!(x, y, cmp_i64, |v: u32| v as i64),
+        (Data::U64(x), Data::U64(y)) => arm!(x, y, cmp_i64, |v: u64| v as i64),
+        _ => unreachable!("fused compare operands share a dtype"),
+    }
+}
+
+fn tape_sel(p: &Data, t: &Data, f: &Data, dst: &mut Data, len: usize) {
+    let p = match p {
+        Data::Pred(v) => v,
+        _ => unreachable!("select predicate is pred"),
+    };
+    macro_rules! arm {
+        ($d:expr, $t:expr, $f:expr) => {
+            for (((d, p), t), f) in
+                $d[..len].iter_mut().zip(&p[..len]).zip(&$t[..len]).zip(&$f[..len])
+            {
+                *d = if *p { *t } else { *f };
+            }
+        };
+    }
+    match (dst, t, f) {
+        (Data::Pred(d), Data::Pred(t), Data::Pred(f)) => arm!(d, t, f),
+        (Data::S32(d), Data::S32(t), Data::S32(f)) => arm!(d, t, f),
+        (Data::S64(d), Data::S64(t), Data::S64(f)) => arm!(d, t, f),
+        (Data::U32(d), Data::U32(t), Data::U32(f)) => arm!(d, t, f),
+        (Data::U64(d), Data::U64(t), Data::U64(f)) => arm!(d, t, f),
+        (Data::F32(d), Data::F32(t), Data::F32(f)) => arm!(d, t, f),
+        (Data::F64(d), Data::F64(t), Data::F64(f)) => arm!(d, t, f),
+        _ => unreachable!("fused select dtypes fixed at lowering"),
+    }
+}
+
+/// Evaluate a fused tape over `range`, writing output element `i` to
+/// `out[i - out_base]`.  A `None` source reads from `out` itself — the
+/// donated-buffer case, safe because each tile copies its input block
+/// into scratch *before* the root store overwrites that block.
+fn run_tape(
+    fk: &FusedKernel,
+    folded: Option<&[Option<Data>]>,
+    srcs: &[Option<Arc<Data>>],
+    out: &mut Data,
+    out_base: usize,
+    range: Range<usize>,
+) -> Result<()> {
+    let block = FUSE_BLOCK.min(range.len()).max(1);
+    let mut in_bufs: Vec<Data> = Vec::with_capacity(fk.input_ty.len());
+    for (k, &ty) in fk.input_ty.iter().enumerate() {
+        if fk.input_scalar[k] {
+            let src: &Data = match &srcs[k] {
+                Some(a) => a,
+                None => out,
+            };
+            in_bufs.push(src.splat(0, block));
+        } else {
+            in_bufs.push(Data::zeros(ty, block)?);
+        }
+    }
+    let root = fk.steps.len() - 1;
+    let mut step_bufs: Vec<Data> = Vec::with_capacity(fk.steps.len());
+    for (s, &ty) in fk.step_ty.iter().enumerate() {
+        match folded.and_then(|f| f[s].as_ref()) {
+            Some(c) => step_bufs.push(c.splat(0, block)),
+            None => step_bufs.push(Data::zeros(ty, block)?),
+        }
+    }
+    let mut off = range.start;
+    while off < range.end {
+        let len = block.min(range.end - off);
+        for (k, buf) in in_bufs.iter_mut().enumerate() {
+            if fk.input_scalar[k] {
+                continue;
+            }
+            let src: &Data = match &srcs[k] {
+                Some(a) => a,
+                None => out,
+            };
+            buf.copy_block(0, src, off, len)?;
+        }
+        for s in 0..fk.steps.len() {
+            if folded.is_some_and(|f| f[s].is_some()) {
+                continue;
+            }
+            let (done, rest) = step_bufs.split_at_mut(s);
+            let dst = &mut rest[0];
+            let buf = |r: TapeRef| -> &Data {
+                match r {
+                    TapeRef::Input(k) => &in_bufs[k],
+                    TapeRef::Step(j) => &done[j],
+                }
+            };
+            match fk.steps[s] {
+                TapeStep::Bin { op, a, b } => tape_bin(op, buf(a), buf(b), dst, len),
+                TapeStep::Un { op, a } => tape_un(op, buf(a), dst, len),
+                TapeStep::Cmp { dir, a, b } => tape_cmp(dir, buf(a), buf(b), dst, len),
+                TapeStep::Sel { p, t, f } => tape_sel(buf(p), buf(t), buf(f), dst, len),
+            }
+        }
+        out.copy_block(off - out_base, &step_bufs[root], 0, len)?;
+        off += len;
+    }
+    Ok(())
+}
+
+impl FusedKernel {
+    /// Constituent instruction count (bench/test surface).
+    pub(crate) fn constituent_count(&self) -> u64 {
+        self.constituents
+    }
+
+    /// Scalar-value specialization with a guard (see [`SpecState`]).
+    fn specialize(&self, inputs: &[Option<Arc<Data>>]) -> Option<Arc<Vec<Option<Data>>>> {
+        let scalars: Vec<usize> =
+            (0..self.input_scalar.len()).filter(|&k| self.input_scalar[k]).collect();
+        if scalars.is_empty() {
+            return None;
+        }
+        let cur: Vec<u64> = scalars
+            .iter()
+            .map(|&k| scalar_bits(inputs[k].as_ref().expect("input present")))
+            .collect();
+        let mut st = self.spec.lock().expect("spec lock");
+        st.runs += 1;
+        if st.runs == 1 {
+            st.observed = cur;
+            st.volatile = vec![false; scalars.len()];
+            return None;
+        }
+        let mut tripped = false;
+        for (j, &bits) in cur.iter().enumerate() {
+            if !st.volatile[j] && st.observed[j] != bits {
+                st.volatile[j] = true;
+                tripped = true;
+            }
+        }
+        if tripped {
+            // guard failed: generic fallback this run, fold rebuilt
+            // without the volatile slots on the next clean run
+            st.folded = None;
+            return None;
+        }
+        if st.volatile.iter().all(|&v| v) {
+            return None;
+        }
+        if st.folded.is_none() {
+            st.folded = Some(Arc::new(self.fold(&st.volatile, &scalars, inputs)));
+        }
+        st.folded.clone()
+    }
+
+    /// Pre-evaluate every step whose operands are all stable scalars (or
+    /// already-folded steps) to a length-1 constant.
+    fn fold(
+        &self,
+        volatile: &[bool],
+        scalars: &[usize],
+        inputs: &[Option<Arc<Data>>],
+    ) -> Vec<Option<Data>> {
+        let mut const_in = vec![false; self.input_ty.len()];
+        for (j, &k) in scalars.iter().enumerate() {
+            const_in[k] = !volatile[j];
+        }
+        let mut folded: Vec<Option<Data>> = Vec::with_capacity(self.steps.len());
+        for (s, step) in self.steps.iter().enumerate() {
+            let is_const = |r: TapeRef, folded: &[Option<Data>]| match r {
+                TapeRef::Input(k) => const_in[k],
+                TapeRef::Step(j) => folded[j].is_some(),
+            };
+            let all_const = match *step {
+                TapeStep::Bin { a, b, .. } => is_const(a, &folded) && is_const(b, &folded),
+                TapeStep::Un { a, .. } => is_const(a, &folded),
+                TapeStep::Cmp { a, b, .. } => is_const(a, &folded) && is_const(b, &folded),
+                TapeStep::Sel { p, t, f } => {
+                    is_const(p, &folded) && is_const(t, &folded) && is_const(f, &folded)
+                }
+            };
+            if !all_const {
+                folded.push(None);
+                continue;
+            }
+            let get = |r: TapeRef, folded: &[Option<Data>]| -> Data {
+                match r {
+                    TapeRef::Input(k) => inputs[k].as_ref().expect("input present").splat(0, 1),
+                    TapeRef::Step(j) => folded[j].clone().expect("folded step"),
+                }
+            };
+            let mut dst = Data::zeros(self.step_ty[s], 1).expect("scalar buffer");
+            match *step {
+                TapeStep::Bin { op, a, b } => {
+                    tape_bin(op, &get(a, &folded), &get(b, &folded), &mut dst, 1)
+                }
+                TapeStep::Un { op, a } => tape_un(op, &get(a, &folded), &mut dst, 1),
+                TapeStep::Cmp { dir, a, b } => {
+                    tape_cmp(dir, &get(a, &folded), &get(b, &folded), &mut dst, 1)
+                }
+                TapeStep::Sel { p, t, f } => {
+                    tape_sel(&get(p, &folded), &get(t, &folded), &get(f, &folded), &mut dst, 1)
+                }
+            }
+            folded.push(Some(dst));
+        }
+        folded
+    }
+}
+
+/// Execute a fused kernel: specialize/guard on scalar inputs, then run
+/// the tape serially (donating a uniquely-owned dying input's buffer when
+/// length and dtype line up) or chunked across the worker pool.
+fn exec_fused(
+    fk: &Arc<FusedKernel>,
+    ops: Vec<RValue>,
+    ty: ElementType,
+    dims: Vec<usize>,
+) -> Result<RValue> {
+    let n = fk.n;
+    if ops.len() != fk.input_ty.len() {
+        return Err(Error("fused operand count mismatch".into()));
+    }
+    eval::note_fused_extra(fk.constituents.saturating_sub(1));
+    let mut inputs: Vec<Option<Arc<Data>>> = Vec::with_capacity(ops.len());
+    for v in ops {
+        inputs.push(Some(v.into_rtensor()?.data));
+    }
+    let folded = fk.specialize(&inputs);
+    if parallel::should_parallelize(n) {
+        let arcs: Vec<Arc<Data>> =
+            inputs.into_iter().map(|a| a.expect("input present")).collect();
+        let make = {
+            let fk = fk.clone();
+            let folded = folded.clone();
+            move |r: Range<usize>| -> Data {
+                let srcs: Vec<Option<Arc<Data>>> = arcs.iter().cloned().map(Some).collect();
+                let mut chunk = Data::zeros(ty, r.len()).expect("chunk alloc");
+                let f = folded.as_deref().map(|v| v.as_slice());
+                run_tape(&fk, f, &srcs, &mut chunk, r.start, r.clone())
+                    .expect("fused tape eval");
+                chunk
+            }
+        };
+        macro_rules! par_fused {
+            ($variant:ident) => {
+                Data::$variant(parallel::build_chunked(n, move |r| match make(r) {
+                    Data::$variant(v) => v,
+                    _ => unreachable!("fused output dtype fixed at lowering"),
+                }))
+            };
+        }
+        let data = match Data::zeros(ty, 0)? {
+            Data::Pred(_) => par_fused!(Pred),
+            Data::S32(_) => par_fused!(S32),
+            Data::S64(_) => par_fused!(S64),
+            Data::U32(_) => par_fused!(U32),
+            Data::U64(_) => par_fused!(U64),
+            Data::F32(_) => par_fused!(F32),
+            Data::F64(_) => par_fused!(F64),
+        };
+        return Ok(RValue::T(RTensor::new(dims, data)));
+    }
+    // serial: donate a uniquely-owned, full-size input of the output
+    // dtype (dying registers were dropped before this kernel ran, so
+    // unique ownership means "no other live user")
+    let mut out: Option<Data> = None;
+    for k in 0..inputs.len() {
+        if fk.input_scalar[k] {
+            continue;
+        }
+        let fits = {
+            let a = inputs[k].as_ref().expect("input present");
+            a.len() == n && a.dtype() == ty
+        };
+        if !fits {
+            continue;
+        }
+        let arc = inputs[k].take().expect("input present");
+        match Arc::try_unwrap(arc) {
+            Ok(d) => {
+                out = Some(d);
+                break;
+            }
+            Err(arc) => inputs[k] = Some(arc),
+        }
+    }
+    let mut out = match out {
+        Some(d) => d,
+        None => Data::zeros(ty, n)?,
+    };
+    run_tape(fk, folded.as_deref().map(|v| v.as_slice()), &inputs, &mut out, 0, 0..n)?;
+    Ok(RValue::T(RTensor::new(dims, out)))
+}
+
+// ---------------------------------------------------------------------------
 // Execution
 // ---------------------------------------------------------------------------
 
@@ -534,9 +1299,47 @@ impl CompiledModule {
         Ok(self.run_computation(self.entry, rargs)?.into_value())
     }
 
-    /// Total lowered instructions across all computations (bench surface).
+    /// Total lowered instructions across all computations (bench
+    /// surface).  Under fusion this counts *dispatches*: a fused chain
+    /// is one instruction here; see [`Self::static_constituent_count`].
     pub(crate) fn static_instruction_count(&self) -> usize {
         self.comps.iter().map(|c| c.instrs.len()).sum()
+    }
+
+    /// Total constituent instructions — fused chains counted by their
+    /// members, everything else as 1.  Equals the unfused schedule's
+    /// `static_instruction_count`.
+    pub(crate) fn static_constituent_count(&self) -> usize {
+        self.comps
+            .iter()
+            .flat_map(|c| c.instrs.iter())
+            .map(|i| match &i.op {
+                Op::Fused(fk) => fk.constituents as usize,
+                _ => 1,
+            })
+            .sum()
+    }
+
+    /// Number of `Op::Fused` dispatch sites across all computations.
+    pub(crate) fn fused_kernel_count(&self) -> usize {
+        self.comps
+            .iter()
+            .flat_map(|c| c.instrs.iter())
+            .filter(|i| matches!(i.op, Op::Fused(_)))
+            .count()
+    }
+
+    /// Largest constituent count among fused kernels (0 when none).
+    pub(crate) fn max_fused_constituents(&self) -> u64 {
+        self.comps
+            .iter()
+            .flat_map(|c| c.instrs.iter())
+            .filter_map(|i| match &i.op {
+                Op::Fused(fk) => Some(fk.constituent_count()),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     fn run_computation(&self, ci: usize, mut args: Vec<RValue>) -> Result<RValue> {
@@ -638,6 +1441,11 @@ impl CompiledModule {
                 let dims = dims.to_vec();
                 let t = ops.swap_remove(0).into_rtensor()?;
                 exec_unary(*op, t, dims)
+            }
+            Op::Fused(fk) => {
+                let (ty, dims) = ins.out.array()?;
+                let dims = dims.to_vec();
+                exec_fused(fk, ops, ty, dims)
             }
             Op::ReduceFast { red, fc } => {
                 let init = ops.pop().ok_or_else(|| Error("reduce needs input + init".into()))?;
@@ -1770,7 +2578,8 @@ ENTRY %main.20 {
     fn liveness_frees_dead_registers() {
         let text = "HloModule m\n\nENTRY e.4 {\n  a.1 = f32[2]{0} parameter(0)\n  n.2 = f32[2]{0} negate(a.1)\n  m.3 = f32[2]{0} multiply(n.2, n.2)\n  ROOT s.4 = f32[2]{0} add(m.3, a.1)\n}\n";
         let m = Arc::new(parse_module(text).unwrap());
-        let cm = lower_module(&m).unwrap();
+        // fusion off: this pins the *unfused* schedule's liveness
+        let cm = lower_module_with(&m, false).unwrap();
         let comp = &cm.comps[cm.entry];
         // every non-root register must die somewhere
         let freed: usize = comp.instrs.iter().map(|i| i.free_after.len()).sum();
@@ -1836,5 +2645,130 @@ ENTRY %e.4 {
         let arg = RValue::T(input).into_value();
         let naive = crate::eval::execute_module(&m, std::slice::from_ref(&arg)).unwrap();
         assert_eq!(serial, naive);
+    }
+
+    const CHAIN: &str = "HloModule m\n\nENTRY e.9 {\n  a.1 = f32[4]{0} parameter(0)\n  b.2 = f32[4]{0} parameter(1)\n  s.3 = f32[4]{0} add(a.1, b.2)\n  m.4 = f32[4]{0} multiply(s.3, a.1)\n  n.5 = f32[4]{0} negate(m.4)\n  ROOT d.6 = f32[4]{0} divide(n.5, b.2)\n}\n";
+
+    fn f32s(x: f32) -> Value {
+        Value::T(Tensor::new(vec![], Data::F32(vec![x])).unwrap())
+    }
+
+    #[test]
+    fn fusion_collapses_elementwise_chain() {
+        let m = Arc::new(parse_module(CHAIN).unwrap());
+        let fused = lower_module_with(&m, true).unwrap();
+        let unfused = lower_module_with(&m, false).unwrap();
+        // add -> multiply -> negate -> divide collapses to one dispatch
+        assert_eq!(fused.fused_kernel_count(), 1);
+        assert_eq!(fused.max_fused_constituents(), 4);
+        assert!(fused.static_instruction_count() < unfused.static_instruction_count());
+        assert_eq!(fused.static_constituent_count(), unfused.static_instruction_count());
+        let args = [f32v(vec![1.0, -2.5, 3.0, 0.25]), f32v(vec![2.0, 4.0, -1.0, 8.0])];
+        let naive = crate::eval::execute_module(&m, &args).unwrap();
+        assert_eq!(fused.execute(args.to_vec()).unwrap(), naive);
+        assert_eq!(unfused.execute(args.to_vec()).unwrap(), naive);
+    }
+
+    #[test]
+    fn fused_counters_track_dispatches_and_constituents() {
+        let m = Arc::new(parse_module(CHAIN).unwrap());
+        let fused = lower_module_with(&m, true).unwrap();
+        let unfused = lower_module_with(&m, false).unwrap();
+        let args = [f32v(vec![1.0, -2.5, 3.0, 0.25]), f32v(vec![2.0, 4.0, -1.0, 8.0])];
+        let (d0, f0) =
+            (crate::eval::executed_instruction_count(), crate::eval::fused_instruction_count());
+        let rf = fused.execute(args.to_vec()).unwrap();
+        let (d1, f1) =
+            (crate::eval::executed_instruction_count(), crate::eval::fused_instruction_count());
+        // dispatches drop, constituent count is preserved exactly
+        assert_eq!(d1 - d0, fused.static_instruction_count() as u64);
+        assert_eq!(f1 - f0, fused.static_constituent_count() as u64);
+        assert!(d1 - d0 < f1 - f0);
+        let ru = unfused.execute(args.to_vec()).unwrap();
+        let (d2, f2) =
+            (crate::eval::executed_instruction_count(), crate::eval::fused_instruction_count());
+        // the unfused lane dispatches one kernel per constituent
+        assert_eq!(d2 - d1, unfused.static_instruction_count() as u64);
+        assert_eq!(d2 - d1, f2 - f1);
+        assert_eq!(f2 - f1, f1 - f0);
+        assert_eq!(rf, ru);
+    }
+
+    #[test]
+    fn fusion_keeps_multi_consumer_values_materialized() {
+        // negate's output feeds three operand slots: it must stay a real
+        // register, with only multiply -> add fusing above it
+        let text = "HloModule m\n\nENTRY e.5 {\n  a.1 = f32[4]{0} parameter(0)\n  n.2 = f32[4]{0} negate(a.1)\n  m.3 = f32[4]{0} multiply(n.2, n.2)\n  ROOT s.4 = f32[4]{0} add(m.3, n.2)\n}\n";
+        let m = Arc::new(parse_module(text).unwrap());
+        let cm = lower_module_with(&m, true).unwrap();
+        assert_eq!(cm.fused_kernel_count(), 1);
+        assert_eq!(cm.max_fused_constituents(), 2);
+        assert_eq!(cm.static_instruction_count(), 3); // param, negate, fused
+        let args = [f32v(vec![1.5, -2.0, 0.0, 7.0])];
+        let naive = crate::eval::execute_module(&m, &args).unwrap();
+        assert_eq!(cm.execute(args.to_vec()).unwrap(), naive);
+    }
+
+    #[test]
+    fn fusion_matches_naive_on_compare_select_broadcast() {
+        // compare + select + absorbed scalar broadcast in one tape
+        let text = "HloModule m\n\nENTRY e.8 {\n  x.1 = f32[5]{0} parameter(0)\n  y.2 = f32[5]{0} parameter(1)\n  z.3 = f32[] constant(0)\n  zb.4 = f32[5]{0} broadcast(z.3), dimensions={}\n  c.5 = pred[5]{0} compare(x.1, zb.4), direction=GT\n  s.6 = f32[5]{0} select(c.5, x.1, y.2)\n  ROOT a.7 = f32[5]{0} add(s.6, y.2)\n}\n";
+        let m = Arc::new(parse_module(text).unwrap());
+        let cm = lower_module_with(&m, true).unwrap();
+        assert!(cm.fused_kernel_count() >= 1);
+        assert!(cm.max_fused_constituents() >= 3);
+        let args = [f32v(vec![1.0, -2.0, 0.0, 3.5, -0.5]), f32v(vec![9.0, 8.0, 7.0, 6.0, 5.0])];
+        let naive = crate::eval::execute_module(&m, &args).unwrap();
+        assert_eq!(cm.execute(args.to_vec()).unwrap(), naive);
+    }
+
+    #[test]
+    fn scalar_specialization_guard_and_fold() {
+        // multiply(broadcast(s), broadcast(t)) folds to a constant once
+        // both scalars have been observed stable; changing one trips the
+        // guard and must fall back without changing results
+        let text = "HloModule m\n\nENTRY e.8 {\n  x.1 = f32[8]{0} parameter(0)\n  s.2 = f32[] parameter(1)\n  t.3 = f32[] parameter(2)\n  bs.4 = f32[8]{0} broadcast(s.2), dimensions={}\n  bt.5 = f32[8]{0} broadcast(t.3), dimensions={}\n  m.6 = f32[8]{0} multiply(bs.4, bt.5)\n  ROOT a.7 = f32[8]{0} add(x.1, m.6)\n}\n";
+        let m = Arc::new(parse_module(text).unwrap());
+        let cm = lower_module_with(&m, true).unwrap();
+        assert_eq!(cm.fused_kernel_count(), 1);
+        assert_eq!(cm.max_fused_constituents(), 4); // add, multiply, 2 broadcasts
+        let x = f32v(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let run = |s: f32, t: f32| {
+            let args = vec![x.clone(), f32s(s), f32s(t)];
+            let naive = crate::eval::execute_module(&m, &args).unwrap();
+            assert_eq!(cm.execute(args).unwrap(), naive, "s={s} t={t}");
+        };
+        run(2.0, 0.5); // run 1: records scalar bit patterns
+        run(2.0, 0.5); // run 2: builds and uses the fold
+        run(2.0, 0.5); // run 3: cached fold
+        run(2.0, -3.0); // guard trips: t goes volatile, generic fallback
+        run(2.0, -3.0); // fold rebuilt without t (nothing left to fold)
+        run(9.0, 1.0); // s volatile too: fully generic from here on
+    }
+
+    #[test]
+    fn fused_parallel_path_matches_unfused() {
+        // past the parallel threshold the fused tape runs chunked across
+        // the pool; results must stay bitwise-equal to the unfused lane
+        let n = 70_000usize;
+        let text = format!(
+            "HloModule m\n\nENTRY e.9 {{\n  a.1 = f32[{n}]{{0}} parameter(0)\n  b.2 = f32[{n}]{{0}} parameter(1)\n  s.3 = f32[{n}]{{0}} add(a.1, b.2)\n  m.4 = f32[{n}]{{0}} multiply(s.3, a.1)\n  n.5 = f32[{n}]{{0}} negate(m.4)\n  ROOT d.6 = f32[{n}]{{0}} divide(n.5, b.2)\n}}\n"
+        );
+        let m = Arc::new(parse_module(&text).unwrap());
+        let fused = lower_module_with(&m, true).unwrap();
+        let unfused = lower_module_with(&m, false).unwrap();
+        assert_eq!(fused.fused_kernel_count(), 1);
+        let mut a = Vec::with_capacity(n);
+        let mut b = Vec::with_capacity(n);
+        let mut x = 0.3f32;
+        for i in 0..n {
+            x = (x * 1.9).rem_euclid(2.7) - 1.2;
+            a.push(x);
+            b.push(x + 0.5 + (i % 7) as f32);
+        }
+        let args = [f32v(a), f32v(b)];
+        let rf = fused.execute(args.to_vec()).unwrap();
+        let ru = unfused.execute(args.to_vec()).unwrap();
+        assert_eq!(rf, ru);
     }
 }

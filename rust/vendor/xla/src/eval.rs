@@ -17,10 +17,14 @@ thread_local! {
     /// compiled lane parses at lowering time only; steady-state executes
     /// must leave this counter untouched (regression-tested).
     static CONST_PARSES: Cell<u64> = const { Cell::new(0) };
-    /// HLO instructions executed on this thread (both lanes; while-loop
-    /// bodies count once per iteration).  Basis of the interp bench's
-    /// ops/s metric.
+    /// Kernel *dispatches* on this thread (both lanes; while-loop bodies
+    /// count once per iteration).  A fused chain is one dispatch.  Basis
+    /// of the interp bench's ops/s metric.
     static EXEC_INSTRS: Cell<u64> = const { Cell::new(0) };
+    /// HLO instructions executed on this thread, counting a fused chain
+    /// by its constituent count.  Always >= `EXEC_INSTRS`; the two are
+    /// equal when nothing fuses, and the gap measures fusion coverage.
+    static FUSED_INSTRS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Constant-literal parses performed on this thread so far.
@@ -28,9 +32,16 @@ pub fn constant_parse_count() -> u64 {
     CONST_PARSES.with(|c| c.get())
 }
 
-/// HLO instructions executed on this thread so far.
+/// Kernel dispatches on this thread so far (a fused chain counts once).
 pub fn executed_instruction_count() -> u64 {
     EXEC_INSTRS.with(|c| c.get())
+}
+
+/// HLO instructions executed on this thread so far, with fused chains
+/// counted by their constituents — comparable across fused and unfused
+/// schedules of the same module.
+pub fn fused_instruction_count() -> u64 {
+    FUSED_INSTRS.with(|c| c.get())
 }
 
 pub(crate) fn note_const_parse() {
@@ -39,6 +50,13 @@ pub(crate) fn note_const_parse() {
 
 pub(crate) fn note_exec(n: u64) {
     EXEC_INSTRS.with(|c| c.set(c.get() + n));
+    FUSED_INSTRS.with(|c| c.set(c.get() + n));
+}
+
+/// Credit a fused dispatch with its extra constituents (beyond the one
+/// dispatch `note_exec` already counted).
+pub(crate) fn note_fused_extra(n: u64) {
+    FUSED_INSTRS.with(|c| c.set(c.get() + n));
 }
 
 /// Evaluate the module's entry computation over `args`.

@@ -42,6 +42,14 @@ pub fn executed_instruction_count() -> u64 {
     eval::executed_instruction_count()
 }
 
+/// HLO instructions executed on the calling thread so far, counting a
+/// fused kernel by its constituent instructions.  Equal to
+/// [`executed_instruction_count`] when nothing fuses; the gap between
+/// the two is the number of dispatches fusion eliminated.
+pub fn fused_instruction_count() -> u64 {
+    eval::fused_instruction_count()
+}
+
 /// Which interpreter lane executes a module.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvalLane {
@@ -314,6 +322,23 @@ impl PjRtClient {
         })
     }
 
+    /// Like [`Self::compile`] but with elementwise fusion forced on or
+    /// off, ignoring `XLA_FUSE`.  The programmatic path for in-process
+    /// fused-vs-unfused comparisons (env mutation would race threads).
+    pub fn compile_with_fusion(
+        &self,
+        comp: &XlaComputation,
+        fuse: bool,
+    ) -> Result<PjRtLoadedExecutable> {
+        comp.module.entry_computation()?;
+        let compiled = compile::lower_module_with(&comp.module, fuse).ok().map(Arc::new);
+        Ok(PjRtLoadedExecutable {
+            module: comp.module.clone(),
+            compiled,
+            _confined: PhantomData,
+        })
+    }
+
     /// Upload a host slice as a device buffer.
     pub fn buffer_from_host_buffer<T: NativeType>(
         &self,
@@ -367,8 +392,28 @@ impl PjRtLoadedExecutable {
     }
 
     /// Total lowered instructions across all computations, if compiled.
+    /// Under fusion this counts *dispatches* — a fused chain is one; see
+    /// [`Self::compiled_constituent_count`] for the pre-fusion count.
     pub fn compiled_instruction_count(&self) -> Option<usize> {
         self.compiled.as_ref().map(|c| c.static_instruction_count())
+    }
+
+    /// Total constituent instructions (fused chains counted by their
+    /// members), if compiled.  Equals `compiled_instruction_count` of
+    /// the unfused schedule of the same module.
+    pub fn compiled_constituent_count(&self) -> Option<usize> {
+        self.compiled.as_ref().map(|c| c.static_constituent_count())
+    }
+
+    /// Number of fused dispatch sites in the schedule, if compiled.
+    pub fn fused_kernel_count(&self) -> Option<usize> {
+        self.compiled.as_ref().map(|c| c.fused_kernel_count())
+    }
+
+    /// Largest fused chain's constituent count, if compiled (0 when
+    /// nothing fused).
+    pub fn max_fused_constituents(&self) -> Option<u64> {
+        self.compiled.as_ref().map(|c| c.max_fused_constituents())
     }
 
     fn run_lane(&self, args: Vec<Value>, lane: EvalLane) -> Result<Vec<Vec<PjRtBuffer>>> {
