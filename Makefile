@@ -2,7 +2,7 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-cluster bench-serve
+.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-cluster bench-serve bench-pipeline
 
 # The one-stop gate: build everything (library, binaries, benches AND
 # examples), run both test suites, then the docs checks.
@@ -72,3 +72,11 @@ bench-cluster:
 bench-serve:
 	cd rust && cargo test --release --test serve_batching
 	cd rust && cargo run --release -- bench serve --check
+
+# method pipelines: bitwise fused-vs-roundtrip suite under BOTH fusion
+# schedules, then the fused report with the not-slower + provably
+# resident-boundary gates (writes rust/BENCH_pipeline.json)
+bench-pipeline:
+	cd rust && XLA_FUSE=off cargo test --release --test pipeline_exec
+	cd rust && XLA_FUSE=on cargo test --release --test pipeline_exec
+	cd rust && cargo run --release -- bench pipeline --check

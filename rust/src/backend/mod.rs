@@ -27,8 +27,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::device::{DeviceProfile, DeviceSession, DeviceStats};
-use crate::runtime::Registry;
+use crate::device::{BufId, DeviceProfile, DeviceSession, DeviceStats};
+use crate::runtime::{HostTensor, Registry};
 use crate::somd::distribution::Range1;
 use crate::somd::engine::Engine;
 use crate::somd::master::SomdMethod;
@@ -168,6 +168,83 @@ impl<I: ?Sized, R> ClusterSpec<I, R> {
     }
 }
 
+/// How one method participates as a *stage* of an
+/// [`ExecutionPlan`](crate::somd::pipeline::ExecutionPlan): type-erased
+/// evaluators over the pipeline's wire format — host tensors between
+/// host-side lanes, resident device buffers between fused device stages.
+///
+/// * `smp` — host tensors in, host tensors out, on the SMP pool (always
+///   present — the universal fallback, §6, extended to pipelines).
+/// * `device` — resident buffers in, resident buffers out on one
+///   [`DeviceSession`].  The stage takes ownership of its input handles
+///   (it frees or forwards them) and its outputs *stay resident* for the
+///   downstream stage — the whole point of the pipeline layer.
+/// * `hybrid` — host tensors in/out, co-executed across SMP + device at
+///   a **fixed** fraction (`SOMD_PIPELINE_HYBRID_FRACTION`): a learned
+///   ratio would make the fused and reference runs split differently and
+///   break the suite's bitwise-equality contract for order-sensitive
+///   float reductions.
+///
+/// The contract the pipeline suite enforces: for equal input tensors,
+/// every evaluator produces bitwise-identical output tensors under the
+/// same lane — residency is an execution-schedule choice, never a
+/// semantic one (the same promise [`BatchSpec`] makes for coalescing).
+pub struct PipelineSpec {
+    pub(crate) smp: Box<dyn Fn(&[HostTensor]) -> Result<Vec<HostTensor>> + Send + Sync>,
+    pub(crate) device: Option<
+        Box<
+            dyn for<'r> Fn(&mut DeviceSession<'r>, Vec<BufId>) -> Result<Vec<BufId>>
+                + Send
+                + Sync,
+        >,
+    >,
+    pub(crate) hybrid:
+        Option<Box<dyn Fn(&Engine, &Registry, &[HostTensor]) -> Result<Vec<HostTensor>> + Send + Sync>>,
+}
+
+impl PipelineSpec {
+    /// A stage with only the (always-applicable) SMP evaluator.
+    pub fn new(
+        smp: impl Fn(&[HostTensor]) -> Result<Vec<HostTensor>> + Send + Sync + 'static,
+    ) -> Self {
+        Self { smp: Box::new(smp), device: None, hybrid: None }
+    }
+
+    /// Attach a resident-buffer device evaluator (builder style).
+    pub fn with_device(
+        mut self,
+        device: impl for<'r> Fn(&mut DeviceSession<'r>, Vec<BufId>) -> Result<Vec<BufId>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Self {
+        self.device = Some(Box::new(device));
+        self
+    }
+
+    /// Attach a fixed-fraction hybrid evaluator (builder style).
+    pub fn with_hybrid(
+        mut self,
+        hybrid: impl Fn(&Engine, &Registry, &[HostTensor]) -> Result<Vec<HostTensor>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Self {
+        self.hybrid = Some(Box::new(hybrid));
+        self
+    }
+
+    /// Whether a resident-buffer device evaluator is attached.
+    pub fn has_device(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// Whether a fixed-fraction hybrid evaluator is attached.
+    pub fn has_hybrid(&self) -> bool {
+        self.hybrid.is_some()
+    }
+}
+
 /// The device half's successful outcome, as handed to the shared hybrid
 /// merge ([`HeteroMethod::finish_hybrid`]) by both the sync and the
 /// async lane.
@@ -229,6 +306,7 @@ pub struct HeteroMethod<I: ?Sized, P, E, R> {
     hybrid: Option<HybridSpec<I, R>>,
     batch: Option<BatchSpec<I, R>>,
     cluster: Option<ClusterSpec<I, R>>,
+    pipeline: Option<PipelineSpec>,
 }
 
 /// Where an invocation actually ran (after fallback resolution).
@@ -300,12 +378,19 @@ pub struct ShardLane {
 impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R> {
     /// A method with only the (always-applicable) SMP version.
     pub fn smp_only(smp: SomdMethod<I, P, E, R>) -> Self {
-        Self { smp, device: None, hybrid: None, batch: None, cluster: None }
+        Self { smp, device: None, hybrid: None, batch: None, cluster: None, pipeline: None }
     }
 
     /// A method with an SMP version and a whole-invocation device version.
     pub fn with_device(smp: SomdMethod<I, P, E, R>, device: DeviceFn<I, R>) -> Self {
-        Self { smp, device: Some(device), hybrid: None, batch: None, cluster: None }
+        Self {
+            smp,
+            device: Some(device),
+            hybrid: None,
+            batch: None,
+            cluster: None,
+            pipeline: None,
+        }
     }
 
     /// Attach a hybrid co-execution spec (builder style).
@@ -327,6 +412,25 @@ impl<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send> HeteroMethod<I, P, E, R
     pub fn with_cluster(mut self, cluster: ClusterSpec<I, R>) -> Self {
         self.cluster = Some(cluster);
         self
+    }
+
+    /// Attach a pipeline-stage spec so an
+    /// [`ExecutionPlan`](crate::somd::pipeline::ExecutionPlan) can chain
+    /// this method with device-resident intermediates (builder style).
+    pub fn with_pipeline(mut self, pipeline: PipelineSpec) -> Self {
+        self.pipeline = Some(pipeline);
+        self
+    }
+
+    /// Whether a pipeline-stage spec is attached.
+    pub fn has_pipeline_version(&self) -> bool {
+        self.pipeline.is_some()
+    }
+
+    /// Detach the pipeline-stage spec (the execution plan takes ownership
+    /// of the stage evaluators; the method keeps its other versions).
+    pub fn take_pipeline(&mut self) -> Option<PipelineSpec> {
+        self.pipeline.take()
     }
 
     /// The method's rules-file name.

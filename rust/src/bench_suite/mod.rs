@@ -21,7 +21,9 @@
 //! sharding report (one invocation split N-way across SMP and every
 //! fleet lane, fleet vs best-single-lane wall); [`cluster`] is the
 //! remote-lane sharding report (one invocation split across SMP and
-//! peer processes over TCP, with per-peer RTT percentiles).
+//! peer processes over TCP, with per-peer RTT percentiles); [`pipeline`]
+//! is the fused execution-plan report (device-resident chains vs
+//! per-stage round-trips) plus the reusable pipeline stage builders.
 
 pub mod cluster;
 pub mod crypt;
@@ -33,6 +35,7 @@ pub mod interp;
 pub mod lufact;
 pub mod modeled;
 pub mod params;
+pub mod pipeline;
 pub mod serve;
 pub mod series;
 pub mod sor;

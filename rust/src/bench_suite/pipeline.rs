@@ -1,0 +1,421 @@
+//! `somd bench pipeline` — fused execution plans vs per-stage
+//! round-trips (tentpole of the method-pipelines PR).
+//!
+//! Each row chains committed workloads into an
+//! [`ExecutionPlan`](crate::somd::pipeline::ExecutionPlan) and runs it
+//! twice per rep: **fused** (device-resident intermediates, memoized
+//! uploads, H2D/compute overlap) and as the **per-stage round-trip**
+//! reference (every boundary pays the full D2H+H2D, exactly as isolated
+//! invocations would).  Both runs must agree bitwise — the comparison is
+//! on the modeled clocks only.  `--check` gates on the largest chain:
+//! fused may not lose to the round-trip reference, at least one stage
+//! boundary must be *provably* resident (zero exit D2H bytes at the
+//! hop), and a run where any stage fell back to SMP is refused as
+//! vacuous rather than passed.
+//!
+//! The module also hosts the reusable stage builders ([`crypt_stage`],
+//! [`sor_step_stage`], [`sor_sum_stage`]) that `tests/pipeline_exec.rs`
+//! drives through every lane resolution.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::PipelineSpec;
+use crate::bench_suite::crypt::{self, BLOCK_BYTES, SUBKEYS};
+use crate::bench_suite::{gpu, hybrid};
+use crate::device::Arg;
+use crate::runtime::{HostTensor, Registry};
+use crate::somd::pipeline::{hybrid_fraction_from_env, ExecutionPlan};
+use crate::somd::{Engine, Rules, Scheduler, SchedulerConfig, Target};
+use crate::util::json::Json;
+use crate::util::timer::middle_tier_mean;
+
+/// The artifact registry for stage evaluators that must locate their
+/// kernels from inside a plan: the default search first (CWD /
+/// `SOMD_ARTIFACTS`), then the in-tree artifacts as a fallback so the
+/// test binaries work from any working directory.
+pub fn bench_registry() -> Result<Registry> {
+    Registry::load_default().or_else(|_| {
+        Registry::load(std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    })
+}
+
+/// The smallest committed SOR artifact with the given name prefix:
+/// `(artifact name, grid side n)`.
+pub fn sor_art(registry: &Registry, prefix: &str) -> Result<(String, usize)> {
+    let info = registry
+        .by_bench("sor")
+        .into_iter()
+        .filter(|i| i.name.starts_with(prefix))
+        .min_by_key(|i| i.meta_usize("n").unwrap_or(usize::MAX))
+        .ok_or_else(|| anyhow!("no committed sor artifact with prefix '{prefix}'"))?;
+    let n = info.meta_usize("n").ok_or_else(|| anyhow!("sor artifact lacks meta n"))?;
+    Ok((info.name.clone(), n))
+}
+
+// ---------------------------------------------------------------------------
+// Stage builders
+// ---------------------------------------------------------------------------
+
+/// One IDEA cipher-pass stage over a packed-words tensor (`nblocks×4`
+/// u32).  The key schedule is baked into the stage — it is stage
+/// configuration, not flowing data — so the tensor chain is exactly
+/// `words → words` and encrypt→decrypt chains compose by stacking two
+/// of these.  Integer arithmetic: bitwise identical on every lane.
+pub fn crypt_stage(keys: [u32; SUBKEYS]) -> PipelineSpec {
+    PipelineSpec::new(move |ts: &[HostTensor]| {
+        let words = ts[0].as_u32()?;
+        let nblocks = words.len() / 4;
+        let out = crypt::sequential(&gpu::unpack_words(words), &keys);
+        Ok(vec![HostTensor::mat_u32(gpu::pack_words(&out), nblocks, 4)])
+    })
+    .with_device(move |sess, ids| {
+        // 4 words per block, 4 bytes per resident u32
+        let nblocks = sess.memory().bytes_of(ids[0])? / 16;
+        let name = sess
+            .registry()
+            .find_by_meta("crypt", "blocks", nblocks)
+            .ok_or_else(|| anyhow!("no crypt artifact for {nblocks} blocks"))?
+            .name
+            .clone();
+        let keys_t = HostTensor::vec_u32(keys.to_vec());
+        let mut out = sess.launch(&name, &[Arg::Buf(ids[0]), Arg::Host(&keys_t)], nblocks)?;
+        sess.free(ids[0])?;
+        let first = out.remove(0);
+        for id in out {
+            sess.free(id)?;
+        }
+        Ok(vec![first])
+    })
+    .with_hybrid(move |engine, registry, ts| {
+        let words = ts[0].as_u32()?;
+        let nblocks = words.len() / 4;
+        let bytes = gpu::unpack_words(words);
+        let m = hybrid::crypt_hybrid_generic();
+        let input = crypt::PassInput { src: &bytes, keys };
+        let (out, _) =
+            m.invoke_hybrid(engine, registry, &input, Some(hybrid_fraction_from_env()))?;
+        Ok(vec![HostTensor::mat_u32(gpu::pack_words(&out), nblocks, 4)])
+    })
+}
+
+/// `iters` red-black SOR sweeps over an `n×n` f32 grid.  The SMP
+/// evaluator interprets the same committed artifact on the host, so
+/// smp- and device-resolved runs agree bitwise (the device lane is the
+/// same interpreter behind modeled transfers).
+pub fn sor_step_stage(iters: usize) -> PipelineSpec {
+    PipelineSpec::new(move |ts: &[HostTensor]| {
+        let registry = bench_registry()?;
+        let (name, _) = sor_art(&registry, "sor_step")?;
+        let art = registry.artifact(&name)?;
+        let mut g = ts[0].clone();
+        for _ in 0..iters {
+            g = art.execute(&[g])?.remove(0);
+        }
+        Ok(vec![g])
+    })
+    .with_device(move |sess, ids| {
+        let (name, n) = sor_art(sess.registry(), "sor_step")?;
+        let mut g = ids[0];
+        for _ in 0..iters {
+            let mut out = sess.launch(&name, &[Arg::Buf(g)], n * n)?;
+            sess.free(g)?;
+            g = out.remove(0);
+            for id in out {
+                sess.free(id)?;
+            }
+        }
+        Ok(vec![g])
+    })
+}
+
+/// The on-device Gtotal reduction: grid in, scalar out.
+pub fn sor_sum_stage() -> PipelineSpec {
+    PipelineSpec::new(|ts: &[HostTensor]| {
+        let registry = bench_registry()?;
+        let (name, _) = sor_art(&registry, "sor_sum")?;
+        let art = registry.artifact(&name)?;
+        Ok(art.execute(&[ts[0].clone()])?)
+    })
+    .with_device(|sess, ids| {
+        let (name, n) = sor_art(sess.registry(), "sor_sum")?;
+        let mut out = sess.launch(&name, &[Arg::Buf(ids[0])], n * n)?;
+        sess.free(ids[0])?;
+        let first = out.remove(0);
+        for id in out {
+            sess.free(id)?;
+        }
+        Ok(vec![first])
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Measurement
+// ---------------------------------------------------------------------------
+
+/// One measured chain of the pipeline benchmark.
+#[derive(Debug, Clone)]
+pub struct PipelineRow {
+    /// Chain label.
+    pub bench: String,
+    /// Number of plan stages.
+    pub stages: usize,
+    /// Bytes of the plan's input tensor.
+    pub input_bytes: usize,
+    /// Middle-tier mean of the fused run's modeled seconds.
+    pub fused_secs: f64,
+    /// Middle-tier mean of the per-stage round-trip's modeled seconds.
+    pub roundtrip_secs: f64,
+    /// Provably resident stage boundaries in the fused run (downstream
+    /// stage entered resident AND upstream exit paid zero D2H bytes).
+    pub resident_boundaries: usize,
+    /// Transfer bytes the fused run skipped at resident boundaries.
+    pub skipped_bytes: usize,
+    /// `roundtrip_secs / fused_secs`.
+    pub speedup: f64,
+    /// Stage executions (across both paths and all reps) that fell back
+    /// to SMP — non-zero makes the comparison vacuous.
+    pub fell_back_runs: usize,
+}
+
+/// A crypt chain of `pairs` encrypt→decrypt passes, plus the stage
+/// names a rules file must pin to the device lane.
+fn crypt_chain(p: &crypt::Problem, pairs: usize) -> (ExecutionPlan, Vec<String>) {
+    let mut plan = ExecutionPlan::new();
+    let mut names = Vec::new();
+    for i in 0..pairs {
+        let e = format!("PipeCrypt.encrypt{i}");
+        let d = format!("PipeCrypt.decrypt{i}");
+        plan = plan.stage(e.clone(), crypt_stage(p.ekeys));
+        plan = plan.stage(d.clone(), crypt_stage(p.dkeys));
+        names.push(e);
+        names.push(d);
+    }
+    (plan, names)
+}
+
+fn mean_secs(xs: &[f64]) -> f64 {
+    let ds: Vec<Duration> = xs.iter().map(|&s| Duration::from_secs_f64(s)).collect();
+    middle_tier_mean(&ds).as_secs_f64()
+}
+
+/// Run every chain `reps` times on a one-lane fermi fleet, fused and
+/// round-trip, verifying bitwise agreement on each rep.
+pub fn measure(reps: usize, workers: usize) -> Result<Vec<PipelineRow>> {
+    let registry = bench_registry()?;
+    let artifacts_dir = registry.dir().to_path_buf();
+
+    let blocks = registry.info("crypt_A")?.meta_usize("blocks").ok_or_else(|| {
+        anyhow!("crypt_A artifact lacks meta blocks")
+    })?;
+    let p = crypt::Problem::generate(blocks * BLOCK_BYTES, 42);
+    let words = HostTensor::mat_u32(gpu::pack_words(&p.data), blocks, 4);
+
+    let (_, n) = sor_art(&registry, "sor_step")?;
+    let grid: Vec<f32> = (0..n * n).map(|i| ((i * 31 + 7) % 1000) as f32 / 1000.0).collect();
+    let grid_t = HostTensor::mat_f32(grid, n, n);
+    let sor_plan = ExecutionPlan::new()
+        .stage("PipeSor.step", sor_step_stage(3))
+        .stage("PipeSor.sum", sor_sum_stage());
+
+    let (crypt2, crypt2_names) = crypt_chain(&p, 1);
+    let (crypt4, crypt4_names) = crypt_chain(&p, 2);
+    let chains: Vec<(&str, ExecutionPlan, Vec<String>, HostTensor)> = vec![
+        ("crypt-x2", crypt2, crypt2_names, words.clone()),
+        ("sor-x2", sor_plan, vec!["PipeSor.step".into(), "PipeSor.sum".into()], grid_t),
+        ("crypt-x4", crypt4, crypt4_names, words),
+    ];
+
+    let mut rows = Vec::new();
+    for (bench, plan, names, input) in chains {
+        let mut rules = Rules::empty();
+        for name in &names {
+            rules.set(name.clone(), Target::Device("fermi".to_string()));
+        }
+        let engine = Engine::with_rules(workers, rules)
+            .with_scheduler(Scheduler::new(SchedulerConfig {
+                min_device_items: 1,
+                ..Default::default()
+            }))
+            .with_device_fleet(&artifacts_dir, &["fermi"])?;
+
+        let mut fused_secs = Vec::with_capacity(reps);
+        let mut roundtrip_secs = Vec::with_capacity(reps);
+        let mut resident_boundaries = 0;
+        let mut skipped_bytes = 0;
+        let mut fell_back_runs = 0;
+        for _ in 0..reps {
+            let fused = plan.run(&engine, &registry, vec![input.clone()], true)?;
+            let reference = plan.run(&engine, &registry, vec![input.clone()], false)?;
+            if fused.outputs != reference.outputs {
+                bail!("fused and round-trip outputs diverged on {bench}");
+            }
+            fused_secs.push(fused.modeled_secs);
+            roundtrip_secs.push(reference.modeled_secs);
+            resident_boundaries = fused.resident_boundaries;
+            skipped_bytes = fused
+                .stages
+                .iter()
+                .filter_map(|s| s.stats.as_ref())
+                .map(|st| st.skipped_transfer_bytes())
+                .sum();
+            fell_back_runs += fused.stages.iter().filter(|s| s.fell_back).count()
+                + reference.stages.iter().filter(|s| s.fell_back).count();
+        }
+        let f = mean_secs(&fused_secs);
+        let r = mean_secs(&roundtrip_secs);
+        rows.push(PipelineRow {
+            bench: bench.to_string(),
+            stages: plan.len(),
+            input_bytes: input.bytes(),
+            fused_secs: f,
+            roundtrip_secs: r,
+            resident_boundaries,
+            skipped_bytes,
+            speedup: if f > 0.0 { r / f } else { 0.0 },
+            fell_back_runs,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the rows as the `BENCH_pipeline.json` schema
+/// (`pipeline_fused/v1`, documented in `docs/BENCHMARKS.md`).
+pub fn to_json(rows: &[PipelineRow], reps: usize, workers: usize) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("pipeline_fused/v1".to_string()));
+    top.insert("reps".to_string(), Json::Num(reps as f64));
+    top.insert("workers".to_string(), Json::Num(workers as f64));
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::Str(r.bench.clone()));
+            m.insert("stages".to_string(), Json::Num(r.stages as f64));
+            m.insert("input_bytes".to_string(), Json::Num(r.input_bytes as f64));
+            m.insert("fused_secs".to_string(), Json::Num(r.fused_secs));
+            m.insert("roundtrip_secs".to_string(), Json::Num(r.roundtrip_secs));
+            m.insert(
+                "resident_boundaries".to_string(),
+                Json::Num(r.resident_boundaries as f64),
+            );
+            m.insert("skipped_bytes".to_string(), Json::Num(r.skipped_bytes as f64));
+            m.insert("speedup".to_string(), Json::Num(r.speedup));
+            m.insert("fell_back_runs".to_string(), Json::Num(r.fell_back_runs as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("chains".to_string(), Json::Arr(arr));
+    Json::Obj(top)
+}
+
+/// Print the table, write `out_path`, and with `check` gate the largest
+/// chain: fused within `tol` of (in practice, faster than) the
+/// round-trip reference, at least one provably resident boundary, and
+/// no vacuous pass through SMP fallbacks.
+pub fn report(reps: usize, workers: usize, out_path: &str, check: bool, tol: f64) -> Result<()> {
+    let rows = measure(reps, workers)?;
+    println!(
+        "== Method pipelines: fused device-resident chains vs per-stage round-trips \
+         (workers {workers}, reps {reps}, modeled clocks) =="
+    );
+    println!(
+        "{:<10} {:>7} {:>11} {:>13} {:>13} {:>9} {:>13} {:>9}",
+        "Chain", "stages", "bytes", "Fused (s)", "Rndtrip (s)", "resident", "skipped (B)", "speedup"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>7} {:>11} {:>13.6} {:>13.6} {:>9} {:>13} {:>8.2}x{}",
+            r.bench,
+            r.stages,
+            r.input_bytes,
+            r.fused_secs,
+            r.roundtrip_secs,
+            r.resident_boundaries,
+            r.skipped_bytes,
+            r.speedup,
+            if r.fell_back_runs > 0 {
+                format!("  ({} stage runs fell back to SMP)", r.fell_back_runs)
+            } else {
+                String::new()
+            }
+        );
+    }
+    std::fs::write(out_path, to_json(&rows, reps, workers).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if check {
+        let largest = rows
+            .iter()
+            .max_by_key(|r| r.stages)
+            .ok_or_else(|| anyhow!("no chains measured"))?;
+        if largest.fell_back_runs > 0 {
+            // a fallen-back stage ran on SMP in the fused path too — the
+            // fused-vs-roundtrip comparison would pass vacuously
+            bail!(
+                "{} stage runs of {} fell back to SMP — the pipeline gate would be vacuous",
+                largest.fell_back_runs,
+                largest.bench
+            );
+        }
+        if largest.resident_boundaries < 1 {
+            bail!(
+                "no provably resident stage boundary on {} (expected ≥ 1 hop with zero \
+                 exit D2H bytes)",
+                largest.bench
+            );
+        }
+        if largest.fused_secs > largest.roundtrip_secs * tol {
+            bail!(
+                "fused pipeline is slower than per-stage round-trips on {}: {:.6}s vs \
+                 {:.6}s (tol {tol})",
+                largest.bench,
+                largest.fused_secs,
+                largest.roundtrip_secs
+            );
+        }
+        println!(
+            "check ok: fused beats per-stage round-trips on {} ({:.6}s vs {:.6}s, \
+             {} resident boundaries, {} bytes skipped)",
+            largest.bench,
+            largest.fused_secs,
+            largest.roundtrip_secs,
+            largest.resident_boundaries,
+            largest.skipped_bytes
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_chains_fuse_faster_with_resident_boundaries() {
+        let rows = measure(1, 2).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.fell_back_runs, 0, "{}: all-device chains must not fall back", r.bench);
+            assert_eq!(
+                r.resident_boundaries,
+                r.stages - 1,
+                "{}: every interior boundary of an all-device chain stays resident",
+                r.bench
+            );
+            assert!(r.skipped_bytes > 0, "{}: skipped transfers counted", r.bench);
+            assert!(
+                r.fused_secs <= r.roundtrip_secs,
+                "{}: fused modeled clock must not exceed the round-trip ({} vs {})",
+                r.bench,
+                r.fused_secs,
+                r.roundtrip_secs
+            );
+        }
+        let largest = rows.iter().max_by_key(|r| r.stages).unwrap();
+        assert_eq!(largest.bench, "crypt-x4");
+        assert_eq!(largest.stages, 4);
+    }
+}

@@ -18,6 +18,9 @@ pub struct BufId(pub(crate) u64);
 pub(crate) struct Entry {
     pub buf: xla::PjRtBuffer,
     pub bytes: usize,
+    /// Pin count: `free` only releases the buffer when this drops to 0,
+    /// so a pipeline stage and the upload memo cache can share residency.
+    pub refs: usize,
 }
 
 /// Tracks device-resident buffers and total residency.
@@ -45,10 +48,27 @@ impl DeviceMemory {
     pub fn adopt(&mut self, buf: xla::PjRtBuffer, bytes: usize) -> BufId {
         let id = self.next;
         self.next += 1;
-        self.entries.insert(id, Entry { buf, bytes });
+        self.entries.insert(id, Entry { buf, bytes, refs: 1 });
         self.resident_bytes += bytes;
         self.peak_bytes = self.peak_bytes.max(self.resident_bytes);
         BufId(id)
+    }
+
+    /// Pin a resident buffer: one extra `free` is now required before the
+    /// backing storage is released.  Residency accounting is unchanged —
+    /// the bytes are already on the device.
+    pub fn retain(&mut self, id: BufId) -> Result<()> {
+        let e = self
+            .entries
+            .get_mut(&id.0)
+            .ok_or_else(|| anyhow!("retain of dangling device buffer {id:?}"))?;
+        e.refs += 1;
+        Ok(())
+    }
+
+    /// Current pin count of a resident buffer.
+    pub fn refs_of(&self, id: BufId) -> Result<usize> {
+        Ok(self.entry(id)?.refs)
     }
 
     /// Download to host (does not free).
@@ -66,10 +86,15 @@ impl DeviceMemory {
         Ok(self.entry(id)?.bytes)
     }
 
-    /// Release a resident buffer (double frees error).
+    /// Release one reference to a resident buffer; the storage is freed
+    /// when the last reference drops (double frees error).
     pub fn free(&mut self, id: BufId) -> Result<()> {
-        let e = self.entries.remove(&id.0).ok_or_else(|| anyhow!("double free of {id:?}"))?;
-        self.resident_bytes -= e.bytes;
+        let e = self.entries.get_mut(&id.0).ok_or_else(|| anyhow!("double free of {id:?}"))?;
+        e.refs -= 1;
+        if e.refs == 0 {
+            let e = self.entries.remove(&id.0).expect("entry vanished");
+            self.resident_bytes -= e.bytes;
+        }
         Ok(())
     }
 
@@ -113,5 +138,22 @@ mod tests {
         m.free(id).unwrap();
         assert!(m.free(id).is_err());
         assert!(m.get(id).is_err());
+    }
+
+    #[test]
+    fn retain_pins_across_one_free() {
+        let mut m = DeviceMemory::new();
+        let t = HostTensor::vec_f32(vec![2.0; 8]);
+        let id = m.put(&t).unwrap();
+        m.retain(id).unwrap();
+        assert_eq!(m.refs_of(id).unwrap(), 2);
+        m.free(id).unwrap();
+        // still resident: the second reference keeps the storage alive
+        assert_eq!(m.get(id).unwrap(), t);
+        assert_eq!(m.resident_bytes(), 32);
+        m.free(id).unwrap();
+        assert_eq!(m.resident_bytes(), 0);
+        assert!(m.get(id).is_err());
+        assert!(m.retain(id).is_err());
     }
 }

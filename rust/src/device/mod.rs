@@ -26,4 +26,4 @@ pub mod session;
 pub use grid::GridConfig;
 pub use memory::{BufId, DeviceMemory};
 pub use profile::DeviceProfile;
-pub use session::{Arg, DeviceSession, DeviceStats};
+pub use session::{Arg, DeviceSession, DeviceStats, UploadCounters};

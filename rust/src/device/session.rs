@@ -14,7 +14,10 @@
 //! after dequeue); the modeled clock only drives the paper-figure
 //! reports.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -22,7 +25,58 @@ use anyhow::Result;
 use super::grid::GridConfig;
 use super::memory::{BufId, DeviceMemory};
 use super::profile::DeviceProfile;
-use crate::runtime::{Artifact, HostTensor, Registry};
+use crate::runtime::{tensor_fingerprint, Artifact, HostTensor, Registry};
+
+/// Default capacity of the per-session upload memo cache (entries);
+/// overridden by `SOMD_PIPELINE_MEMO_CAP`.
+const DEFAULT_MEMO_CAP: usize = 32;
+
+fn memo_cap_from_env() -> usize {
+    std::env::var("SOMD_PIPELINE_MEMO_CAP")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(DEFAULT_MEMO_CAP)
+}
+
+/// Shared counters for the upload memo cache — one set per device lane,
+/// surfaced through `Engine::device_counters` so tests can pin cache
+/// behaviour (the staleness property rides on `uploads` vs `hits`).
+#[derive(Debug, Default)]
+pub struct UploadCounters {
+    uploads: AtomicUsize,
+    hits: AtomicUsize,
+    invalidations: AtomicUsize,
+}
+
+impl UploadCounters {
+    /// Cache misses that paid a real H2D upload.
+    pub fn uploads(&self) -> usize {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    /// Cache hits that skipped the upload (content hash matched).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Entries dropped from the cache (capacity eviction or an
+    /// unresolvable handle) — each one forces a re-upload on next use.
+    pub fn invalidations(&self) -> usize {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    fn note_upload(&self) {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_invalidation(&self) {
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+    }
+}
 
 /// A kernel argument: already-resident buffer or host data to upload
 /// on demand (§4.3 on-demand copying).
@@ -58,6 +112,21 @@ pub struct DeviceStats {
     /// Sum over launches of the idle-thread fraction (see
     /// [`DeviceStats::mean_idle_fraction`]).
     pub idle_thread_fraction_sum: f64,
+    /// H2D transfers *skipped* because the data was already resident
+    /// (memoized upload hit, or a pipeline stage consuming an upstream
+    /// device output in place).  Counted explicitly — never folded into
+    /// `h2d_transfers` as a silent zero — so the §7.3 bus-pressure model
+    /// can tell a cheap run from a resident one.
+    pub h2d_skipped: usize,
+    /// D2H transfers skipped at a resident stage boundary.
+    pub d2h_skipped: usize,
+    /// Bytes that would have crossed the bus H2D but stayed resident.
+    pub bytes_h2d_skipped: usize,
+    /// Bytes that would have crossed the bus D2H but stayed resident.
+    pub bytes_d2h_skipped: usize,
+    /// Modeled transfer time hidden under stage compute by the pipeline's
+    /// double-buffered overlap (already excluded from `device_time`).
+    pub overlapped_transfer_time: Duration,
 }
 
 impl DeviceStats {
@@ -73,6 +142,16 @@ impl DeviceStats {
     /// Total bytes moved across the (modeled) bus, both directions.
     pub fn total_transfer_bytes(&self) -> usize {
         self.bytes_h2d + self.bytes_d2h
+    }
+
+    /// Transfer operations avoided by residency, both directions.
+    pub fn skipped_transfers(&self) -> usize {
+        self.h2d_skipped + self.d2h_skipped
+    }
+
+    /// Bytes that stayed device-resident instead of crossing the bus.
+    pub fn skipped_transfer_bytes(&self) -> usize {
+        self.bytes_h2d_skipped + self.bytes_d2h_skipped
     }
 
     /// Fold another session's accounting into this one — how the device
@@ -92,6 +171,11 @@ impl DeviceStats {
         self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
         self.total_threads_launched += other.total_threads_launched;
         self.idle_thread_fraction_sum += other.idle_thread_fraction_sum;
+        self.h2d_skipped += other.h2d_skipped;
+        self.d2h_skipped += other.d2h_skipped;
+        self.bytes_h2d_skipped += other.bytes_h2d_skipped;
+        self.bytes_d2h_skipped += other.bytes_d2h_skipped;
+        self.overlapped_transfer_time += other.overlapped_transfer_time;
     }
 
     /// The accounting accumulated since `earlier` — the per-job slice a
@@ -114,6 +198,13 @@ impl DeviceStats {
             idle_thread_fraction_sum: (self.idle_thread_fraction_sum
                 - earlier.idle_thread_fraction_sum)
                 .max(0.0),
+            h2d_skipped: self.h2d_skipped.saturating_sub(earlier.h2d_skipped),
+            d2h_skipped: self.d2h_skipped.saturating_sub(earlier.d2h_skipped),
+            bytes_h2d_skipped: self.bytes_h2d_skipped.saturating_sub(earlier.bytes_h2d_skipped),
+            bytes_d2h_skipped: self.bytes_d2h_skipped.saturating_sub(earlier.bytes_d2h_skipped),
+            overlapped_transfer_time: self
+                .overlapped_transfer_time
+                .saturating_sub(earlier.overlapped_transfer_time),
         }
     }
 }
@@ -125,12 +216,60 @@ pub struct DeviceSession<'r> {
     profile: DeviceProfile,
     mem: DeviceMemory,
     stats: DeviceStats,
+    /// Content-hash → resident handle memo for [`DeviceSession::put_cached`]
+    /// (the cache holds its own reference on each entry).
+    memo: BTreeMap<u64, BufId>,
+    /// FIFO insertion order backing capacity eviction.
+    memo_order: VecDeque<u64>,
+    memo_cap: usize,
+    counters: Arc<UploadCounters>,
+    overlap: bool,
+    /// Modeled compute time banked by launches and spent hiding
+    /// subsequent H2D cost when overlap is on.
+    overlap_budget: Duration,
 }
 
 impl<'r> DeviceSession<'r> {
     /// A fresh session over `registry` under the given cost profile.
     pub fn new(registry: &'r Registry, profile: DeviceProfile) -> Self {
-        Self { registry, profile, mem: DeviceMemory::new(), stats: DeviceStats::default() }
+        Self {
+            registry,
+            profile,
+            mem: DeviceMemory::new(),
+            stats: DeviceStats::default(),
+            memo: BTreeMap::new(),
+            memo_order: VecDeque::new(),
+            memo_cap: memo_cap_from_env(),
+            counters: Arc::new(UploadCounters::default()),
+            overlap: false,
+            overlap_budget: Duration::ZERO,
+        }
+    }
+
+    /// Share this lane's upload-memo counters (the engine passes one set
+    /// per device lane so `Engine::device_counters` can total them).
+    pub fn set_upload_counters(&mut self, counters: Arc<UploadCounters>) {
+        self.counters = counters;
+    }
+
+    /// The session's upload-memo counters.
+    pub fn upload_counters(&self) -> &Arc<UploadCounters> {
+        &self.counters
+    }
+
+    /// Override the upload memo capacity (0 disables memoization).
+    pub fn set_memo_cap(&mut self, cap: usize) {
+        self.memo_cap = cap;
+        self.evict_over_cap();
+    }
+
+    /// Enable/disable H2D-under-compute overlap.  Turning it off drops
+    /// any banked compute budget.
+    pub fn set_overlap(&mut self, on: bool) {
+        self.overlap = on;
+        if !on {
+            self.overlap_budget = Duration::ZERO;
+        }
     }
 
     /// The cost profile this session models.
@@ -155,13 +294,79 @@ impl<'r> DeviceSession<'r> {
         &self.mem
     }
 
-    /// Explicit `put`: upload and account the transfer.
+    /// Explicit `put`: upload and account the transfer.  With overlap
+    /// enabled, the modeled bus cost is hidden under compute time banked
+    /// by preceding launches (double-buffering: stage `i+1`'s H2D rides
+    /// under stage `i`'s kernel) — the hidden share is still reported in
+    /// `overlapped_transfer_time`, never silently dropped.
     pub fn put(&mut self, t: &HostTensor) -> Result<BufId> {
         let id = self.mem.put(t)?;
         self.stats.h2d_transfers += 1;
         self.stats.bytes_h2d += t.bytes();
-        self.stats.device_time += self.profile.h2d_time(t.bytes());
+        let cost = self.profile.h2d_time(t.bytes());
+        let hidden =
+            if self.overlap { cost.min(self.overlap_budget) } else { Duration::ZERO };
+        self.overlap_budget = self.overlap_budget.saturating_sub(hidden);
+        self.stats.overlapped_transfer_time += hidden;
+        self.stats.device_time += cost.saturating_sub(hidden);
         Ok(id)
+    }
+
+    /// Memoized `put`: if a bitwise-identical tensor (same dtype, shape
+    /// and payload bits — see [`tensor_fingerprint`]) was uploaded through
+    /// this cache and is still resident, pin and return the existing
+    /// handle instead of crossing the bus again.  The skipped transfer is
+    /// counted in `h2d_skipped`/`bytes_h2d_skipped`.  The returned handle
+    /// carries its own reference: callers `free` it exactly as they would
+    /// a plain `put` handle; the cache's pin keeps the buffer alive for
+    /// future hits.  Staleness is impossible by construction — a mutated
+    /// host tensor fingerprints differently and misses.
+    pub fn put_cached(&mut self, t: &HostTensor) -> Result<BufId> {
+        if self.memo_cap == 0 {
+            self.counters.note_upload();
+            return self.put(t);
+        }
+        let fp = tensor_fingerprint(t);
+        if let Some(&id) = self.memo.get(&fp) {
+            if self.mem.retain(id).is_ok() {
+                self.stats.h2d_skipped += 1;
+                self.stats.bytes_h2d_skipped += t.bytes();
+                self.counters.note_hit();
+                return Ok(id);
+            }
+            // the handle went dangling (defensive; the cache pin should
+            // prevent this) — drop the entry and re-upload
+            self.memo.remove(&fp);
+            self.memo_order.retain(|&k| k != fp);
+            self.counters.note_invalidation();
+        }
+        let id = self.put(t)?;
+        self.mem.retain(id)?; // the cache's own pin
+        self.memo.insert(fp, id);
+        self.memo_order.push_back(fp);
+        self.counters.note_upload();
+        self.evict_over_cap();
+        Ok(id)
+    }
+
+    fn evict_over_cap(&mut self) {
+        while self.memo.len() > self.memo_cap {
+            let Some(fp) = self.memo_order.pop_front() else { break };
+            if let Some(id) = self.memo.remove(&fp) {
+                let _ = self.mem.free(id); // release the cache's pin
+                self.counters.note_invalidation();
+            }
+        }
+    }
+
+    /// Record a resident stage boundary: a pipeline handed `bytes` of an
+    /// upstream device output straight to the downstream stage, skipping
+    /// the D2H+H2D round-trip an isolated invocation would have paid.
+    pub fn note_resident_handoff(&mut self, bytes: usize) {
+        self.stats.d2h_skipped += 1;
+        self.stats.h2d_skipped += 1;
+        self.stats.bytes_d2h_skipped += bytes;
+        self.stats.bytes_h2d_skipped += bytes;
     }
 
     /// Explicit `get`: download and account the transfer.
@@ -197,6 +402,14 @@ impl<'r> DeviceSession<'r> {
         self.mem.free(id)
     }
 
+    /// Pin a resident buffer: one extra [`DeviceSession::free`] is then
+    /// required before the storage is released.  The pipeline layer pins
+    /// a device stage's inputs so a failing stage evaluator cannot leave
+    /// the SMP fallback without the data it needs to re-run the stage.
+    pub fn retain(&mut self, id: BufId) -> Result<()> {
+        self.mem.retain(id)
+    }
+
     /// Launch `artifact` over `args`; host args are uploaded on demand.
     /// Outputs stay device-resident.  `problem_size` drives the §5.2
     /// thread-grid model for divergence accounting.
@@ -226,9 +439,14 @@ impl<'r> DeviceSession<'r> {
         // clocks
         self.stats.launches += 1;
         self.stats.wall_compute += wall;
-        self.stats.device_time +=
+        let modeled =
             Duration::from_secs_f64(wall.as_secs_f64() * self.profile.compute_scale)
                 + self.profile.launch_overhead;
+        self.stats.device_time += modeled;
+        if self.overlap {
+            // this kernel's modeled occupancy can hide later uploads
+            self.overlap_budget += modeled;
+        }
         let grid = GridConfig::for_problem(problem_size, self.profile.max_group_size);
         self.stats.total_threads_launched += grid.total_threads();
         self.stats.idle_thread_fraction_sum += grid.idle_fraction(problem_size);
@@ -379,6 +597,83 @@ mod tests {
         assert_eq!(a.bytes_d2h, 50);
         assert_eq!(a.peak_resident_bytes, 900);
         assert!((a.idle_thread_fraction_sum - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn put_cached_skips_repeat_uploads_and_never_serves_stale_data() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        s.set_memo_cap(8);
+        let t = HostTensor::vec_f32(vec![1.0, 2.0, 3.0]);
+        let a = s.put_cached(&t).unwrap();
+        let b = s.put_cached(&t.clone()).unwrap();
+        assert_eq!(a, b);
+        let st = s.stats();
+        assert_eq!(st.h2d_transfers, 1);
+        assert_eq!(st.h2d_skipped, 1);
+        assert_eq!(st.bytes_h2d_skipped, t.bytes());
+        assert_eq!(s.upload_counters().uploads(), 1);
+        assert_eq!(s.upload_counters().hits(), 1);
+        // mutation invalidates the content-hash match: fresh upload, and
+        // the returned buffer holds the new payload, not the old one
+        let t2 = HostTensor::vec_f32(vec![1.0, 2.0, 4.0]);
+        let c = s.put_cached(&t2).unwrap();
+        assert_ne!(a, c);
+        assert_eq!(s.upload_counters().uploads(), 2);
+        assert_eq!(s.mem.get(c).unwrap(), t2);
+        assert_eq!(s.mem.get(a).unwrap(), t);
+    }
+
+    #[test]
+    fn memo_capacity_eviction_counts_invalidations() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        s.set_memo_cap(1);
+        let t1 = HostTensor::vec_f32(vec![1.0]);
+        let t2 = HostTensor::vec_f32(vec![2.0]);
+        s.put_cached(&t1).unwrap();
+        s.put_cached(&t2).unwrap(); // evicts t1's entry
+        assert_eq!(s.upload_counters().invalidations(), 1);
+        s.put_cached(&t1).unwrap(); // must re-upload, not hit
+        assert_eq!(s.upload_counters().uploads(), 3);
+        assert_eq!(s.upload_counters().hits(), 0);
+    }
+
+    #[test]
+    fn overlap_hides_h2d_under_banked_compute() {
+        let r = reg();
+        let n = r.info("vecadd").unwrap().inputs[0].elems();
+        let a = HostTensor::vec_f32(vec![1.0; n]);
+        let b = HostTensor::vec_f32(vec![2.0; n]);
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        s.set_overlap(true);
+        // first launch banks modeled compute; the next stage's uploads
+        // then ride under it
+        s.launch_to_host("vecadd", &[Arg::Host(&a), Arg::Host(&b)], n).unwrap();
+        let id = s.put(&a).unwrap();
+        s.free(id).unwrap();
+        let st = s.stats();
+        assert!(st.overlapped_transfer_time > Duration::ZERO, "{st:?}");
+        // the hidden share left device_time, but is still reported
+        let mut plain = DeviceSession::new(&r, DeviceProfile::fermi());
+        let pid = plain.put(&a).unwrap();
+        plain.free(pid).unwrap();
+        assert!(plain.stats().overlapped_transfer_time == Duration::ZERO);
+    }
+
+    #[test]
+    fn resident_handoff_counts_skipped_round_trip() {
+        let r = reg();
+        let mut s = DeviceSession::new(&r, DeviceProfile::fermi());
+        s.note_resident_handoff(4096);
+        let st = s.stats();
+        assert_eq!(st.d2h_skipped, 1);
+        assert_eq!(st.h2d_skipped, 1);
+        assert_eq!(st.skipped_transfers(), 2);
+        assert_eq!(st.skipped_transfer_bytes(), 2 * 4096);
+        // a delta slice carries the skip counters too
+        let delta = s.stats().delta_since(&DeviceStats::default());
+        assert_eq!(delta.bytes_d2h_skipped, 4096);
     }
 
     #[test]

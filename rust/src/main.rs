@@ -12,6 +12,8 @@
 //!                   [--out FILE] [--tol T] [--smoke] [--check]
 //! somd bench cluster [--peers N] [--reps N] [--workers W] [--learn N]
 //!                    [--delay-ms MS] [--out FILE] [--smoke] [--check]
+//! somd bench pipeline [--reps N] [--workers W] [--out FILE] [--tol T]
+//!                     [--smoke] [--check]
 //! somd cluster serve [--addr HOST:PORT] [--workers N] [--delay-ms MS] [--rules FILE]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
 //!          [--class A|B|C] [--scale S] [--partitions N]
@@ -29,7 +31,7 @@ use anyhow::{anyhow, bail, Result};
 
 use somd::bench_suite::cluster as bench_cluster;
 use somd::bench_suite::{
-    crypt, fleet, gpu, harness, interp, lufact, modeled, serve, series, sor, sparse,
+    crypt, fleet, gpu, harness, interp, lufact, modeled, pipeline, serve, series, sor, sparse,
 };
 use somd::bench_suite::{Class, Sizes};
 use somd::device::{DeviceProfile, DeviceSession};
@@ -61,12 +63,13 @@ fn dispatch(args: &Args) -> Result<()> {
         _ => {
             eprintln!(
                 "usage: somd <info|bench|cluster|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|fleet|serve|cluster> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|fleet|serve|cluster|pipeline> [--class A|B|C|all] [--scale S] [--reps N]\n\
                  \x20      somd bench interp [--reps N] [--out FILE] [--smoke] [--check]\n\
                  \x20      somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench fleet [--profiles p1,p2,...] [--reps N] [--workers W] [--learn N] [--min-items N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench serve [--requests N] [--clients C] [--elems E] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench cluster [--peers N] [--reps N] [--workers W] [--learn N] [--delay-ms MS] [--out FILE] [--smoke] [--check]\n\
+                 \x20      somd bench pipeline [--reps N] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  cluster: somd cluster serve [--addr HOST:PORT] [--workers N] [--delay-ms MS] [--rules FILE]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
@@ -220,6 +223,19 @@ fn bench(args: &Args) -> Result<()> {
             };
             let out = args.opt("out").unwrap_or("BENCH_cluster.json");
             bench_cluster::report(&spec, out, args.flag("check"))?;
+        }
+        "pipeline" => {
+            // method pipelines: fused device-resident chains vs
+            // per-stage round-trips on modeled clocks; --check gates the
+            // largest chain (fused not losing, ≥1 provably resident
+            // boundary, no vacuous pass through SMP fallbacks)
+            let reps = if args.flag("smoke") { args.opt_usize("reps", 2) } else { reps };
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let workers = args.opt_usize("workers", cores.min(4));
+            let out = args.opt("out").unwrap_or("BENCH_pipeline.json");
+            let tol = args.opt_f64("tol", 1.05);
+            pipeline::report(reps, workers, out, args.flag("check"), tol)?;
         }
         "auto" => {
             let reg = Registry::load_default()?;

@@ -194,6 +194,40 @@ impl Artifact {
     }
 }
 
+/// Content hash of a host tensor (FNV-1a over dtype tag, shape, and exact
+/// payload bits) — the key of the pipeline layer's upload memo cache.  Two
+/// tensors collide in the cache only when they are bitwise identical, so a
+/// memoized upload can never serve stale device data: mutating the host
+/// payload changes the fingerprint and forces a fresh `put`.
+pub fn tensor_fingerprint(t: &HostTensor) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |word: u64| {
+        for b in word.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    let (tag, shape) = match t {
+        HostTensor::F32(_, s) => (0u64, s),
+        HostTensor::F64(_, s) => (1, s),
+        HostTensor::S32(_, s) => (2, s),
+        HostTensor::U32(_, s) => (3, s),
+    };
+    eat(tag);
+    eat(shape.len() as u64);
+    for &d in shape {
+        eat(d as u64);
+    }
+    match t {
+        HostTensor::F32(v, _) => v.iter().for_each(|x| eat(u64::from(x.to_bits()))),
+        HostTensor::F64(v, _) => v.iter().for_each(|x| eat(x.to_bits())),
+        HostTensor::S32(v, _) => v.iter().for_each(|x| eat(*x as u32 as u64)),
+        HostTensor::U32(v, _) => v.iter().for_each(|x| eat(u64::from(*x))),
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,5 +270,23 @@ mod tests {
         let r = reg();
         let a = r.artifact("vecadd").unwrap();
         assert!(a.execute(&[HostTensor::vec_f32(vec![1.0])]).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_shape_and_dtype() {
+        let a = HostTensor::vec_f32(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tensor_fingerprint(&a), tensor_fingerprint(&a.clone()));
+        // payload mutation changes the hash
+        let mut b = vec![1.0f32, 2.0, 3.0, 4.0];
+        b[2] = 3.5;
+        assert_ne!(tensor_fingerprint(&a), tensor_fingerprint(&HostTensor::vec_f32(b)));
+        // same bytes, different shape
+        let flat = HostTensor::F32(vec![0.0; 4], vec![4]);
+        let mat = HostTensor::F32(vec![0.0; 4], vec![2, 2]);
+        assert_ne!(tensor_fingerprint(&flat), tensor_fingerprint(&mat));
+        // same bit pattern, different dtype
+        let s = HostTensor::vec_s32(vec![7, 8]);
+        let u = HostTensor::vec_u32(vec![7, 8]);
+        assert_ne!(tensor_fingerprint(&s), tensor_fingerprint(&u));
     }
 }

@@ -15,6 +15,6 @@ pub mod executable;
 pub mod registry;
 pub mod tensor;
 
-pub use executable::Artifact;
+pub use executable::{tensor_fingerprint, Artifact};
 pub use registry::{ArtifactInfo, Registry, TensorSpec};
 pub use tensor::{DType, HostTensor};

@@ -59,7 +59,7 @@ use super::partition::{split_fraction, split_weighted_floor};
 use super::pool::{JobHandle, WorkerPool};
 use super::scheduler::{Choice, Scheduler, SchedulerConfig};
 use crate::backend::{DeviceShare, Executed, HeteroMethod, HybridMerge, ShardedMerge};
-use crate::device::{DeviceProfile, DeviceSession, DeviceStats};
+use crate::device::{DeviceProfile, DeviceSession, DeviceStats, UploadCounters};
 use crate::runtime::Registry;
 
 // ---------------------------------------------------------------------------
@@ -73,6 +73,9 @@ pub struct DeviceCounters {
     sessions_created: AtomicUsize,
     warm_hits: AtomicUsize,
     jobs_run: AtomicUsize,
+    /// Upload-memo accounting shared with every session on this lane
+    /// (pipeline `put_cached` hits/uploads/invalidations).
+    uploads: Arc<UploadCounters>,
 }
 
 /// Point-in-time copy of [`DeviceCounters`].
@@ -84,6 +87,12 @@ pub struct DeviceCountersSnapshot {
     pub warm_hits: usize,
     /// Total device jobs executed.
     pub jobs_run: usize,
+    /// Memoized uploads that paid a real H2D transfer (cache misses).
+    pub uploads: usize,
+    /// Memoized uploads served from a resident buffer (cache hits).
+    pub upload_hits: usize,
+    /// Memo entries dropped (capacity eviction / unresolvable handle).
+    pub upload_invalidations: usize,
 }
 
 impl DeviceCounters {
@@ -92,6 +101,9 @@ impl DeviceCounters {
             sessions_created: self.sessions_created.load(Ordering::SeqCst),
             warm_hits: self.warm_hits.load(Ordering::SeqCst),
             jobs_run: self.jobs_run.load(Ordering::SeqCst),
+            uploads: self.uploads.uploads(),
+            upload_hits: self.uploads.hits(),
+            upload_invalidations: self.uploads.invalidations(),
         }
     }
 }
@@ -117,7 +129,11 @@ impl<'r> DeviceCtx<'r> {
         } else {
             let p = DeviceProfile::by_name(profile)
                 .ok_or_else(|| anyhow::anyhow!("unknown device profile '{profile}'"))?;
-            self.sessions.insert(profile.to_string(), DeviceSession::new(self.registry, p));
+            let mut session = DeviceSession::new(self.registry, p);
+            // one shared counter set per lane so `Engine::device_counters`
+            // can total memo behaviour across profiles
+            session.set_upload_counters(self.counters.uploads.clone());
+            self.sessions.insert(profile.to_string(), session);
             self.counters.sessions_created.fetch_add(1, Ordering::SeqCst);
         }
         Ok(self.sessions.get_mut(profile).expect("session just ensured"))
@@ -769,6 +785,29 @@ impl Engine {
         self.device.iter().map(|l| l.master.pending()).collect()
     }
 
+    /// Run `f` on the device master of fleet lane `lane`, blocking until
+    /// it completes.  The pipeline layer pins a plan's device stages to
+    /// *one* lane through this entry: the lane's warm sessions — and with
+    /// them resident [`crate::device::BufId`]s and the upload memo —
+    /// survive across jobs (FIFO per lane), which is what lets stage
+    /// `i+1` consume stage `i`'s output without a host round-trip.
+    pub fn run_on_lane<T, F>(&self, lane: usize, f: F) -> anyhow::Result<T>
+    where
+        T: Send + 'static,
+        F: for<'r> FnOnce(&mut DeviceCtx<'r>) -> T + Send + 'static,
+    {
+        let l = self.device.get(lane).ok_or_else(|| {
+            anyhow::anyhow!("no device lane {lane} (fleet size {})", self.device.len())
+        })?;
+        let (tx, rx) = mpsc::channel();
+        l.master.submit(Box::new(move |ctx| {
+            let _ = tx.send(f(ctx));
+        }));
+        // a panicking job drops `tx` without sending (the master's
+        // catch_unwind keeps the lane alive); surface that as an error
+        rx.recv().map_err(|_| anyhow::anyhow!("device lane {lane} job panicked"))
+    }
+
     /// The profile `Target::Auto` and the hybrid lane resolve to when the
     /// device side participates.
     pub fn auto_profile(&self) -> &str {
@@ -782,12 +821,22 @@ impl Engine {
         if self.device.is_empty() {
             return None;
         }
-        let mut total = DeviceCountersSnapshot { sessions_created: 0, warm_hits: 0, jobs_run: 0 };
+        let mut total = DeviceCountersSnapshot {
+            sessions_created: 0,
+            warm_hits: 0,
+            jobs_run: 0,
+            uploads: 0,
+            upload_hits: 0,
+            upload_invalidations: 0,
+        };
         for l in &self.device {
             let s = l.master.counters.snapshot();
             total.sessions_created += s.sessions_created;
             total.warm_hits += s.warm_hits;
             total.jobs_run += s.jobs_run;
+            total.uploads += s.uploads;
+            total.upload_hits += s.upload_hits;
+            total.upload_invalidations += s.upload_invalidations;
         }
         Some(total)
     }

@@ -48,6 +48,7 @@ pub mod master;
 pub mod mi;
 pub mod partition;
 pub mod phaser;
+pub mod pipeline;
 pub mod pool;
 pub mod reduction;
 pub mod scheduler;
@@ -65,5 +66,6 @@ pub use partition::{
     BlockPart, Block2Part, RowDisjoint, Rows1D, SparsePart, TreeDist,
 };
 pub use phaser::Phaser;
+pub use pipeline::{ExecutionPlan, PipelineReport, StageLane, StageReport};
 pub use reduction::{Assemble, FnReduce, Reduction};
 pub use shared::Shared;

@@ -1,0 +1,697 @@
+//! Method pipelines: execution plans of chained stages with
+//! **device-resident intermediates** (the top ROADMAP open item; HSTREAM
+//! and the TornadoVM task-graph line are the precedents — see
+//! `docs/PIPELINES.md` for the full walkthrough).
+//!
+//! The paper's SOMD model (§6) treats every invocation as an isolated
+//! host round-trip, yet its own evaluation workloads chain methods —
+//! SOR step → sum, crypt encrypt → decrypt — paying a full D2H+H2D on
+//! every hop.  An [`ExecutionPlan`] chains stages (each described by a
+//! [`PipelineSpec`], attached to its method via
+//! [`HeteroMethod::with_pipeline`]) so that when consecutive stages
+//! resolve to the device lane, the upstream outputs *stay resident* as
+//! the downstream inputs:
+//!
+//! * **residency** — a fused device→device hop moves zero bytes; the
+//!   skipped round trip is counted explicitly in
+//!   [`DeviceStats::h2d_skipped`]/[`DeviceStats::d2h_skipped`] (and fed
+//!   to the scheduler as a *resident run*, never diluting
+//!   `transfer_bytes_per_run`);
+//! * **memoized uploads** — host inputs enter through
+//!   [`DeviceSession::put_cached`]: a content-hash match on an
+//!   already-resident upload pins and reuses it (refcounted buffers),
+//!   observable through [`Engine::device_counters`];
+//! * **overlap** — with a fused plan, stage `i+1`'s H2D rides under
+//!   stage `i`'s modeled compute (double-buffering;
+//!   `SOMD_PIPELINE_OVERLAP=off` disables);
+//! * **fallback** — a failing device stage re-runs on SMP *from the
+//!   stage's pinned inputs* and downstream stages see correct host data:
+//!   no stale resident buffer can leak forward (§6's fallback
+//!   discipline, extended to plans).
+//!
+//! With a device fleet attached, all device stages of one plan run are
+//! pinned to a single lane through [`Engine::run_on_lane`] (FIFO per
+//! lane keeps the warm session's buffers valid across jobs); without a
+//! fleet, a plan-local [`DeviceSession`] over the caller's registry
+//! plays the same role.  `run(.., fused=false)` executes the identical
+//! plan as isolated per-stage round-trips — the reference path every
+//! pipeline test compares against, bitwise.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{HeteroMethod, PipelineSpec};
+use crate::device::{BufId, DeviceProfile, DeviceSession, DeviceStats};
+use crate::runtime::{HostTensor, Registry};
+
+use super::config::Target;
+use super::engine::Engine;
+
+/// Default fixed device fraction for pipeline hybrid stages
+/// (overridden by `SOMD_PIPELINE_HYBRID_FRACTION`).
+pub const DEFAULT_PIPELINE_HYBRID_FRACTION: f64 = 0.5;
+
+/// The fixed device fraction pipeline hybrid stages split at.  Fixed —
+/// not the scheduler's learned ratio — because the fused and reference
+/// runs must split identically for order-sensitive float reductions to
+/// stay bitwise equal.
+pub fn hybrid_fraction_from_env() -> f64 {
+    std::env::var("SOMD_PIPELINE_HYBRID_FRACTION")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|f| f.is_finite() && *f > 0.0 && *f < 1.0)
+        .unwrap_or(DEFAULT_PIPELINE_HYBRID_FRACTION)
+}
+
+/// Whether fused plans overlap stage `i+1` H2D with stage `i` compute
+/// (`SOMD_PIPELINE_OVERLAP=0|off|false` disables; default on).
+pub fn overlap_from_env() -> bool {
+    !matches!(
+        std::env::var("SOMD_PIPELINE_OVERLAP").as_deref().map(str::trim),
+        Ok("0") | Ok("off") | Ok("false")
+    )
+}
+
+/// One stage of an [`ExecutionPlan`]: a method name (resolved against
+/// the engine's rules/history like any invocation) plus its type-erased
+/// stage evaluators.
+struct PlanStage {
+    name: String,
+    spec: Arc<PipelineSpec>,
+}
+
+/// An ordered chain of stages executed with device-resident
+/// intermediates (see the module docs).  Build with
+/// [`ExecutionPlan::stage`]/[`ExecutionPlan::then_method`], execute with
+/// [`ExecutionPlan::run`].
+#[derive(Default)]
+pub struct ExecutionPlan {
+    stages: Vec<PlanStage>,
+}
+
+/// Which lane one stage of a plan run actually used (after §6 fallback
+/// resolution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageLane {
+    /// The shared-memory pool (preference, fallback, or failure cover).
+    Smp,
+    /// The device lane, inputs/outputs resident.
+    Device,
+    /// Fixed-fraction co-execution across SMP + device.
+    Hybrid,
+}
+
+/// Per-stage execution report of one plan run.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    /// The stage's method name.
+    pub name: String,
+    /// The lane the stage actually ran on.
+    pub lane: StageLane,
+    /// Device profile (device-lane stages only).
+    pub profile: Option<String>,
+    /// Whether the stage consumed its inputs device-resident (a fused
+    /// hop from the previous stage — the boundary moved zero D2H bytes).
+    pub resident_in: bool,
+    /// D2H bytes paid materializing this stage's *outputs* to the host
+    /// (0 while they stay resident for the next stage).
+    pub exit_d2h_bytes: usize,
+    /// Whether the stage fell back to SMP after a device/hybrid failure.
+    pub fell_back: bool,
+    /// The failure that triggered the fallback, if any.
+    pub error: Option<String>,
+    /// Stage wall seconds (evaluator only; entry/exit transfers charge
+    /// the modeled clock in `stats`).
+    pub secs: f64,
+    /// Device accounting delta for this stage (device-lane stages and
+    /// any materialization charged to them).
+    pub stats: Option<DeviceStats>,
+}
+
+/// The outcome of one [`ExecutionPlan::run`].
+#[derive(Debug)]
+pub struct PipelineReport {
+    /// Per-stage execution reports, in plan order.
+    pub stages: Vec<StageReport>,
+    /// The final stage's outputs, materialized to the host.
+    pub outputs: Vec<HostTensor>,
+    /// Stage boundaries that stayed device-resident: the downstream
+    /// stage consumed resident inputs *and* the upstream stage paid zero
+    /// exit D2H bytes — the provably-free hops.
+    pub resident_boundaries: usize,
+    /// Wall seconds for the whole run.
+    pub wall_secs: f64,
+    /// Modeled seconds: device-stage modeled clocks (transfers, launch
+    /// overheads, scaled compute) plus host-lane stage wall time — the
+    /// quantity the `somd bench pipeline` gate compares.
+    pub modeled_secs: f64,
+}
+
+/// Intermediate data flowing between stages.
+enum StageData {
+    /// Host tensors (plan inputs, host-lane stage outputs, or
+    /// materialized device outputs).
+    Host(Vec<HostTensor>),
+    /// Device-resident buffers (fused device-stage outputs).
+    Resident(Vec<BufId>),
+}
+
+/// Outcome of one device-stage attempt (crosses back from a lane job,
+/// so everything is owned and `Send`).
+struct DevOutcome {
+    /// `Ok`: resident outputs.  `Err`: the stage's inputs, downloaded
+    /// from their pinned buffers for the SMP fallback, plus the error.
+    result: std::result::Result<Vec<BufId>, (Vec<HostTensor>, String)>,
+    delta: DeviceStats,
+    secs: f64,
+    resident_in: bool,
+}
+
+/// Run one device stage on `session`.  Host inputs enter through the
+/// memo cache when `memoize` (fused plans); resident inputs are handed
+/// over in place with the skipped round-trip counted.  Inputs are pinned
+/// across the evaluator call so a failure can still download them for
+/// the SMP fallback — no stale resident buffer survives a failed stage.
+fn device_stage_on(
+    session: &mut DeviceSession<'_>,
+    spec: &PipelineSpec,
+    data: StageData,
+    memoize: bool,
+    overlap: bool,
+) -> Result<DevOutcome> {
+    session.set_overlap(overlap);
+    let (ids, resident_in) = match data {
+        StageData::Host(ts) => {
+            let mut ids = Vec::with_capacity(ts.len());
+            for t in &ts {
+                ids.push(if memoize { session.put_cached(t)? } else { session.put(t)? });
+            }
+            (ids, false)
+        }
+        StageData::Resident(ids) => {
+            for id in &ids {
+                let bytes = session.memory().bytes_of(*id)?;
+                session.note_resident_handoff(bytes);
+            }
+            (ids, true)
+        }
+    };
+    for id in &ids {
+        session.retain(*id)?;
+    }
+    let before = session.stats();
+    let t0 = Instant::now();
+    let dev = spec.device.as_ref().ok_or_else(|| anyhow!("stage has no device evaluator"))?;
+    let out = dev(session, ids.clone());
+    let secs = t0.elapsed().as_secs_f64();
+    match out {
+        Ok(outs) => {
+            let delta = session.stats().delta_since(&before);
+            for id in &ids {
+                session.free(*id)?; // drop the fallback pins
+            }
+            Ok(DevOutcome { result: Ok(outs), delta, secs, resident_in })
+        }
+        Err(e) => {
+            // the evaluator's own input references are in an unknown
+            // state, but the pins still hold the data: download it so
+            // the SMP fallback re-runs the stage from correct inputs
+            let mut host = Vec::with_capacity(ids.len());
+            for id in &ids {
+                host.push(session.get(*id)?);
+                session.free(*id)?;
+            }
+            let delta = session.stats().delta_since(&before);
+            Ok(DevOutcome { result: Err((host, e.to_string())), delta, secs, resident_in })
+        }
+    }
+}
+
+/// Download `ids` to the host and free them; returns the tensors plus
+/// the accounting delta (its `bytes_d2h` is the hop's exit cost).
+fn materialize_on(
+    session: &mut DeviceSession<'_>,
+    ids: Vec<BufId>,
+) -> Result<(Vec<HostTensor>, DeviceStats)> {
+    let before = session.stats();
+    let mut out = Vec::with_capacity(ids.len());
+    for id in ids {
+        out.push(session.get(id)?);
+        session.free(id)?;
+    }
+    Ok((out, session.stats().delta_since(&before)))
+}
+
+/// Where a plan run's device stages execute: pinned to one fleet lane's
+/// warm session (fleet attached) or on a plan-local session over the
+/// caller's registry (no fleet).  Either way, one session spans the
+/// whole run — the residency/memo substrate.
+enum Exec<'e, 'r> {
+    Lane { engine: &'e Engine, lane: usize },
+    Local { session: Option<DeviceSession<'r>>, registry: &'r Registry },
+}
+
+impl<'e, 'r> Exec<'e, 'r> {
+    fn device_stage(
+        &mut self,
+        spec: &Arc<PipelineSpec>,
+        data: StageData,
+        profile: &str,
+        memoize: bool,
+        overlap: bool,
+    ) -> Result<DevOutcome> {
+        match self {
+            Exec::Lane { engine, lane } => {
+                let spec = spec.clone();
+                let profile = profile.to_string();
+                engine.run_on_lane(*lane, move |ctx| -> Result<DevOutcome> {
+                    let session = ctx.session(&profile)?;
+                    device_stage_on(session, &spec, data, memoize, overlap)
+                })?
+            }
+            Exec::Local { session, registry } => {
+                if session.is_none() {
+                    let p = DeviceProfile::by_name(profile)
+                        .ok_or_else(|| anyhow!("unknown device profile '{profile}'"))?;
+                    *session = Some(DeviceSession::new(registry, p));
+                }
+                let s = session.as_mut().expect("session just initialized");
+                device_stage_on(s, spec, data, memoize, overlap)
+            }
+        }
+    }
+
+    fn materialize(
+        &mut self,
+        ids: Vec<BufId>,
+        profile: &str,
+    ) -> Result<(Vec<HostTensor>, DeviceStats)> {
+        match self {
+            Exec::Lane { engine, lane } => {
+                let profile = profile.to_string();
+                engine.run_on_lane(*lane, move |ctx| -> Result<(Vec<HostTensor>, DeviceStats)> {
+                    let session = ctx.session(&profile)?;
+                    materialize_on(session, ids)
+                })?
+            }
+            Exec::Local { session, .. } => {
+                let s = session
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("resident data without a device session"))?;
+                materialize_on(s, ids)
+            }
+        }
+    }
+
+    /// Reset overlap on the session the run used (warm lane sessions
+    /// outlive the plan; leave them in the default state).
+    fn finish(&mut self, profile: &str) {
+        match self {
+            Exec::Lane { engine, lane } => {
+                if !profile.is_empty() {
+                    let profile = profile.to_string();
+                    let _ = engine.run_on_lane(*lane, move |ctx| {
+                        if let Ok(s) = ctx.session(&profile) {
+                            s.set_overlap(false);
+                        }
+                    });
+                }
+            }
+            Exec::Local { session, .. } => {
+                if let Some(s) = session {
+                    s.set_overlap(false);
+                }
+            }
+        }
+    }
+}
+
+impl ExecutionPlan {
+    /// An empty plan.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a stage (builder style): `name` resolves against the
+    /// engine's rules/history exactly like a plain invocation of that
+    /// method would.
+    pub fn stage(mut self, name: impl Into<String>, spec: PipelineSpec) -> Self {
+        self.stages.push(PlanStage { name: name.into(), spec: Arc::new(spec) });
+        self
+    }
+
+    /// Append a stage from a method's attached [`PipelineSpec`] (set via
+    /// [`HeteroMethod::with_pipeline`]); the plan takes ownership of the
+    /// stage evaluators.  Errors when the method has none.
+    pub fn then_method<I: ?Sized + Sync, P: Send + Sync, E: Sync, R: Send>(
+        self,
+        method: &mut HeteroMethod<I, P, E, R>,
+    ) -> Result<Self> {
+        let spec = method
+            .take_pipeline()
+            .ok_or_else(|| anyhow!("method '{}' has no pipeline spec", method.name()))?;
+        let name = method.name().to_string();
+        Ok(self.stage(name, spec))
+    }
+
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Whether the plan has no stages.
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// The stage method names, in plan order.
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Execute the plan over `inputs`.
+    ///
+    /// `fused = true` keeps intermediates device-resident across
+    /// consecutive device stages (memoized uploads, overlap, skipped
+    /// round-trips); `fused = false` is the per-stage reference path —
+    /// every stage round-trips host memory through plain `put`/`get`,
+    /// exactly as isolated invocations would.  Both paths resolve each
+    /// stage through the same §6 ladder, so for a given engine they run
+    /// on the same lanes and their outputs must be bitwise identical.
+    pub fn run(
+        &self,
+        engine: &Engine,
+        registry: &Registry,
+        inputs: Vec<HostTensor>,
+        fused: bool,
+    ) -> Result<PipelineReport> {
+        if self.stages.is_empty() {
+            return Err(anyhow!("empty execution plan"));
+        }
+        let overlap = fused && overlap_from_env();
+        let t_run = Instant::now();
+
+        let mut exec = if engine.device_ready() {
+            let pending = engine.device_lane_pending();
+            let lane = pending
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| **p)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            Exec::Lane { engine, lane }
+        } else {
+            Exec::Local { session: None, registry }
+        };
+        // all device stages of one run share one profile (and with it
+        // one session), fixed by the first device-resolved stage —
+        // resident handles are meaningless across sessions
+        let mut plan_profile = String::new();
+
+        let mut data = StageData::Host(inputs);
+        let mut reports: Vec<StageReport> = Vec::new();
+        let mut modeled = 0.0f64;
+
+        for stage in &self.stages {
+            let applicable =
+                |p: &str| stage.spec.has_device() && DeviceProfile::by_name(p).is_some();
+            let hybrid_ok = stage.spec.has_hybrid()
+                && DeviceProfile::by_name(engine.auto_profile()).is_some();
+            let target = engine.resolve_target(&stage.name, &applicable, hybrid_ok, 0);
+
+            // take the flowing data; the arms put the stage output back
+            let taken = std::mem::replace(&mut data, StageData::Host(Vec::new()));
+
+            match target {
+                Target::Device(p) => {
+                    if plan_profile.is_empty() {
+                        plan_profile = p;
+                    }
+                    let outcome = exec.device_stage(
+                        &stage.spec,
+                        taken,
+                        &plan_profile,
+                        fused,
+                        overlap,
+                    )?;
+                    modeled += outcome.delta.device_time.as_secs_f64();
+                    match outcome.result {
+                        Ok(outs) => {
+                            engine.scheduler().record_device(
+                                &stage.name,
+                                Duration::from_secs_f64(outcome.secs),
+                                &outcome.delta,
+                            );
+                            reports.push(StageReport {
+                                name: stage.name.clone(),
+                                lane: StageLane::Device,
+                                profile: Some(plan_profile.clone()),
+                                resident_in: outcome.resident_in,
+                                exit_d2h_bytes: 0,
+                                fell_back: false,
+                                error: None,
+                                secs: outcome.secs,
+                                stats: Some(outcome.delta),
+                            });
+                            if fused {
+                                data = StageData::Resident(outs);
+                            } else {
+                                // reference path: round-trip every hop
+                                let (host, d) = exec.materialize(outs, &plan_profile)?;
+                                modeled += d.device_time.as_secs_f64();
+                                let last = reports.last_mut().expect("stage just pushed");
+                                last.exit_d2h_bytes += d.bytes_d2h;
+                                if let Some(st) = &mut last.stats {
+                                    st.absorb(&d);
+                                }
+                                data = StageData::Host(host);
+                            }
+                        }
+                        Err((host_inputs, msg)) => {
+                            engine.scheduler().record_device_failure(&stage.name);
+                            let t0 = Instant::now();
+                            let outs = (stage.spec.smp)(&host_inputs)?;
+                            let secs = t0.elapsed();
+                            engine.scheduler().record_smp(&stage.name, secs);
+                            modeled += secs.as_secs_f64();
+                            reports.push(StageReport {
+                                name: stage.name.clone(),
+                                lane: StageLane::Smp,
+                                profile: None,
+                                resident_in: outcome.resident_in,
+                                exit_d2h_bytes: 0,
+                                fell_back: true,
+                                error: Some(msg),
+                                secs: secs.as_secs_f64(),
+                                stats: Some(outcome.delta),
+                            });
+                            data = StageData::Host(outs);
+                        }
+                    }
+                }
+                Target::Hybrid | Target::Sharded if stage.spec.has_hybrid() => {
+                    let host = self.to_host(&mut exec, taken, &plan_profile, &mut reports, &mut modeled)?;
+                    let hybrid =
+                        stage.spec.hybrid.as_ref().expect("hybrid_ok implies evaluator");
+                    let t0 = Instant::now();
+                    match hybrid(engine, registry, &host) {
+                        Ok(outs) => {
+                            let secs = t0.elapsed().as_secs_f64();
+                            modeled += secs;
+                            reports.push(StageReport {
+                                name: stage.name.clone(),
+                                lane: StageLane::Hybrid,
+                                profile: None,
+                                resident_in: false,
+                                exit_d2h_bytes: 0,
+                                fell_back: false,
+                                error: None,
+                                secs,
+                                stats: None,
+                            });
+                            data = StageData::Host(outs);
+                        }
+                        Err(e) => {
+                            // the evaluator records its own failure; the
+                            // stage still completes on SMP
+                            let t1 = Instant::now();
+                            let outs = (stage.spec.smp)(&host)?;
+                            let secs = t1.elapsed();
+                            engine.scheduler().record_smp(&stage.name, secs);
+                            modeled += secs.as_secs_f64();
+                            reports.push(StageReport {
+                                name: stage.name.clone(),
+                                lane: StageLane::Smp,
+                                profile: None,
+                                resident_in: false,
+                                exit_d2h_bytes: 0,
+                                fell_back: true,
+                                error: Some(e.to_string()),
+                                secs: secs.as_secs_f64(),
+                                stats: None,
+                            });
+                            data = StageData::Host(outs);
+                        }
+                    }
+                }
+                _ => {
+                    let host = self.to_host(&mut exec, taken, &plan_profile, &mut reports, &mut modeled)?;
+                    let t0 = Instant::now();
+                    let outs = (stage.spec.smp)(&host)?;
+                    let secs = t0.elapsed();
+                    engine.scheduler().record_smp(&stage.name, secs);
+                    modeled += secs.as_secs_f64();
+                    reports.push(StageReport {
+                        name: stage.name.clone(),
+                        lane: StageLane::Smp,
+                        profile: None,
+                        resident_in: false,
+                        exit_d2h_bytes: 0,
+                        fell_back: false,
+                        error: None,
+                        secs: secs.as_secs_f64(),
+                        stats: None,
+                    });
+                    data = StageData::Host(outs);
+                }
+            }
+        }
+
+        // the plan's outputs always land on the host (both paths pay
+        // this final download, so the comparison stays fair)
+        let outputs = match data {
+            StageData::Host(ts) => ts,
+            StageData::Resident(ids) => {
+                let (host, d) = exec.materialize(ids, &plan_profile)?;
+                modeled += d.device_time.as_secs_f64();
+                if let Some(last) = reports.last_mut() {
+                    last.exit_d2h_bytes += d.bytes_d2h;
+                    if let Some(st) = &mut last.stats {
+                        st.absorb(&d);
+                    }
+                }
+                host
+            }
+        };
+        exec.finish(&plan_profile);
+
+        // a boundary is provably resident when the downstream stage took
+        // resident inputs AND the upstream stage paid zero exit D2H —
+        // a stage that fell back re-downloaded its inputs, so its entry
+        // hop does not count even though it started resident
+        let resident_boundaries = reports
+            .windows(2)
+            .filter(|w| w[1].resident_in && !w[1].fell_back && w[0].exit_d2h_bytes == 0)
+            .count();
+
+        Ok(PipelineReport {
+            stages: reports,
+            outputs,
+            resident_boundaries,
+            wall_secs: t_run.elapsed().as_secs_f64(),
+            modeled_secs: modeled,
+        })
+    }
+
+    /// Materialize `data` to host tensors for a host-lane stage,
+    /// charging any exit D2H to the previous stage's report.
+    fn to_host(
+        &self,
+        exec: &mut Exec<'_, '_>,
+        data: StageData,
+        profile: &str,
+        reports: &mut Vec<StageReport>,
+        modeled: &mut f64,
+    ) -> Result<Vec<HostTensor>> {
+        match data {
+            StageData::Host(ts) => Ok(ts),
+            StageData::Resident(ids) => {
+                let (host, d) = exec.materialize(ids, profile)?;
+                *modeled += d.device_time.as_secs_f64();
+                if let Some(last) = reports.last_mut() {
+                    last.exit_d2h_bytes += d.bytes_d2h;
+                    if let Some(st) = &mut last.stats {
+                        st.absorb(&d);
+                    }
+                }
+                Ok(host)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::somd::reduction;
+    use crate::somd::{Block1D, SomdMethod};
+
+    fn reg() -> Registry {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Registry::load(dir).unwrap()
+    }
+
+    fn double_spec() -> PipelineSpec {
+        PipelineSpec::new(|ts: &[HostTensor]| {
+            let v = ts[0].as_f32()?;
+            Ok(vec![HostTensor::vec_f32(v.iter().map(|x| x * 2.0).collect())])
+        })
+    }
+
+    #[test]
+    fn empty_plan_rejected_and_builder_reports_shape() {
+        let engine = Engine::new(2);
+        let r = reg();
+        let plan = ExecutionPlan::new();
+        assert!(plan.is_empty());
+        assert!(plan.run(&engine, &r, vec![], true).is_err());
+        let plan = plan.stage("A.a", double_spec()).stage("B.b", double_spec());
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.stage_names(), vec!["A.a", "B.b"]);
+    }
+
+    #[test]
+    fn smp_only_plan_chains_host_stages() {
+        let engine = Engine::new(2);
+        let r = reg();
+        let plan = ExecutionPlan::new()
+            .stage("Pipe.double", double_spec())
+            .stage("Pipe.double2", double_spec());
+        let input = HostTensor::vec_f32(vec![1.0, 2.0, 3.0]);
+        let rep = plan.run(&engine, &r, vec![input], true).unwrap();
+        assert_eq!(rep.outputs[0].as_f32().unwrap(), &[4.0, 8.0, 12.0]);
+        assert_eq!(rep.stages.len(), 2);
+        assert!(rep.stages.iter().all(|s| s.lane == StageLane::Smp && !s.fell_back));
+        assert_eq!(rep.resident_boundaries, 0);
+        // both stages fed the scheduler history
+        assert!(engine.scheduler().history("Pipe.double").is_some());
+    }
+
+    #[test]
+    fn then_method_takes_the_attached_spec() {
+        let smp = SomdMethod::new(
+            "Pipe.m",
+            |inp: &Vec<f32>, n| Block1D::new().ranges(inp.len(), n),
+            |_, _| (),
+            |_, _, _, _| 0.0f64,
+            reduction::sum::<f64>(),
+        );
+        let mut m = HeteroMethod::smp_only(smp).with_pipeline(double_spec());
+        assert!(m.has_pipeline_version());
+        let plan = ExecutionPlan::new().then_method(&mut m).unwrap();
+        assert_eq!(plan.stage_names(), vec!["Pipe.m"]);
+        assert!(!m.has_pipeline_version());
+        // a second take has nothing left
+        assert!(ExecutionPlan::new().then_method(&mut m).is_err());
+    }
+
+    #[test]
+    fn env_knob_parsers_have_sane_defaults() {
+        // no env set in the test harness: defaults
+        assert!(overlap_from_env());
+        let f = hybrid_fraction_from_env();
+        assert!(f > 0.0 && f < 1.0);
+    }
+}

@@ -236,6 +236,20 @@ pub struct MethodHistory {
     /// runs increment the lifetime counters but move no bytes, so they
     /// must not dilute the bus-pressure signal.
     pub transfer_runs: u64,
+    /// Device-touching runs that kept at least one intermediate
+    /// device-resident (pipeline stages: memoized-upload hits or resident
+    /// stage handoffs).  Counted *separately* from `transfer_runs` — a
+    /// resident run's near-zero bus traffic reflects residency, not a
+    /// cheap workload, and folding it into the mean would dilute the
+    /// §7.3 bus-pressure signal.
+    pub resident_runs: u64,
+    /// Bytes actually moved during resident runs (still part of the
+    /// `bytes_h2d`/`bytes_d2h` lifetime totals; excluded from the
+    /// per-transfer-run mean).
+    pub resident_bytes: u64,
+    /// Bytes that stayed device-resident instead of crossing the bus
+    /// (both directions), summed over resident runs.
+    pub skipped_bytes: u64,
     /// The learned device share of a hybrid split; `None` until the first
     /// hybrid run produced throughput observations for both sides.
     pub device_fraction: Option<f64>,
@@ -383,7 +397,11 @@ impl MethodHistory {
         if self.transfer_runs == 0 {
             0.0
         } else {
-            (self.bytes_h2d + self.bytes_d2h) as f64 / self.transfer_runs as f64
+            // resident runs' (small) residual traffic is excluded: the
+            // mean characterizes what a *round-tripping* run costs
+            let moved =
+                (self.bytes_h2d + self.bytes_d2h).saturating_sub(self.resident_bytes);
+            moved as f64 / self.transfer_runs as f64
         }
     }
 }
@@ -521,11 +539,25 @@ impl Scheduler {
         self.for_each_granularity(method, items, |cfg, e| {
             MethodHistory::push(&mut e.device_secs, measured.as_secs_f64(), cfg.window);
             e.device_runs += 1;
-            e.transfer_runs += 1;
-            e.bytes_h2d += stats.bytes_h2d as u64;
-            e.bytes_d2h += stats.bytes_d2h as u64;
-            e.launches += stats.launches as u64;
+            Self::account_transfers(e, stats);
         });
+    }
+
+    /// Fold one run's transfer accounting into a history entry.  Runs
+    /// that skipped transfers via residency are recorded as
+    /// `resident_runs` — never as `transfer_runs` — so resident
+    /// pipeline stages don't dilute `transfer_bytes_per_run`.
+    fn account_transfers(e: &mut MethodHistory, stats: &DeviceStats) {
+        if stats.skipped_transfers() > 0 {
+            e.resident_runs += 1;
+            e.resident_bytes += stats.total_transfer_bytes() as u64;
+            e.skipped_bytes += stats.skipped_transfer_bytes() as u64;
+        } else {
+            e.transfer_runs += 1;
+        }
+        e.bytes_h2d += stats.bytes_h2d as u64;
+        e.bytes_d2h += stats.bytes_d2h as u64;
+        e.launches += stats.launches as u64;
     }
 
     /// Record a *failed* device invocation as a large penalty sample.
@@ -596,10 +628,7 @@ impl Scheduler {
                 );
             }
             e.hybrid_runs += 1;
-            e.transfer_runs += 1;
-            e.bytes_h2d += stats.bytes_h2d as u64;
-            e.bytes_d2h += stats.bytes_d2h as u64;
-            e.launches += stats.launches as u64;
+            Self::account_transfers(e, stats);
             if let Some(f_star) = e.equilibrium_fraction() {
                 let f_star = f_star.clamp(FRACTION_MIN, FRACTION_MAX);
                 match e.device_fraction {
@@ -712,10 +741,7 @@ impl Scheduler {
                 }
             }
             e.sharded_runs += 1;
-            e.transfer_runs += 1;
-            e.bytes_h2d += stats.bytes_h2d as u64;
-            e.bytes_d2h += stats.bytes_d2h as u64;
-            e.launches += stats.launches as u64;
+            Self::account_transfers(e, stats);
             if let Some(w_star) = e.equilibrium_weights(devices.len()) {
                 let floored: Vec<f64> = w_star.iter().map(|w| w.max(WEIGHT_MIN)).collect();
                 let total: f64 = floored.iter().sum();
@@ -1288,6 +1314,9 @@ impl Scheduler {
         m.insert("sharded_runs".to_string(), Json::Num(e.sharded_runs as f64));
         m.insert("sharded_failures".to_string(), Json::Num(e.sharded_failures as f64));
         m.insert("transfer_runs".to_string(), Json::Num(e.transfer_runs as f64));
+        m.insert("resident_runs".to_string(), Json::Num(e.resident_runs as f64));
+        m.insert("resident_bytes".to_string(), Json::Num(e.resident_bytes as f64));
+        m.insert("skipped_bytes".to_string(), Json::Num(e.skipped_bytes as f64));
         m.insert(
             "device_fraction".to_string(),
             match e.device_fraction {
@@ -1465,6 +1494,10 @@ impl Scheduler {
             sharded_runs: num("sharded_runs"),
             sharded_failures: num("sharded_failures"),
             transfer_runs,
+            // pre-pipeline snapshots lack the resident-run fields
+            resident_runs: num("resident_runs"),
+            resident_bytes: num("resident_bytes"),
+            skipped_bytes: num("skipped_bytes"),
             device_fraction,
             lane_weights,
             bytes_h2d: num("bytes_h2d"),
@@ -1775,6 +1808,27 @@ mod tests {
         }
         let h = s.history("M.m").unwrap();
         assert_eq!(h.transfer_runs, 1);
+        assert!((h.transfer_bytes_per_run() - 1_000_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resident_runs_recorded_distinctly_from_transfer_runs() {
+        // a pipeline stage that kept its input resident moves almost no
+        // bytes; folding it into the mean would fake a cheap bus
+        let s = Scheduler::new(SchedulerConfig::default());
+        rec_dev(&s, "M.m", 0.010, 1_000_000); // an honest round-trip run
+        let mut st = dev_stats(0.004, 64); // residual traffic only
+        st.h2d_skipped = 1;
+        st.d2h_skipped = 1;
+        st.bytes_h2d_skipped = 1_000_000;
+        st.bytes_d2h_skipped = 1_000_000;
+        s.record_device("M.m", Duration::from_secs_f64(0.004), &st);
+        let h = s.history("M.m").unwrap();
+        assert_eq!(h.transfer_runs, 1);
+        assert_eq!(h.resident_runs, 1);
+        assert_eq!(h.resident_bytes, 64);
+        assert_eq!(h.skipped_bytes, 2_000_000);
+        // the mean still reads 1 MB/run, not (1 MB + 64 B) / 2
         assert!((h.transfer_bytes_per_run() - 1_000_000.0).abs() < 1e-9);
     }
 

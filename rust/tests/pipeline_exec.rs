@@ -1,0 +1,333 @@
+//! Pipeline correctness suite (tentpole of the method-pipelines PR):
+//!
+//! * a fused [`ExecutionPlan`] run — device-resident intermediates,
+//!   memoized uploads, transfer/compute overlap — is **bitwise
+//!   identical** to the per-stage round-trip reference run of the same
+//!   plan, for the crypt encrypt→decrypt chain and the SOR step→sum
+//!   chain, across smp/device/hybrid lane resolutions and in both the
+//!   fleet-lane and the plan-local execution modes;
+//! * a fused all-device chain provably keeps its stage boundary
+//!   resident (zero exit D2H bytes, skipped-transfer counters move) and
+//!   serves repeat uploads from the content-hash memo
+//!   ([`Engine::device_counters`] observes uploads/hits);
+//! * a failing device stage mid-pipeline falls back to SMP *for that
+//!   stage* and downstream stages see correct inputs — never a stale
+//!   resident buffer;
+//! * property: upload memoization never serves stale data — mutating a
+//!   host input between runs forces a fresh upload (the content hash
+//!   misses), pinned through the engine-level upload counters.
+//!
+//! CI runs this suite under both `XLA_FUSE=off` and `XLA_FUSE=on`.
+
+use somd::backend::PipelineSpec;
+use somd::bench_suite::crypt::{self, BLOCK_BYTES, SUBKEYS};
+use somd::bench_suite::gpu;
+use somd::bench_suite::pipeline::{crypt_stage, sor_art, sor_step_stage, sor_sum_stage};
+use somd::runtime::{HostTensor, Registry};
+use somd::somd::{
+    Engine, ExecutionPlan, Rules, Scheduler, SchedulerConfig, StageLane, Target,
+};
+use somd::util::testkit::Prop;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn reg() -> Registry {
+    Registry::load(artifacts_dir()).expect("artifacts present")
+}
+
+/// An engine with `stages` forced to the given targets, a scheduler
+/// that never starves small device shares, and (optionally) a one-lane
+/// fermi fleet so device stages run on a warm lane session.
+fn engine_for(stages: &[(&str, Target)], fleet: bool) -> Engine {
+    let mut rules = Rules::empty();
+    for (name, t) in stages {
+        rules.set(*name, t.clone());
+    }
+    let e = Engine::with_rules(2, rules).with_scheduler(Scheduler::new(SchedulerConfig {
+        min_device_items: 1,
+        ..Default::default()
+    }));
+    if fleet {
+        e.with_device_fleet(artifacts_dir(), &["fermi"]).expect("device fleet starts")
+    } else {
+        e
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crypt chain: encrypt → decrypt on packed 16-bit words (integer IDEA —
+// bitwise across every lane)
+// ---------------------------------------------------------------------------
+
+/// The committed crypt artifact's problem size.
+fn crypt_blocks() -> usize {
+    reg().info("crypt_A").unwrap().meta_usize("blocks").unwrap()
+}
+
+fn crypt_plan(p: &crypt::Problem) -> ExecutionPlan {
+    ExecutionPlan::new()
+        .stage("PipeCrypt.encrypt", crypt_stage(p.ekeys))
+        .stage("PipeCrypt.decrypt", crypt_stage(p.dkeys))
+}
+
+fn words_tensor(bytes: &[u8]) -> HostTensor {
+    HostTensor::mat_u32(gpu::pack_words(bytes), bytes.len() / BLOCK_BYTES, 4)
+}
+
+#[test]
+fn crypt_chain_fused_bitwise_equals_roundtrip_across_lane_resolutions() {
+    let registry = reg();
+    let p = crypt::Problem::generate(crypt_blocks() * BLOCK_BYTES, 7);
+    // ground truth: decrypt(encrypt(x)) round-trips to x on the SMP
+    // reference cipher — integer arithmetic, bitwise on every lane
+    let want = words_tensor(&crypt::sequential(&crypt::sequential(&p.data, &p.ekeys), &p.dkeys));
+    assert_eq!(want, words_tensor(&p.data), "IDEA round-trip sanity");
+
+    let fermi = || Target::Device("fermi".to_string());
+    let combos: Vec<(&str, Target, Target, StageLane, StageLane)> = vec![
+        ("smp/smp", Target::Smp, Target::Smp, StageLane::Smp, StageLane::Smp),
+        ("device/device", fermi(), fermi(), StageLane::Device, StageLane::Device),
+        ("device/smp", fermi(), Target::Smp, StageLane::Device, StageLane::Smp),
+        ("smp/device", Target::Smp, fermi(), StageLane::Smp, StageLane::Device),
+        ("hybrid/hybrid", Target::Hybrid, Target::Hybrid, StageLane::Hybrid, StageLane::Hybrid),
+        ("hybrid/device", Target::Hybrid, fermi(), StageLane::Hybrid, StageLane::Device),
+    ];
+    for (desc, enc_t, dec_t, enc_lane, dec_lane) in combos {
+        let engine = engine_for(
+            &[("PipeCrypt.encrypt", enc_t), ("PipeCrypt.decrypt", dec_t)],
+            true,
+        );
+        let plan = crypt_plan(&p);
+        let input = words_tensor(&p.data);
+        let fused = plan.run(&engine, &registry, vec![input.clone()], true).unwrap();
+        let reference = plan.run(&engine, &registry, vec![input], false).unwrap();
+        assert_eq!(fused.outputs, reference.outputs, "{desc}: fused vs round-trip");
+        assert_eq!(fused.outputs[0], want, "{desc}: fused vs ground truth");
+        assert_eq!(fused.stages[0].lane, enc_lane, "{desc}");
+        assert_eq!(fused.stages[1].lane, dec_lane, "{desc}");
+        assert!(fused.stages.iter().all(|s| !s.fell_back), "{desc}: no fallback expected");
+        // residency only exists across a device→device boundary
+        let expect_resident =
+            usize::from(enc_lane == StageLane::Device && dec_lane == StageLane::Device);
+        assert_eq!(fused.resident_boundaries, expect_resident, "{desc}");
+        assert_eq!(reference.resident_boundaries, 0, "{desc}: round-trips never resident");
+    }
+}
+
+#[test]
+fn crypt_chain_fused_matches_roundtrip_without_a_fleet_too() {
+    // no fleet attached: device stages run on a plan-local session over
+    // the caller's registry (the synchronous §6 path), and residency
+    // must hold there exactly as on a warm fleet lane
+    let registry = reg();
+    let p = crypt::Problem::generate(crypt_blocks() * BLOCK_BYTES, 11);
+    let engine = engine_for(
+        &[
+            ("PipeCrypt.encrypt", Target::Device("fermi".to_string())),
+            ("PipeCrypt.decrypt", Target::Device("fermi".to_string())),
+        ],
+        false,
+    );
+    let plan = crypt_plan(&p);
+    let input = words_tensor(&p.data);
+    let fused = plan.run(&engine, &registry, vec![input.clone()], true).unwrap();
+    let reference = plan.run(&engine, &registry, vec![input.clone()], false).unwrap();
+    assert_eq!(fused.outputs, reference.outputs);
+    assert_eq!(fused.outputs[0], input, "decrypt(encrypt(x)) == x");
+    assert_eq!(fused.resident_boundaries, 1);
+    assert!(fused.stages[1].resident_in);
+    assert_eq!(fused.stages[0].exit_d2h_bytes, 0);
+}
+
+#[test]
+fn fused_device_chain_proves_residency_and_memoized_uploads() {
+    let registry = reg();
+    let p = crypt::Problem::generate(crypt_blocks() * BLOCK_BYTES, 23);
+    let engine = engine_for(
+        &[
+            ("PipeCrypt.encrypt", Target::Device("fermi".to_string())),
+            ("PipeCrypt.decrypt", Target::Device("fermi".to_string())),
+        ],
+        true,
+    );
+    let plan = crypt_plan(&p);
+    let input = words_tensor(&p.data);
+
+    let before = engine.device_counters().expect("fleet attached");
+    let fused = plan.run(&engine, &registry, vec![input.clone()], true).unwrap();
+    let mid = engine.device_counters().unwrap();
+
+    // the encrypt→decrypt boundary stayed resident: zero exit D2H at
+    // the hop, and the skipped round-trip is counted, not zeroed
+    assert_eq!(fused.resident_boundaries, 1);
+    assert!(fused.stages[1].resident_in);
+    assert_eq!(fused.stages[0].exit_d2h_bytes, 0);
+    let s1 = fused.stages[1].stats.as_ref().expect("device stage stats");
+    assert!(s1.h2d_skipped >= 1, "resident entry counted as skipped H2D");
+    assert!(s1.d2h_skipped >= 1, "resident entry counted as skipped D2H");
+    assert!(s1.bytes_h2d_skipped > 0 && s1.bytes_d2h_skipped > 0);
+    // only the final materialization pays D2H
+    assert!(fused.stages[1].exit_d2h_bytes > 0);
+    // the plan input went through the memo (a fresh upload, not a hit)
+    assert!(mid.uploads > before.uploads, "fused entry registers in the upload memo");
+
+    // a second fused run of the same plan on the same warm lane serves
+    // the unchanged input from the memo
+    let again = plan.run(&engine, &registry, vec![input], true).unwrap();
+    let after = engine.device_counters().unwrap();
+    assert_eq!(again.outputs, fused.outputs, "memo hit returns identical data");
+    assert!(after.upload_hits > mid.upload_hits, "repeat upload memoized");
+}
+
+#[test]
+fn mid_pipeline_device_failure_falls_back_to_smp_without_stale_buffers() {
+    let registry = reg();
+    let p = crypt::Problem::generate(crypt_blocks() * BLOCK_BYTES, 31);
+    let fermi = || Target::Device("fermi".to_string());
+    let engine = engine_for(
+        &[
+            ("PipeCrypt.encrypt", fermi()),
+            ("Pipe.fail", fermi()),
+            ("PipeCrypt.decrypt", fermi()),
+        ],
+        true,
+    );
+    // the middle stage is an identity pass whose device version always
+    // fails: the fallback must re-run it on SMP from the *encrypted*
+    // intermediate (downloaded from the pinned resident inputs), so the
+    // final decrypt can only succeed if no stale data leaked through
+    let failing = PipelineSpec::new(|ts: &[HostTensor]| Ok(ts.to_vec()))
+        .with_device(|_sess, _ids| Err(anyhow::anyhow!("injected device fault")));
+    let plan = ExecutionPlan::new()
+        .stage("PipeCrypt.encrypt", crypt_stage(p.ekeys))
+        .stage("Pipe.fail", failing)
+        .stage("PipeCrypt.decrypt", crypt_stage(p.dkeys));
+
+    let input = words_tensor(&p.data);
+    let rep = plan.run(&engine, &registry, vec![input.clone()], true).unwrap();
+
+    assert_eq!(rep.outputs[0], input, "decrypt of the true intermediate round-trips");
+    let fail = &rep.stages[1];
+    assert!(fail.fell_back, "device fault must fall back, not abort the plan");
+    assert_eq!(fail.lane, StageLane::Smp);
+    assert!(fail.error.as_deref().unwrap().contains("injected device fault"));
+    assert!(fail.resident_in, "the failed stage had consumed a resident boundary");
+    // the failed hop is not a resident boundary (its inputs were
+    // re-downloaded), and the post-fallback stage re-enters from host
+    assert_eq!(rep.resident_boundaries, 0);
+    assert!(!rep.stages[2].resident_in);
+    assert_eq!(rep.stages[2].lane, StageLane::Device, "downstream stays on its lane");
+    // the failure is penalized in the history; the SMP cover is recorded
+    let h = engine.scheduler().history("Pipe.fail").expect("history recorded");
+    assert!(h.device_failures >= 1);
+    assert!(h.smp_runs >= 1);
+}
+
+// ---------------------------------------------------------------------------
+// SOR chain: step → sum (f32 on the artifact interpreter; fused vs
+// round-trip compared under the same lane resolution)
+// ---------------------------------------------------------------------------
+
+/// Bitwise equality for f32 tensors (NaN-safe, sign-of-zero-exact).
+fn f32_bits_eq(a: &HostTensor, b: &HostTensor) -> bool {
+    match (a.as_f32(), b.as_f32()) {
+        (Ok(x), Ok(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        _ => false,
+    }
+}
+
+#[test]
+fn sor_chain_fused_bitwise_equals_roundtrip_on_each_lane() {
+    let registry = reg();
+    let (_, n) = sor_art(&registry, "sor_step").unwrap();
+    // varied, deterministic grid (not constant, so misplaced elements
+    // and stale intermediates cannot hide)
+    let grid: Vec<f32> = (0..n * n).map(|i| ((i * 31 + 7) % 1000) as f32 / 1000.0).collect();
+    let input = HostTensor::mat_f32(grid, n, n);
+    const ITERS: usize = 3;
+
+    let fermi = || Target::Device("fermi".to_string());
+    let mut per_lane: Vec<HostTensor> = Vec::new();
+    for (desc, step_t, sum_t, fleet) in [
+        ("smp", Target::Smp, Target::Smp, true),
+        ("device (fleet lane)", fermi(), fermi(), true),
+        ("device (plan-local)", fermi(), fermi(), false),
+    ] {
+        let engine =
+            engine_for(&[("PipeSor.step", step_t), ("PipeSor.sum", sum_t)], fleet);
+        let plan = ExecutionPlan::new()
+            .stage("PipeSor.step", sor_step_stage(ITERS))
+            .stage("PipeSor.sum", sor_sum_stage());
+        let fused = plan.run(&engine, &registry, vec![input.clone()], true).unwrap();
+        let reference = plan.run(&engine, &registry, vec![input.clone()], false).unwrap();
+        assert_eq!(fused.outputs.len(), 1, "{desc}");
+        assert!(
+            f32_bits_eq(&fused.outputs[0], &reference.outputs[0]),
+            "{desc}: fused vs round-trip diverged: {:?} vs {:?}",
+            fused.outputs[0],
+            reference.outputs[0],
+        );
+        per_lane.push(fused.outputs[0].clone());
+    }
+    // both lanes interpret the same artifact, so the lanes agree too
+    for w in per_lane.windows(2) {
+        assert!(f32_bits_eq(&w[0], &w[1]), "lanes diverged: {:?} vs {:?}", w[0], w[1]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property: the upload memo never serves stale data
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_upload_memo_never_serves_stale_buffers() {
+    let registry = reg();
+    let blocks = crypt_blocks();
+    let engine =
+        engine_for(&[("PipeCrypt.encrypt", Target::Device("fermi".to_string()))], true);
+
+    Prop::new("pipeline upload memo freshness", 0x9194).runs(12).check(|g| {
+        // a random key schedule and random plaintext words — IDEA's
+        // arithmetic accepts any subkeys, and the SMP cipher is the
+        // independent ground truth for whatever the device returns
+        let mut keys = [0u32; SUBKEYS];
+        for k in &mut keys {
+            *k = u32::from(g.u16());
+        }
+        let data = g.vec_u8(blocks * BLOCK_BYTES);
+        let plan = ExecutionPlan::new().stage("PipeCrypt.encrypt", crypt_stage(keys));
+        let want = |bytes: &[u8]| words_tensor(&crypt::sequential(bytes, &keys));
+
+        let t = words_tensor(&data);
+        let c0 = engine.device_counters().unwrap();
+        let r1 = plan.run(&engine, &registry, vec![t.clone()], true).unwrap();
+        let c1 = engine.device_counters().unwrap();
+        assert_eq!(r1.outputs[0], want(&data), "fresh input encrypts correctly");
+        assert!(c1.uploads > c0.uploads, "unseen content is a real upload");
+
+        // the identical tensor again: a memo hit, same ciphertext
+        let r2 = plan.run(&engine, &registry, vec![t], true).unwrap();
+        let c2 = engine.device_counters().unwrap();
+        assert_eq!(r2.outputs, r1.outputs, "memo hit preserves the payload");
+        assert!(c2.upload_hits > c1.upload_hits, "repeat content hits the memo");
+
+        // mutate one byte after registration: the content hash must
+        // miss — a stale resident buffer would decrypt the OLD data
+        let mut mutated = data.clone();
+        let at = g.usize(0, mutated.len() - 1);
+        mutated[at] ^= 0x5a;
+        let r3 = plan.run(&engine, &registry, vec![words_tensor(&mutated)], true).unwrap();
+        let c3 = engine.device_counters().unwrap();
+        assert_eq!(r3.outputs[0], want(&mutated), "mutated input is re-uploaded, not stale");
+        assert!(c3.uploads > c2.uploads, "mutation invalidates the memo entry");
+        assert_eq!(
+            c3.upload_hits, c2.upload_hits,
+            "a mutated tensor must never count as a hit"
+        );
+    });
+}

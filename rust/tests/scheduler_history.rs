@@ -407,3 +407,43 @@ fn windows_bound_memory_and_adapt() {
     // the estimate tracks the trailing window, not the lifetime mean
     assert!((h.smp_estimate().unwrap() - 0.198).abs() < 1e-9);
 }
+
+// ---------------------------------------------------------------------------
+// Pipeline resident runs (method-pipelines PR)
+// ---------------------------------------------------------------------------
+
+/// A fused pipeline stage whose boundary stayed device-resident must be
+/// recorded as a *resident run*: its skipped round-trip may not dilute
+/// the per-run transfer mean that the auto ladder's cost model feeds on,
+/// and the new counters must survive the snapshot round trip.
+#[test]
+fn resident_runs_do_not_dilute_transfer_bytes_and_round_trip() {
+    let s = Scheduler::new(cfg());
+    // two honest round-trip runs at 1 MB each
+    rec_dev(&s, "Pipe.stage", 0.002, 1_000_000);
+    rec_dev(&s, "Pipe.stage", 0.002, 1_000_000);
+    // one fused resident run: tiny residual transfer, huge skipped hop
+    let mut resident = dev(0.002, 64);
+    resident.h2d_skipped = 1;
+    resident.d2h_skipped = 1;
+    resident.bytes_h2d_skipped = 1_000_000;
+    resident.bytes_d2h_skipped = 1_000_000;
+    s.record_device("Pipe.stage", Duration::from_millis(2), &resident);
+
+    let h = s.history("Pipe.stage").unwrap();
+    assert_eq!(h.device_runs, 3, "the resident run still counts as a device run");
+    assert_eq!(h.transfer_runs, 2, "but stays out of the transfer mean");
+    assert_eq!(h.resident_runs, 1);
+    assert_eq!(h.resident_bytes, 64, "its residual bytes are set aside");
+    assert_eq!(h.skipped_bytes, 2_000_000, "the skipped hop is counted, not zeroed");
+    assert!(
+        (h.transfer_bytes_per_run() - 1_000_000.0).abs() < 1e-9,
+        "per-run transfer mean undiluted: got {}",
+        h.transfer_bytes_per_run()
+    );
+
+    let text = s.to_json().dump();
+    let parsed = Json::parse(&text).expect("snapshot parses");
+    let restored = Scheduler::from_json(cfg(), &parsed).expect("snapshot restores");
+    assert_eq!(restored.history("Pipe.stage"), s.history("Pipe.stage"));
+}
