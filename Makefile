@@ -2,7 +2,7 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-cluster bench-serve bench-pipeline
+.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-cluster bench-serve bench-pipeline bench-obs
 
 # The one-stop gate: build everything (library, binaries, benches AND
 # examples), run both test suites, then the docs checks.
@@ -80,3 +80,11 @@ bench-pipeline:
 	cd rust && XLA_FUSE=off cargo test --release --test pipeline_exec
 	cd rust && XLA_FUSE=on cargo test --release --test pipeline_exec
 	cd rust && cargo run --release -- bench pipeline --check
+
+# observability: span-tree correctness suite under BOTH fusion
+# schedules, then the tracing-overhead report with the disabled/enabled
+# overhead gates (writes rust/BENCH_obs.json)
+bench-obs:
+	cd rust && XLA_FUSE=off cargo test --release --test trace_obs
+	cd rust && XLA_FUSE=on cargo test --release --test trace_obs
+	cd rust && cargo run --release -- bench obs --check

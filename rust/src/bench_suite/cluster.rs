@@ -201,6 +201,7 @@ pub fn standard_host(engine: Arc<Engine>) -> crate::somd::cluster::MethodHost {
     let ceng = engine.clone();
     crate::somd::cluster::MethodHost::new("somd-peer")
         .with_workers(engine.workers() as u32)
+        .with_tracer(engine.tracer().clone())
         .register("VecAdd.add", move |payload, span| {
             let (a, b) = decode_vecadd_payload(payload)?;
             ensure!(

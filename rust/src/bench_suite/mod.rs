@@ -34,6 +34,7 @@ pub mod hybrid;
 pub mod interp;
 pub mod lufact;
 pub mod modeled;
+pub mod obs;
 pub mod params;
 pub mod pipeline;
 pub mod serve;

@@ -1,0 +1,268 @@
+//! `somd bench obs` — tracing overhead gate (observability PR).
+//!
+//! Three configurations run the same compute-heavy SMP workload:
+//!
+//! 1. **untraced** — the plain [`Engine::submit`] path, which never
+//!    touches the span machinery at all (the pre-observability clock);
+//! 2. **disabled** — `submit_hetero` with tracing off: the atomic
+//!    fast-path every production invocation pays;
+//! 3. **enabled** — `submit_hetero` with tracing on under a bounded
+//!    ring buffer, the worst case a debugging session pays.
+//!
+//! `--check` gates the largest size: the disabled path within
+//! [`DISABLED_MAX`]× of the untraced wall, the enabled path within
+//! [`ENABLED_MAX`]×, the enabled run must actually have retained traces
+//! and the disabled run none (a vacuous pass is refused).  Results land
+//! in `BENCH_obs.json` (schema `trace_overhead/v1`, documented in
+//! `docs/BENCHMARKS.md`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::HeteroMethod;
+use crate::obs::TraceRecorder;
+use crate::somd::partition::Block1D;
+use crate::somd::reduction::Assemble;
+use crate::somd::{Engine, SomdMethod};
+use crate::util::json::Json;
+use crate::util::timer::middle_tier_mean;
+
+/// Gate: tracing-disabled wall ≤ this × the untraced wall.
+pub const DISABLED_MAX: f64 = 1.05;
+/// Gate: tracing-enabled wall ≤ this × the untraced wall.
+pub const ENABLED_MAX: f64 = 1.15;
+/// Ring-buffer cap the enabled configuration runs under.
+pub const TRACE_CAP: usize = 64;
+
+/// Xorshift rounds per item — enough compute per invocation that the
+/// fixed per-span cost is measured against real work, as in production.
+const SPIN_ROUNDS: u32 = 64;
+
+fn spin(seed: u64) -> u64 {
+    let mut x = seed | 1;
+    for _ in 0..SPIN_ROUNDS {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        x = x.wrapping_mul(0x2545_F491_4F6C_DD1D);
+    }
+    x
+}
+
+fn spin_method() -> SomdMethod<Vec<u64>, crate::somd::partition::BlockPart, (), Vec<u64>> {
+    SomdMethod::new(
+        "ObsSpin.run",
+        |v: &Vec<u64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, p, _, _| p.own.iter().map(|i| spin(v[i])).collect::<Vec<u64>>(),
+        Assemble,
+    )
+}
+
+/// One measured size: mean walls of the three configurations plus the
+/// ratios and retained-trace evidence the gate reads.
+#[derive(Debug, Clone)]
+pub struct ObsRow {
+    /// Index-space items per invocation.
+    pub items: usize,
+    /// Mean wall of the plain `Engine::submit` path (no span machinery).
+    pub untraced_secs: f64,
+    /// Mean wall of `submit_hetero` with tracing disabled.
+    pub disabled_secs: f64,
+    /// Mean wall of `submit_hetero` with tracing enabled (cap [`TRACE_CAP`]).
+    pub enabled_secs: f64,
+    /// `disabled_secs / untraced_secs`.
+    pub disabled_ratio: f64,
+    /// `enabled_secs / untraced_secs`.
+    pub enabled_ratio: f64,
+    /// Spans the disabled run retained (must be zero).
+    pub disabled_spans: usize,
+    /// Traces the enabled run retained (must be ≥ 1).
+    pub enabled_traces: usize,
+    /// Spans the enabled run retained.
+    pub enabled_spans: usize,
+}
+
+fn time_reps(reps: usize, mut f: impl FnMut() -> Result<()>) -> Result<f64> {
+    let mut walls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f()?;
+        walls.push(t0.elapsed());
+    }
+    Ok(middle_tier_mean(&walls).as_secs_f64())
+}
+
+/// Run every size `reps` times through the three configurations.
+pub fn measure(reps: usize, workers: usize, sizes: &[usize]) -> Result<Vec<ObsRow>> {
+    let mut rows = Vec::new();
+    for &items in sizes {
+        let input: Arc<Vec<u64>> = Arc::new((0..items as u64).collect());
+
+        let plain = Arc::new(spin_method());
+        let untraced_engine = Engine::new(workers);
+        let untraced_secs = time_reps(reps, || {
+            std::hint::black_box(untraced_engine.submit(plain.clone(), input.clone()).join());
+            Ok(())
+        })?;
+
+        let hetero = Arc::new(HeteroMethod::smp_only(spin_method()));
+        let disabled_engine =
+            Engine::new(workers).with_tracer(TraceRecorder::new(false, TRACE_CAP));
+        let disabled_secs = time_reps(reps, || {
+            let (r, _) = disabled_engine.submit_hetero(hetero.clone(), input.clone()).join()?;
+            std::hint::black_box(r);
+            Ok(())
+        })?;
+        let disabled_spans = disabled_engine.tracer().span_count();
+
+        let enabled_engine = Engine::new(workers).with_tracer(TraceRecorder::new(true, TRACE_CAP));
+        let enabled_secs = time_reps(reps, || {
+            let (r, _) = enabled_engine.submit_hetero(hetero.clone(), input.clone()).join()?;
+            std::hint::black_box(r);
+            Ok(())
+        })?;
+        let enabled_traces = enabled_engine.tracer().trace_count();
+        let enabled_spans = enabled_engine.tracer().span_count();
+
+        rows.push(ObsRow {
+            items,
+            untraced_secs,
+            disabled_secs,
+            enabled_secs,
+            disabled_ratio: if untraced_secs > 0.0 { disabled_secs / untraced_secs } else { 0.0 },
+            enabled_ratio: if untraced_secs > 0.0 { enabled_secs / untraced_secs } else { 0.0 },
+            disabled_spans,
+            enabled_traces,
+            enabled_spans,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the rows as the `BENCH_obs.json` schema (`trace_overhead/v1`).
+pub fn to_json(rows: &[ObsRow], reps: usize, workers: usize) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("trace_overhead/v1".to_string()));
+    top.insert("reps".to_string(), Json::Num(reps as f64));
+    top.insert("workers".to_string(), Json::Num(workers as f64));
+    top.insert("trace_cap".to_string(), Json::Num(TRACE_CAP as f64));
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("items".to_string(), Json::Num(r.items as f64));
+            m.insert("untraced_secs".to_string(), Json::Num(r.untraced_secs));
+            m.insert("disabled_secs".to_string(), Json::Num(r.disabled_secs));
+            m.insert("enabled_secs".to_string(), Json::Num(r.enabled_secs));
+            m.insert("disabled_ratio".to_string(), Json::Num(r.disabled_ratio));
+            m.insert("enabled_ratio".to_string(), Json::Num(r.enabled_ratio));
+            m.insert("disabled_spans".to_string(), Json::Num(r.disabled_spans as f64));
+            m.insert("enabled_traces".to_string(), Json::Num(r.enabled_traces as f64));
+            m.insert("enabled_spans".to_string(), Json::Num(r.enabled_spans as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    top.insert("rows".to_string(), Json::Arr(arr));
+    Json::Obj(top)
+}
+
+/// Print the table, write `out_path`, and with `check` gate the largest
+/// size (thresholds scaled by `tol` for noisy shared runners).
+pub fn report(
+    reps: usize,
+    workers: usize,
+    sizes: &[usize],
+    out_path: &str,
+    check: bool,
+    tol: f64,
+) -> Result<()> {
+    let rows = measure(reps, workers, sizes)?;
+    println!("== Tracing overhead: untraced vs disabled vs enabled (workers {workers}, reps {reps}) ==");
+    println!(
+        "{:>9} {:>13} {:>13} {:>13} {:>9} {:>9} {:>7} {:>7}",
+        "items", "Untraced (s)", "Disabled (s)", "Enabled (s)", "dis/un", "en/un", "traces", "spans"
+    );
+    for r in &rows {
+        println!(
+            "{:>9} {:>13.6} {:>13.6} {:>13.6} {:>8.3}x {:>8.3}x {:>7} {:>7}",
+            r.items,
+            r.untraced_secs,
+            r.disabled_secs,
+            r.enabled_secs,
+            r.disabled_ratio,
+            r.enabled_ratio,
+            r.enabled_traces,
+            r.enabled_spans
+        );
+    }
+    std::fs::write(out_path, to_json(&rows, reps, workers).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if check {
+        let largest =
+            rows.iter().max_by_key(|r| r.items).ok_or_else(|| anyhow!("no sizes measured"))?;
+        if largest.disabled_spans != 0 {
+            bail!("tracing-disabled run retained {} spans (expected 0)", largest.disabled_spans);
+        }
+        if largest.enabled_traces < 1 {
+            bail!("tracing-enabled run retained no traces — the overhead gate would be vacuous");
+        }
+        if largest.disabled_ratio > DISABLED_MAX * tol {
+            bail!(
+                "tracing-disabled overhead too high at {} items: {:.3}x untraced (limit {:.3}x)",
+                largest.items,
+                largest.disabled_ratio,
+                DISABLED_MAX * tol
+            );
+        }
+        if largest.enabled_ratio > ENABLED_MAX * tol {
+            bail!(
+                "tracing-enabled overhead too high at {} items: {:.3}x untraced (limit {:.3}x)",
+                largest.items,
+                largest.enabled_ratio,
+                ENABLED_MAX * tol
+            );
+        }
+        println!(
+            "check ok: disabled {:.3}x / enabled {:.3}x of untraced at {} items \
+             (limits {:.3}x / {:.3}x, {} traces retained)",
+            largest.disabled_ratio,
+            largest.enabled_ratio,
+            largest.items,
+            DISABLED_MAX * tol,
+            ENABLED_MAX * tol,
+            largest.enabled_traces
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_evidence_rows() {
+        let rows = measure(2, 2, &[2048]).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.untraced_secs > 0.0);
+        assert_eq!(r.disabled_spans, 0, "disabled tracing must record nothing");
+        assert!(r.enabled_traces >= 1, "enabled tracing must retain traces");
+        assert!(r.enabled_traces <= TRACE_CAP, "ring buffer must bound retention");
+        assert!(r.enabled_spans >= r.enabled_traces);
+    }
+
+    #[test]
+    fn json_schema_is_versioned() {
+        let rows = measure(1, 2, &[1024]).unwrap();
+        let j = to_json(&rows, 1, 2);
+        let s = j.dump();
+        assert!(s.contains("trace_overhead/v1"));
+        assert!(s.contains("enabled_ratio"));
+    }
+}

@@ -127,6 +127,12 @@ pub struct DeviceStats {
     /// Modeled transfer time hidden under stage compute by the pipeline's
     /// double-buffered overlap (already excluded from `device_time`).
     pub overlapped_transfer_time: Duration,
+    /// Time the job sat on the device master's queue between enqueue and
+    /// dequeue.  Sessions never accumulate this themselves — the engine
+    /// stamps it onto the per-job delta after `delta_since`, so it stays
+    /// out of the measured-execute clock (and the scheduler's
+    /// `device_secs` history) by construction.
+    pub queue_wait: Duration,
 }
 
 impl DeviceStats {
@@ -176,6 +182,7 @@ impl DeviceStats {
         self.bytes_h2d_skipped += other.bytes_h2d_skipped;
         self.bytes_d2h_skipped += other.bytes_d2h_skipped;
         self.overlapped_transfer_time += other.overlapped_transfer_time;
+        self.queue_wait += other.queue_wait;
     }
 
     /// The accounting accumulated since `earlier` — the per-job slice a
@@ -205,6 +212,7 @@ impl DeviceStats {
             overlapped_transfer_time: self
                 .overlapped_transfer_time
                 .saturating_sub(earlier.overlapped_transfer_time),
+            queue_wait: self.queue_wait.saturating_sub(earlier.queue_wait),
         }
     }
 }

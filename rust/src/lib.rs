@@ -20,6 +20,10 @@
 //!   the engine ([`serve`]): per-method micro-batch queues coalesce
 //!   compatible concurrent requests into few fused launches, with
 //!   admission control and graceful drain.
+//! * **Observability** — invocation tracing + the unified metrics hub
+//!   ([`obs`]): nested spans for every placement decision and lane
+//!   execution (Chrome-trace/JSONL export), and a Prometheus-exposable
+//!   metrics registry (see `docs/OBSERVABILITY.md`).
 //!
 //! See DESIGN.md for the paper→repo map, `docs/ARCHITECTURE.md` for the
 //! navigable three-layer guide (including the hybrid co-execution
@@ -32,6 +36,7 @@
 pub mod backend;
 pub mod bench_suite;
 pub mod device;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod somd;

@@ -14,6 +14,10 @@
 //!                    [--delay-ms MS] [--out FILE] [--smoke] [--check]
 //! somd bench pipeline [--reps N] [--workers W] [--out FILE] [--tol T]
 //!                     [--smoke] [--check]
+//! somd bench obs    [--reps N] [--workers W] [--out FILE] [--tol T]
+//!                   [--smoke] [--check]
+//! somd trace <smp|hybrid> [--out FILE] [--format chrome|jsonl] [--reps N]
+//!                         [--workers W] [--cap N]
 //! somd cluster serve [--addr HOST:PORT] [--workers N] [--delay-ms MS] [--rules FILE]
 //! somd run <crypt|lufact|series|sor|sparsematmult>
 //!          [--class A|B|C] [--scale S] [--partitions N]
@@ -31,7 +35,8 @@ use anyhow::{anyhow, bail, Result};
 
 use somd::bench_suite::cluster as bench_cluster;
 use somd::bench_suite::{
-    crypt, fleet, gpu, harness, interp, lufact, modeled, pipeline, serve, series, sor, sparse,
+    crypt, fleet, gpu, harness, hybrid, interp, lufact, modeled, obs, pipeline, serve, series,
+    sor, sparse,
 };
 use somd::bench_suite::{Class, Sizes};
 use somd::device::{DeviceProfile, DeviceSession};
@@ -54,6 +59,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("info") => info(),
         Some("bench") => bench(args),
         Some("cluster") => cluster_cmd(args),
+        Some("trace") => trace_cmd(args),
         Some("run") => run(args),
         Some("e2e") => e2e(args),
         Some("version") => {
@@ -62,14 +68,16 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: somd <info|bench|cluster|run|e2e|version> [...]\n\
-                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|fleet|serve|cluster|pipeline> [--class A|B|C|all] [--scale S] [--reps N]\n\
+                "usage: somd <info|bench|trace|cluster|run|e2e|version> [...]\n\
+                 bench: somd bench <table1|table2|fig10|fig11|auto|interp|hybrid|fleet|serve|cluster|pipeline|obs> [--class A|B|C|all] [--scale S] [--reps N]\n\
                  \x20      somd bench interp [--reps N] [--out FILE] [--smoke] [--check]\n\
                  \x20      somd bench hybrid [--reps N] [--workers W] [--learn N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench fleet [--profiles p1,p2,...] [--reps N] [--workers W] [--learn N] [--min-items N] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench serve [--requests N] [--clients C] [--elems E] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
                  \x20      somd bench cluster [--peers N] [--reps N] [--workers W] [--learn N] [--delay-ms MS] [--out FILE] [--smoke] [--check]\n\
                  \x20      somd bench pipeline [--reps N] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
+                 \x20      somd bench obs [--reps N] [--workers W] [--out FILE] [--tol T] [--smoke] [--check]\n\
+                 trace: somd trace <smp|hybrid> [--out FILE] [--format chrome|jsonl] [--reps N] [--workers W] [--cap N]\n\
                  cluster: somd cluster serve [--addr HOST:PORT] [--workers N] [--delay-ms MS] [--rules FILE]\n\
                  run:   somd run <crypt|lufact|series|sor|sparsematmult> [--class A] [--scale S] \
                  [--partitions N] [--backend smp|fermi|geforce320m|passthrough] [--rules FILE]\n\
@@ -237,6 +245,22 @@ fn bench(args: &Args) -> Result<()> {
             let tol = args.opt_f64("tol", 1.05);
             pipeline::report(reps, workers, out, args.flag("check"), tol)?;
         }
+        "obs" => {
+            // tracing overhead: the same SMP workload untraced vs
+            // tracing-disabled vs tracing-enabled; --check gates the
+            // disabled fast-path ≤ 1.05x and the enabled path ≤ 1.15x of
+            // the untraced wall on the largest size
+            let smoke = args.flag("smoke");
+            let reps = if smoke { args.opt_usize("reps", 8) } else { args.opt_usize("reps", 30) };
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let workers = args.opt_usize("workers", cores.min(4));
+            let out = args.opt("out").unwrap_or("BENCH_obs.json");
+            let tol = args.opt_f64("tol", 1.0);
+            let sizes: Vec<usize> =
+                if smoke { vec![16_384, 65_536] } else { vec![16_384, 65_536, 262_144] };
+            obs::report(reps, workers, &sizes, out, args.flag("check"), tol)?;
+        }
         "auto" => {
             let reg = Registry::load_default()?;
             let profile = DeviceProfile::by_name(args.opt("profile").unwrap_or("fermi"))
@@ -246,6 +270,69 @@ fn bench(args: &Args) -> Result<()> {
             }
         }
         other => bail!("unknown bench target '{other}'"),
+    }
+    Ok(())
+}
+
+/// `somd trace <workload>`: run a small traced workload and export the
+/// recorded spans.  `smp` submits a vecadd through the plain SMP pool;
+/// `hybrid` forces the same method through hybrid co-execution on a
+/// one-lane fermi fleet (`VecAdd.add:hybrid` rule, `min_device_items`
+/// floored to 1), so the export shows the full span taxonomy: the
+/// `resolve` decision payload and both `lane.smp` / `lane.device`
+/// children under one `invoke` root.  The default Chrome-trace JSON
+/// loads in `chrome://tracing` or <https://ui.perfetto.dev>; `--format
+/// jsonl` emits one span object per line instead.
+fn trace_cmd(args: &Args) -> Result<()> {
+    use somd::obs::{TraceFormat, TraceRecorder};
+
+    let workload = args.positional.first().map(String::as_str).unwrap_or("smp");
+    let format = TraceFormat::parse(args.opt("format").unwrap_or("chrome"))
+        .ok_or_else(|| anyhow!("unknown trace format (chrome|jsonl)"))?;
+    let reps = args.opt_usize("reps", 3);
+    let workers = args.opt_usize("workers", 2);
+    let cap = args.opt_usize("cap", 256);
+    let tracer = TraceRecorder::new(true, cap);
+
+    let registry = pipeline::bench_registry()?;
+    let engine = match workload {
+        "smp" => Engine::new(workers).with_tracer(tracer),
+        "hybrid" => {
+            let mut rules = somd::somd::Rules::empty();
+            rules.set("VecAdd.add", somd::somd::Target::Hybrid);
+            Engine::with_rules(workers, rules)
+                .with_scheduler(somd::somd::Scheduler::new(somd::somd::SchedulerConfig {
+                    min_device_items: 1,
+                    ..Default::default()
+                }))
+                .with_tracer(tracer)
+                .with_device_master(registry.dir().to_path_buf(), "fermi")?
+        }
+        other => bail!("unknown trace workload '{other}' (smp|hybrid)"),
+    };
+
+    let elems = registry.info("vecadd")?.inputs[0].elems();
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let input = Arc::new((vec![1.5f32; elems], vec![2.25f32; elems]));
+    for _ in 0..reps.max(1) {
+        let (out, how) = engine.submit_hetero(m.clone(), input.clone()).join()?;
+        anyhow::ensure!(out.len() == elems, "vecadd returned {} of {elems} elems", out.len());
+        eprintln!("ran VecAdd.add ({elems} items) on {how:?}");
+    }
+    engine.drain();
+
+    let text = engine.export_trace(format);
+    let tracer = engine.tracer();
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| anyhow!("writing {path}: {e}"))?;
+            println!(
+                "wrote {path} ({} traces, {} spans)",
+                tracer.trace_count(),
+                tracer.span_count()
+            );
+        }
+        None => println!("{text}"),
     }
     Ok(())
 }

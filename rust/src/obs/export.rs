@@ -1,0 +1,165 @@
+//! Trace exporters: Chrome-trace/Perfetto JSON and JSONL.
+//!
+//! Both render through [`crate::util::json::Json`] so string escaping
+//! and number formatting are exactly the crate's canonical JSON (no
+//! serde, like the rest of the tree).  `chrome.json` files open
+//! directly in `chrome://tracing` / [Perfetto](https://ui.perfetto.dev)
+//! as complete-event (`ph: "X"`) timelines — one "process" per trace,
+//! one "thread" per span, so nesting renders as the familiar flame
+//! rows; JSONL emits one span object per line for `jq`-style pipelines.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::trace::{FieldValue, SpanRecord, Trace};
+
+/// Export format selector for [`Engine::export_trace`].
+///
+/// [`Engine::export_trace`]: crate::somd::Engine::export_trace
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Chrome-trace / Perfetto JSON (`{"traceEvents": [...]}`).
+    Chrome,
+    /// One JSON object per span per line.
+    Jsonl,
+}
+
+impl TraceFormat {
+    /// Parse a CLI spelling (`chrome` | `jsonl`).
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "chrome" | "perfetto" | "json" => Some(TraceFormat::Chrome),
+            "jsonl" => Some(TraceFormat::Jsonl),
+            _ => None,
+        }
+    }
+}
+
+fn field_json(v: &FieldValue) -> Json {
+    match v {
+        FieldValue::U64(n) => Json::Num(*n as f64),
+        FieldValue::F64(f) => Json::Num(*f),
+        FieldValue::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+fn span_args(span: &SpanRecord) -> Json {
+    let mut args = BTreeMap::new();
+    if let Some(p) = span.parent {
+        args.insert("parent".to_string(), Json::Num(p as f64));
+    }
+    for (k, v) in &span.fields {
+        args.insert((*k).to_string(), field_json(v));
+    }
+    Json::Obj(args)
+}
+
+/// Render traces as one Chrome-trace JSON document.
+pub fn chrome_trace(traces: &[Trace]) -> String {
+    let mut events = Vec::new();
+    for t in traces {
+        for s in &t.spans {
+            let mut e = BTreeMap::new();
+            e.insert("ph".to_string(), Json::Str("X".to_string()));
+            e.insert("name".to_string(), Json::Str(s.name.to_string()));
+            // chrome timestamps are microseconds; keep sub-µs precision
+            e.insert("ts".to_string(), Json::Num(s.start_ns as f64 / 1000.0));
+            e.insert(
+                "dur".to_string(),
+                Json::Num(s.end_ns.saturating_sub(s.start_ns) as f64 / 1000.0),
+            );
+            e.insert("pid".to_string(), Json::Num(t.trace_id as f64));
+            e.insert("tid".to_string(), Json::Num(s.id as f64));
+            e.insert("args".to_string(), span_args(s));
+            events.push(Json::Obj(e));
+        }
+    }
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(top).dump()
+}
+
+/// Render traces as JSONL: one span object per line, in trace order.
+pub fn jsonl(traces: &[Trace]) -> String {
+    let mut out = String::new();
+    for t in traces {
+        for s in &t.spans {
+            let mut o = BTreeMap::new();
+            o.insert("trace".to_string(), Json::Num(t.trace_id as f64));
+            o.insert("span".to_string(), Json::Num(s.id as f64));
+            if let Some(p) = s.parent {
+                o.insert("parent".to_string(), Json::Num(p as f64));
+            }
+            o.insert("name".to_string(), Json::Str(s.name.to_string()));
+            o.insert("start_ns".to_string(), Json::Num(s.start_ns as f64));
+            o.insert("end_ns".to_string(), Json::Num(s.end_ns as f64));
+            let mut fields = BTreeMap::new();
+            for (k, v) in &s.fields {
+                fields.insert((*k).to_string(), field_json(v));
+            }
+            o.insert("fields".to_string(), Json::Obj(fields));
+            out.push_str(&Json::Obj(o).dump());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceRecorder;
+    use std::sync::Arc;
+
+    fn sample() -> Vec<Trace> {
+        let rec = Arc::new(TraceRecorder::new(true, 4));
+        let ctx = rec.begin();
+        let mut root = ctx.span("invoke", None);
+        root.field_str("method", "M\"quoted\".run");
+        let mut child = ctx.span("lane.device", Some(root.id()));
+        child.field_u64("bytes_h2d", 4096);
+        child.finish();
+        root.finish();
+        rec.traces()
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_carries_events() {
+        let doc = chrome_trace(&sample());
+        let v = Json::parse(&doc).expect("chrome trace must be valid JSON");
+        let events = v.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(e.get("ts").and_then(Json::as_f64).is_some());
+            assert!(e.get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+        }
+        let dev = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("lane.device"))
+            .unwrap();
+        let h2d = dev.get("args").and_then(|a| a.get("bytes_h2d")).and_then(Json::as_f64);
+        assert_eq!(h2d, Some(4096.0));
+        assert!(dev.get("args").and_then(|a| a.get("parent")).is_some());
+    }
+
+    #[test]
+    fn jsonl_one_parseable_object_per_span() {
+        let text = jsonl(&sample());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).expect("each JSONL line must parse");
+            assert!(v.get("name").and_then(Json::as_str).is_some());
+        }
+    }
+
+    #[test]
+    fn format_parses() {
+        assert_eq!(TraceFormat::parse("chrome"), Some(TraceFormat::Chrome));
+        assert_eq!(TraceFormat::parse("JSONL"), Some(TraceFormat::Jsonl));
+        assert_eq!(TraceFormat::parse("xml"), None);
+    }
+}

@@ -1,0 +1,217 @@
+//! The unified metrics hub: one snapshotable registry for counters,
+//! gauges and bounded histogram windows, with Prometheus text
+//! exposition.
+//!
+//! Metric names follow Prometheus conventions and may carry inline
+//! labels — `somd_lane_execute_seconds{method="Series.coefficients",lane="device"}`
+//! is one series; the part before `{` is the family the `# TYPE` line
+//! is emitted for.  Histograms keep a bounded window of recent samples
+//! and export as Prometheus *summaries* (p50/p95/p99 quantiles via
+//! [`crate::util::stats::percentiles`] plus a `_count`).  No serde:
+//! exposition is plain string assembly, same discipline as
+//! `somd/cluster.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::stats::percentiles;
+
+/// Samples retained per histogram series (oldest dropped beyond this).
+pub const HISTO_WINDOW: usize = 512;
+
+#[derive(Default)]
+struct HubInner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histos: BTreeMap<String, Vec<f64>>,
+}
+
+/// The process-wide metrics registry one engine (and its service)
+/// feeds.  All operations take one short mutex; snapshots are cheap
+/// copies.
+#[derive(Default)]
+pub struct MetricsHub {
+    inner: Mutex<HubInner>,
+}
+
+impl std::fmt::Debug for MetricsHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let i = self.inner.lock().unwrap();
+        f.debug_struct("MetricsHub")
+            .field("counters", &i.counters.len())
+            .field("gauges", &i.gauges.len())
+            .field("histos", &i.histos.len())
+            .finish()
+    }
+}
+
+impl MetricsHub {
+    /// An empty hub.
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    /// Add `v` to the monotonic counter `name`.
+    pub fn counter_add(&self, name: &str, v: u64) {
+        let mut i = self.inner.lock().unwrap();
+        *i.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Set the gauge `name` to `v` (last-write-wins).
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one sample into the histogram window `name`.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut i = self.inner.lock().unwrap();
+        let w = i.histos.entry(name.to_string()).or_default();
+        if w.len() >= HISTO_WINDOW {
+            w.remove(0);
+        }
+        w.push(v);
+    }
+
+    /// Point-in-time copy of every series.
+    pub fn snapshot(&self) -> HubSnapshot {
+        let i = self.inner.lock().unwrap();
+        HubSnapshot {
+            counters: i.counters.clone(),
+            gauges: i.gauges.clone(),
+            histos: i.histos.clone(),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`MetricsHub`] (plus whatever extra series
+/// the caller folds in before rendering).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HubSnapshot {
+    /// Monotonic counters by full series name (labels inline).
+    pub counters: BTreeMap<String, u64>,
+    /// Gauges by full series name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram windows by full series name.
+    pub histos: BTreeMap<String, Vec<f64>>,
+}
+
+/// `name{a="b"}` → the family part before `{` (the whole name when
+/// unlabelled).
+fn family(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// Insert an extra `key="value"` label into a (possibly labelled)
+/// series name.
+fn with_label(name: &str, key: &str, value: &str) -> String {
+    match name.strip_suffix('}') {
+        Some(prefix) => format!("{prefix},{key}=\"{value}\"}}"),
+        None => format!("{name}{{{key}=\"{value}\"}}"),
+    }
+}
+
+/// Append `suffix` to the family part, keeping labels:
+/// `f{l} + _count → f_count{l}`.
+fn family_suffixed(name: &str, suffix: &str) -> String {
+    match name.find('{') {
+        Some(i) => format!("{}{}{}", &name[..i], suffix, &name[i..]),
+        None => format!("{name}{suffix}"),
+    }
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl HubSnapshot {
+    /// Render as the Prometheus text exposition format (version 0.0.4):
+    /// counters and gauges verbatim, histogram windows as summaries
+    /// with `quantile` labels plus a `_count` series.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        let mut typed: std::collections::BTreeSet<String> = Default::default();
+        let mut type_line = |out: &mut String, name: &str, kind: &str| {
+            let fam = family(name).to_string();
+            if typed.insert(fam.clone()) {
+                out.push_str(&format!("# TYPE {fam} {kind}\n"));
+            }
+        };
+        for (name, v) in &self.counters {
+            type_line(&mut out, name, "counter");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            type_line(&mut out, name, "gauge");
+            out.push_str(&format!("{name} {}\n", fmt_value(*v)));
+        }
+        for (name, w) in &self.histos {
+            if w.is_empty() {
+                continue;
+            }
+            type_line(&mut out, name, "summary");
+            let p = percentiles(w);
+            for (q, val) in [("0.5", p.p50), ("0.95", p.p95), ("0.99", p.p99)] {
+                out.push_str(&format!("{} {}\n", with_label(name, "quantile", q), fmt_value(val)));
+            }
+            out.push_str(&format!("{} {}\n", family_suffixed(name, "_count"), p.n));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let hub = MetricsHub::new();
+        hub.counter_add("a_total", 2);
+        hub.counter_add("a_total", 3);
+        hub.gauge_set("g", 1.0);
+        hub.gauge_set("g", 7.5);
+        let s = hub.snapshot();
+        assert_eq!(s.counters["a_total"], 5);
+        assert_eq!(s.gauges["g"], 7.5);
+    }
+
+    #[test]
+    fn histogram_window_is_bounded() {
+        let hub = MetricsHub::new();
+        for i in 0..(HISTO_WINDOW + 10) {
+            hub.observe("h", i as f64);
+        }
+        let s = hub.snapshot();
+        assert_eq!(s.histos["h"].len(), HISTO_WINDOW);
+        assert_eq!(s.histos["h"][0], 10.0); // oldest 10 evicted
+    }
+
+    #[test]
+    fn prometheus_text_shapes() {
+        let hub = MetricsHub::new();
+        hub.counter_add("somd_jobs_total{lane=\"device\"}", 4);
+        hub.gauge_set("somd_queue_wait_seconds", 0.25);
+        hub.observe("somd_exec_seconds{method=\"M\"}", 1.0);
+        hub.observe("somd_exec_seconds{method=\"M\"}", 3.0);
+        let text = hub.snapshot().prometheus_text();
+        assert!(text.contains("# TYPE somd_jobs_total counter"));
+        assert!(text.contains("somd_jobs_total{lane=\"device\"} 4\n"));
+        assert!(text.contains("# TYPE somd_queue_wait_seconds gauge"));
+        assert!(text.contains("somd_queue_wait_seconds 0.25\n"));
+        assert!(text.contains("# TYPE somd_exec_seconds summary"));
+        assert!(text.contains("somd_exec_seconds{method=\"M\",quantile=\"0.5\"} 2\n"));
+        assert!(text.contains("somd_exec_seconds_count{method=\"M\"} 2\n"));
+    }
+
+    #[test]
+    fn label_helpers() {
+        assert_eq!(with_label("f", "q", "0.5"), "f{q=\"0.5\"}");
+        assert_eq!(with_label("f{a=\"b\"}", "q", "0.5"), "f{a=\"b\",q=\"0.5\"}");
+        assert_eq!(family_suffixed("f{a=\"b\"}", "_count"), "f_count{a=\"b\"}");
+        assert_eq!(family("f{a=\"b\"}"), "f");
+    }
+}

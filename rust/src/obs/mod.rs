@@ -1,0 +1,38 @@
+//! Observability: invocation tracing + the unified metrics hub.
+//!
+//! The engine makes placement decisions across five mechanisms (auto,
+//! hybrid, sharded, cluster, pipeline) that the caller never sees; this
+//! module makes them visible without touching the compute path's cost
+//! profile:
+//!
+//! * [`trace`] — a per-engine bounded ring-buffer [`TraceRecorder`]
+//!   records nested spans for the full invocation lifecycle (submit →
+//!   resolve-with-decision-explain → partition → per-lane execute →
+//!   merge/fallback), with parent/child ids so hybrid forks, sharded
+//!   latches, cluster peers, batched serve dispatches and pipeline
+//!   stages all nest under one trace.  Disabled tracing costs one
+//!   relaxed atomic load per invocation.
+//! * [`export`] — Chrome-trace/Perfetto JSON and JSONL renderers
+//!   ([`Engine::export_trace`](crate::somd::Engine::export_trace), the
+//!   `somd trace` subcommand).
+//! * [`hub`] — the [`MetricsHub`] registry (counters, gauges, bounded
+//!   histogram windows) with Prometheus text exposition
+//!   ([`Service::metrics_text`](crate::serve::Service::metrics_text)).
+//! * [`scrape`] — an optional `std::net` scrape endpoint serving that
+//!   text.
+//!
+//! Knobs: `SOMD_TRACE`, `SOMD_TRACE_CAP`.  Span taxonomy, exporter
+//! formats and the metric name scheme are documented in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod export;
+pub mod hub;
+pub mod scrape;
+pub mod trace;
+
+pub use export::{chrome_trace, jsonl, TraceFormat};
+pub use hub::{HubSnapshot, MetricsHub};
+pub use scrape::{spawn_metrics_endpoint, MetricsEndpoint};
+pub use trace::{
+    FieldValue, OpenSpan, SpanRecord, SpanRef, Trace, TraceCtx, TraceRecorder, DEFAULT_TRACE_CAP,
+};

@@ -1,0 +1,113 @@
+//! An optional Prometheus scrape endpoint over `std::net` (no HTTP
+//! stack, same no-dependency discipline as the cluster wire).
+//!
+//! [`spawn_metrics_endpoint`] binds a listener and answers every HTTP
+//! request with the current metrics text; the returned handle stops the
+//! listener on drop.  One request per connection, HTTP/1.0-style —
+//! exactly what a Prometheus scraper (or `curl`) needs and nothing
+//! more.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// A running scrape endpoint; dropping it stops the listener thread.
+pub struct MetricsEndpoint {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for MetricsEndpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsEndpoint").field("addr", &self.addr).finish()
+    }
+}
+
+impl MetricsEndpoint {
+    /// The bound address (resolves an ephemeral `:0` port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsEndpoint {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` (may be `127.0.0.1:0`) and serve `render()` as
+/// `text/plain; version=0.0.4` to every request until the returned
+/// handle is dropped.
+pub fn spawn_metrics_endpoint(
+    addr: &str,
+    render: impl Fn() -> String + Send + Sync + 'static,
+) -> Result<MetricsEndpoint> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind metrics {addr}"))?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread_stop = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("somd-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if thread_stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let Ok(mut stream) = conn else { return };
+                stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+                // drain the request line + headers (best effort; scrapers
+                // send tiny GETs, and the reply is the same regardless)
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                let body = render();
+                let reply = format!(
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(reply.as_bytes());
+            }
+        })
+        .context("spawn metrics endpoint")?;
+    Ok(MetricsEndpoint { addr: local, stop, handle: Some(handle) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn endpoint_serves_and_stops() {
+        let ep = spawn_metrics_endpoint("127.0.0.1:0", || "somd_up 1\n".to_string()).unwrap();
+        let addr = ep.addr();
+        let reply = http_get(addr);
+        assert!(reply.starts_with("HTTP/1.0 200 OK"), "got: {reply}");
+        assert!(reply.contains("text/plain; version=0.0.4"));
+        assert!(reply.ends_with("somd_up 1\n"));
+        drop(ep);
+        // the listener is gone: a fresh connect either fails outright or
+        // is the throwaway accept draining — a follow-up must fail
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(TcpStream::connect(addr).is_err() || TcpStream::connect(addr).is_err());
+    }
+}

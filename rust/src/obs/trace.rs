@@ -1,0 +1,450 @@
+//! Span tracing: a per-[`Engine`](crate::somd::Engine) bounded
+//! ring-buffer recorder for nested invocation spans.
+//!
+//! The recorder is built for a hot path that is almost always *not*
+//! tracing: [`TraceRecorder::begin`] is a single relaxed atomic load
+//! when disabled, and every [`TraceCtx`]/[`OpenSpan`] operation on a
+//! disabled context is a no-op on plain fields (no lock, no clock
+//! read).  When enabled, spans carry parent ids so one invocation's
+//! hybrid forks, N-way sharded latches, cluster peer spans (stitched by
+//! trace id over the wire protocol), batched serve dispatches and
+//! pipeline stages all nest under one trace; whole traces are evicted
+//! oldest-first once the ring holds `cap` of them.
+//!
+//! Knobs: `SOMD_TRACE` (`1`/`on`/`true`/`yes` enables recording),
+//! `SOMD_TRACE_CAP` (ring capacity in whole traces, default 64).  See
+//! `docs/OBSERVABILITY.md` for the span taxonomy.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default ring capacity (whole traces) when `SOMD_TRACE_CAP` is unset.
+pub const DEFAULT_TRACE_CAP: usize = 64;
+
+/// One recorded span field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldValue {
+    /// An unsigned integer (counts, bytes, ids).
+    U64(u64),
+    /// A float (seconds, fractions, estimates).
+    F64(f64),
+    /// A short string (lane names, reasons, profiles).
+    Str(String),
+}
+
+/// One completed span: a named interval inside a trace, with an
+/// optional parent span id and a flat key/value field list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Span id, unique within the recorder.
+    pub id: u64,
+    /// Parent span id (`None` for a trace's root span).
+    pub parent: Option<u64>,
+    /// The trace this span belongs to.
+    pub trace_id: u64,
+    /// Span name (see the taxonomy in `docs/OBSERVABILITY.md`).
+    pub name: &'static str,
+    /// Start, in nanoseconds since the recorder's epoch.
+    pub start_ns: u64,
+    /// End, in nanoseconds since the recorder's epoch.
+    pub end_ns: u64,
+    /// Attached key/value payload (decision explains, byte counts, …).
+    pub fields: Vec<(&'static str, FieldValue)>,
+}
+
+impl SpanRecord {
+    /// Field lookup by key (first match).
+    pub fn field(&self, key: &str) -> Option<&FieldValue> {
+        self.fields.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+}
+
+/// One invocation's spans, in completion order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// The trace id every member span carries.
+    pub trace_id: u64,
+    /// Completed spans (a span appears when it *finishes*, so parents —
+    /// which outlive their children — appear after them).
+    pub spans: Vec<SpanRecord>,
+}
+
+impl Trace {
+    /// The root spans of this trace (no parent).  A well-formed
+    /// invocation trace has exactly one.
+    pub fn roots(&self) -> Vec<&SpanRecord> {
+        self.spans.iter().filter(|s| s.parent.is_none()).collect()
+    }
+
+    /// Find the first span with `name`.
+    pub fn find(&self, name: &str) -> Option<&SpanRecord> {
+        self.spans.iter().find(|s| s.name == name)
+    }
+
+    /// All spans with `name`.
+    pub fn find_all(&self, name: &str) -> Vec<&SpanRecord> {
+        self.spans.iter().filter(|s| s.name == name).collect()
+    }
+}
+
+struct Ring {
+    traces: VecDeque<Trace>,
+}
+
+/// The per-engine span recorder: a bounded ring of whole traces.
+///
+/// Cheap to share (`Arc`); disabled recorders cost one relaxed atomic
+/// load per would-be trace.  See the [module docs](self) for knobs.
+pub struct TraceRecorder {
+    enabled: AtomicBool,
+    cap: usize,
+    next_span: AtomicU64,
+    next_trace: AtomicU64,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("enabled", &self.enabled())
+            .field("cap", &self.cap)
+            .finish()
+    }
+}
+
+fn env_truthy(var: &str) -> bool {
+    matches!(
+        std::env::var(var).unwrap_or_default().trim().to_ascii_lowercase().as_str(),
+        "1" | "on" | "true" | "yes"
+    )
+}
+
+impl TraceRecorder {
+    /// A recorder with explicit settings (`cap` is clamped to ≥ 1).
+    pub fn new(enabled: bool, cap: usize) -> TraceRecorder {
+        TraceRecorder {
+            enabled: AtomicBool::new(enabled),
+            cap: cap.max(1),
+            next_span: AtomicU64::new(1),
+            next_trace: AtomicU64::new(1),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring { traces: VecDeque::new() }),
+        }
+    }
+
+    /// A recorder configured from `SOMD_TRACE` / `SOMD_TRACE_CAP`.
+    pub fn from_env() -> TraceRecorder {
+        let cap = std::env::var("SOMD_TRACE_CAP")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_TRACE_CAP);
+        TraceRecorder::new(env_truthy("SOMD_TRACE"), cap)
+    }
+
+    /// Whether spans are currently being recorded.
+    pub fn enabled(&self) -> bool {
+        // Relaxed: the flag gates best-effort diagnostics, not data the
+        // compute path depends on — no ordering with other memory needed
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip recording on/off at runtime (already-open spans keep their
+    /// recording decision).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Ring capacity, in whole traces.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Start a fresh trace.  When disabled this is one atomic load and
+    /// the returned context records nothing.
+    pub fn begin(self: &Arc<Self>) -> TraceCtx {
+        if !self.enabled() {
+            return TraceCtx::disabled();
+        }
+        let id = self.next_trace.fetch_add(1, Ordering::Relaxed);
+        TraceCtx { rec: Some(self.clone()), trace_id: id }
+    }
+
+    /// Join an existing trace by id (cluster peers stitch the client's
+    /// trace id received over the wire; `0` means "no trace").
+    pub fn join(self: &Arc<Self>, trace_id: u64) -> TraceCtx {
+        if trace_id == 0 || !self.enabled() {
+            return TraceCtx::disabled();
+        }
+        TraceCtx { rec: Some(self.clone()), trace_id }
+    }
+
+    /// Nanoseconds since this recorder's epoch.
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn record(&self, span: SpanRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        // newest traces live at the back; spans of an in-flight trace
+        // almost always target it, so scan from the back
+        if let Some(t) = ring.traces.iter_mut().rev().find(|t| t.trace_id == span.trace_id) {
+            t.spans.push(span);
+            return;
+        }
+        if ring.traces.len() >= self.cap {
+            ring.traces.pop_front(); // evict the oldest *whole* trace
+        }
+        ring.traces.push_back(Trace { trace_id: span.trace_id, spans: vec![span] });
+    }
+
+    /// Point-in-time copy of every retained trace, oldest first.
+    pub fn traces(&self) -> Vec<Trace> {
+        self.ring.lock().unwrap().traces.iter().cloned().collect()
+    }
+
+    /// Drop every retained trace (the span/trace id counters keep
+    /// counting so ids never repeat within a recorder).
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().traces.clear();
+    }
+
+    /// Total retained spans across all traces.
+    pub fn span_count(&self) -> usize {
+        self.ring.lock().unwrap().traces.iter().map(|t| t.spans.len()).sum()
+    }
+
+    /// Retained trace count.
+    pub fn trace_count(&self) -> usize {
+        self.ring.lock().unwrap().traces.len()
+    }
+}
+
+/// A (trace id, span id) pair naming one open span across layer
+/// boundaries — how the serving layer parents engine invocations under
+/// its batch span without holding the span itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRef {
+    /// The trace the span belongs to.
+    pub trace: u64,
+    /// The span id.
+    pub span: u64,
+}
+
+/// A handle on one trace: the factory spans of a single invocation are
+/// opened through.  Cloneable and `Send` so forks (hybrid halves,
+/// sharded lanes, remote callbacks) can open sibling spans; a context
+/// from a disabled recorder records nothing at zero cost.
+#[derive(Clone)]
+pub struct TraceCtx {
+    rec: Option<Arc<TraceRecorder>>,
+    trace_id: u64,
+}
+
+impl std::fmt::Debug for TraceCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceCtx")
+            .field("trace_id", &self.trace_id)
+            .field("recording", &self.is_recording())
+            .finish()
+    }
+}
+
+impl TraceCtx {
+    /// A context that records nothing.
+    pub fn disabled() -> TraceCtx {
+        TraceCtx { rec: None, trace_id: 0 }
+    }
+
+    /// Whether spans opened here will be recorded.
+    pub fn is_recording(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// This context's trace id (`0` when disabled).
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    /// Open a span.  `parent` is a span id from this same trace
+    /// (usually [`OpenSpan::id`] of the enclosing span), `None` for the
+    /// root.  The span records itself when dropped or
+    /// [`finish`](OpenSpan::finish)ed — exactly once, even across
+    /// panics.
+    pub fn span(&self, name: &'static str, parent: Option<u64>) -> OpenSpan {
+        match &self.rec {
+            None => OpenSpan {
+                rec: None,
+                trace_id: 0,
+                id: 0,
+                parent: None,
+                name,
+                start_ns: 0,
+                fields: Vec::new(),
+            },
+            Some(rec) => OpenSpan {
+                id: rec.next_span.fetch_add(1, Ordering::Relaxed),
+                start_ns: rec.now_ns(),
+                rec: Some(rec.clone()),
+                trace_id: self.trace_id,
+                parent: parent.filter(|&p| p != 0),
+                name,
+                fields: Vec::new(),
+            },
+        }
+    }
+}
+
+/// An in-flight span.  Dropping it records the interval (so unwinding
+/// through a panic still closes the span); attach payload with the
+/// `field_*` setters while it is open.
+pub struct OpenSpan {
+    rec: Option<Arc<TraceRecorder>>,
+    trace_id: u64,
+    id: u64,
+    parent: Option<u64>,
+    name: &'static str,
+    start_ns: u64,
+    fields: Vec<(&'static str, FieldValue)>,
+}
+
+impl OpenSpan {
+    /// This span's id, for parenting children (`0` when not recording).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Whether this span will actually be recorded.
+    pub fn is_recording(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// A [`SpanRef`] naming this span (`None` when not recording).
+    pub fn span_ref(&self) -> Option<SpanRef> {
+        self.rec.as_ref().map(|_| SpanRef { trace: self.trace_id, span: self.id })
+    }
+
+    /// Attach an integer field.
+    pub fn field_u64(&mut self, key: &'static str, v: u64) {
+        if self.rec.is_some() {
+            self.fields.push((key, FieldValue::U64(v)));
+        }
+    }
+
+    /// Attach a float field.
+    pub fn field_f64(&mut self, key: &'static str, v: f64) {
+        if self.rec.is_some() {
+            self.fields.push((key, FieldValue::F64(v)));
+        }
+    }
+
+    /// Attach a string field.
+    pub fn field_str(&mut self, key: &'static str, v: impl Into<String>) {
+        if self.rec.is_some() {
+            self.fields.push((key, FieldValue::Str(v.into())));
+        }
+    }
+
+    /// Close the span now (equivalent to dropping it; provided so call
+    /// sites can mark the intended end explicitly).
+    pub fn finish(self) {}
+}
+
+impl Drop for OpenSpan {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec.take() else { return };
+        let end_ns = rec.now_ns();
+        rec.record(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            trace_id: self.trace_id,
+            name: self.name,
+            start_ns: self.start_ns,
+            end_ns,
+            fields: std::mem::take(&mut self.fields),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Arc::new(TraceRecorder::new(false, 8));
+        let ctx = rec.begin();
+        assert!(!ctx.is_recording());
+        let mut s = ctx.span("invoke", None);
+        s.field_u64("items", 10);
+        assert_eq!(s.id(), 0);
+        s.finish();
+        assert_eq!(rec.span_count(), 0);
+        assert_eq!(rec.trace_count(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_record_once() {
+        let rec = Arc::new(TraceRecorder::new(true, 8));
+        let ctx = rec.begin();
+        let mut root = ctx.span("invoke", None);
+        root.field_str("method", "M.run");
+        let child = ctx.span("lane.smp", Some(root.id()));
+        let root_id = root.id();
+        let child_id = child.id();
+        child.finish();
+        root.finish();
+        let traces = rec.traces();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.spans.len(), 2);
+        let root = t.find("invoke").unwrap();
+        let child = t.find("lane.smp").unwrap();
+        assert_eq!(root.id, root_id);
+        assert_eq!(root.parent, None);
+        assert_eq!(child.parent, Some(root_id));
+        assert_eq!(child.id, child_id);
+        assert!(root.start_ns <= child.start_ns);
+        assert!(child.end_ns <= root.end_ns);
+        assert!(matches!(root.field("method"), Some(FieldValue::Str(s)) if s == "M.run"));
+    }
+
+    #[test]
+    fn ring_evicts_oldest_whole_trace() {
+        let rec = Arc::new(TraceRecorder::new(true, 2));
+        let mut first_id = 0;
+        for i in 0..3 {
+            let ctx = rec.begin();
+            if i == 0 {
+                first_id = ctx.trace_id();
+            }
+            ctx.span("invoke", None).finish();
+        }
+        let traces = rec.traces();
+        assert_eq!(traces.len(), 2);
+        assert!(traces.iter().all(|t| t.trace_id != first_id));
+    }
+
+    #[test]
+    fn join_stitches_and_zero_is_disabled() {
+        let rec = Arc::new(TraceRecorder::new(true, 4));
+        let ctx = rec.begin();
+        let id = ctx.trace_id();
+        ctx.span("invoke", None).finish();
+        let peer = rec.join(id);
+        peer.span("peer.execute", None).finish();
+        assert_eq!(rec.trace_count(), 1);
+        assert_eq!(rec.traces()[0].spans.len(), 2);
+        assert!(!rec.join(0).is_recording());
+    }
+
+    #[test]
+    fn runtime_toggle() {
+        let rec = Arc::new(TraceRecorder::new(false, 4));
+        assert!(!rec.begin().is_recording());
+        rec.set_enabled(true);
+        assert!(rec.begin().is_recording());
+    }
+}

@@ -209,13 +209,23 @@ where
         let inputs: Vec<Arc<I>> = batch.iter().map(|p| p.input.clone()).collect();
         let counts: Vec<usize> = batch.iter().map(|p| p.items).collect();
         let items: usize = counts.iter().sum();
+        // the fused invocation's trace nests under this dispatch span,
+        // so one batch's N tickets share one stitched trace
+        let tctx = self.engine.tracer().begin();
+        let mut bspan = tctx.span("serve.batch", None);
+        bspan.field_str("method", self.method.name().to_string());
+        bspan.field_u64("requests", n as u64);
+        bspan.field_u64("span_items", items as u64);
+        let parent = bspan.span_ref();
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let fused = self.method.batch_compose(&inputs);
             self.engine
-                .submit_hetero_batched(self.method.clone(), fused, n)
+                .submit_hetero_batched_in(self.method.clone(), fused, n, parent)
                 .join()
                 .map(|(r, how)| (self.method.batch_split(r, &counts), how))
         }));
+        bspan.field_str("outcome", if matches!(&run, Ok(Ok(_))) { "ok" } else { "failed" });
+        bspan.finish();
         match run {
             Ok(Ok((values, how))) => {
                 if values.len() != n {

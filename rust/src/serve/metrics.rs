@@ -26,46 +26,54 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    // All counters use `Relaxed`: each is an independent monotonic
+    // tally with no cross-counter invariant a reader could observe
+    // torn — `snapshot` is advisory (a point-in-time gauge read, not a
+    // consistent cut), and the serve tests that assert exact totals
+    // only read after the service has drained, where the thread join
+    // itself provides the happens-before edge.  `SeqCst` bought
+    // nothing but fence traffic on the submit hot path.
+
     /// One request passed admission and entered a queue.
     pub(crate) fn note_submitted(&self) {
-        self.submitted.fetch_add(1, Ordering::SeqCst);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One request was turned away by admission control.
     pub(crate) fn note_rejected(&self) {
-        self.rejected.fetch_add(1, Ordering::SeqCst);
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One fused batch of `requests` requests / `items` index-space items
     /// completed successfully after `exec` of dispatcher wall time
     /// (compose + launch + split).
     pub(crate) fn note_batch(&self, requests: usize, items: usize, exec: Duration) {
-        self.batches.fetch_add(1, Ordering::SeqCst);
-        self.batched_requests.fetch_add(requests as u64, Ordering::SeqCst);
-        self.completed.fetch_add(requests as u64, Ordering::SeqCst);
-        self.items.fetch_add(items as u64, Ordering::SeqCst);
-        self.max_batch_requests.fetch_max(requests as u64, Ordering::SeqCst);
-        self.exec_nanos.fetch_add(exec.as_nanos() as u64, Ordering::SeqCst);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(requests as u64, Ordering::Relaxed);
+        self.completed.fetch_add(requests as u64, Ordering::Relaxed);
+        self.items.fetch_add(items as u64, Ordering::Relaxed);
+        self.max_batch_requests.fetch_max(requests as u64, Ordering::Relaxed);
+        self.exec_nanos.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// One fused batch of `requests` requests failed (every request in it
     /// received the error).
     pub(crate) fn note_failed(&self, requests: usize) {
-        self.failed.fetch_add(requests as u64, Ordering::SeqCst);
+        self.failed.fetch_add(requests as u64, Ordering::Relaxed);
     }
 
     /// Point-in-time copy of every counter.
     pub fn snapshot(&self) -> ServeMetricsSnapshot {
         ServeMetricsSnapshot {
-            submitted: self.submitted.load(Ordering::SeqCst),
-            rejected: self.rejected.load(Ordering::SeqCst),
-            completed: self.completed.load(Ordering::SeqCst),
-            failed: self.failed.load(Ordering::SeqCst),
-            batches: self.batches.load(Ordering::SeqCst),
-            batched_requests: self.batched_requests.load(Ordering::SeqCst),
-            items: self.items.load(Ordering::SeqCst),
-            max_batch_requests: self.max_batch_requests.load(Ordering::SeqCst),
-            exec_nanos: self.exec_nanos.load(Ordering::SeqCst),
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            items: self.items.load(Ordering::Relaxed),
+            max_batch_requests: self.max_batch_requests.load(Ordering::Relaxed),
+            exec_nanos: self.exec_nanos.load(Ordering::Relaxed),
         }
     }
 }

@@ -286,6 +286,29 @@ impl Service {
         self.metrics.snapshot()
     }
 
+    /// Prometheus text exposition of the whole stack: the engine's
+    /// metrics hub (placement counters, lane latency summaries, device
+    /// counters, queue-wait gauge) plus the serve-layer counters, one
+    /// scrapeable page.
+    pub fn metrics_text(&self) -> String {
+        render_metrics(&self.engine, &self.metrics.snapshot())
+    }
+
+    /// Spawn the plain-HTTP scrape endpoint on `addr` (`host:0` picks an
+    /// ephemeral port): every request to any path gets the current
+    /// [`Service::metrics_text`] page.  The endpoint stops when the
+    /// returned handle drops.
+    pub fn serve_metrics_endpoint(
+        &self,
+        addr: &str,
+    ) -> anyhow::Result<crate::obs::MetricsEndpoint> {
+        let engine = self.engine.clone();
+        let metrics = self.metrics.clone();
+        crate::obs::spawn_metrics_endpoint(addr, move || {
+            render_metrics(&engine, &metrics.snapshot())
+        })
+    }
+
     /// Register a batchable method: creates its micro-batch queue, spawns
     /// its dispatcher thread, and returns the (cloneable) client handle
     /// requests are submitted through.  Fails when the method carries no
@@ -376,6 +399,29 @@ impl Drop for Service {
     fn drop(&mut self) {
         self.drain();
     }
+}
+
+/// One exposition page: the engine hub snapshot with the serve counters
+/// merged in (the endpoint closure and [`Service::metrics_text`] share
+/// this so both render identically).
+fn render_metrics(engine: &Engine, s: &ServeMetricsSnapshot) -> String {
+    let mut snap = engine.metrics_snapshot();
+    for (name, v) in [
+        ("somd_serve_submitted_total", s.submitted),
+        ("somd_serve_rejected_total", s.rejected),
+        ("somd_serve_completed_total", s.completed),
+        ("somd_serve_failed_total", s.failed),
+        ("somd_serve_batches_total", s.batches),
+        ("somd_serve_batched_requests_total", s.batched_requests),
+        ("somd_serve_items_total", s.items),
+    ] {
+        snap.counters.insert(name.to_string(), v);
+    }
+    snap.gauges.insert("somd_serve_max_batch_requests".to_string(), s.max_batch_requests as f64);
+    snap.gauges.insert("somd_serve_mean_batch_requests".to_string(), s.mean_batch_requests());
+    snap.gauges
+        .insert("somd_serve_mean_batch_exec_seconds".to_string(), s.mean_batch_exec_secs());
+    snap.prometheus_text()
 }
 
 /// A client handle for one registered method.  Cheap to clone; every

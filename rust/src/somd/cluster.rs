@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::distribution::Range1;
+use crate::obs::TraceRecorder;
 
 /// Point-to-point interconnect model: `t(bytes) = latency + bytes/bw`.
 #[derive(Debug, Clone, Copy)]
@@ -173,7 +174,7 @@ pub fn hierarchical_ranges(
 /// |------|------------|---------|
 /// | 1    | `Hello`    | `u32 version`, `str name` |
 /// | 2    | `HelloAck` | `u32 version`, `str name`, `u32 workers` |
-/// | 3    | `Submit`   | `u64 id`, `str method`, `u64 span_lo`, `u64 span_hi`, `u32 deadline_ms`, `bytes input` |
+/// | 3    | `Submit`   | `u64 id`, `str method`, `u64 span_lo`, `u64 span_hi`, `u32 deadline_ms`, `bytes input`, `u64 trace_id` |
 /// | 4    | `Partial`  | `u64 id`, `f64 compute_secs`, `bytes payload` |
 /// | 5    | `Error`    | `u64 id`, `str message` |
 /// | 6    | `Ping`     | `u64 nonce` |
@@ -189,7 +190,11 @@ pub mod wire {
     use anyhow::{bail, ensure, Result};
 
     /// Protocol version carried in `Hello`/`HelloAck` (mismatch = refuse).
-    pub const PROTO_VERSION: u32 = 1;
+    ///
+    /// v2 appended `u64 trace_id` to `Submit` so a client's invocation
+    /// trace stitches across the wire; the decoder rejects trailing
+    /// bytes, so the extra field is a breaking change.
+    pub const PROTO_VERSION: u32 = 2;
     /// Frame header size: 1 kind byte + 4 length bytes.
     pub const HEADER_BYTES: usize = 5;
     /// Upper bound on one frame's payload (guards the length prefix).
@@ -228,6 +233,9 @@ pub mod wire {
             deadline_ms: u32,
             /// Method-specific encoding of the span's input.
             input: Vec<u8>,
+            /// Client-side trace id the peer's execute span joins
+            /// (0 = the client is not tracing this invocation).
+            trace_id: u64,
         },
         /// Peer → client: a span's partial result.
         Partial {
@@ -283,13 +291,14 @@ pub mod wire {
                     put_str(&mut p, name);
                     put_u32(&mut p, *workers);
                 }
-                Frame::Submit { id, method, lo, hi, deadline_ms, input } => {
+                Frame::Submit { id, method, lo, hi, deadline_ms, input, trace_id } => {
                     put_u64(&mut p, *id);
                     put_str(&mut p, method);
                     put_u64(&mut p, *lo);
                     put_u64(&mut p, *hi);
                     put_u32(&mut p, *deadline_ms);
                     put_bytes(&mut p, input);
+                    put_u64(&mut p, *trace_id);
                 }
                 Frame::Partial { id, secs, payload } => {
                     put_u64(&mut p, *id);
@@ -322,6 +331,7 @@ pub mod wire {
                     hi: c.u64()?,
                     deadline_ms: c.u32()?,
                     input: c.bytes()?,
+                    trace_id: c.u64()?,
                 },
                 4 => Frame::Partial { id: c.u64()?, secs: c.f64()?, payload: c.bytes()? },
                 5 => Frame::Error { id: c.u64()?, message: c.str_()? },
@@ -651,6 +661,19 @@ impl ClusterClient {
         input: Vec<u8>,
         on_done: RemoteCallback,
     ) -> Result<()> {
+        self.submit_traced(method, span, input, on_done, 0)
+    }
+
+    /// [`Self::submit`] carrying the client invocation's trace id so the
+    /// peer's execute span stitches into the same trace (0 = untraced).
+    pub fn submit_traced(
+        &self,
+        method: &str,
+        span: Range1,
+        input: Vec<u8>,
+        on_done: RemoteCallback,
+        trace_id: u64,
+    ) -> Result<()> {
         if !self.is_alive() {
             bail!("cluster peer {} is down", self.addr);
         }
@@ -667,6 +690,7 @@ impl ClusterClient {
             hi: span.hi as u64,
             deadline_ms: self.cfg.deadline.as_millis().min(u32::MAX as u128) as u32,
             input,
+            trace_id,
         };
         if let Err(e) = self.shared.send(&frame) {
             // If a concurrent `poison` (reader died first) already drained
@@ -794,17 +818,26 @@ pub struct MethodHost {
     name: String,
     workers: u32,
     methods: std::collections::BTreeMap<String, HostFn>,
+    tracer: Option<Arc<TraceRecorder>>,
 }
 
 impl MethodHost {
     /// An empty host advertising `name`.
     pub fn new(name: impl Into<String>) -> Self {
-        MethodHost { name: name.into(), workers: 1, methods: Default::default() }
+        MethodHost { name: name.into(), workers: 1, methods: Default::default(), tracer: None }
     }
 
     /// Set the advertised worker count.
     pub fn with_workers(mut self, workers: u32) -> Self {
         self.workers = workers;
+        self
+    }
+
+    /// Attach a trace recorder: `Submit`s carrying a non-zero trace id
+    /// get a `peer.execute` span recorded here, under the client's id,
+    /// so the two halves can be stitched into one trace offline.
+    pub fn with_tracer(mut self, tracer: Arc<TraceRecorder>) -> Self {
+        self.tracer = Some(tracer);
         self
     }
 
@@ -941,7 +974,7 @@ fn handle_conn(stream: TcpStream, host: &Arc<MethodHost>, opts: ServeOptions) {
                     let _ = std::thread::Builder::new().spawn(reply);
                 }
             }
-            wire::Frame::Submit { id, method, lo, hi, input, .. } => {
+            wire::Frame::Submit { id, method, lo, hi, input, trace_id, .. } => {
                 let host = host.clone();
                 let w = writer.clone();
                 let delay = opts.injected_delay;
@@ -949,6 +982,17 @@ fn handle_conn(stream: TcpStream, host: &Arc<MethodHost>, opts: ServeOptions) {
                     move || {
                         let t0 = Instant::now();
                         let span = Range1::new(lo as usize, hi as usize);
+                        // join the client's trace id so the peer-side
+                        // span lands in a trace stitchable with the
+                        // client's export (trace_id 0 = untraced)
+                        let tctx = match (&host.tracer, trace_id) {
+                            (Some(t), id) if id != 0 => t.join(id),
+                            _ => crate::obs::TraceCtx::disabled(),
+                        };
+                        let mut pspan = tctx.span("peer.execute", None);
+                        pspan.field_str("method", method.clone());
+                        pspan.field_u64("span_lo", lo);
+                        pspan.field_u64("span_hi", hi);
                         let reply = match std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| host.call(&method, &input, span)),
                         ) {
@@ -961,6 +1005,10 @@ fn handle_conn(stream: TcpStream, host: &Arc<MethodHost>, opts: ServeOptions) {
                                 message: format!("panic computing {method:?}"),
                             },
                         };
+                        pspan.field_f64("execute_secs", t0.elapsed().as_secs_f64());
+                        let ok = matches!(reply, wire::Frame::Partial { .. });
+                        pspan.field_str("outcome", if ok { "ok" } else { "failed" });
+                        pspan.finish();
                         if !delay.is_zero() {
                             std::thread::sleep(delay);
                         }
@@ -1089,6 +1137,7 @@ mod tests {
                 hi: 250,
                 deadline_ms: 5_000,
                 input: vec![1, 2, 3, 255],
+                trace_id: 42,
             },
             wire::Frame::Partial { id: 7, secs: 0.125, payload: vec![9; 300] },
             wire::Frame::Error { id: 8, message: "no such method".into() },

@@ -49,7 +49,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::cluster::{ClusterClient, ClusterConfig, RemoteCallback, RemotePartial};
 use super::config::{Rules, Target};
@@ -57,10 +57,26 @@ use super::distribution::Range1;
 use super::master::SomdMethod;
 use super::partition::{split_fraction, split_weighted_floor};
 use super::pool::{JobHandle, WorkerPool};
-use super::scheduler::{Choice, Scheduler, SchedulerConfig};
+use super::scheduler::{choice_name, Choice, DecisionExplain, Scheduler, SchedulerConfig};
 use crate::backend::{DeviceShare, Executed, HeteroMethod, HybridMerge, ShardedMerge};
 use crate::device::{DeviceProfile, DeviceSession, DeviceStats, UploadCounters};
+use crate::obs::{
+    chrome_trace, jsonl, HubSnapshot, MetricsHub, OpenSpan, SpanRef, TraceCtx, TraceFormat,
+    TraceRecorder,
+};
 use crate::runtime::Registry;
+
+/// The lane label an invocation's resolved [`Target`] lands on (span
+/// fields + hub series).
+fn target_label(t: &Target) -> &'static str {
+    match t {
+        Target::Smp => "smp",
+        Target::Device(_) => "device",
+        Target::Hybrid => "hybrid",
+        Target::Sharded => "sharded",
+        Target::Auto => "auto",
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Device master thread
@@ -290,6 +306,17 @@ struct HybridInFlight<I: ?Sized, P, E, R> {
     smp_parts: usize,
     tx: mpsc::Sender<HybridOutcome<R>>,
     slots: Mutex<HybridSlots<R>>,
+    /// Trace handle both halves open their lane spans through.
+    tctx: TraceCtx,
+    /// The invocation root's span id (lane spans parent here).
+    root_span: u64,
+    /// The root span itself — closed by the latch after the merge, so
+    /// the trace is complete before the caller's handle resolves.
+    root: Mutex<Option<OpenSpan>>,
+    hub: Arc<MetricsHub>,
+    /// Fork instant: the device half's master-queue wait is measured
+    /// from here to its dequeue.
+    enqueued: Instant,
 }
 
 impl<I, P, E, R> HybridInFlight<I, P, E, R>
@@ -302,12 +329,25 @@ where
     /// The SMP half: compute the leading share's partials on this pool
     /// worker (fanning out scoped MIs as a plain invocation would).
     fn run_smp_half(&self) {
+        let mut span = self.tctx.span("lane.smp", Some(self.root_span));
+        span.field_u64("span_items", self.smp_span.len() as u64);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let t0 = Instant::now();
             let partials =
                 self.method.hybrid_smp_partials(&self.input, self.smp_span, self.smp_parts);
             (partials, t0.elapsed().as_secs_f64())
         }));
+        if let Ok((_, secs)) = &result {
+            span.field_f64("execute_secs", *secs);
+            self.hub.observe(
+                &format!(
+                    "somd_lane_execute_seconds{{method=\"{}\",lane=\"smp\"}}",
+                    self.method.name()
+                ),
+                *secs,
+            );
+        }
+        span.finish();
         let both = {
             let mut slots = self.slots.lock().unwrap();
             slots.smp = Some(result);
@@ -321,16 +361,27 @@ where
     /// The device half: run the trailing share on the master thread's
     /// warm session, clocked after dequeue (queue wait excluded).
     fn run_device_half(&self, ctx: &mut DeviceCtx<'_>) {
+        // dequeue instant: everything since the fork was master-queue wait
+        let wait = self.enqueued.elapsed();
+        let mut span = self.tctx.span("lane.device", Some(self.root_span));
+        span.field_u64("span_items", self.dev_span.len() as u64);
+        span.field_f64("queue_wait_secs", wait.as_secs_f64());
         let result: DevHalf<R> = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let session = ctx.session(&self.profile)?;
             let before = session.stats();
             let t0 = Instant::now();
             let partial = self.method.hybrid_device_partial(session, &self.input, self.dev_span)?;
             let secs = t0.elapsed().as_secs_f64();
-            let stats = session.stats().delta_since(&before);
+            let mut stats = session.stats().delta_since(&before);
+            stats.queue_wait = wait;
             let profile = session.profile().name;
             Ok(DeviceShare { partial, secs, stats, profile })
         }));
+        if let Ok(Ok(share)) = &result {
+            annotate_device_span(&mut span, share.profile, share.secs, &share.stats);
+            observe_device_execute(&self.hub, self.method.name(), share.secs, wait);
+        }
+        span.finish();
         let both = {
             let mut slots = self.slots.lock().unwrap();
             slots.dev = Some(result);
@@ -350,8 +401,17 @@ where
                 slots.dev.take().expect("device half completed"),
             )
         };
+        let mut mspan = self.tctx.span("merge", Some(self.root_span));
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.merge(smp, dev)));
+        mspan.field_str(
+            "outcome",
+            if matches!(&outcome, Ok(Ok(Ok(_)))) { "merged" } else { "failed" },
+        );
+        mspan.finish();
+        // close the invocation root before releasing the caller, so the
+        // trace is complete when join() returns
+        *self.root.lock().unwrap() = None;
         let _ = match outcome {
             Ok(msg) => self.tx.send(msg),
             Err(panic) => self.tx.send(Err(panic)),
@@ -413,6 +473,16 @@ struct ShardedInFlight<I: ?Sized, P, E, R> {
     smp_parts: usize,
     tx: mpsc::Sender<HybridOutcome<R>>,
     slots: Mutex<ShardSlots<R>>,
+    /// Trace handle every share opens its lane span through.
+    tctx: TraceCtx,
+    /// The invocation root's span id (lane spans parent here).
+    root_span: u64,
+    /// The root span itself — closed by the latch after the merge.
+    root: Mutex<Option<OpenSpan>>,
+    hub: Arc<MetricsHub>,
+    /// Fork instant: each device share's master-queue wait is measured
+    /// from here to its dequeue.
+    enqueued: Instant,
 }
 
 impl<I, P, E, R> ShardedInFlight<I, P, E, R>
@@ -425,12 +495,25 @@ where
     /// The SMP share: compute the leading span's partials on this pool
     /// worker.
     fn run_smp_shard(&self) {
+        let mut span = self.tctx.span("lane.smp", Some(self.root_span));
+        span.field_u64("span_items", self.smp_span.len() as u64);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let t0 = Instant::now();
             let partials =
                 self.method.hybrid_smp_partials(&self.input, self.smp_span, self.smp_parts);
             (partials, t0.elapsed().as_secs_f64())
         }));
+        if let Ok((_, secs)) = &result {
+            span.field_f64("execute_secs", *secs);
+            self.hub.observe(
+                &format!(
+                    "somd_lane_execute_seconds{{method=\"{}\",lane=\"smp\"}}",
+                    self.method.name()
+                ),
+                *secs,
+            );
+        }
+        span.finish();
         let last = {
             let mut slots = self.slots.lock().unwrap();
             slots.smp = Some(result);
@@ -445,6 +528,12 @@ where
     /// Device lane `i`'s share: run its span on that lane's master
     /// thread and warm session, clocked after dequeue.
     fn run_device_shard(&self, i: usize, ctx: &mut DeviceCtx<'_>) {
+        // dequeue instant: everything since the fork was master-queue wait
+        let wait = self.enqueued.elapsed();
+        let mut span = self.tctx.span("lane.device", Some(self.root_span));
+        span.field_u64("lane", i as u64);
+        span.field_u64("span_items", self.dev_spans[i].len() as u64);
+        span.field_f64("queue_wait_secs", wait.as_secs_f64());
         let result: DevHalf<R> = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let session = ctx.session(self.profiles[i])?;
             let before = session.stats();
@@ -452,10 +541,16 @@ where
             let partial =
                 self.method.hybrid_device_partial(session, &self.input, self.dev_spans[i])?;
             let secs = t0.elapsed().as_secs_f64();
-            let stats = session.stats().delta_since(&before);
+            let mut stats = session.stats().delta_since(&before);
+            stats.queue_wait = wait;
             let profile = session.profile().name;
             Ok(DeviceShare { partial, secs, stats, profile })
         }));
+        if let Ok(Ok(share)) = &result {
+            annotate_device_span(&mut span, share.profile, share.secs, &share.stats);
+            observe_device_execute(&self.hub, self.method.name(), share.secs, wait);
+        }
+        span.finish();
         self.fill_lane_slot(i, result);
     }
 
@@ -472,6 +567,10 @@ where
         t0: Instant,
         res: anyhow::Result<RemotePartial>,
     ) {
+        let mut span = self.tctx.span("lane.remote", Some(self.root_span));
+        span.field_u64("lane", i as u64);
+        span.field_str("peer", profile);
+        span.field_u64("span_items", self.dev_spans[i].len() as u64);
         let result: DevHalf<R> = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let remote = res?;
             let partial = self.method.cluster_decode_partial(&remote.payload)?;
@@ -482,6 +581,11 @@ where
                 profile,
             })
         }));
+        match &result {
+            Ok(Ok(share)) => span.field_f64("round_trip_secs", share.secs),
+            _ => span.field_str("outcome", "failed"),
+        }
+        span.finish();
         self.fill_lane_slot(i, result);
     }
 
@@ -506,8 +610,17 @@ where
             let mut slots = self.slots.lock().unwrap();
             (slots.smp.take().expect("smp share completed"), std::mem::take(&mut slots.devs))
         };
+        let mut mspan = self.tctx.span("merge", Some(self.root_span));
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.merge(smp, devs)));
+        mspan.field_str(
+            "outcome",
+            if matches!(&outcome, Ok(Ok(Ok(_)))) { "merged" } else { "failed" },
+        );
+        mspan.finish();
+        // close the invocation root before releasing the caller, so the
+        // trace is complete when join() returns
+        *self.root.lock().unwrap() = None;
         let _ = match outcome {
             Ok(msg) => self.tx.send(msg),
             Err(panic) => self.tx.send(Err(panic)),
@@ -564,6 +677,10 @@ pub struct Engine {
     /// (empty = single-host engine).
     remote: Vec<RemoteLane>,
     auto_profile: String,
+    /// The invocation span recorder (disabled by default; `SOMD_TRACE`).
+    tracer: Arc<TraceRecorder>,
+    /// The unified metrics registry every lane feeds.
+    hub: Arc<MetricsHub>,
 }
 
 impl Engine {
@@ -584,6 +701,8 @@ impl Engine {
             device: Vec::new(),
             remote: Vec::new(),
             auto_profile: "fermi".to_string(),
+            tracer: Arc::new(TraceRecorder::from_env()),
+            hub: Arc::new(MetricsHub::new()),
         }
     }
 
@@ -747,6 +866,51 @@ impl Engine {
     pub fn with_scheduler(mut self, scheduler: Scheduler) -> Self {
         self.scheduler = Arc::new(scheduler);
         self
+    }
+
+    /// Replace the span recorder (the env-configured default records
+    /// nothing unless `SOMD_TRACE` is truthy) — how tests and the `somd
+    /// trace` subcommand turn tracing on for one engine.
+    pub fn with_tracer(mut self, tracer: TraceRecorder) -> Self {
+        self.tracer = Arc::new(tracer);
+        self
+    }
+
+    /// The invocation span recorder.
+    pub fn tracer(&self) -> &Arc<TraceRecorder> {
+        &self.tracer
+    }
+
+    /// The unified metrics hub every lane feeds.
+    pub fn hub(&self) -> &Arc<MetricsHub> {
+        &self.hub
+    }
+
+    /// Render every retained trace in `format` (Chrome-trace JSON or
+    /// JSONL) — see `docs/OBSERVABILITY.md` for the formats.
+    pub fn export_trace(&self, format: TraceFormat) -> String {
+        let traces = self.tracer.traces();
+        match format {
+            TraceFormat::Chrome => chrome_trace(&traces),
+            TraceFormat::Jsonl => jsonl(&traces),
+        }
+    }
+
+    /// Point-in-time metrics: the hub's own series plus the per-lane
+    /// warm-session/upload counters folded in as `somd_device_lane_*`
+    /// gauges — one snapshot covering every layer below the caller.
+    pub fn metrics_snapshot(&self) -> HubSnapshot {
+        let mut s = self.hub.snapshot();
+        for (i, c) in self.device_lane_counters().iter().enumerate() {
+            let lane = |name: &str| format!("{name}{{lane=\"{i}\"}}");
+            s.counters.insert(lane("somd_device_lane_jobs_total"), c.jobs_run as u64);
+            s.counters.insert(lane("somd_device_lane_warm_hits_total"), c.warm_hits as u64);
+            s.counters
+                .insert(lane("somd_device_lane_sessions_created_total"), c.sessions_created as u64);
+            s.counters.insert(lane("somd_device_lane_uploads_total"), c.uploads as u64);
+            s.counters.insert(lane("somd_device_lane_upload_hits_total"), c.upload_hits as u64);
+        }
+        s
     }
 
     /// The default MI count per invocation.
@@ -958,53 +1122,73 @@ impl Engine {
         sharded_lanes: usize,
         items: Option<u64>,
     ) -> Target {
+        self.resolve_target_items_explained(
+            method,
+            applicable,
+            hybrid_applicable,
+            sharded_lanes,
+            items,
+        )
+        .0
+    }
+
+    /// [`Engine::resolve_target_items`] plus the scheduler's
+    /// [`DecisionExplain`] — the payload the `resolve` span is annotated
+    /// with.  When the rules said `auto` and the cost model actually ran
+    /// the payload is the ladder's; rule-forced targets carry a
+    /// read-only [`Scheduler::explain_forced`] payload instead (reason
+    /// `rule-forced`, estimates and incumbent from the same history the
+    /// ladder would have consulted, no hysteresis state touched).
+    fn resolve_target_items_explained(
+        &self,
+        method: &str,
+        applicable: &dyn Fn(&str) -> bool,
+        hybrid_applicable: bool,
+        sharded_lanes: usize,
+        items: Option<u64>,
+    ) -> (Target, Option<DecisionExplain>) {
+        let forced = |choice: Choice| Some(self.scheduler.explain_forced(method, choice, items));
         match self.rules.target_for(method) {
             Target::Device(name) => {
                 if applicable(&name) {
-                    Target::Device(name)
+                    (Target::Device(name), forced(Choice::Device))
                 } else {
-                    Target::Smp
+                    (Target::Smp, forced(Choice::Smp))
                 }
             }
             Target::Hybrid => {
                 if hybrid_applicable {
-                    Target::Hybrid
+                    let device_fraction = self.scheduler.hybrid_fraction(method);
+                    (Target::Hybrid, forced(Choice::Hybrid { device_fraction }))
                 } else {
-                    Target::Smp
+                    (Target::Smp, forced(Choice::Smp))
                 }
             }
             Target::Sharded => {
                 if sharded_lanes >= 1 {
-                    Target::Sharded
+                    (Target::Sharded, forced(Choice::Sharded { lanes: sharded_lanes }))
                 } else if hybrid_applicable {
-                    Target::Hybrid
+                    let device_fraction = self.scheduler.hybrid_fraction(method);
+                    (Target::Hybrid, forced(Choice::Hybrid { device_fraction }))
                 } else {
-                    Target::Smp
+                    (Target::Smp, forced(Choice::Smp))
                 }
             }
             Target::Auto => {
                 if applicable(&self.auto_profile) {
                     if sharded_lanes >= 2 {
-                        let choice = match items {
-                            Some(it) => self.scheduler.decide_sharded_sized(
-                                method,
-                                sharded_lanes,
-                                it,
-                            ),
-                            None => self.scheduler.decide_sharded(method, sharded_lanes),
-                        };
-                        match choice {
+                        let ex =
+                            self.scheduler.decide_sharded_explained(method, sharded_lanes, items);
+                        let t = match ex.choice {
                             Choice::Device => Target::Device(self.auto_profile.clone()),
                             Choice::Smp => Target::Smp,
                             Choice::Hybrid { .. } => Target::Hybrid,
                             Choice::Sharded { .. } => Target::Sharded,
-                        }
-                    } else if hybrid_applicable {
-                        let choice = match items {
-                            Some(it) => self.scheduler.decide_hybrid_sized(method, it),
-                            None => self.scheduler.decide_hybrid(method),
                         };
-                        match choice {
+                        (t, Some(ex))
+                    } else if hybrid_applicable {
+                        let ex = self.scheduler.decide_hybrid_explained(method, items);
+                        let t = match ex.choice {
                             Choice::Device => Target::Device(self.auto_profile.clone()),
                             Choice::Smp => Target::Smp,
                             Choice::Hybrid { .. } => Target::Hybrid,
@@ -1012,22 +1196,25 @@ impl Engine {
                             // sharded incumbent restored from a fleet
                             // snapshot runs as the two-way split here
                             Choice::Sharded { .. } => Target::Hybrid,
-                        }
-                    } else {
-                        let choice = match items {
-                            Some(it) => self.scheduler.decide_sized(method, it),
-                            None => self.scheduler.decide(method),
                         };
-                        match choice {
+                        (t, Some(ex))
+                    } else {
+                        let ex = self.scheduler.decide_explained(method, items);
+                        let t = match ex.choice {
                             Choice::Device => Target::Device(self.auto_profile.clone()),
                             _ => Target::Smp,
-                        }
+                        };
+                        (t, Some(ex))
                     }
                 } else {
-                    Target::Smp
+                    // `auto` with no applicable device: no ladder ran and
+                    // no rule forced the lane, so there is nothing to
+                    // explain.
+                    (Target::Smp, None)
                 }
             }
-            t => t,
+            // only `Target::Smp` remains: an explicit rules-table SMP pin
+            Target::Smp => (Target::Smp, forced(Choice::Smp)),
         }
     }
 
@@ -1055,7 +1242,7 @@ impl Engine {
         &self,
         method: &HeteroMethod<I, P, E, R>,
         items: Option<u64>,
-    ) -> Target
+    ) -> (Target, Option<DecisionExplain>)
     where
         I: ?Sized + Sync,
         P: Send + Sync,
@@ -1076,7 +1263,7 @@ impl Engine {
         if cluster_ok {
             sharded_lanes += self.remote.len();
         }
-        self.resolve_target_items(
+        self.resolve_target_items_explained(
             method.name(),
             &|profile: &str| {
                 method.has_device_version()
@@ -1176,31 +1363,114 @@ impl Engine {
         E: Sync + 'static,
         R: Send + 'static,
     {
+        self.submit_hetero_in(method, input, None)
+    }
+
+    /// [`Engine::submit_hetero`] nested under an existing span: `parent`
+    /// (e.g. the serving layer's `serve.batch` span) becomes the
+    /// invocation root's parent, so a fused dispatch's lane spans land in
+    /// the batch's trace instead of opening their own.  `None` starts a
+    /// fresh trace — exactly `submit_hetero`.
+    pub fn submit_hetero_in<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        input: Arc<I>,
+        parent: Option<SpanRef>,
+    ) -> JobHandle<anyhow::Result<(R, Executed)>>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
         // size the invocation when the method can report it — `auto` then
         // resolves per size bucket, and the lane records below land in
         // the matching bucket
         let items = method.has_hybrid_version().then(|| method.hybrid_items(&input) as u64);
-        match self.resolve_for_submit(method.as_ref(), items) {
+        let tctx = match parent {
+            Some(p) => self.tracer.join(p.trace),
+            None => self.tracer.begin(),
+        };
+        let mut root = tctx.span("invoke", parent.map(|p| p.span));
+        root.field_str("method", method.name());
+        if let Some(it) = items {
+            root.field_u64("items", it);
+        }
+        // the resolve span times the actual rules + cost-model pass and
+        // carries its decision-explain payload
+        let mut rspan = tctx.span("resolve", Some(root.id()));
+        let (target, explain) = self.resolve_for_submit(method.as_ref(), items);
+        rspan.field_str("target", target_label(&target));
+        if let Some(ex) = &explain {
+            rspan.field_str("choice", ex.choice_name());
+            rspan.field_str("reason", ex.reason);
+            rspan.field_f64("hysteresis", ex.hysteresis);
+            if let Some(v) = ex.smp_est {
+                rspan.field_f64("smp_est_secs", v);
+            }
+            if let Some(v) = ex.device_est {
+                rspan.field_f64("device_est_secs", v);
+            }
+            if let Some(v) = ex.hybrid_est {
+                rspan.field_f64("hybrid_est_secs", v);
+            }
+            if let Some(v) = ex.sharded_est {
+                rspan.field_f64("sharded_est_secs", v);
+            }
+            if let Some(inc) = &ex.incumbent {
+                rspan.field_str("incumbent", choice_name(inc));
+            }
+            if let Some(b) = ex.bucket {
+                rspan.field_u64("size_bucket", b as u64);
+            }
+        }
+        rspan.finish();
+        root.field_str("target", target_label(&target));
+        self.hub.counter_add(
+            &format!(
+                "somd_invocations_total{{method=\"{}\",lane=\"{}\"}}",
+                method.name(),
+                target_label(&target)
+            ),
+            1,
+        );
+        match target {
             Target::Device(profile) => {
                 // least-loaded dispatch: concurrent whole-invocation jobs
                 // (the serving layer's independent batches above all)
                 // spread across the fleet instead of queuing on one lane
                 let lane = self.pick_lane(&profile).expect("resolved device lane");
                 let sched = self.scheduler.clone();
+                let hub = self.hub.clone();
                 let (tx, handle) = JobHandle::pair();
+                let enqueued = Instant::now();
                 let job: DeviceJob = Box::new(move |ctx: &mut DeviceCtx<'_>| {
+                    let wait = enqueued.elapsed();
                     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_device_job(method.as_ref(), &profile, ctx, input.as_ref(), &sched)
+                        run_device_job(
+                            method.as_ref(),
+                            &profile,
+                            ctx,
+                            input.as_ref(),
+                            &sched,
+                            &tctx,
+                            root.id(),
+                            wait,
+                            &hub,
+                        )
                     }));
+                    // the invocation's root span ends with its only lane
+                    // job — closed before the caller's handle resolves
+                    drop(root);
                     let _ = tx.send(result);
                 });
                 lane.master.submit(job);
                 handle
             }
-            Target::Hybrid => self.submit_hybrid(method, input),
-            Target::Sharded => self.submit_sharded(method, input),
+            Target::Hybrid => self.submit_hybrid(method, input, tctx, root),
+            Target::Sharded => self.submit_sharded(method, input, tctx, root),
             // Auto resolves to Smp before reaching here when inapplicable
-            _ => self.submit_smp_full(method, input, Degraded::No),
+            _ => self.submit_smp_full(method, input, Degraded::No, tctx, root),
         }
     }
 
@@ -1231,6 +1501,29 @@ impl Engine {
         self.submit_hetero(method, input)
     }
 
+    /// [`Engine::submit_hetero_batched`] nested under an existing span —
+    /// the serving layer parents each fused dispatch's invocation trace
+    /// under its `serve.batch` span through this entry.
+    pub fn submit_hetero_batched_in<I, P, E, R>(
+        &self,
+        method: Arc<HeteroMethod<I, P, E, R>>,
+        input: Arc<I>,
+        batch_requests: usize,
+        parent: Option<SpanRef>,
+    ) -> JobHandle<anyhow::Result<(R, Executed)>>
+    where
+        I: Send + Sync + 'static,
+        P: Send + Sync + 'static,
+        E: Sync + 'static,
+        R: Send + 'static,
+    {
+        if method.has_batch_version() {
+            let items = method.batch_items(&input);
+            self.scheduler.record_batch(method.name(), batch_requests, items);
+        }
+        self.submit_hetero_in(method, input, parent)
+    }
+
     /// The pure-SMP submission path.  A `Degraded` marker notes a
     /// co-execution resolution whose device share(s) underflowed the
     /// minimum chunk: the wall is then also recorded as a (degraded)
@@ -1242,6 +1535,8 @@ impl Engine {
         method: Arc<HeteroMethod<I, P, E, R>>,
         input: Arc<I>,
         degraded: Degraded,
+        tctx: TraceCtx,
+        root: OpenSpan,
     ) -> JobHandle<anyhow::Result<(R, Executed)>>
     where
         I: Send + Sync + 'static,
@@ -1251,11 +1546,28 @@ impl Engine {
     {
         let n = self.workers;
         let sched = self.scheduler.clone();
+        let hub = self.hub.clone();
         self.pool.submit(move || {
+            let mut span = tctx.span("lane.smp", Some(root.id()));
+            match degraded {
+                Degraded::No => {}
+                Degraded::Hybrid => span.field_str("degraded", "hybrid"),
+                Degraded::Sharded => span.field_str("degraded", "sharded"),
+            }
             let items = method.has_hybrid_version().then(|| method.hybrid_items(&input) as u64);
             let t0 = Instant::now();
             let r = method.smp.invoke(&input, n);
             let wall = t0.elapsed();
+            span.field_f64("execute_secs", wall.as_secs_f64());
+            span.field_u64("partitions", n as u64);
+            span.finish();
+            hub.observe(
+                &format!(
+                    "somd_lane_execute_seconds{{method=\"{}\",lane=\"smp\"}}",
+                    method.name()
+                ),
+                wall.as_secs_f64(),
+            );
             match items {
                 Some(it) => sched.record_smp_sized(method.name(), wall, it),
                 None => sched.record_smp(method.name(), wall),
@@ -1271,6 +1583,8 @@ impl Engine {
                 }
                 (Degraded::Sharded, None) => sched.record_sharded_degraded(method.name(), wall),
             }
+            // the root span closes before the caller's handle resolves
+            drop(root);
             Ok((r, Executed::Smp { partitions: n }))
         })
     }
@@ -1283,6 +1597,8 @@ impl Engine {
         &self,
         method: Arc<HeteroMethod<I, P, E, R>>,
         input: Arc<I>,
+        tctx: TraceCtx,
+        root: OpenSpan,
     ) -> JobHandle<anyhow::Result<(R, Executed)>>
     where
         I: Send + Sync + 'static,
@@ -1296,9 +1612,16 @@ impl Engine {
         if dev_span.is_empty() || dev_span.len() < self.scheduler.config().min_device_items {
             // the device share underflows the minimum chunk: co-execution
             // would be pure overhead, run the whole invocation on SMP
-            return self.submit_smp_full(method, input, Degraded::Hybrid);
+            return self.submit_smp_full(method, input, Degraded::Hybrid, tctx, root);
+        }
+        {
+            let mut pspan = tctx.span("partition", Some(root.id()));
+            pspan.field_f64("device_fraction", fraction);
+            pspan.field_u64("smp_items", smp_span.len() as u64);
+            pspan.field_u64("device_items", dev_span.len() as u64);
         }
         let (tx, handle) = JobHandle::pair();
+        let root_span = root.id();
         let shared = Arc::new(HybridInFlight {
             method,
             input,
@@ -1310,6 +1633,11 @@ impl Engine {
             smp_parts: self.workers,
             tx,
             slots: Mutex::new(HybridSlots { smp: None, dev: None }),
+            tctx,
+            root_span,
+            root: Mutex::new(Some(root)),
+            hub: self.hub.clone(),
+            enqueued: Instant::now(),
         });
         let dev_shared = shared.clone();
         let job: DeviceJob = Box::new(move |ctx: &mut DeviceCtx<'_>| {
@@ -1333,6 +1661,8 @@ impl Engine {
         &self,
         method: Arc<HeteroMethod<I, P, E, R>>,
         input: Arc<I>,
+        tctx: TraceCtx,
+        root: OpenSpan,
     ) -> JobHandle<anyhow::Result<(R, Executed)>>
     where
         I: Send + Sync + 'static,
@@ -1355,13 +1685,20 @@ impl Engine {
         if lane_spans.iter().all(|s| s.is_empty()) {
             // every lane's share starved under the floor: co-execution
             // would be pure overhead, run the whole invocation on SMP
-            return self.submit_smp_full(method, input, Degraded::Sharded);
+            return self.submit_smp_full(method, input, Degraded::Sharded, tctx, root);
         }
         let live = lane_spans.iter().filter(|s| !s.is_empty()).count();
+        {
+            let mut pspan = tctx.span("partition", Some(root.id()));
+            pspan.field_u64("smp_items", smp_span.len() as u64);
+            pspan.field_u64("lanes", lanes as u64);
+            pspan.field_u64("live_lanes", live as u64);
+        }
         let mut profiles: Vec<&'static str> =
             self.device.iter().map(|l| l.static_name).collect();
         profiles.extend(self.remote.iter().take(rlanes).map(|l| l.static_name));
         let (tx, handle) = JobHandle::pair();
+        let root_span = root.id();
         let shared = Arc::new(ShardedInFlight {
             method,
             input,
@@ -1377,6 +1714,11 @@ impl Engine {
                 devs: (0..lanes).map(|_| None).collect(),
                 remaining: live + 1,
             }),
+            tctx,
+            root_span,
+            root: Mutex::new(Some(root)),
+            hub: self.hub.clone(),
+            enqueued: Instant::now(),
         });
         for (i, lane) in self.device.iter().enumerate() {
             if lane_spans[i].is_empty() {
@@ -1404,7 +1746,15 @@ impl Engine {
             let cb: RemoteCallback = Box::new(move |res| {
                 remote_shared.finish_remote_shard(i, profile, t0, res);
             });
-            if let Err(e) = lane.client.submit(shared.method.name(), span, payload, cb) {
+            // the trace id rides the wire so the peer's execute span
+            // stitches into this invocation's trace
+            if let Err(e) = lane.client.submit_traced(
+                shared.method.name(),
+                span,
+                payload,
+                cb,
+                shared.tctx.trace_id(),
+            ) {
                 // nothing was sent and the callback never fires: fail the
                 // lane's slot here so the merge covers its span
                 shared.fill_lane_slot(i, Ok(Err(e)));
@@ -1438,13 +1788,50 @@ impl Drop for Engine {
     }
 }
 
+/// Attach the per-lane device execution payload (profile, clocks, the
+/// transfer-byte accounting [`DeviceStats`] carries) to a `lane.device`
+/// span.
+fn annotate_device_span(
+    span: &mut OpenSpan,
+    profile: &'static str,
+    secs: f64,
+    stats: &DeviceStats,
+) {
+    span.field_str("profile", profile);
+    span.field_f64("execute_secs", secs);
+    span.field_u64("launches", stats.launches as u64);
+    span.field_u64("bytes_h2d", stats.bytes_h2d as u64);
+    span.field_u64("bytes_d2h", stats.bytes_d2h as u64);
+    span.field_u64("transfers_skipped", stats.skipped_transfers() as u64);
+    span.field_u64("bytes_skipped", stats.skipped_transfer_bytes() as u64);
+}
+
+/// Feed one device execution into the hub: the per-method execute
+/// histogram, the queue-wait gauge, and the transfer-byte counters.
+fn observe_device_execute(hub: &MetricsHub, method: &str, secs: f64, wait: Duration) {
+    hub.observe(
+        &format!("somd_lane_execute_seconds{{method=\"{method}\",lane=\"device\"}}"),
+        secs,
+    );
+    hub.gauge_set("somd_device_queue_wait_seconds", wait.as_secs_f64());
+    hub.observe("somd_device_queue_wait_seconds_window", wait.as_secs_f64());
+}
+
 /// One device job on the master thread: warm session in, stats delta out.
+/// `wait` is the master-queue wait the submitting side clocked up to this
+/// job's dequeue — recorded as a span field, a hub gauge and a scheduler
+/// history window, but kept out of the measured execute time.
+#[allow(clippy::too_many_arguments)]
 fn run_device_job<I, P, E, R>(
     method: &HeteroMethod<I, P, E, R>,
     profile: &str,
     ctx: &mut DeviceCtx<'_>,
     input: &I,
     sched: &Scheduler,
+    tctx: &TraceCtx,
+    parent: u64,
+    wait: Duration,
+    hub: &MetricsHub,
 ) -> anyhow::Result<(R, Executed)>
 where
     I: ?Sized + Sync,
@@ -1452,9 +1839,14 @@ where
     E: Sync,
     R: Send,
 {
+    let mut span = tctx.span("lane.device", Some(parent));
+    span.field_f64("queue_wait_secs", wait.as_secs_f64());
     // size the records when the method can report its item count, so
     // they land in the invocation's size bucket
     let items = method.has_hybrid_version().then(|| method.hybrid_items(input) as u64);
+    if let Some(it) = items {
+        span.field_u64("span_items", it);
+    }
     let session = ctx.session(profile)?;
     let before = session.stats();
     // measured execute time: the clock starts after the job was dequeued
@@ -1463,6 +1855,7 @@ where
     let r = match method.invoke_on_session(session, input) {
         Ok(r) => r,
         Err(e) => {
+            span.field_str("outcome", "failed");
             // a failing lane must still feed the cost model, or `auto`
             // would keep exploring the broken device forever
             match items {
@@ -1473,12 +1866,16 @@ where
         }
     };
     let measured = t0.elapsed();
-    let stats = session.stats().delta_since(&before);
+    let mut stats = session.stats().delta_since(&before);
+    stats.queue_wait = wait;
     match items {
         Some(it) => sched.record_device_sized(method.name(), measured, &stats, it),
         None => sched.record_device(method.name(), measured, &stats),
     }
     let profile_name = session.profile().name;
+    annotate_device_span(&mut span, profile_name, measured.as_secs_f64(), &stats);
+    observe_device_execute(hub, method.name(), measured.as_secs_f64(), wait);
+    span.finish();
     Ok((r, Executed::Device { profile: profile_name, stats }))
 }
 

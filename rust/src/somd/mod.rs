@@ -58,7 +58,9 @@ pub mod tree;
 pub use config::{Rules, Target};
 pub use distribution::{Distribution, Range1, Range2, View};
 pub use engine::{DeviceCountersSnapshot, Engine};
-pub use scheduler::{bucket_of, Choice, HybridSample, Scheduler, SchedulerConfig};
+pub use scheduler::{
+    bucket_of, choice_name, Choice, DecisionExplain, HybridSample, Scheduler, SchedulerConfig,
+};
 pub use master::{run_mis, SomdMethod};
 pub use mi::MiCtx;
 pub use partition::{

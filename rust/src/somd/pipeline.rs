@@ -392,6 +392,10 @@ impl ExecutionPlan {
         }
         let overlap = fused && overlap_from_env();
         let t_run = Instant::now();
+        let tctx = engine.tracer().begin();
+        let mut root = tctx.span("pipeline.run", None);
+        root.field_u64("stages", self.stages.len() as u64);
+        root.field_str("mode", if fused { "fused" } else { "per-stage" });
 
         let mut exec = if engine.device_ready() {
             let pending = engine.device_lane_pending();
@@ -415,6 +419,8 @@ impl ExecutionPlan {
         let mut modeled = 0.0f64;
 
         for stage in &self.stages {
+            let mut sspan = tctx.span("pipeline.stage", Some(root.id()));
+            sspan.field_str("stage", stage.name.clone());
             let applicable =
                 |p: &str| stage.spec.has_device() && DeviceProfile::by_name(p).is_some();
             let hybrid_ok = stage.spec.has_hybrid()
@@ -557,6 +563,24 @@ impl ExecutionPlan {
                     data = StageData::Host(outs);
                 }
             }
+            // the arms each push exactly one report for this stage
+            if let Some(rep) = reports.last() {
+                sspan.field_str(
+                    "lane",
+                    match rep.lane {
+                        StageLane::Smp => "smp",
+                        StageLane::Device => "device",
+                        StageLane::Hybrid => "hybrid",
+                    },
+                );
+                sspan.field_f64("stage_secs", rep.secs);
+                sspan.field_u64("fell_back", rep.fell_back as u64);
+                if let Some(st) = &rep.stats {
+                    sspan.field_u64("bytes_h2d", st.bytes_h2d as u64);
+                    sspan.field_u64("bytes_d2h", st.bytes_d2h as u64);
+                }
+            }
+            sspan.finish();
         }
 
         // the plan's outputs always land on the host (both paths pay

@@ -117,6 +117,59 @@ impl Choice {
     }
 }
 
+/// Why the cost model returned its [`Choice`]: the decision-explain
+/// payload the tracing layer attaches to every `resolve` span (see
+/// `docs/OBSERVABILITY.md`).  Produced by the `decide_*_explained`
+/// entry points alongside the decision itself, from the same history
+/// granularity the ladder ran on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionExplain {
+    /// The decision.
+    pub choice: Choice,
+    /// Which ladder rung produced it: `explore-smp` / `explore-device`
+    /// / `explore-hybrid` / `explore-sharded` (a lane still collecting
+    /// its minimum samples), `incumbent-held` (hysteresis kept the last
+    /// choice), `hysteresis-flip` (a challenger beat the incumbent by
+    /// the configured factor), or `best-mean` (no incumbent — lowest
+    /// trailing mean wins).  A payload from
+    /// [`Scheduler::explain_forced`] instead carries `rule-forced`: the
+    /// lane came from the rules table, not the ladder.
+    pub reason: &'static str,
+    /// Trailing-window mean SMP seconds at decision time, if observed.
+    pub smp_est: Option<f64>,
+    /// Trailing-window mean measured device seconds, if observed.
+    pub device_est: Option<f64>,
+    /// Trailing-window mean hybrid wall seconds, if observed.
+    pub hybrid_est: Option<f64>,
+    /// Trailing-window mean sharded wall seconds, if observed.
+    pub sharded_est: Option<f64>,
+    /// The incumbent (`last_choice` of the granularity the ladder ran
+    /// on) *before* this decision replaced it.
+    pub incumbent: Option<Choice>,
+    /// The hysteresis factor the incumbent was defended with.
+    pub hysteresis: f64,
+    /// The size bucket the decision ran in (`None` = all-sizes ladder).
+    pub bucket: Option<u32>,
+}
+
+impl DecisionExplain {
+    /// Short lane spelling of the decision (`smp` / `device` / `hybrid`
+    /// / `sharded`), for span fields and logs.
+    pub fn choice_name(&self) -> &'static str {
+        choice_name(&self.choice)
+    }
+}
+
+/// Short lane spelling of a [`Choice`].
+pub fn choice_name(c: &Choice) -> &'static str {
+    match c {
+        Choice::Smp => "smp",
+        Choice::Device => "device",
+        Choice::Hybrid { .. } => "hybrid",
+        Choice::Sharded { .. } => "sharded",
+    }
+}
+
 /// Tunables for the cost model.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerConfig {
@@ -208,6 +261,14 @@ pub struct MethodHistory {
     /// Trailing sharded (N-way fleet) invocation wall times (seconds;
     /// the slowest lane bounds the invocation).
     pub sharded_secs: Vec<f64>,
+    /// Trailing device-master queue waits (seconds spent between a
+    /// job's enqueue on the master and its dequeue).  Deliberately kept
+    /// out of `device_secs` — the execute window must stay queue-free
+    /// so `auto` compares compute against compute — but surfaced here
+    /// so reports and the metrics hub can see lane contention build.
+    /// Only runs that crossed a device-master queue contribute (inline
+    /// session executions record no wait).
+    pub device_queue_wait_secs: Vec<f64>,
     /// Per-device-lane throughput windows from sharded runs, indexed by
     /// `device_id` (the lane's position in the fleet) — the
     /// `(method, device_id)` keying of the fleet scheduler.  The SMP
@@ -335,6 +396,12 @@ impl MethodHistory {
     /// Trailing-window mean sharded wall seconds.
     pub fn sharded_estimate(&self) -> Option<f64> {
         Self::mean(&self.sharded_secs)
+    }
+
+    /// Trailing-window mean device-master queue wait (seconds); `None`
+    /// until a run crossed a device-master queue.
+    pub fn mean_device_queue_wait(&self) -> Option<f64> {
+        Self::mean(&self.device_queue_wait_secs)
     }
 
     /// Trailing-window mean throughput (items/s) of device lane
@@ -539,15 +606,17 @@ impl Scheduler {
         self.for_each_granularity(method, items, |cfg, e| {
             MethodHistory::push(&mut e.device_secs, measured.as_secs_f64(), cfg.window);
             e.device_runs += 1;
-            Self::account_transfers(e, stats);
+            Self::account_transfers(e, stats, cfg.window);
         });
     }
 
     /// Fold one run's transfer accounting into a history entry.  Runs
     /// that skipped transfers via residency are recorded as
     /// `resident_runs` — never as `transfer_runs` — so resident
-    /// pipeline stages don't dilute `transfer_bytes_per_run`.
-    fn account_transfers(e: &mut MethodHistory, stats: &DeviceStats) {
+    /// pipeline stages don't dilute `transfer_bytes_per_run`.  A run
+    /// that crossed a device-master queue also contributes its queue
+    /// wait to the (windowed) wait signal here.
+    fn account_transfers(e: &mut MethodHistory, stats: &DeviceStats, window: usize) {
         if stats.skipped_transfers() > 0 {
             e.resident_runs += 1;
             e.resident_bytes += stats.total_transfer_bytes() as u64;
@@ -558,6 +627,13 @@ impl Scheduler {
         e.bytes_h2d += stats.bytes_h2d as u64;
         e.bytes_d2h += stats.bytes_d2h as u64;
         e.launches += stats.launches as u64;
+        if stats.queue_wait > Duration::ZERO {
+            MethodHistory::push(
+                &mut e.device_queue_wait_secs,
+                stats.queue_wait.as_secs_f64(),
+                window,
+            );
+        }
     }
 
     /// Record a *failed* device invocation as a large penalty sample.
@@ -628,7 +704,7 @@ impl Scheduler {
                 );
             }
             e.hybrid_runs += 1;
-            Self::account_transfers(e, stats);
+            Self::account_transfers(e, stats, cfg.window);
             if let Some(f_star) = e.equilibrium_fraction() {
                 let f_star = f_star.clamp(FRACTION_MIN, FRACTION_MAX);
                 match e.device_fraction {
@@ -741,7 +817,7 @@ impl Scheduler {
                 }
             }
             e.sharded_runs += 1;
-            Self::account_transfers(e, stats);
+            Self::account_transfers(e, stats, cfg.window);
             if let Some(w_star) = e.equilibrium_weights(devices.len()) {
                 let floored: Vec<f64> = w_star.iter().map(|w| w.max(WEIGHT_MIN)).collect();
                 let total: f64 = floored.iter().sum();
@@ -967,7 +1043,14 @@ impl Scheduler {
     /// assert_eq!(s.decide("Series.coefficients"), Choice::Device);
     /// ```
     pub fn decide(&self, method: &str) -> Choice {
-        self.decide_impl(method, None, Self::decide_history)
+        self.decide_explained(method, None).choice
+    }
+
+    /// [`Scheduler::decide`] (or, with `items`, [`Scheduler::decide_sized`])
+    /// returning the full [`DecisionExplain`] payload — same decision,
+    /// same state transitions, plus the why.
+    pub fn decide_explained(&self, method: &str, items: Option<u64>) -> DecisionExplain {
+        self.decide_impl_explained(method, items, Self::decide_history_explained)
     }
 
     /// [`Scheduler::decide`] conditioned on input size: when size
@@ -979,7 +1062,7 @@ impl Scheduler {
     /// chosen lane) and the bucket could never diverge from the
     /// aggregate.  With bucketing off this is exactly `decide`.
     pub fn decide_sized(&self, method: &str, items: u64) -> Choice {
-        self.decide_impl(method, Some(items), Self::decide_history)
+        self.decide_explained(method, Some(items)).choice
     }
 
     /// Shared decide plumbing: run `ladder` on the size bucket when one
@@ -988,25 +1071,90 @@ impl Scheduler {
     /// `last_choice`; the top-level `last_choice` still tracks the most
     /// recent decision of *any* size so unsized callers and the decision
     /// table keep their meaning.
-    fn decide_impl(
+    fn decide_impl_explained(
         &self,
         method: &str,
         items: Option<u64>,
-        ladder: impl Fn(&SchedulerConfig, &MethodHistory) -> Choice,
-    ) -> Choice {
+        ladder: impl Fn(&SchedulerConfig, &MethodHistory) -> (Choice, &'static str),
+    ) -> DecisionExplain {
         let mut h = self.histories.lock().unwrap();
         let e = h.entry(method.to_string()).or_default();
-        let choice = match items {
+        let explain = match items {
             Some(items) if self.cfg.size_buckets => {
-                let b = e.size_buckets.entry(bucket_of(items)).or_default();
-                let c = ladder(&self.cfg, b);
-                b.last_choice = Some(c);
-                c
+                let bucket = bucket_of(items);
+                let b = e.size_buckets.entry(bucket).or_default();
+                let incumbent = b.last_choice;
+                let (choice, reason) = ladder(&self.cfg, b);
+                let explain = DecisionExplain {
+                    choice,
+                    reason,
+                    smp_est: b.smp_estimate(),
+                    device_est: b.device_estimate(),
+                    hybrid_est: b.hybrid_estimate(),
+                    sharded_est: b.sharded_estimate(),
+                    incumbent,
+                    hysteresis: self.cfg.hysteresis,
+                    bucket: Some(bucket),
+                };
+                b.last_choice = Some(choice);
+                explain
             }
-            _ => ladder(&self.cfg, e),
+            _ => {
+                let incumbent = e.last_choice;
+                let (choice, reason) = ladder(&self.cfg, e);
+                DecisionExplain {
+                    choice,
+                    reason,
+                    smp_est: e.smp_estimate(),
+                    device_est: e.device_estimate(),
+                    hybrid_est: e.hybrid_estimate(),
+                    sharded_est: e.sharded_estimate(),
+                    incumbent,
+                    hysteresis: self.cfg.hysteresis,
+                    bucket: None,
+                }
+            }
         };
-        e.last_choice = Some(choice);
-        choice
+        e.last_choice = Some(explain.choice);
+        explain
+    }
+
+    /// A read-only [`DecisionExplain`] for a resolution the scheduler
+    /// did *not* make: the lane was forced by a rules-table entry, but
+    /// the `resolve` span still wants the payload — what the histories
+    /// would have predicted, and which incumbent the rule overrode.
+    /// Reads the same granularity the ladder would have run on (the
+    /// size bucket when bucketing is on and `items` is known, else the
+    /// all-sizes history) without touching `last_choice`: a forced run
+    /// is not a scheduler decision and must not seed hysteresis.  The
+    /// reason is always `rule-forced`.
+    pub fn explain_forced(
+        &self,
+        method: &str,
+        choice: Choice,
+        items: Option<u64>,
+    ) -> DecisionExplain {
+        let h = self.histories.lock().unwrap();
+        let fresh = MethodHistory::default();
+        let e = h.get(method).unwrap_or(&fresh);
+        let (g, bucket): (&MethodHistory, Option<u32>) = match items {
+            Some(items) if self.cfg.size_buckets => {
+                let bucket = bucket_of(items);
+                (e.size_buckets.get(&bucket).unwrap_or(&fresh), Some(bucket))
+            }
+            _ => (e, None),
+        };
+        DecisionExplain {
+            choice,
+            reason: "rule-forced",
+            smp_est: g.smp_estimate(),
+            device_est: g.device_estimate(),
+            hybrid_est: g.hybrid_estimate(),
+            sharded_est: g.sharded_estimate(),
+            incumbent: g.last_choice,
+            hysteresis: self.cfg.hysteresis,
+            bucket,
+        }
     }
 
     /// Resolve `Target::Auto` for a method that supports hybrid
@@ -1016,7 +1164,14 @@ impl Scheduler {
     /// hysteresis factor.  A returned [`Choice::Hybrid`] carries the
     /// current learned split ratio.
     pub fn decide_hybrid(&self, method: &str) -> Choice {
-        self.decide_impl(method, None, Self::decide_history_hybrid)
+        self.decide_hybrid_explained(method, None).choice
+    }
+
+    /// [`Scheduler::decide_hybrid`] (or, with `items`,
+    /// [`Scheduler::decide_hybrid_sized`]) returning the full
+    /// [`DecisionExplain`] payload.
+    pub fn decide_hybrid_explained(&self, method: &str, items: Option<u64>) -> DecisionExplain {
+        self.decide_impl_explained(method, items, Self::decide_history_hybrid_explained)
     }
 
     /// [`Scheduler::decide_hybrid`] conditioned on input size — the
@@ -1024,7 +1179,7 @@ impl Scheduler {
     /// rung; a returned [`Choice::Hybrid`] carries the *bucket's* learned
     /// split ratio.
     pub fn decide_hybrid_sized(&self, method: &str, items: u64) -> Choice {
-        self.decide_impl(method, Some(items), Self::decide_history_hybrid)
+        self.decide_hybrid_explained(method, Some(items)).choice
     }
 
     /// Resolve `Target::Auto` for a co-execution-capable method over a
@@ -1037,24 +1192,45 @@ impl Scheduler {
     /// co-execution incumbent here, so a snapshot learned on a 1-device
     /// fleet does not forfeit its hysteresis when the fleet grows.
     pub fn decide_sharded(&self, method: &str, lanes: usize) -> Choice {
-        self.decide_impl(method, None, |cfg, e| Self::decide_history_sharded(cfg, e, lanes))
+        self.decide_sharded_explained(method, lanes, None).choice
+    }
+
+    /// [`Scheduler::decide_sharded`] (or, with `items`,
+    /// [`Scheduler::decide_sharded_sized`]) returning the full
+    /// [`DecisionExplain`] payload.
+    pub fn decide_sharded_explained(
+        &self,
+        method: &str,
+        lanes: usize,
+        items: Option<u64>,
+    ) -> DecisionExplain {
+        self.decide_impl_explained(method, items, |cfg, e| {
+            Self::decide_history_sharded_explained(cfg, e, lanes)
+        })
     }
 
     /// [`Scheduler::decide_sharded`] conditioned on input size — the
     /// per-bucket ladder of [`Scheduler::decide_sized`], with the sharded
     /// rung.
     pub fn decide_sharded_sized(&self, method: &str, lanes: usize, items: u64) -> Choice {
-        self.decide_impl(method, Some(items), |cfg, e| Self::decide_history_sharded(cfg, e, lanes))
+        self.decide_sharded_explained(method, lanes, Some(items)).choice
     }
 
     fn decide_history(cfg: &SchedulerConfig, e: &MethodHistory) -> Choice {
+        Self::decide_history_explained(cfg, e).0
+    }
+
+    fn decide_history_explained(
+        cfg: &SchedulerConfig,
+        e: &MethodHistory,
+    ) -> (Choice, &'static str) {
         // explore first: SMP is always applicable, measure it first, then
         // give the device its minimum samples
         if e.smp_secs.len() < cfg.min_samples {
-            return Choice::Smp;
+            return (Choice::Smp, "explore-smp");
         }
         if e.device_secs.len() < cfg.min_samples {
-            return Choice::Device;
+            return (Choice::Device, "explore-device");
         }
         let smp = e.smp_estimate().expect("smp samples present");
         let dev = e.device_estimate().expect("device samples present");
@@ -1063,16 +1239,16 @@ impl Scheduler {
             // challenger beats it by the configured factor
             Some(Choice::Smp) => {
                 if smp > dev * cfg.hysteresis {
-                    Choice::Device
+                    (Choice::Device, "hysteresis-flip")
                 } else {
-                    Choice::Smp
+                    (Choice::Smp, "incumbent-held")
                 }
             }
             Some(Choice::Device) => {
                 if dev > smp * cfg.hysteresis {
-                    Choice::Smp
+                    (Choice::Smp, "hysteresis-flip")
                 } else {
-                    Choice::Device
+                    (Choice::Device, "incumbent-held")
                 }
             }
             // a hybrid/sharded incumbent can only appear when the caller
@@ -1080,25 +1256,32 @@ impl Scheduler {
             // comparison
             Some(Choice::Hybrid { .. }) | Some(Choice::Sharded { .. }) | None => {
                 if dev < smp {
-                    Choice::Device
+                    (Choice::Device, "best-mean")
                 } else {
-                    Choice::Smp
+                    (Choice::Smp, "best-mean")
                 }
             }
         }
     }
 
     fn decide_history_hybrid(cfg: &SchedulerConfig, e: &MethodHistory) -> Choice {
+        Self::decide_history_hybrid_explained(cfg, e).0
+    }
+
+    fn decide_history_hybrid_explained(
+        cfg: &SchedulerConfig,
+        e: &MethodHistory,
+    ) -> (Choice, &'static str) {
         // exploration ladder: SMP → device → hybrid, each to min_samples
         if e.smp_secs.len() < cfg.min_samples {
-            return Choice::Smp;
+            return (Choice::Smp, "explore-smp");
         }
         if e.device_secs.len() < cfg.min_samples {
-            return Choice::Device;
+            return (Choice::Device, "explore-device");
         }
         let fraction = e.device_fraction.unwrap_or(DEFAULT_DEVICE_FRACTION);
         if e.hybrid_secs.len() < cfg.min_samples {
-            return Choice::Hybrid { device_fraction: fraction };
+            return (Choice::Hybrid { device_fraction: fraction }, "explore-hybrid");
         }
         let smp = e.smp_estimate().expect("smp samples present");
         let dev = e.device_estimate().expect("device samples present");
@@ -1127,12 +1310,12 @@ impl Scheduler {
                     other => other,
                 };
                 if cost(inc) > cost(best) * cfg.hysteresis {
-                    best
+                    (best, "hysteresis-flip")
                 } else {
-                    inc
+                    (inc, "incumbent-held")
                 }
             }
-            None => best,
+            None => (best, "best-mean"),
         }
     }
 
@@ -1143,14 +1326,22 @@ impl Scheduler {
     /// hybrid history (from 1-device snapshots) still costs the
     /// co-execution incumbent honestly.
     fn decide_history_sharded(cfg: &SchedulerConfig, e: &MethodHistory, lanes: usize) -> Choice {
+        Self::decide_history_sharded_explained(cfg, e, lanes).0
+    }
+
+    fn decide_history_sharded_explained(
+        cfg: &SchedulerConfig,
+        e: &MethodHistory,
+        lanes: usize,
+    ) -> (Choice, &'static str) {
         if e.smp_secs.len() < cfg.min_samples {
-            return Choice::Smp;
+            return (Choice::Smp, "explore-smp");
         }
         if e.device_secs.len() < cfg.min_samples {
-            return Choice::Device;
+            return (Choice::Device, "explore-device");
         }
         if e.sharded_secs.len() < cfg.min_samples {
-            return Choice::Sharded { lanes };
+            return (Choice::Sharded { lanes }, "explore-sharded");
         }
         let smp = e.smp_estimate().expect("smp samples present");
         let dev = e.device_estimate().expect("device samples present");
@@ -1178,12 +1369,12 @@ impl Scheduler {
                     other => other,
                 };
                 if cost(inc) > cost(best) * cfg.hysteresis {
-                    best
+                    (best, "hysteresis-flip")
                 } else {
-                    inc
+                    (inc, "incumbent-held")
                 }
             }
-            None => best,
+            None => (best, "best-mean"),
         }
     }
 
@@ -1302,6 +1493,7 @@ impl Scheduler {
         m.insert("smp_items_per_sec".to_string(), arr(&e.smp_items_per_sec));
         m.insert("device_items_per_sec".to_string(), arr(&e.device_items_per_sec));
         m.insert("sharded_secs".to_string(), arr(&e.sharded_secs));
+        m.insert("device_queue_wait_secs".to_string(), arr(&e.device_queue_wait_secs));
         m.insert(
             "device_lane_items_per_sec".to_string(),
             Json::Arr(e.device_lane_items_per_sec.iter().map(|w| arr(w)).collect()),
@@ -1485,6 +1677,8 @@ impl Scheduler {
             smp_items_per_sec: secs_opt("smp_items_per_sec")?,
             device_items_per_sec: secs_opt("device_items_per_sec")?,
             sharded_secs: secs_opt("sharded_secs")?,
+            // observability PR field: absent in older snapshots
+            device_queue_wait_secs: secs_opt("device_queue_wait_secs")?,
             device_lane_items_per_sec,
             smp_runs: num("smp_runs"),
             device_runs: num("device_runs"),

@@ -1,0 +1,510 @@
+//! Observability suite (tentpole of the observability PR):
+//!
+//! * span trees are **well-formed** across every lane the engine can
+//!   take — pure SMP, forced whole-device, forced hybrid co-execution,
+//!   N-way fleet sharding, fused pipelines and batched serve dispatches:
+//!   exactly one root per trace, no dangling parent ids, every child
+//!   interval contained in its parent's;
+//! * disabled tracing records nothing (the production fast-path), and
+//!   the bounded ring evicts the **oldest whole traces** first;
+//! * the Chrome-trace export parses as JSON and carries the span
+//!   payloads; the Prometheus exposition round-trips through a tiny
+//!   text parser and agrees with the serve-metrics counters;
+//! * the acceptance path: a forced-hybrid invocation's trace carries a
+//!   `resolve` span with the decision-explain payload (`rule-forced`)
+//!   and two nested lane-execute spans whose transfer-byte fields match
+//!   the run's [`DeviceStats`], with the device-master queue wait
+//!   surfaced as a span field, a scheduler-history window and a hub
+//!   gauge.
+//!
+//! CI runs this suite under both `XLA_FUSE=off` and `XLA_FUSE=on`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use somd::backend::{Executed, HeteroMethod};
+use somd::bench_suite::crypt::{self, BLOCK_BYTES};
+use somd::bench_suite::gpu;
+use somd::bench_suite::hybrid;
+use somd::bench_suite::pipeline::crypt_stage;
+use somd::bench_suite::serve::vecadd_batched;
+use somd::obs::{FieldValue, Trace, TraceFormat, TraceRecorder};
+use somd::runtime::{HostTensor, Registry};
+use somd::serve::{AdmissionPolicy, Service, ServiceConfig};
+use somd::somd::partition::{Block1D, BlockPart};
+use somd::somd::reduction::Assemble;
+use somd::somd::{Engine, ExecutionPlan, Rules, Scheduler, SchedulerConfig, SomdMethod, Target};
+use somd::util::json::Json;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn reg() -> Registry {
+    Registry::load(artifacts_dir()).expect("artifacts present")
+}
+
+/// A plain SMP-only method for trace-shape tests.
+fn doubler() -> HeteroMethod<Vec<u64>, BlockPart, (), Vec<u64>> {
+    HeteroMethod::smp_only(SomdMethod::new(
+        "Obs.double",
+        |v: &Vec<u64>, n| Block1D::new().ranges(v.len(), n),
+        |_, _| (),
+        |v, p, _, _| p.own.iter().map(|i| v[i] * 2).collect::<Vec<u64>>(),
+        Assemble,
+    ))
+}
+
+/// An engine with `method` rule-forced to `target`, a scheduler that
+/// never starves small device shares, tracing on, and the given fleet.
+fn forced_engine(method: &str, target: Target, profiles: &[&str]) -> Engine {
+    let mut rules = Rules::empty();
+    rules.set(method, target);
+    let e = Engine::with_rules(2, rules)
+        .with_scheduler(Scheduler::new(SchedulerConfig {
+            min_device_items: 1,
+            ..Default::default()
+        }))
+        .with_tracer(TraceRecorder::new(true, 16));
+    match profiles {
+        [one] => e.with_device_master(artifacts_dir(), one).expect("device master starts"),
+        many => e.with_device_fleet(artifacts_dir(), many).expect("device fleet starts"),
+    }
+}
+
+/// Exactly one root, no dangling parents, child intervals contained in
+/// their parents', every span stamped with the trace's id.
+fn assert_well_formed(t: &Trace) {
+    let shape: Vec<_> = t.spans.iter().map(|s| (s.name, s.id, s.parent)).collect();
+    assert_eq!(t.roots().len(), 1, "trace {} must have one root: {shape:?}", t.trace_id);
+    for s in &t.spans {
+        assert_eq!(s.trace_id, t.trace_id, "span {} carries a foreign trace id", s.name);
+        assert!(s.end_ns >= s.start_ns, "span {} ends before it starts", s.name);
+        if let Some(p) = s.parent {
+            let parent = t
+                .spans
+                .iter()
+                .find(|x| x.id == p)
+                .unwrap_or_else(|| panic!("span {} has dangling parent {p}: {shape:?}", s.name));
+            assert!(
+                parent.start_ns <= s.start_ns && s.end_ns <= parent.end_ns,
+                "child {} [{}, {}] escapes parent {} [{}, {}]",
+                s.name,
+                s.start_ns,
+                s.end_ns,
+                parent.name,
+                parent.start_ns,
+                parent.end_ns
+            );
+        }
+    }
+}
+
+fn str_field<'a>(t: &'a Trace, name: &str, key: &str) -> &'a str {
+    match t.find(name).unwrap_or_else(|| panic!("span {name} missing")).field(key) {
+        Some(FieldValue::Str(s)) => s,
+        other => panic!("span {name} field {key}: expected string, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fast path + ring behavior
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_tracing_records_no_spans() {
+    let engine = Engine::new(2).with_tracer(TraceRecorder::new(false, 8));
+    let m = Arc::new(doubler());
+    let input = Arc::new((0..4096u64).collect::<Vec<u64>>());
+    for _ in 0..3 {
+        let (out, _) = engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+        assert_eq!(out[3], 6);
+    }
+    assert_eq!(engine.tracer().trace_count(), 0);
+    assert_eq!(engine.tracer().span_count(), 0);
+    let doc = Json::parse(&engine.export_trace(TraceFormat::Chrome)).unwrap();
+    assert_eq!(doc.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 0);
+
+    // the flag is runtime-togglable: flip on, record, flip off, frozen
+    engine.tracer().set_enabled(true);
+    engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+    assert_eq!(engine.tracer().trace_count(), 1);
+    engine.tracer().set_enabled(false);
+    engine.submit_hetero(m, input).join().unwrap();
+    assert_eq!(engine.tracer().trace_count(), 1);
+}
+
+#[test]
+fn ring_cap_evicts_oldest_whole_traces() {
+    let engine = Engine::new(2).with_tracer(TraceRecorder::new(true, 2));
+    assert_eq!(engine.tracer().cap(), 2);
+    let m = Arc::new(doubler());
+    let input = Arc::new((0..512u64).collect::<Vec<u64>>());
+    let mut seen: Vec<u64> = Vec::new();
+    for _ in 0..6 {
+        engine.submit_hetero(m.clone(), input.clone()).join().unwrap();
+        for t in engine.tracer().traces() {
+            if !seen.contains(&t.trace_id) {
+                seen.push(t.trace_id);
+            }
+        }
+    }
+    assert_eq!(seen.len(), 6, "every invocation opened its own trace");
+    let kept = engine.tracer().traces();
+    assert_eq!(engine.tracer().trace_count(), 2);
+    let kept_ids: Vec<u64> = kept.iter().map(|t| t.trace_id).collect();
+    assert_eq!(kept_ids, seen[4..], "the ring keeps the newest traces, evicting oldest first");
+    // whole traces survive eviction — the retained ones are intact
+    for t in &kept {
+        assert_well_formed(t);
+        assert!(t.find("lane.smp").is_some());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span trees per lane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn smp_trace_has_resolve_and_lane_spans() {
+    let engine = Engine::new(2).with_tracer(TraceRecorder::new(true, 8));
+    let m = Arc::new(doubler());
+    let input = Arc::new((0..2048u64).collect::<Vec<u64>>());
+    engine.submit_hetero(m, input).join().unwrap();
+    let traces = engine.tracer().traces();
+    assert_eq!(traces.len(), 1);
+    let t = &traces[0];
+    assert_well_formed(t);
+    let root = t.roots()[0];
+    assert_eq!(root.name, "invoke");
+    assert_eq!(str_field(t, "invoke", "method"), "Obs.double");
+    assert_eq!(str_field(t, "resolve", "target"), "smp");
+    let smp = t.find("lane.smp").expect("lane.smp span");
+    assert_eq!(smp.parent, Some(root.id));
+    assert!(smp.field("execute_secs").is_some());
+    assert!(matches!(smp.field("partitions"), Some(FieldValue::U64(n)) if *n >= 1));
+}
+
+#[test]
+fn forced_device_trace_matches_device_stats_and_queue_wait() {
+    let engine = forced_engine("VecAdd.add", Target::Device("fermi".to_string()), &["fermi"]);
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let input = Arc::new((vec![1.5f32; elems], vec![2.25f32; elems]));
+    let (out, how) = engine.submit_hetero(m, input).join().unwrap();
+    assert!(out.iter().all(|&v| v == 3.75));
+    let stats = match how {
+        Executed::Device { stats, .. } => stats,
+        other => panic!("forced device must offload, got {other:?}"),
+    };
+    let traces = engine.tracer().traces();
+    assert_eq!(traces.len(), 1);
+    let t = &traces[0];
+    assert_well_formed(t);
+    assert_eq!(str_field(t, "resolve", "target"), "device");
+    assert_eq!(str_field(t, "resolve", "choice"), "device");
+    assert_eq!(str_field(t, "resolve", "reason"), "rule-forced");
+    let dev = t.find("lane.device").expect("lane.device span");
+    assert_eq!(dev.parent, Some(t.roots()[0].id));
+    assert_eq!(dev.field("bytes_h2d"), Some(&FieldValue::U64(stats.bytes_h2d as u64)));
+    assert_eq!(dev.field("bytes_d2h"), Some(&FieldValue::U64(stats.bytes_d2h as u64)));
+    assert_eq!(dev.field("launches"), Some(&FieldValue::U64(stats.launches as u64)));
+    assert!(matches!(dev.field("queue_wait_secs"), Some(FieldValue::F64(w)) if *w >= 0.0));
+
+    // the queue wait also reaches the scheduler history and a hub gauge
+    let h = engine.scheduler().history("VecAdd.add").expect("history");
+    assert!(!h.device_queue_wait_secs.is_empty(), "queue wait recorded in the history window");
+    let snap = engine.metrics_snapshot();
+    assert!(snap.gauges.contains_key("somd_device_queue_wait_seconds"));
+}
+
+/// The acceptance path: forced hybrid → one trace whose `resolve` span
+/// carries the decision-explain payload and whose two lane-execute
+/// children's transfer-byte fields match the run's [`DeviceStats`] —
+/// in the live trace and through the Chrome export.
+#[test]
+fn forced_hybrid_trace_carries_decision_explain_and_lane_bytes() {
+    let engine = forced_engine("VecAdd.add", Target::Hybrid, &["fermi"]);
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let input = Arc::new((vec![1.5f32; elems], vec![2.25f32; elems]));
+    let (out, how) = engine.submit_hetero(m, input).join().unwrap();
+    assert!(out.iter().all(|&v| v == 3.75));
+    let stats = match how {
+        Executed::Hybrid { stats, .. } => stats,
+        other => panic!("forced hybrid must co-execute, got {other:?}"),
+    };
+
+    let traces = engine.tracer().traces();
+    assert_eq!(traces.len(), 1);
+    let t = &traces[0];
+    assert_well_formed(t);
+    let root = t.roots()[0];
+    assert_eq!(root.name, "invoke");
+
+    // decision-explain payload on the resolve span, even though the
+    // lane came from the rules table
+    assert_eq!(str_field(t, "resolve", "target"), "hybrid");
+    assert_eq!(str_field(t, "resolve", "choice"), "hybrid");
+    assert_eq!(str_field(t, "resolve", "reason"), "rule-forced");
+    assert!(t.find("resolve").unwrap().field("hysteresis").is_some());
+
+    // the fork: partition → two nested lane-execute spans → merge
+    let part = t.find("partition").expect("partition span");
+    assert!(
+        matches!(part.field("device_fraction"), Some(FieldValue::F64(f)) if (0.0..=1.0).contains(f))
+    );
+    let smp = t.find("lane.smp").expect("lane.smp span");
+    let dev = t.find("lane.device").expect("lane.device span");
+    assert_eq!(smp.parent, Some(root.id));
+    assert_eq!(dev.parent, Some(root.id));
+    assert_eq!(dev.field("bytes_h2d"), Some(&FieldValue::U64(stats.bytes_h2d as u64)));
+    assert_eq!(dev.field("bytes_d2h"), Some(&FieldValue::U64(stats.bytes_d2h as u64)));
+    assert!(matches!(dev.field("queue_wait_secs"), Some(FieldValue::F64(w)) if *w >= 0.0));
+    assert_eq!(str_field(t, "merge", "outcome"), "merged");
+
+    // the exported Chrome trace tells the same story
+    let doc = Json::parse(&engine.export_trace(TraceFormat::Chrome)).expect("valid JSON");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    let by_name = |n: &str| {
+        events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some(n))
+            .unwrap_or_else(|| panic!("no {n} event in the Chrome export"))
+    };
+    let resolve = by_name("resolve");
+    assert_eq!(
+        resolve.get("args").and_then(|a| a.get("reason")).and_then(Json::as_str),
+        Some("rule-forced")
+    );
+    let dev_ev = by_name("lane.device");
+    assert_eq!(
+        dev_ev.get("args").and_then(|a| a.get("bytes_h2d")).and_then(Json::as_f64),
+        Some(stats.bytes_h2d as f64)
+    );
+    assert_eq!(
+        dev_ev.get("args").and_then(|a| a.get("bytes_d2h")).and_then(Json::as_f64),
+        Some(stats.bytes_d2h as f64)
+    );
+    by_name("lane.smp");
+
+    let h = engine.scheduler().history("VecAdd.add").expect("history");
+    assert!(!h.device_queue_wait_secs.is_empty());
+}
+
+#[test]
+fn sharded_trace_nests_every_fleet_lane_under_one_root() {
+    let engine = forced_engine("VecAdd.add", Target::Sharded, &["fermi", "geforce320m"]);
+    let reg = reg();
+    let elems = reg.info("vecadd").unwrap().inputs[0].elems();
+    let m = Arc::new(hybrid::vecadd_hybrid());
+    let input = Arc::new((vec![1.5f32; elems], vec![2.25f32; elems]));
+    let (out, how) = engine.submit_hetero(m, input).join().unwrap();
+    assert!(out.iter().all(|&v| v == 3.75));
+    assert!(matches!(how, Executed::Sharded { .. }), "forced shard must fan out, got {how:?}");
+
+    let traces = engine.tracer().traces();
+    assert_eq!(traces.len(), 1);
+    let t = &traces[0];
+    assert_well_formed(t);
+    let root = t.roots()[0];
+    assert_eq!(str_field(t, "resolve", "choice"), "sharded");
+    assert_eq!(str_field(t, "resolve", "reason"), "rule-forced");
+    let part = t.find("partition").expect("partition span");
+    assert_eq!(part.field("lanes"), Some(&FieldValue::U64(2)));
+    let devs = t.find_all("lane.device");
+    assert_eq!(devs.len(), 2, "one lane.device span per fleet lane");
+    let mut lanes: Vec<u64> = devs
+        .iter()
+        .map(|d| {
+            assert_eq!(d.parent, Some(root.id));
+            match d.field("lane") {
+                Some(FieldValue::U64(i)) => *i,
+                other => panic!("lane.device missing lane index: {other:?}"),
+            }
+        })
+        .collect();
+    lanes.sort_unstable();
+    assert_eq!(lanes, [0, 1]);
+    assert!(t.find("lane.smp").is_some());
+    assert_eq!(str_field(t, "merge", "outcome"), "merged");
+}
+
+#[test]
+fn pipeline_trace_groups_stage_spans_under_the_run() {
+    let engine = Engine::new(2).with_tracer(TraceRecorder::new(true, 16));
+    let registry = reg();
+    let p = crypt::Problem::generate(64 * BLOCK_BYTES, 7);
+    let plan = ExecutionPlan::new()
+        .stage("PipeCrypt.encrypt", crypt_stage(p.ekeys))
+        .stage("PipeCrypt.decrypt", crypt_stage(p.dkeys));
+    let input = HostTensor::mat_u32(gpu::pack_words(&p.data), p.data.len() / BLOCK_BYTES, 4);
+    let rep = plan.run(&engine, &registry, vec![input.clone()], true).unwrap();
+    assert_eq!(rep.outputs[0], input, "decrypt(encrypt(x)) == x");
+
+    let traces = engine.tracer().traces();
+    let t = traces
+        .iter()
+        .find(|t| t.roots().len() == 1 && t.roots()[0].name == "pipeline.run")
+        .expect("a pipeline.run trace");
+    assert_well_formed(t);
+    let root = t.roots()[0];
+    assert_eq!(root.field("stages"), Some(&FieldValue::U64(2)));
+    assert_eq!(str_field(t, "pipeline.run", "mode"), "fused");
+    let stages = t.find_all("pipeline.stage");
+    assert_eq!(stages.len(), 2);
+    for s in &stages {
+        assert_eq!(s.parent, Some(root.id));
+        assert!(s.field("lane").is_some());
+        assert!(s.field("stage_secs").is_some());
+    }
+    let names: Vec<&str> = stages
+        .iter()
+        .map(|s| match s.field("stage") {
+            Some(FieldValue::Str(n)) => n.as_str(),
+            other => panic!("stage span without a name: {other:?}"),
+        })
+        .collect();
+    assert!(names.contains(&"PipeCrypt.encrypt") && names.contains(&"PipeCrypt.decrypt"));
+    // every other trace the stage lanes opened must also be well-formed
+    for t in &traces {
+        assert_well_formed(t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving layer: batch dispatch spans + Prometheus exposition
+// ---------------------------------------------------------------------------
+
+/// A service config that coalesces aggressively, so every request
+/// submitted together lands in one batch deterministically.
+fn coalescing_cfg(delay_ms: u64) -> ServiceConfig {
+    ServiceConfig {
+        max_batch_items: 1 << 20,
+        max_batch_delay: Duration::from_millis(delay_ms),
+        queue_depth: 1024,
+        admission: AdmissionPolicy::Block,
+        sched_snapshot: None,
+    }
+}
+
+/// Tiny Prometheus text-format parser: `# TYPE` lines register a family
+/// kind; sample lines are `name[{labels}] value`.  Returns the samples
+/// and the family kinds, panicking on any line that does not round-trip.
+fn parse_prometheus(text: &str) -> (BTreeMap<String, f64>, BTreeMap<String, String>) {
+    let mut series = BTreeMap::new();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let fam = it.next().expect("family name");
+            let kind = it.next().expect("family kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "summary"),
+                "unknown family kind in {line:?}"
+            );
+            assert!(it.next().is_none(), "trailing tokens in {line:?}");
+            types.insert(fam.to_string(), kind.to_string());
+            continue;
+        }
+        assert!(!line.starts_with('#'), "only TYPE comments are emitted: {line:?}");
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("unparsable value in {line:?}"));
+        // every sample's family must have been typed first (summaries
+        // share their family's TYPE line via the `_count` suffix)
+        let fam = name.split('{').next().unwrap();
+        let fam = if types.contains_key(fam) {
+            fam
+        } else {
+            fam.strip_suffix("_count")
+                .filter(|f| types.contains_key(*f))
+                .unwrap_or_else(|| panic!("sample {name} has no TYPE line"))
+        };
+        assert!(types.contains_key(fam));
+        series.insert(name.to_string(), v);
+    }
+    (series, types)
+}
+
+#[test]
+fn batched_dispatch_traces_and_prometheus_text_round_trip() {
+    let service = Service::with_config(
+        Engine::new(2).with_tracer(TraceRecorder::new(true, 8)),
+        coalescing_cfg(250),
+    );
+    let method = Arc::new(vecadd_batched());
+    let client = service.register(method).expect("register vecadd");
+    let sizes = [700usize, 33, 1024];
+    let tickets: Vec<_> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let a: Vec<f32> = (0..n).map(|j| (i + j) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|j| (2 * j) as f32).collect();
+            client.submit(Arc::new((a, b))).expect("admitted")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("request served");
+    }
+
+    // one batch → one trace rooted at the dispatch span, the fused
+    // invocation nested inside it
+    let traces = service.engine().tracer().traces();
+    assert_eq!(traces.len(), 1, "coalesced submissions share one stitched trace");
+    let t = &traces[0];
+    assert_well_formed(t);
+    let root = t.roots()[0];
+    assert_eq!(root.name, "serve.batch");
+    assert_eq!(str_field(t, "serve.batch", "method"), "VecAdd.add");
+    assert_eq!(root.field("requests"), Some(&FieldValue::U64(sizes.len() as u64)));
+    assert_eq!(
+        root.field("span_items"),
+        Some(&FieldValue::U64(sizes.iter().sum::<usize>() as u64))
+    );
+    assert_eq!(str_field(t, "serve.batch", "outcome"), "ok");
+    let invoke = t.find("invoke").expect("fused invocation span");
+    assert_eq!(invoke.parent, Some(root.id));
+    assert!(t.find("lane.smp").is_some());
+
+    // the exposition round-trips and agrees with the serve counters
+    let text = service.metrics_text();
+    let (series, types) = parse_prometheus(&text);
+    let m = service.metrics();
+    assert_eq!(series["somd_serve_submitted_total"], m.submitted as f64);
+    assert_eq!(series["somd_serve_completed_total"], m.completed as f64);
+    assert_eq!(series["somd_serve_batches_total"], 1.0);
+    assert_eq!(series["somd_serve_items_total"], sizes.iter().sum::<usize>() as f64);
+    assert_eq!(types["somd_serve_submitted_total"], "counter");
+    assert_eq!(types["somd_serve_max_batch_requests"], "gauge");
+    // the engine's own hub series flow through the same exposition
+    assert_eq!(
+        series["somd_invocations_total{method=\"VecAdd.add\",lane=\"smp\"}"],
+        1.0,
+        "the fused dispatch is one engine invocation"
+    );
+}
+
+#[test]
+fn jsonl_export_emits_one_parsable_object_per_span() {
+    let engine = Engine::new(2).with_tracer(TraceRecorder::new(true, 8));
+    let m = Arc::new(doubler());
+    let input = Arc::new((0..1024u64).collect::<Vec<u64>>());
+    engine.submit_hetero(m, input).join().unwrap();
+    let text = engine.export_trace(TraceFormat::Jsonl);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), engine.tracer().span_count());
+    for line in lines {
+        let o = Json::parse(line).expect("every JSONL line parses");
+        assert!(o.get("name").and_then(Json::as_str).is_some());
+        assert!(o.get("trace").and_then(Json::as_f64).is_some());
+        assert!(o.get("start_ns").and_then(Json::as_f64).is_some());
+        assert!(o.get("end_ns").and_then(Json::as_f64).is_some());
+    }
+}
