@@ -2,7 +2,7 @@
 
 ARTIFACT_SCALE ?= 0.02
 
-.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-cluster bench-serve bench-pipeline bench-obs
+.PHONY: artifacts check check-interp check-sched test docs bench-auto bench-interp bench-hybrid bench-fleet bench-cluster bench-serve bench-qos bench-pipeline bench-obs
 
 # The one-stop gate: build everything (library, binaries, benches AND
 # examples), run both test suites, then the docs checks.
@@ -72,6 +72,16 @@ bench-cluster:
 bench-serve:
 	cd rust && cargo test --release --test serve_batching
 	cd rust && cargo run --release -- bench serve --check
+
+# multi-tenant QoS: priority/cancellation/property suites, then the
+# scenario matrix with the priority/quota/cancellation gates (writes
+# rust/BENCH_serve.json), the out-of-process schema + non-vacuity
+# check, and the three QoS figures (writes figures/*.svg)
+bench-qos:
+	cd rust && cargo test --release --test serve_qos --test serve_cancel --test proptest_qos
+	cd rust && cargo run --release -- bench serve --check
+	python3 scripts/collect_results.py --check rust/BENCH_serve.json
+	python3 scripts/generate_figures.py rust/BENCH_serve.json --out-dir figures
 
 # method pipelines: bitwise fused-vs-roundtrip suite under BOTH fusion
 # schedules, then the fused report with the not-slower + provably

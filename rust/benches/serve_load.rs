@@ -1,14 +1,17 @@
-//! Serving-layer load baseline: open-loop arrival sweep through the
-//! micro-batching service, batched vs unbatched rows, emitting
-//! `BENCH_serve.json` (p50/p95/p99 latency + throughput + batch
-//! occupancy per row).
+//! Serving-layer load + QoS baseline: the open-loop arrival sweep
+//! (batched vs unbatched rows), then the multi-tenant QoS scenario
+//! matrix (priority under saturation, quota protection, cancellation
+//! relief), emitting the `serve_qos/v1` `BENCH_serve.json`.
 //!
 //! `cargo bench --bench serve_load [-- --requests N --clients C --elems E --workers W --out FILE --tol T --smoke --check]`
 //!
 //! Also available as `somd bench serve`; `--check` exits nonzero when
 //! batched throughput loses to unbatched (within `--tol`) at the
-//! highest arrival rate, or when the batched row is vacuous (mean batch
-//! < 2 requests) — the CI gate.
+//! highest arrival rate, when the batched row is vacuous (mean batch
+//! < 2 requests), or when any QoS gate fails — Interactive p99 must
+//! beat Batch p99 under saturation, quotas must hold in-quota tenant
+//! goodput within 10% of isolated, and cancelling half the queued
+//! requests must raise survivor goodput — the CI gate.
 
 use somd::bench_suite::serve;
 use somd::util::cli::Args;
@@ -25,7 +28,7 @@ fn main() {
     let tol = args.opt_f64("tol", 1.10);
     let rates: Vec<f64> = if smoke { vec![2000.0, 0.0] } else { vec![1000.0, 4000.0, 0.0] };
     let sweep = serve::SweepSpec { rates, requests, clients, elems, workers };
-    if let Err(e) = serve::report(&sweep, out, args.flag("check"), tol) {
+    if let Err(e) = serve::report(&sweep, out, args.flag("check"), tol, smoke) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

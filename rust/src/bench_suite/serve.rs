@@ -15,13 +15,23 @@
 //!   [`Service`], measuring per-request latency from the request's
 //!   *scheduled* arrival to batch completion (so coordinated omission
 //!   cannot flatter the percentiles), and [`report`] sweeps arrival
-//!   rates in batched vs unbatched mode, emitting `BENCH_serve.json`.
+//!   rates in batched vs unbatched mode.
+//! * **The QoS scenario matrix** — [`run_qos`] drives multiple tenant
+//!   streams ([`TenantLoad`]: arrival rate, class mix, deadline,
+//!   cancellation pattern) into one service and reports per-class and
+//!   per-tenant outcomes; [`report`] crosses tenant count × arrival
+//!   rate × input size × class mix, plus three *gated* saturation
+//!   scenarios (priority under overload, quota protection, cancellation
+//!   relief), emitting the combined `serve_qos/v1` `BENCH_serve.json`.
 //!
-//! With `check`, the report gates on the serving layer's reason to
-//! exist: at the highest arrival rate, batched throughput must be at
-//! least the unbatched throughput (within `tol`), and the batched row
-//! must be non-vacuous — a mean of ≥ 2 requests per executed batch.
-//! Schema documented in `docs/BENCHMARKS.md`.
+//! With `check`, the report gates on the serving layer's reasons to
+//! exist: batched throughput must be at least the unbatched throughput
+//! (within `tol`) at the highest arrival rate with a non-vacuous mean
+//! batch (≥ 2 requests); under saturation Interactive p99 must beat
+//! Batch p99 with at least one request shed; an in-quota tenant's
+//! goodput next to a greedy flooder must stay within 10% of its
+//! isolated goodput; and cancelling half the queued requests must raise
+//! survivor goodput.  Schema documented in `docs/BENCHMARKS.md`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -29,7 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{BatchSpec, HeteroMethod};
-use crate::serve::{AdmissionPolicy, Service, ServiceConfig};
+use crate::serve::{AdmissionPolicy, Class, Service, ServiceConfig, SubmitOpts};
 use crate::somd::partition::Block1D;
 use crate::somd::reduction::Assemble;
 use crate::somd::{BlockPart, Engine, SomdMethod};
@@ -221,7 +231,7 @@ pub fn run_load(batched: bool, spec: &LoadSpec) -> Result<ServeRow> {
             max_batch_delay: Duration::from_micros(1_000),
             queue_depth: spec.requests.max(1),
             admission: AdmissionPolicy::Block,
-            sched_snapshot: None,
+            ..ServiceConfig::default()
         }
     } else {
         ServiceConfig {
@@ -229,7 +239,7 @@ pub fn run_load(batched: bool, spec: &LoadSpec) -> Result<ServeRow> {
             max_batch_delay: Duration::ZERO,
             queue_depth: spec.requests.max(1),
             admission: AdmissionPolicy::Block,
-            sched_snapshot: None,
+            ..ServiceConfig::default()
         }
     };
     let service = Service::with_config(Engine::new(spec.workers), cfg);
@@ -335,13 +345,15 @@ pub fn run_load(batched: bool, spec: &LoadSpec) -> Result<ServeRow> {
     })
 }
 
-/// Render the sweep as the `BENCH_serve.json` schema (see
-/// `docs/BENCHMARKS.md`).
-pub fn to_json(rows: &[ServeRow]) -> Json {
+/// Render the combined report as the `serve_qos/v1` `BENCH_serve.json`
+/// schema (see `docs/BENCHMARKS.md`): the calibrated capacity, the
+/// baseline batched-vs-unbatched sweep, and the QoS scenario rows.
+pub fn to_json(capacity_rps: f64, baseline: &[ServeRow], scenarios: &[QosRow]) -> Json {
     use std::collections::BTreeMap;
     let mut top = BTreeMap::new();
-    top.insert("schema".to_string(), Json::Str("serve_load/v1".to_string()));
-    let arr: Vec<Json> = rows
+    top.insert("schema".to_string(), Json::Str("serve_qos/v1".to_string()));
+    top.insert("capacity_rps".to_string(), Json::Num(capacity_rps));
+    let arr: Vec<Json> = baseline
         .iter()
         .map(|r| {
             let mut m = BTreeMap::new();
@@ -364,7 +376,8 @@ pub fn to_json(rows: &[ServeRow]) -> Json {
             Json::Obj(m)
         })
         .collect();
-    top.insert("rows".to_string(), Json::Arr(arr));
+    top.insert("baseline".to_string(), Json::Arr(arr));
+    top.insert("scenarios".to_string(), Json::Arr(scenarios.iter().map(QosRow::to_json).collect()));
     Json::Obj(top)
 }
 
@@ -384,11 +397,696 @@ pub struct SweepSpec {
     pub workers: usize,
 }
 
-/// Run the arrival sweep (unbatched + batched row per rate), print the
-/// table, write `out_path`, and with `check` gate on batched throughput
-/// ≥ unbatched within `tol` at the highest rate — refusing vacuous rows
-/// (mean batch < 2 requests).
-pub fn report(sweep: &SweepSpec, out_path: &str, check: bool, tol: f64) -> Result<()> {
+// ---------------------------------------------------------------------------
+// QoS scenario matrix
+// ---------------------------------------------------------------------------
+
+/// Probabilistic class mix of one tenant's request stream (weights need
+/// not sum to 1; they are normalized at pick time).
+#[derive(Debug, Clone, Copy)]
+pub struct ClassMix {
+    /// Weight of [`Class::Interactive`].
+    pub interactive: f64,
+    /// Weight of [`Class::Batch`].
+    pub batch: f64,
+    /// Weight of [`Class::BestEffort`].
+    pub best_effort: f64,
+}
+
+impl ClassMix {
+    /// Everything latency-sensitive.
+    pub const INTERACTIVE_ONLY: ClassMix =
+        ClassMix { interactive: 1.0, batch: 0.0, best_effort: 0.0 };
+    /// Everything throughput traffic.
+    pub const BATCH_ONLY: ClassMix = ClassMix { interactive: 0.0, batch: 1.0, best_effort: 0.0 };
+    /// The saturation matrix's mixed stream: 40% interactive, 40% batch,
+    /// 20% best-effort.
+    pub const MIXED: ClassMix = ClassMix { interactive: 0.4, batch: 0.4, best_effort: 0.2 };
+
+    /// Draw one class per the weights.
+    pub fn pick(&self, rng: &mut Xorshift64) -> Class {
+        let total = self.interactive + self.batch + self.best_effort;
+        if total <= 0.0 {
+            return Class::Interactive;
+        }
+        let x = rng.f64() * total;
+        if x < self.interactive {
+            Class::Interactive
+        } else if x < self.interactive + self.batch {
+            Class::Batch
+        } else {
+            Class::BestEffort
+        }
+    }
+
+    /// Compact row label (`i40b40e20`).
+    pub fn label(&self) -> String {
+        format!(
+            "i{:.0}b{:.0}e{:.0}",
+            self.interactive * 100.0,
+            self.batch * 100.0,
+            self.best_effort * 100.0
+        )
+    }
+}
+
+/// One tenant's request stream within a [`QosScenario`].
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    /// Tenant identity carried in [`SubmitOpts`].
+    pub tenant: String,
+    /// Open-loop arrival rate for this tenant (0.0 = unthrottled).
+    pub arrival_hz: f64,
+    /// Requests this tenant fires.
+    pub requests: usize,
+    /// Class mix of the stream.
+    pub mix: ClassMix,
+    /// Relative deadline attached to every request (`None` = none).
+    pub deadline: Option<Duration>,
+    /// Cancel every k-th request immediately after submitting it
+    /// (0 = never) — the cancellation-relief scenario's knob.
+    pub cancel_every: usize,
+}
+
+/// One QoS scenario: several tenant streams into one freshly built
+/// service.
+#[derive(Debug, Clone)]
+pub struct QosScenario {
+    /// Row name in the report (`saturation-mix`, `quota-shared`, …).
+    pub name: String,
+    /// The tenant streams (one client thread each).
+    pub loads: Vec<TenantLoad>,
+    /// Elements per vecadd request.
+    pub elems: usize,
+    /// Engine workers.
+    pub workers: usize,
+    /// Admission depth of the method queue.
+    pub queue_depth: usize,
+    /// Full-queue policy.
+    pub admission: AdmissionPolicy,
+    /// Per-tenant pending cap (`None` = no quota).
+    pub tenant_quota: Option<usize>,
+    /// Batch cap in *requests* (`max_batch_items` = this × `elems`) —
+    /// kept small so dispatch order, not one giant batch, decides who
+    /// waits.
+    pub max_batch_requests: usize,
+    /// The queue's no-starvation bound.
+    pub aging_bound: Duration,
+}
+
+/// Per-class outcome of one scenario.
+#[derive(Debug, Clone)]
+pub struct ClassStat {
+    /// The class.
+    pub class: Class,
+    /// Submit attempts carrying this class.
+    pub offered: usize,
+    /// Requests of this class that completed.
+    pub completed: usize,
+    /// Median completion latency, milliseconds.
+    pub p50_ms: f64,
+    /// 95th-percentile latency, milliseconds.
+    pub p95_ms: f64,
+    /// 99th-percentile latency, milliseconds.
+    pub p99_ms: f64,
+    /// Completions per second of offered-load span.
+    pub goodput_rps: f64,
+}
+
+/// Per-tenant outcome of one scenario.
+#[derive(Debug, Clone)]
+pub struct TenantStat {
+    /// Tenant identity.
+    pub tenant: String,
+    /// Submit attempts by this tenant.
+    pub offered: usize,
+    /// This tenant's completed requests.
+    pub completed: usize,
+    /// Completions per second of this tenant's own offered-load span.
+    pub goodput_rps: f64,
+}
+
+/// One measured QoS scenario row.
+#[derive(Debug, Clone)]
+pub struct QosRow {
+    /// Scenario name.
+    pub name: String,
+    /// Tenant streams.
+    pub tenants: usize,
+    /// Total submit attempts across tenants.
+    pub requests: usize,
+    /// Elements per request.
+    pub elems: usize,
+    /// Engine workers.
+    pub workers: usize,
+    /// Admission depth.
+    pub queue_depth: usize,
+    /// `"block"` or `"reject"`.
+    pub admission: String,
+    /// Per-tenant pending cap (0 = none).
+    pub tenant_quota: usize,
+    /// Offered-load span in seconds (the goodput denominator: the
+    /// longest configured tenant stream, or the wall when every stream
+    /// is unthrottled).
+    pub span_s: f64,
+    /// First arrival → last completion, seconds.
+    pub wall_s: f64,
+    /// Completions per second of wall time.
+    pub throughput_rps: f64,
+    /// Completions per second of offered-load span — the survivor
+    /// goodput the cancellation gate compares.
+    pub goodput_rps: f64,
+    /// Mean requests per executed batch.
+    pub mean_batch: f64,
+    /// Fused batches executed.
+    pub batches: u64,
+    /// Requests admitted.
+    pub submitted: u64,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests turned away by admission control.
+    pub rejected: u64,
+    /// Requests turned away by the per-tenant quota.
+    pub quota_rejected: u64,
+    /// Queued requests shed for higher-class newcomers.
+    pub shed: u64,
+    /// Queued requests dropped past their deadline.
+    pub expired: u64,
+    /// Requests cancelled (queued + in-flight).
+    pub cancelled: u64,
+    /// The subset of `cancelled` dropped while still queued.
+    pub cancelled_queued: u64,
+    /// Per-class outcomes.
+    pub classes: Vec<ClassStat>,
+    /// Per-tenant outcomes.
+    pub tenants_detail: Vec<TenantStat>,
+}
+
+impl QosRow {
+    /// Per-class stat lookup (every row carries all three classes).
+    pub fn class(&self, class: Class) -> &ClassStat {
+        &self.classes[class.index()]
+    }
+
+    /// Sum of goodput over tenants whose name starts with `prefix`.
+    pub fn tenant_goodput(&self, prefix: &str) -> f64 {
+        self.tenants_detail
+            .iter()
+            .filter(|t| t.tenant.starts_with(prefix))
+            .map(|t| t.goodput_rps)
+            .sum()
+    }
+
+    /// This row as a `serve_qos/v1` scenario object.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("tenants".to_string(), Json::Num(self.tenants as f64));
+        m.insert("requests".to_string(), Json::Num(self.requests as f64));
+        m.insert("elems".to_string(), Json::Num(self.elems as f64));
+        m.insert("workers".to_string(), Json::Num(self.workers as f64));
+        m.insert("queue_depth".to_string(), Json::Num(self.queue_depth as f64));
+        m.insert("admission".to_string(), Json::Str(self.admission.clone()));
+        m.insert("tenant_quota".to_string(), Json::Num(self.tenant_quota as f64));
+        m.insert("span_s".to_string(), Json::Num(self.span_s));
+        m.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        m.insert("throughput_rps".to_string(), Json::Num(self.throughput_rps));
+        m.insert("goodput_rps".to_string(), Json::Num(self.goodput_rps));
+        m.insert("mean_batch".to_string(), Json::Num(self.mean_batch));
+        m.insert("batches".to_string(), Json::Num(self.batches as f64));
+        m.insert("submitted".to_string(), Json::Num(self.submitted as f64));
+        m.insert("completed".to_string(), Json::Num(self.completed as f64));
+        m.insert("rejected".to_string(), Json::Num(self.rejected as f64));
+        m.insert("quota_rejected".to_string(), Json::Num(self.quota_rejected as f64));
+        m.insert("shed".to_string(), Json::Num(self.shed as f64));
+        m.insert("expired".to_string(), Json::Num(self.expired as f64));
+        m.insert("cancelled".to_string(), Json::Num(self.cancelled as f64));
+        m.insert("cancelled_queued".to_string(), Json::Num(self.cancelled_queued as f64));
+        let classes: Vec<Json> = self
+            .classes
+            .iter()
+            .map(|c| {
+                let mut cm = BTreeMap::new();
+                cm.insert("class".to_string(), Json::Str(c.class.name().to_string()));
+                cm.insert("offered".to_string(), Json::Num(c.offered as f64));
+                cm.insert("completed".to_string(), Json::Num(c.completed as f64));
+                cm.insert("p50_ms".to_string(), Json::Num(c.p50_ms));
+                cm.insert("p95_ms".to_string(), Json::Num(c.p95_ms));
+                cm.insert("p99_ms".to_string(), Json::Num(c.p99_ms));
+                cm.insert("goodput_rps".to_string(), Json::Num(c.goodput_rps));
+                Json::Obj(cm)
+            })
+            .collect();
+        m.insert("classes".to_string(), Json::Arr(classes));
+        let tenants: Vec<Json> = self
+            .tenants_detail
+            .iter()
+            .map(|t| {
+                let mut tm = BTreeMap::new();
+                tm.insert("tenant".to_string(), Json::Str(t.tenant.clone()));
+                tm.insert("offered".to_string(), Json::Num(t.offered as f64));
+                tm.insert("completed".to_string(), Json::Num(t.completed as f64));
+                tm.insert("goodput_rps".to_string(), Json::Num(t.goodput_rps));
+                Json::Obj(tm)
+            })
+            .collect();
+        m.insert("tenants_detail".to_string(), Json::Arr(tenants));
+        Json::Obj(m)
+    }
+}
+
+/// What one tenant thread measured.
+struct TenantOut {
+    /// Completion latencies, seconds, per [`Class::index`].
+    lat: [Vec<f64>; 3],
+    /// Submit attempts per class.
+    offered: [usize; 3],
+    completed: usize,
+    /// This tenant's last completion, seconds since the run base.
+    last_completed_s: f64,
+    error: Option<String>,
+}
+
+/// Run one QoS scenario: one client thread per [`TenantLoad`], all into
+/// a fresh [`Service`] over vecadd.  Latency is measured from the
+/// request's scheduled arrival when the stream is throttled (open-loop,
+/// coordinated-omission-honest) and from the actual submit instant when
+/// unthrottled (where "scheduled at t=0" would only measure submission
+/// order, not queue treatment).
+pub fn run_qos(scn: &QosScenario) -> Result<QosRow> {
+    if scn.loads.is_empty() {
+        bail!("QoS scenario '{}' has no tenant loads", scn.name);
+    }
+    let cfg = ServiceConfig {
+        max_batch_items: scn.elems.saturating_mul(scn.max_batch_requests.max(1)).max(1),
+        max_batch_delay: Duration::from_micros(200),
+        queue_depth: scn.queue_depth,
+        admission: scn.admission,
+        tenant_quota: scn.tenant_quota,
+        aging_bound: scn.aging_bound,
+        sched_snapshot: None,
+    };
+    let service = Service::with_config(Engine::new(scn.workers), cfg);
+    let client = service.register(Arc::new(vecadd_batched())).map_err(|e| anyhow!("{e}"))?;
+    let base = Instant::now();
+
+    let mut outs: Vec<TenantOut> = Vec::with_capacity(scn.loads.len());
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(scn.loads.len());
+        for (ti, load) in scn.loads.iter().enumerate() {
+            let client = client.clone();
+            let elems = scn.elems;
+            handles.push(s.spawn(move || {
+                let mut rng =
+                    Xorshift64::new(SEED ^ (ti as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                let mut out = TenantOut {
+                    lat: [Vec::new(), Vec::new(), Vec::new()],
+                    offered: [0; 3],
+                    completed: 0,
+                    last_completed_s: 0.0,
+                    error: None,
+                };
+                let mut tickets = Vec::with_capacity(load.requests);
+                for i in 0..load.requests {
+                    let scheduled = if load.arrival_hz > 0.0 {
+                        base + Duration::from_secs_f64(i as f64 / load.arrival_hz)
+                    } else {
+                        base
+                    };
+                    let now = Instant::now();
+                    if scheduled > now {
+                        std::thread::sleep(scheduled - now);
+                    }
+                    let a: Vec<f32> = (0..elems).map(|_| f32::from(rng.u16()) / 256.0).collect();
+                    let b: Vec<f32> = (0..elems).map(|_| f32::from(rng.u16()) / 256.0).collect();
+                    let class = load.mix.pick(&mut rng);
+                    let mut opts = SubmitOpts::class(class).tenant(load.tenant.clone());
+                    if let Some(d) = load.deadline {
+                        opts = opts.deadline(d);
+                    }
+                    out.offered[class.index()] += 1;
+                    let t_ref = if load.arrival_hz > 0.0 { scheduled } else { Instant::now() };
+                    match client.submit_with(Arc::new((a, b)), opts) {
+                        Ok(t) => {
+                            if load.cancel_every > 0 && (i + 1) % load.cancel_every == 0 {
+                                t.cancel();
+                            }
+                            tickets.push((class, t_ref, t));
+                        }
+                        // rejected / over-quota / shed outcomes are
+                        // counted by the service metrics
+                        Err(_) => {}
+                    }
+                }
+                for (class, t_ref, t) in tickets {
+                    match t.wait() {
+                        Ok(o) => {
+                            out.lat[class.index()].push(
+                                o.completed_at.saturating_duration_since(t_ref).as_secs_f64(),
+                            );
+                            out.completed += 1;
+                            let at = o.completed_at.saturating_duration_since(base).as_secs_f64();
+                            if at > out.last_completed_s {
+                                out.last_completed_s = at;
+                            }
+                        }
+                        Err(crate::serve::ServeError::Failed(msg)) => {
+                            out.error = Some(msg);
+                        }
+                        // cancelled / expired / shed: the service
+                        // metrics keep these distinguishable
+                        Err(_) => {}
+                    }
+                }
+                out
+            }));
+        }
+        for h in handles {
+            outs.push(h.join().expect("qos tenant thread"));
+        }
+    });
+    service.drain();
+    let m = service.metrics();
+    for out in &outs {
+        if let Some(msg) = &out.error {
+            bail!("scenario '{}': request failed: {msg}", scn.name);
+        }
+    }
+    if m.failed > 0 {
+        bail!("scenario '{}': {} request(s) failed", scn.name, m.failed);
+    }
+
+    let wall_s = outs.iter().map(|o| o.last_completed_s).fold(0.0, f64::max);
+    let mut span_s = 0.0f64;
+    for l in &scn.loads {
+        if l.arrival_hz > 0.0 {
+            span_s = span_s.max(l.requests as f64 / l.arrival_hz);
+        }
+    }
+    if span_s == 0.0 {
+        span_s = wall_s;
+    }
+    let span_div = span_s.max(1e-9);
+
+    let classes: Vec<ClassStat> = Class::ALL
+        .iter()
+        .map(|&class| {
+            let i = class.index();
+            let lat: Vec<f64> = outs.iter().flat_map(|o| o.lat[i].iter().copied()).collect();
+            let offered: usize = outs.iter().map(|o| o.offered[i]).sum();
+            let p = if lat.is_empty() { None } else { Some(percentiles(&lat)) };
+            ClassStat {
+                class,
+                offered,
+                completed: lat.len(),
+                p50_ms: p.as_ref().map_or(0.0, |p| p.p50 * 1e3),
+                p95_ms: p.as_ref().map_or(0.0, |p| p.p95 * 1e3),
+                p99_ms: p.as_ref().map_or(0.0, |p| p.p99 * 1e3),
+                goodput_rps: lat.len() as f64 / span_div,
+            }
+        })
+        .collect();
+    let tenants_detail: Vec<TenantStat> = scn
+        .loads
+        .iter()
+        .zip(&outs)
+        .map(|(l, o)| {
+            let tenant_span = if l.arrival_hz > 0.0 {
+                l.requests as f64 / l.arrival_hz
+            } else {
+                wall_s
+            };
+            TenantStat {
+                tenant: l.tenant.clone(),
+                offered: o.offered.iter().sum(),
+                completed: o.completed,
+                goodput_rps: o.completed as f64 / tenant_span.max(1e-9),
+            }
+        })
+        .collect();
+    let completed_total: usize = outs.iter().map(|o| o.completed).sum();
+
+    Ok(QosRow {
+        name: scn.name.clone(),
+        tenants: scn.loads.len(),
+        requests: scn.loads.iter().map(|l| l.requests).sum(),
+        elems: scn.elems,
+        workers: scn.workers,
+        queue_depth: scn.queue_depth,
+        admission: match scn.admission {
+            AdmissionPolicy::Block => "block".to_string(),
+            AdmissionPolicy::Reject => "reject".to_string(),
+        },
+        tenant_quota: scn.tenant_quota.unwrap_or(0),
+        span_s,
+        wall_s,
+        throughput_rps: completed_total as f64 / wall_s.max(1e-9),
+        goodput_rps: completed_total as f64 / span_div,
+        mean_batch: m.mean_batch_requests(),
+        batches: m.batches,
+        submitted: m.submitted,
+        completed: m.completed,
+        rejected: m.rejected,
+        quota_rejected: m.quota_rejected,
+        shed: m.shed,
+        expired: m.expired,
+        cancelled: m.cancelled,
+        cancelled_queued: m.cancelled_queued,
+        classes,
+        tenants_detail,
+    })
+}
+
+/// The scenario list of one report: the ungated tenant-count × arrival
+/// rate × input size × class-mix matrix, then the three gated
+/// saturation scenarios.  `cap` is the calibrated single-tenant
+/// unthrottled capacity at `elems` = 512 under the same batch shape.
+fn qos_scenarios(cap: f64, workers: usize, smoke: bool) -> Vec<QosScenario> {
+    let aging = Duration::from_millis(150);
+    let mut scns = Vec::new();
+
+    // -- the matrix: tenants x rate factor x elems x mix (ungated) --
+    let tenant_counts: &[usize] = if smoke { &[4] } else { &[1, 4] };
+    let factors: &[f64] = if smoke { &[1.5] } else { &[0.6, 1.5] };
+    let sizes: &[usize] = &[256, 1024];
+    let mixes: &[ClassMix] = &[ClassMix::INTERACTIVE_ONLY, ClassMix::MIXED];
+    let total_requests = if smoke { 120 } else { 240 };
+    for &tenants in tenant_counts {
+        for &factor in factors {
+            for &elems in sizes {
+                // capacity scales roughly inversely with request size
+                let cap_e = (cap * 512.0 / elems as f64).max(1.0);
+                for mix in mixes {
+                    let per_tenant = (total_requests / tenants).max(1);
+                    let rate = factor * cap_e / tenants as f64;
+                    scns.push(QosScenario {
+                        name: format!("matrix-t{tenants}-r{factor:.1}x-e{elems}-{}", mix.label()),
+                        loads: (0..tenants)
+                            .map(|t| TenantLoad {
+                                tenant: format!("t{t}"),
+                                arrival_hz: rate,
+                                requests: per_tenant,
+                                mix: *mix,
+                                deadline: None,
+                                cancel_every: 0,
+                            })
+                            .collect(),
+                        elems,
+                        workers,
+                        queue_depth: 256,
+                        admission: AdmissionPolicy::Block,
+                        tenant_quota: None,
+                        max_batch_requests: 4,
+                        aging_bound: aging,
+                    });
+                }
+            }
+        }
+    }
+
+    // -- gated: priority under saturation --
+    // three mixed-class tenants at 1.8x capacity into a shallow Reject
+    // queue: Interactive must hold its tail while Batch absorbs the
+    // aging bound, and full-queue arrivals must shed lower classes.
+    let dur = if smoke { 1.2 } else { 2.5 };
+    let sat_rate = 0.6 * cap; // x3 tenants = 1.8x capacity
+    let sat_requests = ((sat_rate * dur).ceil() as usize).clamp(60, 6000);
+    scns.push(QosScenario {
+        name: "saturation-mix".to_string(),
+        loads: (0..3)
+            .map(|t| TenantLoad {
+                tenant: format!("t{t}"),
+                arrival_hz: sat_rate,
+                requests: sat_requests,
+                mix: ClassMix::MIXED,
+                deadline: None,
+                cancel_every: 0,
+            })
+            .collect(),
+        elems: 512,
+        workers,
+        queue_depth: 32,
+        admission: AdmissionPolicy::Reject,
+        tenant_quota: None,
+        max_batch_requests: 4,
+        aging_bound: aging,
+    });
+
+    // -- gated: quota protection (isolated, then next to a flooder) --
+    let quota_dur = if smoke { 1.2 } else { 2.0 };
+    let polite_rate = 0.15 * cap;
+    let polite_requests = ((polite_rate * quota_dur).ceil() as usize).clamp(20, 3000);
+    let greedy_rate = 1.5 * cap;
+    let greedy_requests = ((greedy_rate * quota_dur).ceil() as usize).clamp(60, 9000);
+    let polite = |t: usize| TenantLoad {
+        tenant: format!("polite{t}"),
+        arrival_hz: polite_rate,
+        requests: polite_requests,
+        mix: ClassMix::INTERACTIVE_ONLY,
+        deadline: None,
+        cancel_every: 0,
+    };
+    let quota_base = QosScenario {
+        name: "quota-isolated".to_string(),
+        loads: vec![polite(0), polite(1)],
+        elems: 512,
+        workers,
+        queue_depth: 64,
+        admission: AdmissionPolicy::Reject,
+        tenant_quota: Some(8),
+        max_batch_requests: 4,
+        aging_bound: aging,
+    };
+    scns.push(quota_base.clone());
+    let mut quota_shared = quota_base;
+    quota_shared.name = "quota-shared".to_string();
+    quota_shared.loads.push(TenantLoad {
+        tenant: "greedy".to_string(),
+        arrival_hz: greedy_rate,
+        requests: greedy_requests,
+        mix: ClassMix::BATCH_ONLY,
+        deadline: None,
+        cancel_every: 0,
+    });
+    scns.push(quota_shared);
+
+    // -- gated: cancellation relief --
+    // one tenant at 1.8x capacity with a deadline every request; the
+    // paired run cancels every 2nd request right after submitting.
+    // Without cancellation the backlog grows until deadlines expire;
+    // cancelling half brings the survivors back under capacity.
+    let cancel_rate = 1.8 * cap;
+    let cancel_requests = ((cancel_rate * quota_dur).ceil() as usize).clamp(60, 9000);
+    let cancel_load = |every: usize| TenantLoad {
+        tenant: "c0".to_string(),
+        arrival_hz: cancel_rate,
+        requests: cancel_requests,
+        mix: ClassMix::INTERACTIVE_ONLY,
+        deadline: Some(Duration::from_millis(300)),
+        cancel_every: every,
+    };
+    for (name, every) in [("cancel-off", 0usize), ("cancel-on", 2)] {
+        scns.push(QosScenario {
+            name: name.to_string(),
+            loads: vec![cancel_load(every)],
+            elems: 512,
+            workers,
+            queue_depth: cancel_requests.max(1),
+            admission: AdmissionPolicy::Block,
+            tenant_quota: None,
+            max_batch_requests: 4,
+            aging_bound: Duration::from_millis(500),
+        });
+    }
+    scns
+}
+
+/// Apply the `--check` gates over the scenario rows (see the module
+/// docs): priority inversion, quota protection, cancellation relief,
+/// and non-vacuousness (at least one shed and one cancelled request
+/// across the report).
+fn check_qos(rows: &[QosRow]) -> Result<()> {
+    let find = |name: &str| -> Result<&QosRow> {
+        rows.iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| anyhow!("scenario '{name}' missing from the report"))
+    };
+
+    let sat = find("saturation-mix")?;
+    let (ia, ba) = (sat.class(Class::Interactive), sat.class(Class::Batch));
+    if ia.completed < 10 || ba.completed < 10 {
+        bail!(
+            "vacuous saturation-mix row: {} interactive / {} batch completions (need >= 10 each)",
+            ia.completed,
+            ba.completed
+        );
+    }
+    if sat.shed == 0 {
+        bail!("saturation-mix shed nothing — the overload scenario never overloaded");
+    }
+    if ia.p99_ms >= ba.p99_ms {
+        bail!(
+            "priority inversion under saturation: interactive p99 {:.2} ms >= batch p99 {:.2} ms",
+            ia.p99_ms,
+            ba.p99_ms
+        );
+    }
+    println!(
+        "check ok: saturation-mix interactive p99 {:.2} ms < batch p99 {:.2} ms \
+         ({} shed, {} rejected)",
+        ia.p99_ms, ba.p99_ms, sat.shed, sat.rejected
+    );
+
+    let isolated = find("quota-isolated")?;
+    let shared = find("quota-shared")?;
+    let (gi, gs) = (isolated.tenant_goodput("polite"), shared.tenant_goodput("polite"));
+    if shared.quota_rejected == 0 {
+        bail!("quota-shared rejected nothing over quota — the flooder never hit its cap");
+    }
+    if gs < 0.9 * gi {
+        bail!(
+            "quota failed to protect in-quota tenants: polite goodput {gs:.0} req/s next to the \
+             flooder vs {gi:.0} req/s isolated (need >= 90%)"
+        );
+    }
+    println!(
+        "check ok: polite goodput {gs:.0} req/s beside the flooder vs {gi:.0} req/s isolated \
+         ({} over-quota rejections)",
+        shared.quota_rejected
+    );
+
+    let off = find("cancel-off")?;
+    let on = find("cancel-on")?;
+    if on.cancelled == 0 {
+        bail!("cancel-on cancelled nothing");
+    }
+    if off.expired == 0 {
+        bail!("cancel-off expired nothing — the overload scenario never missed a deadline");
+    }
+    if on.goodput_rps < 1.05 * off.goodput_rps {
+        bail!(
+            "cancelling half the queue did not raise survivor goodput: {:.0} vs {:.0} req/s \
+             (need >= 1.05x)",
+            on.goodput_rps,
+            off.goodput_rps
+        );
+    }
+    println!(
+        "check ok: survivor goodput {:.0} req/s with cancellation vs {:.0} req/s without \
+         ({} cancelled, {} expired without)",
+        on.goodput_rps, off.goodput_rps, on.cancelled, off.expired
+    );
+    Ok(())
+}
+
+/// Run the full report: the baseline arrival sweep (unbatched + batched
+/// row per rate), then the QoS scenario matrix; print the tables, write
+/// `out_path` (`serve_qos/v1`), and with `check` apply every gate —
+/// batched ≥ unbatched within `tol` at the highest rate (refusing
+/// vacuous rows), priority under saturation, quota protection, and
+/// cancellation relief.
+pub fn report(sweep: &SweepSpec, out_path: &str, check: bool, tol: f64, smoke: bool) -> Result<()> {
     let SweepSpec { rates, requests, clients, elems, workers } = sweep;
     let (requests, clients, elems, workers) = (*requests, *clients, *elems, *workers);
     if rates.is_empty() {
@@ -415,11 +1113,59 @@ pub fn report(sweep: &SweepSpec, out_path: &str, check: bool, tol: f64) -> Resul
             rows.push(r);
         }
     }
-    std::fs::write(out_path, to_json(&rows).dump())
+
+    // calibrate: unthrottled single-tenant run in the exact batch shape
+    // the QoS scenarios use, so their overload factors are honest
+    let cal = QosScenario {
+        name: "calibrate".to_string(),
+        loads: vec![TenantLoad {
+            tenant: "cal".to_string(),
+            arrival_hz: 0.0,
+            requests: if smoke { 120 } else { 240 },
+            mix: ClassMix::INTERACTIVE_ONLY,
+            deadline: None,
+            cancel_every: 0,
+        }],
+        elems: 512,
+        workers,
+        queue_depth: 256,
+        admission: AdmissionPolicy::Block,
+        tenant_quota: None,
+        max_batch_requests: 4,
+        aging_bound: Duration::from_millis(150),
+    };
+    let cap = run_qos(&cal)?.throughput_rps.max(1.0);
+    println!("== QoS scenario matrix (calibrated capacity {cap:.0} req/s) ==");
+    println!(
+        "{:<26} {:>7} {:>8} {:>11} {:>11} {:>9} {:>6} {:>7} {:>7} {:>7}",
+        "Scenario", "tenants", "reqs", "goodput r/s", "int p99", "bat p99", "shed", "expired",
+        "cancel", "quota"
+    );
+    let mut scenarios = Vec::new();
+    for scn in qos_scenarios(cap, workers, smoke) {
+        let r = run_qos(&scn)?;
+        println!(
+            "{:<26} {:>7} {:>8} {:>11.0} {:>11.2} {:>9.2} {:>6} {:>7} {:>7} {:>7}",
+            r.name,
+            r.tenants,
+            r.requests,
+            r.goodput_rps,
+            r.class(Class::Interactive).p99_ms,
+            r.class(Class::Batch).p99_ms,
+            r.shed,
+            r.expired,
+            r.cancelled,
+            r.quota_rejected
+        );
+        scenarios.push(r);
+    }
+
+    std::fs::write(out_path, to_json(cap, &rows, &scenarios).dump())
         .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
     println!("wrote {out_path}");
     if check {
-        // the gate reads the final rate's pair: [..., unbatched, batched]
+        // the baseline gate reads the final rate's pair:
+        // [..., unbatched, batched]
         let batched = rows.last().expect("rows nonempty");
         let unbatched = &rows[rows.len() - 2];
         assert_eq!(batched.mode, "batched");
@@ -444,6 +1190,7 @@ pub fn report(sweep: &SweepSpec, out_path: &str, check: bool, tol: f64) -> Resul
              (mean batch {:.1} requests)",
             batched.throughput_rps, unbatched.throughput_rps, batched.arrival, batched.mean_batch
         );
+        check_qos(&scenarios)?;
     }
     Ok(())
 }
@@ -451,6 +1198,67 @@ pub fn report(sweep: &SweepSpec, out_path: &str, check: bool, tol: f64) -> Resul
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn class_mix_pick_follows_the_weights() {
+        let mut rng = Xorshift64::new(7);
+        for _ in 0..64 {
+            assert_eq!(ClassMix::INTERACTIVE_ONLY.pick(&mut rng), Class::Interactive);
+            assert_eq!(ClassMix::BATCH_ONLY.pick(&mut rng), Class::Batch);
+        }
+        let mut seen = [0usize; 3];
+        for _ in 0..4096 {
+            seen[ClassMix::MIXED.pick(&mut rng).index()] += 1;
+        }
+        assert!(seen.iter().all(|&n| n > 0), "mixed stream draws every class: {seen:?}");
+        assert_eq!(ClassMix::MIXED.label(), "i40b40e20");
+    }
+
+    #[test]
+    fn qos_report_schema_has_the_v1_shape() {
+        let row = QosRow {
+            name: "x".to_string(),
+            tenants: 1,
+            requests: 2,
+            elems: 4,
+            workers: 1,
+            queue_depth: 8,
+            admission: "block".to_string(),
+            tenant_quota: 0,
+            span_s: 1.0,
+            wall_s: 1.0,
+            throughput_rps: 2.0,
+            goodput_rps: 2.0,
+            mean_batch: 1.0,
+            batches: 2,
+            submitted: 2,
+            completed: 2,
+            rejected: 0,
+            quota_rejected: 0,
+            shed: 0,
+            expired: 0,
+            cancelled: 0,
+            cancelled_queued: 0,
+            classes: Class::ALL
+                .iter()
+                .map(|&class| ClassStat {
+                    class,
+                    offered: 0,
+                    completed: 0,
+                    p50_ms: 0.0,
+                    p95_ms: 0.0,
+                    p99_ms: 0.0,
+                    goodput_rps: 0.0,
+                })
+                .collect(),
+            tenants_detail: vec![],
+        };
+        let dump = to_json(100.0, &[], std::slice::from_ref(&row)).dump();
+        for key in ["serve_qos/v1", "capacity_rps", "baseline", "scenarios", "cancelled_queued"] {
+            assert!(dump.contains(key), "missing {key} in {dump}");
+        }
+        assert_eq!(row.class(Class::Batch).class, Class::Batch);
+    }
 
     #[test]
     fn key_fingerprint_separates_key_schedules() {

@@ -189,9 +189,10 @@ fn bench(args: &Args) -> Result<()> {
         }
         "serve" => {
             // serving-layer load harness: open-loop arrival sweep through
-            // the micro-batching service, batched vs unbatched rows; the
-            // final (unthrottled) rate is the saturation row --check
-            // gates on.  --smoke is the cheap CI variant.
+            // the micro-batching service (batched vs unbatched rows),
+            // then the QoS scenario matrix (tenants x rate x size x
+            // class mix plus the gated saturation/quota/cancellation
+            // scenarios).  --smoke is the cheap CI variant.
             let smoke = args.flag("smoke");
             let requests = args.opt_usize("requests", if smoke { 240 } else { 600 });
             let clients = args.opt_usize("clients", 4);
@@ -204,7 +205,7 @@ fn bench(args: &Args) -> Result<()> {
             let rates: Vec<f64> =
                 if smoke { vec![2000.0, 0.0] } else { vec![1000.0, 4000.0, 0.0] };
             let sweep = serve::SweepSpec { rates, requests, clients, elems, workers };
-            serve::report(&sweep, out, args.flag("check"), tol)?;
+            serve::report(&sweep, out, args.flag("check"), tol, smoke)?;
         }
         "cluster" => {
             // cluster-lane sharding: one invocation split across the

@@ -93,6 +93,23 @@ impl Gate {
         }
     }
 
+    /// Take one slot without ever parking: a full gate returns
+    /// [`AdmitError::Rejected`] regardless of policy.  The QoS submit
+    /// path probes with this first so it can try to *make room* (purge
+    /// expired entries, shed a lower class) before falling back to the
+    /// configured block/reject behavior.
+    pub fn try_enter(&self) -> Result<(), AdmitError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(AdmitError::Closed);
+        }
+        if st.outstanding < self.depth {
+            st.outstanding += 1;
+            return Ok(());
+        }
+        Err(AdmitError::Rejected)
+    }
+
     /// Release `n` slots (the batcher took `n` requests into a batch) and
     /// wake parked submitters.
     pub fn exit_n(&self, n: usize) {
@@ -164,6 +181,18 @@ mod tests {
         g.close();
         assert_eq!(waiter.join().unwrap(), Err(AdmitError::Closed));
         assert_eq!(g.enter(), Err(AdmitError::Closed));
+    }
+
+    #[test]
+    fn try_enter_never_parks() {
+        let g = Gate::new(1, AdmissionPolicy::Block);
+        assert_eq!(g.try_enter(), Ok(()));
+        // a blocking-policy gate still fails fast through try_enter
+        assert_eq!(g.try_enter(), Err(AdmitError::Rejected));
+        g.exit_n(1);
+        assert_eq!(g.try_enter(), Ok(()));
+        g.close();
+        assert_eq!(g.try_enter(), Err(AdmitError::Closed));
     }
 
     #[test]

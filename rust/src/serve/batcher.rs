@@ -1,81 +1,61 @@
 //! Per-method micro-batch queues: coalesce compatible concurrent
-//! invocations into few fused launches.
+//! invocations into few fused launches, in QoS rank order.
 //!
 //! Each registered method owns one [`MethodQueue`] and one dispatcher
 //! thread.  Clients enqueue requests (after passing the queue's
-//! admission [`Gate`](super::admission::Gate)); the dispatcher takes the
-//! longest *FIFO head run* of compatible requests — same
-//! [`batch_compat`](crate::backend::HeteroMethod::batch_compat) key,
-//! fused item total within `max_batch_items` — lingering up to
-//! `max_batch_delay` past the head request's arrival for peers to show
-//! up, then:
+//! admission [`Gate`](super::admission::Gate) and per-tenant quota);
+//! pending requests live in a [`ClassQueue`] ranked by class precedence
+//! → EDF deadline → arrival (see [`qos`](super::qos)).  The dispatcher
+//! lingers up to `max_batch_delay` past the *front* request's arrival
+//! for peers, then takes the best-ranked entry plus every same-compat
+//! peer in rank order (fused item total within `max_batch_items`) and:
 //!
 //! 1. **compose** the request inputs into one fused input,
 //! 2. execute it as a *single* engine submission (SMP / device / hybrid
 //!    / sharded, whatever the rules + scheduler resolve — one launch,
 //!    one set of H2D/D2H transfers, amortized across the whole batch;
-//!    device-resolved launches land on the fleet's least-loaded lane, so
-//!    independent batches from concurrent dispatchers spread across
-//!    every device),
+//!    device-resolved launches land on the fleet's least-loaded lane),
 //! 3. **split** the fused result and resolve each request's
-//!    [`Ticket`](super::Ticket).
+//!    [`Ticket`](super::Ticket) — tickets cancelled mid-flight were
+//!    already resolved `Cancelled` and never block the demux.
 //!
-//! FIFO order is never reordered around: a request with an incompatible
-//! key *ends* the current batch rather than being skipped, so no request
-//! can be starved by a stream of better-batching peers behind it.
+//! Unlike the original FIFO head run, an incompatible entry no longer
+//! *seals* a batch — strict class precedence requires reordering, so
+//! incompatible entries are skipped over and starvation is prevented by
+//! the aging bound (a request pending past `aging_bound` outranks every
+//! un-aged class) rather than by queue position.
+//!
+//! Under overload the submit path *makes room* before giving up: it
+//! first drops already-expired entries, then sheds one strictly
+//! lower-class entry (greediest tenant first), and only then falls back
+//! to the configured block/reject policy.  Cancellation
+//! ([`Ticket::cancel`](super::Ticket::cancel) or dropping an unresolved
+//! ticket) removes a still-queued entry before fusion and frees its
+//! admission slot immediately.
 
-use std::collections::VecDeque;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::backend::HeteroMethod;
 use crate::somd::engine::Engine;
 
-use super::admission::{AdmitError, Gate};
+use super::admission::{AdmissionPolicy, AdmitError, Gate};
 use super::metrics::ServeMetrics;
-use super::service::{BatchKnobs, ServeError, ServeOutcome, Ticket};
+use super::qos::{Class, ClassQueue, Clock, QosEntry, SubmitOpts};
+use super::service::{BatchKnobs, CancelSink, ServeError, ServeOutcome, Ticket, TicketInner};
 
-/// One queued request: its input, demux bookkeeping, and the sender that
-/// resolves the client's [`Ticket`].
+/// One queued request's payload: its input and the write-once outcome
+/// cell that resolves the client's [`Ticket`].  The QoS bookkeeping
+/// (class, tenant, deadline, compat, items) lives on the wrapping
+/// [`QosEntry`].
 pub(crate) struct Pending<I: ?Sized, R> {
     pub(crate) input: Arc<I>,
-    pub(crate) items: usize,
-    pub(crate) compat: u64,
-    pub(crate) enqueued: Instant,
-    pub(crate) tx: mpsc::Sender<Result<ServeOutcome<R>, ServeError>>,
+    pub(crate) ticket: Arc<TicketInner<R>>,
 }
 
 struct QueueState<I: ?Sized, R> {
-    q: VecDeque<Pending<I, R>>,
+    q: ClassQueue<Pending<I, R>>,
     closed: bool,
-}
-
-/// The longest FIFO prefix of `q` that may fuse into one batch: every
-/// request shares the head's compat key and the item total stays within
-/// `max_items` (the head request always counts, even when it alone
-/// exceeds the cap — an oversized request runs as its own batch).
-/// Returns `(requests, items)`.
-fn head_run<I: ?Sized, R>(q: &VecDeque<Pending<I, R>>, max_items: usize) -> (usize, usize) {
-    let first_compat = match q.front() {
-        Some(p) => p.compat,
-        None => return (0, 0),
-    };
-    let mut n = 0usize;
-    let mut items = 0usize;
-    for p in q {
-        if p.compat != first_compat {
-            break;
-        }
-        if n > 0 && items.saturating_add(p.items) > max_items {
-            break;
-        }
-        n += 1;
-        items = items.saturating_add(p.items);
-        if items >= max_items {
-            break;
-        }
-    }
-    (n, items)
 }
 
 /// One method's micro-batch queue (see the module docs).  Single
@@ -87,6 +67,7 @@ pub(crate) struct MethodQueue<I: ?Sized, P, E, R> {
     knobs: BatchKnobs,
     gate: Gate,
     metrics: Arc<ServeMetrics>,
+    clock: Clock,
     state: Mutex<QueueState<I, R>>,
     cv: Condvar,
 }
@@ -104,45 +85,151 @@ where
         knobs: BatchKnobs,
         gate: Gate,
         metrics: Arc<ServeMetrics>,
+        clock: Clock,
     ) -> Self {
+        let aging_bound = knobs.aging_bound;
         MethodQueue {
             method,
             engine,
             knobs,
             gate,
             metrics,
-            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            clock,
+            state: Mutex::new(QueueState { q: ClassQueue::new(aging_bound), closed: false }),
             cv: Condvar::new(),
         }
     }
 
-    /// Admit and enqueue one request; returns the ticket its result will
-    /// arrive on.
-    pub(crate) fn submit(&self, input: Arc<I>) -> Result<Ticket<R>, ServeError> {
-        match self.gate.enter() {
-            Ok(()) => {}
-            Err(AdmitError::Rejected) => {
-                self.metrics.note_rejected();
-                return Err(ServeError::Rejected);
-            }
-            Err(AdmitError::Closed) => return Err(ServeError::ShuttingDown),
+    /// Bump `somd_serve_outcomes_total{outcome=...}` on the engine's
+    /// metrics hub (the serve counters stay the source of truth; the hub
+    /// series exists so one scrape shows every lane *and* every
+    /// non-completion outcome).
+    fn hub_outcome(&self, outcome: &str, n: u64) {
+        self.engine
+            .hub()
+            .counter_add(&format!("somd_serve_outcomes_total{{outcome=\"{outcome}\"}}"), n);
+    }
+
+    /// Whether `tenant` already holds its full pending quota.
+    fn over_quota(&self, tenant: Option<&str>) -> bool {
+        match self.knobs.tenant_quota {
+            Some(cap) => self.state.lock().unwrap().q.tenant_pending(tenant) >= cap,
+            None => false,
         }
-        let items = self.method.batch_items(&input);
-        let compat = self.method.batch_compat(&input);
-        let (tx, rx) = mpsc::channel();
-        {
+    }
+
+    /// Try to free admission slots for a newcomer of `incoming` class:
+    /// drop every already-expired entry first, else shed the single
+    /// worst strictly-lower-class entry.  Returns whether ≥ 1 slot was
+    /// freed (shed order is documented in `docs/SERVING.md`).
+    fn make_room(&self, incoming: Class) -> bool {
+        let now = self.clock.now();
+        let (expired, victim) = {
             let mut st = self.state.lock().unwrap();
+            let expired = st.q.take_expired(now);
+            let victim = if expired.is_empty() { st.q.shed_victim(incoming, now) } else { None };
+            (expired, victim)
+        };
+        let mut freed = 0usize;
+        for e in expired {
+            freed += 1;
+            if e.payload.ticket.resolve(Err(ServeError::Expired)) {
+                self.metrics.note_expired();
+                self.hub_outcome("expired", 1);
+            }
+        }
+        if let Some(v) = victim {
+            freed += 1;
+            if v.payload.ticket.resolve(Err(ServeError::Shed)) {
+                self.metrics.note_shed();
+                self.hub_outcome("shed", 1);
+            }
+        }
+        if freed == 0 {
+            return false;
+        }
+        self.gate.exit_n(freed);
+        true
+    }
+
+    /// Admit and enqueue one request; returns the ticket its result
+    /// will arrive on.  Associated fn (not a method): the ticket keeps
+    /// an `Arc<dyn CancelSink>` back-reference to this queue, so the
+    /// caller must hand in its `Arc`.
+    pub(crate) fn submit(
+        queue: &Arc<Self>,
+        input: Arc<I>,
+        opts: SubmitOpts,
+    ) -> Result<Ticket<R>, ServeError> {
+        let SubmitOpts { tenant, class, deadline } = opts;
+        let now = queue.clock.now();
+        let deadline = deadline.map(|d| now + d);
+        // fast-path quota check before touching the gate (re-checked
+        // authoritatively under the state lock below)
+        if queue.over_quota(tenant.as_deref()) {
+            queue.metrics.note_quota_rejected();
+            queue.hub_outcome("quota_rejected", 1);
+            return Err(ServeError::OverQuota);
+        }
+        // admission: probe without parking, make room, then fall back
+        // to the configured policy
+        loop {
+            match queue.gate.try_enter() {
+                Ok(()) => break,
+                Err(AdmitError::Closed) => return Err(ServeError::ShuttingDown),
+                Err(AdmitError::Rejected) => {
+                    if queue.make_room(class) {
+                        continue;
+                    }
+                    match queue.gate.policy() {
+                        AdmissionPolicy::Reject => {
+                            queue.metrics.note_rejected();
+                            return Err(ServeError::Rejected);
+                        }
+                        AdmissionPolicy::Block => match queue.gate.enter() {
+                            Ok(()) => break,
+                            Err(AdmitError::Closed) => return Err(ServeError::ShuttingDown),
+                            Err(AdmitError::Rejected) => {
+                                unreachable!("a Block-policy gate never rejects")
+                            }
+                        },
+                    }
+                }
+            }
+        }
+        let items = queue.method.batch_items(&input);
+        let compat = queue.method.batch_compat(&input);
+        let inner = Arc::new(TicketInner::new());
+        let seq = {
+            let mut st = queue.state.lock().unwrap();
             if st.closed {
                 // lost the race against drain after passing the gate
                 drop(st);
-                self.gate.exit_n(1);
+                queue.gate.exit_n(1);
                 return Err(ServeError::ShuttingDown);
             }
-            st.q.push_back(Pending { input, items, compat, enqueued: Instant::now(), tx });
-        }
-        self.cv.notify_all();
-        self.metrics.note_submitted();
-        Ok(Ticket::new(rx))
+            if let Some(cap) = queue.knobs.tenant_quota {
+                if st.q.tenant_pending(tenant.as_deref()) >= cap {
+                    drop(st);
+                    queue.gate.exit_n(1);
+                    queue.metrics.note_quota_rejected();
+                    queue.hub_outcome("quota_rejected", 1);
+                    return Err(ServeError::OverQuota);
+                }
+            }
+            st.q.push(
+                Pending { input, ticket: inner.clone() },
+                class,
+                tenant,
+                deadline,
+                compat,
+                items,
+                now,
+            )
+        };
+        queue.cv.notify_all();
+        queue.metrics.note_submitted();
+        Ok(Ticket::new(inner, queue.clone() as Arc<dyn CancelSink>, seq))
     }
 
     /// The dispatcher loop: batch, execute, demux — until the queue is
@@ -153,61 +240,95 @@ where
         }
     }
 
+    /// Drop every entry whose deadline passed: resolve the tickets
+    /// `Expired`, free the slots.  Expired work is dropped *before*
+    /// fusion — it never wastes a launch.
+    fn purge_expired_locked(&self, st: &mut QueueState<I, R>) {
+        let now = self.clock.now();
+        let expired = st.q.take_expired(now);
+        if expired.is_empty() {
+            return;
+        }
+        let n = expired.len();
+        for e in expired {
+            if e.payload.ticket.resolve(Err(ServeError::Expired)) {
+                self.metrics.note_expired();
+                self.hub_outcome("expired", 1);
+            }
+        }
+        self.gate.exit_n(n);
+    }
+
     /// Block for the next batch (see the module docs for the lingering
-    /// and head-run rules); `None` once closed and empty.
-    fn next_batch(&self) -> Option<Vec<Pending<I, R>>> {
+    /// and rank-order rules); `None` once closed and empty.
+    fn next_batch(&self) -> Option<Vec<QosEntry<Pending<I, R>>>> {
         let mut st = self.state.lock().unwrap();
-        loop {
-            if !st.q.is_empty() {
-                break;
+        'restart: loop {
+            self.purge_expired_locked(&mut st);
+            while st.q.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.cv.wait(st).unwrap();
+                self.purge_expired_locked(&mut st);
             }
-            if st.closed {
-                return None;
+            // linger for peers: the window is anchored at the front
+            // request's arrival, so time the dispatcher spent executing
+            // the previous batch already counts against it (under load
+            // the wait is zero)
+            loop {
+                if st.closed {
+                    break; // draining: flush immediately
+                }
+                self.purge_expired_locked(&mut st);
+                if st.q.is_empty() {
+                    continue 'restart;
+                }
+                let now = self.clock.now();
+                let (n, items) = st.q.preview_batch(self.knobs.max_batch_items, now);
+                if items >= self.knobs.max_batch_items {
+                    break; // the batch is full
+                }
+                if n < st.q.len() {
+                    // some queued entry cannot join this batch
+                    // (incompatible key or the cap): dispatch now —
+                    // lingering cannot grow *this* batch any further
+                    break;
+                }
+                let deadline =
+                    st.q.front(now).expect("queue non-empty").enqueued + self.knobs.max_batch_delay;
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
             }
-            st = self.cv.wait(st).unwrap();
+            // final expiry pass: entries that died during the linger are
+            // dropped, not launched
+            self.purge_expired_locked(&mut st);
+            if st.q.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                continue 'restart;
+            }
+            let batch = st.q.take_batch(self.knobs.max_batch_items, self.clock.now());
+            drop(st);
+            // the requests left the queue: free their admission slots
+            self.gate.exit_n(batch.len());
+            return Some(batch);
         }
-        // linger for peers: the window is anchored at the head request's
-        // arrival, so time the dispatcher spent executing the previous
-        // batch already counts against it (under load the wait is zero)
-        let deadline = st.q.front().expect("queue non-empty").enqueued + self.knobs.max_batch_delay;
-        loop {
-            if st.closed {
-                break; // draining: flush immediately
-            }
-            let (n, items) = head_run(&st.q, self.knobs.max_batch_items);
-            if items >= self.knobs.max_batch_items {
-                break; // the batch is full
-            }
-            if n < st.q.len() {
-                // the run is SEALED: the next queued request has an
-                // incompatible key or would overflow the cap, and FIFO
-                // means no later arrival can ever join the prefix —
-                // lingering further is pure added latency
-                break;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
-        }
-        let (n, _) = head_run(&st.q, self.knobs.max_batch_items);
-        let batch: Vec<Pending<I, R>> = st.q.drain(..n).collect();
-        drop(st);
-        // the requests left the queue: free their admission slots
-        self.gate.exit_n(batch.len());
-        Some(batch)
     }
 
     /// Compose → one engine submission → split → resolve tickets.  Any
     /// failure (compose/split panic, lane error, launch panic) fails the
-    /// whole batch — every ticket gets the error, none is left hanging.
-    fn execute(&self, batch: Vec<Pending<I, R>>) {
+    /// whole batch — every live ticket gets the error, none is left
+    /// hanging; cancelled tickets already resolved and are skipped.
+    fn execute(&self, batch: Vec<QosEntry<Pending<I, R>>>) {
         let n = batch.len();
         let t0 = Instant::now();
-        let inputs: Vec<Arc<I>> = batch.iter().map(|p| p.input.clone()).collect();
-        let counts: Vec<usize> = batch.iter().map(|p| p.items).collect();
+        let inputs: Vec<Arc<I>> = batch.iter().map(|e| e.payload.input.clone()).collect();
+        let counts: Vec<usize> = batch.iter().map(|e| e.items).collect();
         let items: usize = counts.iter().sum();
         // the fused invocation's trace nests under this dispatch span,
         // so one batch's N tickets share one stitched trace
@@ -238,26 +359,38 @@ where
                     return;
                 }
                 let completed_at = Instant::now();
-                self.metrics.note_batch(n, items, t0.elapsed());
-                for (p, value) in batch.into_iter().zip(values) {
-                    let _ = p.tx.send(Ok(ServeOutcome {
+                let now = self.clock.now();
+                let mut resolved = 0usize;
+                for (e, value) in batch.into_iter().zip(values) {
+                    let latency = now.saturating_duration_since(e.enqueued).as_secs_f64();
+                    let delivered = e.payload.ticket.resolve(Ok(ServeOutcome {
                         value,
                         executed: how.clone(),
                         batch_requests: n,
                         completed_at,
                     }));
+                    if delivered {
+                        resolved += 1;
+                        self.metrics.note_class_done(e.class, latency);
+                    }
+                    // else: cancelled mid-flight — already counted, and
+                    // the demux moves on without blocking
                 }
+                self.metrics.note_batch(n, resolved, items, t0.elapsed());
             }
             Ok(Err(e)) => self.fail_batch(batch, &format!("{e:#}")),
             Err(_panic) => self.fail_batch(batch, "batch execution panicked"),
         }
     }
 
-    fn fail_batch(&self, batch: Vec<Pending<I, R>>, msg: &str) {
-        self.metrics.note_failed(batch.len());
-        for p in batch {
-            let _ = p.tx.send(Err(ServeError::Failed(msg.to_string())));
+    fn fail_batch(&self, batch: Vec<QosEntry<Pending<I, R>>>, msg: &str) {
+        let mut failed = 0usize;
+        for e in batch {
+            if e.payload.ticket.resolve(Err(ServeError::Failed(msg.to_string()))) {
+                failed += 1;
+            }
         }
+        self.metrics.note_failed(failed);
     }
 
     pub(crate) fn method_name(&self) -> &str {
@@ -266,6 +399,10 @@ where
 
     pub(crate) fn pending(&self) -> usize {
         self.state.lock().unwrap().q.len()
+    }
+
+    pub(crate) fn admission_outstanding(&self) -> usize {
+        self.gate.outstanding()
     }
 
     pub(crate) fn close(&self) {
@@ -299,49 +436,35 @@ where
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn pending(items: usize, compat: u64) -> Pending<Vec<i64>, ()> {
-        let (tx, _rx) = mpsc::channel();
-        // the receiver is dropped: these Pendings only feed head_run
-        Pending { input: Arc::new(Vec::new()), items, compat, enqueued: Instant::now(), tx }
+impl<I, P, E, R> CancelSink for MethodQueue<I, P, E, R>
+where
+    I: Send + Sync + 'static,
+    P: Send + Sync + 'static,
+    E: Sync + 'static,
+    R: Send + 'static,
+{
+    fn cancel_queued(&self, seq: u64) -> bool {
+        let entry = self.state.lock().unwrap().q.remove_seq(seq);
+        match entry {
+            Some(e) => {
+                // the entry never fuses: free its slot right away so a
+                // parked submitter can take it
+                self.gate.exit_n(1);
+                if e.payload.ticket.resolve(Err(ServeError::Cancelled)) {
+                    self.metrics.note_cancelled(true);
+                    self.hub_outcome("cancelled", 1);
+                }
+                // a lingering dispatcher may be waiting on a queue this
+                // just changed; let it re-evaluate
+                self.cv.notify_all();
+                true
+            }
+            None => false,
+        }
     }
 
-    #[test]
-    fn head_run_respects_the_item_cap() {
-        let q: VecDeque<_> = [pending(60, 0), pending(30, 0), pending(30, 0)].into();
-        // 60 + 30 fits in 100; the next 30 would overflow
-        assert_eq!(head_run(&q, 100), (2, 90));
-        // exact fill stops the run
-        assert_eq!(head_run(&q, 90), (2, 90));
-        assert_eq!(head_run(&q, 60), (1, 60));
-    }
-
-    #[test]
-    fn head_run_breaks_at_an_incompatible_key() {
-        let q: VecDeque<_> = [pending(10, 7), pending(10, 7), pending(10, 8), pending(10, 7)].into();
-        // FIFO: the key-8 request ends the batch; the trailing key-7
-        // request must NOT be reordered around it
-        assert_eq!(head_run(&q, 1000), (2, 20));
-    }
-
-    #[test]
-    fn oversized_head_request_runs_alone() {
-        let q: VecDeque<_> = [pending(500, 0), pending(10, 0)].into();
-        assert_eq!(head_run(&q, 100), (1, 500));
-    }
-
-    #[test]
-    fn empty_queue_has_no_run() {
-        let q: VecDeque<Pending<Vec<i64>, ()>> = VecDeque::new();
-        assert_eq!(head_run(&q, 100), (0, 0));
-    }
-
-    #[test]
-    fn zero_item_requests_still_batch() {
-        let q: VecDeque<_> = [pending(0, 0), pending(0, 0), pending(0, 0)].into();
-        assert_eq!(head_run(&q, 100), (3, 0));
+    fn note_cancelled_inflight(&self) {
+        self.metrics.note_cancelled(false);
+        self.hub_outcome("cancelled", 1);
     }
 }

@@ -1,15 +1,26 @@
-//! Serving-layer counters: admission, batching and completion totals.
+//! Serving-layer counters: admission, batching, QoS-outcome and
+//! completion totals.
 //!
 //! One [`ServeMetrics`] instance is shared by a [`Service`] and all of
 //! its method queues; the load harness and the `somd bench serve`
 //! `--check` gate read it back through [`ServeMetrics::snapshot`] —
 //! notably [`ServeMetricsSnapshot::mean_batch_requests`], the
-//! non-vacuousness proof that coalescing actually happened.
+//! non-vacuousness proof that coalescing actually happened, and the
+//! `cancelled` / `expired` / `shed` / `quota_rejected` counters that
+//! keep every way a request can *not* complete distinguishable.
 //!
 //! [`Service`]: crate::serve::Service
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
+
+use super::qos::Class;
+
+/// Bounded per-class latency window (matches the obs hub's summary
+/// window): enough for stable p99 estimates, bounded memory forever.
+const CLASS_LATENCY_WINDOW: usize = 4096;
 
 /// Lifetime counters of one service (shared across its method queues).
 #[derive(Debug, Default)]
@@ -18,11 +29,18 @@ pub struct ServeMetrics {
     rejected: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    cancelled: AtomicU64,
+    cancelled_queued: AtomicU64,
+    expired: AtomicU64,
+    shed: AtomicU64,
+    quota_rejected: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     items: AtomicU64,
     max_batch_requests: AtomicU64,
     exec_nanos: AtomicU64,
+    class_completed: [AtomicU64; 3],
+    class_latency: [Mutex<VecDeque<f64>>; 3],
 }
 
 impl ServeMetrics {
@@ -44,22 +62,75 @@ impl ServeMetrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One fused batch of `requests` requests / `items` index-space items
-    /// completed successfully after `exec` of dispatcher wall time
-    /// (compose + launch + split).
-    pub(crate) fn note_batch(&self, requests: usize, items: usize, exec: Duration) {
+    /// One request was cancelled — `queued` while still pending (its
+    /// admission slot was freed before fusion), otherwise after it was
+    /// already fused into an in-flight batch.
+    pub(crate) fn note_cancelled(&self, queued: bool) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+        if queued {
+            self.cancelled_queued.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One still-queued request's deadline passed; it was dropped before
+    /// fusion.
+    pub(crate) fn note_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One queued request was shed to make room for a strictly
+    /// higher-class newcomer.
+    pub(crate) fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request was turned away because its tenant held a full
+    /// pending quota.
+    pub(crate) fn note_quota_rejected(&self) {
+        self.quota_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One fused batch completed after `exec` of dispatcher wall time
+    /// (compose + launch + split): it carried `requests` requests /
+    /// `items` index-space items, of which `resolved` actually delivered
+    /// to a live ticket (the rest were cancelled mid-flight — their
+    /// outcome was already counted by [`ServeMetrics::note_cancelled`]).
+    pub(crate) fn note_batch(
+        &self,
+        requests: usize,
+        resolved: usize,
+        items: usize,
+        exec: Duration,
+    ) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(requests as u64, Ordering::Relaxed);
-        self.completed.fetch_add(requests as u64, Ordering::Relaxed);
+        self.completed.fetch_add(resolved as u64, Ordering::Relaxed);
         self.items.fetch_add(items as u64, Ordering::Relaxed);
         self.max_batch_requests.fetch_max(requests as u64, Ordering::Relaxed);
         self.exec_nanos.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
     }
 
-    /// One fused batch of `requests` requests failed (every request in it
-    /// received the error).
+    /// One request of `class` completed with `latency_secs` from
+    /// enqueue to demux.
+    pub(crate) fn note_class_done(&self, class: Class, latency_secs: f64) {
+        self.class_completed[class.index()].fetch_add(1, Ordering::Relaxed);
+        let mut w = self.class_latency[class.index()].lock().unwrap();
+        if w.len() == CLASS_LATENCY_WINDOW {
+            w.pop_front();
+        }
+        w.push_back(latency_secs);
+    }
+
+    /// `requests` requests failed (batch-level failure: every live
+    /// ticket in the batch received the error).
     pub(crate) fn note_failed(&self, requests: usize) {
         self.failed.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
+    /// The bounded latency window of one class, in seconds (rendered as
+    /// a Prometheus summary by `Service::metrics_text`).
+    pub fn class_latency_window(&self, class: Class) -> Vec<f64> {
+        self.class_latency[class.index()].lock().unwrap().iter().copied().collect()
     }
 
     /// Point-in-time copy of every counter.
@@ -69,11 +140,21 @@ impl ServeMetrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            cancelled_queued: self.cancelled_queued.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            quota_rejected: self.quota_rejected.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             items: self.items.load(Ordering::Relaxed),
             max_batch_requests: self.max_batch_requests.load(Ordering::Relaxed),
             exec_nanos: self.exec_nanos.load(Ordering::Relaxed),
+            class_completed: [
+                self.class_completed[0].load(Ordering::Relaxed),
+                self.class_completed[1].load(Ordering::Relaxed),
+                self.class_completed[2].load(Ordering::Relaxed),
+            ],
         }
     }
 }
@@ -89,9 +170,21 @@ pub struct ServeMetricsSnapshot {
     pub completed: u64,
     /// Requests that received a batch-level failure.
     pub failed: u64,
+    /// Requests cancelled (queued + in-flight).
+    pub cancelled: u64,
+    /// The subset of `cancelled` that was still queued — dropped before
+    /// fusion, admission slot freed early.
+    pub cancelled_queued: u64,
+    /// Still-queued requests dropped because their deadline passed.
+    pub expired: u64,
+    /// Queued requests shed to make room for higher-class newcomers.
+    pub shed: u64,
+    /// Requests turned away by the per-tenant quota.
+    pub quota_rejected: u64,
     /// Fused batches executed successfully.
     pub batches: u64,
-    /// Requests carried by those batches (`completed` from the batch side).
+    /// Requests carried by those batches (including requests whose
+    /// tickets were cancelled mid-flight).
     pub batched_requests: u64,
     /// Index-space items carried by those batches.
     pub items: u64,
@@ -99,6 +192,9 @@ pub struct ServeMetricsSnapshot {
     pub max_batch_requests: u64,
     /// Total dispatcher wall nanoseconds spent executing batches.
     pub exec_nanos: u64,
+    /// Completed requests per class ([`Class::index`] order:
+    /// interactive, batch, best_effort).
+    pub class_completed: [u64; 3],
 }
 
 impl ServeMetricsSnapshot {
@@ -135,8 +231,8 @@ mod tests {
         m.note_submitted();
         m.note_submitted();
         m.note_rejected();
-        m.note_batch(2, 2000, Duration::from_millis(4));
-        m.note_batch(1, 500, Duration::from_millis(2));
+        m.note_batch(2, 2, 2000, Duration::from_millis(4));
+        m.note_batch(1, 1, 500, Duration::from_millis(2));
         m.note_failed(3);
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
@@ -149,6 +245,54 @@ mod tests {
         assert_eq!(s.max_batch_requests, 2);
         assert!((s.mean_batch_requests() - 1.5).abs() < 1e-12);
         assert!((s.mean_batch_exec_secs() - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qos_outcomes_stay_distinguishable() {
+        let m = ServeMetrics::default();
+        m.note_cancelled(true);
+        m.note_cancelled(false);
+        m.note_expired();
+        m.note_shed();
+        m.note_shed();
+        m.note_quota_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.cancelled_queued, 1);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.quota_rejected, 1);
+        // none of these leak into the legacy outcome counters
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.failed, 0);
+    }
+
+    #[test]
+    fn cancelled_in_flight_requests_ride_the_batch_but_not_completed() {
+        let m = ServeMetrics::default();
+        // a 4-request batch of which one ticket was cancelled mid-flight
+        m.note_batch(4, 3, 4000, Duration::from_millis(1));
+        let s = m.snapshot();
+        assert_eq!(s.batched_requests, 4);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.max_batch_requests, 4);
+    }
+
+    #[test]
+    fn class_latency_window_is_bounded_and_per_class() {
+        let m = ServeMetrics::default();
+        for i in 0..(CLASS_LATENCY_WINDOW + 10) {
+            m.note_class_done(Class::Interactive, i as f64);
+        }
+        m.note_class_done(Class::Batch, 1.0);
+        let w = m.class_latency_window(Class::Interactive);
+        assert_eq!(w.len(), CLASS_LATENCY_WINDOW);
+        assert_eq!(w[0], 10.0, "oldest samples were evicted");
+        assert_eq!(m.class_latency_window(Class::Batch), vec![1.0]);
+        assert!(m.class_latency_window(Class::BestEffort).is_empty());
+        let s = m.snapshot();
+        assert_eq!(s.class_completed, [(CLASS_LATENCY_WINDOW + 10) as u64, 1, 0]);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! ```text
 //!  clients            per-method queues              engine
 //!  ───────            ────────────────               ──────
-//!  submit ──admission─▶ [r1 r2 r3 …] ──head run──▶ compose → one
+//!  submit ──admission─▶ [r1 r2 r3 …] ─rank order─▶ compose → one
 //!  submit ──admission─▶ [r4 r5]        (compat,     fused launch
 //!     ⋮        (block/    ⋮             ≤ max_batch  (smp|device|hybrid|
 //!              reject)                  items,        sharded)
@@ -33,15 +33,26 @@
 //!
 //! [`Engine::with_device_fleet`]: crate::somd::Engine::with_device_fleet
 //!
+//! Since the QoS PR the front door is also *multi-tenant and
+//! SLO-aware*: requests carry [`SubmitOpts`] (tenant, class, deadline),
+//! the pending queue dispatches by strict class precedence → EDF →
+//! arrival with an aging bound against starvation, per-tenant quotas
+//! gate admission, overload sheds expired and lower-class work before
+//! rejecting, and every [`Ticket`] is a cancellable poll/waker future —
+//! dropping or cancelling one frees its admission slot before fusion.
+//!
 //! The pieces:
 //!
 //! * [`Service`] / [`ServiceClient`] / [`Ticket`] — the client surface
 //!   ([`service`]);
-//! * the micro-batcher — per-method queues, FIFO head-run coalescing,
+//! * the micro-batcher — per-method queues, rank-order coalescing,
 //!   the `max_batch_items` / `max_batch_delay` knob pair ([`batcher`]);
+//! * QoS policy — classes, deadlines, aging, shedding, the manual test
+//!   clock ([`qos`]);
 //! * admission control — bounded queues with block-or-reject
 //!   backpressure ([`admission`]);
-//! * counters — what actually got coalesced ([`metrics`]).
+//! * counters — what actually got coalesced, and every way a request
+//!   can not complete ([`metrics`]).
 //!
 //! Methods opt in by attaching a
 //! [`BatchSpec`](crate::backend::BatchSpec) (compose/split contract);
@@ -54,11 +65,13 @@
 pub mod admission;
 pub mod batcher;
 pub mod metrics;
+pub mod qos;
 pub mod service;
 
 pub use admission::{AdmissionPolicy, AdmitError, Gate};
 pub use metrics::{ServeMetrics, ServeMetricsSnapshot};
+pub use qos::{Class, ClassQueue, Clock, ManualClock, QosEntry, Rank, SubmitOpts};
 pub use service::{
-    ServeError, ServeOutcome, Service, ServiceClient, ServiceConfig, Ticket,
+    ServeError, ServeOutcome, Service, ServiceClient, ServiceConfig, Ticket, DEFAULT_AGING_BOUND,
     DEFAULT_MAX_BATCH_DELAY, DEFAULT_MAX_BATCH_ITEMS, DEFAULT_QUEUE_DEPTH,
 };

@@ -1,0 +1,643 @@
+//! Multi-tenant QoS primitives: priority classes, deadlines, per-tenant
+//! accounting, and the class/deadline-aware pending queue.
+//!
+//! The serving layer's original queue was strict FIFO.  This module
+//! supplies the ordering policy that replaces it:
+//!
+//! * **Classes** ([`Class`]): `Interactive` > `Batch` > `BestEffort`,
+//!   with *strict precedence at dequeue* — a queued Interactive request
+//!   is always dispatched before any queued Batch request.
+//! * **EDF within a class**: requests carrying a deadline sort earliest
+//!   deadline first; deadline-less requests come after all deadlined
+//!   peers of their class, in FIFO order.
+//! * **Aging** (no starvation): a request pending longer than the
+//!   queue's `aging_bound` is promoted above every un-aged class, so a
+//!   saturating stream of Interactive traffic cannot starve BestEffort
+//!   forever.  Aged requests order among themselves by deadline then
+//!   arrival.
+//! * **Shedding** ([`ClassQueue::shed_victim`]): under overload the
+//!   queue can give up its worst-ranked entry — strictly lower
+//!   precedence than the newcomer, greediest tenant first among equals —
+//!   so high classes displace low ones instead of being rejected.
+//! * **Expiry** ([`ClassQueue::take_expired`]): entries whose deadline
+//!   already passed are dropped *before* fusion — expired work never
+//!   wastes a launch.
+//!
+//! [`Clock`] abstracts `Instant::now` so the deterministic QoS tests can
+//! drive ordering, aging and expiry with a [`ManualClock`] instead of
+//! sleeps.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Service class of one request: strict precedence at dequeue,
+/// `Interactive` first.  The default class is `Interactive`, so a plain
+/// `submit` (no [`SubmitOpts`]) is never penalized by QoS-aware peers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Class {
+    /// Latency-sensitive traffic: always dispatched before queued
+    /// `Batch`/`BestEffort` work (aged entries excepted).
+    #[default]
+    Interactive,
+    /// Throughput traffic: yields to `Interactive`, beats `BestEffort`.
+    Batch,
+    /// Scavenger traffic: runs when nothing better is queued (the aging
+    /// bound guarantees it eventually does).
+    BestEffort,
+}
+
+/// Rank precedence of an entry pending past the aging bound: above
+/// every un-aged class.
+const AGED_PRECEDENCE: u8 = 0;
+
+impl Class {
+    /// Every class, in precedence order.
+    pub const ALL: [Class; 3] = [Class::Interactive, Class::Batch, Class::BestEffort];
+
+    /// Dequeue precedence (lower dispatches first); `0` is reserved for
+    /// aged entries.
+    pub fn precedence(self) -> u8 {
+        match self {
+            Class::Interactive => 1,
+            Class::Batch => 2,
+            Class::BestEffort => 3,
+        }
+    }
+
+    /// Stable lowercase name (metric labels, bench rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Batch => "batch",
+            Class::BestEffort => "best_effort",
+        }
+    }
+
+    /// Dense index (`0..3`) for per-class counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Batch => 1,
+            Class::BestEffort => 2,
+        }
+    }
+
+    /// Parse a class name as printed by [`Class::name`].
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "interactive" => Some(Class::Interactive),
+            "batch" => Some(Class::Batch),
+            "best_effort" => Some(Class::BestEffort),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request QoS options for
+/// [`ServiceClient::submit_with`](super::ServiceClient::submit_with).
+///
+/// The default (`SubmitOpts::default()`, what plain `submit` uses) is an
+/// anonymous Interactive request with no deadline — exactly the old
+/// FIFO behavior when every request looks like that.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// Tenant identity for quota accounting (`None` = anonymous; all
+    /// anonymous requests share one quota bucket when a quota is set).
+    pub tenant: Option<String>,
+    /// Service class (strict precedence at dequeue).
+    pub class: Class,
+    /// Relative deadline: measured from submission, converted to an
+    /// absolute instant at admission.  An entry still queued past its
+    /// deadline is dropped (ticket resolves
+    /// [`ServeError::Expired`](super::ServeError::Expired)) instead of
+    /// wasting a launch; EDF orders deadlined peers within a class.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOpts {
+    /// Options for one `class`, anonymous, no deadline.
+    pub fn class(class: Class) -> SubmitOpts {
+        SubmitOpts { class, ..SubmitOpts::default() }
+    }
+
+    /// Set the tenant identity.
+    pub fn tenant(mut self, tenant: impl Into<String>) -> SubmitOpts {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Set the relative deadline.
+    pub fn deadline(mut self, deadline: Duration) -> SubmitOpts {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// The queue's time source.  Production uses [`Clock::system`]
+/// (`Instant::now`); the deterministic QoS tests inject
+/// [`Clock::manual`] and advance it explicitly — no sleeps.
+///
+/// A manual clock never advances on its own, so configs driving it must
+/// use `max_batch_delay = 0` (the dispatcher's linger wait would
+/// otherwise spin on a frozen deadline).
+#[derive(Clone)]
+pub struct Clock(Arc<dyn Fn() -> Instant + Send + Sync>);
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Clock(..)")
+    }
+}
+
+impl Clock {
+    /// The real time source.
+    pub fn system() -> Clock {
+        Clock(Arc::new(Instant::now))
+    }
+
+    /// A frozen, explicitly-advanced time source and its controller.
+    pub fn manual() -> (Clock, ManualClock) {
+        let ctl = ManualClock { base: Instant::now(), offset: Arc::new(AtomicU64::new(0)) };
+        let base = ctl.base;
+        let offset = ctl.offset.clone();
+        let clock = Clock(Arc::new(move || {
+            base + Duration::from_nanos(offset.load(AtomicOrdering::SeqCst))
+        }));
+        (clock, ctl)
+    }
+
+    /// The current instant per this clock.
+    pub fn now(&self) -> Instant {
+        (self.0)()
+    }
+}
+
+/// Controller half of [`Clock::manual`]: advances the frozen clock.
+#[derive(Debug, Clone)]
+pub struct ManualClock {
+    base: Instant,
+    offset: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    /// Advance the clock by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.offset.fetch_add(d.as_nanos() as u64, AtomicOrdering::SeqCst);
+    }
+
+    /// The instant the paired clock currently reports.
+    pub fn now(&self) -> Instant {
+        self.base + Duration::from_nanos(self.offset.load(AtomicOrdering::SeqCst))
+    }
+}
+
+/// Dispatch rank of one queued entry at one instant — *lower dispatches
+/// first*.  Ordering: precedence (aged = 0, then class), then EDF
+/// (earliest deadline; deadline-less after every deadlined peer), then
+/// arrival order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rank {
+    /// [`Class::precedence`], or `0` once aged.
+    pub precedence: u8,
+    /// Absolute deadline (`None` sorts after every `Some`).
+    pub deadline: Option<Instant>,
+    /// Queue arrival order (FIFO tiebreak).
+    pub seq: u64,
+}
+
+impl Ord for Rank {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.precedence
+            .cmp(&other.precedence)
+            .then_with(|| match (self.deadline, other.deadline) {
+                (Some(a), Some(b)) => a.cmp(&b),
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => std::cmp::Ordering::Equal,
+            })
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Rank {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One entry of a [`ClassQueue`]: the payload plus everything the QoS
+/// policy ranks on.
+#[derive(Debug)]
+pub struct QosEntry<T> {
+    /// The queued payload.
+    pub payload: T,
+    /// Queue-unique arrival sequence number (the FIFO tiebreak, and the
+    /// handle cancellation removes by).
+    pub seq: u64,
+    /// Service class.
+    pub class: Class,
+    /// Tenant identity (`None` = anonymous bucket).
+    pub tenant: Option<String>,
+    /// Absolute deadline, if any.
+    pub deadline: Option<Instant>,
+    /// When the entry was enqueued (per the owning queue's clock).
+    pub enqueued: Instant,
+    /// Batch-compatibility key (only equal keys fuse).
+    pub compat: u64,
+    /// Fused index-space items this entry contributes.
+    pub items: usize,
+}
+
+impl<T> QosEntry<T> {
+    /// This entry's dispatch rank at `now` under `aging_bound`.
+    pub fn rank(&self, now: Instant, aging_bound: Duration) -> Rank {
+        let aged = now.saturating_duration_since(self.enqueued) >= aging_bound;
+        Rank {
+            precedence: if aged { AGED_PRECEDENCE } else { self.class.precedence() },
+            deadline: self.deadline,
+            seq: self.seq,
+        }
+    }
+
+    /// Whether the entry's deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now > d)
+    }
+}
+
+fn tenant_key(tenant: &Option<String>) -> &str {
+    tenant.as_deref().unwrap_or("")
+}
+
+/// The class/deadline-aware pending queue (see the module docs for the
+/// policy).  Not synchronized — the batcher wraps it in its state
+/// mutex; exposed `pub` so the property suite can drive it directly.
+#[derive(Debug)]
+pub struct ClassQueue<T> {
+    entries: Vec<QosEntry<T>>,
+    aging_bound: Duration,
+    next_seq: u64,
+    tenants: BTreeMap<String, usize>,
+}
+
+impl<T> ClassQueue<T> {
+    /// An empty queue; entries pending ≥ `aging_bound` outrank every
+    /// un-aged class (`Duration::MAX` disables aging).
+    pub fn new(aging_bound: Duration) -> ClassQueue<T> {
+        ClassQueue { entries: Vec::new(), aging_bound, next_seq: 0, tenants: BTreeMap::new() }
+    }
+
+    /// The queue's aging bound.
+    pub fn aging_bound(&self) -> Duration {
+        self.aging_bound
+    }
+
+    /// Entries currently queued.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries currently queued for `tenant` (`None` = the anonymous
+    /// bucket).
+    pub fn tenant_pending(&self, tenant: Option<&str>) -> usize {
+        self.tenants.get(tenant.unwrap_or("")).copied().unwrap_or(0)
+    }
+
+    /// Enqueue a payload; returns its queue-unique sequence number (the
+    /// cancellation handle).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        payload: T,
+        class: Class,
+        tenant: Option<String>,
+        deadline: Option<Instant>,
+        compat: u64,
+        items: usize,
+        now: Instant,
+    ) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        *self.tenants.entry(tenant_key(&tenant).to_string()).or_insert(0) += 1;
+        self.entries.push(QosEntry {
+            payload,
+            seq,
+            class,
+            tenant,
+            deadline,
+            enqueued: now,
+            compat,
+            items,
+        });
+        seq
+    }
+
+    fn forget_tenant(tenants: &mut BTreeMap<String, usize>, entry_tenant: &Option<String>) {
+        let key = tenant_key(entry_tenant);
+        if let Some(n) = tenants.get_mut(key) {
+            *n -= 1;
+            if *n == 0 {
+                tenants.remove(key);
+            }
+        }
+    }
+
+    fn remove_at(&mut self, idx: usize) -> QosEntry<T> {
+        let e = self.entries.swap_remove(idx);
+        Self::forget_tenant(&mut self.tenants, &e.tenant);
+        e
+    }
+
+    /// Remove the entry with sequence number `seq` (cancellation path);
+    /// `None` when it already left the queue.
+    pub fn remove_seq(&mut self, seq: u64) -> Option<QosEntry<T>> {
+        let idx = self.entries.iter().position(|e| e.seq == seq)?;
+        Some(self.remove_at(idx))
+    }
+
+    /// Remove and return every entry whose deadline passed at `now`.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<QosEntry<T>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.entries.len() {
+            if self.entries[i].expired(now) {
+                out.push(self.remove_at(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    fn front_idx(&self, now: Instant) -> Option<usize> {
+        let bound = self.aging_bound;
+        self.entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.rank(now, bound))
+            .map(|(i, _)| i)
+    }
+
+    /// The entry the policy would dispatch first at `now`.
+    pub fn front(&self, now: Instant) -> Option<&QosEntry<T>> {
+        self.front_idx(now).map(|i| &self.entries[i])
+    }
+
+    /// The batch the policy would take at `now` (see [`take_batch`]):
+    /// `(requests, items)`.  The lead entry always counts, even alone
+    /// over the cap.
+    ///
+    /// [`take_batch`]: ClassQueue::take_batch
+    pub fn preview_batch(&self, max_items: usize, now: Instant) -> (usize, usize) {
+        let sel = self.select_batch(max_items, now);
+        let items = sel.iter().map(|&i| self.entries[i].items).sum();
+        (sel.len(), items)
+    }
+
+    /// Indices (into `entries`) of the next batch, rank order.
+    fn select_batch(&self, max_items: usize, now: Instant) -> Vec<usize> {
+        let lead = match self.front_idx(now) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        let bound = self.aging_bound;
+        let compat = self.entries[lead].compat;
+        let mut peers: Vec<usize> = (0..self.entries.len())
+            .filter(|&i| self.entries[i].compat == compat)
+            .collect();
+        peers.sort_by_key(|&i| self.entries[i].rank(now, bound));
+        let mut sel = Vec::new();
+        let mut items = 0usize;
+        for i in peers {
+            let e = &self.entries[i];
+            if !sel.is_empty() && items.saturating_add(e.items) > max_items {
+                break;
+            }
+            items = items.saturating_add(e.items);
+            sel.push(i);
+            if items >= max_items {
+                break;
+            }
+        }
+        sel
+    }
+
+    /// Take the next batch at `now`: the best-ranked entry plus every
+    /// same-compat entry in rank order until `max_items` fills.  Unlike
+    /// the old FIFO head run, incompatible entries are *skipped over*
+    /// rather than sealing the batch — strict class precedence requires
+    /// reordering, and the aging bound (not queue position) is what
+    /// prevents starvation of the skipped.  Returned in rank order.
+    pub fn take_batch(&mut self, max_items: usize, now: Instant) -> Vec<QosEntry<T>> {
+        let mut sel = self.select_batch(max_items, now);
+        // remove back-to-front so indices stay valid; swap_remove order
+        // is repaired by the final rank sort
+        sel.sort_unstable();
+        let mut out: Vec<QosEntry<T>> = Vec::with_capacity(sel.len());
+        for idx in sel.into_iter().rev() {
+            out.push(self.remove_at(idx));
+        }
+        let bound = self.aging_bound;
+        out.sort_by_key(|e| e.rank(now, bound));
+        out
+    }
+
+    /// Pick (and remove) a shed victim to make room for a newcomer of
+    /// `incoming` class: the worst-ranked entry, preferring the
+    /// greediest tenant among entries of equally bad precedence.  Only
+    /// entries of *strictly lower* precedence than the (un-aged)
+    /// newcomer are eligible — same-class overload must fall back to
+    /// block/reject, and an aged entry is never shed.
+    pub fn shed_victim(&mut self, incoming: Class, now: Instant) -> Option<QosEntry<T>> {
+        let bound = self.aging_bound;
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.rank(now, bound).precedence > incoming.precedence())
+            .max_by(|(_, a), (_, b)| {
+                let (ra, rb) = (a.rank(now, bound), b.rank(now, bound));
+                ra.precedence
+                    .cmp(&rb.precedence)
+                    .then_with(|| {
+                        self.tenant_pending(a.tenant.as_deref())
+                            .cmp(&self.tenant_pending(b.tenant.as_deref()))
+                    })
+                    // among precedence+greed ties, the worse-ranked
+                    // (later deadline / later arrival) entry goes
+                    .then_with(|| Rank { precedence: 0, ..ra }.cmp(&Rank { precedence: 0, ..rb }))
+            })
+            .map(|(i, _)| i)?;
+        Some(self.remove_at(victim))
+    }
+
+    /// Every queued seq in dispatch-rank order at `now` (test hook: the
+    /// property suite asserts policy invariants against this).
+    pub fn ranked_seqs(&self, now: Instant) -> Vec<u64> {
+        let bound = self.aging_bound;
+        let mut seqs: Vec<(Rank, u64)> =
+            self.entries.iter().map(|e| (e.rank(now, bound), e.seq)).collect();
+        seqs.sort();
+        seqs.into_iter().map(|(_, s)| s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NO_AGING: Duration = Duration::MAX;
+
+    fn push(q: &mut ClassQueue<u64>, class: Class, dl_ms: Option<u64>, now: Instant) -> u64 {
+        let deadline = dl_ms.map(|ms| now + Duration::from_millis(ms));
+        q.push(0, class, None, deadline, 0, 1, now)
+    }
+
+    #[test]
+    fn strict_class_precedence_at_dequeue() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(NO_AGING);
+        let be = push(&mut q, Class::BestEffort, None, now);
+        let ba = push(&mut q, Class::Batch, None, now);
+        let ia = push(&mut q, Class::Interactive, None, now);
+        assert_eq!(q.ranked_seqs(now), vec![ia, ba, be]);
+        assert_eq!(q.front(now).unwrap().seq, ia);
+    }
+
+    #[test]
+    fn edf_within_class_and_deadline_less_last() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(NO_AGING);
+        let none = push(&mut q, Class::Batch, None, now);
+        let late = push(&mut q, Class::Batch, Some(50), now);
+        let soon = push(&mut q, Class::Batch, Some(10), now);
+        assert_eq!(q.ranked_seqs(now), vec![soon, late, none]);
+    }
+
+    #[test]
+    fn fifo_within_class_without_deadlines() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(NO_AGING);
+        let a = push(&mut q, Class::Interactive, None, now);
+        let b = push(&mut q, Class::Interactive, None, now);
+        let c = push(&mut q, Class::Interactive, None, now);
+        assert_eq!(q.ranked_seqs(now), vec![a, b, c]);
+    }
+
+    #[test]
+    fn aging_promotes_over_every_class() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(Duration::from_millis(100));
+        let be = push(&mut q, Class::BestEffort, None, now);
+        let later = now + Duration::from_millis(150);
+        let ia = push(&mut q, Class::Interactive, None, later);
+        // at `later` the BestEffort entry has aged past the bound
+        assert_eq!(q.ranked_seqs(later), vec![be, ia]);
+    }
+
+    #[test]
+    fn take_batch_skips_incompatible_and_respects_cap() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(NO_AGING);
+        q.push(1, Class::Batch, None, None, 7, 10, now);
+        q.push(2, Class::Interactive, None, None, 9, 10, now);
+        q.push(3, Class::Batch, None, None, 9, 10, now);
+        // lead is the Interactive entry (compat 9); the compat-7 entry
+        // is skipped over, the compat-9 Batch entry joins
+        let batch = q.take_batch(100, now);
+        let payloads: Vec<u64> = batch.iter().map(|e| e.payload).collect();
+        assert_eq!(payloads, vec![2, 3]);
+        assert_eq!(q.len(), 1);
+        // the cap still binds: lead alone over the cap runs alone
+        q.push(4, Class::Interactive, None, None, 7, 500, now);
+        let batch = q.take_batch(100, now);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].payload, 4);
+    }
+
+    #[test]
+    fn expiry_removes_only_past_deadline() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(NO_AGING);
+        let dead = push(&mut q, Class::Batch, Some(10), now);
+        let alive = push(&mut q, Class::Batch, Some(100), now);
+        let later = now + Duration::from_millis(50);
+        let expired = q.take_expired(later);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].seq, dead);
+        assert_eq!(q.ranked_seqs(later), vec![alive]);
+    }
+
+    #[test]
+    fn shed_prefers_lowest_class_then_greediest_tenant() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(NO_AGING);
+        q.push(0, Class::Batch, Some("small".into()), None, 0, 1, now);
+        q.push(1, Class::BestEffort, Some("small".into()), None, 0, 1, now);
+        q.push(2, Class::BestEffort, Some("greedy".into()), None, 0, 1, now);
+        q.push(3, Class::BestEffort, Some("greedy".into()), None, 0, 1, now);
+        // BestEffort outranks Batch as victim; "greedy" holds more slots
+        let v = q.shed_victim(Class::Interactive, now).unwrap();
+        assert_eq!(v.class, Class::BestEffort);
+        assert_eq!(v.tenant.as_deref(), Some("greedy"));
+        // a Batch newcomer may shed BestEffort but never fellow Batch
+        let v = q.shed_victim(Class::Batch, now).unwrap();
+        assert_eq!(v.class, Class::BestEffort);
+        let v = q.shed_victim(Class::Batch, now).unwrap();
+        assert_eq!(v.class, Class::BestEffort);
+        assert!(q.shed_victim(Class::Batch, now).is_none(), "only Batch left");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn aged_entries_are_never_shed() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(Duration::from_millis(10));
+        push(&mut q, Class::BestEffort, None, now);
+        let later = now + Duration::from_millis(20);
+        assert!(q.shed_victim(Class::Interactive, later).is_none());
+    }
+
+    #[test]
+    fn tenant_accounting_tracks_push_and_removals() {
+        let now = Instant::now();
+        let mut q = ClassQueue::new(NO_AGING);
+        let a = q.push(0, Class::Batch, Some("t0".into()), None, 0, 1, now);
+        q.push(0, Class::Batch, Some("t0".into()), None, 0, 1, now);
+        q.push(0, Class::Batch, None, None, 0, 1, now);
+        assert_eq!(q.tenant_pending(Some("t0")), 2);
+        assert_eq!(q.tenant_pending(None), 1);
+        q.remove_seq(a).unwrap();
+        assert_eq!(q.tenant_pending(Some("t0")), 1);
+        let batch = q.take_batch(100, now);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(q.tenant_pending(Some("t0")), 0);
+        assert_eq!(q.tenant_pending(None), 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn manual_clock_advances_only_on_demand() {
+        let (clock, ctl) = Clock::manual();
+        let t0 = clock.now();
+        assert_eq!(clock.now(), t0);
+        ctl.advance(Duration::from_millis(250));
+        assert_eq!(clock.now(), t0 + Duration::from_millis(250));
+        assert_eq!(ctl.now(), clock.now());
+    }
+
+    #[test]
+    fn class_parse_round_trips() {
+        for c in Class::ALL {
+            assert_eq!(Class::parse(c.name()), Some(c));
+        }
+        assert_eq!(Class::parse("nope"), None);
+    }
+}

@@ -2,12 +2,15 @@
 //! threads submit [`HeteroMethod`] invocations to concurrently.
 //!
 //! See the [module docs](crate::serve) for the architecture and
-//! `docs/SERVING.md` for the full request lifecycle, batching rules and
-//! knob table.
+//! `docs/SERVING.md` for the full request lifecycle, batching rules,
+//! QoS semantics and knob table.
 
+use std::future::Future;
 use std::path::PathBuf;
+use std::pin::Pin;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Waker};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -18,6 +21,7 @@ use crate::somd::scheduler::Scheduler;
 use super::admission::{AdmissionPolicy, Gate};
 use super::batcher::{Lane, MethodQueue};
 use super::metrics::{ServeMetrics, ServeMetricsSnapshot};
+use super::qos::{Class, Clock, SubmitOpts};
 
 /// Default cap on fused index-space items per launch.
 pub const DEFAULT_MAX_BATCH_ITEMS: usize = 32_768;
@@ -25,6 +29,9 @@ pub const DEFAULT_MAX_BATCH_ITEMS: usize = 32_768;
 pub const DEFAULT_MAX_BATCH_DELAY: Duration = Duration::from_micros(500);
 /// Default bound on pending (admitted, unbatched) requests per method.
 pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+/// Default aging bound: a request pending this long outranks every
+/// un-aged class (see [`ClassQueue`](super::qos::ClassQueue)).
+pub const DEFAULT_AGING_BOUND: Duration = Duration::from_millis(500);
 
 /// Service tunables.  [`ServiceConfig::from_env`] reads the
 /// `SOMD_SERVE_*` / `SOMD_SCHED_SNAPSHOT` environment knobs documented
@@ -42,8 +49,17 @@ pub struct ServiceConfig {
     pub max_batch_delay: Duration,
     /// Bound on pending requests per method queue (admission depth).
     pub queue_depth: usize,
-    /// What a full queue does with the next request.
+    /// What a full queue does with the next request (after expired and
+    /// sheddable lower-class entries have been dropped to make room).
     pub admission: AdmissionPolicy,
+    /// Per-tenant cap on pending requests per method queue (`None` = no
+    /// quota).  The N+1th concurrently pending request of one tenant
+    /// fails with [`ServeError::OverQuota`] while other tenants proceed;
+    /// anonymous requests share one bucket.
+    pub tenant_quota: Option<usize>,
+    /// Requests pending longer than this outrank every un-aged class —
+    /// the no-starvation bound of the QoS queue.
+    pub aging_bound: Duration,
     /// Scheduler-history snapshot path: loaded at service construction
     /// (warm start) and written on drain, so lane/ratio learning
     /// survives process restarts.
@@ -57,6 +73,8 @@ impl Default for ServiceConfig {
             max_batch_delay: DEFAULT_MAX_BATCH_DELAY,
             queue_depth: DEFAULT_QUEUE_DEPTH,
             admission: AdmissionPolicy::Block,
+            tenant_quota: None,
+            aging_bound: DEFAULT_AGING_BOUND,
             sched_snapshot: None,
         }
     }
@@ -71,7 +89,9 @@ impl ServiceConfig {
     /// `docs/SERVING.md` for the table):
     /// `SOMD_SERVE_MAX_BATCH_ITEMS`, `SOMD_SERVE_MAX_BATCH_DELAY_US`,
     /// `SOMD_SERVE_QUEUE_DEPTH`, `SOMD_SERVE_ADMISSION` (`block` |
-    /// `reject`), `SOMD_SCHED_SNAPSHOT` (a file path).
+    /// `reject`), `SOMD_SERVE_TENANT_QUOTA` (`0` = no quota),
+    /// `SOMD_SERVE_AGING_BOUND_MS`, `SOMD_SCHED_SNAPSHOT` (a file
+    /// path).
     pub fn from_env() -> ServiceConfig {
         let mut cfg = ServiceConfig::default();
         if let Some(v) = env_parse::<usize>("SOMD_SERVE_MAX_BATCH_ITEMS") {
@@ -88,6 +108,12 @@ impl ServiceConfig {
                 cfg.admission = policy;
             }
         }
+        if let Some(v) = env_parse::<usize>("SOMD_SERVE_TENANT_QUOTA") {
+            cfg.tenant_quota = if v == 0 { None } else { Some(v) };
+        }
+        if let Some(v) = env_parse::<u64>("SOMD_SERVE_AGING_BOUND_MS") {
+            cfg.aging_bound = Duration::from_millis(v);
+        }
         if let Ok(p) = std::env::var("SOMD_SCHED_SNAPSHOT") {
             if !p.is_empty() {
                 cfg.sched_snapshot = Some(PathBuf::from(p));
@@ -102,6 +128,8 @@ impl ServiceConfig {
 pub(crate) struct BatchKnobs {
     pub(crate) max_batch_items: usize,
     pub(crate) max_batch_delay: Duration,
+    pub(crate) tenant_quota: Option<usize>,
+    pub(crate) aging_bound: Duration,
 }
 
 /// Why a serve request did not produce a result.
@@ -110,8 +138,21 @@ pub enum ServeError {
     /// Admission control turned the request away (full queue under the
     /// [`AdmissionPolicy::Reject`] policy).  Retriable.
     Rejected,
+    /// The submitting tenant already holds its full per-tenant quota of
+    /// pending requests ([`ServiceConfig::tenant_quota`]).  Retriable
+    /// once one of the tenant's own requests resolves.
+    OverQuota,
     /// The service is draining; no new requests are admitted.
     ShuttingDown,
+    /// The request was cancelled ([`Ticket::cancel`], or the ticket was
+    /// dropped unresolved).
+    Cancelled,
+    /// The request's deadline passed while it was still queued; it was
+    /// dropped before fusion (expired work never wastes a launch).
+    Expired,
+    /// The request was shed from a full queue to make room for a
+    /// strictly higher-class newcomer.  Retriable.
+    Shed,
     /// The request's batch failed (lane error, compose/split panic, or a
     /// dropped dispatcher); the message carries the cause.
     Failed(String),
@@ -121,7 +162,11 @@ impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ServeError::Rejected => write!(f, "request rejected by admission control"),
+            ServeError::OverQuota => write!(f, "tenant is over its pending-request quota"),
             ServeError::ShuttingDown => write!(f, "service is shutting down"),
+            ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::Expired => write!(f, "request deadline expired while queued"),
+            ServeError::Shed => write!(f, "request shed for a higher-class request"),
             ServeError::Failed(msg) => write!(f, "request failed: {msg}"),
         }
     }
@@ -147,34 +192,161 @@ pub struct ServeOutcome<R> {
     pub completed_at: Instant,
 }
 
+/// The write-once outcome cell a [`Ticket`] and its queue share: the
+/// demux, the failure path, expiry, shedding and cancellation all race
+/// to [`TicketInner::resolve`]; first write wins, everyone else
+/// observes `false` and leaves the metrics to the winner.
+pub(crate) struct TicketInner<R> {
+    state: Mutex<TicketSlot<R>>,
+    cv: Condvar,
+}
+
+struct TicketSlot<R> {
+    outcome: Option<Result<ServeOutcome<R>, ServeError>>,
+    taken: bool,
+    waker: Option<Waker>,
+}
+
+impl<R> TicketInner<R> {
+    pub(crate) fn new() -> TicketInner<R> {
+        TicketInner {
+            state: Mutex::new(TicketSlot { outcome: None, taken: false, waker: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Deliver the outcome; `false` when the ticket was already resolved
+    /// (or consumed) — the caller must not count the request again.
+    pub(crate) fn resolve(&self, outcome: Result<ServeOutcome<R>, ServeError>) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.taken || st.outcome.is_some() {
+            return false;
+        }
+        st.outcome = Some(outcome);
+        let waker = st.waker.take();
+        drop(st);
+        self.cv.notify_all();
+        if let Some(w) = waker {
+            w.wake();
+        }
+        true
+    }
+
+    fn is_resolved(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.taken || st.outcome.is_some()
+    }
+}
+
+/// Object-safe back-reference from a [`Ticket`] into its queue, so
+/// cancellation can reach the pending entry without knowing the
+/// method's generic types.
+pub(crate) trait CancelSink: Send + Sync {
+    /// Remove the queued entry with this sequence number, resolve its
+    /// ticket `Cancelled`, and free its admission slot; `false` when the
+    /// entry already left the queue (fused, shed, expired, or drained).
+    fn cancel_queued(&self, seq: u64) -> bool;
+    /// Record a cancellation that landed after the request was already
+    /// fused into an in-flight batch (the batch still completes; the
+    /// ticket resolves `Cancelled` without blocking the demux).
+    fn note_cancelled_inflight(&self);
+}
+
 /// A per-request future: resolves when the request's batch completes.
+///
+/// Three ways to consume it: [`Ticket::wait`] blocks, [`Ticket::try_wait`]
+/// polls, and the ticket is a [`Future`] (poll/waker) for async callers.
+/// [`Ticket::cancel`] abandons the request: still-queued work is dropped
+/// before fusion and its admission slot freed; work already fused into
+/// an in-flight batch completes, but the ticket resolves
+/// [`ServeError::Cancelled`] immediately.  **Dropping an unresolved
+/// ticket cancels it** — an abandoned request no longer runs (if still
+/// queued) or holds its admission slot.
 pub struct Ticket<R> {
-    rx: mpsc::Receiver<Result<ServeOutcome<R>, ServeError>>,
+    inner: Arc<TicketInner<R>>,
+    sink: Option<Arc<dyn CancelSink>>,
+    seq: u64,
 }
 
 impl<R> Ticket<R> {
-    pub(crate) fn new(rx: mpsc::Receiver<Result<ServeOutcome<R>, ServeError>>) -> Self {
-        Ticket { rx }
+    pub(crate) fn new(inner: Arc<TicketInner<R>>, sink: Arc<dyn CancelSink>, seq: u64) -> Self {
+        Ticket { inner, sink: Some(sink), seq }
     }
 
     /// Block for the outcome.
     pub fn wait(self) -> Result<ServeOutcome<R>, ServeError> {
-        match self.rx.recv() {
-            Ok(outcome) => outcome,
-            Err(_) => Err(ServeError::Failed("service dropped the request".to_string())),
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(outcome) = st.outcome.take() {
+                st.taken = true;
+                drop(st);
+                return outcome;
+            }
+            st = self.inner.cv.wait(st).unwrap();
         }
     }
 
-    /// Non-blocking poll: `Some(outcome)` once the batch completed (a
-    /// dropped request surfaces as the same failure `wait` reports, so
-    /// a polling client cannot spin forever on it).
+    /// Non-blocking poll: `Some(outcome)` once the request resolved.
     pub fn try_wait(&self) -> Option<Result<ServeOutcome<R>, ServeError>> {
-        match self.rx.try_recv() {
-            Ok(outcome) => Some(outcome),
-            Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err(ServeError::Failed("service dropped the request".to_string())))
+        let mut st = self.inner.state.lock().unwrap();
+        match st.outcome.take() {
+            Some(outcome) => {
+                st.taken = true;
+                Some(outcome)
             }
+            None => None,
+        }
+    }
+
+    /// Cancel the request.  Returns `true` when the cancellation took
+    /// effect (the ticket now resolves [`ServeError::Cancelled`]):
+    /// still-queued entries are removed before fusion and their
+    /// admission slot freed; an entry already fused into an in-flight
+    /// batch completes, but its ticket resolves `Cancelled` without
+    /// waiting for the demux.  `false` when the outcome already arrived.
+    pub fn cancel(&self) -> bool {
+        match &self.sink {
+            Some(sink) => {
+                if sink.cancel_queued(self.seq) {
+                    return true;
+                }
+                // already out of the queue: in flight, or racing the
+                // demux — first write to the cell wins
+                if self.inner.resolve(Err(ServeError::Cancelled)) {
+                    sink.note_cancelled_inflight();
+                    return true;
+                }
+                false
+            }
+            None => self.inner.resolve(Err(ServeError::Cancelled)),
+        }
+    }
+}
+
+impl<R> Future for Ticket<R> {
+    type Output = Result<ServeOutcome<R>, ServeError>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut st = self.inner.state.lock().unwrap();
+        match st.outcome.take() {
+            Some(outcome) => {
+                st.taken = true;
+                Poll::Ready(outcome)
+            }
+            None => {
+                st.waker = Some(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+impl<R> Drop for Ticket<R> {
+    /// Dropping an unresolved ticket cancels the request (see the type
+    /// docs): abandoned work must not run or hold an admission slot.
+    fn drop(&mut self) {
+        if !self.inner.is_resolved() {
+            self.cancel();
         }
     }
 }
@@ -234,6 +406,7 @@ impl<R> Ticket<R> {
 pub struct Service {
     engine: Arc<Engine>,
     cfg: ServiceConfig,
+    clock: Clock,
     metrics: Arc<ServeMetrics>,
     lanes: Mutex<Vec<Arc<dyn Lane>>>,
     dispatchers: Mutex<Vec<JoinHandle<()>>>,
@@ -252,7 +425,15 @@ impl Service {
     /// scheduler is replaced with the persisted history (warm start); a
     /// malformed snapshot is reported and ignored — serving cold beats
     /// not serving.
-    pub fn with_config(mut engine: Engine, cfg: ServiceConfig) -> Service {
+    pub fn with_config(engine: Engine, cfg: ServiceConfig) -> Service {
+        Service::with_config_clock(engine, cfg, Clock::system())
+    }
+
+    /// [`Service::with_config`] with an explicit time source — the
+    /// deterministic QoS tests inject [`Clock::manual`] here to drive
+    /// deadline ordering, aging and expiry without sleeps.  A manual
+    /// clock requires `max_batch_delay = 0` (see [`Clock`]).
+    pub fn with_config_clock(mut engine: Engine, cfg: ServiceConfig, clock: Clock) -> Service {
         if let Some(path) = &cfg.sched_snapshot {
             if path.exists() {
                 match Scheduler::load(path, engine.scheduler().config()) {
@@ -264,6 +445,7 @@ impl Service {
         Service {
             engine: Arc::new(engine),
             cfg,
+            clock,
             metrics: Arc::new(ServeMetrics::default()),
             lanes: Mutex::new(Vec::new()),
             dispatchers: Mutex::new(Vec::new()),
@@ -288,10 +470,10 @@ impl Service {
 
     /// Prometheus text exposition of the whole stack: the engine's
     /// metrics hub (placement counters, lane latency summaries, device
-    /// counters, queue-wait gauge) plus the serve-layer counters, one
-    /// scrapeable page.
+    /// counters, queue-wait gauge) plus the serve-layer counters and
+    /// per-class latency summaries, one scrapeable page.
     pub fn metrics_text(&self) -> String {
-        render_metrics(&self.engine, &self.metrics.snapshot())
+        render_metrics(&self.engine, &self.metrics)
     }
 
     /// Spawn the plain-HTTP scrape endpoint on `addr` (`host:0` picks an
@@ -304,9 +486,7 @@ impl Service {
     ) -> anyhow::Result<crate::obs::MetricsEndpoint> {
         let engine = self.engine.clone();
         let metrics = self.metrics.clone();
-        crate::obs::spawn_metrics_endpoint(addr, move || {
-            render_metrics(&engine, &metrics.snapshot())
-        })
+        crate::obs::spawn_metrics_endpoint(addr, move || render_metrics(&engine, &metrics))
     }
 
     /// Register a batchable method: creates its micro-batch queue, spawns
@@ -333,6 +513,8 @@ impl Service {
         let knobs = BatchKnobs {
             max_batch_items: self.cfg.max_batch_items.max(1),
             max_batch_delay: self.cfg.max_batch_delay,
+            tenant_quota: self.cfg.tenant_quota,
+            aging_bound: self.cfg.aging_bound,
         };
         let gate = Gate::new(self.cfg.queue_depth, self.cfg.admission);
         let queue = Arc::new(MethodQueue::new(
@@ -341,6 +523,7 @@ impl Service {
             knobs,
             gate,
             self.metrics.clone(),
+            self.clock.clone(),
         ));
         {
             // the drained check and the lane/dispatcher registration must
@@ -367,7 +550,9 @@ impl Service {
     /// dispatchers, flush the engine's device queue
     /// ([`Engine::drain`]), and — when configured — persist the
     /// scheduler snapshot.  In-flight batches complete
-    /// deterministically: every admitted request's ticket resolves.
+    /// deterministically: every admitted request's ticket resolves
+    /// (cancelled tickets resolved already — outstanding `Cancelled`
+    /// tickets never block the drain).
     pub fn drain(&self) {
         // flip the flag under the lanes lock so no register() can slip a
         // new lane in between the flag flip and the snapshot below
@@ -402,15 +587,20 @@ impl Drop for Service {
 }
 
 /// One exposition page: the engine hub snapshot with the serve counters
-/// merged in (the endpoint closure and [`Service::metrics_text`] share
-/// this so both render identically).
-fn render_metrics(engine: &Engine, s: &ServeMetricsSnapshot) -> String {
+/// and per-class latency summaries merged in (the endpoint closure and
+/// [`Service::metrics_text`] share this so both render identically).
+fn render_metrics(engine: &Engine, metrics: &ServeMetrics) -> String {
+    let s = metrics.snapshot();
     let mut snap = engine.metrics_snapshot();
     for (name, v) in [
         ("somd_serve_submitted_total", s.submitted),
         ("somd_serve_rejected_total", s.rejected),
         ("somd_serve_completed_total", s.completed),
         ("somd_serve_failed_total", s.failed),
+        ("somd_serve_cancelled_total", s.cancelled),
+        ("somd_serve_expired_total", s.expired),
+        ("somd_serve_shed_total", s.shed),
+        ("somd_serve_quota_rejected_total", s.quota_rejected),
         ("somd_serve_batches_total", s.batches),
         ("somd_serve_batched_requests_total", s.batched_requests),
         ("somd_serve_items_total", s.items),
@@ -421,6 +611,19 @@ fn render_metrics(engine: &Engine, s: &ServeMetricsSnapshot) -> String {
     snap.gauges.insert("somd_serve_mean_batch_requests".to_string(), s.mean_batch_requests());
     snap.gauges
         .insert("somd_serve_mean_batch_exec_seconds".to_string(), s.mean_batch_exec_secs());
+    for class in Class::ALL {
+        snap.counters.insert(
+            format!("somd_serve_class_completed_total{{class=\"{}\"}}", class.name()),
+            s.class_completed[class.index()],
+        );
+        let window = metrics.class_latency_window(class);
+        if !window.is_empty() {
+            snap.histos.insert(
+                format!("somd_serve_class_latency_seconds{{class=\"{}\"}}", class.name()),
+                window,
+            );
+        }
+    }
     snap.prometheus_text()
 }
 
@@ -444,11 +647,20 @@ where
     E: Sync + 'static,
     R: Send + 'static,
 {
-    /// Submit one invocation; returns the per-request future.  Blocks,
-    /// rejects or fails fast per the service's admission policy and
-    /// drain state.
+    /// Submit one invocation with default QoS (anonymous, Interactive,
+    /// no deadline — the old FIFO behavior when every request does
+    /// this); returns the per-request future.  Blocks, rejects or fails
+    /// fast per the service's admission policy and drain state.
     pub fn submit(&self, input: Arc<I>) -> Result<Ticket<R>, ServeError> {
-        self.queue.submit(input)
+        self.submit_with(input, SubmitOpts::default())
+    }
+
+    /// Submit one invocation with explicit QoS options: tenant identity
+    /// (quota accounting), service class (strict dequeue precedence),
+    /// and relative deadline (EDF within the class; still-queued work
+    /// past its deadline is dropped, not launched).
+    pub fn submit_with(&self, input: Arc<I>, opts: SubmitOpts) -> Result<Ticket<R>, ServeError> {
+        MethodQueue::submit(&self.queue, input, opts)
     }
 
     /// The method this client submits to.
@@ -460,5 +672,11 @@ where
     /// method's queue.
     pub fn pending(&self) -> usize {
         self.queue.pending()
+    }
+
+    /// Admission slots currently held on this method's queue (pending
+    /// requests; the cancellation tests pin slot conservation on this).
+    pub fn admission_outstanding(&self) -> usize {
+        self.queue.admission_outstanding()
     }
 }

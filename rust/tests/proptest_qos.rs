@@ -1,0 +1,325 @@
+//! Property suite for the QoS queue (satellite of the QoS serving PR),
+//! built on the in-tree `testkit` mini-framework (DESIGN.md §3).
+//!
+//! Two layers:
+//!
+//! * **Model-based**: a `ClassQueue` driven by random interleavings of
+//!   push / cancel / clock-advance / expiry / batch-take / shed is
+//!   compared against an independent reference model after every
+//!   operation — dispatch order (class precedence, EDF, aging, FIFO
+//!   tiebreak), per-tenant accounting, expiry sets, batch selection
+//!   under the item cap, shed-victim choice, and slot conservation all
+//!   have to agree exactly.
+//! * **End-to-end**: a real `Service` under random submit/cancel
+//!   interleavings must conserve admission slots and account every
+//!   request exactly once (completed + cancelled + shed), with every
+//!   delivered result bitwise equal to the direct invocation.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use somd::bench_suite::serve::vecadd_batched;
+use somd::serve::{
+    AdmissionPolicy, Class, ClassQueue, ServeError, Service, ServiceConfig, SubmitOpts,
+};
+use somd::somd::Engine;
+use somd::util::testkit::Prop;
+
+/// The reference model's copy of one queued entry (offsets from a base
+/// instant instead of raw `Instant`s, so the model is pure arithmetic).
+#[derive(Debug, Clone)]
+struct ModelEntry {
+    seq: u64,
+    class: Class,
+    tenant: Option<String>,
+    deadline: Option<Duration>,
+    enqueued: Duration,
+    compat: u64,
+    items: usize,
+}
+
+fn prec(e: &ModelEntry, now: Duration, bound: Duration) -> u8 {
+    if now.saturating_sub(e.enqueued) >= bound {
+        0 // aged: outranks every class
+    } else {
+        e.class.precedence()
+    }
+}
+
+/// Total dispatch order: precedence, then EDF (deadline-less last),
+/// then arrival — `seq` is unique, so the key is a total order.
+fn rank_key(e: &ModelEntry, now: Duration, bound: Duration) -> (u8, bool, Duration, u64) {
+    (prec(e, now, bound), e.deadline.is_none(), e.deadline.unwrap_or(Duration::ZERO), e.seq)
+}
+
+fn expected_order(model: &[ModelEntry], now: Duration, bound: Duration) -> Vec<u64> {
+    let mut entries: Vec<&ModelEntry> = model.iter().collect();
+    entries.sort_by_key(|e| rank_key(e, now, bound));
+    entries.into_iter().map(|e| e.seq).collect()
+}
+
+/// Reference batch selection: the best-ranked lead, then same-compat
+/// entries in rank order until the cap fills (the lead always counts,
+/// even alone over the cap).
+fn expected_batch(model: &[ModelEntry], cap: usize, now: Duration, bound: Duration) -> Vec<u64> {
+    let mut entries: Vec<&ModelEntry> = model.iter().collect();
+    entries.sort_by_key(|e| rank_key(e, now, bound));
+    let lead_compat = match entries.first() {
+        Some(e) => e.compat,
+        None => return Vec::new(),
+    };
+    let mut sel = Vec::new();
+    let mut items = 0usize;
+    for e in entries.into_iter().filter(|e| e.compat == lead_compat) {
+        if !sel.is_empty() && items + e.items > cap {
+            break;
+        }
+        items += e.items;
+        sel.push(e.seq);
+        if items >= cap {
+            break;
+        }
+    }
+    sel
+}
+
+fn tenant_counts(model: &[ModelEntry]) -> BTreeMap<String, usize> {
+    let mut counts = BTreeMap::new();
+    for e in model {
+        *counts.entry(e.tenant.clone().unwrap_or_default()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Reference shed victim: among entries of strictly lower precedence
+/// than the (un-aged) newcomer, the worst (precedence, greediest
+/// tenant, worst rank) — `None` when nothing is eligible.
+fn expected_victim(
+    model: &[ModelEntry],
+    incoming: Class,
+    now: Duration,
+    bound: Duration,
+) -> Option<u64> {
+    let counts = tenant_counts(model);
+    model
+        .iter()
+        .filter(|e| prec(e, now, bound) > incoming.precedence())
+        .max_by_key(|e| {
+            (
+                prec(e, now, bound),
+                counts[e.tenant.as_deref().unwrap_or("")],
+                e.deadline.is_none(),
+                e.deadline.unwrap_or(Duration::ZERO),
+                e.seq,
+            )
+        })
+        .map(|e| e.seq)
+}
+
+#[test]
+fn class_queue_matches_the_reference_model_under_random_interleavings() {
+    Prop::new("ClassQueue vs reference model", 0x0905_C1A5).runs(150).check(|g| {
+        let base = Instant::now();
+        let bound = Duration::from_millis(g.usize(5, 400) as u64);
+        let mut q: ClassQueue<u64> = ClassQueue::new(bound);
+        let mut model: Vec<ModelEntry> = Vec::new();
+        let mut now = Duration::ZERO;
+        let mut pushes = 0u64;
+        let mut removals = 0u64;
+        for _ in 0..g.usize(20, 60) {
+            match g.usize(0, 9) {
+                // push (weighted: the queue should usually be non-empty)
+                0..=3 => {
+                    let class = *g.pick(&Class::ALL);
+                    let tenant = match g.usize(0, 2) {
+                        0 => None,
+                        1 => Some("t1".to_string()),
+                        _ => Some("t2".to_string()),
+                    };
+                    let deadline = if g.bool() {
+                        Some(now + Duration::from_millis(g.usize(1, 400) as u64))
+                    } else {
+                        None
+                    };
+                    let compat = g.usize(0, 1) as u64;
+                    let items = g.usize(1, 8);
+                    let seq = q.push(
+                        pushes,
+                        class,
+                        tenant.clone(),
+                        deadline.map(|d| base + d),
+                        compat,
+                        items,
+                        base + now,
+                    );
+                    model.push(ModelEntry {
+                        seq,
+                        class,
+                        tenant,
+                        deadline,
+                        enqueued: now,
+                        compat,
+                        items,
+                    });
+                    pushes += 1;
+                }
+                // advance the clock: aging and expiry move
+                4 => now += Duration::from_millis(g.usize(0, 300) as u64),
+                // cancel a random live entry (and a known-dead seq)
+                5 => {
+                    if !model.is_empty() {
+                        let idx = g.usize(0, model.len() - 1);
+                        let seq = model[idx].seq;
+                        let e = q.remove_seq(seq).expect("a live seq must be removable");
+                        assert_eq!(e.seq, seq);
+                        model.remove(idx);
+                        removals += 1;
+                    }
+                    assert!(q.remove_seq(u64::MAX).is_none(), "unknown seqs remove nothing");
+                }
+                // expiry purge: exactly the past-deadline set leaves
+                6 => {
+                    let got: Vec<u64> =
+                        q.take_expired(base + now).into_iter().map(|e| e.seq).collect();
+                    let mut got_sorted = got.clone();
+                    got_sorted.sort_unstable();
+                    let mut want: Vec<u64> = model
+                        .iter()
+                        .filter(|e| e.deadline.is_some_and(|d| now > d))
+                        .map(|e| e.seq)
+                        .collect();
+                    want.sort_unstable();
+                    assert_eq!(got_sorted, want, "take_expired must drop exactly the expired set");
+                    model.retain(|e| !got.contains(&e.seq));
+                    removals += got.len() as u64;
+                }
+                // shed: exact victim agreement with the reference
+                7 => {
+                    let incoming = *g.pick(&Class::ALL);
+                    let want = expected_victim(&model, incoming, now, bound);
+                    let got = q.shed_victim(incoming, base + now);
+                    assert_eq!(got.as_ref().map(|e| e.seq), want, "shed victim diverged");
+                    if let Some(e) = got {
+                        let me = model.iter().find(|m| m.seq == e.seq).unwrap();
+                        assert_ne!(prec(me, now, bound), 0, "an aged entry must never be shed");
+                        model.retain(|m| m.seq != e.seq);
+                        removals += 1;
+                    }
+                }
+                // take a batch under a random item cap
+                _ => {
+                    let cap = g.usize(1, 16);
+                    let want = expected_batch(&model, cap, now, bound);
+                    let got: Vec<u64> =
+                        q.take_batch(cap, base + now).into_iter().map(|e| e.seq).collect();
+                    assert_eq!(got, want, "take_batch selection diverged (cap {cap})");
+                    model.retain(|e| !got.contains(&e.seq));
+                    removals += got.len() as u64;
+                }
+            }
+
+            // invariants after EVERY operation
+            assert_eq!(q.len(), model.len(), "length bookkeeping diverged");
+            assert_eq!(pushes - removals, q.len() as u64, "slot conservation violated");
+            let order = q.ranked_seqs(base + now);
+            assert_eq!(order, expected_order(&model, now, bound), "dispatch order diverged");
+            if let Some(front) = q.front(base + now) {
+                assert_eq!(front.seq, order[0], "front() must agree with the rank order");
+            }
+            // aged entries (precedence 0) all precede un-aged ones
+            let aged_of = |seq: u64| {
+                let e = model.iter().find(|e| e.seq == seq).unwrap();
+                prec(e, now, bound) == 0
+            };
+            if let Some(first_unaged) = order.iter().position(|&s| !aged_of(s)) {
+                assert!(
+                    order[first_unaged..].iter().all(|&s| !aged_of(s)),
+                    "an aged entry ranked below an un-aged one"
+                );
+            }
+            // per-tenant accounting agrees and sums to the length
+            let counts = tenant_counts(&model);
+            for tenant in ["", "t1", "t2"] {
+                let want = counts.get(tenant).copied().unwrap_or(0);
+                let key = if tenant.is_empty() { None } else { Some(tenant) };
+                assert_eq!(q.tenant_pending(key), want, "tenant '{tenant}' accounting diverged");
+            }
+            assert_eq!(counts.values().sum::<usize>(), q.len());
+        }
+    });
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn random_submit_cancel_interleavings_conserve_slots_and_outcomes() {
+    let inp = Arc::new((vec![1.5f32; 64], vec![2.25f32; 64]));
+    let want = bits(&vecadd_batched().smp.invoke(&inp, 2));
+    Prop::new("service slot conservation", 0x51_07C0).runs(12).check(|g| {
+        let cfg = ServiceConfig {
+            max_batch_items: *g.pick(&[1usize, 1 << 20]),
+            max_batch_delay: Duration::from_micros(g.usize(0, 500) as u64),
+            queue_depth: g.usize(2, 8),
+            admission: AdmissionPolicy::Block,
+            tenant_quota: if g.bool() { Some(2) } else { None },
+            aging_bound: Duration::from_millis(g.usize(1, 500) as u64),
+            ..ServiceConfig::default()
+        };
+        let service = Service::with_config(Engine::new(2), cfg);
+        let client = service.register(Arc::new(vecadd_batched())).unwrap();
+        let mut tickets = Vec::new();
+        let mut want_cancelled = 0u64;
+        let mut want_quota_rejected = 0u64;
+        for _ in 0..g.usize(5, 20) {
+            let mut opts = SubmitOpts::class(*g.pick(&Class::ALL));
+            match g.usize(0, 2) {
+                0 => {}
+                1 => opts = opts.tenant("t1"),
+                _ => opts = opts.tenant("t2"),
+            }
+            if g.bool() {
+                // generous: deadlines must order, never expire, in-test
+                opts = opts.deadline(Duration::from_secs(60));
+            }
+            match client.submit_with(inp.clone(), opts) {
+                Ok(t) => {
+                    if g.usize(0, 3) == 0 && t.cancel() {
+                        want_cancelled += 1;
+                    }
+                    tickets.push(t);
+                }
+                Err(ServeError::OverQuota) => want_quota_rejected += 1,
+                Err(other) => panic!("unexpected admission error {other:?}"),
+            }
+        }
+        service.drain();
+
+        let (mut completed, mut cancelled, mut shed) = (0u64, 0u64, 0u64);
+        for t in tickets {
+            match t.wait() {
+                Ok(out) => {
+                    assert_eq!(bits(&out.value), want, "a served result diverged bitwise");
+                    completed += 1;
+                }
+                Err(ServeError::Cancelled) => cancelled += 1,
+                Err(ServeError::Shed) => shed += 1,
+                Err(other) => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        assert_eq!(cancelled, want_cancelled, "cancel()==true must mean a Cancelled outcome");
+        let m = service.metrics();
+        assert_eq!(m.completed, completed);
+        assert_eq!(m.cancelled, cancelled);
+        assert_eq!(m.shed, shed);
+        assert_eq!(m.quota_rejected, want_quota_rejected);
+        assert_eq!(m.submitted, completed + cancelled + shed, "every admission accounted once");
+        assert_eq!(m.class_completed.iter().sum::<u64>(), completed);
+        assert_eq!(m.expired, 0);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(client.admission_outstanding(), 0, "every admission slot returned");
+    });
+}

@@ -28,7 +28,7 @@ fn coalescing_cfg(delay_ms: u64) -> ServiceConfig {
         max_batch_delay: Duration::from_millis(delay_ms),
         queue_depth: 1024,
         admission: AdmissionPolicy::Block,
-        sched_snapshot: None,
+        ..ServiceConfig::default()
     }
 }
 
@@ -198,7 +198,7 @@ fn reject_admission_sheds_load_when_the_queue_is_full() {
         max_batch_delay: Duration::ZERO,
         queue_depth: 2,
         admission: AdmissionPolicy::Reject,
-        sched_snapshot: None,
+        ..ServiceConfig::default()
     };
     let service = Service::with_config(Engine::new(1), cfg);
     let client = service.register(Arc::new(slow_vecadd(200))).unwrap();
@@ -232,7 +232,7 @@ fn block_admission_parks_the_submitter_until_space_frees() {
         max_batch_delay: Duration::ZERO,
         queue_depth: 1,
         admission: AdmissionPolicy::Block,
-        sched_snapshot: None,
+        ..ServiceConfig::default()
     };
     let service = Service::with_config(Engine::new(1), cfg);
     let client = service.register(Arc::new(slow_vecadd(120))).unwrap();
@@ -252,6 +252,44 @@ fn block_admission_parks_the_submitter_until_space_frees() {
         assert_eq!(bits(&t.wait().expect("served").value), want);
     }
     assert_eq!(service.metrics().rejected, 0, "block policy never sheds");
+}
+
+#[test]
+fn dropping_an_unresolved_ticket_cancels_and_frees_its_slot() {
+    // Serial drain, depth 2: hold the dispatcher on r1, fill the queue,
+    // then DROP a queued ticket without waiting on it.  The abandoned
+    // request must leave the queue and free its admission slot at once —
+    // the latent pre-QoS behavior was to keep it queued, run it, and
+    // throw the result away while a live submitter sat rejected.
+    let cfg = ServiceConfig {
+        max_batch_items: 1,
+        max_batch_delay: Duration::ZERO,
+        queue_depth: 2,
+        admission: AdmissionPolicy::Reject,
+        ..ServiceConfig::default()
+    };
+    let service = Service::with_config(Engine::new(1), cfg);
+    let client = service.register(Arc::new(slow_vecadd(200))).unwrap();
+    let inp = Arc::new(gen_pair(16, 5));
+
+    let t1 = client.submit(inp.clone()).expect("first request admitted");
+    // let the dispatcher pop r1 and start executing (its slot frees)
+    std::thread::sleep(Duration::from_millis(80));
+    let t2 = client.submit(inp.clone()).expect("queued (1/2)");
+    let t3 = client.submit(inp.clone()).expect("queued (2/2)");
+    assert_eq!(client.admission_outstanding(), 2);
+    drop(t2); // abandoned while still queued: drop-as-cancel
+    assert_eq!(client.admission_outstanding(), 1, "the dropped ticket frees its slot at once");
+    // the freed slot admits a request the full queue would have shed
+    let t4 = client.submit(inp.clone()).expect("slot reusable after the drop");
+    let want = bits(&vecadd_batched().smp.invoke(&inp, 1));
+    for t in [t1, t3, t4] {
+        assert_eq!(bits(&t.wait().expect("served").value), want);
+    }
+    let m = service.metrics();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.cancelled_queued, 1, "the drop landed before fusion");
+    assert_eq!(m.completed, 3, "the cancelled request never ran");
 }
 
 #[test]

@@ -1,0 +1,286 @@
+//! Cancellation lifecycle suite (satellite of the QoS serving PR).
+//! The contract under test, end to end:
+//!
+//! * cancelling a **queued** request removes it before fusion and frees
+//!   its admission slot immediately — a `Block`-parked submitter wakes
+//!   without waiting for the dispatcher;
+//! * cancelling a request already **fused** into an in-flight batch
+//!   resolves its ticket `Cancelled` at once (no demux wait) and never
+//!   poisons its batch peers;
+//! * `drain` terminates with cancelled tickets still outstanding;
+//! * the ticket is a real poll/waker [`Future`];
+//! * cancelling an already-completed request is a no-op (`false`), as
+//!   is dropping a consumed ticket.
+//!
+//! (The drop-as-cancel admission test, pinned via gate depth, lives in
+//! `serve_batching.rs` next to the admission tests it extends.)
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
+use std::time::Duration;
+
+use somd::backend::HeteroMethod;
+use somd::bench_suite::serve::{vecadd_batch_spec, vecadd_batched};
+use somd::serve::{AdmissionPolicy, ServeError, Service, ServiceConfig};
+use somd::somd::partition::Block1D;
+use somd::somd::reduction::Assemble;
+use somd::somd::{BlockPart, Engine, SomdMethod};
+
+/// Tag that makes the gated method park (holding its whole batch in
+/// flight) until the test releases the gate.
+const BLOCKER: u32 = 9999;
+
+type Pair = (Vec<f32>, Vec<f32>);
+type Gate = Arc<(Mutex<(bool, bool)>, Condvar)>; // (started, released)
+
+fn new_gate() -> Gate {
+    Arc::new((Mutex::new((false, false)), Condvar::new()))
+}
+
+fn wait_started(gate: &Gate) {
+    let (lock, cv) = gate.as_ref();
+    let mut st = lock.lock().unwrap();
+    while !st.0 {
+        st = cv.wait(st).unwrap();
+    }
+}
+
+fn release(gate: &Gate) {
+    let (lock, cv) = gate.as_ref();
+    lock.lock().unwrap().1 = true;
+    cv.notify_all();
+}
+
+fn tagged(tag: u32) -> Arc<Pair> {
+    let a: Vec<f32> = (0..8).map(|i| if i == 0 { tag as f32 } else { i as f32 }).collect();
+    let b: Vec<f32> = (0..8).map(|i| (i + 1) as f32).collect();
+    Arc::new((a, b))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A batchable vecadd that logs each executed request's tag and parks
+/// any batch whose *fused* input leads with [`BLOCKER`].
+fn gated_vecadd(
+    log: Arc<Mutex<Vec<u32>>>,
+    gate: Gate,
+) -> HeteroMethod<Pair, BlockPart, (), Vec<f32>> {
+    let smp = SomdMethod::new(
+        "Cancel.rec",
+        |inp: &Pair, n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        move |inp, p, _, _| {
+            let tag = inp.0[0] as u32;
+            if tag == BLOCKER {
+                let (lock, cv) = gate.as_ref();
+                let mut st = lock.lock().unwrap();
+                st.0 = true;
+                cv.notify_all();
+                while !st.1 {
+                    st = cv.wait(st).unwrap();
+                }
+            }
+            log.lock().unwrap().push(tag);
+            p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>()
+        },
+        Assemble,
+    );
+    HeteroMethod::smp_only(smp).with_batch(vecadd_batch_spec())
+}
+
+/// Serial-dispatch config (every request its own batch, no linger).
+fn serial_cfg(queue_depth: usize, admission: AdmissionPolicy) -> ServiceConfig {
+    ServiceConfig {
+        max_batch_items: 1,
+        max_batch_delay: Duration::ZERO,
+        queue_depth,
+        admission,
+        ..ServiceConfig::default()
+    }
+}
+
+#[test]
+fn cancel_while_queued_frees_the_slot_and_wakes_a_parked_submitter() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let service = Service::with_config(Engine::new(1), serial_cfg(1, AdmissionPolicy::Block));
+    let client = service.register(Arc::new(gated_vecadd(log.clone(), gate.clone()))).unwrap();
+
+    let blocker = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate); // the dispatcher is parked; the queue is empty
+    let t2 = client.submit(tagged(2)).expect("fills the depth-1 queue");
+    assert_eq!(client.admission_outstanding(), 1);
+
+    // a third submitter parks on Block admission; it signals right after
+    // admission, *before* waiting on its ticket
+    let (tx, rx) = mpsc::channel();
+    let c2 = client.clone();
+    let parked = std::thread::spawn(move || {
+        let t = c2.submit(tagged(3));
+        tx.send(()).unwrap();
+        t.map(|t| t.wait())
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(rx.try_recv().is_err(), "the queue is full: the submitter must still be parked");
+
+    // cancelling the queued request frees its slot at once — the parked
+    // submitter is admitted while the dispatcher is still parked
+    assert!(t2.cancel(), "a queued request is cancellable");
+    rx.recv_timeout(Duration::from_secs(5))
+        .expect("cancel must wake the Block-parked submitter without dispatcher help");
+    assert_eq!(client.admission_outstanding(), 1, "slot handed to the parked submitter");
+    match t2.wait() {
+        Err(ServeError::Cancelled) => {}
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+
+    release(&gate);
+    blocker.wait().expect("blocker served");
+    let t3_out = parked
+        .join()
+        .unwrap()
+        .expect("parked submit admitted")
+        .expect("parked request served");
+    assert_eq!(bits(&t3_out.value), bits(&vecadd_batched().smp.invoke(&tagged(3), 1)));
+
+    assert_eq!(log.lock().unwrap().clone(), vec![BLOCKER, 3], "tag 2 must never run");
+    let m = service.metrics();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.cancelled_queued, 1, "the cancel landed before fusion");
+    assert_eq!(m.completed, 2);
+    assert_eq!(client.admission_outstanding(), 0);
+}
+
+#[test]
+fn cancel_after_fusion_resolves_fast_and_never_poisons_peers() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    // aggressive coalescing: both requests fuse into one batch, which
+    // the gate then holds in flight
+    let cfg = ServiceConfig {
+        max_batch_items: 1 << 20,
+        max_batch_delay: Duration::from_millis(300),
+        queue_depth: 64,
+        admission: AdmissionPolicy::Block,
+        ..ServiceConfig::default()
+    };
+    let service = Service::with_config(Engine::new(1), cfg);
+    let client = service.register(Arc::new(gated_vecadd(log, gate.clone()))).unwrap();
+
+    let t1 = client.submit(tagged(BLOCKER)).unwrap(); // batch lead: parks the fused launch
+    let t2 = client.submit(tagged(2)).unwrap();
+    wait_started(&gate); // the two-request batch is in flight, queue empty
+
+    // cancelling in flight resolves the ticket NOW — wait() returns
+    // while the batch is still parked, proving no demux dependence
+    assert!(t1.cancel(), "an in-flight request is cancellable (ticket-level)");
+    match t1.wait() {
+        Err(ServeError::Cancelled) => {}
+        other => panic!("expected immediate Cancelled in flight, got {other:?}"),
+    }
+
+    release(&gate);
+    let out2 = t2.wait().expect("the cancelled peer must not poison the batch");
+    assert_eq!(bits(&out2.value), bits(&vecadd_batched().smp.invoke(&tagged(2), 1)));
+    assert_eq!(out2.batch_requests, 2, "both requests shared the launch");
+
+    let m = service.metrics();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.cancelled_queued, 0, "the cancel landed after fusion");
+    assert_eq!(m.completed, 1, "only the delivered peer counts completed");
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.batches, 1);
+    assert_eq!(client.admission_outstanding(), 0);
+}
+
+#[test]
+fn drain_terminates_with_outstanding_cancelled_tickets() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let service = Service::with_config(Engine::new(1), serial_cfg(8, AdmissionPolicy::Reject));
+    let client = service.register(Arc::new(gated_vecadd(log.clone(), gate.clone()))).unwrap();
+
+    let blocker = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate);
+    let t1 = client.submit(tagged(1)).unwrap();
+    let t2 = client.submit(tagged(2)).unwrap();
+    let t3 = client.submit(tagged(3)).unwrap();
+    assert!(t2.cancel());
+
+    release(&gate);
+    service.drain(); // must terminate: the cancelled ticket is not waited
+    blocker.wait().expect("blocker served");
+    t1.wait().expect("queued survivor served across drain");
+    t3.wait().expect("queued survivor served across drain");
+    match t2.wait() {
+        Err(ServeError::Cancelled) => {}
+        other => panic!("expected Cancelled after drain, got {other:?}"),
+    }
+    assert_eq!(log.lock().unwrap().clone(), vec![BLOCKER, 1, 3]);
+    match client.submit(tagged(4)) {
+        Err(ServeError::ShuttingDown) => {}
+        other => panic!("expected ShuttingDown after drain, got {other:?}"),
+    }
+    let m = service.metrics();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(client.admission_outstanding(), 0);
+}
+
+fn noop_waker() -> Waker {
+    fn clone(_: *const ()) -> RawWaker {
+        RawWaker::new(std::ptr::null(), &VTABLE)
+    }
+    fn noop(_: *const ()) {}
+    static VTABLE: RawWakerVTable = RawWakerVTable::new(clone, noop, noop, noop);
+    unsafe { Waker::from_raw(RawWaker::new(std::ptr::null(), &VTABLE)) }
+}
+
+#[test]
+fn ticket_is_a_future_pending_then_ready() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let service = Service::with_config(Engine::new(1), serial_cfg(8, AdmissionPolicy::Block));
+    let client = service.register(Arc::new(gated_vecadd(log, gate.clone()))).unwrap();
+
+    let mut t = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate);
+    let waker = noop_waker();
+    let mut cx = Context::from_waker(&waker);
+    assert!(Pin::new(&mut t).poll(&mut cx).is_pending(), "an in-flight ticket must poll Pending");
+    release(&gate);
+    let out = loop {
+        match Pin::new(&mut t).poll(&mut cx) {
+            Poll::Ready(out) => break out,
+            Poll::Pending => std::thread::yield_now(),
+        }
+    };
+    let out = out.expect("polled ticket resolves the outcome");
+    assert_eq!(bits(&out.value), bits(&vecadd_batched().smp.invoke(&tagged(BLOCKER), 1)));
+    assert_eq!(service.metrics().completed, 1);
+}
+
+#[test]
+fn cancel_after_completion_is_a_no_op() {
+    let service = Service::with_config(Engine::new(1), serial_cfg(8, AdmissionPolicy::Block));
+    let client = service.register(Arc::new(vecadd_batched())).unwrap();
+    let t = client.submit(tagged(7)).unwrap();
+    let out = loop {
+        match t.try_wait() {
+            Some(out) => break out,
+            None => std::thread::yield_now(),
+        }
+    };
+    let out = out.expect("served");
+    assert_eq!(bits(&out.value), bits(&vecadd_batched().smp.invoke(&tagged(7), 1)));
+    assert!(!t.cancel(), "a completed request is not cancellable");
+    drop(t); // a consumed ticket's drop must not count a cancellation
+    let m = service.metrics();
+    assert_eq!(m.cancelled, 0);
+    assert_eq!(m.completed, 1);
+    assert_eq!(client.admission_outstanding(), 0);
+}

@@ -44,20 +44,32 @@ fn service_config_reads_env_knobs() {
     std::env::set_var("SOMD_SERVE_MAX_BATCH_DELAY_US", "250");
     std::env::set_var("SOMD_SERVE_QUEUE_DEPTH", "9");
     std::env::set_var("SOMD_SERVE_ADMISSION", "reject");
+    std::env::set_var("SOMD_SERVE_TENANT_QUOTA", "8");
+    std::env::set_var("SOMD_SERVE_AGING_BOUND_MS", "125");
     std::env::set_var("SOMD_SCHED_SNAPSHOT", "/tmp/somd_sched.json");
     let cfg = ServiceConfig::from_env();
+    // quota "0" is the documented "no quota" spelling
+    std::env::set_var("SOMD_SERVE_TENANT_QUOTA", "0");
+    let no_quota = ServiceConfig::from_env();
     std::env::remove_var("SOMD_SERVE_MAX_BATCH_ITEMS");
     std::env::remove_var("SOMD_SERVE_MAX_BATCH_DELAY_US");
     std::env::remove_var("SOMD_SERVE_QUEUE_DEPTH");
     std::env::remove_var("SOMD_SERVE_ADMISSION");
+    std::env::remove_var("SOMD_SERVE_TENANT_QUOTA");
+    std::env::remove_var("SOMD_SERVE_AGING_BOUND_MS");
     std::env::remove_var("SOMD_SCHED_SNAPSHOT");
     assert_eq!(cfg.max_batch_items, 4096);
     assert_eq!(cfg.max_batch_delay, Duration::from_micros(250));
     assert_eq!(cfg.queue_depth, 9);
     assert_eq!(cfg.admission, AdmissionPolicy::Reject);
+    assert_eq!(cfg.tenant_quota, Some(8));
+    assert_eq!(cfg.aging_bound, Duration::from_millis(125));
+    assert_eq!(no_quota.tenant_quota, None);
     assert_eq!(cfg.sched_snapshot.as_deref(), Some(std::path::Path::new("/tmp/somd_sched.json")));
     // and the hermetic default ignores the (now cleared) environment
     let d = ServiceConfig::default();
     assert_eq!(d.admission, AdmissionPolicy::Block);
+    assert_eq!(d.tenant_quota, None);
+    assert_eq!(d.aging_bound, somd::serve::DEFAULT_AGING_BOUND);
     assert_eq!(d.sched_snapshot, None);
 }

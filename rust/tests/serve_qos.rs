@@ -1,0 +1,405 @@
+//! Multi-tenant QoS suite (satellite of the QoS serving PR): strict
+//! class precedence at dispatch, EDF ordering under a manual clock (no
+//! sleeps), aging un-starving BestEffort, per-tenant quota enforcement,
+//! and the contract that matters most — QoS reordering never changes a
+//! single result bit relative to FIFO service or direct invocation.
+//!
+//! Dispatch-order tests share one technique: `max_batch_items: 1`
+//! serializes the dispatcher (every request is its own batch), and a
+//! "blocker" request parks the dispatcher inside its MI body on a
+//! condvar gate, so the test can load the queue in a chosen order
+//! before any QoS decision is made.  The recording method logs the tag
+//! of every request it executes — the log *is* the dispatch order.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use somd::backend::HeteroMethod;
+use somd::bench_suite::crypt;
+use somd::bench_suite::serve::{
+    crypt_batched, vecadd_batch_spec, vecadd_batched, CryptServeInput,
+};
+use somd::serve::{
+    AdmissionPolicy, Class, Clock, ServeError, Service, ServiceConfig, SubmitOpts,
+};
+use somd::somd::partition::Block1D;
+use somd::somd::reduction::Assemble;
+use somd::somd::{BlockPart, Engine, SomdMethod};
+use somd::util::prng::Xorshift64;
+
+/// Tag that makes the recording method park on its gate (holding the
+/// dispatcher) until the test releases it.
+const BLOCKER: u32 = 9999;
+
+type Pair = (Vec<f32>, Vec<f32>);
+type Gate = Arc<(Mutex<(bool, bool)>, Condvar)>; // (started, released)
+
+fn new_gate() -> Gate {
+    Arc::new((Mutex::new((false, false)), Condvar::new()))
+}
+
+fn wait_started(gate: &Gate) {
+    let (lock, cv) = gate.as_ref();
+    let mut st = lock.lock().unwrap();
+    while !st.0 {
+        st = cv.wait(st).unwrap();
+    }
+}
+
+fn release(gate: &Gate) {
+    let (lock, cv) = gate.as_ref();
+    lock.lock().unwrap().1 = true;
+    cv.notify_all();
+}
+
+/// An input whose first element carries the request's tag.
+fn tagged(tag: u32) -> Arc<Pair> {
+    let a: Vec<f32> = (0..8).map(|i| if i == 0 { tag as f32 } else { i as f32 }).collect();
+    let b: Vec<f32> = (0..8).map(|i| (i + 1) as f32).collect();
+    Arc::new((a, b))
+}
+
+/// A batchable vecadd that appends each executed request's tag to `log`
+/// and parks [`BLOCKER`]-tagged requests on `gate` until released.
+fn recording_vecadd(
+    log: Arc<Mutex<Vec<u32>>>,
+    gate: Gate,
+) -> HeteroMethod<Pair, BlockPart, (), Vec<f32>> {
+    let smp = SomdMethod::new(
+        "Qos.rec",
+        |inp: &Pair, n| Block1D::new().ranges(inp.0.len(), n),
+        |_, _| (),
+        move |inp, p, _, _| {
+            let tag = inp.0[0] as u32;
+            if tag == BLOCKER {
+                let (lock, cv) = gate.as_ref();
+                let mut st = lock.lock().unwrap();
+                st.0 = true; // started: the dispatcher is provably parked
+                cv.notify_all();
+                while !st.1 {
+                    st = cv.wait(st).unwrap();
+                }
+            }
+            log.lock().unwrap().push(tag);
+            p.own.iter().map(|i| inp.0[i] + inp.1[i]).collect::<Vec<f32>>()
+        },
+        Assemble,
+    );
+    HeteroMethod::smp_only(smp).with_batch(vecadd_batch_spec())
+}
+
+/// Serial-dispatch config: every request its own batch, no linger, no
+/// aging (isolates class/deadline ordering from the aging promotion).
+fn serial_cfg() -> ServiceConfig {
+    ServiceConfig {
+        max_batch_items: 1,
+        max_batch_delay: Duration::ZERO,
+        queue_depth: 64,
+        admission: AdmissionPolicy::Block,
+        aging_bound: Duration::from_secs(3600),
+        ..ServiceConfig::default()
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn interactive_overtakes_a_queued_batch_backlog() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let service = Service::with_config(Engine::new(1), serial_cfg());
+    let client = service.register(Arc::new(recording_vecadd(log.clone(), gate.clone()))).unwrap();
+
+    let blocker = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate);
+    // the Batch backlog arrives FIRST, then one Interactive request
+    let batch: Vec<_> = (10..13)
+        .map(|t| client.submit_with(tagged(t), SubmitOpts::class(Class::Batch)).unwrap())
+        .collect();
+    let inter = client.submit_with(tagged(1), SubmitOpts::class(Class::Interactive)).unwrap();
+    release(&gate);
+
+    blocker.wait().expect("blocker served");
+    inter.wait().expect("interactive served");
+    for t in batch {
+        t.wait().expect("batch-class request served");
+    }
+    let order = log.lock().unwrap().clone();
+    assert_eq!(
+        order,
+        vec![BLOCKER, 1, 10, 11, 12],
+        "the Interactive request must be dispatched before the whole Batch backlog"
+    );
+
+    // per-class accounting: blocker + tagged(1) are Interactive
+    let m = service.metrics();
+    assert_eq!(m.class_completed, [2, 3, 0]);
+    assert_eq!(m.completed, 5);
+    // and the exposition page carries the per-class series
+    let text = service.metrics_text();
+    assert!(text.contains("somd_serve_class_completed_total{class=\"interactive\"} 2\n"));
+    assert!(text.contains("somd_serve_class_completed_total{class=\"batch\"} 3\n"));
+    assert!(text.contains("somd_serve_class_latency_seconds{class=\"batch\",quantile=\"0.5\"}"));
+}
+
+#[test]
+fn edf_orders_deadlined_peers_without_sleeping() {
+    // a manual clock: ordering comes from deadlines alone, no sleeps
+    let (clock, _ctl) = Clock::manual();
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let service = Service::with_config_clock(Engine::new(1), serial_cfg(), clock);
+    let client = service.register(Arc::new(recording_vecadd(log.clone(), gate.clone()))).unwrap();
+
+    let blocker = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate);
+    // submitted out of deadline order, same class throughout
+    let mk = |tag: u32, dl_ms: u64| {
+        client
+            .submit_with(
+                tagged(tag),
+                SubmitOpts::class(Class::Batch).deadline(Duration::from_millis(dl_ms)),
+            )
+            .unwrap()
+    };
+    let t3 = mk(3, 500);
+    let t1 = mk(1, 100);
+    let t2 = mk(2, 300);
+    // a deadline-less peer of the same class runs after every deadline
+    let t4 = client.submit_with(tagged(4), SubmitOpts::class(Class::Batch)).unwrap();
+    release(&gate);
+
+    for t in [blocker, t1, t2, t3, t4] {
+        t.wait().expect("served (the frozen clock never expires a deadline)");
+    }
+    let order = log.lock().unwrap().clone();
+    assert_eq!(order, vec![BLOCKER, 1, 2, 3, 4], "EDF within the class, deadline-less last");
+    assert_eq!(service.metrics().expired, 0);
+}
+
+#[test]
+fn aging_unstarves_best_effort_under_interactive_pressure() {
+    // With aging: a BestEffort request pending past the bound outranks
+    // fresh Interactive traffic.
+    let (clock, ctl) = Clock::manual();
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let cfg = ServiceConfig { aging_bound: Duration::from_millis(200), ..serial_cfg() };
+    let service = Service::with_config_clock(Engine::new(1), cfg, clock);
+    let client = service.register(Arc::new(recording_vecadd(log.clone(), gate.clone()))).unwrap();
+
+    let blocker = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate);
+    let be = client.submit_with(tagged(1), SubmitOpts::class(Class::BestEffort)).unwrap();
+    ctl.advance(Duration::from_millis(300)); // the BestEffort entry ages past the bound
+    let i0 = client.submit_with(tagged(10), SubmitOpts::class(Class::Interactive)).unwrap();
+    let i1 = client.submit_with(tagged(11), SubmitOpts::class(Class::Interactive)).unwrap();
+    release(&gate);
+    for t in [blocker, be, i0, i1] {
+        t.wait().expect("served");
+    }
+    assert_eq!(
+        log.lock().unwrap().clone(),
+        vec![BLOCKER, 1, 10, 11],
+        "the aged BestEffort request must dispatch before fresh Interactive traffic"
+    );
+
+    // Without aging (huge bound), the same sequence starves BestEffort
+    // to the back — the promotion above really was the aging bound.
+    let log2 = Arc::new(Mutex::new(Vec::new()));
+    let gate2 = new_gate();
+    let (clock2, ctl2) = Clock::manual();
+    let service2 = Service::with_config_clock(Engine::new(1), serial_cfg(), clock2);
+    let client2 =
+        service2.register(Arc::new(recording_vecadd(log2.clone(), gate2.clone()))).unwrap();
+    let blocker2 = client2.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate2);
+    let be2 = client2.submit_with(tagged(1), SubmitOpts::class(Class::BestEffort)).unwrap();
+    ctl2.advance(Duration::from_millis(300));
+    let i2 = client2.submit_with(tagged(10), SubmitOpts::class(Class::Interactive)).unwrap();
+    release(&gate2);
+    for t in [blocker2, be2, i2] {
+        t.wait().expect("served");
+    }
+    assert_eq!(log2.lock().unwrap().clone(), vec![BLOCKER, 10, 1]);
+}
+
+#[test]
+fn expired_requests_are_dropped_before_fusion_never_launched() {
+    let (clock, ctl) = Clock::manual();
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let service = Service::with_config_clock(Engine::new(1), serial_cfg(), clock);
+    let client = service.register(Arc::new(recording_vecadd(log.clone(), gate.clone()))).unwrap();
+
+    let blocker = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate);
+    let doomed = client
+        .submit_with(tagged(1), SubmitOpts::default().deadline(Duration::from_millis(100)))
+        .unwrap();
+    let alive = client
+        .submit_with(tagged(2), SubmitOpts::default().deadline(Duration::from_secs(60)))
+        .unwrap();
+    ctl.advance(Duration::from_millis(200)); // past `doomed`'s deadline, not `alive`'s
+    release(&gate);
+
+    blocker.wait().expect("blocker served");
+    match doomed.wait() {
+        Err(ServeError::Expired) => {}
+        other => panic!("expected Expired for the past-deadline request, got {other:?}"),
+    }
+    alive.wait().expect("in-deadline request served");
+    assert_eq!(
+        log.lock().unwrap().clone(),
+        vec![BLOCKER, 2],
+        "expired work must be dropped before fusion, never launched"
+    );
+    let m = service.metrics();
+    assert_eq!(m.expired, 1);
+    assert_eq!(m.completed, 2);
+    assert_eq!(client.admission_outstanding(), 0, "the expired entry freed its slot");
+}
+
+#[test]
+fn quota_rejects_only_the_over_quota_tenant() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let gate = new_gate();
+    let cfg = ServiceConfig { tenant_quota: Some(2), ..serial_cfg() };
+    let service = Service::with_config(Engine::new(1), cfg);
+    let client = service.register(Arc::new(recording_vecadd(log, gate.clone()))).unwrap();
+
+    // the blocker is anonymous and already dispatched: its quota slot
+    // (the "" bucket) is free again once it leaves the queue
+    let blocker = client.submit(tagged(BLOCKER)).unwrap();
+    wait_started(&gate);
+
+    let opts_a = || SubmitOpts::default().tenant("a");
+    let ta1 = client.submit_with(tagged(1), opts_a()).expect("a: 1/2");
+    let ta2 = client.submit_with(tagged(2), opts_a()).expect("a: 2/2");
+    match client.submit_with(tagged(3), opts_a()) {
+        Err(ServeError::OverQuota) => {}
+        other => panic!("expected OverQuota for tenant a's 3rd pending request, got {other:?}"),
+    }
+    // a different tenant is unaffected by a's saturation
+    let tb1 = client.submit_with(tagged(4), SubmitOpts::default().tenant("b")).expect("b: 1/2");
+
+    release(&gate);
+    for t in [blocker, ta1, ta2, tb1] {
+        t.wait().expect("admitted request served");
+    }
+    // the quota counts *pending* work: once a's requests resolved, a
+    // submits again freely
+    client.submit_with(tagged(5), opts_a()).expect("quota slot freed").wait().expect("served");
+
+    let m = service.metrics();
+    assert_eq!(m.quota_rejected, 1);
+    assert_eq!(m.completed, 5);
+    assert!(service.metrics_text().contains("somd_serve_quota_rejected_total 1\n"));
+}
+
+#[test]
+fn qos_reordering_is_bitwise_equal_to_fifo_for_vecadd() {
+    let sizes = [911usize, 5, 2048, 63, 1024, 7];
+    let inputs: Vec<Arc<Pair>> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Xorshift64::new(0x90_05 + i as u64);
+            let a: Vec<f32> = (0..n).map(|_| f32::from(rng.u16()) / 128.0).collect();
+            let b: Vec<f32> = (0..n).map(|_| f32::from(rng.u16()) / 128.0).collect();
+            Arc::new((a, b))
+        })
+        .collect();
+    let reference = Arc::new(vecadd_batched());
+    let want: Vec<Vec<u32>> =
+        inputs.iter().map(|inp| bits(&reference.smp.invoke(inp, 2))).collect();
+
+    // every class mix — including the mixed one that actually reorders —
+    // must reproduce the FIFO/direct results bit for bit
+    let mix_opts = |mix: usize, i: usize| -> SubmitOpts {
+        match mix {
+            0 => SubmitOpts::default(), // plain FIFO (all-Interactive)
+            1 => SubmitOpts::class(Class::Batch),
+            2 => SubmitOpts::class(Class::BestEffort),
+            _ => {
+                let class = Class::ALL[i % 3];
+                SubmitOpts::class(class)
+                    .tenant(format!("t{}", i % 2))
+                    .deadline(Duration::from_secs(10 + i as u64))
+            }
+        }
+    };
+    for mix in 0..4 {
+        let cfg = ServiceConfig {
+            max_batch_items: 1 << 20,
+            max_batch_delay: Duration::from_millis(200),
+            queue_depth: 64,
+            admission: AdmissionPolicy::Block,
+            ..ServiceConfig::default()
+        };
+        let service = Service::with_config(Engine::new(2), cfg);
+        let client = service.register(Arc::new(vecadd_batched())).unwrap();
+        let tickets: Vec<_> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, inp)| client.submit_with(inp.clone(), mix_opts(mix, i)).unwrap())
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let out = t.wait().expect("served");
+            assert_eq!(
+                bits(&out.value),
+                want[i],
+                "mix {mix}, request {i}: QoS scheduling changed the result bits"
+            );
+        }
+        assert_eq!(service.metrics().completed, sizes.len() as u64);
+    }
+}
+
+#[test]
+fn qos_reordering_is_bitwise_equal_for_crypt_across_keys() {
+    let ka = crypt::encrypt_keys(&[1, 2, 3, 4, 5, 6, 7, 8]);
+    let kb = crypt::encrypt_keys(&[8, 7, 6, 5, 4, 3, 2, 1]);
+    let sizes_blocks = [64usize, 1, 37, 128];
+    let inputs: Vec<Arc<CryptServeInput>> = sizes_blocks
+        .iter()
+        .enumerate()
+        .map(|(i, &blocks)| {
+            let mut src = vec![0u8; blocks * crypt::BLOCK_BYTES];
+            Xorshift64::new(0xC0DE + i as u64).fill_bytes(&mut src);
+            Arc::new(CryptServeInput { src, keys: if i % 2 == 0 { ka } else { kb } })
+        })
+        .collect();
+    let want: Vec<Vec<u8>> =
+        inputs.iter().map(|inp| crypt::sequential(&inp.src, &inp.keys)).collect();
+
+    let cfg = ServiceConfig {
+        max_batch_items: 1 << 20,
+        max_batch_delay: Duration::from_millis(200),
+        queue_depth: 64,
+        admission: AdmissionPolicy::Block,
+        ..ServiceConfig::default()
+    };
+    let service = Service::with_config(Engine::new(2), cfg);
+    let client = service.register(Arc::new(crypt_batched())).unwrap();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, inp)| {
+            let opts = SubmitOpts::class(Class::ALL[i % 3]).tenant(format!("t{}", i % 2));
+            client.submit_with(inp.clone(), opts).unwrap()
+        })
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("served");
+        assert_eq!(
+            out.value, want[i],
+            "request {i}: QoS scheduling across mixed keys corrupted the ciphertext"
+        );
+        // cross-key fusion is still forbidden under reordering
+        assert!(out.batch_requests <= 2, "only same-key requests may fuse");
+    }
+    assert_eq!(service.metrics().completed, sizes_blocks.len() as u64);
+}

@@ -387,7 +387,7 @@ fn coalescing_cfg(delay_ms: u64) -> ServiceConfig {
         max_batch_delay: Duration::from_millis(delay_ms),
         queue_depth: 1024,
         admission: AdmissionPolicy::Block,
-        sched_snapshot: None,
+        ..ServiceConfig::default()
     }
 }
 

@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Flatten BENCH_*.json result files into one CSV, and gate the
+serve_qos/v1 schema in CI.
+
+Every bench emitter in this repo writes a top-level object with a
+``schema`` tag and one or more arrays of flat row objects (see
+docs/BENCHMARKS.md).  This script turns any of them into tidy CSV rows
+(`file, schema, section, <row keys...>`), exploding the serve_qos/v1
+nested per-class / per-tenant arrays into their own sections so
+downstream tooling never has to parse JSON.
+
+``--check`` validates the serve_qos/v1 file *non-vacuously*: the
+scenario matrix must be present with per-class breakdowns, and the
+overload/cancellation scenarios must actually have exercised the QoS
+machinery (>= 1 shed request, >= 1 cancelled request, >= 1 expired
+request across the matrix) — a bench run where no request was ever
+shed or cancelled proves nothing about priority serving.
+
+Usage:
+    python3 scripts/collect_results.py [BENCH_foo.json ...] [--out results.csv]
+    python3 scripts/collect_results.py --check [BENCH_serve.json]
+
+With no file arguments, every BENCH_*.json in the repository root (or
+current directory) is collected.  Pure stdlib, offline.
+"""
+
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# Keys every serve_qos/v1 scenario row must carry (docs/BENCHMARKS.md).
+QOS_ROW_KEYS = {
+    "name", "tenants", "requests", "elems", "workers", "queue_depth",
+    "admission", "tenant_quota", "span_s", "wall_s", "throughput_rps",
+    "goodput_rps", "mean_batch", "batches", "submitted", "completed",
+    "rejected", "quota_rejected", "shed", "expired", "cancelled",
+    "cancelled_queued", "classes", "tenants_detail",
+}
+QOS_CLASS_KEYS = {"class", "offered", "completed", "p50_ms", "p95_ms", "p99_ms", "goodput_rps"}
+
+
+def scalars(row: dict) -> dict:
+    return {k: v for k, v in row.items() if not isinstance(v, (list, dict))}
+
+
+def flatten(path: Path) -> list[dict]:
+    """One file -> flat CSV-ready dicts with file/schema/section columns."""
+    doc = json.loads(path.read_text(encoding="utf-8"))
+    schema = doc.get("schema", "?")
+    out = []
+
+    def emit(section: str, row: dict, extra: dict | None = None):
+        flat = {"file": path.name, "schema": schema, "section": section}
+        flat.update(extra or {})
+        flat.update(scalars(row))
+        out.append(flat)
+
+    for key, val in doc.items():
+        if not (isinstance(val, list) and val and all(isinstance(r, dict) for r in val)):
+            continue
+        for row in val:
+            emit(key, row)
+            # serve_qos/v1 nests per-class and per-tenant breakdowns
+            for nested_key in ("classes", "tenants_detail"):
+                for nested in row.get(nested_key, []) or []:
+                    if isinstance(nested, dict):
+                        emit(f"{key}.{nested_key}", nested, {"scenario": row.get("name", "")})
+    if not out:  # no row arrays at all: emit the top-level scalars
+        emit("top", doc)
+    return out
+
+
+def check_serve_qos(path: Path) -> list[str]:
+    """Validate the serve_qos/v1 shape and that the matrix is non-vacuous."""
+    errors = []
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if doc.get("schema") != "serve_qos/v1":
+        errors.append(f"{path}: schema is {doc.get('schema')!r}, want 'serve_qos/v1'")
+    if not isinstance(doc.get("capacity_rps"), (int, float)) or doc.get("capacity_rps", 0) <= 0:
+        errors.append(f"{path}: capacity_rps missing or non-positive")
+    if not doc.get("baseline"):
+        errors.append(f"{path}: baseline sweep rows missing")
+    scenarios = doc.get("scenarios") or []
+    if not scenarios:
+        errors.append(f"{path}: scenario matrix missing or empty")
+    for row in scenarios:
+        missing = QOS_ROW_KEYS - set(row)
+        if missing:
+            errors.append(f"{path}: scenario {row.get('name', '?')!r} lacks {sorted(missing)}")
+            continue
+        for cls in row["classes"]:
+            lacking = QOS_CLASS_KEYS - set(cls)
+            if lacking:
+                errors.append(
+                    f"{path}: scenario {row['name']!r} class row lacks {sorted(lacking)}"
+                )
+        if row["completed"] > row["submitted"]:
+            errors.append(f"{path}: scenario {row['name']!r} completed > submitted")
+    # non-vacuity: the matrix must have exercised shedding, expiry AND
+    # cancellation somewhere, or the QoS gates tested nothing
+    for counter in ("shed", "expired", "cancelled"):
+        if scenarios and sum(row.get(counter, 0) for row in scenarios) < 1:
+            errors.append(f"{path}: vacuous matrix — no scenario recorded a {counter} request")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    args = list(argv)
+    check = "--check" in args
+    if check:
+        args.remove("--check")
+    out_csv = None
+    if "--out" in args:
+        i = args.index("--out")
+        out_csv = Path(args[i + 1])
+        del args[i : i + 2]
+
+    files = [Path(a) for a in args]
+    if not files:
+        pattern = [str(ROOT / "BENCH_*.json"), "BENCH_*.json"]
+        files = sorted({Path(p) for pat in pattern for p in glob.glob(pat)})
+    if not files:
+        print("collect_results: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+
+    if check:
+        errors = []
+        serve_files = [f for f in files if "serve" in f.name] or files
+        for f in serve_files:
+            errors.extend(check_serve_qos(f))
+        for e in errors:
+            print(f"collect_results: {e}", file=sys.stderr)
+        if not errors:
+            print(f"collect_results: serve_qos/v1 check ok ({len(serve_files)} file(s))")
+        return 1 if errors else 0
+
+    rows = []
+    for f in files:
+        try:
+            rows.extend(flatten(f))
+        except (OSError, ValueError) as e:
+            print(f"collect_results: skipping {f}: {e}", file=sys.stderr)
+    if not rows:
+        print("collect_results: nothing to collect", file=sys.stderr)
+        return 1
+    columns: list[str] = []
+    for row in rows:
+        for key in row:
+            if key not in columns:
+                columns.append(key)
+    sink = open(out_csv, "w", newline="", encoding="utf-8") if out_csv else sys.stdout
+    try:
+        writer = csv.DictWriter(sink, fieldnames=columns, restval="")
+        writer.writeheader()
+        writer.writerows(rows)
+    finally:
+        if out_csv:
+            sink.close()
+            print(f"collect_results: wrote {len(rows)} rows to {out_csv}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""Render the serve_qos/v1 QoS figures as standalone SVG (no plotting
+dependencies — the build is offline, so the bars are hand-rolled).
+
+Reads BENCH_serve.json (``somd bench serve`` / ``make bench-qos``) and
+writes three figures:
+
+* ``serve_class_p99.svg`` — per-class p99 latency bars for every
+  scenario that served both Interactive and Batch traffic: the priority
+  gate (Interactive p99 < Batch p99 under saturation) made visible.
+* ``serve_quota_goodput.svg`` — per-tenant goodput for the
+  quota-isolated vs quota-shared pair: the in-quota tenants' bars
+  should barely move when the greedy tenant arrives.
+* ``serve_cancel_goodput.svg`` — survivor goodput for the
+  cancel-off vs cancel-on pair: explicit cancellation returns queue
+  capacity to requests that can still meet their deadline.
+
+Usage:
+    python3 scripts/generate_figures.py [BENCH_serve.json] [--out-dir figures]
+
+Pure stdlib, offline.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+# class -> fill color (kept colorblind-distinguishable)
+COLORS = {"interactive": "#1b9e77", "batch": "#d95f02", "best_effort": "#7570b3", "": "#666666"}
+FONT = 'font-family="Helvetica,Arial,sans-serif"'
+
+
+def esc(s: str) -> str:
+    return s.replace("&", "&amp;").replace("<", "&lt;").replace(">", "&gt;").replace('"', "&quot;")
+
+
+def bar_chart(title: str, ylabel: str, groups: list[tuple[str, list[tuple[str, float, str]]]]) -> str:
+    """Grouped vertical bars: groups = [(group_label, [(bar_label, value, color), ...]), ...]."""
+    bar_w, gap, group_gap = 34, 6, 36
+    margin_l, margin_r, margin_t, margin_b = 64, 16, 44, 76
+    plot_h = 220
+    n_bars = sum(len(bars) for _, bars in groups)
+    plot_w = n_bars * (bar_w + gap) + (len(groups) - 1) * group_gap
+    width = margin_l + plot_w + margin_r
+    height = margin_t + plot_h + margin_b
+    vmax = max((v for _, bars in groups for _, v, _ in bars), default=1.0) or 1.0
+    scale = plot_h / (vmax * 1.15)
+
+    parts = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" height="{height}" '
+        f'viewBox="0 0 {width} {height}">',
+        f'<rect width="{width}" height="{height}" fill="white"/>',
+        f'<text x="{width / 2:.1f}" y="20" text-anchor="middle" {FONT} font-size="14" '
+        f'font-weight="bold">{esc(title)}</text>',
+        f'<text x="14" y="{margin_t + plot_h / 2:.1f}" text-anchor="middle" {FONT} '
+        f'font-size="11" transform="rotate(-90 14 {margin_t + plot_h / 2:.1f})">'
+        f"{esc(ylabel)}</text>",
+    ]
+    # y axis + gridlines
+    x0, y0 = margin_l, margin_t + plot_h
+    parts.append(f'<line x1="{x0}" y1="{margin_t}" x2="{x0}" y2="{y0}" stroke="#333"/>')
+    parts.append(f'<line x1="{x0}" y1="{y0}" x2="{x0 + plot_w}" y2="{y0}" stroke="#333"/>')
+    for i in range(1, 5):
+        v = vmax * 1.15 * i / 5
+        y = y0 - v * scale
+        parts.append(
+            f'<line x1="{x0}" y1="{y:.1f}" x2="{x0 + plot_w}" y2="{y:.1f}" '
+            f'stroke="#ddd" stroke-dasharray="3,3"/>'
+        )
+        parts.append(
+            f'<text x="{x0 - 6}" y="{y + 3:.1f}" text-anchor="end" {FONT} font-size="10">'
+            f"{v:.3g}</text>"
+        )
+    # bars
+    x = float(x0)
+    for group_label, bars in groups:
+        gx0 = x
+        for bar_label, value, color in bars:
+            h = value * scale
+            parts.append(
+                f'<rect x="{x:.1f}" y="{y0 - h:.1f}" width="{bar_w}" height="{h:.1f}" '
+                f'fill="{color}"/>'
+            )
+            parts.append(
+                f'<text x="{x + bar_w / 2:.1f}" y="{y0 - h - 4:.1f}" text-anchor="middle" '
+                f'{FONT} font-size="9">{value:.3g}</text>'
+            )
+            parts.append(
+                f'<text x="{x + bar_w / 2:.1f}" y="{y0 + 12}" text-anchor="middle" {FONT} '
+                f'font-size="9">{esc(bar_label)}</text>'
+            )
+            x += bar_w + gap
+        cx = (gx0 + x - gap) / 2
+        parts.append(
+            f'<text x="{cx:.1f}" y="{y0 + 30}" text-anchor="middle" {FONT} font-size="10" '
+            f'font-weight="bold">{esc(group_label)}</text>'
+        )
+        x += group_gap
+    parts.append("</svg>")
+    return "\n".join(parts) + "\n"
+
+
+def class_stat(row: dict, name: str) -> dict | None:
+    for c in row.get("classes", []):
+        if c.get("class") == name:
+            return c
+    return None
+
+
+def fig_class_p99(scenarios: list[dict]) -> str | None:
+    groups = []
+    for row in scenarios:
+        inter, batch = class_stat(row, "interactive"), class_stat(row, "batch")
+        if not inter or not batch or not inter["completed"] or not batch["completed"]:
+            continue
+        bars = [("int", inter["p99_ms"], COLORS["interactive"]),
+                ("bat", batch["p99_ms"], COLORS["batch"])]
+        be = class_stat(row, "best_effort")
+        if be and be["completed"]:
+            bars.append(("be", be["p99_ms"], COLORS["best_effort"]))
+        groups.append((row["name"], bars))
+    if not groups:
+        return None
+    return bar_chart("Per-class p99 latency under load", "p99 latency (ms)", groups)
+
+
+def fig_quota_goodput(scenarios: list[dict]) -> str | None:
+    pair = {r["name"]: r for r in scenarios if r["name"] in ("quota-isolated", "quota-shared")}
+    if len(pair) != 2:
+        return None
+    groups = []
+    for name in ("quota-isolated", "quota-shared"):
+        bars = []
+        for t in pair[name].get("tenants_detail", []):
+            color = COLORS["batch"] if t["tenant"].startswith("greedy") else COLORS["interactive"]
+            bars.append((t["tenant"], t["goodput_rps"], color))
+        groups.append((name, bars))
+    return bar_chart("Per-tenant goodput: quota isolation", "goodput (req/s)", groups)
+
+
+def fig_cancel_goodput(scenarios: list[dict]) -> str | None:
+    pair = {r["name"]: r for r in scenarios if r["name"] in ("cancel-off", "cancel-on")}
+    if len(pair) != 2:
+        return None
+    groups = [
+        (name, [("goodput", pair[name]["goodput_rps"], COLORS["interactive"]),
+                ("expired", float(pair[name]["expired"]), COLORS["batch"])])
+        for name in ("cancel-off", "cancel-on")
+    ]
+    return bar_chart("Cancellation returns capacity to survivors", "req/s | requests", groups)
+
+
+def main(argv: list[str]) -> int:
+    args = list(argv)
+    out_dir = Path("figures")
+    if "--out-dir" in args:
+        i = args.index("--out-dir")
+        out_dir = Path(args[i + 1])
+        del args[i : i + 2]
+    src = Path(args[0]) if args else Path("BENCH_serve.json")
+    try:
+        doc = json.loads(src.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        print(f"generate_figures: cannot read {src}: {e}", file=sys.stderr)
+        return 1
+    if doc.get("schema") != "serve_qos/v1":
+        print(f"generate_figures: {src} is not serve_qos/v1", file=sys.stderr)
+        return 1
+    scenarios = doc.get("scenarios") or []
+    out_dir.mkdir(parents=True, exist_ok=True)
+    wrote = 0
+    for fname, svg in [
+        ("serve_class_p99.svg", fig_class_p99(scenarios)),
+        ("serve_quota_goodput.svg", fig_quota_goodput(scenarios)),
+        ("serve_cancel_goodput.svg", fig_cancel_goodput(scenarios)),
+    ]:
+        if svg is None:
+            print(f"generate_figures: skipping {fname} (scenario rows missing)")
+            continue
+        (out_dir / fname).write_text(svg, encoding="utf-8")
+        print(f"generate_figures: wrote {out_dir / fname}")
+        wrote += 1
+    return 0 if wrote else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
